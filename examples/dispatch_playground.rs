@@ -1,0 +1,93 @@
+//! Dispatch playground: the paper's §4 data structures, three ways.
+//!
+//! 1. Reproduces Figure 2's worked example (L=6 tokens in the figure's
+//!    prose — 5 with listed assignments — E=4, k=2) with the Rust 3-step
+//!    builder and checks it against the paper's printed arrays.
+//! 2. Cross-checks the Rust builder against the Pallas dispatch kernel
+//!    through the `dispatch_build_conf3` AOT artifact (same topk ids in,
+//!    same structures out) — proving the L1 kernel and the L3 twin agree.
+//! 3. Runs the expert-parallel planner on the result.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example dispatch_playground
+//! ```
+
+use anyhow::Result;
+use moeblaze::coordinator::expert_parallel::EpTopology;
+use moeblaze::dispatch::gating::synthetic_gating;
+use moeblaze::dispatch::parallel_build::parallel_build_with_stats;
+use moeblaze::dispatch::sort_build::sort_build;
+use moeblaze::runtime::client::Runtime;
+use moeblaze::runtime::host::HostTensor;
+use moeblaze::util::prng::Rng;
+use moeblaze::util::table::human_bytes;
+
+fn main() -> Result<()> {
+    // --- 1. paper Figure 2 ---------------------------------------------
+    println!("== paper Figure 2 worked example ==");
+    let ids = vec![2u32, 3, 0, 1, 0, 3, 1, 2, 0, 3]; // tokens 0..4, k=2
+    let (d, stats) = parallel_build_with_stats(&ids, 5, 4, 2, 1);
+    d.validate().map_err(anyhow::Error::msg)?;
+    println!("token_expert_indices = {:?}", d.token_expert_indices);
+    println!("expert_token_indices = {:?}", d.expert_token_indices);
+    println!("expert_token_offsets = {:?}", d.expert_token_offsets);
+    println!("token_index_map[0]   = {:?}  (paper: {{5, 7}})", &d.token_index_map[0..2]);
+    assert_eq!(d.expert_token_indices, vec![1, 2, 4, 1, 3, 0, 3, 0, 2, 4]);
+    assert_eq!(d.expert_token_offsets, vec![0, 3, 5, 7, 10]);
+    assert_eq!(&d.token_index_map[0..2], &[5, 7]);
+    assert_eq!(sort_build(&ids, 5, 4, 2), d, "3-step build must equal sort build");
+    println!("matches the paper ✓ ({} passes, {} metadata)\n",
+             stats.data_passes, human_bytes(d.metadata_bytes() as u64));
+
+    // --- 2. Rust twin vs Pallas kernel (through the AOT artifact) -------
+    println!("== Rust 3-step builder vs Pallas dispatch kernel (conf3) ==");
+    let runtime = Runtime::new(&moeblaze::artifacts_dir())?;
+    let exe = runtime.load("dispatch_build_conf3")?;
+    let spec = &exe.inputs[0];
+    let (l, k) = (spec.shape[0], spec.shape[1]);
+    let e = runtime.manifest.get("dispatch_build_conf3")?
+        .meta_usize("experts").unwrap();
+    let block = runtime.manifest.get("dispatch_build_conf3")?
+        .meta_usize("block").unwrap();
+
+    let mut rng = Rng::new(1234);
+    let gating = synthetic_gating(&mut rng, l, e, k, 0.7);
+    let ids_i32: Vec<i32> = gating.topk_ids.iter().map(|&x| x as i32).collect();
+    let out = exe.run(&[HostTensor::i32(vec![l, k], ids_i32)?])?;
+
+    // Rust twin on the same ids
+    let rust = moeblaze::dispatch::parallel_build::parallel_build(
+        &gating.topk_ids, l, e, k);
+    rust.validate().map_err(anyhow::Error::msg)?;
+
+    // compare expert lengths + compact offsets
+    let kernel_lengths = out[0].as_i32()?;
+    for (ei, &len) in kernel_lengths.iter().enumerate() {
+        assert_eq!(len as usize, rust.expert_len(ei), "expert {ei} length");
+    }
+    // padded expert_token_indices from the kernel must contain exactly the
+    // Rust twin's per-expert token lists (pads are -1)
+    let pad_offsets = out[1].as_i32()?;
+    let pad_eti = out[2].as_i32()?;
+    for ei in 0..e {
+        let lo = pad_offsets[ei] as usize;
+        let tokens: Vec<u32> = (lo..lo + rust.expert_len(ei))
+            .map(|s| pad_eti[s] as u32)
+            .collect();
+        assert_eq!(tokens.as_slice(), rust.expert_tokens(ei), "expert {ei} tokens");
+    }
+    println!("Pallas kernel ≡ Rust twin on L={l} E={e} k={k} block={block} ✓\n");
+
+    // --- 3. expert-parallel plan -----------------------------------------
+    println!("== expert-parallel all-to-all plan (4 ranks) ==");
+    let topo = EpTopology::new(4, e).map_err(anyhow::Error::msg)?;
+    let plan = topo.plan(&rust, 128, 2);
+    println!("cross-rank traffic {} | imbalance {:.3} | dropless: 0 dropped",
+             human_bytes(plan.cross_rank_bytes()), plan.imbalance());
+    for gamma in [1.0, 1.25] {
+        println!("  capacity-router at γ={gamma}: {} tokens dropped",
+                 plan.dropped_under_capacity(gamma));
+    }
+    println!("\ndispatch_playground OK");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Regenerate every figure of the paper's evaluation (§6) in one run.
+//!
+//! ```text
+//! make artifacts && cargo build --release
+//! cargo run --release --example paper_figures             # all figures
+//! cargo run --release --example paper_figures -- --skip-speed   # memory only
+//! ```
+//!
+//! * Figure 3 — activation memory, SiLU  (analytic, full paper scale)
+//! * Figure 4 — training speedup, SiLU   (measured, scaled configs)
+//! * Figure 5 — activation memory, SwiGLU
+//! * Figure 6 — training speedup, SwiGLU
+//! * Table 1 is printed by `moeblaze configs`.
+//!
+//! Results are appended as JSON lines to `runs/figures.jsonl` for
+//! EXPERIMENTS.md bookkeeping.
+
+use anyhow::Result;
+use moeblaze::bench_harness as bh;
+use moeblaze::config::model::Activation;
+use moeblaze::memory::model::AccountingMode;
+use moeblaze::memory::report::{memory_figure, render_memory_figure};
+use moeblaze::runtime::client::Runtime;
+use moeblaze::util::cli::Args;
+use moeblaze::util::stats::Bench;
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    std::fs::create_dir_all("runs").ok();
+    let mut log = String::new();
+
+    // ---- memory figures (3, 5) -----------------------------------------
+    for (fig, act) in [("Figure 3", Activation::Silu), ("Figure 5", Activation::Swiglu)] {
+        for (mode, label) in [
+            (AccountingMode::Ours, "exact residual accounting"),
+            (AccountingMode::PaperBaseline, "paper-baseline accounting"),
+        ] {
+            let rows = memory_figure(act, mode, true);
+            println!("{}", render_memory_figure(
+                &format!("{fig} — activation memory, {} ({label}, paper scale)",
+                         act.name()),
+                &rows));
+            for r in &rows {
+                log.push_str(&format!(
+                    "{{\"figure\":\"{fig}\",\"mode\":\"{label}\",\"config\":\"{}\",\"baseline\":{},\"moeblaze\":{},\"ratio\":{:.3}}}\n",
+                    r.config, r.baseline, r.moeblaze, r.ratio()));
+            }
+        }
+    }
+
+    // ---- speed figures (4, 6) -------------------------------------------
+    if !args.has("skip-speed") {
+        let runtime = Runtime::new(&moeblaze::artifacts_dir())?;
+        println!("platform: {}\n", runtime.platform());
+        let bench = if args.has("full") { Bench::default() } else { Bench::quick() };
+        for (fig, act) in [("Figure 4", Activation::Silu), ("Figure 6", Activation::Swiglu)] {
+            let cells = bh::speed_figure(&runtime, act, &bench, None)?;
+            println!("{}", bh::render_speed_figure(
+                &format!("{fig} — fwd+bwd step time, {} (scaled configs)", act.name()),
+                &cells));
+            log.push_str(&bh::speed_figure_json(act, &cells));
+            log.push('\n');
+        }
+    }
+
+    std::fs::write("runs/figures.jsonl", &log)?;
+    println!("wrote runs/figures.jsonl");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Quickstart: load an AOT-compiled MoEBlaze layer and run a forward pass.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the full three-layer composition on one MoE layer
+//! (conf1, SwiGLU, MoEBlaze implementation with the Pallas kernels
+//! lowered into the HLO): the Rust coordinator loads the artifact,
+//! compiles it on the PJRT CPU client, feeds random tokens and expert
+//! weights, and reads the (L, d) output back — no Python anywhere.
+
+use anyhow::Result;
+use moeblaze::bench_harness::inputs_from_specs;
+use moeblaze::runtime::client::Runtime;
+use moeblaze::runtime::host::HostTensor;
+
+fn main() -> Result<()> {
+    let runtime = Runtime::new(&moeblaze::artifacts_dir())?;
+    println!("platform: {}", runtime.platform());
+
+    let exe = runtime.load("layer_fwd_conf1_swiglu_moeblaze")?;
+    println!(
+        "loaded `{}` ({} inputs, compiled in {:.0} ms)",
+        exe.name,
+        exe.inputs.len(),
+        exe.compile_ms
+    );
+    for spec in &exe.inputs {
+        println!("  input  {:12} {:?}", spec.name, spec.shape);
+    }
+
+    // Random x and expert weights, shaped by the manifest.
+    let inputs = inputs_from_specs(&exe.inputs, 42);
+    let outputs = exe.run(&inputs)?;
+
+    let y = &outputs[0];
+    let data = y.as_f32()?;
+    let l2: f32 = data.iter().map(|v| v * v).sum::<f32>().sqrt();
+    println!("\noutput y: shape {:?}", y.shape());
+    println!("  first row: {:?}", &data[..8.min(data.len())]);
+    println!("  ||y||_2 = {l2:.4}");
+    assert!(data.iter().all(|v| v.is_finite()), "non-finite output");
+
+    // The same layer, driven twice, must be deterministic.
+    let outputs2 = exe.run(&inputs)?;
+    assert_eq!(outputs2[0].as_f32()?, data, "non-deterministic execution");
+    println!("\ndeterminism check passed — quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! End-to-end training driver (EXPERIMENTS.md §E2E).
+//!
+//! Trains the manifest's MoE transformer LM (2 layers, 8 experts, top-2,
+//! SwiGLU, MoEBlaze layer with the Pallas kernels lowered into the step
+//! HLO) for a few hundred steps on a synthetic structured corpus, from
+//! the Rust coordinator through the AOT train-step executable. Proves all
+//! three layers compose: L1 Pallas kernels inside the L2 jax train step,
+//! driven by the L3 orchestrator (data pipeline, LR schedule, metrics,
+//! checkpointing) with Python nowhere at runtime.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example train_tiny_lm -- \
+//!     [--steps 300] [--lr 1e-3] [--metrics runs/tiny.jsonl]
+//! ```
+//!
+//! Success criterion: final EMA loss well below the corpus' unigram
+//! entropy (~2.3 nats for the structured digit corpus) and strictly
+//! below the initial loss (~ln 256 ≈ 5.55).
+
+use anyhow::Result;
+use moeblaze::config::train::TrainConfig;
+use moeblaze::coordinator::params::ParamStore;
+use moeblaze::coordinator::trainer::Trainer;
+use moeblaze::data::batcher::Batcher;
+use moeblaze::data::corpus::structured_corpus;
+use moeblaze::data::tokenizer::ByteTokenizer;
+use moeblaze::runtime::client::Runtime;
+use moeblaze::util::cli::Args;
+use moeblaze::util::prng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let mut cfg = TrainConfig {
+        steps: 300,
+        lr: 1.5e-3,
+        warmup_steps: 20,
+        eval_every: 50,
+        log_every: 10,
+        checkpoint_every: 100,
+        checkpoint_dir: "runs/tiny_lm_ckpt".into(),
+        metrics_path: "runs/tiny_lm.jsonl".into(),
+        ..TrainConfig::default()
+    };
+    cfg.steps = args.usize_or("steps", cfg.steps).map_err(anyhow::Error::msg)?;
+    cfg.lr = args.f64_or("lr", cfg.lr).map_err(anyhow::Error::msg)?;
+    if let Some(p) = args.get("metrics") {
+        cfg.metrics_path = p.into();
+    }
+
+    let runtime = Runtime::new(&moeblaze::artifacts_dir())?;
+    println!("platform: {}", runtime.platform());
+    let lm = runtime.manifest.lm.clone().expect("manifest lm section");
+    println!(
+        "model: {} params / {} tensors | batch {} | seq {} | experts {} top-{} ({})",
+        lm.num_params(),
+        lm.params.len(),
+        lm.batch,
+        lm.seq_len(),
+        lm.config.get("num_experts").and_then(|j| j.as_i64()).unwrap_or(0),
+        lm.config.get("top_k").and_then(|j| j.as_i64()).unwrap_or(0),
+        lm.config.get("activation").and_then(|j| j.as_str()).unwrap_or("?"),
+    );
+
+    // synthetic but *learnable* corpus (see data::corpus docs)
+    let tok = ByteTokenizer;
+    let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
+    let corpus = structured_corpus(&mut rng, 1 << 20);
+    let ids = tok.encode(&corpus);
+    let split = ids.len() * 9 / 10;
+    let mut train_b = Batcher::new(ids[..split].to_vec(), lm.batch, lm.seq_len(), cfg.seed)
+        .map_err(anyhow::Error::msg)?;
+    let mut eval_b = Batcher::new(ids[split..].to_vec(), lm.batch, lm.seq_len(), cfg.seed + 1)
+        .map_err(anyhow::Error::msg)?;
+
+    let store = ParamStore::init(&lm, cfg.seed);
+    let mut trainer = Trainer::new(&runtime, store, cfg)?;
+    let report = trainer.run(&mut train_b, &mut eval_b)?;
+
+    println!("\n=== loss curve (every 10th step) ===");
+    for (s, l) in report.losses.iter().step_by(10) {
+        let bar = "#".repeat((l * 12.0).min(70.0) as usize);
+        println!("{s:>5} {l:7.4} {bar}");
+    }
+    println!("\nsteps {} | loss {:.4} -> {:.4} | {:.0} tok/s | {:.1} ms/step",
+             report.steps, report.first_loss, report.final_loss_ema,
+             report.tokens_per_sec, report.step_ms_mean);
+
+    anyhow::ensure!(report.final_loss_ema < report.first_loss - 0.5,
+                    "loss did not decrease enough");
+    println!("train_tiny_lm OK (loss decreased by {:.2} nats)",
+             report.first_loss - report.final_loss_ema);
+    Ok(())
+}

@@ -1,0 +1,320 @@
+"""AOT export: lower every jitted computation to HLO *text* + manifest.
+
+HLO text (not ``lowered.compiler_ir("hlo").serialize()``) is the
+interchange format: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced (all under ``artifacts/``):
+
+* ``layer_step_<conf>_<act>_<impl>.hlo.txt`` — single-MoE-layer fwd+bwd
+  (Fig 4 / Fig 6 speed benches): 7 configs × {silu, swiglu} ×
+  {moeblaze, baseline}.
+* ``layer_fwd_<conf>_swiglu_moeblaze.hlo.txt`` — forward-only layers for
+  the quickstart example.
+* ``dispatch_build_conf3.hlo.txt`` — standalone Pallas 3-step dispatch
+  build (structure-parity demo vs the Rust twin).
+* ``lm_train_step.hlo.txt`` / ``lm_eval_step.hlo.txt`` — full MoE-LM
+  training/eval step for the end-to-end example.
+* ``manifest.json`` — machine-readable description of every artifact
+  (inputs/outputs with shapes+dtypes, config metadata, LM param spec)
+  consumed by the Rust runtime.
+
+Python runs ONCE, at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs as cfgs
+from . import moe_layer as ml
+from . import train_step as ts
+from . import transformer as tf
+from .kernels import dispatch as dk
+
+ACTIVATIONS = ("silu", "swiglu")
+IMPLS = ("moeblaze", "baseline")
+
+LM_CONFIG = tf.LmConfig(
+    vocab=256, d_model=128, n_layers=2, n_heads=4, num_experts=8, top_k=2,
+    seq_len=128, activation="swiglu", block=32, impl="moeblaze",
+    use_pallas=True)
+LM_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "s32", "uint32": "u32",
+            "bfloat16": "bf16"}[jnp.dtype(dt).name]
+
+
+def _io_entry(name, aval):
+    return {"name": name, "shape": [int(s) for s in aval.shape],
+            "dtype": _dtype_tag(aval.dtype)}
+
+
+def _flatten_io(names, avals):
+    out = []
+    for name, aval in zip(names, avals):
+        leaves = jax.tree_util.tree_leaves(aval)
+        if len(leaves) == 1 and not isinstance(aval, (list, tuple, dict)):
+            out.append(_io_entry(name, leaves[0]))
+        else:
+            for i, leaf in enumerate(leaves):
+                out.append(_io_entry(f"{name}.{i}", leaf))
+    return out
+
+
+class Exporter:
+    def __init__(self, out_dir: str, force: bool = False):
+        self.out_dir = out_dir
+        self.force = force
+        self.manifest = {"artifacts": [], "generated_by": "compile.aot"}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name: str, kind: str, fn, arg_specs, arg_names,
+               out_names, meta=None):
+        """Lower fn(*args) at the given ShapeDtypeStructs and write HLO."""
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        t0 = time.time()
+        if self.force or not os.path.exists(path):
+            lowered = jax.jit(fn).lower(*arg_specs)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            status = f"lowered in {time.time() - t0:5.1f}s, {len(text)//1024} KiB"
+        else:
+            status = "cached"
+        outs = jax.eval_shape(fn, *arg_specs)
+        if not isinstance(outs, (list, tuple)):
+            outs = (outs,)
+        entry = {
+            "name": name, "file": fname, "kind": kind,
+            "inputs": _flatten_io(arg_names, arg_specs),
+            "outputs": _flatten_io(out_names, outs),
+        }
+        if meta:
+            entry["meta"] = meta
+        self.manifest["artifacts"].append(entry)
+        print(f"  [{kind:>10s}] {name}: {status}")
+
+    def write_manifest(self, extra=None):
+        if extra:
+            self.manifest.update(extra)
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"manifest: {path} ({len(self.manifest['artifacts'])} artifacts)")
+
+
+def layer_arg_specs(c: cfgs.PaperConfig, with_cot: bool, gated: bool = True):
+    L, d, h, E = c.tokens, c.input_d, c.hidden, c.num_experts
+    f32 = jnp.float32
+    specs = [
+        jax.ShapeDtypeStruct((L, d), f32),       # x
+        jax.ShapeDtypeStruct((E, d), f32),       # wg
+        jax.ShapeDtypeStruct((E, d, h), f32),    # w1
+    ]
+    names = ["x", "wg", "w1"]
+    if gated:
+        specs.append(jax.ShapeDtypeStruct((E, d, h), f32))  # w2
+        names.append("w2")
+    specs.append(jax.ShapeDtypeStruct((E, h, d), f32))       # w3
+    names.append("w3")
+    if with_cot:
+        specs.append(jax.ShapeDtypeStruct((L, d), f32))
+        names.append("cot")
+    return specs, names
+
+
+def conf_meta(c: cfgs.PaperConfig, act: str, impl: str, block: int):
+    return {"config": c.name, "d": c.input_d, "h": c.hidden,
+            "experts": c.num_experts, "top_k": c.top_k, "batch": c.batch,
+            "seq_len": c.seq_len, "tokens": c.tokens, "activation": act,
+            "impl": impl, "block": block}
+
+
+def export_layer_steps(ex: Exporter, only=None):
+    blk = cfgs.SCALED_BLOCK
+    for c in cfgs.SCALED_CONFIGS:
+        if only and c.name not in only:
+            continue
+        for act in ACTIVATIONS:
+            for impl in IMPLS:
+                # Timed artifacts use the XLA-fused lowering for BOTH impls
+                # (use_pallas=False): on this CPU substrate interpret-mode
+                # Pallas adds loop overhead that is a lowering artifact, not
+                # the paper's algorithm (EXPERIMENTS.md discusses; the
+                # *_pallas ablation below quantifies it).
+                spec = ml.MoeSpec(c.num_experts, c.top_k, c.input_d, c.hidden,
+                                  act, blk, impl, use_pallas=False)
+                fn = ts.make_layer_step(spec, c.tokens)
+                gated = act == "swiglu"
+                args, names = layer_arg_specs(c, with_cot=True, gated=gated)
+                outs = (["loss", "dx", "dwg", "dw1", "dw2", "dw3"] if gated
+                        else ["loss", "dx", "dwg", "dw1", "dw3"])
+                ex.export(f"layer_step_{c.name}_{act}_{impl}", "layer_step",
+                          fn, args, names, outs,
+                          meta=conf_meta(c, act, impl, blk))
+    # Pallas-lowering ablation (interpret-mode overhead measurement)
+    for cname in ("conf2",):
+        if only and cname not in only:
+            continue
+        c = cfgs.by_name(cname)
+        spec = ml.MoeSpec(c.num_experts, c.top_k, c.input_d, c.hidden,
+                          "swiglu", blk, "moeblaze", use_pallas=True)
+        fn = ts.make_layer_step(spec, c.tokens)
+        args, names = layer_arg_specs(c, with_cot=True)
+        ex.export(f"layer_step_{cname}_swiglu_moeblaze_pallas", "layer_step_ablation",
+                  fn, args, names,
+                  ["loss", "dx", "dwg", "dw1", "dw2", "dw3"],
+                  meta=conf_meta(c, "swiglu", "moeblaze_pallas", blk))
+
+
+def export_layer_fwds(ex: Exporter):
+    blk = cfgs.SCALED_BLOCK
+    for name in ("conf1", "conf2"):
+        c = cfgs.by_name(name)
+        spec = ml.MoeSpec(c.num_experts, c.top_k, c.input_d, c.hidden,
+                          "swiglu", blk, "moeblaze", use_pallas=True)
+        fn = ts.make_layer_fwd(spec)
+        args, names = layer_arg_specs(c, with_cot=False)
+        ex.export(f"layer_fwd_{c.name}_swiglu_moeblaze", "layer_fwd",
+                  fn, args, names, ["y"],
+                  meta=conf_meta(c, "swiglu", "moeblaze", blk))
+
+
+def export_dispatch(ex: Exporter):
+    c = cfgs.by_name("conf3")
+    blk = cfgs.SCALED_BLOCK
+
+    def fn(ids):
+        out = dk.build_dispatch(ids, c.num_experts, blk)
+        return (out["expert_lengths"], out["pad_expert_token_offsets"],
+                out["pad_expert_token_indices"], out["pad_token_index_map"],
+                out["block_expert"])
+
+    args = [jax.ShapeDtypeStruct((c.tokens, c.top_k), jnp.int32)]
+    ex.export("dispatch_build_conf3", "dispatch", fn, args, ["topk_ids"],
+              ["expert_lengths", "pad_expert_token_offsets",
+               "pad_expert_token_indices", "pad_token_index_map",
+               "block_expert"],
+              meta=conf_meta(c, "-", "moeblaze", blk))
+
+
+def lm_param_entries(cfg: tf.LmConfig):
+    return [{"name": n, "shape": list(s), "init_scale": float(sc)}
+            for n, s, sc in tf.param_spec(cfg)]
+
+
+def export_lm(ex: Exporter):
+    cfg = LM_CONFIG
+    pspecs = [jax.ShapeDtypeStruct(tuple(s), jnp.float32)
+              for _, s, _ in tf.param_spec(cfg)]
+    tok = jax.ShapeDtypeStruct((LM_BATCH, cfg.seq_len), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    step = ts.make_train_step(cfg)
+
+    def flat_step(*flat):
+        P = len(pspecs)
+        params = list(flat[:P])
+        m = list(flat[P:2 * P])
+        v = list(flat[2 * P:3 * P])
+        stepi, lr, tokens, targets = flat[3 * P:]
+        np_, nm, nv, loss = step(params, m, v, stepi, lr, tokens, targets)
+        return tuple(np_) + tuple(nm) + tuple(nv) + (loss,)
+
+    P = len(pspecs)
+    args = pspecs * 3 + [scalar, scalar, tok, tok]
+    in_names = ([f"param.{i}" for i in range(P)] +
+                [f"m.{i}" for i in range(P)] +
+                [f"v.{i}" for i in range(P)] +
+                ["step", "lr", "tokens", "targets"])
+    out_names = ([f"param.{i}" for i in range(P)] +
+                 [f"m.{i}" for i in range(P)] +
+                 [f"v.{i}" for i in range(P)] + ["loss"])
+    meta = {"batch": LM_BATCH, **{k: getattr(cfg, k) for k in
+            ("vocab", "d_model", "n_layers", "n_heads", "num_experts",
+             "top_k", "seq_len", "activation", "block", "impl")}}
+    ex.export("lm_train_step", "lm_train", flat_step, args, in_names,
+              out_names, meta=meta)
+
+    ev = ts.make_eval_step(cfg)
+
+    def flat_eval(*flat):
+        params = list(flat[:P])
+        tokens, targets = flat[P:]
+        return ev(params, tokens, targets)
+
+    ex.export("lm_eval_step", "lm_eval", flat_eval, pspecs + [tok, tok],
+              [f"param.{i}" for i in range(P)] + ["tokens", "targets"],
+              ["loss"], meta=meta)
+
+
+def memory_fixture():
+    """Cross-language parity fixture: the Python memory model's numbers at
+    paper scale, consumed by rust/tests/memory_parity.rs."""
+    from . import memory_model as mm
+    rows = []
+    for c in cfgs.PAPER_CONFIGS:
+        for act in ("silu", "swiglu"):
+            for impl in ("moeblaze", "baseline"):
+                kw = dict(dtype_bytes=2, block=cfgs.PAPER_BLOCK)
+                if impl == "baseline":
+                    kw["mode"] = "paper_baseline"
+                b = mm.layer_bytes(impl, c.tokens, c.input_d, c.hidden,
+                                   c.num_experts, c.top_k, act, **kw)
+                rows.append({"config": c.name, "activation": act,
+                             "impl": impl, "total_bytes": b.total,
+                             "data_bytes": b.data_bytes,
+                             "index_bytes": b.index_bytes,
+                             "extra_bytes": b.extra_bytes})
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", nargs="*", help="restrict layer steps to confs")
+    ap.add_argument("--skip-lm", action="store_true")
+    args = ap.parse_args()
+
+    ex = Exporter(args.out, force=args.force)
+    t0 = time.time()
+    export_layer_steps(ex, only=args.only)
+    export_layer_fwds(ex)
+    export_dispatch(ex)
+    if not args.skip_lm:
+        export_lm(ex)
+    ex.write_manifest(extra={
+        "lm": {"batch": LM_BATCH, "params": lm_param_entries(LM_CONFIG),
+               "config": {k: getattr(LM_CONFIG, k) for k in LM_CONFIG._fields}},
+        "scaled_block": cfgs.SCALED_BLOCK,
+        "configs_scaled": [c._asdict() for c in cfgs.SCALED_CONFIGS],
+        "configs_paper": [c._asdict() for c in cfgs.PAPER_CONFIGS],
+        "memory_fixture": memory_fixture(),
+    })
+    print(f"total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Paper Table-1 MoE configurations, at paper scale and CPU-bench scale.
+
+The paper's seven configs (Table 1) use ffn_hidden = 4 * input_d. The
+"scaled" variants keep every *ratio* (k/E, d/h, the relative ordering of
+L·k·d across configs) while dividing the absolute sizes so a single-core
+CPU PJRT client can run fwd+bwd in tractable time (DESIGN.md §3):
+d ÷ 8, batch → 4 (2 where the paper used 16), seq ÷ 16.
+
+Memory figures (Fig 3/5) are *analytic* and therefore always computed at
+full paper scale; only the timed figures (Fig 4/6) use the scaled sizes.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+
+class PaperConfig(NamedTuple):
+    name: str
+    input_d: int
+    num_experts: int
+    top_k: int
+    batch: int
+    seq_len: int
+
+    @property
+    def hidden(self) -> int:
+        return 4 * self.input_d
+
+    @property
+    def tokens(self) -> int:
+        return self.batch * self.seq_len
+
+
+# Paper Table 1 (full scale) ------------------------------------------------
+PAPER_CONFIGS = [
+    PaperConfig("conf1", 512, 4, 1, 32, 2048),
+    PaperConfig("conf2", 1024, 8, 2, 32, 2048),
+    PaperConfig("conf3", 1024, 16, 4, 32, 2048),
+    PaperConfig("conf4", 2048, 16, 4, 32, 1024),
+    PaperConfig("conf5", 512, 16, 4, 32, 1024),
+    PaperConfig("conf6", 1024, 16, 4, 16, 1024),
+    PaperConfig("conf7", 2048, 8, 4, 16, 512),
+]
+
+# CPU-bench scale (ratios preserved; see module docstring) -------------------
+SCALED_CONFIGS = [
+    PaperConfig("conf1", 64, 4, 1, 4, 128),
+    PaperConfig("conf2", 128, 8, 2, 4, 128),
+    PaperConfig("conf3", 128, 16, 4, 4, 128),
+    PaperConfig("conf4", 256, 16, 4, 4, 64),
+    PaperConfig("conf5", 64, 16, 4, 4, 64),
+    PaperConfig("conf6", 128, 16, 4, 2, 64),
+    PaperConfig("conf7", 256, 8, 4, 2, 32),
+]
+
+# Slot-block size for the block-aligned index layout. The paper's kernels
+# tile at 128 on H100; at the scaled sizes a 32-wide block keeps padding
+# overhead proportionally similar.
+SCALED_BLOCK = 32
+PAPER_BLOCK = 128
+
+# DeepSeek-like config for the §2.1/§2.2 worked examples (94 GB / 98 GB).
+DEEPSEEK_EXAMPLE = dict(tokens=2_000_000, d=6144, hidden=24576, top_k=4)
+
+
+def by_name(name: str, scaled: bool = True) -> PaperConfig:
+    src = SCALED_CONFIGS if scaled else PAPER_CONFIGS
+    for c in src:
+        if c.name == name:
+            return c
+    raise KeyError(name)

@@ -1,0 +1,174 @@
+"""L1 Pallas kernels: fused SwiGLU epilogue (paper §5).
+
+Two kernels live here:
+
+* ``fused_swiglu_fwd``   — the "epilogue fusion" forward: one pass over a
+  token tile computes ``a = x@W1`` and ``b = x@W2`` on the MXU, applies the
+  SiLU epilogue in-register (VMEM tile), and stores only ``(A, B, Yswi)``.
+  ``sigmoid(a)`` and ``SiLU(a)`` are **transient** — never written to HBM
+  (paper Algorithm 1, lines 5–11).
+
+* ``fused_swiglu_bwd_epilogue`` — the backward epilogue: recomputes
+  ``SiLU(A)`` from the checkpointed ``A`` (paper Algorithm 1, line 24) and
+  produces ``(dA, dB)`` in a single fused pass, eliminating the σ(a)/SiLU(a)
+  activation buffers a conventional implementation saves.
+
+Hardware adaptation (DESIGN.md §2): the paper fuses in CUDA registers/smem
+on H100; here the same dataflow is expressed as a Pallas VMEM tile with the
+HBM↔VMEM schedule in ``BlockSpec``. Kernels run under ``interpret=True``
+so they lower to plain HLO executable by the CPU PJRT client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_L = 128
+DEFAULT_BLOCK_H = 128
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of `dim` that is <= preferred (TPU tiles want 128)."""
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+# ---------------------------------------------------------------------------
+# Forward: fused dual-GEMM + SiLU epilogue (single expert / dense tile)
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, w1_ref, w2_ref, a_ref, b_ref, y_ref, *, gated: bool,
+                activation: str):
+    """One (block_l, block_h) tile: load x once, both GEMMs, epilogue."""
+    xb = x_ref[...]
+    a = jnp.dot(xb, w1_ref[...], preferred_element_type=jnp.float32)
+    a_ref[...] = a.astype(a_ref.dtype)
+    if gated:
+        b = jnp.dot(xb, w2_ref[...], preferred_element_type=jnp.float32)
+        b_ref[...] = b.astype(b_ref.dtype)
+        # SiLU(a) lives only in the VMEM tile — the fusion the paper sells.
+        y_ref[...] = (ref.silu(a) * b).astype(y_ref.dtype)
+    else:
+        y_ref[...] = ref.apply_activation(a, None, activation).astype(y_ref.dtype)
+
+
+def fused_swiglu_fwd(x, w1, w2, *, activation: str = "swiglu",
+                     block_l: int = DEFAULT_BLOCK_L,
+                     block_h: int = DEFAULT_BLOCK_H,
+                     interpret: bool = True):
+    """Fused first-layer MoE projection for a single expert.
+
+    x: (m, d); w1, w2: (d, h). Returns (a, b, y):
+      gated (swiglu): y = SiLU(a) * b, all (m, h); b is x@W2.
+      non-gated:      y = act(a); b is a zero-size placeholder (None).
+    """
+    m, d = x.shape
+    h = w1.shape[1]
+    gated = activation == "swiglu"
+    bl = _pick_block(m, block_l)
+    bh = _pick_block(h, block_h)
+    grid = (m // bl, h // bh)
+
+    kernel = functools.partial(_fwd_kernel, gated=gated, activation=activation)
+    out_shape = [
+        jax.ShapeDtypeStruct((m, h), x.dtype),  # a
+        jax.ShapeDtypeStruct((m, h), x.dtype),  # b
+        jax.ShapeDtypeStruct((m, h), x.dtype),  # y
+    ]
+    a, b, y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bl, d), lambda i, j: (i, 0)),   # x tile: loaded once per row-tile
+            pl.BlockSpec((d, bh), lambda i, j: (0, j)),   # W1 column tile
+            pl.BlockSpec((d, bh), lambda i, j: (0, j)),   # W2 column tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bl, bh), lambda i, j: (i, j)),
+            pl.BlockSpec((bl, bh), lambda i, j: (i, j)),
+            pl.BlockSpec((bl, bh), lambda i, j: (i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, w1, w2)
+    if not gated:
+        b = None
+    return a, b, y
+
+
+# ---------------------------------------------------------------------------
+# Backward: fused epilogue with SiLU recomputation
+# ---------------------------------------------------------------------------
+
+
+def _bwd_kernel(a_ref, b_ref, g_ref, da_ref, db_ref):
+    """dA, dB from checkpointed (A, B) and upstream dYswi in one pass.
+
+    Recomputes sigmoid/SiLU — paper Algorithm 1 line 24 ("Recomputes
+    SiLU(A) to save memory"). All intermediates stay in the VMEM tile.
+    """
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    s = jax.nn.sigmoid(a)
+    silu_a = a * s                      # S_recomp
+    dsilu = s * (1.0 + a * (1.0 - s))   # ∇SiLU(A)
+    da_ref[...] = (g * b * dsilu).astype(da_ref.dtype)   # Alg.1 line 26
+    db_ref[...] = (g * silu_a).astype(db_ref.dtype)      # Alg.1 line 28
+
+
+def fused_swiglu_bwd_epilogue(a, b, dy, *, block_l: int = DEFAULT_BLOCK_L,
+                              block_h: int = DEFAULT_BLOCK_H,
+                              interpret: bool = True):
+    """(dA, dB) = fused backward epilogue. a, b, dy: (m, h)."""
+    m, h = a.shape
+    bl = _pick_block(m, block_l)
+    bh = _pick_block(h, block_h)
+    grid = (m // bl, h // bh)
+    spec = pl.BlockSpec((bl, bh), lambda i, j: (i, j))
+    da, db = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((m, h), a.dtype)] * 2,
+        interpret=interpret,
+    )(a, b, dy)
+    return da, db
+
+
+def _bwd_plain_kernel(a_ref, g_ref, da_ref, *, activation: str):
+    """Non-gated backward epilogue: dA = g * act'(A), recomputing act'."""
+    a = a_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    da_ref[...] = (g * ref.dactivation(a, activation)).astype(da_ref.dtype)
+
+
+def fused_act_bwd_epilogue(a, dy, *, activation: str,
+                           block_l: int = DEFAULT_BLOCK_L,
+                           block_h: int = DEFAULT_BLOCK_H,
+                           interpret: bool = True):
+    """dA for the plain (relu/silu/gelu) activations; recompute, don't load."""
+    m, h = a.shape
+    bl = _pick_block(m, block_l)
+    bh = _pick_block(h, block_h)
+    grid = (m // bl, h // bh)
+    spec = pl.BlockSpec((bl, bh), lambda i, j: (i, j))
+    (da,) = pl.pallas_call(
+        functools.partial(_bwd_plain_kernel, activation=activation),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec],
+        out_shape=[jax.ShapeDtypeStruct((m, h), a.dtype)],
+        interpret=interpret,
+    )(a, dy)
+    return da

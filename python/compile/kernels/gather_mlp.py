@@ -1,0 +1,232 @@
+"""L1 Pallas kernels: expert MLP with on-the-fly gather (paper §3).
+
+The MoEBlaze contribution: expert compute consumes the **original,
+unpermuted** ``(L, d)`` activation tensor. No ``(L·k, d)`` routed-token
+buffer is ever materialized as a saved activation; each kernel gathers the
+rows it needs through the lightweight index structures of paper §4.1.
+
+Kernels:
+
+* ``gather_dual_gemm`` — grid over block-aligned routed *slots*; each block
+  belongs to exactly one expert (block_expert, scalar-prefetched so the
+  BlockSpec index_map can stream that expert's weight tile); gathers its
+  token rows from x in-kernel and runs the fused dual-GEMM + SiLU epilogue
+  of :mod:`fused_swiglu`.
+* ``grouped_gemm`` — second MLP (W3) over the expert-major hidden tiles.
+* ``combine`` — paper §3.1 "Output Aggregation": per token-tile, gather the
+  k expert outputs via token_index_map and reduce with the gate weights,
+  writing straight into the (L, d) output.
+* ``scatter_rows`` — paper §3.2 step 1 "Expert Summation Backward": map the
+  (L, d) output gradient to the (n_pad, d) routed-slot gradient via the
+  same metadata (gathered formulation: each slot reads its token's row).
+
+Padding note: slots are block-aligned per expert (indices-only, -1 marks a
+pad slot); padded slots compute garbage rows of x[0] that are masked to 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 128
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+# ---------------------------------------------------------------------------
+# Fused gather + dual GEMM + epilogue (forward hot loop)
+# ---------------------------------------------------------------------------
+
+
+def _gather_kernel(be_ref, idx_ref, x_ref, w1_ref, w2_ref,
+                   a_ref, b_ref, y_ref, *, gated: bool, activation: str):
+    del be_ref  # consumed by the BlockSpec index_maps
+    from . import ref as _ref
+
+    idx = idx_ref[...]
+    safe = jnp.maximum(idx, 0)
+    mask = (idx >= 0).astype(jnp.float32)[:, None]
+    # On-the-fly gather from the *unpermuted* activation tensor (paper §3.1).
+    xb = x_ref[safe, :] * mask.astype(x_ref.dtype)
+    a = jnp.dot(xb, w1_ref[0], preferred_element_type=jnp.float32)
+    a_ref[...] = a.astype(a_ref.dtype)
+    if gated:
+        b = jnp.dot(xb, w2_ref[0], preferred_element_type=jnp.float32)
+        b_ref[...] = b.astype(b_ref.dtype)
+        y_ref[...] = (_ref.silu(a) * b).astype(y_ref.dtype)
+    else:
+        b_ref[...] = jnp.zeros_like(b_ref)
+        y_ref[...] = _ref.apply_activation(a, None, activation).astype(y_ref.dtype)
+
+
+def gather_dual_gemm(x, w1, w2, pad_indices, block_expert, *,
+                     activation: str = "swiglu", block_slots: int = DEFAULT_BLOCK,
+                     block_h: int = DEFAULT_BLOCK, interpret: bool = True):
+    """Fused gather + first-layer dual GEMM + activation epilogue.
+
+    x:            (L, d) unpermuted activations
+    w1, w2:       (E, d, h) stacked expert weights
+    pad_indices:  (n_pad,) token id per padded slot (-1 = pad)
+    block_expert: (n_pad / block_slots,) expert id per slot block
+    Returns (a, b, y) of shape (n_pad, h); b is zeros for non-gated.
+    """
+    L, d = x.shape
+    E, _, h = w1.shape
+    n_pad = pad_indices.shape[0]
+    bs = block_slots
+    assert n_pad % bs == 0, (n_pad, bs)
+    assert block_expert.shape[0] == n_pad // bs
+    bh = _pick_block(h, block_h)
+    gated = activation == "swiglu"
+
+    grid = (n_pad // bs, h // bh)
+    kernel = functools.partial(_gather_kernel, gated=gated, activation=activation)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs,), lambda i, j, be: (i,)),          # slot indices
+            pl.BlockSpec((L, d), lambda i, j, be: (0, 0)),       # full x resident
+            pl.BlockSpec((1, d, bh), lambda i, j, be: (be[i], 0, j)),  # W1[e]
+            pl.BlockSpec((1, d, bh), lambda i, j, be: (be[i], 0, j)),  # W2[e]
+        ],
+        out_specs=[
+            pl.BlockSpec((bs, bh), lambda i, j, be: (i, j)),
+            pl.BlockSpec((bs, bh), lambda i, j, be: (i, j)),
+            pl.BlockSpec((bs, bh), lambda i, j, be: (i, j)),
+        ],
+    )
+    a, b, y = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_pad, h), x.dtype)] * 3,
+        interpret=interpret,
+    )(block_expert, pad_indices, x, w1, w2)
+    return a, b, y
+
+
+# ---------------------------------------------------------------------------
+# Grouped GEMM for the second MLP (W3) over block-aligned slots
+# ---------------------------------------------------------------------------
+
+
+def _grouped_kernel(be_ref, hid_ref, w_ref, o_ref):
+    del be_ref
+    o_ref[...] = jnp.dot(
+        hid_ref[...], w_ref[0], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def grouped_gemm(hidden, w, block_expert, *, block_slots: int = DEFAULT_BLOCK,
+                 block_out: int = DEFAULT_BLOCK, interpret: bool = True):
+    """out[s] = hidden[s] @ w[expert_of_block(s)].
+
+    hidden: (n_pad, h); w: (E, h, d). Returns (n_pad, d).
+    """
+    n_pad, h = hidden.shape
+    E, _, d = w.shape
+    bs = block_slots
+    bo = _pick_block(d, block_out)
+    grid = (n_pad // bs, d // bo)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, h), lambda i, j, be: (i, 0)),
+            pl.BlockSpec((1, h, bo), lambda i, j, be: (be[i], 0, j)),
+        ],
+        out_specs=[pl.BlockSpec((bs, bo), lambda i, j, be: (i, j))],
+    )
+    (out,) = pl.pallas_call(
+        _grouped_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_pad, d), hidden.dtype)],
+        interpret=interpret,
+    )(block_expert, hidden, w)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Output aggregation (combine) and its backward scatter
+# ---------------------------------------------------------------------------
+
+
+def _combine_kernel(y2_ref, tim_ref, gates_ref, o_ref):
+    tim = tim_ref[...]          # (bl, k) padded slot ids
+    gates = gates_ref[...]      # (bl, k)
+    y2 = y2_ref[...]            # (n_pad, bd) resident tile
+    # On-the-fly reduction via token_index_map (paper §3.1, aggregation).
+    acc = jnp.einsum("lkd,lk->ld", y2[tim, :], gates.astype(jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def combine(y2, token_index_map, gates, *, block_l: int = DEFAULT_BLOCK,
+            block_d: int = DEFAULT_BLOCK, interpret: bool = True):
+    """y[i] = Σ_j gates[i, j] · y2[token_index_map[i, j]].
+
+    y2: (n_pad, d); token_index_map, gates: (L, k). Returns (L, d).
+    """
+    n_pad, d = y2.shape
+    L, k = token_index_map.shape
+    bl = _pick_block(L, block_l)
+    bd = _pick_block(d, block_d)
+    grid = (L // bl, d // bd)
+    (y,) = pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_pad, bd), lambda i, j: (0, j)),
+            pl.BlockSpec((bl, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bl, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((bl, bd), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((L, d), y2.dtype)],
+        interpret=interpret,
+    )(y2, token_index_map, gates)
+    return y
+
+
+def _scatter_kernel(dy_ref, idx_ref, gate_ref, o_ref):
+    idx = idx_ref[...]
+    safe = jnp.maximum(idx, 0)
+    mask = (idx >= 0).astype(jnp.float32)
+    g = gate_ref[...].astype(jnp.float32) * mask
+    o_ref[...] = (dy_ref[safe, :] * g[:, None]).astype(o_ref.dtype)
+
+
+def scatter_rows(dy, pad_indices, gate_of_slot, *, block_slots: int = DEFAULT_BLOCK,
+                 block_d: int = DEFAULT_BLOCK, interpret: bool = True):
+    """dY2[s] = gate_of_slot[s] · dy[token_of_slot[s]]  (paper §3.2 step 1).
+
+    Expressed as a gather per slot-block — contention-free by construction
+    (each output row written exactly once), the same trick the paper's
+    location-map uses to avoid atomics.
+    """
+    L, d = dy.shape
+    n_pad = pad_indices.shape[0]
+    bs = block_slots
+    bd = _pick_block(d, block_d)
+    grid = (n_pad // bs, d // bd)
+    (dy2,) = pl.pallas_call(
+        _scatter_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L, bd), lambda i, j: (0, j)),
+            pl.BlockSpec((bs,), lambda i, j: (i,)),
+            pl.BlockSpec((bs,), lambda i, j: (i,)),
+        ],
+        out_specs=[pl.BlockSpec((bs, bd), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((n_pad, d), dy.dtype)],
+        interpret=interpret,
+    )(dy, pad_indices, gate_of_slot)
+    return dy2

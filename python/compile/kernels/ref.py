@@ -1,0 +1,279 @@
+"""Pure-jnp correctness oracles for the MoEBlaze kernels.
+
+Everything in this module is deliberately simple and allocation-heavy:
+these are the *reference semantics* the Pallas kernels (and the Rust
+dispatch twin) are validated against, not an efficient implementation.
+
+Notation follows the paper (S2):
+  L  number of routed token instances (batch * seq)
+  d  model dim
+  h  FFN hidden dim (= 4d in the paper's Table 1)
+  E  number of experts
+  k  experts selected per token
+  n  = L * k routed slots
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def sigmoid(x):
+    return jax.nn.sigmoid(x)
+
+
+def silu(x):
+    """SiLU(u) = u * sigmoid(u)  (paper S5.1)."""
+    return x * jax.nn.sigmoid(x)
+
+
+def dsilu(x):
+    """d/dx SiLU(x) = sigmoid(x) * (1 + x * (1 - sigmoid(x)))."""
+    s = jax.nn.sigmoid(x)
+    return s * (1.0 + x * (1.0 - s))
+
+
+def swiglu(x, w1, w2):
+    """SwiGLU(x; W1, W2) = SiLU(x W1) * (x W2)  (paper S5.1)."""
+    return silu(x @ w1) * (x @ w2)
+
+
+def apply_activation(a, b, activation: str):
+    """Apply the paper's activation family to first-MLP outputs.
+
+    For the gated ("swiglu") family both projections participate; for the
+    plain family ("relu"/"silu") only `a` is used and `b` is ignored.
+    """
+    if activation == "swiglu":
+        return silu(a) * b
+    if activation == "silu":
+        return silu(a)
+    if activation == "relu":
+        return jnp.maximum(a, 0.0)
+    if activation == "gelu":
+        return jax.nn.gelu(a)
+    raise ValueError(f"unknown activation: {activation}")
+
+
+def dactivation(a, activation: str):
+    """Pointwise derivative of the non-gated activations."""
+    if activation == "silu":
+        return dsilu(a)
+    if activation == "relu":
+        return (a > 0.0).astype(a.dtype)
+    if activation == "gelu":
+        return jax.vmap(jax.vmap(jax.grad(jax.nn.gelu)))(a)
+    raise ValueError(f"no pointwise derivative for activation: {activation}")
+
+
+# ---------------------------------------------------------------------------
+# Gating (paper S2.1)
+# ---------------------------------------------------------------------------
+
+
+def top_k(values, k: int):
+    """Sort-based top-k (descending, ties broken by lower index).
+
+    Semantically identical to ``jax.lax.top_k`` but lowers to the ``sort``
+    HLO instead of the ``topk`` op: the AOT consumer is xla_extension
+    0.5.1 whose HLO text parser predates ``topk`` (DESIGN.md S9).
+    """
+    # stop_gradient: the permutation itself has no useful tangent and this
+    # jax build's sort-JVP emits gathers the backend rejects.
+    order = jnp.argsort(jax.lax.stop_gradient(-values), axis=-1,
+                        stable=True)[..., :k]
+    # Differentiable value selection via one-hot contraction: this jax
+    # build's take_along_axis VJP is broken (GatherDimensionNumbers /
+    # operand_batching_dims TypeError), and the E axis is tiny anyway.
+    onehot = jax.nn.one_hot(order, values.shape[-1], dtype=values.dtype)
+    vals = jnp.einsum("...e,...ke->...k", values, onehot)
+    return vals, order
+
+
+def gating(x, wg, k: int):
+    """softmax -> top-k.
+
+    Returns (gates (L,k), ids (L,k) i32). Gate scores are the softmax
+    probabilities of the selected experts (paper S2.1), renormalized over
+    the selected k as in most production routers.
+    """
+    logits = x @ wg.T  # (L, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = top_k(probs, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    return gates.astype(x.dtype), ids.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch structures (paper S4.1) -- argsort-based oracle (the criticized
+# sort-build baseline, S4.2).
+# ---------------------------------------------------------------------------
+
+
+def dispatch_ref(topk_ids, num_experts: int):
+    """Sort-based construction of the four S4.1 index structures.
+
+    topk_ids: (L, k) int32 -- token i's selected experts (distinct per row).
+
+    Returns a dict:
+      token_expert_indices: (L*k,) expert id per slot in token-major order
+      expert_token_indices: (L*k,) token id per slot in expert-major order
+      expert_token_offsets: (E+1,) exclusive prefix of per-expert counts
+      token_index_map:      (L, k) position of each (token, j) routed copy
+                            inside expert_token_indices
+      expert_lengths:       (E,) tokens routed to each expert
+    """
+    L, k = topk_ids.shape
+    flat_expert = topk_ids.reshape(-1)  # (n,) expert per token-major slot
+    token_of_slot = jnp.repeat(jnp.arange(L, dtype=jnp.int32), k)
+
+    # Stable sort by expert id groups tokens per expert while preserving
+    # token order inside a group (paper S4.2 "sorting-based approach").
+    order = jnp.argsort(flat_expert, stable=True).astype(jnp.int32)
+    expert_token_indices = token_of_slot[order]
+
+    expert_lengths = jnp.bincount(flat_expert, length=num_experts).astype(jnp.int32)
+    expert_token_offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(expert_lengths).astype(jnp.int32)]
+    )
+
+    # token_index_map = inverse permutation of `order`, token-major.
+    n = L * k
+    inv = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    token_index_map = inv.reshape(L, k)
+
+    return {
+        "token_expert_indices": flat_expert.astype(jnp.int32),
+        "expert_token_indices": expert_token_indices,
+        "expert_token_offsets": expert_token_offsets,
+        "token_index_map": token_index_map,
+        "expert_lengths": expert_lengths,
+    }
+
+
+def padded_len(L: int, k: int, num_experts: int, block: int) -> int:
+    """Static worst-case padded slot count (python int, AOT-stable)."""
+    n = L * k
+    worst = n + num_experts * (block - 1)
+    return ((worst + block - 1) // block) * block
+
+
+def padded_dispatch_ref(topk_ids, num_experts: int, block: int):
+    """Block-aligned variant used by the grouped-GEMM kernels.
+
+    Each expert's slot segment is padded up to a multiple of `block` so a
+    slot-block never spans two experts (MegaBlocks-style block alignment,
+    but *indices only*: no routed activations are materialized). The total
+    padded length is the static worst case roundup(L*k + E*(block-1)) so
+    AOT shapes are fixed.
+
+    Returns dispatch_ref() fields plus:
+      pad_expert_token_indices: (n_pad,) token id per padded slot, -1 = pad
+      pad_slot_of_slot:         (n,)    padded position of each compact slot
+                                         (expert-major compact order)
+      pad_token_index_map:      (L, k)  padded position of each routed copy
+      pad_expert_token_offsets: (E+1,)  offsets in the padded layout
+      block_expert:             (n_pad/block,) expert id per slot-block
+      n_pad, block:             python ints (static)
+    """
+    L, k = topk_ids.shape
+    n = L * k
+    n_pad = padded_len(L, k, num_experts, block)
+    base = dispatch_ref(topk_ids, num_experts)
+
+    lengths = base["expert_lengths"]
+    padded_lengths = ((lengths + block - 1) // block) * block
+    pad_offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(padded_lengths).astype(jnp.int32)]
+    )
+
+    # position of compact slot s (expert-major) inside the padded layout
+    offsets = base["expert_token_offsets"]
+    expert_of_compact = jnp.searchsorted(
+        offsets[1:], jnp.arange(n, dtype=jnp.int32), side="right"
+    ).astype(jnp.int32)
+    local = jnp.arange(n, dtype=jnp.int32) - offsets[expert_of_compact]
+    pad_slot_of_slot = (pad_offsets[expert_of_compact] + local).astype(jnp.int32)
+
+    pad_expert_token_indices = jnp.full((n_pad,), -1, jnp.int32)
+    pad_expert_token_indices = pad_expert_token_indices.at[pad_slot_of_slot].set(
+        base["expert_token_indices"]
+    )
+
+    tim = base["token_index_map"].reshape(-1)
+    pad_token_index_map = pad_slot_of_slot[tim].reshape(L, k)
+
+    nblocks = n_pad // block
+    blk = jnp.arange(nblocks, dtype=jnp.int32) * block
+    block_expert = jnp.clip(
+        jnp.searchsorted(pad_offsets[1:], blk, side="right").astype(jnp.int32),
+        0,
+        num_experts - 1,
+    )
+
+    out = dict(base)
+    out.update(
+        pad_expert_token_indices=pad_expert_token_indices,
+        pad_slot_of_slot=pad_slot_of_slot,
+        pad_token_index_map=pad_token_index_map,
+        pad_expert_token_offsets=pad_offsets,
+        pad_expert_lengths=padded_lengths,
+        block_expert=block_expert,
+        n_pad=n_pad,
+        block=block,
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dense MoE reference (paper S2 end-to-end semantics)
+# ---------------------------------------------------------------------------
+
+
+def moe_ref(x, wg, w1, w2, w3, k: int, activation: str = "swiglu"):
+    """Dense O(L*E*d*h) MoE layer: every expert on every token, masked sum.
+
+    x:  (L, d)
+    wg: (E, d)    gating
+    w1: (E, d, h) first projection ("a" path)
+    w2: (E, d, h) gate projection ("b" path; unused for relu/silu)
+    w3: (E, h, d) output projection
+    Returns (y (L, d), gates (L,k), ids (L,k)).
+    """
+    gates, ids = gating(x, wg, k)
+    E = wg.shape[0]
+    dense_gates = jnp.zeros((x.shape[0], E), x.dtype)
+    dense_gates = jax.vmap(lambda dg, i, g: dg.at[i].set(g))(dense_gates, ids, gates)
+
+    a = jnp.einsum("ld,edh->leh", x, w1)
+    if activation == "swiglu":
+        b = jnp.einsum("ld,edh->leh", x, w2)
+        hidden = silu(a) * b
+    else:
+        hidden = apply_activation(a, None, activation)
+    y_all = jnp.einsum("leh,ehd->led", hidden, w3)
+    y = jnp.einsum("led,le->ld", y_all, dense_gates)
+    return y, gates, ids
+
+
+def grouped_mlp_ref(xs, w1, w2, w3, group_sizes, activation: str = "swiglu"):
+    """Grouped (per-expert) MLP over expert-major compacted tokens.
+
+    xs: (n, d) tokens gathered in expert-major order
+    group_sizes: (E,) tokens per expert, sum == n
+    Returns (a, b, hidden, y2): all intermediates, for residual checks.
+    """
+    a = jax.lax.ragged_dot(xs, w1, group_sizes)
+    if activation == "swiglu":
+        b = jax.lax.ragged_dot(xs, w2, group_sizes)
+        hidden = silu(a) * b
+    else:
+        b = None
+        hidden = apply_activation(a, None, activation)
+    y2 = jax.lax.ragged_dot(hidden, w3, group_sizes)
+    return a, b, hidden, y2

@@ -1,0 +1,118 @@
+"""Analytic activation-memory model (the Fig 3 / Fig 5 metric).
+
+Mirrors — tensor for tensor — the residual sets of
+:func:`moe_layer.forward_with_residuals`; the pytest
+``test_memory_accounting.py`` asserts byte-exact agreement with the real
+residual pytrees. The Rust twin (`rust/src/memory/model.rs`) implements
+the same formulas and is cross-checked against this module through the
+shared manifest (same numbers must appear in both reports).
+
+Two accounting modes:
+
+* ``mode="ours"`` — exactly what *our* two implementations save. Exact,
+  deterministic, reproducible.
+* ``mode="paper_baseline"`` — adds the extra tensors a PyTorch-eager
+  conventional stack (the paper's Megablocks baseline measured via
+  saved-tensor hooks) retains on top of the ideal conventional set:
+  fp32 router probabilities (L·E), the pre-combine expert outputs y2
+  (n·d), and the expanded combine-backward buffer (n·d). This mode
+  reproduces the paper's reported ~4× swiglu ratios; "ours" yields
+  ~1.8–2.8× (EXPERIMENTS.md discusses the gap).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from .kernels import ref
+
+
+class MemoryBreakdown(NamedTuple):
+    data_bytes: int       # bf16/f32 activation payloads
+    index_bytes: int      # i32 routing metadata
+    extra_bytes: int      # paper_baseline-mode additions
+
+    @property
+    def total(self) -> int:
+        return self.data_bytes + self.index_bytes + self.extra_bytes
+
+
+def moeblaze_bytes(L: int, d: int, h: int, E: int, k: int, activation: str,
+                   *, dtype_bytes: int = 2, block: int = 128,
+                   save_yswi: bool = False) -> MemoryBreakdown:
+    """Residuals of the MoEBlaze layer (Algorithm-1 checkpoint policy)."""
+    n = L * k
+    n_pad = ref.padded_len(L, k, E, block)
+    gated = activation == "swiglu"
+
+    data = n * dtype_bytes                     # gates (L, k)
+    data += n_pad * h * dtype_bytes            # A
+    if gated:
+        data += n_pad * h * dtype_bytes        # B (Yswi recomputed, §5.2)
+        if save_yswi:
+            data += n_pad * h * dtype_bytes    # ablation: Yswi saved
+    idx = 4 * (
+        n                                      # ids (L, k)
+        + n_pad                                # pad_expert_token_indices
+        + n                                    # pad_token_index_map
+        + n_pad // block                       # block_expert
+        + (E + 1)                              # pad_expert_token_offsets
+    )
+    return MemoryBreakdown(data, idx, 0)
+
+
+def baseline_bytes(L: int, d: int, h: int, E: int, k: int, activation: str,
+                   *, dtype_bytes: int = 2, block: int = 128,
+                   mode: str = "ours") -> MemoryBreakdown:
+    """Residuals of the conventional (MegaBlocks-style) layer (§2, §5.2)."""
+    n = L * k
+    gated = activation == "swiglu"
+
+    data = n * dtype_bytes                     # gates
+    data += n * d * dtype_bytes                # xs — materialized routed buffer
+    data += n * h * dtype_bytes                # A
+    if gated:
+        data += 4 * n * h * dtype_bytes        # B, σ(A), SiLU(A), Yswi
+    else:
+        data += n * h * dtype_bytes            # act(A)
+    idx = 4 * (
+        n                                      # ids
+        + n                                    # expert_token_indices
+        + n                                    # token_index_map
+        + (E + 1)                              # offsets
+    )
+    extra = 0
+    if mode == "paper_baseline":
+        extra += L * E * 4                     # fp32 router probabilities
+        extra += n * d * dtype_bytes           # y2 kept for combine backward
+        extra += n * d * dtype_bytes           # expanded routed-gradient buffer
+    elif mode != "ours":
+        raise ValueError(mode)
+    return MemoryBreakdown(data, idx, extra)
+
+
+def layer_bytes(impl: str, L, d, h, E, k, activation, **kw) -> MemoryBreakdown:
+    if impl == "moeblaze":
+        kw.pop("mode", None)
+        return moeblaze_bytes(L, d, h, E, k, activation, **kw)
+    if impl == "baseline":
+        return baseline_bytes(L, d, h, E, k, activation, **kw)
+    raise ValueError(impl)
+
+
+def routing_buffer_bytes(L: int, d: int, k: int, dtype_bytes: int = 2) -> int:
+    """Paper §2.1 worked example: Mem_routing = L·d·k·dtype (≈94 GB for the
+    DeepSeek-like config; with L = 2e6 exactly this is 98.3e9 B — the paper
+    rounds loosely)."""
+    return L * d * k * dtype_bytes
+
+
+def ffn_intermediate_bytes(L: int, h: int, dtype_bytes: int = 2) -> int:
+    """Paper §2.2 worked example.
+
+    The paper prints "Mem_act = 2L × h ≈ 98 GB", but 2·(2e6)·24576·2 B is
+    ≈197e9 — double their own number. Their 98 GB corresponds to a single
+    (L, h) bf16 intermediate (L·h·2 B = 98.3e9), so that is the formula we
+    implement; the '2' in their display is evidently the dtype bytes.
+    """
+    return L * h * dtype_bytes

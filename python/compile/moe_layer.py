@@ -1,0 +1,483 @@
+"""L2: the MoEBlaze MoE layer (paper §3 + §5, Algorithm 1) as a custom_vjp.
+
+Two implementations share one interface:
+
+* ``impl="moeblaze"`` — index-driven dispatch (paper §4), on-the-fly gathers
+  from the unpermuted ``(L, d)`` tensor, fused first-layer dual-GEMM +
+  activation epilogue, and the Algorithm-1 activation-checkpoint policy:
+
+      residuals (swiglu) = {gates, ids, dispatch indices, A, B}
+      residuals (plain)  = {gates, ids, dispatch indices, A}
+
+  ``SiLU(A)``/``σ(A)``/``Yswi``, the routed token buffer, the routed
+  gradient buffer, and the per-slot expert outputs are *never* saved —
+  they are recomputed or streamed (paper §3.2, §5.2, Algorithm 1 line
+  24; ``save_yswi=True`` re-enables the Algorithm-1-literal variant as
+  an ablation).
+
+* ``impl="baseline"`` — the conventional dropless pipeline the paper
+  benchmarks against (MegaBlocks-style): argsort-based dispatch, a
+  **materialized** routed-token buffer ``xs (n, d)``, unfused point-wise
+  stages, and the conventional residual set:
+
+      residuals (swiglu) = {gates, ids, sort metadata, xs, A, B, σ(A),
+                            SiLU(A), Yswi}                  (paper §5.2)
+      residuals (plain)  = {gates, ids, sort metadata, xs, A, act(A)}
+
+Because both are ``custom_vjp``, the saved-activation set is *exact and
+deterministic* — the quantity Figures 3/5 report. `forward_with_residuals`
+exposes it for the accounting tests and the Rust memory model cross-check.
+
+The layer is a pure function of ``(x, wg, w1, w2, w3)`` so it AOT-lowers
+cleanly; all routing metadata is built in-graph.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dispatch as dk
+from .kernels import fused_swiglu as fs
+from .kernels import gather_mlp as gm
+from .kernels import ref
+
+
+class MoeSpec(NamedTuple):
+    """Static configuration of one MoE layer."""
+
+    num_experts: int
+    top_k: int
+    d_model: int
+    d_hidden: int
+    activation: str = "swiglu"  # swiglu | silu | relu | gelu
+    block: int = 128            # slot-block size (expert-aligned padding)
+    impl: str = "moeblaze"      # moeblaze | baseline
+    use_pallas: bool = True     # pallas kernels vs pure-jnp equivalents
+    interpret: bool = True      # pallas interpret mode (CPU PJRT)
+    save_yswi: bool = False     # ablation: save Yswi instead of recomputing
+                                # it from (A, B) in bwd (paper §5.2 skips it)
+
+    @property
+    def gated(self) -> bool:
+        return self.activation == "swiglu"
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _gating_bwd(x, wg, gates, ids, dgates):
+    """Backprop through softmax → top-k → renormalize (recomputes probs).
+
+    Returns (dx_gating, dwg). Recomputing the (L, E) probs is one small
+    GEMM — cheaper than saving them (same checkpointing philosophy).
+    """
+    logits = x @ wg.T
+    p = jax.nn.softmax(logits, axis=-1)           # (L, E)
+    s = jnp.take_along_axis(p, ids, axis=1)       # (L, k) selected probs
+    t = jnp.sum(s, axis=-1, keepdims=True)
+    # gates = s / t  =>  ds_j = dg_j / t - (sum_m dg_m s_m) / t^2
+    dot = jnp.sum(dgates * s, axis=-1, keepdims=True)
+    ds = dgates / t - dot / (t * t)
+    dp = jnp.zeros_like(p)
+    dp = jax.vmap(lambda row, i, v: row.at[i].add(v))(dp, ids, ds)
+    # softmax vjp: dlogits = p * (dp - sum(dp * p))
+    dlogits = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dx = dlogits @ wg
+    dwg = dlogits.T @ x
+    return dx, dwg
+
+
+def _block_weight_grads(rows, grads, block_expert, num_experts, block):
+    """Per-expert weight gradient via block outer-products + segment sum.
+
+    rows: (n_pad, p) input rows (expert-block aligned); grads: (n_pad, q).
+    Returns (E, p, q) = Σ_{s in expert e} rows[s]ᵀ grads[s].
+
+    This is the aggregation-in-place/tiled-reduction structure of paper
+    §5.2 ("aggregates gradients … via tiled reductions — completely
+    eliminating temporary global buffers"): each block contributes one
+    (p, q) tile, summed by expert; no (E, p, q)·nblocks buffer exists.
+    """
+    n_pad, p = rows.shape
+    q = grads.shape[1]
+    nblocks = n_pad // block
+    rb = rows.reshape(nblocks, block, p)
+    gb = grads.reshape(nblocks, block, q)
+    per_block = jnp.einsum("bip,biq->bpq", rb, gb)
+    return jax.ops.segment_sum(per_block, block_expert, num_segments=num_experts)
+
+
+def _pad_group_sizes(dispatch):
+    return dispatch["pad_expert_token_offsets"][1:] - dispatch["pad_expert_token_offsets"][:-1]
+
+
+def _gather_rows(x, pad_indices):
+    """Masked gather of token rows into the padded slot layout (transient)."""
+    safe = jnp.maximum(pad_indices, 0)
+    mask = (pad_indices >= 0).astype(x.dtype)[:, None]
+    return x[safe] * mask
+
+
+def _gate_of_slot(gates, pad_token_index_map, n_pad):
+    g = jnp.zeros((n_pad,), gates.dtype)
+    return g.at[pad_token_index_map.reshape(-1)].set(gates.reshape(-1))
+
+
+def _token_of_slot_combine(y2, pad_tim, gates):
+    """Pure-jnp combine: y[i] = Σ_j gates[i,j] · y2[pad_tim[i,j]]."""
+    return jnp.einsum("lkd,lk->ld", y2[pad_tim], gates)
+
+
+# ---------------------------------------------------------------------------
+# MoEBlaze forward/backward
+# ---------------------------------------------------------------------------
+
+
+def _moeblaze_fwd(spec: MoeSpec, x, wg, w1, w2, w3):
+    gates, ids = ref.gating(x, wg, spec.top_k)
+
+    if spec.use_pallas:
+        disp = dk.build_dispatch(ids, spec.num_experts, spec.block,
+                                 interpret=spec.interpret)
+        eti = disp["pad_expert_token_indices"]
+        tim = disp["pad_token_index_map"]
+        be = disp["block_expert"]
+        pad_offsets = disp["pad_expert_token_offsets"]
+        a, b, hidden = gm.gather_dual_gemm(
+            x, w1, w2, eti, be, activation=spec.activation,
+            block_slots=spec.block, interpret=spec.interpret)
+        y2 = gm.grouped_gemm(hidden, w3, be, block_slots=spec.block,
+                             interpret=spec.interpret)
+        y = gm.combine(y2, tim, gates, interpret=spec.interpret)
+    else:
+        # Compact layout: ragged_dot takes true group sizes, so the fused
+        # lowering runs zero padded GEMM rows (the padded layout exists
+        # only for the blocked Pallas kernels).
+        disp = dk.build_dispatch_compact_jnp(ids, spec.num_experts)
+        eti = disp["expert_token_indices"]
+        tim = disp["token_index_map"]
+        be = jnp.zeros((0,), jnp.int32)  # unused in the compact path
+        pad_offsets = disp["expert_token_offsets"]
+        xs = x[eti]  # transient — not a residual
+        gs = disp["expert_lengths"]
+        a = jax.lax.ragged_dot(xs, w1, gs)
+        if spec.gated:
+            b = jax.lax.ragged_dot(xs, w2, gs)
+            hidden = ref.silu(a) * b
+        else:
+            b = jnp.zeros_like(a)
+            hidden = ref.apply_activation(a, None, spec.activation)
+        y2 = jax.lax.ragged_dot(hidden, w3, gs)
+        y = _token_of_slot_combine(y2, tim, gates)
+
+    # Algorithm-1 residual policy: indices + gates + {A, B} (gated; Yswi is
+    # recomputed pointwise in bwd unless the save_yswi ablation is on — the
+    # paper §5.2 "skip saving the SwiGLU intermediate result") or {A} (plain).
+    saved_hidden = hidden if (spec.gated and spec.save_yswi) else jnp.zeros((0,), x.dtype)
+    saved_b = b if spec.gated else jnp.zeros((0,), x.dtype)
+    res = (x, wg, w1, w2, w3, gates, ids, eti, tim, be,
+           pad_offsets, a, saved_b, saved_hidden)
+    return y, res
+
+
+def _moeblaze_bwd(spec: MoeSpec, res, dy):
+    (x, wg, w1, w2, w3, gates, ids, eti, tim, be, pad_offsets,
+     a, b, saved_hidden) = res
+    n_pad = eti.shape[0]  # compact n in the jnp path
+    E = spec.num_experts
+    gs = pad_offsets[1:] - pad_offsets[:-1]
+
+    if spec.gated:
+        # Recompute Yswi = SiLU(A)·B pointwise unless the ablation saved it
+        # (paper §5.2: activation computation is bandwidth-bound; recompute
+        # beats the HBM round-trip).
+        hidden = saved_hidden if spec.save_yswi else ref.silu(a) * b
+    else:
+        hidden = ref.apply_activation(a, None, spec.activation)  # recompute
+
+    # --- recompute per-slot expert outputs for the gate gradient ----------
+    if spec.use_pallas:
+        y2 = gm.grouped_gemm(hidden, w3, be, block_slots=spec.block,
+                             interpret=spec.interpret)
+    else:
+        y2 = jax.lax.ragged_dot(hidden, w3, gs)
+    dgates = jnp.einsum("ld,lkd->lk", dy, y2[tim])
+
+    # --- paper §3.2 step 1: expert-summation backward (scatter) -----------
+    gos = _gate_of_slot(gates, tim, n_pad)
+    if spec.use_pallas:
+        dy2 = gm.scatter_rows(dy, eti, gos, block_slots=spec.block,
+                              interpret=spec.interpret)
+    else:
+        dy2 = _gather_rows(dy, eti) * gos[:, None]
+
+    # --- second MLP backward ----------------------------------------------
+    if spec.use_pallas:
+        dw3 = _block_weight_grads(hidden, dy2, be, E, spec.block)
+    else:
+        pad = _compact_pad_map(eti, pad_offsets, spec)
+        dw3 = _block_weight_grads(_pad_rows(hidden, pad), _pad_rows(dy2, pad),
+                                  pad["block_expert"], E, spec.block)
+    w3t = jnp.swapaxes(w3, 1, 2)
+    if spec.use_pallas:
+        dhidden = gm.grouped_gemm(dy2, w3t, be, block_slots=spec.block,
+                                  interpret=spec.interpret)
+    else:
+        dhidden = jax.lax.ragged_dot(dy2, w3t, gs)
+
+    # --- fused backward epilogue (recompute SiLU — Alg. 1 line 24) --------
+    if spec.gated:
+        if spec.use_pallas:
+            da, db = fs.fused_swiglu_bwd_epilogue(a, b, dhidden,
+                                                  interpret=spec.interpret)
+        else:
+            s = jax.nn.sigmoid(a)
+            da = dhidden * b * (s * (1.0 + a * (1.0 - s)))
+            db = dhidden * (a * s)
+    else:
+        if spec.use_pallas:
+            da = fs.fused_act_bwd_epilogue(a, dhidden, activation=spec.activation,
+                                           interpret=spec.interpret)
+        else:
+            da = dhidden * ref.dactivation(a, spec.activation)
+        db = None
+
+    # --- first MLP backward: weight grads need xs — regather, never saved -
+    xs = _gather_rows(x, eti)
+    if spec.use_pallas:
+        dw1 = _block_weight_grads(xs, da, be, E, spec.block)
+    else:
+        dw1 = _block_weight_grads(_pad_rows(xs, pad), _pad_rows(da, pad),
+                                  pad["block_expert"], E, spec.block)
+    w1t = jnp.swapaxes(w1, 1, 2)
+    if spec.use_pallas:
+        dxs = gm.grouped_gemm(da, w1t, be, block_slots=spec.block,
+                              interpret=spec.interpret)
+    else:
+        dxs = jax.lax.ragged_dot(da, w1t, gs)
+    if spec.gated:
+        if spec.use_pallas:
+            dw2 = _block_weight_grads(xs, db, be, E, spec.block)
+        else:
+            dw2 = _block_weight_grads(_pad_rows(xs, pad), _pad_rows(db, pad),
+                                      pad["block_expert"], E, spec.block)
+        w2t = jnp.swapaxes(w2, 1, 2)
+        if spec.use_pallas:
+            dxs = dxs + gm.grouped_gemm(db, w2t, be, block_slots=spec.block,
+                                        interpret=spec.interpret)
+        else:
+            dxs = dxs + jax.lax.ragged_dot(db, w2t, gs)
+    else:
+        dw2 = jnp.zeros_like(w2)
+
+    # --- paper §3.2 step 3: token-gradient accumulation (on-the-fly) ------
+    if spec.use_pallas:
+        ones = jnp.ones_like(gates)
+        dx = gm.combine(dxs, tim, ones, interpret=spec.interpret)
+    else:
+        dx = jnp.sum(dxs[tim], axis=1)
+
+    # --- gating backward ----------------------------------------------------
+    dx_g, dwg = _gating_bwd(x, wg, gates, ids, dgates)
+    dx = dx + dx_g
+    return dx, dwg, dw1, dw2, dw3
+
+
+# ---------------------------------------------------------------------------
+# Baseline (conventional / MegaBlocks-style) forward/backward
+# ---------------------------------------------------------------------------
+
+
+def _kernel_boundary(*ts):
+    """Model a conventional multi-kernel pipeline: each stage of the
+    baseline is a separate kernel launch whose outputs round-trip through
+    global memory, so XLA must not fuse across stages. MoEBlaze's whole
+    point is eliminating these boundaries; the fused path has none.
+    """
+    out = jax.lax.optimization_barrier(ts)
+    return out[0] if len(ts) == 1 else out
+
+
+def _baseline_fwd(spec: MoeSpec, x, wg, w1, w2, w3):
+    gates, ids = ref.gating(x, wg, spec.top_k)
+    disp = ref.dispatch_ref(ids, spec.num_experts)  # argsort pipeline (§4.2)
+    eti = disp["expert_token_indices"]       # (n,) compact
+    tim = disp["token_index_map"]            # (L, k)
+    lengths = disp["expert_lengths"]
+    eti, tim = _kernel_boundary(eti, tim)    # dispatch kernel | permute kernel
+
+    xs = _kernel_boundary(x[eti])            # MATERIALIZED routed buffer
+    a = _kernel_boundary(jax.lax.ragged_dot(xs, w1, lengths))
+    if spec.gated:
+        b = _kernel_boundary(jax.lax.ragged_dot(xs, w2, lengths))
+        sig = _kernel_boundary(jax.nn.sigmoid(a))  # saved (conventional, §5.2)
+        act = _kernel_boundary(a * sig)            # SiLU(a), saved
+        hidden = _kernel_boundary(act * b)         # Yswi, saved
+    else:
+        b = jnp.zeros((0,), x.dtype)
+        sig = jnp.zeros((0,), x.dtype)
+        act = _kernel_boundary(ref.apply_activation(a, None, spec.activation))
+        hidden = act
+    y2 = _kernel_boundary(jax.lax.ragged_dot(hidden, w3, lengths))
+    y = jnp.einsum("lkd,lk->ld", y2[tim], gates)
+
+    res = (x, wg, w1, w2, w3, gates, ids, eti, tim,
+           disp["expert_token_offsets"], xs, a, b, sig, act, hidden)
+    return y, res
+
+
+def _baseline_bwd(spec: MoeSpec, res, dy):
+    (x, wg, w1, w2, w3, gates, ids, eti, tim, offsets,
+     xs, a, b, sig, act, hidden) = res
+    E = spec.num_experts
+    n = eti.shape[0]
+    lengths = offsets[1:] - offsets[:-1]
+
+    y2 = _kernel_boundary(jax.lax.ragged_dot(hidden, w3, lengths))  # kept
+    dgates = jnp.einsum("ld,lkd->lk", dy, y2[tim])
+
+    # expand (L, d) grads to the (n, d) routed-gradient buffer (materialized)
+    gos = jnp.zeros((n,), gates.dtype).at[tim.reshape(-1)].set(gates.reshape(-1))
+    dy2 = _kernel_boundary(dy[eti] * gos[:, None])
+
+    w3t = jnp.swapaxes(w3, 1, 2)
+    dhidden = _kernel_boundary(jax.lax.ragged_dot(dy2, w3t, lengths))
+
+    if spec.gated:
+        # uses the SAVED sig/act — no recompute (conventional kernels);
+        # separate pointwise kernels as in the eager pipeline
+        da = _kernel_boundary(dhidden * b * (sig * (1.0 + a * (1.0 - sig))))
+        db = _kernel_boundary(dhidden * act)
+    else:
+        da = _kernel_boundary(dhidden * ref.dactivation(a, spec.activation))
+        db = None
+
+    # weight grads via block-aligned regrouping of the *saved* buffers
+    # (compute detail only; residuals are the saved set above)
+    pad = _baseline_pad_map(eti, offsets, spec)
+    xs_p = _pad_rows(xs, pad)
+    da_p = _pad_rows(da, pad)
+    hid_p = _pad_rows(hidden, pad)
+    dy2_p = _pad_rows(dy2, pad)
+    be = pad["block_expert"]
+    dw1 = _block_weight_grads(xs_p, da_p, be, E, spec.block)
+    dw3 = _block_weight_grads(hid_p, dy2_p, be, E, spec.block)
+    if spec.gated:
+        db_p = _pad_rows(db, pad)
+        dw2 = _block_weight_grads(xs_p, db_p, be, E, spec.block)
+    else:
+        dw2 = jnp.zeros_like(w2)
+
+    w1t = jnp.swapaxes(w1, 1, 2)
+    dxs = jax.lax.ragged_dot(da, w1t, lengths)
+    if spec.gated:
+        w2t = jnp.swapaxes(w2, 1, 2)
+        dxs = dxs + jax.lax.ragged_dot(db, w2t, lengths)
+    dx = jnp.zeros_like(x).at[eti].add(dxs)
+
+    dx_g, dwg = _gating_bwd(x, wg, gates, ids, dgates)
+    return dx + dx_g, dwg, dw1, dw2, dw3
+
+
+def _compact_pad_map(eti, offsets, spec: MoeSpec):
+    """Compact→padded mapping for the bwd weight-grad block reduction
+    (transient metadata; same machinery the baseline bwd uses)."""
+    return _baseline_pad_map(eti, offsets, spec)
+
+
+def _baseline_pad_map(eti, offsets, spec: MoeSpec):
+    """Compact→padded slot mapping recomputed in bwd (metadata only)."""
+    n = eti.shape[0]
+    E = spec.num_experts
+    block = spec.block
+    L = n // spec.top_k
+    n_pad = ref.padded_len(L, spec.top_k, E, block)
+    lengths = offsets[1:] - offsets[:-1]
+    padded_lengths = ((lengths + block - 1) // block) * block
+    pad_offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(padded_lengths).astype(jnp.int32)])
+    sl = jnp.arange(n, dtype=jnp.int32)
+    e_of = jnp.searchsorted(offsets[1:], sl, side="right").astype(jnp.int32)
+    local = sl - offsets[e_of]
+    pad_slot = pad_offsets[e_of] + local
+    compact_of_pad = jnp.full((n_pad,), -1, jnp.int32).at[pad_slot].set(sl)
+    nblocks = n_pad // block
+    blk = jnp.arange(nblocks, dtype=jnp.int32) * block
+    block_expert = jnp.clip(
+        jnp.searchsorted(pad_offsets[1:], blk, side="right").astype(jnp.int32),
+        0, E - 1)
+    return {"compact_of_pad": compact_of_pad, "block_expert": block_expert,
+            "n_pad": n_pad}
+
+
+def _pad_rows(rows, pad):
+    idx = pad["compact_of_pad"]
+    safe = jnp.maximum(idx, 0)
+    mask = (idx >= 0).astype(rows.dtype)[:, None]
+    return rows[safe] * mask
+
+
+# ---------------------------------------------------------------------------
+# Public constructors
+# ---------------------------------------------------------------------------
+
+
+def make_moe_layer(spec: MoeSpec):
+    """Returns a differentiable fn(x, wg, w1, w2, w3) -> y for `spec`."""
+    fwd = _moeblaze_fwd if spec.impl == "moeblaze" else _baseline_fwd
+    bwd = _moeblaze_bwd if spec.impl == "moeblaze" else _baseline_bwd
+
+    @jax.custom_vjp
+    def layer(x, wg, w1, w2, w3):
+        y, _ = fwd(spec, x, wg, w1, w2, w3)
+        return y
+
+    def layer_fwd(x, wg, w1, w2, w3):
+        return fwd(spec, x, wg, w1, w2, w3)
+
+    def layer_bwd(res, dy):
+        return bwd(spec, res, dy)
+
+    layer.defvjp(layer_fwd, layer_bwd)
+    return layer
+
+
+def forward_with_residuals(spec: MoeSpec, x, wg, w1, w2, w3):
+    """(y, residuals) — for the activation-memory accounting tests.
+
+    Residual classification (DESIGN.md §6): parameters and the layer input
+    x are excluded from "activation memory"; everything else the layer
+    saves between fwd and bwd is counted.
+    """
+    fwd = _moeblaze_fwd if spec.impl == "moeblaze" else _baseline_fwd
+    y, res = fwd(spec, x, wg, w1, w2, w3)
+    if spec.impl == "moeblaze":
+        (x_, wg_, w1_, w2_, w3_, gates, ids, eti, tim, be, pad_offsets,
+         a, b, hidden) = res
+        named = {"gates": gates, "ids": ids, "pad_expert_token_indices": eti,
+                 "pad_token_index_map": tim, "block_expert": be,
+                 "pad_expert_token_offsets": pad_offsets, "A": a}
+        if spec.gated:
+            named.update(B=b)
+            if spec.save_yswi:
+                named.update(Yswi=hidden)
+    else:
+        (x_, wg_, w1_, w2_, w3_, gates, ids, eti, tim, offsets,
+         xs, a, b, sig, act, hidden) = res
+        named = {"gates": gates, "ids": ids, "expert_token_indices": eti,
+                 "token_index_map": tim, "expert_token_offsets": offsets,
+                 "xs_routed": xs, "A": a, "act": act}
+        if spec.gated:
+            named.update(B=b, sigma=sig, Yswi=hidden)
+    return y, named
+
+
+def residual_bytes(named: dict) -> int:
+    """Total bytes of the saved-activation set (the Fig 3/5 metric)."""
+    return int(sum(v.size * v.dtype.itemsize for v in named.values()))

@@ -1,0 +1,103 @@
+"""L2: training step (loss + grads + Adam) for the MoE LM.
+
+The full update is one jitted function so the whole fwd/bwd/optimizer
+pipeline AOT-lowers into a single HLO module the Rust coordinator executes
+per step. Parameters and optimizer moments are flat lists (positional
+interface, see transformer.param_spec); buffers are donated at lowering
+time so XLA updates in place.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tf
+
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+
+
+def adam_update(params, grads, m, v, step, lr, *, weight_decay=0.0):
+    """Standard AdamW; `step` is 1-based (f32 scalar)."""
+    b1c = 1.0 - ADAM_B1 ** step
+    b2c = 1.0 - ADAM_B2 ** step
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * (g * g)
+        upd = (mi / b1c) / (jnp.sqrt(vi / b2c) + ADAM_EPS)
+        p = p - lr * (upd + weight_decay * p)
+        new_p.append(p)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+def make_train_step(cfg: tf.LmConfig):
+    """(params, m, v, step, lr, tokens, targets) → (params', m', v', loss)."""
+
+    def step_fn(params, m, v, step, lr, tokens, targets):
+        loss, grads = jax.value_and_grad(tf.loss_fn)(params, tokens, targets, cfg)
+        params, m, v = adam_update(params, grads, m, v, step, lr)
+        return params, m, v, loss
+
+    return step_fn
+
+
+def make_eval_step(cfg: tf.LmConfig):
+    """(params, tokens, targets) → loss (no update)."""
+
+    def eval_fn(params, tokens, targets):
+        return tf.loss_fn(params, tokens, targets, cfg)
+
+    return eval_fn
+
+
+def make_layer_step(spec, L: int):
+    """Single-MoE-layer fwd+bwd step used by the Fig 4/6 speed benches.
+
+    (x, wg, w1, w2, w3, cot) → (loss, dx, dwg, dw1, dw2, dw3)
+    loss = Σ y ⊙ cot exercises the full backward exactly once, matching the
+    paper's "end-to-end single training pass … excluding optimizer".
+    """
+    from . import moe_layer as ml
+
+    layer = ml.make_moe_layer(spec)
+
+    if spec.gated:
+        def step_fn(x, wg, w1, w2, w3, cot):
+            def scalar(x_, wg_, w1_, w2_, w3_):
+                return jnp.sum(layer(x_, wg_, w1_, w2_, w3_) * cot)
+
+            loss, grads = jax.value_and_grad(scalar, argnums=(0, 1, 2, 3, 4))(
+                x, wg, w1, w2, w3)
+            return (loss,) + grads
+    else:
+        # Non-gated activations never touch W2 — export a W2-free signature
+        # so XLA's parameter pruning and the manifest agree.
+        def step_fn(x, wg, w1, w3, cot):
+            w2 = jnp.zeros_like(w1)
+
+            def scalar(x_, wg_, w1_, w3_):
+                return jnp.sum(layer(x_, wg_, w1_, w2, w3_) * cot)
+
+            loss, grads = jax.value_and_grad(scalar, argnums=(0, 1, 2, 3))(
+                x, wg, w1, w3)
+            return (loss,) + grads
+
+    return step_fn
+
+
+def make_layer_fwd(spec):
+    """(x, wg, w1, w2, w3) → y — inference-style single layer."""
+    from . import moe_layer as ml
+
+    layer = ml.make_moe_layer(spec)
+
+    def fwd(x, wg, w1, w2, w3):
+        return layer(x, wg, w1, w2, w3)
+
+    return fwd

@@ -1,0 +1,178 @@
+"""L2: MoE transformer language model (build path).
+
+A compact but complete decoder-only LM whose FFN is the MoE layer of
+:mod:`moe_layer` — the composition target the paper's intro motivates
+(DeepSeek/Mixtral-style MoE LLM training). Used by the end-to-end
+training example (`examples/train_tiny_lm.rs`) through the AOT path.
+
+Components: token embedding, RoPE causal self-attention, RMSNorm,
+MoE FFN (MoEBlaze or baseline), tied unembedding, and the standard
+auxiliary load-balancing loss (Shazeer et al. 2017; paper §7 "Routing
+policies").
+
+Parameters are a flat ordered list of arrays so the Rust coordinator can
+feed/receive them positionally (manifest carries names/shapes/dtypes).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import moe_layer as ml
+from .kernels import ref
+
+
+class LmConfig(NamedTuple):
+    vocab: int = 256           # byte-level tokenizer
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    num_experts: int = 8
+    top_k: int = 2
+    seq_len: int = 128
+    activation: str = "swiglu"
+    block: int = 32
+    impl: str = "moeblaze"
+    use_pallas: bool = True
+    aux_loss_coef: float = 0.01
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_hidden(self) -> int:
+        return 4 * self.d_model
+
+    def moe_spec(self) -> ml.MoeSpec:
+        return ml.MoeSpec(self.num_experts, self.top_k, self.d_model,
+                          self.d_hidden, self.activation, self.block,
+                          self.impl, self.use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Parameters — flat ordered list
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: LmConfig):
+    """[(name, shape, init_scale)] in the canonical flat order."""
+    d, dh, E = cfg.d_model, cfg.d_hidden, cfg.num_experts
+    spec = [("embed", (cfg.vocab, d), 0.02)]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln1", (d,), 1.0),
+            (p + "wq", (d, d), d ** -0.5),
+            (p + "wk", (d, d), d ** -0.5),
+            (p + "wv", (d, d), d ** -0.5),
+            (p + "wo", (d, d), d ** -0.5),
+            (p + "ln2", (d,), 1.0),
+            (p + "wg", (E, d), 0.02),
+            (p + "w1", (E, d, dh), d ** -0.5),
+            (p + "w2", (E, d, dh), d ** -0.5),
+            (p + "w3", (E, dh, d), dh ** -0.5),
+        ]
+    spec.append(("ln_f", (d,), 1.0))
+    return spec
+
+
+def init_params(key, cfg: LmConfig):
+    params = []
+    for name, shape, scale in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            params.append(jax.random.normal(sub, shape, jnp.float32) * scale)
+    return params
+
+
+def num_params(cfg: LmConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s, _ in param_spec(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Model pieces
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, g):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def rope(q, seq_len, d_head):
+    """Rotary position embedding over the last axis."""
+    half = d_head // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    ang = jnp.einsum("s,f->sf", t, freqs)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    q1, q2 = q[..., :half], q[..., half:]
+    return jnp.concatenate(
+        [q1 * cos - q2 * sin, q2 * cos + q1 * sin], axis=-1)
+
+
+def attention(x, wq, wk, wv, wo, cfg: LmConfig):
+    """Causal multi-head attention with RoPE. x: (B, S, d)."""
+    B, S, d = x.shape
+    H, dh = cfg.n_heads, cfg.d_head
+
+    def split(w):
+        return (x @ w).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+
+    q, k_, v = split(wq), split(wk), split(wv)
+    q = rope(q, S, dh)
+    k_ = rope(k_, S, dh)
+    att = jnp.einsum("bhsd,bhtd->bhst", q, k_) / jnp.sqrt(float(dh))
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, d)
+    return out @ wo
+
+
+def aux_load_balance_loss(x2d, wg, cfg: LmConfig):
+    """Switch-style load-balancing loss: E · Σ_e f_e · p_e.
+
+    f_e = fraction of tokens whose top-1 is e; p_e = mean router prob.
+    """
+    probs = jax.nn.softmax(x2d @ wg.T, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    f = jnp.mean(jax.nn.one_hot(top1, cfg.num_experts), axis=0)
+    p = jnp.mean(probs, axis=0)
+    return cfg.num_experts * jnp.sum(f * jax.lax.stop_gradient(f) * 0 + f * p)
+
+
+def forward(params, tokens, cfg: LmConfig):
+    """tokens: (B, S) i32 → (logits (B, S, V), aux_loss scalar)."""
+    layer_fn = ml.make_moe_layer(cfg.moe_spec())
+    it = iter(params)
+    embed = next(it)
+    x = embed[tokens]  # (B, S, d)
+    B, S, d = x.shape
+    aux = 0.0
+    for _ in range(cfg.n_layers):
+        ln1, wq, wk, wv, wo, ln2, wg, w1, w2, w3 = (next(it) for _ in range(10))
+        x = x + attention(rmsnorm(x, ln1), wq, wk, wv, wo, cfg)
+        h = rmsnorm(x, ln2)
+        h2d = h.reshape(B * S, d)
+        aux = aux + aux_load_balance_loss(h2d, wg, cfg)
+        moe_out = layer_fn(h2d, wg, w1, w2, w3).reshape(B, S, d)
+        x = x + moe_out
+    ln_f = next(it)
+    x = rmsnorm(x, ln_f)
+    logits = x @ embed.T  # tied unembedding
+    return logits, aux / cfg.n_layers
+
+
+def loss_fn(params, tokens, targets, cfg: LmConfig):
+    """Mean next-token cross-entropy + aux loss. tokens/targets: (B, S)."""
+    logits, aux = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + cfg.aux_loss_coef * aux

@@ -1,0 +1,161 @@
+"""Dispatch-structure construction: Pallas 3-step build vs sort-based oracle.
+
+Covers the paper's §4.1 worked example (Figure 2) verbatim, full
+structural invariants, and hypothesis sweeps over (L, E, k).
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, dispatch as dk
+
+
+def _random_ids(seed, L, E, k):
+    """Distinct top-k expert ids per token (as top_k guarantees)."""
+    key = jax.random.PRNGKey(seed)
+    scores = jax.random.uniform(key, (L, E))
+    _, ids = jax.lax.top_k(scores, k)
+    return ids.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Paper Figure 2 worked example
+# ---------------------------------------------------------------------------
+
+FIG2_IDS = jnp.array([[2, 3], [0, 1], [0, 3], [1, 2], [0, 3]], jnp.int32)
+
+
+def test_paper_figure2_example():
+    d = ref.dispatch_ref(FIG2_IDS, 4)
+    np.testing.assert_array_equal(
+        d["token_expert_indices"], [2, 3, 0, 1, 0, 3, 1, 2, 0, 3])
+    np.testing.assert_array_equal(
+        d["expert_token_indices"], [1, 2, 4, 1, 3, 0, 3, 0, 2, 4])
+    np.testing.assert_array_equal(d["expert_token_offsets"], [0, 3, 5, 7, 10])
+    # "token_index_map[0] = {5, 7}" (paper §4.1)
+    np.testing.assert_array_equal(d["token_index_map"][0], [5, 7])
+
+
+def test_paper_figure2_pallas_build_matches():
+    pd = ref.padded_dispatch_ref(FIG2_IDS, 4, block=4)
+    bd = dk.build_dispatch(FIG2_IDS, 4, block=4, block_l=5)
+    for key in ("expert_lengths", "pad_expert_token_offsets",
+                "pad_expert_token_indices", "pad_token_index_map",
+                "block_expert"):
+        np.testing.assert_array_equal(np.asarray(bd[key]), np.asarray(pd[key]),
+                                      err_msg=key)
+
+
+# ---------------------------------------------------------------------------
+# Structural invariants (mirror of the Rust testkit properties)
+# ---------------------------------------------------------------------------
+
+
+def check_invariants(ids, E, d):
+    L, k = ids.shape
+    n = L * k
+    offs = np.asarray(d["expert_token_offsets"])
+    lens = np.asarray(d["expert_lengths"])
+    eti = np.asarray(d["expert_token_indices"])
+    tim = np.asarray(d["token_index_map"])
+
+    assert offs[0] == 0 and offs[-1] == n
+    assert np.all(np.diff(offs) >= 0)
+    np.testing.assert_array_equal(np.diff(offs), lens)
+    # expert_token_indices is a permutation of each token id repeated k times
+    np.testing.assert_array_equal(np.sort(eti), np.repeat(np.arange(L), k))
+    # token_index_map inverts expert_token_indices
+    np.testing.assert_array_equal(eti[tim.reshape(-1)],
+                                  np.repeat(np.arange(L), k))
+    # every slot of expert e holds a token that chose e
+    ids_np = np.asarray(ids)
+    for e in range(E):
+        for s in range(offs[e], offs[e + 1]):
+            assert e in ids_np[eti[s]]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    L=st.integers(2, 64),
+    E=st.sampled_from([2, 4, 8, 16]),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dispatch_invariants_hypothesis(L, E, k, seed):
+    k = min(k, E)
+    ids = _random_ids(seed, L, E, k)
+    d = ref.dispatch_ref(ids, E)
+    check_invariants(ids, E, d)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    L=st.sampled_from([8, 16, 32, 64]),
+    E=st.sampled_from([2, 4, 8]),
+    k=st.integers(1, 3),
+    block=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_build_equals_sort_build_hypothesis(L, E, k, block, seed):
+    """The paper's central §4.2 claim: 3-step build ≡ sort build."""
+    k = min(k, E)
+    ids = _random_ids(seed, L, E, k)
+    pd = ref.padded_dispatch_ref(ids, E, block)
+    bd = dk.build_dispatch(ids, E, block)
+    for key in ("expert_lengths", "pad_expert_token_offsets",
+                "pad_expert_token_indices", "pad_token_index_map",
+                "block_expert"):
+        np.testing.assert_array_equal(np.asarray(bd[key]), np.asarray(pd[key]),
+                                      err_msg=key)
+
+
+# ---------------------------------------------------------------------------
+# Individual kernel steps
+# ---------------------------------------------------------------------------
+
+
+def test_dense_map_counts():
+    ids = _random_ids(11, 32, 8, 2)
+    dense = dk.build_dense_map(ids, 8)
+    assert dense.shape == (32, 8)
+    np.testing.assert_array_equal(np.asarray(dense).sum(axis=1), np.full(32, 2))
+
+
+def test_column_scan_lengths_and_ranks():
+    ids = _random_ids(12, 32, 4, 2)
+    dense = dk.build_dense_map(ids, 4)
+    lengths, colrank = dk.column_scan(dense)
+    dn = np.asarray(dense)
+    np.testing.assert_array_equal(lengths, dn.sum(axis=0))
+    np.testing.assert_array_equal(np.asarray(colrank),
+                                  np.cumsum(dn, axis=0) - dn)
+
+
+def test_pad_markers_are_minus_one():
+    ids = _random_ids(13, 16, 4, 2)
+    bd = dk.build_dispatch(ids, 4, block=8)
+    eti = np.asarray(bd["pad_expert_token_indices"])
+    lens = np.asarray(bd["expert_lengths"])
+    pad_offs = np.asarray(bd["pad_expert_token_offsets"])
+    for e in range(4):
+        seg = eti[pad_offs[e]:pad_offs[e + 1]]
+        assert np.all(seg[:lens[e]] >= 0)
+        assert np.all(seg[lens[e]:] == -1)
+
+
+def test_degenerate_all_tokens_one_expert():
+    """Worst-case imbalance: every token routes to expert 0 (k=1)."""
+    L, E = 16, 4
+    ids = jnp.zeros((L, 1), jnp.int32)
+    bd = dk.build_dispatch(ids, E, block=8)
+    lens = np.asarray(bd["expert_lengths"])
+    np.testing.assert_array_equal(lens, [L, 0, 0, 0])
+    pd = ref.padded_dispatch_ref(ids, E, 8)
+    np.testing.assert_array_equal(np.asarray(bd["pad_expert_token_indices"]),
+                                  np.asarray(pd["pad_expert_token_indices"]))

@@ -1,0 +1,169 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracles (+ hypothesis sweeps)."""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, fused_swiglu as fs, gather_mlp as gm
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape, scale=0.3):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# fused_swiglu forward
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,d,h", [(16, 8, 16), (64, 32, 64), (128, 16, 32)])
+def test_fused_swiglu_fwd_matches_ref(m, d, h):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x, w1, w2 = _rand(ks[0], m, d), _rand(ks[1], d, h), _rand(ks[2], d, h)
+    a, b, y = fs.fused_swiglu_fwd(x, w1, w2)
+    np.testing.assert_allclose(a, x @ w1, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(b, x @ w2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(y, ref.swiglu(x, w1, w2), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("activation", ["silu", "relu", "gelu"])
+def test_fused_plain_activation_fwd(activation):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x, w1, w2 = _rand(ks[0], 32, 8), _rand(ks[1], 8, 16), _rand(ks[2], 8, 16)
+    a, b, y = fs.fused_swiglu_fwd(x, w1, w2, activation=activation)
+    assert b is None
+    np.testing.assert_allclose(
+        y, ref.apply_activation(x @ w1, None, activation), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(4, 96),
+    d=st.integers(2, 24),
+    h=st.integers(2, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_swiglu_fwd_hypothesis(m, d, h, seed):
+    """Shape sweep: arbitrary (m, d, h), incl. non-divisible block shapes."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x, w1, w2 = _rand(ks[0], m, d), _rand(ks[1], d, h), _rand(ks[2], d, h)
+    _, _, y = fs.fused_swiglu_fwd(x, w1, w2)
+    np.testing.assert_allclose(y, ref.swiglu(x, w1, w2), rtol=2e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused backward epilogue (SiLU recomputation — Algorithm 1 line 24)
+# ---------------------------------------------------------------------------
+
+
+def test_bwd_epilogue_matches_autodiff():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    a, b, g = _rand(ks[0], 32, 16), _rand(ks[1], 32, 16), _rand(ks[2], 32, 16)
+    da, db = fs.fused_swiglu_bwd_epilogue(a, b, g)
+    ref_da, ref_db = jax.vjp(lambda a_, b_: ref.silu(a_) * b_, a, b)[1](g)
+    np.testing.assert_allclose(da, ref_da, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(db, ref_db, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("activation", ["silu", "relu"])
+def test_plain_bwd_epilogue(activation):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    a, g = _rand(ks[0], 16, 8), _rand(ks[1], 16, 8)
+    da = fs.fused_act_bwd_epilogue(a, g, activation=activation)
+    (ref_da,) = jax.vjp(lambda a_: ref.apply_activation(a_, None, activation), a)[1](g)
+    np.testing.assert_allclose(da, ref_da, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(2, 64), h=st.integers(2, 64), seed=st.integers(0, 2**31 - 1))
+def test_bwd_epilogue_hypothesis(m, h, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a, b, g = _rand(ks[0], m, h, scale=2.0), _rand(ks[1], m, h), _rand(ks[2], m, h)
+    da, db = fs.fused_swiglu_bwd_epilogue(a, b, g)
+    ref_da, ref_db = jax.vjp(lambda a_, b_: ref.silu(a_) * b_, a, b)[1](g)
+    np.testing.assert_allclose(da, ref_da, rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(db, ref_db, rtol=2e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gather/grouped/combine/scatter kernels
+# ---------------------------------------------------------------------------
+
+
+def _setup_moe(seed, L=64, d=16, h=32, E=4, k=2, blk=8):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = _rand(ks[0], L, d)
+    w1, w2 = _rand(ks[1], E, d, h), _rand(ks[2], E, d, h)
+    w3, wg = _rand(ks[3], E, h, d), _rand(ks[4], E, d, scale=0.5)
+    gates, ids = ref.gating(x, wg, k)
+    pd = ref.padded_dispatch_ref(ids, E, blk)
+    return x, w1, w2, w3, wg, gates, ids, pd, blk
+
+
+def test_gather_dual_gemm_matches_grouped_ref():
+    x, w1, w2, w3, wg, gates, ids, pd, blk = _setup_moe(4)
+    a, b, y = gm.gather_dual_gemm(x, w1, w2, pd["pad_expert_token_indices"],
+                                  pd["block_expert"], block_slots=blk)
+    # reference: masked gather + ragged grouped mlp
+    idx = pd["pad_expert_token_indices"]
+    xs = x[jnp.maximum(idx, 0)] * (idx >= 0).astype(x.dtype)[:, None]
+    gsz = pd["pad_expert_token_offsets"][1:] - pd["pad_expert_token_offsets"][:-1]
+    a_r, b_r, hid_r, _ = ref.grouped_mlp_ref(xs, w1, w2, w3, gsz)
+    np.testing.assert_allclose(a, a_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(b, b_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(y, hid_r, rtol=1e-5, atol=1e-6)
+
+
+def test_full_moe_forward_path_matches_dense_ref():
+    x, w1, w2, w3, wg, gates, ids, pd, blk = _setup_moe(5)
+    a, b, yswi = gm.gather_dual_gemm(x, w1, w2, pd["pad_expert_token_indices"],
+                                     pd["block_expert"], block_slots=blk)
+    y2 = gm.grouped_gemm(yswi, w3, pd["block_expert"], block_slots=blk)
+    y = gm.combine(y2, pd["pad_token_index_map"], gates)
+    y_ref, _, _ = ref.moe_ref(x, wg, w1, w2, w3, 2, "swiglu")
+    np.testing.assert_allclose(y, y_ref, rtol=3e-4, atol=1e-5)
+
+
+def test_scatter_rows_is_combine_adjoint():
+    """⟨combine(y2), dy⟩ == ⟨y2, scatter(dy)⟩ — adjointness property."""
+    x, w1, w2, w3, wg, gates, ids, pd, blk = _setup_moe(6)
+    n_pad, L, d = pd["n_pad"], x.shape[0], x.shape[1]
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    y2 = _rand(ks[0], n_pad, d)
+    dy = _rand(ks[1], L, d)
+    gos = jnp.zeros((n_pad,), jnp.float32).at[
+        pd["pad_token_index_map"].reshape(-1)].set(gates.reshape(-1))
+    lhs = jnp.sum(gm.combine(y2, pd["pad_token_index_map"], gates) * dy)
+    rhs = jnp.sum(y2 * gm.scatter_rows(dy, pd["pad_expert_token_indices"],
+                                       gos, block_slots=blk))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    L=st.sampled_from([16, 32, 64]),
+    E=st.sampled_from([2, 4, 8]),
+    k=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moe_forward_path_hypothesis(L, E, k, seed):
+    d, h, blk = 8, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = _rand(ks[0], L, d)
+    w1, w2 = _rand(ks[1], E, d, h), _rand(ks[2], E, d, h)
+    w3, wg = _rand(ks[3], E, h, d), _rand(ks[4], E, d, scale=0.5)
+    gates, ids = ref.gating(x, wg, k)
+    pd = ref.padded_dispatch_ref(ids, E, blk)
+    a, b, yswi = gm.gather_dual_gemm(x, w1, w2, pd["pad_expert_token_indices"],
+                                     pd["block_expert"], block_slots=blk)
+    y2 = gm.grouped_gemm(yswi, w3, pd["block_expert"], block_slots=blk)
+    y = gm.combine(y2, pd["pad_token_index_map"], gates)
+    y_ref, _, _ = ref.moe_ref(x, wg, w1, w2, w3, k, "swiglu")
+    np.testing.assert_allclose(y, y_ref, rtol=5e-4, atol=5e-5)

@@ -1,0 +1,106 @@
+"""Activation-memory accounting: analytic model == actual residual bytes.
+
+Validates DESIGN.md §6: the formulas behind Figures 3/5 (and the Rust
+memory model) agree byte-for-byte with what the custom_vjp layers really
+save. Also checks the paper's §2.1/§2.2 worked examples (~94 GB routing
+buffer, ~98 GB FFN intermediates for the DeepSeek-like config).
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import memory_model as mm
+from compile import moe_layer as ml
+from compile import configs as cfgs
+
+
+def _setup(seed, L, d, h, E, k):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r = lambda key, *s, sc=0.2: jax.random.normal(key, s, jnp.float32) * sc
+    return (r(ks[0], L, d), r(ks[1], E, d, sc=0.5), r(ks[2], E, d, h),
+            r(ks[3], E, d, h), r(ks[4], E, h, d))
+
+
+CASES = [
+    (64, 16, 32, 4, 2, 8, "swiglu"), (64, 16, 32, 4, 2, 8, "silu"),
+    (32, 8, 64, 8, 3, 8, "swiglu"), (128, 16, 32, 16, 4, 16, "relu"),
+]
+
+
+@pytest.mark.parametrize("L,d,h,E,k,blk,act", CASES)
+@pytest.mark.parametrize("impl", ["moeblaze", "baseline"])
+def test_analytic_model_matches_actual_residuals(L, d, h, E, k, blk, act, impl):
+    x, wg, w1, w2, w3 = _setup(0, L, d, h, E, k)
+    spec = ml.MoeSpec(E, k, d, h, act, blk, impl,
+                      use_pallas=(impl == "moeblaze"))
+    _, res = ml.forward_with_residuals(spec, x, wg, w1, w2, w3)
+    actual = ml.residual_bytes(res)
+    model = mm.layer_bytes(impl, L, d, h, E, k, act, dtype_bytes=4, block=blk)
+    assert model.total == actual, (
+        f"{impl}/{act}: model {model.total} != actual {actual}")
+
+
+def test_moeblaze_always_smaller():
+    for c in cfgs.PAPER_CONFIGS:
+        for act in ("silu", "swiglu"):
+            m = mm.moeblaze_bytes(c.tokens, c.input_d, c.hidden,
+                                  c.num_experts, c.top_k, act)
+            b = mm.baseline_bytes(c.tokens, c.input_d, c.hidden,
+                                  c.num_experts, c.top_k, act)
+            assert m.total < b.total, (c.name, act)
+
+
+def test_swiglu_ratio_exceeds_silu_ratio():
+    """Fig 5 vs Fig 3: gated activations widen MoEBlaze's advantage."""
+    for c in cfgs.PAPER_CONFIGS:
+        r = {}
+        for act in ("silu", "swiglu"):
+            m = mm.moeblaze_bytes(c.tokens, c.input_d, c.hidden,
+                                  c.num_experts, c.top_k, act).total
+            b = mm.baseline_bytes(c.tokens, c.input_d, c.hidden,
+                                  c.num_experts, c.top_k, act,
+                                  mode="paper_baseline").total
+            r[act] = b / m
+        assert r["swiglu"] > 1.5
+        assert r["swiglu"] > r["silu"] * 0.9  # swiglu ratio at least comparable
+
+
+def test_paper_baseline_mode_reaches_reported_ratios():
+    """conf3 swiglu: the paper reports ≈4× (40 GB → 10 GB)."""
+    c = cfgs.by_name("conf3", scaled=False)
+    m = mm.moeblaze_bytes(c.tokens, c.input_d, c.hidden, c.num_experts,
+                          c.top_k, "swiglu").total
+    b = mm.baseline_bytes(c.tokens, c.input_d, c.hidden, c.num_experts,
+                          c.top_k, "swiglu", mode="paper_baseline").total
+    assert 1.8 < b / m < 6.0
+
+
+def test_deepseek_worked_examples():
+    """§2.1: Mem_routing ≈ 94 GB; §2.2: Mem_act ≈ 98 GB (decimal GB; the
+    paper rounds loosely — see memory_model docstrings)."""
+    ds = cfgs.DEEPSEEK_EXAMPLE
+    routing = mm.routing_buffer_bytes(ds["tokens"], ds["d"], ds["top_k"])
+    act = mm.ffn_intermediate_bytes(ds["tokens"], ds["hidden"])
+    assert abs(routing / 1e9 - 94) < 9, routing / 1e9
+    assert abs(act / 1e9 - 98) < 9, act / 1e9
+
+
+def test_memory_scales_linearly_in_tokens():
+    """At paper scale the block-padding constant E·(block−1) is negligible
+    and the footprint is linear in L (paper §2.2)."""
+    a = mm.moeblaze_bytes(65536, 512, 2048, 8, 2, "swiglu").total
+    b = mm.moeblaze_bytes(131072, 512, 2048, 8, 2, "swiglu").total
+    assert 1.95 < b / a < 2.05
+
+
+def test_index_bytes_negligible():
+    """Paper §3: 'the token-expert index list … is extremely lightweight'."""
+    c = cfgs.by_name("conf4", scaled=False)
+    m = mm.moeblaze_bytes(c.tokens, c.input_d, c.hidden, c.num_experts,
+                          c.top_k, "swiglu")
+    assert m.index_bytes < 0.02 * m.total

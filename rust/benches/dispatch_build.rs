@@ -1,0 +1,75 @@
+//! Bench: dispatch-structure construction — sort-build vs the paper's
+//! 3-step build (§4.2), over an L·k sweep and an expert-count sweep.
+//!
+//! The paper's argument is about *data movement*: radix sort makes
+//! multiple O(n) global passes while the 3-step build makes a constant
+//! number. On this single-core host wall-time gaps are secondary to the
+//! reported pass/byte counts, both are printed.
+//!
+//! Run: `cargo bench --bench dispatch_build`
+
+use moeblaze::dispatch::gating::synthetic_gating;
+use moeblaze::dispatch::parallel_build::parallel_build_with_stats;
+use moeblaze::dispatch::sort_build::sort_build;
+use moeblaze::util::prng::Rng;
+use moeblaze::util::stats::Bench;
+use moeblaze::util::table::Table;
+
+fn main() {
+    let bench = Bench { warmup: 1, min_samples: 5, max_samples: 15,
+                        max_total: std::time::Duration::from_secs(6) };
+
+    println!("== L sweep (E=16, k=4, mildly skewed routing) ==");
+    let mut t = Table::new(["L", "n=L*k", "sort-build", "3-step build", "speedup", "passes", "MiB moved"]);
+    for l in [1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18] {
+        let (e, k) = (16usize, 4usize);
+        let mut rng = Rng::new(l as u64);
+        let ids = synthetic_gating(&mut rng, l, e, k, 0.7).topk_ids;
+        let s_sort = bench.run(|| {
+            std::hint::black_box(sort_build(&ids, l, e, k));
+        });
+        let s_par = bench.run(|| {
+            std::hint::black_box(parallel_build_with_stats(&ids, l, e, k, 1));
+        });
+        let (_, stats) = parallel_build_with_stats(&ids, l, e, k, 1);
+        t.row([
+            l.to_string(),
+            (l * k).to_string(),
+            format!("{:.3} ms", s_sort.mean_ms()),
+            format!("{:.3} ms", s_par.mean_ms()),
+            format!("{:.2}x", s_sort.mean_ns / s_par.mean_ns),
+            stats.data_passes.to_string(),
+            format!("{:.1}", stats.bytes_moved as f64 / (1024.0 * 1024.0)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("== E sweep (L=65536, k=4) ==");
+    let mut t = Table::new(["E", "sort-build", "3-step build", "speedup"]);
+    for e in [8usize, 16, 32, 64] {
+        let (l, k) = (1usize << 16, 4usize);
+        let mut rng = Rng::new(e as u64);
+        let ids = synthetic_gating(&mut rng, l, e, k, 0.7).topk_ids;
+        let s_sort = bench.run(|| {
+            std::hint::black_box(sort_build(&ids, l, e, k));
+        });
+        let s_par = bench.run(|| {
+            std::hint::black_box(parallel_build_with_stats(&ids, l, e, k, 1));
+        });
+        t.row([
+            e.to_string(),
+            format!("{:.3} ms", s_sort.mean_ms()),
+            format!("{:.3} ms", s_par.mean_ms()),
+            format!("{:.2}x", s_sort.mean_ns / s_par.mean_ns),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // equality sanity on the largest case
+    let (l, e, k) = (1usize << 16, 16usize, 4usize);
+    let mut rng = Rng::new(99);
+    let ids = synthetic_gating(&mut rng, l, e, k, 0.7).topk_ids;
+    assert_eq!(sort_build(&ids, l, e, k),
+               parallel_build_with_stats(&ids, l, e, k, 1).0);
+    println!("equality check (L=65536): OK");
+}

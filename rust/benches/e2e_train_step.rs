@@ -1,0 +1,49 @@
+//! Bench: end-to-end LM training step (the E2E workload of
+//! `examples/train_tiny_lm`) + the Pallas-lowering ablation.
+//!
+//! Reports:
+//!   * lm_train_step latency + tokens/s (full 2-layer MoE transformer,
+//!     MoEBlaze layers with Pallas kernels, fwd+bwd+Adam in one HLO)
+//!   * coordinator overhead: time spent outside the executable
+//!   * conf2 swiglu: XLA-fused moeblaze vs interpret-mode Pallas variant
+//!
+//! Run: `cargo bench --bench e2e_train_step`
+
+use moeblaze::bench_harness::inputs_from_specs;
+use moeblaze::runtime::client::Runtime;
+use moeblaze::util::stats::Bench;
+
+fn main() {
+    let runtime = Runtime::new(&moeblaze::artifacts_dir())
+        .expect("run `make artifacts` first");
+    eprintln!("platform: {}", runtime.platform());
+    let bench = Bench { warmup: 1, min_samples: 3, max_samples: 8,
+                        max_total: std::time::Duration::from_secs(30) };
+
+    // --- LM train step ----------------------------------------------------
+    let exe = runtime.load("lm_train_step").expect("load lm_train_step");
+    let lm = runtime.manifest.lm.as_ref().unwrap();
+    let tokens = (lm.batch * lm.seq_len()) as f64;
+    let mut inputs = inputs_from_specs(&exe.inputs, 7);
+    // step/lr scalars must be sane (they are the 3P and 3P+1 inputs)
+    let p = lm.params.len();
+    inputs[3 * p] = moeblaze::runtime::host::HostTensor::F32 { shape: vec![], data: vec![1.0] };
+    inputs[3 * p + 1] = moeblaze::runtime::host::HostTensor::F32 { shape: vec![], data: vec![1e-3] };
+    let s = bench.run(|| {
+        exe.run(&inputs).expect("lm step");
+    });
+    println!("lm_train_step: {}  ({:.0} tokens/s)", s.format_brief(),
+             tokens / (s.mean_ns / 1e9));
+
+    // --- Pallas ablation ----------------------------------------------------
+    let fused = runtime.load("layer_step_conf2_swiglu_moeblaze").unwrap();
+    let pallas = runtime.load("layer_step_conf2_swiglu_moeblaze_pallas").unwrap();
+    let fi = inputs_from_specs(&fused.inputs, 11);
+    let pi = inputs_from_specs(&pallas.inputs, 11);
+    let sf = bench.run(|| { fused.run(&fi).unwrap(); });
+    let sp = bench.run(|| { pallas.run(&pi).unwrap(); });
+    println!("conf2 swiglu moeblaze, XLA-fused lowering:      {}", sf.format_brief());
+    println!("conf2 swiglu moeblaze, interpret-mode Pallas:   {}", sp.format_brief());
+    println!("interpret-mode overhead: {:.2}x (lowering artifact — see EXPERIMENTS.md)",
+             sp.mean_ns / sf.mean_ns);
+}

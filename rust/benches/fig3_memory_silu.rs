@@ -1,0 +1,30 @@
+//! Figure 3: activation-memory footprint, SiLU activation, MoEBlaze vs
+//! MegaBlocks-style baseline across the Table-1 configs (paper scale —
+//! the accounting is analytic and exact, validated against the real
+//! residual pytrees by pytest `test_memory_accounting.py`).
+//!
+//! Run: `cargo bench --bench fig3_memory_silu`
+
+use moeblaze::config::model::Activation;
+use moeblaze::memory::model::AccountingMode;
+use moeblaze::memory::report::{memory_figure, render_memory_figure};
+
+fn main() {
+    for (mode, label) in [
+        (AccountingMode::Ours, "exact residual accounting (both impls as built here)"),
+        (AccountingMode::PaperBaseline, "paper-baseline accounting (torch-eager extras)"),
+    ] {
+        let rows = memory_figure(Activation::Silu, mode, true);
+        println!("{}", render_memory_figure(
+            &format!("Figure 3 — activation memory, SiLU, paper scale\n[{label}]"),
+            &rows));
+        // paper shape: moeblaze wins on every config. (Under exact
+        // accounting the ratio is nearly flat across configs — k and d/h
+        // are constant in Table 1; the paper's per-config variation comes
+        // from framework overheads we don't model.)
+        assert!(rows.iter().all(|r| r.ratio() > 1.0));
+        let c1 = rows.iter().find(|r| r.config == "conf1").unwrap().ratio();
+        let c4 = rows.iter().find(|r| r.config == "conf4").unwrap().ratio();
+        assert!(c4 > 0.95 * c1, "conf4 ({c4:.2}) far below conf1 ({c1:.2})");
+    }
+}

@@ -1,0 +1,134 @@
+//! Benchmark harness: regenerates the paper's figures from the AOT
+//! artifacts (speed) and the analytic model (memory).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::model::Activation;
+use crate::config::paper::{scaled_configs, PaperConfig, SCALED_BLOCK};
+use crate::runtime::client::{Executable, Runtime};
+use crate::runtime::host::HostTensor;
+use crate::util::prng::Rng;
+use crate::util::stats::{Bench, Summary};
+use crate::util::table::Table;
+
+/// One measured (config, impl) cell of Figure 4/6.
+#[derive(Debug, Clone)]
+pub struct SpeedCell {
+    pub config: String,
+    pub moeblaze: Summary,
+    pub baseline: Summary,
+    pub compile_ms: f64,
+}
+
+impl SpeedCell {
+    /// median-based: robust to scheduler noise on a shared single core
+    pub fn speedup(&self) -> f64 {
+        self.baseline.median_ns / self.moeblaze.median_ns
+    }
+}
+
+/// Random inputs generated from an artifact's manifest input specs, with
+/// name-based scale heuristics (weights small, activations moderate).
+pub fn inputs_from_specs(specs: &[crate::runtime::artifact::IoSpec], seed: u64)
+                         -> Vec<HostTensor> {
+    let mut rng = Rng::new(seed);
+    specs
+        .iter()
+        .map(|s| {
+            let n = s.elements();
+            match s.dtype {
+                crate::runtime::artifact::Dtype::F32 => {
+                    let scale = if s.name.starts_with('w') { 0.2 } else { 0.5 };
+                    HostTensor::F32 { shape: s.shape.clone(),
+                                      data: rng.normal_vec(n, scale) }
+                }
+                crate::runtime::artifact::Dtype::I32 => HostTensor::I32 {
+                    shape: s.shape.clone(),
+                    data: (0..n).map(|_| rng.below(2) as i32).collect(),
+                },
+            }
+        })
+        .collect()
+}
+
+/// Measure one (config, activation) pair across both implementations.
+pub fn measure_speed(runtime: &Runtime, c: &PaperConfig, activation: Activation,
+                     bench: &Bench) -> Result<SpeedCell> {
+    let mut compile_ms = 0.0;
+    let mut run = |impl_name: &str| -> Result<Summary> {
+        let name = format!("layer_step_{}_{}_{}", c.name, activation.name(), impl_name);
+        let exe: Rc<Executable> = runtime.load(&name)?;
+        compile_ms += exe.compile_ms;
+        // both impls must see identical input values: same seed per config
+        let inputs = inputs_from_specs(&exe.inputs, 0xBEEF ^ c.tokens() as u64);
+        // correctness guard: one verified run before timing
+        let out = exe.run(&inputs)?;
+        anyhow::ensure!(out[0].as_f32()?[0].is_finite(), "non-finite loss in {name}");
+        Ok(bench.run(|| {
+            exe.run(&inputs).expect("bench run failed");
+        }))
+    };
+    Ok(SpeedCell {
+        config: c.name.to_string(),
+        moeblaze: run("moeblaze")?,
+        baseline: run("baseline")?,
+        compile_ms,
+    })
+}
+
+/// Full Figure 4 (silu) or Figure 6 (swiglu) sweep.
+pub fn speed_figure(runtime: &Runtime, activation: Activation, bench: &Bench,
+                    only: Option<&[String]>) -> Result<Vec<SpeedCell>> {
+    let mut cells = Vec::new();
+    for c in scaled_configs() {
+        if let Some(filter) = only {
+            if !filter.iter().any(|f| f == c.name) {
+                continue;
+            }
+        }
+        eprintln!("  measuring {} ({})...", c.name, activation.name());
+        cells.push(measure_speed(runtime, &c, activation, bench)?);
+    }
+    Ok(cells)
+}
+
+pub fn render_speed_figure(title: &str, cells: &[SpeedCell]) -> String {
+    let mut t = Table::new(["config", "megablocks-style (ms)", "moeblaze (ms)", "speedup"]);
+    for c in cells {
+        t.row([
+            c.config.clone(),
+            format!("{:.2}", c.baseline.median_ms()),
+            format!("{:.2}", c.moeblaze.median_ms()),
+            format!("{:.2}x", c.speedup()),
+        ]);
+    }
+    format!("{title}\n{}", t.render())
+}
+
+/// Emit a figure's data as a JSON line (for EXPERIMENTS.md tooling).
+pub fn speed_figure_json(activation: Activation, cells: &[SpeedCell]) -> String {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("figure", Json::str(if activation == Activation::Swiglu { "fig6" } else { "fig4" })),
+        ("activation", Json::str(activation.name())),
+        ("cells", Json::arr(cells.iter().map(|c| Json::obj(vec![
+            ("config", Json::str(&c.config)),
+            ("baseline_ms", Json::num(c.baseline.mean_ms())),
+            ("moeblaze_ms", Json::num(c.moeblaze.mean_ms())),
+            ("speedup", Json::num(c.speedup())),
+        ])))),
+    ])
+    .to_string()
+}
+
+/// Scaled-config lookup helper shared by benches.
+pub fn scaled_by_name(name: &str) -> Option<PaperConfig> {
+    scaled_configs().into_iter().find(|c| c.name == name)
+}
+
+/// The block size the artifacts were exported with.
+pub fn artifact_block() -> usize {
+    SCALED_BLOCK
+}

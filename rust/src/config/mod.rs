@@ -1,0 +1,10 @@
+//! Configuration system: TOML-subset parser + typed configs + paper presets.
+
+pub mod model;
+pub mod paper;
+pub mod toml;
+pub mod train;
+
+pub use model::{Activation, Impl, MoeConfig};
+pub use paper::{paper_configs, scaled_configs, PaperConfig, PAPER_BLOCK, SCALED_BLOCK};
+pub use train::TrainConfig;

@@ -1,0 +1,206 @@
+//! Typed model/MoE configuration with validation.
+
+use std::fmt;
+
+use super::toml::Toml;
+
+/// Activation family (paper §5.1). `SwiGLU` is the gated family that
+/// drives the paper's Figures 5/6.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    Relu,
+    Silu,
+    Gelu,
+    Swiglu,
+}
+
+impl Activation {
+    pub fn parse(s: &str) -> Result<Activation, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "relu" => Ok(Activation::Relu),
+            "silu" => Ok(Activation::Silu),
+            "gelu" => Ok(Activation::Gelu),
+            "swiglu" => Ok(Activation::Swiglu),
+            _ => Err(format!("unknown activation `{s}`")),
+        }
+    }
+
+    pub fn gated(self) -> bool {
+        self == Activation::Swiglu
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::Relu => "relu",
+            Activation::Silu => "silu",
+            Activation::Gelu => "gelu",
+            Activation::Swiglu => "swiglu",
+        }
+    }
+}
+
+impl fmt::Display for Activation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Which MoE implementation a computation uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Impl {
+    /// Paper contribution: index-driven dispatch + checkpointed kernels.
+    MoeBlaze,
+    /// Conventional dropless pipeline (MegaBlocks-style).
+    Baseline,
+}
+
+impl Impl {
+    pub fn parse(s: &str) -> Result<Impl, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "moeblaze" => Ok(Impl::MoeBlaze),
+            "baseline" | "megablocks" => Ok(Impl::Baseline),
+            _ => Err(format!("unknown impl `{s}`")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Impl::MoeBlaze => "moeblaze",
+            Impl::Baseline => "baseline",
+        }
+    }
+}
+
+impl fmt::Display for Impl {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One MoE layer's shape (paper §2 notation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MoeConfig {
+    /// model dimension d
+    pub d_model: usize,
+    /// FFN hidden dimension h (paper Table 1: 4d)
+    pub d_hidden: usize,
+    /// number of experts E
+    pub num_experts: usize,
+    /// experts per token k
+    pub top_k: usize,
+    /// routed tokens per step L (batch × seq)
+    pub tokens: usize,
+    pub activation: Activation,
+    /// slot-block size for the block-aligned index layout
+    pub block: usize,
+}
+
+impl MoeConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.top_k == 0 || self.top_k > self.num_experts {
+            return Err(format!(
+                "top_k {} must be in 1..={}",
+                self.top_k, self.num_experts
+            ));
+        }
+        if self.d_model == 0 || self.d_hidden == 0 || self.tokens == 0 {
+            return Err("dimensions must be positive".into());
+        }
+        if self.block == 0 {
+            return Err("block must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// n = L·k routed slots.
+    pub fn slots(&self) -> usize {
+        self.tokens * self.top_k
+    }
+
+    /// Static worst-case padded slot count (mirror of ref.padded_len).
+    pub fn padded_slots(&self) -> usize {
+        let worst = self.slots() + self.num_experts * (self.block - 1);
+        worst.div_ceil(self.block) * self.block
+    }
+
+    /// Forward FLOPs of the expert MLPs (2·n·d·h per GEMM).
+    pub fn forward_flops(&self) -> u64 {
+        let gemms = if self.activation.gated() { 3 } else { 2 };
+        2 * self.slots() as u64
+            * self.d_model as u64
+            * self.d_hidden as u64
+            * gemms as u64
+    }
+
+    pub fn from_toml(t: &Toml, prefix: &str) -> Result<MoeConfig, String> {
+        let key = |k: &str| format!("{prefix}.{k}");
+        let d_model = t.usize_or(&key("d_model"), 0);
+        let cfg = MoeConfig {
+            d_model,
+            d_hidden: t.usize_or(&key("d_hidden"), 4 * d_model),
+            num_experts: t.usize_or(&key("num_experts"), 8),
+            top_k: t.usize_or(&key("top_k"), 2),
+            tokens: t.usize_or(&key("tokens"), 0),
+            activation: Activation::parse(&t.str_or(&key("activation"), "swiglu"))?,
+            block: t.usize_or(&key("block"), 128),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MoeConfig {
+        MoeConfig {
+            d_model: 128,
+            d_hidden: 512,
+            num_experts: 8,
+            top_k: 2,
+            tokens: 512,
+            activation: Activation::Swiglu,
+            block: 32,
+        }
+    }
+
+    #[test]
+    fn validation() {
+        assert!(cfg().validate().is_ok());
+        let mut bad = cfg();
+        bad.top_k = 9;
+        assert!(bad.validate().is_err());
+        bad = cfg();
+        bad.tokens = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn derived_sizes() {
+        let c = cfg();
+        assert_eq!(c.slots(), 1024);
+        // 1024 + 8*31 = 1272 → roundup 32 = 1280
+        assert_eq!(c.padded_slots(), 1280);
+        assert_eq!(c.forward_flops(), 2 * 1024 * 128 * 512 * 3);
+    }
+
+    #[test]
+    fn activation_parse() {
+        assert_eq!(Activation::parse("SwiGLU").unwrap(), Activation::Swiglu);
+        assert!(Activation::Swiglu.gated());
+        assert!(!Activation::Silu.gated());
+        assert!(Activation::parse("tanh").is_err());
+    }
+
+    #[test]
+    fn from_toml() {
+        let t = Toml::parse(
+            "[moe]\nd_model = 64\ntokens = 256\nnum_experts = 4\ntop_k = 1\nactivation = \"silu\"",
+        )
+        .unwrap();
+        let c = MoeConfig::from_toml(&t, "moe").unwrap();
+        assert_eq!(c.d_hidden, 256);
+        assert_eq!(c.activation, Activation::Silu);
+    }
+}

@@ -1,0 +1,111 @@
+//! Paper Table-1 presets (full scale + CPU-bench scale).
+//!
+//! Mirrors `python/compile/configs.py`; `tests/config_parity.rs` checks the
+//! two stay in sync through the artifact manifest.
+
+use super::model::{Activation, MoeConfig};
+
+pub const PAPER_BLOCK: usize = 128;
+pub const SCALED_BLOCK: usize = 32;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct PaperConfig {
+    pub name: &'static str,
+    pub input_d: usize,
+    pub num_experts: usize,
+    pub top_k: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl PaperConfig {
+    pub fn hidden(&self) -> usize {
+        4 * self.input_d
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.batch * self.seq_len
+    }
+
+    pub fn moe(&self, activation: Activation, block: usize) -> MoeConfig {
+        MoeConfig {
+            d_model: self.input_d,
+            d_hidden: self.hidden(),
+            num_experts: self.num_experts,
+            top_k: self.top_k,
+            tokens: self.tokens(),
+            activation,
+            block,
+        }
+    }
+}
+
+/// Paper Table 1, full scale.
+pub fn paper_configs() -> Vec<PaperConfig> {
+    vec![
+        PaperConfig { name: "conf1", input_d: 512, num_experts: 4, top_k: 1, batch: 32, seq_len: 2048 },
+        PaperConfig { name: "conf2", input_d: 1024, num_experts: 8, top_k: 2, batch: 32, seq_len: 2048 },
+        PaperConfig { name: "conf3", input_d: 1024, num_experts: 16, top_k: 4, batch: 32, seq_len: 2048 },
+        PaperConfig { name: "conf4", input_d: 2048, num_experts: 16, top_k: 4, batch: 32, seq_len: 1024 },
+        PaperConfig { name: "conf5", input_d: 512, num_experts: 16, top_k: 4, batch: 32, seq_len: 1024 },
+        PaperConfig { name: "conf6", input_d: 1024, num_experts: 16, top_k: 4, batch: 16, seq_len: 1024 },
+        PaperConfig { name: "conf7", input_d: 2048, num_experts: 8, top_k: 4, batch: 16, seq_len: 512 },
+    ]
+}
+
+/// CPU-bench scale (ratios preserved: d ÷ 8, batch → 4/2, seq ÷ 16).
+pub fn scaled_configs() -> Vec<PaperConfig> {
+    vec![
+        PaperConfig { name: "conf1", input_d: 64, num_experts: 4, top_k: 1, batch: 4, seq_len: 128 },
+        PaperConfig { name: "conf2", input_d: 128, num_experts: 8, top_k: 2, batch: 4, seq_len: 128 },
+        PaperConfig { name: "conf3", input_d: 128, num_experts: 16, top_k: 4, batch: 4, seq_len: 128 },
+        PaperConfig { name: "conf4", input_d: 256, num_experts: 16, top_k: 4, batch: 4, seq_len: 64 },
+        PaperConfig { name: "conf5", input_d: 64, num_experts: 16, top_k: 4, batch: 4, seq_len: 64 },
+        PaperConfig { name: "conf6", input_d: 128, num_experts: 16, top_k: 4, batch: 2, seq_len: 64 },
+        PaperConfig { name: "conf7", input_d: 256, num_experts: 8, top_k: 4, batch: 2, seq_len: 32 },
+    ]
+}
+
+pub fn by_name(name: &str, scaled: bool) -> Option<PaperConfig> {
+    let src = if scaled { scaled_configs() } else { paper_configs() };
+    src.into_iter().find(|c| c.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seven_configs_each() {
+        assert_eq!(paper_configs().len(), 7);
+        assert_eq!(scaled_configs().len(), 7);
+    }
+
+    #[test]
+    fn table1_values() {
+        let c3 = by_name("conf3", false).unwrap();
+        assert_eq!(
+            (c3.input_d, c3.num_experts, c3.top_k, c3.batch, c3.seq_len),
+            (1024, 16, 4, 32, 2048)
+        );
+        assert_eq!(c3.hidden(), 4096);
+        assert_eq!(c3.tokens(), 65536);
+    }
+
+    #[test]
+    fn scaled_preserves_ratios() {
+        for (p, s) in paper_configs().iter().zip(scaled_configs()) {
+            assert_eq!(p.num_experts, s.num_experts, "{}", p.name);
+            assert_eq!(p.top_k, s.top_k, "{}", p.name);
+            assert_eq!(p.input_d / s.input_d, 8, "{}", p.name);
+            assert_eq!(p.hidden() / p.input_d, 4);
+        }
+    }
+
+    #[test]
+    fn all_valid_moe_configs() {
+        for c in paper_configs().iter().chain(scaled_configs().iter()) {
+            c.moe(Activation::Swiglu, SCALED_BLOCK).validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! TOML-subset parser — enough for real config files (the `toml` crate is
+//! unavailable offline).
+//!
+//! Supported: `[section]` / `[a.b]` tables, `key = value` with strings,
+//! integers, floats, booleans, flat arrays, inline comments (`#`), and
+//! bare/quoted keys. Unsupported (rejected, not silently ignored): array
+//! tables, multi-line strings, datetimes, nested inline tables.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat map of `section.key` → value.
+#[derive(Debug, Default, Clone)]
+pub struct Toml {
+    pub entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml, TomlError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: ln + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                if line.starts_with("[[") {
+                    return Err(err("array tables are not supported"));
+                }
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| err("expected key = value"))?;
+            let key = k.trim().trim_matches('"').to_string();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(v.trim()).map_err(|m| err(&m))?;
+            let full = if section.is_empty() { key } else { format!("{section}.{key}") };
+            entries.insert(full, value);
+        }
+        Ok(Toml { entries })
+    }
+
+    pub fn load(path: &str) -> Result<Toml, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Toml::parse(&text).map_err(|e| format!("{path}: {e}"))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Value::as_str).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Keys under a section prefix (`section.` stripped).
+    pub fn section(&self, prefix: &str) -> BTreeMap<String, Value> {
+        let pre = format!("{prefix}.");
+        self.entries
+            .iter()
+            .filter_map(|(k, v)| k.strip_prefix(&pre).map(|r| (r.to_string(), v.clone())))
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(unescape(inner)?));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Value::Array(items));
+    }
+    let cleaned = s.replace('_', "");
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::new();
+    let mut it = s.chars();
+    while let Some(c) = it.next() {
+        if c == '\\' {
+            match it.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                other => return Err(format!("bad escape \\{other:?}")),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# training config
+name = "tiny"
+steps = 1_000
+lr = 3e-4
+
+[model]
+d_model = 128
+experts = 8
+use_pallas = true
+dims = [1, 2, 3]
+
+[model.moe]
+top_k = 2
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = Toml::parse(SAMPLE).unwrap();
+        assert_eq!(t.str_or("name", ""), "tiny");
+        assert_eq!(t.usize_or("steps", 0), 1000);
+        assert!((t.f64_or("lr", 0.0) - 3e-4).abs() < 1e-12);
+        assert_eq!(t.usize_or("model.d_model", 0), 128);
+        assert!(t.bool_or("model.use_pallas", false));
+        assert_eq!(t.usize_or("model.moe.top_k", 0), 2);
+        assert_eq!(
+            t.get("model.dims").unwrap(),
+            &Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let t = Toml::parse("s = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(t.str_or("s", ""), "a # not comment");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Toml::parse("[unclosed").is_err());
+        assert!(Toml::parse("novalue =").is_err());
+        assert!(Toml::parse("x = [1, 2").is_err());
+        assert!(Toml::parse("[[arr]]").is_err());
+    }
+
+    #[test]
+    fn section_extraction() {
+        let t = Toml::parse(SAMPLE).unwrap();
+        let m = t.section("model");
+        assert!(m.contains_key("d_model"));
+        assert!(m.contains_key("moe.top_k"));
+    }
+}

@@ -1,0 +1,127 @@
+//! Training-run configuration (TOML-file driven, CLI-overridable).
+
+use super::toml::Toml;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    /// total optimizer steps
+    pub steps: usize,
+    /// microbatches accumulated per optimizer step
+    pub grad_accum: usize,
+    pub lr: f64,
+    /// linear warmup steps then cosine decay to `lr * min_lr_frac`
+    pub warmup_steps: usize,
+    pub min_lr_frac: f64,
+    pub seed: u64,
+    /// checkpoint every N steps (0 = never)
+    pub checkpoint_every: usize,
+    pub checkpoint_dir: String,
+    /// evaluate every N steps (0 = never)
+    pub eval_every: usize,
+    /// log every N steps
+    pub log_every: usize,
+    /// metrics output (JSONL); empty = stdout only
+    pub metrics_path: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 200,
+            grad_accum: 1,
+            lr: 1e-3,
+            warmup_steps: 20,
+            min_lr_frac: 0.1,
+            seed: 42,
+            checkpoint_every: 0,
+            checkpoint_dir: "checkpoints".into(),
+            eval_every: 50,
+            log_every: 10,
+            metrics_path: String::new(),
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.steps == 0 {
+            return Err("steps must be > 0".into());
+        }
+        if self.grad_accum == 0 {
+            return Err("grad_accum must be > 0".into());
+        }
+        if !(self.lr > 0.0 && self.lr.is_finite()) {
+            return Err(format!("lr must be positive, got {}", self.lr));
+        }
+        if !(0.0..=1.0).contains(&self.min_lr_frac) {
+            return Err("min_lr_frac must be in [0, 1]".into());
+        }
+        Ok(())
+    }
+
+    pub fn from_toml(t: &Toml, prefix: &str) -> Result<TrainConfig, String> {
+        let d = TrainConfig::default();
+        let key = |k: &str| format!("{prefix}.{k}");
+        let cfg = TrainConfig {
+            steps: t.usize_or(&key("steps"), d.steps),
+            grad_accum: t.usize_or(&key("grad_accum"), d.grad_accum),
+            lr: t.f64_or(&key("lr"), d.lr),
+            warmup_steps: t.usize_or(&key("warmup_steps"), d.warmup_steps),
+            min_lr_frac: t.f64_or(&key("min_lr_frac"), d.min_lr_frac),
+            seed: t.usize_or(&key("seed"), d.seed as usize) as u64,
+            checkpoint_every: t.usize_or(&key("checkpoint_every"), d.checkpoint_every),
+            checkpoint_dir: t.str_or(&key("checkpoint_dir"), &d.checkpoint_dir),
+            eval_every: t.usize_or(&key("eval_every"), d.eval_every),
+            log_every: t.usize_or(&key("log_every"), d.log_every),
+            metrics_path: t.str_or(&key("metrics_path"), &d.metrics_path),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Learning rate at `step` (0-based): linear warmup then cosine decay.
+    pub fn lr_at(&self, step: usize) -> f64 {
+        if step < self.warmup_steps {
+            return self.lr * (step + 1) as f64 / self.warmup_steps.max(1) as f64;
+        }
+        let progress = (step - self.warmup_steps) as f64
+            / (self.steps.saturating_sub(self.warmup_steps)).max(1) as f64;
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * progress.min(1.0)).cos());
+        let min_lr = self.lr * self.min_lr_frac;
+        min_lr + (self.lr - min_lr) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_shape() {
+        let c = TrainConfig { steps: 100, warmup_steps: 10, lr: 1.0,
+                              min_lr_frac: 0.1, ..Default::default() };
+        assert!(c.lr_at(0) < c.lr_at(5));
+        assert!((c.lr_at(9) - 1.0).abs() < 1e-9);
+        assert!(c.lr_at(50) < 1.0);
+        assert!(c.lr_at(99) >= 0.1 - 1e-9);
+        assert!(c.lr_at(99) < c.lr_at(50));
+    }
+
+    #[test]
+    fn validation() {
+        assert!(TrainConfig::default().validate().is_ok());
+        assert!(TrainConfig { steps: 0, ..Default::default() }.validate().is_err());
+        assert!(TrainConfig { lr: -1.0, ..Default::default() }.validate().is_err());
+        assert!(TrainConfig { lr: f64::NAN, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let t = Toml::parse("[train]\nsteps = 7\nlr = 0.5\nmetrics_path = \"m.jsonl\"").unwrap();
+        let c = TrainConfig::from_toml(&t, "train").unwrap();
+        assert_eq!(c.steps, 7);
+        assert_eq!(c.lr, 0.5);
+        assert_eq!(c.metrics_path, "m.jsonl");
+        assert_eq!(c.grad_accum, 1); // default preserved
+    }
+}

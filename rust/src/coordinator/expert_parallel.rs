@@ -1,0 +1,176 @@
+//! Simulated expert-parallel topology (the paper's §8 future work, built
+//! as an analytic simulator so the coordinator's dispatch structures are
+//! exercised in a multi-rank setting).
+//!
+//! Experts are partitioned across R simulated ranks; tokens are
+//! partitioned contiguously. From a [`DispatchStructures`] the planner
+//! derives the all-to-all exchange: which (src, dst) rank pairs move how
+//! many routed token activations, total comm bytes, and the load balance.
+//! This is exactly the planning a real EP launcher performs before
+//! issuing collectives — here it feeds the comm-volume ablation bench.
+
+use crate::dispatch::structures::DispatchStructures;
+
+/// Static expert-parallel topology.
+#[derive(Debug, Clone)]
+pub struct EpTopology {
+    pub ranks: usize,
+    pub num_experts: usize,
+}
+
+impl EpTopology {
+    pub fn new(ranks: usize, num_experts: usize) -> Result<EpTopology, String> {
+        if ranks == 0 || num_experts == 0 {
+            return Err("ranks and experts must be positive".into());
+        }
+        if num_experts % ranks != 0 {
+            return Err(format!(
+                "experts {num_experts} not divisible by ranks {ranks}"
+            ));
+        }
+        Ok(EpTopology { ranks, num_experts })
+    }
+
+    /// Round-robin-free contiguous expert placement (MegaBlocks/DeepSpeed
+    /// default): rank r owns experts [r·E/R, (r+1)·E/R).
+    pub fn rank_of_expert(&self, e: usize) -> usize {
+        e / (self.num_experts / self.ranks)
+    }
+
+    pub fn experts_of_rank(&self, r: usize) -> std::ops::Range<usize> {
+        let per = self.num_experts / self.ranks;
+        r * per..(r + 1) * per
+    }
+
+    /// Contiguous token partition: token t lives on rank t·R/L.
+    pub fn rank_of_token(&self, t: usize, num_tokens: usize) -> usize {
+        (t * self.ranks / num_tokens).min(self.ranks - 1)
+    }
+
+    /// Plan the all-to-all for one layer step.
+    pub fn plan(&self, disp: &DispatchStructures, d_model: usize,
+                dtype_bytes: usize) -> AllToAllPlan {
+        let r = self.ranks;
+        let l = disp.num_tokens;
+        let mut matrix = vec![0u64; r * r]; // routed copies src→dst
+        let mut per_rank_tokens = vec![0u64; r]; // expert-side load
+        for e in 0..disp.num_experts {
+            let dst = self.rank_of_expert(e);
+            for &tok in disp.expert_tokens(e) {
+                let src = self.rank_of_token(tok as usize, l);
+                matrix[src * r + dst] += 1;
+                per_rank_tokens[dst] += 1;
+            }
+        }
+        let row_bytes = (d_model * dtype_bytes) as u64;
+        let cross: u64 = (0..r)
+            .flat_map(|s| (0..r).map(move |d| (s, d)))
+            .filter(|&(s, d)| s != d)
+            .map(|(s, d)| matrix[s * r + d])
+            .sum();
+        let total: u64 = matrix.iter().sum();
+        AllToAllPlan {
+            ranks: r,
+            matrix,
+            per_rank_tokens,
+            bytes_per_row: row_bytes,
+            cross_rank_rows: cross,
+            total_rows: total,
+        }
+    }
+}
+
+/// The planned exchange for one MoE layer (fwd direction; bwd mirrors it).
+#[derive(Debug, Clone)]
+pub struct AllToAllPlan {
+    pub ranks: usize,
+    /// routed copies moved src→dst (R×R, row-major)
+    pub matrix: Vec<u64>,
+    /// routed copies landing on each rank's experts
+    pub per_rank_tokens: Vec<u64>,
+    pub bytes_per_row: u64,
+    pub cross_rank_rows: u64,
+    pub total_rows: u64,
+}
+
+impl AllToAllPlan {
+    /// Total bytes crossing rank boundaries (one direction).
+    pub fn cross_rank_bytes(&self) -> u64 {
+        self.cross_rank_rows * self.bytes_per_row
+    }
+
+    /// Load imbalance: max over mean per-rank expert load.
+    pub fn imbalance(&self) -> f64 {
+        let max = *self.per_rank_tokens.iter().max().unwrap_or(&0) as f64;
+        let mean = self.total_rows as f64 / self.ranks as f64;
+        if mean == 0.0 { 0.0 } else { max / mean }
+    }
+
+    /// Tokens that a capacity-limited router (cap = γ·mean) would drop —
+    /// the quality/throughput trade the paper's §2.1 discusses; MoEBlaze
+    /// is dropless so its plan always processes all rows.
+    pub fn dropped_under_capacity(&self, gamma: f64) -> u64 {
+        let mean = self.total_rows as f64 / self.ranks as f64;
+        let cap = (gamma * mean).floor() as u64;
+        self.per_rank_tokens
+            .iter()
+            .map(|&t| t.saturating_sub(cap))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::gating::synthetic_gating;
+    use crate::dispatch::parallel_build::parallel_build;
+    use crate::util::prng::Rng;
+
+    fn plan(l: usize, e: usize, k: usize, ranks: usize, skew: f64) -> AllToAllPlan {
+        let mut rng = Rng::new(11);
+        let g = synthetic_gating(&mut rng, l, e, k, skew);
+        let d = parallel_build(&g.topk_ids, l, e, k);
+        EpTopology::new(ranks, e).unwrap().plan(&d, 64, 2)
+    }
+
+    #[test]
+    fn conservation() {
+        let p = plan(256, 16, 2, 4, 0.0);
+        assert_eq!(p.total_rows, 512);
+        assert_eq!(p.per_rank_tokens.iter().sum::<u64>(), 512);
+        // matrix row/col sums consistent
+        let col_sums: u64 = p.matrix.iter().sum();
+        assert_eq!(col_sums, 512);
+    }
+
+    #[test]
+    fn balanced_routing_low_imbalance() {
+        let p = plan(4096, 16, 2, 4, 0.0);
+        assert!(p.imbalance() < 1.2, "{}", p.imbalance());
+        assert_eq!(p.dropped_under_capacity(1.5), 0);
+    }
+
+    #[test]
+    fn skewed_routing_drops_under_capacity() {
+        let p = plan(4096, 16, 2, 4, 2.0);
+        assert!(p.imbalance() > 1.5, "{}", p.imbalance());
+        assert!(p.dropped_under_capacity(1.0) > 0);
+    }
+
+    #[test]
+    fn single_rank_has_no_cross_traffic() {
+        let p = plan(128, 8, 2, 1, 1.0);
+        assert_eq!(p.cross_rank_bytes(), 0);
+        assert_eq!(p.imbalance(), 1.0);
+    }
+
+    #[test]
+    fn topology_validation() {
+        assert!(EpTopology::new(3, 16).is_err());
+        assert!(EpTopology::new(0, 16).is_err());
+        let t = EpTopology::new(4, 16).unwrap();
+        assert_eq!(t.rank_of_expert(0), 0);
+        assert_eq!(t.rank_of_expert(15), 3);
+        assert_eq!(t.experts_of_rank(1), 4..8);
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator: the training orchestrator.
+//!
+//! For a training-systems paper the coordinator owns the step loop:
+//! parameter/optimizer state, data feeding, LR scheduling, metrics,
+//! checkpointing, and the (simulated) expert-parallel topology. The
+//! compute itself is the AOT-compiled XLA step (runtime::Executable) —
+//! Python never runs here.
+
+pub mod expert_parallel;
+pub mod params;
+pub mod trainer;
+
+pub use expert_parallel::{AllToAllPlan, EpTopology};
+pub use params::ParamStore;
+pub use trainer::{TrainReport, Trainer};

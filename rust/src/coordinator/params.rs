@@ -1,0 +1,212 @@
+//! Host-side parameter/optimizer state + checkpoint format.
+//!
+//! Initialization mirrors `transformer.init_params`: N(0, scale²) for
+//! weights, ones for the `ln*` norm gains (scale is carried per-parameter
+//! in the manifest). Checkpoints use a small self-describing binary
+//! format (magic + version + named tensors) written atomically.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifact::LmSpec;
+use crate::runtime::host::HostTensor;
+use crate::util::bytes;
+use crate::util::prng::Rng;
+
+const MAGIC: &[u8; 8] = b"MOEBLZ01";
+
+/// Parameters + Adam moments + step counter for the LM.
+pub struct ParamStore {
+    pub names: Vec<String>,
+    pub params: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    pub step: u64,
+}
+
+impl ParamStore {
+    /// Fresh initialization from the manifest's parameter spec.
+    pub fn init(lm: &LmSpec, seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed);
+        let mut names = Vec::new();
+        let mut params = Vec::new();
+        let mut m = Vec::new();
+        let mut v = Vec::new();
+        for p in &lm.params {
+            let n: usize = p.shape.iter().product();
+            let is_norm_gain = p
+                .name
+                .rsplit('.')
+                .next()
+                .map(|s| s.starts_with("ln"))
+                .unwrap_or(false);
+            let data = if is_norm_gain {
+                vec![1.0f32; n]
+            } else {
+                rng.normal_vec(n, p.init_scale)
+            };
+            names.push(p.name.clone());
+            params.push(HostTensor::F32 { shape: p.shape.clone(), data });
+            m.push(HostTensor::F32 { shape: p.shape.clone(), data: vec![0.0; n] });
+            v.push(HostTensor::F32 { shape: p.shape.clone(), data: vec![0.0; n] });
+        }
+        ParamStore { names, params, m, v, step: 0 }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(HostTensor::elements).sum()
+    }
+
+    // -- checkpointing -------------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        bytes::write_u64(&mut buf, self.step);
+        bytes::write_u64(&mut buf, self.names.len() as u64);
+        for i in 0..self.names.len() {
+            bytes::write_str(&mut buf, &self.names[i]);
+            for t in [&self.params[i], &self.m[i], &self.v[i]] {
+                let shape = t.shape();
+                bytes::write_u64(&mut buf, shape.len() as u64);
+                for &d in shape {
+                    bytes::write_u64(&mut buf, d as u64);
+                }
+                let data = t.as_f32().map_err(|e| anyhow::anyhow!("{e}"))?;
+                buf.extend_from_slice(&bytes::f32s_to_bytes(data));
+            }
+        }
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        // atomic: write temp then rename
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, &buf).with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ParamStore> {
+        let buf = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        if buf.len() < 8 || &buf[..8] != MAGIC {
+            bail!("{path:?}: not a MoEBlaze checkpoint (bad magic)");
+        }
+        let mut pos = 8;
+        let step = bytes::read_u64(&buf, &mut pos).map_err(anyhow::Error::msg)?;
+        let count = bytes::read_u64(&buf, &mut pos).map_err(anyhow::Error::msg)? as usize;
+        let mut names = Vec::with_capacity(count);
+        let mut params = Vec::with_capacity(count);
+        let mut m = Vec::with_capacity(count);
+        let mut v = Vec::with_capacity(count);
+        for _ in 0..count {
+            names.push(bytes::read_str(&buf, &mut pos).map_err(anyhow::Error::msg)?);
+            let mut three = Vec::with_capacity(3);
+            for _ in 0..3 {
+                let ndim = bytes::read_u64(&buf, &mut pos).map_err(anyhow::Error::msg)? as usize;
+                let mut shape = Vec::with_capacity(ndim);
+                for _ in 0..ndim {
+                    shape.push(bytes::read_u64(&buf, &mut pos).map_err(anyhow::Error::msg)? as usize);
+                }
+                let n: usize = shape.iter().product();
+                if pos + 4 * n > buf.len() {
+                    bail!("{path:?}: truncated tensor data");
+                }
+                let data = bytes::bytes_to_f32s(&buf[pos..pos + 4 * n])
+                    .map_err(anyhow::Error::msg)?;
+                pos += 4 * n;
+                three.push(HostTensor::F32 { shape, data });
+            }
+            v.push(three.pop().unwrap());
+            m.push(three.pop().unwrap());
+            params.push(three.pop().unwrap());
+        }
+        Ok(ParamStore { names, params, m, v, step })
+    }
+
+    /// Consistency with the manifest spec (names + shapes, in order).
+    pub fn check_against(&self, lm: &LmSpec) -> Result<()> {
+        if self.names.len() != lm.params.len() {
+            bail!("checkpoint has {} tensors, manifest {}", self.names.len(),
+                  lm.params.len());
+        }
+        for (i, p) in lm.params.iter().enumerate() {
+            if self.names[i] != p.name {
+                bail!("param {i}: name `{}` != manifest `{}`", self.names[i], p.name);
+            }
+            if self.params[i].shape() != p.shape.as_slice() {
+                bail!("param `{}`: shape {:?} != manifest {:?}", p.name,
+                      self.params[i].shape(), p.shape);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::LmParam;
+    use std::collections::BTreeMap;
+
+    fn lm_spec() -> LmSpec {
+        LmSpec {
+            batch: 2,
+            params: vec![
+                LmParam { name: "embed".into(), shape: vec![8, 4], init_scale: 0.02 },
+                LmParam { name: "layer0.ln1".into(), shape: vec![4], init_scale: 1.0 },
+                LmParam { name: "layer0.wq".into(), shape: vec![4, 4], init_scale: 0.5 },
+            ],
+            config: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn init_norm_gains_are_ones() {
+        let s = ParamStore::init(&lm_spec(), 1);
+        assert_eq!(s.params[1].as_f32().unwrap(), &[1.0; 4]);
+        // weights are not all equal
+        let w = s.params[2].as_f32().unwrap();
+        assert!(w.iter().any(|&x| x != w[0]));
+        assert_eq!(s.num_params(), 32 + 4 + 16);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join("moeblaze_ckpt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("step10.ckpt");
+        let mut s = ParamStore::init(&lm_spec(), 2);
+        s.step = 10;
+        s.save(&path).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        assert_eq!(loaded.step, 10);
+        assert_eq!(loaded.names, s.names);
+        for i in 0..s.params.len() {
+            assert_eq!(loaded.params[i].as_f32().unwrap(),
+                       s.params[i].as_f32().unwrap());
+        }
+        loaded.check_against(&lm_spec()).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let dir = std::env::temp_dir().join("moeblaze_ckpt_bad");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTMAGIC123").unwrap();
+        assert!(ParamStore::load(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn check_against_catches_mismatch() {
+        let s = ParamStore::init(&lm_spec(), 3);
+        let mut other = lm_spec();
+        other.params[2].shape = vec![4, 5];
+        assert!(s.check_against(&other).is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! The training step loop: drives the AOT `lm_train_step` executable with
+//! data from the batcher under the LR schedule, with metrics, eval, and
+//! checkpointing.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::train::TrainConfig;
+use crate::data::batcher::Batcher;
+use crate::metrics::{Ema, MetricsSink};
+use crate::runtime::client::{Executable, Runtime};
+use crate::runtime::host::HostTensor;
+
+use super::params::ParamStore;
+
+/// Outcome of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub first_loss: f64,
+    pub final_loss_ema: f64,
+    pub losses: Vec<(usize, f64)>,
+    pub eval_losses: Vec<(usize, f64)>,
+    pub tokens_per_sec: f64,
+    pub step_ms_mean: f64,
+}
+
+pub struct Trainer {
+    train_exe: Rc<Executable>,
+    eval_exe: Option<Rc<Executable>>,
+    pub store: ParamStore,
+    pub cfg: TrainConfig,
+    sink: MetricsSink,
+    batch_tokens: usize,
+}
+
+impl Trainer {
+    pub fn new(runtime: &Runtime, store: ParamStore, cfg: TrainConfig) -> Result<Trainer> {
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        let lm = runtime
+            .manifest
+            .lm
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("manifest has no `lm` section"))?;
+        store.check_against(lm).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let train_exe = runtime.load("lm_train_step")?;
+        let eval_exe = if cfg.eval_every > 0 {
+            Some(runtime.load("lm_eval_step")?)
+        } else {
+            None
+        };
+        let batch_tokens = lm.batch * lm.seq_len();
+        let sink = MetricsSink::new(Some(cfg.metrics_path.as_str()))
+            .map_err(anyhow::Error::msg)?;
+        Ok(Trainer { train_exe, eval_exe, store, cfg, sink, batch_tokens })
+    }
+
+    /// One optimizer step on `batch`; returns the loss.
+    pub fn step(&mut self, tokens: HostTensor, targets: HostTensor) -> Result<f64> {
+        let p = self.store.params.len();
+        let step_no = self.store.step as usize;
+        let lr = self.cfg.lr_at(step_no) as f32;
+
+        let mut args: Vec<HostTensor> = Vec::with_capacity(3 * p + 4);
+        args.extend(self.store.params.iter().cloned());
+        args.extend(self.store.m.iter().cloned());
+        args.extend(self.store.v.iter().cloned());
+        args.push(HostTensor::F32 { shape: vec![], data: vec![(step_no + 1) as f32] });
+        args.push(HostTensor::F32 { shape: vec![], data: vec![lr] });
+        args.push(tokens);
+        args.push(targets);
+
+        let mut out = self.train_exe.run(&args)?;
+        if out.len() != 3 * p + 1 {
+            bail!("train step returned {} outputs, expected {}", out.len(), 3 * p + 1);
+        }
+        let loss = match out.pop().unwrap() {
+            HostTensor::F32 { data, .. } => data[0] as f64,
+            _ => bail!("loss is not f32"),
+        };
+        if !loss.is_finite() {
+            bail!("non-finite loss at step {step_no}: {loss}");
+        }
+        let v_new: Vec<HostTensor> = out.split_off(2 * p);
+        let m_new: Vec<HostTensor> = out.split_off(p);
+        self.store.params = out;
+        self.store.m = m_new;
+        self.store.v = v_new;
+        self.store.step += 1;
+        Ok(loss)
+    }
+
+    pub fn eval(&self, tokens: HostTensor, targets: HostTensor) -> Result<f64> {
+        let exe = self
+            .eval_exe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("eval disabled (eval_every = 0)"))?;
+        let mut args: Vec<HostTensor> = self.store.params.to_vec();
+        args.push(tokens);
+        args.push(targets);
+        let out = exe.run(&args)?;
+        match &out[0] {
+            HostTensor::F32 { data, .. } => Ok(data[0] as f64),
+            _ => bail!("eval loss is not f32"),
+        }
+    }
+
+    /// Full training run.
+    pub fn run(&mut self, train: &mut Batcher, eval: &mut Batcher) -> Result<TrainReport> {
+        let steps = self.cfg.steps;
+        let mut ema = Ema::new(0.05);
+        let mut losses = Vec::new();
+        let mut eval_losses = Vec::new();
+        let mut first_loss = None;
+        let mut step_times = Vec::with_capacity(steps);
+        let run_start = Instant::now();
+
+        for s in 0..steps {
+            let b = train.next_batch();
+            let shape = vec![b.batch, b.seq_len];
+            let t0 = Instant::now();
+            let loss = self.step(
+                HostTensor::I32 { shape: shape.clone(), data: b.tokens },
+                HostTensor::I32 { shape, data: b.targets },
+            )?;
+            step_times.push(t0.elapsed().as_secs_f64() * 1e3);
+            let sm = ema.update(loss);
+            first_loss.get_or_insert(loss);
+            losses.push((s, loss));
+
+            if self.cfg.log_every > 0 && (s % self.cfg.log_every == 0 || s + 1 == steps) {
+                let lr = self.cfg.lr_at(s);
+                self.sink.emit("train", &[
+                    ("step", s as f64),
+                    ("loss", loss),
+                    ("loss_ema", sm),
+                    ("lr", lr),
+                    ("step_ms", *step_times.last().unwrap()),
+                ]);
+                println!("{}", self.sink.console(s, &[("loss", loss), ("ema", sm), ("lr", lr)]));
+            }
+            if self.cfg.eval_every > 0 && s > 0 && s % self.cfg.eval_every == 0 {
+                let b = eval.next_batch();
+                let shape = vec![b.batch, b.seq_len];
+                let el = self.eval(
+                    HostTensor::I32 { shape: shape.clone(), data: b.tokens },
+                    HostTensor::I32 { shape, data: b.targets },
+                )?;
+                eval_losses.push((s, el));
+                self.sink.emit("eval", &[("step", s as f64), ("loss", el)]);
+                println!("{}", self.sink.console(s, &[("eval_loss", el)]));
+            }
+            if self.cfg.checkpoint_every > 0 && (s + 1) % self.cfg.checkpoint_every == 0 {
+                let path = PathBuf::from(&self.cfg.checkpoint_dir)
+                    .join(format!("step{:06}.ckpt", s + 1));
+                self.store.save(&path)?;
+                self.sink.emit("checkpoint", &[("step", s as f64)]);
+            }
+        }
+
+        let total = run_start.elapsed().as_secs_f64();
+        let report = TrainReport {
+            steps,
+            first_loss: first_loss.unwrap_or(f64::NAN),
+            final_loss_ema: ema.get().unwrap_or(f64::NAN),
+            losses,
+            eval_losses,
+            tokens_per_sec: (steps * self.batch_tokens) as f64 / total,
+            step_ms_mean: step_times.iter().sum::<f64>() / step_times.len().max(1) as f64,
+        };
+        self.sink.emit("done", &[
+            ("steps", steps as f64),
+            ("tokens_per_sec", report.tokens_per_sec),
+            ("final_loss_ema", report.final_loss_ema),
+        ]);
+        Ok(report)
+    }
+}

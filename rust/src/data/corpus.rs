@@ -1,0 +1,105 @@
+//! Synthetic corpora for the end-to-end training example.
+//!
+//! The paper trains on proprietary trillion-token data; the substitution
+//! (DESIGN.md §3) is a *learnable* synthetic corpus: byte sequences with
+//! real structure (n-gram patterns + zipfian unigram) so the LM's loss
+//! curve demonstrates genuine learning, not memorizing noise.
+
+use crate::util::prng::{Rng, Zipf};
+
+/// Zipf-distributed "words" of 2–6 lowercase bytes separated by spaces.
+/// Vocabulary of `n_words` word types; zipf exponent ~1.1 like natural
+/// language.
+pub fn zipf_corpus(rng: &mut Rng, n_words: usize, total_bytes: usize) -> Vec<u8> {
+    // deterministic word shapes
+    let mut words: Vec<Vec<u8>> = Vec::with_capacity(n_words);
+    let mut wrng = rng.fork();
+    for _ in 0..n_words {
+        let len = 2 + wrng.usize_below(5);
+        let w: Vec<u8> = (0..len).map(|_| b'a' + wrng.below(26) as u8).collect();
+        words.push(w);
+    }
+    let zipf = Zipf::new(n_words, 1.1);
+    let mut out = Vec::with_capacity(total_bytes + 8);
+    while out.len() < total_bytes {
+        let w = &words[zipf.sample(rng)];
+        out.extend_from_slice(w);
+        out.push(b' ');
+    }
+    out.truncate(total_bytes);
+    out
+}
+
+/// Highly structured corpus: arithmetic-progression digit patterns with
+/// separators — a sequence model can drive loss far below the unigram
+/// entropy, making "is it learning?" unambiguous.
+pub fn structured_corpus(rng: &mut Rng, total_bytes: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(total_bytes + 16);
+    while out.len() < total_bytes {
+        let start = rng.below(10) as u8;
+        let step = 1 + rng.below(3) as u8;
+        let len = 4 + rng.usize_below(6);
+        for i in 0..len {
+            out.push(b'0' + (start + step * i as u8) % 10);
+        }
+        out.push(if rng.f64() < 0.5 { b',' } else { b';' });
+    }
+    out.truncate(total_bytes);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_corpus_sized_and_ascii() {
+        let mut rng = Rng::new(1);
+        let c = zipf_corpus(&mut rng, 100, 10_000);
+        assert_eq!(c.len(), 10_000);
+        assert!(c.iter().all(|&b| b == b' ' || b.is_ascii_lowercase()));
+    }
+
+    #[test]
+    fn zipf_corpus_is_skewed() {
+        let mut rng = Rng::new(2);
+        let c = zipf_corpus(&mut rng, 50, 50_000);
+        // the most common word should dominate: measure byte histogram
+        // indirectly via distinct 3-grams being far below maximum
+        let mut grams = std::collections::HashSet::new();
+        for w in c.windows(3) {
+            grams.insert(w.to_vec());
+        }
+        assert!(grams.len() < 5000, "{}", grams.len());
+    }
+
+    #[test]
+    fn structured_corpus_is_predictable() {
+        let mut rng = Rng::new(3);
+        let c = structured_corpus(&mut rng, 5_000);
+        assert_eq!(c.len(), 5_000);
+        // digits and separators only
+        assert!(c.iter().all(|&b| b.is_ascii_digit() || b == b',' || b == b';'));
+        // consecutive digit pairs frequently differ by a constant step mod 10
+        let mut consistent = 0;
+        let mut total = 0;
+        for w in c.windows(3) {
+            if w.iter().all(|b| b.is_ascii_digit()) {
+                total += 1;
+                let d1 = (10 + w[1] - w[0]) % 10;
+                let d2 = (10 + w[2] - w[1]) % 10;
+                if d1 == d2 {
+                    consistent += 1;
+                }
+            }
+        }
+        assert!(consistent as f64 > 0.9 * total as f64);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = structured_corpus(&mut Rng::new(7), 1000);
+        let b = structured_corpus(&mut Rng::new(7), 1000);
+        assert_eq!(a, b);
+    }
+}

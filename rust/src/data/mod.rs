@@ -1,0 +1,10 @@
+//! Training data pipeline: synthetic corpora, byte-level tokenizer,
+//! sequence batcher.
+
+pub mod batcher;
+pub mod corpus;
+pub mod tokenizer;
+
+pub use batcher::Batcher;
+pub use corpus::{structured_corpus, zipf_corpus};
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,41 @@
+//! Byte-level tokenizer (vocab 256) — matches the LM's `vocab = 256`.
+
+/// Identity byte tokenizer with round-trip guarantees. Kept as a struct so
+/// a subword tokenizer can slot in behind the same interface later.
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn encode(&self, text: &[u8]) -> Vec<i32> {
+        text.iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> Result<Vec<u8>, String> {
+        ids.iter()
+            .map(|&i| {
+                u8::try_from(i).map_err(|_| format!("token id {i} out of byte range"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = ByteTokenizer;
+        let text = b"hello \xff world".to_vec();
+        assert_eq!(t.decode(&t.encode(&text)).unwrap(), text);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let t = ByteTokenizer;
+        assert!(t.decode(&[256]).is_err());
+        assert!(t.decode(&[-1]).is_err());
+    }
+}

@@ -1,0 +1,145 @@
+//! Capacity-limited (token-dropping) routing — the Switch/GShard-era
+//! baseline the paper contrasts with dropless routing (§2.1).
+//!
+//! Capacity per expert: C = γ·L·k/E. Tokens beyond an expert's capacity
+//! are dropped (routed to the residual path). This module quantifies the
+//! quality/memory trade: fixed-size buffers (easy systems) vs dropped
+//! tokens (hurt model quality). MoEBlaze is dropless *and* buffer-free —
+//! the comparison shows what the fixed-buffer simplification costs.
+
+use super::structures::DispatchStructures;
+
+/// Result of applying a capacity limit to a dropless dispatch.
+#[derive(Debug, Clone)]
+pub struct CapacityRouting {
+    pub capacity: usize,
+    pub gamma: f64,
+    /// (E) tokens kept per expert (≤ capacity)
+    pub kept: Vec<u32>,
+    /// (E) tokens dropped per expert
+    pub dropped: Vec<u32>,
+    /// slots (token-major index into token_expert_indices) that survive
+    pub kept_slots: Vec<u32>,
+    /// bytes of the fixed per-expert buffers (E · C · d · dtype)
+    pub buffer_bytes: u64,
+}
+
+impl CapacityRouting {
+    pub fn total_dropped(&self) -> u64 {
+        self.dropped.iter().map(|&d| d as u64).sum()
+    }
+
+    pub fn drop_fraction(&self) -> f64 {
+        let total: u64 = self.kept.iter().map(|&k| k as u64).sum::<u64>()
+            + self.total_dropped();
+        if total == 0 {
+            0.0
+        } else {
+            self.total_dropped() as f64 / total as f64
+        }
+    }
+}
+
+/// Apply a capacity factor γ to an existing dropless dispatch: each
+/// expert keeps its first C tokens in token order (the Switch Transformer
+/// priority rule), drops the rest.
+pub fn apply_capacity(disp: &DispatchStructures, gamma: f64, d_model: usize,
+                      dtype_bytes: usize) -> CapacityRouting {
+    let e = disp.num_experts;
+    let n = disp.slots();
+    let capacity = ((gamma * n as f64 / e as f64).floor() as usize).max(1);
+
+    let mut kept = vec![0u32; e];
+    let mut dropped = vec![0u32; e];
+    let mut kept_slots = Vec::with_capacity(n);
+    for expert in 0..e {
+        let lo = disp.expert_token_offsets[expert] as usize;
+        let hi = disp.expert_token_offsets[expert + 1] as usize;
+        for (rank, slot) in (lo..hi).enumerate() {
+            if rank < capacity {
+                kept[expert] += 1;
+                // recover token-major slot: token_index_map is the inverse
+                kept_slots.push(disp.expert_token_indices[slot]);
+            } else {
+                dropped[expert] += 1;
+            }
+        }
+    }
+    CapacityRouting {
+        capacity,
+        gamma,
+        kept,
+        dropped,
+        kept_slots,
+        buffer_bytes: (e * capacity * d_model * dtype_bytes) as u64,
+    }
+}
+
+/// Memory of the capacity router's fixed buffers vs MoEBlaze's indices:
+/// the paper's §2.1 trade in one number (bytes ratio).
+pub fn buffer_vs_indices_ratio(disp: &DispatchStructures, gamma: f64,
+                               d_model: usize, dtype_bytes: usize) -> f64 {
+    let cap = apply_capacity(disp, gamma, d_model, dtype_bytes);
+    cap.buffer_bytes as f64 / disp.metadata_bytes() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::gating::synthetic_gating;
+    use crate::dispatch::sort_build::sort_build;
+    use crate::util::prng::Rng;
+
+    fn disp(l: usize, e: usize, k: usize, skew: f64, seed: u64) -> DispatchStructures {
+        let mut rng = Rng::new(seed);
+        let g = synthetic_gating(&mut rng, l, e, k, skew);
+        sort_build(&g.topk_ids, l, e, k)
+    }
+
+    #[test]
+    fn balanced_routing_drops_nothing_at_gamma_above_one() {
+        let d = disp(1024, 8, 2, 0.0, 1);
+        let c = apply_capacity(&d, 1.5, 64, 2);
+        assert_eq!(c.total_dropped(), 0);
+        assert_eq!(c.kept_slots.len(), d.slots());
+    }
+
+    #[test]
+    fn skewed_routing_drops_at_gamma_one() {
+        let d = disp(2048, 16, 2, 2.0, 2);
+        let c = apply_capacity(&d, 1.0, 64, 2);
+        assert!(c.total_dropped() > 0);
+        assert!(c.drop_fraction() > 0.0 && c.drop_fraction() < 1.0);
+        // conservation: kept + dropped == n
+        let kept: u64 = c.kept.iter().map(|&x| x as u64).sum();
+        assert_eq!(kept + c.total_dropped(), d.slots() as u64);
+    }
+
+    #[test]
+    fn kept_respects_capacity() {
+        let d = disp(512, 4, 2, 1.5, 3);
+        let c = apply_capacity(&d, 0.5, 32, 2);
+        for &k in &c.kept {
+            assert!(k as usize <= c.capacity);
+        }
+    }
+
+    #[test]
+    fn priority_is_token_order() {
+        // Switch rule: earlier tokens win the buffer slots.
+        let ids = vec![0u32, 0, 0, 0]; // 4 tokens, k=1, all expert 0
+        let d = sort_build(&ids, 4, 2, 1);
+        let c = apply_capacity(&d, 1.0, 8, 2); // capacity = 4/2 = 2
+        assert_eq!(c.kept_slots, vec![0, 1]);
+        assert_eq!(c.dropped[0], 2);
+    }
+
+    #[test]
+    fn fixed_buffers_dwarf_indices() {
+        // the paper's memory argument: γ·L·k·d/E per expert × E experts
+        // vs ~16 bytes per slot of metadata
+        let d = disp(4096, 16, 4, 0.5, 4);
+        let ratio = buffer_vs_indices_ratio(&d, 1.25, 1024, 2);
+        assert!(ratio > 10.0, "{ratio}");
+    }
+}

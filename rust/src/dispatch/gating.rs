@@ -1,0 +1,136 @@
+//! Host-side gating (softmax → top-k) for the expert-parallel simulator
+//! and synthetic dispatch workloads (paper §2.1).
+
+use crate::util::prng::Rng;
+
+/// Gating decision for a batch of tokens.
+#[derive(Debug, Clone)]
+pub struct Gating {
+    pub num_tokens: usize,
+    pub top_k: usize,
+    /// (L·k) expert ids, token-major
+    pub topk_ids: Vec<u32>,
+    /// (L·k) renormalized gate weights, token-major
+    pub gates: Vec<f32>,
+}
+
+/// softmax over logits then top-k with renormalized weights — the same
+/// semantics as `ref.gating` on the Python side.
+pub fn softmax_topk(logits: &[f32], num_tokens: usize, num_experts: usize,
+                    top_k: usize) -> Gating {
+    assert_eq!(logits.len(), num_tokens * num_experts);
+    assert!(top_k >= 1 && top_k <= num_experts);
+    let mut topk_ids = Vec::with_capacity(num_tokens * top_k);
+    let mut gates = Vec::with_capacity(num_tokens * top_k);
+    let mut probs = vec![0f32; num_experts];
+    for t in 0..num_tokens {
+        let row = &logits[t * num_experts..(t + 1) * num_experts];
+        // stable softmax
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0f32;
+        for (p, &x) in probs.iter_mut().zip(row) {
+            *p = (x - m).exp();
+            z += *p;
+        }
+        for p in probs.iter_mut() {
+            *p /= z;
+        }
+        // top-k by value, ties broken by lower expert id (jax top_k order)
+        let mut idx: Vec<u32> = (0..num_experts as u32).collect();
+        idx.sort_by(|&a, &b| {
+            probs[b as usize]
+                .partial_cmp(&probs[a as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let chosen = &idx[..top_k];
+        let total: f32 = chosen.iter().map(|&e| probs[e as usize]).sum();
+        for &e in chosen {
+            topk_ids.push(e);
+            gates.push(probs[e as usize] / total);
+        }
+    }
+    Gating { num_tokens, top_k, topk_ids, gates }
+}
+
+/// Synthetic gating for dispatch benchmarks: draws k distinct experts per
+/// token, optionally with a skewed (imbalanced) expert popularity — the
+/// hard case for capacity-based routers (paper §2.1).
+pub fn synthetic_gating(rng: &mut Rng, num_tokens: usize, num_experts: usize,
+                        top_k: usize, skew: f64) -> Gating {
+    let mut topk_ids = Vec::with_capacity(num_tokens * top_k);
+    let mut gates = Vec::with_capacity(num_tokens * top_k);
+    // expert popularity weights ~ (rank+1)^-skew
+    let weights: Vec<f64> = (0..num_experts)
+        .map(|i| 1.0 / ((i + 1) as f64).powf(skew))
+        .collect();
+    let total: f64 = weights.iter().sum();
+    for _ in 0..num_tokens {
+        // weighted sampling without replacement
+        let mut avail: Vec<usize> = (0..num_experts).collect();
+        let mut w = weights.clone();
+        let mut wsum = total;
+        let mut chosen = Vec::with_capacity(top_k);
+        for _ in 0..top_k {
+            let mut u = rng.f64() * wsum;
+            let mut pick = avail.len() - 1;
+            for (j, &e) in avail.iter().enumerate() {
+                u -= w[e];
+                if u <= 0.0 {
+                    pick = j;
+                    break;
+                }
+            }
+            let e = avail.swap_remove(pick);
+            wsum -= w[e];
+            w[e] = 0.0;
+            chosen.push(e as u32);
+        }
+        let g = 1.0 / top_k as f32;
+        for e in chosen {
+            topk_ids.push(e);
+            gates.push(g);
+        }
+    }
+    Gating { num_tokens, top_k, topk_ids, gates }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_topk_basic() {
+        // 2 tokens, 3 experts
+        let logits = vec![0.0, 1.0, 2.0, 5.0, 1.0, 0.0];
+        let g = softmax_topk(&logits, 2, 3, 2);
+        assert_eq!(&g.topk_ids[0..2], &[2, 1]); // descending prob
+        assert_eq!(&g.topk_ids[2..4], &[0, 1]);
+        // gates renormalized per token
+        assert!((g.gates[0] + g.gates[1] - 1.0).abs() < 1e-6);
+        assert!(g.gates[0] > g.gates[1]);
+    }
+
+    #[test]
+    fn distinct_ids_per_token() {
+        let mut rng = Rng::new(1);
+        let g = synthetic_gating(&mut rng, 100, 8, 4, 1.0);
+        for t in 0..100 {
+            let mut ids = g.topk_ids[t * 4..(t + 1) * 4].to_vec();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), 4);
+        }
+    }
+
+    #[test]
+    fn skew_prefers_low_experts() {
+        let mut rng = Rng::new(2);
+        let g = synthetic_gating(&mut rng, 2000, 16, 1, 1.5);
+        let mut counts = [0usize; 16];
+        for &e in &g.topk_ids {
+            counts[e as usize] += 1;
+        }
+        assert!(counts[0] > counts[8] * 2, "{counts:?}");
+    }
+}

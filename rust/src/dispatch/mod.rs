@@ -1,0 +1,17 @@
+//! Token-dispatch data structures and builders (paper §4).
+//!
+//! This is the CPU twin of the Pallas dispatch kernel: the coordinator
+//! uses it to plan expert-parallel exchanges, and the `dispatch_build`
+//! bench reproduces the paper's §4.2 sort-vs-3-step comparison.
+
+pub mod capacity;
+pub mod gating;
+pub mod parallel_build;
+pub mod sort_build;
+pub mod structures;
+
+pub use capacity::{apply_capacity, CapacityRouting};
+pub use gating::{softmax_topk, Gating};
+pub use parallel_build::{parallel_build, BuildStats};
+pub use sort_build::sort_build;
+pub use structures::DispatchStructures;

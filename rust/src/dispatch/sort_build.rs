@@ -1,0 +1,94 @@
+//! Sort-based dispatch construction — the baseline the paper criticizes
+//! (§4.2): flatten (expert, token) pairs, globally sort by expert id,
+//! recover indices. Multiple O(n)-data passes, like the GPU radix-sort
+//! pipeline it models.
+
+use super::structures::DispatchStructures;
+
+/// Build dispatch structures by stable-sorting the flattened assignments.
+///
+/// `topk_ids`: (L·k) expert id per token-major slot (token i's k choices
+/// at `[i*k .. (i+1)*k)`).
+pub fn sort_build(
+    topk_ids: &[u32],
+    num_tokens: usize,
+    num_experts: usize,
+    top_k: usize,
+) -> DispatchStructures {
+    assert_eq!(topk_ids.len(), num_tokens * top_k);
+    let n = topk_ids.len();
+
+    // pass 1: flatten to (expert, slot) pairs
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    // pass 2: global stable sort by expert id (the expensive step —
+    // O(n log n) comparisons and several full traversals)
+    order.sort_by_key(|&s| topk_ids[s as usize]);
+
+    // pass 3: index recovery
+    let mut expert_token_indices = vec![0u32; n];
+    let mut token_index_map = vec![0u32; n];
+    for (pos, &slot) in order.iter().enumerate() {
+        expert_token_indices[pos] = slot / top_k as u32; // token id
+        token_index_map[slot as usize] = pos as u32;     // inverse perm
+    }
+
+    // pass 4: per-expert ranges via counting
+    let mut lengths = vec![0u32; num_experts];
+    for &e in topk_ids {
+        lengths[e as usize] += 1;
+    }
+    let mut offsets = vec![0u32; num_experts + 1];
+    for e in 0..num_experts {
+        offsets[e + 1] = offsets[e] + lengths[e];
+    }
+
+    DispatchStructures {
+        num_tokens,
+        num_experts,
+        top_k,
+        token_expert_indices: topk_ids.to_vec(),
+        expert_token_indices,
+        expert_token_offsets: offsets,
+        token_index_map,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_ids(rng: &mut Rng, l: usize, e: usize, k: usize) -> Vec<u32> {
+        let mut ids = Vec::with_capacity(l * k);
+        for _ in 0..l {
+            ids.extend(rng.distinct(e, k));
+        }
+        ids
+    }
+
+    #[test]
+    fn valid_on_random_inputs() {
+        let mut rng = Rng::new(1);
+        for &(l, e, k) in &[(1, 1, 1), (7, 3, 2), (64, 16, 4), (200, 8, 3)] {
+            let ids = random_ids(&mut rng, l, e, k);
+            let d = sort_build(&ids, l, e, k);
+            d.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn stable_within_expert() {
+        // tokens routed to the same expert appear in token order
+        let ids = vec![0, 0, 0, 0]; // k=1, 4 tokens all to expert 0
+        let d = sort_build(&ids, 4, 2, 1);
+        assert_eq!(d.expert_token_indices, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_experts_allowed() {
+        let ids = vec![3, 3, 3]; // all to the last expert
+        let d = sort_build(&ids, 3, 4, 1);
+        d.validate().unwrap();
+        assert_eq!(d.expert_token_offsets, vec![0, 0, 0, 0, 3]);
+    }
+}

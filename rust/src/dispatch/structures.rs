@@ -1,0 +1,171 @@
+//! The four index structures of paper §4.1 (+ invariant checking).
+
+/// Complete routing metadata for one MoE layer step.
+///
+/// Notation: `L` tokens, `E` experts, `k` experts/token, `n = L·k` slots.
+/// All four structures together are "extremely lightweight" (paper §3):
+/// ~4·n i32 — versus the `n·d` routed-activation buffer they replace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DispatchStructures {
+    pub num_tokens: usize,
+    pub num_experts: usize,
+    pub top_k: usize,
+    /// (L·k) expert id per slot, token-major (paper: token_expert_indices).
+    pub token_expert_indices: Vec<u32>,
+    /// (L·k) token id per slot, expert-major (paper: expert_token_indices).
+    pub expert_token_indices: Vec<u32>,
+    /// (E+1) exclusive prefix sums of per-expert counts.
+    pub expert_token_offsets: Vec<u32>,
+    /// (L·k) position of routed copy (i, j) inside expert_token_indices,
+    /// token-major (paper: token_index_map).
+    pub token_index_map: Vec<u32>,
+}
+
+impl DispatchStructures {
+    pub fn slots(&self) -> usize {
+        self.num_tokens * self.top_k
+    }
+
+    pub fn expert_len(&self, e: usize) -> usize {
+        (self.expert_token_offsets[e + 1] - self.expert_token_offsets[e]) as usize
+    }
+
+    /// Token ids routed to expert `e`.
+    pub fn expert_tokens(&self, e: usize) -> &[u32] {
+        let lo = self.expert_token_offsets[e] as usize;
+        let hi = self.expert_token_offsets[e + 1] as usize;
+        &self.expert_token_indices[lo..hi]
+    }
+
+    /// Expert ids chosen by token `i`.
+    pub fn token_experts(&self, i: usize) -> &[u32] {
+        &self.token_expert_indices[i * self.top_k..(i + 1) * self.top_k]
+    }
+
+    /// Approximate bytes of routing metadata (the paper's "lightweight"
+    /// claim — compare with `tokens * d * k * dtype` for routed buffers).
+    pub fn metadata_bytes(&self) -> usize {
+        4 * (self.token_expert_indices.len()
+            + self.expert_token_indices.len()
+            + self.expert_token_offsets.len()
+            + self.token_index_map.len())
+    }
+
+    /// Full structural validation (the §4.1 invariants; see DESIGN.md §7).
+    /// O(n) — used by tests, the property harness, and debug assertions.
+    pub fn validate(&self) -> Result<(), String> {
+        let (l, e, k) = (self.num_tokens, self.num_experts, self.top_k);
+        let n = l * k;
+        if self.token_expert_indices.len() != n
+            || self.expert_token_indices.len() != n
+            || self.token_index_map.len() != n
+            || self.expert_token_offsets.len() != e + 1
+        {
+            return Err("structure length mismatch".into());
+        }
+        // offsets: monotone, start 0, end n
+        if self.expert_token_offsets[0] != 0 {
+            return Err("offsets[0] != 0".into());
+        }
+        if self.expert_token_offsets[e] as usize != n {
+            return Err("offsets[E] != L*k".into());
+        }
+        if self.expert_token_offsets.windows(2).any(|w| w[0] > w[1]) {
+            return Err("offsets not monotone".into());
+        }
+        // expert ids in range; distinct per token
+        for i in 0..l {
+            let ex = self.token_experts(i);
+            let mut seen = vec![false; e];
+            for &x in ex {
+                if x as usize >= e {
+                    return Err(format!("expert id {x} out of range"));
+                }
+                if seen[x as usize] {
+                    return Err(format!("token {i} routed twice to expert {x}"));
+                }
+                seen[x as usize] = true;
+            }
+        }
+        // expert_token_indices is a permutation of each token repeated k times
+        let mut counts = vec![0usize; l];
+        for &t in &self.expert_token_indices {
+            if t as usize >= l {
+                return Err(format!("token id {t} out of range"));
+            }
+            counts[t as usize] += 1;
+        }
+        if counts.iter().any(|&c| c != k) {
+            return Err("expert_token_indices is not k-regular".into());
+        }
+        // token_index_map inverts expert_token_indices and lands in the
+        // right expert segment
+        for i in 0..l {
+            for (j, &pos) in self.token_index_map[i * k..(i + 1) * k].iter().enumerate() {
+                let pos = pos as usize;
+                if pos >= n {
+                    return Err("token_index_map out of range".into());
+                }
+                if self.expert_token_indices[pos] as usize != i {
+                    return Err(format!(
+                        "token_index_map[{i},{j}] -> slot {pos} holds token {}",
+                        self.expert_token_indices[pos]
+                    ));
+                }
+                let expert = self.token_expert_indices[i * k + j] as usize;
+                let lo = self.expert_token_offsets[expert] as usize;
+                let hi = self.expert_token_offsets[expert + 1] as usize;
+                if !(lo..hi).contains(&pos) {
+                    return Err(format!(
+                        "slot {pos} for token {i} not in expert {expert}'s segment"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::sort_build;
+
+    /// The paper's Figure 2 worked example.
+    pub fn fig2() -> Vec<u32> {
+        vec![2, 3, 0, 1, 0, 3, 1, 2, 0, 3]
+    }
+
+    #[test]
+    fn figure2_example() {
+        let d = sort_build(&fig2(), 5, 4, 2);
+        assert_eq!(d.token_expert_indices, fig2());
+        assert_eq!(d.expert_token_indices, vec![1, 2, 4, 1, 3, 0, 3, 0, 2, 4]);
+        assert_eq!(d.expert_token_offsets, vec![0, 3, 5, 7, 10]);
+        assert_eq!(&d.token_index_map[0..2], &[5, 7]); // paper: {5, 7}
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn accessors() {
+        let d = sort_build(&fig2(), 5, 4, 2);
+        assert_eq!(d.expert_tokens(0), &[1, 2, 4]);
+        assert_eq!(d.expert_len(1), 2);
+        assert_eq!(d.token_experts(3), &[1, 2]);
+        assert_eq!(d.metadata_bytes(), 4 * (10 + 10 + 5 + 10));
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let good = sort_build(&fig2(), 5, 4, 2);
+        let mut bad = good.clone();
+        bad.expert_token_offsets[1] = 99;
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.expert_token_indices.swap(0, 4);
+        assert!(bad.validate().is_err());
+        let mut bad = good;
+        bad.token_index_map[0] = 0;
+        assert!(bad.validate().is_err());
+    }
+}

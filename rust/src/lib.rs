@@ -1,0 +1,48 @@
+//! # MoEBlaze — memory-efficient MoE training (rust_pallas reproduction)
+//!
+//! Reproduction of *"MoEBlaze: Breaking the Memory Wall for Efficient MoE
+//! Training on Modern GPUs"* (Zhang et al., 2026) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): fused SwiGLU
+//!   dual-GEMM + epilogue, on-the-fly-gather expert MLP, 3-step dispatch
+//!   construction. Build-time only.
+//! * **L2** — JAX model (`python/compile/`): the MoE layer as a
+//!   `custom_vjp` with the paper's Algorithm-1 activation-checkpoint
+//!   policy, the conventional baseline, and a full MoE transformer LM.
+//!   AOT-lowered to HLO text by `compile.aot`.
+//! * **L3** — this crate: the coordinator. PJRT runtime for the AOT
+//!   artifacts, training orchestrator, dispatch-structure twin (paper §4),
+//!   activation-memory model (Figures 3/5), expert-parallel simulator,
+//!   config system, data pipeline, metrics — plus hand-rolled substrates
+//!   (JSON, TOML, PRNG, thread pool, stats, CLI) since this build is
+//!   fully offline.
+//!
+//! Entry points: the `moeblaze` binary (`rust/src/main.rs`), the examples
+//! under `examples/`, and the figure benches under `rust/benches/`.
+
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dispatch;
+pub mod memory;
+pub mod metrics;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("MOEBLAZE_ARTIFACTS") {
+        return p.into();
+    }
+    // Works from the repo root and from target/{debug,release} contexts.
+    for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = std::path::PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return p;
+        }
+    }
+    std::path::PathBuf::from("artifacts")
+}

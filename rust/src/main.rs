@@ -1,0 +1,309 @@
+//! `moeblaze` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   configs                      print paper Table 1 (paper + scaled scale)
+//!   memory [--paper-mode] [--scaled] [--deepseek]
+//!                                Figures 3/5: activation-memory tables
+//!   speed  [--act silu|swiglu] [--configs conf1,..] [--quick]
+//!                                Figures 4/6: fwd+bwd step speedups
+//!   dispatch-demo [--tokens N --experts E --top-k K]
+//!                                paper §4 structures on a worked example
+//!   dispatch-bench [--tokens N] sort-build vs 3-step build
+//!   ep-sim [--ranks R ...]      expert-parallel all-to-all plan
+//!   train  [--steps N --config file.toml ...]
+//!                                train the MoE LM end-to-end (AOT step)
+//!   inspect                      list artifacts + compile them
+//!
+//! Run from the repo root after `make artifacts && cargo build --release`.
+
+use anyhow::{bail, Result};
+
+use moeblaze::bench_harness as bh;
+use moeblaze::config::model::Activation;
+use moeblaze::config::paper::{paper_configs, scaled_configs, PAPER_BLOCK, SCALED_BLOCK};
+use moeblaze::config::toml::Toml;
+use moeblaze::config::train::TrainConfig;
+use moeblaze::coordinator::expert_parallel::EpTopology;
+use moeblaze::coordinator::params::ParamStore;
+use moeblaze::coordinator::trainer::Trainer;
+use moeblaze::data::batcher::Batcher;
+use moeblaze::data::corpus::structured_corpus;
+use moeblaze::data::tokenizer::ByteTokenizer;
+use moeblaze::dispatch::gating::synthetic_gating;
+use moeblaze::dispatch::parallel_build::parallel_build_with_stats;
+use moeblaze::dispatch::sort_build::sort_build;
+use moeblaze::memory::model::{ffn_intermediate_bytes, routing_buffer_bytes,
+                              AccountingMode};
+use moeblaze::memory::report::{memory_figure, render_memory_figure};
+use moeblaze::runtime::client::Runtime;
+use moeblaze::util::cli::Args;
+use moeblaze::util::prng::Rng;
+use moeblaze::util::stats::Bench;
+use moeblaze::util::table::{human_bytes, Table};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("configs") => cmd_configs(),
+        Some("memory") => cmd_memory(args),
+        Some("speed") => cmd_speed(args),
+        Some("dispatch-demo") => cmd_dispatch_demo(args),
+        Some("dispatch-bench") => cmd_dispatch_bench(args),
+        Some("ep-sim") => cmd_ep_sim(args),
+        Some("train") => cmd_train(args),
+        Some("inspect") => cmd_inspect(),
+        Some(other) => bail!("unknown subcommand `{other}` (see rust/src/main.rs header)"),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!("moeblaze — memory-efficient MoE training (paper reproduction)");
+    println!("subcommands: configs | memory | speed | dispatch-demo | dispatch-bench | ep-sim | train | inspect");
+    println!("see rust/src/main.rs header or README.md for flags");
+}
+
+fn cmd_configs() -> Result<()> {
+    for (title, configs, block) in [
+        ("Table 1 (paper scale)", paper_configs(), PAPER_BLOCK),
+        ("Table 1 (CPU-bench scale)", scaled_configs(), SCALED_BLOCK),
+    ] {
+        let mut t = Table::new(["config", "input_d", "ffn_h", "experts", "k", "batch", "seq", "tokens", "pad_slots"]);
+        for c in &configs {
+            let m = c.moe(Activation::Swiglu, block);
+            t.row([
+                c.name.to_string(),
+                c.input_d.to_string(),
+                c.hidden().to_string(),
+                c.num_experts.to_string(),
+                c.top_k.to_string(),
+                c.batch.to_string(),
+                c.seq_len.to_string(),
+                c.tokens().to_string(),
+                m.padded_slots().to_string(),
+            ]);
+        }
+        println!("{title}\n{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    if args.has("deepseek") {
+        // paper §2.1 / §2.2 worked examples
+        let routing = routing_buffer_bytes(2_000_000, 6144, 4, 2);
+        let act = ffn_intermediate_bytes(2_000_000, 24576, 2);
+        println!("DeepSeek-like worked examples (paper §2):");
+        println!("  Mem_routing = L·d·k·2B = {} (paper: ≈94 GB)", human_bytes(routing));
+        println!("  Mem_act     = L·h·2B   = {} (paper: ≈98 GB)", human_bytes(act));
+        return Ok(());
+    }
+    let mode = if args.has("paper-mode") {
+        AccountingMode::PaperBaseline
+    } else {
+        AccountingMode::Ours
+    };
+    let paper_scale = !args.has("scaled");
+    for (fig, act) in [("Figure 3", Activation::Silu), ("Figure 5", Activation::Swiglu)] {
+        let rows = memory_figure(act, mode, paper_scale);
+        let title = format!(
+            "{fig} — activation memory, {} ({}, {:?} accounting)",
+            act.name(),
+            if paper_scale { "paper scale" } else { "scaled" },
+            mode
+        );
+        println!("{}", render_memory_figure(&title, &rows));
+    }
+    Ok(())
+}
+
+fn cmd_speed(args: &Args) -> Result<()> {
+    let runtime = Runtime::new(&moeblaze::artifacts_dir())?;
+    println!("platform: {}", runtime.platform());
+    let bench = if args.has("quick") { Bench::quick() } else { Bench::default() };
+    let only = args.list("configs");
+    let only_ref = if only.is_empty() { None } else { Some(only.as_slice()) };
+    let acts: Vec<Activation> = match args.get("act") {
+        Some(a) => vec![Activation::parse(a).map_err(anyhow::Error::msg)?],
+        None => vec![Activation::Silu, Activation::Swiglu],
+    };
+    for act in acts {
+        let fig = if act == Activation::Swiglu { "Figure 6" } else { "Figure 4" };
+        let cells = bh::speed_figure(&runtime, act, &bench, only_ref)?;
+        println!("{}", bh::render_speed_figure(
+            &format!("{fig} — fwd+bwd step time, {} (scaled configs)", act.name()),
+            &cells,
+        ));
+        println!("{}", bh::speed_figure_json(act, &cells));
+    }
+    Ok(())
+}
+
+fn cmd_dispatch_demo(args: &Args) -> Result<()> {
+    let l = args.usize_or("tokens", 5).map_err(anyhow::Error::msg)?;
+    let e = args.usize_or("experts", 4).map_err(anyhow::Error::msg)?;
+    let k = args.usize_or("top-k", 2).map_err(anyhow::Error::msg)?;
+    let seed = args.u64_or("seed", 0).map_err(anyhow::Error::msg)?;
+
+    // seed 0 with the default sizes reproduces the paper's Figure 2
+    let ids: Vec<u32> = if (l, e, k, seed) == (5, 4, 2, 0) {
+        vec![2, 3, 0, 1, 0, 3, 1, 2, 0, 3]
+    } else {
+        let mut rng = Rng::new(seed);
+        synthetic_gating(&mut rng, l, e, k, 0.7).topk_ids
+    };
+    let (d, stats) = parallel_build_with_stats(&ids, l, e, k, 1);
+    d.validate().map_err(anyhow::Error::msg)?;
+    println!("token_expert_indices = {:?}", d.token_expert_indices);
+    println!("expert_token_indices = {:?}", d.expert_token_indices);
+    println!("expert_token_offsets = {:?}", d.expert_token_offsets);
+    println!("token_index_map      = {:?}", d.token_index_map);
+    println!("metadata: {} ({} data passes)", human_bytes(d.metadata_bytes() as u64), stats.data_passes);
+    let sorted = sort_build(&ids, l, e, k);
+    println!("3-step build == sort build: {}", sorted == d);
+    Ok(())
+}
+
+fn cmd_dispatch_bench(args: &Args) -> Result<()> {
+    let l = args.usize_or("tokens", 65536).map_err(anyhow::Error::msg)?;
+    let e = args.usize_or("experts", 16).map_err(anyhow::Error::msg)?;
+    let k = args.usize_or("top-k", 4).map_err(anyhow::Error::msg)?;
+    let mut rng = Rng::new(7);
+    let ids = synthetic_gating(&mut rng, l, e, k, 0.7).topk_ids;
+    let bench = Bench::quick();
+    let sort = bench.run(|| {
+        std::hint::black_box(sort_build(&ids, l, e, k));
+    });
+    let par = bench.run(|| {
+        std::hint::black_box(parallel_build_with_stats(&ids, l, e, k, 1));
+    });
+    let mut t = Table::new(["builder", "time", "notes"]);
+    t.row(["sort-build (baseline)", &sort.format_brief(), "O(n log n), multi-pass"]);
+    t.row(["3-step build (moeblaze)", &par.format_brief(), "O(n), 3 passes, atomic-free"]);
+    println!("dispatch build, L={l} E={e} k={k} (n={}):\n{}", l * k, t.render());
+    println!("speedup: {:.2}x", sort.mean_ns / par.mean_ns);
+    Ok(())
+}
+
+fn cmd_ep_sim(args: &Args) -> Result<()> {
+    let ranks = args.usize_or("ranks", 4).map_err(anyhow::Error::msg)?;
+    let l = args.usize_or("tokens", 4096).map_err(anyhow::Error::msg)?;
+    let e = args.usize_or("experts", 16).map_err(anyhow::Error::msg)?;
+    let k = args.usize_or("top-k", 2).map_err(anyhow::Error::msg)?;
+    let d = args.usize_or("d-model", 1024).map_err(anyhow::Error::msg)?;
+    let skew = args.f64_or("skew", 0.7).map_err(anyhow::Error::msg)?;
+    let mut rng = Rng::new(args.u64_or("seed", 1).map_err(anyhow::Error::msg)?);
+    let g = synthetic_gating(&mut rng, l, e, k, skew);
+    let disp = moeblaze::dispatch::parallel_build::parallel_build(&g.topk_ids, l, e, k);
+    let topo = EpTopology::new(ranks, e).map_err(anyhow::Error::msg)?;
+    let plan = topo.plan(&disp, d, 2);
+    println!("expert-parallel plan: {ranks} ranks, L={l}, E={e}, k={k}, skew={skew}");
+    let mut t = Table::new(["rank", "expert load", "share"]);
+    for (r, &tok) in plan.per_rank_tokens.iter().enumerate() {
+        t.row([
+            format!("r{r}"),
+            tok.to_string(),
+            format!("{:.1}%", 100.0 * tok as f64 / plan.total_rows as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("cross-rank traffic: {} ({} of {} routed rows)",
+             human_bytes(plan.cross_rank_bytes()), plan.cross_rank_rows, plan.total_rows);
+    println!("imbalance (max/mean): {:.3}", plan.imbalance());
+    for gamma in [1.0, 1.25, 1.5, 2.0] {
+        println!("capacity γ={gamma}: {} tokens dropped (moeblaze: 0 — dropless)",
+                 plan.dropped_under_capacity(gamma));
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let t = Toml::load(path).map_err(anyhow::Error::msg)?;
+            TrainConfig::from_toml(&t, "train").map_err(anyhow::Error::msg)?
+        }
+        None => TrainConfig::default(),
+    };
+    // CLI overrides
+    cfg.steps = args.usize_or("steps", cfg.steps).map_err(anyhow::Error::msg)?;
+    cfg.lr = args.f64_or("lr", cfg.lr).map_err(anyhow::Error::msg)?;
+    cfg.seed = args.u64_or("seed", cfg.seed).map_err(anyhow::Error::msg)?;
+    cfg.checkpoint_every = args.usize_or("checkpoint-every", cfg.checkpoint_every).map_err(anyhow::Error::msg)?;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every).map_err(anyhow::Error::msg)?;
+    if let Some(p) = args.get("metrics") {
+        cfg.metrics_path = p.to_string();
+    }
+
+    let runtime = Runtime::new(&moeblaze::artifacts_dir())?;
+    println!("platform: {}", runtime.platform());
+    let lm = runtime.manifest.lm.clone()
+        .ok_or_else(|| anyhow::anyhow!("manifest has no lm section"))?;
+    println!("LM: {} params across {} tensors, batch {}, seq {}",
+             lm.num_params(), lm.params.len(), lm.batch, lm.seq_len());
+
+    let store = match args.get("resume") {
+        Some(p) => ParamStore::load(std::path::Path::new(p))?,
+        None => ParamStore::init(&lm, cfg.seed),
+    };
+
+    // data: structured synthetic corpus (learnable; see data::corpus)
+    let tok = ByteTokenizer;
+    let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
+    let corpus_bytes = args.usize_or("corpus-bytes", 1 << 20).map_err(anyhow::Error::msg)?;
+    let corpus = structured_corpus(&mut rng, corpus_bytes);
+    let ids = tok.encode(&corpus);
+    let split = ids.len() * 9 / 10;
+    let mut train_b = Batcher::new(ids[..split].to_vec(), lm.batch, lm.seq_len(), cfg.seed)
+        .map_err(anyhow::Error::msg)?;
+    let mut eval_b = Batcher::new(ids[split..].to_vec(), lm.batch, lm.seq_len(), cfg.seed + 1)
+        .map_err(anyhow::Error::msg)?;
+
+    let mut trainer = Trainer::new(&runtime, store, cfg)?;
+    let report = trainer.run(&mut train_b, &mut eval_b)?;
+    println!("\ntrained {} steps: loss {:.4} -> {:.4} (ema), {:.0} tokens/s, {:.1} ms/step",
+             report.steps, report.first_loss, report.final_loss_ema,
+             report.tokens_per_sec, report.step_ms_mean);
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let runtime = Runtime::new(&moeblaze::artifacts_dir())?;
+    println!("platform: {}", runtime.platform());
+    let n = moeblaze::runtime::validate::validate_all(&runtime.manifest)?;
+    println!("validated {n} artifacts against the manifest (shapes, dtypes, arity)");
+    let mut t = Table::new(["artifact", "kind", "inputs", "outputs", "compile"]);
+    let names: Vec<String> = runtime.manifest.artifacts.keys().cloned().collect();
+    for name in names {
+        let exe = runtime.load(&name)?;
+        t.row([
+            name.clone(),
+            runtime.manifest.get(&name)?.kind.clone(),
+            exe.inputs.len().to_string(),
+            exe.outputs.len().to_string(),
+            format!("{:.0} ms", exe.compile_ms),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,6 @@
+//! Activation-memory accounting (Figures 3 & 5).
+
+pub mod model;
+pub mod report;
+
+pub use model::{baseline_bytes, moeblaze_bytes, AccountingMode, MemoryBreakdown};

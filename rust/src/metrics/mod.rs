@@ -1,0 +1,136 @@
+//! Metrics: step events, JSONL emission, throughput/EMA tracking.
+
+use std::fmt::Write as _;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Exponential moving average (loss smoothing).
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Ema {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ema { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => prev * (1.0 - self.alpha) + x * self.alpha,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Step-loop metrics sink: console + optional JSONL file.
+pub struct MetricsSink {
+    file: Option<File>,
+    start: Instant,
+    pub events: u64,
+}
+
+impl MetricsSink {
+    pub fn new(jsonl_path: Option<&str>) -> Result<MetricsSink, String> {
+        let file = match jsonl_path {
+            Some(p) if !p.is_empty() => {
+                if let Some(dir) = std::path::Path::new(p).parent() {
+                    if !dir.as_os_str().is_empty() {
+                        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+                    }
+                }
+                Some(
+                    OpenOptions::new()
+                        .create(true)
+                        .append(true)
+                        .open(p)
+                        .map_err(|e| format!("{p}: {e}"))?,
+                )
+            }
+            _ => None,
+        };
+        Ok(MetricsSink { file, start: Instant::now(), events: 0 })
+    }
+
+    /// Emit one event (kind + numeric fields). Returns the rendered line.
+    pub fn emit(&mut self, kind: &str, fields: &[(&str, f64)]) -> String {
+        self.events += 1;
+        let elapsed = self.start.elapsed().as_secs_f64();
+        let mut pairs = vec![
+            ("kind", Json::str(kind)),
+            ("t", Json::num(elapsed)),
+        ];
+        for (k, v) in fields {
+            pairs.push((k, Json::num(*v)));
+        }
+        let j = Json::obj(pairs);
+        let line = j.to_string();
+        if let Some(f) = &mut self.file {
+            let _ = writeln!(f, "{line}");
+        }
+        line
+    }
+
+    /// Human-oriented console line.
+    pub fn console(&self, step: usize, fields: &[(&str, f64)]) -> String {
+        let mut s = format!("step {step:>6}");
+        for (k, v) in fields {
+            let _ = write!(s, "  {k} {v:.4}");
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        assert_eq!(e.update(10.0), 10.0);
+        let v = e.update(0.0);
+        assert!((v - 5.0).abs() < 1e-12);
+        assert!(e.get().unwrap() < 10.0);
+    }
+
+    #[test]
+    fn emit_valid_json() {
+        let mut m = MetricsSink::new(None).unwrap();
+        let line = m.emit("train", &[("loss", 1.5), ("lr", 0.001)]);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("train"));
+        assert_eq!(j.get("loss").unwrap().as_f64(), Some(1.5));
+        assert_eq!(m.events, 1);
+    }
+
+    #[test]
+    fn jsonl_file_written() {
+        let dir = std::env::temp_dir().join("moeblaze_test_metrics");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("m.jsonl");
+        let p = path.to_str().unwrap().to_string();
+        {
+            let mut m = MetricsSink::new(Some(&p)).unwrap();
+            m.emit("a", &[("x", 1.0)]);
+            m.emit("b", &[("y", 2.0)]);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for l in text.lines() {
+            Json::parse(l).unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

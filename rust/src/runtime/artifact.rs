@@ -1,0 +1,245 @@
+//! Artifact manifest: the machine-readable contract between `compile.aot`
+//! (Python, build time) and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type tags used in the manifest ("f32", "s32", ...).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "s32" | "i32" => Ok(Dtype::I32),
+            _ => bail!("unsupported dtype `{s}` in manifest"),
+        }
+    }
+
+    pub fn bytes(self) -> usize {
+        4
+    }
+}
+
+/// One input/output tensor of an artifact.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl Artifact {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(Json::as_usize)
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(Json::as_str)
+    }
+}
+
+/// Parameter entry of the LM (name, shape, init scale).
+#[derive(Debug, Clone)]
+pub struct LmParam {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init_scale: f32,
+}
+
+/// The LM section of the manifest.
+#[derive(Debug, Clone)]
+pub struct LmSpec {
+    pub batch: usize,
+    pub params: Vec<LmParam>,
+    pub config: BTreeMap<String, Json>,
+}
+
+impl LmSpec {
+    pub fn seq_len(&self) -> usize {
+        self.config.get("seq_len").and_then(Json::as_usize).unwrap_or(0)
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.config.get("vocab").and_then(Json::as_usize).unwrap_or(256)
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, Artifact>,
+    pub lm: Option<LmSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let mut artifacts = BTreeMap::new();
+        for a in json
+            .req("artifacts")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("`artifacts` is not an array"))?
+        {
+            let art = parse_artifact(a)?;
+            artifacts.insert(art.name.clone(), art);
+        }
+
+        let lm = match json.get("lm") {
+            Some(lm) => Some(parse_lm(lm)?),
+            None => None,
+        };
+
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, lm })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact `{name}` not in manifest (have: {})",
+                self.artifacts.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, art: &Artifact) -> PathBuf {
+        self.dir.join(&art.file)
+    }
+
+    /// All artifacts of a given kind, sorted by name.
+    pub fn by_kind(&self, kind: &str) -> Vec<&Artifact> {
+        self.artifacts.values().filter(|a| a.kind == kind).collect()
+    }
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec> {
+    let name = j.req("name").map_err(|e| anyhow!("{e}"))?
+        .as_str().ok_or_else(|| anyhow!("io name not a string"))?.to_string();
+    let shape = j.req("shape").map_err(|e| anyhow!("{e}"))?
+        .as_arr().ok_or_else(|| anyhow!("io shape not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = Dtype::parse(
+        j.req("dtype").map_err(|e| anyhow!("{e}"))?
+            .as_str().ok_or_else(|| anyhow!("dtype not a string"))?,
+    )?;
+    Ok(IoSpec { name, shape, dtype })
+}
+
+fn parse_artifact(a: &Json) -> Result<Artifact> {
+    let name = a.req("name").map_err(|e| anyhow!("{e}"))?
+        .as_str().unwrap_or_default().to_string();
+    let file = a.req("file").map_err(|e| anyhow!("{e}"))?
+        .as_str().unwrap_or_default().to_string();
+    let kind = a.req("kind").map_err(|e| anyhow!("{e}"))?
+        .as_str().unwrap_or_default().to_string();
+    let inputs = a.req("inputs").map_err(|e| anyhow!("{e}"))?
+        .as_arr().ok_or_else(|| anyhow!("inputs not array"))?
+        .iter().map(parse_io).collect::<Result<Vec<_>>>()?;
+    let outputs = a.req("outputs").map_err(|e| anyhow!("{e}"))?
+        .as_arr().ok_or_else(|| anyhow!("outputs not array"))?
+        .iter().map(parse_io).collect::<Result<Vec<_>>>()?;
+    let meta = a.get("meta").and_then(Json::as_obj).cloned().unwrap_or_default();
+    Ok(Artifact { name, file, kind, inputs, outputs, meta })
+}
+
+fn parse_lm(lm: &Json) -> Result<LmSpec> {
+    let batch = lm.req("batch").map_err(|e| anyhow!("{e}"))?
+        .as_usize().ok_or_else(|| anyhow!("lm.batch"))?;
+    let params = lm.req("params").map_err(|e| anyhow!("{e}"))?
+        .as_arr().ok_or_else(|| anyhow!("lm.params"))?
+        .iter()
+        .map(|p| {
+            Ok(LmParam {
+                name: p.req("name").map_err(|e| anyhow!("{e}"))?
+                    .as_str().unwrap_or_default().to_string(),
+                shape: p.req("shape").map_err(|e| anyhow!("{e}"))?
+                    .as_arr().ok_or_else(|| anyhow!("shape"))?
+                    .iter().map(|d| d.as_usize().unwrap_or(0)).collect(),
+                init_scale: p.req("init_scale").map_err(|e| anyhow!("{e}"))?
+                    .as_f64().unwrap_or(0.02) as f32,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let config = lm.req("config").map_err(|e| anyhow!("{e}"))?
+        .as_obj().cloned().unwrap_or_default();
+    Ok(LmSpec { batch, params, config })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {"name": "f", "file": "f.hlo.txt", "kind": "layer_fwd",
+         "inputs": [{"name": "x", "shape": [4, 2], "dtype": "f32"}],
+         "outputs": [{"name": "y", "shape": [4], "dtype": "s32"}],
+         "meta": {"experts": 8, "impl": "moeblaze"}}
+      ],
+      "lm": {"batch": 2,
+             "params": [{"name": "embed", "shape": [16, 4], "init_scale": 0.02}],
+             "config": {"seq_len": 8, "vocab": 16}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("moeblaze_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("f").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4, 2]);
+        assert_eq!(a.outputs[0].dtype, Dtype::I32);
+        assert_eq!(a.meta_usize("experts"), Some(8));
+        assert_eq!(a.meta_str("impl"), Some("moeblaze"));
+        let lm = m.lm.as_ref().unwrap();
+        assert_eq!(lm.batch, 2);
+        assert_eq!(lm.seq_len(), 8);
+        assert_eq!(lm.num_params(), 64);
+        assert!(m.get("missing").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_manifest_is_friendly() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,132 @@
+//! PJRT client wrapper: HLO text → compiled executable → typed execution.
+//!
+//! Follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. Compiled
+//! executables are cached per artifact so each is compiled exactly once
+//! per process.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{Artifact, Manifest};
+use super::host::HostTensor;
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    pub name: String,
+    pub inputs: Vec<super::artifact::IoSpec>,
+    pub outputs: Vec<super::artifact::IoSpec>,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_ms: f64,
+}
+
+impl Executable {
+    /// Execute with host tensors; validates shapes/dtypes against the
+    /// manifest and returns decoded host tensors (one per output).
+    pub fn run(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if args.len() != self.inputs.len() {
+            bail!(
+                "`{}` expects {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                args.len()
+            );
+        }
+        for (a, spec) in args.iter().zip(&self.inputs) {
+            a.check_spec(spec)
+                .with_context(|| format!("artifact `{}`", self.name))?;
+        }
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.outputs.len() {
+            bail!(
+                "`{}` returned {} outputs, manifest says {}",
+                self.name,
+                parts.len(),
+                self.outputs.len()
+            );
+        }
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Raw buffer-level execution for step loops that keep state on
+    /// device: feeds the previous step's output buffers straight back in.
+    pub fn run_buffers(&self, args: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = self.exe.execute_b::<xla::PjRtBuffer>(args)?;
+        Ok(out.swap_remove(0))
+    }
+}
+
+/// The PJRT runtime: client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let art = self.manifest.get(name)?.clone();
+        let exe = Rc::new(self.compile_artifact(&art)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn compile_artifact(&self, art: &Artifact) -> Result<Executable> {
+        let path = self.manifest.hlo_path(art);
+        let t0 = Instant::now();
+        // HLO *text*: the 64-bit-id proto workaround (DESIGN.md §9).
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of `{}`", art.name))?;
+        Ok(Executable {
+            name: art.name.clone(),
+            inputs: art.inputs.clone(),
+            outputs: art.outputs.clone(),
+            exe,
+            compile_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Copy a host tensor to device (for `run_buffers` step loops).
+    pub fn to_device(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let lit = t.to_literal()?;
+        Ok(self.client.buffer_from_host_literal(None, &lit)?)
+    }
+}
+
+// Note: no #[cfg(test)] here — runtime tests live in rust/tests/ because
+// they need built artifacts (integration scope).

@@ -1,0 +1,165 @@
+//! Host-side tensors: typed buffers + shape, convertible to/from
+//! `xla::Literal`.
+
+use anyhow::{bail, Result};
+
+use super::artifact::{Dtype, IoSpec};
+
+/// Scalar input value.
+#[derive(Debug, Clone, Copy)]
+pub enum Scalar {
+    F32(f32),
+    I32(i32),
+}
+
+/// A host tensor (row-major) with manifest-compatible dtype.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(HostTensor::F32 { shape, data })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(HostTensor::I32 { shape, data })
+    }
+
+    pub fn scalar(s: Scalar) -> HostTensor {
+        match s {
+            Scalar::F32(v) => HostTensor::F32 { shape: vec![], data: vec![v] },
+            Scalar::I32(v) => HostTensor::I32 { shape: vec![], data: vec![v] },
+        }
+    }
+
+    pub fn zeros_like_spec(spec: &IoSpec) -> HostTensor {
+        match spec.dtype {
+            Dtype::F32 => HostTensor::F32 {
+                shape: spec.shape.clone(),
+                data: vec![0.0; spec.elements()],
+            },
+            Dtype::I32 => HostTensor::I32 {
+                shape: spec.shape.clone(),
+                data: vec![0; spec.elements()],
+            },
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32 { .. } => Dtype::F32,
+            HostTensor::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// Validate against a manifest IoSpec (shape + dtype).
+    pub fn check_spec(&self, spec: &IoSpec) -> Result<()> {
+        if self.shape() != spec.shape.as_slice() {
+            bail!(
+                "input `{}`: shape {:?} != manifest {:?}",
+                spec.name,
+                self.shape(),
+                spec.shape
+            );
+        }
+        if self.dtype() != spec.dtype {
+            bail!("input `{}`: dtype mismatch", spec.name);
+        }
+        Ok(())
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn spec_check() {
+        let spec = IoSpec { name: "x".into(), shape: vec![2, 2], dtype: Dtype::F32 };
+        let good = HostTensor::f32(vec![2, 2], vec![0.0; 4]).unwrap();
+        let bad_shape = HostTensor::f32(vec![4], vec![0.0; 4]).unwrap();
+        let bad_type = HostTensor::i32(vec![2, 2], vec![0; 4]).unwrap();
+        assert!(good.check_spec(&spec).is_ok());
+        assert!(bad_shape.check_spec(&spec).is_err());
+        assert!(bad_type.check_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn zeros_like() {
+        let spec = IoSpec { name: "x".into(), shape: vec![3, 4], dtype: Dtype::I32 };
+        let t = HostTensor::zeros_like_spec(&spec);
+        assert_eq!(t.elements(), 12);
+        assert_eq!(t.dtype(), Dtype::I32);
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! request path. Python never runs here.
+
+pub mod artifact;
+pub mod client;
+pub mod host;
+pub mod validate;
+
+pub use artifact::{Artifact, IoSpec, Manifest};
+pub use client::{Executable, Runtime};
+pub use host::{HostTensor, Scalar};

@@ -1,0 +1,151 @@
+//! Artifact validation: structural checks of HLO text against the
+//! manifest *before* compilation.
+//!
+//! XLA prunes unused parameters at lowering time, so a manifest that says
+//! "6 inputs" can silently disagree with an HLO that takes 5 — producing
+//! the runtime error "supplied 6 buffers but compiled program expected 5"
+//! long after build. `validate_artifact` catches this (and shape drift)
+//! at load time with a parse of the ENTRY computation's parameter list.
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{Artifact, Dtype, Manifest};
+
+/// A parameter parsed from HLO text: (index, dtype tag, dims).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HloParam {
+    pub index: usize,
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+/// Extract the ENTRY computation's parameters from HLO text.
+///
+/// Matches lines like:
+///   `  %Arg_3.4 = f32[512,64]{1,0} parameter(3)` — or without `%`/layout.
+pub fn parse_entry_params(hlo: &str) -> Vec<HloParam> {
+    let mut params = Vec::new();
+    let mut in_entry = false;
+    for line in hlo.lines() {
+        let t = line.trim_start();
+        if t.starts_with("ENTRY ") {
+            in_entry = true;
+            continue;
+        }
+        if in_entry && t.starts_with('}') {
+            break;
+        }
+        if !in_entry {
+            continue;
+        }
+        let Some(pos) = t.find(" parameter(") else { continue };
+        let after = &t[pos + " parameter(".len()..];
+        let Some(close) = after.find(')') else { continue };
+        let Ok(index) = after[..close].parse::<usize>() else { continue };
+        // type is the token after `= `, e.g. `f32[512,64]{1,0}`
+        let Some(eq) = t.find("= ") else { continue };
+        let ty = t[eq + 2..].split_whitespace().next().unwrap_or("");
+        let (dtype, dims) = split_type(ty);
+        params.push(HloParam { index, dtype, dims });
+    }
+    params.sort_by_key(|p| p.index);
+    params
+}
+
+fn split_type(ty: &str) -> (String, Vec<usize>) {
+    let Some(open) = ty.find('[') else {
+        return (ty.to_string(), vec![]);
+    };
+    let dtype = ty[..open].to_string();
+    let rest = &ty[open + 1..];
+    let close = rest.find(']').unwrap_or(rest.len());
+    let dims = rest[..close]
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    (dtype, dims)
+}
+
+fn dtype_tag(d: Dtype) -> &'static str {
+    match d {
+        Dtype::F32 => "f32",
+        Dtype::I32 => "s32",
+    }
+}
+
+/// Check one artifact's HLO against its manifest entry.
+pub fn validate_artifact(manifest: &Manifest, art: &Artifact) -> Result<()> {
+    let path = manifest.hlo_path(art);
+    let hlo = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?}"))?;
+    let params = parse_entry_params(&hlo);
+    if params.len() != art.inputs.len() {
+        bail!(
+            "`{}`: manifest declares {} inputs but HLO ENTRY takes {} parameters \
+             (XLA pruned an unused input? re-run `make artifacts`)",
+            art.name,
+            art.inputs.len(),
+            params.len()
+        );
+    }
+    for (p, spec) in params.iter().zip(&art.inputs) {
+        if p.dtype != dtype_tag(spec.dtype) {
+            bail!("`{}` param {}: HLO dtype {} != manifest {}", art.name,
+                  p.index, p.dtype, dtype_tag(spec.dtype));
+        }
+        if p.dims != spec.shape {
+            bail!("`{}` param {} (`{}`): HLO shape {:?} != manifest {:?}",
+                  art.name, p.index, spec.name, p.dims, spec.shape);
+        }
+    }
+    Ok(())
+}
+
+/// Validate every artifact in the manifest; returns the number checked.
+pub fn validate_all(manifest: &Manifest) -> Result<usize> {
+    let mut n = 0;
+    for art in manifest.artifacts.values() {
+        validate_artifact(manifest, art)?;
+        n += 1;
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HLO: &str = r#"
+HloModule xla_computation
+
+some_helper {
+  p = f32[4]{0} parameter(0)
+  ROOT r = f32[4]{0} add(p, p)
+}
+
+ENTRY main.42 {
+  %Arg_0.1 = f32[512,64]{1,0} parameter(0)
+  Arg_1.2 = s32[8,2]{1,0} parameter(1)
+  scalar.3 = f32[] parameter(2)
+  ROOT %tuple.9 = (f32[512,64]{1,0}) tuple(%Arg_0.1)
+}
+"#;
+
+    #[test]
+    fn parses_entry_params_only() {
+        let ps = parse_entry_params(HLO);
+        assert_eq!(ps.len(), 3);
+        assert_eq!(ps[0], HloParam { index: 0, dtype: "f32".into(),
+                                     dims: vec![512, 64] });
+        assert_eq!(ps[1].dtype, "s32");
+        assert_eq!(ps[1].dims, vec![8, 2]);
+        assert_eq!(ps[2].dims, Vec::<usize>::new()); // scalar
+    }
+
+    #[test]
+    fn type_splitting() {
+        assert_eq!(split_type("f32[1,2]{1,0}"), ("f32".into(), vec![1, 2]));
+        assert_eq!(split_type("pred[]"), ("pred".into(), vec![]));
+    }
+}

@@ -1,0 +1,88 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over N generated cases with seed reporting and
+//! greedy input shrinking: on failure, the case generator is re-invoked
+//! with progressively smaller `size` hints to find a smaller witness.
+
+use crate::util::prng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE, max_shrink: 12 }
+    }
+}
+
+/// Run `prop(case)` for `cfg.cases` random cases produced by
+/// `gen(rng, size)`. `size` ramps up 1 → 100 over the run so early cases
+/// are small. Panics with the seed, case index, and the (shrunk) witness
+/// debug string on failure.
+pub fn check<T, G, P>(cfg: Config, name: &str, mut gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng, usize) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case_idx in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case_idx as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 1 + (100 * case_idx) / cfg.cases.max(1);
+        let mut rng = Rng::new(case_seed);
+        let case = gen(&mut rng, size);
+        if let Err(msg) = prop(&case) {
+            // greedy shrink: try smaller sizes with the same seed
+            let mut witness = format!("{case:?}");
+            let mut wmsg = msg;
+            let mut wsize = size;
+            for s in (1..size).rev().take(cfg.max_shrink) {
+                let mut rng = Rng::new(case_seed);
+                let smaller = gen(&mut rng, s);
+                if let Err(m2) = prop(&smaller) {
+                    witness = format!("{smaller:?}");
+                    wmsg = m2;
+                    wsize = s;
+                }
+            }
+            panic!(
+                "property `{name}` failed (case {case_idx}, seed {case_seed:#x}, \
+                 size {wsize}): {wmsg}\nwitness: {witness}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_always_true() {
+        check(Config { cases: 16, ..Default::default() }, "trivial",
+              |rng, size| rng.usize_below(size.max(1)),
+              |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn reports_failure_with_seed() {
+        check(Config { cases: 8, ..Default::default() }, "fails",
+              |rng, size| rng.usize_below(size.max(1)),
+              |&v| if v < 1000 { Err(format!("v = {v}")) } else { Ok(()) });
+    }
+
+    #[test]
+    fn shrinks_to_smaller_witness() {
+        let caught = std::panic::catch_unwind(|| {
+            check(Config { cases: 4, seed: 9, max_shrink: 50 }, "shrinky",
+                  |_rng, size| size,
+                  |&v| if v > 0 { Err("always".into()) } else { Ok(()) });
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        // with full shrinking the witness should reach size 1
+        assert!(msg.contains("size 1"), "{msg}");
+    }
+}

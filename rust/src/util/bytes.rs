@@ -1,0 +1,99 @@
+//! Little-endian byte codecs for the checkpoint format and host buffers.
+
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>, String> {
+    if b.len() % 4 != 0 {
+        return Err(format!("byte length {} not a multiple of 4", b.len()));
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn i32s_to_bytes(xs: &[i32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_i32s(b: &[u8]) -> Result<Vec<i32>, String> {
+    if b.len() % 4 != 0 {
+        return Err(format!("byte length {} not a multiple of 4", b.len()));
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn write_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn read_u64(b: &[u8], pos: &mut usize) -> Result<u64, String> {
+    if *pos + 8 > b.len() {
+        return Err("truncated u64".into());
+    }
+    let v = u64::from_le_bytes(b[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(v)
+}
+
+pub fn write_str(out: &mut Vec<u8>, s: &str) {
+    write_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+pub fn read_str(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    let len = read_u64(b, pos)? as usize;
+    if *pos + len > b.len() {
+        return Err("truncated string".into());
+    }
+    let s = std::str::from_utf8(&b[*pos..*pos + len])
+        .map_err(|e| e.to_string())?
+        .to_string();
+    *pos += len;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let xs = vec![0.0f32, -1.5, f32::MAX, f32::MIN_POSITIVE, 3.14159];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&xs)).unwrap(), xs);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let xs = vec![0i32, -1, i32::MAX, i32::MIN];
+        assert_eq!(bytes_to_i32s(&i32s_to_bytes(&xs)).unwrap(), xs);
+    }
+
+    #[test]
+    fn str_roundtrip() {
+        let mut buf = Vec::new();
+        write_str(&mut buf, "héllo");
+        write_u64(&mut buf, 42);
+        let mut pos = 0;
+        assert_eq!(read_str(&buf, &mut pos).unwrap(), "héllo");
+        assert_eq!(read_u64(&buf, &mut pos).unwrap(), 42);
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
+        let mut pos = 0;
+        assert!(read_u64(&[0; 4], &mut pos).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Hand-rolled substrates.
+//!
+//! This image has no network access and only the `xla` crate's dependency
+//! closure vendored, so every support library a framework normally pulls
+//! from crates.io is implemented here from scratch (DESIGN.md §3):
+//! JSON, PRNG, thread pool, statistics, CLI parsing, tables, byte codecs.
+
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

@@ -1,0 +1,155 @@
+//! Criterion-style measurement statistics (criterion is unavailable offline).
+//!
+//! [`Bench`] runs warmup + timed samples of a closure and produces a
+//! [`Summary`] (mean/median/stddev/percentiles/throughput). The custom
+//! `harness = false` benches under `rust/benches/` are built on this.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Summary {
+    pub fn from_ns(mut ns: Vec<f64>) -> Summary {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / (n.max(2) - 1) as f64;
+        Summary {
+            samples: n,
+            mean_ns: mean,
+            median_ns: percentile(&ns, 50.0),
+            stddev_ns: var.sqrt(),
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+            p95_ns: percentile(&ns, 95.0),
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+
+    /// items/second at the mean time.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.mean_ns / 1e9)
+    }
+
+    pub fn format_brief(&self) -> String {
+        format!(
+            "{:9.3} ms  ±{:7.3} (median {:9.3}, n={})",
+            self.mean_ms(),
+            self.stddev_ns / 1e6,
+            self.median_ms(),
+            self.samples
+        )
+    }
+}
+
+/// Interpolated percentile over a sorted slice.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// A single benchmark runner with warmup and a sample/time budget.
+pub struct Bench {
+    pub warmup: usize,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    pub max_total: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: 2,
+            min_samples: 5,
+            max_samples: 30,
+            max_total: Duration::from_secs(20),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup: 1, min_samples: 3, max_samples: 10,
+                max_total: Duration::from_secs(8) }
+    }
+
+    /// Run `f` repeatedly; each call should perform one full operation.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Summary {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let start = Instant::now();
+        let mut ns = Vec::with_capacity(self.max_samples);
+        while ns.len() < self.max_samples
+            && (ns.len() < self.min_samples || start.elapsed() < self.max_total)
+        {
+            let t = Instant::now();
+            f();
+            ns.push(t.elapsed().as_nanos() as f64);
+        }
+        Summary::from_ns(ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_stats() {
+        let s = Summary::from_ns(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean_ns, 3.0);
+        assert_eq!(s.median_ns, 3.0);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 5.0);
+        assert!((s.stddev_ns - 1.5811388).abs() < 1e-5);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = vec![0.0, 10.0];
+        assert_eq!(percentile(&v, 50.0), 5.0);
+        assert_eq!(percentile(&v, 95.0), 9.5);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut count = 0;
+        let s = Bench { warmup: 1, min_samples: 3, max_samples: 5,
+                        max_total: Duration::from_secs(1) }
+            .run(|| count += 1);
+        assert!(s.samples >= 3);
+        assert!(count >= 4); // warmup + samples
+        assert!(s.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn throughput() {
+        let s = Summary::from_ns(vec![1e9]); // 1 second
+        assert!((s.throughput(100.0) - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,123 @@
+//! Scoped worker pool — the CPU analogue of the paper's CTA grid.
+//!
+//! The dispatch builder (paper §4.2) launches "one CTA per expert column"
+//! and "a warp per token tile". [`scope_chunks`] reproduces that execution
+//! shape with std threads: a work list is split into disjoint tiles, each
+//! processed by a worker with *no shared mutable state* (atomic-free, like
+//! the paper's kernels). rayon is unavailable offline (DESIGN.md §3).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of workers to use: respects `MOEBLAZE_THREADS`, defaults to the
+/// available parallelism (1 on this image's single-core runner).
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("MOEBLAZE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(tile_index, chunk)` over disjoint mutable chunks of `data`, in
+/// parallel across `workers` threads. Chunks are `chunk` elements each
+/// (last one ragged). Contention-free by construction: each chunk has
+/// exactly one writer, mirroring the paper's "each (i, e) pair is written
+/// at most once" argument.
+pub fn scope_chunks<T: Send, F>(data: &mut [T], chunk: usize, workers: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0);
+    if workers <= 1 || data.len() <= chunk {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
+    // hand ownership of each chunk to exactly one worker via a shared queue
+    let slots: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
+        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= slots.len() {
+                    break;
+                }
+                if let Some((idx, chunk)) = slots[i].lock().unwrap().take() {
+                    f(idx, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over indices 0..n producing a Vec<R> (one result per
+/// index, order preserved). Used for per-expert ("per-CTA") work.
+pub fn par_map<R: Send, F>(n: usize, workers: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    let cells: Vec<std::sync::Mutex<&mut Option<R>>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(n) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                **cells[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything() {
+        let mut v = vec![0u32; 1000];
+        scope_chunks(&mut v, 64, 4, |i, c| {
+            for (j, x) in c.iter_mut().enumerate() {
+                *x = (i * 64 + j) as u32;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i as u32);
+        }
+    }
+
+    #[test]
+    fn chunks_serial_fallback() {
+        let mut v = vec![1u32; 10];
+        scope_chunks(&mut v, 4, 1, |_, c| c.iter_mut().for_each(|x| *x += 1));
+        assert!(v.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn par_map_order_preserved() {
+        let r = par_map(100, 4, |i| i * i);
+        for (i, v) in r.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        assert_eq!(par_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map(1, 4, |i| i + 7), vec![7]);
+    }
+}

@@ -1,0 +1,61 @@
+//! The Rust Table-1 presets must match what the Python side exported into
+//! the manifest (the two sides are maintained in parallel by hand).
+
+use moeblaze::config::paper::{paper_configs, scaled_configs, SCALED_BLOCK};
+use moeblaze::runtime::artifact::Manifest;
+use moeblaze::util::json::Json;
+
+fn manifest() -> Option<Manifest> {
+    let dir = moeblaze::artifacts_dir();
+    Manifest::load(&dir).ok()
+}
+
+fn check_list(json_key: &str, rust: Vec<moeblaze::config::paper::PaperConfig>) {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let raw = std::fs::read_to_string(m.dir.join("manifest.json")).unwrap();
+    let j = Json::parse(&raw).unwrap();
+    let arr = j.get(json_key).and_then(Json::as_arr).expect(json_key);
+    assert_eq!(arr.len(), rust.len());
+    for (a, r) in arr.iter().zip(&rust) {
+        assert_eq!(a.get("name").unwrap().as_str().unwrap(), r.name);
+        assert_eq!(a.get("input_d").unwrap().as_usize().unwrap(), r.input_d);
+        assert_eq!(a.get("num_experts").unwrap().as_usize().unwrap(), r.num_experts);
+        assert_eq!(a.get("top_k").unwrap().as_usize().unwrap(), r.top_k);
+        assert_eq!(a.get("batch").unwrap().as_usize().unwrap(), r.batch);
+        assert_eq!(a.get("seq_len").unwrap().as_usize().unwrap(), r.seq_len);
+    }
+}
+
+#[test]
+fn paper_configs_match_manifest() {
+    check_list("configs_paper", paper_configs());
+}
+
+#[test]
+fn scaled_configs_match_manifest() {
+    check_list("configs_scaled", scaled_configs());
+}
+
+#[test]
+fn block_size_matches() {
+    let Some(m) = manifest() else { return };
+    let raw = std::fs::read_to_string(m.dir.join("manifest.json")).unwrap();
+    let j = Json::parse(&raw).unwrap();
+    assert_eq!(j.get("scaled_block").unwrap().as_usize().unwrap(), SCALED_BLOCK);
+}
+
+#[test]
+fn every_layer_step_artifact_present() {
+    let Some(m) = manifest() else { return };
+    for c in scaled_configs() {
+        for act in ["silu", "swiglu"] {
+            for imp in ["moeblaze", "baseline"] {
+                let name = format!("layer_step_{}_{}_{}", c.name, act, imp);
+                assert!(m.get(&name).is_ok(), "{name} missing");
+            }
+        }
+    }
+}

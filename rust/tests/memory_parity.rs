@@ -1,0 +1,41 @@
+//! Cross-language memory-model parity: the Rust analytic model must
+//! produce byte-identical numbers to the Python model (whose numbers are
+//! themselves pinned to the real custom_vjp residual pytrees by pytest).
+//! The Python numbers travel through `manifest.json: memory_fixture`.
+
+use moeblaze::config::model::Activation;
+use moeblaze::config::paper::{paper_configs, PAPER_BLOCK};
+use moeblaze::memory::model::{baseline_bytes, moeblaze_bytes, AccountingMode};
+use moeblaze::util::json::Json;
+
+#[test]
+fn rust_model_matches_python_fixture() {
+    let dir = moeblaze::artifacts_dir();
+    let Ok(raw) = std::fs::read_to_string(dir.join("manifest.json")) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let j = Json::parse(&raw).unwrap();
+    let Some(fixture) = j.get("memory_fixture").and_then(Json::as_arr) else {
+        eprintln!("skipping: manifest has no memory_fixture (rebuild artifacts)");
+        return;
+    };
+    assert_eq!(fixture.len(), 7 * 2 * 2);
+    let mut checked = 0;
+    for row in fixture {
+        let name = row.get("config").unwrap().as_str().unwrap();
+        let act = Activation::parse(row.get("activation").unwrap().as_str().unwrap()).unwrap();
+        let imp = row.get("impl").unwrap().as_str().unwrap();
+        let expected = row.get("total_bytes").unwrap().as_i64().unwrap() as u64;
+        let cfg = paper_configs().into_iter().find(|c| c.name == name).unwrap()
+            .moe(act, PAPER_BLOCK);
+        let got = match imp {
+            "moeblaze" => moeblaze_bytes(&cfg, 2, false).total(),
+            "baseline" => baseline_bytes(&cfg, 2, AccountingMode::PaperBaseline).total(),
+            _ => panic!("{imp}"),
+        };
+        assert_eq!(got, expected, "{name}/{act}/{imp}");
+        checked += 1;
+    }
+    assert_eq!(checked, 28);
+}
