@@ -1,0 +1,192 @@
+//! Expert-parallel configuration (`[ep]` TOML section, CLI-overridable).
+//!
+//! Drives the rank-sharded execution engine: how many simulated ranks,
+//! how experts are placed on them, and the shape of the host-side expert
+//! workload the engine runs (`coordinator::engine`).
+
+use std::fmt;
+
+use super::toml::Toml;
+
+/// Expert→rank placement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Rank r owns the block [r·E/R, (r+1)·E/R) — MegaBlocks/DeepSpeed
+    /// default, best for expert-locality.
+    Contiguous,
+    /// Round-robin (e mod R) — spreads the hot low-id experts of a
+    /// skewed router across ranks.
+    Strided,
+}
+
+impl Placement {
+    pub fn parse(s: &str) -> Result<Placement, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "contiguous" | "block" => Ok(Placement::Contiguous),
+            "strided" | "round-robin" | "round_robin" => Ok(Placement::Strided),
+            _ => Err(format!("unknown placement `{s}` (contiguous|strided)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Placement::Contiguous => "contiguous",
+            Placement::Strided => "strided",
+        }
+    }
+}
+
+impl fmt::Display for Placement {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Configuration of one expert-parallel engine run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpConfig {
+    /// simulated ranks R (each backed by one worker thread)
+    pub ranks: usize,
+    pub placement: Placement,
+    /// routed tokens per step L
+    pub tokens: usize,
+    /// experts E (must be divisible by ranks)
+    pub num_experts: usize,
+    /// experts per token k
+    pub top_k: usize,
+    /// model dimension d of the exchanged activation rows
+    pub d_model: usize,
+    /// expert FFN hidden dimension h
+    pub d_hidden: usize,
+    /// router skew for the synthetic gating (0 = balanced)
+    pub skew: f64,
+    pub seed: u64,
+    /// ep-train: optimizer steps and SGD learning rate
+    pub steps: usize,
+    pub lr: f64,
+    /// metrics output (JSONL); empty = stdout only
+    pub metrics_path: String,
+}
+
+impl Default for EpConfig {
+    fn default() -> Self {
+        EpConfig {
+            ranks: 4,
+            placement: Placement::Contiguous,
+            tokens: 1024,
+            num_experts: 16,
+            top_k: 2,
+            d_model: 64,
+            d_hidden: 128,
+            skew: 0.7,
+            seed: 1,
+            steps: 20,
+            lr: 5e-2,
+            metrics_path: String::new(),
+        }
+    }
+}
+
+impl EpConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.ranks == 0 {
+            return Err("ep.ranks must be > 0".into());
+        }
+        if self.num_experts == 0 || self.num_experts % self.ranks != 0 {
+            return Err(format!(
+                "ep.num_experts {} must be a positive multiple of ranks {}",
+                self.num_experts, self.ranks
+            ));
+        }
+        if self.top_k == 0 || self.top_k > self.num_experts {
+            return Err(format!(
+                "ep.top_k {} must be in 1..={}",
+                self.top_k, self.num_experts
+            ));
+        }
+        if self.tokens == 0 || self.d_model == 0 || self.d_hidden == 0 {
+            return Err("ep dimensions must be positive".into());
+        }
+        if self.steps == 0 {
+            return Err("ep.steps must be > 0".into());
+        }
+        if !(self.lr > 0.0 && self.lr.is_finite()) {
+            return Err(format!("ep.lr must be positive, got {}", self.lr));
+        }
+        if !(self.skew >= 0.0 && self.skew.is_finite()) {
+            return Err(format!("ep.skew must be >= 0, got {}", self.skew));
+        }
+        Ok(())
+    }
+
+    pub fn from_toml(t: &Toml, prefix: &str) -> Result<EpConfig, String> {
+        let d = EpConfig::default();
+        let key = |k: &str| format!("{prefix}.{k}");
+        let cfg = EpConfig {
+            ranks: t.usize_or(&key("ranks"), d.ranks),
+            placement: Placement::parse(
+                &t.str_or(&key("placement"), d.placement.name()),
+            )?,
+            tokens: t.usize_or(&key("tokens"), d.tokens),
+            num_experts: t.usize_or(&key("num_experts"), d.num_experts),
+            top_k: t.usize_or(&key("top_k"), d.top_k),
+            d_model: t.usize_or(&key("d_model"), d.d_model),
+            d_hidden: t.usize_or(&key("d_hidden"), d.d_hidden),
+            skew: t.f64_or(&key("skew"), d.skew),
+            seed: t.usize_or(&key("seed"), d.seed as usize) as u64,
+            steps: t.usize_or(&key("steps"), d.steps),
+            lr: t.f64_or(&key("lr"), d.lr),
+            metrics_path: t.str_or(&key("metrics_path"), &d.metrics_path),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// n = L·k routed slots.
+    pub fn slots(&self) -> usize {
+        self.tokens * self.top_k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_parse() {
+        assert_eq!(Placement::parse("Contiguous").unwrap(), Placement::Contiguous);
+        assert_eq!(Placement::parse("round-robin").unwrap(), Placement::Strided);
+        assert!(Placement::parse("diagonal").is_err());
+    }
+
+    #[test]
+    fn validation() {
+        assert!(EpConfig::default().validate().is_ok());
+        assert!(EpConfig { ranks: 0, ..Default::default() }.validate().is_err());
+        assert!(EpConfig { num_experts: 10, ranks: 4, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(EpConfig { top_k: 99, ..Default::default() }.validate().is_err());
+        assert!(EpConfig { lr: 0.0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let t = Toml::parse(
+            "[ep]\nranks = 8\nnum_experts = 32\nplacement = \"strided\"\nskew = 1.5",
+        )
+        .unwrap();
+        let c = EpConfig::from_toml(&t, "ep").unwrap();
+        assert_eq!(c.ranks, 8);
+        assert_eq!(c.num_experts, 32);
+        assert_eq!(c.placement, Placement::Strided);
+        assert_eq!(c.skew, 1.5);
+        assert_eq!(c.top_k, EpConfig::default().top_k);
+    }
+
+    #[test]
+    fn from_toml_rejects_invalid() {
+        let t = Toml::parse("[ep]\nranks = 3\nnum_experts = 16").unwrap();
+        assert!(EpConfig::from_toml(&t, "ep").is_err());
+    }
+}

@@ -1,10 +1,12 @@
 //! Configuration system: TOML-subset parser + typed configs + paper presets.
 
+pub mod ep;
 pub mod model;
 pub mod paper;
 pub mod toml;
 pub mod train;
 
+pub use ep::{EpConfig, Placement};
 pub use model::{Activation, Impl, MoeConfig};
 pub use paper::{paper_configs, scaled_configs, PaperConfig, PAPER_BLOCK, SCALED_BLOCK};
 pub use train::TrainConfig;

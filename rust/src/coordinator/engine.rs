@@ -1,0 +1,908 @@
+//! Rank-sharded expert-parallel execution engine.
+//!
+//! [`ExecutionEngine`] abstracts "run one MoE layer step over routed
+//! activations" so the coordinator no longer assumes one rank and one
+//! executable:
+//!
+//! * [`SingleRankEngine`] — the existing single-rank path: all experts
+//!   local, gather → expert FFN → combine, no communication.
+//! * [`ShardedEngine`] — R simulated ranks, each driven by one worker
+//!   thread of the hand-rolled pool. Every step it (i) slices the
+//!   [`DispatchStructures`] into per-rank views (`dispatch::shard`),
+//!   (ii) executes the dispatch all-to-all with *real* buffer packing
+//!   and unpacking so exchanged bytes are measured rather than
+//!   estimated, (iii) runs per-rank expert compute and the combine
+//!   scatter, and (iv) mirrors the exchange for routed gradients in
+//!   `backward_update`.
+//!
+//! Both engines are bit-deterministic: identical inputs give bitwise
+//! identical outputs and parameter updates for any R and any placement,
+//! because per-row expert math is order-free and every accumulation
+//! (combine over k, gradients over a segment) runs in the same fixed
+//! order. `rust/tests/ep_engine.rs` pins this, and pins the measured
+//! dispatch traffic to [`AllToAllPlan::cross_rank_bytes`] — the planner
+//! in `expert_parallel` is this engine's dry-run mode.
+//!
+//! [`AllToAllPlan::cross_rank_bytes`]: super::expert_parallel::AllToAllPlan::cross_rank_bytes
+
+use crate::config::ep::EpConfig;
+use crate::dispatch::gating::synthetic_gating;
+use crate::dispatch::parallel_build::parallel_build;
+use crate::dispatch::shard::{shard, RankShard};
+use crate::dispatch::structures::DispatchStructures;
+use crate::memory::model::MemoryBreakdown;
+use crate::util::prng::Rng;
+use crate::util::threadpool::par_map;
+
+use super::expert_parallel::EpTopology;
+use super::params::{ExpertParams, ExpertStore, RankExperts};
+
+/// Bytes and rows moved by the last forward/backward pass, measured at
+/// the buffers (f32 rows, `4·d` bytes each).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Traffic {
+    /// dispatch all-to-all: routed activation rows crossing ranks (fwd)
+    pub dispatch_bytes: u64,
+    /// combine: expert-output rows returned to their home rank (fwd)
+    pub combine_bytes: u64,
+    /// routed gradient rows crossing ranks (bwd mirror of dispatch)
+    pub grad_bytes: u64,
+    /// routed rows that crossed a rank boundary in the fwd dispatch
+    pub cross_rows: u64,
+    /// routed rows that stayed on their home rank
+    pub local_rows: u64,
+}
+
+/// One MoE-layer step executor (forward + SGD backward on expert FFNs).
+pub trait ExecutionEngine {
+    fn name(&self) -> String;
+
+    fn ranks(&self) -> usize;
+
+    /// Combined (L, d) output for token activations `x` (L, d) routed by
+    /// `disp` with per-slot combine weights `gates` (L·k, token-major).
+    fn forward(&mut self, disp: &DispatchStructures, x: &[f32],
+               gates: &[f32]) -> Result<Vec<f32>, String>;
+
+    /// One SGD step on the expert parameters given `d_out` = ∂loss/∂out
+    /// (L, d) from the last forward. Activations are recomputed from the
+    /// cached routed inputs (the paper's Algorithm-1 policy: keep inputs,
+    /// recompute intermediates).
+    fn backward_update(&mut self, d_out: &[f32], lr: f32) -> Result<(), String>;
+
+    /// Communication measured since the last forward began.
+    fn traffic(&self) -> Traffic;
+
+    /// Per-rank activation-memory breakdown of the last forward
+    /// (`data` = activation rows, `index` = routing metadata, `extra` =
+    /// packed comm buffers) — the Figures 3/5 accounting, per rank.
+    fn memory_per_rank(&self) -> Vec<MemoryBreakdown>;
+
+    /// Reassembled global expert parameters (for equivalence checks and
+    /// checkpointing).
+    fn gather_params(&self) -> Result<ExpertStore, String>;
+}
+
+// -- shared per-row expert math ---------------------------------------------
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// y = W2·silu(W1·x + b1) + b2. Pure function of one row — bit-identical
+/// wherever (and on whatever thread) it runs.
+fn expert_forward(p: &ExpertParams, d: usize, h: usize, x: &[f32],
+                  y: &mut [f32], hidden: &mut [f32]) {
+    for i in 0..h {
+        let row = &p.w1[i * d..(i + 1) * d];
+        let mut acc = p.b1[i];
+        for j in 0..d {
+            acc += row[j] * x[j];
+        }
+        hidden[i] = silu(acc);
+    }
+    for i in 0..d {
+        let row = &p.w2[i * h..(i + 1) * h];
+        let mut acc = p.b2[i];
+        for j in 0..h {
+            acc += row[j] * hidden[j];
+        }
+        y[i] = acc;
+    }
+}
+
+/// Accumulate one row's parameter gradients, recomputing the hidden
+/// activations from `x` (they are not saved across the fwd/bwd boundary).
+fn expert_backward(p: &ExpertParams, g: &mut ExpertParams, d: usize, h: usize,
+                   x: &[f32], dy: &[f32], pre: &mut [f32], act: &mut [f32],
+                   dz: &mut [f32]) {
+    // recompute pre-activation and silu
+    for i in 0..h {
+        let row = &p.w1[i * d..(i + 1) * d];
+        let mut acc = p.b1[i];
+        for j in 0..d {
+            acc += row[j] * x[j];
+        }
+        pre[i] = acc;
+        act[i] = silu(acc);
+    }
+    // W2 / b2 grads and dz = W2ᵀ·dy
+    for j in 0..h {
+        dz[j] = 0.0;
+    }
+    for i in 0..d {
+        g.b2[i] += dy[i];
+        let grow = &mut g.w2[i * h..(i + 1) * h];
+        let wrow = &p.w2[i * h..(i + 1) * h];
+        for j in 0..h {
+            grow[j] += dy[i] * act[j];
+            dz[j] += dy[i] * wrow[j];
+        }
+    }
+    // through silu: silu'(a) = σ(a)·(1 + a·(1 − σ(a)))
+    for j in 0..h {
+        let sig = 1.0 / (1.0 + (-pre[j]).exp());
+        let da = dz[j] * sig * (1.0 + pre[j] * (1.0 - sig));
+        g.b1[j] += da;
+        let grow = &mut g.w1[j * d..(j + 1) * d];
+        for c in 0..d {
+            grow[c] += da * x[c];
+        }
+    }
+}
+
+fn sgd(p: &mut ExpertParams, g: &ExpertParams, lr: f32) {
+    for (w, gw) in p.w1.iter_mut().zip(&g.w1) {
+        *w -= lr * gw;
+    }
+    for (w, gw) in p.b1.iter_mut().zip(&g.b1) {
+        *w -= lr * gw;
+    }
+    for (w, gw) in p.w2.iter_mut().zip(&g.w2) {
+        *w -= lr * gw;
+    }
+    for (w, gw) in p.b2.iter_mut().zip(&g.b2) {
+        *w -= lr * gw;
+    }
+}
+
+fn check_shapes(disp: &DispatchStructures, x: &[f32], gates: &[f32],
+                d: usize, num_experts: usize) -> Result<(), String> {
+    if disp.num_experts != num_experts {
+        return Err(format!(
+            "dispatch has {} experts, engine owns {num_experts}",
+            disp.num_experts
+        ));
+    }
+    if x.len() != disp.num_tokens * d {
+        return Err(format!(
+            "x has {} elements, expected L·d = {}",
+            x.len(),
+            disp.num_tokens * d
+        ));
+    }
+    if gates.len() != disp.slots() {
+        return Err(format!(
+            "gates has {} elements, expected L·k = {}",
+            gates.len(),
+            disp.slots()
+        ));
+    }
+    Ok(())
+}
+
+// -- single-rank engine -----------------------------------------------------
+
+struct SingleState {
+    disp: DispatchStructures,
+    x: Vec<f32>,
+    gates: Vec<f32>,
+}
+
+/// All experts on one rank — the reference path the sharded engine is
+/// verified against bit-for-bit.
+pub struct SingleRankEngine {
+    pub store: ExpertStore,
+    state: Option<SingleState>,
+}
+
+impl SingleRankEngine {
+    pub fn new(store: ExpertStore) -> SingleRankEngine {
+        SingleRankEngine { store, state: None }
+    }
+}
+
+impl ExecutionEngine for SingleRankEngine {
+    fn name(&self) -> String {
+        "single-rank".into()
+    }
+
+    fn ranks(&self) -> usize {
+        1
+    }
+
+    fn forward(&mut self, disp: &DispatchStructures, x: &[f32],
+               gates: &[f32]) -> Result<Vec<f32>, String> {
+        let (d, h) = (self.store.d_model, self.store.d_hidden);
+        check_shapes(disp, x, gates, d, self.store.experts.len())?;
+        let (l, k, n) = (disp.num_tokens, disp.top_k, disp.slots());
+
+        // expert compute, expert-major
+        let mut ys = vec![0.0f32; n * d];
+        let mut hidden = vec![0.0f32; h];
+        for (e, p) in self.store.experts.iter().enumerate() {
+            let lo = disp.expert_token_offsets[e] as usize;
+            let hi = disp.expert_token_offsets[e + 1] as usize;
+            for pos in lo..hi {
+                let tok = disp.expert_token_indices[pos] as usize;
+                expert_forward(p, d, h, &x[tok * d..(tok + 1) * d],
+                               &mut ys[pos * d..(pos + 1) * d], &mut hidden);
+            }
+        }
+        // combine scatter, token-major, fixed j order
+        let mut out = vec![0.0f32; l * d];
+        for i in 0..l {
+            for j in 0..k {
+                let slot = i * k + j;
+                let g = gates[slot];
+                let pos = disp.token_index_map[slot] as usize;
+                let row = &ys[pos * d..(pos + 1) * d];
+                let o = &mut out[i * d..(i + 1) * d];
+                for c in 0..d {
+                    o[c] += g * row[c];
+                }
+            }
+        }
+        self.state = Some(SingleState {
+            disp: disp.clone(),
+            x: x.to_vec(),
+            gates: gates.to_vec(),
+        });
+        Ok(out)
+    }
+
+    fn backward_update(&mut self, d_out: &[f32], lr: f32) -> Result<(), String> {
+        let (d, h) = (self.store.d_model, self.store.d_hidden);
+        let st = self.state.as_ref().ok_or("backward_update before forward")?;
+        if d_out.len() != st.disp.num_tokens * d {
+            return Err(format!(
+                "d_out has {} elements, expected L·d = {}",
+                d_out.len(),
+                st.disp.num_tokens * d
+            ));
+        }
+        // origin slot per global position (for the per-slot gate)
+        let mut origin_of_pos = vec![0u32; st.disp.slots()];
+        for (slot, &pos) in st.disp.token_index_map.iter().enumerate() {
+            origin_of_pos[pos as usize] = slot as u32;
+        }
+        let mut pre = vec![0.0f32; h];
+        let mut act = vec![0.0f32; h];
+        let mut dz = vec![0.0f32; h];
+        let mut dy = vec![0.0f32; d];
+        for (e, p) in self.store.experts.iter_mut().enumerate() {
+            let mut g = ExpertParams::zeros(d, h);
+            let lo = st.disp.expert_token_offsets[e] as usize;
+            let hi = st.disp.expert_token_offsets[e + 1] as usize;
+            for pos in lo..hi {
+                let tok = st.disp.expert_token_indices[pos] as usize;
+                let gate = st.gates[origin_of_pos[pos] as usize];
+                for c in 0..d {
+                    dy[c] = gate * d_out[tok * d + c];
+                }
+                expert_backward(p, &mut g, d, h, &st.x[tok * d..(tok + 1) * d],
+                                &dy, &mut pre, &mut act, &mut dz);
+            }
+            sgd(p, &g, lr);
+        }
+        Ok(())
+    }
+
+    fn traffic(&self) -> Traffic {
+        let local = self
+            .state
+            .as_ref()
+            .map(|s| s.disp.slots() as u64)
+            .unwrap_or(0);
+        Traffic { local_rows: local, ..Traffic::default() }
+    }
+
+    fn memory_per_rank(&self) -> Vec<MemoryBreakdown> {
+        let Some(st) = self.state.as_ref() else {
+            return vec![MemoryBreakdown { data_bytes: 0, index_bytes: 0,
+                                          extra_bytes: 0 }];
+        };
+        let d = self.store.d_model as u64;
+        let n = st.disp.slots() as u64;
+        let l = st.disp.num_tokens as u64;
+        vec![MemoryBreakdown {
+            // routed rows (ys) + resident token activations + output
+            data_bytes: 4 * d * (n + 2 * l),
+            index_bytes: st.disp.metadata_bytes() as u64,
+            extra_bytes: 0,
+        }]
+    }
+
+    fn gather_params(&self) -> Result<ExpertStore, String> {
+        Ok(self.store.clone())
+    }
+}
+
+// -- sharded engine ---------------------------------------------------------
+
+/// One routed row's path through the exchange: destination-local slot,
+/// its global token, and its token-major origin slot.
+#[derive(Debug, Clone, Copy)]
+struct RouteHop {
+    local_slot: u32,
+    token: u32,
+    origin: u32,
+}
+
+struct ShardedState {
+    shards: Vec<RankShard>,
+    /// routes[dst][src]: hops served by `src`, in dst-local slot order
+    routes: Vec<Vec<Vec<RouteHop>>>,
+    /// per rank: routed input rows for its local slots (kept for bwd)
+    xs_local: Vec<Vec<f32>>,
+    gates: Vec<f32>,
+    num_tokens: usize,
+}
+
+/// R simulated ranks over the worker pool, real buffer packing, measured
+/// traffic.
+pub struct ShardedEngine {
+    pub topo: EpTopology,
+    pub rank_params: Vec<RankExperts>,
+    d_model: usize,
+    d_hidden: usize,
+    workers: usize,
+    state: Option<ShardedState>,
+    traffic: Traffic,
+    mem: Vec<MemoryBreakdown>,
+}
+
+impl ShardedEngine {
+    /// `workers` caps the threads driving ranks (one rank per worker at a
+    /// time; R > workers just queues ranks, changing nothing observable).
+    pub fn new(topo: EpTopology, store: &ExpertStore,
+               workers: usize) -> Result<ShardedEngine, String> {
+        if topo.num_experts != store.experts.len() {
+            return Err(format!(
+                "topology has {} experts, store has {}",
+                topo.num_experts,
+                store.experts.len()
+            ));
+        }
+        let rank_params = store.shard(&topo.assignment());
+        Ok(ShardedEngine {
+            topo,
+            rank_params,
+            d_model: store.d_model,
+            d_hidden: store.d_hidden,
+            workers: workers.max(1),
+            state: None,
+            traffic: Traffic::default(),
+            mem: Vec::new(),
+        })
+    }
+}
+
+impl ExecutionEngine for ShardedEngine {
+    fn name(&self) -> String {
+        format!("sharded-r{}-{}", self.topo.ranks, self.topo.placement)
+    }
+
+    fn ranks(&self) -> usize {
+        self.topo.ranks
+    }
+
+    fn forward(&mut self, disp: &DispatchStructures, x: &[f32],
+               gates: &[f32]) -> Result<Vec<f32>, String> {
+        let (d, h) = (self.d_model, self.d_hidden);
+        check_shapes(disp, x, gates, d, self.topo.num_experts)?;
+        let (l, k, r) = (disp.num_tokens, disp.top_k, self.topo.ranks);
+        let workers = self.workers.min(r);
+
+        // (i) slice the dispatch structures into per-rank views
+        let shards = shard(disp, &self.topo.assignment())?;
+
+        // routing table of the exchange: who sends which rows where
+        let mut routes: Vec<Vec<Vec<RouteHop>>> =
+            (0..r).map(|_| vec![Vec::new(); r]).collect();
+        let mut ret_lookup = vec![(0u32, 0u32); disp.slots()];
+        for (dst, s) in shards.iter().enumerate() {
+            for (local_slot, (&token, &origin)) in s
+                .expert_token_indices
+                .iter()
+                .zip(&s.origin_slots)
+                .enumerate()
+            {
+                let src = self.topo.rank_of_token(token as usize, l);
+                let hops = &mut routes[dst][src];
+                ret_lookup[origin as usize] = (dst as u32, hops.len() as u32);
+                hops.push(RouteHop { local_slot: local_slot as u32, token,
+                                     origin });
+            }
+        }
+        let mut tokens_of_rank: Vec<Vec<u32>> = vec![Vec::new(); r];
+        for t in 0..l {
+            tokens_of_rank[self.topo.rank_of_token(t, l)].push(t as u32);
+        }
+
+        // (ii) dispatch all-to-all: each source rank packs one buffer per
+        // destination from its resident token rows
+        let routes_ref = &routes;
+        let send: Vec<Vec<Vec<f32>>> = par_map(r, workers, |src| {
+            (0..r)
+                .map(|dst| {
+                    let hops = &routes_ref[dst][src];
+                    let mut buf = Vec::with_capacity(hops.len() * d);
+                    for hop in hops {
+                        let t = hop.token as usize;
+                        buf.extend_from_slice(&x[t * d..(t + 1) * d]);
+                    }
+                    buf
+                })
+                .collect()
+        });
+        let mut traffic = Traffic::default();
+        for src in 0..r {
+            for dst in 0..r {
+                let rows = routes[dst][src].len() as u64;
+                if src == dst {
+                    traffic.local_rows += rows;
+                } else {
+                    traffic.cross_rows += rows;
+                    traffic.dispatch_bytes += (send[src][dst].len() * 4) as u64;
+                }
+            }
+        }
+
+        // (iii) per-rank unpack, expert compute, and combine-buffer pack
+        let send_ref = &send;
+        let shards_ref = &shards;
+        let params_ref = &self.rank_params;
+        let computed: Vec<(Vec<f32>, Vec<Vec<f32>>)> =
+            par_map(r, workers, |dst| {
+                let s = &shards_ref[dst];
+                let n_local = s.local_slots();
+                let mut xs = vec![0.0f32; n_local * d];
+                for src in 0..r {
+                    for (i, hop) in routes_ref[dst][src].iter().enumerate() {
+                        let ls = hop.local_slot as usize;
+                        xs[ls * d..(ls + 1) * d]
+                            .copy_from_slice(&send_ref[src][dst][i * d..(i + 1) * d]);
+                    }
+                }
+                let mut ys = vec![0.0f32; n_local * d];
+                let mut hidden = vec![0.0f32; h];
+                for (i, (e, p)) in params_ref[dst].experts.iter().enumerate() {
+                    debug_assert_eq!(*e, s.experts[i]);
+                    let lo = s.expert_token_offsets[i] as usize;
+                    let hi = s.expert_token_offsets[i + 1] as usize;
+                    for ls in lo..hi {
+                        expert_forward(p, d, h, &xs[ls * d..(ls + 1) * d],
+                                       &mut ys[ls * d..(ls + 1) * d],
+                                       &mut hidden);
+                    }
+                }
+                // pack expert outputs back toward each home rank
+                let rets: Vec<Vec<f32>> = (0..r)
+                    .map(|src| {
+                        let hops = &routes_ref[dst][src];
+                        let mut buf = Vec::with_capacity(hops.len() * d);
+                        for hop in hops {
+                            let ls = hop.local_slot as usize;
+                            buf.extend_from_slice(&ys[ls * d..(ls + 1) * d]);
+                        }
+                        buf
+                    })
+                    .collect();
+                (xs, rets)
+            });
+        let mut xs_local = Vec::with_capacity(r);
+        let mut rets = Vec::with_capacity(r);
+        for (xs, ret) in computed {
+            xs_local.push(xs);
+            rets.push(ret);
+        }
+        for dst in 0..r {
+            for src in 0..r {
+                if src != dst {
+                    traffic.combine_bytes += (rets[dst][src].len() * 4) as u64;
+                }
+            }
+        }
+
+        // combine scatter on each token's home rank (same j order as the
+        // single-rank path — bit-identical accumulation)
+        let rets_ref = &rets;
+        let lookup_ref = &ret_lookup;
+        let tokens_ref = &tokens_of_rank;
+        let home_rows: Vec<Vec<f32>> = par_map(r, workers, |home| {
+            let toks = &tokens_ref[home];
+            let mut rows = vec![0.0f32; toks.len() * d];
+            for (ti, &t) in toks.iter().enumerate() {
+                let o = &mut rows[ti * d..(ti + 1) * d];
+                for j in 0..k {
+                    let slot = t as usize * k + j;
+                    let g = gates[slot];
+                    let (dst, idx) = lookup_ref[slot];
+                    let buf = &rets_ref[dst as usize][home];
+                    let row = &buf[idx as usize * d..(idx as usize + 1) * d];
+                    for c in 0..d {
+                        o[c] += g * row[c];
+                    }
+                }
+            }
+            rows
+        });
+        let mut out = vec![0.0f32; l * d];
+        for (home, rows) in home_rows.iter().enumerate() {
+            for (ti, &t) in tokens_of_rank[home].iter().enumerate() {
+                out[t as usize * d..(t as usize + 1) * d]
+                    .copy_from_slice(&rows[ti * d..(ti + 1) * d]);
+            }
+        }
+
+        // per-rank Figure-3/5 accounting from what was actually resident
+        self.mem = (0..r)
+            .map(|rank| {
+                let n_local = shards[rank].local_slots() as u64;
+                let resident = tokens_of_rank[rank].len() as u64;
+                let comm: u64 = (0..r)
+                    .map(|peer| {
+                        (send[rank][peer].len() + rets[rank][peer].len()) as u64 * 4
+                    })
+                    .sum();
+                MemoryBreakdown {
+                    // xs + ys per local slot, plus resident token rows in
+                    // and combined rows out
+                    data_bytes: 4 * d as u64 * (2 * n_local + 2 * resident),
+                    index_bytes: shards[rank].metadata_bytes() as u64,
+                    extra_bytes: comm,
+                }
+            })
+            .collect();
+        self.traffic = traffic;
+        self.state = Some(ShardedState {
+            shards,
+            routes,
+            xs_local,
+            gates: gates.to_vec(),
+            num_tokens: l,
+        });
+        Ok(out)
+    }
+
+    fn backward_update(&mut self, d_out: &[f32], lr: f32) -> Result<(), String> {
+        let (d, h) = (self.d_model, self.d_hidden);
+        let st = self.state.as_ref().ok_or("backward_update before forward")?;
+        if d_out.len() != st.num_tokens * d {
+            return Err(format!(
+                "d_out has {} elements, expected L·d = {}",
+                d_out.len(),
+                st.num_tokens * d
+            ));
+        }
+        let r = self.topo.ranks;
+        let workers = self.workers.min(r);
+
+        // backward all-to-all: each home rank packs gated gradient rows
+        // toward the expert ranks (mirror of the fwd dispatch)
+        let routes_ref = &st.routes;
+        let gates_ref = &st.gates;
+        let dsend: Vec<Vec<Vec<f32>>> = par_map(r, workers, |home| {
+            (0..r)
+                .map(|dst| {
+                    let hops = &routes_ref[dst][home];
+                    let mut buf = Vec::with_capacity(hops.len() * d);
+                    for hop in hops {
+                        let t = hop.token as usize;
+                        let g = gates_ref[hop.origin as usize];
+                        for c in 0..d {
+                            buf.push(g * d_out[t * d + c]);
+                        }
+                    }
+                    buf
+                })
+                .collect()
+        });
+        let mut grad_bytes = 0u64;
+        for home in 0..r {
+            for dst in 0..r {
+                if home != dst {
+                    grad_bytes += (dsend[home][dst].len() * 4) as u64;
+                }
+            }
+        }
+
+        // per-rank gradient accumulation (recompute policy) + in-place
+        // SGD update: scope_chunks hands each worker exclusive &mut
+        // access to its rank's parameters — no per-step clone
+        let dsend_ref = &dsend;
+        let shards_ref = &st.shards;
+        let xs_ref = &st.xs_local;
+        crate::util::threadpool::scope_chunks(
+            &mut self.rank_params, 1, workers, |dst, chunk| {
+                let mine = &mut chunk[0];
+                let s = &shards_ref[dst];
+                let n_local = s.local_slots();
+                let mut dys = vec![0.0f32; n_local * d];
+                for src in 0..r {
+                    for (i, hop) in routes_ref[dst][src].iter().enumerate() {
+                        let ls = hop.local_slot as usize;
+                        dys[ls * d..(ls + 1) * d]
+                            .copy_from_slice(&dsend_ref[src][dst][i * d..(i + 1) * d]);
+                    }
+                }
+                let xs = &xs_ref[dst];
+                let mut pre = vec![0.0f32; h];
+                let mut act = vec![0.0f32; h];
+                let mut dz = vec![0.0f32; h];
+                for (i, (_, p)) in mine.experts.iter_mut().enumerate() {
+                    let mut g = ExpertParams::zeros(d, h);
+                    let lo = s.expert_token_offsets[i] as usize;
+                    let hi = s.expert_token_offsets[i + 1] as usize;
+                    for ls in lo..hi {
+                        expert_backward(p, &mut g, d, h,
+                                        &xs[ls * d..(ls + 1) * d],
+                                        &dys[ls * d..(ls + 1) * d], &mut pre,
+                                        &mut act, &mut dz);
+                    }
+                    sgd(p, &g, lr);
+                }
+            });
+        self.traffic.grad_bytes = grad_bytes;
+        Ok(())
+    }
+
+    fn traffic(&self) -> Traffic {
+        self.traffic
+    }
+
+    fn memory_per_rank(&self) -> Vec<MemoryBreakdown> {
+        if self.mem.is_empty() {
+            vec![
+                MemoryBreakdown { data_bytes: 0, index_bytes: 0, extra_bytes: 0 };
+                self.topo.ranks
+            ]
+        } else {
+            self.mem.clone()
+        }
+    }
+
+    fn gather_params(&self) -> Result<ExpertStore, String> {
+        ExpertStore::gather(&self.rank_params, self.topo.num_experts)
+    }
+}
+
+/// The synthetic workload an `[ep]` config describes — routing, token
+/// activations `x` (L·d), combine gates (L·k), and regression targets
+/// (L·d). A pure function of the config, shared by `EpTrainer` and the
+/// `ep-bench` subcommand so they exercise the identical exchange.
+pub fn workload_from_config(
+    cfg: &EpConfig,
+) -> (DispatchStructures, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (l, e, k, d) = (cfg.tokens, cfg.num_experts, cfg.top_k, cfg.d_model);
+    let mut rng = Rng::new(cfg.seed ^ 0xE9E9);
+    let gating = synthetic_gating(&mut rng, l, e, k, cfg.skew);
+    let disp = parallel_build(&gating.topk_ids, l, e, k);
+    let x = rng.normal_vec(l * d, 1.0);
+    let target = rng.normal_vec(l * d, 1.0);
+    (disp, x, gating.gates, target)
+}
+
+/// Build the engine an `[ep]` config describes: R = 1 gives the
+/// single-rank path, R > 1 the sharded one (one worker per rank). The
+/// expert parameters are initialized from `cfg.seed`, so any two engines
+/// built from the same config hold bit-identical weights.
+pub fn engine_from_config(cfg: &EpConfig) -> Result<Box<dyn ExecutionEngine>, String> {
+    cfg.validate()?;
+    let store = ExpertStore::init(cfg.num_experts, cfg.d_model, cfg.d_hidden,
+                                  cfg.seed);
+    if cfg.ranks == 1 {
+        Ok(Box::new(SingleRankEngine::new(store)))
+    } else {
+        let topo = EpTopology::with_placement(cfg.ranks, cfg.num_experts,
+                                              cfg.placement)?;
+        Ok(Box::new(ShardedEngine::new(topo, &store, cfg.ranks)?))
+    }
+}
+
+// -- equivalence harness ----------------------------------------------------
+
+/// Outcome of one sharded-vs-single verification run.
+#[derive(Debug, Clone)]
+pub struct EquivalenceReport {
+    pub ranks: usize,
+    pub bitwise_equal: bool,
+    pub max_abs_diff: f64,
+    pub measured_dispatch_bytes: u64,
+    pub planned_cross_bytes: u64,
+}
+
+impl EquivalenceReport {
+    pub fn ok(&self) -> bool {
+        self.bitwise_equal
+            && self.measured_dispatch_bytes == self.planned_cross_bytes
+    }
+}
+
+/// Run the same workload through [`SingleRankEngine`] and
+/// [`ShardedEngine`], compare outputs bit-for-bit, and check the measured
+/// dispatch traffic against the analytic plan (f32 rows, dtype = 4).
+pub fn check_equivalence(topo: &EpTopology, store: &ExpertStore,
+                         disp: &DispatchStructures, x: &[f32],
+                         gates: &[f32]) -> Result<EquivalenceReport, String> {
+    let mut single = SingleRankEngine::new(store.clone());
+    let mut sharded = ShardedEngine::new(topo.clone(), store, topo.ranks)?;
+    let a = single.forward(disp, x, gates)?;
+    let b = sharded.forward(disp, x, gates)?;
+    if a.len() != b.len() {
+        return Err("engines returned different output sizes".into());
+    }
+    let bitwise_equal = a
+        .iter()
+        .zip(&b)
+        .all(|(p, q)| p.to_bits() == q.to_bits());
+    let max_abs_diff = a
+        .iter()
+        .zip(&b)
+        .map(|(p, q)| (*p as f64 - *q as f64).abs())
+        .fold(0.0f64, f64::max);
+    let plan = topo.plan(disp, store.d_model, 4);
+    Ok(EquivalenceReport {
+        ranks: topo.ranks,
+        bitwise_equal,
+        max_abs_diff,
+        measured_dispatch_bytes: sharded.traffic().dispatch_bytes,
+        planned_cross_bytes: plan.cross_rank_bytes(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ep::Placement;
+    use crate::dispatch::gating::synthetic_gating;
+    use crate::dispatch::parallel_build::parallel_build;
+    use crate::testkit::fixtures::{fig2_expected, FIG2_EXPERTS, FIG2_TOKENS,
+                                   FIG2_TOP_K};
+    use crate::util::prng::Rng;
+
+    fn workload(l: usize, e: usize, k: usize, d: usize, skew: f64,
+                seed: u64) -> (DispatchStructures, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let g = synthetic_gating(&mut rng, l, e, k, skew);
+        let disp = parallel_build(&g.topk_ids, l, e, k);
+        let x = rng.normal_vec(l * d, 1.0);
+        (disp, x, g.gates)
+    }
+
+    #[test]
+    fn figure2_bit_equality_across_rank_counts() {
+        let disp = fig2_expected();
+        let mut rng = Rng::new(3);
+        let d = 8;
+        let x = rng.normal_vec(FIG2_TOKENS * d, 1.0);
+        let gates = vec![0.5f32; FIG2_TOKENS * FIG2_TOP_K];
+        let store = ExpertStore::init(FIG2_EXPERTS, d, 16, 11);
+        for ranks in [1, 2, 4] {
+            let topo = EpTopology::new(ranks, FIG2_EXPERTS).unwrap();
+            let rep = check_equivalence(&topo, &store, &disp, &x, &gates)
+                .unwrap();
+            assert!(rep.bitwise_equal, "R={ranks}: diff {}", rep.max_abs_diff);
+            assert_eq!(rep.measured_dispatch_bytes, rep.planned_cross_bytes,
+                       "R={ranks}");
+        }
+    }
+
+    #[test]
+    fn random_gating_bit_equality_and_measured_bytes() {
+        let (disp, x, gates) = workload(96, 8, 2, 16, 1.2, 21);
+        let store = ExpertStore::init(8, 16, 24, 5);
+        for placement in [Placement::Contiguous, Placement::Strided] {
+            for ranks in [1, 2, 4, 8] {
+                let topo =
+                    EpTopology::with_placement(ranks, 8, placement).unwrap();
+                let rep = check_equivalence(&topo, &store, &disp, &x, &gates)
+                    .unwrap();
+                assert!(rep.ok(),
+                        "R={ranks} {placement}: bitwise={} bytes {} vs {}",
+                        rep.bitwise_equal, rep.measured_dispatch_bytes,
+                        rep.planned_cross_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_one_expert_skew_still_equal() {
+        let l = 40;
+        let d = 8;
+        let ids = vec![0u32; l];
+        let disp = parallel_build(&ids, l, 4, 1);
+        let mut rng = Rng::new(9);
+        let x = rng.normal_vec(l * d, 1.0);
+        let gates = vec![1.0f32; l];
+        let store = ExpertStore::init(4, d, 12, 2);
+        let topo = EpTopology::new(4, 4).unwrap();
+        let rep = check_equivalence(&topo, &store, &disp, &x, &gates).unwrap();
+        assert!(rep.ok());
+    }
+
+    #[test]
+    fn training_is_bitwise_identical_across_sharding() {
+        // 3 SGD steps on the same workload: losses and final parameters
+        // must match bit-for-bit between R=1 and R=4
+        let (disp, x, gates) = workload(64, 8, 2, 12, 0.8, 33);
+        let l = disp.num_tokens;
+        let d = 12;
+        let store = ExpertStore::init(8, d, 16, 77);
+        let mut rng = Rng::new(55);
+        let target = rng.normal_vec(l * d, 1.0);
+
+        let run = |engine: &mut dyn ExecutionEngine| -> Vec<f64> {
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                let out = engine.forward(&disp, &x, &gates).unwrap();
+                let mut loss = 0.0f64;
+                let mut d_out = vec![0.0f32; out.len()];
+                let scale = 2.0 / out.len() as f32;
+                for i in 0..out.len() {
+                    let diff = out[i] - target[i];
+                    loss += (diff as f64) * (diff as f64);
+                    d_out[i] = scale * diff;
+                }
+                engine.backward_update(&d_out, 0.1).unwrap();
+                losses.push(loss / out.len() as f64);
+            }
+            losses
+        };
+
+        let mut single = SingleRankEngine::new(store.clone());
+        let topo = EpTopology::new(4, 8).unwrap();
+        let mut sharded = ShardedEngine::new(topo, &store, 4).unwrap();
+        let la = run(&mut single);
+        let lb = run(&mut sharded);
+        assert_eq!(la, lb, "losses diverged");
+        assert!(la[2] < la[0], "training did not reduce the loss: {la:?}");
+        let pa = single.gather_params().unwrap();
+        let pb = sharded.gather_params().unwrap();
+        assert_eq!(pa, pb, "trained parameters diverged");
+    }
+
+    #[test]
+    fn traffic_accounting_is_conserved() {
+        let (disp, x, gates) = workload(128, 8, 2, 8, 0.5, 4);
+        let store = ExpertStore::init(8, 8, 12, 1);
+        let topo = EpTopology::new(2, 8).unwrap();
+        let mut eng = ShardedEngine::new(topo, &store, 2).unwrap();
+        eng.forward(&disp, &x, &gates).unwrap();
+        let t = eng.traffic();
+        assert_eq!(t.cross_rows + t.local_rows, disp.slots() as u64);
+        assert_eq!(t.dispatch_bytes, t.cross_rows * 8 * 4);
+        // combine returns exactly the rows that were dispatched
+        assert_eq!(t.combine_bytes, t.dispatch_bytes);
+        // memory accounting covers every rank and the routed rows
+        let mem = eng.memory_per_rank();
+        assert_eq!(mem.len(), 2);
+        let data: u64 = mem.iter().map(|m| m.data_bytes).sum();
+        assert!(data >= disp.slots() as u64 * 8 * 4);
+    }
+
+    #[test]
+    fn shape_validation() {
+        let (disp, x, gates) = workload(16, 4, 2, 4, 0.0, 8);
+        let store = ExpertStore::init(4, 4, 8, 3);
+        let mut eng = SingleRankEngine::new(store.clone());
+        assert!(eng.backward_update(&[0.0; 64], 0.1).is_err());
+        assert!(eng.forward(&disp, &x[..8], &gates).is_err());
+        assert!(eng.forward(&disp, &x, &gates[..3]).is_err());
+        let bad_store = ExpertStore::init(8, 4, 8, 3);
+        let mut bad = SingleRankEngine::new(bad_store);
+        assert!(bad.forward(&disp, &x, &gates).is_err());
+    }
+}

@@ -1,14 +1,20 @@
-//! Simulated expert-parallel topology (the paper's §8 future work, built
-//! as an analytic simulator so the coordinator's dispatch structures are
-//! exercised in a multi-rank setting).
+//! Expert-parallel topology + all-to-all planner (paper §8).
 //!
-//! Experts are partitioned across R simulated ranks; tokens are
-//! partitioned contiguously. From a [`DispatchStructures`] the planner
-//! derives the all-to-all exchange: which (src, dst) rank pairs move how
-//! many routed token activations, total comm bytes, and the load balance.
-//! This is exactly the planning a real EP launcher performs before
-//! issuing collectives — here it feeds the comm-volume ablation bench.
+//! Experts are partitioned across R simulated ranks (contiguously or
+//! strided, see [`Placement`]); tokens are partitioned contiguously. From
+//! a [`DispatchStructures`] the planner derives the all-to-all exchange:
+//! which (src, dst) rank pairs move how many routed token activations,
+//! total comm bytes, and the load balance.
+//!
+//! Since the rank-sharded execution engine landed
+//! (`coordinator::engine::ShardedEngine`), this planner is the executor's
+//! **dry-run mode**: [`EpTopology::plan`] predicts the exchange the engine
+//! then performs with real buffer packing, and the engine's *measured*
+//! byte counts are asserted against [`AllToAllPlan::cross_rank_bytes`]
+//! (see `rust/tests/ep_engine.rs` and the `ep-bench` subcommand).
 
+use crate::config::ep::Placement;
+use crate::dispatch::shard::ExpertAssignment;
 use crate::dispatch::structures::DispatchStructures;
 
 /// Static expert-parallel topology.
@@ -16,10 +22,17 @@ use crate::dispatch::structures::DispatchStructures;
 pub struct EpTopology {
     pub ranks: usize,
     pub num_experts: usize,
+    pub placement: Placement,
 }
 
 impl EpTopology {
+    /// Contiguous placement (MegaBlocks/DeepSpeed default).
     pub fn new(ranks: usize, num_experts: usize) -> Result<EpTopology, String> {
+        EpTopology::with_placement(ranks, num_experts, Placement::Contiguous)
+    }
+
+    pub fn with_placement(ranks: usize, num_experts: usize,
+                          placement: Placement) -> Result<EpTopology, String> {
         if ranks == 0 || num_experts == 0 {
             return Err("ranks and experts must be positive".into());
         }
@@ -28,18 +41,46 @@ impl EpTopology {
                 "experts {num_experts} not divisible by ranks {ranks}"
             ));
         }
-        Ok(EpTopology { ranks, num_experts })
+        Ok(EpTopology { ranks, num_experts, placement })
     }
 
-    /// Round-robin-free contiguous expert placement (MegaBlocks/DeepSpeed
-    /// default): rank r owns experts [r·E/R, (r+1)·E/R).
+    /// Owning rank of an expert under the placement policy: contiguous
+    /// gives rank r the block [r·E/R, (r+1)·E/R); strided deals experts
+    /// round-robin (e mod R) — the layout that spreads "hot" low-id
+    /// experts of a skewed router across ranks.
     pub fn rank_of_expert(&self, e: usize) -> usize {
-        e / (self.num_experts / self.ranks)
+        match self.placement {
+            Placement::Contiguous => e / (self.num_experts / self.ranks),
+            Placement::Strided => e % self.ranks,
+        }
     }
 
+    /// Contiguous-placement block of rank `r` (kept for the analytic
+    /// benches; panics under strided placement — use [`owned_experts`]).
+    ///
+    /// [`owned_experts`]: EpTopology::owned_experts
     pub fn experts_of_rank(&self, r: usize) -> std::ops::Range<usize> {
+        assert_eq!(self.placement, Placement::Contiguous,
+                   "experts_of_rank is contiguous-only");
         let per = self.num_experts / self.ranks;
         r * per..(r + 1) * per
+    }
+
+    /// Global expert ids owned by rank `r`, ascending, any placement
+    /// (delegates to the shard layer's assignment so the two can never
+    /// diverge).
+    pub fn owned_experts(&self, r: usize) -> Vec<usize> {
+        self.assignment().owned_experts(r)
+    }
+
+    /// The expert→rank map in the form the dispatch shard layer consumes.
+    pub fn assignment(&self) -> ExpertAssignment {
+        ExpertAssignment {
+            ranks: self.ranks,
+            rank_of: (0..self.num_experts)
+                .map(|e| self.rank_of_expert(e) as u32)
+                .collect(),
+        }
     }
 
     /// Contiguous token partition: token t lives on rank t·R/L.
@@ -94,6 +135,11 @@ pub struct AllToAllPlan {
 }
 
 impl AllToAllPlan {
+    /// Routed copies moved src → dst.
+    pub fn rows(&self, src: usize, dst: usize) -> u64 {
+        self.matrix[src * self.ranks + dst]
+    }
+
     /// Total bytes crossing rank boundaries (one direction).
     pub fn cross_rank_bytes(&self) -> u64 {
         self.cross_rank_rows * self.bytes_per_row
@@ -122,6 +168,7 @@ impl AllToAllPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ep::Placement;
     use crate::dispatch::gating::synthetic_gating;
     use crate::dispatch::parallel_build::parallel_build;
     use crate::util::prng::Rng;
@@ -172,5 +219,33 @@ mod tests {
         assert_eq!(t.rank_of_expert(0), 0);
         assert_eq!(t.rank_of_expert(15), 3);
         assert_eq!(t.experts_of_rank(1), 4..8);
+        assert_eq!(t.owned_experts(1), vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn strided_placement_deals_round_robin() {
+        let t = EpTopology::with_placement(4, 16, Placement::Strided).unwrap();
+        assert_eq!(t.rank_of_expert(0), 0);
+        assert_eq!(t.rank_of_expert(5), 1);
+        assert_eq!(t.owned_experts(2), vec![2, 6, 10, 14]);
+        let a = t.assignment();
+        assert_eq!(a.ranks, 4);
+        assert_eq!(a.rank_of[7], 3);
+    }
+
+    #[test]
+    fn strided_placement_spreads_skewed_load() {
+        // skewed routing concentrates on low expert ids; strided placement
+        // must balance it strictly better than contiguous blocks
+        let mut rng = Rng::new(5);
+        let g = synthetic_gating(&mut rng, 4096, 16, 2, 2.0);
+        let d = parallel_build(&g.topk_ids, 4096, 16, 2);
+        let cont = EpTopology::new(4, 16).unwrap().plan(&d, 64, 2);
+        let strided = EpTopology::with_placement(4, 16, Placement::Strided)
+            .unwrap()
+            .plan(&d, 64, 2);
+        assert!(strided.imbalance() < cont.imbalance(),
+                "strided {} vs contiguous {}", strided.imbalance(),
+                cont.imbalance());
     }
 }

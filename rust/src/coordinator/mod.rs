@@ -2,14 +2,22 @@
 //!
 //! For a training-systems paper the coordinator owns the step loop:
 //! parameter/optimizer state, data feeding, LR scheduling, metrics,
-//! checkpointing, and the (simulated) expert-parallel topology. The
-//! compute itself is the AOT-compiled XLA step (runtime::Executable) —
-//! Python never runs here.
+//! checkpointing, and the expert-parallel topology. The LM compute is
+//! the AOT-compiled XLA step (runtime::Executable) — Python never runs
+//! here. The expert-parallel path runs through the [`ExecutionEngine`]
+//! trait: `engine::SingleRankEngine` is the classic one-rank path,
+//! `engine::ShardedEngine` executes the all-to-all plan across simulated
+//! ranks with measured communication.
+//!
+//! [`ExecutionEngine`]: engine::ExecutionEngine
 
+pub mod engine;
 pub mod expert_parallel;
 pub mod params;
 pub mod trainer;
 
+pub use engine::{check_equivalence, engine_from_config, workload_from_config,
+                 ExecutionEngine, ShardedEngine, SingleRankEngine, Traffic};
 pub use expert_parallel::{AllToAllPlan, EpTopology};
-pub use params::ParamStore;
-pub use trainer::{TrainReport, Trainer};
+pub use params::{ExpertStore, ParamStore, RankExperts};
+pub use trainer::{EpTrainReport, EpTrainer, TrainReport, Trainer};

@@ -4,11 +4,19 @@
 //! weights, ones for the `ln*` norm gains (scale is carried per-parameter
 //! in the manifest). Checkpoints use a small self-describing binary
 //! format (magic + version + named tensors) written atomically.
+//!
+//! The expert-parallel execution engine owns its parameters through
+//! [`ExpertStore`] / [`RankExperts`]: the store initializes every expert
+//! FFN with a per-expert seed (so any sharding sees identical weights),
+//! and [`ExpertStore::shard`] hands each rank *ownership* of its experts
+//! — the engines mutate rank-local parameters only, and
+//! [`ExpertStore::gather`] reassembles the global view.
 
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::dispatch::shard::ExpertAssignment;
 use crate::runtime::artifact::LmSpec;
 use crate::runtime::host::HostTensor;
 use crate::util::bytes;
@@ -145,6 +153,145 @@ impl ParamStore {
     }
 }
 
+// -- expert-sharded parameters (EP engine) ----------------------------------
+
+/// One expert's FFN: y = W2·silu(W1·x + b1) + b2, all f32 row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpertParams {
+    /// (h, d)
+    pub w1: Vec<f32>,
+    /// (h)
+    pub b1: Vec<f32>,
+    /// (d, h)
+    pub w2: Vec<f32>,
+    /// (d)
+    pub b2: Vec<f32>,
+}
+
+impl ExpertParams {
+    /// N(0, 1/d) / N(0, 1/h) fan-in init, biases zero.
+    pub fn init(d_model: usize, d_hidden: usize, seed: u64) -> ExpertParams {
+        let mut rng = Rng::new(seed);
+        let s1 = (1.0 / d_model as f64).sqrt() as f32;
+        let s2 = (1.0 / d_hidden as f64).sqrt() as f32;
+        ExpertParams {
+            w1: rng.normal_vec(d_hidden * d_model, s1),
+            b1: vec![0.0; d_hidden],
+            w2: rng.normal_vec(d_model * d_hidden, s2),
+            b2: vec![0.0; d_model],
+        }
+    }
+
+    /// All-zero parameters of the same shape (gradient accumulators).
+    pub fn zeros(d_model: usize, d_hidden: usize) -> ExpertParams {
+        ExpertParams {
+            w1: vec![0.0; d_hidden * d_model],
+            b1: vec![0.0; d_hidden],
+            w2: vec![0.0; d_model * d_hidden],
+            b2: vec![0.0; d_model],
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.w1.len() + self.b1.len() + self.w2.len() + self.b2.len()
+    }
+}
+
+/// All experts of one MoE layer (the unsharded, single-rank view).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpertStore {
+    pub d_model: usize,
+    pub d_hidden: usize,
+    pub experts: Vec<ExpertParams>,
+}
+
+impl ExpertStore {
+    /// Every expert drawn from its own seed (`seed ^ f(e)`), so a rank
+    /// initializing only its shard gets bit-identical weights to the
+    /// single-rank store — placement-invariant by construction.
+    pub fn init(num_experts: usize, d_model: usize, d_hidden: usize,
+                seed: u64) -> ExpertStore {
+        let experts = (0..num_experts)
+            .map(|e| {
+                let es = seed ^ (e as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+                ExpertParams::init(d_model, d_hidden, es)
+            })
+            .collect();
+        ExpertStore { d_model, d_hidden, experts }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.experts.iter().map(ExpertParams::num_params).sum()
+    }
+
+    /// Split ownership: rank r receives (and exclusively mutates) the
+    /// parameters of the experts the assignment places on it.
+    pub fn shard(&self, assignment: &ExpertAssignment) -> Vec<RankExperts> {
+        (0..assignment.ranks)
+            .map(|r| RankExperts {
+                rank: r,
+                d_model: self.d_model,
+                d_hidden: self.d_hidden,
+                experts: assignment
+                    .owned_experts(r)
+                    .into_iter()
+                    .map(|e| (e as u32, self.experts[e].clone()))
+                    .collect(),
+            })
+            .collect()
+    }
+
+    /// Reassemble the global store from per-rank ownership (inverse of
+    /// [`shard`](ExpertStore::shard)).
+    pub fn gather(shards: &[RankExperts], num_experts: usize)
+                  -> std::result::Result<ExpertStore, String> {
+        let first = shards.first().ok_or("gather needs at least one shard")?;
+        let (d, h) = (first.d_model, first.d_hidden);
+        let mut experts: Vec<Option<ExpertParams>> = vec![None; num_experts];
+        for s in shards {
+            if (s.d_model, s.d_hidden) != (d, h) {
+                return Err("shards disagree on expert dimensions".into());
+            }
+            for (e, p) in &s.experts {
+                let slot = experts
+                    .get_mut(*e as usize)
+                    .ok_or_else(|| format!("expert {e} out of range"))?;
+                if slot.is_some() {
+                    return Err(format!("expert {e} owned by more than one rank"));
+                }
+                *slot = Some(p.clone());
+            }
+        }
+        let experts = experts
+            .into_iter()
+            .enumerate()
+            .map(|(e, p)| p.ok_or_else(|| format!("expert {e} owned by no rank")))
+            .collect::<std::result::Result<Vec<_>, String>>()?;
+        Ok(ExpertStore { d_model: d, d_hidden: h, experts })
+    }
+}
+
+/// The expert parameters owned by one EP rank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankExperts {
+    pub rank: usize,
+    pub d_model: usize,
+    pub d_hidden: usize,
+    /// (global expert id, owned parameters), ascending by id
+    pub experts: Vec<(u32, ExpertParams)>,
+}
+
+impl RankExperts {
+    pub fn num_params(&self) -> usize {
+        self.experts.iter().map(|(_, p)| p.num_params()).sum()
+    }
+
+    /// Parameter bytes resident on this rank (f32).
+    pub fn param_bytes(&self) -> u64 {
+        4 * self.num_params() as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,5 +355,38 @@ mod tests {
         let mut other = lm_spec();
         other.params[2].shape = vec![4, 5];
         assert!(s.check_against(&other).is_err());
+    }
+
+    #[test]
+    fn expert_store_shard_gather_roundtrip() {
+        let store = ExpertStore::init(8, 16, 32, 7);
+        assert_eq!(store.num_params(), 8 * (32 * 16 + 32 + 16 * 32 + 16));
+        for rank_of in [vec![0, 0, 0, 0, 1, 1, 1, 1], vec![0, 1, 0, 1, 0, 1, 0, 1]] {
+            let a = ExpertAssignment { ranks: 2, rank_of };
+            let shards = store.shard(&a);
+            assert_eq!(shards.iter().map(RankExperts::num_params).sum::<usize>(),
+                       store.num_params());
+            let back = ExpertStore::gather(&shards, 8).unwrap();
+            assert_eq!(back, store);
+        }
+    }
+
+    #[test]
+    fn expert_init_is_placement_invariant() {
+        // expert 5's weights are a pure function of (seed, 5)
+        let a = ExpertStore::init(8, 4, 8, 42);
+        let b = ExpertStore::init(16, 4, 8, 42);
+        assert_eq!(a.experts[5], b.experts[5]);
+        assert_ne!(a.experts[0], a.experts[1]);
+    }
+
+    #[test]
+    fn gather_rejects_incomplete_ownership() {
+        let store = ExpertStore::init(4, 4, 8, 1);
+        let a = ExpertAssignment { ranks: 2, rank_of: vec![0, 0, 1, 1] };
+        let shards = store.shard(&a);
+        assert!(ExpertStore::gather(&shards[..1], 4).is_err());
+        let dup = vec![shards[0].clone(), shards[0].clone()];
+        assert!(ExpertStore::gather(&dup, 4).is_err());
     }
 }

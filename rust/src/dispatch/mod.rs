@@ -7,11 +7,13 @@
 pub mod capacity;
 pub mod gating;
 pub mod parallel_build;
+pub mod shard;
 pub mod sort_build;
 pub mod structures;
 
 pub use capacity::{apply_capacity, CapacityRouting};
 pub use gating::{softmax_topk, Gating};
 pub use parallel_build::{parallel_build, BuildStats};
+pub use shard::{merge, shard, ExpertAssignment, RankShard};
 pub use sort_build::sort_build;
 pub use structures::DispatchStructures;

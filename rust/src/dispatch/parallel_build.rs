@@ -221,11 +221,9 @@ mod tests {
 
     #[test]
     fn figure2_matches_paper() {
-        let ids = vec![2, 3, 0, 1, 0, 3, 1, 2, 0, 3];
-        let (d, _) = parallel_build_with_stats(&ids, 5, 4, 2, 1);
-        assert_eq!(d.expert_token_indices, vec![1, 2, 4, 1, 3, 0, 3, 0, 2, 4]);
-        assert_eq!(d.expert_token_offsets, vec![0, 3, 5, 7, 10]);
-        assert_eq!(&d.token_index_map[0..2], &[5, 7]);
+        use crate::testkit::fixtures::{fig2_expected, fig2_ids};
+        let (d, _) = parallel_build_with_stats(&fig2_ids(), 5, 4, 2, 1);
+        assert_eq!(d, fig2_expected());
         d.validate().unwrap();
     }
 

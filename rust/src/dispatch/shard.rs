@@ -1,0 +1,366 @@
+//! Per-rank slicing of [`DispatchStructures`] for expert parallelism.
+//!
+//! A [`RankShard`] is the view one EP rank needs to run its experts: the
+//! expert-major token segments it owns, plus — per local slot — the
+//! token-major *origin slot* (i·k + j) that routed there. The origin
+//! slots are exactly what the combine scatter needs to send results home,
+//! and they make the slicing lossless: [`merge`] rebuilds the original
+//! structures bit-for-bit, which the property suite checks for random
+//! (L, E, k, R) including all-to-one-expert skew.
+//!
+//! The expert→rank map arrives as a plain [`ExpertAssignment`] so this
+//! layer stays independent of the coordinator's topology type
+//! (`EpTopology::assignment()` produces one).
+
+use super::structures::DispatchStructures;
+
+/// Expert→rank ownership map (dense, one entry per global expert).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExpertAssignment {
+    pub ranks: usize,
+    /// owning rank per global expert id
+    pub rank_of: Vec<u32>,
+}
+
+impl ExpertAssignment {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.ranks == 0 {
+            return Err("assignment needs at least one rank".into());
+        }
+        if self.rank_of.is_empty() {
+            return Err("assignment covers no experts".into());
+        }
+        if let Some(&r) = self.rank_of.iter().find(|&&r| r as usize >= self.ranks) {
+            return Err(format!("rank {r} out of range (R = {})", self.ranks));
+        }
+        Ok(())
+    }
+
+    /// Global expert ids owned by `rank`, ascending.
+    pub fn owned_experts(&self, rank: usize) -> Vec<usize> {
+        self.rank_of
+            .iter()
+            .enumerate()
+            .filter(|&(_, &r)| r as usize == rank)
+            .map(|(e, _)| e)
+            .collect()
+    }
+}
+
+/// One rank's slice of the dispatch structures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RankShard {
+    pub rank: usize,
+    /// global problem shape (shared by all shards of one slicing)
+    pub num_tokens: usize,
+    pub num_experts_global: usize,
+    pub top_k: usize,
+    /// owned global expert ids, ascending
+    pub experts: Vec<u32>,
+    /// (local experts + 1) exclusive prefix sums of owned segment lengths
+    pub expert_token_offsets: Vec<u32>,
+    /// global token ids per local slot, expert-major (segment order is
+    /// preserved from the unsharded structures)
+    pub expert_token_indices: Vec<u32>,
+    /// token-major origin slot (i·k + j) per local slot — the inverse
+    /// routing needed by the combine scatter and by [`merge`]
+    pub origin_slots: Vec<u32>,
+}
+
+impl RankShard {
+    /// Routed slots resident on this rank.
+    pub fn local_slots(&self) -> usize {
+        self.expert_token_indices.len()
+    }
+
+    /// Segment length of the `i`-th *local* expert.
+    pub fn expert_len(&self, i: usize) -> usize {
+        (self.expert_token_offsets[i + 1] - self.expert_token_offsets[i]) as usize
+    }
+
+    /// Token ids routed to the `i`-th local expert.
+    pub fn expert_tokens(&self, i: usize) -> &[u32] {
+        let lo = self.expert_token_offsets[i] as usize;
+        let hi = self.expert_token_offsets[i + 1] as usize;
+        &self.expert_token_indices[lo..hi]
+    }
+
+    /// Routing-metadata bytes held by this rank (the per-rank share of
+    /// the paper's "extremely lightweight" §3 claim).
+    pub fn metadata_bytes(&self) -> usize {
+        4 * (self.experts.len()
+            + self.expert_token_offsets.len()
+            + self.expert_token_indices.len()
+            + self.origin_slots.len())
+    }
+
+    /// Structural invariants of one shard in isolation.
+    pub fn validate(&self) -> Result<(), String> {
+        let n_local = self.expert_token_indices.len();
+        if self.origin_slots.len() != n_local {
+            return Err("origin_slots length mismatch".into());
+        }
+        if self.expert_token_offsets.len() != self.experts.len() + 1 {
+            return Err("offsets length mismatch".into());
+        }
+        if self.expert_token_offsets[0] != 0
+            || self.expert_token_offsets[self.experts.len()] as usize != n_local
+        {
+            return Err("offsets do not span the local slots".into());
+        }
+        if self.expert_token_offsets.windows(2).any(|w| w[0] > w[1]) {
+            return Err("offsets not monotone".into());
+        }
+        if self.experts.windows(2).any(|w| w[0] >= w[1]) {
+            return Err("owned experts not strictly ascending".into());
+        }
+        if let Some(&e) = self.experts.iter().find(|&&e| {
+            e as usize >= self.num_experts_global
+        }) {
+            return Err(format!("expert id {e} out of range"));
+        }
+        let n_global = self.num_tokens * self.top_k;
+        for (s, (&tok, &origin)) in self
+            .expert_token_indices
+            .iter()
+            .zip(&self.origin_slots)
+            .enumerate()
+        {
+            if tok as usize >= self.num_tokens {
+                return Err(format!("token id {tok} out of range"));
+            }
+            if origin as usize >= n_global {
+                return Err(format!("origin slot {origin} out of range"));
+            }
+            if origin as usize / self.top_k != tok as usize {
+                return Err(format!(
+                    "local slot {s}: origin {origin} does not belong to token {tok}"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Slice `disp` into one [`RankShard`] per rank.
+pub fn shard(
+    disp: &DispatchStructures,
+    assignment: &ExpertAssignment,
+) -> Result<Vec<RankShard>, String> {
+    assignment.validate()?;
+    if assignment.rank_of.len() != disp.num_experts {
+        return Err(format!(
+            "assignment covers {} experts, dispatch has {}",
+            assignment.rank_of.len(),
+            disp.num_experts
+        ));
+    }
+    // invert token_index_map once: global position -> origin slot
+    let n = disp.slots();
+    let mut origin_of_pos = vec![0u32; n];
+    for (slot, &pos) in disp.token_index_map.iter().enumerate() {
+        origin_of_pos[pos as usize] = slot as u32;
+    }
+    let mut shards = Vec::with_capacity(assignment.ranks);
+    for rank in 0..assignment.ranks {
+        let experts = assignment.owned_experts(rank);
+        let mut offsets = Vec::with_capacity(experts.len() + 1);
+        offsets.push(0u32);
+        let mut tokens = Vec::new();
+        let mut origins = Vec::new();
+        for &e in &experts {
+            let lo = disp.expert_token_offsets[e] as usize;
+            let hi = disp.expert_token_offsets[e + 1] as usize;
+            tokens.extend_from_slice(&disp.expert_token_indices[lo..hi]);
+            origins.extend_from_slice(&origin_of_pos[lo..hi]);
+            offsets.push(tokens.len() as u32);
+        }
+        shards.push(RankShard {
+            rank,
+            num_tokens: disp.num_tokens,
+            num_experts_global: disp.num_experts,
+            top_k: disp.top_k,
+            experts: experts.into_iter().map(|e| e as u32).collect(),
+            expert_token_offsets: offsets,
+            expert_token_indices: tokens,
+            origin_slots: origins,
+        });
+    }
+    Ok(shards)
+}
+
+/// Rebuild the unsharded [`DispatchStructures`] from a complete shard set.
+///
+/// Inverse of [`shard`]: for any valid slicing, `merge(&shard(d, a)?) ==
+/// d` exactly. Errors on incomplete/overlapping expert ownership or
+/// inconsistent shapes.
+pub fn merge(shards: &[RankShard]) -> Result<DispatchStructures, String> {
+    let first = shards.first().ok_or("merge needs at least one shard")?;
+    let (l, e_total, k) = (first.num_tokens, first.num_experts_global, first.top_k);
+    let n = l * k;
+
+    // global per-expert lengths; each expert owned exactly once
+    let mut lengths = vec![u32::MAX; e_total];
+    for s in shards {
+        if (s.num_tokens, s.num_experts_global, s.top_k) != (l, e_total, k) {
+            return Err("shards disagree on the global shape".into());
+        }
+        s.validate()?;
+        for (i, &e) in s.experts.iter().enumerate() {
+            let slot = &mut lengths[e as usize];
+            if *slot != u32::MAX {
+                return Err(format!("expert {e} owned by more than one shard"));
+            }
+            *slot = s.expert_len(i) as u32;
+        }
+    }
+    if let Some(e) = lengths.iter().position(|&v| v == u32::MAX) {
+        return Err(format!("expert {e} owned by no shard"));
+    }
+    let mut offsets = vec![0u32; e_total + 1];
+    for e in 0..e_total {
+        offsets[e + 1] = offsets[e] + lengths[e];
+    }
+    if offsets[e_total] as usize != n {
+        return Err(format!(
+            "shards cover {} slots, expected {n}",
+            offsets[e_total]
+        ));
+    }
+
+    let mut expert_token_indices = vec![0u32; n];
+    let mut token_expert_indices = vec![0u32; n];
+    let mut token_index_map = vec![0u32; n];
+    let mut origin_seen = vec![false; n];
+    for s in shards {
+        for (i, &e) in s.experts.iter().enumerate() {
+            let base = offsets[e as usize] as usize;
+            let lo = s.expert_token_offsets[i] as usize;
+            for (j, local) in (lo..lo + s.expert_len(i)).enumerate() {
+                let pos = base + j;
+                let tok = s.expert_token_indices[local];
+                let origin = s.origin_slots[local] as usize;
+                if origin_seen[origin] {
+                    return Err(format!("origin slot {origin} covered twice"));
+                }
+                origin_seen[origin] = true;
+                expert_token_indices[pos] = tok;
+                token_expert_indices[origin] = e;
+                token_index_map[origin] = pos as u32;
+            }
+        }
+    }
+
+    let merged = DispatchStructures {
+        num_tokens: l,
+        num_experts: e_total,
+        top_k: k,
+        token_expert_indices,
+        expert_token_indices,
+        expert_token_offsets: offsets,
+        token_index_map,
+    };
+    merged.validate()?;
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::parallel_build::parallel_build;
+    use crate::testkit::fixtures::{fig2_expected, fig2_ids};
+
+    fn contiguous(ranks: usize, experts: usize) -> ExpertAssignment {
+        let per = experts / ranks;
+        ExpertAssignment {
+            ranks,
+            rank_of: (0..experts).map(|e| (e / per) as u32).collect(),
+        }
+    }
+
+    #[test]
+    fn figure2_two_rank_slices() {
+        let d = fig2_expected();
+        let shards = shard(&d, &contiguous(2, 4)).unwrap();
+        assert_eq!(shards.len(), 2);
+        // rank 0 owns experts {0, 1}: segments [1,2,4] and [1,3]
+        let r0 = &shards[0];
+        assert_eq!(r0.experts, vec![0, 1]);
+        assert_eq!(r0.expert_token_indices, vec![1, 2, 4, 1, 3]);
+        assert_eq!(r0.expert_token_offsets, vec![0, 3, 5]);
+        assert_eq!(r0.origin_slots, vec![2, 4, 8, 3, 6]);
+        // rank 1 owns experts {2, 3}: segments [0,3] and [0,2,4]
+        let r1 = &shards[1];
+        assert_eq!(r1.experts, vec![2, 3]);
+        assert_eq!(r1.expert_token_indices, vec![0, 3, 0, 2, 4]);
+        assert_eq!(r1.expert_token_offsets, vec![0, 2, 5]);
+        assert_eq!(r1.origin_slots, vec![0, 7, 1, 5, 9]);
+        for s in &shards {
+            s.validate().unwrap();
+        }
+        assert_eq!(merge(&shards).unwrap(), d);
+    }
+
+    #[test]
+    fn single_rank_shard_is_the_whole_structure() {
+        let d = fig2_expected();
+        let shards = shard(&d, &contiguous(1, 4)).unwrap();
+        assert_eq!(shards[0].expert_token_indices, d.expert_token_indices);
+        assert_eq!(shards[0].local_slots(), d.slots());
+        assert_eq!(merge(&shards).unwrap(), d);
+    }
+
+    #[test]
+    fn strided_assignment_round_trips() {
+        let d = fig2_expected();
+        let strided = ExpertAssignment { ranks: 2, rank_of: vec![0, 1, 0, 1] };
+        let shards = shard(&d, &strided).unwrap();
+        assert_eq!(shards[0].experts, vec![0, 2]);
+        assert_eq!(shards[1].experts, vec![1, 3]);
+        assert_eq!(merge(&shards).unwrap(), d);
+    }
+
+    #[test]
+    fn all_to_one_expert_skew() {
+        // every token to expert 0: rank 0 holds everything, others empty
+        let ids = vec![0u32; 64];
+        let d = parallel_build(&ids, 64, 8, 1);
+        let shards = shard(&d, &contiguous(4, 8)).unwrap();
+        assert_eq!(shards[0].local_slots(), 64);
+        for s in &shards[1..] {
+            assert_eq!(s.local_slots(), 0);
+            s.validate().unwrap();
+        }
+        assert_eq!(merge(&shards).unwrap(), d);
+    }
+
+    #[test]
+    fn merge_rejects_bad_shard_sets() {
+        let d = fig2_expected();
+        let shards = shard(&d, &contiguous(2, 4)).unwrap();
+        // missing shard: expert unowned
+        assert!(merge(&shards[..1]).is_err());
+        // duplicated shard: expert owned twice
+        let dup = vec![shards[0].clone(), shards[0].clone()];
+        assert!(merge(&dup).is_err());
+        // corrupted origin slot
+        let mut bad = shards.clone();
+        bad[0].origin_slots[0] = bad[1].origin_slots[0];
+        assert!(merge(&bad).is_err());
+        assert!(merge(&[]).is_err());
+    }
+
+    #[test]
+    fn assignment_validation() {
+        assert!(ExpertAssignment { ranks: 0, rank_of: vec![] }.validate().is_err());
+        assert!(ExpertAssignment { ranks: 2, rank_of: vec![0, 2] }
+            .validate()
+            .is_err());
+        let a = ExpertAssignment { ranks: 2, rank_of: vec![1, 0, 1] };
+        a.validate().unwrap();
+        assert_eq!(a.owned_experts(1), vec![0, 2]);
+        // assignment narrower than the dispatch structures is rejected
+        let d = fig2_expected();
+        assert!(shard(&d, &a).is_err());
+    }
+}

@@ -128,27 +128,20 @@ impl DispatchStructures {
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::dispatch::sort_build;
-
-    /// The paper's Figure 2 worked example.
-    pub fn fig2() -> Vec<u32> {
-        vec![2, 3, 0, 1, 0, 3, 1, 2, 0, 3]
-    }
+    use crate::testkit::fixtures::{fig2_expected, fig2_ids};
 
     #[test]
     fn figure2_example() {
-        let d = sort_build(&fig2(), 5, 4, 2);
-        assert_eq!(d.token_expert_indices, fig2());
-        assert_eq!(d.expert_token_indices, vec![1, 2, 4, 1, 3, 0, 3, 0, 2, 4]);
-        assert_eq!(d.expert_token_offsets, vec![0, 3, 5, 7, 10]);
+        let d = sort_build(&fig2_ids(), 5, 4, 2);
+        assert_eq!(d, fig2_expected());
         assert_eq!(&d.token_index_map[0..2], &[5, 7]); // paper: {5, 7}
         d.validate().unwrap();
     }
 
     #[test]
     fn accessors() {
-        let d = sort_build(&fig2(), 5, 4, 2);
+        let d = sort_build(&fig2_ids(), 5, 4, 2);
         assert_eq!(d.expert_tokens(0), &[1, 2, 4]);
         assert_eq!(d.expert_len(1), 2);
         assert_eq!(d.token_experts(3), &[1, 2]);
@@ -157,7 +150,7 @@ mod tests {
 
     #[test]
     fn validate_catches_corruption() {
-        let good = sort_build(&fig2(), 5, 4, 2);
+        let good = sort_build(&fig2_ids(), 5, 4, 2);
         let mut bad = good.clone();
         bad.expert_token_offsets[1] = 99;
         assert!(bad.validate().is_err());

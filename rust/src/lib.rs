@@ -12,14 +12,24 @@
 //!   policy, the conventional baseline, and a full MoE transformer LM.
 //!   AOT-lowered to HLO text by `compile.aot`.
 //! * **L3** — this crate: the coordinator. PJRT runtime for the AOT
-//!   artifacts, training orchestrator, dispatch-structure twin (paper §4),
-//!   activation-memory model (Figures 3/5), expert-parallel simulator,
-//!   config system, data pipeline, metrics — plus hand-rolled substrates
-//!   (JSON, TOML, PRNG, thread pool, stats, CLI) since this build is
-//!   fully offline.
+//!   artifacts, training orchestrator, dispatch-structure twin (paper §4)
+//!   with per-rank slicing (`dispatch::shard`), activation-memory model
+//!   (Figures 3/5, whole-layer and per-rank), the expert-parallel stack —
+//!   `coordinator::expert_parallel` plans the all-to-all and
+//!   `coordinator::engine` *executes* it: an [`ExecutionEngine`] trait
+//!   with the classic single-rank path and a `ShardedEngine` that runs
+//!   one simulated rank per worker thread with real buffer packing and
+//!   measured communication — plus config (`[train]`/`[ep]`), data
+//!   pipeline, metrics, and hand-rolled substrates (JSON, TOML, PRNG,
+//!   thread pool, stats, CLI) since this build is fully offline.
 //!
-//! Entry points: the `moeblaze` binary (`rust/src/main.rs`), the examples
-//! under `examples/`, and the figure benches under `rust/benches/`.
+//! Entry points: the `moeblaze` binary (`rust/src/main.rs` — see
+//! `ep-bench`/`ep-train` for the sharded engine), the examples under
+//! `examples/`, and the figure benches under `rust/benches/` (incl.
+//! `ep_alltoall`). External crates are vendored under `rust/vendor/`
+//! (`anyhow` subset, `xla` PJRT stub), so `cargo build` needs no network.
+//!
+//! [`ExecutionEngine`]: coordinator::engine::ExecutionEngine
 
 pub mod bench_harness;
 pub mod config;

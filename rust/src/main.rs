@@ -9,7 +9,12 @@
 //!   dispatch-demo [--tokens N --experts E --top-k K]
 //!                                paper §4 structures on a worked example
 //!   dispatch-bench [--tokens N] sort-build vs 3-step build
-//!   ep-sim [--ranks R ...]      expert-parallel all-to-all plan
+//!   ep-sim [--ranks R ...]      expert-parallel all-to-all plan (dry run)
+//!   ep-bench [--ranks 1,2,4,8 ...]
+//!                                execute the plan: sharded engine vs
+//!                                single-rank, bit-equality + measured bytes
+//!   ep-train [--ranks R --steps N --config file.toml ...]
+//!                                SGD on the expert-parallel engine
 //!   train  [--steps N --config file.toml ...]
 //!                                train the MoE LM end-to-end (AOT step)
 //!   inspect                      list artifacts + compile them
@@ -19,22 +24,28 @@
 use anyhow::{bail, Result};
 
 use moeblaze::bench_harness as bh;
+use moeblaze::config::ep::{EpConfig, Placement};
 use moeblaze::config::model::Activation;
 use moeblaze::config::paper::{paper_configs, scaled_configs, PAPER_BLOCK, SCALED_BLOCK};
 use moeblaze::config::toml::Toml;
 use moeblaze::config::train::TrainConfig;
+use moeblaze::coordinator::engine::{engine_from_config, workload_from_config,
+                                    ExecutionEngine, ShardedEngine,
+                                    SingleRankEngine};
 use moeblaze::coordinator::expert_parallel::EpTopology;
-use moeblaze::coordinator::params::ParamStore;
-use moeblaze::coordinator::trainer::Trainer;
+use moeblaze::coordinator::params::{ExpertStore, ParamStore};
+use moeblaze::coordinator::trainer::{EpTrainer, Trainer};
 use moeblaze::data::batcher::Batcher;
 use moeblaze::data::corpus::structured_corpus;
 use moeblaze::data::tokenizer::ByteTokenizer;
 use moeblaze::dispatch::gating::synthetic_gating;
 use moeblaze::dispatch::parallel_build::parallel_build_with_stats;
 use moeblaze::dispatch::sort_build::sort_build;
-use moeblaze::memory::model::{ffn_intermediate_bytes, routing_buffer_bytes,
-                              AccountingMode};
-use moeblaze::memory::report::{memory_figure, render_memory_figure};
+use moeblaze::memory::model::{ffn_intermediate_bytes, per_rank_breakdown,
+                              routing_buffer_bytes, AccountingMode};
+use moeblaze::memory::report::{memory_figure, render_memory_figure,
+                               render_per_rank_memory};
+use moeblaze::metrics::Throughput;
 use moeblaze::runtime::client::Runtime;
 use moeblaze::util::cli::Args;
 use moeblaze::util::prng::Rng;
@@ -67,6 +78,8 @@ fn run(args: &Args) -> Result<()> {
         Some("dispatch-demo") => cmd_dispatch_demo(args),
         Some("dispatch-bench") => cmd_dispatch_bench(args),
         Some("ep-sim") => cmd_ep_sim(args),
+        Some("ep-bench") => cmd_ep_bench(args),
+        Some("ep-train") => cmd_ep_train(args),
         Some("train") => cmd_train(args),
         Some("inspect") => cmd_inspect(),
         Some(other) => bail!("unknown subcommand `{other}` (see rust/src/main.rs header)"),
@@ -79,7 +92,7 @@ fn run(args: &Args) -> Result<()> {
 
 fn print_usage() {
     println!("moeblaze — memory-efficient MoE training (paper reproduction)");
-    println!("subcommands: configs | memory | speed | dispatch-demo | dispatch-bench | ep-sim | train | inspect");
+    println!("subcommands: configs | memory | speed | dispatch-demo | dispatch-bench | ep-sim | ep-bench | ep-train | train | inspect");
     println!("see rust/src/main.rs header or README.md for flags");
 }
 
@@ -233,6 +246,178 @@ fn cmd_ep_sim(args: &Args) -> Result<()> {
     for gamma in [1.0, 1.25, 1.5, 2.0] {
         println!("capacity γ={gamma}: {} tokens dropped (moeblaze: 0 — dropless)",
                  plan.dropped_under_capacity(gamma));
+    }
+    println!("(analytic dry run — `moeblaze ep-bench` executes this plan and \
+              verifies measured bytes against it)");
+    Ok(())
+}
+
+/// Shared `[ep]` config assembly: TOML file (if given) + CLI overrides.
+/// `parse_ranks` is false for ep-bench, where `--ranks` is a sweep list
+/// handled by the caller.
+fn ep_config_from_args(args: &Args, parse_ranks: bool) -> Result<EpConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let t = Toml::load(path).map_err(anyhow::Error::msg)?;
+            EpConfig::from_toml(&t, "ep").map_err(anyhow::Error::msg)?
+        }
+        None => EpConfig::default(),
+    };
+    if parse_ranks {
+        cfg.ranks = args.usize_or("ranks", cfg.ranks).map_err(anyhow::Error::msg)?;
+    } else {
+        cfg.ranks = 1; // validated per sweep entry by the caller
+    }
+    cfg.tokens = args.usize_or("tokens", cfg.tokens).map_err(anyhow::Error::msg)?;
+    cfg.num_experts = args.usize_or("experts", cfg.num_experts).map_err(anyhow::Error::msg)?;
+    cfg.top_k = args.usize_or("top-k", cfg.top_k).map_err(anyhow::Error::msg)?;
+    cfg.d_model = args.usize_or("d-model", cfg.d_model).map_err(anyhow::Error::msg)?;
+    cfg.d_hidden = args.usize_or("d-hidden", cfg.d_hidden).map_err(anyhow::Error::msg)?;
+    cfg.skew = args.f64_or("skew", cfg.skew).map_err(anyhow::Error::msg)?;
+    cfg.seed = args.u64_or("seed", cfg.seed).map_err(anyhow::Error::msg)?;
+    cfg.steps = args.usize_or("steps", cfg.steps).map_err(anyhow::Error::msg)?;
+    cfg.lr = args.f64_or("lr", cfg.lr).map_err(anyhow::Error::msg)?;
+    if let Some(p) = args.get("placement") {
+        cfg.placement = Placement::parse(p).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(p) = args.get("metrics") {
+        cfg.metrics_path = p.to_string();
+    }
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    Ok(cfg)
+}
+
+fn cmd_ep_bench(args: &Args) -> Result<()> {
+    let base = ep_config_from_args(args, false)?;
+    let ranks_list: Vec<usize> = {
+        let raw = args.list("ranks");
+        if raw.is_empty() {
+            vec![1, 2, 4, 8]
+        } else {
+            raw.iter()
+                .map(|s| s.parse().map_err(|_| anyhow::anyhow!("bad rank `{s}`")))
+                .collect::<Result<Vec<_>>>()?
+        }
+    };
+    let (l, e, k, d) = (base.tokens, base.num_experts, base.top_k, base.d_model);
+    println!("ep-bench: L={l} E={e} k={k} d={d} skew={} placement={}",
+             base.skew, base.placement);
+
+    // one workload, every rank count (the same generator EpTrainer uses)
+    let (disp, x, gates, _target) = workload_from_config(&base);
+    let store = ExpertStore::init(e, d, base.d_hidden, base.seed);
+
+    // single-rank reference, computed once for the whole sweep
+    let mut single = SingleRankEngine::new(store.clone());
+    let reference = single
+        .forward(&disp, &x, &gates)
+        .map_err(anyhow::Error::msg)?;
+
+    let bench = Bench::quick();
+    // "step bw": comm bytes over the whole fwd step (incl. expert
+    // compute) — an effective rate, not isolated link bandwidth
+    let mut t = Table::new(["ranks", "bit-equal", "measured bytes",
+                            "planned bytes", "imbalance", "fwd", "step bw"]);
+    let mut last: Option<ShardedEngine> = None;
+    let mut rows_run = 0usize;
+    for &r in &ranks_list {
+        if r == 0 || e % r != 0 {
+            println!("  (skipping R={r}: {e} experts not divisible)");
+            continue;
+        }
+        let topo = EpTopology::with_placement(r, e, base.placement)
+            .map_err(anyhow::Error::msg)?;
+        let plan = topo.plan(&disp, d, 4);
+        let mut engine = ShardedEngine::new(topo, &store, r)
+            .map_err(anyhow::Error::msg)?;
+        let out = engine
+            .forward(&disp, &x, &gates)
+            .map_err(anyhow::Error::msg)?;
+        let bitwise_equal = out.len() == reference.len()
+            && out
+                .iter()
+                .zip(&reference)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+        let traffic = engine.traffic();
+        let s = bench.run(|| {
+            std::hint::black_box(
+                engine.forward(&disp, &x, &gates).expect("fwd"),
+            );
+        });
+        let mut tp = Throughput::new();
+        tp.record(traffic.dispatch_bytes + traffic.combine_bytes,
+                  s.mean_ns / 1e9);
+        t.row([
+            r.to_string(),
+            if bitwise_equal { "yes".into() } else { "NO".to_string() },
+            traffic.dispatch_bytes.to_string(),
+            plan.cross_rank_bytes().to_string(),
+            format!("{:.3}", plan.imbalance()),
+            format!("{:.3} ms", s.mean_ms()),
+            tp.format_brief(),
+        ]);
+        if !bitwise_equal || traffic.dispatch_bytes != plan.cross_rank_bytes() {
+            bail!(
+                "R={r}: sharded engine diverged (bit-equal: {bitwise_equal}, \
+                 measured {} vs planned {})",
+                traffic.dispatch_bytes,
+                plan.cross_rank_bytes()
+            );
+        }
+        last = Some(engine);
+        rows_run += 1;
+    }
+    if rows_run == 0 {
+        bail!("no rank count in {ranks_list:?} divides {e} experts — nothing verified");
+    }
+    println!("{}", t.render());
+    println!("measured dispatch bytes == planned cross-rank bytes on all {rows_run} rows ✓");
+
+    if let Some(engine) = last {
+        let r = engine.ranks();
+        println!("{}", render_per_rank_memory(
+            &format!("per-rank activation memory, measured (R={r})"),
+            &engine.memory_per_rank()));
+        let plan = engine.topo.plan(&disp, d, 4);
+        let total = single.memory_per_rank().remove(0);
+        println!("{}", render_per_rank_memory(
+            &format!("per-rank activation memory, analytic split (R={r})"),
+            &per_rank_breakdown(&total, &plan.per_rank_tokens)));
+    }
+    Ok(())
+}
+
+fn cmd_ep_train(args: &Args) -> Result<()> {
+    let cfg = ep_config_from_args(args, true)?;
+    println!("ep-train: {} ranks ({} placement), L={} E={} k={} d={} h={}, {} steps",
+             cfg.ranks, cfg.placement, cfg.tokens, cfg.num_experts, cfg.top_k,
+             cfg.d_model, cfg.d_hidden, cfg.steps);
+    let engine = engine_from_config(&cfg).map_err(anyhow::Error::msg)?;
+    let mut trainer = EpTrainer::new(engine, cfg.clone())?;
+    let report = trainer.run()?;
+    println!("\ntrained {} steps on `{}`: loss {:.6} -> {:.6}, {:.2} ms/step",
+             report.steps, trainer.engine.name(), report.first_loss,
+             report.final_loss, report.step_ms_mean);
+    let t = report.traffic;
+    println!("last-step traffic: dispatch {}, combine {}, grads {} ({} cross / {} local rows)",
+             human_bytes(t.dispatch_bytes), human_bytes(t.combine_bytes),
+             human_bytes(t.grad_bytes), t.cross_rows, t.local_rows);
+    println!("{}", render_per_rank_memory(
+        "per-rank activation memory (measured, last step)",
+        &trainer.engine.memory_per_rank()));
+
+    if args.has("verify") {
+        // metrics stay with the primary run — the verify run would
+        // otherwise append an overlapping step range to the same JSONL
+        let single_cfg = EpConfig { ranks: 1, metrics_path: String::new(), ..cfg };
+        let engine = engine_from_config(&single_cfg).map_err(anyhow::Error::msg)?;
+        let mut single = EpTrainer::new(engine, single_cfg)?;
+        let sr = single.run()?;
+        if sr.losses == report.losses {
+            println!("verify: single-rank loss curve is bit-identical ✓");
+        } else {
+            bail!("verify FAILED: sharded and single-rank loss curves differ");
+        }
     }
     Ok(())
 }

@@ -3,4 +3,6 @@
 pub mod model;
 pub mod report;
 
-pub use model::{baseline_bytes, moeblaze_bytes, AccountingMode, MemoryBreakdown};
+pub use model::{baseline_bytes, moeblaze_bytes, per_rank_breakdown,
+                AccountingMode, MemoryBreakdown};
+pub use report::render_per_rank_memory;

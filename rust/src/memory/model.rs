@@ -98,6 +98,52 @@ pub fn baseline_bytes(cfg: &MoeConfig, dtype_bytes: u64, mode: AccountingMode) -
     MemoryBreakdown { data_bytes: data, index_bytes: index, extra_bytes: extra }
 }
 
+/// Split an analytic layer breakdown across EP ranks in proportion to
+/// each rank's routed-row load (`AllToAllPlan::per_rank_tokens`), so
+/// Figures 3/5 can be reported per rank. Integer shares are
+/// remainder-corrected: the per-rank rows always sum exactly to the
+/// input breakdown, and a zero-load rank reports zero bytes.
+pub fn per_rank_breakdown(total: &MemoryBreakdown,
+                          per_rank_rows: &[u64]) -> Vec<MemoryBreakdown> {
+    assert!(!per_rank_rows.is_empty());
+    let rows_total: u64 = per_rank_rows.iter().sum();
+    if rows_total == 0 {
+        let mut out = vec![
+            MemoryBreakdown { data_bytes: 0, index_bytes: 0, extra_bytes: 0 };
+            per_rank_rows.len()
+        ];
+        out[0] = *total;
+        return out;
+    }
+    let split = |bytes: u64| -> Vec<u64> {
+        let mut shares: Vec<u64> = per_rank_rows
+            .iter()
+            .map(|&r| bytes * r / rows_total)
+            .collect();
+        let assigned: u64 = shares.iter().sum();
+        // remainder to the most-loaded rank (first on ties) — keeps the
+        // sum exact and the correction on the rank that dominates anyway
+        let busiest = per_rank_rows
+            .iter()
+            .enumerate()
+            .max_by_key(|&(i, &r)| (r, usize::MAX - i))
+            .map(|(i, _)| i)
+            .unwrap();
+        shares[busiest] += bytes - assigned;
+        shares
+    };
+    let data = split(total.data_bytes);
+    let index = split(total.index_bytes);
+    let extra = split(total.extra_bytes);
+    (0..per_rank_rows.len())
+        .map(|r| MemoryBreakdown {
+            data_bytes: data[r],
+            index_bytes: index[r],
+            extra_bytes: extra[r],
+        })
+        .collect()
+}
+
 /// Paper §2.1 worked example: Mem_routing = L·d·k·dtype.
 pub fn routing_buffer_bytes(tokens: u64, d: u64, k: u64, dtype_bytes: u64) -> u64 {
     tokens * d * k * dtype_bytes
@@ -164,5 +210,36 @@ mod tests {
         let m = conf("conf4", Activation::Swiglu);
         let b = moeblaze_bytes(&m, 2, false);
         assert!((b.index_bytes as f64) < 0.02 * b.total() as f64);
+    }
+
+    #[test]
+    fn per_rank_split_sums_exactly() {
+        let m = conf("conf3", Activation::Swiglu);
+        let total = moeblaze_bytes(&m, 2, false);
+        for rows in [vec![10u64, 20, 30, 40], vec![1, 1, 1], vec![7]] {
+            let per = per_rank_breakdown(&total, &rows);
+            assert_eq!(per.len(), rows.len());
+            assert_eq!(per.iter().map(|b| b.data_bytes).sum::<u64>(),
+                       total.data_bytes);
+            assert_eq!(per.iter().map(|b| b.index_bytes).sum::<u64>(),
+                       total.index_bytes);
+            assert_eq!(per.iter().map(MemoryBreakdown::total).sum::<u64>(),
+                       total.total());
+        }
+    }
+
+    #[test]
+    fn per_rank_split_is_proportional() {
+        let total = MemoryBreakdown {
+            data_bytes: 1000,
+            index_bytes: 100,
+            extra_bytes: 0,
+        };
+        let per = per_rank_breakdown(&total, &[0, 300, 100]);
+        assert_eq!(per[0].total(), 0); // zero-load rank holds nothing
+        assert!(per[1].data_bytes > per[2].data_bytes);
+        let per = per_rank_breakdown(&total, &[0, 0]);
+        assert_eq!(per[0].total(), total.total()); // degenerate: all on r0
+        assert_eq!(per[1].total(), 0);
     }
 }

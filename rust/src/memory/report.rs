@@ -1,10 +1,12 @@
-//! Figure 3 / Figure 5 table rendering (activation memory per config).
+//! Figure 3 / Figure 5 table rendering (activation memory per config),
+//! plus the per-rank variant for expert-parallel runs.
 
 use crate::config::model::Activation;
 use crate::config::paper::{paper_configs, scaled_configs, PAPER_BLOCK, SCALED_BLOCK};
 use crate::util::table::{human_bytes, Table};
 
-use super::model::{baseline_bytes, moeblaze_bytes, AccountingMode};
+use super::model::{baseline_bytes, moeblaze_bytes, AccountingMode,
+                   MemoryBreakdown};
 
 /// One row of a memory figure.
 #[derive(Debug, Clone)]
@@ -55,6 +57,37 @@ pub fn render_memory_figure(title: &str, rows: &[MemoryRow]) -> String {
     format!("{title}\n{}", t.render())
 }
 
+/// Render per-rank [`MemoryBreakdown`]s (analytic split or engine-measured)
+/// as a Figures-3/5-style table with a TOTAL row.
+pub fn render_per_rank_memory(title: &str, per_rank: &[MemoryBreakdown]) -> String {
+    let mut t = Table::new(["rank", "data", "index", "comm-buffers", "total", "share"]);
+    let grand: u64 = per_rank.iter().map(MemoryBreakdown::total).sum();
+    for (r, b) in per_rank.iter().enumerate() {
+        let share = if grand == 0 {
+            0.0
+        } else {
+            100.0 * b.total() as f64 / grand as f64
+        };
+        t.row([
+            format!("r{r}"),
+            human_bytes(b.data_bytes),
+            human_bytes(b.index_bytes),
+            human_bytes(b.extra_bytes),
+            human_bytes(b.total()),
+            format!("{share:.1}%"),
+        ]);
+    }
+    t.row([
+        "TOTAL".to_string(),
+        human_bytes(per_rank.iter().map(|b| b.data_bytes).sum()),
+        human_bytes(per_rank.iter().map(|b| b.index_bytes).sum()),
+        human_bytes(per_rank.iter().map(|b| b.extra_bytes).sum()),
+        human_bytes(grand),
+        "100.0%".to_string(),
+    ]);
+    format!("{title}\n{}", t.render())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,5 +122,18 @@ mod tests {
         for c in ["conf1", "conf4", "conf7"] {
             assert!(s.contains(c));
         }
+    }
+
+    #[test]
+    fn per_rank_render_totals() {
+        let per = vec![
+            MemoryBreakdown { data_bytes: 1024, index_bytes: 64, extra_bytes: 0 },
+            MemoryBreakdown { data_bytes: 2048, index_bytes: 64, extra_bytes: 256 },
+        ];
+        let s = render_per_rank_memory("per-rank", &per);
+        assert!(s.contains("r0"));
+        assert!(s.contains("r1"));
+        assert!(s.contains("TOTAL"));
+        assert!(s.contains("100.0%"));
     }
 }

@@ -34,6 +34,37 @@ impl Ema {
     }
 }
 
+/// Bytes-over-time tracker for the exchange benches: accumulate measured
+/// (bytes, seconds) pairs, report aggregate bandwidth.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Throughput {
+    pub bytes: u64,
+    pub seconds: f64,
+}
+
+impl Throughput {
+    pub fn new() -> Throughput {
+        Throughput::default()
+    }
+
+    pub fn record(&mut self, bytes: u64, seconds: f64) {
+        self.bytes += bytes;
+        self.seconds += seconds;
+    }
+
+    /// Aggregate GiB/s (0 if nothing was recorded).
+    pub fn gib_per_sec(&self) -> f64 {
+        if self.seconds <= 0.0 {
+            return 0.0;
+        }
+        self.bytes as f64 / (1024.0 * 1024.0 * 1024.0) / self.seconds
+    }
+
+    pub fn format_brief(&self) -> String {
+        format!("{:.2} GiB/s", self.gib_per_sec())
+    }
+}
+
 /// Step-loop metrics sink: console + optional JSONL file.
 pub struct MetricsSink {
     file: Option<File>,
@@ -95,6 +126,16 @@ impl MetricsSink {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn throughput_aggregates() {
+        let mut t = Throughput::new();
+        assert_eq!(t.gib_per_sec(), 0.0);
+        t.record(1 << 30, 0.5);
+        t.record(1 << 30, 0.5);
+        assert!((t.gib_per_sec() - 2.0).abs() < 1e-9, "{}", t.gib_per_sec());
+        assert!(t.format_brief().contains("GiB/s"));
+    }
 
     #[test]
     fn ema_converges() {

@@ -1,0 +1,45 @@
+//! Shared test fixtures — most importantly the paper's Figure 2 worked
+//! example, referenced by the dispatch builders, the shard layer, and the
+//! execution-engine equivalence tests. One definition, many consumers
+//! (it used to be copy-pasted per test module).
+
+use crate::dispatch::structures::DispatchStructures;
+
+/// Figure 2 dimensions: `L` tokens, `E` experts, `k` experts per token.
+pub const FIG2_TOKENS: usize = 5;
+pub const FIG2_EXPERTS: usize = 4;
+pub const FIG2_TOP_K: usize = 2;
+
+/// The Figure 2 routing decision (token-major top-k expert ids).
+pub fn fig2_ids() -> Vec<u32> {
+    vec![2, 3, 0, 1, 0, 3, 1, 2, 0, 3]
+}
+
+/// The four index structures the paper prints for Figure 2 — ground truth
+/// for both builders (and, via shard/merge, for the EP slicing layer).
+pub fn fig2_expected() -> DispatchStructures {
+    DispatchStructures {
+        num_tokens: FIG2_TOKENS,
+        num_experts: FIG2_EXPERTS,
+        top_k: FIG2_TOP_K,
+        token_expert_indices: fig2_ids(),
+        expert_token_indices: vec![1, 2, 4, 1, 3, 0, 3, 0, 2, 4],
+        expert_token_offsets: vec![0, 3, 5, 7, 10],
+        token_index_map: vec![5, 7, 0, 3, 1, 8, 4, 6, 2, 9],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::sort_build::sort_build;
+
+    #[test]
+    fn fixture_is_internally_consistent() {
+        let expected = fig2_expected();
+        expected.validate().unwrap();
+        // and matches what the baseline builder derives from the ids
+        let built = sort_build(&fig2_ids(), FIG2_TOKENS, FIG2_EXPERTS, FIG2_TOP_K);
+        assert_eq!(built, expected);
+    }
+}

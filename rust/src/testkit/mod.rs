@@ -6,6 +6,8 @@
 
 use crate::util::prng::Rng;
 
+pub mod fixtures;
+
 pub struct Config {
     pub cases: usize,
     pub seed: u64,

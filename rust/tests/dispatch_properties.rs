@@ -4,6 +4,7 @@
 use moeblaze::coordinator::expert_parallel::EpTopology;
 use moeblaze::dispatch::gating::synthetic_gating;
 use moeblaze::dispatch::parallel_build::parallel_build_with_stats;
+use moeblaze::dispatch::shard::{merge, shard, ExpertAssignment};
 use moeblaze::dispatch::sort_build::sort_build;
 use moeblaze::testkit::{check, Config};
 use moeblaze::util::prng::Rng;
@@ -91,6 +92,72 @@ fn ep_plan_conserves_rows() {
               }
               Ok(())
           });
+}
+
+#[test]
+fn shard_merge_round_trips_exactly() {
+    // sharding across R ranks and re-merging reproduces the original
+    // DispatchStructures bit-for-bit, for random (L, E, k, R) and both
+    // placement shapes
+    check(Config { cases: 60, seed: 31, ..Default::default() },
+          "shard-roundtrip",
+          |rng, size| {
+              let ranks = [1usize, 2, 4, 8][rng.usize_below(4)];
+              let e = ranks * (1 + rng.usize_below(4));
+              let l = 1 + rng.usize_below(4 * size.max(1));
+              let k = 1 + rng.usize_below(e.min(3));
+              let skew = rng.range_f64(0.0, 2.0);
+              let ids = synthetic_gating(rng, l, e, k, skew).topk_ids;
+              let strided = rng.usize_below(2) == 1;
+              (ranks, l, e, k, ids, strided)
+          },
+          |&(ranks, l, e, k, ref ids, strided)| {
+              let (d, _) = parallel_build_with_stats(ids, l, e, k, 1);
+              let rank_of: Vec<u32> = (0..e)
+                  .map(|x| {
+                      if strided {
+                          (x % ranks) as u32
+                      } else {
+                          (x / (e / ranks)) as u32
+                      }
+                  })
+                  .collect();
+              let a = ExpertAssignment { ranks, rank_of };
+              let shards = shard(&d, &a)?;
+              if shards.len() != ranks {
+                  return Err(format!("{} shards for {ranks} ranks", shards.len()));
+              }
+              let mut meta = 0usize;
+              for s in &shards {
+                  s.validate()?;
+                  meta += s.local_slots();
+              }
+              if meta != d.slots() {
+                  return Err(format!("shards hold {meta} slots, expected {}",
+                                     d.slots()));
+              }
+              let back = merge(&shards)?;
+              if back != d {
+                  return Err("merge(shard(d)) != d".into());
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn shard_round_trips_under_all_to_one_skew() {
+    // the worst-case dropless load: every token to expert 0
+    for (l, ranks) in [(1usize, 2usize), (63, 4), (256, 8), (1000, 2)] {
+        let ids = vec![0u32; l];
+        let (d, _) = parallel_build_with_stats(&ids, l, 8, 1, 1);
+        let a = ExpertAssignment {
+            ranks,
+            rank_of: (0..8).map(|e| (e % ranks) as u32).collect(),
+        };
+        let shards = shard(&d, &a).unwrap();
+        assert_eq!(shards[0].local_slots(), l, "rank 0 owns expert 0");
+        assert_eq!(merge(&shards).unwrap(), d, "L={l} R={ranks}");
+    }
 }
 
 #[test]

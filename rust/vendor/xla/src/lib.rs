@@ -1,0 +1,313 @@
+//! Vendored stub of the `xla-rs` PJRT surface the runtime layer uses.
+//!
+//! This build environment has no libxla, so every PJRT entry point
+//! ([`PjRtClient::cpu`], [`HloModuleProto::from_text_file`]) returns
+//! [`Error::Unavailable`]; callers degrade exactly as they do for a
+//! missing `artifacts/manifest.json` (the runtime tests skip, the CLI
+//! prints a clear error). [`Literal`] is a real host-side implementation
+//! so tensor round-trips keep working without a device.
+//!
+//! When a real xla-rs + libxla is available, point the `xla` dependency in
+//! the workspace `Cargo.toml` at it; the API here is call-compatible.
+
+use std::fmt;
+use std::path::Path;
+
+/// Errors from the (stubbed) XLA layer.
+#[derive(Debug)]
+pub enum Error {
+    /// The PJRT runtime is not present in this build.
+    Unavailable(&'static str),
+    /// Host-side literal misuse (shape/type mismatch).
+    Literal(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: XLA/PJRT unavailable in this build (vendored stub; \
+                 link a real xla-rs to execute artifacts)"
+            ),
+            Error::Literal(msg) => write!(f, "literal error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// XLA element types (subset).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    pub fn element_size_in_bytes(self) -> usize {
+        match self {
+            ElementType::Pred => 1,
+            ElementType::S32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Host value types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    #[doc(hidden)]
+    fn wrap(data: Vec<Self>) -> Store;
+    #[doc(hidden)]
+    fn unwrap(store: &Store) -> Option<Vec<Self>>;
+}
+
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Store {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl Store {
+    fn len(&self) -> usize {
+        match self {
+            Store::F32(v) => v.len(),
+            Store::I32(v) => v.len(),
+            Store::Tuple(v) => v.len(),
+        }
+    }
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(data: Vec<f32>) -> Store {
+        Store::F32(data)
+    }
+    fn unwrap(store: &Store) -> Option<Vec<f32>> {
+        match store {
+            Store::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(data: Vec<i32>) -> Store {
+        Store::I32(data)
+    }
+    fn unwrap(store: &Store) -> Option<Vec<i32>> {
+        match store {
+            Store::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Dimensions + element type of an array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A host-side tensor value (real implementation — no device needed).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    store: Store,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], store: T::wrap(data.to_vec()) }
+    }
+
+    /// Tuple literal (what `return_tuple=True` artifacts produce).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        let n = parts.len() as i64;
+        Literal { dims: vec![n], store: Store::Tuple(parts) }
+    }
+
+    /// Same data, new dims; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.store, Store::Tuple(_)) {
+            return Err(Error::Literal("cannot reshape a tuple".into()));
+        }
+        let want: i64 = dims.iter().product();
+        if want as usize != self.store.len() {
+            return Err(Error::Literal(format!(
+                "reshape to {:?} wants {} elements, literal has {}",
+                dims,
+                want,
+                self.store.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), store: self.store.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.store {
+            Store::F32(_) => ElementType::F32,
+            Store::I32(_) => ElementType::S32,
+            Store::Tuple(_) => {
+                return Err(Error::Literal("tuple has no array shape".into()))
+            }
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.store)
+            .ok_or_else(|| Error::Literal("element type mismatch in to_vec".into()))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.store {
+            Store::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error::Literal("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Marker for argument types accepted by executable entry points.
+pub trait ExecuteInput {}
+impl ExecuteInput for Literal {}
+impl ExecuteInput for PjRtBuffer {}
+
+/// Device buffer handle (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Parsed HLO module (never constructed by the stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Compiled executable handle (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: ExecuteInput>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b<T: ExecuteInput>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// The stub has no backing runtime: always an error. Callers treat
+    /// this like a missing artifacts directory and degrade gracefully.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unavailable("PjRtClient::buffer_from_host_literal"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<i32>().unwrap(), vec![1]);
+        assert!(t.array_shape().is_err());
+    }
+
+    #[test]
+    fn runtime_is_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,186 @@
+"""Python mirror of rust/src/dispatch/shard.rs + coordinator/engine.rs
+to validate the algorithm (indexing, routes, packing, byte accounting)
+since no Rust toolchain exists in this container."""
+import random
+import numpy as np
+
+def build(ids, l, e, k):
+    # expert-major stable order (token-major scan per expert) — matches
+    # both Rust builders
+    per = [[] for _ in range(e)]
+    for t in range(l):
+        for j in range(k):
+            per[ids[t*k+j]].append((t, t*k+j))
+    offsets = [0]
+    eti, origin_of_pos = [], []
+    for ex in range(e):
+        for (t, o) in per[ex]:
+            eti.append(t); origin_of_pos.append(o)
+        offsets.append(len(eti))
+    tim = [0]*(l*k)
+    for pos, o in enumerate(origin_of_pos):
+        tim[o] = pos
+    return dict(l=l, e=e, k=k, ids=ids, eti=eti, off=offsets, tim=tim)
+
+def validate(d):
+    l, e, k = d['l'], d['e'], d['k']
+    n = l*k
+    assert d['off'][0] == 0 and d['off'][e] == n
+    assert sorted(d['tim']) == list(range(n))
+    for i in range(l):
+        for j in range(k):
+            pos = d['tim'][i*k+j]
+            assert d['eti'][pos] == i
+            ex = d['ids'][i*k+j]
+            assert d['off'][ex] <= pos < d['off'][ex+1]
+
+def rank_of_expert(ex, E, R, strided):
+    return ex % R if strided else ex // (E // R)
+
+def rank_of_token(t, l, R):
+    return min(t*R//l, R-1)
+
+def shard(d, R, strided):
+    l, e, k = d['l'], d['e'], d['k']
+    inv = [0]*(l*k)
+    for slot, pos in enumerate(d['tim']):
+        inv[pos] = slot
+    shards = []
+    for r in range(R):
+        experts = [x for x in range(e) if rank_of_expert(x, e, R, strided) == r]
+        off = [0]; toks = []; orig = []
+        for ex in experts:
+            lo, hi = d['off'][ex], d['off'][ex+1]
+            toks += d['eti'][lo:hi]
+            orig += inv[lo:hi]
+            off.append(len(toks))
+        shards.append(dict(rank=r, experts=experts, off=off, toks=toks, orig=orig))
+    return shards
+
+def merge(shards, l, e, k):
+    lengths = [None]*e
+    for s in shards:
+        for i, ex in enumerate(s['experts']):
+            assert lengths[ex] is None
+            lengths[ex] = s['off'][i+1]-s['off'][i]
+    assert all(v is not None for v in lengths)
+    off = [0]
+    for x in lengths: off.append(off[-1]+x)
+    n = l*k
+    eti = [0]*n; ids = [0]*n; tim = [0]*n; seen = [False]*n
+    for s in shards:
+        for i, ex in enumerate(s['experts']):
+            base = off[ex]
+            for j in range(s['off'][i+1]-s['off'][i]):
+                local = s['off'][i]+j
+                pos = base+j
+                o = s['orig'][local]
+                assert not seen[o]; seen[o] = True
+                eti[pos] = s['toks'][local]
+                ids[o] = ex
+                tim[o] = pos
+    return dict(l=l, e=e, k=k, ids=ids, eti=eti, off=off, tim=tim)
+
+def expert_fwd(W, x):
+    # stand-in per-row expert fn: W[e] @ x (float32) — order-free per row
+    return (W @ x).astype(np.float32)
+
+def single_forward(d, W, x, gates, dm):
+    l, e, k = d['l'], d['e'], d['k']
+    n = l*k
+    ys = np.zeros((n, dm), np.float32)
+    for ex in range(e):
+        for pos in range(d['off'][ex], d['off'][ex+1]):
+            ys[pos] = expert_fwd(W[ex], x[d['eti'][pos]])
+    out = np.zeros((l, dm), np.float32)
+    for i in range(l):
+        for j in range(k):
+            pos = d['tim'][i*k+j]
+            out[i] = out[i] + np.float32(gates[i*k+j]) * ys[pos]
+    return out
+
+def sharded_forward(d, W, x, gates, dm, R, strided):
+    l, e, k = d['l'], d['e'], d['k']
+    shards = shard(d, R, strided)
+    routes = [[[] for _ in range(R)] for _ in range(R)]  # [dst][src]
+    ret_lookup = [None]*(l*k)
+    for dst, s in enumerate(shards):
+        for ls, (tok, o) in enumerate(zip(s['toks'], s['orig'])):
+            src = rank_of_token(tok, l, R)
+            ret_lookup[o] = (dst, len(routes[dst][src]))
+            routes[dst][src].append((ls, tok, o))
+    # phase A: pack
+    send = [[np.stack([x[t] for (_, t, _) in routes[dst][src]]) if routes[dst][src]
+             else np.zeros((0, dm), np.float32)
+             for dst in range(R)] for src in range(R)]
+    dispatch_bytes = sum(send[s][t].size*4 for s in range(R) for t in range(R) if s != t)
+    cross_rows = sum(len(routes[t][s]) for s in range(R) for t in range(R) if s != t)
+    # phase B: unpack + compute + pack return
+    rets = []
+    for dst in range(R):
+        s = shards[dst]
+        nl = len(s['toks'])
+        xs = np.zeros((nl, dm), np.float32)
+        for src in range(R):
+            for i, (ls, tok, o) in enumerate(routes[dst][src]):
+                xs[ls] = send[src][dst][i]
+        ys = np.zeros((nl, dm), np.float32)
+        for i, ex in enumerate(s['experts']):
+            for ls in range(s['off'][i], s['off'][i+1]):
+                ys[ls] = expert_fwd(W[ex], xs[ls])
+        rets.append([np.stack([ys[ls] for (ls, _, _) in routes[dst][src]]) if routes[dst][src]
+                     else np.zeros((0, dm), np.float32) for src in range(R)])
+    # phase C: combine on home ranks
+    out = np.zeros((l, dm), np.float32)
+    for home in range(R):
+        for t in range(l):
+            if rank_of_token(t, l, R) != home:
+                continue
+            for j in range(k):
+                slot = t*k+j
+                dst, idx = ret_lookup[slot]
+                out[t] = out[t] + np.float32(gates[slot]) * rets[dst][home][idx]
+    return out, dispatch_bytes, cross_rows
+
+def plan_bytes(d, R, strided, dm):
+    cross = 0
+    for ex in range(d['e']):
+        dst = rank_of_expert(ex, d['e'], R, strided)
+        for pos in range(d['off'][ex], d['off'][ex+1]):
+            if rank_of_token(d['eti'][pos], d['l'], R) != dst:
+                cross += 1
+    return cross*dm*4, cross
+
+random.seed(0)
+for case in range(300):
+    R = random.choice([1, 2, 4, 8])
+    e = R*random.randint(1, 4)
+    l = random.randint(1, 80)
+    k = random.randint(1, min(e, 3))
+    strided = random.random() < 0.5
+    if random.random() < 0.1:
+        ids = [0]*(l*k)  # all-to-one (k must be 1 for distinctness)
+        k = 1
+        ids = [0]*l
+    else:
+        ids = []
+        for _ in range(l):
+            ids += random.sample(range(e), k)
+    d = build(ids, l, e, k)
+    validate(d)
+    # shard/merge round trip
+    m = merge(shard(d, R, strided), l, e, k)
+    assert m == d, f"round-trip failed case {case}"
+    # engine equivalence + measured bytes
+    dm = 4
+    rng = np.random.default_rng(case)
+    W = rng.standard_normal((e, dm, dm)).astype(np.float32)
+    x = rng.standard_normal((l, dm)).astype(np.float32)
+    gates = rng.random(l*k).astype(np.float32)
+    a = single_forward(d, W, x, gates, dm)
+    b, measured, cross_rows = sharded_forward(d, W, x, gates, dm, R, strided)
+    assert a.tobytes() == b.tobytes(), f"bit mismatch case {case} R={R}"
+    pb, pc = plan_bytes(d, R, strided, dm)
+    assert measured == pb and cross_rows == pc, \
+        f"bytes case {case}: measured {measured} vs plan {pb}"
+print("300 fuzz cases OK: round-trip exact, outputs bit-identical, measured == planned bytes")
