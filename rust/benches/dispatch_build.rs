@@ -20,7 +20,8 @@ fn main() {
                         max_total: std::time::Duration::from_secs(6) };
 
     println!("== L sweep (E=16, k=4, mildly skewed routing) ==");
-    let mut t = Table::new(["L", "n=L*k", "sort-build", "3-step build", "speedup", "passes", "MiB moved"]);
+    let mut t = Table::new(["L", "n=L*k", "sort-build", "3-step build", "speedup",
+                            "passes", "MiB moved"]);
     for l in [1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18] {
         let (e, k) = (16usize, 4usize);
         let mut rng = Rng::new(l as u64);

@@ -27,8 +27,10 @@ fn main() {
     let mut inputs = inputs_from_specs(&exe.inputs, 7);
     // step/lr scalars must be sane (they are the 3P and 3P+1 inputs)
     let p = lm.params.len();
-    inputs[3 * p] = moeblaze::runtime::host::HostTensor::F32 { shape: vec![], data: vec![1.0] };
-    inputs[3 * p + 1] = moeblaze::runtime::host::HostTensor::F32 { shape: vec![], data: vec![1e-3] };
+    inputs[3 * p] =
+        moeblaze::runtime::host::HostTensor::F32 { shape: vec![], data: vec![1.0] };
+    inputs[3 * p + 1] =
+        moeblaze::runtime::host::HostTensor::F32 { shape: vec![], data: vec![1e-3] };
     let s = bench.run(|| {
         exe.run(&inputs).expect("lm step");
     });

@@ -1,19 +1,29 @@
 //! Bench: the expert-parallel all-to-all, executed (not estimated).
 //!
-//! Sweeps rank counts × router skew × placement policy, runs the sharded
-//! engine's dispatch→compute→combine forward with real buffer packing,
-//! and reports *measured* exchanged bytes (asserted equal to the analytic
-//! plan on every combination), load imbalance, and exchange bandwidth.
+//! Part 1 sweeps rank counts × router skew × placement policy, runs the
+//! sharded engine's dispatch→compute→combine forward with real buffer
+//! packing, and reports *measured* exchanged bytes (asserted equal to
+//! the analytic plan on every combination), load imbalance, and
+//! exchange bandwidth.
+//!
+//! Part 2 sweeps the step-session axes: checkpoint policy × grad_accum,
+//! running full forward+backward sessions and reporting the *peak*
+//! data-class bytes any microbatch session held across the fwd→bwd
+//! boundary (the engine's per-session accounting, sampled while the
+//! saved tensors are resident — the paper's saved-tensor metric, so
+//! transient backward re-materialization under `recompute-all` shows up
+//! in the `recompute bytes` column, not in peak data).
 //!
 //! Run: `cargo bench --bench ep_alltoall`
 
 use moeblaze::config::ep::Placement;
-use moeblaze::coordinator::engine::{ExecutionEngine, ShardedEngine};
+use moeblaze::coordinator::engine::{ExecutionEngine, ShardedEngine, StepBatch};
 use moeblaze::coordinator::expert_parallel::EpTopology;
 use moeblaze::coordinator::params::ExpertStore;
 use moeblaze::dispatch::gating::synthetic_gating;
 use moeblaze::dispatch::parallel_build::parallel_build;
-use moeblaze::metrics::Throughput;
+use moeblaze::memory::model::CheckpointPolicy;
+use moeblaze::metrics::{Peak, Throughput};
 use moeblaze::util::prng::Rng;
 use moeblaze::util::stats::Bench;
 use moeblaze::util::table::{human_bytes, Table};
@@ -28,6 +38,7 @@ fn main() {
         let gating = synthetic_gating(&mut rng, l, e, k, skew);
         let disp = parallel_build(&gating.topk_ids, l, e, k);
         let x = rng.normal_vec(l * d, 1.0);
+        let batch = StepBatch::new(disp, x, gating.gates).expect("batch");
 
         println!("== L={l} E={e} k={k} d={d} — {skew_label} routing (skew {skew}) ==");
         // "step bw": comm bytes over the whole fwd step (incl. expert
@@ -38,20 +49,17 @@ fn main() {
             for ranks in [1usize, 2, 4, 8] {
                 let topo = EpTopology::with_placement(ranks, e, placement)
                     .expect("topology");
-                let plan = topo.plan(&disp, d, 4);
+                let plan = topo.plan(batch.disp(), d, 4);
                 let mut engine = ShardedEngine::new(topo, &store, ranks)
                     .expect("engine");
                 let s = bench.run(|| {
-                    std::hint::black_box(
-                        engine.forward(&disp, &x, &gating.gates).expect("fwd"),
-                    );
+                    std::hint::black_box(engine.forward(&batch).expect("fwd"));
                 });
                 let traffic = engine.traffic();
                 assert_eq!(traffic.dispatch_bytes, plan.cross_rank_bytes(),
                            "measured bytes diverged from the plan at R={ranks}");
                 let mut tp = Throughput::new();
-                tp.record(traffic.dispatch_bytes + traffic.combine_bytes,
-                          s.mean_ns / 1e9);
+                tp.record(traffic.dispatch_bytes + traffic.combine_bytes, s.mean_ns / 1e9);
                 t.row([
                     ranks.to_string(),
                     placement.name().to_string(),
@@ -64,6 +72,77 @@ fn main() {
             }
         }
         println!("{}", t.render());
+        assert_eq!(batch.copy_count(), 0, "sweep deep-copied the workload");
     }
     println!("measured == planned cross-rank bytes on every combination ✓");
+
+    policy_accum_matrix(&store, l, e, k, d, h);
+}
+
+/// Checkpoint-policy × grad_accum matrix: full fwd+bwd sessions, peak
+/// resident data bytes per policy (high-water mark across microbatches).
+fn policy_accum_matrix(store: &ExpertStore, l: usize, e: usize, k: usize, d: usize, h: usize) {
+    let ranks = 4usize;
+    let mut rng = Rng::new(11);
+    let gating = synthetic_gating(&mut rng, l, e, k, 0.7);
+    let disp = parallel_build(&gating.topk_ids, l, e, k);
+    let x = rng.normal_vec(l * d, 1.0);
+    let batch = StepBatch::new(disp, x, gating.gates).expect("batch");
+    let d_out_full = rng.normal_vec(l * d, 1.0);
+    let bench = Bench::quick();
+
+    println!("== step-session matrix: policy × grad_accum (R={ranks}, L={l}) ==");
+    let mut t = Table::new(["policy", "accum", "peak data", "peak/slot",
+                            "recompute bytes", "fwd+bwd"]);
+    let mut peak_by_policy = Vec::new();
+    for policy in CheckpointPolicy::ALL {
+        let mut policy_peak = 0u64;
+        for accum in [1usize, 2, 4] {
+            let topo = EpTopology::new(ranks, e).expect("topology");
+            let mut engine = ShardedEngine::with_policy(topo, store, ranks, policy)
+                .expect("engine");
+            let micros = batch.split(accum).expect("split");
+            let mut peak = Peak::new();
+            let mut recompute = 0u64;
+            let s = bench.run(|| {
+                let mut grads = engine.zero_grads();
+                for (off, mb) in &micros {
+                    let handle = engine.forward(mb).expect("fwd");
+                    let data: u64 = engine
+                        .memory_per_rank()
+                        .iter()
+                        .map(|m| m.data_bytes)
+                        .sum();
+                    peak.observe(data);
+                    let lm = mb.num_tokens();
+                    let d_out = &d_out_full[*off * d..(*off + lm) * d];
+                    handle
+                        .backward_into(&mut engine, d_out, &mut grads)
+                        .expect("bwd");
+                }
+                recompute = engine.traffic().recompute_bytes;
+                std::hint::black_box(&grads);
+            });
+            policy_peak = policy_peak.max(peak.get());
+            t.row([
+                policy.name().to_string(),
+                accum.to_string(),
+                human_bytes(peak.get()),
+                human_bytes(peak.get() / (l as u64 * k as u64 / accum as u64)),
+                human_bytes(recompute),
+                format!("{:.3} ms", s.mean_ms()),
+            ]);
+            for (_, mb) in &micros {
+                assert_eq!(mb.copy_count(), 0, "matrix deep-copied a microbatch");
+            }
+        }
+        peak_by_policy.push(policy_peak);
+    }
+    println!("{}", t.render());
+    assert!(peak_by_policy[0] > peak_by_policy[1]
+                && peak_by_policy[1] > peak_by_policy[2],
+            "peak data bytes not strictly decreasing across policies: \
+             {peak_by_policy:?}");
+    println!("peak data bytes strictly decrease save-all → save-inputs → \
+              recompute-all ✓ (h={h})");
 }

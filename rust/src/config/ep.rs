@@ -6,6 +6,8 @@
 
 use std::fmt;
 
+use crate::memory::model::CheckpointPolicy;
+
 use super::toml::Toml;
 
 /// Expert→rank placement policy.
@@ -61,9 +63,16 @@ pub struct EpConfig {
     /// router skew for the synthetic gating (0 = balanced)
     pub skew: f64,
     pub seed: u64,
-    /// ep-train: optimizer steps and SGD learning rate
+    /// ep-train: optimizer steps and learning rate
     pub steps: usize,
     pub lr: f64,
+    /// microbatches per optimizer step (contiguous token splits of the
+    /// global batch; loss curves are bit-invariant to this)
+    pub grad_accum: usize,
+    /// optimizer name (`sgd` | `adam`)
+    pub optimizer: String,
+    /// fwd→bwd save/recompute policy (engine- and memory-model axis)
+    pub checkpoint: CheckpointPolicy,
     /// metrics output (JSONL); empty = stdout only
     pub metrics_path: String,
 }
@@ -82,6 +91,9 @@ impl Default for EpConfig {
             seed: 1,
             steps: 20,
             lr: 5e-2,
+            grad_accum: 1,
+            optimizer: "sgd".into(),
+            checkpoint: CheckpointPolicy::default(),
             metrics_path: String::new(),
         }
     }
@@ -116,6 +128,14 @@ impl EpConfig {
         if !(self.skew >= 0.0 && self.skew.is_finite()) {
             return Err(format!("ep.skew must be >= 0, got {}", self.skew));
         }
+        if self.grad_accum == 0 || self.grad_accum > self.tokens {
+            return Err(format!(
+                "ep.grad_accum {} must be in 1..={} (tokens)",
+                self.grad_accum, self.tokens
+            ));
+        }
+        // single source of truth for optimizer names: the registry
+        let _ = crate::coordinator::optim::optimizer_from_name(&self.optimizer)?;
         Ok(())
     }
 
@@ -136,6 +156,11 @@ impl EpConfig {
             seed: t.usize_or(&key("seed"), d.seed as usize) as u64,
             steps: t.usize_or(&key("steps"), d.steps),
             lr: t.f64_or(&key("lr"), d.lr),
+            grad_accum: t.usize_or(&key("grad_accum"), d.grad_accum),
+            optimizer: t.str_or(&key("optimizer"), &d.optimizer),
+            checkpoint: CheckpointPolicy::parse(
+                &t.str_or(&key("checkpoint"), d.checkpoint.name()),
+            )?,
             metrics_path: t.str_or(&key("metrics_path"), &d.metrics_path),
         };
         cfg.validate()?;
@@ -182,6 +207,41 @@ mod tests {
         assert_eq!(c.placement, Placement::Strided);
         assert_eq!(c.skew, 1.5);
         assert_eq!(c.top_k, EpConfig::default().top_k);
+        assert_eq!(c.grad_accum, 1);
+        assert_eq!(c.optimizer, "sgd");
+        assert_eq!(c.checkpoint, CheckpointPolicy::SaveInputs);
+    }
+
+    #[test]
+    fn from_toml_step_session_keys() {
+        let t = Toml::parse(
+            "[ep]\ngrad_accum = 4\noptimizer = \"adam\"\ncheckpoint = \"recompute-all\"",
+        )
+        .unwrap();
+        let c = EpConfig::from_toml(&t, "ep").unwrap();
+        assert_eq!(c.grad_accum, 4);
+        assert_eq!(c.optimizer, "adam");
+        assert_eq!(c.checkpoint, CheckpointPolicy::RecomputeAll);
+        assert!(Toml::parse("[ep]\ncheckpoint = \"maybe\"")
+            .map(|t| EpConfig::from_toml(&t, "ep"))
+            .unwrap()
+            .is_err());
+    }
+
+    #[test]
+    fn grad_accum_and_optimizer_validation() {
+        assert!(EpConfig { grad_accum: 0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(EpConfig { grad_accum: 2048, tokens: 1024, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(EpConfig { optimizer: "lion".into(), ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(EpConfig { optimizer: "Adam".into(), ..Default::default() }
+            .validate()
+            .is_ok());
     }
 
     #[test]

@@ -43,26 +43,124 @@ impl PaperConfig {
 /// Paper Table 1, full scale.
 pub fn paper_configs() -> Vec<PaperConfig> {
     vec![
-        PaperConfig { name: "conf1", input_d: 512, num_experts: 4, top_k: 1, batch: 32, seq_len: 2048 },
-        PaperConfig { name: "conf2", input_d: 1024, num_experts: 8, top_k: 2, batch: 32, seq_len: 2048 },
-        PaperConfig { name: "conf3", input_d: 1024, num_experts: 16, top_k: 4, batch: 32, seq_len: 2048 },
-        PaperConfig { name: "conf4", input_d: 2048, num_experts: 16, top_k: 4, batch: 32, seq_len: 1024 },
-        PaperConfig { name: "conf5", input_d: 512, num_experts: 16, top_k: 4, batch: 32, seq_len: 1024 },
-        PaperConfig { name: "conf6", input_d: 1024, num_experts: 16, top_k: 4, batch: 16, seq_len: 1024 },
-        PaperConfig { name: "conf7", input_d: 2048, num_experts: 8, top_k: 4, batch: 16, seq_len: 512 },
+        PaperConfig {
+            name: "conf1",
+            input_d: 512,
+            num_experts: 4,
+            top_k: 1,
+            batch: 32,
+            seq_len: 2048,
+        },
+        PaperConfig {
+            name: "conf2",
+            input_d: 1024,
+            num_experts: 8,
+            top_k: 2,
+            batch: 32,
+            seq_len: 2048,
+        },
+        PaperConfig {
+            name: "conf3",
+            input_d: 1024,
+            num_experts: 16,
+            top_k: 4,
+            batch: 32,
+            seq_len: 2048,
+        },
+        PaperConfig {
+            name: "conf4",
+            input_d: 2048,
+            num_experts: 16,
+            top_k: 4,
+            batch: 32,
+            seq_len: 1024,
+        },
+        PaperConfig {
+            name: "conf5",
+            input_d: 512,
+            num_experts: 16,
+            top_k: 4,
+            batch: 32,
+            seq_len: 1024,
+        },
+        PaperConfig {
+            name: "conf6",
+            input_d: 1024,
+            num_experts: 16,
+            top_k: 4,
+            batch: 16,
+            seq_len: 1024,
+        },
+        PaperConfig {
+            name: "conf7",
+            input_d: 2048,
+            num_experts: 8,
+            top_k: 4,
+            batch: 16,
+            seq_len: 512,
+        },
     ]
 }
 
 /// CPU-bench scale (ratios preserved: d ÷ 8, batch → 4/2, seq ÷ 16).
 pub fn scaled_configs() -> Vec<PaperConfig> {
     vec![
-        PaperConfig { name: "conf1", input_d: 64, num_experts: 4, top_k: 1, batch: 4, seq_len: 128 },
-        PaperConfig { name: "conf2", input_d: 128, num_experts: 8, top_k: 2, batch: 4, seq_len: 128 },
-        PaperConfig { name: "conf3", input_d: 128, num_experts: 16, top_k: 4, batch: 4, seq_len: 128 },
-        PaperConfig { name: "conf4", input_d: 256, num_experts: 16, top_k: 4, batch: 4, seq_len: 64 },
-        PaperConfig { name: "conf5", input_d: 64, num_experts: 16, top_k: 4, batch: 4, seq_len: 64 },
-        PaperConfig { name: "conf6", input_d: 128, num_experts: 16, top_k: 4, batch: 2, seq_len: 64 },
-        PaperConfig { name: "conf7", input_d: 256, num_experts: 8, top_k: 4, batch: 2, seq_len: 32 },
+        PaperConfig {
+            name: "conf1",
+            input_d: 64,
+            num_experts: 4,
+            top_k: 1,
+            batch: 4,
+            seq_len: 128,
+        },
+        PaperConfig {
+            name: "conf2",
+            input_d: 128,
+            num_experts: 8,
+            top_k: 2,
+            batch: 4,
+            seq_len: 128,
+        },
+        PaperConfig {
+            name: "conf3",
+            input_d: 128,
+            num_experts: 16,
+            top_k: 4,
+            batch: 4,
+            seq_len: 128,
+        },
+        PaperConfig {
+            name: "conf4",
+            input_d: 256,
+            num_experts: 16,
+            top_k: 4,
+            batch: 4,
+            seq_len: 64,
+        },
+        PaperConfig {
+            name: "conf5",
+            input_d: 64,
+            num_experts: 16,
+            top_k: 4,
+            batch: 4,
+            seq_len: 64,
+        },
+        PaperConfig {
+            name: "conf6",
+            input_d: 128,
+            num_experts: 16,
+            top_k: 4,
+            batch: 2,
+            seq_len: 64,
+        },
+        PaperConfig {
+            name: "conf7",
+            input_d: 256,
+            num_experts: 8,
+            top_k: 4,
+            batch: 2,
+            seq_len: 32,
+        },
     ]
 }
 

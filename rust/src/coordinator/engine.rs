@@ -1,44 +1,234 @@
-//! Rank-sharded expert-parallel execution engine.
+//! Rank-sharded expert-parallel execution engine — the step-session API.
 //!
-//! [`ExecutionEngine`] abstracts "run one MoE layer step over routed
-//! activations" so the coordinator no longer assumes one rank and one
-//! executable:
+//! # Step-session lifecycle
 //!
-//! * [`SingleRankEngine`] — the existing single-rank path: all experts
-//!   local, gather → expert FFN → combine, no communication.
-//! * [`ShardedEngine`] — R simulated ranks, each driven by one worker
-//!   thread of the hand-rolled pool. Every step it (i) slices the
-//!   [`DispatchStructures`] into per-rank views (`dispatch::shard`),
-//!   (ii) executes the dispatch all-to-all with *real* buffer packing
-//!   and unpacking so exchanged bytes are measured rather than
-//!   estimated, (iii) runs per-rank expert compute and the combine
-//!   scatter, and (iv) mirrors the exchange for routed gradients in
-//!   `backward_update`.
+//! One training step is a *session* between a caller-owned workload and
+//! an engine:
 //!
-//! Both engines are bit-deterministic: identical inputs give bitwise
-//! identical outputs and parameter updates for any R and any placement,
-//! because per-row expert math is order-free and every accumulation
-//! (combine over k, gradients over a segment) runs in the same fixed
-//! order. `rust/tests/ep_engine.rs` pins this, and pins the measured
-//! dispatch traffic to [`AllToAllPlan::cross_rank_bytes`] — the planner
-//! in `expert_parallel` is this engine's dry-run mode.
+//! ```text
+//! StepBatch::new(disp, x, gates)        built once, Arc-shared, never
+//!   │                                   copied again (copy counter = 0)
+//!   ▼
+//! engine.forward(&batch) ─────────────► StepHandle   (session opens)
+//!   │                                     │ output()
+//!   ▼                                     ▼
+//! handle.backward(engine, d_out) ──────► ExpertGrads (session ends)
+//!   │        or backward_into(…, &mut grads) to accumulate microbatches
+//!   ▼
+//! optimizer.step(&grads, lr) ──────────► delta
+//! engine.apply_update(&delta)
+//! ```
+//!
+//! [`StepHandle`] is a typestate token: it is the only way to reach the
+//! backward pass, it is consumed by it, and it is invalidated by any
+//! newer `forward` — "backward without forward" and "backward against
+//! stale saved state" are unrepresentable rather than runtime footguns.
+//! Gradient computation is decoupled from the update ([`ExpertGrads`] +
+//! the `coordinator::optim::Optimizer` trait), which is what makes
+//! grad-accum microbatching and Adam possible.
+//!
+//! # Checkpoint policies
+//!
+//! What a session saves across the fwd→bwd boundary is the measurable
+//! [`CheckpointPolicy`] axis (per routed slot, f32):
+//!
+//! | policy         | saved                  | bytes/slot | bwd extra work        |
+//! |----------------|------------------------|------------|-----------------------|
+//! | `SaveAll`      | inputs + pre-act + act | `4(d+2h)`  | none                  |
+//! | `SaveInputs`   | routed inputs          | `4d`       | recompute hidden      |
+//! | `RecomputeAll` | nothing                | `0`        | re-gather + recompute |
+//!
+//! All three are bit-identical in outputs and gradients; they differ
+//! only in `memory_per_rank()` `data` bytes and, for `RecomputeAll` on
+//! the sharded engine, in `Traffic::recompute_bytes` (the backward
+//! re-runs the dispatch exchange). `SaveInputs` is the paper's
+//! Algorithm-1 policy and the default.
+//!
+//! # Engines
+//!
+//! * [`SingleRankEngine`] — all experts local; the bit-exact reference.
+//! * [`ShardedEngine`] — R simulated ranks over the worker pool, real
+//!   buffer packing, measured communication. Per-batch routing plans
+//!   (shards, routes, return lookup) are cached by `StepBatch` identity,
+//!   so repeated steps over one workload re-derive nothing.
+//!
+//! Both are bit-deterministic for any R and placement; every
+//! accumulation runs in a fixed order, and `backward_into` continues an
+//! existing [`ExpertGrads`] value in that same order — accumulating A
+//! contiguous microbatches performs the identical float-op sequence as
+//! one full batch. `rust/tests/ep_engine.rs` pins all of this, plus
+//! measured dispatch traffic == [`AllToAllPlan::cross_rank_bytes`].
 //!
 //! [`AllToAllPlan::cross_rank_bytes`]: super::expert_parallel::AllToAllPlan::cross_rank_bytes
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::config::ep::EpConfig;
 use crate::dispatch::gating::synthetic_gating;
 use crate::dispatch::parallel_build::parallel_build;
 use crate::dispatch::shard::{shard, RankShard};
 use crate::dispatch::structures::DispatchStructures;
-use crate::memory::model::MemoryBreakdown;
+use crate::memory::model::{CheckpointPolicy, MemoryBreakdown};
 use crate::util::prng::Rng;
-use crate::util::threadpool::par_map;
+use crate::util::threadpool::{par_map, scope_chunks};
 
 use super::expert_parallel::EpTopology;
-use super::params::{ExpertParams, ExpertStore, RankExperts};
+use super::params::{ExpertGrads, ExpertParams, ExpertStore, RankExperts};
 
-/// Bytes and rows moved by the last forward/backward pass, measured at
+static NEXT_BATCH_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_ENGINE_TAG: AtomicU64 = AtomicU64::new(1);
+
+// -- step batch -------------------------------------------------------------
+
+struct BatchPayload {
+    id: u64,
+    disp: DispatchStructures,
+    x: Vec<f32>,
+    gates: Vec<f32>,
+    d_model: usize,
+    deep_copies: AtomicU64,
+}
+
+/// One step's workload — dispatch structures, token activations `x`
+/// (L, d), and combine gates (L·k) — behind an `Arc`. Built once by the
+/// caller, then shared zero-copy across steps, engines, and simulated
+/// ranks; `clone`/[`share`](StepBatch::share) duplicate the handle, not
+/// the payload. The only way to duplicate the payload is the explicit
+/// [`deep_copy`](StepBatch::deep_copy), which increments
+/// [`copy_count`](StepBatch::copy_count) — the counter `EpTrainer`
+/// asserts stays at zero across a whole training run.
+pub struct StepBatch {
+    inner: Arc<BatchPayload>,
+}
+
+impl Clone for StepBatch {
+    fn clone(&self) -> StepBatch {
+        self.share()
+    }
+}
+
+impl StepBatch {
+    /// Validate and wrap a workload. `d_model` is inferred from
+    /// `x.len() / disp.num_tokens`.
+    pub fn new(disp: DispatchStructures, x: Vec<f32>,
+               gates: Vec<f32>) -> Result<StepBatch, String> {
+        if disp.num_tokens == 0 {
+            return Err("StepBatch needs at least one token".into());
+        }
+        if x.is_empty() || x.len() % disp.num_tokens != 0 {
+            return Err(format!(
+                "x has {} elements, not a positive multiple of L = {}",
+                x.len(),
+                disp.num_tokens
+            ));
+        }
+        if gates.len() != disp.slots() {
+            return Err(format!(
+                "gates has {} elements, expected L·k = {}",
+                gates.len(),
+                disp.slots()
+            ));
+        }
+        let d_model = x.len() / disp.num_tokens;
+        Ok(StepBatch {
+            inner: Arc::new(BatchPayload {
+                id: NEXT_BATCH_ID.fetch_add(1, Ordering::Relaxed),
+                disp,
+                x,
+                gates,
+                d_model,
+                deep_copies: AtomicU64::new(0),
+            }),
+        })
+    }
+
+    /// Stable identity of the payload (shared by all handles to it).
+    pub fn id(&self) -> u64 {
+        self.inner.id
+    }
+
+    pub fn disp(&self) -> &DispatchStructures {
+        &self.inner.disp
+    }
+
+    pub fn x(&self) -> &[f32] {
+        &self.inner.x
+    }
+
+    pub fn gates(&self) -> &[f32] {
+        &self.inner.gates
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        self.inner.disp.num_tokens
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.inner.d_model
+    }
+
+    /// Share the payload: a reference-counted handle, no data copied.
+    pub fn share(&self) -> StepBatch {
+        StepBatch { inner: Arc::clone(&self.inner) }
+    }
+
+    /// Duplicate the payload into a fresh batch, counting the copy on
+    /// *this* batch's [`copy_count`]. Nothing in the engine or trainer
+    /// paths calls this — it exists so the zero-copy property is
+    /// observable rather than assumed.
+    ///
+    /// [`copy_count`]: StepBatch::copy_count
+    pub fn deep_copy(&self) -> Result<StepBatch, String> {
+        self.inner.deep_copies.fetch_add(1, Ordering::Relaxed);
+        StepBatch::new(self.inner.disp.clone(), self.inner.x.clone(), self.inner.gates.clone())
+    }
+
+    /// Payload copies made since construction (deep copies only; shares
+    /// are free and uncounted).
+    pub fn copy_count(&self) -> u64 {
+        self.inner.deep_copies.load(Ordering::Relaxed)
+    }
+
+    /// Split into `parts` contiguous token-range microbatches, returned
+    /// as `(token_offset, micro_batch)` in token order. Each microbatch
+    /// is a fresh `StepBatch` built once (construction, not a per-step
+    /// copy). Contiguous splits keep every expert's row segment in the
+    /// same relative order as the full batch, which is what makes
+    /// grad-accum bit-identical to the unsplit step.
+    pub fn split(&self, parts: usize) -> Result<Vec<(usize, StepBatch)>, String> {
+        let l = self.num_tokens();
+        if parts == 0 || parts > l {
+            return Err(format!("cannot split {l} tokens into {parts} microbatches"));
+        }
+        let (d, k, e) = (self.d_model(), self.inner.disp.top_k, self.inner.disp.num_experts);
+        let mut out = Vec::with_capacity(parts);
+        for m in 0..parts {
+            let t0 = l * m / parts;
+            let t1 = l * (m + 1) / parts;
+            let lm = t1 - t0;
+            let ids = &self.inner.disp.token_expert_indices[t0 * k..t1 * k];
+            let disp = parallel_build(ids, lm, e, k);
+            let batch = StepBatch::new(
+                disp,
+                self.inner.x[t0 * d..t1 * d].to_vec(),
+                self.inner.gates[t0 * k..t1 * k].to_vec(),
+            )?;
+            out.push((t0, batch));
+        }
+        Ok(out)
+    }
+}
+
+// -- traffic ----------------------------------------------------------------
+
+/// Bytes and rows moved by the current/last step session, measured at
 /// the buffers (f32 rows, `4·d` bytes each).
+///
+/// Reset semantics: every counter resets when `forward` starts and
+/// accumulates across that session's backward — so after `forward` the
+/// backward-side fields (`grad_bytes`, `recompute_bytes`) read 0, and
+/// after `backward` the whole struct describes exactly one step.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct Traffic {
     /// dispatch all-to-all: routed activation rows crossing ranks (fwd)
@@ -47,35 +237,96 @@ pub struct Traffic {
     pub combine_bytes: u64,
     /// routed gradient rows crossing ranks (bwd mirror of dispatch)
     pub grad_bytes: u64,
+    /// `RecomputeAll` only: the backward's re-run of the dispatch
+    /// exchange to rebuild routed inputs it did not save
+    pub recompute_bytes: u64,
     /// routed rows that crossed a rank boundary in the fwd dispatch
     pub cross_rows: u64,
     /// routed rows that stayed on their home rank
     pub local_rows: u64,
 }
 
-/// One MoE-layer step executor (forward + SGD backward on expert FFNs).
+// -- step handle ------------------------------------------------------------
+
+/// Proof that a forward pass ran and its saved state is current: the
+/// only ticket into [`ExecutionEngine::backward_into`], consumed by it.
+/// A newer `forward` on the same engine invalidates outstanding handles
+/// (their backward returns an error); dropping a handle abandons the
+/// session (inference-style forward).
+#[derive(Debug)]
+pub struct StepHandle {
+    engine_tag: u64,
+    session: u64,
+    out: Vec<f32>,
+}
+
+impl StepHandle {
+    /// Combined (L, d) output of the forward pass.
+    pub fn output(&self) -> &[f32] {
+        &self.out
+    }
+
+    /// Abandon the session and keep the output (no backward).
+    pub fn into_output(self) -> Vec<f32> {
+        self.out
+    }
+
+    /// End the session: compute expert gradients for `d_out` =
+    /// ∂loss/∂out into a fresh [`ExpertGrads`].
+    pub fn backward(self, engine: &mut dyn ExecutionEngine,
+                    d_out: &[f32]) -> Result<ExpertGrads, String> {
+        let mut grads = engine.zero_grads();
+        engine.backward_into(self, d_out, &mut grads)?;
+        Ok(grads)
+    }
+
+    /// End the session, *accumulating* gradients into `grads` in
+    /// expert-segment order (grad-accum microbatching: pass the same
+    /// accumulator for every microbatch of a global step).
+    pub fn backward_into(self, engine: &mut dyn ExecutionEngine, d_out: &[f32],
+                         grads: &mut ExpertGrads) -> Result<(), String> {
+        engine.backward_into(self, d_out, grads)
+    }
+}
+
+// -- engine trait -----------------------------------------------------------
+
+/// One MoE-layer step executor over shared [`StepBatch`] workloads.
 pub trait ExecutionEngine {
     fn name(&self) -> String;
 
     fn ranks(&self) -> usize;
 
-    /// Combined (L, d) output for token activations `x` (L, d) routed by
-    /// `disp` with per-slot combine weights `gates` (L·k, token-major).
-    fn forward(&mut self, disp: &DispatchStructures, x: &[f32],
-               gates: &[f32]) -> Result<Vec<f32>, String>;
+    /// The save/recompute policy this engine runs under.
+    fn policy(&self) -> CheckpointPolicy;
 
-    /// One SGD step on the expert parameters given `d_out` = ∂loss/∂out
-    /// (L, d) from the last forward. Activations are recomputed from the
-    /// cached routed inputs (the paper's Algorithm-1 policy: keep inputs,
-    /// recompute intermediates).
-    fn backward_update(&mut self, d_out: &[f32], lr: f32) -> Result<(), String>;
+    /// Run the forward pass, opening a step session. The engine keeps a
+    /// zero-copy share of `batch` plus whatever the policy saves; the
+    /// returned handle is the only way into the backward pass.
+    fn forward(&mut self, batch: &StepBatch) -> Result<StepHandle, String>;
 
-    /// Communication measured since the last forward began.
+    /// Close the session `handle` proves: accumulate parameter
+    /// gradients for `d_out` (L, d) into `grads` (expert-segment order,
+    /// continuing whatever `grads` already holds). Fails on a stale or
+    /// foreign handle, or a shape mismatch.
+    fn backward_into(&mut self, handle: StepHandle, d_out: &[f32],
+                     grads: &mut ExpertGrads) -> Result<(), String>;
+
+    /// A zeroed gradient accumulator matching this engine's experts.
+    fn zero_grads(&self) -> ExpertGrads;
+
+    /// Apply an additive parameter update (an optimizer's delta) to the
+    /// engine-owned expert parameters.
+    fn apply_update(&mut self, delta: &ExpertGrads) -> Result<(), String>;
+
+    /// Communication of the current/last session (see [`Traffic`] for
+    /// the reset contract).
     fn traffic(&self) -> Traffic;
 
     /// Per-rank activation-memory breakdown of the last forward
-    /// (`data` = activation rows, `index` = routing metadata, `extra` =
-    /// packed comm buffers) — the Figures 3/5 accounting, per rank.
+    /// (`data` = activation rows + policy-saved tensors, `index` =
+    /// routing metadata, `extra` = packed comm buffers) — the
+    /// Figures 3/5 accounting, per rank and policy-parametric.
     fn memory_per_rank(&self) -> Vec<MemoryBreakdown>;
 
     /// Reassembled global expert parameters (for equivalence checks and
@@ -92,8 +343,8 @@ fn silu(x: f32) -> f32 {
 
 /// y = W2·silu(W1·x + b1) + b2. Pure function of one row — bit-identical
 /// wherever (and on whatever thread) it runs.
-fn expert_forward(p: &ExpertParams, d: usize, h: usize, x: &[f32],
-                  y: &mut [f32], hidden: &mut [f32]) {
+fn expert_forward(p: &ExpertParams, d: usize, h: usize, x: &[f32], y: &mut [f32],
+                  hidden: &mut [f32]) {
     for i in 0..h {
         let row = &p.w1[i * d..(i + 1) * d];
         let mut acc = p.b1[i];
@@ -112,12 +363,29 @@ fn expert_forward(p: &ExpertParams, d: usize, h: usize, x: &[f32],
     }
 }
 
-/// Accumulate one row's parameter gradients, recomputing the hidden
-/// activations from `x` (they are not saved across the fwd/bwd boundary).
-fn expert_backward(p: &ExpertParams, g: &mut ExpertParams, d: usize, h: usize,
-                   x: &[f32], dy: &[f32], pre: &mut [f32], act: &mut [f32],
-                   dz: &mut [f32]) {
-    // recompute pre-activation and silu
+/// [`expert_forward`] that also saves the pre-activation and activation
+/// rows (the `SaveAll` policy): the same hidden loop as
+/// [`recompute_hidden`] followed by the output projection — identical
+/// op sequence, so outputs are bit-identical to the non-saving path.
+fn expert_forward_saving(p: &ExpertParams, d: usize, h: usize, x: &[f32],
+                         y: &mut [f32], pre: &mut [f32], act: &mut [f32]) {
+    recompute_hidden(p, d, h, x, pre, act);
+    for i in 0..d {
+        let row = &p.w2[i * h..(i + 1) * h];
+        let mut acc = p.b2[i];
+        for j in 0..h {
+            acc += row[j] * act[j];
+        }
+        y[i] = acc;
+    }
+}
+
+/// Recompute one row's hidden pre-activation and activation from the
+/// routed input (the recompute half of `SaveInputs`/`RecomputeAll`).
+/// Same op sequence as the forward, so the values are bit-identical to
+/// what `SaveAll` saved.
+fn recompute_hidden(p: &ExpertParams, d: usize, h: usize, x: &[f32],
+                    pre: &mut [f32], act: &mut [f32]) {
     for i in 0..h {
         let row = &p.w1[i * d..(i + 1) * d];
         let mut acc = p.b1[i];
@@ -127,6 +395,13 @@ fn expert_backward(p: &ExpertParams, g: &mut ExpertParams, d: usize, h: usize,
         pre[i] = acc;
         act[i] = silu(acc);
     }
+}
+
+/// Accumulate one row's parameter gradients into `g`, given the hidden
+/// pre-activation/activation rows (saved or just recomputed).
+fn expert_backward_row(p: &ExpertParams, g: &mut ExpertParams, d: usize,
+                       h: usize, x: &[f32], dy: &[f32], pre: &[f32],
+                       act: &[f32], dz: &mut [f32]) {
     // W2 / b2 grads and dz = W2ᵀ·dy
     for j in 0..h {
         dz[j] = 0.0;
@@ -152,64 +427,104 @@ fn expert_backward(p: &ExpertParams, g: &mut ExpertParams, d: usize, h: usize,
     }
 }
 
-fn sgd(p: &mut ExpertParams, g: &ExpertParams, lr: f32) {
-    for (w, gw) in p.w1.iter_mut().zip(&g.w1) {
-        *w -= lr * gw;
+fn add_params(p: &mut ExpertParams, delta: &ExpertParams) {
+    for (w, dv) in p.w1.iter_mut().zip(&delta.w1) {
+        *w += dv;
     }
-    for (w, gw) in p.b1.iter_mut().zip(&g.b1) {
-        *w -= lr * gw;
+    for (w, dv) in p.b1.iter_mut().zip(&delta.b1) {
+        *w += dv;
     }
-    for (w, gw) in p.w2.iter_mut().zip(&g.w2) {
-        *w -= lr * gw;
+    for (w, dv) in p.w2.iter_mut().zip(&delta.w2) {
+        *w += dv;
     }
-    for (w, gw) in p.b2.iter_mut().zip(&g.b2) {
-        *w -= lr * gw;
+    for (w, dv) in p.b2.iter_mut().zip(&delta.b2) {
+        *w += dv;
     }
 }
 
-fn check_shapes(disp: &DispatchStructures, x: &[f32], gates: &[f32],
-                d: usize, num_experts: usize) -> Result<(), String> {
-    if disp.num_experts != num_experts {
+fn check_batch(batch: &StepBatch, d: usize, num_experts: usize) -> Result<(), String> {
+    if batch.disp().num_experts != num_experts {
         return Err(format!(
-            "dispatch has {} experts, engine owns {num_experts}",
-            disp.num_experts
+            "batch routes over {} experts, engine owns {num_experts}",
+            batch.disp().num_experts
         ));
     }
-    if x.len() != disp.num_tokens * d {
+    if batch.d_model() != d {
         return Err(format!(
-            "x has {} elements, expected L·d = {}",
-            x.len(),
-            disp.num_tokens * d
-        ));
-    }
-    if gates.len() != disp.slots() {
-        return Err(format!(
-            "gates has {} elements, expected L·k = {}",
-            gates.len(),
-            disp.slots()
+            "batch has d_model {}, engine expects {d}",
+            batch.d_model()
         ));
     }
     Ok(())
 }
 
+/// What one session saved on one rank (policy-dependent).
+enum SavedActs {
+    /// `SaveAll`: routed inputs + hidden pre-activations + activations
+    All { xs: Vec<f32>, pre: Vec<f32>, act: Vec<f32> },
+    /// `SaveInputs`: routed inputs only
+    Inputs { xs: Vec<f32> },
+    /// `RecomputeAll`: nothing
+    Nothing,
+}
+
 // -- single-rank engine -----------------------------------------------------
 
-struct SingleState {
-    disp: DispatchStructures,
-    x: Vec<f32>,
-    gates: Vec<f32>,
+struct SingleSession {
+    id: u64,
+    batch: StepBatch,
+    saved: SavedActs,
 }
 
 /// All experts on one rank — the reference path the sharded engine is
 /// verified against bit-for-bit.
 pub struct SingleRankEngine {
     pub store: ExpertStore,
-    state: Option<SingleState>,
+    policy: CheckpointPolicy,
+    engine_tag: u64,
+    sessions_opened: u64,
+    session: Option<SingleSession>,
+    /// cached `origin slot per expert-major position`, by batch id
+    origin_cache: Vec<(u64, Vec<u32>)>,
+    traffic: Traffic,
+    /// last forward's accounting — persists across the session's
+    /// backward, matching the sharded engine's contract
+    mem: Vec<MemoryBreakdown>,
 }
 
 impl SingleRankEngine {
     pub fn new(store: ExpertStore) -> SingleRankEngine {
-        SingleRankEngine { store, state: None }
+        SingleRankEngine::with_policy(store, CheckpointPolicy::default())
+    }
+
+    pub fn with_policy(store: ExpertStore, policy: CheckpointPolicy) -> SingleRankEngine {
+        SingleRankEngine {
+            store,
+            policy,
+            engine_tag: NEXT_ENGINE_TAG.fetch_add(1, Ordering::Relaxed),
+            sessions_opened: 0,
+            session: None,
+            origin_cache: Vec::new(),
+            traffic: Traffic::default(),
+            mem: Vec::new(),
+        }
+    }
+
+    fn origin_of_pos(&mut self, batch: &StepBatch) -> usize {
+        if let Some(i) = self
+            .origin_cache
+            .iter()
+            .position(|(id, _)| *id == batch.id())
+        {
+            return i;
+        }
+        let disp = batch.disp();
+        let mut origin = vec![0u32; disp.slots()];
+        for (slot, &pos) in disp.token_index_map.iter().enumerate() {
+            origin[pos as usize] = slot as u32;
+        }
+        self.origin_cache.push((batch.id(), origin));
+        self.origin_cache.len() - 1
     }
 }
 
@@ -222,22 +537,42 @@ impl ExecutionEngine for SingleRankEngine {
         1
     }
 
-    fn forward(&mut self, disp: &DispatchStructures, x: &[f32],
-               gates: &[f32]) -> Result<Vec<f32>, String> {
+    fn policy(&self) -> CheckpointPolicy {
+        self.policy
+    }
+
+    fn forward(&mut self, batch: &StepBatch) -> Result<StepHandle, String> {
         let (d, h) = (self.store.d_model, self.store.d_hidden);
-        check_shapes(disp, x, gates, d, self.store.experts.len())?;
+        check_batch(batch, d, self.store.experts.len())?;
+        let disp = batch.disp();
+        let x = batch.x();
+        let gates = batch.gates();
         let (l, k, n) = (disp.num_tokens, disp.top_k, disp.slots());
+        let save_inputs = self.policy != CheckpointPolicy::RecomputeAll;
+        let save_hidden = self.policy == CheckpointPolicy::SaveAll;
 
         // expert compute, expert-major
         let mut ys = vec![0.0f32; n * d];
+        let mut xs = vec![0.0f32; if save_inputs { n * d } else { 0 }];
+        let mut pre = vec![0.0f32; if save_hidden { n * h } else { 0 }];
+        let mut act = vec![0.0f32; if save_hidden { n * h } else { 0 }];
         let mut hidden = vec![0.0f32; h];
         for (e, p) in self.store.experts.iter().enumerate() {
             let lo = disp.expert_token_offsets[e] as usize;
             let hi = disp.expert_token_offsets[e + 1] as usize;
             for pos in lo..hi {
                 let tok = disp.expert_token_indices[pos] as usize;
-                expert_forward(p, d, h, &x[tok * d..(tok + 1) * d],
-                               &mut ys[pos * d..(pos + 1) * d], &mut hidden);
+                let xrow = &x[tok * d..(tok + 1) * d];
+                if save_inputs {
+                    xs[pos * d..(pos + 1) * d].copy_from_slice(xrow);
+                }
+                if save_hidden {
+                    expert_forward_saving(p, d, h, xrow, &mut ys[pos * d..(pos + 1) * d],
+                                          &mut pre[pos * h..(pos + 1) * h],
+                                          &mut act[pos * h..(pos + 1) * h]);
+                } else {
+                    expert_forward(p, d, h, xrow, &mut ys[pos * d..(pos + 1) * d], &mut hidden);
+                }
             }
         }
         // combine scatter, token-major, fixed j order
@@ -254,74 +589,123 @@ impl ExecutionEngine for SingleRankEngine {
                 }
             }
         }
-        self.state = Some(SingleState {
-            disp: disp.clone(),
-            x: x.to_vec(),
-            gates: gates.to_vec(),
-        });
-        Ok(out)
+        let saved = match self.policy {
+            CheckpointPolicy::SaveAll => SavedActs::All { xs, pre, act },
+            CheckpointPolicy::SaveInputs => SavedActs::Inputs { xs },
+            CheckpointPolicy::RecomputeAll => SavedActs::Nothing,
+        };
+        // session-scoped counters reset here
+        self.traffic = Traffic { local_rows: n as u64, ..Traffic::default() };
+        self.mem = vec![MemoryBreakdown {
+            // routed rows (ys) + resident token activations + output,
+            // plus what the policy saves for backward
+            data_bytes: 4 * (d as u64) * (n as u64 + 2 * l as u64)
+                + (n as u64)
+                    * self.policy.saved_bytes_per_slot(d as u64, h as u64, 4),
+            index_bytes: disp.metadata_bytes() as u64,
+            extra_bytes: 0,
+        }];
+        self.sessions_opened += 1;
+        let session = self.sessions_opened;
+        self.session = Some(SingleSession { id: session, batch: batch.share(), saved });
+        Ok(StepHandle { engine_tag: self.engine_tag, session, out })
     }
 
-    fn backward_update(&mut self, d_out: &[f32], lr: f32) -> Result<(), String> {
+    fn backward_into(&mut self, handle: StepHandle, d_out: &[f32],
+                     grads: &mut ExpertGrads) -> Result<(), String> {
         let (d, h) = (self.store.d_model, self.store.d_hidden);
-        let st = self.state.as_ref().ok_or("backward_update before forward")?;
-        if d_out.len() != st.disp.num_tokens * d {
+        if handle.engine_tag != self.engine_tag {
+            return Err("step handle belongs to a different engine".into());
+        }
+        match &self.session {
+            None => return Err("no open step session (forward not called)".into()),
+            Some(s) if s.id != handle.session => {
+                return Err(format!(
+                    "stale step handle: session {} superseded by {}",
+                    handle.session, s.id
+                ));
+            }
+            Some(_) => {}
+        }
+        grads
+            .check_like(self.store.experts.len(), d, h)
+            .map_err(|e| e.to_string())?;
+        let origin_idx = {
+            let batch = self.session.as_ref().unwrap().batch.share();
+            self.origin_of_pos(&batch)
+        };
+        let st = self.session.take().unwrap();
+        let disp = st.batch.disp();
+        if d_out.len() != disp.num_tokens * d {
             return Err(format!(
                 "d_out has {} elements, expected L·d = {}",
                 d_out.len(),
-                st.disp.num_tokens * d
+                disp.num_tokens * d
             ));
         }
-        // origin slot per global position (for the per-slot gate)
-        let mut origin_of_pos = vec![0u32; st.disp.slots()];
-        for (slot, &pos) in st.disp.token_index_map.iter().enumerate() {
-            origin_of_pos[pos as usize] = slot as u32;
-        }
-        let mut pre = vec![0.0f32; h];
-        let mut act = vec![0.0f32; h];
+        let origin = &self.origin_cache[origin_idx].1;
+        let x = st.batch.x();
+        let gates = st.batch.gates();
+        let mut pre_row = vec![0.0f32; h];
+        let mut act_row = vec![0.0f32; h];
         let mut dz = vec![0.0f32; h];
         let mut dy = vec![0.0f32; d];
-        for (e, p) in self.store.experts.iter_mut().enumerate() {
-            let mut g = ExpertParams::zeros(d, h);
-            let lo = st.disp.expert_token_offsets[e] as usize;
-            let hi = st.disp.expert_token_offsets[e + 1] as usize;
+        for (e, p) in self.store.experts.iter().enumerate() {
+            let g = &mut grads.experts[e];
+            let lo = disp.expert_token_offsets[e] as usize;
+            let hi = disp.expert_token_offsets[e + 1] as usize;
             for pos in lo..hi {
-                let tok = st.disp.expert_token_indices[pos] as usize;
-                let gate = st.gates[origin_of_pos[pos] as usize];
+                let tok = disp.expert_token_indices[pos] as usize;
+                let gate = gates[origin[pos] as usize];
                 for c in 0..d {
                     dy[c] = gate * d_out[tok * d + c];
                 }
-                expert_backward(p, &mut g, d, h, &st.x[tok * d..(tok + 1) * d],
-                                &dy, &mut pre, &mut act, &mut dz);
+                let xrow = match &st.saved {
+                    SavedActs::All { xs, .. } | SavedActs::Inputs { xs } => {
+                        &xs[pos * d..(pos + 1) * d]
+                    }
+                    // re-gather from the shared batch (local, zero comm)
+                    SavedActs::Nothing => &x[tok * d..(tok + 1) * d],
+                };
+                let (pre, act): (&[f32], &[f32]) = match &st.saved {
+                    SavedActs::All { pre, act, .. } => {
+                        (&pre[pos * h..(pos + 1) * h], &act[pos * h..(pos + 1) * h])
+                    }
+                    _ => {
+                        recompute_hidden(p, d, h, xrow, &mut pre_row, &mut act_row);
+                        (&pre_row[..], &act_row[..])
+                    }
+                };
+                expert_backward_row(p, g, d, h, xrow, &dy, pre, act, &mut dz);
             }
-            sgd(p, &g, lr);
+        }
+        Ok(())
+    }
+
+    fn zero_grads(&self) -> ExpertGrads {
+        ExpertGrads::zeros(self.store.experts.len(), self.store.d_model, self.store.d_hidden)
+    }
+
+    fn apply_update(&mut self, delta: &ExpertGrads) -> Result<(), String> {
+        delta
+            .check_like(self.store.experts.len(), self.store.d_model, self.store.d_hidden)
+            .map_err(|e| e.to_string())?;
+        for (e, p) in self.store.experts.iter_mut().enumerate() {
+            add_params(p, &delta.experts[e]);
         }
         Ok(())
     }
 
     fn traffic(&self) -> Traffic {
-        let local = self
-            .state
-            .as_ref()
-            .map(|s| s.disp.slots() as u64)
-            .unwrap_or(0);
-        Traffic { local_rows: local, ..Traffic::default() }
+        self.traffic
     }
 
     fn memory_per_rank(&self) -> Vec<MemoryBreakdown> {
-        let Some(st) = self.state.as_ref() else {
-            return vec![MemoryBreakdown { data_bytes: 0, index_bytes: 0,
-                                          extra_bytes: 0 }];
-        };
-        let d = self.store.d_model as u64;
-        let n = st.disp.slots() as u64;
-        let l = st.disp.num_tokens as u64;
-        vec![MemoryBreakdown {
-            // routed rows (ys) + resident token activations + output
-            data_bytes: 4 * d * (n + 2 * l),
-            index_bytes: st.disp.metadata_bytes() as u64,
-            extra_bytes: 0,
-        }]
+        if self.mem.is_empty() {
+            vec![MemoryBreakdown { data_bytes: 0, index_bytes: 0, extra_bytes: 0 }]
+        } else {
+            self.mem.clone()
+        }
     }
 
     fn gather_params(&self) -> Result<ExpertStore, String> {
@@ -340,14 +724,25 @@ struct RouteHop {
     origin: u32,
 }
 
-struct ShardedState {
+/// Everything derivable from (batch, topology) alone — computed once per
+/// distinct [`StepBatch`] and reused by every later session over it.
+struct BatchPlan {
+    batch_id: u64,
     shards: Vec<RankShard>,
     /// routes[dst][src]: hops served by `src`, in dst-local slot order
     routes: Vec<Vec<Vec<RouteHop>>>,
-    /// per rank: routed input rows for its local slots (kept for bwd)
-    xs_local: Vec<Vec<f32>>,
-    gates: Vec<f32>,
-    num_tokens: usize,
+    /// origin slot → (dst rank, index within rets[dst][home])
+    ret_lookup: Vec<(u32, u32)>,
+    /// resident tokens per home rank
+    tokens_of_rank: Vec<Vec<u32>>,
+}
+
+struct ShardedSession {
+    id: u64,
+    batch: StepBatch,
+    plan_idx: usize,
+    /// per-rank saved state (policy-dependent)
+    saved: Vec<SavedActs>,
 }
 
 /// R simulated ranks over the worker pool, real buffer packing, measured
@@ -358,7 +753,11 @@ pub struct ShardedEngine {
     d_model: usize,
     d_hidden: usize,
     workers: usize,
-    state: Option<ShardedState>,
+    policy: CheckpointPolicy,
+    engine_tag: u64,
+    sessions_opened: u64,
+    session: Option<ShardedSession>,
+    plans: Vec<BatchPlan>,
     traffic: Traffic,
     mem: Vec<MemoryBreakdown>,
 }
@@ -368,6 +767,11 @@ impl ShardedEngine {
     /// time; R > workers just queues ranks, changing nothing observable).
     pub fn new(topo: EpTopology, store: &ExpertStore,
                workers: usize) -> Result<ShardedEngine, String> {
+        ShardedEngine::with_policy(topo, store, workers, CheckpointPolicy::default())
+    }
+
+    pub fn with_policy(topo: EpTopology, store: &ExpertStore, workers: usize,
+                       policy: CheckpointPolicy) -> Result<ShardedEngine, String> {
         if topo.num_experts != store.experts.len() {
             return Err(format!(
                 "topology has {} experts, store has {}",
@@ -382,33 +786,29 @@ impl ShardedEngine {
             d_model: store.d_model,
             d_hidden: store.d_hidden,
             workers: workers.max(1),
-            state: None,
+            policy,
+            engine_tag: NEXT_ENGINE_TAG.fetch_add(1, Ordering::Relaxed),
+            sessions_opened: 0,
+            session: None,
+            plans: Vec::new(),
             traffic: Traffic::default(),
             mem: Vec::new(),
         })
     }
-}
 
-impl ExecutionEngine for ShardedEngine {
-    fn name(&self) -> String {
-        format!("sharded-r{}-{}", self.topo.ranks, self.topo.placement)
-    }
-
-    fn ranks(&self) -> usize {
-        self.topo.ranks
-    }
-
-    fn forward(&mut self, disp: &DispatchStructures, x: &[f32],
-               gates: &[f32]) -> Result<Vec<f32>, String> {
-        let (d, h) = (self.d_model, self.d_hidden);
-        check_shapes(disp, x, gates, d, self.topo.num_experts)?;
-        let (l, k, r) = (disp.num_tokens, disp.top_k, self.topo.ranks);
-        let workers = self.workers.min(r);
-
-        // (i) slice the dispatch structures into per-rank views
+    /// Index of the cached routing plan for `batch`, building it on
+    /// first sight of this batch id.
+    fn plan_index(&mut self, batch: &StepBatch) -> Result<usize, String> {
+        if let Some(i) = self
+            .plans
+            .iter()
+            .position(|p| p.batch_id == batch.id())
+        {
+            return Ok(i);
+        }
+        let disp = batch.disp();
+        let (l, r) = (disp.num_tokens, self.topo.ranks);
         let shards = shard(disp, &self.topo.assignment())?;
-
-        // routing table of the exchange: who sends which rows where
         let mut routes: Vec<Vec<Vec<RouteHop>>> =
             (0..r).map(|_| vec![Vec::new(); r]).collect();
         let mut ret_lookup = vec![(0u32, 0u32); disp.slots()];
@@ -422,18 +822,48 @@ impl ExecutionEngine for ShardedEngine {
                 let src = self.topo.rank_of_token(token as usize, l);
                 let hops = &mut routes[dst][src];
                 ret_lookup[origin as usize] = (dst as u32, hops.len() as u32);
-                hops.push(RouteHop { local_slot: local_slot as u32, token,
-                                     origin });
+                hops.push(RouteHop { local_slot: local_slot as u32, token, origin });
             }
         }
         let mut tokens_of_rank: Vec<Vec<u32>> = vec![Vec::new(); r];
         for t in 0..l {
             tokens_of_rank[self.topo.rank_of_token(t, l)].push(t as u32);
         }
+        self.plans.push(BatchPlan { batch_id: batch.id(), shards, routes,
+                                    ret_lookup, tokens_of_rank });
+        Ok(self.plans.len() - 1)
+    }
+}
 
-        // (ii) dispatch all-to-all: each source rank packs one buffer per
+impl ExecutionEngine for ShardedEngine {
+    fn name(&self) -> String {
+        format!("sharded-r{}-{}", self.topo.ranks, self.topo.placement)
+    }
+
+    fn ranks(&self) -> usize {
+        self.topo.ranks
+    }
+
+    fn policy(&self) -> CheckpointPolicy {
+        self.policy
+    }
+
+    fn forward(&mut self, batch: &StepBatch) -> Result<StepHandle, String> {
+        let (d, h) = (self.d_model, self.d_hidden);
+        check_batch(batch, d, self.topo.num_experts)?;
+        let r = self.topo.ranks;
+        let workers = self.workers.min(r);
+        let policy = self.policy;
+        let plan_idx = self.plan_index(batch)?;
+        let plan = &self.plans[plan_idx];
+        let disp = batch.disp();
+        let x = batch.x();
+        let gates = batch.gates();
+        let (l, k) = (disp.num_tokens, disp.top_k);
+
+        // (i) dispatch all-to-all: each source rank packs one buffer per
         // destination from its resident token rows
-        let routes_ref = &routes;
+        let routes_ref = &plan.routes;
         let send: Vec<Vec<Vec<f32>>> = par_map(r, workers, |src| {
             (0..r)
                 .map(|dst| {
@@ -450,7 +880,7 @@ impl ExecutionEngine for ShardedEngine {
         let mut traffic = Traffic::default();
         for src in 0..r {
             for dst in 0..r {
-                let rows = routes[dst][src].len() as u64;
+                let rows = plan.routes[dst][src].len() as u64;
                 if src == dst {
                     traffic.local_rows += rows;
                 } else {
@@ -460,11 +890,11 @@ impl ExecutionEngine for ShardedEngine {
             }
         }
 
-        // (iii) per-rank unpack, expert compute, and combine-buffer pack
+        // (ii) per-rank unpack, expert compute, and combine-buffer pack
         let send_ref = &send;
-        let shards_ref = &shards;
+        let shards_ref = &plan.shards;
         let params_ref = &self.rank_params;
-        let computed: Vec<(Vec<f32>, Vec<Vec<f32>>)> =
+        let computed: Vec<(SavedActs, Vec<Vec<f32>>)> =
             par_map(r, workers, |dst| {
                 let s = &shards_ref[dst];
                 let n_local = s.local_slots();
@@ -476,16 +906,26 @@ impl ExecutionEngine for ShardedEngine {
                             .copy_from_slice(&send_ref[src][dst][i * d..(i + 1) * d]);
                     }
                 }
+                let save_hidden = policy == CheckpointPolicy::SaveAll;
                 let mut ys = vec![0.0f32; n_local * d];
+                let mut pre = vec![0.0f32; if save_hidden { n_local * h } else { 0 }];
+                let mut act = vec![0.0f32; if save_hidden { n_local * h } else { 0 }];
                 let mut hidden = vec![0.0f32; h];
                 for (i, (e, p)) in params_ref[dst].experts.iter().enumerate() {
                     debug_assert_eq!(*e, s.experts[i]);
                     let lo = s.expert_token_offsets[i] as usize;
                     let hi = s.expert_token_offsets[i + 1] as usize;
                     for ls in lo..hi {
-                        expert_forward(p, d, h, &xs[ls * d..(ls + 1) * d],
-                                       &mut ys[ls * d..(ls + 1) * d],
-                                       &mut hidden);
+                        if save_hidden {
+                            expert_forward_saving(p, d, h, &xs[ls * d..(ls + 1) * d],
+                                                  &mut ys[ls * d..(ls + 1) * d],
+                                                  &mut pre[ls * h..(ls + 1) * h],
+                                                  &mut act[ls * h..(ls + 1) * h]);
+                        } else {
+                            expert_forward(p, d, h, &xs[ls * d..(ls + 1) * d],
+                                           &mut ys[ls * d..(ls + 1) * d],
+                                           &mut hidden);
+                        }
                     }
                 }
                 // pack expert outputs back toward each home rank
@@ -500,12 +940,17 @@ impl ExecutionEngine for ShardedEngine {
                         buf
                     })
                     .collect();
-                (xs, rets)
+                let saved = match policy {
+                    CheckpointPolicy::SaveAll => SavedActs::All { xs, pre, act },
+                    CheckpointPolicy::SaveInputs => SavedActs::Inputs { xs },
+                    CheckpointPolicy::RecomputeAll => SavedActs::Nothing,
+                };
+                (saved, rets)
             });
-        let mut xs_local = Vec::with_capacity(r);
+        let mut saved = Vec::with_capacity(r);
         let mut rets = Vec::with_capacity(r);
-        for (xs, ret) in computed {
-            xs_local.push(xs);
+        for (sv, ret) in computed {
+            saved.push(sv);
             rets.push(ret);
         }
         for dst in 0..r {
@@ -516,11 +961,11 @@ impl ExecutionEngine for ShardedEngine {
             }
         }
 
-        // combine scatter on each token's home rank (same j order as the
-        // single-rank path — bit-identical accumulation)
+        // (iii) combine scatter on each token's home rank (same j order
+        // as the single-rank path — bit-identical accumulation)
         let rets_ref = &rets;
-        let lookup_ref = &ret_lookup;
-        let tokens_ref = &tokens_of_rank;
+        let lookup_ref = &plan.ret_lookup;
+        let tokens_ref = &plan.tokens_of_rank;
         let home_rows: Vec<Vec<f32>> = par_map(r, workers, |home| {
             let toks = &tokens_ref[home];
             let mut rows = vec![0.0f32; toks.len() * d];
@@ -541,59 +986,79 @@ impl ExecutionEngine for ShardedEngine {
         });
         let mut out = vec![0.0f32; l * d];
         for (home, rows) in home_rows.iter().enumerate() {
-            for (ti, &t) in tokens_of_rank[home].iter().enumerate() {
+            for (ti, &t) in plan.tokens_of_rank[home].iter().enumerate() {
                 out[t as usize * d..(t as usize + 1) * d]
                     .copy_from_slice(&rows[ti * d..(ti + 1) * d]);
             }
         }
 
         // per-rank Figure-3/5 accounting from what was actually resident
-        self.mem = (0..r)
+        let mem: Vec<MemoryBreakdown> = (0..r)
             .map(|rank| {
-                let n_local = shards[rank].local_slots() as u64;
-                let resident = tokens_of_rank[rank].len() as u64;
+                let n_local = plan.shards[rank].local_slots() as u64;
+                let resident = plan.tokens_of_rank[rank].len() as u64;
                 let comm: u64 = (0..r)
                     .map(|peer| {
                         (send[rank][peer].len() + rets[rank][peer].len()) as u64 * 4
                     })
                     .sum();
                 MemoryBreakdown {
-                    // xs + ys per local slot, plus resident token rows in
-                    // and combined rows out
-                    data_bytes: 4 * d as u64 * (2 * n_local + 2 * resident),
-                    index_bytes: shards[rank].metadata_bytes() as u64,
+                    // ys per local slot + resident token rows in +
+                    // combined rows out, plus the policy-saved tensors
+                    data_bytes: 4 * d as u64 * (n_local + 2 * resident)
+                        + n_local
+                            * policy.saved_bytes_per_slot(d as u64, h as u64, 4),
+                    index_bytes: plan.shards[rank].metadata_bytes() as u64,
                     extra_bytes: comm,
                 }
             })
             .collect();
+        self.mem = mem;
         self.traffic = traffic;
-        self.state = Some(ShardedState {
-            shards,
-            routes,
-            xs_local,
-            gates: gates.to_vec(),
-            num_tokens: l,
-        });
-        Ok(out)
+        self.sessions_opened += 1;
+        let session = self.sessions_opened;
+        self.session = Some(ShardedSession { id: session, batch: batch.share(), plan_idx, saved });
+        Ok(StepHandle { engine_tag: self.engine_tag, session, out })
     }
 
-    fn backward_update(&mut self, d_out: &[f32], lr: f32) -> Result<(), String> {
+    fn backward_into(&mut self, handle: StepHandle, d_out: &[f32],
+                     grads: &mut ExpertGrads) -> Result<(), String> {
         let (d, h) = (self.d_model, self.d_hidden);
-        let st = self.state.as_ref().ok_or("backward_update before forward")?;
-        if d_out.len() != st.num_tokens * d {
+        if handle.engine_tag != self.engine_tag {
+            return Err("step handle belongs to a different engine".into());
+        }
+        match &self.session {
+            None => return Err("no open step session (forward not called)".into()),
+            Some(s) if s.id != handle.session => {
+                return Err(format!(
+                    "stale step handle: session {} superseded by {}",
+                    handle.session, s.id
+                ));
+            }
+            Some(_) => {}
+        }
+        grads
+            .check_like(self.topo.num_experts, d, h)
+            .map_err(|e| e.to_string())?;
+        let st = self.session.take().unwrap();
+        let disp = st.batch.disp();
+        if d_out.len() != disp.num_tokens * d {
             return Err(format!(
                 "d_out has {} elements, expected L·d = {}",
                 d_out.len(),
-                st.num_tokens * d
+                disp.num_tokens * d
             ));
         }
         let r = self.topo.ranks;
         let workers = self.workers.min(r);
+        let plan = &self.plans[st.plan_idx];
+        let routes_ref = &plan.routes;
+        let shards_ref = &plan.shards;
+        let gates = st.batch.gates();
+        let x = st.batch.x();
 
         // backward all-to-all: each home rank packs gated gradient rows
         // toward the expert ranks (mirror of the fwd dispatch)
-        let routes_ref = &st.routes;
-        let gates_ref = &st.gates;
         let dsend: Vec<Vec<Vec<f32>>> = par_map(r, workers, |home| {
             (0..r)
                 .map(|dst| {
@@ -601,7 +1066,7 @@ impl ExecutionEngine for ShardedEngine {
                     let mut buf = Vec::with_capacity(hops.len() * d);
                     for hop in hops {
                         let t = hop.token as usize;
-                        let g = gates_ref[hop.origin as usize];
+                        let g = gates[hop.origin as usize];
                         for c in 0..d {
                             buf.push(g * d_out[t * d + c]);
                         }
@@ -619,43 +1084,137 @@ impl ExecutionEngine for ShardedEngine {
             }
         }
 
-        // per-rank gradient accumulation (recompute policy) + in-place
-        // SGD update: scope_chunks hands each worker exclusive &mut
-        // access to its rank's parameters — no per-step clone
+        // routed inputs per rank: saved by the policy, or rebuilt by
+        // re-running the dispatch exchange (RecomputeAll)
+        let mut recompute_bytes = 0u64;
+        let (xs_all, hidden_all): (Vec<Vec<f32>>, Vec<Option<(Vec<f32>, Vec<f32>)>>) =
+            match self.policy {
+                CheckpointPolicy::RecomputeAll => {
+                    for (dst, per_src) in routes_ref.iter().enumerate() {
+                        for (src, hops) in per_src.iter().enumerate() {
+                            if src != dst {
+                                recompute_bytes += (hops.len() * d * 4) as u64;
+                            }
+                        }
+                    }
+                    let xs = par_map(r, workers, |dst| {
+                        let n_local = shards_ref[dst].local_slots();
+                        let mut xs = vec![0.0f32; n_local * d];
+                        for per_src in routes_ref[dst].iter() {
+                            for hop in per_src {
+                                let ls = hop.local_slot as usize;
+                                let t = hop.token as usize;
+                                xs[ls * d..(ls + 1) * d]
+                                    .copy_from_slice(&x[t * d..(t + 1) * d]);
+                            }
+                        }
+                        xs
+                    });
+                    (xs, (0..r).map(|_| None).collect())
+                }
+                _ => {
+                    let mut xs_all = Vec::with_capacity(r);
+                    let mut hidden_all = Vec::with_capacity(r);
+                    for sv in st.saved {
+                        match sv {
+                            SavedActs::All { xs, pre, act } => {
+                                xs_all.push(xs);
+                                hidden_all.push(Some((pre, act)));
+                            }
+                            SavedActs::Inputs { xs } => {
+                                xs_all.push(xs);
+                                hidden_all.push(None);
+                            }
+                            SavedActs::Nothing => {
+                                return Err(
+                                    "session saved nothing under a saving policy"
+                                        .into(),
+                                );
+                            }
+                        }
+                    }
+                    (xs_all, hidden_all)
+                }
+            };
+
+        // per-rank gradient accumulation into the caller's accumulator:
+        // move each expert's accumulator into its owning rank's bucket,
+        // let one worker per rank extend it in segment order, reassemble
+        let assignment = self.topo.assignment();
+        let mut buckets: Vec<Vec<(usize, ExpertParams)>> =
+            (0..r).map(|_| Vec::new()).collect();
+        for (e, g) in grads.experts.drain(..).enumerate() {
+            buckets[assignment.rank_of[e] as usize].push((e, g));
+        }
         let dsend_ref = &dsend;
-        let shards_ref = &st.shards;
-        let xs_ref = &st.xs_local;
-        crate::util::threadpool::scope_chunks(
-            &mut self.rank_params, 1, workers, |dst, chunk| {
-                let mine = &mut chunk[0];
-                let s = &shards_ref[dst];
-                let n_local = s.local_slots();
-                let mut dys = vec![0.0f32; n_local * d];
-                for src in 0..r {
-                    for (i, hop) in routes_ref[dst][src].iter().enumerate() {
-                        let ls = hop.local_slot as usize;
-                        dys[ls * d..(ls + 1) * d]
-                            .copy_from_slice(&dsend_ref[src][dst][i * d..(i + 1) * d]);
-                    }
+        let xs_ref = &xs_all;
+        let hidden_ref = &hidden_all;
+        scope_chunks(&mut buckets, 1, workers, |dst, chunk| {
+            let bucket = &mut chunk[0];
+            let s = &shards_ref[dst];
+            let n_local = s.local_slots();
+            let mut dys = vec![0.0f32; n_local * d];
+            for (src, bufs) in dsend_ref.iter().enumerate() {
+                for (i, hop) in routes_ref[dst][src].iter().enumerate() {
+                    let ls = hop.local_slot as usize;
+                    dys[ls * d..(ls + 1) * d]
+                        .copy_from_slice(&bufs[dst][i * d..(i + 1) * d]);
                 }
-                let xs = &xs_ref[dst];
-                let mut pre = vec![0.0f32; h];
-                let mut act = vec![0.0f32; h];
-                let mut dz = vec![0.0f32; h];
-                for (i, (_, p)) in mine.experts.iter_mut().enumerate() {
-                    let mut g = ExpertParams::zeros(d, h);
-                    let lo = s.expert_token_offsets[i] as usize;
-                    let hi = s.expert_token_offsets[i + 1] as usize;
-                    for ls in lo..hi {
-                        expert_backward(p, &mut g, d, h,
-                                        &xs[ls * d..(ls + 1) * d],
-                                        &dys[ls * d..(ls + 1) * d], &mut pre,
-                                        &mut act, &mut dz);
-                    }
-                    sgd(p, &g, lr);
+            }
+            let xs = &xs_ref[dst];
+            let mut pre_row = vec![0.0f32; h];
+            let mut act_row = vec![0.0f32; h];
+            let mut dz = vec![0.0f32; h];
+            for (i, (e, g)) in bucket.iter_mut().enumerate() {
+                debug_assert_eq!(*e as u32, s.experts[i]);
+                let p = &self.rank_params[dst].experts[i].1;
+                let lo = s.expert_token_offsets[i] as usize;
+                let hi = s.expert_token_offsets[i + 1] as usize;
+                for ls in lo..hi {
+                    let xrow = &xs[ls * d..(ls + 1) * d];
+                    let dy = &dys[ls * d..(ls + 1) * d];
+                    let (pre, act): (&[f32], &[f32]) = match &hidden_ref[dst] {
+                        Some((pre, act)) => (&pre[ls * h..(ls + 1) * h],
+                                             &act[ls * h..(ls + 1) * h]),
+                        None => {
+                            recompute_hidden(p, d, h, xrow, &mut pre_row, &mut act_row);
+                            (&pre_row[..], &act_row[..])
+                        }
+                    };
+                    expert_backward_row(p, g, d, h, xrow, dy, pre, act, &mut dz);
                 }
-            });
-        self.traffic.grad_bytes = grad_bytes;
+            }
+        });
+        let mut dense: Vec<Option<ExpertParams>> =
+            (0..self.topo.num_experts).map(|_| None).collect();
+        for bucket in buckets {
+            for (e, g) in bucket {
+                dense[e] = Some(g);
+            }
+        }
+        grads.experts = dense
+            .into_iter()
+            .enumerate()
+            .map(|(e, g)| g.ok_or_else(|| format!("expert {e} grads lost")))
+            .collect::<Result<Vec<_>, String>>()?;
+        self.traffic.grad_bytes += grad_bytes;
+        self.traffic.recompute_bytes += recompute_bytes;
+        Ok(())
+    }
+
+    fn zero_grads(&self) -> ExpertGrads {
+        ExpertGrads::zeros(self.topo.num_experts, self.d_model, self.d_hidden)
+    }
+
+    fn apply_update(&mut self, delta: &ExpertGrads) -> Result<(), String> {
+        delta
+            .check_like(self.topo.num_experts, self.d_model, self.d_hidden)
+            .map_err(|e| e.to_string())?;
+        for rp in &mut self.rank_params {
+            for (e, p) in &mut rp.experts {
+                add_params(p, &delta.experts[*e as usize]);
+            }
+        }
         Ok(())
     }
 
@@ -679,6 +1238,8 @@ impl ExecutionEngine for ShardedEngine {
     }
 }
 
+// -- config-driven construction ---------------------------------------------
+
 /// The synthetic workload an `[ep]` config describes — routing, token
 /// activations `x` (L·d), combine gates (L·k), and regression targets
 /// (L·d). A pure function of the config, shared by `EpTrainer` and the
@@ -695,20 +1256,26 @@ pub fn workload_from_config(
     (disp, x, gating.gates, target)
 }
 
+/// [`workload_from_config`] packaged as a shareable [`StepBatch`] plus
+/// the regression targets.
+pub fn step_batch_from_config(cfg: &EpConfig) -> Result<(StepBatch, Vec<f32>), String> {
+    let (disp, x, gates, target) = workload_from_config(cfg);
+    Ok((StepBatch::new(disp, x, gates)?, target))
+}
+
 /// Build the engine an `[ep]` config describes: R = 1 gives the
-/// single-rank path, R > 1 the sharded one (one worker per rank). The
-/// expert parameters are initialized from `cfg.seed`, so any two engines
-/// built from the same config hold bit-identical weights.
+/// single-rank path, R > 1 the sharded one (one worker per rank), both
+/// under the config's checkpoint policy. The expert parameters are
+/// initialized from `cfg.seed`, so any two engines built from the same
+/// config hold bit-identical weights.
 pub fn engine_from_config(cfg: &EpConfig) -> Result<Box<dyn ExecutionEngine>, String> {
     cfg.validate()?;
-    let store = ExpertStore::init(cfg.num_experts, cfg.d_model, cfg.d_hidden,
-                                  cfg.seed);
+    let store = ExpertStore::init(cfg.num_experts, cfg.d_model, cfg.d_hidden, cfg.seed);
     if cfg.ranks == 1 {
-        Ok(Box::new(SingleRankEngine::new(store)))
+        Ok(Box::new(SingleRankEngine::with_policy(store, cfg.checkpoint)))
     } else {
-        let topo = EpTopology::with_placement(cfg.ranks, cfg.num_experts,
-                                              cfg.placement)?;
-        Ok(Box::new(ShardedEngine::new(topo, &store, cfg.ranks)?))
+        let topo = EpTopology::with_placement(cfg.ranks, cfg.num_experts, cfg.placement)?;
+        Ok(Box::new(ShardedEngine::with_policy(topo, &store, cfg.ranks, cfg.checkpoint)?))
     }
 }
 
@@ -737,10 +1304,11 @@ impl EquivalenceReport {
 pub fn check_equivalence(topo: &EpTopology, store: &ExpertStore,
                          disp: &DispatchStructures, x: &[f32],
                          gates: &[f32]) -> Result<EquivalenceReport, String> {
+    let batch = StepBatch::new(disp.clone(), x.to_vec(), gates.to_vec())?;
     let mut single = SingleRankEngine::new(store.clone());
     let mut sharded = ShardedEngine::new(topo.clone(), store, topo.ranks)?;
-    let a = single.forward(disp, x, gates)?;
-    let b = sharded.forward(disp, x, gates)?;
+    let a = single.forward(&batch)?.into_output();
+    let b = sharded.forward(&batch)?.into_output();
     if a.len() != b.len() {
         return Err("engines returned different output sizes".into());
     }
@@ -767,19 +1335,19 @@ pub fn check_equivalence(topo: &EpTopology, store: &ExpertStore,
 mod tests {
     use super::*;
     use crate::config::ep::Placement;
+    use crate::coordinator::optim::{Optimizer, Sgd};
     use crate::dispatch::gating::synthetic_gating;
     use crate::dispatch::parallel_build::parallel_build;
     use crate::testkit::fixtures::{fig2_expected, FIG2_EXPERTS, FIG2_TOKENS,
                                    FIG2_TOP_K};
     use crate::util::prng::Rng;
 
-    fn workload(l: usize, e: usize, k: usize, d: usize, skew: f64,
-                seed: u64) -> (DispatchStructures, Vec<f32>, Vec<f32>) {
+    fn workload(l: usize, e: usize, k: usize, d: usize, skew: f64, seed: u64) -> StepBatch {
         let mut rng = Rng::new(seed);
         let g = synthetic_gating(&mut rng, l, e, k, skew);
         let disp = parallel_build(&g.topk_ids, l, e, k);
         let x = rng.normal_vec(l * d, 1.0);
-        (disp, x, g.gates)
+        StepBatch::new(disp, x, g.gates).unwrap()
     }
 
     #[test]
@@ -802,13 +1370,13 @@ mod tests {
 
     #[test]
     fn random_gating_bit_equality_and_measured_bytes() {
-        let (disp, x, gates) = workload(96, 8, 2, 16, 1.2, 21);
+        let batch = workload(96, 8, 2, 16, 1.2, 21);
         let store = ExpertStore::init(8, 16, 24, 5);
         for placement in [Placement::Contiguous, Placement::Strided] {
             for ranks in [1, 2, 4, 8] {
                 let topo =
                     EpTopology::with_placement(ranks, 8, placement).unwrap();
-                let rep = check_equivalence(&topo, &store, &disp, &x, &gates)
+                let rep = check_equivalence(&topo, &store, batch.disp(), batch.x(), batch.gates())
                     .unwrap();
                 assert!(rep.ok(),
                         "R={ranks} {placement}: bitwise={} bytes {} vs {}",
@@ -835,19 +1403,21 @@ mod tests {
 
     #[test]
     fn training_is_bitwise_identical_across_sharding() {
-        // 3 SGD steps on the same workload: losses and final parameters
-        // must match bit-for-bit between R=1 and R=4
-        let (disp, x, gates) = workload(64, 8, 2, 12, 0.8, 33);
-        let l = disp.num_tokens;
+        // 3 optimizer steps on the same workload: losses and final
+        // parameters must match bit-for-bit between R=1 and R=4
+        let batch = workload(64, 8, 2, 12, 0.8, 33);
+        let l = batch.num_tokens();
         let d = 12;
         let store = ExpertStore::init(8, d, 16, 77);
         let mut rng = Rng::new(55);
         let target = rng.normal_vec(l * d, 1.0);
 
         let run = |engine: &mut dyn ExecutionEngine| -> Vec<f64> {
+            let mut opt = Sgd;
             let mut losses = Vec::new();
             for _ in 0..3 {
-                let out = engine.forward(&disp, &x, &gates).unwrap();
+                let handle = engine.forward(&batch).unwrap();
+                let out = handle.output();
                 let mut loss = 0.0f64;
                 let mut d_out = vec![0.0f32; out.len()];
                 let scale = 2.0 / out.len() as f32;
@@ -856,8 +1426,11 @@ mod tests {
                     loss += (diff as f64) * (diff as f64);
                     d_out[i] = scale * diff;
                 }
-                engine.backward_update(&d_out, 0.1).unwrap();
-                losses.push(loss / out.len() as f64);
+                let n = out.len() as f64;
+                let grads = handle.backward(engine, &d_out).unwrap();
+                let delta = opt.step(&grads, 0.1).unwrap();
+                engine.apply_update(&delta).unwrap();
+                losses.push(loss / n);
             }
             losses
         };
@@ -872,17 +1445,103 @@ mod tests {
         let pa = single.gather_params().unwrap();
         let pb = sharded.gather_params().unwrap();
         assert_eq!(pa, pb, "trained parameters diverged");
+        assert_eq!(batch.copy_count(), 0, "engines deep-copied the batch");
+    }
+
+    #[test]
+    fn checkpoint_policies_bit_identical_grads_decreasing_memory() {
+        let batch = workload(72, 8, 2, 10, 0.9, 13);
+        let store = ExpertStore::init(8, 10, 14, 3);
+        let topo = EpTopology::new(4, 8).unwrap();
+        let d_out: Vec<f32> = {
+            let mut rng = Rng::new(2);
+            rng.normal_vec(batch.num_tokens() * 10, 1.0)
+        };
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        let mut all_grads: Vec<ExpertGrads> = Vec::new();
+        let mut data_bytes: Vec<u64> = Vec::new();
+        for policy in CheckpointPolicy::ALL {
+            for sharded in [false, true] {
+                let mut engine: Box<dyn ExecutionEngine> = if sharded {
+                    Box::new(ShardedEngine::with_policy(topo.clone(), &store, 4, policy)
+                        .unwrap())
+                } else {
+                    Box::new(SingleRankEngine::with_policy(store.clone(), policy))
+                };
+                let handle = engine.forward(&batch).unwrap();
+                outs.push(handle.output().to_vec());
+                if sharded {
+                    data_bytes.push(
+                        engine
+                            .memory_per_rank()
+                            .iter()
+                            .map(|m| m.data_bytes)
+                            .sum(),
+                    );
+                }
+                let grads = handle.backward(engine.as_mut(), &d_out).unwrap();
+                all_grads.push(grads);
+            }
+        }
+        for o in &outs[1..] {
+            assert_eq!(o, &outs[0], "outputs diverged across policies");
+        }
+        for g in &all_grads[1..] {
+            assert_eq!(g, &all_grads[0], "grads diverged across policies");
+        }
+        // SaveAll > SaveInputs > RecomputeAll in data-class bytes
+        assert!(data_bytes[0] > data_bytes[1], "{data_bytes:?}");
+        assert!(data_bytes[1] > data_bytes[2], "{data_bytes:?}");
+    }
+
+    #[test]
+    fn recompute_all_reruns_dispatch_exchange_in_backward() {
+        let batch = workload(64, 8, 2, 8, 0.5, 4);
+        let store = ExpertStore::init(8, 8, 12, 1);
+        let topo = EpTopology::new(4, 8).unwrap();
+        let mut eng = ShardedEngine::with_policy(
+            topo, &store, 4, CheckpointPolicy::RecomputeAll).unwrap();
+        let handle = eng.forward(&batch).unwrap();
+        let fwd = eng.traffic();
+        assert_eq!(fwd.recompute_bytes, 0);
+        let d_out = vec![0.1f32; batch.num_tokens() * 8];
+        handle.backward(&mut eng, &d_out).unwrap();
+        let bwd = eng.traffic();
+        // the re-gather moves exactly the rows the fwd dispatch moved
+        assert_eq!(bwd.recompute_bytes, fwd.dispatch_bytes);
+        assert_eq!(bwd.grad_bytes, fwd.dispatch_bytes);
+    }
+
+    #[test]
+    fn traffic_resets_at_forward_and_accumulates_through_backward() {
+        let batch = workload(48, 4, 2, 8, 0.3, 6);
+        let store = ExpertStore::init(4, 8, 10, 9);
+        let topo = EpTopology::new(2, 4).unwrap();
+        let mut eng = ShardedEngine::new(topo, &store, 2).unwrap();
+        let d_out = vec![0.5f32; batch.num_tokens() * 8];
+        let handle = eng.forward(&batch).unwrap();
+        assert_eq!(eng.traffic().grad_bytes, 0,
+                   "grad_bytes must read 0 after forward");
+        handle.backward(&mut eng, &d_out).unwrap();
+        assert!(eng.traffic().grad_bytes > 0);
+        // a fresh forward resets the whole session's counters
+        let handle = eng.forward(&batch).unwrap();
+        let t = eng.traffic();
+        assert_eq!(t.grad_bytes, 0, "grad_bytes leaked across sessions");
+        assert_eq!(t.recompute_bytes, 0);
+        assert!(t.dispatch_bytes > 0);
+        drop(handle);
     }
 
     #[test]
     fn traffic_accounting_is_conserved() {
-        let (disp, x, gates) = workload(128, 8, 2, 8, 0.5, 4);
+        let batch = workload(128, 8, 2, 8, 0.5, 4);
         let store = ExpertStore::init(8, 8, 12, 1);
         let topo = EpTopology::new(2, 8).unwrap();
         let mut eng = ShardedEngine::new(topo, &store, 2).unwrap();
-        eng.forward(&disp, &x, &gates).unwrap();
+        let _ = eng.forward(&batch).unwrap();
         let t = eng.traffic();
-        assert_eq!(t.cross_rows + t.local_rows, disp.slots() as u64);
+        assert_eq!(t.cross_rows + t.local_rows, batch.disp().slots() as u64);
         assert_eq!(t.dispatch_bytes, t.cross_rows * 8 * 4);
         // combine returns exactly the rows that were dispatched
         assert_eq!(t.combine_bytes, t.dispatch_bytes);
@@ -890,19 +1549,87 @@ mod tests {
         let mem = eng.memory_per_rank();
         assert_eq!(mem.len(), 2);
         let data: u64 = mem.iter().map(|m| m.data_bytes).sum();
-        assert!(data >= disp.slots() as u64 * 8 * 4);
+        assert!(data >= batch.disp().slots() as u64 * 8 * 4);
+    }
+
+    #[test]
+    fn stale_and_foreign_handles_are_rejected() {
+        let batch = workload(16, 4, 2, 4, 0.0, 8);
+        let store = ExpertStore::init(4, 4, 8, 3);
+        let mut eng = SingleRankEngine::new(store.clone());
+        let d_out = vec![0.0f32; batch.num_tokens() * 4];
+        let mut grads = eng.zero_grads();
+
+        // a newer forward invalidates the older handle
+        let old = eng.forward(&batch).unwrap();
+        let new = eng.forward(&batch).unwrap();
+        assert!(eng.backward_into(old, &d_out, &mut grads).is_err());
+        eng.backward_into(new, &d_out, &mut grads).unwrap();
+
+        // the session ended: even a replayed id cannot re-enter
+        let replay = StepHandle { engine_tag: 0, session: 0, out: Vec::new() };
+        assert!(eng.backward_into(replay, &d_out, &mut grads).is_err());
+
+        // handles are engine-bound
+        let mut other = SingleRankEngine::new(store);
+        let foreign = other.forward(&batch).unwrap();
+        assert!(eng.backward_into(foreign, &d_out, &mut grads).is_err());
     }
 
     #[test]
     fn shape_validation() {
-        let (disp, x, gates) = workload(16, 4, 2, 4, 0.0, 8);
+        let batch = workload(16, 4, 2, 4, 0.0, 8);
         let store = ExpertStore::init(4, 4, 8, 3);
         let mut eng = SingleRankEngine::new(store.clone());
-        assert!(eng.backward_update(&[0.0; 64], 0.1).is_err());
-        assert!(eng.forward(&disp, &x[..8], &gates).is_err());
-        assert!(eng.forward(&disp, &x, &gates[..3]).is_err());
+        // engine/batch shape mismatches
         let bad_store = ExpertStore::init(8, 4, 8, 3);
         let mut bad = SingleRankEngine::new(bad_store);
-        assert!(bad.forward(&disp, &x, &gates).is_err());
+        assert!(bad.forward(&batch).is_err());
+        let wrong_d = ExpertStore::init(4, 6, 8, 3);
+        let mut bad_d = SingleRankEngine::new(wrong_d);
+        assert!(bad_d.forward(&batch).is_err());
+        // d_out and grads shape mismatches
+        let handle = eng.forward(&batch).unwrap();
+        let mut wrong_grads = ExpertGrads::zeros(4, 4, 9);
+        assert!(eng
+            .backward_into(handle, &vec![0.0; 16 * 4], &mut wrong_grads)
+            .is_err());
+        let handle = eng.forward(&batch).unwrap();
+        let mut grads = eng.zero_grads();
+        assert!(eng.backward_into(handle, &[0.0; 7], &mut grads).is_err());
+        // batch constructor validation
+        assert!(StepBatch::new(batch.disp().clone(), vec![0.0; 3], batch.gates().to_vec())
+            .is_err());
+        assert!(StepBatch::new(batch.disp().clone(), batch.x().to_vec(), vec![0.0; 5])
+            .is_err());
+    }
+
+    #[test]
+    fn step_batch_share_is_zero_copy_and_split_covers_tokens() {
+        let batch = workload(30, 4, 2, 6, 0.4, 12);
+        let s = batch.share();
+        assert_eq!(s.id(), batch.id());
+        assert_eq!(batch.copy_count(), 0);
+        let dc = batch.deep_copy().unwrap();
+        assert_ne!(dc.id(), batch.id());
+        assert_eq!(batch.copy_count(), 1);
+
+        for parts in [1, 2, 3, 4] {
+            let micros = batch.split(parts).unwrap();
+            assert_eq!(micros.len(), parts);
+            let mut covered = 0;
+            for (off, mb) in &micros {
+                assert_eq!(*off, covered);
+                covered += mb.num_tokens();
+                mb.disp().validate().unwrap();
+                assert_eq!(mb.d_model(), batch.d_model());
+                // microbatch payload slices match the parent ranges
+                let d = batch.d_model();
+                assert_eq!(mb.x(), &batch.x()[*off * d..(*off + mb.num_tokens()) * d]);
+            }
+            assert_eq!(covered, batch.num_tokens());
+        }
+        assert!(batch.split(0).is_err());
+        assert!(batch.split(31).is_err());
     }
 }

@@ -5,19 +5,29 @@
 //! checkpointing, and the expert-parallel topology. The LM compute is
 //! the AOT-compiled XLA step (runtime::Executable) — Python never runs
 //! here. The expert-parallel path runs through the [`ExecutionEngine`]
-//! trait: `engine::SingleRankEngine` is the classic one-rank path,
-//! `engine::ShardedEngine` executes the all-to-all plan across simulated
-//! ranks with measured communication.
+//! step-session API: a caller-owned [`StepBatch`] workload is shared
+//! zero-copy into `forward`, the returned [`StepHandle`] is the only
+//! ticket into the backward pass (which yields first-class
+//! [`ExpertGrads`]), and a pluggable `optim::Optimizer` turns
+//! accumulated gradients into the update. `engine::SingleRankEngine` is
+//! the classic one-rank path, `engine::ShardedEngine` executes the
+//! all-to-all plan across simulated ranks with measured communication.
 //!
 //! [`ExecutionEngine`]: engine::ExecutionEngine
+//! [`StepBatch`]: engine::StepBatch
+//! [`StepHandle`]: engine::StepHandle
+//! [`ExpertGrads`]: params::ExpertGrads
 
 pub mod engine;
 pub mod expert_parallel;
+pub mod optim;
 pub mod params;
 pub mod trainer;
 
-pub use engine::{check_equivalence, engine_from_config, workload_from_config,
-                 ExecutionEngine, ShardedEngine, SingleRankEngine, Traffic};
+pub use engine::{check_equivalence, engine_from_config, step_batch_from_config,
+                 workload_from_config, ExecutionEngine, ShardedEngine,
+                 SingleRankEngine, StepBatch, StepHandle, Traffic};
 pub use expert_parallel::{AllToAllPlan, EpTopology};
-pub use params::{ExpertStore, ParamStore, RankExperts};
+pub use optim::{optimizer_from_name, Adam, Optimizer, Sgd};
+pub use params::{ExpertGrads, ExpertStore, ParamStore, RankExperts};
 pub use trainer::{EpTrainReport, EpTrainer, TrainReport, Trainer};

@@ -1,0 +1,217 @@
+//! Optimizers over [`ExpertGrads`] — decoupled from the backward pass.
+//!
+//! The step-session engine API returns gradients as first-class values;
+//! an [`Optimizer`] turns accumulated gradients into a parameter *delta*
+//! (the additive update), which the engine applies to its rank-owned
+//! parameters via `ExecutionEngine::apply_update`. This split is what
+//! makes grad-accum and non-SGD optimizers possible at all: the old
+//! `backward_update(d_out, lr)` fused all three stages.
+//!
+//! Both optimizers are elementwise and deterministic, so every
+//! invariance the engines guarantee (rank count, placement, checkpoint
+//! policy, accumulation split) extends through the update: identical
+//! grads in, bit-identical delta out.
+//!
+//! Note [`Sgd`]'s delta `-(lr·g)` applied as `p + delta` is bitwise
+//! equal to the classic in-place `p -= lr·g` (IEEE-754: `a - b` is
+//! exactly `a + (-b)`), so the redesign preserves PR-1 numerics.
+
+use super::params::ExpertGrads;
+
+/// Turns accumulated expert gradients into an additive parameter delta.
+pub trait Optimizer {
+    fn name(&self) -> String;
+
+    /// Optimizer-state bytes resident per model parameter (f32 units
+    /// already included): 0 for SGD, 8 for Adam's two moments.
+    fn state_bytes_per_param(&self) -> u64;
+
+    /// Compute the delta to *add* to the parameters for one optimizer
+    /// step over `grads` at learning rate `lr`. Stateful optimizers
+    /// update their internal moments here.
+    fn step(&mut self, grads: &ExpertGrads, lr: f32) -> Result<ExpertGrads, String>;
+}
+
+/// Plain SGD: `delta = -(lr · g)`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Sgd;
+
+impl Optimizer for Sgd {
+    fn name(&self) -> String {
+        "sgd".into()
+    }
+
+    fn state_bytes_per_param(&self) -> u64 {
+        0
+    }
+
+    fn step(&mut self, grads: &ExpertGrads, lr: f32) -> Result<ExpertGrads, String> {
+        if !(lr > 0.0 && lr.is_finite()) {
+            return Err(format!("sgd: lr must be positive, got {lr}"));
+        }
+        let mut delta = grads.clone();
+        for g in &mut delta.experts {
+            for s in [&mut g.w1, &mut g.b1, &mut g.w2, &mut g.b2] {
+                for v in s.iter_mut() {
+                    *v = -(lr * *v);
+                }
+            }
+        }
+        Ok(delta)
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction, f32 moments.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// optimizer steps taken (bias-correction exponent)
+    t: u64,
+    m: Option<ExpertGrads>,
+    v: Option<ExpertGrads>,
+}
+
+impl Default for Adam {
+    fn default() -> Adam {
+        Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: None, v: None }
+    }
+}
+
+impl Adam {
+    pub fn new(beta1: f32, beta2: f32, eps: f32) -> Adam {
+        Adam { beta1, beta2, eps, ..Adam::default() }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.t
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> String {
+        "adam".into()
+    }
+
+    fn state_bytes_per_param(&self) -> u64 {
+        8 // two f32 moments per parameter
+    }
+
+    fn step(&mut self, grads: &ExpertGrads, lr: f32) -> Result<ExpertGrads, String> {
+        if !(lr > 0.0 && lr.is_finite()) {
+            return Err(format!("adam: lr must be positive, got {lr}"));
+        }
+        let (e, d, h) = (grads.num_experts(), grads.d_model, grads.d_hidden);
+        let m = self
+            .m
+            .get_or_insert_with(|| ExpertGrads::zeros(e, d, h));
+        if (m.num_experts(), m.d_model, m.d_hidden) != (e, d, h) {
+            return Err("adam: grads shape changed across steps".into());
+        }
+        let v = self
+            .v
+            .get_or_insert_with(|| ExpertGrads::zeros(e, d, h));
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let mut delta = grads.clone();
+        for ei in 0..e {
+            let ge = &grads.experts[ei];
+            let me = &mut m.experts[ei];
+            let ve = &mut v.experts[ei];
+            let de = &mut delta.experts[ei];
+            for (gs, ms, vs, ds) in [
+                (&ge.w1, &mut me.w1, &mut ve.w1, &mut de.w1),
+                (&ge.b1, &mut me.b1, &mut ve.b1, &mut de.b1),
+                (&ge.w2, &mut me.w2, &mut ve.w2, &mut de.w2),
+                (&ge.b2, &mut me.b2, &mut ve.b2, &mut de.b2),
+            ] {
+                for i in 0..gs.len() {
+                    let g = gs[i];
+                    ms[i] = self.beta1 * ms[i] + (1.0 - self.beta1) * g;
+                    vs[i] = self.beta2 * vs[i] + (1.0 - self.beta2) * g * g;
+                    let mhat = ms[i] / bc1;
+                    let vhat = vs[i] / bc2;
+                    ds[i] = -(lr * mhat / (vhat.sqrt() + self.eps));
+                }
+            }
+        }
+        Ok(delta)
+    }
+}
+
+/// Build the optimizer an `[ep]` config names.
+pub fn optimizer_from_name(name: &str) -> Result<Box<dyn Optimizer>, String> {
+    match name.to_ascii_lowercase().as_str() {
+        "sgd" => Ok(Box::new(Sgd)),
+        "adam" => Ok(Box::new(Adam::default())),
+        _ => Err(format!("unknown optimizer `{name}` (sgd|adam)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grads_of(vals: &[f32]) -> ExpertGrads {
+        let mut g = ExpertGrads::zeros(1, 2, 1);
+        // w1 is (h, d) = 2 elements; fill from vals
+        g.experts[0].w1.copy_from_slice(&vals[..2]);
+        g
+    }
+
+    #[test]
+    fn sgd_delta_matches_in_place_update() {
+        let g = grads_of(&[0.25, -3.5]);
+        let mut opt = Sgd;
+        let delta = opt.step(&g, 0.1).unwrap();
+        let p0 = 1.75f32;
+        let classic = p0 - 0.1 * g.experts[0].w1[0];
+        let via_delta = p0 + delta.experts[0].w1[0];
+        assert_eq!(classic.to_bits(), via_delta.to_bits());
+        assert!(opt.step(&g, 0.0).is_err());
+    }
+
+    #[test]
+    fn adam_first_step_is_signed_lr() {
+        // with bias correction, step 1 gives mhat = g, vhat = g², so
+        // delta ≈ -lr·sign(g) for |g| >> eps
+        let g = grads_of(&[2.0, -0.5]);
+        let mut opt = Adam::default();
+        let d = opt.step(&g, 0.01).unwrap();
+        assert!((d.experts[0].w1[0] + 0.01).abs() < 1e-4, "{}", d.experts[0].w1[0]);
+        assert!((d.experts[0].w1[1] - 0.01).abs() < 1e-4, "{}", d.experts[0].w1[1]);
+        assert_eq!(opt.steps_taken(), 1);
+    }
+
+    #[test]
+    fn adam_is_deterministic() {
+        let g = grads_of(&[0.3, 0.7]);
+        let run = || {
+            let mut opt = Adam::default();
+            let mut out = Vec::new();
+            for _ in 0..5 {
+                out.push(opt.step(&g, 0.05).unwrap());
+            }
+            out
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn adam_rejects_shape_change() {
+        let mut opt = Adam::default();
+        opt.step(&ExpertGrads::zeros(2, 2, 2), 0.1).unwrap();
+        assert!(opt.step(&ExpertGrads::zeros(4, 2, 2), 0.1).is_err());
+    }
+
+    #[test]
+    fn from_name() {
+        assert_eq!(optimizer_from_name("SGD").unwrap().name(), "sgd");
+        assert_eq!(optimizer_from_name("adam").unwrap().name(), "adam");
+        assert!(optimizer_from_name("lion").is_err());
+        assert_eq!(Sgd.state_bytes_per_param(), 0);
+        assert_eq!(Adam::default().state_bytes_per_param(), 8);
+    }
+}

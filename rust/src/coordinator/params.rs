@@ -116,7 +116,9 @@ impl ParamStore {
                 let ndim = bytes::read_u64(&buf, &mut pos).map_err(anyhow::Error::msg)? as usize;
                 let mut shape = Vec::with_capacity(ndim);
                 for _ in 0..ndim {
-                    shape.push(bytes::read_u64(&buf, &mut pos).map_err(anyhow::Error::msg)? as usize);
+                    let dim = bytes::read_u64(&buf, &mut pos)
+                        .map_err(anyhow::Error::msg)?;
+                    shape.push(dim as usize);
                 }
                 let n: usize = shape.iter().product();
                 if pos + 4 * n > buf.len() {
@@ -209,8 +211,7 @@ impl ExpertStore {
     /// Every expert drawn from its own seed (`seed ^ f(e)`), so a rank
     /// initializing only its shard gets bit-identical weights to the
     /// single-rank store — placement-invariant by construction.
-    pub fn init(num_experts: usize, d_model: usize, d_hidden: usize,
-                seed: u64) -> ExpertStore {
+    pub fn init(num_experts: usize, d_model: usize, d_hidden: usize, seed: u64) -> ExpertStore {
         let experts = (0..num_experts)
             .map(|e| {
                 let es = seed ^ (e as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
@@ -268,6 +269,87 @@ impl ExpertStore {
             .map(|(e, p)| p.ok_or_else(|| format!("expert {e} owned by no rank")))
             .collect::<std::result::Result<Vec<_>, String>>()?;
         Ok(ExpertStore { d_model: d, d_hidden: h, experts })
+    }
+}
+
+/// Per-expert gradients as a first-class value: one accumulator per
+/// global expert, dense by expert id. Produced by the engines' step
+/// sessions (`StepHandle::backward`), accumulated across microbatches by
+/// `EpTrainer`, consumed by an `Optimizer` — gradient computation and
+/// parameter update are decoupled.
+///
+/// Accumulation order is part of the numerics contract: the engines add
+/// row contributions into an existing `ExpertGrads` in expert-segment
+/// order, so accumulating A contiguous microbatches into one value
+/// performs the exact same float-op sequence as one full batch — the
+/// foundation of the grad-accum bit-identity guarantee.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpertGrads {
+    pub d_model: usize,
+    pub d_hidden: usize,
+    /// one gradient accumulator per global expert id (dense)
+    pub experts: Vec<ExpertParams>,
+}
+
+impl ExpertGrads {
+    /// All-zero accumulators for `num_experts` experts.
+    pub fn zeros(num_experts: usize, d_model: usize, d_hidden: usize) -> ExpertGrads {
+        ExpertGrads {
+            d_model,
+            d_hidden,
+            experts: (0..num_experts)
+                .map(|_| ExpertParams::zeros(d_model, d_hidden))
+                .collect(),
+        }
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.experts.len()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.experts.iter().map(ExpertParams::num_params).sum()
+    }
+
+    /// Shape compatibility with another grads/params holder.
+    pub fn check_like(&self, num_experts: usize, d_model: usize, d_hidden: usize) -> Result<()> {
+        if self.experts.len() != num_experts
+            || self.d_model != d_model
+            || self.d_hidden != d_hidden
+        {
+            bail!(
+                "ExpertGrads shape (E={}, d={}, h={}) != expected \
+                 (E={num_experts}, d={d_model}, h={d_hidden})",
+                self.experts.len(),
+                self.d_model,
+                self.d_hidden
+            );
+        }
+        Ok(())
+    }
+
+    /// Reset every accumulator to zero in place (buffer reuse across
+    /// optimizer steps — no reallocation).
+    pub fn clear(&mut self) {
+        for g in &mut self.experts {
+            g.w1.iter_mut().for_each(|v| *v = 0.0);
+            g.b1.iter_mut().for_each(|v| *v = 0.0);
+            g.w2.iter_mut().for_each(|v| *v = 0.0);
+            g.b2.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+
+    /// Global L2 norm over every accumulator (metrics/diagnostics).
+    pub fn l2_norm(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for g in &self.experts {
+            for s in [&g.w1, &g.b1, &g.w2, &g.b2] {
+                for &v in s.iter() {
+                    acc += (v as f64) * (v as f64);
+                }
+            }
+        }
+        acc.sqrt()
     }
 }
 
@@ -332,8 +414,7 @@ mod tests {
         assert_eq!(loaded.step, 10);
         assert_eq!(loaded.names, s.names);
         for i in 0..s.params.len() {
-            assert_eq!(loaded.params[i].as_f32().unwrap(),
-                       s.params[i].as_f32().unwrap());
+            assert_eq!(loaded.params[i].as_f32().unwrap(), s.params[i].as_f32().unwrap());
         }
         loaded.check_against(&lm_spec()).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
@@ -378,6 +459,22 @@ mod tests {
         let b = ExpertStore::init(16, 4, 8, 42);
         assert_eq!(a.experts[5], b.experts[5]);
         assert_ne!(a.experts[0], a.experts[1]);
+    }
+
+    #[test]
+    fn expert_grads_zeros_clear_and_norm() {
+        let mut g = ExpertGrads::zeros(4, 8, 12);
+        assert_eq!(g.num_experts(), 4);
+        assert_eq!(g.num_params(), 4 * (12 * 8 + 12 + 8 * 12 + 8));
+        assert_eq!(g.l2_norm(), 0.0);
+        g.check_like(4, 8, 12).unwrap();
+        assert!(g.check_like(4, 8, 16).is_err());
+        assert!(g.check_like(2, 8, 12).is_err());
+        g.experts[1].w1[0] = 3.0;
+        g.experts[2].b2[0] = 4.0;
+        assert!((g.l2_norm() - 5.0).abs() < 1e-12);
+        g.clear();
+        assert_eq!(g.l2_norm(), 0.0);
     }
 
     #[test]

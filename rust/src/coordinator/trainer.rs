@@ -3,10 +3,13 @@
 //! [`Trainer`] drives the AOT `lm_train_step` executable with data from
 //! the batcher under the LR schedule, with metrics, eval, and
 //! checkpointing. [`EpTrainer`] drives an [`ExecutionEngine`] — the
-//! expert-parallel host engine — through the same step-loop shape
-//! (forward → loss → backward/update → metrics), owning its
-//! expert-sharded parameters behind the trait so the R=1 and R=N paths
-//! are interchangeable.
+//! expert-parallel host engine — through the step-session API: the
+//! workload is built once as zero-copy [`StepBatch`] microbatches, each
+//! optimizer step accumulates gradients across them with
+//! `StepHandle::backward_into`, and the update comes from a pluggable
+//! [`Optimizer`] over the accumulated [`ExpertGrads`]. Loss curves are
+//! bit-invariant to rank count, placement, checkpoint policy, and the
+//! grad-accum split (pinned by the engine tests).
 
 use std::path::PathBuf;
 use std::rc::Rc;
@@ -17,12 +20,14 @@ use anyhow::{bail, Result};
 use crate::config::ep::EpConfig;
 use crate::config::train::TrainConfig;
 use crate::data::batcher::Batcher;
-use crate::metrics::{Ema, MetricsSink};
+use crate::metrics::{Ema, MetricsSink, Peak};
 use crate::runtime::client::{Executable, Runtime};
 use crate::runtime::host::HostTensor;
 
-use super::engine::{workload_from_config, ExecutionEngine, Traffic};
-use super::params::ParamStore;
+use super::engine::{step_batch_from_config, ExecutionEngine, StepBatch,
+                    Traffic};
+use super::optim::{optimizer_from_name, Optimizer};
+use super::params::{ExpertGrads, ParamStore};
 
 /// Outcome of a training run.
 #[derive(Debug, Clone)]
@@ -200,60 +205,108 @@ pub struct EpTrainReport {
     pub first_loss: f64,
     pub final_loss: f64,
     pub losses: Vec<f64>,
-    /// measured comm of the final step (dispatch/combine/grad bytes)
+    /// measured comm of the final microbatch session
     pub traffic: Traffic,
     pub step_ms_mean: f64,
+    /// peak summed `data`-class bytes across any forward (policy-dependent)
+    pub peak_data_bytes: u64,
+    /// final-step global gradient L2 norm (pre-update)
+    pub grad_norm: f64,
 }
 
-/// SGD loop over an [`ExecutionEngine`] on a synthetic regression task:
-/// a fixed random target Y* per token, MSE loss, routing drawn once from
-/// the config's seed. Everything downstream of the engine trait is
-/// rank-count-agnostic, so the sharded engine trains bit-identically to
-/// the single-rank one (pinned by the engine tests).
+/// Step-session training loop over an [`ExecutionEngine`] on a synthetic
+/// regression task: a fixed random target Y* per token, MSE loss,
+/// routing drawn once from the config's seed. The global batch is built
+/// once and split into `cfg.grad_accum` contiguous microbatches
+/// *before* the loop; every step then runs forward/backward per
+/// microbatch with zero workload copies (asserted via the [`StepBatch`]
+/// copy counter), accumulates gradients into one [`ExpertGrads`], and
+/// applies the configured optimizer once. For a fixed global batch the
+/// loss curve is bit-identical across `grad_accum` splits, rank counts,
+/// and checkpoint policies.
 pub struct EpTrainer {
     pub engine: Box<dyn ExecutionEngine>,
     pub cfg: EpConfig,
+    optimizer: Box<dyn Optimizer>,
     sink: MetricsSink,
 }
 
 impl EpTrainer {
     pub fn new(engine: Box<dyn ExecutionEngine>, cfg: EpConfig) -> Result<EpTrainer> {
         cfg.validate().map_err(anyhow::Error::msg)?;
+        let optimizer = optimizer_from_name(&cfg.optimizer)
+            .map_err(anyhow::Error::msg)?;
         let sink = MetricsSink::new(Some(cfg.metrics_path.as_str()))
             .map_err(anyhow::Error::msg)?;
-        Ok(EpTrainer { engine, cfg, sink })
+        Ok(EpTrainer { engine, cfg, optimizer, sink })
     }
 
-    /// Run `cfg.steps` SGD steps; prints a progress line roughly every
-    /// tenth step.
+    /// Run `cfg.steps` optimizer steps; prints a progress line roughly
+    /// every tenth step.
     pub fn run(&mut self) -> Result<EpTrainReport> {
         // workload is a pure function of the config (any engine — and
-        // ep-bench — sees the same routing, inputs, and targets)
-        let (disp, x, gates, target) = workload_from_config(&self.cfg);
+        // ep-bench — sees the same routing, inputs, and targets); built
+        // once, shared zero-copy for the whole run
+        let (batch, target) =
+            step_batch_from_config(&self.cfg).map_err(anyhow::Error::msg)?;
+        let micros: Vec<(usize, StepBatch)> = if self.cfg.grad_accum == 1 {
+            vec![(0, batch.share())]
+        } else {
+            batch.split(self.cfg.grad_accum).map_err(anyhow::Error::msg)?
+        };
+        let d = batch.d_model();
+        let global_elems = batch.num_tokens() * d;
+        let scale = 2.0 / global_elems as f32;
 
+        let mut grads = self.engine.zero_grads();
         let mut losses = Vec::with_capacity(self.cfg.steps);
         let mut step_times = Vec::with_capacity(self.cfg.steps);
+        let mut peak = Peak::new();
+        let mut grad_norm = 0.0f64;
         let log_every = (self.cfg.steps / 10).max(1);
         for s in 0..self.cfg.steps {
             let t0 = Instant::now();
-            let out = self
-                .engine
-                .forward(&disp, &x, &gates)
-                .map_err(anyhow::Error::msg)?;
+            grads.clear();
+            // one running f64 accumulator across microbatches: the float
+            // op sequence matches the unsplit batch element-for-element
             let mut loss = 0.0f64;
-            let mut d_out = vec![0.0f32; out.len()];
-            let scale = 2.0 / out.len() as f32;
-            for i in 0..out.len() {
-                let diff = out[i] - target[i];
-                loss += (diff as f64) * (diff as f64);
-                d_out[i] = scale * diff;
+            for (off, mb) in &micros {
+                let handle = self
+                    .engine
+                    .forward(mb)
+                    .map_err(anyhow::Error::msg)?;
+                let out = handle.output();
+                let mut d_out = vec![0.0f32; out.len()];
+                let base = *off * d;
+                for i in 0..out.len() {
+                    let diff = out[i] - target[base + i];
+                    loss += (diff as f64) * (diff as f64);
+                    d_out[i] = scale * diff;
+                }
+                // sample between forward and backward: the session (and
+                // its policy-saved tensors) is resident right now
+                let data: u64 = self
+                    .engine
+                    .memory_per_rank()
+                    .iter()
+                    .map(|m| m.data_bytes)
+                    .sum();
+                peak.observe(data);
+                handle
+                    .backward_into(self.engine.as_mut(), &d_out, &mut grads)
+                    .map_err(anyhow::Error::msg)?;
             }
-            loss /= out.len() as f64;
+            loss /= global_elems as f64;
             if !loss.is_finite() {
                 bail!("non-finite ep-train loss at step {s}: {loss}");
             }
+            grad_norm = grads.l2_norm();
+            let delta = self
+                .optimizer
+                .step(&grads, self.cfg.lr as f32)
+                .map_err(anyhow::Error::msg)?;
             self.engine
-                .backward_update(&d_out, self.cfg.lr as f32)
+                .apply_update(&delta)
                 .map_err(anyhow::Error::msg)?;
             step_times.push(t0.elapsed().as_secs_f64() * 1e3);
             losses.push(loss);
@@ -265,10 +318,25 @@ impl EpTrainer {
                 ("step_ms", *step_times.last().unwrap()),
                 ("dispatch_bytes", t.dispatch_bytes as f64),
                 ("grad_bytes", t.grad_bytes as f64),
+                ("recompute_bytes", t.recompute_bytes as f64),
+                ("grad_norm", grad_norm),
+                ("micro_steps", micros.len() as f64),
             ]);
             if s % log_every == 0 || s + 1 == self.cfg.steps {
                 println!("{}", self.sink.console(s, &[("loss", loss)]));
             }
+        }
+        // the zero-copy contract: nothing in the loop duplicated the
+        // workload payload after construction
+        for (_, mb) in &micros {
+            if mb.copy_count() != 0 {
+                bail!("step loop deep-copied a microbatch {} times",
+                      mb.copy_count());
+            }
+        }
+        if batch.copy_count() != 0 {
+            bail!("step loop deep-copied the global batch {} times",
+                  batch.copy_count());
         }
         Ok(EpTrainReport {
             steps: self.cfg.steps,
@@ -277,6 +345,8 @@ impl EpTrainer {
             traffic: self.engine.traffic(),
             step_ms_mean: step_times.iter().sum::<f64>()
                 / step_times.len().max(1) as f64,
+            peak_data_bytes: peak.get(),
+            grad_norm,
             losses,
         })
     }
@@ -286,6 +356,7 @@ impl EpTrainer {
 mod tests {
     use super::*;
     use crate::coordinator::engine::engine_from_config;
+    use crate::memory::model::CheckpointPolicy;
 
     fn tiny_cfg(ranks: usize) -> EpConfig {
         EpConfig {
@@ -302,6 +373,12 @@ mod tests {
         }
     }
 
+    fn run_losses(cfg: EpConfig) -> Vec<f64> {
+        let engine = engine_from_config(&cfg).unwrap();
+        let mut t = EpTrainer::new(engine, cfg).unwrap();
+        t.run().unwrap().losses
+    }
+
     #[test]
     fn ep_trainer_reduces_loss() {
         let cfg = tiny_cfg(2);
@@ -312,20 +389,72 @@ mod tests {
         assert!(r.final_loss < r.first_loss,
                 "loss did not drop: {:?}", r.losses);
         assert!(r.traffic.dispatch_bytes > 0);
+        assert!(r.grad_norm > 0.0);
+        assert!(r.peak_data_bytes > 0);
+    }
+
+    #[test]
+    fn single_rank_reports_peak_memory_too() {
+        // memory_per_rank persists across the session's backward on
+        // both engines — the R=1 path must not report zero
+        let cfg = tiny_cfg(1);
+        let engine = engine_from_config(&cfg).unwrap();
+        let mut t = EpTrainer::new(engine, cfg).unwrap();
+        let r = t.run().unwrap();
+        assert!(r.peak_data_bytes > 0, "R=1 peak_data_bytes is zero");
+        let mem = t.engine.memory_per_rank();
+        assert_eq!(mem.len(), 1);
+        assert!(mem[0].data_bytes > 0,
+                "single-rank memory zeroed after backward");
     }
 
     #[test]
     fn ep_training_loss_curves_match_across_rank_counts() {
         let losses: Vec<Vec<f64>> = [1usize, 2, 4]
             .iter()
-            .map(|&ranks| {
-                let cfg = tiny_cfg(ranks);
-                let engine = engine_from_config(&cfg).unwrap();
-                let mut t = EpTrainer::new(engine, cfg).unwrap();
-                t.run().unwrap().losses
-            })
+            .map(|&ranks| run_losses(tiny_cfg(ranks)))
             .collect();
         assert_eq!(losses[0], losses[1], "R=1 vs R=2 diverged");
         assert_eq!(losses[0], losses[2], "R=1 vs R=4 diverged");
+    }
+
+    #[test]
+    fn loss_curve_is_bit_invariant_to_grad_accum_split() {
+        let reference = run_losses(tiny_cfg(2));
+        for accum in [2usize, 4] {
+            for ranks in [1usize, 2] {
+                let cfg = EpConfig { grad_accum: accum, ..tiny_cfg(ranks) };
+                assert_eq!(run_losses(cfg), reference,
+                           "grad_accum={accum} R={ranks} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn loss_curve_is_bit_invariant_to_checkpoint_policy() {
+        let reference = run_losses(tiny_cfg(2));
+        for policy in CheckpointPolicy::ALL {
+            for ranks in [1usize, 2] {
+                let cfg = EpConfig { checkpoint: policy, ..tiny_cfg(ranks) };
+                assert_eq!(run_losses(cfg), reference,
+                           "{policy} R={ranks} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn adam_trains_and_is_rank_invariant() {
+        let mk = |ranks: usize| EpConfig {
+            optimizer: "adam".into(),
+            lr: 0.01,
+            ..tiny_cfg(ranks)
+        };
+        let a = run_losses(mk(1));
+        let b = run_losses(mk(4));
+        assert_eq!(a, b, "adam diverged across rank counts");
+        assert!(a.last().unwrap() < a.first().unwrap(),
+                "adam did not reduce the loss: {a:?}");
+        // and Adam actually differs from SGD (the optimizer is live)
+        assert_ne!(a, run_losses(tiny_cfg(1)));
     }
 }

@@ -14,14 +14,19 @@
 //! * **L3** — this crate: the coordinator. PJRT runtime for the AOT
 //!   artifacts, training orchestrator, dispatch-structure twin (paper §4)
 //!   with per-rank slicing (`dispatch::shard`), activation-memory model
-//!   (Figures 3/5, whole-layer and per-rank), the expert-parallel stack —
+//!   (Figures 3/5, whole-layer, per-rank, and checkpoint-policy-
+//!   parametric), the expert-parallel stack —
 //!   `coordinator::expert_parallel` plans the all-to-all and
-//!   `coordinator::engine` *executes* it: an [`ExecutionEngine`] trait
-//!   with the classic single-rank path and a `ShardedEngine` that runs
-//!   one simulated rank per worker thread with real buffer packing and
-//!   measured communication — plus config (`[train]`/`[ep]`), data
-//!   pipeline, metrics, and hand-rolled substrates (JSON, TOML, PRNG,
-//!   thread pool, stats, CLI) since this build is fully offline.
+//!   `coordinator::engine` *executes* it through the step-session API:
+//!   caller-owned zero-copy [`StepBatch`] workloads, an
+//!   [`ExecutionEngine`] trait whose `forward` returns a typestate
+//!   [`StepHandle`] whose `backward` yields first-class `ExpertGrads`, a
+//!   `CheckpointPolicy` axis (save-all / save-inputs / recompute-all,
+//!   all bit-identical), pluggable optimizers (`coordinator::optim`:
+//!   SGD, Adam), and grad-accum microbatching with bit-invariant loss
+//!   curves — plus config (`[train]`/`[ep]`), data pipeline, metrics,
+//!   and hand-rolled substrates (JSON, TOML, PRNG, thread pool, stats,
+//!   CLI) since this build is fully offline.
 //!
 //! Entry points: the `moeblaze` binary (`rust/src/main.rs` — see
 //! `ep-bench`/`ep-train` for the sharded engine), the examples under
@@ -30,6 +35,8 @@
 //! (`anyhow` subset, `xla` PJRT stub), so `cargo build` needs no network.
 //!
 //! [`ExecutionEngine`]: coordinator::engine::ExecutionEngine
+//! [`StepBatch`]: coordinator::engine::StepBatch
+//! [`StepHandle`]: coordinator::engine::StepHandle
 
 pub mod bench_harness;
 pub mod config;

@@ -10,11 +10,15 @@
 //!                                paper §4 structures on a worked example
 //!   dispatch-bench [--tokens N] sort-build vs 3-step build
 //!   ep-sim [--ranks R ...]      expert-parallel all-to-all plan (dry run)
-//!   ep-bench [--ranks 1,2,4,8 ...]
+//!   ep-bench [--ranks 1,2,4,8] [--checkpoint save-inputs] ...
 //!                                execute the plan: sharded engine vs
-//!                                single-rank, bit-equality + measured bytes
-//!   ep-train [--ranks R --steps N --config file.toml ...]
-//!                                SGD on the expert-parallel engine
+//!                                single-rank, bit-equality + measured
+//!                                bytes + checkpoint-policy memory sweep
+//!   ep-train [--ranks R --steps N --grad-accum A --optimizer sgd|adam
+//!             --checkpoint save-all|save-inputs|recompute-all
+//!             --config file.toml ...]
+//!                                step-session training on the
+//!                                expert-parallel engine
 //!   train  [--steps N --config file.toml ...]
 //!                                train the MoE LM end-to-end (AOT step)
 //!   inspect                      list artifacts + compile them
@@ -29,12 +33,13 @@ use moeblaze::config::model::Activation;
 use moeblaze::config::paper::{paper_configs, scaled_configs, PAPER_BLOCK, SCALED_BLOCK};
 use moeblaze::config::toml::Toml;
 use moeblaze::config::train::TrainConfig;
-use moeblaze::coordinator::engine::{engine_from_config, workload_from_config,
+use moeblaze::coordinator::engine::{engine_from_config, step_batch_from_config,
                                     ExecutionEngine, ShardedEngine,
                                     SingleRankEngine};
 use moeblaze::coordinator::expert_parallel::EpTopology;
 use moeblaze::coordinator::params::{ExpertStore, ParamStore};
 use moeblaze::coordinator::trainer::{EpTrainer, Trainer};
+use moeblaze::memory::model::CheckpointPolicy;
 use moeblaze::data::batcher::Batcher;
 use moeblaze::data::corpus::structured_corpus;
 use moeblaze::data::tokenizer::ByteTokenizer;
@@ -101,7 +106,8 @@ fn cmd_configs() -> Result<()> {
         ("Table 1 (paper scale)", paper_configs(), PAPER_BLOCK),
         ("Table 1 (CPU-bench scale)", scaled_configs(), SCALED_BLOCK),
     ] {
-        let mut t = Table::new(["config", "input_d", "ffn_h", "experts", "k", "batch", "seq", "tokens", "pad_slots"]);
+        let mut t = Table::new(["config", "input_d", "ffn_h", "experts", "k",
+                                "batch", "seq", "tokens", "pad_slots"]);
         for c in &configs {
             let m = c.moe(Activation::Swiglu, block);
             t.row([
@@ -191,7 +197,8 @@ fn cmd_dispatch_demo(args: &Args) -> Result<()> {
     println!("expert_token_indices = {:?}", d.expert_token_indices);
     println!("expert_token_offsets = {:?}", d.expert_token_offsets);
     println!("token_index_map      = {:?}", d.token_index_map);
-    println!("metadata: {} ({} data passes)", human_bytes(d.metadata_bytes() as u64), stats.data_passes);
+    println!("metadata: {} ({} data passes)",
+             human_bytes(d.metadata_bytes() as u64), stats.data_passes);
     let sorted = sort_build(&ids, l, e, k);
     println!("3-step build == sort build: {}", sorted == d);
     Ok(())
@@ -277,6 +284,14 @@ fn ep_config_from_args(args: &Args, parse_ranks: bool) -> Result<EpConfig> {
     cfg.seed = args.u64_or("seed", cfg.seed).map_err(anyhow::Error::msg)?;
     cfg.steps = args.usize_or("steps", cfg.steps).map_err(anyhow::Error::msg)?;
     cfg.lr = args.f64_or("lr", cfg.lr).map_err(anyhow::Error::msg)?;
+    cfg.grad_accum = args.usize_or("grad-accum", cfg.grad_accum)
+        .map_err(anyhow::Error::msg)?;
+    if let Some(o) = args.get("optimizer") {
+        cfg.optimizer = o.to_string();
+    }
+    if let Some(c) = args.get("checkpoint") {
+        cfg.checkpoint = CheckpointPolicy::parse(c).map_err(anyhow::Error::msg)?;
+    }
     if let Some(p) = args.get("placement") {
         cfg.placement = Placement::parse(p).map_err(anyhow::Error::msg)?;
     }
@@ -303,15 +318,17 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
     println!("ep-bench: L={l} E={e} k={k} d={d} skew={} placement={}",
              base.skew, base.placement);
 
-    // one workload, every rank count (the same generator EpTrainer uses)
-    let (disp, x, gates, _target) = workload_from_config(&base);
+    // one workload, every rank count (the same generator EpTrainer
+    // uses), built once and shared zero-copy across the whole sweep
+    let (batch, _target) = step_batch_from_config(&base).map_err(anyhow::Error::msg)?;
     let store = ExpertStore::init(e, d, base.d_hidden, base.seed);
 
     // single-rank reference, computed once for the whole sweep
     let mut single = SingleRankEngine::new(store.clone());
     let reference = single
-        .forward(&disp, &x, &gates)
-        .map_err(anyhow::Error::msg)?;
+        .forward(&batch)
+        .map_err(anyhow::Error::msg)?
+        .into_output();
 
     let bench = Bench::quick();
     // "step bw": comm bytes over the whole fwd step (incl. expert
@@ -327,12 +344,13 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
         }
         let topo = EpTopology::with_placement(r, e, base.placement)
             .map_err(anyhow::Error::msg)?;
-        let plan = topo.plan(&disp, d, 4);
-        let mut engine = ShardedEngine::new(topo, &store, r)
+        let plan = topo.plan(batch.disp(), d, 4);
+        let mut engine = ShardedEngine::with_policy(topo, &store, r, base.checkpoint)
             .map_err(anyhow::Error::msg)?;
         let out = engine
-            .forward(&disp, &x, &gates)
-            .map_err(anyhow::Error::msg)?;
+            .forward(&batch)
+            .map_err(anyhow::Error::msg)?
+            .into_output();
         let bitwise_equal = out.len() == reference.len()
             && out
                 .iter()
@@ -340,13 +358,10 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
                 .all(|(a, b)| a.to_bits() == b.to_bits());
         let traffic = engine.traffic();
         let s = bench.run(|| {
-            std::hint::black_box(
-                engine.forward(&disp, &x, &gates).expect("fwd"),
-            );
+            std::hint::black_box(engine.forward(&batch).expect("fwd"));
         });
         let mut tp = Throughput::new();
-        tp.record(traffic.dispatch_bytes + traffic.combine_bytes,
-                  s.mean_ns / 1e9);
+        tp.record(traffic.dispatch_bytes + traffic.combine_bytes, s.mean_ns / 1e9);
         t.row([
             r.to_string(),
             if bitwise_equal { "yes".into() } else { "NO".to_string() },
@@ -376,32 +391,73 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
     if let Some(engine) = last {
         let r = engine.ranks();
         println!("{}", render_per_rank_memory(
-            &format!("per-rank activation memory, measured (R={r})"),
+            &format!("per-rank activation memory, measured (R={r}, {})",
+                     base.checkpoint),
             &engine.memory_per_rank()));
-        let plan = engine.topo.plan(&disp, d, 4);
+        let plan = engine.topo.plan(batch.disp(), d, 4);
         let total = single.memory_per_rank().remove(0);
         println!("{}", render_per_rank_memory(
             &format!("per-rank activation memory, analytic split (R={r})"),
             &per_rank_breakdown(&total, &plan.per_rank_tokens)));
+
+        // checkpoint-policy sweep: measured data bytes per policy, on
+        // the largest verified rank count (strictly decreasing by
+        // construction — asserted, not assumed)
+        let mut t = Table::new(["policy", "data (sum)", "index (sum)",
+                                "comm-buffers", "saved/slot"]);
+        let mut data_by_policy = Vec::new();
+        for policy in CheckpointPolicy::ALL {
+            let topo = EpTopology::with_placement(r, e, base.placement)
+                .map_err(anyhow::Error::msg)?;
+            let mut eng = ShardedEngine::with_policy(topo, &store, r, policy)
+                .map_err(anyhow::Error::msg)?;
+            let _ = eng.forward(&batch).map_err(anyhow::Error::msg)?;
+            let mem = eng.memory_per_rank();
+            let data: u64 = mem.iter().map(|m| m.data_bytes).sum();
+            let index: u64 = mem.iter().map(|m| m.index_bytes).sum();
+            let extra: u64 = mem.iter().map(|m| m.extra_bytes).sum();
+            t.row([
+                policy.name().to_string(),
+                human_bytes(data),
+                human_bytes(index),
+                human_bytes(extra),
+                human_bytes(policy.saved_bytes_per_slot(d as u64, base.d_hidden as u64, 4)),
+            ]);
+            data_by_policy.push(data);
+        }
+        println!("checkpoint-policy memory sweep (R={r}, measured)\n{}",
+                 t.render());
+        if !(data_by_policy[0] > data_by_policy[1]
+            && data_by_policy[1] > data_by_policy[2])
+        {
+            bail!("policy data bytes not strictly decreasing: {data_by_policy:?}");
+        }
     }
     Ok(())
 }
 
 fn cmd_ep_train(args: &Args) -> Result<()> {
     let cfg = ep_config_from_args(args, true)?;
-    println!("ep-train: {} ranks ({} placement), L={} E={} k={} d={} h={}, {} steps",
+    println!("ep-train: {} ranks ({} placement), L={} E={} k={} d={} h={}, \
+              {} steps × {} microbatches, {} optimizer, {} checkpointing",
              cfg.ranks, cfg.placement, cfg.tokens, cfg.num_experts, cfg.top_k,
-             cfg.d_model, cfg.d_hidden, cfg.steps);
+             cfg.d_model, cfg.d_hidden, cfg.steps, cfg.grad_accum,
+             cfg.optimizer, cfg.checkpoint);
     let engine = engine_from_config(&cfg).map_err(anyhow::Error::msg)?;
     let mut trainer = EpTrainer::new(engine, cfg.clone())?;
     let report = trainer.run()?;
-    println!("\ntrained {} steps on `{}`: loss {:.6} -> {:.6}, {:.2} ms/step",
+    println!("\ntrained {} steps on `{}`: loss {:.6} -> {:.6}, {:.2} ms/step, \
+              final |g| {:.4}",
              report.steps, trainer.engine.name(), report.first_loss,
-             report.final_loss, report.step_ms_mean);
+             report.final_loss, report.step_ms_mean, report.grad_norm);
     let t = report.traffic;
-    println!("last-step traffic: dispatch {}, combine {}, grads {} ({} cross / {} local rows)",
+    println!("last-session traffic: dispatch {}, combine {}, grads {}, \
+              recompute {} ({} cross / {} local rows)",
              human_bytes(t.dispatch_bytes), human_bytes(t.combine_bytes),
-             human_bytes(t.grad_bytes), t.cross_rows, t.local_rows);
+             human_bytes(t.grad_bytes), human_bytes(t.recompute_bytes),
+             t.cross_rows, t.local_rows);
+    println!("peak data-class bytes across the run: {} ({} policy)",
+             human_bytes(report.peak_data_bytes), cfg.checkpoint);
     println!("{}", render_per_rank_memory(
         "per-rank activation memory (measured, last step)",
         &trainer.engine.memory_per_rank()));
@@ -434,8 +490,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.steps = args.usize_or("steps", cfg.steps).map_err(anyhow::Error::msg)?;
     cfg.lr = args.f64_or("lr", cfg.lr).map_err(anyhow::Error::msg)?;
     cfg.seed = args.u64_or("seed", cfg.seed).map_err(anyhow::Error::msg)?;
-    cfg.checkpoint_every = args.usize_or("checkpoint-every", cfg.checkpoint_every).map_err(anyhow::Error::msg)?;
-    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every).map_err(anyhow::Error::msg)?;
+    cfg.checkpoint_every = args.usize_or("checkpoint-every", cfg.checkpoint_every)
+        .map_err(anyhow::Error::msg)?;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)
+        .map_err(anyhow::Error::msg)?;
     if let Some(p) = args.get("metrics") {
         cfg.metrics_path = p.to_string();
     }

@@ -6,7 +6,86 @@
 //! "Activation memory" = bytes saved between forward and backward (the
 //! paper's saved-tensor-hook metric). See DESIGN.md §6 for the derivation.
 
+use std::fmt;
+
 use crate::config::model::MoeConfig;
+
+/// What one engine step saves across the forward→backward boundary — the
+/// measurable axis behind the paper's Algorithm-1 argument. Threaded
+/// through both execution engines and reflected in their
+/// `memory_per_rank()` accounting, so the Figure-3/5 numbers are
+/// policy-parametric rather than hardwired.
+///
+/// Per routed slot the policies save (f32):
+///
+/// | policy         | saved tensors            | bytes/slot    |
+/// |----------------|--------------------------|---------------|
+/// | `SaveAll`      | inputs + pre-act + act   | `4·(d + 2·h)` |
+/// | `SaveInputs`   | routed inputs only       | `4·d`         |
+/// | `RecomputeAll` | nothing (batch is shared)| `0`           |
+///
+/// All three produce bit-identical outputs and gradients; only resident
+/// bytes (and, for `RecomputeAll`, backward-pass recompute traffic)
+/// differ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CheckpointPolicy {
+    /// Keep routed inputs and hidden activations; backward recomputes
+    /// nothing.
+    SaveAll,
+    /// The paper's Algorithm-1 policy (default): keep routed inputs,
+    /// recompute hidden activations in backward.
+    #[default]
+    SaveInputs,
+    /// Keep nothing beyond the shared step batch; backward re-gathers
+    /// the routed inputs (re-running the dispatch exchange on sharded
+    /// engines) and recomputes hidden activations.
+    RecomputeAll,
+}
+
+impl CheckpointPolicy {
+    pub const ALL: [CheckpointPolicy; 3] = [
+        CheckpointPolicy::SaveAll,
+        CheckpointPolicy::SaveInputs,
+        CheckpointPolicy::RecomputeAll,
+    ];
+
+    pub fn parse(s: &str) -> Result<CheckpointPolicy, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "save-all" | "save_all" | "all" => Ok(CheckpointPolicy::SaveAll),
+            "save-inputs" | "save_inputs" | "inputs" => Ok(CheckpointPolicy::SaveInputs),
+            "recompute-all" | "recompute_all" | "recompute" | "none" => {
+                Ok(CheckpointPolicy::RecomputeAll)
+            }
+            _ => Err(format!(
+                "unknown checkpoint policy `{s}` (save-all|save-inputs|recompute-all)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CheckpointPolicy::SaveAll => "save-all",
+            CheckpointPolicy::SaveInputs => "save-inputs",
+            CheckpointPolicy::RecomputeAll => "recompute-all",
+        }
+    }
+
+    /// Bytes saved across the fwd→bwd boundary per routed slot, for
+    /// model dimension `d` and hidden dimension `h` (dtype-sized).
+    pub fn saved_bytes_per_slot(self, d: u64, h: u64, dtype_bytes: u64) -> u64 {
+        match self {
+            CheckpointPolicy::SaveAll => dtype_bytes * (d + 2 * h),
+            CheckpointPolicy::SaveInputs => dtype_bytes * d,
+            CheckpointPolicy::RecomputeAll => 0,
+        }
+    }
+}
+
+impl fmt::Display for CheckpointPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// Accounting mode (DESIGN.md §3 substitution table).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -65,6 +144,28 @@ pub fn moeblaze_bytes(cfg: &MoeConfig, dtype_bytes: u64, save_yswi: bool) -> Mem
     MemoryBreakdown { data_bytes: data, index_bytes: index, extra_bytes: 0 }
 }
 
+/// Policy-parametric Figure-3/5 accounting for one MoE layer: what the
+/// saved-tensor set costs under each [`CheckpointPolicy`], on top of the
+/// routing metadata. `SaveInputs` reproduces the paper's Algorithm-1
+/// residuals shape; `SaveAll` models a no-recompute stack; `RecomputeAll`
+/// keeps indices only.
+pub fn checkpointed_bytes(cfg: &MoeConfig, dtype_bytes: u64,
+                          policy: CheckpointPolicy) -> MemoryBreakdown {
+    let n = cfg.slots() as u64;
+    let d = cfg.d_model as u64;
+    let h = cfg.d_hidden as u64;
+    let e = cfg.num_experts as u64;
+    let data = n * dtype_bytes // gates (L, k) — needed by every policy's bwd
+        + n * policy.saved_bytes_per_slot(d, h, dtype_bytes);
+    let index = 4 * (
+        n           // ids (L, k)
+        + n         // expert_token_indices
+        + n         // token_index_map
+        + (e + 1)   // offsets
+    );
+    MemoryBreakdown { data_bytes: data, index_bytes: index, extra_bytes: 0 }
+}
+
 /// Conventional (MegaBlocks-style) residuals (§2, §5.2).
 pub fn baseline_bytes(cfg: &MoeConfig, dtype_bytes: u64, mode: AccountingMode) -> MemoryBreakdown {
     let l = cfg.tokens as u64;
@@ -103,8 +204,7 @@ pub fn baseline_bytes(cfg: &MoeConfig, dtype_bytes: u64, mode: AccountingMode) -
 /// Figures 3/5 can be reported per rank. Integer shares are
 /// remainder-corrected: the per-rank rows always sum exactly to the
 /// input breakdown, and a zero-load rank reports zero bytes.
-pub fn per_rank_breakdown(total: &MemoryBreakdown,
-                          per_rank_rows: &[u64]) -> Vec<MemoryBreakdown> {
+pub fn per_rank_breakdown(total: &MemoryBreakdown, per_rank_rows: &[u64]) -> Vec<MemoryBreakdown> {
     assert!(!per_rank_rows.is_empty());
     let rows_total: u64 = per_rank_rows.iter().sum();
     if rows_total == 0 {
@@ -219,13 +319,45 @@ mod tests {
         for rows in [vec![10u64, 20, 30, 40], vec![1, 1, 1], vec![7]] {
             let per = per_rank_breakdown(&total, &rows);
             assert_eq!(per.len(), rows.len());
-            assert_eq!(per.iter().map(|b| b.data_bytes).sum::<u64>(),
-                       total.data_bytes);
-            assert_eq!(per.iter().map(|b| b.index_bytes).sum::<u64>(),
-                       total.index_bytes);
-            assert_eq!(per.iter().map(MemoryBreakdown::total).sum::<u64>(),
-                       total.total());
+            assert_eq!(per.iter().map(|b| b.data_bytes).sum::<u64>(), total.data_bytes);
+            assert_eq!(per.iter().map(|b| b.index_bytes).sum::<u64>(), total.index_bytes);
+            assert_eq!(per.iter().map(MemoryBreakdown::total).sum::<u64>(), total.total());
         }
+    }
+
+    #[test]
+    fn checkpoint_policy_parse_and_order() {
+        assert_eq!(CheckpointPolicy::parse("save-all").unwrap(),
+                   CheckpointPolicy::SaveAll);
+        assert_eq!(CheckpointPolicy::parse("Save_Inputs").unwrap(),
+                   CheckpointPolicy::SaveInputs);
+        assert_eq!(CheckpointPolicy::parse("recompute").unwrap(),
+                   CheckpointPolicy::RecomputeAll);
+        assert!(CheckpointPolicy::parse("lazy").is_err());
+        assert_eq!(CheckpointPolicy::default(), CheckpointPolicy::SaveInputs);
+        // strictly decreasing saved bytes — the Figure-3/5 policy axis
+        let (d, h) = (64, 128);
+        let all = CheckpointPolicy::SaveAll.saved_bytes_per_slot(d, h, 4);
+        let inp = CheckpointPolicy::SaveInputs.saved_bytes_per_slot(d, h, 4);
+        let rec = CheckpointPolicy::RecomputeAll.saved_bytes_per_slot(d, h, 4);
+        assert!(all > inp && inp > rec);
+        assert_eq!(all, 4 * (64 + 2 * 128));
+        assert_eq!(inp, 4 * 64);
+        assert_eq!(rec, 0);
+    }
+
+    #[test]
+    fn checkpointed_bytes_strictly_decreasing_data() {
+        let m = conf("conf3", Activation::Swiglu);
+        let rows: Vec<MemoryBreakdown> = CheckpointPolicy::ALL
+            .iter()
+            .map(|&p| checkpointed_bytes(&m, 2, p))
+            .collect();
+        assert!(rows[0].data_bytes > rows[1].data_bytes);
+        assert!(rows[1].data_bytes > rows[2].data_bytes);
+        // index bytes are policy-invariant
+        assert_eq!(rows[0].index_bytes, rows[1].index_bytes);
+        assert_eq!(rows[1].index_bytes, rows[2].index_bytes);
     }
 
     #[test]

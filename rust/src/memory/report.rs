@@ -5,8 +5,8 @@ use crate::config::model::Activation;
 use crate::config::paper::{paper_configs, scaled_configs, PAPER_BLOCK, SCALED_BLOCK};
 use crate::util::table::{human_bytes, Table};
 
-use super::model::{baseline_bytes, moeblaze_bytes, AccountingMode,
-                   MemoryBreakdown};
+use super::model::{baseline_bytes, checkpointed_bytes, moeblaze_bytes,
+                   AccountingMode, CheckpointPolicy, MemoryBreakdown};
 
 /// One row of a memory figure.
 #[derive(Debug, Clone)]
@@ -52,6 +52,47 @@ pub fn render_memory_figure(title: &str, rows: &[MemoryRow]) -> String {
             human_bytes(r.baseline),
             human_bytes(r.moeblaze),
             format!("{:.2}x", r.ratio()),
+        ]);
+    }
+    format!("{title}\n{}", t.render())
+}
+
+/// One checkpoint-policy row of the policy-parametric memory figure.
+#[derive(Debug, Clone)]
+pub struct PolicyMemoryRow {
+    pub policy: CheckpointPolicy,
+    pub breakdown: MemoryBreakdown,
+}
+
+/// The Figure-3/5 accounting swept over the [`CheckpointPolicy`] axis
+/// for one config — `SaveAll → SaveInputs → RecomputeAll` is strictly
+/// decreasing in `data` bytes by construction.
+pub fn policy_memory_figure(cfg: &crate::config::model::MoeConfig,
+                            dtype_bytes: u64) -> Vec<PolicyMemoryRow> {
+    CheckpointPolicy::ALL
+        .iter()
+        .map(|&policy| PolicyMemoryRow {
+            policy,
+            breakdown: checkpointed_bytes(cfg, dtype_bytes, policy),
+        })
+        .collect()
+}
+
+/// Render the policy sweep as a table (ratio column is vs `SaveAll`).
+pub fn render_policy_memory(title: &str, rows: &[PolicyMemoryRow]) -> String {
+    let mut t = Table::new(["policy", "data", "index", "total", "vs save-all"]);
+    let base = rows
+        .first()
+        .map(|r| r.breakdown.total())
+        .unwrap_or(0)
+        .max(1);
+    for r in rows {
+        t.row([
+            r.policy.name().to_string(),
+            human_bytes(r.breakdown.data_bytes),
+            human_bytes(r.breakdown.index_bytes),
+            human_bytes(r.breakdown.total()),
+            format!("{:.2}x", r.breakdown.total() as f64 / base as f64),
         ]);
     }
     format!("{title}\n{}", t.render())
@@ -122,6 +163,24 @@ mod tests {
         for c in ["conf1", "conf4", "conf7"] {
             assert!(s.contains(c));
         }
+    }
+
+    #[test]
+    fn policy_figure_decreases_and_renders() {
+        let cfg = paper_configs()
+            .into_iter()
+            .find(|c| c.name == "conf2")
+            .unwrap()
+            .moe(Activation::Swiglu, PAPER_BLOCK);
+        let rows = policy_memory_figure(&cfg, 2);
+        assert_eq!(rows.len(), 3);
+        assert!(rows[0].breakdown.data_bytes > rows[1].breakdown.data_bytes);
+        assert!(rows[1].breakdown.data_bytes > rows[2].breakdown.data_bytes);
+        let s = render_policy_memory("policies", &rows);
+        for name in ["save-all", "save-inputs", "recompute-all"] {
+            assert!(s.contains(name), "missing {name} in\n{s}");
+        }
+        assert!(s.contains("1.00x"));
     }
 
     #[test]

@@ -65,6 +65,33 @@ impl Throughput {
     }
 }
 
+/// High-water-mark tracker (peak bytes across step sessions — the
+/// number a real allocator would have had to provision).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Peak {
+    max: u64,
+    samples: u64,
+}
+
+impl Peak {
+    pub fn new() -> Peak {
+        Peak::default()
+    }
+
+    pub fn observe(&mut self, value: u64) {
+        self.max = self.max.max(value);
+        self.samples += 1;
+    }
+
+    pub fn get(&self) -> u64 {
+        self.max
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+}
+
 /// Step-loop metrics sink: console + optional JSONL file.
 pub struct MetricsSink {
     file: Option<File>,
@@ -135,6 +162,17 @@ mod tests {
         t.record(1 << 30, 0.5);
         assert!((t.gib_per_sec() - 2.0).abs() < 1e-9, "{}", t.gib_per_sec());
         assert!(t.format_brief().contains("GiB/s"));
+    }
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut p = Peak::new();
+        assert_eq!(p.get(), 0);
+        p.observe(10);
+        p.observe(3);
+        p.observe(7);
+        assert_eq!(p.get(), 10);
+        assert_eq!(p.samples(), 3);
     }
 
     #[test]

@@ -36,7 +36,10 @@ impl Table {
                 }
                 // right-align numeric-looking cells, left-align text
                 let cell = &cells[i];
-                let numeric = cell.chars().next().map(|c| c.is_ascii_digit() || c == '-' || c == '+')
+                let numeric = cell
+                    .chars()
+                    .next()
+                    .map(|c| c.is_ascii_digit() || c == '-' || c == '+')
                     .unwrap_or(false);
                 if numeric {
                     line.push_str(&format!("{:>w$}", cell, w = widths[i]));

@@ -5,8 +5,75 @@
 
 use moeblaze::config::model::Activation;
 use moeblaze::config::paper::{paper_configs, PAPER_BLOCK};
-use moeblaze::memory::model::{baseline_bytes, moeblaze_bytes, AccountingMode};
+use moeblaze::memory::model::{baseline_bytes, checkpointed_bytes,
+                              moeblaze_bytes, per_rank_breakdown,
+                              AccountingMode, CheckpointPolicy,
+                              MemoryBreakdown};
 use moeblaze::util::json::Json;
+use moeblaze::util::prng::Rng;
+
+/// Property suite for `per_rank_breakdown`: for 200 random breakdowns ×
+/// random per-rank loads × R ∈ {1, 2, 4, 8}, the per-rank split must
+/// (i) sum *exactly* to the global `MemoryBreakdown` in every byte
+/// class, and (ii) give zero bytes to zero-load ranks (when any rank
+/// has load).
+#[test]
+fn per_rank_breakdown_splits_sum_exactly_for_random_configs() {
+    let mut rng = Rng::new(0xB10C);
+    for case in 0..200 {
+        let total = MemoryBreakdown {
+            data_bytes: rng.next_u64() % 1_000_000_007,
+            index_bytes: rng.next_u64() % 65_536,
+            extra_bytes: rng.next_u64() % 10_000,
+        };
+        for ranks in [1usize, 2, 4, 8] {
+            let rows: Vec<u64> = (0..ranks)
+                .map(|_| rng.next_u64() % 500)
+                .collect();
+            let per = per_rank_breakdown(&total, &rows);
+            assert_eq!(per.len(), ranks, "case {case}");
+            assert_eq!(per.iter().map(|b| b.data_bytes).sum::<u64>(),
+                       total.data_bytes, "case {case} R={ranks}: data");
+            assert_eq!(per.iter().map(|b| b.index_bytes).sum::<u64>(),
+                       total.index_bytes, "case {case} R={ranks}: index");
+            assert_eq!(per.iter().map(|b| b.extra_bytes).sum::<u64>(),
+                       total.extra_bytes, "case {case} R={ranks}: extra");
+            assert_eq!(per.iter().map(MemoryBreakdown::total).sum::<u64>(),
+                       total.total(), "case {case} R={ranks}: total");
+            if rows.iter().any(|&r| r > 0) {
+                for (r, b) in per.iter().enumerate() {
+                    if rows[r] == 0 {
+                        assert_eq!(b.total(), 0,
+                                   "case {case}: zero-load rank {r} holds bytes");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The per-rank split composes with the policy-parametric layer model:
+/// splitting any policy's breakdown conserves every byte class.
+#[test]
+fn per_rank_breakdown_composes_with_checkpoint_policies() {
+    let cfg = paper_configs()
+        .into_iter()
+        .find(|c| c.name == "conf3")
+        .unwrap()
+        .moe(Activation::Swiglu, PAPER_BLOCK);
+    let mut rng = Rng::new(77);
+    for policy in CheckpointPolicy::ALL {
+        let total = checkpointed_bytes(&cfg, 2, policy);
+        for ranks in [2usize, 4, 8] {
+            let rows: Vec<u64> = (0..ranks)
+                .map(|_| rng.next_u64() % 1000)
+                .collect();
+            let per = per_rank_breakdown(&total, &rows);
+            assert_eq!(per.iter().map(MemoryBreakdown::total).sum::<u64>(),
+                       total.total(), "{policy} R={ranks}");
+        }
+    }
+}
 
 #[test]
 fn rust_model_matches_python_fixture() {

@@ -1,6 +1,10 @@
 """Python mirror of rust/src/dispatch/shard.rs + coordinator/engine.rs
-to validate the algorithm (indexing, routes, packing, byte accounting)
-since no Rust toolchain exists in this container."""
+to validate the algorithm (indexing, routes, packing, byte accounting),
+plus — since ISSUE 2 — the step-session training semantics: grad-accum
+microbatching with a shared accumulator, checkpoint-policy equivalence
+(save-all / save-inputs / recompute-all), and SGD/Adam optimizer steps
+decoupled from the backward pass. Run by CI as the cross-validation
+gate; no Rust toolchain exists in the build container."""
 import random
 import numpy as np
 
@@ -184,3 +188,168 @@ for case in range(300):
     assert measured == pb and cross_rows == pc, \
         f"bytes case {case}: measured {measured} vs plan {pb}"
 print("300 fuzz cases OK: round-trip exact, outputs bit-identical, measured == planned bytes")
+
+# ===========================================================================
+# Step-session training parity (mirror of coordinator/engine.rs +
+# trainer.rs + optim.rs after the ISSUE-2 redesign).
+#
+# Mirrored invariants, each asserted bitwise on the loss curve:
+#   * grad_accum ∈ {1, 2, 4}: contiguous token-range microbatches,
+#     gradients accumulated into ONE shared accumulator in expert-segment
+#     order, loss accumulated into ONE running f64 — identical float-op
+#     sequence to the unsplit batch;
+#   * checkpoint policy ∈ {save-all, save-inputs, recompute-all}: saved
+#     vs recomputed hidden activations / re-gathered inputs;
+#   * optimizer ∈ {sgd, adam}: update computed from accumulated grads as
+#     an additive delta, applied once per global step.
+# ===========================================================================
+
+f32 = np.float32
+
+def silu32(a):
+    return (a / (1 + np.exp(-a))).astype(f32)
+
+def ffn_fwd(p, x, want_hidden):
+    pre = (p['w1'] @ x + p['b1']).astype(f32)
+    act = silu32(pre)
+    y = (p['w2'] @ act + p['b2']).astype(f32)
+    return (y, pre, act) if want_hidden else (y, None, None)
+
+def ffn_bwd_row(p, g, x, dy, pre, act):
+    # mirrors expert_backward_row in engine.rs
+    g['b2'] += dy
+    g['w2'] += np.outer(dy, act).astype(f32)
+    dz = (p['w2'].T @ dy).astype(f32)
+    sig = (1 / (1 + np.exp(-pre))).astype(f32)
+    da = (dz * sig * (1 + pre * (1 - sig))).astype(f32)
+    g['b1'] += da
+    g['w1'] += np.outer(da, x).astype(f32)
+
+def zeros_like_params(d, h):
+    return dict(w1=np.zeros((h, d), f32), b1=np.zeros(h, f32),
+                w2=np.zeros((d, h), f32), b2=np.zeros(d, f32))
+
+def init_experts(E, d, h, rng):
+    return [dict(w1=rng.standard_normal((h, d)).astype(f32) * f32(d ** -0.5),
+                 b1=np.zeros(h, f32),
+                 w2=rng.standard_normal((d, h)).astype(f32) * f32(h ** -0.5),
+                 b2=np.zeros(d, f32)) for _ in range(E)]
+
+def session_fwd_bwd(d_sub, params, x_sub, gates_sub, target, t0, scale,
+                    grads, policy, loss):
+    """One microbatch step session: forward, running-loss continuation,
+    backward into the SHARED `grads` accumulator. Mirrors the single-rank
+    engine row-for-row (the sharded engine is bit-identical to it by the
+    fuzz suite above + segment-order accumulation)."""
+    l, e, k, dm = d_sub['l'], d_sub['e'], d_sub['k'], x_sub.shape[1]
+    n = l * k
+    ys = np.zeros((n, dm), f32)
+    save_hidden = policy == 'save-all'
+    save_inputs = policy != 'recompute-all'
+    xs = np.zeros((n, dm), f32) if save_inputs else None
+    pre_s = np.zeros((n, params[0]['b1'].size), f32) if save_hidden else None
+    act_s = np.zeros((n, params[0]['b1'].size), f32) if save_hidden else None
+    for ex in range(e):
+        for pos in range(d_sub['off'][ex], d_sub['off'][ex + 1]):
+            xin = x_sub[d_sub['eti'][pos]]
+            if save_inputs:
+                xs[pos] = xin
+            y, pre, act = ffn_fwd(params[ex], xin, save_hidden)
+            if save_hidden:
+                pre_s[pos], act_s[pos] = pre, act
+            ys[pos] = y
+    out = np.zeros((l, dm), f32)
+    for i in range(l):
+        for j in range(k):
+            pos = d_sub['tim'][i * k + j]
+            out[i] = out[i] + np.float32(gates_sub[i * k + j]) * ys[pos]
+    # loss + d_out, continuing the running f64 accumulator in token order
+    d_out = np.zeros((l, dm), f32)
+    for i in range(l):
+        for c in range(dm):
+            diff = f32(out[i, c] - target[t0 + i, c])
+            loss += float(diff) * float(diff)
+            d_out[i, c] = scale * diff
+    # backward, expert-major segment order, into the shared accumulator
+    origin = [0] * n
+    for slot, pos in enumerate(d_sub['tim']):
+        origin[pos] = slot
+    for ex in range(e):
+        for pos in range(d_sub['off'][ex], d_sub['off'][ex + 1]):
+            tok = d_sub['eti'][pos]
+            dy = (np.float32(gates_sub[origin[pos]]) * d_out[tok]).astype(f32)
+            xin = xs[pos] if save_inputs else x_sub[tok]
+            if save_hidden:
+                pre, act = pre_s[pos], act_s[pos]
+            else:
+                pre = (params[ex]['w1'] @ xin + params[ex]['b1']).astype(f32)
+                act = silu32(pre)
+            ffn_bwd_row(params[ex], grads[ex], xin, dy, pre, act)
+    return loss
+
+def sgd_delta(grads, lr):
+    return [{k: (-(f32(lr) * g[k])).astype(f32) for k in g} for g in grads]
+
+def adam_step(state, grads, lr):
+    b1, b2, eps = f32(0.9), f32(0.999), f32(1e-8)
+    state['t'] += 1
+    bc1 = f32(1) - b1 ** f32(state['t'])
+    bc2 = f32(1) - b2 ** f32(state['t'])
+    delta = []
+    for ex, g in enumerate(grads):
+        de = {}
+        for k in g:
+            m = (b1 * state['m'][ex][k] + (f32(1) - b1) * g[k]).astype(f32)
+            v = (b2 * state['v'][ex][k] + (f32(1) - b2) * g[k] * g[k]).astype(f32)
+            state['m'][ex][k], state['v'][ex][k] = m, v
+            mhat = (m / bc1).astype(f32)
+            vhat = (v / bc2).astype(f32)
+            de[k] = (-(f32(lr) * mhat / (np.sqrt(vhat) + eps))).astype(f32)
+        delta.append(de)
+    return delta
+
+def train(L, E, K, DM, H, steps, accum, policy, opt, lr, seed):
+    rng = np.random.default_rng(seed)
+    params = init_experts(E, DM, H, rng)
+    ids = np.concatenate([rng.choice(E, K, replace=False)
+                          for _ in range(L)]).astype(int)
+    gates = rng.random(L * K).astype(f32)
+    x = rng.standard_normal((L, DM)).astype(f32)
+    target = rng.standard_normal((L, DM)).astype(f32)
+    # microbatches built once, before the loop (contiguous token ranges)
+    bounds = [L * i // accum for i in range(accum + 1)]
+    micros = []
+    for m in range(accum):
+        t0, t1 = bounds[m], bounds[m + 1]
+        sub_ids = list(ids[t0 * K:t1 * K])
+        d_sub = build(sub_ids, t1 - t0, E, K)
+        micros.append((t0, d_sub, x[t0:t1], gates[t0 * K:t1 * K]))
+    adam_state = dict(t=0, m=[zeros_like_params(DM, H) for _ in range(E)],
+                      v=[zeros_like_params(DM, H) for _ in range(E)])
+    scale = f32(2.0 / (L * DM))
+    losses = []
+    for _ in range(steps):
+        grads = [zeros_like_params(DM, H) for _ in range(E)]
+        loss = 0.0
+        for (t0, d_sub, x_sub, gates_sub) in micros:
+            loss = session_fwd_bwd(d_sub, params, x_sub, gates_sub, target,
+                                   t0, scale, grads, policy, loss)
+        losses.append(loss / (L * DM))
+        delta = adam_step(adam_state, grads, lr) if opt == 'adam' \
+            else sgd_delta(grads, lr)
+        for ex in range(E):
+            for k in params[ex]:
+                params[ex][k] = (params[ex][k] + delta[ex][k]).astype(f32)
+    return losses
+
+L, E, K, DM, H, STEPS = 24, 4, 2, 6, 10, 3
+for opt, lr in [('sgd', 0.05), ('adam', 0.01)]:
+    ref = train(L, E, K, DM, H, STEPS, 1, 'save-inputs', opt, lr, 123)
+    assert ref[-1] < ref[0], f"{opt}: no learning: {ref}"
+    for accum in [1, 2, 4]:
+        for policy in ['save-all', 'save-inputs', 'recompute-all']:
+            got = train(L, E, K, DM, H, STEPS, accum, policy, opt, lr, 123)
+            assert got == ref, \
+                f"{opt} accum={accum} {policy}: loss curve diverged\n{got}\n{ref}"
+print("step-session parity OK: loss curves bit-identical across "
+      "grad_accum x checkpoint policy, for sgd and adam")
