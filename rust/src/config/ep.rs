@@ -19,6 +19,11 @@ pub enum Placement {
     /// Round-robin (e mod R) — spreads the hot low-id experts of a
     /// skewed router across ranks.
     Strided,
+    /// Greedy rebalance from the previous step's per-expert routed-row
+    /// loads (`EpTopology::load_aware`): heaviest expert first onto the
+    /// least-loaded rank with spare capacity, never worse than
+    /// `Contiguous` in max-rank load.
+    LoadAware,
 }
 
 impl Placement {
@@ -26,7 +31,10 @@ impl Placement {
         match s.to_ascii_lowercase().as_str() {
             "contiguous" | "block" => Ok(Placement::Contiguous),
             "strided" | "round-robin" | "round_robin" => Ok(Placement::Strided),
-            _ => Err(format!("unknown placement `{s}` (contiguous|strided)")),
+            "load-aware" | "load_aware" | "loadaware" => Ok(Placement::LoadAware),
+            _ => Err(format!(
+                "unknown placement `{s}` (contiguous|strided|load-aware)"
+            )),
         }
     }
 
@@ -34,6 +42,7 @@ impl Placement {
         match self {
             Placement::Contiguous => "contiguous",
             Placement::Strided => "strided",
+            Placement::LoadAware => "load-aware",
         }
     }
 }
@@ -73,6 +82,21 @@ pub struct EpConfig {
     pub optimizer: String,
     /// fwd→bwd save/recompute policy (engine- and memory-model axis)
     pub checkpoint: CheckpointPolicy,
+    /// chunk-pipelined engine: split each step into this many
+    /// token-contiguous chunks and overlap their dispatch exchange with
+    /// expert compute (`coordinator::pipeline`). 0 = barrier engines
+    /// (the pre-pipeline behavior); values above the token count clamp.
+    pub pipeline_chunks: usize,
+    /// simulated cross-rank link bandwidth for the pipeline's phase
+    /// timeline (decimal GB/s)
+    pub link_gbps: f64,
+    /// simulated per-rank expert-compute rate for the phase timeline
+    /// (GFLOP/s)
+    pub compute_gflops: f64,
+    /// ep-train LR schedule (`constant` | `cosine` | `linear-warmup`)
+    pub lr_schedule: String,
+    /// ep-train global-norm gradient clipping threshold; 0 = off
+    pub clip_norm: f64,
     /// metrics output (JSONL); empty = stdout only
     pub metrics_path: String,
 }
@@ -94,6 +118,11 @@ impl Default for EpConfig {
             grad_accum: 1,
             optimizer: "sgd".into(),
             checkpoint: CheckpointPolicy::default(),
+            pipeline_chunks: 0,
+            link_gbps: 50.0,
+            compute_gflops: 200.0,
+            lr_schedule: "constant".into(),
+            clip_norm: 0.0,
             metrics_path: String::new(),
         }
     }
@@ -134,8 +163,21 @@ impl EpConfig {
                 self.grad_accum, self.tokens
             ));
         }
-        // single source of truth for optimizer names: the registry
+        if !(self.link_gbps > 0.0 && self.link_gbps.is_finite()) {
+            return Err(format!("ep.link_gbps must be positive, got {}", self.link_gbps));
+        }
+        if !(self.compute_gflops > 0.0 && self.compute_gflops.is_finite()) {
+            return Err(format!(
+                "ep.compute_gflops must be positive, got {}",
+                self.compute_gflops
+            ));
+        }
+        if !(self.clip_norm >= 0.0 && self.clip_norm.is_finite()) {
+            return Err(format!("ep.clip_norm must be >= 0, got {}", self.clip_norm));
+        }
+        // single sources of truth for names: the respective registries
         let _ = crate::coordinator::optim::optimizer_from_name(&self.optimizer)?;
+        let _ = crate::coordinator::optim::LrSchedule::parse(&self.lr_schedule)?;
         Ok(())
     }
 
@@ -161,6 +203,11 @@ impl EpConfig {
             checkpoint: CheckpointPolicy::parse(
                 &t.str_or(&key("checkpoint"), d.checkpoint.name()),
             )?,
+            pipeline_chunks: t.usize_or(&key("pipeline_chunks"), d.pipeline_chunks),
+            link_gbps: t.f64_or(&key("link_gbps"), d.link_gbps),
+            compute_gflops: t.f64_or(&key("compute_gflops"), d.compute_gflops),
+            lr_schedule: t.str_or(&key("lr_schedule"), &d.lr_schedule),
+            clip_norm: t.f64_or(&key("clip_norm"), d.clip_norm),
             metrics_path: t.str_or(&key("metrics_path"), &d.metrics_path),
         };
         cfg.validate()?;
@@ -181,7 +228,42 @@ mod tests {
     fn placement_parse() {
         assert_eq!(Placement::parse("Contiguous").unwrap(), Placement::Contiguous);
         assert_eq!(Placement::parse("round-robin").unwrap(), Placement::Strided);
+        assert_eq!(Placement::parse("Load-Aware").unwrap(), Placement::LoadAware);
+        assert_eq!(Placement::parse("load_aware").unwrap(), Placement::LoadAware);
+        assert_eq!(Placement::LoadAware.name(), "load-aware");
         assert!(Placement::parse("diagonal").is_err());
+    }
+
+    #[test]
+    fn pipeline_and_schedule_keys() {
+        let t = Toml::parse(
+            "[ep]\npipeline_chunks = 4\nlink_gbps = 25.0\ncompute_gflops = 80.0\n\
+             lr_schedule = \"cosine\"\nclip_norm = 1.5",
+        )
+        .unwrap();
+        let c = EpConfig::from_toml(&t, "ep").unwrap();
+        assert_eq!(c.pipeline_chunks, 4);
+        assert_eq!(c.link_gbps, 25.0);
+        assert_eq!(c.compute_gflops, 80.0);
+        assert_eq!(c.lr_schedule, "cosine");
+        assert_eq!(c.clip_norm, 1.5);
+        // defaults: barrier engines, constant LR, clipping off
+        let d = EpConfig::default();
+        assert_eq!(d.pipeline_chunks, 0);
+        assert_eq!(d.lr_schedule, "constant");
+        assert_eq!(d.clip_norm, 0.0);
+        d.validate().unwrap();
+        // invalid values rejected
+        assert!(EpConfig { link_gbps: 0.0, ..Default::default() }.validate().is_err());
+        assert!(EpConfig { compute_gflops: -1.0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(EpConfig { clip_norm: f64::NAN, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(EpConfig { lr_schedule: "sawtooth".into(), ..Default::default() }
+            .validate()
+            .is_err());
     }
 
     #[test]

@@ -64,7 +64,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::config::ep::EpConfig;
+use crate::config::ep::{EpConfig, Placement};
 use crate::dispatch::gating::synthetic_gating;
 use crate::dispatch::parallel_build::parallel_build;
 use crate::dispatch::shard::{shard, RankShard};
@@ -75,9 +75,22 @@ use crate::util::threadpool::{par_map, scope_chunks};
 
 use super::expert_parallel::EpTopology;
 use super::params::{ExpertGrads, ExpertParams, ExpertStore, RankExperts};
+use super::pipeline::timeline::{CostModel, OverlapReport};
+use super::pipeline::{combine_chunk, compute_chunk, pack_sends, PipelinedEngine};
 
 static NEXT_BATCH_ID: AtomicU64 = AtomicU64::new(1);
 static NEXT_ENGINE_TAG: AtomicU64 = AtomicU64::new(1);
+
+/// Default per-engine routing-plan cache bound: plans for at most this
+/// many distinct batch ids are retained (LRU eviction beyond it), so a
+/// caller streaming many one-shot batches no longer grows memory without
+/// bound. Re-admission is transparent — an evicted batch is simply
+/// re-planned on its next forward (or backward, which re-resolves by
+/// batch id). Callers with a known working set above this (e.g. a
+/// trainer cycling `grad_accum` microbatches — LRU's worst case) should
+/// raise the bound via `set_plan_cache_cap`; `engine_from_config` does
+/// so automatically.
+pub const PLAN_CACHE_CAP: usize = 8;
 
 // -- step batch -------------------------------------------------------------
 
@@ -190,6 +203,33 @@ impl StepBatch {
         self.inner.deep_copies.load(Ordering::Relaxed)
     }
 
+    /// The routing half of [`split`](StepBatch::split): contiguous
+    /// token-range chunk offsets with their chunk-local dispatch
+    /// structures, and **no** activation/gate copies — the form the
+    /// chunk-pipelined engine caches, reading payloads from this batch
+    /// with token offsets instead. One part returns a clone of the
+    /// batch's own structures.
+    pub fn split_routing(
+        &self, parts: usize,
+    ) -> Result<Vec<(usize, DispatchStructures)>, String> {
+        let l = self.num_tokens();
+        if parts == 0 || parts > l {
+            return Err(format!("cannot split {l} tokens into {parts} microbatches"));
+        }
+        if parts == 1 {
+            return Ok(vec![(0, self.inner.disp.clone())]);
+        }
+        let (k, e) = (self.inner.disp.top_k, self.inner.disp.num_experts);
+        let mut out = Vec::with_capacity(parts);
+        for m in 0..parts {
+            let t0 = l * m / parts;
+            let t1 = l * (m + 1) / parts;
+            let ids = &self.inner.disp.token_expert_indices[t0 * k..t1 * k];
+            out.push((t0, parallel_build(ids, t1 - t0, e, k)));
+        }
+        Ok(out)
+    }
+
     /// Split into `parts` contiguous token-range microbatches, returned
     /// as `(token_offset, micro_batch)` in token order. Each microbatch
     /// is a fresh `StepBatch` built once (construction, not a per-step
@@ -197,26 +237,19 @@ impl StepBatch {
     /// same relative order as the full batch, which is what makes
     /// grad-accum bit-identical to the unsplit step.
     pub fn split(&self, parts: usize) -> Result<Vec<(usize, StepBatch)>, String> {
-        let l = self.num_tokens();
-        if parts == 0 || parts > l {
-            return Err(format!("cannot split {l} tokens into {parts} microbatches"));
-        }
-        let (d, k, e) = (self.d_model(), self.inner.disp.top_k, self.inner.disp.num_experts);
-        let mut out = Vec::with_capacity(parts);
-        for m in 0..parts {
-            let t0 = l * m / parts;
-            let t1 = l * (m + 1) / parts;
-            let lm = t1 - t0;
-            let ids = &self.inner.disp.token_expert_indices[t0 * k..t1 * k];
-            let disp = parallel_build(ids, lm, e, k);
-            let batch = StepBatch::new(
-                disp,
-                self.inner.x[t0 * d..t1 * d].to_vec(),
-                self.inner.gates[t0 * k..t1 * k].to_vec(),
-            )?;
-            out.push((t0, batch));
-        }
-        Ok(out)
+        let (d, k) = (self.d_model(), self.inner.disp.top_k);
+        self.split_routing(parts)?
+            .into_iter()
+            .map(|(t0, disp)| {
+                let lm = disp.num_tokens;
+                let batch = StepBatch::new(
+                    disp,
+                    self.inner.x[t0 * d..(t0 + lm) * d].to_vec(),
+                    self.inner.gates[t0 * k..(t0 + lm) * k].to_vec(),
+                )?;
+                Ok((t0, batch))
+            })
+            .collect()
     }
 }
 
@@ -255,9 +288,37 @@ pub struct Traffic {
 /// session (inference-style forward).
 #[derive(Debug)]
 pub struct StepHandle {
-    engine_tag: u64,
-    session: u64,
-    out: Vec<f32>,
+    pub(crate) engine_tag: u64,
+    pub(crate) session: u64,
+    pub(crate) out: Vec<f32>,
+}
+
+/// Fresh engine identity for handle binding (shared by every
+/// [`ExecutionEngine`] implementation in this crate).
+pub(crate) fn next_engine_tag() -> u64 {
+    NEXT_ENGINE_TAG.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The one linear-scan LRU all three engines' per-batch caches share:
+/// a hit refreshes recency (moves to the back) and returns its index; a
+/// miss runs `build`, evicts from the front down to `cap - 1` entries,
+/// and appends. Evicting in a loop (not once) means a lowered cap takes
+/// effect on the next miss rather than pinning the high-water mark.
+pub(crate) fn lru_get_or_insert<T>(
+    cache: &mut Vec<(u64, T)>, cap: usize, id: u64,
+    build: impl FnOnce() -> Result<T, String>,
+) -> Result<usize, String> {
+    if let Some(i) = cache.iter().position(|(key, _)| *key == id) {
+        let hit = cache.remove(i);
+        cache.push(hit);
+        return Ok(cache.len() - 1);
+    }
+    let value = build()?;
+    while cache.len() >= cap.max(1) {
+        cache.remove(0);
+    }
+    cache.push((id, value));
+    Ok(cache.len() - 1)
 }
 
 impl StepHandle {
@@ -332,6 +393,15 @@ pub trait ExecutionEngine {
     /// Reassembled global expert parameters (for equivalence checks and
     /// checkpointing).
     fn gather_params(&self) -> Result<ExpertStore, String>;
+
+    /// Phase timeline of the last step session under the simulated
+    /// link-bandwidth/compute-rate cost model, when this engine overlaps
+    /// communication with compute
+    /// ([`PipelinedEngine`](super::pipeline::PipelinedEngine)). Barrier
+    /// engines return `None`.
+    fn overlap_report(&self) -> Option<OverlapReport> {
+        None
+    }
 }
 
 // -- shared per-row expert math ---------------------------------------------
@@ -343,8 +413,8 @@ fn silu(x: f32) -> f32 {
 
 /// y = W2·silu(W1·x + b1) + b2. Pure function of one row — bit-identical
 /// wherever (and on whatever thread) it runs.
-fn expert_forward(p: &ExpertParams, d: usize, h: usize, x: &[f32], y: &mut [f32],
-                  hidden: &mut [f32]) {
+pub(crate) fn expert_forward(p: &ExpertParams, d: usize, h: usize, x: &[f32], y: &mut [f32],
+                             hidden: &mut [f32]) {
     for i in 0..h {
         let row = &p.w1[i * d..(i + 1) * d];
         let mut acc = p.b1[i];
@@ -367,8 +437,8 @@ fn expert_forward(p: &ExpertParams, d: usize, h: usize, x: &[f32], y: &mut [f32]
 /// rows (the `SaveAll` policy): the same hidden loop as
 /// [`recompute_hidden`] followed by the output projection — identical
 /// op sequence, so outputs are bit-identical to the non-saving path.
-fn expert_forward_saving(p: &ExpertParams, d: usize, h: usize, x: &[f32],
-                         y: &mut [f32], pre: &mut [f32], act: &mut [f32]) {
+pub(crate) fn expert_forward_saving(p: &ExpertParams, d: usize, h: usize, x: &[f32],
+                                    y: &mut [f32], pre: &mut [f32], act: &mut [f32]) {
     recompute_hidden(p, d, h, x, pre, act);
     for i in 0..d {
         let row = &p.w2[i * h..(i + 1) * h];
@@ -384,8 +454,8 @@ fn expert_forward_saving(p: &ExpertParams, d: usize, h: usize, x: &[f32],
 /// routed input (the recompute half of `SaveInputs`/`RecomputeAll`).
 /// Same op sequence as the forward, so the values are bit-identical to
 /// what `SaveAll` saved.
-fn recompute_hidden(p: &ExpertParams, d: usize, h: usize, x: &[f32],
-                    pre: &mut [f32], act: &mut [f32]) {
+pub(crate) fn recompute_hidden(p: &ExpertParams, d: usize, h: usize, x: &[f32],
+                               pre: &mut [f32], act: &mut [f32]) {
     for i in 0..h {
         let row = &p.w1[i * d..(i + 1) * d];
         let mut acc = p.b1[i];
@@ -399,9 +469,9 @@ fn recompute_hidden(p: &ExpertParams, d: usize, h: usize, x: &[f32],
 
 /// Accumulate one row's parameter gradients into `g`, given the hidden
 /// pre-activation/activation rows (saved or just recomputed).
-fn expert_backward_row(p: &ExpertParams, g: &mut ExpertParams, d: usize,
-                       h: usize, x: &[f32], dy: &[f32], pre: &[f32],
-                       act: &[f32], dz: &mut [f32]) {
+pub(crate) fn expert_backward_row(p: &ExpertParams, g: &mut ExpertParams, d: usize,
+                                  h: usize, x: &[f32], dy: &[f32], pre: &[f32],
+                                  act: &[f32], dz: &mut [f32]) {
     // W2 / b2 grads and dz = W2ᵀ·dy
     for j in 0..h {
         dz[j] = 0.0;
@@ -427,7 +497,7 @@ fn expert_backward_row(p: &ExpertParams, g: &mut ExpertParams, d: usize,
     }
 }
 
-fn add_params(p: &mut ExpertParams, delta: &ExpertParams) {
+pub(crate) fn add_params(p: &mut ExpertParams, delta: &ExpertParams) {
     for (w, dv) in p.w1.iter_mut().zip(&delta.w1) {
         *w += dv;
     }
@@ -442,7 +512,7 @@ fn add_params(p: &mut ExpertParams, delta: &ExpertParams) {
     }
 }
 
-fn check_batch(batch: &StepBatch, d: usize, num_experts: usize) -> Result<(), String> {
+pub(crate) fn check_batch(batch: &StepBatch, d: usize, num_experts: usize) -> Result<(), String> {
     if batch.disp().num_experts != num_experts {
         return Err(format!(
             "batch routes over {} experts, engine owns {num_experts}",
@@ -459,7 +529,7 @@ fn check_batch(batch: &StepBatch, d: usize, num_experts: usize) -> Result<(), St
 }
 
 /// What one session saved on one rank (policy-dependent).
-enum SavedActs {
+pub(crate) enum SavedActs {
     /// `SaveAll`: routed inputs + hidden pre-activations + activations
     All { xs: Vec<f32>, pre: Vec<f32>, act: Vec<f32> },
     /// `SaveInputs`: routed inputs only
@@ -485,7 +555,9 @@ pub struct SingleRankEngine {
     sessions_opened: u64,
     session: Option<SingleSession>,
     /// cached `origin slot per expert-major position`, by batch id
+    /// (LRU, bounded at `cache_cap`)
     origin_cache: Vec<(u64, Vec<u32>)>,
+    cache_cap: usize,
     traffic: Traffic,
     /// last forward's accounting — persists across the session's
     /// backward, matching the sharded engine's contract
@@ -505,26 +577,34 @@ impl SingleRankEngine {
             sessions_opened: 0,
             session: None,
             origin_cache: Vec::new(),
+            cache_cap: PLAN_CACHE_CAP,
             traffic: Traffic::default(),
             mem: Vec::new(),
         }
     }
 
+    /// Raise/lower the origin-cache bound (≥ 1, trimming immediately);
+    /// see [`PLAN_CACHE_CAP`].
+    pub fn set_plan_cache_cap(&mut self, cap: usize) {
+        self.cache_cap = cap.max(1);
+        while self.origin_cache.len() > self.cache_cap {
+            self.origin_cache.remove(0);
+        }
+    }
+
+    /// LRU-bounded like the sharded engine's plan cache (default cap
+    /// [`PLAN_CACHE_CAP`]): hits refresh recency, misses beyond the cap
+    /// evict the least-recently-used entry and re-derive on re-admission.
     fn origin_of_pos(&mut self, batch: &StepBatch) -> usize {
-        if let Some(i) = self
-            .origin_cache
-            .iter()
-            .position(|(id, _)| *id == batch.id())
-        {
-            return i;
-        }
         let disp = batch.disp();
-        let mut origin = vec![0u32; disp.slots()];
-        for (slot, &pos) in disp.token_index_map.iter().enumerate() {
-            origin[pos as usize] = slot as u32;
-        }
-        self.origin_cache.push((batch.id(), origin));
-        self.origin_cache.len() - 1
+        lru_get_or_insert(&mut self.origin_cache, self.cache_cap, batch.id(), || {
+            let mut origin = vec![0u32; disp.slots()];
+            for (slot, &pos) in disp.token_index_map.iter().enumerate() {
+                origin[pos as usize] = slot as u32;
+            }
+            Ok(origin)
+        })
+        .expect("origin derivation is infallible")
     }
 }
 
@@ -716,31 +796,66 @@ impl ExecutionEngine for SingleRankEngine {
 // -- sharded engine ---------------------------------------------------------
 
 /// One routed row's path through the exchange: destination-local slot,
-/// its global token, and its token-major origin slot.
+/// its batch-local token, and its token-major origin slot.
 #[derive(Debug, Clone, Copy)]
-struct RouteHop {
-    local_slot: u32,
-    token: u32,
-    origin: u32,
+pub(crate) struct RouteHop {
+    pub(crate) local_slot: u32,
+    pub(crate) token: u32,
+    pub(crate) origin: u32,
 }
 
-/// Everything derivable from (batch, topology) alone — computed once per
-/// distinct [`StepBatch`] and reused by every later session over it.
-struct BatchPlan {
-    batch_id: u64,
-    shards: Vec<RankShard>,
+/// Everything derivable from (routing, topology) alone — computed once
+/// per distinct [`StepBatch`] (keyed by batch id in the engines' LRU
+/// caches) and reused by every later session over it.
+pub(crate) struct BatchPlan {
+    pub(crate) shards: Vec<RankShard>,
     /// routes[dst][src]: hops served by `src`, in dst-local slot order
-    routes: Vec<Vec<Vec<RouteHop>>>,
+    pub(crate) routes: Vec<Vec<Vec<RouteHop>>>,
     /// origin slot → (dst rank, index within rets[dst][home])
-    ret_lookup: Vec<(u32, u32)>,
-    /// resident tokens per home rank
-    tokens_of_rank: Vec<Vec<u32>>,
+    pub(crate) ret_lookup: Vec<(u32, u32)>,
+    /// resident tokens per home rank (batch-local token ids)
+    pub(crate) tokens_of_rank: Vec<Vec<u32>>,
+}
+
+impl BatchPlan {
+    /// Derive the routing plan of `disp` under `topo`. Token residency
+    /// is decided in *global* token coordinates: a token's home rank is
+    /// `topo.rank_of_token(token_base + t, global_tokens)`, so a chunk
+    /// of a larger batch (the pipelined engine's unit of work) keeps the
+    /// exact residency — and therefore the exact cross-rank byte count —
+    /// its tokens have in the whole batch. The barrier engine passes
+    /// `token_base = 0` and `global_tokens = disp.num_tokens`.
+    pub(crate) fn build(disp: &DispatchStructures, topo: &EpTopology, token_base: usize,
+                        global_tokens: usize) -> Result<BatchPlan, String> {
+        let (l, r) = (disp.num_tokens, topo.ranks);
+        let shards = shard(disp, &topo.assignment())?;
+        let mut routes: Vec<Vec<Vec<RouteHop>>> =
+            (0..r).map(|_| vec![Vec::new(); r]).collect();
+        let mut ret_lookup = vec![(0u32, 0u32); disp.slots()];
+        for (dst, s) in shards.iter().enumerate() {
+            for (local_slot, (&token, &origin)) in s
+                .expert_token_indices
+                .iter()
+                .zip(&s.origin_slots)
+                .enumerate()
+            {
+                let src = topo.rank_of_token(token_base + token as usize, global_tokens);
+                let hops = &mut routes[dst][src];
+                ret_lookup[origin as usize] = (dst as u32, hops.len() as u32);
+                hops.push(RouteHop { local_slot: local_slot as u32, token, origin });
+            }
+        }
+        let mut tokens_of_rank: Vec<Vec<u32>> = vec![Vec::new(); r];
+        for t in 0..l {
+            tokens_of_rank[topo.rank_of_token(token_base + t, global_tokens)].push(t as u32);
+        }
+        Ok(BatchPlan { shards, routes, ret_lookup, tokens_of_rank })
+    }
 }
 
 struct ShardedSession {
     id: u64,
     batch: StepBatch,
-    plan_idx: usize,
     /// per-rank saved state (policy-dependent)
     saved: Vec<SavedActs>,
 }
@@ -757,7 +872,9 @@ pub struct ShardedEngine {
     engine_tag: u64,
     sessions_opened: u64,
     session: Option<ShardedSession>,
-    plans: Vec<BatchPlan>,
+    /// LRU routing-plan cache by batch id, bounded at `plan_cache_cap`
+    plans: Vec<(u64, BatchPlan)>,
+    plan_cache_cap: usize,
     traffic: Traffic,
     mem: Vec<MemoryBreakdown>,
 }
@@ -791,47 +908,44 @@ impl ShardedEngine {
             sessions_opened: 0,
             session: None,
             plans: Vec::new(),
+            plan_cache_cap: PLAN_CACHE_CAP,
             traffic: Traffic::default(),
             mem: Vec::new(),
         })
     }
 
+    /// Raise/lower the routing-plan cache bound (≥ 1, trimming
+    /// immediately). A caller that cycles a known working set of batches
+    /// (grad-accum microbatching is LRU's worst case: with cap < working
+    /// set every access misses) should set this to at least that set's
+    /// size; see [`PLAN_CACHE_CAP`].
+    pub fn set_plan_cache_cap(&mut self, cap: usize) {
+        self.plan_cache_cap = cap.max(1);
+        while self.plans.len() > self.plan_cache_cap {
+            self.plans.remove(0);
+        }
+    }
+
     /// Index of the cached routing plan for `batch`, building it on
-    /// first sight of this batch id.
+    /// first sight of this batch id ([`lru_get_or_insert`] semantics: a
+    /// hit refreshes recency, a miss beyond the cap evicts the
+    /// least-recently-used plan, and an evicted batch is transparently
+    /// re-planned on re-admission).
     fn plan_index(&mut self, batch: &StepBatch) -> Result<usize, String> {
-        if let Some(i) = self
-            .plans
-            .iter()
-            .position(|p| p.batch_id == batch.id())
-        {
-            return Ok(i);
-        }
-        let disp = batch.disp();
-        let (l, r) = (disp.num_tokens, self.topo.ranks);
-        let shards = shard(disp, &self.topo.assignment())?;
-        let mut routes: Vec<Vec<Vec<RouteHop>>> =
-            (0..r).map(|_| vec![Vec::new(); r]).collect();
-        let mut ret_lookup = vec![(0u32, 0u32); disp.slots()];
-        for (dst, s) in shards.iter().enumerate() {
-            for (local_slot, (&token, &origin)) in s
-                .expert_token_indices
-                .iter()
-                .zip(&s.origin_slots)
-                .enumerate()
-            {
-                let src = self.topo.rank_of_token(token as usize, l);
-                let hops = &mut routes[dst][src];
-                ret_lookup[origin as usize] = (dst as u32, hops.len() as u32);
-                hops.push(RouteHop { local_slot: local_slot as u32, token, origin });
-            }
-        }
-        let mut tokens_of_rank: Vec<Vec<u32>> = vec![Vec::new(); r];
-        for t in 0..l {
-            tokens_of_rank[self.topo.rank_of_token(t, l)].push(t as u32);
-        }
-        self.plans.push(BatchPlan { batch_id: batch.id(), shards, routes,
-                                    ret_lookup, tokens_of_rank });
-        Ok(self.plans.len() - 1)
+        let topo = &self.topo;
+        lru_get_or_insert(&mut self.plans, self.plan_cache_cap, batch.id(), || {
+            BatchPlan::build(batch.disp(), topo, 0, batch.num_tokens())
+        })
+    }
+
+    /// Routing plans currently cached (≤ the cache bound).
+    pub fn cached_plans(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Whether `batch`'s routing plan is currently resident in the cache.
+    pub fn has_cached_plan(&self, batch: &StepBatch) -> bool {
+        self.plans.iter().any(|(id, _)| *id == batch.id())
     }
 }
 
@@ -855,28 +969,16 @@ impl ExecutionEngine for ShardedEngine {
         let workers = self.workers.min(r);
         let policy = self.policy;
         let plan_idx = self.plan_index(batch)?;
-        let plan = &self.plans[plan_idx];
+        let plan = &self.plans[plan_idx].1;
         let disp = batch.disp();
         let x = batch.x();
         let gates = batch.gates();
         let (l, k) = (disp.num_tokens, disp.top_k);
 
         // (i) dispatch all-to-all: each source rank packs one buffer per
-        // destination from its resident token rows
-        let routes_ref = &plan.routes;
-        let send: Vec<Vec<Vec<f32>>> = par_map(r, workers, |src| {
-            (0..r)
-                .map(|dst| {
-                    let hops = &routes_ref[dst][src];
-                    let mut buf = Vec::with_capacity(hops.len() * d);
-                    for hop in hops {
-                        let t = hop.token as usize;
-                        buf.extend_from_slice(&x[t * d..(t + 1) * d]);
-                    }
-                    buf
-                })
-                .collect()
-        });
+        // destination from its resident token rows (the pipeline's pack
+        // helper with the whole batch as its single chunk)
+        let send = pack_sends(plan, x, 0, d, workers);
         let mut traffic = Traffic::default();
         for src in 0..r {
             for dst in 0..r {
@@ -891,62 +993,8 @@ impl ExecutionEngine for ShardedEngine {
         }
 
         // (ii) per-rank unpack, expert compute, and combine-buffer pack
-        let send_ref = &send;
-        let shards_ref = &plan.shards;
-        let params_ref = &self.rank_params;
-        let computed: Vec<(SavedActs, Vec<Vec<f32>>)> =
-            par_map(r, workers, |dst| {
-                let s = &shards_ref[dst];
-                let n_local = s.local_slots();
-                let mut xs = vec![0.0f32; n_local * d];
-                for src in 0..r {
-                    for (i, hop) in routes_ref[dst][src].iter().enumerate() {
-                        let ls = hop.local_slot as usize;
-                        xs[ls * d..(ls + 1) * d]
-                            .copy_from_slice(&send_ref[src][dst][i * d..(i + 1) * d]);
-                    }
-                }
-                let save_hidden = policy == CheckpointPolicy::SaveAll;
-                let mut ys = vec![0.0f32; n_local * d];
-                let mut pre = vec![0.0f32; if save_hidden { n_local * h } else { 0 }];
-                let mut act = vec![0.0f32; if save_hidden { n_local * h } else { 0 }];
-                let mut hidden = vec![0.0f32; h];
-                for (i, (e, p)) in params_ref[dst].experts.iter().enumerate() {
-                    debug_assert_eq!(*e, s.experts[i]);
-                    let lo = s.expert_token_offsets[i] as usize;
-                    let hi = s.expert_token_offsets[i + 1] as usize;
-                    for ls in lo..hi {
-                        if save_hidden {
-                            expert_forward_saving(p, d, h, &xs[ls * d..(ls + 1) * d],
-                                                  &mut ys[ls * d..(ls + 1) * d],
-                                                  &mut pre[ls * h..(ls + 1) * h],
-                                                  &mut act[ls * h..(ls + 1) * h]);
-                        } else {
-                            expert_forward(p, d, h, &xs[ls * d..(ls + 1) * d],
-                                           &mut ys[ls * d..(ls + 1) * d],
-                                           &mut hidden);
-                        }
-                    }
-                }
-                // pack expert outputs back toward each home rank
-                let rets: Vec<Vec<f32>> = (0..r)
-                    .map(|src| {
-                        let hops = &routes_ref[dst][src];
-                        let mut buf = Vec::with_capacity(hops.len() * d);
-                        for hop in hops {
-                            let ls = hop.local_slot as usize;
-                            buf.extend_from_slice(&ys[ls * d..(ls + 1) * d]);
-                        }
-                        buf
-                    })
-                    .collect();
-                let saved = match policy {
-                    CheckpointPolicy::SaveAll => SavedActs::All { xs, pre, act },
-                    CheckpointPolicy::SaveInputs => SavedActs::Inputs { xs },
-                    CheckpointPolicy::RecomputeAll => SavedActs::Nothing,
-                };
-                (saved, rets)
-            });
+        // (one shared definition with the pipelined engine)
+        let computed = compute_chunk(plan, &self.rank_params, policy, d, h, workers, &send);
         let mut saved = Vec::with_capacity(r);
         let mut rets = Vec::with_capacity(r);
         for (sv, ret) in computed {
@@ -962,35 +1010,10 @@ impl ExecutionEngine for ShardedEngine {
         }
 
         // (iii) combine scatter on each token's home rank (same j order
-        // as the single-rank path — bit-identical accumulation)
-        let rets_ref = &rets;
-        let lookup_ref = &plan.ret_lookup;
-        let tokens_ref = &plan.tokens_of_rank;
-        let home_rows: Vec<Vec<f32>> = par_map(r, workers, |home| {
-            let toks = &tokens_ref[home];
-            let mut rows = vec![0.0f32; toks.len() * d];
-            for (ti, &t) in toks.iter().enumerate() {
-                let o = &mut rows[ti * d..(ti + 1) * d];
-                for j in 0..k {
-                    let slot = t as usize * k + j;
-                    let g = gates[slot];
-                    let (dst, idx) = lookup_ref[slot];
-                    let buf = &rets_ref[dst as usize][home];
-                    let row = &buf[idx as usize * d..(idx as usize + 1) * d];
-                    for c in 0..d {
-                        o[c] += g * row[c];
-                    }
-                }
-            }
-            rows
-        });
+        // as the single-rank path — bit-identical accumulation; shared
+        // with the pipelined engine, token_base = 0)
         let mut out = vec![0.0f32; l * d];
-        for (home, rows) in home_rows.iter().enumerate() {
-            for (ti, &t) in plan.tokens_of_rank[home].iter().enumerate() {
-                out[t as usize * d..(t as usize + 1) * d]
-                    .copy_from_slice(&rows[ti * d..(ti + 1) * d]);
-            }
-        }
+        combine_chunk(plan, gates, &rets, d, k, workers, 0, &mut out);
 
         // per-rank Figure-3/5 accounting from what was actually resident
         let mem: Vec<MemoryBreakdown> = (0..r)
@@ -1017,7 +1040,7 @@ impl ExecutionEngine for ShardedEngine {
         self.traffic = traffic;
         self.sessions_opened += 1;
         let session = self.sessions_opened;
-        self.session = Some(ShardedSession { id: session, batch: batch.share(), plan_idx, saved });
+        self.session = Some(ShardedSession { id: session, batch: batch.share(), saved });
         Ok(StepHandle { engine_tag: self.engine_tag, session, out })
     }
 
@@ -1051,7 +1074,11 @@ impl ExecutionEngine for ShardedEngine {
         }
         let r = self.topo.ranks;
         let workers = self.workers.min(r);
-        let plan = &self.plans[st.plan_idx];
+        // re-resolve by batch id: still cached in the common case, and
+        // transparently re-planned if many other batches evicted it
+        // between this session's forward and backward
+        let plan_idx = self.plan_index(&st.batch)?;
+        let plan = &self.plans[plan_idx].1;
         let routes_ref = &plan.routes;
         let shards_ref = &plan.shards;
         let gates = st.batch.gates();
@@ -1247,13 +1274,30 @@ impl ExecutionEngine for ShardedEngine {
 pub fn workload_from_config(
     cfg: &EpConfig,
 ) -> (DispatchStructures, Vec<f32>, Vec<f32>, Vec<f32>) {
-    let (l, e, k, d) = (cfg.tokens, cfg.num_experts, cfg.top_k, cfg.d_model);
+    let (l, d) = (cfg.tokens, cfg.d_model);
     let mut rng = Rng::new(cfg.seed ^ 0xE9E9);
-    let gating = synthetic_gating(&mut rng, l, e, k, cfg.skew);
-    let disp = parallel_build(&gating.topk_ids, l, e, k);
+    let (disp, gates) = config_gating(cfg, &mut rng);
     let x = rng.normal_vec(l * d, 1.0);
     let target = rng.normal_vec(l * d, 1.0);
-    (disp, x, gating.gates, target)
+    (disp, x, gates, target)
+}
+
+/// The routing prefix of [`workload_from_config`]: same seed, same
+/// gating draw, no activation/target tensors. For callers that only
+/// need the dispatch structure (e.g. deriving `Placement::LoadAware`
+/// loads), this skips the two `L·d` normal draws entirely.
+pub fn routing_from_config(cfg: &EpConfig) -> DispatchStructures {
+    let mut rng = Rng::new(cfg.seed ^ 0xE9E9);
+    config_gating(cfg, &mut rng).0
+}
+
+/// The shared gating draw both config entry points start from — one
+/// definition, so the routing they see can never drift apart.
+fn config_gating(cfg: &EpConfig, rng: &mut Rng) -> (DispatchStructures, Vec<f32>) {
+    let (l, e, k) = (cfg.tokens, cfg.num_experts, cfg.top_k);
+    let gating = synthetic_gating(rng, l, e, k, cfg.skew);
+    let disp = parallel_build(&gating.topk_ids, l, e, k);
+    (disp, gating.gates)
 }
 
 /// [`workload_from_config`] packaged as a shareable [`StepBatch`] plus
@@ -1263,19 +1307,55 @@ pub fn step_batch_from_config(cfg: &EpConfig) -> Result<(StepBatch, Vec<f32>), S
     Ok((StepBatch::new(disp, x, gates)?, target))
 }
 
-/// Build the engine an `[ep]` config describes: R = 1 gives the
-/// single-rank path, R > 1 the sharded one (one worker per rank), both
-/// under the config's checkpoint policy. The expert parameters are
-/// initialized from `cfg.seed`, so any two engines built from the same
-/// config hold bit-identical weights.
+/// Build the topology an `[ep]` config describes for `ranks` ranks.
+/// `Placement::LoadAware` derives per-expert routed-row loads from the
+/// config's own synthetic workload — on the fixed workload the trainer
+/// and benches run, that *is* "the previous step's routing" — and
+/// greedily rebalances the expert→rank assignment from them.
+pub fn topology_from_config(cfg: &EpConfig, ranks: usize) -> Result<EpTopology, String> {
+    if cfg.placement == Placement::LoadAware {
+        let disp = routing_from_config(cfg);
+        let loads: Vec<u64> = (0..cfg.num_experts)
+            .map(|e| disp.expert_tokens(e).len() as u64)
+            .collect();
+        EpTopology::load_aware(ranks, &loads)
+    } else {
+        EpTopology::with_placement(ranks, cfg.num_experts, cfg.placement)
+    }
+}
+
+/// Build the engine an `[ep]` config describes. With
+/// `pipeline_chunks = 0` (the default): R = 1 gives the single-rank
+/// path, R > 1 the barrier-phased sharded one (one worker per rank).
+/// With `pipeline_chunks > 0` the chunk-pipelined engine is built for
+/// any R, overlapping each chunk's dispatch exchange with the previous
+/// chunk's expert compute under the config's link/compute cost model.
+/// All paths run the config's checkpoint policy, and the expert
+/// parameters are initialized from `cfg.seed`, so any two engines built
+/// from the same config hold bit-identical weights.
 pub fn engine_from_config(cfg: &EpConfig) -> Result<Box<dyn ExecutionEngine>, String> {
     cfg.validate()?;
     let store = ExpertStore::init(cfg.num_experts, cfg.d_model, cfg.d_hidden, cfg.seed);
+    // the trainer cycles grad_accum microbatches every step — LRU's
+    // worst-case access pattern — so the plan cache must hold them all
+    let cache_cap = PLAN_CACHE_CAP.max(cfg.grad_accum);
+    if cfg.pipeline_chunks > 0 {
+        let topo = topology_from_config(cfg, cfg.ranks)?;
+        let cost = CostModel::new(cfg.link_gbps, cfg.compute_gflops)?;
+        let mut engine = PipelinedEngine::with_policy(
+            topo, &store, cfg.ranks, cfg.checkpoint, cfg.pipeline_chunks, cost)?;
+        engine.set_plan_cache_cap(cache_cap);
+        return Ok(Box::new(engine));
+    }
     if cfg.ranks == 1 {
-        Ok(Box::new(SingleRankEngine::with_policy(store, cfg.checkpoint)))
+        let mut engine = SingleRankEngine::with_policy(store, cfg.checkpoint);
+        engine.set_plan_cache_cap(cache_cap);
+        Ok(Box::new(engine))
     } else {
-        let topo = EpTopology::with_placement(cfg.ranks, cfg.num_experts, cfg.placement)?;
-        Ok(Box::new(ShardedEngine::with_policy(topo, &store, cfg.ranks, cfg.checkpoint)?))
+        let topo = topology_from_config(cfg, cfg.ranks)?;
+        let mut engine = ShardedEngine::with_policy(topo, &store, cfg.ranks, cfg.checkpoint)?;
+        engine.set_plan_cache_cap(cache_cap);
+        Ok(Box::new(engine))
     }
 }
 
@@ -1602,6 +1682,94 @@ mod tests {
             .is_err());
         assert!(StepBatch::new(batch.disp().clone(), batch.x().to_vec(), vec![0.0; 5])
             .is_err());
+    }
+
+    #[test]
+    fn routing_plan_cache_is_lru_bounded_with_readmission() {
+        let store = ExpertStore::init(4, 6, 8, 21);
+        let topo = EpTopology::new(2, 4).unwrap();
+        let mut eng = ShardedEngine::new(topo, &store, 2).unwrap();
+        let mut single = SingleRankEngine::new(store.clone());
+        let batches: Vec<StepBatch> = (0..PLAN_CACHE_CAP + 4)
+            .map(|i| workload(20, 4, 2, 6, 0.5, 100 + i as u64))
+            .collect();
+        let mut outs = Vec::new();
+        for b in &batches {
+            outs.push(eng.forward(b).unwrap().into_output());
+            assert!(eng.cached_plans() <= PLAN_CACHE_CAP,
+                    "cache grew past the cap: {}", eng.cached_plans());
+        }
+        assert_eq!(eng.cached_plans(), PLAN_CACHE_CAP);
+        assert!(!eng.has_cached_plan(&batches[0]), "oldest plan not evicted");
+        assert!(eng.has_cached_plan(batches.last().unwrap()));
+
+        // re-admission: the evicted batch re-plans bit-identically, fwd + bwd
+        let again = eng.forward(&batches[0]).unwrap().into_output();
+        assert_eq!(again, outs[0], "re-admitted batch diverged from itself");
+        let reference = single.forward(&batches[0]).unwrap().into_output();
+        assert_eq!(again, reference, "re-admitted batch diverged from R=1");
+        let d_out = vec![0.1f32; batches[0].num_tokens() * 6];
+        let g_sharded = eng
+            .forward(&batches[0])
+            .unwrap()
+            .backward(&mut eng, &d_out)
+            .unwrap();
+        let g_single = single
+            .forward(&batches[0])
+            .unwrap()
+            .backward(&mut single, &d_out)
+            .unwrap();
+        assert_eq!(g_sharded, g_single, "grads diverged after cache churn");
+    }
+
+    #[test]
+    fn plan_cache_cap_is_adjustable_and_config_covers_grad_accum() {
+        let store = ExpertStore::init(4, 6, 8, 23);
+        let topo = EpTopology::new(2, 4).unwrap();
+        let mut eng = ShardedEngine::new(topo, &store, 2).unwrap();
+        eng.set_plan_cache_cap(2);
+        for i in 0..4u64 {
+            let b = workload(12, 4, 2, 6, 0.3, 800 + i);
+            let _ = eng.forward(&b).unwrap();
+            assert!(eng.cached_plans() <= 2);
+        }
+        // engine_from_config must size the cache to the microbatch
+        // working set so cyclic grad-accum access never thrashes:
+        // routing stays derivable (routing_from_config == the workload's)
+        let cfg = EpConfig {
+            grad_accum: PLAN_CACHE_CAP + 4,
+            tokens: 64,
+            num_experts: 4,
+            ranks: 2,
+            top_k: 2,
+            d_model: 8,
+            d_hidden: 8,
+            ..EpConfig::default()
+        };
+        let (disp, _, _, _) = workload_from_config(&cfg);
+        assert_eq!(routing_from_config(&cfg), disp,
+                   "routing prefix drifted from the full workload");
+        engine_from_config(&cfg).unwrap();
+    }
+
+    #[test]
+    fn routing_plan_cache_refreshes_recency_on_hit() {
+        let store = ExpertStore::init(4, 6, 8, 22);
+        let topo = EpTopology::new(2, 4).unwrap();
+        let mut eng = ShardedEngine::new(topo, &store, 2).unwrap();
+        let hot = workload(20, 4, 2, 6, 0.5, 500);
+        let _ = eng.forward(&hot).unwrap();
+        // fill the cache so `hot` is the LRU candidate, then touch it
+        for i in 0..PLAN_CACHE_CAP - 1 {
+            let b = workload(20, 4, 2, 6, 0.5, 600 + i as u64);
+            let _ = eng.forward(&b).unwrap();
+        }
+        let _ = eng.forward(&hot).unwrap();
+        // one more distinct batch evicts the now-oldest cold plan, not `hot`
+        let b = workload(20, 4, 2, 6, 0.5, 700);
+        let _ = eng.forward(&b).unwrap();
+        assert!(eng.has_cached_plan(&hot),
+                "recently-touched plan was evicted");
     }
 
     #[test]

@@ -23,6 +23,9 @@ pub struct EpTopology {
     pub ranks: usize,
     pub num_experts: usize,
     pub placement: Placement,
+    /// explicit expert→rank map for data-dependent placements
+    /// (`Placement::LoadAware`); `None` for the formulaic ones
+    custom: Option<Vec<u32>>,
 }
 
 impl EpTopology {
@@ -41,17 +44,75 @@ impl EpTopology {
                 "experts {num_experts} not divisible by ranks {ranks}"
             ));
         }
-        Ok(EpTopology { ranks, num_experts, placement })
+        if placement == Placement::LoadAware {
+            return Err("load-aware placement needs per-expert loads — \
+                        use EpTopology::load_aware"
+                .into());
+        }
+        Ok(EpTopology { ranks, num_experts, placement, custom: None })
+    }
+
+    /// Load-aware placement: greedily rebalance the expert→rank map from
+    /// the previous step's per-expert routed-row loads (the per-expert
+    /// refinement of `AllToAllPlan::per_rank_tokens`). Heaviest expert
+    /// first onto the least-loaded rank that still has capacity (every
+    /// rank keeps exactly E/R experts, so parameter memory stays
+    /// balanced); if the greedy pass somehow loses to the contiguous
+    /// blocks it falls back to them — the rebalancer is never worse than
+    /// the default, which the property suite pins on skewed gatings.
+    pub fn load_aware(ranks: usize,
+                      per_expert_tokens: &[u64]) -> Result<EpTopology, String> {
+        let num_experts = per_expert_tokens.len();
+        let base = EpTopology::with_placement(ranks, num_experts, Placement::Contiguous)?;
+        let cap = num_experts / ranks;
+        let mut order: Vec<usize> = (0..num_experts).collect();
+        order.sort_by_key(|&e| (std::cmp::Reverse(per_expert_tokens[e]), e));
+        let mut rank_of = vec![0u32; num_experts];
+        let mut load = vec![0u64; ranks];
+        let mut count = vec![0usize; ranks];
+        for &e in &order {
+            let r = (0..ranks)
+                .filter(|&r| count[r] < cap)
+                .min_by_key(|&r| (load[r], r))
+                .expect("capacity always leaves an open rank");
+            rank_of[e] = r as u32;
+            load[r] += per_expert_tokens[e];
+            count[r] += 1;
+        }
+        let greedy_max = load.iter().max().copied().unwrap_or(0);
+        let mut cont_load = vec![0u64; ranks];
+        for (e, &t) in per_expert_tokens.iter().enumerate() {
+            cont_load[base.rank_of_expert(e)] += t;
+        }
+        let cont_max = cont_load.iter().max().copied().unwrap_or(0);
+        let custom = if greedy_max <= cont_max {
+            rank_of
+        } else {
+            base.assignment().rank_of
+        };
+        Ok(EpTopology {
+            ranks,
+            num_experts,
+            placement: Placement::LoadAware,
+            custom: Some(custom),
+        })
     }
 
     /// Owning rank of an expert under the placement policy: contiguous
     /// gives rank r the block [r·E/R, (r+1)·E/R); strided deals experts
     /// round-robin (e mod R) — the layout that spreads "hot" low-id
-    /// experts of a skewed router across ranks.
+    /// experts of a skewed router across ranks; load-aware carries the
+    /// explicit map its constructor computed.
     pub fn rank_of_expert(&self, e: usize) -> usize {
+        if let Some(map) = &self.custom {
+            return map[e] as usize;
+        }
         match self.placement {
             Placement::Contiguous => e / (self.num_experts / self.ranks),
             Placement::Strided => e % self.ranks,
+            Placement::LoadAware => {
+                unreachable!("LoadAware topology always carries a custom map")
+            }
         }
     }
 
@@ -231,6 +292,47 @@ mod tests {
         let a = t.assignment();
         assert_eq!(a.ranks, 4);
         assert_eq!(a.rank_of[7], 3);
+    }
+
+    #[test]
+    fn load_aware_never_exceeds_contiguous_max_load() {
+        // property: on skewed gate distributions the greedy rebalance's
+        // most-loaded rank carries no more rows than contiguous blocks'
+        for seed in 0..40u64 {
+            let mut rng = Rng::new(seed);
+            let skew = 0.5 + (seed % 5) as f64 * 0.5;
+            let (l, e, k, ranks) = (512, 16, 2, 4);
+            let g = synthetic_gating(&mut rng, l, e, k, skew);
+            let d = parallel_build(&g.topk_ids, l, e, k);
+            let loads: Vec<u64> =
+                (0..e).map(|ex| d.expert_tokens(ex).len() as u64).collect();
+            let aware = EpTopology::load_aware(ranks, &loads).unwrap();
+            let cont = EpTopology::new(ranks, e).unwrap();
+            let aware_max = *aware.plan(&d, 64, 2).per_rank_tokens.iter().max().unwrap();
+            let cont_max = *cont.plan(&d, 64, 2).per_rank_tokens.iter().max().unwrap();
+            assert!(aware_max <= cont_max,
+                    "seed {seed} skew {skew}: load-aware max {aware_max} > \
+                     contiguous {cont_max}");
+        }
+    }
+
+    #[test]
+    fn load_aware_keeps_balanced_expert_counts() {
+        let loads = vec![100u64, 1, 1, 1, 90, 1, 1, 80];
+        let t = EpTopology::load_aware(4, &loads).unwrap();
+        assert_eq!(t.placement, Placement::LoadAware);
+        let a = t.assignment();
+        a.validate().unwrap();
+        for r in 0..4 {
+            assert_eq!(a.owned_experts(r).len(), 2, "rank {r} capacity violated");
+        }
+        // the three hot experts land on three different ranks
+        let hot: Vec<usize> =
+            [0, 4, 7].iter().map(|&e| t.rank_of_expert(e)).collect();
+        assert_eq!(hot.iter().collect::<std::collections::BTreeSet<_>>().len(), 3);
+        // constructor validation mirrors with_placement
+        assert!(EpTopology::load_aware(4, &[1, 2, 3]).is_err());
+        assert!(EpTopology::with_placement(4, 16, Placement::LoadAware).is_err());
     }
 
     #[test]

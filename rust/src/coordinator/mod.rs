@@ -11,7 +11,10 @@
 //! [`ExpertGrads`]), and a pluggable `optim::Optimizer` turns
 //! accumulated gradients into the update. `engine::SingleRankEngine` is
 //! the classic one-rank path, `engine::ShardedEngine` executes the
-//! all-to-all plan across simulated ranks with measured communication.
+//! all-to-all plan across simulated ranks with measured communication,
+//! and `pipeline::PipelinedEngine` streams K token-contiguous chunks
+//! through the same exchange with the dispatch overlap running off the
+//! critical path (plus a simulated phase-timeline `OverlapReport`).
 //!
 //! [`ExecutionEngine`]: engine::ExecutionEngine
 //! [`StepBatch`]: engine::StepBatch
@@ -22,12 +25,16 @@ pub mod engine;
 pub mod expert_parallel;
 pub mod optim;
 pub mod params;
+pub mod pipeline;
 pub mod trainer;
 
 pub use engine::{check_equivalence, engine_from_config, step_batch_from_config,
-                 workload_from_config, ExecutionEngine, ShardedEngine,
-                 SingleRankEngine, StepBatch, StepHandle, Traffic};
+                 topology_from_config, workload_from_config, ExecutionEngine,
+                 ShardedEngine, SingleRankEngine, StepBatch, StepHandle, Traffic};
 pub use expert_parallel::{AllToAllPlan, EpTopology};
-pub use optim::{optimizer_from_name, Adam, Optimizer, Sgd};
+pub use optim::{clip_global_norm, optimizer_from_name, Adam, LrSchedule,
+                Optimizer, Sgd};
 pub use params::{ExpertGrads, ExpertStore, ParamStore, RankExperts};
+pub use pipeline::timeline::{CostModel, OverlapReport, Phase, PhaseSpan};
+pub use pipeline::PipelinedEngine;
 pub use trainer::{EpTrainReport, EpTrainer, TrainReport, Trainer};

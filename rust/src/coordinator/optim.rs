@@ -141,6 +141,84 @@ impl Optimizer for Adam {
     }
 }
 
+// -- LR schedules + gradient clipping ---------------------------------------
+
+/// Per-step learning-rate schedule for `EpTrainer`, mirroring the LM
+/// loop's shape (`TrainConfig::lr_at`: linear warmup, cosine decay
+/// toward a tenth of the base rate). The warmup span is fixed at 10% of
+/// the run (at least one step) for the schedules that have one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LrSchedule {
+    /// The base LR at every step (the pre-schedule behavior).
+    #[default]
+    Constant,
+    /// Linear warmup over the first 10% of steps, then cosine decay
+    /// from the base LR *toward* `0.1 × base` — like the LM loop's
+    /// `lr_at`, the floor is approached but not hit (the final step
+    /// sits one cosine increment above it).
+    Cosine,
+    /// Linear warmup over the first 10% of steps, then the base LR.
+    LinearWarmup,
+}
+
+impl LrSchedule {
+    pub fn parse(s: &str) -> Result<LrSchedule, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "constant" | "none" => Ok(LrSchedule::Constant),
+            "cosine" => Ok(LrSchedule::Cosine),
+            "linear-warmup" | "linear_warmup" | "warmup" => Ok(LrSchedule::LinearWarmup),
+            _ => Err(format!(
+                "unknown lr schedule `{s}` (constant|cosine|linear-warmup)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LrSchedule::Constant => "constant",
+            LrSchedule::Cosine => "cosine",
+            LrSchedule::LinearWarmup => "linear-warmup",
+        }
+    }
+
+    /// Learning rate at `step` (0-based) of a `total`-step run.
+    pub fn lr_at(self, base: f64, step: usize, total: usize) -> f64 {
+        if self == LrSchedule::Constant {
+            return base;
+        }
+        let warmup = (total / 10).max(1);
+        if step < warmup {
+            return base * (step + 1) as f64 / warmup as f64;
+        }
+        match self {
+            LrSchedule::LinearWarmup => base,
+            LrSchedule::Cosine => {
+                let min = 0.1 * base;
+                let progress = (step - warmup) as f64
+                    / total.saturating_sub(warmup).max(1) as f64;
+                min + 0.5 * (base - min) * (1.0 + (std::f64::consts::PI * progress).cos())
+            }
+            LrSchedule::Constant => unreachable!(),
+        }
+    }
+}
+
+/// Global-norm gradient clipping: if ‖g‖₂ exceeds `max_norm`, scale every
+/// accumulator by `max_norm / ‖g‖₂`. Returns `(pre_clip_norm, clipped)`.
+/// The norm is the fixed-order f64 accumulation of
+/// `ExpertGrads::l2_norm`, and identical grads scale identically — so
+/// every engine invariance (rank count, placement, policy, chunk count,
+/// accumulation split) extends through clipping.
+pub fn clip_global_norm(grads: &mut ExpertGrads, max_norm: f64) -> (f64, bool) {
+    let norm = grads.l2_norm();
+    if max_norm > 0.0 && norm > max_norm {
+        grads.scale((max_norm / norm) as f32);
+        (norm, true)
+    } else {
+        (norm, false)
+    }
+}
+
 /// Build the optimizer an `[ep]` config names.
 pub fn optimizer_from_name(name: &str) -> Result<Box<dyn Optimizer>, String> {
     match name.to_ascii_lowercase().as_str() {
@@ -204,6 +282,57 @@ mod tests {
         let mut opt = Adam::default();
         opt.step(&ExpertGrads::zeros(2, 2, 2), 0.1).unwrap();
         assert!(opt.step(&ExpertGrads::zeros(4, 2, 2), 0.1).is_err());
+    }
+
+    #[test]
+    fn lr_schedule_shapes() {
+        assert_eq!(LrSchedule::parse("Constant").unwrap(), LrSchedule::Constant);
+        assert_eq!(LrSchedule::parse("cosine").unwrap(), LrSchedule::Cosine);
+        assert_eq!(LrSchedule::parse("linear_warmup").unwrap(),
+                   LrSchedule::LinearWarmup);
+        assert!(LrSchedule::parse("sawtooth").is_err());
+        assert_eq!(LrSchedule::default(), LrSchedule::Constant);
+
+        let base = 1.0;
+        let total = 100;
+        for s in [0, 10, 50, 99] {
+            assert_eq!(LrSchedule::Constant.lr_at(base, s, total), base);
+        }
+        // warmup ramps to the base by step 9 (10% of 100), then holds
+        let lw = LrSchedule::LinearWarmup;
+        assert!(lw.lr_at(base, 0, total) < lw.lr_at(base, 5, total));
+        assert!((lw.lr_at(base, 9, total) - base).abs() < 1e-12);
+        assert_eq!(lw.lr_at(base, 50, total), base);
+        // cosine: same warmup, then monotone decay toward base/10
+        let cos = LrSchedule::Cosine;
+        assert!((cos.lr_at(base, 9, total) - base).abs() < 1e-12);
+        assert!(cos.lr_at(base, 50, total) < base);
+        assert!(cos.lr_at(base, 99, total) < cos.lr_at(base, 50, total));
+        assert!(cos.lr_at(base, 99, total) >= 0.1 * base - 1e-9);
+        // degenerate short runs never divide by zero
+        assert!(cos.lr_at(base, 0, 1).is_finite());
+        assert!(lw.lr_at(base, 0, 1).is_finite());
+    }
+
+    #[test]
+    fn clip_global_norm_scales_only_above_threshold() {
+        let mut g = grads_of(&[3.0, 4.0]); // ‖g‖ = 5
+        let (norm, clipped) = clip_global_norm(&mut g, 10.0);
+        assert!((norm - 5.0).abs() < 1e-12);
+        assert!(!clipped);
+        assert_eq!(g.experts[0].w1, vec![3.0, 4.0]);
+
+        let (norm, clipped) = clip_global_norm(&mut g, 2.5);
+        assert!((norm - 5.0).abs() < 1e-12);
+        assert!(clipped);
+        // direction preserved, norm halved
+        assert_eq!(g.experts[0].w1, vec![1.5, 2.0]);
+        assert!((g.l2_norm() - 2.5).abs() < 1e-6);
+
+        // 0 disables clipping
+        let mut g = grads_of(&[30.0, 40.0]);
+        let (_, clipped) = clip_global_norm(&mut g, 0.0);
+        assert!(!clipped);
     }
 
     #[test]

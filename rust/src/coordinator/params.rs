@@ -339,6 +339,18 @@ impl ExpertGrads {
         }
     }
 
+    /// Multiply every accumulator element by `s` in place (global-norm
+    /// gradient clipping).
+    pub fn scale(&mut self, s: f32) {
+        for g in &mut self.experts {
+            for buf in [&mut g.w1, &mut g.b1, &mut g.w2, &mut g.b2] {
+                for v in buf.iter_mut() {
+                    *v *= s;
+                }
+            }
+        }
+    }
+
     /// Global L2 norm over every accumulator (metrics/diagnostics).
     pub fn l2_norm(&self) -> f64 {
         let mut acc = 0.0f64;

@@ -1,0 +1,877 @@
+//! Chunked all-to-all pipeline: dispatch exchange overlapped with expert
+//! compute, with a deterministic phase-timeline cost model.
+//!
+//! The barrier engines run dispatch → expert compute → combine as three
+//! globally-separated phases, so cross-rank bytes serialize with FLOPs.
+//! [`PipelinedEngine`] breaks one step into K token-contiguous chunks
+//! (via [`StepBatch::split`]) and software-pipelines them at depth 2:
+//!
+//! ```text
+//!            chunk 0         chunk 1         chunk 2
+//! comm lane  [exch 0]        [exch 1]        [exch 2]   [comb 0] ...
+//!                     \              \              \
+//! compute lane         [expert compute 0][compute 1][compute 2] ...
+//!                      ^ exch 1 packs here, on a scoped thread,
+//!                        while chunk 0's experts run on the pool
+//! ```
+//!
+//! # Chunk-pipeline lifecycle
+//!
+//! One `forward` session:
+//!
+//! 1. **Plan** (cached per batch id, LRU like the barrier engine): split
+//!    the batch into K contiguous-token chunks and derive each chunk's
+//!    routing plan. Token residency stays in *global* coordinates
+//!    (`rank_of_token(token_base + t, L)`), so the summed chunk exchange
+//!    moves exactly the whole-batch [`AllToAllPlan::cross_rank_bytes`] —
+//!    chunking changes *when* bytes move, never *how many*.
+//! 2. **Pipeline**: pack chunk 0's send buffers; then for each chunk m,
+//!    run its per-rank expert compute on the worker pool while a scoped
+//!    thread packs chunk m+1's exchange buffers, and drain chunk m's
+//!    combine scatter into the output as soon as its compute lands.
+//! 3. **Save**: each chunk's policy-dependent activations
+//!    (`CheckpointPolicy`) are retained per chunk for the backward.
+//!
+//! `backward_into` mirrors it: chunk m+1's gated gradient buffers (and,
+//! under `RecomputeAll`, its re-gathered routed inputs — measured as
+//! `Traffic::recompute_bytes`) are packed while chunk m's gradient
+//! accumulation runs. Chunks accumulate in ascending token order, which
+//! is the exact float-op sequence of the unchunked batch (the same
+//! argument that makes grad-accum bit-identical), so outputs, gradients,
+//! and loss curves are bit-identical to [`ShardedEngine`] for every
+//! checkpoint policy × rank count × K — pinned by
+//! `rust/tests/ep_pipeline.rs` and the `tools/ep_sim.py` mirror.
+//!
+//! Alongside the real (threaded) overlap, every session is priced on the
+//! [`timeline`] cost model's simulated clock, producing per-chunk
+//! [`PhaseSpan`]s and an [`OverlapReport`] (critical path, exposed
+//! communication, overlap efficiency) rendered by `ep-bench` and emitted
+//! through `MetricsSink` — see the [`timeline`] docs for the model's
+//! assumptions.
+//!
+//! Memory: only one chunk's transient buffers (routed rows, send/return
+//! buffers of the depth-2 window) are live at a time, so per-rank peak
+//! resident bytes *drop* versus the barrier engine's whole-batch buffers
+//! while the policy-saved bytes stay identical. Cached chunk plans are
+//! pure index data — activations and gates are always read from the
+//! parent `StepBatch` with token offsets, never copied per chunk — at
+//! the cost of per-chunk routing metadata (`index_bytes`) summing
+//! slightly above the whole-batch plan's.
+//!
+//! [`AllToAllPlan::cross_rank_bytes`]: super::expert_parallel::AllToAllPlan::cross_rank_bytes
+//! [`ShardedEngine`]: super::engine::ShardedEngine
+//! [`PhaseSpan`]: timeline::PhaseSpan
+//! [`OverlapReport`]: timeline::OverlapReport
+
+pub mod timeline;
+
+use std::mem;
+
+use crate::memory::model::{pipeline_window_bytes, CheckpointPolicy, MemoryBreakdown};
+use crate::util::threadpool::{par_map, scope_chunks};
+
+use self::timeline::{bwd_flops_per_row, fwd_flops_per_row, CostModel, OverlapReport,
+                     Phase, TimelineBuilder};
+use super::engine::{add_params, check_batch, expert_backward_row, expert_forward,
+                    expert_forward_saving, lru_get_or_insert, next_engine_tag,
+                    recompute_hidden, BatchPlan, ExecutionEngine, SavedActs,
+                    StepBatch, StepHandle, Traffic, PLAN_CACHE_CAP};
+use super::expert_parallel::EpTopology;
+use super::params::{ExpertGrads, ExpertParams, ExpertStore, RankExperts};
+
+/// One chunk of a batch: its token offset in the parent and the routing
+/// plan in global token coordinates. Pure index data — activations and
+/// gates are always read from the parent [`StepBatch`] with token
+/// offsets, so caching chunk plans duplicates no payload bytes (the
+/// zero-copy property the `StepBatch` design exists for).
+struct ChunkPlan {
+    token_base: usize,
+    plan: BatchPlan,
+}
+
+struct PipeSession {
+    id: u64,
+    batch: StepBatch,
+    /// saved[chunk][rank], policy-dependent
+    saved: Vec<Vec<SavedActs>>,
+    /// simulated clock continued by the backward pass
+    timeline: TimelineBuilder,
+}
+
+/// Chunk-pipelined expert-parallel engine: R simulated ranks, K-deep
+/// chunk stream, real threaded overlap of exchange packing with expert
+/// compute, measured traffic, and a simulated-cost [`OverlapReport`].
+pub struct PipelinedEngine {
+    pub topo: EpTopology,
+    pub rank_params: Vec<RankExperts>,
+    d_model: usize,
+    d_hidden: usize,
+    workers: usize,
+    policy: CheckpointPolicy,
+    /// requested chunk count (clamped to the batch's token count)
+    chunks: usize,
+    cost: CostModel,
+    engine_tag: u64,
+    sessions_opened: u64,
+    session: Option<PipeSession>,
+    /// LRU chunk-plan cache by batch id, bounded at `plan_cache_cap`
+    plans: Vec<(u64, Vec<ChunkPlan>)>,
+    plan_cache_cap: usize,
+    traffic: Traffic,
+    mem: Vec<MemoryBreakdown>,
+    report: Option<OverlapReport>,
+}
+
+impl PipelinedEngine {
+    /// Default checkpoint policy and cost model; see
+    /// [`with_policy`](PipelinedEngine::with_policy).
+    pub fn new(topo: EpTopology, store: &ExpertStore, workers: usize,
+               chunks: usize) -> Result<PipelinedEngine, String> {
+        PipelinedEngine::with_policy(topo, store, workers, CheckpointPolicy::default(),
+                                     chunks, CostModel::default())
+    }
+
+    pub fn with_policy(topo: EpTopology, store: &ExpertStore, workers: usize,
+                       policy: CheckpointPolicy, chunks: usize,
+                       cost: CostModel) -> Result<PipelinedEngine, String> {
+        if topo.num_experts != store.experts.len() {
+            return Err(format!(
+                "topology has {} experts, store has {}",
+                topo.num_experts,
+                store.experts.len()
+            ));
+        }
+        if chunks == 0 {
+            return Err("pipeline needs at least one chunk".into());
+        }
+        let rank_params = store.shard(&topo.assignment());
+        Ok(PipelinedEngine {
+            topo,
+            rank_params,
+            d_model: store.d_model,
+            d_hidden: store.d_hidden,
+            workers: workers.max(1),
+            policy,
+            chunks,
+            cost,
+            engine_tag: next_engine_tag(),
+            sessions_opened: 0,
+            session: None,
+            plans: Vec::new(),
+            plan_cache_cap: PLAN_CACHE_CAP,
+            traffic: Traffic::default(),
+            mem: Vec::new(),
+            report: None,
+        })
+    }
+
+    /// Chunk plans currently cached (≤ the cache bound, in batches).
+    pub fn cached_plans(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Raise/lower the chunk-plan cache bound (≥ 1, trimming
+    /// immediately); see [`PLAN_CACHE_CAP`] and
+    /// `ShardedEngine::set_plan_cache_cap` for why grad-accum callers
+    /// need at least their microbatch count.
+    pub fn set_plan_cache_cap(&mut self, cap: usize) {
+        self.plan_cache_cap = cap.max(1);
+        while self.plans.len() > self.plan_cache_cap {
+            self.plans.remove(0);
+        }
+    }
+
+    /// Index of the cached chunk plans for `batch`, splitting the
+    /// routing and planning each chunk on first sight
+    /// ([`lru_get_or_insert`] semantics, as the barrier engine).
+    fn plan_index(&mut self, batch: &StepBatch) -> Result<usize, String> {
+        let topo = &self.topo;
+        let l = batch.num_tokens();
+        let kc = self.chunks.min(l);
+        lru_get_or_insert(&mut self.plans, self.plan_cache_cap, batch.id(), || {
+            batch
+                .split_routing(kc)?
+                .into_iter()
+                .map(|(t0, disp)| {
+                    let plan = BatchPlan::build(&disp, topo, t0, l)?;
+                    Ok(ChunkPlan { token_base: t0, plan })
+                })
+                .collect()
+        })
+    }
+}
+
+/// Pack one chunk's dispatch buffers: `send[src][dst]` holds the routed
+/// rows src contributes to dst, in dst-local slot order. `x` is the
+/// *parent* batch's activations — chunk-local tokens are offset by
+/// `token_base`, so no chunk-payload copies ever exist. Shared with
+/// `ShardedEngine::forward` (its "chunk" is the whole batch,
+/// `token_base = 0`), so the engines can never drift apart on the
+/// packing layout.
+pub(crate) fn pack_sends(plan: &BatchPlan, x: &[f32], token_base: usize, d: usize,
+                         workers: usize) -> Vec<Vec<Vec<f32>>> {
+    let r = plan.routes.len();
+    let routes = &plan.routes;
+    par_map(r, workers, |src| {
+        (0..r)
+            .map(|dst| {
+                let hops = &routes[dst][src];
+                let mut buf = Vec::with_capacity(hops.len() * d);
+                for hop in hops {
+                    let t = token_base + hop.token as usize;
+                    buf.extend_from_slice(&x[t * d..(t + 1) * d]);
+                }
+                buf
+            })
+            .collect()
+    })
+}
+
+/// Per-outer-rank byte views of a buffer set: total resident bytes (all
+/// peers, local loopback included — the memory view) and cross-rank
+/// bytes (peers ≠ self — the traffic/timeline view).
+fn buffer_bytes(bufs: &[Vec<Vec<f32>>]) -> (Vec<u64>, Vec<u64>) {
+    let r = bufs.len();
+    let mut resident = vec![0u64; r];
+    let mut cross = vec![0u64; r];
+    for (outer, per_peer) in bufs.iter().enumerate() {
+        for (peer, buf) in per_peer.iter().enumerate() {
+            let b = (buf.len() * 4) as u64;
+            resident[outer] += b;
+            if peer != outer {
+                cross[outer] += b;
+            }
+        }
+    }
+    (resident, cross)
+}
+
+/// One chunk's per-rank expert compute: unpack routed rows, run the
+/// owned experts, and pack the return buffers toward each home rank.
+/// Shared with `ShardedEngine::forward` — one definition of the
+/// unpack/compute/save/repack sequence keeps the engines bit-identical
+/// by construction.
+pub(crate) fn compute_chunk(plan: &BatchPlan, params: &[RankExperts],
+                            policy: CheckpointPolicy, d: usize, h: usize,
+                            workers: usize,
+                            send: &[Vec<Vec<f32>>]) -> Vec<(SavedActs, Vec<Vec<f32>>)> {
+    let r = plan.routes.len();
+    let routes = &plan.routes;
+    let shards = &plan.shards;
+    par_map(r, workers, |dst| {
+        let s = &shards[dst];
+        let n_local = s.local_slots();
+        let mut xs = vec![0.0f32; n_local * d];
+        for src in 0..r {
+            for (i, hop) in routes[dst][src].iter().enumerate() {
+                let ls = hop.local_slot as usize;
+                xs[ls * d..(ls + 1) * d]
+                    .copy_from_slice(&send[src][dst][i * d..(i + 1) * d]);
+            }
+        }
+        let save_hidden = policy == CheckpointPolicy::SaveAll;
+        let mut ys = vec![0.0f32; n_local * d];
+        let mut pre = vec![0.0f32; if save_hidden { n_local * h } else { 0 }];
+        let mut act = vec![0.0f32; if save_hidden { n_local * h } else { 0 }];
+        let mut hidden = vec![0.0f32; h];
+        for (i, (e, p)) in params[dst].experts.iter().enumerate() {
+            debug_assert_eq!(*e, s.experts[i]);
+            let lo = s.expert_token_offsets[i] as usize;
+            let hi = s.expert_token_offsets[i + 1] as usize;
+            for ls in lo..hi {
+                if save_hidden {
+                    expert_forward_saving(p, d, h, &xs[ls * d..(ls + 1) * d],
+                                          &mut ys[ls * d..(ls + 1) * d],
+                                          &mut pre[ls * h..(ls + 1) * h],
+                                          &mut act[ls * h..(ls + 1) * h]);
+                } else {
+                    expert_forward(p, d, h, &xs[ls * d..(ls + 1) * d],
+                                   &mut ys[ls * d..(ls + 1) * d], &mut hidden);
+                }
+            }
+        }
+        let rets: Vec<Vec<f32>> = (0..r)
+            .map(|src| {
+                let hops = &routes[dst][src];
+                let mut buf = Vec::with_capacity(hops.len() * d);
+                for hop in hops {
+                    let ls = hop.local_slot as usize;
+                    buf.extend_from_slice(&ys[ls * d..(ls + 1) * d]);
+                }
+                buf
+            })
+            .collect();
+        let saved = match policy {
+            CheckpointPolicy::SaveAll => SavedActs::All { xs, pre, act },
+            CheckpointPolicy::SaveInputs => SavedActs::Inputs { xs },
+            CheckpointPolicy::RecomputeAll => SavedActs::Nothing,
+        };
+        (saved, rets)
+    })
+}
+
+/// Drain one chunk's combine scatter into the global output rows (fixed
+/// j-order accumulation per token). `gates` is the *parent* batch's
+/// gate vector — chunk-local slots are offset through `token_base`.
+/// Shared with `ShardedEngine::forward` (`token_base = 0`, the chunk is
+/// the whole batch).
+pub(crate) fn combine_chunk(plan: &BatchPlan, gates: &[f32], rets: &[Vec<Vec<f32>>],
+                            d: usize, k: usize, workers: usize, token_base: usize,
+                            out: &mut [f32]) {
+    let r = plan.routes.len();
+    let lookup = &plan.ret_lookup;
+    let tokens = &plan.tokens_of_rank;
+    let home_rows: Vec<Vec<f32>> = par_map(r, workers, |home| {
+        let toks = &tokens[home];
+        let mut rows = vec![0.0f32; toks.len() * d];
+        for (ti, &t) in toks.iter().enumerate() {
+            let o = &mut rows[ti * d..(ti + 1) * d];
+            for j in 0..k {
+                let slot = t as usize * k + j;
+                let g = gates[(token_base + t as usize) * k + j];
+                let (dst, idx) = lookup[slot];
+                let buf = &rets[dst as usize][home];
+                let row = &buf[idx as usize * d..(idx as usize + 1) * d];
+                for c in 0..d {
+                    o[c] += g * row[c];
+                }
+            }
+        }
+        rows
+    });
+    for (home, rows) in home_rows.iter().enumerate() {
+        for (ti, &t) in tokens[home].iter().enumerate() {
+            let gt = token_base + t as usize;
+            out[gt * d..(gt + 1) * d].copy_from_slice(&rows[ti * d..(ti + 1) * d]);
+        }
+    }
+}
+
+impl ExecutionEngine for PipelinedEngine {
+    fn name(&self) -> String {
+        format!("pipelined-r{}-k{}-{}", self.topo.ranks, self.chunks,
+                self.topo.placement)
+    }
+
+    fn ranks(&self) -> usize {
+        self.topo.ranks
+    }
+
+    fn policy(&self) -> CheckpointPolicy {
+        self.policy
+    }
+
+    fn forward(&mut self, batch: &StepBatch) -> Result<StepHandle, String> {
+        let (d, h) = (self.d_model, self.d_hidden);
+        check_batch(batch, d, self.topo.num_experts)?;
+        let r = self.topo.ranks;
+        let workers = self.workers.min(r);
+        let policy = self.policy;
+        let plan_idx = self.plan_index(batch)?;
+        let l = batch.num_tokens();
+        let k = batch.disp().top_k;
+
+        let x = batch.x();
+        let gates = batch.gates();
+        let (out, saved_all, traffic, mem, tb) = {
+            let chunks = &self.plans[plan_idx].1;
+            let params = &self.rank_params;
+            let kc = chunks.len();
+            let mut out = vec![0.0f32; l * d];
+            let mut saved_all: Vec<Vec<SavedActs>> = Vec::with_capacity(kc);
+            let mut traffic = Traffic::default();
+            let mut tb = TimelineBuilder::new(r, self.cost);
+
+            // per-rank memory accounting across the chunk stream
+            let mut peak_slots = vec![0u64; r];
+            let mut total_slots = vec![0u64; r];
+            let mut index_bytes = vec![0u64; r];
+            let mut resident = vec![0u64; r];
+            let mut send_res_per_chunk: Vec<Vec<u64>> = Vec::with_capacity(kc);
+            let mut ret_res_per_chunk: Vec<Vec<u64>> = Vec::with_capacity(kc);
+
+            let mut send_next =
+                pack_sends(&chunks[0].plan, x, chunks[0].token_base, d, workers);
+            let mut prev_compute_start = 0.0f64;
+            for m in 0..kc {
+                let cp = &chunks[m];
+                let send = mem::take(&mut send_next);
+                let (send_res, send_cross) = buffer_bytes(&send);
+                for src in 0..r {
+                    for dst in 0..r {
+                        let rows = cp.plan.routes[dst][src].len() as u64;
+                        if src == dst {
+                            traffic.local_rows += rows;
+                        } else {
+                            traffic.cross_rows += rows;
+                            traffic.dispatch_bytes += (send[src][dst].len() * 4) as u64;
+                        }
+                    }
+                }
+                // depth-2 pipeline: chunk m's exchange could begin when
+                // chunk m-1's compute began (that is when its pack ran)
+                let ready = if m == 0 { 0.0 } else { prev_compute_start };
+                let (_, exch_done) =
+                    tb.phase(m, false, Phase::Exchange, &send_cross, ready);
+
+                // the real overlap: chunk m's expert compute on the
+                // worker pool while a scoped thread packs chunk m+1
+                let (computed, packed_next) = std::thread::scope(|s| {
+                    let pack_handle = (m + 1 < kc).then(|| {
+                        let nc = &chunks[m + 1];
+                        s.spawn(move || pack_sends(&nc.plan, x, nc.token_base, d, workers))
+                    });
+                    let computed =
+                        compute_chunk(&cp.plan, params, policy, d, h, workers, &send);
+                    (computed,
+                     pack_handle.map(|hd| hd.join().expect("pack thread panicked")))
+                });
+                if let Some(p) = packed_next {
+                    send_next = p;
+                }
+                let flops: Vec<u64> = (0..r)
+                    .map(|rank| {
+                        cp.plan.shards[rank].local_slots() as u64
+                            * fwd_flops_per_row(d, h)
+                    })
+                    .collect();
+                let (comp_start, comp_done) =
+                    tb.phase(m, false, Phase::Compute, &flops, exch_done);
+                prev_compute_start = comp_start;
+
+                let mut saved = Vec::with_capacity(r);
+                let mut rets = Vec::with_capacity(r);
+                for (sv, ret) in computed {
+                    saved.push(sv);
+                    rets.push(ret);
+                }
+                let mut combine_recv = vec![0u64; r];
+                for dst in 0..r {
+                    for home in 0..r {
+                        if dst != home {
+                            let b = (rets[dst][home].len() * 4) as u64;
+                            combine_recv[home] += b;
+                            traffic.combine_bytes += b;
+                        }
+                    }
+                }
+                let _ = tb.phase(m, false, Phase::Combine, &combine_recv, comp_done);
+                combine_chunk(&cp.plan, gates, &rets, d, k, workers,
+                              cp.token_base, &mut out);
+
+                let (ret_res, _) = buffer_bytes(&rets);
+                for rank in 0..r {
+                    let nl = cp.plan.shards[rank].local_slots() as u64;
+                    peak_slots[rank] = peak_slots[rank].max(nl);
+                    total_slots[rank] += nl;
+                    index_bytes[rank] += cp.plan.shards[rank].metadata_bytes() as u64;
+                    resident[rank] += cp.plan.tokens_of_rank[rank].len() as u64;
+                }
+                send_res_per_chunk.push(send_res);
+                ret_res_per_chunk.push(ret_res);
+                saved_all.push(saved);
+            }
+
+            // per-rank accounting: policy-saved bytes cover every chunk
+            // (they live until backward); transient routed rows are only
+            // one chunk deep; comm buffers are the depth-2 window
+            let mem: Vec<MemoryBreakdown> = (0..r)
+                .map(|rank| {
+                    let send_seq: Vec<u64> =
+                        send_res_per_chunk.iter().map(|v| v[rank]).collect();
+                    let ret_seq: Vec<u64> =
+                        ret_res_per_chunk.iter().map(|v| v[rank]).collect();
+                    MemoryBreakdown {
+                        data_bytes: 4 * d as u64 * (peak_slots[rank] + 2 * resident[rank])
+                            + total_slots[rank]
+                                * policy.saved_bytes_per_slot(d as u64, h as u64, 4),
+                        index_bytes: index_bytes[rank],
+                        extra_bytes: pipeline_window_bytes(&send_seq, &ret_seq),
+                    }
+                })
+                .collect();
+            (out, saved_all, traffic, mem, tb)
+        };
+
+        self.mem = mem;
+        self.traffic = traffic;
+        self.report = Some(tb.report());
+        self.sessions_opened += 1;
+        let session = self.sessions_opened;
+        self.session = Some(PipeSession {
+            id: session,
+            batch: batch.share(),
+            saved: saved_all,
+            timeline: tb,
+        });
+        Ok(StepHandle { engine_tag: self.engine_tag, session, out })
+    }
+
+    fn backward_into(&mut self, handle: StepHandle, d_out: &[f32],
+                     grads: &mut ExpertGrads) -> Result<(), String> {
+        let (d, h) = (self.d_model, self.d_hidden);
+        if handle.engine_tag != self.engine_tag {
+            return Err("step handle belongs to a different engine".into());
+        }
+        match &self.session {
+            None => return Err("no open step session (forward not called)".into()),
+            Some(s) if s.id != handle.session => {
+                return Err(format!(
+                    "stale step handle: session {} superseded by {}",
+                    handle.session, s.id
+                ));
+            }
+            Some(_) => {}
+        }
+        grads
+            .check_like(self.topo.num_experts, d, h)
+            .map_err(|e| e.to_string())?;
+        let st = self.session.take().unwrap();
+        if d_out.len() != st.batch.num_tokens() * d {
+            return Err(format!(
+                "d_out has {} elements, expected L·d = {}",
+                d_out.len(),
+                st.batch.num_tokens() * d
+            ));
+        }
+        let r = self.topo.ranks;
+        let workers = self.workers.min(r);
+        let policy = self.policy;
+        let plan_idx = self.plan_index(&st.batch)?;
+
+        // move each expert's accumulator into its owning rank's bucket
+        // once for the whole chunk stream; chunks then extend segments in
+        // ascending token order — the unchunked float-op sequence
+        let assignment = self.topo.assignment();
+        let mut buckets: Vec<Vec<(usize, ExpertParams)>> =
+            (0..r).map(|_| Vec::new()).collect();
+        for (e, g) in grads.experts.drain(..).enumerate() {
+            buckets[assignment.rank_of[e] as usize].push((e, g));
+        }
+
+        let x = st.batch.x();
+        let gates = st.batch.gates();
+        let k_top = st.batch.disp().top_k;
+        let mut timeline = st.timeline;
+        let mut grad_bytes = 0u64;
+        let mut recompute_bytes = 0u64;
+        {
+            let chunks = &self.plans[plan_idx].1;
+            let params = &self.rank_params;
+            let kc = chunks.len();
+            let mut saved_iter = st.saved.into_iter();
+
+            // one chunk's backward inputs: gated gradient buffers per
+            // (home → dst), plus — under RecomputeAll — the re-gathered
+            // routed inputs (the backward re-run of the dispatch
+            // exchange). Gates and activations come from the parent
+            // batch, offset by the chunk's token base.
+            let pack_bwd = |m: usize| -> (Vec<Vec<Vec<f32>>>, Option<Vec<Vec<f32>>>) {
+                let cp = &chunks[m];
+                let routes = &cp.plan.routes;
+                let base = cp.token_base * d;
+                let gate_base = cp.token_base * k_top;
+                let dsend = par_map(r, workers, |home| {
+                    (0..r)
+                        .map(|dst| {
+                            let hops = &routes[dst][home];
+                            let mut buf = Vec::with_capacity(hops.len() * d);
+                            for hop in hops {
+                                let t = hop.token as usize;
+                                let g = gates[gate_base + hop.origin as usize];
+                                for c in 0..d {
+                                    buf.push(g * d_out[base + t * d + c]);
+                                }
+                            }
+                            buf
+                        })
+                        .collect()
+                });
+                let xs_re = (policy == CheckpointPolicy::RecomputeAll).then(|| {
+                    let shards = &cp.plan.shards;
+                    par_map(r, workers, |dst| {
+                        let n_local = shards[dst].local_slots();
+                        let mut xs = vec![0.0f32; n_local * d];
+                        for per_src in routes[dst].iter() {
+                            for hop in per_src {
+                                let ls = hop.local_slot as usize;
+                                let t = cp.token_base + hop.token as usize;
+                                xs[ls * d..(ls + 1) * d]
+                                    .copy_from_slice(&x[t * d..(t + 1) * d]);
+                            }
+                        }
+                        xs
+                    })
+                });
+                (dsend, xs_re)
+            };
+
+            let bwd_start = timeline.now();
+            let mut prev_acc_start = bwd_start;
+            let mut next = pack_bwd(0);
+            for m in 0..kc {
+                let cp = &chunks[m];
+                let (dsend, xs_re) = next;
+                let mut cross = vec![0u64; r];
+                for home in 0..r {
+                    for dst in 0..r {
+                        if home != dst {
+                            let b = (dsend[home][dst].len() * 4) as u64;
+                            grad_bytes += b;
+                            cross[home] += b;
+                        }
+                    }
+                }
+                if xs_re.is_some() {
+                    // the re-gather moves exactly the fwd dispatch rows again
+                    for (dst, per_src) in cp.plan.routes.iter().enumerate() {
+                        for (src, hops) in per_src.iter().enumerate() {
+                            if src != dst {
+                                let b = (hops.len() * d * 4) as u64;
+                                recompute_bytes += b;
+                                cross[src] += b;
+                            }
+                        }
+                    }
+                }
+                let ready = if m == 0 { bwd_start } else { prev_acc_start };
+                let (_, exch_done) =
+                    timeline.phase(m, true, Phase::Exchange, &cross, ready);
+
+                let saved_m = saved_iter.next().expect("chunk saved state missing");
+                let (xs_all, hidden_all): (Vec<Vec<f32>>, Vec<Option<(Vec<f32>, Vec<f32>)>>) =
+                    match xs_re {
+                        Some(xs) => (xs, (0..r).map(|_| None).collect()),
+                        None => {
+                            let mut xs_all = Vec::with_capacity(r);
+                            let mut hidden_all = Vec::with_capacity(r);
+                            for sv in saved_m {
+                                match sv {
+                                    SavedActs::All { xs, pre, act } => {
+                                        xs_all.push(xs);
+                                        hidden_all.push(Some((pre, act)));
+                                    }
+                                    SavedActs::Inputs { xs } => {
+                                        xs_all.push(xs);
+                                        hidden_all.push(None);
+                                    }
+                                    SavedActs::Nothing => unreachable!(
+                                        "saving policy stored nothing for a chunk"
+                                    ),
+                                }
+                            }
+                            (xs_all, hidden_all)
+                        }
+                    };
+
+                // accumulate chunk m per rank while a scoped thread packs
+                // chunk m+1's gradient exchange (and RecomputeAll re-gather)
+                let packed_next = std::thread::scope(|s| {
+                    let pack_handle = (m + 1 < kc).then(|| s.spawn(|| pack_bwd(m + 1)));
+                    let dsend_ref = &dsend;
+                    let xs_ref = &xs_all;
+                    let hidden_ref = &hidden_all;
+                    let routes = &cp.plan.routes;
+                    let shards = &cp.plan.shards;
+                    scope_chunks(&mut buckets, 1, workers, |dst, chunk| {
+                        let bucket = &mut chunk[0];
+                        let sh = &shards[dst];
+                        let n_local = sh.local_slots();
+                        let mut dys = vec![0.0f32; n_local * d];
+                        for (src, bufs) in dsend_ref.iter().enumerate() {
+                            for (i, hop) in routes[dst][src].iter().enumerate() {
+                                let ls = hop.local_slot as usize;
+                                dys[ls * d..(ls + 1) * d]
+                                    .copy_from_slice(&bufs[dst][i * d..(i + 1) * d]);
+                            }
+                        }
+                        let xs = &xs_ref[dst];
+                        let mut pre_row = vec![0.0f32; h];
+                        let mut act_row = vec![0.0f32; h];
+                        let mut dz = vec![0.0f32; h];
+                        for (i, (e, g)) in bucket.iter_mut().enumerate() {
+                            debug_assert_eq!(*e as u32, sh.experts[i]);
+                            let p = &params[dst].experts[i].1;
+                            let lo = sh.expert_token_offsets[i] as usize;
+                            let hi = sh.expert_token_offsets[i + 1] as usize;
+                            for ls in lo..hi {
+                                let xrow = &xs[ls * d..(ls + 1) * d];
+                                let dy = &dys[ls * d..(ls + 1) * d];
+                                let (pre, act): (&[f32], &[f32]) = match &hidden_ref[dst] {
+                                    Some((pre, act)) => (&pre[ls * h..(ls + 1) * h],
+                                                         &act[ls * h..(ls + 1) * h]),
+                                    None => {
+                                        recompute_hidden(p, d, h, xrow, &mut pre_row,
+                                                         &mut act_row);
+                                        (&pre_row[..], &act_row[..])
+                                    }
+                                };
+                                expert_backward_row(p, g, d, h, xrow, dy, pre, act,
+                                                    &mut dz);
+                            }
+                        }
+                    });
+                    pack_handle.map(|hd| hd.join().expect("bwd pack thread panicked"))
+                });
+                next = packed_next.unwrap_or_else(|| (Vec::new(), None));
+
+                let recompute = policy != CheckpointPolicy::SaveAll;
+                let flops: Vec<u64> = (0..r)
+                    .map(|rank| {
+                        cp.plan.shards[rank].local_slots() as u64
+                            * bwd_flops_per_row(d, h, recompute)
+                    })
+                    .collect();
+                let (acc_start, _) =
+                    timeline.phase(m, true, Phase::Compute, &flops, exch_done);
+                prev_acc_start = acc_start;
+            }
+        }
+
+        let mut dense: Vec<Option<ExpertParams>> =
+            (0..self.topo.num_experts).map(|_| None).collect();
+        for bucket in buckets {
+            for (e, g) in bucket {
+                dense[e] = Some(g);
+            }
+        }
+        grads.experts = dense
+            .into_iter()
+            .enumerate()
+            .map(|(e, g)| g.ok_or_else(|| format!("expert {e} grads lost")))
+            .collect::<Result<Vec<_>, String>>()?;
+        self.traffic.grad_bytes += grad_bytes;
+        self.traffic.recompute_bytes += recompute_bytes;
+        self.report = Some(timeline.report());
+        Ok(())
+    }
+
+    fn zero_grads(&self) -> ExpertGrads {
+        ExpertGrads::zeros(self.topo.num_experts, self.d_model, self.d_hidden)
+    }
+
+    fn apply_update(&mut self, delta: &ExpertGrads) -> Result<(), String> {
+        delta
+            .check_like(self.topo.num_experts, self.d_model, self.d_hidden)
+            .map_err(|e| e.to_string())?;
+        for rp in &mut self.rank_params {
+            for (e, p) in &mut rp.experts {
+                add_params(p, &delta.experts[*e as usize]);
+            }
+        }
+        Ok(())
+    }
+
+    fn traffic(&self) -> Traffic {
+        self.traffic
+    }
+
+    fn memory_per_rank(&self) -> Vec<MemoryBreakdown> {
+        if self.mem.is_empty() {
+            vec![
+                MemoryBreakdown { data_bytes: 0, index_bytes: 0, extra_bytes: 0 };
+                self.topo.ranks
+            ]
+        } else {
+            self.mem.clone()
+        }
+    }
+
+    fn gather_params(&self) -> Result<ExpertStore, String> {
+        ExpertStore::gather(&self.rank_params, self.topo.num_experts)
+    }
+
+    fn overlap_report(&self) -> Option<OverlapReport> {
+        self.report.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::ShardedEngine;
+    use crate::dispatch::gating::synthetic_gating;
+    use crate::dispatch::parallel_build::parallel_build;
+    use crate::util::prng::Rng;
+
+    fn workload(l: usize, e: usize, k: usize, d: usize, skew: f64,
+                seed: u64) -> StepBatch {
+        let mut rng = Rng::new(seed);
+        let g = synthetic_gating(&mut rng, l, e, k, skew);
+        let disp = parallel_build(&g.topk_ids, l, e, k);
+        let x = rng.normal_vec(l * d, 1.0);
+        StepBatch::new(disp, x, g.gates).unwrap()
+    }
+
+    #[test]
+    fn chunk_traffic_sums_to_the_whole_batch_exchange() {
+        let batch = workload(96, 8, 2, 10, 0.8, 3);
+        let store = ExpertStore::init(8, 10, 14, 5);
+        let topo = EpTopology::new(4, 8).unwrap();
+        let plan = topo.plan(batch.disp(), 10, 4);
+        for chunks in [1usize, 2, 4, 7] {
+            let mut eng =
+                PipelinedEngine::new(topo.clone(), &store, 4, chunks).unwrap();
+            let _ = eng.forward(&batch).unwrap();
+            let t = eng.traffic();
+            assert_eq!(t.dispatch_bytes, plan.cross_rank_bytes(),
+                       "K={chunks}: chunking changed the exchanged bytes");
+            assert_eq!(t.cross_rows + t.local_rows, batch.disp().slots() as u64);
+            assert_eq!(t.combine_bytes, t.dispatch_bytes);
+        }
+    }
+
+    #[test]
+    fn pipelined_forward_is_bit_identical_to_barrier() {
+        let batch = workload(64, 8, 2, 8, 0.6, 9);
+        let store = ExpertStore::init(8, 8, 12, 7);
+        let topo = EpTopology::new(4, 8).unwrap();
+        let mut barrier = ShardedEngine::new(topo.clone(), &store, 4).unwrap();
+        let reference = barrier.forward(&batch).unwrap().into_output();
+        for chunks in [1usize, 2, 4] {
+            let mut eng =
+                PipelinedEngine::new(topo.clone(), &store, 4, chunks).unwrap();
+            let out = eng.forward(&batch).unwrap().into_output();
+            assert_eq!(out, reference, "K={chunks} forward diverged");
+        }
+    }
+
+    #[test]
+    fn oversized_chunk_count_clamps_to_tokens() {
+        let batch = workload(6, 4, 2, 6, 0.2, 4);
+        let store = ExpertStore::init(4, 6, 8, 2);
+        let topo = EpTopology::new(2, 4).unwrap();
+        let mut eng = PipelinedEngine::new(topo.clone(), &store, 2, 64).unwrap();
+        let mut barrier = ShardedEngine::new(topo, &store, 2).unwrap();
+        let a = eng.forward(&batch).unwrap().into_output();
+        let b = barrier.forward(&batch).unwrap().into_output();
+        assert_eq!(a, b);
+        assert_eq!(eng.overlap_report().unwrap().chunks, 6);
+    }
+
+    #[test]
+    fn constructor_validation() {
+        let store = ExpertStore::init(8, 8, 12, 1);
+        let topo = EpTopology::new(4, 8).unwrap();
+        assert!(PipelinedEngine::new(topo.clone(), &store, 4, 0).is_err());
+        let wrong = ExpertStore::init(6, 8, 12, 1);
+        assert!(PipelinedEngine::new(topo, &wrong, 4, 2).is_err());
+    }
+
+    #[test]
+    fn stale_and_foreign_handles_rejected() {
+        let batch = workload(24, 4, 2, 6, 0.0, 8);
+        let store = ExpertStore::init(4, 6, 8, 3);
+        let topo = EpTopology::new(2, 4).unwrap();
+        let mut eng = PipelinedEngine::new(topo.clone(), &store, 2, 2).unwrap();
+        let d_out = vec![0.1f32; batch.num_tokens() * 6];
+        let mut grads = eng.zero_grads();
+        let stale = eng.forward(&batch).unwrap();
+        let fresh = eng.forward(&batch).unwrap();
+        assert!(eng.backward_into(stale, &d_out, &mut grads).is_err());
+        eng.backward_into(fresh, &d_out, &mut grads).unwrap();
+        let mut other = PipelinedEngine::new(topo, &store, 2, 2).unwrap();
+        let foreign = other.forward(&batch).unwrap();
+        assert!(eng.backward_into(foreign, &d_out, &mut grads).is_err());
+    }
+}

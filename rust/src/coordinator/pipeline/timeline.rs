@@ -1,0 +1,450 @@
+//! Deterministic phase-timeline cost model for the chunked pipeline.
+//!
+//! The pipelined engine *executes* the overlap for real (threads); this
+//! module *prices* it on a simulated clock so overlap quality is a
+//! reproducible number rather than a wall-clock artifact of the host.
+//!
+//! # Model assumptions
+//!
+//! * Every rank has two lanes: a **comm lane** (dispatch exchange and
+//!   combine scatter buffers move at `link_gbps` decimal GB/s) and a
+//!   **compute lane** (expert FLOPs retire at `compute_gflops` GFLOP/s).
+//!   A lane executes one span at a time — the contention-consistency
+//!   invariant the property suite pins.
+//! * A chunk's exchange is an all-to-all barrier: expert compute for
+//!   chunk *m* starts only after every rank's chunk-*m* buffers landed.
+//!   Its combine starts only after every rank finished chunk-*m* compute.
+//! * Pipelining is depth-2 (what the engine actually runs): chunk
+//!   *m+1*'s exchange may begin when chunk *m*'s compute begins, not
+//!   earlier — one chunk of exchange buffers is in flight at a time.
+//! * FLOP counts are the per-row GEMV costs of the expert FFN
+//!   ([`fwd_flops_per_row`] / [`bwd_flops_per_row`]); bias adds and the
+//!   SiLU are ignored as lower-order terms.
+//! * Zero-byte / zero-FLOP phases take zero time and record no span.
+//!
+//! All inputs are integers or config constants, so the timeline — and
+//! every number in [`OverlapReport`] — is bit-reproducible.
+
+use crate::util::json::Json;
+
+/// Simulated hardware rates for the timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// cross-rank link bandwidth, decimal GB/s
+    pub link_gbps: f64,
+    /// per-rank expert-compute rate, GFLOP/s
+    pub compute_gflops: f64,
+}
+
+impl CostModel {
+    pub fn new(link_gbps: f64, compute_gflops: f64) -> Result<CostModel, String> {
+        if !(link_gbps > 0.0 && link_gbps.is_finite()) {
+            return Err(format!("link_gbps must be positive, got {link_gbps}"));
+        }
+        if !(compute_gflops > 0.0 && compute_gflops.is_finite()) {
+            return Err(format!("compute_gflops must be positive, got {compute_gflops}"));
+        }
+        Ok(CostModel { link_gbps, compute_gflops })
+    }
+
+    /// Seconds to move `bytes` over the link.
+    pub fn comm_seconds(&self, bytes: u64) -> f64 {
+        bytes as f64 / (self.link_gbps * 1e9)
+    }
+
+    /// Seconds to retire `flops` on one rank.
+    pub fn compute_seconds(&self, flops: u64) -> f64 {
+        flops as f64 / (self.compute_gflops * 1e9)
+    }
+}
+
+impl Default for CostModel {
+    fn default() -> CostModel {
+        CostModel { link_gbps: 50.0, compute_gflops: 200.0 }
+    }
+}
+
+/// Forward FLOPs of one routed row through the expert FFN: two GEMVs
+/// (W1·x and W2·act), 2·d·h MACs → FLOPs each.
+pub fn fwd_flops_per_row(d: usize, h: usize) -> u64 {
+    4 * d as u64 * h as u64
+}
+
+/// Backward FLOPs of one routed row: the W2-grad/dz pass, the W1-grad
+/// pass, and the dz projection (three GEMV-shaped sweeps), plus the
+/// hidden recompute for policies that did not save it.
+pub fn bwd_flops_per_row(d: usize, h: usize, recompute_hidden: bool) -> u64 {
+    let gemv = 2 * d as u64 * h as u64;
+    3 * gemv + if recompute_hidden { 2 * gemv } else { 0 }
+}
+
+/// Which lane a phase occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// dispatch all-to-all (fwd: routed rows; bwd: gated gradient rows
+    /// plus the `RecomputeAll` re-gather)
+    Exchange,
+    /// per-rank expert FFN work (fwd or bwd)
+    Compute,
+    /// expert outputs returning to their home ranks (fwd only)
+    Combine,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Exchange => "exchange",
+            Phase::Compute => "compute",
+            Phase::Combine => "combine",
+        }
+    }
+
+    /// `true` for the phases that occupy a rank's comm lane.
+    pub fn is_comm(self) -> bool {
+        self != Phase::Compute
+    }
+}
+
+/// One simulated phase occupancy on one rank's lane.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseSpan {
+    pub chunk: usize,
+    pub rank: usize,
+    pub phase: Phase,
+    /// `true` for backward-pass spans (they share the same lanes)
+    pub backward: bool,
+    /// cross-rank bytes this span moves (0 for compute spans)
+    pub bytes: u64,
+    /// FLOPs this span retires (0 for comm spans)
+    pub flops: u64,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// Builds the per-rank lane schedule chunk by chunk as the engine runs.
+#[derive(Debug, Clone)]
+pub struct TimelineBuilder {
+    ranks: usize,
+    cost: CostModel,
+    /// next-free time of each rank's comm lane
+    comm_free: Vec<f64>,
+    /// next-free time of each rank's compute lane
+    comp_free: Vec<f64>,
+    spans: Vec<PhaseSpan>,
+    chunks: usize,
+    /// no-overlap backbone: Σ per-phase max duration across ranks
+    comm_backbone_s: f64,
+    compute_backbone_s: f64,
+    exchange_bytes: u64,
+    combine_bytes: u64,
+    backward_bytes: u64,
+    flops: u64,
+}
+
+impl TimelineBuilder {
+    pub fn new(ranks: usize, cost: CostModel) -> TimelineBuilder {
+        TimelineBuilder {
+            ranks,
+            cost,
+            comm_free: vec![0.0; ranks],
+            comp_free: vec![0.0; ranks],
+            spans: Vec::new(),
+            chunks: 0,
+            comm_backbone_s: 0.0,
+            compute_backbone_s: 0.0,
+            exchange_bytes: 0,
+            combine_bytes: 0,
+            backward_bytes: 0,
+            flops: 0,
+        }
+    }
+
+    /// Current makespan (the latest busy-until time of any lane).
+    pub fn now(&self) -> f64 {
+        self.comm_free
+            .iter()
+            .chain(&self.comp_free)
+            .fold(0.0f64, |a, &b| a.max(b))
+    }
+
+    fn queue(&mut self, chunk: usize, backward: bool, phase: Phase, rank: usize,
+             bytes: u64, flops: u64, ready_s: f64) -> f64 {
+        let dur = if phase.is_comm() {
+            self.cost.comm_seconds(bytes)
+        } else {
+            self.cost.compute_seconds(flops)
+        };
+        let lane = if phase.is_comm() {
+            &mut self.comm_free[rank]
+        } else {
+            &mut self.comp_free[rank]
+        };
+        let start = lane.max(ready_s);
+        let end = start + dur;
+        *lane = end;
+        self.spans.push(PhaseSpan {
+            chunk, rank, phase, backward, bytes, flops, start_s: start, end_s: end,
+        });
+        end
+    }
+
+    /// Queue one chunk's phase across ranks (`amounts[r]` = bytes for
+    /// comm phases, FLOPs for compute). Ranks with zero work record no
+    /// span. Returns `(first_start, barrier_end)`: the earliest span
+    /// start (= `ready_s` when nobody participates) and the time every
+    /// participating rank is done — the all-to-all / compute barrier the
+    /// next phase depends on.
+    pub fn phase(&mut self, chunk: usize, backward: bool, phase: Phase,
+                 amounts: &[u64], ready_s: f64) -> (f64, f64) {
+        assert_eq!(amounts.len(), self.ranks);
+        self.chunks = self.chunks.max(chunk + 1);
+        let mut first_start = f64::INFINITY;
+        let mut barrier = ready_s;
+        let mut max_dur = 0.0f64;
+        for (rank, &amount) in amounts.iter().enumerate() {
+            if amount == 0 {
+                continue;
+            }
+            let (bytes, flops) = if phase.is_comm() { (amount, 0) } else { (0, amount) };
+            let end = self.queue(chunk, backward, phase, rank, bytes, flops, ready_s);
+            let span = self.spans.last().unwrap();
+            first_start = first_start.min(span.start_s);
+            barrier = barrier.max(end);
+            max_dur = max_dur.max(end - span.start_s);
+            if phase.is_comm() {
+                if backward {
+                    self.backward_bytes += bytes;
+                } else if phase == Phase::Exchange {
+                    self.exchange_bytes += bytes;
+                } else {
+                    self.combine_bytes += bytes;
+                }
+            } else {
+                self.flops += flops;
+            }
+        }
+        if phase.is_comm() {
+            self.comm_backbone_s += max_dur;
+        } else {
+            self.compute_backbone_s += max_dur;
+        }
+        if first_start.is_infinite() {
+            first_start = ready_s;
+        }
+        (first_start, barrier)
+    }
+
+    /// Snapshot the schedule into a report (callable after the forward
+    /// pass and again after the backward extends the same lanes).
+    pub fn report(&self) -> OverlapReport {
+        OverlapReport {
+            ranks: self.ranks,
+            chunks: self.chunks,
+            critical_path_s: self.now(),
+            comm_s: self.comm_backbone_s,
+            compute_s: self.compute_backbone_s,
+            exchange_bytes: self.exchange_bytes,
+            combine_bytes: self.combine_bytes,
+            backward_bytes: self.backward_bytes,
+            flops: self.flops,
+            spans: self.spans.clone(),
+        }
+    }
+}
+
+/// Roll-up of one step session's simulated timeline: how long the
+/// schedule took, how much of the communication was exposed (not hidden
+/// behind compute), and how close the overlap came to ideal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverlapReport {
+    pub ranks: usize,
+    pub chunks: usize,
+    /// makespan of the simulated (overlapped) schedule
+    pub critical_path_s: f64,
+    /// communication backbone: Σ per-chunk max comm duration — what a
+    /// barrier execution spends communicating
+    pub comm_s: f64,
+    /// compute backbone: Σ per-chunk max compute duration
+    pub compute_s: f64,
+    /// forward dispatch cross-rank bytes (Σ Exchange spans, fwd)
+    pub exchange_bytes: u64,
+    /// forward combine cross-rank bytes
+    pub combine_bytes: u64,
+    /// backward cross-rank bytes (gradient exchange + recompute re-gather)
+    pub backward_bytes: u64,
+    /// total expert FLOPs priced
+    pub flops: u64,
+    pub spans: Vec<PhaseSpan>,
+}
+
+impl OverlapReport {
+    /// Barrier (no-overlap) execution time: every phase serialized.
+    pub fn serial_path_s(&self) -> f64 {
+        self.comm_s + self.compute_s
+    }
+
+    /// Perfect-overlap lower bound: the longer backbone fully hides the
+    /// shorter one.
+    pub fn ideal_path_s(&self) -> f64 {
+        self.comm_s.max(self.compute_s)
+    }
+
+    /// Fraction of communication time left on the critical path
+    /// (1.0 = fully exposed, i.e. the barrier schedule; 0.0 = fully
+    /// hidden or no communication at all).
+    pub fn exposed_comm_fraction(&self) -> f64 {
+        if self.comm_s <= 0.0 {
+            return 0.0;
+        }
+        ((self.critical_path_s - self.compute_s).max(0.0) / self.comm_s).min(1.0)
+    }
+
+    /// Achieved overlap as a fraction of the ideal: 0.0 = barrier
+    /// schedule, 1.0 = critical path down to `ideal_path_s`.
+    pub fn overlap_efficiency(&self) -> f64 {
+        let serial = self.serial_path_s();
+        let ideal = self.ideal_path_s();
+        if serial - ideal <= 0.0 {
+            return 1.0;
+        }
+        ((serial - self.critical_path_s) / (serial - ideal)).clamp(0.0, 1.0)
+    }
+
+    /// Total bytes of `phase` spans in the given direction.
+    pub fn phase_bytes(&self, phase: Phase, backward: bool) -> u64 {
+        self.spans
+            .iter()
+            .filter(|s| s.phase == phase && s.backward == backward)
+            .map(|s| s.bytes)
+            .sum()
+    }
+
+    /// Scalar roll-up (spans elided) for JSONL metrics and benches.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ranks", Json::num(self.ranks as f64)),
+            ("chunks", Json::num(self.chunks as f64)),
+            ("critical_path_s", Json::num(self.critical_path_s)),
+            ("serial_path_s", Json::num(self.serial_path_s())),
+            ("ideal_path_s", Json::num(self.ideal_path_s())),
+            ("comm_s", Json::num(self.comm_s)),
+            ("compute_s", Json::num(self.compute_s)),
+            ("exposed_comm_fraction", Json::num(self.exposed_comm_fraction())),
+            ("overlap_efficiency", Json::num(self.overlap_efficiency())),
+            ("exchange_bytes", Json::num(self.exchange_bytes as f64)),
+            ("combine_bytes", Json::num(self.combine_bytes as f64)),
+            ("backward_bytes", Json::num(self.backward_bytes as f64)),
+            ("flops", Json::num(self.flops as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost() -> CostModel {
+        CostModel::new(1.0, 1.0).unwrap() // 1 GB/s, 1 GFLOP/s: 1e9 units = 1 s
+    }
+
+    #[test]
+    fn cost_model_validates_and_prices() {
+        assert!(CostModel::new(0.0, 1.0).is_err());
+        assert!(CostModel::new(1.0, -2.0).is_err());
+        assert!(CostModel::new(f64::NAN, 1.0).is_err());
+        let c = cost();
+        assert!((c.comm_seconds(2_000_000_000) - 2.0).abs() < 1e-12);
+        assert!((c.compute_seconds(500_000_000) - 0.5).abs() < 1e-12);
+        assert_eq!(fwd_flops_per_row(8, 16), 4 * 8 * 16);
+        assert_eq!(bwd_flops_per_row(8, 16, false), 3 * 2 * 8 * 16);
+        assert_eq!(bwd_flops_per_row(8, 16, true), 5 * 2 * 8 * 16);
+    }
+
+    #[test]
+    fn single_chunk_is_fully_exposed() {
+        // K=1: exchange → compute → combine strictly serialized
+        let mut tb = TimelineBuilder::new(2, cost());
+        let (_, e) = tb.phase(0, false, Phase::Exchange, &[1_000_000_000, 0], 0.0);
+        let (cs, cd) = tb.phase(0, false, Phase::Compute, &[2_000_000_000, 1_000_000_000], e);
+        assert!((cs - 1.0).abs() < 1e-12);
+        let (_, done) = tb.phase(0, false, Phase::Combine, &[1_000_000_000, 0], cd);
+        assert!((done - 4.0).abs() < 1e-12);
+        let r = tb.report();
+        assert!((r.critical_path_s - 4.0).abs() < 1e-12);
+        assert!((r.serial_path_s() - 4.0).abs() < 1e-12);
+        assert!((r.exposed_comm_fraction() - 1.0).abs() < 1e-12);
+        assert_eq!(r.exchange_bytes, 1_000_000_000);
+        assert_eq!(r.combine_bytes, 1_000_000_000);
+    }
+
+    #[test]
+    fn pipelined_chunks_hide_communication() {
+        // two chunks: chunk 1's exchange runs during chunk 0's compute
+        let mut tb = TimelineBuilder::new(1, cost());
+        let b = 1_000_000_000u64; // 1 s of comm
+        let f = 3_000_000_000u64; // 3 s of compute
+        let (_, e0) = tb.phase(0, false, Phase::Exchange, &[b], 0.0);
+        let (c0s, c0d) = tb.phase(0, false, Phase::Compute, &[f], e0);
+        let (_, e1) = tb.phase(1, false, Phase::Exchange, &[b], c0s);
+        assert!(e1 < c0d, "exchange 1 should finish inside compute 0");
+        let (_, c1d) = tb.phase(1, false, Phase::Compute, &[f], e1.max(c0d));
+        let r_mid = tb.report();
+        assert!(r_mid.exposed_comm_fraction() < 1.0);
+        assert!((c1d - 7.0).abs() < 1e-12); // 1 + 3 + 3: second exchange hidden
+        let r = tb.report();
+        assert!(r.critical_path_s < r.serial_path_s());
+        assert!(r.overlap_efficiency() > 0.0);
+    }
+
+    #[test]
+    fn lanes_never_double_book() {
+        let mut tb = TimelineBuilder::new(3, cost());
+        let mut ready = 0.0;
+        for chunk in 0..4 {
+            let bytes = [(chunk as u64 + 1) * 1_000_000; 3];
+            let flops = [(chunk as u64 + 2) * 2_000_000; 3];
+            let (_, e) = tb.phase(chunk, false, Phase::Exchange, &bytes, ready);
+            let (_, c) = tb.phase(chunk, false, Phase::Compute, &flops, e);
+            let (_, done) = tb.phase(chunk, false, Phase::Combine, &bytes, c);
+            ready = done * 0.5; // deliberately early: lanes must still serialize
+        }
+        let r = tb.report();
+        for rank in 0..3 {
+            for comm in [true, false] {
+                let mut lane: Vec<&PhaseSpan> = r
+                    .spans
+                    .iter()
+                    .filter(|s| s.rank == rank && s.phase.is_comm() == comm)
+                    .collect();
+                lane.sort_by(|a, b| a.start_s.partial_cmp(&b.start_s).unwrap());
+                for w in lane.windows(2) {
+                    assert!(w[0].end_s <= w[1].start_s + 1e-12,
+                            "lane overlap on rank {rank}");
+                }
+            }
+        }
+        assert!(r.critical_path_s <= r.serial_path_s() + 1e-12);
+    }
+
+    #[test]
+    fn zero_work_phases_record_nothing() {
+        let mut tb = TimelineBuilder::new(2, cost());
+        let (s, e) = tb.phase(0, false, Phase::Exchange, &[0, 0], 1.5);
+        assert_eq!((s, e), (1.5, 1.5));
+        let r = tb.report();
+        assert!(r.spans.is_empty());
+        assert_eq!(r.exposed_comm_fraction(), 0.0);
+        assert_eq!(r.overlap_efficiency(), 1.0);
+    }
+
+    #[test]
+    fn report_json_is_valid() {
+        let mut tb = TimelineBuilder::new(1, cost());
+        let (_, e) = tb.phase(0, false, Phase::Exchange, &[4_000_000], 0.0);
+        let _ = tb.phase(0, false, Phase::Compute, &[8_000_000], e);
+        let j = tb.report().to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("chunks").unwrap().as_usize(), Some(1));
+        assert!(parsed.get("critical_path_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -26,8 +26,9 @@ use crate::runtime::host::HostTensor;
 
 use super::engine::{step_batch_from_config, ExecutionEngine, StepBatch,
                     Traffic};
-use super::optim::{optimizer_from_name, Optimizer};
+use super::optim::{clip_global_norm, optimizer_from_name, LrSchedule, Optimizer};
 use super::params::{ExpertGrads, ParamStore};
+use super::pipeline::timeline::OverlapReport;
 
 /// Outcome of a training run.
 #[derive(Debug, Clone)]
@@ -210,8 +211,14 @@ pub struct EpTrainReport {
     pub step_ms_mean: f64,
     /// peak summed `data`-class bytes across any forward (policy-dependent)
     pub peak_data_bytes: u64,
-    /// final-step global gradient L2 norm (pre-update)
+    /// final-step global gradient L2 norm (pre-clip, pre-update)
     pub grad_norm: f64,
+    /// learning rate the schedule produced for the final step
+    pub final_lr: f64,
+    /// optimizer steps whose gradients hit the `clip_norm` ceiling
+    pub clipped_steps: usize,
+    /// last step's phase timeline (chunk-pipelined engines only)
+    pub overlap: Option<OverlapReport>,
 }
 
 /// Step-session training loop over an [`ExecutionEngine`] on a synthetic
@@ -228,6 +235,7 @@ pub struct EpTrainer {
     pub engine: Box<dyn ExecutionEngine>,
     pub cfg: EpConfig,
     optimizer: Box<dyn Optimizer>,
+    schedule: LrSchedule,
     sink: MetricsSink,
 }
 
@@ -236,9 +244,11 @@ impl EpTrainer {
         cfg.validate().map_err(anyhow::Error::msg)?;
         let optimizer = optimizer_from_name(&cfg.optimizer)
             .map_err(anyhow::Error::msg)?;
+        let schedule = LrSchedule::parse(&cfg.lr_schedule)
+            .map_err(anyhow::Error::msg)?;
         let sink = MetricsSink::new(Some(cfg.metrics_path.as_str()))
             .map_err(anyhow::Error::msg)?;
-        Ok(EpTrainer { engine, cfg, optimizer, sink })
+        Ok(EpTrainer { engine, cfg, optimizer, schedule, sink })
     }
 
     /// Run `cfg.steps` optimizer steps; prints a progress line roughly
@@ -263,6 +273,8 @@ impl EpTrainer {
         let mut step_times = Vec::with_capacity(self.cfg.steps);
         let mut peak = Peak::new();
         let mut grad_norm = 0.0f64;
+        let mut final_lr = self.cfg.lr;
+        let mut clipped_steps = 0usize;
         let log_every = (self.cfg.steps / 10).max(1);
         for s in 0..self.cfg.steps {
             let t0 = Instant::now();
@@ -300,10 +312,19 @@ impl EpTrainer {
             if !loss.is_finite() {
                 bail!("non-finite ep-train loss at step {s}: {loss}");
             }
-            grad_norm = grads.l2_norm();
+            // clip on the accumulated global-step gradient, then apply
+            // the scheduled LR — both pure functions of (grads, step),
+            // so every bit-identity invariance survives them
+            let (norm, clipped) = clip_global_norm(&mut grads, self.cfg.clip_norm);
+            grad_norm = norm;
+            if clipped {
+                clipped_steps += 1;
+            }
+            let lr = self.schedule.lr_at(self.cfg.lr, s, self.cfg.steps);
+            final_lr = lr;
             let delta = self
                 .optimizer
-                .step(&grads, self.cfg.lr as f32)
+                .step(&grads, lr as f32)
                 .map_err(anyhow::Error::msg)?;
             self.engine
                 .apply_update(&delta)
@@ -315,16 +336,33 @@ impl EpTrainer {
             self.sink.emit("ep_train", &[
                 ("step", s as f64),
                 ("loss", loss),
+                ("lr", lr),
                 ("step_ms", *step_times.last().unwrap()),
                 ("dispatch_bytes", t.dispatch_bytes as f64),
                 ("grad_bytes", t.grad_bytes as f64),
                 ("recompute_bytes", t.recompute_bytes as f64),
                 ("grad_norm", grad_norm),
+                ("clipped", if clipped { 1.0 } else { 0.0 }),
                 ("micro_steps", micros.len() as f64),
             ]);
             if s % log_every == 0 || s + 1 == self.cfg.steps {
-                println!("{}", self.sink.console(s, &[("loss", loss)]));
+                println!("{}", self.sink.console(s, &[("loss", loss), ("lr", lr)]));
             }
+        }
+        // chunk-pipelined engines: emit the final step's overlap roll-up
+        let overlap = self.engine.overlap_report();
+        if let Some(rep) = &overlap {
+            let engine_name = self.engine.name();
+            self.sink.emit_tagged("overlap", &[("engine", engine_name.as_str())], &[
+                ("chunks", rep.chunks as f64),
+                ("critical_path_s", rep.critical_path_s),
+                ("serial_path_s", rep.serial_path_s()),
+                ("ideal_path_s", rep.ideal_path_s()),
+                ("exposed_comm_fraction", rep.exposed_comm_fraction()),
+                ("overlap_efficiency", rep.overlap_efficiency()),
+                ("exchange_bytes", rep.exchange_bytes as f64),
+                ("backward_bytes", rep.backward_bytes as f64),
+            ]);
         }
         // the zero-copy contract: nothing in the loop duplicated the
         // workload payload after construction
@@ -347,6 +385,9 @@ impl EpTrainer {
                 / step_times.len().max(1) as f64,
             peak_data_bytes: peak.get(),
             grad_norm,
+            final_lr,
+            clipped_steps,
+            overlap,
             losses,
         })
     }
@@ -439,6 +480,54 @@ mod tests {
                 assert_eq!(run_losses(cfg), reference,
                            "{policy} R={ranks} diverged");
             }
+        }
+    }
+
+    #[test]
+    fn cosine_schedule_and_clipping_stay_rank_invariant() {
+        let mk = |ranks: usize| EpConfig {
+            lr_schedule: "cosine".into(),
+            clip_norm: 0.5,
+            steps: 10,
+            ..tiny_cfg(ranks)
+        };
+        let a = run_losses(mk(1));
+        let b = run_losses(mk(4));
+        assert_eq!(a, b, "schedule+clip broke rank invariance");
+        // and the schedule is live: the trajectory differs from constant-LR
+        let constant = run_losses(EpConfig { steps: 10, ..tiny_cfg(1) });
+        assert_ne!(a, constant);
+    }
+
+    #[test]
+    fn clipping_caps_every_step_and_is_counted() {
+        let cfg = EpConfig { clip_norm: 1e-3, ..tiny_cfg(2) };
+        let engine = engine_from_config(&cfg).unwrap();
+        let mut t = EpTrainer::new(engine, cfg).unwrap();
+        let r = t.run().unwrap();
+        assert_eq!(r.clipped_steps, r.steps, "every step should clip");
+        assert!(r.grad_norm > 1e-3, "reported norm must be pre-clip");
+        // defaults clip nothing
+        let cfg = tiny_cfg(2);
+        let engine = engine_from_config(&cfg).unwrap();
+        let r = EpTrainer::new(engine, cfg).unwrap().run().unwrap();
+        assert_eq!(r.clipped_steps, 0);
+        assert!(r.overlap.is_none(), "barrier engines report no timeline");
+    }
+
+    #[test]
+    fn pipelined_engine_trains_bit_identically_and_reports_overlap() {
+        let reference = run_losses(tiny_cfg(2));
+        for chunks in [1usize, 2, 4] {
+            let cfg = EpConfig { pipeline_chunks: chunks, ..tiny_cfg(2) };
+            let engine = engine_from_config(&cfg).unwrap();
+            let mut t = EpTrainer::new(engine, cfg).unwrap();
+            let r = t.run().unwrap();
+            assert_eq!(r.losses, reference, "K={chunks} loss curve diverged");
+            let rep = r.overlap.expect("pipelined engine must report a timeline");
+            assert_eq!(rep.chunks, chunks.min(32));
+            assert!(rep.critical_path_s > 0.0);
+            assert!(rep.exposed_comm_fraction() <= 1.0);
         }
     }
 

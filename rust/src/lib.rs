@@ -23,9 +23,13 @@
 //!   [`StepHandle`] whose `backward` yields first-class `ExpertGrads`, a
 //!   `CheckpointPolicy` axis (save-all / save-inputs / recompute-all,
 //!   all bit-identical), pluggable optimizers (`coordinator::optim`:
-//!   SGD, Adam), and grad-accum microbatching with bit-invariant loss
-//!   curves — plus config (`[train]`/`[ep]`), data pipeline, metrics,
-//!   and hand-rolled substrates (JSON, TOML, PRNG, thread pool, stats,
+//!   SGD, Adam, LR schedules, global-norm clipping), grad-accum
+//!   microbatching with bit-invariant loss curves, and the chunked
+//!   pipeline (`coordinator::pipeline`): K-chunk all-to-all overlapped
+//!   with expert compute, bit-identical to the barrier engines, priced
+//!   by a deterministic phase-timeline cost model (`OverlapReport`) —
+//!   plus config (`[train]`/`[ep]`), data pipeline, metrics, and
+//!   hand-rolled substrates (JSON, TOML, PRNG, thread pool, stats,
 //!   CLI) since this build is fully offline.
 //!
 //! Entry points: the `moeblaze` binary (`rust/src/main.rs` — see

@@ -10,15 +10,21 @@
 //!                                paper §4 structures on a worked example
 //!   dispatch-bench [--tokens N] sort-build vs 3-step build
 //!   ep-sim [--ranks R ...]      expert-parallel all-to-all plan (dry run)
-//!   ep-bench [--ranks 1,2,4,8] [--checkpoint save-inputs] ...
+//!   ep-bench [--ranks 1,2,4,8] [--checkpoint save-inputs]
+//!            [--pipeline-chunks K --link-gbps G --compute-gflops F] ...
 //!                                execute the plan: sharded engine vs
 //!                                single-rank, bit-equality + measured
 //!                                bytes + checkpoint-policy memory sweep
+//!                                + chunk-pipeline overlap matrix
 //!   ep-train [--ranks R --steps N --grad-accum A --optimizer sgd|adam
 //!             --checkpoint save-all|save-inputs|recompute-all
+//!             --pipeline-chunks K --link-gbps G --compute-gflops F
+//!             --lr-schedule constant|cosine|linear-warmup --clip-norm C
+//!             --placement contiguous|strided|load-aware
 //!             --config file.toml ...]
 //!                                step-session training on the
-//!                                expert-parallel engine
+//!                                expert-parallel engine (chunk-pipelined
+//!                                when --pipeline-chunks > 0)
 //!   train  [--steps N --config file.toml ...]
 //!                                train the MoE LM end-to-end (AOT step)
 //!   inspect                      list artifacts + compile them
@@ -34,8 +40,10 @@ use moeblaze::config::paper::{paper_configs, scaled_configs, PAPER_BLOCK, SCALED
 use moeblaze::config::toml::Toml;
 use moeblaze::config::train::TrainConfig;
 use moeblaze::coordinator::engine::{engine_from_config, step_batch_from_config,
-                                    ExecutionEngine, ShardedEngine,
-                                    SingleRankEngine};
+                                    topology_from_config, ExecutionEngine,
+                                    ShardedEngine, SingleRankEngine};
+use moeblaze::coordinator::pipeline::timeline::CostModel;
+use moeblaze::coordinator::pipeline::PipelinedEngine;
 use moeblaze::coordinator::expert_parallel::EpTopology;
 use moeblaze::coordinator::params::{ExpertStore, ParamStore};
 use moeblaze::coordinator::trainer::{EpTrainer, Trainer};
@@ -286,6 +294,17 @@ fn ep_config_from_args(args: &Args, parse_ranks: bool) -> Result<EpConfig> {
     cfg.lr = args.f64_or("lr", cfg.lr).map_err(anyhow::Error::msg)?;
     cfg.grad_accum = args.usize_or("grad-accum", cfg.grad_accum)
         .map_err(anyhow::Error::msg)?;
+    cfg.pipeline_chunks = args.usize_or("pipeline-chunks", cfg.pipeline_chunks)
+        .map_err(anyhow::Error::msg)?;
+    cfg.link_gbps = args.f64_or("link-gbps", cfg.link_gbps)
+        .map_err(anyhow::Error::msg)?;
+    cfg.compute_gflops = args.f64_or("compute-gflops", cfg.compute_gflops)
+        .map_err(anyhow::Error::msg)?;
+    cfg.clip_norm = args.f64_or("clip-norm", cfg.clip_norm)
+        .map_err(anyhow::Error::msg)?;
+    if let Some(s) = args.get("lr-schedule") {
+        cfg.lr_schedule = s.to_string();
+    }
     if let Some(o) = args.get("optimizer") {
         cfg.optimizer = o.to_string();
     }
@@ -342,8 +361,7 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
             println!("  (skipping R={r}: {e} experts not divisible)");
             continue;
         }
-        let topo = EpTopology::with_placement(r, e, base.placement)
-            .map_err(anyhow::Error::msg)?;
+        let topo = topology_from_config(&base, r).map_err(anyhow::Error::msg)?;
         let plan = topo.plan(batch.disp(), d, 4);
         let mut engine = ShardedEngine::with_policy(topo, &store, r, base.checkpoint)
             .map_err(anyhow::Error::msg)?;
@@ -407,8 +425,7 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
                                 "comm-buffers", "saved/slot"]);
         let mut data_by_policy = Vec::new();
         for policy in CheckpointPolicy::ALL {
-            let topo = EpTopology::with_placement(r, e, base.placement)
-                .map_err(anyhow::Error::msg)?;
+            let topo = topology_from_config(&base, r).map_err(anyhow::Error::msg)?;
             let mut eng = ShardedEngine::with_policy(topo, &store, r, policy)
                 .map_err(anyhow::Error::msg)?;
             let _ = eng.forward(&batch).map_err(anyhow::Error::msg)?;
@@ -432,6 +449,54 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
         {
             bail!("policy data bytes not strictly decreasing: {data_by_policy:?}");
         }
+
+        // chunk-pipeline overlap sweep: same workload, K chunks, outputs
+        // re-verified against the single-rank reference, timeline priced
+        // by the config's link/compute cost model
+        let cost = CostModel::new(base.link_gbps, base.compute_gflops)
+            .map_err(anyhow::Error::msg)?;
+        let chunk_list: Vec<usize> = if base.pipeline_chunks > 0 {
+            vec![base.pipeline_chunks]
+        } else {
+            vec![1, 2, 4]
+        };
+        let mut t = Table::new(["chunks", "bit-equal", "critical", "serial",
+                                "exposed comm", "overlap eff", "peak comm buf"]);
+        for &chunks in &chunk_list {
+            let topo = topology_from_config(&base, r).map_err(anyhow::Error::msg)?;
+            let mut eng = PipelinedEngine::with_policy(
+                topo, &store, r, base.checkpoint, chunks, cost)
+                .map_err(anyhow::Error::msg)?;
+            let out = eng
+                .forward(&batch)
+                .map_err(anyhow::Error::msg)?
+                .into_output();
+            let bit_equal = out.len() == reference.len()
+                && out
+                    .iter()
+                    .zip(&reference)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+            let rep = eng.overlap_report().expect("pipelined engine reports");
+            let peak_extra: u64 = eng
+                .memory_per_rank()
+                .iter()
+                .map(|m| m.extra_bytes)
+                .sum();
+            t.row([
+                chunks.to_string(),
+                if bit_equal { "yes".into() } else { "NO".to_string() },
+                format!("{:.3} ms", rep.critical_path_s * 1e3),
+                format!("{:.3} ms", rep.serial_path_s() * 1e3),
+                format!("{:.1}%", 100.0 * rep.exposed_comm_fraction()),
+                format!("{:.1}%", 100.0 * rep.overlap_efficiency()),
+                human_bytes(peak_extra),
+            ]);
+            if !bit_equal {
+                bail!("K={chunks}: pipelined output diverged from single-rank");
+            }
+        }
+        println!("chunk-pipeline overlap (R={r}, {}, link {} GB/s, compute {} GFLOP/s)\n{}",
+                 base.checkpoint, base.link_gbps, base.compute_gflops, t.render());
     }
     Ok(())
 }
@@ -458,6 +523,17 @@ fn cmd_ep_train(args: &Args) -> Result<()> {
              t.cross_rows, t.local_rows);
     println!("peak data-class bytes across the run: {} ({} policy)",
              human_bytes(report.peak_data_bytes), cfg.checkpoint);
+    println!("lr schedule `{}`: final lr {:.6}; clipped {}/{} steps (clip_norm {})",
+             cfg.lr_schedule, report.final_lr, report.clipped_steps,
+             report.steps, cfg.clip_norm);
+    if let Some(rep) = &report.overlap {
+        println!("pipeline overlap (K={}): critical {:.3} ms vs serial {:.3} ms \
+                  (ideal {:.3} ms) — exposed comm {:.1}%, overlap efficiency {:.1}%",
+                 rep.chunks, rep.critical_path_s * 1e3,
+                 rep.serial_path_s() * 1e3, rep.ideal_path_s() * 1e3,
+                 100.0 * rep.exposed_comm_fraction(),
+                 100.0 * rep.overlap_efficiency());
+    }
     println!("{}", render_per_rank_memory(
         "per-rank activation memory (measured, last step)",
         &trainer.engine.memory_per_rank()));

@@ -244,6 +244,25 @@ pub fn per_rank_breakdown(total: &MemoryBreakdown, per_rank_rows: &[u64]) -> Vec
         .collect()
 }
 
+/// Peak in-flight communication-buffer bytes of a depth-2 chunk
+/// pipeline (`coordinator::pipeline`). While chunk m's send buffers are
+/// consumed and its return buffers produced, chunk m+1's send buffers
+/// are being packed — so the resident window at chunk m is
+/// `send[m] + ret[m] + send[m+1]`, and the peak is the max over chunks.
+/// A single chunk degenerates to the whole-batch barrier residency
+/// (`send + ret`), so chunking can only lower this number — the
+/// "exchange buffers shrink with K" half of the pipeline's memory claim.
+pub fn pipeline_window_bytes(send_per_chunk: &[u64], ret_per_chunk: &[u64]) -> u64 {
+    assert_eq!(send_per_chunk.len(), ret_per_chunk.len());
+    let k = send_per_chunk.len();
+    let mut peak = 0u64;
+    for m in 0..k {
+        let next_send = if m + 1 < k { send_per_chunk[m + 1] } else { 0 };
+        peak = peak.max(send_per_chunk[m] + ret_per_chunk[m] + next_send);
+    }
+    peak
+}
+
 /// Paper §2.1 worked example: Mem_routing = L·d·k·dtype.
 pub fn routing_buffer_bytes(tokens: u64, d: u64, k: u64, dtype_bytes: u64) -> u64 {
     tokens * d * k * dtype_bytes
@@ -358,6 +377,22 @@ mod tests {
         // index bytes are policy-invariant
         assert_eq!(rows[0].index_bytes, rows[1].index_bytes);
         assert_eq!(rows[1].index_bytes, rows[2].index_bytes);
+    }
+
+    #[test]
+    fn pipeline_window_shrinks_with_chunking() {
+        // one chunk holding everything == the barrier residency
+        assert_eq!(pipeline_window_bytes(&[1000], &[1000]), 2000);
+        // an even 4-way split keeps at most 3 half-chunks in flight
+        let send = [250u64; 4];
+        let ret = [250u64; 4];
+        let chunked = pipeline_window_bytes(&send, &ret);
+        assert_eq!(chunked, 750);
+        assert!(chunked < 2000);
+        // ragged chunks: the window tracks the heaviest neighborhood
+        assert_eq!(pipeline_window_bytes(&[100, 500, 50], &[10, 20, 30]),
+                   100 + 10 + 500);
+        assert_eq!(pipeline_window_bytes(&[], &[]), 0);
     }
 
     #[test]

@@ -123,12 +123,22 @@ impl MetricsSink {
 
     /// Emit one event (kind + numeric fields). Returns the rendered line.
     pub fn emit(&mut self, kind: &str, fields: &[(&str, f64)]) -> String {
+        self.emit_tagged(kind, &[], fields)
+    }
+
+    /// [`emit`](MetricsSink::emit) with additional string-valued tags
+    /// (e.g. an engine or policy name alongside the numeric fields).
+    pub fn emit_tagged(&mut self, kind: &str, tags: &[(&str, &str)],
+                       fields: &[(&str, f64)]) -> String {
         self.events += 1;
         let elapsed = self.start.elapsed().as_secs_f64();
         let mut pairs = vec![
             ("kind", Json::str(kind)),
             ("t", Json::num(elapsed)),
         ];
+        for (k, v) in tags {
+            pairs.push((k, Json::str(v)));
+        }
         for (k, v) in fields {
             pairs.push((k, Json::num(*v)));
         }
@@ -192,6 +202,17 @@ mod tests {
         assert_eq!(j.get("kind").unwrap().as_str(), Some("train"));
         assert_eq!(j.get("loss").unwrap().as_f64(), Some(1.5));
         assert_eq!(m.events, 1);
+    }
+
+    #[test]
+    fn emit_tagged_carries_string_fields() {
+        let mut m = MetricsSink::new(None).unwrap();
+        let line = m.emit_tagged("overlap", &[("engine", "pipelined-r4-k2")],
+                                 &[("chunks", 2.0)]);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("engine").unwrap().as_str(), Some("pipelined-r4-k2"));
+        assert_eq!(j.get("chunks").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("overlap"));
     }
 
     #[test]

@@ -1,0 +1,280 @@
+//! Acceptance gate for the chunked pipeline scheduler (ISSUE 3):
+//!
+//! * `PipelinedEngine` outputs and gradients are bit-identical to
+//!   `ShardedEngine` for K ∈ {1, 2, 4} × R ∈ {1, 2, 4, 8} × every
+//!   `CheckpointPolicy`, and its measured `Traffic` equals the barrier
+//!   engine's field-for-field (chunking changes when bytes move, never
+//!   how many);
+//! * `EpTrainer` loss curves are bit-invariant to `pipeline_chunks`,
+//!   including combined with grad-accum microbatching;
+//! * every `OverlapReport` timeline is contention-consistent — no two
+//!   spans on one rank's compute (or comm) lane overlap — and its
+//!   forward exchange bytes sum exactly to
+//!   `AllToAllPlan::cross_rank_bytes()`;
+//! * on the Figure-2 fixture the exposed-communication fraction is 1.0
+//!   for K = 1 and strictly below 1.0 for K > 1;
+//! * per-rank peak resident bytes (data + comm buffers) never exceed the
+//!   barrier engine's, and the comm-buffer window strictly shrinks for
+//!   K > 1.
+
+use moeblaze::config::ep::EpConfig;
+use moeblaze::coordinator::engine::{engine_from_config, ExecutionEngine,
+                                    ShardedEngine, StepBatch};
+use moeblaze::coordinator::expert_parallel::EpTopology;
+use moeblaze::coordinator::params::ExpertStore;
+use moeblaze::coordinator::pipeline::timeline::{CostModel, Phase, PhaseSpan};
+use moeblaze::coordinator::pipeline::PipelinedEngine;
+use moeblaze::coordinator::trainer::EpTrainer;
+use moeblaze::dispatch::gating::synthetic_gating;
+use moeblaze::dispatch::parallel_build::parallel_build;
+use moeblaze::memory::model::CheckpointPolicy;
+use moeblaze::testkit::fixtures::{fig2_expected, FIG2_EXPERTS, FIG2_TOKENS,
+                                  FIG2_TOP_K};
+use moeblaze::util::prng::Rng;
+
+fn random_batch(l: usize, e: usize, k: usize, d: usize, skew: f64,
+                seed: u64) -> StepBatch {
+    let mut rng = Rng::new(seed);
+    let g = synthetic_gating(&mut rng, l, e, k, skew);
+    let disp = parallel_build(&g.topk_ids, l, e, k);
+    let x = rng.normal_vec(l * d, 1.0);
+    StepBatch::new(disp, x, g.gates).unwrap()
+}
+
+#[test]
+fn bit_identity_matrix_chunks_ranks_policies() {
+    // the ISSUE-3 acceptance matrix: outputs, grads, and traffic of the
+    // pipelined engine vs the barrier engine, K × R × policy
+    let (l, e, k, d, h) = (72usize, 8usize, 2usize, 10usize, 14usize);
+    let batch = random_batch(l, e, k, d, 0.8, 31);
+    let store = ExpertStore::init(e, d, h, 9);
+    let d_out: Vec<f32> = {
+        let mut rng = Rng::new(5);
+        rng.normal_vec(l * d, 1.0)
+    };
+    for ranks in [1usize, 2, 4, 8] {
+        let topo = EpTopology::new(ranks, e).unwrap();
+        for policy in CheckpointPolicy::ALL {
+            let mut barrier =
+                ShardedEngine::with_policy(topo.clone(), &store, ranks, policy)
+                    .unwrap();
+            let ref_handle = barrier.forward(&batch).unwrap();
+            let ref_y = ref_handle.output().to_vec();
+            let ref_grads = ref_handle.backward(&mut barrier, &d_out).unwrap();
+            let ref_traffic = barrier.traffic();
+
+            for chunks in [1usize, 2, 4] {
+                let mut eng = PipelinedEngine::with_policy(
+                    topo.clone(), &store, ranks, policy, chunks,
+                    CostModel::default())
+                    .unwrap();
+                let handle = eng.forward(&batch).unwrap();
+                assert_eq!(handle.output(), &ref_y[..],
+                           "R={ranks} K={chunks} {policy}: outputs diverged");
+                let grads = handle.backward(&mut eng, &d_out).unwrap();
+                assert_eq!(grads, ref_grads,
+                           "R={ranks} K={chunks} {policy}: grads diverged");
+                assert_eq!(eng.traffic(), ref_traffic,
+                           "R={ranks} K={chunks} {policy}: traffic diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn loss_curves_bit_invariant_to_pipeline_chunks() {
+    let mk = |ranks: usize, chunks: usize, accum: usize,
+              policy: CheckpointPolicy| EpConfig {
+        ranks,
+        tokens: 48,
+        num_experts: 8,
+        top_k: 2,
+        d_model: 8,
+        d_hidden: 12,
+        steps: 4,
+        lr: 0.05,
+        seed: 6,
+        pipeline_chunks: chunks,
+        grad_accum: accum,
+        checkpoint: policy,
+        ..EpConfig::default()
+    };
+    let losses = |cfg: EpConfig| {
+        let engine = engine_from_config(&cfg).unwrap();
+        let mut t = EpTrainer::new(engine, cfg).unwrap();
+        let r = t.run().unwrap();
+        assert!(r.final_loss < r.first_loss, "no learning: {:?}", r.losses);
+        r.losses
+    };
+    let reference = losses(mk(1, 0, 1, CheckpointPolicy::SaveInputs));
+    for ranks in [2usize, 8] {
+        for chunks in [2usize, 4] {
+            for policy in CheckpointPolicy::ALL {
+                let got = losses(mk(ranks, chunks, 2, policy));
+                assert_eq!(got, reference,
+                           "R={ranks} K={chunks} {policy} accum=2 diverged");
+            }
+        }
+    }
+}
+
+fn lane_is_contention_free(spans: &[PhaseSpan], ranks: usize) {
+    for rank in 0..ranks {
+        for comm in [true, false] {
+            let mut lane: Vec<&PhaseSpan> = spans
+                .iter()
+                .filter(|s| s.rank == rank && s.phase.is_comm() == comm)
+                .collect();
+            lane.sort_by(|a, b| a.start_s.partial_cmp(&b.start_s).unwrap());
+            for w in lane.windows(2) {
+                assert!(
+                    w[0].end_s <= w[1].start_s + 1e-12,
+                    "rank {rank} {} lane double-booked: [{}, {}] then [{}, {}]",
+                    if comm { "comm" } else { "compute" },
+                    w[0].start_s, w[0].end_s, w[1].start_s, w[1].end_s
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn overlap_reports_are_contention_consistent_property() {
+    // fuzzed over (L, E, k, R, K, policy): the simulated timeline never
+    // double-books a lane, its forward exchange bytes equal the analytic
+    // whole-batch plan, and the roll-up fractions stay in range
+    let mut rng = Rng::new(0xA11A);
+    for case in 0..30u64 {
+        let ranks = [1usize, 2, 4][(rng.next_u64() % 3) as usize];
+        let e = ranks * (1 + (rng.next_u64() % 4) as usize);
+        let l = 4 + (rng.next_u64() % 56) as usize;
+        let k = 1 + (rng.next_u64() % e.min(3) as u64) as usize;
+        let d = 4 + (rng.next_u64() % 12) as usize;
+        let chunks = 1 + (rng.next_u64() % 5) as usize;
+        let policy = CheckpointPolicy::ALL[(rng.next_u64() % 3) as usize];
+        let skew = (case % 4) as f64 * 0.6;
+        let batch = random_batch(l, e, k, d, skew, 900 + case);
+        let store = ExpertStore::init(e, d, 9, case);
+        let topo = EpTopology::new(ranks, e).unwrap();
+        let mut eng = PipelinedEngine::with_policy(
+            topo.clone(), &store, ranks, policy, chunks, CostModel::default())
+            .unwrap();
+        let handle = eng.forward(&batch).unwrap();
+        let d_out = vec![0.05f32; l * d];
+        handle.backward(&mut eng, &d_out).unwrap();
+        let rep = eng.overlap_report().unwrap();
+
+        lane_is_contention_free(&rep.spans, ranks);
+        let plan = topo.plan(batch.disp(), d, 4);
+        assert_eq!(rep.phase_bytes(Phase::Exchange, false),
+                   plan.cross_rank_bytes(),
+                   "case {case}: timeline exchange bytes != analytic plan");
+        assert_eq!(rep.exchange_bytes, eng.traffic().dispatch_bytes,
+                   "case {case}: timeline vs measured dispatch bytes");
+        assert!(rep.critical_path_s <= rep.serial_path_s() + 1e-9,
+                "case {case}: overlap made the schedule slower");
+        let frac = rep.exposed_comm_fraction();
+        assert!((0.0..=1.0).contains(&frac), "case {case}: fraction {frac}");
+        let eff = rep.overlap_efficiency();
+        assert!((0.0..=1.0).contains(&eff), "case {case}: efficiency {eff}");
+    }
+}
+
+#[test]
+fn figure2_fixture_exposes_less_communication_for_k_above_one() {
+    let disp = fig2_expected();
+    let d = 8;
+    let mut rng = Rng::new(17);
+    let x = rng.normal_vec(FIG2_TOKENS * d, 1.0);
+    let gates = vec![0.5f32; FIG2_TOKENS * FIG2_TOP_K];
+    let batch = StepBatch::new(disp, x, gates).unwrap();
+    let store = ExpertStore::init(FIG2_EXPERTS, d, 16, 23);
+    for ranks in [2usize, 4] {
+        let topo = EpTopology::new(ranks, FIG2_EXPERTS).unwrap();
+        let mut fractions = Vec::new();
+        for chunks in [1usize, 2, 4] {
+            let mut eng = PipelinedEngine::with_policy(
+                topo.clone(), &store, ranks, CheckpointPolicy::default(),
+                chunks, CostModel::default())
+                .unwrap();
+            let _ = eng.forward(&batch).unwrap();
+            let rep = eng.overlap_report().unwrap();
+            fractions.push(rep.exposed_comm_fraction());
+        }
+        assert!((fractions[0] - 1.0).abs() < 1e-12,
+                "R={ranks}: K=1 must be fully exposed, got {}", fractions[0]);
+        assert!(fractions[1] < 1.0,
+                "R={ranks}: K=2 still fully exposed ({})", fractions[1]);
+        assert!(fractions[2] < 1.0,
+                "R={ranks}: K=4 still fully exposed ({})", fractions[2]);
+    }
+    // R=1 moves nothing cross-rank: nothing to expose
+    let topo = EpTopology::new(1, FIG2_EXPERTS).unwrap();
+    let mut eng =
+        PipelinedEngine::new(topo, &store, 1, 2).unwrap();
+    let _ = eng.forward(&batch).unwrap();
+    assert_eq!(eng.overlap_report().unwrap().exposed_comm_fraction(), 0.0);
+}
+
+#[test]
+fn pipelined_peak_memory_never_exceeds_the_barrier_engine() {
+    let (l, e, k, d, h) = (128usize, 8usize, 2usize, 16usize, 20usize);
+    let batch = random_batch(l, e, k, d, 0.9, 77);
+    let store = ExpertStore::init(e, d, h, 4);
+    let topo = EpTopology::new(4, e).unwrap();
+    let mut barrier = ShardedEngine::new(topo.clone(), &store, 4).unwrap();
+    let _ = barrier.forward(&batch).unwrap();
+    let barrier_mem = barrier.memory_per_rank();
+    for chunks in [1usize, 2, 4] {
+        let mut eng =
+            PipelinedEngine::new(topo.clone(), &store, 4, chunks).unwrap();
+        let _ = eng.forward(&batch).unwrap();
+        let mem = eng.memory_per_rank();
+        assert_eq!(mem.len(), barrier_mem.len());
+        for (rank, (p, b)) in mem.iter().zip(&barrier_mem).enumerate() {
+            assert!(p.data_bytes <= b.data_bytes,
+                    "K={chunks} rank {rank}: data {} > barrier {}",
+                    p.data_bytes, b.data_bytes);
+            assert!(p.extra_bytes <= b.extra_bytes,
+                    "K={chunks} rank {rank}: comm buffers {} > barrier {}",
+                    p.extra_bytes, b.extra_bytes);
+        }
+        if chunks == 1 {
+            // degenerate pipeline: identical comm-buffer residency
+            let pe: u64 = mem.iter().map(|m| m.extra_bytes).sum();
+            let be: u64 = barrier_mem.iter().map(|m| m.extra_bytes).sum();
+            assert_eq!(pe, be, "K=1 should match the barrier residency");
+        }
+    }
+    // K=4 strictly shrinks the summed comm-buffer window
+    let mut eng = PipelinedEngine::new(topo, &store, 4, 4).unwrap();
+    let _ = eng.forward(&batch).unwrap();
+    let chunked: u64 = eng.memory_per_rank().iter().map(|m| m.extra_bytes).sum();
+    let whole: u64 = barrier_mem.iter().map(|m| m.extra_bytes).sum();
+    assert!(chunked < whole,
+            "K=4 comm-buffer peak {chunked} did not drop below {whole}");
+}
+
+#[test]
+fn recompute_all_reexchange_is_pipelined_and_measured() {
+    let batch = random_batch(64, 8, 2, 8, 0.5, 4);
+    let store = ExpertStore::init(8, 8, 12, 1);
+    let topo = EpTopology::new(4, 8).unwrap();
+    let mut eng = PipelinedEngine::with_policy(
+        topo, &store, 4, CheckpointPolicy::RecomputeAll, 4,
+        CostModel::default())
+        .unwrap();
+    let handle = eng.forward(&batch).unwrap();
+    let fwd = eng.traffic();
+    assert_eq!(fwd.recompute_bytes, 0);
+    let d_out = vec![0.1f32; batch.num_tokens() * 8];
+    handle.backward(&mut eng, &d_out).unwrap();
+    let bwd = eng.traffic();
+    // the chunked re-gather moves exactly the rows the fwd dispatch moved
+    assert_eq!(bwd.recompute_bytes, fwd.dispatch_bytes);
+    assert_eq!(bwd.grad_bytes, fwd.dispatch_bytes);
+    // and the backward timeline carries it: bwd exchange = grads + re-gather
+    let rep = eng.overlap_report().unwrap();
+    assert_eq!(rep.phase_bytes(Phase::Exchange, true),
+               bwd.grad_bytes + bwd.recompute_bytes);
+}

@@ -353,3 +353,193 @@ for opt, lr in [('sgd', 0.05), ('adam', 0.01)]:
                 f"{opt} accum={accum} {policy}: loss curve diverged\n{got}\n{ref}"
 print("step-session parity OK: loss curves bit-identical across "
       "grad_accum x checkpoint policy, for sgd and adam")
+
+# ===========================================================================
+# Chunked-pipeline parity (mirror of coordinator/pipeline, ISSUE 3).
+#
+# The pipelined engine splits a batch into K token-contiguous chunks and
+# streams them through the exchange. Two load-bearing contracts mirrored
+# here, both asserted BITWISE and fuzzed over K x R x policy:
+#   * token residency stays in GLOBAL coordinates
+#     (rank_of_token(t0 + local_t, L)), so the summed per-chunk cross
+#     bytes equal the whole-batch analytic plan exactly;
+#   * chunks accumulate gradients in ascending token order, which is the
+#     unchunked float-op sequence — outputs AND grads bit-identical to
+#     the single-rank reference for every checkpoint policy.
+# ===========================================================================
+
+def single_fwd_bwd_ffn(d, params, x, gates, dm, policy, d_out, grads):
+    """Unchunked single-rank reference (full FFN experts): forward
+    combine output + backward accumulation into `grads`."""
+    l, e, k = d['l'], d['e'], d['k']
+    n = l * k
+    save_hidden = policy == 'save-all'
+    save_inputs = policy != 'recompute-all'
+    hdim = params[0]['b1'].size
+    ys = np.zeros((n, dm), f32)
+    xs = np.zeros((n, dm), f32) if save_inputs else None
+    pre_s = np.zeros((n, hdim), f32) if save_hidden else None
+    act_s = np.zeros((n, hdim), f32) if save_hidden else None
+    for ex in range(e):
+        for pos in range(d['off'][ex], d['off'][ex + 1]):
+            xin = x[d['eti'][pos]]
+            if save_inputs:
+                xs[pos] = xin
+            y, pre, act = ffn_fwd(params[ex], xin, save_hidden)
+            if save_hidden:
+                pre_s[pos], act_s[pos] = pre, act
+            ys[pos] = y
+    out = np.zeros((l, dm), f32)
+    for i in range(l):
+        for j in range(k):
+            pos = d['tim'][i * k + j]
+            out[i] = out[i] + np.float32(gates[i * k + j]) * ys[pos]
+    origin = [0] * n
+    for slot, pos in enumerate(d['tim']):
+        origin[pos] = slot
+    for ex in range(e):
+        for pos in range(d['off'][ex], d['off'][ex + 1]):
+            tok = d['eti'][pos]
+            dy = (np.float32(gates[origin[pos]]) * d_out[tok]).astype(f32)
+            xin = xs[pos] if save_inputs else x[tok]
+            if save_hidden:
+                pre, act = pre_s[pos], act_s[pos]
+            else:
+                pre = (params[ex]['w1'] @ xin + params[ex]['b1']).astype(f32)
+                act = silu32(pre)
+            ffn_bwd_row(params[ex], grads[ex], xin, dy, pre, act)
+    return out
+
+def pipelined_fwd_bwd(ids, L, E, K_top, params, x, gates, dm, R, strided,
+                      chunks, policy, d_out, grads):
+    """Chunk-pipelined sharded mirror: global token residency, per-chunk
+    exchange/compute/combine, backward accumulated in ascending chunk
+    order. Returns (out, summed cross-rank dispatch bytes)."""
+    kc = min(chunks, L)
+    bounds = [L * i // kc for i in range(kc + 1)]
+    out = np.zeros((L, dm), f32)
+    dispatch_bytes = 0
+    chunk_state = []
+    for m in range(kc):
+        t0, t1 = bounds[m], bounds[m + 1]
+        lm = t1 - t0
+        dsub = build(list(ids[t0 * K_top:t1 * K_top]), lm, E, K_top)
+        shards = shard(dsub, R, strided)
+        routes = [[[] for _ in range(R)] for _ in range(R)]
+        ret_lookup = [None] * (lm * K_top)
+        for dst, s in enumerate(shards):
+            for ls, (tok, o) in enumerate(zip(s['toks'], s['orig'])):
+                src = rank_of_token(t0 + tok, L, R)  # global residency
+                ret_lookup[o] = (dst, len(routes[dst][src]))
+                routes[dst][src].append((ls, tok, o))
+        dispatch_bytes += sum(len(routes[dst][src]) * dm * 4
+                              for dst in range(R) for src in range(R)
+                              if src != dst)
+        # per-rank expert compute (saved state mirrors the policy);
+        # activations/gates always come from the PARENT arrays with the
+        # chunk's token offset — the engine caches no payload copies
+        saved = []
+        ys_of = []
+        for dst in range(R):
+            s = shards[dst]
+            nl = len(s['toks'])
+            xs = np.zeros((nl, dm), f32)
+            for src in range(R):
+                for i, (ls, tok, o) in enumerate(routes[dst][src]):
+                    xs[ls] = x[t0 + tok]
+            hdim = params[0]['b1'].size
+            ys = np.zeros((nl, dm), f32)
+            pre_s = np.zeros((nl, hdim), f32) if policy == 'save-all' else None
+            act_s = np.zeros((nl, hdim), f32) if policy == 'save-all' else None
+            for i, ex in enumerate(s['experts']):
+                for ls in range(s['off'][i], s['off'][i + 1]):
+                    y, pre, act = ffn_fwd(params[ex], xs[ls],
+                                          policy == 'save-all')
+                    if policy == 'save-all':
+                        pre_s[ls], act_s[ls] = pre, act
+                    ys[ls] = y
+            ys_of.append(ys)
+            if policy == 'recompute-all':
+                saved.append((None, None))
+            elif policy == 'save-all':
+                saved.append((xs, (pre_s, act_s)))
+            else:
+                saved.append((xs, None))
+        # combine on home ranks (global residency), ascending j order
+        for t in range(lm):
+            home = rank_of_token(t0 + t, L, R)
+            for j in range(K_top):
+                slot = t * K_top + j
+                dst, idx = ret_lookup[slot]
+                ls, tok, o = routes[dst][home][idx]
+                g = np.float32(gates[(t0 + t) * K_top + j])
+                out[t0 + t] = out[t0 + t] + g * ys_of[dst][ls]
+        chunk_state.append((t0, shards, routes, saved))
+    # backward: chunks in ascending order, each rank's experts in
+    # segment order — the unchunked op sequence
+    for (t0, shards, routes, saved) in chunk_state:
+        gate_base = t0 * K_top
+        for dst in range(R):
+            s = shards[dst]
+            nl = len(s['toks'])
+            dys = np.zeros((nl, dm), f32)
+            for src in range(R):
+                for i, (ls, tok, o) in enumerate(routes[dst][src]):
+                    dys[ls] = (np.float32(gates[gate_base + o])
+                               * d_out[t0 + tok]).astype(f32)
+            xs_rank, hidden_rank = saved[dst]
+            for i, ex in enumerate(s['experts']):
+                for ls in range(s['off'][i], s['off'][i + 1]):
+                    # recompute-all: re-gather the routed input (the
+                    # backward re-run of the dispatch exchange)
+                    xin = xs_rank[ls] if xs_rank is not None \
+                        else x[t0 + s['toks'][ls]]
+                    if hidden_rank is not None:
+                        pre, act = hidden_rank[0][ls], hidden_rank[1][ls]
+                    else:
+                        pre = (params[ex]['w1'] @ xin
+                               + params[ex]['b1']).astype(f32)
+                        act = silu32(pre)
+                    ffn_bwd_row(params[ex], grads[ex], xin, dys[ls], pre, act)
+    return out, dispatch_bytes
+
+def grads_bytes(grads):
+    return b''.join(g[kk].tobytes() for g in grads for kk in ('w1', 'b1', 'w2', 'b2'))
+
+random.seed(3)
+cases = 0
+for case in range(48):
+    R = random.choice([1, 2, 4])
+    E = R * random.randint(1, 3)
+    L = random.randint(4, 40)
+    K_top = random.randint(1, min(E, 3))
+    DM, H2 = 5, 7
+    chunks = random.choice([1, 2, 3, 4])
+    strided = random.random() < 0.5
+    policy = random.choice(['save-all', 'save-inputs', 'recompute-all'])
+    rng = np.random.default_rng(4000 + case)
+    ids = np.concatenate([rng.choice(E, K_top, replace=False)
+                          for _ in range(L)]).astype(int)
+    params = init_experts(E, DM, H2, rng)
+    x = rng.standard_normal((L, DM)).astype(f32)
+    gates = rng.random(L * K_top).astype(f32)
+    d_out = rng.standard_normal((L, DM)).astype(f32)
+
+    d_full = build(list(ids), L, E, K_top)
+    ref_grads = [zeros_like_params(DM, H2) for _ in range(E)]
+    ref_out = single_fwd_bwd_ffn(d_full, params, x, gates, DM, policy,
+                                 d_out, ref_grads)
+    pipe_grads = [zeros_like_params(DM, H2) for _ in range(E)]
+    pipe_out, measured = pipelined_fwd_bwd(ids, L, E, K_top, params, x, gates,
+                                           DM, R, strided, chunks, policy,
+                                           d_out, pipe_grads)
+    assert ref_out.tobytes() == pipe_out.tobytes(), \
+        f"pipeline case {case}: outputs diverged (R={R} K={chunks} {policy})"
+    assert grads_bytes(ref_grads) == grads_bytes(pipe_grads), \
+        f"pipeline case {case}: grads diverged (R={R} K={chunks} {policy})"
+    pb, _ = plan_bytes(d_full, R, strided, DM)
+    assert measured == pb, \
+        f"pipeline case {case}: chunked bytes {measured} != whole-batch plan {pb}"
+    cases += 1
+print(f"chunked-pipeline parity OK: {cases} fuzz cases, outputs + grads "
+      "bit-identical across K x R x policy, chunk bytes == whole-batch plan")
