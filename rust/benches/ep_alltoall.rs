@@ -81,6 +81,7 @@ fn main() {
 
     policy_accum_matrix(&store, l, e, k, d, h);
     pipeline_overlap_matrix(&store, l, e, k, d);
+    stack_planner_matrix(l, e, k, d, h);
 }
 
 /// Checkpoint-policy × grad_accum matrix: full fwd+bwd sessions, peak
@@ -219,4 +220,75 @@ fn pipeline_overlap_matrix(store: &ExpertStore, l: usize, e: usize, k: usize,
     assert_eq!(batch.copy_count(), 0, "overlap matrix deep-copied the workload");
     println!("pipelined outputs bit-identical to the barrier engine on every \
               cell ✓");
+}
+
+/// Stack depth × budget matrix: the planner's per-layer policy vector
+/// under shrinking budgets, and the *measured* per-rank peak of a real
+/// stacked forward checked against each plan's projection. One JSON
+/// line per cell.
+fn stack_planner_matrix(l: usize, e: usize, k: usize, d: usize, h: usize) {
+    use moeblaze::config::ep::EpConfig;
+    use moeblaze::coordinator::engine::step_batch_from_config;
+    use moeblaze::coordinator::stack::{plan_from_config, stack_with_plan};
+
+    println!("== multi-layer stack: depth × budget (planner-driven) ==");
+    let mut t = Table::new(["layers", "budget", "plan", "projected peak",
+                            "measured peak", "extra bwd"]);
+    for layers in [1usize, 2, 4] {
+        let base = EpConfig {
+            num_layers: layers,
+            checkpoint_auto: true,
+            ranks: 4,
+            tokens: l.min(256),
+            num_experts: e,
+            top_k: k,
+            d_model: d,
+            d_hidden: h,
+            ..EpConfig::default()
+        };
+        let ceiling = plan_from_config(&base)
+            .expect("plan")
+            .expect("auto plans")
+            .save_all_peak_bytes;
+        for frac in [100u64, 75, 55] {
+            let budget = ceiling * frac / 100;
+            let cfg = EpConfig { mem_budget_bytes: budget, ..base.clone() };
+            let plan = plan_from_config(&cfg).expect("plan").expect("auto plans");
+            let mut stack = stack_with_plan(&cfg, Some(&plan)).expect("stack");
+            let (batch, _) = step_batch_from_config(&cfg).expect("batch");
+            let _session = stack.forward(&batch).expect("fwd");
+            let measured = stack
+                .memory_per_rank()
+                .iter()
+                .map(|m| m.data_bytes)
+                .max()
+                .unwrap_or(0);
+            assert!(measured <= plan.projected_peak_bytes,
+                    "L={layers} budget {budget}: measured {measured} above \
+                     the projection {}", plan.projected_peak_bytes);
+            assert!(!plan.feasible || plan.projected_peak_bytes <= budget,
+                    "L={layers}: feasible plan over budget");
+            let summary: Vec<&str> =
+                plan.choices.iter().map(|c| c.policy.name()).collect();
+            t.row([
+                layers.to_string(),
+                format!("{frac}% ({})", human_bytes(budget)),
+                summary.join(","),
+                human_bytes(plan.projected_peak_bytes),
+                human_bytes(measured),
+                format!("{:.3} ms", plan.extra_time_s * 1e3),
+            ]);
+            let cell = Json::obj(vec![
+                ("bench", Json::str("ep_stack_planner")),
+                ("layers", Json::num(layers as f64)),
+                ("budget_bytes", Json::num(budget as f64)),
+                ("measured_peak_bytes", Json::num(measured as f64)),
+                ("plan", plan.to_json()),
+            ]);
+            println!("{cell}");
+        }
+    }
+    println!("{}", t.render());
+    println!("stacked measured per-rank peak never exceeded the planner's \
+              projection ✓");
 }

@@ -53,6 +53,43 @@ impl fmt::Display for Placement {
     }
 }
 
+/// How the chunk-pipelined engine cuts a batch into chunks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ChunkBalance {
+    /// Even token counts per chunk (the original splitter).
+    #[default]
+    Tokens,
+    /// Balance the summed routed-row load per chunk: each token is
+    /// weighted by the total routed rows of the experts it feeds, so a
+    /// skewed router's hot-expert tokens spread across more chunks and
+    /// per-chunk busiest-rank load evens out. Bit-identical outputs —
+    /// only chunk boundaries move.
+    Rows,
+}
+
+impl ChunkBalance {
+    pub fn parse(s: &str) -> Result<ChunkBalance, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "tokens" | "token" => Ok(ChunkBalance::Tokens),
+            "rows" | "row" | "routed-rows" => Ok(ChunkBalance::Rows),
+            _ => Err(format!("unknown chunk balance `{s}` (tokens|rows)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ChunkBalance::Tokens => "tokens",
+            ChunkBalance::Rows => "rows",
+        }
+    }
+}
+
+impl fmt::Display for ChunkBalance {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Configuration of one expert-parallel engine run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EpConfig {
@@ -80,13 +117,27 @@ pub struct EpConfig {
     pub grad_accum: usize,
     /// optimizer name (`sgd` | `adam`)
     pub optimizer: String,
-    /// fwd→bwd save/recompute policy (engine- and memory-model axis)
+    /// fwd→bwd save/recompute policy (engine- and memory-model axis);
+    /// with `checkpoint_auto` set this is only the fallback the planner
+    /// overrides per layer
     pub checkpoint: CheckpointPolicy,
+    /// `checkpoint = "auto"`: let `memory::planner::CheckpointPlanner`
+    /// choose a per-layer policy vector that fits `mem_budget_bytes` at
+    /// minimum estimated recompute + re-exchange cost
+    pub checkpoint_auto: bool,
+    /// MoE layers stacked per step (`coordinator::stack::MoeStack`);
+    /// 1 = today's single-layer engines
+    pub num_layers: usize,
+    /// per-rank activation-memory budget for `checkpoint = auto`
+    /// (data-class bytes); 0 = unlimited (planner picks all-save-all)
+    pub mem_budget_bytes: u64,
     /// chunk-pipelined engine: split each step into this many
     /// token-contiguous chunks and overlap their dispatch exchange with
     /// expert compute (`coordinator::pipeline`). 0 = barrier engines
     /// (the pre-pipeline behavior); values above the token count clamp.
     pub pipeline_chunks: usize,
+    /// chunk-boundary policy for the pipelined engine (`tokens` | `rows`)
+    pub chunk_balance: ChunkBalance,
     /// simulated cross-rank link bandwidth for the pipeline's phase
     /// timeline (decimal GB/s)
     pub link_gbps: f64,
@@ -118,7 +169,11 @@ impl Default for EpConfig {
             grad_accum: 1,
             optimizer: "sgd".into(),
             checkpoint: CheckpointPolicy::default(),
+            checkpoint_auto: false,
+            num_layers: 1,
+            mem_budget_bytes: 0,
             pipeline_chunks: 0,
+            chunk_balance: ChunkBalance::default(),
             link_gbps: 50.0,
             compute_gflops: 200.0,
             lr_schedule: "constant".into(),
@@ -163,6 +218,9 @@ impl EpConfig {
                 self.grad_accum, self.tokens
             ));
         }
+        if self.num_layers == 0 {
+            return Err("ep.num_layers must be >= 1".into());
+        }
         if !(self.link_gbps > 0.0 && self.link_gbps.is_finite()) {
             return Err(format!("ep.link_gbps must be positive, got {}", self.link_gbps));
         }
@@ -184,6 +242,9 @@ impl EpConfig {
     pub fn from_toml(t: &Toml, prefix: &str) -> Result<EpConfig, String> {
         let d = EpConfig::default();
         let key = |k: &str| format!("{prefix}.{k}");
+        // one read of the checkpoint key feeds both the policy and the
+        // auto flag — they must never desynchronize
+        let checkpoint_key = t.str_or(&key("checkpoint"), d.checkpoint.name());
         let cfg = EpConfig {
             ranks: t.usize_or(&key("ranks"), d.ranks),
             placement: Placement::parse(
@@ -200,10 +261,18 @@ impl EpConfig {
             lr: t.f64_or(&key("lr"), d.lr),
             grad_accum: t.usize_or(&key("grad_accum"), d.grad_accum),
             optimizer: t.str_or(&key("optimizer"), &d.optimizer),
-            checkpoint: CheckpointPolicy::parse(
-                &t.str_or(&key("checkpoint"), d.checkpoint.name()),
-            )?,
+            checkpoint: match checkpoint_key.as_str() {
+                "auto" => d.checkpoint,
+                other => CheckpointPolicy::parse(other)?,
+            },
+            checkpoint_auto: checkpoint_key == "auto",
+            num_layers: t.usize_or(&key("num_layers"), d.num_layers),
+            mem_budget_bytes: t.usize_or(&key("mem_budget_bytes"),
+                                         d.mem_budget_bytes as usize) as u64,
             pipeline_chunks: t.usize_or(&key("pipeline_chunks"), d.pipeline_chunks),
+            chunk_balance: ChunkBalance::parse(
+                &t.str_or(&key("chunk_balance"), d.chunk_balance.name()),
+            )?,
             link_gbps: t.f64_or(&key("link_gbps"), d.link_gbps),
             compute_gflops: t.f64_or(&key("compute_gflops"), d.compute_gflops),
             lr_schedule: t.str_or(&key("lr_schedule"), &d.lr_schedule),
@@ -330,5 +399,46 @@ mod tests {
     fn from_toml_rejects_invalid() {
         let t = Toml::parse("[ep]\nranks = 3\nnum_experts = 16").unwrap();
         assert!(EpConfig::from_toml(&t, "ep").is_err());
+    }
+
+    #[test]
+    fn chunk_balance_parse() {
+        assert_eq!(ChunkBalance::parse("tokens").unwrap(), ChunkBalance::Tokens);
+        assert_eq!(ChunkBalance::parse("Rows").unwrap(), ChunkBalance::Rows);
+        assert_eq!(ChunkBalance::parse("routed-rows").unwrap(), ChunkBalance::Rows);
+        assert!(ChunkBalance::parse("bytes").is_err());
+        assert_eq!(ChunkBalance::default(), ChunkBalance::Tokens);
+        assert_eq!(ChunkBalance::Rows.name(), "rows");
+    }
+
+    #[test]
+    fn from_toml_stack_and_planner_keys() {
+        let t = Toml::parse(
+            "[ep]\nnum_layers = 4\nmem_budget_bytes = 1048576\n\
+             checkpoint = \"auto\"\nchunk_balance = \"rows\"",
+        )
+        .unwrap();
+        let c = EpConfig::from_toml(&t, "ep").unwrap();
+        assert_eq!(c.num_layers, 4);
+        assert_eq!(c.mem_budget_bytes, 1_048_576);
+        assert!(c.checkpoint_auto);
+        // `auto` leaves the fixed policy at its default — the planner
+        // overrides it per layer
+        assert_eq!(c.checkpoint, CheckpointPolicy::SaveInputs);
+        assert_eq!(c.chunk_balance, ChunkBalance::Rows);
+        // defaults: single layer, unlimited budget, fixed policy
+        let d = EpConfig::default();
+        assert_eq!(d.num_layers, 1);
+        assert_eq!(d.mem_budget_bytes, 0);
+        assert!(!d.checkpoint_auto);
+        d.validate().unwrap();
+        assert!(EpConfig { num_layers: 0, ..Default::default() }
+            .validate()
+            .is_err());
+        // a non-auto checkpoint string still parses strictly
+        assert!(Toml::parse("[ep]\ncheckpoint = \"maybe\"")
+            .map(|t| EpConfig::from_toml(&t, "ep"))
+            .unwrap()
+            .is_err());
     }
 }

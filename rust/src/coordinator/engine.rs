@@ -44,6 +44,18 @@
 //! re-runs the dispatch exchange). `SaveInputs` is the paper's
 //! Algorithm-1 policy and the default.
 //!
+//! In a multi-layer stack (`coordinator::stack::MoeStack`) the table
+//! reads *per layer*: layer l's saved bytes are
+//! `n_l · saved_bytes_per_slot(policy_l)` on top of its residency, and
+//! every layer's saved set is live simultaneously at the fwd→bwd
+//! boundary — which is why the per-layer policy *vector* is the knob
+//! that matters at depth. `memory::planner::CheckpointPlanner` chooses
+//! that vector under a per-rank byte budget (`[ep] checkpoint = "auto"`
+//! + `mem_budget_bytes`), trading saved bytes against the recompute
+//! FLOPs (`SaveInputs`, `RecomputeAll`) and re-exchange bytes
+//! (`RecomputeAll`) each downgrade costs on the `pipeline::timeline`
+//! cost model.
+//!
 //! # Engines
 //!
 //! * [`SingleRankEngine`] — all experts local; the bit-exact reference.
@@ -94,11 +106,27 @@ pub const PLAN_CACHE_CAP: usize = 8;
 
 // -- step batch -------------------------------------------------------------
 
+/// The immutable routing half of a workload — dispatch structures plus
+/// combine gates — behind its own `Arc` so a multi-layer stack binding
+/// fresh activations to the same routing every step duplicates no index
+/// or gate data.
+struct RoutingPayload {
+    disp: DispatchStructures,
+    gates: Vec<f32>,
+}
+
 struct BatchPayload {
     id: u64,
-    disp: DispatchStructures,
+    /// stack layer this batch feeds (0 for plain workloads). Part of the
+    /// engines' plan-cache key, so one batch id can legally carry L
+    /// distinct per-layer routings without the caches colliding.
+    layer: u32,
+    /// token offset of this batch within its parent workload (0 for
+    /// whole batches; `split` stamps the microbatch offset so a
+    /// multi-layer stack can slice its per-layer routing to the span).
+    token_offset: usize,
+    routing: Arc<RoutingPayload>,
     x: Vec<f32>,
-    gates: Vec<f32>,
     d_model: usize,
     deep_copies: AtomicU64,
 }
@@ -126,6 +154,11 @@ impl StepBatch {
     /// `x.len() / disp.num_tokens`.
     pub fn new(disp: DispatchStructures, x: Vec<f32>,
                gates: Vec<f32>) -> Result<StepBatch, String> {
+        StepBatch::with_meta(disp, x, gates, 0, 0)
+    }
+
+    fn with_meta(disp: DispatchStructures, x: Vec<f32>, gates: Vec<f32>,
+                 token_offset: usize, layer: u32) -> Result<StepBatch, String> {
         if disp.num_tokens == 0 {
             return Err("StepBatch needs at least one token".into());
         }
@@ -147,9 +180,10 @@ impl StepBatch {
         Ok(StepBatch {
             inner: Arc::new(BatchPayload {
                 id: NEXT_BATCH_ID.fetch_add(1, Ordering::Relaxed),
-                disp,
+                layer,
+                token_offset,
+                routing: Arc::new(RoutingPayload { disp, gates }),
                 x,
-                gates,
                 d_model,
                 deep_copies: AtomicU64::new(0),
             }),
@@ -161,8 +195,26 @@ impl StepBatch {
         self.inner.id
     }
 
+    /// Stack layer this batch feeds (0 for plain workloads; set by
+    /// [`LayerRouting::bind`]).
+    pub fn layer(&self) -> u32 {
+        self.inner.layer
+    }
+
+    /// Token offset of this batch inside its parent workload (0 unless
+    /// this batch came from [`split`](StepBatch::split)).
+    pub fn token_offset(&self) -> usize {
+        self.inner.token_offset
+    }
+
+    /// The key every engine plan cache uses: one batch id may carry L
+    /// distinct per-layer routings, so the layer tag is load-bearing.
+    pub(crate) fn plan_key(&self) -> (u64, u32) {
+        (self.inner.id, self.inner.layer)
+    }
+
     pub fn disp(&self) -> &DispatchStructures {
-        &self.inner.disp
+        &self.inner.routing.disp
     }
 
     pub fn x(&self) -> &[f32] {
@@ -170,11 +222,11 @@ impl StepBatch {
     }
 
     pub fn gates(&self) -> &[f32] {
-        &self.inner.gates
+        &self.inner.routing.gates
     }
 
     pub fn num_tokens(&self) -> usize {
-        self.inner.disp.num_tokens
+        self.inner.routing.disp.num_tokens
     }
 
     pub fn d_model(&self) -> usize {
@@ -194,7 +246,11 @@ impl StepBatch {
     /// [`copy_count`]: StepBatch::copy_count
     pub fn deep_copy(&self) -> Result<StepBatch, String> {
         self.inner.deep_copies.fetch_add(1, Ordering::Relaxed);
-        StepBatch::new(self.inner.disp.clone(), self.inner.x.clone(), self.inner.gates.clone())
+        // fresh id, but the token offset and layer tag survive: a copied
+        // microbatch must still slice stack routing at its real span
+        StepBatch::with_meta(self.inner.routing.disp.clone(), self.inner.x.clone(),
+                             self.inner.routing.gates.clone(),
+                             self.inner.token_offset, self.inner.layer)
     }
 
     /// Payload copies made since construction (deep copies only; shares
@@ -216,15 +272,36 @@ impl StepBatch {
         if parts == 0 || parts > l {
             return Err(format!("cannot split {l} tokens into {parts} microbatches"));
         }
-        if parts == 1 {
-            return Ok(vec![(0, self.inner.disp.clone())]);
+        let bounds: Vec<usize> = (0..=parts).map(|m| l * m / parts).collect();
+        self.split_routing_at(&bounds)
+    }
+
+    /// [`split_routing`](StepBatch::split_routing) over explicit
+    /// contiguous token bounds (ascending, `bounds[0] = 0`, last = token
+    /// count): chunk m covers tokens `[bounds[m], bounds[m+1])`. Token
+    /// residency stays a *global*-token property downstream, so any
+    /// contiguous partition preserves the summed-traffic invariant —
+    /// callers choose the bounds (even token counts, or routed-row
+    /// weighted via [`split_bounds_weighted`]).
+    pub fn split_routing_at(
+        &self, bounds: &[usize],
+    ) -> Result<Vec<(usize, DispatchStructures)>, String> {
+        let l = self.num_tokens();
+        let disp = &self.inner.routing.disp;
+        if bounds.len() < 2 || bounds[0] != 0 || *bounds.last().unwrap() != l {
+            return Err(format!("chunk bounds {bounds:?} do not span 0..{l}"));
         }
-        let (k, e) = (self.inner.disp.top_k, self.inner.disp.num_experts);
-        let mut out = Vec::with_capacity(parts);
-        for m in 0..parts {
-            let t0 = l * m / parts;
-            let t1 = l * (m + 1) / parts;
-            let ids = &self.inner.disp.token_expert_indices[t0 * k..t1 * k];
+        if bounds.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(format!("chunk bounds {bounds:?} not strictly increasing"));
+        }
+        if bounds.len() == 2 {
+            return Ok(vec![(0, disp.clone())]);
+        }
+        let (k, e) = (disp.top_k, disp.num_experts);
+        let mut out = Vec::with_capacity(bounds.len() - 1);
+        for w in bounds.windows(2) {
+            let (t0, t1) = (w[0], w[1]);
+            let ids = &disp.token_expert_indices[t0 * k..t1 * k];
             out.push((t0, parallel_build(ids, t1 - t0, e, k)));
         }
         Ok(out)
@@ -233,23 +310,144 @@ impl StepBatch {
     /// Split into `parts` contiguous token-range microbatches, returned
     /// as `(token_offset, micro_batch)` in token order. Each microbatch
     /// is a fresh `StepBatch` built once (construction, not a per-step
-    /// copy). Contiguous splits keep every expert's row segment in the
-    /// same relative order as the full batch, which is what makes
-    /// grad-accum bit-identical to the unsplit step.
+    /// copy) carrying its offset as [`token_offset`]. Contiguous splits
+    /// keep every expert's row segment in the same relative order as the
+    /// full batch, which is what makes grad-accum bit-identical to the
+    /// unsplit step.
+    ///
+    /// [`token_offset`]: StepBatch::token_offset
     pub fn split(&self, parts: usize) -> Result<Vec<(usize, StepBatch)>, String> {
-        let (d, k) = (self.d_model(), self.inner.disp.top_k);
+        let (d, k) = (self.d_model(), self.inner.routing.disp.top_k);
         self.split_routing(parts)?
             .into_iter()
             .map(|(t0, disp)| {
                 let lm = disp.num_tokens;
-                let batch = StepBatch::new(
+                // the stamped offset is absolute (chained through this
+                // batch's own offset), so re-splitting a microbatch
+                // still locates each grandchild in the root workload —
+                // what MoeStack's routing slices key on. The returned
+                // offset stays relative to *this* batch, matching the
+                // x/gates/target slices callers take from it.
+                let batch = StepBatch::with_meta(
                     disp,
                     self.inner.x[t0 * d..(t0 + lm) * d].to_vec(),
-                    self.inner.gates[t0 * k..(t0 + lm) * k].to_vec(),
+                    self.inner.routing.gates[t0 * k..(t0 + lm) * k].to_vec(),
+                    self.inner.token_offset + t0,
+                    self.inner.layer,
                 )?;
                 Ok((t0, batch))
             })
             .collect()
+    }
+}
+
+/// Contiguous chunk bounds balancing the summed per-token `weights`
+/// instead of raw token counts: bound m is the earliest cut whose prefix
+/// weight reaches `m/parts` of the total, clamped so every chunk keeps
+/// at least one token. All-zero weights degrade to the even token split.
+/// The chunk-pipelined engine feeds routed-row loads through this so a
+/// skewed router no longer yields ragged chunks (`[ep] chunk_balance =
+/// rows`).
+pub fn split_bounds_weighted(weights: &[u64], parts: usize) -> Result<Vec<usize>, String> {
+    let l = weights.len();
+    if parts == 0 || parts > l {
+        return Err(format!("cannot split {l} tokens into {parts} chunks"));
+    }
+    let total: u64 = weights.iter().sum();
+    if total == 0 {
+        return Ok((0..=parts).map(|m| l * m / parts).collect());
+    }
+    let mut prefix = vec![0u64; l + 1];
+    for (i, &w) in weights.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + w;
+    }
+    let mut bounds = vec![0usize];
+    for m in 1..parts {
+        let target = total * m as u64 / parts as u64;
+        let cut = prefix.partition_point(|&p| p < target);
+        let lo = bounds[m - 1] + 1;
+        let hi = l - (parts - m);
+        bounds.push(cut.clamp(lo, hi));
+    }
+    bounds.push(l);
+    Ok(bounds)
+}
+
+// -- layer routing ----------------------------------------------------------
+
+/// One stack layer's fixed routing — dispatch structures plus combine
+/// gates, shared zero-copy by every per-step batch bound to it.
+/// `coordinator::stack::MoeStack` builds one per layer (above the
+/// bottom) and re-[`bind`]s each step's fresh activations; the derived
+/// batch reuses the *parent* batch's id plus this routing's layer tag,
+/// so engine plan caches (keyed `(batch id, layer)`) stay warm across
+/// steps even though `x` changes every step.
+///
+/// [`bind`]: LayerRouting::bind
+pub struct LayerRouting {
+    layer: u32,
+    routing: Arc<RoutingPayload>,
+}
+
+impl LayerRouting {
+    /// Validate and wrap a layer's routing. `layer` must be ≥ 1 — layer
+    /// 0 is the caller's own batch.
+    pub fn new(layer: u32, disp: DispatchStructures,
+               gates: Vec<f32>) -> Result<LayerRouting, String> {
+        if layer == 0 {
+            return Err("layer 0 consumes the caller's batch routing".into());
+        }
+        if disp.num_tokens == 0 {
+            return Err("LayerRouting needs at least one token".into());
+        }
+        if gates.len() != disp.slots() {
+            return Err(format!(
+                "gates has {} elements, expected L·k = {}",
+                gates.len(),
+                disp.slots()
+            ));
+        }
+        Ok(LayerRouting { layer, routing: Arc::new(RoutingPayload { disp, gates }) })
+    }
+
+    pub fn layer(&self) -> u32 {
+        self.layer
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        self.routing.disp.num_tokens
+    }
+
+    /// Bind one step's activations (the previous layer's output) to this
+    /// routing: a fresh batch over `parent`'s id and token span, sharing
+    /// this routing's index/gate payload untouched. The parent batch's
+    /// deep-copy counter is not incremented — no payload is duplicated.
+    pub fn bind(&self, parent: &StepBatch, x: Vec<f32>) -> Result<StepBatch, String> {
+        let l = self.routing.disp.num_tokens;
+        if parent.num_tokens() != l {
+            return Err(format!(
+                "parent batch has {} tokens, layer routing covers {l}",
+                parent.num_tokens()
+            ));
+        }
+        if x.is_empty() || x.len() % l != 0 {
+            return Err(format!(
+                "x has {} elements, not a positive multiple of L = {l}",
+                x.len()
+            ));
+        }
+        let d_model = x.len() / l;
+        Ok(StepBatch {
+            inner: Arc::new(BatchPayload {
+                id: parent.id(),
+                layer: self.layer,
+                token_offset: parent.token_offset(),
+                routing: Arc::clone(&self.routing),
+                x,
+                d_model,
+                deep_copies: AtomicU64::new(0),
+            }),
+        })
     }
 }
 
@@ -299,13 +497,17 @@ pub(crate) fn next_engine_tag() -> u64 {
     NEXT_ENGINE_TAG.fetch_add(1, Ordering::Relaxed)
 }
 
-/// The one linear-scan LRU all three engines' per-batch caches share:
+/// The one linear-scan LRU all the engines' per-batch caches share:
 /// a hit refreshes recency (moves to the back) and returns its index; a
 /// miss runs `build`, evicts from the front down to `cap - 1` entries,
 /// and appends. Evicting in a loop (not once) means a lowered cap takes
 /// effect on the next miss rather than pinning the high-water mark.
-pub(crate) fn lru_get_or_insert<T>(
-    cache: &mut Vec<(u64, T)>, cap: usize, id: u64,
+/// Keys are `(batch id, layer)` pairs for the plan caches — one batch id
+/// legitimately maps to L distinct per-layer dispatch plans in a
+/// multi-layer stack, so id-only keys would silently serve layer 0's
+/// plan to every layer.
+pub(crate) fn lru_get_or_insert<K: Copy + PartialEq, T>(
+    cache: &mut Vec<(K, T)>, cap: usize, id: K,
     build: impl FnOnce() -> Result<T, String>,
 ) -> Result<usize, String> {
     if let Some(i) = cache.iter().position(|(key, _)| *key == id) {
@@ -372,6 +574,21 @@ pub trait ExecutionEngine {
     /// foreign handle, or a shape mismatch.
     fn backward_into(&mut self, handle: StepHandle, d_out: &[f32],
                      grads: &mut ExpertGrads) -> Result<(), String>;
+
+    /// [`backward_into`] that additionally accumulates ∂loss/∂x — the
+    /// gradient with respect to the batch's token activations — into
+    /// `d_x` (length L·d, caller-zeroed). This is the layer-chaining
+    /// half of `coordinator::stack::MoeStack`'s reverse walk: layer l's
+    /// `d_x` is layer l−1's `d_out`. The parameter-gradient float-op
+    /// sequence is exactly [`backward_into`]'s (the ∂x ops touch
+    /// separate memory), so `grads` stays bit-identical whether or not
+    /// ∂x is requested; and every engine folds per-slot ∂x rows into
+    /// `d_x` in global expert-major position order, so ∂x itself is
+    /// bit-identical across rank counts and chunkings.
+    ///
+    /// [`backward_into`]: ExecutionEngine::backward_into
+    fn backward_into_dx(&mut self, handle: StepHandle, d_out: &[f32],
+                        grads: &mut ExpertGrads, d_x: &mut [f32]) -> Result<(), String>;
 
     /// A zeroed gradient accumulator matching this engine's experts.
     fn zero_grads(&self) -> ExpertGrads;
@@ -468,10 +685,15 @@ pub(crate) fn recompute_hidden(p: &ExpertParams, d: usize, h: usize, x: &[f32],
 }
 
 /// Accumulate one row's parameter gradients into `g`, given the hidden
-/// pre-activation/activation rows (saved or just recomputed).
+/// pre-activation/activation rows (saved or just recomputed). When `dx`
+/// is provided, also accumulates this row's input gradient
+/// `∂loss/∂x = W1ᵀ·da` into it — extra ops on separate memory, appended
+/// after each `j`'s parameter update, so the `g` float-op sequence is
+/// identical with or without it.
 pub(crate) fn expert_backward_row(p: &ExpertParams, g: &mut ExpertParams, d: usize,
                                   h: usize, x: &[f32], dy: &[f32], pre: &[f32],
-                                  act: &[f32], dz: &mut [f32]) {
+                                  act: &[f32], dz: &mut [f32],
+                                  dx: Option<&mut [f32]>) {
     // W2 / b2 grads and dz = W2ᵀ·dy
     for j in 0..h {
         dz[j] = 0.0;
@@ -486,6 +708,7 @@ pub(crate) fn expert_backward_row(p: &ExpertParams, g: &mut ExpertParams, d: usi
         }
     }
     // through silu: silu'(a) = σ(a)·(1 + a·(1 − σ(a)))
+    let mut dx = dx;
     for j in 0..h {
         let sig = 1.0 / (1.0 + (-pre[j]).exp());
         let da = dz[j] * sig * (1.0 + pre[j] * (1.0 - sig));
@@ -493,6 +716,12 @@ pub(crate) fn expert_backward_row(p: &ExpertParams, g: &mut ExpertParams, d: usi
         let grow = &mut g.w1[j * d..(j + 1) * d];
         for c in 0..d {
             grow[c] += da * x[c];
+        }
+        if let Some(dxr) = dx.as_deref_mut() {
+            let wrow = &p.w1[j * d..(j + 1) * d];
+            for c in 0..d {
+                dxr[c] += da * wrow[c];
+            }
         }
     }
 }
@@ -528,6 +757,60 @@ pub(crate) fn check_batch(batch: &StepBatch, d: usize, num_experts: usize) -> Re
     Ok(())
 }
 
+/// One rank's backward work item for `scope_chunks`: the gradient
+/// accumulators of the experts it owns, plus (when ∂x is requested) the
+/// per-local-slot input-gradient rows it produces. Separate fields so a
+/// worker can mutate both without aliasing.
+pub(crate) struct RankBwdWork {
+    pub(crate) bucket: Vec<(usize, ExpertParams)>,
+    pub(crate) dxs: Vec<f32>,
+}
+
+/// Fold per-rank per-local-slot ∂x rows back into the caller's `d_x` in
+/// global expert-major position order — the one accumulation order every
+/// engine shares. Per token, its k slot contributions land in ascending
+/// expert order exactly as the single-rank walk performs them, which is
+/// what keeps ∂x bit-identical across rank counts and chunkings (a
+/// chunk's tokens all live in that chunk, so chunk-local position order
+/// preserves each token's relative contribution order).
+pub(crate) fn fold_dx(shards: &[RankShard], work: &[RankBwdWork], d: usize,
+                      num_experts: usize, token_base: usize, d_x: &mut [f32]) {
+    let mut seg_len = vec![0usize; num_experts];
+    for s in shards {
+        for (i, &e) in s.experts.iter().enumerate() {
+            seg_len[e as usize] = s.expert_len(i);
+        }
+    }
+    let mut seg_off = vec![0usize; num_experts + 1];
+    for e in 0..num_experts {
+        seg_off[e + 1] = seg_off[e] + seg_len[e];
+    }
+    let n = seg_off[num_experts];
+    let mut dxs = vec![0.0f32; n * d];
+    let mut tok_of_pos = vec![0u32; n];
+    for (dst, s) in shards.iter().enumerate() {
+        let local = &work[dst].dxs;
+        for (i, &e) in s.experts.iter().enumerate() {
+            let lo = s.expert_token_offsets[i] as usize;
+            let hi = s.expert_token_offsets[i + 1] as usize;
+            let base = seg_off[e as usize];
+            for jj in 0..(hi - lo) {
+                dxs[(base + jj) * d..(base + jj + 1) * d]
+                    .copy_from_slice(&local[(lo + jj) * d..(lo + jj + 1) * d]);
+                tok_of_pos[base + jj] = s.expert_token_indices[lo + jj];
+            }
+        }
+    }
+    for pos in 0..n {
+        let t = token_base + tok_of_pos[pos] as usize;
+        let row = &dxs[pos * d..(pos + 1) * d];
+        let out = &mut d_x[t * d..(t + 1) * d];
+        for c in 0..d {
+            out[c] += row[c];
+        }
+    }
+}
+
 /// What one session saved on one rank (policy-dependent).
 pub(crate) enum SavedActs {
     /// `SaveAll`: routed inputs + hidden pre-activations + activations
@@ -554,9 +837,9 @@ pub struct SingleRankEngine {
     engine_tag: u64,
     sessions_opened: u64,
     session: Option<SingleSession>,
-    /// cached `origin slot per expert-major position`, by batch id
-    /// (LRU, bounded at `cache_cap`)
-    origin_cache: Vec<(u64, Vec<u32>)>,
+    /// cached `origin slot per expert-major position`, by
+    /// (batch id, layer) (LRU, bounded at `cache_cap`)
+    origin_cache: Vec<((u64, u32), Vec<u32>)>,
     cache_cap: usize,
     traffic: Traffic,
     /// last forward's accounting — persists across the session's
@@ -597,7 +880,7 @@ impl SingleRankEngine {
     /// evict the least-recently-used entry and re-derive on re-admission.
     fn origin_of_pos(&mut self, batch: &StepBatch) -> usize {
         let disp = batch.disp();
-        lru_get_or_insert(&mut self.origin_cache, self.cache_cap, batch.id(), || {
+        lru_get_or_insert(&mut self.origin_cache, self.cache_cap, batch.plan_key(), || {
             let mut origin = vec![0u32; disp.slots()];
             for (slot, &pos) in disp.token_index_map.iter().enumerate() {
                 origin[pos as usize] = slot as u32;
@@ -605,6 +888,115 @@ impl SingleRankEngine {
             Ok(origin)
         })
         .expect("origin derivation is infallible")
+    }
+
+    /// The one backward: parameter grads always, ∂x rows when requested
+    /// (`d_x` adds separate ops only, so grads are bit-identical either
+    /// way — the trait's `backward_into`/`backward_into_dx` contract).
+    fn backward_impl(&mut self, handle: StepHandle, d_out: &[f32],
+                     grads: &mut ExpertGrads,
+                     d_x: Option<&mut [f32]>) -> Result<(), String> {
+        let (d, h) = (self.store.d_model, self.store.d_hidden);
+        if handle.engine_tag != self.engine_tag {
+            return Err("step handle belongs to a different engine".into());
+        }
+        match &self.session {
+            None => return Err("no open step session (forward not called)".into()),
+            Some(s) if s.id != handle.session => {
+                return Err(format!(
+                    "stale step handle: session {} superseded by {}",
+                    handle.session, s.id
+                ));
+            }
+            Some(_) => {}
+        }
+        grads
+            .check_like(self.store.experts.len(), d, h)
+            .map_err(|e| e.to_string())?;
+        // shape checks run BEFORE the session is consumed, so a caller
+        // can fix a bad buffer and retry with the same handle (the
+        // error-before-mutation contract the stack relies on)
+        let l_tokens = self.session.as_ref().unwrap().batch.num_tokens();
+        if d_out.len() != l_tokens * d {
+            return Err(format!(
+                "d_out has {} elements, expected L·d = {}",
+                d_out.len(),
+                l_tokens * d
+            ));
+        }
+        if let Some(dx) = &d_x {
+            if dx.len() != l_tokens * d {
+                return Err(format!(
+                    "d_x has {} elements, expected L·d = {}",
+                    dx.len(),
+                    l_tokens * d
+                ));
+            }
+        }
+        let origin_idx = {
+            let batch = self.session.as_ref().unwrap().batch.share();
+            self.origin_of_pos(&batch)
+        };
+        let st = self.session.take().unwrap();
+        let disp = st.batch.disp();
+        let want_dx = d_x.is_some();
+        let n = disp.slots();
+        let mut dxs = vec![0.0f32; if want_dx { n * d } else { 0 }];
+        let origin = &self.origin_cache[origin_idx].1;
+        let x = st.batch.x();
+        let gates = st.batch.gates();
+        let mut pre_row = vec![0.0f32; h];
+        let mut act_row = vec![0.0f32; h];
+        let mut dz = vec![0.0f32; h];
+        let mut dy = vec![0.0f32; d];
+        for (e, p) in self.store.experts.iter().enumerate() {
+            let g = &mut grads.experts[e];
+            let lo = disp.expert_token_offsets[e] as usize;
+            let hi = disp.expert_token_offsets[e + 1] as usize;
+            for pos in lo..hi {
+                let tok = disp.expert_token_indices[pos] as usize;
+                let gate = gates[origin[pos] as usize];
+                for c in 0..d {
+                    dy[c] = gate * d_out[tok * d + c];
+                }
+                let xrow = match &st.saved {
+                    SavedActs::All { xs, .. } | SavedActs::Inputs { xs } => {
+                        &xs[pos * d..(pos + 1) * d]
+                    }
+                    // re-gather from the shared batch (local, zero comm)
+                    SavedActs::Nothing => &x[tok * d..(tok + 1) * d],
+                };
+                let (pre, act): (&[f32], &[f32]) = match &st.saved {
+                    SavedActs::All { pre, act, .. } => {
+                        (&pre[pos * h..(pos + 1) * h], &act[pos * h..(pos + 1) * h])
+                    }
+                    _ => {
+                        recompute_hidden(p, d, h, xrow, &mut pre_row, &mut act_row);
+                        (&pre_row[..], &act_row[..])
+                    }
+                };
+                let dx_row = if want_dx {
+                    Some(&mut dxs[pos * d..(pos + 1) * d])
+                } else {
+                    None
+                };
+                expert_backward_row(p, g, d, h, xrow, &dy, pre, act, &mut dz,
+                                    dx_row);
+            }
+        }
+        // fold ∂x rows home in expert-major position order (the order
+        // every engine shares — see `fold_dx`)
+        if let Some(dx) = d_x {
+            for pos in 0..n {
+                let t = disp.expert_token_indices[pos] as usize;
+                let row = &dxs[pos * d..(pos + 1) * d];
+                let out = &mut dx[t * d..(t + 1) * d];
+                for c in 0..d {
+                    out[c] += row[c];
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -693,73 +1085,12 @@ impl ExecutionEngine for SingleRankEngine {
 
     fn backward_into(&mut self, handle: StepHandle, d_out: &[f32],
                      grads: &mut ExpertGrads) -> Result<(), String> {
-        let (d, h) = (self.store.d_model, self.store.d_hidden);
-        if handle.engine_tag != self.engine_tag {
-            return Err("step handle belongs to a different engine".into());
-        }
-        match &self.session {
-            None => return Err("no open step session (forward not called)".into()),
-            Some(s) if s.id != handle.session => {
-                return Err(format!(
-                    "stale step handle: session {} superseded by {}",
-                    handle.session, s.id
-                ));
-            }
-            Some(_) => {}
-        }
-        grads
-            .check_like(self.store.experts.len(), d, h)
-            .map_err(|e| e.to_string())?;
-        let origin_idx = {
-            let batch = self.session.as_ref().unwrap().batch.share();
-            self.origin_of_pos(&batch)
-        };
-        let st = self.session.take().unwrap();
-        let disp = st.batch.disp();
-        if d_out.len() != disp.num_tokens * d {
-            return Err(format!(
-                "d_out has {} elements, expected L·d = {}",
-                d_out.len(),
-                disp.num_tokens * d
-            ));
-        }
-        let origin = &self.origin_cache[origin_idx].1;
-        let x = st.batch.x();
-        let gates = st.batch.gates();
-        let mut pre_row = vec![0.0f32; h];
-        let mut act_row = vec![0.0f32; h];
-        let mut dz = vec![0.0f32; h];
-        let mut dy = vec![0.0f32; d];
-        for (e, p) in self.store.experts.iter().enumerate() {
-            let g = &mut grads.experts[e];
-            let lo = disp.expert_token_offsets[e] as usize;
-            let hi = disp.expert_token_offsets[e + 1] as usize;
-            for pos in lo..hi {
-                let tok = disp.expert_token_indices[pos] as usize;
-                let gate = gates[origin[pos] as usize];
-                for c in 0..d {
-                    dy[c] = gate * d_out[tok * d + c];
-                }
-                let xrow = match &st.saved {
-                    SavedActs::All { xs, .. } | SavedActs::Inputs { xs } => {
-                        &xs[pos * d..(pos + 1) * d]
-                    }
-                    // re-gather from the shared batch (local, zero comm)
-                    SavedActs::Nothing => &x[tok * d..(tok + 1) * d],
-                };
-                let (pre, act): (&[f32], &[f32]) = match &st.saved {
-                    SavedActs::All { pre, act, .. } => {
-                        (&pre[pos * h..(pos + 1) * h], &act[pos * h..(pos + 1) * h])
-                    }
-                    _ => {
-                        recompute_hidden(p, d, h, xrow, &mut pre_row, &mut act_row);
-                        (&pre_row[..], &act_row[..])
-                    }
-                };
-                expert_backward_row(p, g, d, h, xrow, &dy, pre, act, &mut dz);
-            }
-        }
-        Ok(())
+        self.backward_impl(handle, d_out, grads, None)
+    }
+
+    fn backward_into_dx(&mut self, handle: StepHandle, d_out: &[f32],
+                        grads: &mut ExpertGrads, d_x: &mut [f32]) -> Result<(), String> {
+        self.backward_impl(handle, d_out, grads, Some(d_x))
     }
 
     fn zero_grads(&self) -> ExpertGrads {
@@ -872,8 +1203,9 @@ pub struct ShardedEngine {
     engine_tag: u64,
     sessions_opened: u64,
     session: Option<ShardedSession>,
-    /// LRU routing-plan cache by batch id, bounded at `plan_cache_cap`
-    plans: Vec<(u64, BatchPlan)>,
+    /// LRU routing-plan cache by (batch id, layer), bounded at
+    /// `plan_cache_cap`
+    plans: Vec<((u64, u32), BatchPlan)>,
     plan_cache_cap: usize,
     traffic: Traffic,
     mem: Vec<MemoryBreakdown>,
@@ -927,13 +1259,13 @@ impl ShardedEngine {
     }
 
     /// Index of the cached routing plan for `batch`, building it on
-    /// first sight of this batch id ([`lru_get_or_insert`] semantics: a
-    /// hit refreshes recency, a miss beyond the cap evicts the
-    /// least-recently-used plan, and an evicted batch is transparently
-    /// re-planned on re-admission).
+    /// first sight of this (batch id, layer) key ([`lru_get_or_insert`]
+    /// semantics: a hit refreshes recency, a miss beyond the cap evicts
+    /// the least-recently-used plan, and an evicted batch is
+    /// transparently re-planned on re-admission).
     fn plan_index(&mut self, batch: &StepBatch) -> Result<usize, String> {
         let topo = &self.topo;
-        lru_get_or_insert(&mut self.plans, self.plan_cache_cap, batch.id(), || {
+        lru_get_or_insert(&mut self.plans, self.plan_cache_cap, batch.plan_key(), || {
             BatchPlan::build(batch.disp(), topo, 0, batch.num_tokens())
         })
     }
@@ -945,7 +1277,227 @@ impl ShardedEngine {
 
     /// Whether `batch`'s routing plan is currently resident in the cache.
     pub fn has_cached_plan(&self, batch: &StepBatch) -> bool {
-        self.plans.iter().any(|(id, _)| *id == batch.id())
+        self.plans.iter().any(|(key, _)| *key == batch.plan_key())
+    }
+
+    /// The one backward: parameter grads always, per-rank ∂x rows
+    /// collected and folded home (global expert-major position order —
+    /// see `fold_dx`) when requested. The ∂x ops touch separate memory,
+    /// so parameter grads are bit-identical either way.
+    fn backward_impl(&mut self, handle: StepHandle, d_out: &[f32],
+                     grads: &mut ExpertGrads,
+                     d_x: Option<&mut [f32]>) -> Result<(), String> {
+        let (d, h) = (self.d_model, self.d_hidden);
+        if handle.engine_tag != self.engine_tag {
+            return Err("step handle belongs to a different engine".into());
+        }
+        match &self.session {
+            None => return Err("no open step session (forward not called)".into()),
+            Some(s) if s.id != handle.session => {
+                return Err(format!(
+                    "stale step handle: session {} superseded by {}",
+                    handle.session, s.id
+                ));
+            }
+            Some(_) => {}
+        }
+        grads
+            .check_like(self.topo.num_experts, d, h)
+            .map_err(|e| e.to_string())?;
+        // shape checks before the session is consumed (see the
+        // single-rank engine for the retryability contract)
+        let l_tokens = self.session.as_ref().unwrap().batch.num_tokens();
+        if d_out.len() != l_tokens * d {
+            return Err(format!(
+                "d_out has {} elements, expected L·d = {}",
+                d_out.len(),
+                l_tokens * d
+            ));
+        }
+        if let Some(dx) = &d_x {
+            if dx.len() != l_tokens * d {
+                return Err(format!(
+                    "d_x has {} elements, expected L·d = {}",
+                    dx.len(),
+                    l_tokens * d
+                ));
+            }
+        }
+        let st = self.session.take().unwrap();
+        let want_dx = d_x.is_some();
+        let r = self.topo.ranks;
+        let workers = self.workers.min(r);
+        // re-resolve by (batch id, layer): still cached in the common
+        // case, and transparently re-planned if many other batches
+        // evicted it between this session's forward and backward
+        let plan_idx = self.plan_index(&st.batch)?;
+        let plan = &self.plans[plan_idx].1;
+        let routes_ref = &plan.routes;
+        let shards_ref = &plan.shards;
+        let gates = st.batch.gates();
+        let x = st.batch.x();
+
+        // backward all-to-all: each home rank packs gated gradient rows
+        // toward the expert ranks (mirror of the fwd dispatch)
+        let dsend: Vec<Vec<Vec<f32>>> = par_map(r, workers, |home| {
+            (0..r)
+                .map(|dst| {
+                    let hops = &routes_ref[dst][home];
+                    let mut buf = Vec::with_capacity(hops.len() * d);
+                    for hop in hops {
+                        let t = hop.token as usize;
+                        let g = gates[hop.origin as usize];
+                        for c in 0..d {
+                            buf.push(g * d_out[t * d + c]);
+                        }
+                    }
+                    buf
+                })
+                .collect()
+        });
+        let mut grad_bytes = 0u64;
+        for home in 0..r {
+            for dst in 0..r {
+                if home != dst {
+                    grad_bytes += (dsend[home][dst].len() * 4) as u64;
+                }
+            }
+        }
+
+        // routed inputs per rank: saved by the policy, or rebuilt by
+        // re-running the dispatch exchange (RecomputeAll)
+        let mut recompute_bytes = 0u64;
+        let (xs_all, hidden_all): (Vec<Vec<f32>>, Vec<Option<(Vec<f32>, Vec<f32>)>>) =
+            match self.policy {
+                CheckpointPolicy::RecomputeAll => {
+                    for (dst, per_src) in routes_ref.iter().enumerate() {
+                        for (src, hops) in per_src.iter().enumerate() {
+                            if src != dst {
+                                recompute_bytes += (hops.len() * d * 4) as u64;
+                            }
+                        }
+                    }
+                    let xs = par_map(r, workers, |dst| {
+                        let n_local = shards_ref[dst].local_slots();
+                        let mut xs = vec![0.0f32; n_local * d];
+                        for per_src in routes_ref[dst].iter() {
+                            for hop in per_src {
+                                let ls = hop.local_slot as usize;
+                                let t = hop.token as usize;
+                                xs[ls * d..(ls + 1) * d]
+                                    .copy_from_slice(&x[t * d..(t + 1) * d]);
+                            }
+                        }
+                        xs
+                    });
+                    (xs, (0..r).map(|_| None).collect())
+                }
+                _ => {
+                    let mut xs_all = Vec::with_capacity(r);
+                    let mut hidden_all = Vec::with_capacity(r);
+                    for sv in st.saved {
+                        match sv {
+                            SavedActs::All { xs, pre, act } => {
+                                xs_all.push(xs);
+                                hidden_all.push(Some((pre, act)));
+                            }
+                            SavedActs::Inputs { xs } => {
+                                xs_all.push(xs);
+                                hidden_all.push(None);
+                            }
+                            SavedActs::Nothing => {
+                                return Err(
+                                    "session saved nothing under a saving policy"
+                                        .into(),
+                                );
+                            }
+                        }
+                    }
+                    (xs_all, hidden_all)
+                }
+            };
+
+        // per-rank gradient accumulation into the caller's accumulator:
+        // move each expert's accumulator into its owning rank's work
+        // item (plus a per-local-slot ∂x buffer when requested), let one
+        // worker per rank extend it in segment order, reassemble
+        let assignment = self.topo.assignment();
+        let mut work: Vec<RankBwdWork> = (0..r)
+            .map(|dst| RankBwdWork {
+                bucket: Vec::new(),
+                dxs: vec![0.0f32; if want_dx {
+                    shards_ref[dst].local_slots() * d
+                } else {
+                    0
+                }],
+            })
+            .collect();
+        for (e, g) in grads.experts.drain(..).enumerate() {
+            work[assignment.rank_of[e] as usize].bucket.push((e, g));
+        }
+        let dsend_ref = &dsend;
+        let xs_ref = &xs_all;
+        let hidden_ref = &hidden_all;
+        scope_chunks(&mut work, 1, workers, |dst, chunk| {
+            let RankBwdWork { bucket, dxs } = &mut chunk[0];
+            let s = &shards_ref[dst];
+            let n_local = s.local_slots();
+            let mut dys = vec![0.0f32; n_local * d];
+            for (src, bufs) in dsend_ref.iter().enumerate() {
+                for (i, hop) in routes_ref[dst][src].iter().enumerate() {
+                    let ls = hop.local_slot as usize;
+                    dys[ls * d..(ls + 1) * d]
+                        .copy_from_slice(&bufs[dst][i * d..(i + 1) * d]);
+                }
+            }
+            let xs = &xs_ref[dst];
+            let mut pre_row = vec![0.0f32; h];
+            let mut act_row = vec![0.0f32; h];
+            let mut dz = vec![0.0f32; h];
+            for (i, (e, g)) in bucket.iter_mut().enumerate() {
+                debug_assert_eq!(*e as u32, s.experts[i]);
+                let p = &self.rank_params[dst].experts[i].1;
+                let lo = s.expert_token_offsets[i] as usize;
+                let hi = s.expert_token_offsets[i + 1] as usize;
+                for ls in lo..hi {
+                    let xrow = &xs[ls * d..(ls + 1) * d];
+                    let dy = &dys[ls * d..(ls + 1) * d];
+                    let (pre, act): (&[f32], &[f32]) = match &hidden_ref[dst] {
+                        Some((pre, act)) => (&pre[ls * h..(ls + 1) * h],
+                                             &act[ls * h..(ls + 1) * h]),
+                        None => {
+                            recompute_hidden(p, d, h, xrow, &mut pre_row, &mut act_row);
+                            (&pre_row[..], &act_row[..])
+                        }
+                    };
+                    let dx_row = if want_dx {
+                        Some(&mut dxs[ls * d..(ls + 1) * d])
+                    } else {
+                        None
+                    };
+                    expert_backward_row(p, g, d, h, xrow, dy, pre, act, &mut dz,
+                                        dx_row);
+                }
+            }
+        });
+        if let Some(dx) = d_x {
+            fold_dx(shards_ref, &work, d, self.topo.num_experts, 0, dx);
+        }
+        let mut dense: Vec<Option<ExpertParams>> =
+            (0..self.topo.num_experts).map(|_| None).collect();
+        for w in work {
+            for (e, g) in w.bucket {
+                dense[e] = Some(g);
+            }
+        }
+        grads.experts = dense
+            .into_iter()
+            .enumerate()
+            .map(|(e, g)| g.ok_or_else(|| format!("expert {e} grads lost")))
+            .collect::<Result<Vec<_>, String>>()?;
+        self.traffic.grad_bytes += grad_bytes;
+        self.traffic.recompute_bytes += recompute_bytes;
+        Ok(())
     }
 }
 
@@ -1046,188 +1598,14 @@ impl ExecutionEngine for ShardedEngine {
 
     fn backward_into(&mut self, handle: StepHandle, d_out: &[f32],
                      grads: &mut ExpertGrads) -> Result<(), String> {
-        let (d, h) = (self.d_model, self.d_hidden);
-        if handle.engine_tag != self.engine_tag {
-            return Err("step handle belongs to a different engine".into());
-        }
-        match &self.session {
-            None => return Err("no open step session (forward not called)".into()),
-            Some(s) if s.id != handle.session => {
-                return Err(format!(
-                    "stale step handle: session {} superseded by {}",
-                    handle.session, s.id
-                ));
-            }
-            Some(_) => {}
-        }
-        grads
-            .check_like(self.topo.num_experts, d, h)
-            .map_err(|e| e.to_string())?;
-        let st = self.session.take().unwrap();
-        let disp = st.batch.disp();
-        if d_out.len() != disp.num_tokens * d {
-            return Err(format!(
-                "d_out has {} elements, expected L·d = {}",
-                d_out.len(),
-                disp.num_tokens * d
-            ));
-        }
-        let r = self.topo.ranks;
-        let workers = self.workers.min(r);
-        // re-resolve by batch id: still cached in the common case, and
-        // transparently re-planned if many other batches evicted it
-        // between this session's forward and backward
-        let plan_idx = self.plan_index(&st.batch)?;
-        let plan = &self.plans[plan_idx].1;
-        let routes_ref = &plan.routes;
-        let shards_ref = &plan.shards;
-        let gates = st.batch.gates();
-        let x = st.batch.x();
-
-        // backward all-to-all: each home rank packs gated gradient rows
-        // toward the expert ranks (mirror of the fwd dispatch)
-        let dsend: Vec<Vec<Vec<f32>>> = par_map(r, workers, |home| {
-            (0..r)
-                .map(|dst| {
-                    let hops = &routes_ref[dst][home];
-                    let mut buf = Vec::with_capacity(hops.len() * d);
-                    for hop in hops {
-                        let t = hop.token as usize;
-                        let g = gates[hop.origin as usize];
-                        for c in 0..d {
-                            buf.push(g * d_out[t * d + c]);
-                        }
-                    }
-                    buf
-                })
-                .collect()
-        });
-        let mut grad_bytes = 0u64;
-        for home in 0..r {
-            for dst in 0..r {
-                if home != dst {
-                    grad_bytes += (dsend[home][dst].len() * 4) as u64;
-                }
-            }
-        }
-
-        // routed inputs per rank: saved by the policy, or rebuilt by
-        // re-running the dispatch exchange (RecomputeAll)
-        let mut recompute_bytes = 0u64;
-        let (xs_all, hidden_all): (Vec<Vec<f32>>, Vec<Option<(Vec<f32>, Vec<f32>)>>) =
-            match self.policy {
-                CheckpointPolicy::RecomputeAll => {
-                    for (dst, per_src) in routes_ref.iter().enumerate() {
-                        for (src, hops) in per_src.iter().enumerate() {
-                            if src != dst {
-                                recompute_bytes += (hops.len() * d * 4) as u64;
-                            }
-                        }
-                    }
-                    let xs = par_map(r, workers, |dst| {
-                        let n_local = shards_ref[dst].local_slots();
-                        let mut xs = vec![0.0f32; n_local * d];
-                        for per_src in routes_ref[dst].iter() {
-                            for hop in per_src {
-                                let ls = hop.local_slot as usize;
-                                let t = hop.token as usize;
-                                xs[ls * d..(ls + 1) * d]
-                                    .copy_from_slice(&x[t * d..(t + 1) * d]);
-                            }
-                        }
-                        xs
-                    });
-                    (xs, (0..r).map(|_| None).collect())
-                }
-                _ => {
-                    let mut xs_all = Vec::with_capacity(r);
-                    let mut hidden_all = Vec::with_capacity(r);
-                    for sv in st.saved {
-                        match sv {
-                            SavedActs::All { xs, pre, act } => {
-                                xs_all.push(xs);
-                                hidden_all.push(Some((pre, act)));
-                            }
-                            SavedActs::Inputs { xs } => {
-                                xs_all.push(xs);
-                                hidden_all.push(None);
-                            }
-                            SavedActs::Nothing => {
-                                return Err(
-                                    "session saved nothing under a saving policy"
-                                        .into(),
-                                );
-                            }
-                        }
-                    }
-                    (xs_all, hidden_all)
-                }
-            };
-
-        // per-rank gradient accumulation into the caller's accumulator:
-        // move each expert's accumulator into its owning rank's bucket,
-        // let one worker per rank extend it in segment order, reassemble
-        let assignment = self.topo.assignment();
-        let mut buckets: Vec<Vec<(usize, ExpertParams)>> =
-            (0..r).map(|_| Vec::new()).collect();
-        for (e, g) in grads.experts.drain(..).enumerate() {
-            buckets[assignment.rank_of[e] as usize].push((e, g));
-        }
-        let dsend_ref = &dsend;
-        let xs_ref = &xs_all;
-        let hidden_ref = &hidden_all;
-        scope_chunks(&mut buckets, 1, workers, |dst, chunk| {
-            let bucket = &mut chunk[0];
-            let s = &shards_ref[dst];
-            let n_local = s.local_slots();
-            let mut dys = vec![0.0f32; n_local * d];
-            for (src, bufs) in dsend_ref.iter().enumerate() {
-                for (i, hop) in routes_ref[dst][src].iter().enumerate() {
-                    let ls = hop.local_slot as usize;
-                    dys[ls * d..(ls + 1) * d]
-                        .copy_from_slice(&bufs[dst][i * d..(i + 1) * d]);
-                }
-            }
-            let xs = &xs_ref[dst];
-            let mut pre_row = vec![0.0f32; h];
-            let mut act_row = vec![0.0f32; h];
-            let mut dz = vec![0.0f32; h];
-            for (i, (e, g)) in bucket.iter_mut().enumerate() {
-                debug_assert_eq!(*e as u32, s.experts[i]);
-                let p = &self.rank_params[dst].experts[i].1;
-                let lo = s.expert_token_offsets[i] as usize;
-                let hi = s.expert_token_offsets[i + 1] as usize;
-                for ls in lo..hi {
-                    let xrow = &xs[ls * d..(ls + 1) * d];
-                    let dy = &dys[ls * d..(ls + 1) * d];
-                    let (pre, act): (&[f32], &[f32]) = match &hidden_ref[dst] {
-                        Some((pre, act)) => (&pre[ls * h..(ls + 1) * h],
-                                             &act[ls * h..(ls + 1) * h]),
-                        None => {
-                            recompute_hidden(p, d, h, xrow, &mut pre_row, &mut act_row);
-                            (&pre_row[..], &act_row[..])
-                        }
-                    };
-                    expert_backward_row(p, g, d, h, xrow, dy, pre, act, &mut dz);
-                }
-            }
-        });
-        let mut dense: Vec<Option<ExpertParams>> =
-            (0..self.topo.num_experts).map(|_| None).collect();
-        for bucket in buckets {
-            for (e, g) in bucket {
-                dense[e] = Some(g);
-            }
-        }
-        grads.experts = dense
-            .into_iter()
-            .enumerate()
-            .map(|(e, g)| g.ok_or_else(|| format!("expert {e} grads lost")))
-            .collect::<Result<Vec<_>, String>>()?;
-        self.traffic.grad_bytes += grad_bytes;
-        self.traffic.recompute_bytes += recompute_bytes;
-        Ok(())
+        self.backward_impl(handle, d_out, grads, None)
     }
+
+    fn backward_into_dx(&mut self, handle: StepHandle, d_out: &[f32],
+                        grads: &mut ExpertGrads, d_x: &mut [f32]) -> Result<(), String> {
+        self.backward_impl(handle, d_out, grads, Some(d_x))
+    }
+
 
     fn zero_grads(&self) -> ExpertGrads {
         ExpertGrads::zeros(self.topo.num_experts, self.d_model, self.d_hidden)
@@ -1291,9 +1669,10 @@ pub fn routing_from_config(cfg: &EpConfig) -> DispatchStructures {
     config_gating(cfg, &mut rng).0
 }
 
-/// The shared gating draw both config entry points start from — one
-/// definition, so the routing they see can never drift apart.
-fn config_gating(cfg: &EpConfig, rng: &mut Rng) -> (DispatchStructures, Vec<f32>) {
+/// The shared gating draw every config entry point starts from — one
+/// definition (also behind the stack's per-layer draws), so the routing
+/// they see can never drift apart.
+pub(crate) fn config_gating(cfg: &EpConfig, rng: &mut Rng) -> (DispatchStructures, Vec<f32>) {
     let (l, e, k) = (cfg.tokens, cfg.num_experts, cfg.top_k);
     let gating = synthetic_gating(rng, l, e, k, cfg.skew);
     let disp = parallel_build(&gating.topk_ids, l, e, k);
@@ -1324,18 +1703,18 @@ pub fn topology_from_config(cfg: &EpConfig, ranks: usize) -> Result<EpTopology, 
     }
 }
 
-/// Build the engine an `[ep]` config describes. With
+/// One MoE layer's engine for `cfg`, over a caller-provided expert
+/// store and checkpoint policy — the per-layer builder
+/// `coordinator::stack` assembles multi-layer stacks from. With
 /// `pipeline_chunks = 0` (the default): R = 1 gives the single-rank
 /// path, R > 1 the barrier-phased sharded one (one worker per rank).
 /// With `pipeline_chunks > 0` the chunk-pipelined engine is built for
 /// any R, overlapping each chunk's dispatch exchange with the previous
-/// chunk's expert compute under the config's link/compute cost model.
-/// All paths run the config's checkpoint policy, and the expert
-/// parameters are initialized from `cfg.seed`, so any two engines built
-/// from the same config hold bit-identical weights.
-pub fn engine_from_config(cfg: &EpConfig) -> Result<Box<dyn ExecutionEngine>, String> {
-    cfg.validate()?;
-    let store = ExpertStore::init(cfg.num_experts, cfg.d_model, cfg.d_hidden, cfg.seed);
+/// chunk's expert compute under the config's link/compute cost model
+/// and the config's chunk-boundary balance.
+pub fn layer_engine_from_config(cfg: &EpConfig, store: ExpertStore,
+                                policy: CheckpointPolicy)
+                                -> Result<Box<dyn ExecutionEngine>, String> {
     // the trainer cycles grad_accum microbatches every step — LRU's
     // worst-case access pattern — so the plan cache must hold them all
     let cache_cap = PLAN_CACHE_CAP.max(cfg.grad_accum);
@@ -1343,20 +1722,37 @@ pub fn engine_from_config(cfg: &EpConfig) -> Result<Box<dyn ExecutionEngine>, St
         let topo = topology_from_config(cfg, cfg.ranks)?;
         let cost = CostModel::new(cfg.link_gbps, cfg.compute_gflops)?;
         let mut engine = PipelinedEngine::with_policy(
-            topo, &store, cfg.ranks, cfg.checkpoint, cfg.pipeline_chunks, cost)?;
+            topo, &store, cfg.ranks, policy, cfg.pipeline_chunks, cost)?;
         engine.set_plan_cache_cap(cache_cap);
+        engine.set_chunk_balance(cfg.chunk_balance);
         return Ok(Box::new(engine));
     }
     if cfg.ranks == 1 {
-        let mut engine = SingleRankEngine::with_policy(store, cfg.checkpoint);
+        let mut engine = SingleRankEngine::with_policy(store, policy);
         engine.set_plan_cache_cap(cache_cap);
         Ok(Box::new(engine))
     } else {
         let topo = topology_from_config(cfg, cfg.ranks)?;
-        let mut engine = ShardedEngine::with_policy(topo, &store, cfg.ranks, cfg.checkpoint)?;
+        let mut engine = ShardedEngine::with_policy(topo, &store, cfg.ranks, policy)?;
         engine.set_plan_cache_cap(cache_cap);
         Ok(Box::new(engine))
     }
+}
+
+/// Build the engine an `[ep]` config describes: the single-layer engine
+/// ([`layer_engine_from_config`] over a `cfg.seed` store) for
+/// `num_layers = 1` with a fixed policy, or a
+/// `coordinator::stack::MoeStack` when the config stacks layers or asks
+/// the planner for a per-layer policy vector (`checkpoint = "auto"`).
+/// Expert parameters are initialized from `cfg.seed` either way, so any
+/// two engines built from the same config hold bit-identical weights.
+pub fn engine_from_config(cfg: &EpConfig) -> Result<Box<dyn ExecutionEngine>, String> {
+    cfg.validate()?;
+    if cfg.num_layers > 1 || cfg.checkpoint_auto {
+        return Ok(Box::new(super::stack::stack_from_config(cfg)?));
+    }
+    let store = ExpertStore::init(cfg.num_experts, cfg.d_model, cfg.d_hidden, cfg.seed);
+    layer_engine_from_config(cfg, store, cfg.checkpoint)
 }
 
 // -- equivalence harness ----------------------------------------------------
@@ -1799,5 +2195,175 @@ mod tests {
         }
         assert!(batch.split(0).is_err());
         assert!(batch.split(31).is_err());
+        // split stamps the offset the stack needs for routing slices,
+        // and a deep copy keeps it (fresh id, same span)
+        for (off, mb) in batch.split(3).unwrap() {
+            assert_eq!(mb.token_offset(), off);
+            let copy = mb.deep_copy().unwrap();
+            assert_eq!(copy.token_offset(), off, "deep copy dropped the offset");
+            assert_ne!(copy.id(), mb.id());
+            // re-splitting chains offsets to stay root-absolute
+            for (off2, gc) in mb.split(2).unwrap() {
+                assert_eq!(gc.token_offset(), off + off2,
+                           "grandchild offset not absolute");
+            }
+        }
+        assert_eq!(batch.token_offset(), 0);
+    }
+
+    #[test]
+    fn weighted_split_bounds_balance_heavy_prefixes() {
+        // first half of the tokens carries 9x the weight: a 2-way cut
+        // must land well before the midpoint
+        let mut w = vec![9u64; 8];
+        w.extend(vec![1u64; 8]);
+        let bounds = split_bounds_weighted(&w, 2).unwrap();
+        assert_eq!(bounds.len(), 3);
+        assert_eq!((bounds[0], bounds[2]), (0, 16));
+        assert!(bounds[1] < 8, "heavy prefix not balanced: {bounds:?}");
+        // every chunk keeps at least one token even under degenerate
+        // weights concentrated on one token
+        let mut spike = vec![0u64; 10];
+        spike[0] = 100;
+        let b = split_bounds_weighted(&spike, 4).unwrap();
+        assert_eq!(b.len(), 5);
+        assert!(b.windows(2).all(|w| w[0] < w[1]), "{b:?}");
+        // all-zero weights degrade to the even token split
+        assert_eq!(split_bounds_weighted(&[0; 8], 4).unwrap(), vec![0, 2, 4, 6, 8]);
+        assert!(split_bounds_weighted(&[1; 4], 5).is_err());
+        assert!(split_bounds_weighted(&[1; 4], 0).is_err());
+    }
+
+    #[test]
+    fn split_routing_at_validates_and_covers() {
+        let batch = workload(20, 4, 2, 6, 0.5, 14);
+        let parts = batch.split_routing_at(&[0, 3, 11, 20]).unwrap();
+        assert_eq!(parts.len(), 3);
+        let mut covered = 0;
+        for (off, disp) in &parts {
+            assert_eq!(*off, covered);
+            covered += disp.num_tokens;
+            disp.validate().unwrap();
+        }
+        assert_eq!(covered, 20);
+        assert!(batch.split_routing_at(&[0, 20]).is_ok());
+        assert!(batch.split_routing_at(&[0, 5, 5, 20]).is_err());
+        assert!(batch.split_routing_at(&[1, 20]).is_err());
+        assert!(batch.split_routing_at(&[0, 19]).is_err());
+    }
+
+    #[test]
+    fn layer_routing_bind_shares_id_and_layer_tags_plan_keys() {
+        let batch = workload(16, 4, 2, 6, 0.4, 15);
+        let other = workload(16, 4, 2, 6, 0.9, 16);
+        let routing = LayerRouting::new(
+            1, other.disp().clone(), other.gates().to_vec()).unwrap();
+        assert_eq!(routing.num_tokens(), 16);
+        let bound = routing.bind(&batch, vec![0.5f32; 16 * 6]).unwrap();
+        assert_eq!(bound.id(), batch.id(), "bound batch must reuse the id");
+        assert_eq!(bound.layer(), 1);
+        assert_ne!(bound.plan_key(), batch.plan_key(),
+                   "same id, different layer must be distinct plan keys");
+        assert_eq!(bound.disp(), other.disp());
+        assert_eq!(batch.copy_count(), 0, "bind must not deep-copy");
+        // validation
+        assert!(LayerRouting::new(0, other.disp().clone(),
+                                  other.gates().to_vec()).is_err());
+        assert!(LayerRouting::new(1, other.disp().clone(), vec![0.0; 3]).is_err());
+        assert!(routing.bind(&batch, vec![0.0; 7]).is_err());
+        let short = workload(8, 4, 2, 6, 0.4, 17);
+        assert!(routing.bind(&short, vec![0.0; 8 * 6]).is_err());
+    }
+
+    #[test]
+    fn plan_cache_keys_by_batch_and_layer() {
+        // one batch id, L derived routings: the engine must hold L
+        // distinct plans and keep answering each layer correctly
+        let store = ExpertStore::init(4, 6, 8, 31);
+        let topo = EpTopology::new(2, 4).unwrap();
+        let mut eng = ShardedEngine::new(topo, &store, 2).unwrap();
+        let batch = workload(20, 4, 2, 6, 0.5, 900);
+        let layers: Vec<StepBatch> = (1..4u32)
+            .map(|l| {
+                let alt = workload(20, 4, 2, 6, 0.5, 900 + l as u64);
+                let routing = LayerRouting::new(
+                    l, alt.disp().clone(), alt.gates().to_vec()).unwrap();
+                routing.bind(&batch, batch.x().to_vec()).unwrap()
+            })
+            .collect();
+        let mut single = SingleRankEngine::new(store.clone());
+        let _ = eng.forward(&batch).unwrap();
+        for lb in &layers {
+            let out = eng.forward(lb).unwrap().into_output();
+            let reference = single.forward(lb).unwrap().into_output();
+            assert_eq!(out, reference, "layer batch diverged from R=1");
+        }
+        assert_eq!(eng.cached_plans(), 4,
+                   "one id + 3 layers must occupy 4 cache slots");
+        assert!(eng.has_cached_plan(&batch));
+        for lb in &layers {
+            assert!(eng.has_cached_plan(lb));
+        }
+        // eviction still works over the (id, layer) working set
+        eng.set_plan_cache_cap(2);
+        assert_eq!(eng.cached_plans(), 2);
+        assert!(!eng.has_cached_plan(&batch), "LRU entry should evict first");
+        let again = eng.forward(&batch).unwrap().into_output();
+        let reference = single.forward(&batch).unwrap().into_output();
+        assert_eq!(again, reference, "re-admitted layer-0 plan diverged");
+    }
+
+    #[test]
+    fn backward_dx_matches_across_engines_and_leaves_grads_bit_identical() {
+        let batch = workload(48, 8, 2, 10, 0.8, 41);
+        let store = ExpertStore::init(8, 10, 14, 6);
+        let d_out: Vec<f32> = {
+            let mut rng = Rng::new(8);
+            rng.normal_vec(48 * 10, 1.0)
+        };
+        let mut reference_dx: Option<Vec<f32>> = None;
+        let mut reference_grads: Option<ExpertGrads> = None;
+        for policy in CheckpointPolicy::ALL {
+            for ranks in [1usize, 2, 4] {
+                let topo = EpTopology::new(ranks, 8).unwrap();
+                let mut eng: Box<dyn ExecutionEngine> = if ranks == 1 {
+                    Box::new(SingleRankEngine::with_policy(store.clone(), policy))
+                } else {
+                    Box::new(
+                        ShardedEngine::with_policy(topo, &store, ranks, policy)
+                            .unwrap(),
+                    )
+                };
+                // grads without dx…
+                let h = eng.forward(&batch).unwrap();
+                let mut plain = eng.zero_grads();
+                eng.backward_into(h, &d_out, &mut plain).unwrap();
+                // …must equal grads with dx, bit for bit
+                let h = eng.forward(&batch).unwrap();
+                let mut with_dx = eng.zero_grads();
+                let mut dx = vec![0.0f32; 48 * 10];
+                eng.backward_into_dx(h, &d_out, &mut with_dx, &mut dx).unwrap();
+                assert_eq!(plain, with_dx,
+                           "R={ranks} {policy}: dx request changed grads");
+                assert!(dx.iter().any(|&v| v != 0.0), "dx all zero");
+                match (&reference_dx, &reference_grads) {
+                    (Some(rdx), Some(rg)) => {
+                        assert_eq!(&dx, rdx, "R={ranks} {policy}: dx diverged");
+                        assert_eq!(&with_dx, rg,
+                                   "R={ranks} {policy}: grads diverged");
+                    }
+                    _ => {
+                        reference_dx = Some(dx);
+                        reference_grads = Some(with_dx);
+                    }
+                }
+            }
+        }
+        // shape validation
+        let mut eng = SingleRankEngine::new(store);
+        let h = eng.forward(&batch).unwrap();
+        let mut g = eng.zero_grads();
+        let mut short = vec![0.0f32; 5];
+        assert!(eng.backward_into_dx(h, &d_out, &mut g, &mut short).is_err());
     }
 }

@@ -15,6 +15,11 @@
 //! and `pipeline::PipelinedEngine` streams K token-contiguous chunks
 //! through the same exchange with the dispatch overlap running off the
 //! critical path (plus a simulated phase-timeline `OverlapReport`).
+//! `stack::MoeStack` chains L such engines into a multi-layer MoE model
+//! behind the same trait — forward bottom-up, backward in reverse with
+//! ∂x chaining — with per-layer checkpoint policies chosen by the
+//! budget-driven `memory::planner::CheckpointPlanner` under
+//! `[ep] checkpoint = "auto"`.
 //!
 //! [`ExecutionEngine`]: engine::ExecutionEngine
 //! [`StepBatch`]: engine::StepBatch
@@ -26,15 +31,22 @@ pub mod expert_parallel;
 pub mod optim;
 pub mod params;
 pub mod pipeline;
+pub mod stack;
 pub mod trainer;
 
-pub use engine::{check_equivalence, engine_from_config, step_batch_from_config,
+pub use engine::{check_equivalence, engine_from_config, layer_engine_from_config,
+                 split_bounds_weighted, step_batch_from_config,
                  topology_from_config, workload_from_config, ExecutionEngine,
-                 ShardedEngine, SingleRankEngine, StepBatch, StepHandle, Traffic};
+                 LayerRouting, ShardedEngine, SingleRankEngine, StepBatch,
+                 StepHandle, Traffic};
 pub use expert_parallel::{AllToAllPlan, EpTopology};
 pub use optim::{clip_global_norm, optimizer_from_name, Adam, LrSchedule,
                 Optimizer, Sgd};
 pub use params::{ExpertGrads, ExpertStore, ParamStore, RankExperts};
-pub use pipeline::timeline::{CostModel, OverlapReport, Phase, PhaseSpan};
+pub use pipeline::timeline::{CostModel, OverlapReport, Phase, PhaseCalibration,
+                             PhaseSpan};
 pub use pipeline::PipelinedEngine;
+pub use stack::{layer_gating_from_config, layer_routing_from_config,
+                plan_from_config, stack_from_config, stack_policies_from_config,
+                stack_with_plan, MoeStack};
 pub use trainer::{EpTrainReport, EpTrainer, TrainReport, Trainer};

@@ -242,6 +242,22 @@ impl ExpertStore {
             .collect()
     }
 
+    /// Concatenate per-layer stores into one flat store, layer-major
+    /// (layer l's expert e sits at global id `l·E + e`) — the view a
+    /// multi-layer stack's `gather_params` exposes.
+    pub fn concat(layers: &[ExpertStore]) -> std::result::Result<ExpertStore, String> {
+        let first = layers.first().ok_or("concat needs at least one store")?;
+        let (d, h) = (first.d_model, first.d_hidden);
+        let mut experts = Vec::new();
+        for s in layers {
+            if (s.d_model, s.d_hidden) != (d, h) {
+                return Err("layer stores disagree on expert dimensions".into());
+            }
+            experts.extend(s.experts.iter().cloned());
+        }
+        Ok(ExpertStore { d_model: d, d_hidden: h, experts })
+    }
+
     /// Reassemble the global store from per-rank ownership (inverse of
     /// [`shard`](ExpertStore::shard)).
     pub fn gather(shards: &[RankExperts], num_experts: usize)
@@ -348,6 +364,40 @@ impl ExpertGrads {
                     *v *= s;
                 }
             }
+        }
+    }
+
+    /// Move layer `layer`'s segment (`per_layer` experts, layer-major
+    /// ids) out into its own accumulator, leaving zero-sized
+    /// placeholders. The stack's reverse walk hands each layer engine
+    /// exactly its segment — continuing whatever that segment already
+    /// held, so grad-accum order is untouched — and puts it back with
+    /// [`restore_layer`](ExpertGrads::restore_layer).
+    pub fn take_layer(&mut self, layer: usize, per_layer: usize) -> ExpertGrads {
+        let base = layer * per_layer;
+        let experts = self.experts[base..base + per_layer]
+            .iter_mut()
+            .map(|g| std::mem::replace(g, ExpertParams::zeros(0, 0)))
+            .collect();
+        ExpertGrads { d_model: self.d_model, d_hidden: self.d_hidden, experts }
+    }
+
+    /// Inverse of [`take_layer`](ExpertGrads::take_layer).
+    pub fn restore_layer(&mut self, layer: usize, seg: ExpertGrads) {
+        let base = layer * seg.experts.len();
+        for (i, g) in seg.experts.into_iter().enumerate() {
+            self.experts[base + i] = g;
+        }
+    }
+
+    /// Clone layer `layer`'s segment (`per_layer` experts) as its own
+    /// value — what the stack feeds each layer engine's `apply_update`.
+    pub fn layer_slice(&self, layer: usize, per_layer: usize) -> ExpertGrads {
+        let base = layer * per_layer;
+        ExpertGrads {
+            d_model: self.d_model,
+            d_hidden: self.d_hidden,
+            experts: self.experts[base..base + per_layer].to_vec(),
         }
     }
 
@@ -487,6 +537,35 @@ mod tests {
         assert!((g.l2_norm() - 5.0).abs() < 1e-12);
         g.clear();
         assert_eq!(g.l2_norm(), 0.0);
+    }
+
+    #[test]
+    fn expert_grads_layer_segments_roundtrip() {
+        let mut g = ExpertGrads::zeros(6, 4, 8); // 3 layers × 2 experts
+        g.experts[2].w1[0] = 7.0; // layer 1, expert 0
+        g.experts[5].b2[0] = 3.0; // layer 2, expert 1
+        let seg = g.layer_slice(1, 2);
+        assert_eq!(seg.experts.len(), 2);
+        assert_eq!(seg.experts[0].w1[0], 7.0);
+        let taken = g.take_layer(2, 2);
+        assert_eq!(taken.experts[1].b2[0], 3.0);
+        assert!(g.experts[4].w1.is_empty(), "placeholder left behind");
+        g.restore_layer(2, taken);
+        assert_eq!(g.experts[5].b2[0], 3.0);
+        assert_eq!(g.num_experts(), 6);
+    }
+
+    #[test]
+    fn expert_store_concat_is_layer_major() {
+        let a = ExpertStore::init(2, 4, 8, 1);
+        let b = ExpertStore::init(2, 4, 8, 2);
+        let cat = ExpertStore::concat(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(cat.experts.len(), 4);
+        assert_eq!(cat.experts[1], a.experts[1]);
+        assert_eq!(cat.experts[2], b.experts[0]);
+        let bad = ExpertStore::init(2, 6, 8, 3);
+        assert!(ExpertStore::concat(&[a, bad]).is_err());
+        assert!(ExpertStore::concat(&[]).is_err());
     }
 
     #[test]

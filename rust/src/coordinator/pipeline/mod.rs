@@ -66,16 +66,19 @@
 pub mod timeline;
 
 use std::mem;
+use std::time::Instant;
 
+use crate::config::ep::ChunkBalance;
 use crate::memory::model::{pipeline_window_bytes, CheckpointPolicy, MemoryBreakdown};
 use crate::util::threadpool::{par_map, scope_chunks};
 
 use self::timeline::{bwd_flops_per_row, fwd_flops_per_row, CostModel, OverlapReport,
                      Phase, TimelineBuilder};
 use super::engine::{add_params, check_batch, expert_backward_row, expert_forward,
-                    expert_forward_saving, lru_get_or_insert, next_engine_tag,
-                    recompute_hidden, BatchPlan, ExecutionEngine, SavedActs,
-                    StepBatch, StepHandle, Traffic, PLAN_CACHE_CAP};
+                    expert_forward_saving, fold_dx, lru_get_or_insert,
+                    next_engine_tag, recompute_hidden, split_bounds_weighted,
+                    BatchPlan, ExecutionEngine, RankBwdWork, SavedActs, StepBatch,
+                    StepHandle, Traffic, PLAN_CACHE_CAP};
 use super::expert_parallel::EpTopology;
 use super::params::{ExpertGrads, ExpertParams, ExpertStore, RankExperts};
 
@@ -110,12 +113,16 @@ pub struct PipelinedEngine {
     policy: CheckpointPolicy,
     /// requested chunk count (clamped to the batch's token count)
     chunks: usize,
+    /// how chunk boundaries are chosen: even token counts, or balanced
+    /// by routed-row load so a skewed router stops making ragged chunks
+    balance: ChunkBalance,
     cost: CostModel,
     engine_tag: u64,
     sessions_opened: u64,
     session: Option<PipeSession>,
-    /// LRU chunk-plan cache by batch id, bounded at `plan_cache_cap`
-    plans: Vec<(u64, Vec<ChunkPlan>)>,
+    /// LRU chunk-plan cache by (batch id, layer), bounded at
+    /// `plan_cache_cap`
+    plans: Vec<((u64, u32), Vec<ChunkPlan>)>,
     plan_cache_cap: usize,
     traffic: Traffic,
     mem: Vec<MemoryBreakdown>,
@@ -153,6 +160,7 @@ impl PipelinedEngine {
             workers: workers.max(1),
             policy,
             chunks,
+            balance: ChunkBalance::Tokens,
             cost,
             engine_tag: next_engine_tag(),
             sessions_opened: 0,
@@ -181,6 +189,27 @@ impl PipelinedEngine {
         }
     }
 
+    /// Switch the chunk-boundary policy (`[ep] chunk_balance`). Tokens
+    /// (the default) cuts even token counts; Rows balances the summed
+    /// routed-row *load* of each chunk — every token is weighted by the
+    /// total routed rows of the experts it feeds, so tokens bound for
+    /// hot experts spread across more, smaller chunks and the per-chunk
+    /// busiest-rank load evens out. Any contiguous partition keeps the
+    /// token-residency invariant (summed chunk traffic == the
+    /// whole-batch plan), so outputs stay bit-identical. Cached plans
+    /// are cleared: they encode the old boundaries.
+    pub fn set_chunk_balance(&mut self, balance: ChunkBalance) {
+        if self.balance != balance {
+            self.balance = balance;
+            self.plans.clear();
+            // an open session saved per-chunk activations sized to the
+            // OLD bounds; its backward would re-plan with the new ones
+            // and pair wrong (or wrong-sized) tensors. Drop it —
+            // outstanding handles fail cleanly with "no open session".
+            self.session = None;
+        }
+    }
+
     /// Index of the cached chunk plans for `batch`, splitting the
     /// routing and planning each chunk on first sight
     /// ([`lru_get_or_insert`] semantics, as the barrier engine).
@@ -188,9 +217,28 @@ impl PipelinedEngine {
         let topo = &self.topo;
         let l = batch.num_tokens();
         let kc = self.chunks.min(l);
-        lru_get_or_insert(&mut self.plans, self.plan_cache_cap, batch.id(), || {
-            batch
-                .split_routing(kc)?
+        let balance = self.balance;
+        lru_get_or_insert(&mut self.plans, self.plan_cache_cap, batch.plan_key(), || {
+            let parts = match balance {
+                ChunkBalance::Tokens => batch.split_routing(kc)?,
+                ChunkBalance::Rows => {
+                    let disp = batch.disp();
+                    let loads: Vec<u64> = (0..disp.num_experts)
+                        .map(|e| disp.expert_len(e) as u64)
+                        .collect();
+                    let weights: Vec<u64> = (0..l)
+                        .map(|t| {
+                            disp.token_experts(t)
+                                .iter()
+                                .map(|&e| loads[e as usize])
+                                .sum()
+                        })
+                        .collect();
+                    let bounds = split_bounds_weighted(&weights, kc)?;
+                    batch.split_routing_at(&bounds)?
+                }
+            };
+            parts
                 .into_iter()
                 .map(|(t0, disp)| {
                     let plan = BatchPlan::build(&disp, topo, t0, l)?;
@@ -198,6 +246,296 @@ impl PipelinedEngine {
                 })
                 .collect()
         })
+    }
+
+    /// The one backward: chunk m+1's gradient exchange (and
+    /// `RecomputeAll` re-gather) packs while chunk m's accumulation
+    /// runs; per-chunk ∂x rows are folded home in ascending chunk order
+    /// (each chunk in global expert-major position order — `fold_dx`),
+    /// which is the unchunked accumulation sequence per token. Parameter
+    /// grads are bit-identical whether or not ∂x is requested.
+    fn backward_impl(&mut self, handle: StepHandle, d_out: &[f32],
+                     grads: &mut ExpertGrads,
+                     d_x: Option<&mut [f32]>) -> Result<(), String> {
+        let (d, h) = (self.d_model, self.d_hidden);
+        if handle.engine_tag != self.engine_tag {
+            return Err("step handle belongs to a different engine".into());
+        }
+        match &self.session {
+            None => return Err("no open step session (forward not called)".into()),
+            Some(s) if s.id != handle.session => {
+                return Err(format!(
+                    "stale step handle: session {} superseded by {}",
+                    handle.session, s.id
+                ));
+            }
+            Some(_) => {}
+        }
+        grads
+            .check_like(self.topo.num_experts, d, h)
+            .map_err(|e| e.to_string())?;
+        // shape checks before the session is consumed (see the
+        // single-rank engine for the retryability contract)
+        let l_tokens = self.session.as_ref().unwrap().batch.num_tokens();
+        if d_out.len() != l_tokens * d {
+            return Err(format!(
+                "d_out has {} elements, expected L·d = {}",
+                d_out.len(),
+                l_tokens * d
+            ));
+        }
+        if let Some(dx) = &d_x {
+            if dx.len() != l_tokens * d {
+                return Err(format!(
+                    "d_x has {} elements, expected L·d = {}",
+                    dx.len(),
+                    l_tokens * d
+                ));
+            }
+        }
+        let st = self.session.take().unwrap();
+        let mut d_x = d_x;
+        let want_dx = d_x.is_some();
+        let r = self.topo.ranks;
+        let workers = self.workers.min(r);
+        let policy = self.policy;
+        let plan_idx = self.plan_index(&st.batch)?;
+
+        // move each expert's accumulator into its owning rank's work
+        // item once for the whole chunk stream; chunks then extend
+        // segments in ascending token order — the unchunked float-op
+        // sequence. The per-rank ∂x buffers are re-sized per chunk.
+        let assignment = self.topo.assignment();
+        let mut work: Vec<RankBwdWork> = (0..r)
+            .map(|_| RankBwdWork { bucket: Vec::new(), dxs: Vec::new() })
+            .collect();
+        for (e, g) in grads.experts.drain(..).enumerate() {
+            work[assignment.rank_of[e] as usize].bucket.push((e, g));
+        }
+
+        let x = st.batch.x();
+        let gates = st.batch.gates();
+        let k_top = st.batch.disp().top_k;
+        let mut timeline = st.timeline;
+        let mut grad_bytes = 0u64;
+        let mut recompute_bytes = 0u64;
+        {
+            let chunks = &self.plans[plan_idx].1;
+            let params = &self.rank_params;
+            let kc = chunks.len();
+            let mut saved_iter = st.saved.into_iter();
+
+            // one chunk's backward inputs: gated gradient buffers per
+            // (home → dst), plus — under RecomputeAll — the re-gathered
+            // routed inputs (the backward re-run of the dispatch
+            // exchange). Gates and activations come from the parent
+            // batch, offset by the chunk's token base. Returns its own
+            // wall-clock for the calibration hook.
+            let pack_bwd = |m: usize| -> (f64, Vec<Vec<Vec<f32>>>, Option<Vec<Vec<f32>>>) {
+                let t0 = Instant::now();
+                let cp = &chunks[m];
+                let routes = &cp.plan.routes;
+                let base = cp.token_base * d;
+                let gate_base = cp.token_base * k_top;
+                let dsend = par_map(r, workers, |home| {
+                    (0..r)
+                        .map(|dst| {
+                            let hops = &routes[dst][home];
+                            let mut buf = Vec::with_capacity(hops.len() * d);
+                            for hop in hops {
+                                let t = hop.token as usize;
+                                let g = gates[gate_base + hop.origin as usize];
+                                for c in 0..d {
+                                    buf.push(g * d_out[base + t * d + c]);
+                                }
+                            }
+                            buf
+                        })
+                        .collect()
+                });
+                let xs_re = (policy == CheckpointPolicy::RecomputeAll).then(|| {
+                    let shards = &cp.plan.shards;
+                    par_map(r, workers, |dst| {
+                        let n_local = shards[dst].local_slots();
+                        let mut xs = vec![0.0f32; n_local * d];
+                        for per_src in routes[dst].iter() {
+                            for hop in per_src {
+                                let ls = hop.local_slot as usize;
+                                let t = cp.token_base + hop.token as usize;
+                                xs[ls * d..(ls + 1) * d]
+                                    .copy_from_slice(&x[t * d..(t + 1) * d]);
+                            }
+                        }
+                        xs
+                    })
+                });
+                (t0.elapsed().as_secs_f64(), dsend, xs_re)
+            };
+
+            let bwd_start = timeline.now();
+            let mut prev_acc_start = bwd_start;
+            let mut next = pack_bwd(0);
+            for m in 0..kc {
+                let cp = &chunks[m];
+                let (pack_dur, dsend, xs_re) = next;
+                timeline.record_measured(Phase::Exchange, pack_dur);
+                let mut cross = vec![0u64; r];
+                for home in 0..r {
+                    for dst in 0..r {
+                        if home != dst {
+                            let b = (dsend[home][dst].len() * 4) as u64;
+                            grad_bytes += b;
+                            cross[home] += b;
+                        }
+                    }
+                }
+                if xs_re.is_some() {
+                    // the re-gather moves exactly the fwd dispatch rows again
+                    for (dst, per_src) in cp.plan.routes.iter().enumerate() {
+                        for (src, hops) in per_src.iter().enumerate() {
+                            if src != dst {
+                                let b = (hops.len() * d * 4) as u64;
+                                recompute_bytes += b;
+                                cross[src] += b;
+                            }
+                        }
+                    }
+                }
+                let ready = if m == 0 { bwd_start } else { prev_acc_start };
+                let (_, exch_done) =
+                    timeline.phase(m, true, Phase::Exchange, &cross, ready);
+
+                let saved_m = saved_iter.next().expect("chunk saved state missing");
+                let (xs_all, hidden_all): (Vec<Vec<f32>>, Vec<Option<(Vec<f32>, Vec<f32>)>>) =
+                    match xs_re {
+                        Some(xs) => (xs, (0..r).map(|_| None).collect()),
+                        None => {
+                            let mut xs_all = Vec::with_capacity(r);
+                            let mut hidden_all = Vec::with_capacity(r);
+                            for sv in saved_m {
+                                match sv {
+                                    SavedActs::All { xs, pre, act } => {
+                                        xs_all.push(xs);
+                                        hidden_all.push(Some((pre, act)));
+                                    }
+                                    SavedActs::Inputs { xs } => {
+                                        xs_all.push(xs);
+                                        hidden_all.push(None);
+                                    }
+                                    SavedActs::Nothing => unreachable!(
+                                        "saving policy stored nothing for a chunk"
+                                    ),
+                                }
+                            }
+                            (xs_all, hidden_all)
+                        }
+                    };
+
+                // this chunk's ∂x rows live per rank, sized to the
+                // chunk's local slots, zeroed each chunk
+                if want_dx {
+                    for (dst, w) in work.iter_mut().enumerate() {
+                        w.dxs.clear();
+                        w.dxs.resize(cp.plan.shards[dst].local_slots() * d, 0.0);
+                    }
+                }
+
+                // accumulate chunk m per rank while a scoped thread packs
+                // chunk m+1's gradient exchange (and RecomputeAll re-gather)
+                let (acc_dur, packed_next) = std::thread::scope(|s| {
+                    let pack_handle = (m + 1 < kc).then(|| s.spawn(|| pack_bwd(m + 1)));
+                    let dsend_ref = &dsend;
+                    let xs_ref = &xs_all;
+                    let hidden_ref = &hidden_all;
+                    let routes = &cp.plan.routes;
+                    let shards = &cp.plan.shards;
+                    // time the accumulation alone, as the forward times
+                    // compute_chunk alone — joining the pack thread is
+                    // Exchange time and is measured there, not here
+                    let acc_t0 = Instant::now();
+                    scope_chunks(&mut work, 1, workers, |dst, chunk| {
+                        let RankBwdWork { bucket, dxs } = &mut chunk[0];
+                        let sh = &shards[dst];
+                        let n_local = sh.local_slots();
+                        let mut dys = vec![0.0f32; n_local * d];
+                        for (src, bufs) in dsend_ref.iter().enumerate() {
+                            for (i, hop) in routes[dst][src].iter().enumerate() {
+                                let ls = hop.local_slot as usize;
+                                dys[ls * d..(ls + 1) * d]
+                                    .copy_from_slice(&bufs[dst][i * d..(i + 1) * d]);
+                            }
+                        }
+                        let xs = &xs_ref[dst];
+                        let mut pre_row = vec![0.0f32; h];
+                        let mut act_row = vec![0.0f32; h];
+                        let mut dz = vec![0.0f32; h];
+                        for (i, (e, g)) in bucket.iter_mut().enumerate() {
+                            debug_assert_eq!(*e as u32, sh.experts[i]);
+                            let p = &params[dst].experts[i].1;
+                            let lo = sh.expert_token_offsets[i] as usize;
+                            let hi = sh.expert_token_offsets[i + 1] as usize;
+                            for ls in lo..hi {
+                                let xrow = &xs[ls * d..(ls + 1) * d];
+                                let dy = &dys[ls * d..(ls + 1) * d];
+                                let (pre, act): (&[f32], &[f32]) = match &hidden_ref[dst] {
+                                    Some((pre, act)) => (&pre[ls * h..(ls + 1) * h],
+                                                         &act[ls * h..(ls + 1) * h]),
+                                    None => {
+                                        recompute_hidden(p, d, h, xrow, &mut pre_row,
+                                                         &mut act_row);
+                                        (&pre_row[..], &act_row[..])
+                                    }
+                                };
+                                let dx_row = if want_dx {
+                                    Some(&mut dxs[ls * d..(ls + 1) * d])
+                                } else {
+                                    None
+                                };
+                                expert_backward_row(p, g, d, h, xrow, dy, pre,
+                                                    act, &mut dz, dx_row);
+                            }
+                        }
+                    });
+                    let acc_dur = acc_t0.elapsed().as_secs_f64();
+                    (acc_dur,
+                     pack_handle.map(|hd| hd.join().expect("bwd pack thread panicked")))
+                });
+                timeline.record_measured(Phase::Compute, acc_dur);
+                if let Some(dx) = d_x.as_deref_mut() {
+                    fold_dx(&cp.plan.shards, &work, d, self.topo.num_experts,
+                            cp.token_base, dx);
+                }
+                next = packed_next.unwrap_or_else(|| (0.0, Vec::new(), None));
+
+                let recompute = policy != CheckpointPolicy::SaveAll;
+                let flops: Vec<u64> = (0..r)
+                    .map(|rank| {
+                        cp.plan.shards[rank].local_slots() as u64
+                            * bwd_flops_per_row(d, h, recompute)
+                    })
+                    .collect();
+                let (acc_start, _) =
+                    timeline.phase(m, true, Phase::Compute, &flops, exch_done);
+                prev_acc_start = acc_start;
+            }
+        }
+
+        let mut dense: Vec<Option<ExpertParams>> =
+            (0..self.topo.num_experts).map(|_| None).collect();
+        for w in work {
+            for (e, g) in w.bucket {
+                dense[e] = Some(g);
+            }
+        }
+        grads.experts = dense
+            .into_iter()
+            .enumerate()
+            .map(|(e, g)| g.ok_or_else(|| format!("expert {e} grads lost")))
+            .collect::<Result<Vec<_>, String>>()?;
+        self.traffic.grad_bytes += grad_bytes;
+        self.traffic.recompute_bytes += recompute_bytes;
+        self.report = Some(timeline.report());
+        Ok(())
     }
 }
 
@@ -390,8 +728,10 @@ impl ExecutionEngine for PipelinedEngine {
             let mut send_res_per_chunk: Vec<Vec<u64>> = Vec::with_capacity(kc);
             let mut ret_res_per_chunk: Vec<Vec<u64>> = Vec::with_capacity(kc);
 
+            let pack_t0 = Instant::now();
             let mut send_next =
                 pack_sends(&chunks[0].plan, x, chunks[0].token_base, d, workers);
+            tb.record_measured(Phase::Exchange, pack_t0.elapsed().as_secs_f64());
             let mut prev_compute_start = 0.0f64;
             for m in 0..kc {
                 let cp = &chunks[m];
@@ -416,17 +756,24 @@ impl ExecutionEngine for PipelinedEngine {
 
                 // the real overlap: chunk m's expert compute on the
                 // worker pool while a scoped thread packs chunk m+1
-                let (computed, packed_next) = std::thread::scope(|s| {
+                let (computed, compute_dur, packed_next) = std::thread::scope(|s| {
                     let pack_handle = (m + 1 < kc).then(|| {
                         let nc = &chunks[m + 1];
-                        s.spawn(move || pack_sends(&nc.plan, x, nc.token_base, d, workers))
+                        s.spawn(move || {
+                            let t0 = Instant::now();
+                            let p = pack_sends(&nc.plan, x, nc.token_base, d, workers);
+                            (t0.elapsed().as_secs_f64(), p)
+                        })
                     });
+                    let t0 = Instant::now();
                     let computed =
                         compute_chunk(&cp.plan, params, policy, d, h, workers, &send);
-                    (computed,
+                    (computed, t0.elapsed().as_secs_f64(),
                      pack_handle.map(|hd| hd.join().expect("pack thread panicked")))
                 });
-                if let Some(p) = packed_next {
+                tb.record_measured(Phase::Compute, compute_dur);
+                if let Some((pack_dur, p)) = packed_next {
+                    tb.record_measured(Phase::Exchange, pack_dur);
                     send_next = p;
                 }
                 let flops: Vec<u64> = (0..r)
@@ -456,8 +803,10 @@ impl ExecutionEngine for PipelinedEngine {
                     }
                 }
                 let _ = tb.phase(m, false, Phase::Combine, &combine_recv, comp_done);
+                let combine_t0 = Instant::now();
                 combine_chunk(&cp.plan, gates, &rets, d, k, workers,
                               cp.token_base, &mut out);
+                tb.record_measured(Phase::Combine, combine_t0.elapsed().as_secs_f64());
 
                 let (ret_res, _) = buffer_bytes(&rets);
                 for rank in 0..r {
@@ -509,241 +858,12 @@ impl ExecutionEngine for PipelinedEngine {
 
     fn backward_into(&mut self, handle: StepHandle, d_out: &[f32],
                      grads: &mut ExpertGrads) -> Result<(), String> {
-        let (d, h) = (self.d_model, self.d_hidden);
-        if handle.engine_tag != self.engine_tag {
-            return Err("step handle belongs to a different engine".into());
-        }
-        match &self.session {
-            None => return Err("no open step session (forward not called)".into()),
-            Some(s) if s.id != handle.session => {
-                return Err(format!(
-                    "stale step handle: session {} superseded by {}",
-                    handle.session, s.id
-                ));
-            }
-            Some(_) => {}
-        }
-        grads
-            .check_like(self.topo.num_experts, d, h)
-            .map_err(|e| e.to_string())?;
-        let st = self.session.take().unwrap();
-        if d_out.len() != st.batch.num_tokens() * d {
-            return Err(format!(
-                "d_out has {} elements, expected L·d = {}",
-                d_out.len(),
-                st.batch.num_tokens() * d
-            ));
-        }
-        let r = self.topo.ranks;
-        let workers = self.workers.min(r);
-        let policy = self.policy;
-        let plan_idx = self.plan_index(&st.batch)?;
+        self.backward_impl(handle, d_out, grads, None)
+    }
 
-        // move each expert's accumulator into its owning rank's bucket
-        // once for the whole chunk stream; chunks then extend segments in
-        // ascending token order — the unchunked float-op sequence
-        let assignment = self.topo.assignment();
-        let mut buckets: Vec<Vec<(usize, ExpertParams)>> =
-            (0..r).map(|_| Vec::new()).collect();
-        for (e, g) in grads.experts.drain(..).enumerate() {
-            buckets[assignment.rank_of[e] as usize].push((e, g));
-        }
-
-        let x = st.batch.x();
-        let gates = st.batch.gates();
-        let k_top = st.batch.disp().top_k;
-        let mut timeline = st.timeline;
-        let mut grad_bytes = 0u64;
-        let mut recompute_bytes = 0u64;
-        {
-            let chunks = &self.plans[plan_idx].1;
-            let params = &self.rank_params;
-            let kc = chunks.len();
-            let mut saved_iter = st.saved.into_iter();
-
-            // one chunk's backward inputs: gated gradient buffers per
-            // (home → dst), plus — under RecomputeAll — the re-gathered
-            // routed inputs (the backward re-run of the dispatch
-            // exchange). Gates and activations come from the parent
-            // batch, offset by the chunk's token base.
-            let pack_bwd = |m: usize| -> (Vec<Vec<Vec<f32>>>, Option<Vec<Vec<f32>>>) {
-                let cp = &chunks[m];
-                let routes = &cp.plan.routes;
-                let base = cp.token_base * d;
-                let gate_base = cp.token_base * k_top;
-                let dsend = par_map(r, workers, |home| {
-                    (0..r)
-                        .map(|dst| {
-                            let hops = &routes[dst][home];
-                            let mut buf = Vec::with_capacity(hops.len() * d);
-                            for hop in hops {
-                                let t = hop.token as usize;
-                                let g = gates[gate_base + hop.origin as usize];
-                                for c in 0..d {
-                                    buf.push(g * d_out[base + t * d + c]);
-                                }
-                            }
-                            buf
-                        })
-                        .collect()
-                });
-                let xs_re = (policy == CheckpointPolicy::RecomputeAll).then(|| {
-                    let shards = &cp.plan.shards;
-                    par_map(r, workers, |dst| {
-                        let n_local = shards[dst].local_slots();
-                        let mut xs = vec![0.0f32; n_local * d];
-                        for per_src in routes[dst].iter() {
-                            for hop in per_src {
-                                let ls = hop.local_slot as usize;
-                                let t = cp.token_base + hop.token as usize;
-                                xs[ls * d..(ls + 1) * d]
-                                    .copy_from_slice(&x[t * d..(t + 1) * d]);
-                            }
-                        }
-                        xs
-                    })
-                });
-                (dsend, xs_re)
-            };
-
-            let bwd_start = timeline.now();
-            let mut prev_acc_start = bwd_start;
-            let mut next = pack_bwd(0);
-            for m in 0..kc {
-                let cp = &chunks[m];
-                let (dsend, xs_re) = next;
-                let mut cross = vec![0u64; r];
-                for home in 0..r {
-                    for dst in 0..r {
-                        if home != dst {
-                            let b = (dsend[home][dst].len() * 4) as u64;
-                            grad_bytes += b;
-                            cross[home] += b;
-                        }
-                    }
-                }
-                if xs_re.is_some() {
-                    // the re-gather moves exactly the fwd dispatch rows again
-                    for (dst, per_src) in cp.plan.routes.iter().enumerate() {
-                        for (src, hops) in per_src.iter().enumerate() {
-                            if src != dst {
-                                let b = (hops.len() * d * 4) as u64;
-                                recompute_bytes += b;
-                                cross[src] += b;
-                            }
-                        }
-                    }
-                }
-                let ready = if m == 0 { bwd_start } else { prev_acc_start };
-                let (_, exch_done) =
-                    timeline.phase(m, true, Phase::Exchange, &cross, ready);
-
-                let saved_m = saved_iter.next().expect("chunk saved state missing");
-                let (xs_all, hidden_all): (Vec<Vec<f32>>, Vec<Option<(Vec<f32>, Vec<f32>)>>) =
-                    match xs_re {
-                        Some(xs) => (xs, (0..r).map(|_| None).collect()),
-                        None => {
-                            let mut xs_all = Vec::with_capacity(r);
-                            let mut hidden_all = Vec::with_capacity(r);
-                            for sv in saved_m {
-                                match sv {
-                                    SavedActs::All { xs, pre, act } => {
-                                        xs_all.push(xs);
-                                        hidden_all.push(Some((pre, act)));
-                                    }
-                                    SavedActs::Inputs { xs } => {
-                                        xs_all.push(xs);
-                                        hidden_all.push(None);
-                                    }
-                                    SavedActs::Nothing => unreachable!(
-                                        "saving policy stored nothing for a chunk"
-                                    ),
-                                }
-                            }
-                            (xs_all, hidden_all)
-                        }
-                    };
-
-                // accumulate chunk m per rank while a scoped thread packs
-                // chunk m+1's gradient exchange (and RecomputeAll re-gather)
-                let packed_next = std::thread::scope(|s| {
-                    let pack_handle = (m + 1 < kc).then(|| s.spawn(|| pack_bwd(m + 1)));
-                    let dsend_ref = &dsend;
-                    let xs_ref = &xs_all;
-                    let hidden_ref = &hidden_all;
-                    let routes = &cp.plan.routes;
-                    let shards = &cp.plan.shards;
-                    scope_chunks(&mut buckets, 1, workers, |dst, chunk| {
-                        let bucket = &mut chunk[0];
-                        let sh = &shards[dst];
-                        let n_local = sh.local_slots();
-                        let mut dys = vec![0.0f32; n_local * d];
-                        for (src, bufs) in dsend_ref.iter().enumerate() {
-                            for (i, hop) in routes[dst][src].iter().enumerate() {
-                                let ls = hop.local_slot as usize;
-                                dys[ls * d..(ls + 1) * d]
-                                    .copy_from_slice(&bufs[dst][i * d..(i + 1) * d]);
-                            }
-                        }
-                        let xs = &xs_ref[dst];
-                        let mut pre_row = vec![0.0f32; h];
-                        let mut act_row = vec![0.0f32; h];
-                        let mut dz = vec![0.0f32; h];
-                        for (i, (e, g)) in bucket.iter_mut().enumerate() {
-                            debug_assert_eq!(*e as u32, sh.experts[i]);
-                            let p = &params[dst].experts[i].1;
-                            let lo = sh.expert_token_offsets[i] as usize;
-                            let hi = sh.expert_token_offsets[i + 1] as usize;
-                            for ls in lo..hi {
-                                let xrow = &xs[ls * d..(ls + 1) * d];
-                                let dy = &dys[ls * d..(ls + 1) * d];
-                                let (pre, act): (&[f32], &[f32]) = match &hidden_ref[dst] {
-                                    Some((pre, act)) => (&pre[ls * h..(ls + 1) * h],
-                                                         &act[ls * h..(ls + 1) * h]),
-                                    None => {
-                                        recompute_hidden(p, d, h, xrow, &mut pre_row,
-                                                         &mut act_row);
-                                        (&pre_row[..], &act_row[..])
-                                    }
-                                };
-                                expert_backward_row(p, g, d, h, xrow, dy, pre, act,
-                                                    &mut dz);
-                            }
-                        }
-                    });
-                    pack_handle.map(|hd| hd.join().expect("bwd pack thread panicked"))
-                });
-                next = packed_next.unwrap_or_else(|| (Vec::new(), None));
-
-                let recompute = policy != CheckpointPolicy::SaveAll;
-                let flops: Vec<u64> = (0..r)
-                    .map(|rank| {
-                        cp.plan.shards[rank].local_slots() as u64
-                            * bwd_flops_per_row(d, h, recompute)
-                    })
-                    .collect();
-                let (acc_start, _) =
-                    timeline.phase(m, true, Phase::Compute, &flops, exch_done);
-                prev_acc_start = acc_start;
-            }
-        }
-
-        let mut dense: Vec<Option<ExpertParams>> =
-            (0..self.topo.num_experts).map(|_| None).collect();
-        for bucket in buckets {
-            for (e, g) in bucket {
-                dense[e] = Some(g);
-            }
-        }
-        grads.experts = dense
-            .into_iter()
-            .enumerate()
-            .map(|(e, g)| g.ok_or_else(|| format!("expert {e} grads lost")))
-            .collect::<Result<Vec<_>, String>>()?;
-        self.traffic.grad_bytes += grad_bytes;
-        self.traffic.recompute_bytes += recompute_bytes;
-        self.report = Some(timeline.report());
-        Ok(())
+    fn backward_into_dx(&mut self, handle: StepHandle, d_out: &[f32],
+                        grads: &mut ExpertGrads, d_x: &mut [f32]) -> Result<(), String> {
+        self.backward_impl(handle, d_out, grads, Some(d_x))
     }
 
     fn zero_grads(&self) -> ExpertGrads {

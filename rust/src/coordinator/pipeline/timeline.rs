@@ -139,6 +139,10 @@ pub struct TimelineBuilder {
     combine_bytes: u64,
     backward_bytes: u64,
     flops: u64,
+    /// measured host wall-clock per phase kind (both directions),
+    /// recorded by the engine around the real work — the calibration
+    /// counterpart of the simulated spans
+    measured_s: [f64; 3],
 }
 
 impl TimelineBuilder {
@@ -156,7 +160,16 @@ impl TimelineBuilder {
             combine_bytes: 0,
             backward_bytes: 0,
             flops: 0,
+            measured_s: [0.0; 3],
         }
+    }
+
+    /// Record measured wall-clock seconds of real `phase` work (the
+    /// calibration hook: the pipelined engine times its pack / expert /
+    /// combine sections around the actual threaded execution). Purely
+    /// additive — the simulated clock never reads it.
+    pub fn record_measured(&mut self, phase: Phase, seconds: f64) {
+        self.measured_s[phase as usize] += seconds;
     }
 
     /// Current makespan (the latest busy-until time of any lane).
@@ -247,6 +260,7 @@ impl TimelineBuilder {
             combine_bytes: self.combine_bytes,
             backward_bytes: self.backward_bytes,
             flops: self.flops,
+            measured_s: self.measured_s,
             spans: self.spans.clone(),
         }
     }
@@ -274,7 +288,35 @@ pub struct OverlapReport {
     pub backward_bytes: u64,
     /// total expert FLOPs priced
     pub flops: u64,
+    /// measured host wall-clock per phase kind (indexed by `Phase as
+    /// usize`, both directions) — see [`TimelineBuilder::record_measured`]
+    pub measured_s: [f64; 3],
     pub spans: Vec<PhaseSpan>,
+}
+
+/// One phase kind's simulated-cost vs measured-wall-clock comparison —
+/// the first step of calibrating the cost model from real engine steps
+/// (ROADMAP "calibrate the cost model"). The simulated side sums span
+/// durations across ranks and directions; the measured side sums the
+/// host wall-clock the engine recorded around the same work. Their ratio
+/// is what a self-calibrating cost model would fold back into
+/// `link_gbps` / `compute_gflops`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseCalibration {
+    pub phase: Phase,
+    pub simulated_s: f64,
+    pub measured_s: f64,
+}
+
+impl PhaseCalibration {
+    /// simulated / measured (0 when nothing was measured).
+    pub fn ratio(&self) -> f64 {
+        if self.measured_s > 0.0 {
+            self.simulated_s / self.measured_s
+        } else {
+            0.0
+        }
+    }
 }
 
 impl OverlapReport {
@@ -319,6 +361,31 @@ impl OverlapReport {
             .sum()
     }
 
+    /// Simulated seconds of `phase` spans, both directions, summed
+    /// across ranks and chunks (the span-sum counterpart of
+    /// [`measured_s`](OverlapReport::measured_s)).
+    pub fn simulated_phase_s(&self, phase: Phase) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.phase == phase)
+            .map(|s| s.end_s - s.start_s)
+            .sum()
+    }
+
+    /// Simulated-vs-measured roll-up per phase kind, in `Phase`
+    /// declaration order — the calibration report the engine step
+    /// produced alongside its timeline.
+    pub fn calibration(&self) -> Vec<PhaseCalibration> {
+        [Phase::Exchange, Phase::Compute, Phase::Combine]
+            .into_iter()
+            .map(|phase| PhaseCalibration {
+                phase,
+                simulated_s: self.simulated_phase_s(phase),
+                measured_s: self.measured_s[phase as usize],
+            })
+            .collect()
+    }
+
     /// Scalar roll-up (spans elided) for JSONL metrics and benches.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -335,6 +402,14 @@ impl OverlapReport {
             ("combine_bytes", Json::num(self.combine_bytes as f64)),
             ("backward_bytes", Json::num(self.backward_bytes as f64)),
             ("flops", Json::num(self.flops as f64)),
+            ("calibration", Json::arr(self.calibration().into_iter().map(|c| {
+                Json::obj(vec![
+                    ("phase", Json::str(c.phase.name())),
+                    ("simulated_s", Json::num(c.simulated_s)),
+                    ("measured_s", Json::num(c.measured_s)),
+                    ("ratio", Json::num(c.ratio())),
+                ])
+            }))),
         ])
     }
 }

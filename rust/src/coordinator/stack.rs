@@ -1,0 +1,729 @@
+//! Multi-layer MoE stack: L expert layers chained through the existing
+//! [`ExecutionEngine`] implementations.
+//!
+//! [`MoeStack`] owns one engine per layer — each with its own
+//! router/gates draw, its own [`ExpertStore`] segment, and therefore its
+//! own dispatch plan — and is itself an [`ExecutionEngine`], so
+//! `EpTrainer`, `ep-bench`, and the optimizers drive an L-layer model
+//! through the unchanged step-session API:
+//!
+//! * **forward** runs the layers bottom-up: layer 0 consumes the
+//!   caller's [`StepBatch`] as-is; each deeper layer's input is the
+//!   previous layer's combined output, bound zero-copy to that layer's
+//!   fixed routing via [`LayerRouting::bind`] (the derived batch reuses
+//!   the parent's id + the layer tag, so engine plan caches — keyed
+//!   `(batch id, layer)` — stay warm while `x` changes every step). The
+//!   per-layer [`StepHandle`]s are retained in a `LayerSession`.
+//! * **backward** walks the layers in reverse, chaining
+//!   [`ExecutionEngine::backward_into_dx`]: layer l's ∂x is layer l−1's
+//!   ∂out. Gradients land in one layer-major [`ExpertGrads`] (layer l's
+//!   expert e at global id `l·E + e`), each segment extended in the
+//!   engines' usual expert-segment order — so grad-accum microbatching
+//!   stays bit-identical through the stack.
+//!
+//! Bit-identity contract (pinned by `rust/tests/ep_stack.rs` and the
+//! `tools/ep_sim.py` stack mirror): an L-layer stack reproduces L
+//! manually-chained single-layer sessions exactly, for every rank count
+//! R, pipeline chunking K, and per-layer policy vector; and an L = 1
+//! stack with a uniform policy reproduces today's
+//! `ShardedEngine`/`PipelinedEngine` outputs, gradients, and loss
+//! curves bit-for-bit.
+//!
+//! Per-layer checkpoint policies are where the paper's "smart
+//! activation checkpoint" plugs in: [`stack_from_config`] asks
+//! `memory::planner::CheckpointPlanner` for a per-layer policy vector
+//! when `[ep] checkpoint = "auto"`, budgeted by `mem_budget_bytes`
+//! (see [`plan_from_config`]).
+
+use crate::config::ep::EpConfig;
+use crate::dispatch::parallel_build::parallel_build;
+use crate::dispatch::structures::DispatchStructures;
+use crate::memory::model::{CheckpointPolicy, MemoryBreakdown};
+use crate::memory::planner::{CheckpointPlan, CheckpointPlanner, LayerModel};
+use crate::util::prng::Rng;
+
+use super::engine::{config_gating, layer_engine_from_config, lru_get_or_insert,
+                    next_engine_tag, topology_from_config, ExecutionEngine,
+                    LayerRouting, StepBatch, StepHandle, Traffic, PLAN_CACHE_CAP};
+use super::params::{ExpertGrads, ExpertStore};
+use super::pipeline::timeline::{CostModel, OverlapReport};
+
+/// Per-layer salt mixed into seeds and gating draws. Zero for layer 0,
+/// so an L = 1 stack sees exactly the config workload's own draws —
+/// the foundation of the L = 1 equivalence guarantee.
+fn layer_salt(layer: usize) -> u64 {
+    (layer as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Layer `layer`'s fixed routing draw for a config: the engines' one
+/// shared `config_gating` definition under a layer-salted seed. Layer
+/// 0's salt is zero, so it is *exactly* the config workload's own
+/// gating (same rng, same draw — an L = 1 stack reproduces today's
+/// engines bit-for-bit); deeper layers re-draw over the same shape and
+/// skew.
+pub fn layer_gating_from_config(cfg: &EpConfig, layer: usize) -> (Vec<u32>, Vec<f32>) {
+    let mut rng = Rng::new(cfg.seed ^ 0xE9E9 ^ layer_salt(layer));
+    let (disp, gates) = config_gating(cfg, &mut rng);
+    (disp.token_expert_indices, gates)
+}
+
+/// Layer `layer`'s dispatch structures for a config (the routing half
+/// of [`layer_gating_from_config`], built once for planner models and
+/// tests).
+pub fn layer_routing_from_config(cfg: &EpConfig, layer: usize) -> DispatchStructures {
+    let mut rng = Rng::new(cfg.seed ^ 0xE9E9 ^ layer_salt(layer));
+    config_gating(cfg, &mut rng).0
+}
+
+/// The full-workload routing draw one stack layer carries (layers ≥ 1;
+/// layer 0 consumes the caller's batch).
+struct LayerDraw {
+    topk_ids: Vec<u32>,
+    gates: Vec<f32>,
+}
+
+struct StackLayer {
+    engine: Box<dyn ExecutionEngine>,
+    /// `None` for layer 0 — it consumes the caller's batch routing
+    draw: Option<LayerDraw>,
+}
+
+/// One open multi-layer step session — the `LayerSession` extension of
+/// [`StepHandle`]: the per-layer handles, layer-ascending, consumed by
+/// the stack's reverse walk.
+struct LayerSession {
+    id: u64,
+    handles: Vec<StepHandle>,
+}
+
+/// L chained expert layers behind one [`ExecutionEngine`] face. See the
+/// module docs for the forward/backward contract.
+pub struct MoeStack {
+    layers: Vec<StackLayer>,
+    /// token count the per-layer routing draws cover (0 until a second
+    /// layer is pushed; an L = 1 stack accepts any batch)
+    tokens: usize,
+    top_k: usize,
+    num_experts: usize,
+    d_model: usize,
+    d_hidden: usize,
+    engine_tag: u64,
+    sessions_opened: u64,
+    session: Option<LayerSession>,
+    /// derived per-batch layer routings (layers 1..L, sliced to the
+    /// batch's token span), LRU by batch id — microbatches re-derive
+    /// nothing across steps
+    routings: Vec<(u64, Vec<LayerRouting>)>,
+    cache_cap: usize,
+}
+
+impl MoeStack {
+    /// Start a stack with its first (bottom) layer, which consumes the
+    /// caller's batch routing directly. An L = 1 stack is a transparent
+    /// wrapper: forward/backward delegate to the engine on the caller's
+    /// batch unchanged.
+    pub fn new(first: Box<dyn ExecutionEngine>) -> MoeStack {
+        let g = first.zero_grads();
+        MoeStack {
+            num_experts: g.num_experts(),
+            d_model: g.d_model,
+            d_hidden: g.d_hidden,
+            layers: vec![StackLayer { engine: first, draw: None }],
+            tokens: 0,
+            top_k: 0,
+            engine_tag: next_engine_tag(),
+            sessions_opened: 0,
+            session: None,
+            routings: Vec::new(),
+            cache_cap: PLAN_CACHE_CAP,
+        }
+    }
+
+    /// Append a layer with its own full-workload routing draw
+    /// (`topk_ids`/`gates`, token-major, `tokens · top_k` entries).
+    /// Every layer must agree on expert count, dimensions, rank count,
+    /// and — beyond the first pushed draw — the workload shape.
+    pub fn push_layer(&mut self, engine: Box<dyn ExecutionEngine>, tokens: usize,
+                      top_k: usize, topk_ids: Vec<u32>,
+                      gates: Vec<f32>) -> Result<(), String> {
+        let g = engine.zero_grads();
+        if g.num_experts() != self.num_experts
+            || g.d_model != self.d_model
+            || g.d_hidden != self.d_hidden
+        {
+            return Err(format!(
+                "layer {} shape (E={}, d={}, h={}) != stack (E={}, d={}, h={})",
+                self.layers.len(),
+                g.num_experts(),
+                g.d_model,
+                g.d_hidden,
+                self.num_experts,
+                self.d_model,
+                self.d_hidden
+            ));
+        }
+        if engine.ranks() != self.layers[0].engine.ranks() {
+            return Err(format!(
+                "layer {} runs {} ranks, stack runs {}",
+                self.layers.len(),
+                engine.ranks(),
+                self.layers[0].engine.ranks()
+            ));
+        }
+        if tokens == 0 || topk_ids.len() != tokens * top_k
+            || gates.len() != tokens * top_k
+        {
+            return Err(format!(
+                "layer draw has {} ids / {} gates, expected tokens·k = {}",
+                topk_ids.len(),
+                gates.len(),
+                tokens * top_k
+            ));
+        }
+        if self.layers.len() > 1 && (tokens != self.tokens || top_k != self.top_k) {
+            return Err("layer draws disagree on the workload shape".into());
+        }
+        self.tokens = tokens;
+        self.top_k = top_k;
+        self.routings.clear();
+        self.layers.push(StackLayer {
+            engine,
+            draw: Some(LayerDraw { topk_ids, gates }),
+        });
+        Ok(())
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Per-layer checkpoint policies, layer-ascending (the trait-level
+    /// `policy()` reports only the bottom layer's).
+    pub fn layer_policies(&self) -> Vec<CheckpointPolicy> {
+        self.layers.iter().map(|l| l.engine.policy()).collect()
+    }
+
+    /// Per-layer per-rank memory of the last forward (the summed view is
+    /// `memory_per_rank`).
+    pub fn layer_memory(&self) -> Vec<Vec<MemoryBreakdown>> {
+        self.layers.iter().map(|l| l.engine.memory_per_rank()).collect()
+    }
+
+    /// Bound of the stack's derived-routing cache (the layer engines'
+    /// plan caches are sized at construction); grad-accum callers need
+    /// at least their microbatch count, as with the engines.
+    pub fn set_plan_cache_cap(&mut self, cap: usize) {
+        self.cache_cap = cap.max(1);
+        while self.routings.len() > self.cache_cap {
+            self.routings.remove(0);
+        }
+    }
+
+    /// Index into `routings` of this batch's per-layer routing slices,
+    /// deriving them on first sight: each deeper layer's full-workload
+    /// draw is cut to the batch's token span (`token_offset`), so
+    /// grad-accum microbatches route exactly as their slice of the
+    /// full batch — the contiguous-split argument that keeps stacked
+    /// grad-accum bit-identical.
+    fn routing_index(&mut self, batch: &StepBatch) -> Result<usize, String> {
+        let nl = self.layers.len();
+        let lm = batch.num_tokens();
+        let off = batch.token_offset();
+        if off + lm > self.tokens {
+            return Err(format!(
+                "batch spans tokens {off}..{} beyond the stack's {}-token routing",
+                off + lm,
+                self.tokens
+            ));
+        }
+        let (e, k) = (self.num_experts, self.top_k);
+        let layers = &self.layers;
+        lru_get_or_insert(&mut self.routings, self.cache_cap, batch.id(), || {
+            (1..nl)
+                .map(|l| {
+                    let draw = layers[l]
+                        .draw
+                        .as_ref()
+                        .expect("layers above 0 always carry a draw");
+                    let ids = &draw.topk_ids[off * k..(off + lm) * k];
+                    let disp = parallel_build(ids, lm, e, k);
+                    LayerRouting::new(l as u32, disp,
+                                      draw.gates[off * k..(off + lm) * k].to_vec())
+                })
+                .collect()
+        })
+    }
+
+    fn check_session(&self, handle: &StepHandle) -> Result<(), String> {
+        if handle.engine_tag != self.engine_tag {
+            return Err("step handle belongs to a different engine".into());
+        }
+        match &self.session {
+            None => Err("no open step session (forward not called)".into()),
+            Some(s) if s.id != handle.session => Err(format!(
+                "stale step handle: session {} superseded by {}",
+                handle.session, s.id
+            )),
+            Some(_) => Ok(()),
+        }
+    }
+
+    /// The reverse walk: pop layer handles top-down, chain ∂x, extend
+    /// each layer's grad segment in place.
+    fn backward_impl(&mut self, handle: StepHandle, d_out: &[f32],
+                     grads: &mut ExpertGrads,
+                     d_x: Option<&mut [f32]>) -> Result<(), String> {
+        self.check_session(&handle)?;
+        let nl = self.layers.len();
+        grads
+            .check_like(nl * self.num_experts, self.d_model, self.d_hidden)
+            .map_err(|e| e.to_string())?;
+        // validate the ∂x shape *before* any layer mutates `grads` or a
+        // session is consumed — the same error-before-mutation contract
+        // the engines keep
+        if let Some(dx) = &d_x {
+            if dx.len() != d_out.len() {
+                return Err(format!(
+                    "d_x has {} elements, expected L·d = {}",
+                    dx.len(),
+                    d_out.len()
+                ));
+            }
+        }
+        let st = self.session.take().unwrap();
+        let lm = d_out.len() / self.d_model.max(1);
+        let mut handles = st.handles;
+        let mut d_cur: Vec<f32> = d_out.to_vec();
+        for l in (0..nl).rev() {
+            let h = handles.pop().expect("one handle per layer");
+            let mut seg = grads.take_layer(l, self.num_experts);
+            let result = if l > 0 || d_x.is_some() {
+                let mut d_prev = vec![0.0f32; lm * self.d_model];
+                let r = self.layers[l]
+                    .engine
+                    .backward_into_dx(h, &d_cur, &mut seg, &mut d_prev);
+                d_cur = d_prev;
+                r
+            } else {
+                self.layers[l].engine.backward_into(h, &d_cur, &mut seg)
+            };
+            grads.restore_layer(l, seg);
+            result?;
+        }
+        if let Some(dx) = d_x {
+            for (o, v) in dx.iter_mut().zip(&d_cur) {
+                *o += v;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl ExecutionEngine for MoeStack {
+    fn name(&self) -> String {
+        format!("stack-l{}-{}", self.layers.len(), self.layers[0].engine.name())
+    }
+
+    fn ranks(&self) -> usize {
+        self.layers[0].engine.ranks()
+    }
+
+    /// The bottom layer's policy (layers may differ under a planner
+    /// assignment — see [`MoeStack::layer_policies`]).
+    fn policy(&self) -> CheckpointPolicy {
+        self.layers[0].engine.policy()
+    }
+
+    fn forward(&mut self, batch: &StepBatch) -> Result<StepHandle, String> {
+        let nl = self.layers.len();
+        if batch.d_model() != self.d_model {
+            return Err(format!(
+                "batch has d_model {}, stack expects {}",
+                batch.d_model(),
+                self.d_model
+            ));
+        }
+        let routing_idx = if nl > 1 { Some(self.routing_index(batch)?) } else { None };
+        let mut handles = Vec::with_capacity(nl);
+        handles.push(self.layers[0].engine.forward(batch)?);
+        for l in 1..nl {
+            let x = handles[l - 1].output().to_vec();
+            let routing = &self.routings[routing_idx.unwrap()].1[l - 1];
+            let bound = routing.bind(batch, x)?;
+            let h = self.layers[l].engine.forward(&bound)?;
+            handles.push(h);
+        }
+        let out = handles[nl - 1].output().to_vec();
+        self.sessions_opened += 1;
+        let session = self.sessions_opened;
+        self.session = Some(LayerSession { id: session, handles });
+        Ok(StepHandle { engine_tag: self.engine_tag, session, out })
+    }
+
+    fn backward_into(&mut self, handle: StepHandle, d_out: &[f32],
+                     grads: &mut ExpertGrads) -> Result<(), String> {
+        self.backward_impl(handle, d_out, grads, None)
+    }
+
+    fn backward_into_dx(&mut self, handle: StepHandle, d_out: &[f32],
+                        grads: &mut ExpertGrads, d_x: &mut [f32]) -> Result<(), String> {
+        self.backward_impl(handle, d_out, grads, Some(d_x))
+    }
+
+    fn zero_grads(&self) -> ExpertGrads {
+        ExpertGrads::zeros(self.layers.len() * self.num_experts, self.d_model,
+                           self.d_hidden)
+    }
+
+    fn apply_update(&mut self, delta: &ExpertGrads) -> Result<(), String> {
+        delta
+            .check_like(self.layers.len() * self.num_experts, self.d_model,
+                        self.d_hidden)
+            .map_err(|e| e.to_string())?;
+        let per_layer = self.num_experts;
+        for (l, layer) in self.layers.iter_mut().enumerate() {
+            layer.engine.apply_update(&delta.layer_slice(l, per_layer))?;
+        }
+        Ok(())
+    }
+
+    /// Element-wise sum across layers. Each layer's counters reset at
+    /// its forward and accumulate through its backward, and the stack
+    /// runs every layer exactly once per session — so the sum describes
+    /// one whole stack step.
+    fn traffic(&self) -> Traffic {
+        let mut total = Traffic::default();
+        for layer in &self.layers {
+            let t = layer.engine.traffic();
+            total.dispatch_bytes += t.dispatch_bytes;
+            total.combine_bytes += t.combine_bytes;
+            total.grad_bytes += t.grad_bytes;
+            total.recompute_bytes += t.recompute_bytes;
+            total.cross_rows += t.cross_rows;
+            total.local_rows += t.local_rows;
+        }
+        total
+    }
+
+    /// Per-rank sums across layers — the stacked-residency view the
+    /// planner budgets: every layer's saved tensors are live at the
+    /// fwd→bwd boundary simultaneously.
+    fn memory_per_rank(&self) -> Vec<MemoryBreakdown> {
+        let r = self.ranks();
+        let mut out = vec![
+            MemoryBreakdown { data_bytes: 0, index_bytes: 0, extra_bytes: 0 };
+            r
+        ];
+        for layer in &self.layers {
+            for (acc, m) in out.iter_mut().zip(layer.engine.memory_per_rank()) {
+                acc.data_bytes += m.data_bytes;
+                acc.index_bytes += m.index_bytes;
+                acc.extra_bytes += m.extra_bytes;
+            }
+        }
+        out
+    }
+
+    fn gather_params(&self) -> Result<ExpertStore, String> {
+        let stores = self
+            .layers
+            .iter()
+            .map(|l| l.engine.gather_params())
+            .collect::<Result<Vec<_>, String>>()?;
+        ExpertStore::concat(&stores)
+    }
+
+    /// The final layer's timeline (chunk-pipelined layer engines only).
+    fn overlap_report(&self) -> Option<OverlapReport> {
+        self.layers.last().and_then(|l| l.engine.overlap_report())
+    }
+}
+
+// -- config-driven construction ---------------------------------------------
+
+/// The smart-checkpoint plan for a config, or `None` when neither
+/// multi-layer nor `checkpoint = "auto"` asks for one: per-layer
+/// [`LayerModel`]s from each layer's routing under the config topology,
+/// solved against `[ep] mem_budget_bytes` on the config's cost model.
+/// Fixed-policy multi-layer configs get a `fixed` plan (projections
+/// only) so `ep-bench`/`ep-train` can still explain the memory story.
+pub fn plan_from_config(cfg: &EpConfig) -> Result<Option<CheckpointPlan>, String> {
+    if cfg.num_layers <= 1 && !cfg.checkpoint_auto {
+        return Ok(None);
+    }
+    let topo = topology_from_config(cfg, cfg.ranks)?;
+    let cost = CostModel::new(cfg.link_gbps, cfg.compute_gflops)?;
+    let models: Vec<LayerModel> = (0..cfg.num_layers)
+        .map(|l| {
+            let disp = layer_routing_from_config(cfg, l);
+            LayerModel::from_routing(l, &disp, &topo, cfg.d_model, cfg.d_hidden)
+        })
+        .collect();
+    let planner = CheckpointPlanner::new(cost);
+    let plan = if cfg.checkpoint_auto {
+        planner.plan(&models, cfg.mem_budget_bytes)
+    } else {
+        planner.fixed(&models, cfg.checkpoint)
+    };
+    Ok(Some(plan))
+}
+
+/// The per-layer policy vector a config resolves to: the planner's
+/// choice under `checkpoint = "auto"`, else the config's uniform
+/// policy.
+pub fn stack_policies_from_config(cfg: &EpConfig) -> Result<Vec<CheckpointPolicy>, String> {
+    if cfg.checkpoint_auto {
+        let plan = plan_from_config(cfg)?.expect("auto always plans");
+        Ok(plan.policies())
+    } else {
+        Ok(vec![cfg.checkpoint; cfg.num_layers])
+    }
+}
+
+/// Build the multi-layer stack an `[ep]` config describes: one engine
+/// per layer — the same engine type `engine_from_config` would build,
+/// each owning its own per-layer-seeded [`ExpertStore`] segment — and
+/// per-layer routing draws. Layer 0's seed and routing are exactly the
+/// config's own, so `num_layers = 1` with a fixed policy reproduces
+/// today's single engines bit-for-bit (wrapped one deep). `LoadAware`
+/// placement derives every layer's topology from the config workload's
+/// routing, as `engine_from_config` does. Solves the checkpoint plan
+/// itself under `checkpoint = "auto"`; callers already holding the plan
+/// should use [`stack_with_plan`] instead of re-solving it.
+pub fn stack_from_config(cfg: &EpConfig) -> Result<MoeStack, String> {
+    let plan = if cfg.checkpoint_auto { plan_from_config(cfg)? } else { None };
+    stack_with_plan(cfg, plan.as_ref())
+}
+
+/// [`stack_from_config`] with a pre-solved [`CheckpointPlan`]: the
+/// plan's per-layer policies are used under `checkpoint = "auto"`
+/// (`None`, or a non-auto config, falls back to the uniform policy), so
+/// `ep-bench` and the planner bench — which render the plan anyway —
+/// build their stacks without running the solver again.
+pub fn stack_with_plan(cfg: &EpConfig,
+                       plan: Option<&CheckpointPlan>) -> Result<MoeStack, String> {
+    cfg.validate()?;
+    let policies = match plan {
+        Some(p) if cfg.checkpoint_auto => {
+            let pols = p.policies();
+            if pols.len() != cfg.num_layers {
+                return Err(format!(
+                    "plan covers {} layers, config stacks {}",
+                    pols.len(),
+                    cfg.num_layers
+                ));
+            }
+            pols
+        }
+        _ => vec![cfg.checkpoint; cfg.num_layers],
+    };
+    let cache_cap = PLAN_CACHE_CAP.max(cfg.grad_accum);
+    let mut stack: Option<MoeStack> = None;
+    for l in 0..cfg.num_layers {
+        let store = ExpertStore::init(cfg.num_experts, cfg.d_model, cfg.d_hidden,
+                                      cfg.seed ^ layer_salt(l));
+        let engine = layer_engine_from_config(cfg, store, policies[l])?;
+        match &mut stack {
+            None => {
+                let mut s = MoeStack::new(engine);
+                s.set_plan_cache_cap(cache_cap);
+                stack = Some(s);
+            }
+            Some(s) => {
+                let (ids, gates) = layer_gating_from_config(cfg, l);
+                s.push_layer(engine, cfg.tokens, cfg.top_k, ids, gates)?;
+            }
+        }
+    }
+    Ok(stack.expect("num_layers >= 1 is validated"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{engine_from_config, step_batch_from_config};
+    use crate::memory::model::CheckpointPolicy;
+
+    fn tiny_cfg(layers: usize, ranks: usize) -> EpConfig {
+        EpConfig {
+            num_layers: layers,
+            ranks,
+            tokens: 24,
+            num_experts: 4,
+            top_k: 2,
+            d_model: 6,
+            d_hidden: 10,
+            steps: 3,
+            seed: 11,
+            ..EpConfig::default()
+        }
+    }
+
+    #[test]
+    fn single_layer_stack_matches_plain_engine_bitwise() {
+        let cfg = tiny_cfg(1, 2);
+        let (batch, _) = step_batch_from_config(&cfg).unwrap();
+        let mut plain = engine_from_config(&cfg).unwrap();
+        let mut stack = stack_from_config(&cfg).unwrap();
+        assert_eq!(stack.num_layers(), 1);
+        let a = plain.forward(&batch).unwrap();
+        let b = stack.forward(&batch).unwrap();
+        assert_eq!(a.output(), b.output());
+        let d_out = vec![0.1f32; batch.num_tokens() * 6];
+        let ga = a.backward(plain.as_mut(), &d_out).unwrap();
+        let mut gb = stack.zero_grads();
+        b.backward_into(&mut stack, &d_out, &mut gb).unwrap();
+        assert_eq!(ga, gb);
+        assert_eq!(stack.gather_params().unwrap(), plain.gather_params().unwrap());
+        assert_eq!(batch.copy_count(), 0);
+    }
+
+    #[test]
+    fn stack_equals_manually_chained_layers() {
+        let cfg = tiny_cfg(3, 2);
+        let (batch, _) = step_batch_from_config(&cfg).unwrap();
+        let d = cfg.d_model;
+        let mut stack = stack_from_config(&cfg).unwrap();
+
+        // the reference: three independent single-layer engines chained
+        // by hand through fresh StepBatches and backward_into_dx
+        let mut engines: Vec<Box<dyn ExecutionEngine>> = (0..3)
+            .map(|l| {
+                let store = ExpertStore::init(cfg.num_experts, d, cfg.d_hidden,
+                                              cfg.seed ^ layer_salt(l));
+                layer_engine_from_config(&cfg, store, cfg.checkpoint).unwrap()
+            })
+            .collect();
+        let mut xs = vec![batch.x().to_vec()];
+        let mut handles = Vec::new();
+        for (l, eng) in engines.iter_mut().enumerate() {
+            let b = if l == 0 {
+                batch.share()
+            } else {
+                let (ids, gates) = layer_gating_from_config(&cfg, l);
+                let disp = parallel_build(&ids, cfg.tokens, cfg.num_experts,
+                                          cfg.top_k);
+                StepBatch::new(disp, xs[l].clone(), gates).unwrap()
+            };
+            let h = eng.forward(&b).unwrap();
+            xs.push(h.output().to_vec());
+            handles.push(h);
+        }
+        let ref_out = xs.last().unwrap().clone();
+        let d_out = vec![0.05f32; cfg.tokens * d];
+        let mut ref_grads: Vec<ExpertGrads> = Vec::new();
+        let mut d_cur = d_out.clone();
+        for (l, (eng, h)) in engines
+            .iter_mut()
+            .zip(handles.into_iter())
+            .enumerate()
+            .collect::<Vec<_>>()
+            .into_iter()
+            .rev()
+        {
+            let mut g = eng.zero_grads();
+            if l > 0 {
+                let mut d_prev = vec![0.0f32; cfg.tokens * d];
+                eng.backward_into_dx(h, &d_cur, &mut g, &mut d_prev).unwrap();
+                d_cur = d_prev;
+            } else {
+                eng.backward_into(h, &d_cur, &mut g).unwrap();
+            }
+            ref_grads.push(g);
+        }
+        ref_grads.reverse();
+
+        // the stack must reproduce all of it bit-for-bit
+        let h = stack.forward(&batch).unwrap();
+        assert_eq!(h.output(), &ref_out[..], "stacked forward diverged");
+        let mut grads = stack.zero_grads();
+        h.backward_into(&mut stack, &d_out, &mut grads).unwrap();
+        for l in 0..3 {
+            assert_eq!(grads.layer_slice(l, cfg.num_experts), ref_grads[l],
+                       "layer {l} grads diverged");
+        }
+    }
+
+    #[test]
+    fn stack_session_handles_are_guarded() {
+        let cfg = tiny_cfg(2, 1);
+        let (batch, _) = step_batch_from_config(&cfg).unwrap();
+        let mut stack = stack_from_config(&cfg).unwrap();
+        let d_out = vec![0.1f32; batch.num_tokens() * cfg.d_model];
+        let mut grads = stack.zero_grads();
+        let stale = stack.forward(&batch).unwrap();
+        let fresh = stack.forward(&batch).unwrap();
+        assert!(stack.backward_into(stale, &d_out, &mut grads).is_err());
+        stack.backward_into(fresh, &d_out, &mut grads).unwrap();
+        // wrong-shape accumulators are rejected before any layer runs
+        let fresh = stack.forward(&batch).unwrap();
+        let mut wrong = ExpertGrads::zeros(cfg.num_experts, cfg.d_model,
+                                           cfg.d_hidden);
+        assert!(stack.backward_into(fresh, &d_out, &mut wrong).is_err());
+    }
+
+    #[test]
+    fn stack_validates_layer_shapes() {
+        let cfg = tiny_cfg(1, 2);
+        let store = ExpertStore::init(cfg.num_experts, cfg.d_model, cfg.d_hidden, 1);
+        let engine = layer_engine_from_config(&cfg, store, cfg.checkpoint).unwrap();
+        let mut stack = MoeStack::new(engine);
+        // mismatched expert count
+        let bad_cfg = EpConfig { num_experts: 8, ranks: 2, ..tiny_cfg(1, 2) };
+        let bad_store = ExpertStore::init(8, cfg.d_model, cfg.d_hidden, 1);
+        let bad = layer_engine_from_config(&bad_cfg, bad_store, cfg.checkpoint)
+            .unwrap();
+        let (ids, gates) = layer_gating_from_config(&cfg, 1);
+        assert!(stack
+            .push_layer(bad, cfg.tokens, cfg.top_k, ids.clone(), gates.clone())
+            .is_err());
+        // ragged draw
+        let store = ExpertStore::init(cfg.num_experts, cfg.d_model, cfg.d_hidden, 2);
+        let eng = layer_engine_from_config(&cfg, store, cfg.checkpoint).unwrap();
+        assert!(stack
+            .push_layer(eng, cfg.tokens, cfg.top_k, ids[..4].to_vec(), gates)
+            .is_err());
+    }
+
+    #[test]
+    fn auto_policies_fall_back_to_uniform_without_auto() {
+        let cfg = tiny_cfg(3, 2);
+        let pols = stack_policies_from_config(&cfg).unwrap();
+        assert_eq!(pols, vec![CheckpointPolicy::SaveInputs; 3]);
+        assert!(plan_from_config(&tiny_cfg(1, 2)).unwrap().is_none());
+        let plan = plan_from_config(&cfg).unwrap().unwrap();
+        assert_eq!(plan.strategy, "fixed");
+        assert_eq!(plan.choices.len(), 3);
+    }
+
+    #[test]
+    fn auto_plan_respects_budget_in_the_stack() {
+        let base = EpConfig { checkpoint_auto: true, ..tiny_cfg(3, 2) };
+        let hi = plan_from_config(&EpConfig { mem_budget_bytes: 0, ..base.clone() })
+            .unwrap()
+            .unwrap()
+            .save_all_peak_bytes;
+        let floor = plan_from_config(&base)
+            .unwrap()
+            .unwrap()
+            .floor_peak_bytes;
+        let budget = (hi + floor) / 2;
+        let cfg = EpConfig { mem_budget_bytes: budget, ..base };
+        let plan = plan_from_config(&cfg).unwrap().unwrap();
+        assert!(plan.feasible);
+        let pols = plan.policies();
+        assert!(pols.iter().any(|&p| p != CheckpointPolicy::SaveAll));
+        let mut stack = stack_from_config(&cfg).unwrap();
+        assert_eq!(stack.layer_policies(), pols);
+        let (batch, _) = step_batch_from_config(&cfg).unwrap();
+        let _ = stack.forward(&batch).unwrap();
+        let measured_peak = stack
+            .memory_per_rank()
+            .iter()
+            .map(|m| m.data_bytes)
+            .max()
+            .unwrap();
+        assert!(measured_peak <= budget,
+                "measured per-rank peak {measured_peak} over budget {budget}");
+    }
+}

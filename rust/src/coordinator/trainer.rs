@@ -20,6 +20,7 @@ use anyhow::{bail, Result};
 use crate::config::ep::EpConfig;
 use crate::config::train::TrainConfig;
 use crate::data::batcher::Batcher;
+use crate::memory::planner::CheckpointPlan;
 use crate::metrics::{Ema, MetricsSink, Peak};
 use crate::runtime::client::{Executable, Runtime};
 use crate::runtime::host::HostTensor;
@@ -29,6 +30,7 @@ use super::engine::{step_batch_from_config, ExecutionEngine, StepBatch,
 use super::optim::{clip_global_norm, optimizer_from_name, LrSchedule, Optimizer};
 use super::params::{ExpertGrads, ParamStore};
 use super::pipeline::timeline::OverlapReport;
+use super::stack::plan_from_config;
 
 /// Outcome of a training run.
 #[derive(Debug, Clone)]
@@ -211,6 +213,12 @@ pub struct EpTrainReport {
     pub step_ms_mean: f64,
     /// peak summed `data`-class bytes across any forward (policy-dependent)
     pub peak_data_bytes: u64,
+    /// peak single-rank `data`-class bytes across any forward — the
+    /// number `[ep] mem_budget_bytes` budgets (per-rank device memory)
+    pub peak_rank_data_bytes: u64,
+    /// the smart-checkpoint plan the config resolved to (multi-layer
+    /// stacks and `checkpoint = auto` runs; `None` for plain engines)
+    pub plan: Option<CheckpointPlan>,
     /// final-step global gradient L2 norm (pre-clip, pre-update)
     pub grad_norm: f64,
     /// learning rate the schedule produced for the final step
@@ -268,10 +276,38 @@ impl EpTrainer {
         let global_elems = batch.num_tokens() * d;
         let scale = 2.0 / global_elems as f32;
 
+        // the smart-checkpoint story of this run, emitted up front so
+        // the JSONL stream explains the per-layer policies before the
+        // first step lands (one solve per run — the engine the caller
+        // built resolved its own copy at construction, but the trainer
+        // only sees `dyn ExecutionEngine` and the report owns the plan)
+        let plan = plan_from_config(&self.cfg).map_err(anyhow::Error::msg)?;
+        if let Some(p) = &plan {
+            self.sink.emit_tagged("checkpoint_plan", &[("strategy", p.strategy)], &[
+                ("layers", p.choices.len() as f64),
+                ("budget_bytes", p.budget_bytes as f64),
+                ("projected_peak_bytes", p.projected_peak_bytes as f64),
+                ("save_all_peak_bytes", p.save_all_peak_bytes as f64),
+                ("floor_peak_bytes", p.floor_peak_bytes as f64),
+                ("extra_time_s", p.extra_time_s),
+                ("feasible", if p.feasible { 1.0 } else { 0.0 }),
+            ]);
+            for c in &p.choices {
+                self.sink.emit_tagged("checkpoint_plan_layer",
+                                      &[("policy", c.policy.name())], &[
+                    ("layer", c.layer as f64),
+                    ("projected_bytes", c.projected_bytes as f64),
+                    ("saved_vs_save_all", c.saved_vs_save_all as f64),
+                    ("extra_time_s", c.extra_time_s),
+                ]);
+            }
+        }
+
         let mut grads = self.engine.zero_grads();
         let mut losses = Vec::with_capacity(self.cfg.steps);
         let mut step_times = Vec::with_capacity(self.cfg.steps);
         let mut peak = Peak::new();
+        let mut peak_rank = Peak::new();
         let mut grad_norm = 0.0f64;
         let mut final_lr = self.cfg.lr;
         let mut clipped_steps = 0usize;
@@ -296,14 +332,13 @@ impl EpTrainer {
                     d_out[i] = scale * diff;
                 }
                 // sample between forward and backward: the session (and
-                // its policy-saved tensors) is resident right now
-                let data: u64 = self
-                    .engine
-                    .memory_per_rank()
-                    .iter()
-                    .map(|m| m.data_bytes)
-                    .sum();
-                peak.observe(data);
+                // its policy-saved tensors — every layer's, for stacks)
+                // is resident right now
+                let mem = self.engine.memory_per_rank();
+                peak.observe(mem.iter().map(|m| m.data_bytes).sum());
+                peak_rank.observe(
+                    mem.iter().map(|m| m.data_bytes).max().unwrap_or(0),
+                );
                 handle
                     .backward_into(self.engine.as_mut(), &d_out, &mut grads)
                     .map_err(anyhow::Error::msg)?;
@@ -350,6 +385,7 @@ impl EpTrainer {
             }
         }
         // chunk-pipelined engines: emit the final step's overlap roll-up
+        // plus the simulated-vs-measured calibration per phase
         let overlap = self.engine.overlap_report();
         if let Some(rep) = &overlap {
             let engine_name = self.engine.name();
@@ -363,6 +399,14 @@ impl EpTrainer {
                 ("exchange_bytes", rep.exchange_bytes as f64),
                 ("backward_bytes", rep.backward_bytes as f64),
             ]);
+            for c in rep.calibration() {
+                self.sink.emit_tagged("overlap_calibration",
+                                      &[("phase", c.phase.name())], &[
+                    ("simulated_s", c.simulated_s),
+                    ("measured_s", c.measured_s),
+                    ("ratio", c.ratio()),
+                ]);
+            }
         }
         // the zero-copy contract: nothing in the loop duplicated the
         // workload payload after construction
@@ -384,6 +428,8 @@ impl EpTrainer {
             step_ms_mean: step_times.iter().sum::<f64>()
                 / step_times.len().max(1) as f64,
             peak_data_bytes: peak.get(),
+            peak_rank_data_bytes: peak_rank.get(),
+            plan,
             grad_norm,
             final_lr,
             clipped_steps,
@@ -529,6 +575,61 @@ mod tests {
             assert!(rep.critical_path_s > 0.0);
             assert!(rep.exposed_comm_fraction() <= 1.0);
         }
+    }
+
+    #[test]
+    fn multi_layer_stack_trains_rank_and_chunk_invariant() {
+        let mk = |ranks: usize, chunks: usize, accum: usize| EpConfig {
+            num_layers: 2,
+            pipeline_chunks: chunks,
+            grad_accum: accum,
+            ..tiny_cfg(ranks)
+        };
+        let engine = engine_from_config(&mk(2, 0, 1)).unwrap();
+        let mut t = EpTrainer::new(engine, mk(2, 0, 1)).unwrap();
+        let r = t.run().unwrap();
+        assert!(r.final_loss < r.first_loss, "stack did not learn: {:?}",
+                r.losses);
+        assert!(r.peak_rank_data_bytes > 0);
+        assert!(r.plan.is_some(), "multi-layer runs must carry a plan");
+        // rank counts, chunkings, and grad-accum splits all reproduce
+        // the same stacked loss curve bit-for-bit
+        for cfg in [mk(1, 0, 1), mk(4, 0, 1), mk(2, 2, 1), mk(2, 0, 2)] {
+            assert_eq!(run_losses(cfg.clone()), r.losses,
+                       "R={} K={} accum={} stacked curve diverged",
+                       cfg.ranks, cfg.pipeline_chunks, cfg.grad_accum);
+        }
+        // and a single layer still reports no plan
+        let single = engine_from_config(&tiny_cfg(2)).unwrap();
+        let rs = EpTrainer::new(single, tiny_cfg(2)).unwrap().run().unwrap();
+        assert!(rs.plan.is_none());
+    }
+
+    #[test]
+    fn checkpoint_auto_respects_the_budget_it_plans() {
+        use crate::coordinator::stack::plan_from_config;
+        let base = EpConfig {
+            num_layers: 3,
+            checkpoint_auto: true,
+            ..tiny_cfg(2)
+        };
+        let unlimited = plan_from_config(&base).unwrap().unwrap();
+        let budget = (unlimited.save_all_peak_bytes + unlimited.floor_peak_bytes) / 2;
+        let cfg = EpConfig { mem_budget_bytes: budget, ..base };
+        let engine = engine_from_config(&cfg).unwrap();
+        let mut t = EpTrainer::new(engine, cfg).unwrap();
+        let r = t.run().unwrap();
+        let plan = r.plan.as_ref().expect("auto run carries its plan");
+        assert!(plan.feasible);
+        assert!(plan.policies().iter().any(|&p| p != CheckpointPolicy::SaveAll),
+                "a budget under the ceiling must downgrade something");
+        assert!(r.peak_rank_data_bytes <= budget,
+                "measured per-rank peak {} over budget {budget}",
+                r.peak_rank_data_bytes);
+        assert!(r.final_loss < r.first_loss);
+        // the planned run's loss curve matches every uniform-policy run
+        let uniform = run_losses(EpConfig { num_layers: 3, ..tiny_cfg(2) });
+        assert_eq!(r.losses, uniform, "planner policies changed the numerics");
     }
 
     #[test]

@@ -27,7 +27,13 @@
 //!   microbatching with bit-invariant loss curves, and the chunked
 //!   pipeline (`coordinator::pipeline`): K-chunk all-to-all overlapped
 //!   with expert compute, bit-identical to the barrier engines, priced
-//!   by a deterministic phase-timeline cost model (`OverlapReport`) —
+//!   by a deterministic phase-timeline cost model (`OverlapReport`,
+//!   with a simulated-vs-measured calibration hook), the multi-layer
+//!   stack (`coordinator::stack::MoeStack`: L chained expert layers
+//!   behind the same trait, backward ∂x chaining, per-layer checkpoint
+//!   policies) and the budget-driven smart-checkpoint planner
+//!   (`memory::planner`: pick a per-layer policy vector that fits
+//!   `[ep] mem_budget_bytes` at minimum recompute + re-exchange cost) —
 //!   plus config (`[train]`/`[ep]`), data pipeline, metrics, and
 //!   hand-rolled substrates (JSON, TOML, PRNG, thread pool, stats,
 //!   CLI) since this build is fully offline.

@@ -10,21 +10,31 @@
 //!                                paper §4 structures on a worked example
 //!   dispatch-bench [--tokens N] sort-build vs 3-step build
 //!   ep-sim [--ranks R ...]      expert-parallel all-to-all plan (dry run)
-//!   ep-bench [--ranks 1,2,4,8] [--checkpoint save-inputs]
-//!            [--pipeline-chunks K --link-gbps G --compute-gflops F] ...
+//!   ep-bench [--ranks 1,2,4,8] [--checkpoint save-inputs|auto]
+//!            [--num-layers L --mem-budget-bytes B]
+//!            [--pipeline-chunks K --chunk-balance tokens|rows
+//!             --link-gbps G --compute-gflops F] ...
 //!                                execute the plan: sharded engine vs
 //!                                single-rank, bit-equality + measured
 //!                                bytes + checkpoint-policy memory sweep
 //!                                + chunk-pipeline overlap matrix
+//!                                + multi-layer stack & checkpoint-plan
+//!                                report when --num-layers > 1 or
+//!                                --checkpoint auto
 //!   ep-train [--ranks R --steps N --grad-accum A --optimizer sgd|adam
-//!             --checkpoint save-all|save-inputs|recompute-all
-//!             --pipeline-chunks K --link-gbps G --compute-gflops F
+//!             --checkpoint save-all|save-inputs|recompute-all|auto
+//!             --num-layers L --mem-budget-bytes B
+//!             --pipeline-chunks K --chunk-balance tokens|rows
+//!             --link-gbps G --compute-gflops F
 //!             --lr-schedule constant|cosine|linear-warmup --clip-norm C
 //!             --placement contiguous|strided|load-aware
 //!             --config file.toml ...]
 //!                                step-session training on the
 //!                                expert-parallel engine (chunk-pipelined
-//!                                when --pipeline-chunks > 0)
+//!                                when --pipeline-chunks > 0; an L-layer
+//!                                MoeStack when --num-layers > 1, with
+//!                                per-layer policies from the budget
+//!                                planner under --checkpoint auto)
 //!   train  [--steps N --config file.toml ...]
 //!                                train the MoE LM end-to-end (AOT step)
 //!   inspect                      list artifacts + compile them
@@ -34,7 +44,7 @@
 use anyhow::{bail, Result};
 
 use moeblaze::bench_harness as bh;
-use moeblaze::config::ep::{EpConfig, Placement};
+use moeblaze::config::ep::{ChunkBalance, EpConfig, Placement};
 use moeblaze::config::model::Activation;
 use moeblaze::config::paper::{paper_configs, scaled_configs, PAPER_BLOCK, SCALED_BLOCK};
 use moeblaze::config::toml::Toml;
@@ -42,6 +52,7 @@ use moeblaze::config::train::TrainConfig;
 use moeblaze::coordinator::engine::{engine_from_config, step_batch_from_config,
                                     topology_from_config, ExecutionEngine,
                                     ShardedEngine, SingleRankEngine};
+use moeblaze::coordinator::stack::{plan_from_config, stack_with_plan};
 use moeblaze::coordinator::pipeline::timeline::CostModel;
 use moeblaze::coordinator::pipeline::PipelinedEngine;
 use moeblaze::coordinator::expert_parallel::EpTopology;
@@ -294,8 +305,16 @@ fn ep_config_from_args(args: &Args, parse_ranks: bool) -> Result<EpConfig> {
     cfg.lr = args.f64_or("lr", cfg.lr).map_err(anyhow::Error::msg)?;
     cfg.grad_accum = args.usize_or("grad-accum", cfg.grad_accum)
         .map_err(anyhow::Error::msg)?;
+    cfg.num_layers = args.usize_or("num-layers", cfg.num_layers)
+        .map_err(anyhow::Error::msg)?;
+    cfg.mem_budget_bytes = args
+        .usize_or("mem-budget-bytes", cfg.mem_budget_bytes as usize)
+        .map_err(anyhow::Error::msg)? as u64;
     cfg.pipeline_chunks = args.usize_or("pipeline-chunks", cfg.pipeline_chunks)
         .map_err(anyhow::Error::msg)?;
+    if let Some(b) = args.get("chunk-balance") {
+        cfg.chunk_balance = ChunkBalance::parse(b).map_err(anyhow::Error::msg)?;
+    }
     cfg.link_gbps = args.f64_or("link-gbps", cfg.link_gbps)
         .map_err(anyhow::Error::msg)?;
     cfg.compute_gflops = args.f64_or("compute-gflops", cfg.compute_gflops)
@@ -309,7 +328,12 @@ fn ep_config_from_args(args: &Args, parse_ranks: bool) -> Result<EpConfig> {
         cfg.optimizer = o.to_string();
     }
     if let Some(c) = args.get("checkpoint") {
-        cfg.checkpoint = CheckpointPolicy::parse(c).map_err(anyhow::Error::msg)?;
+        if c.eq_ignore_ascii_case("auto") {
+            cfg.checkpoint_auto = true;
+        } else {
+            cfg.checkpoint = CheckpointPolicy::parse(c).map_err(anyhow::Error::msg)?;
+            cfg.checkpoint_auto = false;
+        }
     }
     if let Some(p) = args.get("placement") {
         cfg.placement = Placement::parse(p).map_err(anyhow::Error::msg)?;
@@ -497,17 +521,48 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
         }
         println!("chunk-pipeline overlap (R={r}, {}, link {} GB/s, compute {} GFLOP/s)\n{}",
                  base.checkpoint, base.link_gbps, base.compute_gflops, t.render());
+
+        // multi-layer stack + smart-checkpoint planner: the explainable
+        // plan report, then a real stacked forward to check the measured
+        // per-rank peak against the budget the planner promised
+        if base.num_layers > 1 || base.checkpoint_auto {
+            let mut scfg = base.clone();
+            scfg.ranks = r;
+            let plan = plan_from_config(&scfg)
+                .map_err(anyhow::Error::msg)?
+                .expect("multi-layer/auto configs always plan");
+            println!("{}", plan.render());
+            let mut stack =
+                stack_with_plan(&scfg, Some(&plan)).map_err(anyhow::Error::msg)?;
+            let _session = stack.forward(&batch).map_err(anyhow::Error::msg)?;
+            let mem = stack.memory_per_rank();
+            let peak = mem.iter().map(|m| m.data_bytes).max().unwrap_or(0);
+            println!("{}", render_per_rank_memory(
+                &format!("stacked per-rank activation memory, measured \
+                          (L={}, R={r})", scfg.num_layers),
+                &mem));
+            if scfg.checkpoint_auto && scfg.mem_budget_bytes > 0 && plan.feasible {
+                if peak > scfg.mem_budget_bytes {
+                    bail!("stack per-rank peak {peak} exceeds the planned \
+                           budget {}", scfg.mem_budget_bytes);
+                }
+                println!("measured per-rank peak {} within budget {} ✓",
+                         human_bytes(peak), human_bytes(scfg.mem_budget_bytes));
+            }
+        }
     }
     Ok(())
 }
 
 fn cmd_ep_train(args: &Args) -> Result<()> {
     let cfg = ep_config_from_args(args, true)?;
-    println!("ep-train: {} ranks ({} placement), L={} E={} k={} d={} h={}, \
+    println!("ep-train: {} ranks ({} placement), {} layer(s), L={} E={} k={} d={} h={}, \
               {} steps × {} microbatches, {} optimizer, {} checkpointing",
-             cfg.ranks, cfg.placement, cfg.tokens, cfg.num_experts, cfg.top_k,
-             cfg.d_model, cfg.d_hidden, cfg.steps, cfg.grad_accum,
-             cfg.optimizer, cfg.checkpoint);
+             cfg.ranks, cfg.placement, cfg.num_layers, cfg.tokens,
+             cfg.num_experts, cfg.top_k, cfg.d_model, cfg.d_hidden, cfg.steps,
+             cfg.grad_accum, cfg.optimizer,
+             if cfg.checkpoint_auto { "auto (planner)".to_string() }
+             else { cfg.checkpoint.to_string() });
     let engine = engine_from_config(&cfg).map_err(anyhow::Error::msg)?;
     let mut trainer = EpTrainer::new(engine, cfg.clone())?;
     let report = trainer.run()?;
@@ -521,8 +576,19 @@ fn cmd_ep_train(args: &Args) -> Result<()> {
              human_bytes(t.dispatch_bytes), human_bytes(t.combine_bytes),
              human_bytes(t.grad_bytes), human_bytes(t.recompute_bytes),
              t.cross_rows, t.local_rows);
-    println!("peak data-class bytes across the run: {} ({} policy)",
-             human_bytes(report.peak_data_bytes), cfg.checkpoint);
+    println!("peak data-class bytes across the run: {} summed, {} on the \
+              busiest rank",
+             human_bytes(report.peak_data_bytes),
+             human_bytes(report.peak_rank_data_bytes));
+    if let Some(plan) = &report.plan {
+        println!("{}", plan.render());
+        if cfg.checkpoint_auto && cfg.mem_budget_bytes > 0 && plan.feasible
+            && report.peak_rank_data_bytes > cfg.mem_budget_bytes
+        {
+            bail!("measured per-rank peak {} exceeds the planned budget {}",
+                  report.peak_rank_data_bytes, cfg.mem_budget_bytes);
+        }
+    }
     println!("lr schedule `{}`: final lr {:.6}; clipped {}/{} steps (clip_norm {})",
              cfg.lr_schedule, report.final_lr, report.clipped_steps,
              report.steps, cfg.clip_norm);
@@ -533,6 +599,12 @@ fn cmd_ep_train(args: &Args) -> Result<()> {
                  rep.serial_path_s() * 1e3, rep.ideal_path_s() * 1e3,
                  100.0 * rep.exposed_comm_fraction(),
                  100.0 * rep.overlap_efficiency());
+        for c in rep.calibration() {
+            println!("  {} calibration: simulated {:.3} ms vs measured {:.3} ms \
+                      (ratio {:.2})",
+                     c.phase.name(), c.simulated_s * 1e3, c.measured_s * 1e3,
+                     c.ratio());
+        }
     }
     println!("{}", render_per_rank_memory(
         "per-rank activation memory (measured, last step)",

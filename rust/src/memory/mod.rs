@@ -1,8 +1,11 @@
-//! Activation-memory accounting (Figures 3 & 5).
+//! Activation-memory accounting (Figures 3 & 5) and the budget-driven
+//! smart activation-checkpoint planner.
 
 pub mod model;
+pub mod planner;
 pub mod report;
 
 pub use model::{baseline_bytes, moeblaze_bytes, per_rank_breakdown,
                 AccountingMode, MemoryBreakdown};
+pub use planner::{CheckpointPlan, CheckpointPlanner, LayerChoice, LayerModel};
 pub use report::render_per_rank_memory;

@@ -1,0 +1,567 @@
+//! Budget-driven smart activation-checkpoint planner — the paper's
+//! second pillar ("co-designed kernels with smart activation
+//! checkpoint") made an explicit optimization problem.
+//!
+//! Memory pressure in a *stacked* MoE model comes from every layer
+//! buffering its saved tensors across the whole forward: at the
+//! fwd→bwd boundary, layer l's policy-saved bytes are resident for all
+//! L layers simultaneously. Given a per-rank budget
+//! (`[ep] mem_budget_bytes`), [`CheckpointPlanner`] picks one
+//! [`CheckpointPolicy`] per layer that fits the budget at minimum
+//! estimated recompute + re-exchange cost:
+//!
+//! * each layer's memory side comes from the analytic [`LayerModel`],
+//!   which mirrors the engines' `memory_per_rank` data accounting
+//!   exactly (routed-slot residency + policy-saved bytes per slot), so
+//!   a plan's projected peak is an upper bound on what the stack then
+//!   measures (`Σ_l max_r ≥ max_r Σ_l`);
+//! * each layer's time side is priced on the `pipeline::timeline`
+//!   [`CostModel`]: the hidden-recompute FLOPs on the busiest rank
+//!   (`SaveInputs`, `RecomputeAll`) plus the backward re-run of the
+//!   dispatch exchange (`RecomputeAll` only).
+//!
+//! The solver is an exact Pareto dynamic program for L ≤
+//! [`EXACT_DP_MAX_LAYERS`] (partial plans dominated in both bytes and
+//! time are pruned; selection is lexicographic min-(time, bytes), which
+//! makes the chosen projected peak monotone non-increasing as the
+//! budget tightens), falling back to a greedy
+//! bytes-saved-per-extra-second downgrade sequence beyond that (or if
+//! the frontier ever explodes). An unlimited budget (0) short-circuits
+//! to all-`SaveAll` — the zero-extra-time plan no schedule can beat.
+//!
+//! The result is an explainable [`CheckpointPlan`]: per-layer choice,
+//! projected per-rank peak, and projected step-time delta, rendered by
+//! `ep-bench`/`ep-train` and emitted via `MetricsSink`.
+
+use crate::coordinator::expert_parallel::EpTopology;
+use crate::coordinator::pipeline::timeline::{bwd_flops_per_row, CostModel};
+use crate::dispatch::structures::DispatchStructures;
+use crate::util::json::Json;
+use crate::util::table::{human_bytes, Table};
+
+use super::model::CheckpointPolicy;
+
+/// Exact-DP cutoff: at or below this many layers the planner solves the
+/// selection problem exactly; above it (or on frontier blow-up) it runs
+/// the greedy downgrade sequence.
+pub const EXACT_DP_MAX_LAYERS: usize = 16;
+
+/// Pareto-frontier size backstop: beyond this many undominated partial
+/// plans the DP abandons exactness and the greedy pass takes over.
+const DP_STATE_CAP: usize = 100_000;
+
+/// Analytic memory + recompute-cost model of one stack layer, derived
+/// from its routing and the topology. `data_bytes` reproduces the
+/// engines' per-rank `data`-class accounting formula, so planner
+/// projections and engine measurements share one definition.
+#[derive(Debug, Clone)]
+pub struct LayerModel {
+    pub layer: usize,
+    pub d_model: u64,
+    pub d_hidden: u64,
+    /// routed slots landing on each rank's experts
+    pub slots_per_rank: Vec<u64>,
+    /// tokens resident on each rank (contiguous token partition)
+    pub resident_per_rank: Vec<u64>,
+    /// cross-rank bytes each rank re-gathers in a `RecomputeAll`
+    /// backward (destination-side incoming rows × 4·d)
+    pub regather_bytes_per_rank: Vec<u64>,
+}
+
+impl LayerModel {
+    /// Derive the model from one layer's dispatch structures under the
+    /// stack topology.
+    pub fn from_routing(layer: usize, disp: &DispatchStructures, topo: &EpTopology,
+                        d_model: usize, d_hidden: usize) -> LayerModel {
+        let r = topo.ranks;
+        let l = disp.num_tokens;
+        let plan = topo.plan(disp, d_model, 4);
+        let mut resident = vec![0u64; r];
+        for t in 0..l {
+            resident[topo.rank_of_token(t, l)] += 1;
+        }
+        let regather = (0..r)
+            .map(|dst| {
+                let rows: u64 = (0..r)
+                    .filter(|&src| src != dst)
+                    .map(|src| plan.rows(src, dst))
+                    .sum();
+                rows * 4 * d_model as u64
+            })
+            .collect();
+        LayerModel {
+            layer,
+            d_model: d_model as u64,
+            d_hidden: d_hidden as u64,
+            slots_per_rank: plan.per_rank_tokens,
+            resident_per_rank: resident,
+            regather_bytes_per_rank: regather,
+        }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.slots_per_rank.len()
+    }
+
+    /// `data`-class bytes this layer holds on `rank` under `policy` —
+    /// the engine formula: routed rows + resident/combined token rows,
+    /// plus the policy-saved tensors per slot.
+    pub fn data_bytes(&self, rank: usize, policy: CheckpointPolicy) -> u64 {
+        4 * self.d_model
+            * (self.slots_per_rank[rank] + 2 * self.resident_per_rank[rank])
+            + self.slots_per_rank[rank]
+                * policy.saved_bytes_per_slot(self.d_model, self.d_hidden, 4)
+    }
+
+    /// Max-rank projection of [`data_bytes`](LayerModel::data_bytes) —
+    /// the scalar the planner sums across layers. Conservative:
+    /// `Σ_l max_r ≥ max_r Σ_l`, so a plan that fits the budget here
+    /// fits it in the stack's measurement too.
+    pub fn projected_bytes(&self, policy: CheckpointPolicy) -> u64 {
+        (0..self.ranks())
+            .map(|r| self.data_bytes(r, policy))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Estimated extra backward time of `policy` versus `SaveAll`: the
+    /// hidden-activation recompute on the busiest rank, plus — for
+    /// `RecomputeAll` — the backward re-run of the dispatch exchange.
+    pub fn extra_time_s(&self, policy: CheckpointPolicy, cost: &CostModel) -> f64 {
+        let max_slots = self.slots_per_rank.iter().max().copied().unwrap_or(0);
+        let recompute_flops_per_row =
+            bwd_flops_per_row(self.d_model as usize, self.d_hidden as usize, true)
+                - bwd_flops_per_row(self.d_model as usize, self.d_hidden as usize,
+                                    false);
+        match policy {
+            CheckpointPolicy::SaveAll => 0.0,
+            CheckpointPolicy::SaveInputs => {
+                cost.compute_seconds(max_slots * recompute_flops_per_row)
+            }
+            CheckpointPolicy::RecomputeAll => {
+                cost.compute_seconds(max_slots * recompute_flops_per_row)
+                    + cost.comm_seconds(
+                        self.regather_bytes_per_rank.iter().max().copied().unwrap_or(0),
+                    )
+            }
+        }
+    }
+}
+
+/// One layer's line of a [`CheckpointPlan`].
+#[derive(Debug, Clone)]
+pub struct LayerChoice {
+    pub layer: usize,
+    pub policy: CheckpointPolicy,
+    /// projected max-rank data bytes this layer contributes to the peak
+    pub projected_bytes: u64,
+    /// bytes this choice saves versus keeping the layer at `SaveAll`
+    pub saved_vs_save_all: u64,
+    /// estimated extra backward time versus `SaveAll`
+    pub extra_time_s: f64,
+}
+
+/// The planner's explainable output: one policy per layer, the
+/// projected per-rank peak under that assignment, the all-`SaveAll` /
+/// all-`RecomputeAll` brackets, and the projected step-time delta.
+#[derive(Debug, Clone)]
+pub struct CheckpointPlan {
+    pub choices: Vec<LayerChoice>,
+    /// the budget the plan was solved against (0 = unlimited)
+    pub budget_bytes: u64,
+    /// Σ per-layer projected bytes — a per-rank peak upper bound
+    pub projected_peak_bytes: u64,
+    /// the all-`SaveAll` peak (the budgetless ceiling)
+    pub save_all_peak_bytes: u64,
+    /// the all-`RecomputeAll` peak (the feasibility floor)
+    pub floor_peak_bytes: u64,
+    /// Σ per-layer estimated extra backward time versus all-`SaveAll`
+    pub extra_time_s: f64,
+    /// whether the plan respects the budget (always true when unlimited)
+    pub feasible: bool,
+    /// how the plan was found: `unconstrained` | `dp` | `greedy` | `fixed`
+    pub strategy: &'static str,
+}
+
+impl CheckpointPlan {
+    /// The per-layer policy vector, layer-ascending.
+    pub fn policies(&self) -> Vec<CheckpointPolicy> {
+        self.choices.iter().map(|c| c.policy).collect()
+    }
+
+    /// Human-oriented report table (the "explainable plan" the CLI
+    /// prints).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(["layer", "policy", "projected bytes",
+                                "saved vs save-all", "extra bwd time"]);
+        for c in &self.choices {
+            t.row([
+                format!("l{}", c.layer),
+                c.policy.name().to_string(),
+                human_bytes(c.projected_bytes),
+                human_bytes(c.saved_vs_save_all),
+                format!("{:.3} ms", c.extra_time_s * 1e3),
+            ]);
+        }
+        let budget = if self.budget_bytes == 0 {
+            "unlimited".to_string()
+        } else {
+            human_bytes(self.budget_bytes)
+        };
+        format!(
+            "checkpoint plan ({}, budget {budget}, {})\n{}\
+             projected peak/rank {} (save-all {}, floor {}); \
+             projected extra bwd time {:.3} ms",
+            self.strategy,
+            if self.feasible { "feasible" } else { "INFEASIBLE" },
+            t.render(),
+            human_bytes(self.projected_peak_bytes),
+            human_bytes(self.save_all_peak_bytes),
+            human_bytes(self.floor_peak_bytes),
+            self.extra_time_s * 1e3,
+        )
+    }
+
+    /// Scalar + per-layer roll-up for JSONL metrics.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("strategy", Json::str(self.strategy)),
+            ("budget_bytes", Json::num(self.budget_bytes as f64)),
+            ("projected_peak_bytes", Json::num(self.projected_peak_bytes as f64)),
+            ("save_all_peak_bytes", Json::num(self.save_all_peak_bytes as f64)),
+            ("floor_peak_bytes", Json::num(self.floor_peak_bytes as f64)),
+            ("extra_time_s", Json::num(self.extra_time_s)),
+            ("feasible", Json::num(if self.feasible { 1.0 } else { 0.0 })),
+            ("layers", Json::arr(self.choices.iter().map(|c| {
+                Json::obj(vec![
+                    ("layer", Json::num(c.layer as f64)),
+                    ("policy", Json::str(c.policy.name())),
+                    ("projected_bytes", Json::num(c.projected_bytes as f64)),
+                    ("saved_vs_save_all", Json::num(c.saved_vs_save_all as f64)),
+                    ("extra_time_s", Json::num(c.extra_time_s)),
+                ])
+            }))),
+        ])
+    }
+}
+
+/// Per-layer (bytes, extra-time) candidates, indexed by
+/// `CheckpointPolicy::ALL` position.
+type Candidates = Vec<[(u64, f64); 3]>;
+
+/// The smart-checkpoint solver. See the module docs for the exact
+/// problem statement and guarantees.
+pub struct CheckpointPlanner {
+    cost: CostModel,
+}
+
+impl CheckpointPlanner {
+    pub fn new(cost: CostModel) -> CheckpointPlanner {
+        CheckpointPlanner { cost }
+    }
+
+    fn candidates(&self, models: &[LayerModel]) -> Candidates {
+        models
+            .iter()
+            .map(|m| {
+                let mut row = [(0u64, 0.0f64); 3];
+                for (i, &p) in CheckpointPolicy::ALL.iter().enumerate() {
+                    row[i] = (m.projected_bytes(p), m.extra_time_s(p, &self.cost));
+                }
+                row
+            })
+            .collect()
+    }
+
+    /// A no-optimization plan: every layer at `policy`, projections
+    /// computed, budget recorded as unlimited. What `checkpoint =
+    /// save-*` configs report for multi-layer stacks.
+    pub fn fixed(&self, models: &[LayerModel], policy: CheckpointPolicy) -> CheckpointPlan {
+        let pi = CheckpointPolicy::ALL
+            .iter()
+            .position(|&p| p == policy)
+            .expect("policy is one of ALL");
+        self.assemble(models, &vec![pi; models.len()], 0, "fixed")
+    }
+
+    /// Solve the budgeted selection. `budget_bytes = 0` means
+    /// unlimited: all-`SaveAll` with zero extra time.
+    pub fn plan(&self, models: &[LayerModel], budget_bytes: u64) -> CheckpointPlan {
+        let l = models.len();
+        if budget_bytes == 0 {
+            return self.assemble(models, &vec![0; l], 0, "unconstrained");
+        }
+        let cand = self.candidates(models);
+        if l <= EXACT_DP_MAX_LAYERS {
+            if let Some(choices) = pareto_dp(&cand, budget_bytes) {
+                return self.assemble(models, &choices, budget_bytes, "dp");
+            }
+        }
+        let choices = greedy(&cand, budget_bytes);
+        self.assemble(models, &choices, budget_bytes, "greedy")
+    }
+
+    fn assemble(&self, models: &[LayerModel], choices: &[usize], budget: u64,
+                strategy: &'static str) -> CheckpointPlan {
+        let rows: Vec<LayerChoice> = models
+            .iter()
+            .zip(choices)
+            .map(|(m, &ci)| {
+                let policy = CheckpointPolicy::ALL[ci];
+                LayerChoice {
+                    layer: m.layer,
+                    policy,
+                    projected_bytes: m.projected_bytes(policy),
+                    saved_vs_save_all: m.projected_bytes(CheckpointPolicy::SaveAll)
+                        - m.projected_bytes(policy),
+                    extra_time_s: m.extra_time_s(policy, &self.cost),
+                }
+            })
+            .collect();
+        let projected_peak: u64 = rows.iter().map(|c| c.projected_bytes).sum();
+        let save_all_peak: u64 = models
+            .iter()
+            .map(|m| m.projected_bytes(CheckpointPolicy::SaveAll))
+            .sum();
+        let floor_peak: u64 = models
+            .iter()
+            .map(|m| m.projected_bytes(CheckpointPolicy::RecomputeAll))
+            .sum();
+        let extra_time: f64 = rows.iter().map(|c| c.extra_time_s).sum();
+        CheckpointPlan {
+            feasible: budget == 0 || projected_peak <= budget,
+            choices: rows,
+            budget_bytes: budget,
+            projected_peak_bytes: projected_peak,
+            save_all_peak_bytes: save_all_peak,
+            floor_peak_bytes: floor_peak,
+            extra_time_s: extra_time,
+            strategy,
+        }
+    }
+}
+
+/// Exact solver: fold layers keeping the Pareto frontier of partial
+/// plans (bytes asc, time strictly desc — a partial plan beaten on both
+/// axes can never produce the lexicographic-min-(time, bytes) optimum).
+/// Partial plans over the budget are dropped immediately (bytes only
+/// grow). Returns `None` when nothing fits (caller reports the greedy
+/// floor) or the frontier exceeds the state cap.
+fn pareto_dp(cand: &Candidates, budget: u64) -> Option<Vec<usize>> {
+    let mut states: Vec<(u64, f64, Vec<u8>)> = vec![(0, 0.0, Vec::new())];
+    for layer_cand in cand {
+        let mut next: Vec<(u64, f64, Vec<u8>)> =
+            Vec::with_capacity(states.len() * 3);
+        for (b, t, ch) in &states {
+            for (pi, &(pb, pt)) in layer_cand.iter().enumerate() {
+                let nb = b + pb;
+                if nb > budget {
+                    continue;
+                }
+                let mut nch = ch.clone();
+                nch.push(pi as u8);
+                next.push((nb, t + pt, nch));
+            }
+        }
+        next.sort_by(|a, b| {
+            a.0.cmp(&b.0)
+                .then(a.1.partial_cmp(&b.1).expect("finite times"))
+                .then(a.2.cmp(&b.2))
+        });
+        let mut frontier: Vec<(u64, f64, Vec<u8>)> = Vec::new();
+        let mut best_time = f64::INFINITY;
+        for s in next {
+            if s.1 < best_time {
+                best_time = s.1;
+                frontier.push(s);
+            }
+        }
+        if frontier.is_empty() || frontier.len() > DP_STATE_CAP {
+            return None;
+        }
+        states = frontier;
+    }
+    states
+        .into_iter()
+        .min_by(|a, b| {
+            a.1.partial_cmp(&b.1)
+                .expect("finite times")
+                .then(a.0.cmp(&b.0))
+                .then(a.2.cmp(&b.2))
+        })
+        .map(|(_, _, ch)| ch.into_iter().map(|c| c as usize).collect())
+}
+
+/// Greedy fallback: start from all-`SaveAll` and repeatedly downgrade
+/// the layer with the best bytes-saved-per-extra-second ratio (ties to
+/// the lower layer) until the projected peak fits the budget or no
+/// downgrade saves anything. Tightening the budget just continues the
+/// same deterministic downgrade sequence, so the chosen peak is
+/// monotone non-increasing in the budget here too.
+fn greedy(cand: &Candidates, budget: u64) -> Vec<usize> {
+    let l = cand.len();
+    let mut choice = vec![0usize; l];
+    let mut peak: u64 = cand.iter().map(|c| c[0].0).sum();
+    while peak > budget {
+        let mut best: Option<(usize, u64, f64)> = None; // (layer, saved, ratio)
+        for (i, c) in cand.iter().enumerate() {
+            if choice[i] + 1 >= CheckpointPolicy::ALL.len() {
+                continue;
+            }
+            let (b_now, t_now) = c[choice[i]];
+            let (b_next, t_next) = c[choice[i] + 1];
+            let saved = b_now.saturating_sub(b_next);
+            if saved == 0 {
+                // a free-but-pointless downgrade (its busiest rank holds
+                // no slots): its ratio would be ∞ and it would stall the
+                // loop while real savings wait on other layers. Skipping
+                // is safe — a layer whose SaveAll→SaveInputs step saves
+                // nothing saves nothing at SaveInputs→RecomputeAll
+                // either (its max rank carries a slot-free residency).
+                continue;
+            }
+            let dt = t_next - t_now;
+            let ratio = if dt > 0.0 { saved as f64 / dt } else { f64::INFINITY };
+            let better = match &best {
+                None => true,
+                Some(&(_, _, r)) => ratio > r,
+            };
+            if better {
+                best = Some((i, saved, ratio));
+            }
+        }
+        match best {
+            Some((i, saved, _)) => {
+                choice[i] += 1;
+                peak -= saved;
+            }
+            None => break, // nothing left to save: report the floor we reached
+        }
+    }
+    choice
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::gating::synthetic_gating;
+    use crate::dispatch::parallel_build::parallel_build;
+    use crate::util::prng::Rng;
+
+    fn model(layer: usize, l: usize, e: usize, k: usize, d: usize, h: usize,
+             ranks: usize, seed: u64) -> LayerModel {
+        let mut rng = Rng::new(seed);
+        let g = synthetic_gating(&mut rng, l, e, k, 0.8);
+        let disp = parallel_build(&g.topk_ids, l, e, k);
+        let topo = EpTopology::new(ranks, e).unwrap();
+        LayerModel::from_routing(layer, &disp, &topo, d, h)
+    }
+
+    fn models(n: usize) -> Vec<LayerModel> {
+        (0..n).map(|i| model(i, 48, 8, 2, 8, 12, 4, 100 + i as u64)).collect()
+    }
+
+    #[test]
+    fn layer_model_bytes_decrease_with_policy_and_cover_slots() {
+        let m = model(0, 64, 8, 2, 8, 12, 4, 3);
+        assert_eq!(m.slots_per_rank.iter().sum::<u64>(), 128);
+        assert_eq!(m.resident_per_rank.iter().sum::<u64>(), 64);
+        let all = m.projected_bytes(CheckpointPolicy::SaveAll);
+        let inp = m.projected_bytes(CheckpointPolicy::SaveInputs);
+        let rec = m.projected_bytes(CheckpointPolicy::RecomputeAll);
+        assert!(all > inp && inp > rec, "{all} {inp} {rec}");
+        // times run the other way
+        let cost = CostModel::default();
+        assert_eq!(m.extra_time_s(CheckpointPolicy::SaveAll, &cost), 0.0);
+        assert!(m.extra_time_s(CheckpointPolicy::RecomputeAll, &cost)
+            > m.extra_time_s(CheckpointPolicy::SaveInputs, &cost));
+    }
+
+    #[test]
+    fn unlimited_budget_is_all_save_all() {
+        let planner = CheckpointPlanner::new(CostModel::default());
+        let ms = models(4);
+        let plan = planner.plan(&ms, 0);
+        assert_eq!(plan.strategy, "unconstrained");
+        assert!(plan.feasible);
+        assert!(plan
+            .policies()
+            .iter()
+            .all(|&p| p == CheckpointPolicy::SaveAll));
+        assert_eq!(plan.projected_peak_bytes, plan.save_all_peak_bytes);
+        assert_eq!(plan.extra_time_s, 0.0);
+        // a budget above the ceiling resolves to the same plan via DP
+        let roomy = planner.plan(&ms, plan.save_all_peak_bytes + 1);
+        assert_eq!(roomy.policies(), plan.policies());
+        assert_eq!(roomy.strategy, "dp");
+    }
+
+    #[test]
+    fn mid_budget_yields_mixed_feasible_plan() {
+        let planner = CheckpointPlanner::new(CostModel::default());
+        let ms = models(4);
+        let hi = planner.plan(&ms, 0).save_all_peak_bytes;
+        let lo: u64 = ms
+            .iter()
+            .map(|m| m.projected_bytes(CheckpointPolicy::RecomputeAll))
+            .sum();
+        let budget = (hi + lo) / 2;
+        let plan = planner.plan(&ms, budget);
+        assert!(plan.feasible, "{plan:?}");
+        assert!(plan.projected_peak_bytes <= budget);
+        let pols = plan.policies();
+        assert!(pols.iter().any(|&p| p != CheckpointPolicy::SaveAll),
+                "budget below ceiling must downgrade something: {pols:?}");
+        assert!(pols.iter().any(|&p| p != CheckpointPolicy::RecomputeAll),
+                "mid budget should not need the floor: {pols:?}");
+    }
+
+    #[test]
+    fn impossible_budget_reports_infeasible_floor() {
+        let planner = CheckpointPlanner::new(CostModel::default());
+        let ms = models(3);
+        let plan = planner.plan(&ms, 1);
+        assert!(!plan.feasible);
+        assert_eq!(plan.strategy, "greedy");
+        assert!(plan
+            .policies()
+            .iter()
+            .all(|&p| p == CheckpointPolicy::RecomputeAll));
+        assert_eq!(plan.projected_peak_bytes, plan.floor_peak_bytes);
+    }
+
+    #[test]
+    fn greedy_matches_dp_feasibility_on_many_layers() {
+        // 20 layers > EXACT_DP_MAX_LAYERS forces the greedy path
+        let planner = CheckpointPlanner::new(CostModel::default());
+        let ms = models(20);
+        let hi = planner.plan(&ms, 0).save_all_peak_bytes;
+        let plan = planner.plan(&ms, hi * 3 / 4);
+        assert_eq!(plan.strategy, "greedy");
+        assert!(plan.feasible);
+        assert!(plan.projected_peak_bytes <= hi * 3 / 4);
+    }
+
+    #[test]
+    fn render_and_json_carry_the_story() {
+        let planner = CheckpointPlanner::new(CostModel::default());
+        let ms = models(3);
+        let plan = planner.plan(&ms, planner.plan(&ms, 0).save_all_peak_bytes / 2);
+        let s = plan.render();
+        assert!(s.contains("checkpoint plan"));
+        assert!(s.contains("projected peak/rank"));
+        for c in &plan.choices {
+            assert!(s.contains(c.policy.name()), "{s}");
+        }
+        let j = Json::parse(&plan.to_json().to_string()).unwrap();
+        assert_eq!(j.get("layers").unwrap().as_arr().unwrap().len(), 3);
+        assert!(j.get("projected_peak_bytes").unwrap().as_f64().unwrap() > 0.0);
+        // fixed plans render too
+        let fx = planner.fixed(&ms, CheckpointPolicy::SaveInputs);
+        assert_eq!(fx.strategy, "fixed");
+        assert!(fx
+            .policies()
+            .iter()
+            .all(|&p| p == CheckpointPolicy::SaveInputs));
+    }
+}

@@ -17,7 +17,7 @@
 //!   barrier engine's, and the comm-buffer window strictly shrinks for
 //!   K > 1.
 
-use moeblaze::config::ep::EpConfig;
+use moeblaze::config::ep::{ChunkBalance, EpConfig};
 use moeblaze::coordinator::engine::{engine_from_config, ExecutionEngine,
                                     ShardedEngine, StepBatch};
 use moeblaze::coordinator::expert_parallel::EpTopology;
@@ -253,6 +253,126 @@ fn pipelined_peak_memory_never_exceeds_the_barrier_engine() {
     let whole: u64 = barrier_mem.iter().map(|m| m.extra_bytes).sum();
     assert!(chunked < whole,
             "K=4 comm-buffer peak {chunked} did not drop below {whole}");
+}
+
+/// Max over chunks of the busiest rank's forward compute FLOPs — the
+/// chunk-raggedness metric the rows balancer exists to shrink.
+fn peak_chunk_flops(eng: &PipelinedEngine) -> u64 {
+    let rep = eng.overlap_report().expect("pipelined engine reports");
+    let mut per_chunk = vec![0u64; rep.chunks];
+    for s in rep
+        .spans
+        .iter()
+        .filter(|s| s.phase == Phase::Compute && !s.backward)
+    {
+        per_chunk[s.chunk] = per_chunk[s.chunk].max(s.flops);
+    }
+    per_chunk.into_iter().max().unwrap_or(0)
+}
+
+#[test]
+fn row_balanced_chunks_flatten_a_skewed_router_bit_identically() {
+    // hand-built skew: 16 tokens all on expert 0, then 16 cycling
+    // experts 1..3 — token-count chunks put the whole hot block in one
+    // chunk; row-balanced bounds (computed by hand: cut at token 11 for
+    // K = 2) split it
+    let (l, e, d, h) = (32usize, 4usize, 6usize, 8usize);
+    let mut ids = vec![0u32; 16];
+    for t in 0..16 {
+        ids.push(1 + (t % 3) as u32);
+    }
+    let disp = parallel_build(&ids, l, e, 1);
+    let mut rng = Rng::new(77);
+    let x = rng.normal_vec(l * d, 1.0);
+    let gates = vec![1.0f32; l];
+    let batch = StepBatch::new(disp, x, gates).unwrap();
+    let store = ExpertStore::init(e, d, h, 5);
+    let topo = EpTopology::new(2, e).unwrap();
+
+    let mut barrier = ShardedEngine::new(topo.clone(), &store, 2).unwrap();
+    let reference = barrier.forward(&batch).unwrap().into_output();
+    let plan = topo.plan(batch.disp(), d, 4);
+
+    let mut metrics = Vec::new();
+    for balance in [ChunkBalance::Tokens, ChunkBalance::Rows] {
+        let mut eng = PipelinedEngine::new(topo.clone(), &store, 2, 2).unwrap();
+        eng.set_chunk_balance(balance);
+        let out = eng.forward(&batch).unwrap().into_output();
+        assert_eq!(out, reference, "{balance}: outputs diverged from barrier");
+        // the token-residency invariant survives any contiguous cut
+        assert_eq!(eng.traffic().dispatch_bytes, plan.cross_rank_bytes(),
+                   "{balance}: chunking changed the exchanged bytes");
+        metrics.push(peak_chunk_flops(&eng));
+    }
+    assert!(metrics[1] < metrics[0],
+            "rows balance did not flatten the hot chunk: {metrics:?}");
+    // hand-checked bounds: 16 * fwd_flops vs 11 * fwd_flops
+    let per_row =
+        moeblaze::coordinator::pipeline::timeline::fwd_flops_per_row(d, h);
+    assert_eq!(metrics[0], 16 * per_row);
+    assert_eq!(metrics[1], 11 * per_row);
+}
+
+#[test]
+fn row_balanced_chunks_stay_bit_identical_under_training_and_grads() {
+    // fuzzier check across K × policy on a random skewed router:
+    // row-balanced chunking must leave outputs, grads, and traffic
+    // exactly as the barrier engine computes them
+    let batch = random_batch(72, 8, 2, 10, 1.6, 91);
+    let store = ExpertStore::init(8, 10, 14, 2);
+    let topo = EpTopology::new(4, 8).unwrap();
+    let d_out: Vec<f32> = {
+        let mut rng = Rng::new(6);
+        rng.normal_vec(72 * 10, 1.0)
+    };
+    for policy in CheckpointPolicy::ALL {
+        let mut barrier =
+            ShardedEngine::with_policy(topo.clone(), &store, 4, policy).unwrap();
+        let ref_handle = barrier.forward(&batch).unwrap();
+        let ref_y = ref_handle.output().to_vec();
+        let ref_grads = ref_handle.backward(&mut barrier, &d_out).unwrap();
+        for chunks in [2usize, 3, 5] {
+            let mut eng = PipelinedEngine::with_policy(
+                topo.clone(), &store, 4, policy, chunks, CostModel::default())
+                .unwrap();
+            eng.set_chunk_balance(ChunkBalance::Rows);
+            let handle = eng.forward(&batch).unwrap();
+            assert_eq!(handle.output(), &ref_y[..],
+                       "rows K={chunks} {policy}: outputs diverged");
+            let grads = handle.backward(&mut eng, &d_out).unwrap();
+            assert_eq!(grads, ref_grads,
+                       "rows K={chunks} {policy}: grads diverged");
+            assert_eq!(eng.traffic(), barrier.traffic(),
+                       "rows K={chunks} {policy}: traffic diverged");
+        }
+    }
+}
+
+#[test]
+fn calibration_reports_measured_wall_clock_per_phase() {
+    let batch = random_batch(64, 8, 2, 8, 0.7, 12);
+    let store = ExpertStore::init(8, 8, 12, 9);
+    let topo = EpTopology::new(4, 8).unwrap();
+    let mut eng = PipelinedEngine::new(topo, &store, 4, 4).unwrap();
+    let handle = eng.forward(&batch).unwrap();
+    let d_out = vec![0.1f32; 64 * 8];
+    handle.backward(&mut eng, &d_out).unwrap();
+    let rep = eng.overlap_report().unwrap();
+    let cal = rep.calibration();
+    assert_eq!(cal.len(), 3);
+    for c in &cal {
+        assert!(c.measured_s > 0.0,
+                "{}: no wall-clock recorded", c.phase.name());
+        assert!(c.simulated_s >= 0.0 && c.ratio() >= 0.0 && c.ratio().is_finite(),
+                "{}: bad calibration {c:?}", c.phase.name());
+    }
+    // simulated sides must agree with the span sums the report carries
+    for c in &cal {
+        assert_eq!(c.simulated_s, rep.simulated_phase_s(c.phase));
+    }
+    // and the JSON roll-up carries the calibration array
+    let j = moeblaze::util::json::Json::parse(&rep.to_json().to_string()).unwrap();
+    assert_eq!(j.get("calibration").unwrap().as_arr().unwrap().len(), 3);
 }
 
 #[test]

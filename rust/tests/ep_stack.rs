@@ -1,0 +1,238 @@
+//! Acceptance gate for the multi-layer MoE stack + smart-checkpoint
+//! planner (ISSUE 4):
+//!
+//! * an L-layer `MoeStack` is bit-identical to L manually-chained
+//!   single-layer sessions (outputs, gradients, ∂x) for every rank
+//!   count R, pipeline chunking K, and per-layer policy vector;
+//! * an L = 1 stack with a uniform policy reproduces today's
+//!   `ShardedEngine`/`PipelinedEngine` outputs, gradients, and
+//!   `EpTrainer` loss curves bit-for-bit;
+//! * stacked training is bit-invariant to R × K × grad-accum × the
+//!   per-layer policy assignment;
+//! * `checkpoint = auto` with a budget between the all-save-all and
+//!   all-recompute-all peaks produces a mixed per-layer plan whose
+//!   *measured* per-rank peak respects the budget.
+
+use moeblaze::config::ep::EpConfig;
+use moeblaze::coordinator::engine::{engine_from_config, layer_engine_from_config,
+                                    step_batch_from_config, ExecutionEngine,
+                                    StepBatch};
+use moeblaze::coordinator::params::{ExpertGrads, ExpertStore};
+use moeblaze::coordinator::stack::{layer_gating_from_config, plan_from_config,
+                                   stack_from_config};
+use moeblaze::coordinator::trainer::EpTrainer;
+use moeblaze::dispatch::parallel_build::parallel_build;
+use moeblaze::memory::model::CheckpointPolicy;
+
+fn base_cfg(layers: usize, ranks: usize, chunks: usize) -> EpConfig {
+    EpConfig {
+        num_layers: layers,
+        ranks,
+        pipeline_chunks: chunks,
+        tokens: 36,
+        num_experts: 8,
+        top_k: 2,
+        d_model: 8,
+        d_hidden: 12,
+        steps: 4,
+        lr: 0.05,
+        seed: 21,
+        ..EpConfig::default()
+    }
+}
+
+/// Per-layer expert-store seed, mirroring `stack_from_config`'s
+/// layer-salted derivation (layer 0 = the config seed itself).
+fn layer_seed(seed: u64, layer: usize) -> u64 {
+    seed ^ (layer as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Reference implementation of the acceptance criterion's "L sequential
+/// single-layer sessions": independent engines chained by hand through
+/// fresh `StepBatch`es forward, and `backward_into_dx` in reverse.
+/// Returns (final output, per-layer grads).
+fn chained_reference(cfg: &EpConfig, policies: &[CheckpointPolicy], batch: &StepBatch,
+                     d_out: &[f32]) -> (Vec<f32>, Vec<ExpertGrads>) {
+    let d = cfg.d_model;
+    let mut engines: Vec<Box<dyn ExecutionEngine>> = policies
+        .iter()
+        .enumerate()
+        .map(|(l, &p)| {
+            let store = ExpertStore::init(cfg.num_experts, d, cfg.d_hidden,
+                                          layer_seed(cfg.seed, l));
+            layer_engine_from_config(cfg, store, p).unwrap()
+        })
+        .collect();
+    let mut x_cur = batch.x().to_vec();
+    let mut handles = Vec::new();
+    for (l, eng) in engines.iter_mut().enumerate() {
+        let b = if l == 0 {
+            batch.share()
+        } else {
+            let (ids, gates) = layer_gating_from_config(cfg, l);
+            let disp = parallel_build(&ids, cfg.tokens, cfg.num_experts, cfg.top_k);
+            StepBatch::new(disp, x_cur.clone(), gates).unwrap()
+        };
+        let h = eng.forward(&b).unwrap();
+        x_cur = h.output().to_vec();
+        handles.push(h);
+    }
+    let out = x_cur;
+    let mut grads: Vec<Option<ExpertGrads>> = (0..engines.len()).map(|_| None).collect();
+    let mut d_cur = d_out.to_vec();
+    for l in (0..engines.len()).rev() {
+        let h = handles.pop().unwrap();
+        let mut g = engines[l].zero_grads();
+        if l > 0 {
+            let mut d_prev = vec![0.0f32; cfg.tokens * d];
+            engines[l].backward_into_dx(h, &d_cur, &mut g, &mut d_prev).unwrap();
+            d_cur = d_prev;
+        } else {
+            engines[l].backward_into(h, &d_cur, &mut g).unwrap();
+        }
+        grads[l] = Some(g);
+    }
+    (out, grads.into_iter().map(Option::unwrap).collect())
+}
+
+#[test]
+fn stack_matrix_matches_chained_sessions_bitwise() {
+    // the acceptance matrix: L × R × K × per-layer policy vector
+    let policy_vectors: [&[CheckpointPolicy]; 3] = [
+        &[CheckpointPolicy::SaveInputs, CheckpointPolicy::SaveInputs],
+        &[CheckpointPolicy::SaveAll, CheckpointPolicy::RecomputeAll],
+        &[CheckpointPolicy::RecomputeAll, CheckpointPolicy::SaveAll,
+          CheckpointPolicy::SaveInputs],
+    ];
+    for ranks in [1usize, 2, 4] {
+        for chunks in [0usize, 2] {
+            for policies in policy_vectors {
+                let layers = policies.len();
+                let cfg = base_cfg(layers, ranks, chunks);
+                // drive per-layer policies through a hand-built stack:
+                // stack_from_config is uniform-or-auto, so assemble here
+                let mut stack = {
+                    let store = ExpertStore::init(cfg.num_experts, cfg.d_model,
+                                                  cfg.d_hidden,
+                                                  layer_seed(cfg.seed, 0));
+                    let first =
+                        layer_engine_from_config(&cfg, store, policies[0]).unwrap();
+                    let mut s = moeblaze::coordinator::stack::MoeStack::new(first);
+                    for (l, &p) in policies.iter().enumerate().skip(1) {
+                        let store = ExpertStore::init(cfg.num_experts, cfg.d_model,
+                                                      cfg.d_hidden,
+                                                      layer_seed(cfg.seed, l));
+                        let eng = layer_engine_from_config(&cfg, store, p).unwrap();
+                        let (ids, gates) = layer_gating_from_config(&cfg, l);
+                        s.push_layer(eng, cfg.tokens, cfg.top_k, ids, gates).unwrap();
+                    }
+                    s
+                };
+                let (batch, _) = step_batch_from_config(&cfg).unwrap();
+                let d_out = vec![0.05f32; cfg.tokens * cfg.d_model];
+                let (ref_out, ref_grads) =
+                    chained_reference(&cfg, policies, &batch, &d_out);
+
+                let h = stack.forward(&batch).unwrap();
+                assert_eq!(h.output(), &ref_out[..],
+                           "L={layers} R={ranks} K={chunks}: stacked forward \
+                            diverged");
+                let mut grads = stack.zero_grads();
+                h.backward_into(&mut stack, &d_out, &mut grads).unwrap();
+                for (l, rg) in ref_grads.iter().enumerate() {
+                    assert_eq!(&grads.layer_slice(l, cfg.num_experts), rg,
+                               "L={layers} R={ranks} K={chunks}: layer {l} \
+                                grads diverged");
+                }
+                assert_eq!(batch.copy_count(), 0,
+                           "the stack deep-copied the workload");
+            }
+        }
+    }
+}
+
+fn run_losses(cfg: EpConfig) -> Vec<f64> {
+    let engine = engine_from_config(&cfg).unwrap();
+    let mut t = EpTrainer::new(engine, cfg).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.final_loss < r.first_loss, "no learning: {:?}", r.losses);
+    r.losses
+}
+
+#[test]
+fn single_layer_stack_loss_curves_match_todays_engines() {
+    // L = 1 + uniform policy: stack ≡ ShardedEngine / PipelinedEngine,
+    // pinned on the EpTrainer loss curve (stack built explicitly so the
+    // plain-engine fast path in engine_from_config cannot mask it)
+    for chunks in [0usize, 2] {
+        for policy in CheckpointPolicy::ALL {
+            let cfg = EpConfig { checkpoint: policy, ..base_cfg(1, 2, chunks) };
+            let reference = run_losses(cfg.clone());
+            let stack = stack_from_config(&cfg).unwrap();
+            assert_eq!(stack.num_layers(), 1);
+            let mut t = EpTrainer::new(Box::new(stack), cfg).unwrap();
+            let r = t.run().unwrap();
+            assert_eq!(r.losses, reference,
+                       "K={chunks} {policy}: L=1 stack diverged from the \
+                        plain engine");
+        }
+    }
+}
+
+#[test]
+fn stacked_training_is_invariant_to_ranks_chunks_accum_and_policies() {
+    let reference = run_losses(base_cfg(2, 1, 0));
+    for (ranks, chunks, accum, policy) in [
+        (2usize, 0usize, 1usize, CheckpointPolicy::SaveInputs),
+        (4, 0, 1, CheckpointPolicy::SaveAll),
+        (2, 2, 1, CheckpointPolicy::RecomputeAll),
+        (2, 0, 3, CheckpointPolicy::SaveInputs),
+        (4, 4, 2, CheckpointPolicy::RecomputeAll),
+    ] {
+        let cfg = EpConfig {
+            grad_accum: accum,
+            checkpoint: policy,
+            ..base_cfg(2, ranks, chunks)
+        };
+        assert_eq!(run_losses(cfg), reference,
+                   "R={ranks} K={chunks} accum={accum} {policy}: stacked \
+                    loss curve diverged");
+    }
+}
+
+#[test]
+fn checkpoint_auto_produces_mixed_budgeted_plan_end_to_end() {
+    let base = EpConfig { checkpoint_auto: true, ..base_cfg(4, 2, 0) };
+    let brackets = plan_from_config(&EpConfig { mem_budget_bytes: 0, ..base.clone() })
+        .unwrap()
+        .unwrap();
+    let budget = (brackets.save_all_peak_bytes + brackets.floor_peak_bytes) / 2;
+    let cfg = EpConfig { mem_budget_bytes: budget, ..base };
+
+    let plan = plan_from_config(&cfg).unwrap().unwrap();
+    assert!(plan.feasible);
+    assert!(plan.projected_peak_bytes <= budget);
+    let pols = plan.policies();
+    assert!(pols.iter().any(|&p| p != CheckpointPolicy::SaveAll),
+            "budget under the ceiling must downgrade: {pols:?}");
+    assert!(pols.iter().any(|&p| p != CheckpointPolicy::RecomputeAll),
+            "mid budget should not need the floor: {pols:?}");
+    // the report is explainable: one line per layer, budget + peaks
+    let rendered = plan.render();
+    for l in 0..4 {
+        assert!(rendered.contains(&format!("l{l}")), "{rendered}");
+    }
+    assert!(rendered.contains("projected peak/rank"), "{rendered}");
+
+    // and the real stacked run respects what the plan promised
+    let engine = engine_from_config(&cfg).unwrap();
+    let mut t = EpTrainer::new(engine, cfg.clone()).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.peak_rank_data_bytes <= budget,
+            "measured per-rank peak {} over budget {budget}",
+            r.peak_rank_data_bytes);
+    assert_eq!(r.plan.as_ref().unwrap().policies(), pols);
+    // planner choices never change the numerics, only the memory
+    assert_eq!(r.losses, run_losses(base_cfg(4, 2, 0)),
+               "planned policies changed the loss curve");
+}

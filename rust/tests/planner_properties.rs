@@ -1,0 +1,140 @@
+//! Property suite for `memory::planner::CheckpointPlanner` (ISSUE 4):
+//!
+//! (a) the chosen plan never exceeds the budget whenever any feasible
+//!     plan exists (the all-recompute floor fits);
+//! (b) the chosen projected peak is monotone non-increasing as the
+//!     budget tightens;
+//! (c) an unlimited budget yields all-`SaveAll`, and no plan the DP can
+//!     produce beats it on estimated time.
+//!
+//! Fuzzed over random (L, R, routing skew) layer sets, both solver
+//! regimes (exact DP at L ≤ 16, greedy above).
+
+use moeblaze::coordinator::expert_parallel::EpTopology;
+use moeblaze::coordinator::pipeline::timeline::CostModel;
+use moeblaze::dispatch::gating::synthetic_gating;
+use moeblaze::dispatch::parallel_build::parallel_build;
+use moeblaze::memory::model::CheckpointPolicy;
+use moeblaze::memory::planner::{CheckpointPlanner, LayerModel};
+use moeblaze::util::prng::Rng;
+
+fn random_models(rng: &mut Rng, layers: usize, ranks: usize) -> Vec<LayerModel> {
+    let e = ranks * (1 + (rng.next_u64() % 3) as usize);
+    (0..layers)
+        .map(|l| {
+            let tokens = 8 + (rng.next_u64() % 56) as usize;
+            let k = 1 + (rng.next_u64() % e.min(3) as u64) as usize;
+            let d = 4 + (rng.next_u64() % 10) as usize;
+            let h = 6 + (rng.next_u64() % 12) as usize;
+            let skew = (rng.next_u64() % 4) as f64 * 0.6;
+            let g = synthetic_gating(rng, tokens, e, k, skew);
+            let disp = parallel_build(&g.topk_ids, tokens, e, k);
+            let topo = EpTopology::new(ranks, e).unwrap();
+            LayerModel::from_routing(l, &disp, &topo, d, h)
+        })
+        .collect()
+}
+
+#[test]
+fn chosen_plan_fits_every_feasible_budget() {
+    // (a): sweep budgets from below the floor to above the ceiling —
+    // whenever the floor fits, the plan must fit too
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..40u64 {
+        let ranks = [1usize, 2, 4][(rng.next_u64() % 3) as usize];
+        let layers = 1 + (rng.next_u64() % 19) as usize; // spans DP + greedy
+        let models = random_models(&mut rng, layers, ranks);
+        let planner = CheckpointPlanner::new(CostModel::default());
+        let ceiling = planner.plan(&models, 0).save_all_peak_bytes;
+        let floor: u64 = models
+            .iter()
+            .map(|m| m.projected_bytes(CheckpointPolicy::RecomputeAll))
+            .sum();
+        for step in 0..8u64 {
+            // budgets straddling [floor · ~0.9, ceiling · ~1.1]
+            let budget = floor * 9 / 10
+                + (ceiling * 11 / 10 - floor * 9 / 10) * step / 7;
+            let budget = budget.max(1);
+            let plan = planner.plan(&models, budget);
+            assert_eq!(plan.choices.len(), layers, "case {case}");
+            if budget >= floor {
+                assert!(plan.feasible,
+                        "case {case}: feasible budget {budget} (floor {floor}) \
+                         reported infeasible");
+                assert!(plan.projected_peak_bytes <= budget,
+                        "case {case}: plan {} over budget {budget}",
+                        plan.projected_peak_bytes);
+            } else {
+                // nothing fits: the planner reports the floor, honestly
+                assert!(!plan.feasible, "case {case}");
+                assert_eq!(plan.projected_peak_bytes, plan.floor_peak_bytes,
+                           "case {case}: infeasible plan is not the floor");
+            }
+        }
+    }
+}
+
+#[test]
+fn projected_peak_is_monotone_in_the_budget() {
+    // (b): tightening the budget can only lower (or keep) the chosen
+    // projected peak — for the DP regime and the greedy regime alike
+    let mut rng = Rng::new(0xCAFE);
+    for case in 0..30u64 {
+        let ranks = [1usize, 2, 4][(rng.next_u64() % 3) as usize];
+        let layers = [2usize, 4, 8, 20][(rng.next_u64() % 4) as usize];
+        let models = random_models(&mut rng, layers, ranks);
+        let planner = CheckpointPlanner::new(CostModel::default());
+        let ceiling = planner.plan(&models, 0).save_all_peak_bytes;
+        let mut last_peak = u64::MAX;
+        for step in 0..10u64 {
+            // budgets descending from ceiling+10% toward zero
+            let budget = (ceiling * 11 / 10) * (10 - step) / 10;
+            let budget = budget.max(1);
+            let plan = planner.plan(&models, budget);
+            assert!(plan.projected_peak_bytes <= last_peak,
+                    "case {case} L={layers}: peak rose {} -> {} as the budget \
+                     tightened to {budget}",
+                    last_peak, plan.projected_peak_bytes);
+            last_peak = plan.projected_peak_bytes;
+        }
+    }
+}
+
+#[test]
+fn unlimited_budget_is_all_save_all_and_time_optimal() {
+    // (c): budget 0 (unlimited) and any budget at/above the ceiling
+    // choose all-SaveAll with zero extra time; exhaustive enumeration
+    // over small L confirms no plan beats it on estimated time
+    let mut rng = Rng::new(0xD00D);
+    for case in 0..20u64 {
+        let ranks = [1usize, 2][(rng.next_u64() % 2) as usize];
+        let layers = 1 + (rng.next_u64() % 4) as usize;
+        let models = random_models(&mut rng, layers, ranks);
+        let planner = CheckpointPlanner::new(CostModel::default());
+        let unlimited = planner.plan(&models, 0);
+        assert!(unlimited
+            .policies()
+            .iter()
+            .all(|&p| p == CheckpointPolicy::SaveAll), "case {case}");
+        assert_eq!(unlimited.extra_time_s, 0.0, "case {case}");
+        let roomy = planner.plan(&models, unlimited.save_all_peak_bytes);
+        assert_eq!(roomy.policies(), unlimited.policies(),
+                   "case {case}: a ceiling-sized budget changed the plan");
+        // exhaustive: every assignment's estimated extra time ≥ 0 ==
+        // the all-SaveAll time, so the DP can never beat it
+        let cost = CostModel::default();
+        let mut worst = 0.0f64;
+        for mask in 0..3usize.pow(layers as u32) {
+            let mut m = mask;
+            let mut t = 0.0;
+            for model in &models {
+                t += model.extra_time_s(CheckpointPolicy::ALL[m % 3], &cost);
+                m /= 3;
+            }
+            assert!(t >= unlimited.extra_time_s - 1e-15,
+                    "case {case}: assignment beats all-SaveAll");
+            worst = worst.max(t);
+        }
+        assert!(worst > 0.0 || layers == 0, "case {case}: degenerate cost model");
+    }
+}

@@ -543,3 +543,316 @@ for case in range(48):
     cases += 1
 print(f"chunked-pipeline parity OK: {cases} fuzz cases, outputs + grads "
       "bit-identical across K x R x policy, chunk bytes == whole-batch plan")
+
+# ===========================================================================
+# Multi-layer stack parity (mirror of coordinator/stack + the backward
+# d_x chaining that makes it possible, ISSUE 4).
+#
+# Mirrored contracts, asserted BITWISE and fuzzed over
+# L_layers x R x K x per-layer policy vectors:
+#   * every engine folds per-slot dx rows into d_x in global
+#     expert-major position order (per chunk, chunks ascending), so
+#     d_x — and therefore the whole stacked loss curve — is identical
+#     between the single-rank reference chain and the chunk-pipelined
+#     sharded chain;
+#   * an L-layer stack is exactly L sequential single-layer sessions:
+#     forward chains outputs into the next layer's routing, backward
+#     walks layers in reverse handing d_x down;
+#   * parameter grads are bit-identical whether or not d_x is requested
+#     (the dx ops touch separate memory).
+# ===========================================================================
+
+def ffn_bwd_row_dx(p, g, x, dy, pre, act):
+    # ffn_bwd_row plus the input gradient dx = W1^T @ da
+    g['b2'] += dy
+    g['w2'] += np.outer(dy, act).astype(f32)
+    dz = (p['w2'].T @ dy).astype(f32)
+    sig = (1 / (1 + np.exp(-pre))).astype(f32)
+    da = (dz * sig * (1 + pre * (1 - sig))).astype(f32)
+    g['b1'] += da
+    g['w1'] += np.outer(da, x).astype(f32)
+    return (p['w1'].T @ da).astype(f32)
+
+def single_fwd_bwd_dx(d, params, x, gates, dm, policy, d_out, grads):
+    """Single-rank reference with input gradients: returns (out, d_x).
+    d_x rows are folded home in global expert-major position order —
+    the one order every engine shares."""
+    l, e, k = d['l'], d['e'], d['k']
+    n = l * k
+    hdim = params[0]['b1'].size
+    save_hidden = policy == 'save-all'
+    ys = np.zeros((n, dm), f32)
+    pre_s = np.zeros((n, hdim), f32)
+    act_s = np.zeros((n, hdim), f32)
+    for ex in range(e):
+        for pos in range(d['off'][ex], d['off'][ex + 1]):
+            y, pre, act = ffn_fwd(params[ex], x[d['eti'][pos]], True)
+            pre_s[pos], act_s[pos] = pre, act
+            ys[pos] = y
+    out = np.zeros((l, dm), f32)
+    for i in range(l):
+        for j in range(k):
+            pos = d['tim'][i * k + j]
+            out[i] = out[i] + np.float32(gates[i * k + j]) * ys[pos]
+    origin = [0] * n
+    for slot, pos in enumerate(d['tim']):
+        origin[pos] = slot
+    dxs = np.zeros((n, dm), f32)
+    for ex in range(e):
+        for pos in range(d['off'][ex], d['off'][ex + 1]):
+            tok = d['eti'][pos]
+            dy = (np.float32(gates[origin[pos]]) * d_out[tok]).astype(f32)
+            xin = x[tok]
+            if save_hidden:
+                pre, act = pre_s[pos], act_s[pos]
+            else:
+                pre = (params[ex]['w1'] @ xin + params[ex]['b1']).astype(f32)
+                act = silu32(pre)
+            dxs[pos] = ffn_bwd_row_dx(params[ex], grads[ex], xin, dy, pre, act)
+    d_x = np.zeros((l, dm), f32)
+    for pos in range(n):
+        d_x[d['eti'][pos]] = d_x[d['eti'][pos]] + dxs[pos]
+    return out, d_x
+
+def pipelined_fwd_bwd_dx(ids, L, E, K_top, params, x, gates, dm, R, strided,
+                         chunks, policy, d_out, grads):
+    """Chunk-pipelined sharded mirror with input gradients: per chunk,
+    per-rank dx rows are mapped back to the chunk's expert-major global
+    positions and folded in ascending position order, chunks ascending —
+    the exact Rust fold_dx order."""
+    kc = min(chunks, L)
+    bounds = [L * i // kc for i in range(kc + 1)]
+    out = np.zeros((L, dm), f32)
+    d_x = np.zeros((L, dm), f32)
+    chunk_state = []
+    for m in range(kc):
+        t0, t1 = bounds[m], bounds[m + 1]
+        lm = t1 - t0
+        dsub = build(list(ids[t0 * K_top:t1 * K_top]), lm, E, K_top)
+        shards = shard(dsub, R, strided)
+        routes = [[[] for _ in range(R)] for _ in range(R)]
+        ret_lookup = [None] * (lm * K_top)
+        for dst, s in enumerate(shards):
+            for ls, (tok, o) in enumerate(zip(s['toks'], s['orig'])):
+                src = rank_of_token(t0 + tok, L, R)
+                ret_lookup[o] = (dst, len(routes[dst][src]))
+                routes[dst][src].append((ls, tok, o))
+        ys_of = []
+        for dst in range(R):
+            s = shards[dst]
+            nl = len(s['toks'])
+            xs = np.zeros((nl, dm), f32)
+            for src in range(R):
+                for i, (ls, tok, o) in enumerate(routes[dst][src]):
+                    xs[ls] = x[t0 + tok]
+            ys = np.zeros((nl, dm), f32)
+            for i, ex in enumerate(s['experts']):
+                for ls in range(s['off'][i], s['off'][i + 1]):
+                    y, _, _ = ffn_fwd(params[ex], xs[ls], False)
+                    ys[ls] = y
+            ys_of.append(ys)
+        for t in range(lm):
+            home = rank_of_token(t0 + t, L, R)
+            for j in range(K_top):
+                slot = t * K_top + j
+                dst, idx = ret_lookup[slot]
+                ls, tok, o = routes[dst][home][idx]
+                g = np.float32(gates[(t0 + t) * K_top + j])
+                out[t0 + t] = out[t0 + t] + g * ys_of[dst][ls]
+        chunk_state.append((t0, dsub, shards, routes))
+    for (t0, dsub, shards, routes) in chunk_state:
+        gate_base = t0 * dsub['k']
+        n = len(dsub['eti'])
+        dxs = np.zeros((n, dm), f32)
+        for dst in range(R):
+            s = shards[dst]
+            for i, ex in enumerate(s['experts']):
+                base = dsub['off'][ex]
+                for jj in range(s['off'][i + 1] - s['off'][i]):
+                    ls = s['off'][i] + jj
+                    tok = s['toks'][ls]
+                    o = s['orig'][ls]
+                    dy = (np.float32(gates[gate_base + o])
+                          * d_out[t0 + tok]).astype(f32)
+                    xin = x[t0 + tok]
+                    pre = (params[ex]['w1'] @ xin
+                           + params[ex]['b1']).astype(f32)
+                    act = silu32(pre)
+                    dxs[base + jj] = ffn_bwd_row_dx(params[ex], grads[ex], xin,
+                                                    dy, pre, act)
+        for pos in range(n):
+            t = t0 + dsub['eti'][pos]
+            d_x[t] = d_x[t] + dxs[pos]
+    return out, d_x
+
+def train_stack(layer_ids, Ltok, E, K_top, DM, H, steps, policies, lr, seed,
+                R=1, strided=False, chunks=0):
+    """Stacked training loop: forward chains layer outputs, backward
+    chains d_x top-down, SGD per layer. chunks == 0 runs the single-rank
+    reference chain; chunks > 0 the chunk-pipelined sharded chain.
+    Returns the loss curve."""
+    n_layers = len(layer_ids)
+    rng = np.random.default_rng(seed)
+    params = [init_experts(E, DM, H, rng) for _ in range(n_layers)]
+    layer_gates = [rng.random(Ltok * K_top).astype(f32) for _ in range(n_layers)]
+    x0 = rng.standard_normal((Ltok, DM)).astype(f32)
+    target = rng.standard_normal((Ltok, DM)).astype(f32)
+    dsubs = [build(list(layer_ids[l]), Ltok, E, K_top) for l in range(n_layers)]
+    scale = f32(2.0 / (Ltok * DM))
+    losses = []
+    for _ in range(steps):
+        grads = [[zeros_like_params(DM, H) for _ in range(E)]
+                 for _ in range(n_layers)]
+        # forward chain (outputs recomputed inside the bwd helpers —
+        # bit-identical, pure functions)
+        xs = [x0]
+        for l in range(n_layers):
+            if chunks == 0:
+                probe = [zeros_like_params(DM, H) for _ in range(E)]
+                o, _ = single_fwd_bwd_dx(dsubs[l], params[l], xs[l],
+                                         layer_gates[l], DM, policies[l],
+                                         np.zeros((Ltok, DM), f32), probe)
+            else:
+                probe = [zeros_like_params(DM, H) for _ in range(E)]
+                o, _ = pipelined_fwd_bwd_dx(layer_ids[l], Ltok, E, K_top,
+                                            params[l], xs[l], layer_gates[l],
+                                            DM, R, strided, chunks,
+                                            policies[l],
+                                            np.zeros((Ltok, DM), f32), probe)
+            xs.append(o)
+        loss = 0.0
+        d_out = np.zeros((Ltok, DM), f32)
+        final = xs[-1]
+        for i in range(Ltok):
+            for c in range(DM):
+                diff = f32(final[i, c] - target[i, c])
+                loss += float(diff) * float(diff)
+                d_out[i, c] = scale * diff
+        losses.append(loss / (Ltok * DM))
+        # backward chain, top layer first
+        d_cur = d_out
+        for l in reversed(range(n_layers)):
+            if chunks == 0:
+                _, d_cur = single_fwd_bwd_dx(dsubs[l], params[l], xs[l],
+                                             layer_gates[l], DM, policies[l],
+                                             d_cur, grads[l])
+            else:
+                _, d_cur = pipelined_fwd_bwd_dx(layer_ids[l], Ltok, E, K_top,
+                                                params[l], xs[l],
+                                                layer_gates[l], DM, R, strided,
+                                                chunks, policies[l], d_cur,
+                                                grads[l])
+        for l in range(n_layers):
+            delta = sgd_delta(grads[l], lr)
+            for ex in range(E):
+                for kk in params[l][ex]:
+                    params[l][ex][kk] = (params[l][ex][kk]
+                                         + delta[ex][kk]).astype(f32)
+    return losses
+
+random.seed(7)
+stack_cases = 0
+for case in range(24):
+    R = random.choice([1, 2, 4])
+    E = R * random.randint(1, 2)
+    Ltok = random.randint(8, 28)
+    K_top = random.randint(1, min(E, 2))
+    DM, H3 = 4, 6
+    n_layers = random.randint(1, 3)
+    chunks = random.choice([1, 2, 3])
+    strided = random.random() < 0.5
+    policies = [random.choice(['save-all', 'save-inputs', 'recompute-all'])
+                for _ in range(n_layers)]
+    rng = np.random.default_rng(9000 + case)
+    layer_ids = [np.concatenate([rng.choice(E, K_top, replace=False)
+                                 for _ in range(Ltok)]).astype(int)
+                 for _ in range(n_layers)]
+    ref = train_stack(layer_ids, Ltok, E, K_top, DM, H3, 3, policies, 0.05,
+                      777 + case)
+    got = train_stack(layer_ids, Ltok, E, K_top, DM, H3, 3, policies, 0.05,
+                      777 + case, R=R, strided=strided, chunks=chunks)
+    assert got == ref, (f"stack case {case}: L={n_layers} R={R} K={chunks} "
+                        f"{policies}: stacked loss curve diverged\n{got}\n{ref}")
+    stack_cases += 1
+print(f"stack parity OK: {stack_cases} fuzz cases, L-layer chained loss "
+      "curves bit-identical between the single-rank reference and the "
+      "chunk-pipelined sharded chain (d_x chaining exact)")
+
+# ===========================================================================
+# Smart-checkpoint planner mirror: the greedy downgrade sequence on the
+# same analytic model as memory/planner.rs, asserted for (a) budget
+# feasibility whenever the all-recompute floor fits, (b) projected-peak
+# monotonicity as the budget tightens, and — for small L — agreement
+# with exhaustive enumeration on feasibility.
+# ===========================================================================
+
+SAVED_PER_SLOT = {  # f32: save-all 4(d+2h), save-inputs 4d, recompute 0
+    0: lambda d, h: 4 * (d + 2 * h),
+    1: lambda d, h: 4 * d,
+    2: lambda d, h: 0,
+}
+
+def planner_layer(rng):
+    ranks = rng.choice([1, 2, 4])
+    d, h = int(rng.integers(4, 16)), int(rng.integers(6, 20))
+    slots = rng.integers(0, 40, size=ranks)
+    resident = rng.integers(1, 20, size=ranks)
+    regather = rng.integers(0, 2000, size=ranks)
+    def bytes_for(pol):
+        per = [4 * d * (int(s) + 2 * int(r)) + int(s) * SAVED_PER_SLOT[pol](d, h)
+               for s, r in zip(slots, resident)]
+        return max(per)
+    extra_flops = 4 * d * h  # bwd recompute-hidden delta per row
+    comp = max(int(s) for s in slots) * extra_flops / 200e9
+    comm = max(int(g) for g in regather) / 50e9
+    times = [0.0, comp, comp + comm]
+    return [bytes_for(p) for p in range(3)], times
+
+def greedy_plan(layers_cand, budget):
+    choice = [0] * len(layers_cand)
+    peak = sum(c[0][0] for c in layers_cand)
+    while peak > budget:
+        best = None
+        for i, (by, tm) in enumerate(layers_cand):
+            if choice[i] >= 2:
+                continue
+            saved = by[choice[i]] - by[choice[i] + 1]
+            if saved <= 0:
+                continue  # zero-slot max rank: no step on this layer saves
+            dt = tm[choice[i] + 1] - tm[choice[i]]
+            ratio = (saved / dt) if dt > 0 else float('inf')
+            if best is None or ratio > best[2]:
+                best = (i, saved, ratio)
+        if best is None:
+            break
+        choice[best[0]] += 1
+        peak -= best[1]
+    return choice, peak
+
+rng = np.random.default_rng(0xBEE)
+for case in range(60):
+    nl = int(rng.integers(1, 9))
+    layers_cand = [planner_layer(rng) for _ in range(nl)]
+    ceiling = sum(c[0][0] for c in layers_cand)
+    floor = sum(c[0][2] for c in layers_cand)
+    last_peak = float('inf')
+    for step in range(6):
+        budget = max(1, int(ceiling * 1.05) * (6 - step) // 6)
+        choice, peak = greedy_plan(layers_cand, budget)
+        # (b) monotone as the budget tightens
+        assert peak <= last_peak, f"planner case {case}: peak rose"
+        last_peak = peak
+        # (a) feasibility whenever the floor fits
+        if budget >= floor:
+            assert peak <= budget, \
+                f"planner case {case}: {peak} over feasible budget {budget}"
+        # exhaustive cross-check for small L: some assignment fits iff
+        # the floor fits (bytes are monotone per layer)
+        if nl <= 5:
+            fits = any(
+                sum(layers_cand[i][0][(mask // 3 ** i) % 3]
+                    for i in range(nl)) <= budget
+                for mask in range(3 ** nl))
+            assert fits == (floor <= budget), f"planner case {case}"
+print("planner mirror OK: greedy plans fit every feasible budget, projected "
+      "peak monotone in the budget, exhaustive feasibility agrees")
