@@ -80,8 +80,116 @@ fn main() {
     println!("measured == planned cross-rank bytes on every combination ✓");
 
     policy_accum_matrix(&store, l, e, k, d, h);
+    packed_vs_indexed_matrix(&store, l, e, k, d);
     pipeline_overlap_matrix(&store, l, e, k, d);
     stack_planner_matrix(l, e, k, d, h);
+}
+
+/// Old-vs-new hot path (PR 5): the packed row-dot baseline against the
+/// index-driven blocked engines, fwd+bwd, same worker count, outputs and
+/// gradients asserted bit-identical before any timing. One JSON line per
+/// cell (the machine-readable trajectory `tools/bench_snapshot.py`
+/// complements from `ep-bench --json-out`).
+fn packed_vs_indexed_matrix(store: &ExpertStore, l: usize, e: usize, k: usize,
+                            d: usize) {
+    use moeblaze::coordinator::engine::PackedReference;
+    use moeblaze::dispatch::RowIndexPlan;
+
+    let mut rng = Rng::new(23);
+    let gating = synthetic_gating(&mut rng, l, e, k, 0.7);
+    let disp = parallel_build(&gating.topk_ids, l, e, k);
+    let x = rng.normal_vec(l * d, 1.0);
+    let batch = StepBatch::new(disp, x, gating.gates).expect("batch");
+    let d_out = rng.normal_vec(l * d, 1.0);
+    let bench = Bench::quick();
+    let policy = CheckpointPolicy::default();
+
+    println!("== zero-materialization dispatch vs packed baseline \
+              (fwd+bwd, {policy}) ==");
+    let mut t = Table::new(["ranks", "old fwd+bwd", "new fwd+bwd", "speedup",
+                            "old peak comm", "new peak comm"]);
+    for ranks in [1usize, 2, 4, 8] {
+        let topo = EpTopology::new(ranks, e).expect("topology");
+        // plan built once outside the timed loop — the fair baseline
+        // (the retired engines cached plans per batch id)
+        let packed = PackedReference::new(&topo, &batch).expect("packed plan");
+        let (old_out, old_grads) = packed
+            .step(store, &batch, &d_out, policy, ranks)
+            .expect("packed baseline");
+        let mut eng = ShardedEngine::with_policy(topo.clone(), store, ranks,
+                                                 policy)
+            .expect("engine");
+        let handle = eng.forward(&batch).expect("fwd");
+        assert!(handle
+                    .output()
+                    .iter()
+                    .zip(&old_out)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "R={ranks}: indexed output diverged from the packed baseline");
+        let new_grads = handle.backward(&mut eng, &d_out).expect("bwd");
+        assert_eq!(new_grads, old_grads,
+                   "R={ranks}: indexed grads diverged from the packed baseline");
+
+        let s_old = bench.run(|| {
+            std::hint::black_box(
+                packed
+                    .step(store, &batch, &d_out, policy, ranks)
+                    .expect("packed baseline"),
+            );
+        });
+        let s_new = bench.run(|| {
+            let handle = eng.forward(&batch).expect("fwd");
+            let mut g = eng.zero_grads();
+            handle.backward_into(&mut eng, &d_out, &mut g).expect("bwd");
+            std::hint::black_box(&g);
+        });
+        let speedup = s_old.mean_ns / s_new.mean_ns;
+
+        let token_rank: Vec<u32> =
+            (0..l).map(|tk| topo.rank_of_token(tk, l) as u32).collect();
+        let rplan = RowIndexPlan::build(batch.disp(), ranks,
+                                        &topo.assignment().rank_of,
+                                        &token_rank)
+            .expect("row plan");
+        let old_extra: u64 = (0..ranks)
+            .map(|rank| rplan.packed_buffer_bytes(rank, d, 4))
+            .max()
+            .unwrap_or(0);
+        let new_extra: u64 = eng
+            .memory_per_rank()
+            .iter()
+            .map(|m| m.extra_bytes)
+            .max()
+            .unwrap_or(0);
+        if ranks > 1 {
+            assert!(new_extra < old_extra,
+                    "R={ranks}: staging {new_extra} not below packed \
+                     {old_extra}");
+        }
+        t.row([
+            ranks.to_string(),
+            format!("{:.3} ms", s_old.mean_ms()),
+            format!("{:.3} ms", s_new.mean_ms()),
+            format!("{speedup:.2}x"),
+            human_bytes(old_extra),
+            human_bytes(new_extra),
+        ]);
+        let tokens_s_old = l as f64 / (s_old.mean_ns / 1e9);
+        let tokens_s_new = l as f64 / (s_new.mean_ns / 1e9);
+        let cell = Json::obj(vec![
+            ("bench", Json::str("ep_packed_vs_indexed")),
+            ("ranks", Json::num(ranks as f64)),
+            ("speedup", Json::num(speedup)),
+            ("old_tokens_per_sec", Json::num(tokens_s_old)),
+            ("new_tokens_per_sec", Json::num(tokens_s_new)),
+            ("old_peak_comm_bytes", Json::num(old_extra as f64)),
+            ("new_peak_comm_bytes", Json::num(new_extra as f64)),
+        ]);
+        println!("{cell}");
+    }
+    println!("{}", t.render());
+    println!("indexed path bit-identical to the packed baseline on every \
+              rank count ✓");
 }
 
 /// Checkpoint-policy × grad_accum matrix: full fwd+bwd sessions, peak

@@ -138,12 +138,22 @@ pub struct EpConfig {
     pub pipeline_chunks: usize,
     /// chunk-boundary policy for the pipelined engine (`tokens` | `rows`)
     pub chunk_balance: ChunkBalance,
+    /// routed-row tile of the blocked expert kernels: each expert's
+    /// segment is processed `tile_rows` rows at a time, gathered
+    /// straight from the batch into one staging tile. Numerics are
+    /// bit-identical for every value; only throughput and staging
+    /// residency move.
+    pub tile_rows: usize,
     /// simulated cross-rank link bandwidth for the pipeline's phase
     /// timeline (decimal GB/s)
     pub link_gbps: f64,
     /// simulated per-rank expert-compute rate for the phase timeline
     /// (GFLOP/s)
     pub compute_gflops: f64,
+    /// fold each step's measured-vs-simulated phase ratios back into the
+    /// effective `link_gbps`/`compute_gflops` (EWMA across trainer
+    /// steps) — the self-tuning cost model
+    pub calibrate: bool,
     /// ep-train LR schedule (`constant` | `cosine` | `linear-warmup`)
     pub lr_schedule: String,
     /// ep-train global-norm gradient clipping threshold; 0 = off
@@ -174,8 +184,10 @@ impl Default for EpConfig {
             mem_budget_bytes: 0,
             pipeline_chunks: 0,
             chunk_balance: ChunkBalance::default(),
+            tile_rows: crate::coordinator::kernels::DEFAULT_TILE_ROWS,
             link_gbps: 50.0,
             compute_gflops: 200.0,
+            calibrate: false,
             lr_schedule: "constant".into(),
             clip_norm: 0.0,
             metrics_path: String::new(),
@@ -220,6 +232,9 @@ impl EpConfig {
         }
         if self.num_layers == 0 {
             return Err("ep.num_layers must be >= 1".into());
+        }
+        if self.tile_rows == 0 {
+            return Err("ep.tile_rows must be >= 1".into());
         }
         if !(self.link_gbps > 0.0 && self.link_gbps.is_finite()) {
             return Err(format!("ep.link_gbps must be positive, got {}", self.link_gbps));
@@ -273,8 +288,10 @@ impl EpConfig {
             chunk_balance: ChunkBalance::parse(
                 &t.str_or(&key("chunk_balance"), d.chunk_balance.name()),
             )?,
+            tile_rows: t.usize_or(&key("tile_rows"), d.tile_rows),
             link_gbps: t.f64_or(&key("link_gbps"), d.link_gbps),
             compute_gflops: t.f64_or(&key("compute_gflops"), d.compute_gflops),
+            calibrate: t.bool_or(&key("calibrate"), d.calibrate),
             lr_schedule: t.str_or(&key("lr_schedule"), &d.lr_schedule),
             clip_norm: t.f64_or(&key("clip_norm"), d.clip_norm),
             metrics_path: t.str_or(&key("metrics_path"), &d.metrics_path),
@@ -331,6 +348,23 @@ mod tests {
             .validate()
             .is_err());
         assert!(EpConfig { lr_schedule: "sawtooth".into(), ..Default::default() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn tile_rows_and_calibrate_keys() {
+        let t = Toml::parse("[ep]\ntile_rows = 8\ncalibrate = true").unwrap();
+        let c = EpConfig::from_toml(&t, "ep").unwrap();
+        assert_eq!(c.tile_rows, 8);
+        assert!(c.calibrate);
+        // defaults: the kernel tile constant, calibration off
+        let d = EpConfig::default();
+        assert_eq!(d.tile_rows,
+                   crate::coordinator::kernels::DEFAULT_TILE_ROWS);
+        assert!(!d.calibrate);
+        d.validate().unwrap();
+        assert!(EpConfig { tile_rows: 0, ..Default::default() }
             .validate()
             .is_err());
     }

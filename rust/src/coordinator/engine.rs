@@ -59,19 +59,58 @@
 //! # Engines
 //!
 //! * [`SingleRankEngine`] — all experts local; the bit-exact reference.
-//! * [`ShardedEngine`] — R simulated ranks over the worker pool, real
-//!   buffer packing, measured communication. Per-batch routing plans
-//!   (shards, routes, return lookup) are cached by `StepBatch` identity,
-//!   so repeated steps over one workload re-derive nothing.
+//! * [`ShardedEngine`] — R simulated ranks over the worker pool,
+//!   index-driven exchange, analytic communication accounting. Per-batch
+//!   routing plans ([`RowIndexPlan`] + return lookup) are cached by
+//!   `StepBatch` identity, so repeated steps over one workload re-derive
+//!   nothing.
 //!
 //! Both are bit-deterministic for any R and placement; every
 //! accumulation runs in a fixed order, and `backward_into` continues an
 //! existing [`ExpertGrads`] value in that same order — accumulating A
 //! contiguous microbatches performs the identical float-op sequence as
 //! one full batch. `rust/tests/ep_engine.rs` pins all of this, plus
-//! measured dispatch traffic == [`AllToAllPlan::cross_rank_bytes`].
+//! derived dispatch traffic == [`AllToAllPlan::cross_rank_bytes`].
+//!
+//! # Hot path: zero-materialization dispatch + blocked expert GEMM
+//!
+//! Since PR 5 the engines no longer materialize the exchange. The old
+//! hot path packed every routed row three times per step — into
+//! per-(src, dst) send buffers, a per-rank routed-input buffer, and
+//! per-(dst, src) return buffers — then ran the experts one
+//! row-dot-product at a time. The current path:
+//!
+//! 1. **Index plans, not buffers.** A cached [`RowIndexPlan`] records,
+//!    per (rank, expert), the source token indices and gate slots of
+//!    every routed row. The dispatch "exchange" is the transfer of those
+//!    index lists; cross-rank byte counts are *derived* from the plan's
+//!    src→dst row matrix (bit-equal to what the packed buffers measured
+//!    — `rust/tests/row_plan_properties.rs` pins the round trip against
+//!    [`AllToAllPlan::cross_rank_bytes`] over fuzzed gatings).
+//! 2. **Gather fused into tiled GEMM.** Expert compute
+//!    (`coordinator::kernels`) walks each expert's routed segment in
+//!    tiles of `[ep] tile_rows` rows, gathering rows straight from the
+//!    caller-owned [`StepBatch`] activations into one transposed
+//!    cache-sized staging tile — zero-copy for local rows, one tile (not
+//!    a whole buffer) of staging for remote rows — and runs cache-blocked
+//!    GEMM over `w1`/`w2`, with a transposed-`w1` layout built once per
+//!    expert segment per step for the ∂x pass. The combine scatter reads
+//!    expert outputs in place through the return lookup.
+//! 3. **Backward without a gradient exchange buffer.** Gated gradient
+//!    rows (`gate · d_out`) are gathered per tile on demand;
+//!    `RecomputeAll`'s backward re-gathers *indices, not rows* (its
+//!    re-exchange is still priced in `Traffic::recompute_bytes`), and
+//!    ∂x/∂W accumulation folds into the same tile pass.
+//!
+//! Per-element float-op order is exactly the row kernels' (see
+//! `coordinator::kernels`), so outputs, gradients, ∂x, and loss curves
+//! are bit-identical to the pre-PR-5 engines for every tile size — the
+//! retired path survives as [`packed_reference_step`], the measurable
+//! baseline `ep-bench`/`benches/ep_alltoall.rs` compare against, and the
+//! engine matrices pin new == old bit-for-bit.
 //!
 //! [`AllToAllPlan::cross_rank_bytes`]: super::expert_parallel::AllToAllPlan::cross_rank_bytes
+//! [`RowIndexPlan`]: crate::dispatch::structures::RowIndexPlan
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -79,16 +118,17 @@ use std::sync::Arc;
 use crate::config::ep::{EpConfig, Placement};
 use crate::dispatch::gating::synthetic_gating;
 use crate::dispatch::parallel_build::parallel_build;
-use crate::dispatch::shard::{shard, RankShard};
-use crate::dispatch::structures::DispatchStructures;
-use crate::memory::model::{CheckpointPolicy, MemoryBreakdown};
+use crate::dispatch::structures::{DispatchStructures, RowIndexPlan};
+use crate::memory::model::{staging_bytes, CheckpointPolicy, MemoryBreakdown};
 use crate::util::prng::Rng;
 use crate::util::threadpool::{par_map, scope_chunks};
 
 use super::expert_parallel::EpTopology;
+use super::kernels::{backward_segment, forward_segment, silu, KernelScratch,
+                     KernelTimers, RowsSrc, DEFAULT_TILE_ROWS};
 use super::params::{ExpertGrads, ExpertParams, ExpertStore, RankExperts};
 use super::pipeline::timeline::{CostModel, OverlapReport};
-use super::pipeline::{combine_chunk, compute_chunk, pack_sends, PipelinedEngine};
+use super::pipeline::{combine_chunk, compute_chunk_indexed, PipelinedEngine};
 
 static NEXT_BATCH_ID: AtomicU64 = AtomicU64::new(1);
 static NEXT_ENGINE_TAG: AtomicU64 = AtomicU64::new(1);
@@ -619,14 +659,39 @@ pub trait ExecutionEngine {
     fn overlap_report(&self) -> Option<OverlapReport> {
         None
     }
+
+    /// Measured host wall-clock of the last step session (the sum of the
+    /// timeline's per-phase calibration samples), or `None` for engines
+    /// without a timeline. `MoeStack` overrides this to sum across *all*
+    /// layer sessions — its `overlap_report` exposes only the deepest
+    /// layer's timeline, which alone would undercount the step by the
+    /// layer count.
+    fn measured_step_s(&self) -> Option<f64> {
+        self.overlap_report().and_then(|rep| rep.measured_step_s())
+    }
+
+    /// Fold the last session's measured-vs-simulated phase calibration
+    /// back into this engine's [`CostModel`] (`[ep] calibrate = true`):
+    /// each rate is EWMA-updated with weight `alpha` toward
+    /// `rate · (simulated / measured)`, so a host that runs a phase
+    /// slower than the model predicted drags the effective
+    /// `link_gbps` / `compute_gflops` down across trainer steps — the
+    /// ROADMAP's self-tuning cost model. Returns the updated model;
+    /// engines without a timeline return `None` (the default) and
+    /// change nothing. Numerics are untouched — only the simulated
+    /// clock's rates move.
+    fn recalibrate_cost_model(&mut self, _alpha: f64) -> Option<CostModel> {
+        None
+    }
 }
 
-// -- shared per-row expert math ---------------------------------------------
-
-#[inline]
-fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
-}
+// -- reference per-row expert math ------------------------------------------
+//
+// The pre-PR-5 row kernels. The engines now run the tile-blocked kernels
+// in `coordinator::kernels` (bit-identical per element — the kernel unit
+// tests pin row == blocked for every tile size); these stay as the
+// bit-identity oracle and as the measurable baseline inside
+// [`packed_reference_step`].
 
 /// y = W2·silu(W1·x + b1) + b2. Pure function of one row — bit-identical
 /// wherever (and on whatever thread) it runs.
@@ -759,11 +824,13 @@ pub(crate) fn check_batch(batch: &StepBatch, d: usize, num_experts: usize) -> Re
 
 /// One rank's backward work item for `scope_chunks`: the gradient
 /// accumulators of the experts it owns, plus (when ∂x is requested) the
-/// per-local-slot input-gradient rows it produces. Separate fields so a
-/// worker can mutate both without aliasing.
+/// per-local-slot input-gradient rows it produces, plus the worker's
+/// measured gather/compute wall-clock. Separate fields so a worker can
+/// mutate all of them without aliasing.
 pub(crate) struct RankBwdWork {
     pub(crate) bucket: Vec<(usize, ExpertParams)>,
     pub(crate) dxs: Vec<f32>,
+    pub(crate) timers: KernelTimers,
 }
 
 /// Fold per-rank per-local-slot ∂x rows back into the caller's `d_x` in
@@ -773,12 +840,12 @@ pub(crate) struct RankBwdWork {
 /// what keeps ∂x bit-identical across rank counts and chunkings (a
 /// chunk's tokens all live in that chunk, so chunk-local position order
 /// preserves each token's relative contribution order).
-pub(crate) fn fold_dx(shards: &[RankShard], work: &[RankBwdWork], d: usize,
+pub(crate) fn fold_dx(rows: &RowIndexPlan, work: &[RankBwdWork], d: usize,
                       num_experts: usize, token_base: usize, d_x: &mut [f32]) {
     let mut seg_len = vec![0usize; num_experts];
-    for s in shards {
-        for (i, &e) in s.experts.iter().enumerate() {
-            seg_len[e as usize] = s.expert_len(i);
+    for rr in &rows.per_rank {
+        for (i, &e) in rr.experts.iter().enumerate() {
+            seg_len[e as usize] = rr.expert_len(i);
         }
     }
     let mut seg_off = vec![0usize; num_experts + 1];
@@ -788,16 +855,16 @@ pub(crate) fn fold_dx(shards: &[RankShard], work: &[RankBwdWork], d: usize,
     let n = seg_off[num_experts];
     let mut dxs = vec![0.0f32; n * d];
     let mut tok_of_pos = vec![0u32; n];
-    for (dst, s) in shards.iter().enumerate() {
+    for (dst, rr) in rows.per_rank.iter().enumerate() {
         let local = &work[dst].dxs;
-        for (i, &e) in s.experts.iter().enumerate() {
-            let lo = s.expert_token_offsets[i] as usize;
-            let hi = s.expert_token_offsets[i + 1] as usize;
+        for (i, &e) in rr.experts.iter().enumerate() {
+            let lo = rr.expert_offsets[i] as usize;
+            let hi = rr.expert_offsets[i + 1] as usize;
             let base = seg_off[e as usize];
             for jj in 0..(hi - lo) {
                 dxs[(base + jj) * d..(base + jj + 1) * d]
                     .copy_from_slice(&local[(lo + jj) * d..(lo + jj + 1) * d]);
-                tok_of_pos[base + jj] = s.expert_token_indices[lo + jj];
+                tok_of_pos[base + jj] = rr.tokens[lo + jj];
             }
         }
     }
@@ -834,6 +901,9 @@ struct SingleSession {
 pub struct SingleRankEngine {
     pub store: ExpertStore,
     policy: CheckpointPolicy,
+    /// routed-row tile of the blocked kernels (`[ep] tile_rows`);
+    /// numerics are tile-size-invariant, only throughput moves
+    tile_rows: usize,
     engine_tag: u64,
     sessions_opened: u64,
     session: Option<SingleSession>,
@@ -856,6 +926,7 @@ impl SingleRankEngine {
         SingleRankEngine {
             store,
             policy,
+            tile_rows: DEFAULT_TILE_ROWS,
             engine_tag: NEXT_ENGINE_TAG.fetch_add(1, Ordering::Relaxed),
             sessions_opened: 0,
             session: None,
@@ -864,6 +935,13 @@ impl SingleRankEngine {
             traffic: Traffic::default(),
             mem: Vec::new(),
         }
+    }
+
+    /// Set the blocked-kernel row tile (≥ 1). Outputs and gradients are
+    /// bit-identical for every tile size — the knob only moves
+    /// throughput and staging-tile residency.
+    pub fn set_tile_rows(&mut self, tile_rows: usize) {
+        self.tile_rows = tile_rows.max(1);
     }
 
     /// Raise/lower the origin-cache bound (≥ 1, trimming immediately);
@@ -945,44 +1023,32 @@ impl SingleRankEngine {
         let origin = &self.origin_cache[origin_idx].1;
         let x = st.batch.x();
         let gates = st.batch.gates();
-        let mut pre_row = vec![0.0f32; h];
-        let mut act_row = vec![0.0f32; h];
-        let mut dz = vec![0.0f32; h];
-        let mut dy = vec![0.0f32; d];
+        // blocked backward, expert segment by expert segment: routed
+        // inputs come from the policy-saved rows or (RecomputeAll) a
+        // direct re-gather of indices from the shared batch — local,
+        // zero comm, zero re-gather buffer
+        let (xsrc, hidden): (RowsSrc, Option<(&[f32], &[f32])>) = match &st.saved {
+            SavedActs::All { xs, pre, act } => {
+                (RowsSrc::Packed(&xs[..]), Some((&pre[..], &act[..])))
+            }
+            SavedActs::Inputs { xs } => (RowsSrc::Packed(&xs[..]), None),
+            SavedActs::Nothing => (RowsSrc::Tokens(x), None),
+        };
+        let mut scratch = KernelScratch::new(d, h, self.tile_rows);
         for (e, p) in self.store.experts.iter().enumerate() {
             let g = &mut grads.experts[e];
             let lo = disp.expert_token_offsets[e] as usize;
             let hi = disp.expert_token_offsets[e + 1] as usize;
-            for pos in lo..hi {
-                let tok = disp.expert_token_indices[pos] as usize;
-                let gate = gates[origin[pos] as usize];
-                for c in 0..d {
-                    dy[c] = gate * d_out[tok * d + c];
-                }
-                let xrow = match &st.saved {
-                    SavedActs::All { xs, .. } | SavedActs::Inputs { xs } => {
-                        &xs[pos * d..(pos + 1) * d]
-                    }
-                    // re-gather from the shared batch (local, zero comm)
-                    SavedActs::Nothing => &x[tok * d..(tok + 1) * d],
-                };
-                let (pre, act): (&[f32], &[f32]) = match &st.saved {
-                    SavedActs::All { pre, act, .. } => {
-                        (&pre[pos * h..(pos + 1) * h], &act[pos * h..(pos + 1) * h])
-                    }
-                    _ => {
-                        recompute_hidden(p, d, h, xrow, &mut pre_row, &mut act_row);
-                        (&pre_row[..], &act_row[..])
-                    }
-                };
-                let dx_row = if want_dx {
-                    Some(&mut dxs[pos * d..(pos + 1) * d])
-                } else {
-                    None
-                };
-                expert_backward_row(p, g, d, h, xrow, &dy, pre, act, &mut dz,
-                                    dx_row);
+            if lo == hi {
+                continue;
             }
+            // timers: None — no timeline consumes them here, so the
+            // per-tile clock reads are skipped on this hot path
+            backward_segment(p, g, d, h, lo, hi, &xsrc,
+                             &disp.expert_token_indices, 0, origin, 0, d_out,
+                             gates, hidden,
+                             if want_dx { Some(&mut dxs[..]) } else { None },
+                             &mut scratch, None);
         }
         // fold ∂x rows home in expert-major position order (the order
         // every engine shares — see `fold_dx`)
@@ -1023,29 +1089,29 @@ impl ExecutionEngine for SingleRankEngine {
         let save_inputs = self.policy != CheckpointPolicy::RecomputeAll;
         let save_hidden = self.policy == CheckpointPolicy::SaveAll;
 
-        // expert compute, expert-major
+        // blocked expert compute, expert-major: rows gathered straight
+        // from the shared batch into the kernel staging tile
         let mut ys = vec![0.0f32; n * d];
         let mut xs = vec![0.0f32; if save_inputs { n * d } else { 0 }];
         let mut pre = vec![0.0f32; if save_hidden { n * h } else { 0 }];
         let mut act = vec![0.0f32; if save_hidden { n * h } else { 0 }];
-        let mut hidden = vec![0.0f32; h];
+        let mut scratch = KernelScratch::new(d, h, self.tile_rows);
         for (e, p) in self.store.experts.iter().enumerate() {
             let lo = disp.expert_token_offsets[e] as usize;
             let hi = disp.expert_token_offsets[e + 1] as usize;
-            for pos in lo..hi {
-                let tok = disp.expert_token_indices[pos] as usize;
-                let xrow = &x[tok * d..(tok + 1) * d];
-                if save_inputs {
-                    xs[pos * d..(pos + 1) * d].copy_from_slice(xrow);
-                }
-                if save_hidden {
-                    expert_forward_saving(p, d, h, xrow, &mut ys[pos * d..(pos + 1) * d],
-                                          &mut pre[pos * h..(pos + 1) * h],
-                                          &mut act[pos * h..(pos + 1) * h]);
-                } else {
-                    expert_forward(p, d, h, xrow, &mut ys[pos * d..(pos + 1) * d], &mut hidden);
-                }
+            if lo == hi {
+                continue;
             }
+            // timers: None — the single-rank engine has no timeline
+            forward_segment(p, d, h, lo, hi, x, &disp.expert_token_indices, 0,
+                            &mut ys,
+                            if save_inputs { Some(&mut xs[..]) } else { None },
+                            if save_hidden {
+                                Some((&mut pre[..], &mut act[..]))
+                            } else {
+                                None
+                            },
+                            &mut scratch, None);
         }
         // combine scatter, token-major, fixed j order
         let mut out = vec![0.0f32; l * d];
@@ -1126,23 +1192,17 @@ impl ExecutionEngine for SingleRankEngine {
 
 // -- sharded engine ---------------------------------------------------------
 
-/// One routed row's path through the exchange: destination-local slot,
-/// its batch-local token, and its token-major origin slot.
-#[derive(Debug, Clone, Copy)]
-pub(crate) struct RouteHop {
-    pub(crate) local_slot: u32,
-    pub(crate) token: u32,
-    pub(crate) origin: u32,
-}
-
 /// Everything derivable from (routing, topology) alone — computed once
 /// per distinct [`StepBatch`] (keyed by batch id in the engines' LRU
-/// caches) and reused by every later session over it.
+/// caches) and reused by every later session over it. Pure index data:
+/// the [`RowIndexPlan`] is what the exchange *transfers*; no activation
+/// row is ever copied into a plan.
 pub(crate) struct BatchPlan {
-    pub(crate) shards: Vec<RankShard>,
-    /// routes[dst][src]: hops served by `src`, in dst-local slot order
-    pub(crate) routes: Vec<Vec<Vec<RouteHop>>>,
-    /// origin slot → (dst rank, index within rets[dst][home])
+    /// per (rank, expert) source token indices + gate slots + src ranks,
+    /// plus the analytic src→dst row matrix
+    pub(crate) rows: RowIndexPlan,
+    /// origin slot → (dst rank, dst-local slot): where the combine
+    /// scatter reads each routed output row, in place
     pub(crate) ret_lookup: Vec<(u32, u32)>,
     /// resident tokens per home rank (batch-local token ids)
     pub(crate) tokens_of_rank: Vec<Vec<u32>>,
@@ -1159,28 +1219,26 @@ impl BatchPlan {
     pub(crate) fn build(disp: &DispatchStructures, topo: &EpTopology, token_base: usize,
                         global_tokens: usize) -> Result<BatchPlan, String> {
         let (l, r) = (disp.num_tokens, topo.ranks);
-        let shards = shard(disp, &topo.assignment())?;
-        let mut routes: Vec<Vec<Vec<RouteHop>>> =
-            (0..r).map(|_| vec![Vec::new(); r]).collect();
+        let token_rank: Vec<u32> = (0..l)
+            .map(|t| topo.rank_of_token(token_base + t, global_tokens) as u32)
+            .collect();
+        let rows = RowIndexPlan::build(disp, r, &topo.assignment().rank_of,
+                                       &token_rank)?;
         let mut ret_lookup = vec![(0u32, 0u32); disp.slots()];
-        for (dst, s) in shards.iter().enumerate() {
-            for (local_slot, (&token, &origin)) in s
-                .expert_token_indices
-                .iter()
-                .zip(&s.origin_slots)
-                .enumerate()
-            {
-                let src = topo.rank_of_token(token_base + token as usize, global_tokens);
-                let hops = &mut routes[dst][src];
-                ret_lookup[origin as usize] = (dst as u32, hops.len() as u32);
-                hops.push(RouteHop { local_slot: local_slot as u32, token, origin });
+        for (dst, rr) in rows.per_rank.iter().enumerate() {
+            for (ls, &origin) in rr.gate_slots.iter().enumerate() {
+                ret_lookup[origin as usize] = (dst as u32, ls as u32);
             }
         }
         let mut tokens_of_rank: Vec<Vec<u32>> = vec![Vec::new(); r];
-        for t in 0..l {
-            tokens_of_rank[topo.rank_of_token(token_base + t, global_tokens)].push(t as u32);
+        for (t, &home) in token_rank.iter().enumerate() {
+            tokens_of_rank[home as usize].push(t as u32);
         }
-        Ok(BatchPlan { shards, routes, ret_lookup, tokens_of_rank })
+        Ok(BatchPlan { rows, ret_lookup, tokens_of_rank })
+    }
+
+    pub(crate) fn ranks(&self) -> usize {
+        self.rows.ranks
     }
 }
 
@@ -1191,8 +1249,8 @@ struct ShardedSession {
     saved: Vec<SavedActs>,
 }
 
-/// R simulated ranks over the worker pool, real buffer packing, measured
-/// traffic.
+/// R simulated ranks over the worker pool, index-driven exchange,
+/// analytic traffic derived from the cached [`RowIndexPlan`].
 pub struct ShardedEngine {
     pub topo: EpTopology,
     pub rank_params: Vec<RankExperts>,
@@ -1200,6 +1258,8 @@ pub struct ShardedEngine {
     d_hidden: usize,
     workers: usize,
     policy: CheckpointPolicy,
+    /// routed-row tile of the blocked kernels (`[ep] tile_rows`)
+    tile_rows: usize,
     engine_tag: u64,
     sessions_opened: u64,
     session: Option<ShardedSession>,
@@ -1236,6 +1296,7 @@ impl ShardedEngine {
             d_hidden: store.d_hidden,
             workers: workers.max(1),
             policy,
+            tile_rows: DEFAULT_TILE_ROWS,
             engine_tag: NEXT_ENGINE_TAG.fetch_add(1, Ordering::Relaxed),
             sessions_opened: 0,
             session: None,
@@ -1244,6 +1305,13 @@ impl ShardedEngine {
             traffic: Traffic::default(),
             mem: Vec::new(),
         })
+    }
+
+    /// Set the blocked-kernel row tile (≥ 1). Outputs and gradients are
+    /// bit-identical for every tile size — the knob only moves
+    /// throughput and per-rank staging-tile residency.
+    pub fn set_tile_rows(&mut self, tile_rows: usize) {
+        self.tile_rows = tile_rows.max(1);
     }
 
     /// Raise/lower the routing-plan cache bound (≥ 1, trimming
@@ -1327,161 +1395,86 @@ impl ShardedEngine {
         let want_dx = d_x.is_some();
         let r = self.topo.ranks;
         let workers = self.workers.min(r);
+        let tile = self.tile_rows;
         // re-resolve by (batch id, layer): still cached in the common
         // case, and transparently re-planned if many other batches
         // evicted it between this session's forward and backward
         let plan_idx = self.plan_index(&st.batch)?;
         let plan = &self.plans[plan_idx].1;
-        let routes_ref = &plan.routes;
-        let shards_ref = &plan.shards;
+        let rows_ref = &plan.rows;
         let gates = st.batch.gates();
         let x = st.batch.x();
+        let saved = &st.saved;
 
-        // backward all-to-all: each home rank packs gated gradient rows
-        // toward the expert ranks (mirror of the fwd dispatch)
-        let dsend: Vec<Vec<Vec<f32>>> = par_map(r, workers, |home| {
-            (0..r)
-                .map(|dst| {
-                    let hops = &routes_ref[dst][home];
-                    let mut buf = Vec::with_capacity(hops.len() * d);
-                    for hop in hops {
-                        let t = hop.token as usize;
-                        let g = gates[hop.origin as usize];
-                        for c in 0..d {
-                            buf.push(g * d_out[t * d + c]);
-                        }
-                    }
-                    buf
-                })
-                .collect()
-        });
-        let mut grad_bytes = 0u64;
-        for home in 0..r {
-            for dst in 0..r {
-                if home != dst {
-                    grad_bytes += (dsend[home][dst].len() * 4) as u64;
-                }
-            }
+        // backward "exchange": gated gradient rows mirror the forward
+        // dispatch row-for-row, so the cross-rank bytes are the same
+        // analytic count; under RecomputeAll the backward re-gathers
+        // *indices, not rows* — the re-exchange a real interconnect
+        // would run is still priced into `recompute_bytes`
+        let grad_bytes = rows_ref.cross_rank_bytes(d, 4);
+        let recompute_bytes = if self.policy == CheckpointPolicy::RecomputeAll {
+            grad_bytes
+        } else {
+            0
+        };
+        // a saving policy whose session stored nothing is a corrupted
+        // session — fail loudly rather than silently re-gathering
+        if self.policy != CheckpointPolicy::RecomputeAll
+            && saved.iter().any(|sv| matches!(sv, SavedActs::Nothing))
+        {
+            return Err("session saved nothing under a saving policy".into());
         }
-
-        // routed inputs per rank: saved by the policy, or rebuilt by
-        // re-running the dispatch exchange (RecomputeAll)
-        let mut recompute_bytes = 0u64;
-        let (xs_all, hidden_all): (Vec<Vec<f32>>, Vec<Option<(Vec<f32>, Vec<f32>)>>) =
-            match self.policy {
-                CheckpointPolicy::RecomputeAll => {
-                    for (dst, per_src) in routes_ref.iter().enumerate() {
-                        for (src, hops) in per_src.iter().enumerate() {
-                            if src != dst {
-                                recompute_bytes += (hops.len() * d * 4) as u64;
-                            }
-                        }
-                    }
-                    let xs = par_map(r, workers, |dst| {
-                        let n_local = shards_ref[dst].local_slots();
-                        let mut xs = vec![0.0f32; n_local * d];
-                        for per_src in routes_ref[dst].iter() {
-                            for hop in per_src {
-                                let ls = hop.local_slot as usize;
-                                let t = hop.token as usize;
-                                xs[ls * d..(ls + 1) * d]
-                                    .copy_from_slice(&x[t * d..(t + 1) * d]);
-                            }
-                        }
-                        xs
-                    });
-                    (xs, (0..r).map(|_| None).collect())
-                }
-                _ => {
-                    let mut xs_all = Vec::with_capacity(r);
-                    let mut hidden_all = Vec::with_capacity(r);
-                    for sv in st.saved {
-                        match sv {
-                            SavedActs::All { xs, pre, act } => {
-                                xs_all.push(xs);
-                                hidden_all.push(Some((pre, act)));
-                            }
-                            SavedActs::Inputs { xs } => {
-                                xs_all.push(xs);
-                                hidden_all.push(None);
-                            }
-                            SavedActs::Nothing => {
-                                return Err(
-                                    "session saved nothing under a saving policy"
-                                        .into(),
-                                );
-                            }
-                        }
-                    }
-                    (xs_all, hidden_all)
-                }
-            };
 
         // per-rank gradient accumulation into the caller's accumulator:
         // move each expert's accumulator into its owning rank's work
         // item (plus a per-local-slot ∂x buffer when requested), let one
-        // worker per rank extend it in segment order, reassemble
+        // worker per rank extend it in segment order via the blocked
+        // kernels, reassemble
         let assignment = self.topo.assignment();
         let mut work: Vec<RankBwdWork> = (0..r)
             .map(|dst| RankBwdWork {
                 bucket: Vec::new(),
                 dxs: vec![0.0f32; if want_dx {
-                    shards_ref[dst].local_slots() * d
+                    rows_ref.per_rank[dst].local_slots() * d
                 } else {
                     0
                 }],
+                timers: KernelTimers::default(),
             })
             .collect();
         for (e, g) in grads.experts.drain(..).enumerate() {
             work[assignment.rank_of[e] as usize].bucket.push((e, g));
         }
-        let dsend_ref = &dsend;
-        let xs_ref = &xs_all;
-        let hidden_ref = &hidden_all;
         scope_chunks(&mut work, 1, workers, |dst, chunk| {
-            let RankBwdWork { bucket, dxs } = &mut chunk[0];
-            let s = &shards_ref[dst];
-            let n_local = s.local_slots();
-            let mut dys = vec![0.0f32; n_local * d];
-            for (src, bufs) in dsend_ref.iter().enumerate() {
-                for (i, hop) in routes_ref[dst][src].iter().enumerate() {
-                    let ls = hop.local_slot as usize;
-                    dys[ls * d..(ls + 1) * d]
-                        .copy_from_slice(&bufs[dst][i * d..(i + 1) * d]);
-                }
-            }
-            let xs = &xs_ref[dst];
-            let mut pre_row = vec![0.0f32; h];
-            let mut act_row = vec![0.0f32; h];
-            let mut dz = vec![0.0f32; h];
+            let RankBwdWork { bucket, dxs, .. } = &mut chunk[0];
+            let rr = &rows_ref.per_rank[dst];
+            let (xsrc, hidden): (RowsSrc, Option<(&[f32], &[f32])>) =
+                match &saved[dst] {
+                    SavedActs::All { xs, pre, act } => {
+                        (RowsSrc::Packed(&xs[..]), Some((&pre[..], &act[..])))
+                    }
+                    SavedActs::Inputs { xs } => (RowsSrc::Packed(&xs[..]), None),
+                    // RecomputeAll: gather straight from the shared batch
+                    SavedActs::Nothing => (RowsSrc::Tokens(x), None),
+                };
+            let mut scratch = KernelScratch::new(d, h, tile);
             for (i, (e, g)) in bucket.iter_mut().enumerate() {
-                debug_assert_eq!(*e as u32, s.experts[i]);
+                debug_assert_eq!(*e as u32, rr.experts[i]);
                 let p = &self.rank_params[dst].experts[i].1;
-                let lo = s.expert_token_offsets[i] as usize;
-                let hi = s.expert_token_offsets[i + 1] as usize;
-                for ls in lo..hi {
-                    let xrow = &xs[ls * d..(ls + 1) * d];
-                    let dy = &dys[ls * d..(ls + 1) * d];
-                    let (pre, act): (&[f32], &[f32]) = match &hidden_ref[dst] {
-                        Some((pre, act)) => (&pre[ls * h..(ls + 1) * h],
-                                             &act[ls * h..(ls + 1) * h]),
-                        None => {
-                            recompute_hidden(p, d, h, xrow, &mut pre_row, &mut act_row);
-                            (&pre_row[..], &act_row[..])
-                        }
-                    };
-                    let dx_row = if want_dx {
-                        Some(&mut dxs[ls * d..(ls + 1) * d])
-                    } else {
-                        None
-                    };
-                    expert_backward_row(p, g, d, h, xrow, dy, pre, act, &mut dz,
-                                        dx_row);
+                let lo = rr.expert_offsets[i] as usize;
+                let hi = rr.expert_offsets[i + 1] as usize;
+                if lo == hi {
+                    continue;
                 }
+                // timers: None — the barrier engine has no timeline
+                backward_segment(p, g, d, h, lo, hi, &xsrc, &rr.tokens, 0,
+                                 &rr.gate_slots, 0, d_out, gates, hidden,
+                                 if want_dx { Some(&mut dxs[..]) } else { None },
+                                 &mut scratch, None);
             }
         });
         if let Some(dx) = d_x {
-            fold_dx(shards_ref, &work, d, self.topo.num_experts, 0, dx);
+            fold_dx(rows_ref, &work, d, self.topo.num_experts, 0, dx);
         }
         let mut dense: Vec<Option<ExpertParams>> =
             (0..self.topo.num_experts).map(|_| None).collect();
@@ -1527,64 +1520,58 @@ impl ExecutionEngine for ShardedEngine {
         let gates = batch.gates();
         let (l, k) = (disp.num_tokens, disp.top_k);
 
-        // (i) dispatch all-to-all: each source rank packs one buffer per
-        // destination from its resident token rows (the pipeline's pack
-        // helper with the whole batch as its single chunk)
-        let send = pack_sends(plan, x, 0, d, workers);
-        let mut traffic = Traffic::default();
-        for src in 0..r {
-            for dst in 0..r {
-                let rows = plan.routes[dst][src].len() as u64;
-                if src == dst {
-                    traffic.local_rows += rows;
-                } else {
-                    traffic.cross_rows += rows;
-                    traffic.dispatch_bytes += (send[src][dst].len() * 4) as u64;
-                }
-            }
-        }
+        // (i) dispatch "exchange": nothing is packed — the cached
+        // RowIndexPlan already tells every rank where its routed rows
+        // live, and the bytes a real interconnect would move are derived
+        // from its src→dst row matrix (bit-equal to what the retired
+        // packed buffers measured; the property suite pins it)
+        let cross_bytes = plan.rows.cross_rank_bytes(d, 4);
+        let traffic = Traffic {
+            dispatch_bytes: cross_bytes,
+            // every routed row returns to its home rank in the combine
+            combine_bytes: cross_bytes,
+            cross_rows: plan.rows.cross_rows(),
+            local_rows: plan.rows.local_rows(),
+            ..Traffic::default()
+        };
 
-        // (ii) per-rank unpack, expert compute, and combine-buffer pack
-        // (one shared definition with the pipelined engine)
-        let computed = compute_chunk(plan, &self.rank_params, policy, d, h, workers, &send);
+        // (ii) per-rank blocked expert compute, gathering rows directly
+        // from the shared batch (one definition with the pipelined
+        // engine — the engines cannot drift apart on the kernel path)
+        let computed =
+            compute_chunk_indexed(plan, &self.rank_params, policy, d, h, workers,
+                                  self.tile_rows, x, 0, false);
         let mut saved = Vec::with_capacity(r);
-        let mut rets = Vec::with_capacity(r);
-        for (sv, ret) in computed {
+        let mut ys_of = Vec::with_capacity(r);
+        for (sv, ys, _timers) in computed {
             saved.push(sv);
-            rets.push(ret);
-        }
-        for dst in 0..r {
-            for src in 0..r {
-                if src != dst {
-                    traffic.combine_bytes += (rets[dst][src].len() * 4) as u64;
-                }
-            }
+            ys_of.push(ys);
         }
 
-        // (iii) combine scatter on each token's home rank (same j order
-        // as the single-rank path — bit-identical accumulation; shared
-        // with the pipelined engine, token_base = 0)
+        // (iii) combine scatter on each token's home rank, reading each
+        // expert-output row in place via the return lookup (same j order
+        // as the single-rank path — bit-identical accumulation)
         let mut out = vec![0.0f32; l * d];
-        combine_chunk(plan, gates, &rets, d, k, workers, 0, &mut out);
+        combine_chunk(plan, gates, &ys_of, d, k, workers, 0, &mut out);
 
-        // per-rank Figure-3/5 accounting from what was actually resident
+        // per-rank Figure-3/5 accounting from what was actually resident:
+        // the packed send/return buffers are gone, so comm residency is
+        // one inbound gather tile + one outbound return tile per rank
         let mem: Vec<MemoryBreakdown> = (0..r)
             .map(|rank| {
-                let n_local = plan.shards[rank].local_slots() as u64;
+                let n_local = plan.rows.per_rank[rank].local_slots() as u64;
                 let resident = plan.tokens_of_rank[rank].len() as u64;
-                let comm: u64 = (0..r)
-                    .map(|peer| {
-                        (send[rank][peer].len() + rets[rank][peer].len()) as u64 * 4
-                    })
-                    .sum();
                 MemoryBreakdown {
                     // ys per local slot + resident token rows in +
                     // combined rows out, plus the policy-saved tensors
                     data_bytes: 4 * d as u64 * (n_local + 2 * resident)
                         + n_local
                             * policy.saved_bytes_per_slot(d as u64, h as u64, 4),
-                    index_bytes: plan.shards[rank].metadata_bytes() as u64,
-                    extra_bytes: comm,
+                    index_bytes: plan.rows.per_rank[rank].metadata_bytes() as u64,
+                    extra_bytes: staging_bytes(
+                        self.tile_rows as u64, d as u64, 4,
+                        plan.rows.remote_in_rows(rank),
+                        plan.rows.remote_return_rows(rank)),
                 }
             })
             .collect();
@@ -1641,6 +1628,283 @@ impl ExecutionEngine for ShardedEngine {
     fn gather_params(&self) -> Result<ExpertStore, String> {
         ExpertStore::gather(&self.rank_params, self.topo.num_experts)
     }
+}
+
+// -- packed-path reference baseline -----------------------------------------
+
+/// The **pre-PR-5 materialized hot path**, preserved verbatim as the
+/// measurable baseline: pack per-(src, dst) send buffers, unpack per
+/// rank into a routed-input buffer, run the per-row dot-product kernels,
+/// pack per-(dst, home) return buffers, combine through them; the
+/// backward packs the gated gradient exchange and walks rows one at a
+/// time. Bit-identical to the engines — the `ep_engine.rs` matrix pins
+/// new == old for outputs and gradients — but carrying the three
+/// whole-batch buffer copies and the per-row weight streaming the
+/// index-driven blocked path eliminates.
+///
+/// The routing plan is built once at construction and reused across
+/// steps, exactly as the retired engines' LRU plan caches amortized it —
+/// so `ep-bench --json-out` / `benches/ep_alltoall.rs` measure the
+/// buffer+kernel cost difference at the same worker count, not a
+/// plan-rebuild penalty the old path never paid per step.
+pub struct PackedReference {
+    plan: BatchPlan,
+    /// origin slot → (dst rank, index within rets[dst][home]) — the old
+    /// return-buffer cursor layout
+    ret_pos: Vec<(u32, u32)>,
+    /// expert→rank map for the backward's per-rank gradient bucketing
+    assignment: crate::dispatch::shard::ExpertAssignment,
+    ranks: usize,
+}
+
+impl PackedReference {
+    pub fn new(topo: &EpTopology, batch: &StepBatch) -> Result<PackedReference, String> {
+        let l = batch.num_tokens();
+        let plan = BatchPlan::build(batch.disp(), topo, 0, l)?;
+        let r = topo.ranks;
+        let mut ret_pos = vec![(0u32, 0u32); batch.disp().slots()];
+        for (dst, rr) in plan.rows.per_rank.iter().enumerate() {
+            let mut counter = vec![0u32; r];
+            for ls in 0..rr.local_slots() {
+                let home = rr.src_rank[ls] as usize;
+                ret_pos[rr.gate_slots[ls] as usize] = (dst as u32, counter[home]);
+                counter[home] += 1;
+            }
+        }
+        Ok(PackedReference {
+            plan,
+            ret_pos,
+            assignment: topo.assignment(),
+            ranks: r,
+        })
+    }
+
+    /// One fwd+bwd step over the cached plan; returns the combined
+    /// output and the parameter gradients for `d_out`.
+    pub fn step(&self, store: &ExpertStore, batch: &StepBatch, d_out: &[f32],
+                policy: CheckpointPolicy, workers: usize)
+                -> Result<(Vec<f32>, ExpertGrads), String> {
+        packed_step_impl(self, store, batch, d_out, policy, workers)
+    }
+}
+
+/// One-shot convenience wrapper over [`PackedReference`] (plan built and
+/// discarded — tests use this; benches amortize the plan).
+pub fn packed_reference_step(topo: &EpTopology, store: &ExpertStore,
+                             batch: &StepBatch, d_out: &[f32],
+                             policy: CheckpointPolicy, workers: usize)
+                             -> Result<(Vec<f32>, ExpertGrads), String> {
+    PackedReference::new(topo, batch)?.step(store, batch, d_out, policy, workers)
+}
+
+fn packed_step_impl(pr: &PackedReference, store: &ExpertStore,
+                    batch: &StepBatch, d_out: &[f32],
+                    policy: CheckpointPolicy, workers: usize)
+                    -> Result<(Vec<f32>, ExpertGrads), String> {
+    let (d, h) = (store.d_model, store.d_hidden);
+    check_batch(batch, d, store.experts.len())?;
+    let l = batch.num_tokens();
+    if d_out.len() != l * d {
+        return Err(format!(
+            "d_out has {} elements, expected L·d = {}",
+            d_out.len(),
+            l * d
+        ));
+    }
+    let plan = &pr.plan;
+    let rows = &plan.rows;
+    let r = pr.ranks;
+    if rows.per_rank.iter().map(|rr| rr.local_slots()).sum::<usize>()
+        != batch.disp().slots()
+    {
+        return Err("packed reference plan does not cover this batch".into());
+    }
+    if pr.assignment.rank_of.len() != store.experts.len() {
+        return Err(format!(
+            "packed reference plan covers {} experts, store has {}",
+            pr.assignment.rank_of.len(),
+            store.experts.len()
+        ));
+    }
+    let ret_pos = &pr.ret_pos;
+    let workers = workers.max(1).min(r);
+    let x = batch.x();
+    let gates = batch.gates();
+    let k = batch.disp().top_k;
+
+    // (i) pack send buffers: send[src][dst] rows in dst-local slot order
+    // (pre-sized from the row matrix, as the old pack helpers were)
+    let send: Vec<Vec<Vec<f32>>> = par_map(r, workers, |src| {
+        (0..r)
+            .map(|dst| {
+                let rr = &rows.per_rank[dst];
+                let mut buf =
+                    Vec::with_capacity(rows.rows(src, dst) as usize * d);
+                for ls in 0..rr.local_slots() {
+                    if rr.src_rank[ls] as usize == src {
+                        let t = rr.tokens[ls] as usize;
+                        buf.extend_from_slice(&x[t * d..(t + 1) * d]);
+                    }
+                }
+                buf
+            })
+            .collect()
+    });
+
+    // (ii) per-rank unpack, per-row expert compute, return-buffer pack
+    type RankOut = (Vec<f32>, Vec<Vec<f32>>, Option<(Vec<f32>, Vec<f32>)>);
+    let computed: Vec<RankOut> = par_map(r, workers, |dst| {
+        let rr = &rows.per_rank[dst];
+        let n_local = rr.local_slots();
+        let mut xs = vec![0.0f32; n_local * d];
+        let mut cursor = vec![0usize; r];
+        for ls in 0..n_local {
+            let src = rr.src_rank[ls] as usize;
+            let i = cursor[src];
+            xs[ls * d..(ls + 1) * d]
+                .copy_from_slice(&send[src][dst][i * d..(i + 1) * d]);
+            cursor[src] = i + 1;
+        }
+        let save_hidden = policy == CheckpointPolicy::SaveAll;
+        let mut ys = vec![0.0f32; n_local * d];
+        let mut pre = vec![0.0f32; if save_hidden { n_local * h } else { 0 }];
+        let mut act = vec![0.0f32; if save_hidden { n_local * h } else { 0 }];
+        let mut hidden = vec![0.0f32; h];
+        for (i, &e) in rr.experts.iter().enumerate() {
+            let p = &store.experts[e as usize];
+            let lo = rr.expert_offsets[i] as usize;
+            let hi = rr.expert_offsets[i + 1] as usize;
+            for ls in lo..hi {
+                if save_hidden {
+                    expert_forward_saving(p, d, h, &xs[ls * d..(ls + 1) * d],
+                                          &mut ys[ls * d..(ls + 1) * d],
+                                          &mut pre[ls * h..(ls + 1) * h],
+                                          &mut act[ls * h..(ls + 1) * h]);
+                } else {
+                    expert_forward(p, d, h, &xs[ls * d..(ls + 1) * d],
+                                   &mut ys[ls * d..(ls + 1) * d], &mut hidden);
+                }
+            }
+        }
+        let rets: Vec<Vec<f32>> = (0..r)
+            .map(|home| {
+                let mut buf =
+                    Vec::with_capacity(rows.rows(home, dst) as usize * d);
+                for ls in 0..n_local {
+                    if rr.src_rank[ls] as usize == home {
+                        buf.extend_from_slice(&ys[ls * d..(ls + 1) * d]);
+                    }
+                }
+                buf
+            })
+            .collect();
+        (xs, rets, save_hidden.then(|| (pre, act)))
+    });
+
+    // (iii) combine on each token's home rank through the return buffers
+    let mut out = vec![0.0f32; l * d];
+    for (home, toks) in plan.tokens_of_rank.iter().enumerate() {
+        for &t in toks {
+            let t = t as usize;
+            let o = &mut out[t * d..(t + 1) * d];
+            for j in 0..k {
+                let slot = t * k + j;
+                let g = gates[slot];
+                let (dst, idx) = ret_pos[slot];
+                let buf = &computed[dst as usize].1[home];
+                let row = &buf[idx as usize * d..(idx as usize + 1) * d];
+                for c in 0..d {
+                    o[c] += g * row[c];
+                }
+            }
+        }
+    }
+
+    // backward: pack the gated gradient exchange, unpack per rank, walk
+    // rows one at a time through the row kernels
+    let dsend: Vec<Vec<Vec<f32>>> = par_map(r, workers, |home| {
+        (0..r)
+            .map(|dst| {
+                let rr = &rows.per_rank[dst];
+                let mut buf =
+                    Vec::with_capacity(rows.rows(home, dst) as usize * d);
+                for ls in 0..rr.local_slots() {
+                    if rr.src_rank[ls] as usize == home {
+                        let t = rr.tokens[ls] as usize;
+                        let g = gates[rr.gate_slots[ls] as usize];
+                        for c in 0..d {
+                            buf.push(g * d_out[t * d + c]);
+                        }
+                    }
+                }
+                buf
+            })
+            .collect()
+    });
+    let mut grads = ExpertGrads::zeros(store.experts.len(), d, h);
+    let assignment = &pr.assignment;
+    let mut work: Vec<RankBwdWork> = (0..r)
+        .map(|_| RankBwdWork {
+            bucket: Vec::new(),
+            dxs: Vec::new(),
+            timers: KernelTimers::default(),
+        })
+        .collect();
+    for (e, g) in grads.experts.drain(..).enumerate() {
+        work[assignment.rank_of[e] as usize].bucket.push((e, g));
+    }
+    scope_chunks(&mut work, 1, workers, |dst, chunk| {
+        let bucket = &mut chunk[0].bucket;
+        let rr = &rows.per_rank[dst];
+        let n_local = rr.local_slots();
+        let mut dys = vec![0.0f32; n_local * d];
+        let mut cursor = vec![0usize; r];
+        for ls in 0..n_local {
+            let src = rr.src_rank[ls] as usize;
+            let i = cursor[src];
+            dys[ls * d..(ls + 1) * d]
+                .copy_from_slice(&dsend[src][dst][i * d..(i + 1) * d]);
+            cursor[src] = i + 1;
+        }
+        let (xs, _, saved_hidden) = &computed[dst];
+        let mut pre_row = vec![0.0f32; h];
+        let mut act_row = vec![0.0f32; h];
+        let mut dz = vec![0.0f32; h];
+        for (i, (e, g)) in bucket.iter_mut().enumerate() {
+            debug_assert_eq!(*e as u32, rr.experts[i]);
+            let p = &store.experts[*e];
+            let lo = rr.expert_offsets[i] as usize;
+            let hi = rr.expert_offsets[i + 1] as usize;
+            for ls in lo..hi {
+                let xrow = &xs[ls * d..(ls + 1) * d];
+                let dy = &dys[ls * d..(ls + 1) * d];
+                let (pre, act): (&[f32], &[f32]) = match saved_hidden {
+                    Some((pre, act)) => (&pre[ls * h..(ls + 1) * h],
+                                         &act[ls * h..(ls + 1) * h]),
+                    None => {
+                        recompute_hidden(p, d, h, xrow, &mut pre_row,
+                                         &mut act_row);
+                        (&pre_row[..], &act_row[..])
+                    }
+                };
+                expert_backward_row(p, g, d, h, xrow, dy, pre, act, &mut dz,
+                                    None);
+            }
+        }
+    });
+    let mut dense: Vec<Option<ExpertParams>> =
+        (0..store.experts.len()).map(|_| None).collect();
+    for w in work {
+        for (e, g) in w.bucket {
+            dense[e] = Some(g);
+        }
+    }
+    grads.experts = dense
+        .into_iter()
+        .enumerate()
+        .map(|(e, g)| g.ok_or_else(|| format!("expert {e} grads lost")))
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok((out, grads))
 }
 
 // -- config-driven construction ---------------------------------------------
@@ -1725,16 +1989,19 @@ pub fn layer_engine_from_config(cfg: &EpConfig, store: ExpertStore,
             topo, &store, cfg.ranks, policy, cfg.pipeline_chunks, cost)?;
         engine.set_plan_cache_cap(cache_cap);
         engine.set_chunk_balance(cfg.chunk_balance);
+        engine.set_tile_rows(cfg.tile_rows);
         return Ok(Box::new(engine));
     }
     if cfg.ranks == 1 {
         let mut engine = SingleRankEngine::with_policy(store, policy);
         engine.set_plan_cache_cap(cache_cap);
+        engine.set_tile_rows(cfg.tile_rows);
         Ok(Box::new(engine))
     } else {
         let topo = topology_from_config(cfg, cfg.ranks)?;
         let mut engine = ShardedEngine::with_policy(topo, &store, cfg.ranks, policy)?;
         engine.set_plan_cache_cap(cache_cap);
+        engine.set_tile_rows(cfg.tile_rows);
         Ok(Box::new(engine))
     }
 }

@@ -8,10 +8,12 @@
 //!
 //! Since the rank-sharded execution engine landed
 //! (`coordinator::engine::ShardedEngine`), this planner is the executor's
-//! **dry-run mode**: [`EpTopology::plan`] predicts the exchange the engine
-//! then performs with real buffer packing, and the engine's *measured*
-//! byte counts are asserted against [`AllToAllPlan::cross_rank_bytes`]
-//! (see `rust/tests/ep_engine.rs` and the `ep-bench` subcommand).
+//! **dry-run mode**: [`EpTopology::plan`] predicts the exchange the
+//! engine executes. The engine's byte counts — measured at packed
+//! buffers before PR 5, derived from the index-driven
+//! `dispatch::RowIndexPlan` since — are asserted equal to
+//! [`AllToAllPlan::cross_rank_bytes`] (see `rust/tests/ep_engine.rs`,
+//! `rust/tests/row_plan_properties.rs`, and the `ep-bench` subcommand).
 
 use crate::config::ep::Placement;
 use crate::dispatch::shard::ExpertAssignment;

@@ -1,0 +1,620 @@
+//! Tile-blocked expert kernels — the compute half of the
+//! zero-materialization hot path.
+//!
+//! The row kernels in `coordinator::engine` (`expert_forward`,
+//! `expert_backward_row`) stream every weight and gradient matrix from
+//! memory once **per routed row** and run one scalar accumulation chain
+//! at a time. These blocked kernels process each expert's routed-row
+//! segment in tiles of `tile_rows` rows instead:
+//!
+//! * routed inputs are gathered straight from the caller-owned batch
+//!   activations into a transposed `(d × T)` staging tile (`xt[j][t]`),
+//!   so the innermost loops run over `T` independent rows with
+//!   unit-stride access — `T` independent accumulation chains the
+//!   compiler can vectorize, where the row kernels had one serial chain;
+//! * each weight/gradient matrix row is streamed once per **tile**
+//!   rather than once per row — a `T`-fold cut in the memory traffic
+//!   that dominates the backward pass (the `∂W` matrices are read and
+//!   written per row in the row kernels);
+//! * the `∂x` pass reads a transposed-`w1` layout (`(d × h)`, built once
+//!   per expert segment per step by [`transpose_w1`]) so its inner
+//!   `j`-chains are unit-stride too.
+//!
+//! # Bit-identity contract
+//!
+//! Every scalar output element accumulates **in exactly the row
+//! kernels' op order**, so blocked results are bit-identical to the
+//! per-row path for any tile size (pinned by the unit tests below and
+//! the engine matrices):
+//!
+//! * `pre[t][i]` starts from `b1[i]` and adds `w1[i][j]·x[t][j]` for
+//!   `j` ascending — `recompute_hidden`'s chain;
+//! * `y[t][i]` starts from `b2[i]` and adds over `j` ascending in `h` —
+//!   `expert_forward`'s chain;
+//! * `dz[t][j]` accumulates `dy[t][i]·w2[i][j]` for `i` ascending from
+//!   zero, `dx[t][c]` accumulates `da[t][j]·w1[j][c]` for `j` ascending
+//!   from zero — `expert_backward_row`'s chains;
+//! * every gradient element (`∂W1`, `∂b1`, `∂W2`, `∂b2`) extends its
+//!   running value one routed row at a time, rows ascending within the
+//!   tile and tiles ascending within the segment — the exact row order
+//!   of the per-row walk. Crucially there is **no** per-tile partial sum
+//!   that gets added afterwards: `g += c₀; g += c₁; …` is performed
+//!   element-wise in row order, never `g += (c₀ + c₁)`.
+//!
+//! Rust never contracts `a*b + c` into an FMA or reassociates float
+//! ops, so matching the op order per element is sufficient for bitwise
+//! equality.
+
+use std::time::Instant;
+
+use super::params::ExpertParams;
+
+/// Default routed-row tile (`[ep] tile_rows`): big enough to amortize
+/// one weight-matrix stream across many rows and fill SIMD lanes, small
+/// enough that the staging tiles (`(d + h) × T` floats twice over) stay
+/// cache-resident for the bench shapes.
+pub const DEFAULT_TILE_ROWS: usize = 16;
+
+#[inline]
+pub(crate) fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Measured host wall-clock of one engine phase pair, accumulated by the
+/// segment drivers: `gather_s` is staging (the index-driven rump of the
+/// old exchange packing), `compute_s` the blocked kernels themselves.
+/// Feeds `TimelineBuilder::record_measured` and the calibration hook.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct KernelTimers {
+    pub(crate) gather_s: f64,
+    pub(crate) compute_s: f64,
+}
+
+impl KernelTimers {
+    pub(crate) fn add(&mut self, other: KernelTimers) {
+        self.gather_s += other.gather_s;
+        self.compute_s += other.compute_s;
+    }
+}
+
+/// Per-worker staging tiles, allocated once per rank per step and reused
+/// across every segment and tile — the "one staging tile, not a whole
+/// buffer" object the memory model accounts as comm residency.
+pub(crate) struct KernelScratch {
+    tile: usize,
+    /// (d × T) transposed routed inputs
+    xt: Vec<f32>,
+    /// (d × T) transposed expert outputs
+    yt: Vec<f32>,
+    /// (d × T) transposed gated output gradients
+    dyt: Vec<f32>,
+    /// (d × T) transposed input gradients
+    dxt: Vec<f32>,
+    /// (h × T) transposed hidden pre-activations
+    pre: Vec<f32>,
+    /// (h × T) transposed hidden activations
+    act: Vec<f32>,
+    /// (h × T) transposed ∂act
+    dzt: Vec<f32>,
+    /// (h × T) transposed ∂pre
+    dat: Vec<f32>,
+    /// transposed w1 (d × h), rebuilt once per expert segment when the
+    /// ∂x pass needs it
+    w1t: Vec<f32>,
+}
+
+impl KernelScratch {
+    pub(crate) fn new(d: usize, h: usize, tile_rows: usize) -> KernelScratch {
+        let t = tile_rows.max(1);
+        KernelScratch {
+            tile: t,
+            xt: vec![0.0; d * t],
+            yt: vec![0.0; d * t],
+            dyt: vec![0.0; d * t],
+            dxt: vec![0.0; d * t],
+            pre: vec![0.0; h * t],
+            act: vec![0.0; h * t],
+            dzt: vec![0.0; h * t],
+            dat: vec![0.0; h * t],
+            w1t: Vec::new(),
+        }
+    }
+}
+
+/// Transposed-`w1` layout: `w1t[c·h + j] = w1[j·d + c]`, so the ∂x
+/// pass's inner `j`-chains read unit-stride. Built once per expert
+/// segment per step (the segment is visited once per backward), then
+/// reused by every tile.
+pub(crate) fn transpose_w1(w1: &[f32], d: usize, h: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(d * h, 0.0);
+    for j in 0..h {
+        let row = &w1[j * d..(j + 1) * d];
+        for c in 0..d {
+            out[c * h + j] = row[c];
+        }
+    }
+}
+
+/// Where a tile's routed-input rows come from.
+pub(crate) enum RowsSrc<'a> {
+    /// packed per-local-slot rows (the policy-saved `xs`): slot `ls`
+    /// lives at `data[ls·d ..]`
+    Packed(&'a [f32]),
+    /// gather straight from the caller's activations via the index plan
+    /// (`RecomputeAll`'s backward re-gather — indices, not rows)
+    Tokens(&'a [f32]),
+}
+
+/// Gather one tile of routed-input rows into the transposed staging
+/// tile, optionally saving the untransposed rows (the `SaveInputs` /
+/// `SaveAll` residuals) on the way through.
+#[allow(clippy::too_many_arguments)]
+fn gather_x_tile(src: &RowsSrc, d: usize, tile: usize, lo: usize, rows: usize,
+                 tokens: &[u32], token_base: usize, xt: &mut [f32],
+                 mut saved_xs: Option<&mut [f32]>) {
+    for r in 0..rows {
+        let ls = lo + r;
+        let row = match src {
+            RowsSrc::Packed(data) => &data[ls * d..(ls + 1) * d],
+            RowsSrc::Tokens(x) => {
+                let tok = token_base + tokens[ls] as usize;
+                &x[tok * d..(tok + 1) * d]
+            }
+        };
+        for j in 0..d {
+            xt[j * tile + r] = row[j];
+        }
+        if let Some(xs) = saved_xs.as_deref_mut() {
+            xs[ls * d..(ls + 1) * d].copy_from_slice(row);
+        }
+    }
+}
+
+/// Gather one tile of gated output-gradient rows (`dy = gate · d_out`)
+/// into the transposed staging tile — the backward mirror of the
+/// dispatch gather, replacing the packed gradient exchange.
+#[allow(clippy::too_many_arguments)]
+fn gather_dy_tile(d_out: &[f32], gates: &[f32], d: usize, tile: usize, lo: usize,
+                  rows: usize, tokens: &[u32], token_base: usize,
+                  gate_slots: &[u32], gate_base: usize, dyt: &mut [f32]) {
+    for r in 0..rows {
+        let ls = lo + r;
+        let tok = token_base + tokens[ls] as usize;
+        let g = gates[gate_base + gate_slots[ls] as usize];
+        let row = &d_out[tok * d..(tok + 1) * d];
+        for j in 0..d {
+            dyt[j * tile + r] = g * row[j];
+        }
+    }
+}
+
+/// Gather one tile of saved hidden rows (packed per local slot) into the
+/// transposed tiles — a pure copy, values untouched.
+fn gather_hidden_tile(pre_s: &[f32], act_s: &[f32], h: usize, tile: usize,
+                      lo: usize, rows: usize, pre_t: &mut [f32],
+                      act_t: &mut [f32]) {
+    for r in 0..rows {
+        let ls = lo + r;
+        for i in 0..h {
+            pre_t[i * tile + r] = pre_s[ls * h + i];
+            act_t[i * tile + r] = act_s[ls * h + i];
+        }
+    }
+}
+
+/// Scatter a transposed (width × T) tile back into packed per-local-slot
+/// rows.
+fn scatter_tile(src_t: &[f32], width: usize, tile: usize, lo: usize, rows: usize,
+                out: &mut [f32]) {
+    for r in 0..rows {
+        let ls = lo + r;
+        let row = &mut out[ls * width..(ls + 1) * width];
+        for j in 0..width {
+            row[j] = src_t[j * tile + r];
+        }
+    }
+}
+
+/// Hidden pass over one tile: `pre[t][i] = b1[i] + Σ_j w1[i][j]·x[t][j]`
+/// (`j` ascending — `recompute_hidden`'s chain), `act = silu(pre)`.
+fn hidden_tile(p: &ExpertParams, d: usize, h: usize, tile: usize, rows: usize,
+               xt: &[f32], pre_t: &mut [f32], act_t: &mut [f32]) {
+    for i in 0..h {
+        let wrow = &p.w1[i * d..(i + 1) * d];
+        let b = p.b1[i];
+        let prow = &mut pre_t[i * tile..i * tile + rows];
+        for v in prow.iter_mut() {
+            *v = b;
+        }
+        for j in 0..d {
+            let w = wrow[j];
+            let xr = &xt[j * tile..j * tile + rows];
+            let prow = &mut pre_t[i * tile..i * tile + rows];
+            for t in 0..rows {
+                prow[t] += w * xr[t];
+            }
+        }
+        for t in 0..rows {
+            act_t[i * tile + t] = silu(pre_t[i * tile + t]);
+        }
+    }
+}
+
+/// Output projection over one tile: `y[t][i] = b2[i] + Σ_j w2[i][j]·act[t][j]`
+/// (`j` ascending in `h` — `expert_forward`'s chain).
+fn project_tile(p: &ExpertParams, d: usize, h: usize, tile: usize, rows: usize,
+                act_t: &[f32], yt: &mut [f32]) {
+    for i in 0..d {
+        let wrow = &p.w2[i * h..(i + 1) * h];
+        let b = p.b2[i];
+        let yrow = &mut yt[i * tile..i * tile + rows];
+        for v in yrow.iter_mut() {
+            *v = b;
+        }
+        for j in 0..h {
+            let w = wrow[j];
+            let ar = &act_t[j * tile..j * tile + rows];
+            let yrow = &mut yt[i * tile..i * tile + rows];
+            for t in 0..rows {
+                yrow[t] += w * ar[t];
+            }
+        }
+    }
+}
+
+/// Backward over one tile, extending `g` element-wise in row order and
+/// (optionally) producing the transposed ∂x tile. Chains mirror
+/// `expert_backward_row` exactly — see the module docs.
+#[allow(clippy::too_many_arguments)]
+fn backward_tile(p: &ExpertParams, g: &mut ExpertParams, d: usize, h: usize,
+                 tile: usize, rows: usize, xt: &[f32], dyt: &[f32],
+                 pre_t: &[f32], act_t: &[f32], dzt: &mut [f32],
+                 dat: &mut [f32], w1t: Option<&[f32]>,
+                 dxt: Option<&mut [f32]>) {
+    // dz[t][j] = Σ_i dy[t][i]·w2[i][j], i ascending from zero; W2/b2
+    // grads extend per element in row order
+    for j in 0..h {
+        for v in dzt[j * tile..j * tile + rows].iter_mut() {
+            *v = 0.0;
+        }
+    }
+    for i in 0..d {
+        let dyr = &dyt[i * tile..i * tile + rows];
+        let mut acc = g.b2[i];
+        for t in 0..rows {
+            acc += dyr[t];
+        }
+        g.b2[i] = acc;
+        let wrow = &p.w2[i * h..(i + 1) * h];
+        let grow = &mut g.w2[i * h..(i + 1) * h];
+        for j in 0..h {
+            let ar = &act_t[j * tile..j * tile + rows];
+            let mut acc = grow[j];
+            for t in 0..rows {
+                acc += dyr[t] * ar[t];
+            }
+            grow[j] = acc;
+            let w = wrow[j];
+            let dzr = &mut dzt[j * tile..j * tile + rows];
+            for t in 0..rows {
+                dzr[t] += dyr[t] * w;
+            }
+        }
+    }
+    // through silu, then W1/b1 grads — same element chains as the row
+    // kernel: da = dz·σ·(1 + pre·(1 − σ)) evaluated with the identical
+    // expression shape
+    for j in 0..h {
+        let dzr = &dzt[j * tile..j * tile + rows];
+        let prer = &pre_t[j * tile..j * tile + rows];
+        {
+            let dar = &mut dat[j * tile..j * tile + rows];
+            for t in 0..rows {
+                let sig = 1.0 / (1.0 + (-prer[t]).exp());
+                dar[t] = dzr[t] * sig * (1.0 + prer[t] * (1.0 - sig));
+            }
+        }
+        let dar = &dat[j * tile..j * tile + rows];
+        let mut acc = g.b1[j];
+        for t in 0..rows {
+            acc += dar[t];
+        }
+        g.b1[j] = acc;
+        let grow = &mut g.w1[j * d..(j + 1) * d];
+        for c in 0..d {
+            let xr = &xt[c * tile..c * tile + rows];
+            let mut acc = grow[c];
+            for t in 0..rows {
+                acc += dar[t] * xr[t];
+            }
+            grow[c] = acc;
+        }
+    }
+    // ∂x[t][c] = Σ_j da[t][j]·w1[j][c], j ascending from zero, read
+    // through the transposed-w1 layout for unit stride
+    if let Some(dxt) = dxt {
+        let w1t = w1t.expect("dx pass needs the transposed w1");
+        for c in 0..d {
+            let wcol = &w1t[c * h..(c + 1) * h];
+            for v in dxt[c * tile..c * tile + rows].iter_mut() {
+                *v = 0.0;
+            }
+            for j in 0..h {
+                let w = wcol[j];
+                let dar = &dat[j * tile..j * tile + rows];
+                let dxr = &mut dxt[c * tile..c * tile + rows];
+                for t in 0..rows {
+                    dxr[t] += dar[t] * w;
+                }
+            }
+        }
+    }
+}
+
+/// Forward one expert's routed-row segment `[lo, hi)` in tiles: gather
+/// rows straight from the caller's activations (`tokens` + `token_base`
+/// index into `x`), run the blocked FFN, scatter outputs into `ys`, and
+/// save what the checkpoint policy asks for. With `timers` set, gather
+/// time lands in `gather_s` (the staging rump of the old exchange) and
+/// kernel time in `compute_s`; `None` skips the per-tile clock reads
+/// entirely — engines without a timeline pay nothing for calibration
+/// they never read.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_segment(p: &ExpertParams, d: usize, h: usize, lo: usize,
+                              hi: usize, x: &[f32], tokens: &[u32],
+                              token_base: usize, ys: &mut [f32],
+                              mut saved_xs: Option<&mut [f32]>,
+                              mut saved_hidden: Option<(&mut [f32], &mut [f32])>,
+                              scratch: &mut KernelScratch,
+                              mut timers: Option<&mut KernelTimers>) {
+    let tile = scratch.tile;
+    let src = RowsSrc::Tokens(x);
+    let mut t0 = lo;
+    while t0 < hi {
+        let rows = tile.min(hi - t0);
+        let g0 = timers.is_some().then(Instant::now);
+        gather_x_tile(&src, d, tile, t0, rows, tokens, token_base,
+                      &mut scratch.xt, saved_xs.as_deref_mut());
+        let c0 = if let (Some(tm), Some(g0)) = (timers.as_deref_mut(), g0) {
+            tm.gather_s += g0.elapsed().as_secs_f64();
+            Some(Instant::now())
+        } else {
+            None
+        };
+        hidden_tile(p, d, h, tile, rows, &scratch.xt, &mut scratch.pre,
+                    &mut scratch.act);
+        project_tile(p, d, h, tile, rows, &scratch.act, &mut scratch.yt);
+        scatter_tile(&scratch.yt, d, tile, t0, rows, ys);
+        if let Some((pre_s, act_s)) = saved_hidden.as_mut() {
+            scatter_tile(&scratch.pre, h, tile, t0, rows, pre_s);
+            scatter_tile(&scratch.act, h, tile, t0, rows, act_s);
+        }
+        if let (Some(tm), Some(c0)) = (timers.as_deref_mut(), c0) {
+            tm.compute_s += c0.elapsed().as_secs_f64();
+        }
+        t0 += rows;
+    }
+}
+
+/// Backward one expert's routed-row segment `[lo, hi)` in tiles:
+/// gated-gradient rows and routed inputs are gathered directly (no
+/// packed gradient exchange, no re-gather buffer), hidden rows come from
+/// the saved tensors or the blocked recompute, parameter gradients
+/// extend `g` in exact row order, and per-slot ∂x rows land in `dxs`
+/// when requested. The transposed-`w1` layout is rebuilt once per call
+/// (= once per expert segment per step). `timers: None` skips every
+/// per-tile clock read (see [`forward_segment`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn backward_segment(p: &ExpertParams, g: &mut ExpertParams, d: usize,
+                               h: usize, lo: usize, hi: usize, xsrc: &RowsSrc,
+                               tokens: &[u32], token_base: usize,
+                               gate_slots: &[u32], gate_base: usize,
+                               d_out: &[f32], gates: &[f32],
+                               saved_hidden: Option<(&[f32], &[f32])>,
+                               mut dxs: Option<&mut [f32]>,
+                               scratch: &mut KernelScratch,
+                               mut timers: Option<&mut KernelTimers>) {
+    let tile = scratch.tile;
+    let want_dx = dxs.is_some();
+    if want_dx {
+        let mut w1t = std::mem::take(&mut scratch.w1t);
+        transpose_w1(&p.w1, d, h, &mut w1t);
+        scratch.w1t = w1t;
+    }
+    let mut t0 = lo;
+    while t0 < hi {
+        let rows = tile.min(hi - t0);
+        let g0 = timers.is_some().then(Instant::now);
+        gather_x_tile(xsrc, d, tile, t0, rows, tokens, token_base,
+                      &mut scratch.xt, None);
+        gather_dy_tile(d_out, gates, d, tile, t0, rows, tokens, token_base,
+                       gate_slots, gate_base, &mut scratch.dyt);
+        let c0 = if let (Some(tm), Some(g0)) = (timers.as_deref_mut(), g0) {
+            tm.gather_s += g0.elapsed().as_secs_f64();
+            Some(Instant::now())
+        } else {
+            None
+        };
+        match saved_hidden {
+            Some((pre_s, act_s)) => {
+                gather_hidden_tile(pre_s, act_s, h, tile, t0, rows,
+                                   &mut scratch.pre, &mut scratch.act);
+            }
+            None => {
+                hidden_tile(p, d, h, tile, rows, &scratch.xt, &mut scratch.pre,
+                            &mut scratch.act);
+            }
+        }
+        backward_tile(p, g, d, h, tile, rows, &scratch.xt, &scratch.dyt,
+                      &scratch.pre, &scratch.act, &mut scratch.dzt,
+                      &mut scratch.dat,
+                      if want_dx { Some(&scratch.w1t) } else { None },
+                      if want_dx { Some(&mut scratch.dxt) } else { None });
+        if let Some(dxs) = dxs.as_deref_mut() {
+            scatter_tile(&scratch.dxt, d, tile, t0, rows, dxs);
+        }
+        if let (Some(tm), Some(c0)) = (timers.as_deref_mut(), c0) {
+            tm.compute_s += c0.elapsed().as_secs_f64();
+        }
+        t0 += rows;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{expert_backward_row, expert_forward,
+                                     expert_forward_saving};
+    use crate::util::prng::Rng;
+
+    fn params(d: usize, h: usize, seed: u64) -> ExpertParams {
+        ExpertParams::init(d, h, seed)
+    }
+
+    /// The blocked forward must match the row kernel bit-for-bit, for
+    /// any tile size (1 = degenerate per-row tiles, > segment = one
+    /// tile), including the saved pre/act tensors.
+    #[test]
+    fn blocked_forward_matches_row_kernel_for_any_tile() {
+        let (d, h, n) = (7usize, 11usize, 29usize);
+        let p = params(d, h, 3);
+        let mut rng = Rng::new(5);
+        let x = rng.normal_vec(n * d, 1.0);
+        let tokens: Vec<u32> = (0..n as u32).rev().collect(); // scrambled gather
+        // row-kernel reference
+        let mut ys_ref = vec![0.0f32; n * d];
+        let mut pre_ref = vec![0.0f32; n * h];
+        let mut act_ref = vec![0.0f32; n * h];
+        for ls in 0..n {
+            let tok = tokens[ls] as usize;
+            expert_forward_saving(&p, d, h, &x[tok * d..(tok + 1) * d],
+                                  &mut ys_ref[ls * d..(ls + 1) * d],
+                                  &mut pre_ref[ls * h..(ls + 1) * h],
+                                  &mut act_ref[ls * h..(ls + 1) * h]);
+        }
+        // non-saving row kernel agrees with the saving one
+        let mut hidden = vec![0.0f32; h];
+        let mut y_row = vec![0.0f32; d];
+        expert_forward(&p, d, h, &x[(tokens[0] as usize) * d..][..d], &mut y_row,
+                       &mut hidden);
+        assert_eq!(&y_row[..], &ys_ref[..d]);
+
+        for tile in [1usize, 2, 5, 16, 64] {
+            let mut ys = vec![0.0f32; n * d];
+            let mut xs = vec![0.0f32; n * d];
+            let mut pre = vec![0.0f32; n * h];
+            let mut act = vec![0.0f32; n * h];
+            let mut scratch = KernelScratch::new(d, h, tile);
+            let mut timers = KernelTimers::default();
+            forward_segment(&p, d, h, 0, n, &x, &tokens, 0, &mut ys,
+                            Some(&mut xs[..]), Some((&mut pre[..], &mut act[..])),
+                            &mut scratch, Some(&mut timers));
+            assert_eq!(ys, ys_ref, "tile {tile}: outputs diverged");
+            assert_eq!(pre, pre_ref, "tile {tile}: pre diverged");
+            assert_eq!(act, act_ref, "tile {tile}: act diverged");
+            for ls in 0..n {
+                let tok = tokens[ls] as usize;
+                assert_eq!(&xs[ls * d..(ls + 1) * d], &x[tok * d..(tok + 1) * d],
+                           "tile {tile}: saved xs diverged");
+            }
+            assert!(timers.compute_s >= 0.0 && timers.gather_s >= 0.0);
+        }
+    }
+
+    /// The blocked backward must extend gradients and produce ∂x rows
+    /// bit-identically to the per-row walk, for any tile size, with
+    /// saved and recomputed hidden rows, continuing a non-zero
+    /// accumulator.
+    #[test]
+    fn blocked_backward_matches_row_kernel_for_any_tile() {
+        let (d, h, n) = (6usize, 9usize, 23usize);
+        let p = params(d, h, 7);
+        let mut rng = Rng::new(9);
+        let x = rng.normal_vec(n * d, 1.0);
+        let d_out = rng.normal_vec(n * d, 1.0);
+        let gates: Vec<f32> = (0..n).map(|i| 0.1 + (i as f32) * 0.03).collect();
+        let tokens: Vec<u32> = (0..n as u32).map(|t| (t * 7) % n as u32).collect();
+        let gate_slots: Vec<u32> = (0..n as u32).collect();
+        // row-kernel reference: saved pre/act + grads + dx rows
+        let mut pre_s = vec![0.0f32; n * h];
+        let mut act_s = vec![0.0f32; n * h];
+        let mut ys = vec![0.0f32; n * d];
+        for ls in 0..n {
+            let tok = tokens[ls] as usize;
+            expert_forward_saving(&p, d, h, &x[tok * d..(tok + 1) * d],
+                                  &mut ys[ls * d..(ls + 1) * d],
+                                  &mut pre_s[ls * h..(ls + 1) * h],
+                                  &mut act_s[ls * h..(ls + 1) * h]);
+        }
+        let mut g_ref = ExpertParams::zeros(d, h);
+        // a non-trivial starting accumulator (grad-accum continuation)
+        for v in g_ref.w1.iter_mut() {
+            *v = 0.25;
+        }
+        let mut dxs_ref = vec![0.0f32; n * d];
+        let mut dz = vec![0.0f32; h];
+        let mut dy = vec![0.0f32; d];
+        for ls in 0..n {
+            let tok = tokens[ls] as usize;
+            let gate = gates[gate_slots[ls] as usize];
+            for c in 0..d {
+                dy[c] = gate * d_out[tok * d + c];
+            }
+            expert_backward_row(&p, &mut g_ref, d, h, &x[tok * d..(tok + 1) * d],
+                                &dy, &pre_s[ls * h..(ls + 1) * h],
+                                &act_s[ls * h..(ls + 1) * h], &mut dz,
+                                Some(&mut dxs_ref[ls * d..(ls + 1) * d]));
+        }
+
+        for tile in [1usize, 3, 8, 32] {
+            for saved in [true, false] {
+                let mut g = ExpertParams::zeros(d, h);
+                for v in g.w1.iter_mut() {
+                    *v = 0.25;
+                }
+                let mut dxs = vec![0.0f32; n * d];
+                let mut scratch = KernelScratch::new(d, h, tile);
+                let mut timers = KernelTimers::default();
+                backward_segment(
+                    &p, &mut g, d, h, 0, n, &RowsSrc::Tokens(&x[..]), &tokens, 0,
+                    &gate_slots, 0, &d_out, &gates,
+                    if saved { Some((&pre_s[..], &act_s[..])) } else { None },
+                    Some(&mut dxs[..]), &mut scratch, Some(&mut timers),
+                );
+                assert_eq!(g, g_ref, "tile {tile} saved {saved}: grads diverged");
+                assert_eq!(dxs, dxs_ref, "tile {tile} saved {saved}: dx diverged");
+            }
+        }
+        // packed-xs source (SaveInputs residuals) gathers the same rows
+        let mut xs = vec![0.0f32; n * d];
+        for ls in 0..n {
+            let tok = tokens[ls] as usize;
+            xs[ls * d..(ls + 1) * d].copy_from_slice(&x[tok * d..(tok + 1) * d]);
+        }
+        let mut g = ExpertParams::zeros(d, h);
+        for v in g.w1.iter_mut() {
+            *v = 0.25;
+        }
+        let mut scratch = KernelScratch::new(d, h, 4);
+        let mut timers = KernelTimers::default();
+        backward_segment(&p, &mut g, d, h, 0, n, &RowsSrc::Packed(&xs[..]),
+                         &tokens, 0, &gate_slots, 0, &d_out, &gates, None, None,
+                         &mut scratch, Some(&mut timers));
+        // no dx requested: parameter grads still bit-identical
+        assert_eq!(g, g_ref, "packed source / no-dx grads diverged");
+    }
+
+    #[test]
+    fn transpose_w1_round_trips() {
+        let (d, h) = (5usize, 8usize);
+        let p = params(d, h, 1);
+        let mut t = Vec::new();
+        transpose_w1(&p.w1, d, h, &mut t);
+        for j in 0..h {
+            for c in 0..d {
+                assert_eq!(t[c * h + j], p.w1[j * d + c]);
+            }
+        }
+    }
+}

@@ -28,6 +28,7 @@
 
 pub mod engine;
 pub mod expert_parallel;
+pub mod kernels;
 pub mod optim;
 pub mod params;
 pub mod pipeline;
@@ -35,11 +36,13 @@ pub mod stack;
 pub mod trainer;
 
 pub use engine::{check_equivalence, engine_from_config, layer_engine_from_config,
-                 split_bounds_weighted, step_batch_from_config,
-                 topology_from_config, workload_from_config, ExecutionEngine,
-                 LayerRouting, ShardedEngine, SingleRankEngine, StepBatch,
+                 packed_reference_step, split_bounds_weighted,
+                 step_batch_from_config, topology_from_config,
+                 workload_from_config, ExecutionEngine, LayerRouting,
+                 PackedReference, ShardedEngine, SingleRankEngine, StepBatch,
                  StepHandle, Traffic};
 pub use expert_parallel::{AllToAllPlan, EpTopology};
+pub use kernels::DEFAULT_TILE_ROWS;
 pub use optim::{clip_global_norm, optimizer_from_name, Adam, LrSchedule,
                 Optimizer, Sgd};
 pub use params::{ExpertGrads, ExpertStore, ParamStore, RankExperts};

@@ -1,18 +1,20 @@
-//! Chunked all-to-all pipeline: dispatch exchange overlapped with expert
-//! compute, with a deterministic phase-timeline cost model.
+//! Chunked all-to-all pipeline: the dispatch exchange streamed in K
+//! chunks against expert compute, with a deterministic phase-timeline
+//! cost model.
 //!
 //! The barrier engines run dispatch → expert compute → combine as three
 //! globally-separated phases, so cross-rank bytes serialize with FLOPs.
 //! [`PipelinedEngine`] breaks one step into K token-contiguous chunks
-//! (via [`StepBatch::split`]) and software-pipelines them at depth 2:
+//! (via [`StepBatch::split_routing`]) and prices them at pipeline
+//! depth 2 on the simulated clock:
 //!
 //! ```text
 //!            chunk 0         chunk 1         chunk 2
 //! comm lane  [exch 0]        [exch 1]        [exch 2]   [comb 0] ...
 //!                     \              \              \
 //! compute lane         [expert compute 0][compute 1][compute 2] ...
-//!                      ^ exch 1 packs here, on a scoped thread,
-//!                        while chunk 0's experts run on the pool
+//!                      ^ exch m+1 may start when compute m starts —
+//!                        one chunk of exchange in flight at a time
 //! ```
 //!
 //! # Chunk-pipeline lifecycle
@@ -21,42 +23,51 @@
 //!
 //! 1. **Plan** (cached per batch id, LRU like the barrier engine): split
 //!    the batch into K contiguous-token chunks and derive each chunk's
-//!    routing plan. Token residency stays in *global* coordinates
+//!    index-driven routing plan (`RowIndexPlan` + return lookup). Token
+//!    residency stays in *global* coordinates
 //!    (`rank_of_token(token_base + t, L)`), so the summed chunk exchange
 //!    moves exactly the whole-batch [`AllToAllPlan::cross_rank_bytes`] —
 //!    chunking changes *when* bytes move, never *how many*.
-//! 2. **Pipeline**: pack chunk 0's send buffers; then for each chunk m,
-//!    run its per-rank expert compute on the worker pool while a scoped
-//!    thread packs chunk m+1's exchange buffers, and drain chunk m's
-//!    combine scatter into the output as soon as its compute lands.
+//! 2. **Stream**: per chunk, the per-rank blocked expert compute gathers
+//!    routed rows straight from the parent batch (`compute_chunk_indexed`
+//!    — one definition with `ShardedEngine`), and the combine scatter
+//!    drains the chunk into the output reading expert outputs in place.
+//!    Since the zero-materialization redesign (PR 5) there are **no**
+//!    send/return buffers and therefore no host-side pack thread — the
+//!    chunk exchange a real interconnect would run is priced on the
+//!    simulated comm lanes from the chunk's analytic row matrix, while
+//!    the *measured* exchange wall-clock is the gather/staging time the
+//!    kernels report (the packing cost that remains).
 //! 3. **Save**: each chunk's policy-dependent activations
 //!    (`CheckpointPolicy`) are retained per chunk for the backward.
 //!
-//! `backward_into` mirrors it: chunk m+1's gated gradient buffers (and,
-//! under `RecomputeAll`, its re-gathered routed inputs — measured as
-//! `Traffic::recompute_bytes`) are packed while chunk m's gradient
-//! accumulation runs. Chunks accumulate in ascending token order, which
-//! is the exact float-op sequence of the unchunked batch (the same
-//! argument that makes grad-accum bit-identical), so outputs, gradients,
-//! and loss curves are bit-identical to [`ShardedEngine`] for every
-//! checkpoint policy × rank count × K — pinned by
+//! `backward_into` mirrors it: chunk m's gated gradient rows are
+//! gathered per tile (and, under `RecomputeAll`, its routed inputs are
+//! re-gathered by *index* — the re-exchange is still measured as
+//! `Traffic::recompute_bytes`). Chunks accumulate in ascending token
+//! order, which is the exact float-op sequence of the unchunked batch
+//! (the same argument that makes grad-accum bit-identical), so outputs,
+//! gradients, and loss curves are bit-identical to [`ShardedEngine`] for
+//! every checkpoint policy × rank count × K — pinned by
 //! `rust/tests/ep_pipeline.rs` and the `tools/ep_sim.py` mirror.
 //!
-//! Alongside the real (threaded) overlap, every session is priced on the
-//! [`timeline`] cost model's simulated clock, producing per-chunk
-//! [`PhaseSpan`]s and an [`OverlapReport`] (critical path, exposed
-//! communication, overlap efficiency) rendered by `ep-bench` and emitted
-//! through `MetricsSink` — see the [`timeline`] docs for the model's
-//! assumptions.
+//! Every session is priced on the [`timeline`] cost model's simulated
+//! clock, producing per-chunk [`PhaseSpan`]s and an [`OverlapReport`]
+//! (critical path, exposed communication, overlap efficiency) rendered
+//! by `ep-bench` and emitted through `MetricsSink` — see the
+//! [`timeline`] docs for the model's assumptions. With
+//! `[ep] calibrate = true` the engine folds the measured-vs-simulated
+//! phase ratios back into its effective rates each step
+//! (`recalibrate_cost_model`).
 //!
-//! Memory: only one chunk's transient buffers (routed rows, send/return
-//! buffers of the depth-2 window) are live at a time, so per-rank peak
-//! resident bytes *drop* versus the barrier engine's whole-batch buffers
-//! while the policy-saved bytes stay identical. Cached chunk plans are
-//! pure index data — activations and gates are always read from the
-//! parent `StepBatch` with token offsets, never copied per chunk — at
-//! the cost of per-chunk routing metadata (`index_bytes`) summing
-//! slightly above the whole-batch plan's.
+//! Memory: comm residency is the kernels' staging tiles — at most one
+//! inbound gather tile and one outbound return tile per rank
+//! (`memory::model::staging_bytes`), strictly below the packed per-peer
+//! buffers the pre-PR-5 path kept resident. Cached chunk plans are pure
+//! index data — activations and gates are always read from the parent
+//! `StepBatch` with token offsets, never copied per chunk — at the cost
+//! of per-chunk routing metadata (`index_bytes`) summing slightly above
+//! the whole-batch plan's.
 //!
 //! [`AllToAllPlan::cross_rank_bytes`]: super::expert_parallel::AllToAllPlan::cross_rank_bytes
 //! [`ShardedEngine`]: super::engine::ShardedEngine
@@ -65,21 +76,21 @@
 
 pub mod timeline;
 
-use std::mem;
 use std::time::Instant;
 
 use crate::config::ep::ChunkBalance;
-use crate::memory::model::{pipeline_window_bytes, CheckpointPolicy, MemoryBreakdown};
+use crate::memory::model::{staging_bytes, CheckpointPolicy, MemoryBreakdown};
 use crate::util::threadpool::{par_map, scope_chunks};
 
 use self::timeline::{bwd_flops_per_row, fwd_flops_per_row, CostModel, OverlapReport,
                      Phase, TimelineBuilder};
-use super::engine::{add_params, check_batch, expert_backward_row, expert_forward,
-                    expert_forward_saving, fold_dx, lru_get_or_insert,
-                    next_engine_tag, recompute_hidden, split_bounds_weighted,
-                    BatchPlan, ExecutionEngine, RankBwdWork, SavedActs, StepBatch,
+use super::engine::{add_params, check_batch, fold_dx, lru_get_or_insert,
+                    next_engine_tag, split_bounds_weighted, BatchPlan,
+                    ExecutionEngine, RankBwdWork, SavedActs, StepBatch,
                     StepHandle, Traffic, PLAN_CACHE_CAP};
 use super::expert_parallel::EpTopology;
+use super::kernels::{backward_segment, forward_segment, KernelScratch,
+                     KernelTimers, RowsSrc, DEFAULT_TILE_ROWS};
 use super::params::{ExpertGrads, ExpertParams, ExpertStore, RankExperts};
 
 /// One chunk of a batch: its token offset in the parent and the routing
@@ -102,8 +113,9 @@ struct PipeSession {
 }
 
 /// Chunk-pipelined expert-parallel engine: R simulated ranks, K-deep
-/// chunk stream, real threaded overlap of exchange packing with expert
-/// compute, measured traffic, and a simulated-cost [`OverlapReport`].
+/// chunk stream through the index-driven exchange, analytic traffic,
+/// and a simulated-cost [`OverlapReport`] with measured-phase
+/// calibration.
 pub struct PipelinedEngine {
     pub topo: EpTopology,
     pub rank_params: Vec<RankExperts>,
@@ -116,6 +128,8 @@ pub struct PipelinedEngine {
     /// how chunk boundaries are chosen: even token counts, or balanced
     /// by routed-row load so a skewed router stops making ragged chunks
     balance: ChunkBalance,
+    /// routed-row tile of the blocked kernels (`[ep] tile_rows`)
+    tile_rows: usize,
     cost: CostModel,
     engine_tag: u64,
     sessions_opened: u64,
@@ -161,6 +175,7 @@ impl PipelinedEngine {
             policy,
             chunks,
             balance: ChunkBalance::Tokens,
+            tile_rows: DEFAULT_TILE_ROWS,
             cost,
             engine_tag: next_engine_tag(),
             sessions_opened: 0,
@@ -176,6 +191,13 @@ impl PipelinedEngine {
     /// Chunk plans currently cached (≤ the cache bound, in batches).
     pub fn cached_plans(&self) -> usize {
         self.plans.len()
+    }
+
+    /// Set the blocked-kernel row tile (≥ 1). Outputs and gradients are
+    /// bit-identical for every tile size — the knob only moves
+    /// throughput and per-rank staging-tile residency.
+    pub fn set_tile_rows(&mut self, tile_rows: usize) {
+        self.tile_rows = tile_rows.max(1);
     }
 
     /// Raise/lower the chunk-plan cache bound (≥ 1, trimming
@@ -248,12 +270,15 @@ impl PipelinedEngine {
         })
     }
 
-    /// The one backward: chunk m+1's gradient exchange (and
-    /// `RecomputeAll` re-gather) packs while chunk m's accumulation
-    /// runs; per-chunk ∂x rows are folded home in ascending chunk order
-    /// (each chunk in global expert-major position order — `fold_dx`),
-    /// which is the unchunked accumulation sequence per token. Parameter
-    /// grads are bit-identical whether or not ∂x is requested.
+    /// The one backward: per chunk, gated gradient rows (and
+    /// `RecomputeAll`'s routed inputs) are gathered by index inside the
+    /// blocked kernels — no gradient-exchange buffer — while the
+    /// simulated timeline still prices the chunk's backward exchange on
+    /// the comm lanes at depth 2. Per-chunk ∂x rows are folded home in
+    /// ascending chunk order (each chunk in global expert-major position
+    /// order — `fold_dx`), which is the unchunked accumulation sequence
+    /// per token. Parameter grads are bit-identical whether or not ∂x is
+    /// requested.
     fn backward_impl(&mut self, handle: StepHandle, d_out: &[f32],
                      grads: &mut ExpertGrads,
                      d_x: Option<&mut [f32]>) -> Result<(), String> {
@@ -299,6 +324,7 @@ impl PipelinedEngine {
         let r = self.topo.ranks;
         let workers = self.workers.min(r);
         let policy = self.policy;
+        let tile = self.tile_rows;
         let plan_idx = self.plan_index(&st.batch)?;
 
         // move each expert's accumulator into its owning rank's work
@@ -307,7 +333,11 @@ impl PipelinedEngine {
         // sequence. The per-rank ∂x buffers are re-sized per chunk.
         let assignment = self.topo.assignment();
         let mut work: Vec<RankBwdWork> = (0..r)
-            .map(|_| RankBwdWork { bucket: Vec::new(), dxs: Vec::new() })
+            .map(|_| RankBwdWork {
+                bucket: Vec::new(),
+                dxs: Vec::new(),
+                timers: KernelTimers::default(),
+            })
             .collect();
         for (e, g) in grads.experts.drain(..).enumerate() {
             work[assignment.rank_of[e] as usize].bucket.push((e, g));
@@ -319,82 +349,37 @@ impl PipelinedEngine {
         let mut timeline = st.timeline;
         let mut grad_bytes = 0u64;
         let mut recompute_bytes = 0u64;
+        let row_bytes = (d * 4) as u64;
         {
             let chunks = &self.plans[plan_idx].1;
             let params = &self.rank_params;
             let kc = chunks.len();
             let mut saved_iter = st.saved.into_iter();
 
-            // one chunk's backward inputs: gated gradient buffers per
-            // (home → dst), plus — under RecomputeAll — the re-gathered
-            // routed inputs (the backward re-run of the dispatch
-            // exchange). Gates and activations come from the parent
-            // batch, offset by the chunk's token base. Returns its own
-            // wall-clock for the calibration hook.
-            let pack_bwd = |m: usize| -> (f64, Vec<Vec<Vec<f32>>>, Option<Vec<Vec<f32>>>) {
-                let t0 = Instant::now();
-                let cp = &chunks[m];
-                let routes = &cp.plan.routes;
-                let base = cp.token_base * d;
-                let gate_base = cp.token_base * k_top;
-                let dsend = par_map(r, workers, |home| {
-                    (0..r)
-                        .map(|dst| {
-                            let hops = &routes[dst][home];
-                            let mut buf = Vec::with_capacity(hops.len() * d);
-                            for hop in hops {
-                                let t = hop.token as usize;
-                                let g = gates[gate_base + hop.origin as usize];
-                                for c in 0..d {
-                                    buf.push(g * d_out[base + t * d + c]);
-                                }
-                            }
-                            buf
-                        })
-                        .collect()
-                });
-                let xs_re = (policy == CheckpointPolicy::RecomputeAll).then(|| {
-                    let shards = &cp.plan.shards;
-                    par_map(r, workers, |dst| {
-                        let n_local = shards[dst].local_slots();
-                        let mut xs = vec![0.0f32; n_local * d];
-                        for per_src in routes[dst].iter() {
-                            for hop in per_src {
-                                let ls = hop.local_slot as usize;
-                                let t = cp.token_base + hop.token as usize;
-                                xs[ls * d..(ls + 1) * d]
-                                    .copy_from_slice(&x[t * d..(t + 1) * d]);
-                            }
-                        }
-                        xs
-                    })
-                });
-                (t0.elapsed().as_secs_f64(), dsend, xs_re)
-            };
-
             let bwd_start = timeline.now();
             let mut prev_acc_start = bwd_start;
-            let mut next = pack_bwd(0);
             for m in 0..kc {
                 let cp = &chunks[m];
-                let (pack_dur, dsend, xs_re) = next;
-                timeline.record_measured(Phase::Exchange, pack_dur);
+                let rows = &cp.plan.rows;
+                // backward exchange, analytic: gated gradient rows mirror
+                // the fwd dispatch row-for-row (home → expert rank), and
+                // RecomputeAll's re-gather moves the dispatch rows once
+                // more — the index plan drives both, no buffer is packed
                 let mut cross = vec![0u64; r];
                 for home in 0..r {
                     for dst in 0..r {
                         if home != dst {
-                            let b = (dsend[home][dst].len() * 4) as u64;
+                            let b = rows.rows(home, dst) * row_bytes;
                             grad_bytes += b;
                             cross[home] += b;
                         }
                     }
                 }
-                if xs_re.is_some() {
-                    // the re-gather moves exactly the fwd dispatch rows again
-                    for (dst, per_src) in cp.plan.routes.iter().enumerate() {
-                        for (src, hops) in per_src.iter().enumerate() {
+                if policy == CheckpointPolicy::RecomputeAll {
+                    for dst in 0..r {
+                        for src in 0..r {
                             if src != dst {
-                                let b = (hops.len() * d * 4) as u64;
+                                let b = rows.rows(src, dst) * row_bytes;
                                 recompute_bytes += b;
                                 cross[src] += b;
                             }
@@ -406,111 +391,92 @@ impl PipelinedEngine {
                     timeline.phase(m, true, Phase::Exchange, &cross, ready);
 
                 let saved_m = saved_iter.next().expect("chunk saved state missing");
-                let (xs_all, hidden_all): (Vec<Vec<f32>>, Vec<Option<(Vec<f32>, Vec<f32>)>>) =
-                    match xs_re {
-                        Some(xs) => (xs, (0..r).map(|_| None).collect()),
-                        None => {
-                            let mut xs_all = Vec::with_capacity(r);
-                            let mut hidden_all = Vec::with_capacity(r);
-                            for sv in saved_m {
-                                match sv {
-                                    SavedActs::All { xs, pre, act } => {
-                                        xs_all.push(xs);
-                                        hidden_all.push(Some((pre, act)));
-                                    }
-                                    SavedActs::Inputs { xs } => {
-                                        xs_all.push(xs);
-                                        hidden_all.push(None);
-                                    }
-                                    SavedActs::Nothing => unreachable!(
-                                        "saving policy stored nothing for a chunk"
-                                    ),
-                                }
-                            }
-                            (xs_all, hidden_all)
-                        }
-                    };
-
+                // a saving policy whose chunk stored nothing is a
+                // corrupted session — fail loudly, never silently
+                // re-gather
+                if policy != CheckpointPolicy::RecomputeAll
+                    && saved_m.iter().any(|sv| matches!(sv, SavedActs::Nothing))
+                {
+                    return Err(
+                        "chunk saved nothing under a saving policy".into(),
+                    );
+                }
                 // this chunk's ∂x rows live per rank, sized to the
                 // chunk's local slots, zeroed each chunk
                 if want_dx {
                     for (dst, w) in work.iter_mut().enumerate() {
                         w.dxs.clear();
-                        w.dxs.resize(cp.plan.shards[dst].local_slots() * d, 0.0);
+                        w.dxs.resize(rows.per_rank[dst].local_slots() * d, 0.0);
                     }
                 }
 
-                // accumulate chunk m per rank while a scoped thread packs
-                // chunk m+1's gradient exchange (and RecomputeAll re-gather)
-                let (acc_dur, packed_next) = std::thread::scope(|s| {
-                    let pack_handle = (m + 1 < kc).then(|| s.spawn(|| pack_bwd(m + 1)));
-                    let dsend_ref = &dsend;
-                    let xs_ref = &xs_all;
-                    let hidden_ref = &hidden_all;
-                    let routes = &cp.plan.routes;
-                    let shards = &cp.plan.shards;
-                    // time the accumulation alone, as the forward times
-                    // compute_chunk alone — joining the pack thread is
-                    // Exchange time and is measured there, not here
-                    let acc_t0 = Instant::now();
-                    scope_chunks(&mut work, 1, workers, |dst, chunk| {
-                        let RankBwdWork { bucket, dxs } = &mut chunk[0];
-                        let sh = &shards[dst];
-                        let n_local = sh.local_slots();
-                        let mut dys = vec![0.0f32; n_local * d];
-                        for (src, bufs) in dsend_ref.iter().enumerate() {
-                            for (i, hop) in routes[dst][src].iter().enumerate() {
-                                let ls = hop.local_slot as usize;
-                                dys[ls * d..(ls + 1) * d]
-                                    .copy_from_slice(&bufs[dst][i * d..(i + 1) * d]);
+                // accumulate chunk m per rank through the blocked
+                // kernels: gradient and routed-input rows are gathered
+                // by index per tile (RecomputeAll re-gathers indices,
+                // not rows)
+                let gate_base = cp.token_base * k_top;
+                let token_base = cp.token_base;
+                let saved_ref = &saved_m;
+                let wall_t0 = Instant::now();
+                scope_chunks(&mut work, 1, workers, |dst, chunk| {
+                    let RankBwdWork { bucket, dxs, timers } = &mut chunk[0];
+                    let rr = &rows.per_rank[dst];
+                    let (xsrc, hidden): (RowsSrc, Option<(&[f32], &[f32])>) =
+                        match &saved_ref[dst] {
+                            SavedActs::All { xs, pre, act } => {
+                                (RowsSrc::Packed(&xs[..]),
+                                 Some((&pre[..], &act[..])))
                             }
-                        }
-                        let xs = &xs_ref[dst];
-                        let mut pre_row = vec![0.0f32; h];
-                        let mut act_row = vec![0.0f32; h];
-                        let mut dz = vec![0.0f32; h];
-                        for (i, (e, g)) in bucket.iter_mut().enumerate() {
-                            debug_assert_eq!(*e as u32, sh.experts[i]);
-                            let p = &params[dst].experts[i].1;
-                            let lo = sh.expert_token_offsets[i] as usize;
-                            let hi = sh.expert_token_offsets[i + 1] as usize;
-                            for ls in lo..hi {
-                                let xrow = &xs[ls * d..(ls + 1) * d];
-                                let dy = &dys[ls * d..(ls + 1) * d];
-                                let (pre, act): (&[f32], &[f32]) = match &hidden_ref[dst] {
-                                    Some((pre, act)) => (&pre[ls * h..(ls + 1) * h],
-                                                         &act[ls * h..(ls + 1) * h]),
-                                    None => {
-                                        recompute_hidden(p, d, h, xrow, &mut pre_row,
-                                                         &mut act_row);
-                                        (&pre_row[..], &act_row[..])
-                                    }
-                                };
-                                let dx_row = if want_dx {
-                                    Some(&mut dxs[ls * d..(ls + 1) * d])
-                                } else {
-                                    None
-                                };
-                                expert_backward_row(p, g, d, h, xrow, dy, pre,
-                                                    act, &mut dz, dx_row);
+                            SavedActs::Inputs { xs } => {
+                                (RowsSrc::Packed(&xs[..]), None)
                             }
+                            // RecomputeAll: straight from the shared batch
+                            SavedActs::Nothing => (RowsSrc::Tokens(x), None),
+                        };
+                    let mut scratch = KernelScratch::new(d, h, tile);
+                    for (i, (e, g)) in bucket.iter_mut().enumerate() {
+                        debug_assert_eq!(*e as u32, rr.experts[i]);
+                        let p = &params[dst].experts[i].1;
+                        let lo = rr.expert_offsets[i] as usize;
+                        let hi = rr.expert_offsets[i + 1] as usize;
+                        if lo == hi {
+                            continue;
                         }
-                    });
-                    let acc_dur = acc_t0.elapsed().as_secs_f64();
-                    (acc_dur,
-                     pack_handle.map(|hd| hd.join().expect("bwd pack thread panicked")))
+                        backward_segment(p, g, d, h, lo, hi, &xsrc, &rr.tokens,
+                                         token_base, &rr.gate_slots, gate_base,
+                                         d_out, gates, hidden,
+                                         if want_dx {
+                                             Some(&mut dxs[..])
+                                         } else {
+                                             None
+                                         },
+                                         &mut scratch, Some(&mut *timers));
+                    }
                 });
-                timeline.record_measured(Phase::Compute, acc_dur);
+                // measured time is the parallel section's WALL clock,
+                // apportioned between the calibration channels by the
+                // workers' summed gather/compute split: gather = the
+                // staging rump of the old gradient-exchange packing,
+                // kernels = Compute
+                let wall = wall_t0.elapsed().as_secs_f64();
+                let mut tm = KernelTimers::default();
+                for w in work.iter_mut() {
+                    tm.add(w.timers);
+                    w.timers = KernelTimers::default();
+                }
+                let (gather_wall, compute_wall) =
+                    split_wall(wall, tm.gather_s, tm.compute_s);
+                timeline.record_measured(Phase::Exchange, gather_wall);
+                timeline.record_measured(Phase::Compute, compute_wall);
                 if let Some(dx) = d_x.as_deref_mut() {
-                    fold_dx(&cp.plan.shards, &work, d, self.topo.num_experts,
+                    fold_dx(rows, &work, d, self.topo.num_experts,
                             cp.token_base, dx);
                 }
-                next = packed_next.unwrap_or_else(|| (0.0, Vec::new(), None));
 
                 let recompute = policy != CheckpointPolicy::SaveAll;
                 let flops: Vec<u64> = (0..r)
                     .map(|rank| {
-                        cp.plan.shards[rank].local_slots() as u64
+                        rows.per_rank[rank].local_slots() as u64
                             * bwd_flops_per_row(d, h, recompute)
                     })
                     .collect();
@@ -539,124 +505,89 @@ impl PipelinedEngine {
     }
 }
 
-/// Pack one chunk's dispatch buffers: `send[src][dst]` holds the routed
-/// rows src contributes to dst, in dst-local slot order. `x` is the
-/// *parent* batch's activations — chunk-local tokens are offset by
-/// `token_base`, so no chunk-payload copies ever exist. Shared with
-/// `ShardedEngine::forward` (its "chunk" is the whole batch,
-/// `token_base = 0`), so the engines can never drift apart on the
-/// packing layout.
-pub(crate) fn pack_sends(plan: &BatchPlan, x: &[f32], token_base: usize, d: usize,
-                         workers: usize) -> Vec<Vec<Vec<f32>>> {
-    let r = plan.routes.len();
-    let routes = &plan.routes;
-    par_map(r, workers, |src| {
-        (0..r)
-            .map(|dst| {
-                let hops = &routes[dst][src];
-                let mut buf = Vec::with_capacity(hops.len() * d);
-                for hop in hops {
-                    let t = token_base + hop.token as usize;
-                    buf.extend_from_slice(&x[t * d..(t + 1) * d]);
-                }
-                buf
-            })
-            .collect()
-    })
-}
-
-/// Per-outer-rank byte views of a buffer set: total resident bytes (all
-/// peers, local loopback included — the memory view) and cross-rank
-/// bytes (peers ≠ self — the traffic/timeline view).
-fn buffer_bytes(bufs: &[Vec<Vec<f32>>]) -> (Vec<u64>, Vec<u64>) {
-    let r = bufs.len();
-    let mut resident = vec![0u64; r];
-    let mut cross = vec![0u64; r];
-    for (outer, per_peer) in bufs.iter().enumerate() {
-        for (peer, buf) in per_peer.iter().enumerate() {
-            let b = (buf.len() * 4) as u64;
-            resident[outer] += b;
-            if peer != outer {
-                cross[outer] += b;
-            }
-        }
+/// Apportion one parallel section's measured wall-clock between the
+/// Exchange (gather/staging) and Compute channels, using the workers'
+/// summed per-channel time only as the *split ratio*. Workers run
+/// concurrently, so their summed durations overcount real time by up to
+/// the worker count — the wall clock is the truth, the ratio just says
+/// which channel the section spent it on. With no worker samples the
+/// whole section is Compute.
+fn split_wall(wall_s: f64, gather_sum_s: f64, compute_sum_s: f64) -> (f64, f64) {
+    let total = gather_sum_s + compute_sum_s;
+    if total > 0.0 {
+        (wall_s * gather_sum_s / total, wall_s * compute_sum_s / total)
+    } else {
+        (0.0, wall_s)
     }
-    (resident, cross)
 }
 
-/// One chunk's per-rank expert compute: unpack routed rows, run the
-/// owned experts, and pack the return buffers toward each home rank.
-/// Shared with `ShardedEngine::forward` — one definition of the
-/// unpack/compute/save/repack sequence keeps the engines bit-identical
-/// by construction.
-pub(crate) fn compute_chunk(plan: &BatchPlan, params: &[RankExperts],
-                            policy: CheckpointPolicy, d: usize, h: usize,
-                            workers: usize,
-                            send: &[Vec<Vec<f32>>]) -> Vec<(SavedActs, Vec<Vec<f32>>)> {
-    let r = plan.routes.len();
-    let routes = &plan.routes;
-    let shards = &plan.shards;
+/// One chunk's per-rank blocked expert compute, index-driven: each rank
+/// walks its owned experts' segments in tiles, gathering routed rows
+/// straight from the *parent* batch's activations (chunk-local tokens
+/// offset by `token_base`) — no send buffer, no unpack buffer, no
+/// return buffer. Returns per rank the policy-saved activations, the
+/// expert outputs (`ys`, per local slot — what the combine scatter reads
+/// in place), and the worker's measured gather/kernel time (zeros unless
+/// `timed` — only the pipelined engine's calibration reads it, so the
+/// barrier engine skips the per-tile clock reads entirely).
+/// Shared with `ShardedEngine::forward` (its "chunk" is the whole batch,
+/// `token_base = 0`), so the engines can never drift apart on the
+/// kernel path.
+pub(crate) fn compute_chunk_indexed(
+    plan: &BatchPlan, params: &[RankExperts], policy: CheckpointPolicy, d: usize,
+    h: usize, workers: usize, tile_rows: usize, x: &[f32], token_base: usize,
+    timed: bool,
+) -> Vec<(SavedActs, Vec<f32>, KernelTimers)> {
+    let r = plan.ranks();
+    let rows = &plan.rows;
     par_map(r, workers, |dst| {
-        let s = &shards[dst];
-        let n_local = s.local_slots();
-        let mut xs = vec![0.0f32; n_local * d];
-        for src in 0..r {
-            for (i, hop) in routes[dst][src].iter().enumerate() {
-                let ls = hop.local_slot as usize;
-                xs[ls * d..(ls + 1) * d]
-                    .copy_from_slice(&send[src][dst][i * d..(i + 1) * d]);
-            }
-        }
+        let rr = &rows.per_rank[dst];
+        let n_local = rr.local_slots();
         let save_hidden = policy == CheckpointPolicy::SaveAll;
+        let save_inputs = policy != CheckpointPolicy::RecomputeAll;
         let mut ys = vec![0.0f32; n_local * d];
+        let mut xs = vec![0.0f32; if save_inputs { n_local * d } else { 0 }];
         let mut pre = vec![0.0f32; if save_hidden { n_local * h } else { 0 }];
         let mut act = vec![0.0f32; if save_hidden { n_local * h } else { 0 }];
-        let mut hidden = vec![0.0f32; h];
+        let mut scratch = KernelScratch::new(d, h, tile_rows);
+        let mut timers = KernelTimers::default();
         for (i, (e, p)) in params[dst].experts.iter().enumerate() {
-            debug_assert_eq!(*e, s.experts[i]);
-            let lo = s.expert_token_offsets[i] as usize;
-            let hi = s.expert_token_offsets[i + 1] as usize;
-            for ls in lo..hi {
-                if save_hidden {
-                    expert_forward_saving(p, d, h, &xs[ls * d..(ls + 1) * d],
-                                          &mut ys[ls * d..(ls + 1) * d],
-                                          &mut pre[ls * h..(ls + 1) * h],
-                                          &mut act[ls * h..(ls + 1) * h]);
-                } else {
-                    expert_forward(p, d, h, &xs[ls * d..(ls + 1) * d],
-                                   &mut ys[ls * d..(ls + 1) * d], &mut hidden);
-                }
+            debug_assert_eq!(*e, rr.experts[i]);
+            let lo = rr.expert_offsets[i] as usize;
+            let hi = rr.expert_offsets[i + 1] as usize;
+            if lo == hi {
+                continue;
             }
+            forward_segment(p, d, h, lo, hi, x, &rr.tokens, token_base, &mut ys,
+                            if save_inputs { Some(&mut xs[..]) } else { None },
+                            if save_hidden {
+                                Some((&mut pre[..], &mut act[..]))
+                            } else {
+                                None
+                            },
+                            &mut scratch,
+                            if timed { Some(&mut timers) } else { None });
         }
-        let rets: Vec<Vec<f32>> = (0..r)
-            .map(|src| {
-                let hops = &routes[dst][src];
-                let mut buf = Vec::with_capacity(hops.len() * d);
-                for hop in hops {
-                    let ls = hop.local_slot as usize;
-                    buf.extend_from_slice(&ys[ls * d..(ls + 1) * d]);
-                }
-                buf
-            })
-            .collect();
         let saved = match policy {
             CheckpointPolicy::SaveAll => SavedActs::All { xs, pre, act },
             CheckpointPolicy::SaveInputs => SavedActs::Inputs { xs },
             CheckpointPolicy::RecomputeAll => SavedActs::Nothing,
         };
-        (saved, rets)
+        (saved, ys, timers)
     })
 }
 
 /// Drain one chunk's combine scatter into the global output rows (fixed
-/// j-order accumulation per token). `gates` is the *parent* batch's
-/// gate vector — chunk-local slots are offset through `token_base`.
-/// Shared with `ShardedEngine::forward` (`token_base = 0`, the chunk is
-/// the whole batch).
-pub(crate) fn combine_chunk(plan: &BatchPlan, gates: &[f32], rets: &[Vec<Vec<f32>>],
+/// j-order accumulation per token), reading each expert-output row **in
+/// place** from its owning rank's `ys` through the plan's return lookup
+/// — the return buffers of the packed path are gone. `gates` is the
+/// *parent* batch's gate vector — chunk-local slots are offset through
+/// `token_base`. Shared with `ShardedEngine::forward` (`token_base = 0`,
+/// the chunk is the whole batch).
+pub(crate) fn combine_chunk(plan: &BatchPlan, gates: &[f32], ys_of: &[Vec<f32>],
                             d: usize, k: usize, workers: usize, token_base: usize,
                             out: &mut [f32]) {
-    let r = plan.routes.len();
+    let r = plan.ranks();
     let lookup = &plan.ret_lookup;
     let tokens = &plan.tokens_of_rank;
     let home_rows: Vec<Vec<f32>> = par_map(r, workers, |home| {
@@ -667,9 +598,9 @@ pub(crate) fn combine_chunk(plan: &BatchPlan, gates: &[f32], rets: &[Vec<Vec<f32
             for j in 0..k {
                 let slot = t as usize * k + j;
                 let g = gates[(token_base + t as usize) * k + j];
-                let (dst, idx) = lookup[slot];
-                let buf = &rets[dst as usize][home];
-                let row = &buf[idx as usize * d..(idx as usize + 1) * d];
+                let (dst, ls) = lookup[slot];
+                let buf = &ys_of[dst as usize];
+                let row = &buf[ls as usize * d..(ls as usize + 1) * d];
                 for c in 0..d {
                     o[c] += g * row[c];
                 }
@@ -705,12 +636,14 @@ impl ExecutionEngine for PipelinedEngine {
         let r = self.topo.ranks;
         let workers = self.workers.min(r);
         let policy = self.policy;
+        let tile = self.tile_rows;
         let plan_idx = self.plan_index(batch)?;
         let l = batch.num_tokens();
         let k = batch.disp().top_k;
 
         let x = batch.x();
         let gates = batch.gates();
+        let row_bytes = (d * 4) as u64;
         let (out, saved_all, traffic, mem, tb) = {
             let chunks = &self.plans[plan_idx].1;
             let params = &self.rank_params;
@@ -725,60 +658,57 @@ impl ExecutionEngine for PipelinedEngine {
             let mut total_slots = vec![0u64; r];
             let mut index_bytes = vec![0u64; r];
             let mut resident = vec![0u64; r];
-            let mut send_res_per_chunk: Vec<Vec<u64>> = Vec::with_capacity(kc);
-            let mut ret_res_per_chunk: Vec<Vec<u64>> = Vec::with_capacity(kc);
+            let mut staging_peak = vec![0u64; r];
 
-            let pack_t0 = Instant::now();
-            let mut send_next =
-                pack_sends(&chunks[0].plan, x, chunks[0].token_base, d, workers);
-            tb.record_measured(Phase::Exchange, pack_t0.elapsed().as_secs_f64());
             let mut prev_compute_start = 0.0f64;
             for m in 0..kc {
                 let cp = &chunks[m];
-                let send = mem::take(&mut send_next);
-                let (send_res, send_cross) = buffer_bytes(&send);
-                for src in 0..r {
-                    for dst in 0..r {
-                        let rows = cp.plan.routes[dst][src].len() as u64;
-                        if src == dst {
-                            traffic.local_rows += rows;
-                        } else {
-                            traffic.cross_rows += rows;
-                            traffic.dispatch_bytes += (send[src][dst].len() * 4) as u64;
-                        }
-                    }
-                }
+                let rows = &cp.plan.rows;
+                // analytic chunk traffic from the index plan — the exact
+                // bytes the packed path measured at its buffers
+                traffic.local_rows += rows.local_rows();
+                traffic.cross_rows += rows.cross_rows();
+                let cross_bytes = rows.cross_rank_bytes(d, 4);
+                traffic.dispatch_bytes += cross_bytes;
+                traffic.combine_bytes += cross_bytes;
+                let send_cross: Vec<u64> = (0..r)
+                    .map(|src| rows.remote_return_rows(src) * row_bytes)
+                    .collect();
                 // depth-2 pipeline: chunk m's exchange could begin when
-                // chunk m-1's compute began (that is when its pack ran)
+                // chunk m-1's compute began
                 let ready = if m == 0 { 0.0 } else { prev_compute_start };
                 let (_, exch_done) =
                     tb.phase(m, false, Phase::Exchange, &send_cross, ready);
 
-                // the real overlap: chunk m's expert compute on the
-                // worker pool while a scoped thread packs chunk m+1
-                let (computed, compute_dur, packed_next) = std::thread::scope(|s| {
-                    let pack_handle = (m + 1 < kc).then(|| {
-                        let nc = &chunks[m + 1];
-                        s.spawn(move || {
-                            let t0 = Instant::now();
-                            let p = pack_sends(&nc.plan, x, nc.token_base, d, workers);
-                            (t0.elapsed().as_secs_f64(), p)
-                        })
-                    });
-                    let t0 = Instant::now();
-                    let computed =
-                        compute_chunk(&cp.plan, params, policy, d, h, workers, &send);
-                    (computed, t0.elapsed().as_secs_f64(),
-                     pack_handle.map(|hd| hd.join().expect("pack thread panicked")))
-                });
-                tb.record_measured(Phase::Compute, compute_dur);
-                if let Some((pack_dur, p)) = packed_next {
-                    tb.record_measured(Phase::Exchange, pack_dur);
-                    send_next = p;
+                // blocked expert compute with the gather fused in: there
+                // is no pack step left to overlap on the host — the
+                // simulated comm lanes above still price the wire time a
+                // real interconnect would pipeline against this compute.
+                // Measured time is the parallel section's WALL clock
+                // (workers run concurrently — summing their per-worker
+                // timers would overcount by up to the worker count),
+                // apportioned between the Exchange (gather/staging) and
+                // Compute channels by the workers' summed split.
+                let wall_t0 = Instant::now();
+                let computed = compute_chunk_indexed(&cp.plan, params, policy,
+                                                     d, h, workers, tile, x,
+                                                     cp.token_base, true);
+                let wall = wall_t0.elapsed().as_secs_f64();
+                let mut tm = KernelTimers::default();
+                let mut saved = Vec::with_capacity(r);
+                let mut ys_of = Vec::with_capacity(r);
+                for (sv, ys, t) in computed {
+                    saved.push(sv);
+                    ys_of.push(ys);
+                    tm.add(t);
                 }
+                let (gather_wall, compute_wall) =
+                    split_wall(wall, tm.gather_s, tm.compute_s);
+                tb.record_measured(Phase::Exchange, gather_wall);
+                tb.record_measured(Phase::Compute, compute_wall);
                 let flops: Vec<u64> = (0..r)
                     .map(|rank| {
-                        cp.plan.shards[rank].local_slots() as u64
+                        rows.per_rank[rank].local_slots() as u64
                             * fwd_flops_per_row(d, h)
                     })
                     .collect();
@@ -786,56 +716,41 @@ impl ExecutionEngine for PipelinedEngine {
                     tb.phase(m, false, Phase::Compute, &flops, exch_done);
                 prev_compute_start = comp_start;
 
-                let mut saved = Vec::with_capacity(r);
-                let mut rets = Vec::with_capacity(r);
-                for (sv, ret) in computed {
-                    saved.push(sv);
-                    rets.push(ret);
-                }
-                let mut combine_recv = vec![0u64; r];
-                for dst in 0..r {
-                    for home in 0..r {
-                        if dst != home {
-                            let b = (rets[dst][home].len() * 4) as u64;
-                            combine_recv[home] += b;
-                            traffic.combine_bytes += b;
-                        }
-                    }
-                }
+                let combine_recv: Vec<u64> = (0..r)
+                    .map(|home| rows.remote_return_rows(home) * row_bytes)
+                    .collect();
                 let _ = tb.phase(m, false, Phase::Combine, &combine_recv, comp_done);
                 let combine_t0 = Instant::now();
-                combine_chunk(&cp.plan, gates, &rets, d, k, workers,
+                combine_chunk(&cp.plan, gates, &ys_of, d, k, workers,
                               cp.token_base, &mut out);
                 tb.record_measured(Phase::Combine, combine_t0.elapsed().as_secs_f64());
 
-                let (ret_res, _) = buffer_bytes(&rets);
                 for rank in 0..r {
-                    let nl = cp.plan.shards[rank].local_slots() as u64;
+                    let nl = rows.per_rank[rank].local_slots() as u64;
                     peak_slots[rank] = peak_slots[rank].max(nl);
                     total_slots[rank] += nl;
-                    index_bytes[rank] += cp.plan.shards[rank].metadata_bytes() as u64;
+                    index_bytes[rank] += rows.per_rank[rank].metadata_bytes() as u64;
                     resident[rank] += cp.plan.tokens_of_rank[rank].len() as u64;
+                    staging_peak[rank] = staging_peak[rank].max(staging_bytes(
+                        tile as u64, d as u64, 4,
+                        rows.remote_in_rows(rank),
+                        rows.remote_return_rows(rank)));
                 }
-                send_res_per_chunk.push(send_res);
-                ret_res_per_chunk.push(ret_res);
                 saved_all.push(saved);
             }
 
             // per-rank accounting: policy-saved bytes cover every chunk
             // (they live until backward); transient routed rows are only
-            // one chunk deep; comm buffers are the depth-2 window
+            // one chunk deep; comm residency is the kernels' staging
+            // tiles, peak over chunks
             let mem: Vec<MemoryBreakdown> = (0..r)
                 .map(|rank| {
-                    let send_seq: Vec<u64> =
-                        send_res_per_chunk.iter().map(|v| v[rank]).collect();
-                    let ret_seq: Vec<u64> =
-                        ret_res_per_chunk.iter().map(|v| v[rank]).collect();
                     MemoryBreakdown {
                         data_bytes: 4 * d as u64 * (peak_slots[rank] + 2 * resident[rank])
                             + total_slots[rank]
                                 * policy.saved_bytes_per_slot(d as u64, h as u64, 4),
                         index_bytes: index_bytes[rank],
-                        extra_bytes: pipeline_window_bytes(&send_seq, &ret_seq),
+                        extra_bytes: staging_peak[rank],
                     }
                 })
                 .collect();
@@ -903,6 +818,39 @@ impl ExecutionEngine for PipelinedEngine {
 
     fn overlap_report(&self) -> Option<OverlapReport> {
         self.report.clone()
+    }
+
+    /// The self-tuning cost model: per channel (comm = exchange +
+    /// combine, compute), the last session's simulated/measured ratio is
+    /// EWMA-folded into the effective rate — a host that measured a
+    /// phase slower than the model predicted drags `link_gbps` /
+    /// `compute_gflops` down, and subsequent timelines are priced at the
+    /// calibrated rates. Ratios are clamped to `[1e-3, 1e3]` so one
+    /// noisy step cannot explode the model; channels with no measured or
+    /// no simulated time leave their rate untouched.
+    fn recalibrate_cost_model(&mut self, alpha: f64) -> Option<CostModel> {
+        let rep = self.report.as_ref()?;
+        let alpha = alpha.clamp(0.0, 1.0);
+        let sim_comm = rep.simulated_phase_s(Phase::Exchange)
+            + rep.simulated_phase_s(Phase::Combine);
+        let meas_comm = rep.measured_s[Phase::Exchange as usize]
+            + rep.measured_s[Phase::Combine as usize];
+        let sim_comp = rep.simulated_phase_s(Phase::Compute);
+        let meas_comp = rep.measured_s[Phase::Compute as usize];
+        let fold = |rate: f64, sim: f64, meas: f64| -> f64 {
+            if sim > 0.0 && meas > 0.0 {
+                let ratio = (sim / meas).clamp(1e-3, 1e3);
+                rate * (1.0 - alpha) + rate * ratio * alpha
+            } else {
+                rate
+            }
+        };
+        let link = fold(self.cost.link_gbps, sim_comm, meas_comm);
+        let gflops = fold(self.cost.compute_gflops, sim_comp, meas_comp);
+        if let Ok(cost) = CostModel::new(link, gflops) {
+            self.cost = cost;
+        }
+        Some(self.cost)
     }
 }
 

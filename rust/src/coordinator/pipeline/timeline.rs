@@ -372,6 +372,17 @@ impl OverlapReport {
             .sum()
     }
 
+    /// Measured host wall-clock of the whole session — the sum of every
+    /// phase's calibration samples — or `None` when nothing was measured
+    /// (a timeline built without `record_measured`). This is what
+    /// tokens/s reporting uses when calibration samples exist, so the
+    /// rate reflects the wall the host actually spent, not only the
+    /// simulated schedule.
+    pub fn measured_step_s(&self) -> Option<f64> {
+        let total: f64 = self.measured_s.iter().sum();
+        (total > 0.0).then_some(total)
+    }
+
     /// Simulated-vs-measured roll-up per phase kind, in `Phase`
     /// declaration order — the calibration report the engine step
     /// produced alongside its timeline.

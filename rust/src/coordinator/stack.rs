@@ -437,6 +437,30 @@ impl ExecutionEngine for MoeStack {
     fn overlap_report(&self) -> Option<OverlapReport> {
         self.layers.last().and_then(|l| l.engine.overlap_report())
     }
+
+    /// Σ measured wall-clock over every layer's session — `None` unless
+    /// every layer carries a timeline, so a stacked step is never
+    /// undercounted by reporting one layer's time as the whole step's.
+    fn measured_step_s(&self) -> Option<f64> {
+        let mut total = 0.0;
+        for layer in &self.layers {
+            total += layer.engine.measured_step_s()?;
+        }
+        Some(total)
+    }
+
+    /// Recalibrate every layer engine's cost model from its own
+    /// measured-vs-simulated phases; returns the deepest pipelined
+    /// layer's updated model (`None` when no layer carries a timeline).
+    fn recalibrate_cost_model(&mut self, alpha: f64) -> Option<CostModel> {
+        let mut last = None;
+        for layer in &mut self.layers {
+            if let Some(cm) = layer.engine.recalibrate_cost_model(alpha) {
+                last = Some(cm);
+            }
+        }
+        last
+    }
 }
 
 // -- config-driven construction ---------------------------------------------

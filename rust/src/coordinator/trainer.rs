@@ -21,7 +21,7 @@ use crate::config::ep::EpConfig;
 use crate::config::train::TrainConfig;
 use crate::data::batcher::Batcher;
 use crate::memory::planner::CheckpointPlan;
-use crate::metrics::{Ema, MetricsSink, Peak};
+use crate::metrics::{Ema, MetricsSink, Peak, Throughput};
 use crate::runtime::client::{Executable, Runtime};
 use crate::runtime::host::HostTensor;
 
@@ -29,8 +29,14 @@ use super::engine::{step_batch_from_config, ExecutionEngine, StepBatch,
                     Traffic};
 use super::optim::{clip_global_norm, optimizer_from_name, LrSchedule, Optimizer};
 use super::params::{ExpertGrads, ParamStore};
-use super::pipeline::timeline::OverlapReport;
+use super::pipeline::timeline::{CostModel, OverlapReport};
 use super::stack::plan_from_config;
+
+/// EWMA weight of one step's measured-vs-simulated ratio when `[ep]
+/// calibrate = true` folds it into the effective cost-model rates: heavy
+/// enough to converge within a few steps, light enough that one noisy
+/// step cannot swing the model.
+const CALIBRATE_ALPHA: f64 = 0.2;
 
 /// Outcome of a training run.
 #[derive(Debug, Clone)]
@@ -227,6 +233,14 @@ pub struct EpTrainReport {
     pub clipped_steps: usize,
     /// last step's phase timeline (chunk-pipelined engines only)
     pub overlap: Option<OverlapReport>,
+    /// tokens/s over the run, from **measured** wall-clock: the engine's
+    /// per-phase calibration samples when its timeline carries them,
+    /// else the step timer — never the simulated schedule
+    pub tokens_per_sec: f64,
+    /// final effective cost-model rates after `[ep] calibrate = true`
+    /// folded measured/simulated ratios across steps (`None` when
+    /// calibration was off or no engine carries a timeline)
+    pub calibrated: Option<CostModel>,
 }
 
 /// Step-session training loop over an [`ExecutionEngine`] on a synthetic
@@ -308,9 +322,11 @@ impl EpTrainer {
         let mut step_times = Vec::with_capacity(self.cfg.steps);
         let mut peak = Peak::new();
         let mut peak_rank = Peak::new();
+        let mut throughput = Throughput::new();
         let mut grad_norm = 0.0f64;
         let mut final_lr = self.cfg.lr;
         let mut clipped_steps = 0usize;
+        let mut calibrated: Option<CostModel> = None;
         let log_every = (self.cfg.steps / 10).max(1);
         for s in 0..self.cfg.steps {
             let t0 = Instant::now();
@@ -318,6 +334,12 @@ impl EpTrainer {
             // one running f64 accumulator across microbatches: the float
             // op sequence matches the unsplit batch element-for-element
             let mut loss = 0.0f64;
+            // measured wall-clock of this step's sessions: each
+            // microbatch's timeline carries its own calibration samples,
+            // so they must be summed per microbatch — the report after
+            // the loop would only describe the last one
+            let mut sessions_measured = 0.0f64;
+            let mut all_sessions_measured = true;
             for (off, mb) in &micros {
                 let handle = self
                     .engine
@@ -342,6 +364,10 @@ impl EpTrainer {
                 handle
                     .backward_into(self.engine.as_mut(), &d_out, &mut grads)
                     .map_err(anyhow::Error::msg)?;
+                match self.engine.measured_step_s() {
+                    Some(s) => sessions_measured += s,
+                    None => all_sessions_measured = false,
+                }
             }
             loss /= global_elems as f64;
             if !loss.is_finite() {
@@ -366,6 +392,36 @@ impl EpTrainer {
                 .map_err(anyhow::Error::msg)?;
             step_times.push(t0.elapsed().as_secs_f64() * 1e3);
             losses.push(loss);
+
+            // tokens/s from measured wall-clock: prefer the engines'
+            // per-phase calibration samples, summed over every
+            // microbatch session of this step (what the host actually
+            // spent in exchange/compute/combine), falling back to the
+            // whole-step timer for engines without a timeline
+            let step_s = *step_times.last().unwrap() / 1e3;
+            let measured_s = if all_sessions_measured && sessions_measured > 0.0 {
+                sessions_measured
+            } else {
+                step_s
+            };
+            throughput.record_tokens(batch.num_tokens() as u64, measured_s);
+
+            // the self-tuning cost model: fold this step's
+            // measured-vs-simulated phase ratios into the engine's
+            // effective rates (numerics untouched — only the simulated
+            // clock's pricing moves)
+            if self.cfg.calibrate {
+                if let Some(cm) =
+                    self.engine.recalibrate_cost_model(CALIBRATE_ALPHA)
+                {
+                    calibrated = Some(cm);
+                    self.sink.emit("calibration_update", &[
+                        ("step", s as f64),
+                        ("link_gbps", cm.link_gbps),
+                        ("compute_gflops", cm.compute_gflops),
+                    ]);
+                }
+            }
 
             let t = self.engine.traffic();
             self.sink.emit("ep_train", &[
@@ -434,6 +490,8 @@ impl EpTrainer {
             final_lr,
             clipped_steps,
             overlap,
+            tokens_per_sec: throughput.tokens_per_sec(),
+            calibrated,
             losses,
         })
     }
@@ -630,6 +688,33 @@ mod tests {
         // the planned run's loss curve matches every uniform-policy run
         let uniform = run_losses(EpConfig { num_layers: 3, ..tiny_cfg(2) });
         assert_eq!(r.losses, uniform, "planner policies changed the numerics");
+    }
+
+    #[test]
+    fn calibrate_folds_measured_ratios_into_the_cost_model() {
+        let cfg = EpConfig {
+            pipeline_chunks: 2,
+            calibrate: true,
+            ..tiny_cfg(2)
+        };
+        let engine = engine_from_config(&cfg).unwrap();
+        let mut t = EpTrainer::new(engine, cfg.clone()).unwrap();
+        let r = t.run().unwrap();
+        let cm = r.calibrated.expect("pipelined + calibrate must report rates");
+        assert!(cm.link_gbps > 0.0 && cm.link_gbps.is_finite());
+        assert!(cm.compute_gflops > 0.0 && cm.compute_gflops.is_finite());
+        assert!(r.tokens_per_sec > 0.0, "measured tokens/s missing");
+        // calibration only moves the simulated clock's rates — the
+        // numerics stay bit-identical
+        let plain = run_losses(EpConfig { calibrate: false, ..cfg });
+        assert_eq!(r.losses, plain, "calibration changed the numerics");
+        // barrier engines carry no timeline: nothing to calibrate, but
+        // tokens/s still comes from the step timer
+        let cfg2 = EpConfig { calibrate: true, ..tiny_cfg(2) };
+        let engine = engine_from_config(&cfg2).unwrap();
+        let r2 = EpTrainer::new(engine, cfg2).unwrap().run().unwrap();
+        assert!(r2.calibrated.is_none());
+        assert!(r2.tokens_per_sec > 0.0);
     }
 
     #[test]

@@ -16,4 +16,4 @@ pub use gating::{softmax_topk, Gating};
 pub use parallel_build::{parallel_build, BuildStats};
 pub use shard::{merge, shard, ExpertAssignment, RankShard};
 pub use sort_build::sort_build;
-pub use structures::DispatchStructures;
+pub use structures::{DispatchStructures, RankRowIndex, RowIndexPlan};

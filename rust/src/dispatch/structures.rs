@@ -126,8 +126,207 @@ impl DispatchStructures {
     }
 }
 
+// -- index-driven dispatch plan ---------------------------------------------
+
+/// One rank's slice of a [`RowIndexPlan`]: per owned expert, the source
+/// token indices and gate slots of its routed rows — everything expert
+/// compute needs to gather rows *directly* from the caller-owned
+/// activations, in the exact local-slot order the packed buffers used to
+/// carry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RankRowIndex {
+    /// owned global expert ids, ascending
+    pub experts: Vec<u32>,
+    /// (owned experts + 1) exclusive prefix sums of segment lengths
+    pub expert_offsets: Vec<u32>,
+    /// source token id per local slot (index into the caller's `x`)
+    pub tokens: Vec<u32>,
+    /// token-major gate slot (i·k + j) per local slot — both the combine
+    /// gate index and the origin the combine scatter sends results to
+    pub gate_slots: Vec<u32>,
+    /// home rank of each local slot's token (the analytic substitute for
+    /// measuring which packed buffer a row travelled in)
+    pub src_rank: Vec<u32>,
+}
+
+impl RankRowIndex {
+    /// Routed slots resident on this rank.
+    pub fn local_slots(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Segment length of the `i`-th local expert.
+    pub fn expert_len(&self, i: usize) -> usize {
+        (self.expert_offsets[i + 1] - self.expert_offsets[i]) as usize
+    }
+
+    /// Index-metadata bytes this rank holds (i32 entries of all five
+    /// arrays) — what replaces the packed activation buffers.
+    pub fn metadata_bytes(&self) -> usize {
+        4 * (self.experts.len()
+            + self.expert_offsets.len()
+            + self.tokens.len()
+            + self.gate_slots.len()
+            + self.src_rank.len())
+    }
+}
+
+/// Index-driven dispatch plan — the zero-materialization exchange.
+///
+/// Where the packed path copied every routed row into per-(src, dst)
+/// send buffers, unpacked them into a per-rank staging buffer, and
+/// packed per-(dst, src) return buffers, this plan records only *where
+/// each routed row lives*: per (rank, expert), the source token indices
+/// and gate slots. Expert compute gathers rows straight from the
+/// caller-owned batch activations (zero-copy for local rows; remote rows
+/// pass through one cache-sized staging tile), the combine scatter reads
+/// expert outputs in place, and the exchange byte counts that used to be
+/// *measured* at the buffers are *derived* from `rows_between` — exactly
+/// equal, which `rust/tests/row_plan_properties.rs` pins over fuzzed
+/// gatings against both [`AllToAllPlan::cross_rank_bytes`] and a
+/// simulated packing of the old buffers.
+///
+/// [`AllToAllPlan::cross_rank_bytes`]:
+/// crate::coordinator::expert_parallel::AllToAllPlan::cross_rank_bytes
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowIndexPlan {
+    pub ranks: usize,
+    pub per_rank: Vec<RankRowIndex>,
+    /// routed-row counts moved src→dst (R×R row-major): src is the
+    /// token's home rank, dst the expert's rank
+    pub rows_between: Vec<u64>,
+}
+
+impl RowIndexPlan {
+    /// Derive the plan for `disp` under an expert→rank map and a
+    /// token→home-rank map (both dense). Per-rank local order is experts
+    /// ascending with segments in the global expert-major order — the
+    /// same order the shard layer (`dispatch::shard`) produces, so the
+    /// two views can never disagree on what "local slot i" means.
+    pub fn build(disp: &DispatchStructures, ranks: usize, expert_rank: &[u32],
+                 token_rank: &[u32]) -> Result<RowIndexPlan, String> {
+        if ranks == 0 {
+            return Err("RowIndexPlan needs at least one rank".into());
+        }
+        if expert_rank.len() != disp.num_experts {
+            return Err(format!(
+                "expert_rank covers {} experts, dispatch has {}",
+                expert_rank.len(),
+                disp.num_experts
+            ));
+        }
+        if token_rank.len() != disp.num_tokens {
+            return Err(format!(
+                "token_rank covers {} tokens, dispatch has {}",
+                token_rank.len(),
+                disp.num_tokens
+            ));
+        }
+        if let Some(&r) = expert_rank
+            .iter()
+            .chain(token_rank)
+            .find(|&&r| r as usize >= ranks)
+        {
+            return Err(format!("rank {r} out of range (R = {ranks})"));
+        }
+        // invert token_index_map once: expert-major position → gate slot
+        let n = disp.slots();
+        let mut origin_of_pos = vec![0u32; n];
+        for (slot, &pos) in disp.token_index_map.iter().enumerate() {
+            origin_of_pos[pos as usize] = slot as u32;
+        }
+        let mut per_rank: Vec<RankRowIndex> = (0..ranks)
+            .map(|_| RankRowIndex {
+                experts: Vec::new(),
+                expert_offsets: vec![0],
+                tokens: Vec::new(),
+                gate_slots: Vec::new(),
+                src_rank: Vec::new(),
+            })
+            .collect();
+        let mut rows_between = vec![0u64; ranks * ranks];
+        for e in 0..disp.num_experts {
+            let dst = expert_rank[e] as usize;
+            let rr = &mut per_rank[dst];
+            rr.experts.push(e as u32);
+            let lo = disp.expert_token_offsets[e] as usize;
+            let hi = disp.expert_token_offsets[e + 1] as usize;
+            for pos in lo..hi {
+                let tok = disp.expert_token_indices[pos];
+                rr.tokens.push(tok);
+                rr.gate_slots.push(origin_of_pos[pos]);
+                let src = token_rank[tok as usize];
+                rr.src_rank.push(src);
+                rows_between[src as usize * ranks + dst] += 1;
+            }
+            rr.expert_offsets.push(rr.tokens.len() as u32);
+        }
+        Ok(RowIndexPlan { ranks, per_rank, rows_between })
+    }
+
+    /// Routed rows moved src → dst (src = token home, dst = expert rank).
+    pub fn rows(&self, src: usize, dst: usize) -> u64 {
+        self.rows_between[src * self.ranks + dst]
+    }
+
+    /// Routed rows crossing a rank boundary in the forward dispatch.
+    pub fn cross_rows(&self) -> u64 {
+        (0..self.ranks)
+            .flat_map(|s| (0..self.ranks).map(move |d| (s, d)))
+            .filter(|&(s, d)| s != d)
+            .map(|(s, d)| self.rows(s, d))
+            .sum()
+    }
+
+    /// Routed rows that stay on their home rank.
+    pub fn local_rows(&self) -> u64 {
+        (0..self.ranks).map(|r| self.rows(r, r)).sum()
+    }
+
+    /// Analytic cross-rank dispatch bytes — what the packed path
+    /// *measured* at its send buffers, now derived from counts alone.
+    /// Equals [`AllToAllPlan::cross_rank_bytes`] for the same topology.
+    ///
+    /// [`AllToAllPlan::cross_rank_bytes`]:
+    /// crate::coordinator::expert_parallel::AllToAllPlan::cross_rank_bytes
+    pub fn cross_rank_bytes(&self, d_model: usize, dtype_bytes: usize) -> u64 {
+        self.cross_rows() * (d_model * dtype_bytes) as u64
+    }
+
+    /// Rows arriving at `rank`'s experts from *other* home ranks — the
+    /// inbound remote gather (one staging tile deep in the new path).
+    pub fn remote_in_rows(&self, rank: usize) -> u64 {
+        (0..self.ranks)
+            .filter(|&src| src != rank)
+            .map(|src| self.rows(src, rank))
+            .sum()
+    }
+
+    /// Rows of `rank`'s resident tokens computed on *other* ranks — the
+    /// combine-side remote return.
+    pub fn remote_return_rows(&self, rank: usize) -> u64 {
+        (0..self.ranks)
+            .filter(|&dst| dst != rank)
+            .map(|dst| self.rows(rank, dst))
+            .sum()
+    }
+
+    /// Bytes the packed path kept resident on `rank` for one step: its
+    /// full per-destination send buffers (every routed row sourced here,
+    /// local loopback included) plus its per-home return buffers (every
+    /// row computed here). The buffers the index-driven path deletes —
+    /// kept as the comparison the memory claim is measured against.
+    pub fn packed_buffer_bytes(&self, rank: usize, d_model: usize,
+                               dtype_bytes: usize) -> u64 {
+        let sent: u64 = (0..self.ranks).map(|dst| self.rows(rank, dst)).sum();
+        let computed: u64 = (0..self.ranks).map(|src| self.rows(src, rank)).sum();
+        (sent + computed) * (d_model * dtype_bytes) as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::RowIndexPlan;
     use crate::dispatch::sort_build;
     use crate::testkit::fixtures::{fig2_expected, fig2_ids};
 
@@ -146,6 +345,57 @@ mod tests {
         assert_eq!(d.expert_len(1), 2);
         assert_eq!(d.token_experts(3), &[1, 2]);
         assert_eq!(d.metadata_bytes(), 4 * (10 + 10 + 5 + 10));
+    }
+
+    #[test]
+    fn row_index_plan_figure2() {
+        let d = sort_build(&fig2_ids(), 5, 4, 2);
+        // contiguous experts {0,1}|{2,3}; tokens 0-2 home on r0, 3-4 on r1
+        let expert_rank = vec![0u32, 0, 1, 1];
+        let token_rank = vec![0u32, 0, 0, 1, 1];
+        let p = RowIndexPlan::build(&d, 2, &expert_rank, &token_rank).unwrap();
+        assert_eq!(p.per_rank[0].experts, vec![0, 1]);
+        assert_eq!(p.per_rank[0].tokens, vec![1, 2, 4, 1, 3]);
+        assert_eq!(p.per_rank[0].expert_offsets, vec![0, 3, 5]);
+        // gate slots are the token-major origin slots of the shard layer
+        assert_eq!(p.per_rank[0].gate_slots, vec![2, 4, 8, 3, 6]);
+        assert_eq!(p.per_rank[1].tokens, vec![0, 3, 0, 2, 4]);
+        assert_eq!(p.per_rank[1].gate_slots, vec![0, 7, 1, 5, 9]);
+        // conservation: every slot lands exactly once
+        assert_eq!(p.cross_rows() + p.local_rows(), d.slots() as u64);
+        assert_eq!(
+            p.per_rank.iter().map(|r| r.local_slots()).sum::<usize>(),
+            d.slots()
+        );
+        // src classification: token 4 (home r1) routed to expert 0 (r0)
+        assert_eq!(p.per_rank[0].src_rank[2], 1);
+        // remote in/out agree with the src→dst matrix
+        for r in 0..2 {
+            assert_eq!(
+                p.remote_in_rows(r),
+                p.per_rank[r]
+                    .src_rank
+                    .iter()
+                    .filter(|&&s| s as usize != r)
+                    .count() as u64
+            );
+        }
+        // packed-path residency covers at least every local slot
+        let dm = 8usize;
+        for r in 0..2 {
+            assert!(p.packed_buffer_bytes(r, dm, 4)
+                >= p.per_rank[r].local_slots() as u64 * (dm * 4) as u64);
+        }
+    }
+
+    #[test]
+    fn row_index_plan_validates() {
+        let d = sort_build(&fig2_ids(), 5, 4, 2);
+        assert!(RowIndexPlan::build(&d, 0, &[], &[]).is_err());
+        assert!(RowIndexPlan::build(&d, 2, &[0, 0, 1], &[0; 5]).is_err());
+        assert!(RowIndexPlan::build(&d, 2, &[0, 0, 1, 1], &[0; 4]).is_err());
+        assert!(RowIndexPlan::build(&d, 2, &[0, 0, 1, 2], &[0; 5]).is_err());
+        assert!(RowIndexPlan::build(&d, 2, &[0, 0, 1, 1], &[0, 0, 0, 0, 9]).is_err());
     }
 
     #[test]

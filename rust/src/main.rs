@@ -13,18 +13,23 @@
 //!   ep-bench [--ranks 1,2,4,8] [--checkpoint save-inputs|auto]
 //!            [--num-layers L --mem-budget-bytes B]
 //!            [--pipeline-chunks K --chunk-balance tokens|rows
-//!             --link-gbps G --compute-gflops F] ...
+//!             --link-gbps G --compute-gflops F]
+//!            [--tile-rows T] [--json-out bench.json] ...
 //!                                execute the plan: sharded engine vs
-//!                                single-rank, bit-equality + measured
+//!                                single-rank, bit-equality + derived
 //!                                bytes + checkpoint-policy memory sweep
 //!                                + chunk-pipeline overlap matrix
-//!                                + multi-layer stack & checkpoint-plan
-//!                                report when --num-layers > 1 or
-//!                                --checkpoint auto
+//!                                + index-driven vs packed-path
+//!                                old/new speed+memory comparison
+//!                                (written to --json-out for the bench
+//!                                trajectory) + multi-layer stack &
+//!                                checkpoint-plan report when
+//!                                --num-layers > 1 or --checkpoint auto
 //!   ep-train [--ranks R --steps N --grad-accum A --optimizer sgd|adam
 //!             --checkpoint save-all|save-inputs|recompute-all|auto
 //!             --num-layers L --mem-budget-bytes B
 //!             --pipeline-chunks K --chunk-balance tokens|rows
+//!             --tile-rows T --calibrate
 //!             --link-gbps G --compute-gflops F
 //!             --lr-schedule constant|cosine|linear-warmup --clip-norm C
 //!             --placement contiguous|strided|load-aware
@@ -51,7 +56,10 @@ use moeblaze::config::toml::Toml;
 use moeblaze::config::train::TrainConfig;
 use moeblaze::coordinator::engine::{engine_from_config, step_batch_from_config,
                                     topology_from_config, ExecutionEngine,
-                                    ShardedEngine, SingleRankEngine};
+                                    PackedReference, ShardedEngine,
+                                    SingleRankEngine};
+use moeblaze::dispatch::RowIndexPlan;
+use moeblaze::util::json::Json;
 use moeblaze::coordinator::stack::{plan_from_config, stack_with_plan};
 use moeblaze::coordinator::pipeline::timeline::CostModel;
 use moeblaze::coordinator::pipeline::PipelinedEngine;
@@ -315,6 +323,10 @@ fn ep_config_from_args(args: &Args, parse_ranks: bool) -> Result<EpConfig> {
     if let Some(b) = args.get("chunk-balance") {
         cfg.chunk_balance = ChunkBalance::parse(b).map_err(anyhow::Error::msg)?;
     }
+    cfg.tile_rows = args.usize_or("tile-rows", cfg.tile_rows)
+        .map_err(anyhow::Error::msg)?;
+    cfg.calibrate = args.bool_or("calibrate", cfg.calibrate)
+        .map_err(anyhow::Error::msg)?;
     cfg.link_gbps = args.f64_or("link-gbps", cfg.link_gbps)
         .map_err(anyhow::Error::msg)?;
     cfg.compute_gflops = args.f64_or("compute-gflops", cfg.compute_gflops)
@@ -522,6 +534,122 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
         println!("chunk-pipeline overlap (R={r}, {}, link {} GB/s, compute {} GFLOP/s)\n{}",
                  base.checkpoint, base.link_gbps, base.compute_gflops, t.render());
 
+        // zero-materialization vs packed-path baseline: identical
+        // workload, policy, and worker count — the PR-5 old-vs-new
+        // measurement (fwd+bwd tokens/s + peak per-rank comm bytes),
+        // snapshot to --json-out for the bench trajectory
+        let d_out: Vec<f32> = {
+            let mut rng = Rng::new(base.seed ^ 0xD0);
+            rng.normal_vec(batch.num_tokens() * d, 1.0)
+        };
+        let topo = topology_from_config(&base, r).map_err(anyhow::Error::msg)?;
+        // plan built once and reused across steps, as the retired
+        // engines' plan caches amortized it — a fair baseline
+        let packed = PackedReference::new(&topo, &batch)
+            .map_err(anyhow::Error::msg)?;
+        let (old_out, old_grads) = packed
+            .step(&store, &batch, &d_out, base.checkpoint, r)
+            .map_err(anyhow::Error::msg)?;
+        let mut eng = ShardedEngine::with_policy(
+            topology_from_config(&base, r).map_err(anyhow::Error::msg)?,
+            &store, r, base.checkpoint)
+            .map_err(anyhow::Error::msg)?;
+        eng.set_tile_rows(base.tile_rows);
+        let handle = eng.forward(&batch).map_err(anyhow::Error::msg)?;
+        let new_out = handle.output().to_vec();
+        let new_grads = handle
+            .backward(&mut eng, &d_out)
+            .map_err(anyhow::Error::msg)?;
+        if new_out
+            .iter()
+            .zip(&old_out)
+            .any(|(a, b)| a.to_bits() != b.to_bits())
+            || new_grads != old_grads
+        {
+            bail!("index-driven path diverged from the packed baseline");
+        }
+        let s_new = bench.run(|| {
+            let handle = eng.forward(&batch).expect("fwd");
+            let mut g = eng.zero_grads();
+            handle
+                .backward_into(&mut eng, &d_out, &mut g)
+                .expect("bwd");
+            std::hint::black_box(&g);
+        });
+        let s_old = bench.run(|| {
+            std::hint::black_box(
+                packed
+                    .step(&store, &batch, &d_out, base.checkpoint, r)
+                    .expect("packed baseline"),
+            );
+        });
+        let tokens = batch.num_tokens() as f64;
+        let new_tps = tokens / (s_new.mean_ns / 1e9);
+        let old_tps = tokens / (s_old.mean_ns / 1e9);
+        let speedup = new_tps / old_tps;
+        let token_rank: Vec<u32> = (0..batch.num_tokens())
+            .map(|t| topo.rank_of_token(t, batch.num_tokens()) as u32)
+            .collect();
+        let rplan = RowIndexPlan::build(batch.disp(), r,
+                                        &topo.assignment().rank_of, &token_rank)
+            .map_err(anyhow::Error::msg)?;
+        let new_extra: u64 = eng
+            .memory_per_rank()
+            .iter()
+            .map(|m| m.extra_bytes)
+            .max()
+            .unwrap_or(0);
+        let old_extra: u64 = (0..r)
+            .map(|rank| rplan.packed_buffer_bytes(rank, d, 4))
+            .max()
+            .unwrap_or(0);
+        let mut t = Table::new(["path", "fwd+bwd", "tokens/s", "peak rank comm"]);
+        t.row(["packed row-dot (old)",
+               &format!("{:.3} ms", s_old.mean_ms()),
+               &format!("{old_tps:.0}"),
+               &human_bytes(old_extra)]);
+        t.row(["indexed blocked (new)",
+               &format!("{:.3} ms", s_new.mean_ms()),
+               &format!("{new_tps:.0}"),
+               &human_bytes(new_extra)]);
+        println!("zero-materialization dispatch vs packed baseline (R={r}, \
+                  tile_rows={}, outputs+grads bit-identical ✓)\n{}",
+                 base.tile_rows, t.render());
+        println!("old->new: {speedup:.2}x tokens/s, peak rank comm {} -> {}",
+                 human_bytes(old_extra), human_bytes(new_extra));
+        if let Some(path) = args.get("json-out") {
+            let j = Json::obj(vec![
+                ("bench", Json::str("ep_bench_pr5")),
+                ("tokens", Json::num(base.tokens as f64)),
+                ("num_experts", Json::num(e as f64)),
+                ("top_k", Json::num(k as f64)),
+                ("d_model", Json::num(d as f64)),
+                ("d_hidden", Json::num(base.d_hidden as f64)),
+                ("skew", Json::num(base.skew)),
+                ("seed", Json::num(base.seed as f64)),
+                ("ranks", Json::num(r as f64)),
+                ("tile_rows", Json::num(base.tile_rows as f64)),
+                ("checkpoint", Json::str(base.checkpoint.name())),
+                ("bit_identical", Json::num(1.0)),
+                ("dispatch_bytes",
+                 Json::num(eng.traffic().dispatch_bytes as f64)),
+                ("speedup", Json::num(speedup)),
+                ("baseline", Json::obj(vec![
+                    ("step_ms", Json::num(s_old.mean_ms())),
+                    ("tokens_per_sec", Json::num(old_tps)),
+                    ("peak_rank_comm_bytes", Json::num(old_extra as f64)),
+                ])),
+                ("indexed", Json::obj(vec![
+                    ("step_ms", Json::num(s_new.mean_ms())),
+                    ("tokens_per_sec", Json::num(new_tps)),
+                    ("peak_rank_comm_bytes", Json::num(new_extra as f64)),
+                ])),
+            ]);
+            std::fs::write(path, format!("{j}\n"))
+                .map_err(|err| anyhow::anyhow!("{path}: {err}"))?;
+            println!("old-vs-new snapshot written to {path}");
+        }
+
         // multi-layer stack + smart-checkpoint planner: the explainable
         // plan report, then a real stacked forward to check the measured
         // per-rank peak against the budget the planner promised
@@ -580,6 +708,14 @@ fn cmd_ep_train(args: &Args) -> Result<()> {
               busiest rank",
              human_bytes(report.peak_data_bytes),
              human_bytes(report.peak_rank_data_bytes));
+    println!("measured throughput: {:.0} tokens/s (wall-clock, not simulated)",
+             report.tokens_per_sec);
+    if let Some(cm) = &report.calibrated {
+        println!("calibrated cost model after {} steps: link {:.2} GB/s, \
+                  compute {:.2} GFLOP/s (from {} / {})",
+                 report.steps, cm.link_gbps, cm.compute_gflops,
+                 cfg.link_gbps, cfg.compute_gflops);
+    }
     if let Some(plan) = &report.plan {
         println!("{}", plan.render());
         if cfg.checkpoint_auto && cfg.mem_budget_bytes > 0 && plan.feasible

@@ -244,14 +244,46 @@ pub fn per_rank_breakdown(total: &MemoryBreakdown, per_rank_rows: &[u64]) -> Vec
         .collect()
 }
 
+/// Per-rank communication staging of the index-driven exchange
+/// (PR 5's zero-materialization dispatch): remote routed rows pass
+/// through **one** inbound gather tile on their expert rank, and remote
+/// expert outputs through one outbound return tile toward their home
+/// rank. The kernels allocate each `(d × tile_rows)` tile whole
+/// (`KernelScratch`), so a direction with *any* remote flow is charged
+/// one full tile — not a trimmed fraction — and a direction with none is
+/// charged nothing (the same tile still exists, but purely as local GEMM
+/// working set, which the comm class does not cover; local rows pass
+/// through it without ever living in a per-rank exchange buffer).
+///
+/// This replaces the packed per-peer send/return buffers the old path
+/// kept resident (the whole cross + local routed row set, twice). On a
+/// tiny workload one full tile can exceed a near-empty packed buffer;
+/// on any cross-heavy workload (at least a tile of remote rows each
+/// way) the two tiles sit strictly below the packed residency
+/// (`RowIndexPlan::packed_buffer_bytes`) — the memory half of the PR-5
+/// acceptance bar, pinned by `rust/tests/ep_engine.rs` and
+/// `rust/tests/row_plan_properties.rs`.
+pub fn staging_bytes(tile_rows: u64, d: u64, dtype_bytes: u64,
+                     remote_in_rows: u64, remote_out_rows: u64) -> u64 {
+    let tile_bytes = tile_rows * d * dtype_bytes;
+    let inbound = if remote_in_rows > 0 { tile_bytes } else { 0 };
+    let outbound = if remote_out_rows > 0 { tile_bytes } else { 0 };
+    inbound + outbound
+}
+
 /// Peak in-flight communication-buffer bytes of a depth-2 chunk
-/// pipeline (`coordinator::pipeline`). While chunk m's send buffers are
-/// consumed and its return buffers produced, chunk m+1's send buffers
-/// are being packed — so the resident window at chunk m is
-/// `send[m] + ret[m] + send[m+1]`, and the peak is the max over chunks.
-/// A single chunk degenerates to the whole-batch barrier residency
-/// (`send + ret`), so chunking can only lower this number — the
-/// "exchange buffers shrink with K" half of the pipeline's memory claim.
+/// pipeline (`coordinator::pipeline`) under the **retired packed-buffer
+/// path**. While chunk m's send buffers are consumed and its return
+/// buffers produced, chunk m+1's send buffers are being packed — so the
+/// resident window at chunk m is `send[m] + ret[m] + send[m+1]`, and the
+/// peak is the max over chunks. A single chunk degenerates to the
+/// whole-batch barrier residency (`send + ret`), so chunking can only
+/// lower this number. Since PR 5 the engines stage tiles instead of
+/// packing buffers ([`staging_bytes`]), so no production path calls this
+/// anymore; it survives, unit-tested, as the analytic description of the
+/// packed path's chunk window (the whole-batch packed residency itself
+/// is `RowIndexPlan::packed_buffer_bytes`, which the old-vs-new
+/// comparisons use).
 pub fn pipeline_window_bytes(send_per_chunk: &[u64], ret_per_chunk: &[u64]) -> u64 {
     assert_eq!(send_per_chunk.len(), ret_per_chunk.len());
     let k = send_per_chunk.len();
@@ -377,6 +409,24 @@ mod tests {
         // index bytes are policy-invariant
         assert_eq!(rows[0].index_bytes, rows[1].index_bytes);
         assert_eq!(rows[1].index_bytes, rows[2].index_bytes);
+    }
+
+    #[test]
+    fn staging_bytes_charges_whole_tiles_per_active_direction() {
+        // nothing remote: no comm staging at all (single-rank /
+        // local-only — the tiles exist but as compute working set)
+        assert_eq!(staging_bytes(16, 8, 4, 0, 0), 0);
+        // any remote flow charges the FULL allocated tile for that
+        // direction — the model reports what KernelScratch holds, not a
+        // trimmed fraction
+        assert_eq!(staging_bytes(16, 8, 4, 3, 0), 16 * 8 * 4);
+        assert_eq!(staging_bytes(16, 8, 4, 3, 1), 2 * 16 * 8 * 4);
+        // heavy cross traffic still caps at one tile per direction
+        assert_eq!(staging_bytes(16, 8, 4, 1000, 1000), 2 * 16 * 8 * 4);
+        // and that cap sits far below the packed residency it replaces
+        // (whole routed set, twice) for any cross-heavy workload
+        let packed = 2 * 1000u64 * 8 * 4;
+        assert!(staging_bytes(16, 8, 4, 1000, 1000) < packed);
     }
 
     #[test]

@@ -34,11 +34,18 @@ impl Ema {
     }
 }
 
-/// Bytes-over-time tracker for the exchange benches: accumulate measured
-/// (bytes, seconds) pairs, report aggregate bandwidth.
+/// Bytes/tokens-over-time tracker for the exchange benches: accumulate
+/// measured (amount, seconds) pairs, report aggregate rates.
+///
+/// Since PR 5 the seconds fed here should be **measured wall-clock** —
+/// the engines' per-phase calibration samples
+/// (`OverlapReport::measured_step_s`) when a timeline carries them, or
+/// bench/step timers otherwise — never the simulated timeline alone, so
+/// a reported tokens/s is always a number a stopwatch would agree with.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Throughput {
     pub bytes: u64,
+    pub tokens: u64,
     pub seconds: f64,
 }
 
@@ -52,12 +59,30 @@ impl Throughput {
         self.seconds += seconds;
     }
 
+    /// Record one step's processed tokens against its measured
+    /// wall-clock (shares the seconds accumulator with [`record`], so
+    /// feed each sample through exactly one of the two entry points).
+    ///
+    /// [`record`]: Throughput::record
+    pub fn record_tokens(&mut self, tokens: u64, seconds: f64) {
+        self.tokens += tokens;
+        self.seconds += seconds;
+    }
+
     /// Aggregate GiB/s (0 if nothing was recorded).
     pub fn gib_per_sec(&self) -> f64 {
         if self.seconds <= 0.0 {
             return 0.0;
         }
         self.bytes as f64 / (1024.0 * 1024.0 * 1024.0) / self.seconds
+    }
+
+    /// Aggregate tokens/s (0 if nothing was recorded).
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.seconds <= 0.0 {
+            return 0.0;
+        }
+        self.tokens as f64 / self.seconds
     }
 
     pub fn format_brief(&self) -> String {
@@ -172,6 +197,15 @@ mod tests {
         t.record(1 << 30, 0.5);
         assert!((t.gib_per_sec() - 2.0).abs() < 1e-9, "{}", t.gib_per_sec());
         assert!(t.format_brief().contains("GiB/s"));
+    }
+
+    #[test]
+    fn throughput_reports_tokens_per_sec_from_measured_seconds() {
+        let mut t = Throughput::new();
+        assert_eq!(t.tokens_per_sec(), 0.0);
+        t.record_tokens(1000, 0.25);
+        t.record_tokens(1000, 0.25);
+        assert!((t.tokens_per_sec() - 4000.0).abs() < 1e-9);
     }
 
     #[test]

@@ -17,6 +17,7 @@
 
 use moeblaze::config::ep::{EpConfig, Placement};
 use moeblaze::coordinator::engine::{check_equivalence, engine_from_config,
+                                    packed_reference_step,
                                     step_batch_from_config, ExecutionEngine,
                                     ShardedEngine, SingleRankEngine, StepBatch};
 use moeblaze::coordinator::expert_parallel::EpTopology;
@@ -258,6 +259,120 @@ fn traffic_reset_and_session_accumulation_contract() {
     assert_eq!((t.grad_bytes, t.recompute_bytes), (0, 0),
                "grad/recompute bytes leaked into the next session");
     drop(handle);
+}
+
+#[test]
+fn indexed_blocked_path_matches_the_packed_row_dot_baseline() {
+    // the PR-5 acceptance pin: the index-driven blocked engines
+    // reproduce the retired materialized path bit-for-bit — outputs AND
+    // gradients — for every rank count × placement × checkpoint policy
+    let (l, e, k, d, h) = (96usize, 8usize, 2usize, 10usize, 14usize);
+    let batch = random_batch(l, e, k, d, 1.1, 41);
+    let store = ExpertStore::init(e, d, h, 6);
+    let d_out: Vec<f32> = {
+        let mut rng = Rng::new(3);
+        rng.normal_vec(l * d, 1.0)
+    };
+    for placement in [Placement::Contiguous, Placement::Strided] {
+        for ranks in [1usize, 2, 4, 8] {
+            let topo = EpTopology::with_placement(ranks, e, placement).unwrap();
+            for policy in CheckpointPolicy::ALL {
+                let (old_out, old_grads) = packed_reference_step(
+                    &topo, &store, &batch, &d_out, policy, ranks)
+                    .unwrap();
+                let mut eng = ShardedEngine::with_policy(
+                    topo.clone(), &store, ranks, policy)
+                    .unwrap();
+                let handle = eng.forward(&batch).unwrap();
+                assert_eq!(handle.output(), &old_out[..],
+                           "R={ranks} {placement} {policy}: outputs diverged \
+                            from the packed baseline");
+                let new_grads = handle.backward(&mut eng, &d_out).unwrap();
+                assert_eq!(new_grads, old_grads,
+                           "R={ranks} {placement} {policy}: grads diverged \
+                            from the packed baseline");
+            }
+        }
+    }
+}
+
+#[test]
+fn outputs_grads_and_dx_are_tile_size_invariant() {
+    // the blocked kernels' chains never cross a tile boundary out of
+    // row order, so every tile size — including 1 (degenerate per-row)
+    // and one larger than any segment — is bit-identical
+    let (l, e, k, d, h) = (72usize, 8usize, 2usize, 10usize, 14usize);
+    let batch = random_batch(l, e, k, d, 0.8, 29);
+    let store = ExpertStore::init(e, d, h, 8);
+    let d_out: Vec<f32> = {
+        let mut rng = Rng::new(4);
+        rng.normal_vec(l * d, 1.0)
+    };
+    for ranks in [1usize, 4] {
+        for policy in CheckpointPolicy::ALL {
+            let mut reference: Option<(Vec<f32>, _, Vec<f32>)> = None;
+            for tile in [1usize, 3, 16, 1024] {
+                let topo = EpTopology::new(ranks, e).unwrap();
+                let mut eng: Box<dyn ExecutionEngine> = if ranks == 1 {
+                    let mut s = SingleRankEngine::with_policy(store.clone(),
+                                                              policy);
+                    s.set_tile_rows(tile);
+                    Box::new(s)
+                } else {
+                    let mut s = ShardedEngine::with_policy(topo, &store, ranks,
+                                                           policy)
+                        .unwrap();
+                    s.set_tile_rows(tile);
+                    Box::new(s)
+                };
+                let handle = eng.forward(&batch).unwrap();
+                let out = handle.output().to_vec();
+                let mut grads = eng.zero_grads();
+                let mut dx = vec![0.0f32; l * d];
+                eng.backward_into_dx(handle, &d_out, &mut grads, &mut dx)
+                    .unwrap();
+                match &reference {
+                    None => reference = Some((out, grads, dx)),
+                    Some((ro, rg, rdx)) => {
+                        assert_eq!(&out, ro,
+                                   "R={ranks} {policy} tile={tile}: outputs");
+                        assert_eq!(&grads, rg,
+                                   "R={ranks} {policy} tile={tile}: grads");
+                        assert_eq!(&dx, rdx,
+                                   "R={ranks} {policy} tile={tile}: dx");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn staging_residency_sits_strictly_below_the_packed_buffers() {
+    // the memory half of the PR-5 bar: for R > 1, per-rank comm
+    // residency (extra_bytes = staging tiles) is strictly below what
+    // the packed path kept resident, on a cross-heavy workload
+    use moeblaze::dispatch::RowIndexPlan;
+    let (l, e, k, d) = (256usize, 8usize, 2usize, 16usize);
+    let batch = random_batch(l, e, k, d, 0.7, 13);
+    let store = ExpertStore::init(e, d, 20, 9);
+    for ranks in [2usize, 4, 8] {
+        let topo = EpTopology::new(ranks, e).unwrap();
+        let token_rank: Vec<u32> =
+            (0..l).map(|t| topo.rank_of_token(t, l) as u32).collect();
+        let rplan = RowIndexPlan::build(batch.disp(), ranks,
+                                        &topo.assignment().rank_of,
+                                        &token_rank)
+            .unwrap();
+        let mut eng = ShardedEngine::new(topo, &store, ranks).unwrap();
+        let _ = eng.forward(&batch).unwrap();
+        for (rank, m) in eng.memory_per_rank().iter().enumerate() {
+            let packed = rplan.packed_buffer_bytes(rank, d, 4);
+            assert!(m.extra_bytes < packed,
+                    "R={ranks} rank {rank}: staging {} not below packed {}",
+                    m.extra_bytes, packed);
+        }
+    }
 }
 
 #[test]

@@ -218,6 +218,13 @@ fn figure2_fixture_exposes_less_communication_for_k_above_one() {
 
 #[test]
 fn pipelined_peak_memory_never_exceeds_the_barrier_engine() {
+    // since the zero-materialization redesign (PR 5), comm residency is
+    // the kernels' staging tiles rather than packed per-peer buffers:
+    // the pipelined engine's per-rank peak (data and staging) must never
+    // exceed the barrier engine's, K = 1 must match it exactly, and both
+    // must sit strictly below the packed-buffer residency the old path
+    // kept resident (RowIndexPlan::packed_buffer_bytes)
+    use moeblaze::dispatch::RowIndexPlan;
     let (l, e, k, d, h) = (128usize, 8usize, 2usize, 16usize, 20usize);
     let batch = random_batch(l, e, k, d, 0.9, 77);
     let store = ExpertStore::init(e, d, h, 4);
@@ -225,6 +232,11 @@ fn pipelined_peak_memory_never_exceeds_the_barrier_engine() {
     let mut barrier = ShardedEngine::new(topo.clone(), &store, 4).unwrap();
     let _ = barrier.forward(&batch).unwrap();
     let barrier_mem = barrier.memory_per_rank();
+    let token_rank: Vec<u32> =
+        (0..l).map(|t| topo.rank_of_token(t, l) as u32).collect();
+    let rplan = RowIndexPlan::build(batch.disp(), 4,
+                                    &topo.assignment().rank_of, &token_rank)
+        .unwrap();
     for chunks in [1usize, 2, 4] {
         let mut eng =
             PipelinedEngine::new(topo.clone(), &store, 4, chunks).unwrap();
@@ -236,23 +248,22 @@ fn pipelined_peak_memory_never_exceeds_the_barrier_engine() {
                     "K={chunks} rank {rank}: data {} > barrier {}",
                     p.data_bytes, b.data_bytes);
             assert!(p.extra_bytes <= b.extra_bytes,
-                    "K={chunks} rank {rank}: comm buffers {} > barrier {}",
+                    "K={chunks} rank {rank}: staging {} > barrier {}",
+                    p.extra_bytes, b.extra_bytes);
+            // both engines beat the packed residency outright
+            let packed = rplan.packed_buffer_bytes(rank, d, 4);
+            assert!(p.extra_bytes < packed && b.extra_bytes < packed,
+                    "K={chunks} rank {rank}: staging not below packed \
+                     buffers ({} / {} vs {packed})",
                     p.extra_bytes, b.extra_bytes);
         }
         if chunks == 1 {
-            // degenerate pipeline: identical comm-buffer residency
+            // degenerate pipeline: identical staging residency
             let pe: u64 = mem.iter().map(|m| m.extra_bytes).sum();
             let be: u64 = barrier_mem.iter().map(|m| m.extra_bytes).sum();
             assert_eq!(pe, be, "K=1 should match the barrier residency");
         }
     }
-    // K=4 strictly shrinks the summed comm-buffer window
-    let mut eng = PipelinedEngine::new(topo, &store, 4, 4).unwrap();
-    let _ = eng.forward(&batch).unwrap();
-    let chunked: u64 = eng.memory_per_rank().iter().map(|m| m.extra_bytes).sum();
-    let whole: u64 = barrier_mem.iter().map(|m| m.extra_bytes).sum();
-    assert!(chunked < whole,
-            "K=4 comm-buffer peak {chunked} did not drop below {whole}");
 }
 
 /// Max over chunks of the busiest rank's forward compute FLOPs — the
@@ -373,6 +384,39 @@ fn calibration_reports_measured_wall_clock_per_phase() {
     // and the JSON roll-up carries the calibration array
     let j = moeblaze::util::json::Json::parse(&rep.to_json().to_string()).unwrap();
     assert_eq!(j.get("calibration").unwrap().as_arr().unwrap().len(), 3);
+}
+
+#[test]
+fn pipelined_outputs_are_tile_size_invariant_and_recalibration_moves_rates_only() {
+    let batch = random_batch(60, 8, 2, 8, 0.9, 14);
+    let store = ExpertStore::init(8, 8, 12, 5);
+    let topo = EpTopology::new(4, 8).unwrap();
+    let d_out = vec![0.07f32; 60 * 8];
+    let mut reference: Option<(Vec<f32>, _)> = None;
+    for tile in [1usize, 4, 64] {
+        let mut eng = PipelinedEngine::new(topo.clone(), &store, 4, 3).unwrap();
+        eng.set_tile_rows(tile);
+        let handle = eng.forward(&batch).unwrap();
+        let out = handle.output().to_vec();
+        let grads = handle.backward(&mut eng, &d_out).unwrap();
+        match &reference {
+            None => reference = Some((out, grads)),
+            Some((ro, rg)) => {
+                assert_eq!(&out, ro, "tile={tile}: outputs diverged");
+                assert_eq!(&grads, rg, "tile={tile}: grads diverged");
+            }
+        }
+        // the self-tuning hook: folds measured/simulated ratios into the
+        // engine's effective rates — positive, finite, numerics untouched
+        let cm = eng
+            .recalibrate_cost_model(0.5)
+            .expect("pipelined engine carries a timeline");
+        assert!(cm.link_gbps > 0.0 && cm.link_gbps.is_finite());
+        assert!(cm.compute_gflops > 0.0 && cm.compute_gflops.is_finite());
+        let out2 = eng.forward(&batch).unwrap().into_output();
+        assert_eq!(out2, reference.as_ref().unwrap().0,
+                   "tile={tile}: recalibration changed the numerics");
+    }
 }
 
 #[test]

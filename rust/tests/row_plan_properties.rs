@@ -1,0 +1,154 @@
+//! Property suite for the index-driven dispatch plan (ISSUE 5): over
+//! fuzzed gatings, a [`RowIndexPlan`] must round-trip to the packed
+//! buffers it replaced **exactly** —
+//!
+//! * its analytic cross-rank bytes equal
+//!   `AllToAllPlan::cross_rank_bytes()` (the dry-run planner is
+//!   unchanged by the redesign);
+//! * simulating the old packing from the plan's indices reproduces the
+//!   per-(src, dst) buffer row counts the plan derives analytically;
+//! * per-rank segments reproduce the dispatch structures' expert
+//!   segments verbatim (tokens, order, gate slots), so gathering by
+//!   index reads exactly the rows the buffers used to carry;
+//! * the staging-tile residency is bounded by — and on cross-heavy
+//!   workloads strictly below — the packed-buffer residency.
+
+use moeblaze::config::ep::Placement;
+use moeblaze::coordinator::expert_parallel::EpTopology;
+use moeblaze::dispatch::gating::synthetic_gating;
+use moeblaze::dispatch::parallel_build::parallel_build;
+use moeblaze::dispatch::RowIndexPlan;
+use moeblaze::memory::model::staging_bytes;
+use moeblaze::util::prng::Rng;
+
+#[test]
+fn row_index_plan_round_trips_to_packed_buffer_bytes_over_fuzzed_gatings() {
+    let mut rng = Rng::new(0x905);
+    for case in 0..100u64 {
+        let ranks = [1usize, 2, 4, 8][(rng.next_u64() % 4) as usize];
+        let e = ranks * (1 + (rng.next_u64() % 4) as usize);
+        let l = 1 + (rng.next_u64() % 96) as usize;
+        let k = 1 + (rng.next_u64() % e.min(3) as u64) as usize;
+        let d = 4 + (rng.next_u64() % 28) as usize;
+        let skew = (case % 5) as f64 * 0.5;
+        let placement = if case % 2 == 0 {
+            Placement::Contiguous
+        } else {
+            Placement::Strided
+        };
+        let gating = synthetic_gating(&mut rng, l, e, k, skew);
+        let disp = parallel_build(&gating.topk_ids, l, e, k);
+        let topo = EpTopology::with_placement(ranks, e, placement).unwrap();
+        let token_rank: Vec<u32> =
+            (0..l).map(|t| topo.rank_of_token(t, l) as u32).collect();
+        let plan = RowIndexPlan::build(&disp, ranks, &topo.assignment().rank_of,
+                                       &token_rank)
+            .unwrap();
+
+        // (a) analytic bytes == the unchanged dry-run planner's
+        let a2a = topo.plan(&disp, d, 4);
+        assert_eq!(plan.cross_rank_bytes(d, 4), a2a.cross_rank_bytes(),
+                   "case {case}: analytic bytes diverged from AllToAllPlan");
+        assert_eq!(plan.cross_rows() + plan.local_rows(), disp.slots() as u64,
+                   "case {case}: rows not conserved");
+
+        // (b) simulate the old packing: walk every rank's local slots in
+        // order bucketing rows by home rank — the send buffers the
+        // packed path would have built — and check the counts match the
+        // plan's analytic matrix entry for entry
+        let mut packed = vec![0u64; ranks * ranks];
+        for (dst, rr) in plan.per_rank.iter().enumerate() {
+            for ls in 0..rr.local_slots() {
+                let src = token_rank[rr.tokens[ls] as usize] as usize;
+                assert_eq!(rr.src_rank[ls] as usize, src,
+                           "case {case}: src classification wrong");
+                packed[src * ranks + dst] += 1;
+            }
+        }
+        assert_eq!(packed, plan.rows_between,
+                   "case {case}: simulated packing != analytic matrix");
+        for src in 0..ranks {
+            for dst in 0..ranks {
+                assert_eq!(plan.rows(src, dst), packed[src * ranks + dst]);
+            }
+        }
+
+        // (c) per-rank segments reproduce the dispatch structures'
+        // expert segments verbatim — order included
+        let mut origin_of_pos = vec![0u32; disp.slots()];
+        for (slot, &pos) in disp.token_index_map.iter().enumerate() {
+            origin_of_pos[pos as usize] = slot as u32;
+        }
+        for rr in &plan.per_rank {
+            for (i, &ex) in rr.experts.iter().enumerate() {
+                let lo = rr.expert_offsets[i] as usize;
+                let hi = rr.expert_offsets[i + 1] as usize;
+                let glo = disp.expert_token_offsets[ex as usize] as usize;
+                let ghi = disp.expert_token_offsets[ex as usize + 1] as usize;
+                assert_eq!(&rr.tokens[lo..hi],
+                           &disp.expert_token_indices[glo..ghi],
+                           "case {case}: expert {ex} tokens diverged");
+                assert_eq!(&rr.gate_slots[lo..hi], &origin_of_pos[glo..ghi],
+                           "case {case}: expert {ex} gate slots diverged");
+                // every gate slot belongs to its token and routes here
+                for ls in lo..hi {
+                    let slot = rr.gate_slots[ls] as usize;
+                    assert_eq!(slot / k, rr.tokens[ls] as usize);
+                    assert_eq!(disp.token_expert_indices[slot], ex);
+                }
+            }
+        }
+
+        // (d) the comm-staging model matches the kernels' allocation —
+        // one whole tile per direction with remote flow, none without —
+        // and on cross-heavy ranks (a tile or more of remote rows each
+        // way, plus anything beyond the two tiles) it sits strictly
+        // below the packed residency it replaced
+        let tile = 16u64;
+        let tile_bytes = tile * d as u64 * 4;
+        for rank in 0..ranks {
+            let rin = plan.remote_in_rows(rank);
+            let rout = plan.remote_return_rows(rank);
+            let packed_bytes = plan.packed_buffer_bytes(rank, d, 4);
+            let staged = staging_bytes(tile, d as u64, 4, rin, rout);
+            let expect = u64::from(rin > 0) * tile_bytes
+                + u64::from(rout > 0) * tile_bytes;
+            assert_eq!(staged, expect,
+                       "case {case} rank {rank}: staging model drifted from \
+                        the tile allocation");
+            if rin >= tile && rout >= tile {
+                assert!(staged <= packed_bytes,
+                        "case {case} rank {rank}: staging {staged} above \
+                         packed {packed_bytes}");
+                if rin + rout > 2 * tile {
+                    assert!(staged < packed_bytes,
+                            "case {case} rank {rank}: staging did not drop");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_to_one_expert_skew_round_trips() {
+    // degenerate routing: every token to expert 0 — one rank holds
+    // every row, the matrix is one dense column
+    let l = 64usize;
+    let ids = vec![0u32; l];
+    let disp = parallel_build(&ids, l, 8, 1);
+    let topo = EpTopology::new(4, 8).unwrap();
+    let token_rank: Vec<u32> =
+        (0..l).map(|t| topo.rank_of_token(t, l) as u32).collect();
+    let plan = RowIndexPlan::build(&disp, 4, &topo.assignment().rank_of,
+                                   &token_rank)
+        .unwrap();
+    assert_eq!(plan.per_rank[0].local_slots(), l);
+    for rr in &plan.per_rank[1..] {
+        assert_eq!(rr.local_slots(), 0);
+    }
+    let a2a = topo.plan(&disp, 16, 4);
+    assert_eq!(plan.cross_rank_bytes(16, 4), a2a.cross_rank_bytes());
+    // ranks 1..3 source rows but compute none: outbound staging only
+    assert_eq!(plan.remote_in_rows(2), 0);
+    assert!(plan.remote_return_rows(2) > 0);
+}

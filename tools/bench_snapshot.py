@@ -1,0 +1,80 @@
+"""Snapshot the PR-5 perf baseline: run `ep-bench --json-out` on the
+Figure-2-derived fixture and write BENCH_PR5.json at the repo root, so
+the bench trajectory (tokens/s + peak comm bytes, old packed path vs new
+index-driven path) is a reproducible artifact instead of a console line.
+
+Usage:
+    python tools/bench_snapshot.py [--out BENCH_PR5.json]
+
+Requires a Rust toolchain (cargo) — the build container used for the
+Python mirrors has none, so CI runs this from the non-blocking
+`bench-smoke` job on a toolchain-equipped runner.
+"""
+import argparse
+import json
+import pathlib
+import shutil
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# The fixture: the default ep-bench workload scaled to bench size — the
+# same L/E/k shape family as the paper's Figure 2 worked example, large
+# enough that the kernel path (not fixed overheads) dominates.
+FIXTURE = [
+    "--ranks", "4",
+    "--tokens", "2048",
+    "--experts", "16",
+    "--top-k", "2",
+    "--d-model", "32",
+    "--d-hidden", "64",
+    "--skew", "0.7",
+    "--seed", "7",
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_PR5.json",
+                    help="output path, relative to the repo root")
+    ap.add_argument("--steps", default="2",
+                    help="bench steps passed through to ep-bench")
+    args = ap.parse_args()
+
+    if shutil.which("cargo") is None:
+        print("bench_snapshot: no cargo toolchain on this host — "
+              "run from a toolchain-equipped checkout", file=sys.stderr)
+        return 1
+
+    out = ROOT / args.out
+    cmd = ["cargo", "run", "--release", "--", "ep-bench",
+           "--steps", args.steps, "--json-out", str(out)] + FIXTURE
+    print("bench_snapshot:", " ".join(cmd))
+    proc = subprocess.run(cmd, cwd=ROOT)
+    if proc.returncode != 0:
+        print(f"bench_snapshot: ep-bench exited {proc.returncode}",
+              file=sys.stderr)
+        return proc.returncode
+
+    snap = json.loads(out.read_text())
+    speedup = snap.get("speedup", 0.0)
+    old = snap.get("baseline", {})
+    new = snap.get("indexed", {})
+    print(f"bench_snapshot: wrote {out}")
+    print(f"  old packed path : {old.get('tokens_per_sec', 0):.0f} tokens/s, "
+          f"peak rank comm {old.get('peak_rank_comm_bytes', 0):.0f} B")
+    print(f"  new indexed path: {new.get('tokens_per_sec', 0):.0f} tokens/s, "
+          f"peak rank comm {new.get('peak_rank_comm_bytes', 0):.0f} B")
+    print(f"  speedup         : {speedup:.2f}x")
+    if speedup < 1.5:
+        print("bench_snapshot: WARNING — speedup below the 1.5x acceptance "
+              "bar on this host", file=sys.stderr)
+    if new.get("peak_rank_comm_bytes", 0) >= old.get("peak_rank_comm_bytes", 1):
+        print("bench_snapshot: WARNING — staging bytes did not drop below "
+              "the packed buffers", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

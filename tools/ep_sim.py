@@ -506,6 +506,174 @@ def pipelined_fwd_bwd(ids, L, E, K_top, params, x, gates, dm, R, strided,
 def grads_bytes(grads):
     return b''.join(g[kk].tobytes() for g in grads for kk in ('w1', 'b1', 'w2', 'b2'))
 
+# ===========================================================================
+# Index-driven (zero-materialization) dispatch parity — mirror of the
+# ISSUE-5 redesign in dispatch/structures.rs (RowIndexPlan) +
+# coordinator/kernels.rs + the rewritten engines.
+#
+# Mirrored contracts, asserted BITWISE and fuzzed over R x tile x policy:
+#   * expert compute gathers routed rows DIRECTLY from the caller's x via
+#     the per-(rank, expert) token-index lists — no send buffer, no
+#     per-rank unpack buffer, no return buffer — processing each expert
+#     segment in tiles of T rows whose row order equals the packed walk;
+#   * the combine scatter reads each expert-output row in place through
+#     an (origin slot -> (rank, local slot)) lookup;
+#   * backward gathers gated gradient rows (gate * d_out[token]) per tile
+#     and, under recompute-all, re-gathers routed inputs by INDEX;
+#   * dispatch bytes are DERIVED from the plan's src->dst row counts and
+#     must equal both the analytic whole-batch plan and a simulated
+#     packing of the old buffers.
+# Outputs and grads must match the row-by-row reference bit-for-bit for
+# every tile size (tile boundaries never cross a row's op order).
+# ===========================================================================
+
+def row_index_plan(d, R, strided):
+    """Per-rank (experts, offsets, tokens, gate_slots, src_rank) + the
+    src->dst row-count matrix — the RowIndexPlan mirror."""
+    l, e, k = d['l'], d['e'], d['k']
+    origin = [0] * (l * k)
+    for slot, pos in enumerate(d['tim']):
+        origin[pos] = slot
+    per_rank = []
+    rows_between = [[0] * R for _ in range(R)]
+    for r in range(R):
+        experts = [x for x in range(e) if rank_of_expert(x, e, R, strided) == r]
+        off = [0]
+        toks, gslots, srcs = [], [], []
+        for ex in experts:
+            for pos in range(d['off'][ex], d['off'][ex + 1]):
+                tok = d['eti'][pos]
+                toks.append(tok)
+                gslots.append(origin[pos])
+                src = rank_of_token(tok, l, R)
+                srcs.append(src)
+                rows_between[src][r] += 1
+            off.append(len(toks))
+        per_rank.append(dict(experts=experts, off=off, toks=toks,
+                             gslots=gslots, srcs=srcs))
+    return per_rank, rows_between
+
+def indexed_blocked_fwd_bwd(d, params, x, gates, dm, R, strided, tile,
+                            policy, d_out, grads):
+    """Zero-materialization sharded step: gather-by-index in tiles of
+    `tile` rows, combine in place, backward without a gradient exchange
+    buffer. Returns (out, derived dispatch bytes)."""
+    l, k = d['l'], d['k']
+    per_rank, rows_between = row_index_plan(d, R, strided)
+    dispatch_bytes = sum(rows_between[s][t] * dm * 4
+                         for s in range(R) for t in range(R) if s != t)
+    # forward: per rank, per expert segment, tiles of `tile` rows
+    ys_of, saved = [], []
+    ret_lookup = [None] * (l * k)
+    for r in range(R):
+        rr = per_rank[r]
+        nl = len(rr['toks'])
+        for ls, o in enumerate(rr['gslots']):
+            ret_lookup[o] = (r, ls)
+        ys = np.zeros((nl, dm), f32)
+        xs = np.zeros((nl, dm), f32) if policy != 'recompute-all' else None
+        hdim = params[0]['b1'].size
+        pre_s = np.zeros((nl, hdim), f32) if policy == 'save-all' else None
+        act_s = np.zeros((nl, hdim), f32) if policy == 'save-all' else None
+        for i, ex in enumerate(rr['experts']):
+            lo, hi = rr['off'][i], rr['off'][i + 1]
+            t0 = lo
+            while t0 < hi:
+                rows = min(tile, hi - t0)
+                for rrow in range(rows):
+                    ls = t0 + rrow
+                    xin = x[rr['toks'][ls]]  # gathered straight from x
+                    if xs is not None:
+                        xs[ls] = xin
+                    y, pre, act = ffn_fwd(params[ex], xin,
+                                          policy == 'save-all')
+                    if policy == 'save-all':
+                        pre_s[ls], act_s[ls] = pre, act
+                    ys[ls] = y
+                t0 += rows
+        ys_of.append(ys)
+        saved.append((xs, (pre_s, act_s) if policy == 'save-all' else None))
+    # combine: read expert outputs in place via the return lookup
+    out = np.zeros((l, dm), f32)
+    for home in range(R):
+        for t in range(l):
+            if rank_of_token(t, l, R) != home:
+                continue
+            for j in range(k):
+                r, ls = ret_lookup[t * k + j]
+                out[t] = out[t] + np.float32(gates[t * k + j]) * ys_of[r][ls]
+    # backward: gated dy rows gathered per tile, inputs from the saved
+    # rows or (recompute-all) re-gathered by index
+    for r in range(R):
+        rr = per_rank[r]
+        xs, hidden = saved[r]
+        for i, ex in enumerate(rr['experts']):
+            lo, hi = rr['off'][i], rr['off'][i + 1]
+            t0 = lo
+            while t0 < hi:
+                rows = min(tile, hi - t0)
+                for rrow in range(rows):
+                    ls = t0 + rrow
+                    tok = rr['toks'][ls]
+                    dy = (np.float32(gates[rr['gslots'][ls]])
+                          * d_out[tok]).astype(f32)
+                    xin = xs[ls] if xs is not None else x[tok]
+                    if hidden is not None:
+                        pre, act = hidden[0][ls], hidden[1][ls]
+                    else:
+                        pre = (params[ex]['w1'] @ xin
+                               + params[ex]['b1']).astype(f32)
+                        act = silu32(pre)
+                    ffn_bwd_row(params[ex], grads[ex], xin, dy, pre, act)
+                t0 += rows
+    return out, dispatch_bytes
+
+random.seed(5)
+idx_cases = 0
+for case in range(40):
+    R = random.choice([1, 2, 4])
+    E = R * random.randint(1, 3)
+    L = random.randint(4, 48)
+    K_top = random.randint(1, min(E, 3))
+    DM, H2 = 5, 7
+    tile = random.choice([1, 2, 3, 8, 64])
+    strided = random.random() < 0.5
+    policy = random.choice(['save-all', 'save-inputs', 'recompute-all'])
+    rng = np.random.default_rng(6000 + case)
+    ids = np.concatenate([rng.choice(E, K_top, replace=False)
+                          for _ in range(L)]).astype(int)
+    params = init_experts(E, DM, H2, rng)
+    x = rng.standard_normal((L, DM)).astype(f32)
+    gates = rng.random(L * K_top).astype(f32)
+    d_out = rng.standard_normal((L, DM)).astype(f32)
+    d_full = build(list(ids), L, E, K_top)
+    ref_grads = [zeros_like_params(DM, H2) for _ in range(E)]
+    ref_out = single_fwd_bwd_ffn(d_full, params, x, gates, DM, policy,
+                                 d_out, ref_grads)
+    got_grads = [zeros_like_params(DM, H2) for _ in range(E)]
+    got_out, derived = indexed_blocked_fwd_bwd(d_full, params, x, gates, DM,
+                                               R, strided, tile, policy,
+                                               d_out, got_grads)
+    assert ref_out.tobytes() == got_out.tobytes(), \
+        f"indexed case {case}: outputs diverged (R={R} tile={tile} {policy})"
+    assert grads_bytes(ref_grads) == grads_bytes(got_grads), \
+        f"indexed case {case}: grads diverged (R={R} tile={tile} {policy})"
+    pb, _ = plan_bytes(d_full, R, strided, DM)
+    assert derived == pb, \
+        f"indexed case {case}: derived bytes {derived} != plan {pb}"
+    # the derived bytes also round-trip a simulated packing of the old
+    # send buffers, buffer by buffer
+    per_rank, rows_between = row_index_plan(d_full, R, strided)
+    packed = [[0] * R for _ in range(R)]
+    for dst in range(R):
+        for src in per_rank[dst]['srcs']:
+            packed[src][dst] += 1
+    assert packed == rows_between, f"indexed case {case}: packing mismatch"
+    idx_cases += 1
+print(f"index-driven parity OK: {idx_cases} fuzz cases, gather-by-index + "
+      "tiled segments bit-identical to the packed reference across "
+      "R x tile x policy, derived bytes == plan == simulated packing")
+
 random.seed(3)
 cases = 0
 for case in range(48):
