@@ -8,6 +8,7 @@ use std::fmt;
 
 use crate::memory::model::CheckpointPolicy;
 
+use super::model::Activation;
 use super::toml::Toml;
 
 /// Expert→rank placement policy.
@@ -138,11 +139,18 @@ pub struct EpConfig {
     pub pipeline_chunks: usize,
     /// chunk-boundary policy for the pipelined engine (`tokens` | `rows`)
     pub chunk_balance: ChunkBalance,
+    /// expert FFN activation (`silu` = the 2-GEMM FFN, `swiglu` = the
+    /// gated 3-GEMM FFN with the W3 gate streamed through the same
+    /// staging tile) — reuses `config::model::Activation`, restricted
+    /// to the two the expert kernels implement
+    pub activation: Activation,
     /// routed-row tile of the blocked expert kernels: each expert's
     /// segment is processed `tile_rows` rows at a time, gathered
     /// straight from the batch into one staging tile. Numerics are
     /// bit-identical for every value; only throughput and staging
-    /// residency move.
+    /// residency move. 0 = autotune: probe the candidate tiles on the
+    /// first real microbatch (or reuse the calibration artifact's
+    /// choice for this shape bucket) and pick the fastest.
     pub tile_rows: usize,
     /// simulated cross-rank link bandwidth for the pipeline's phase
     /// timeline (decimal GB/s)
@@ -160,6 +168,11 @@ pub struct EpConfig {
     pub clip_norm: f64,
     /// metrics output (JSONL); empty = stdout only
     pub metrics_path: String,
+    /// persistent calibration artifact (JSON): effective
+    /// `link_gbps`/`compute_gflops` and autotuned tiles per shape
+    /// bucket, loaded at engine build for a warm start and saved back
+    /// by `ep-train`; empty = no artifact
+    pub calibration_path: String,
 }
 
 impl Default for EpConfig {
@@ -184,6 +197,7 @@ impl Default for EpConfig {
             mem_budget_bytes: 0,
             pipeline_chunks: 0,
             chunk_balance: ChunkBalance::default(),
+            activation: Activation::Silu,
             tile_rows: crate::coordinator::kernels::DEFAULT_TILE_ROWS,
             link_gbps: 50.0,
             compute_gflops: 200.0,
@@ -191,6 +205,7 @@ impl Default for EpConfig {
             lr_schedule: "constant".into(),
             clip_norm: 0.0,
             metrics_path: String::new(),
+            calibration_path: String::new(),
         }
     }
 }
@@ -233,9 +248,13 @@ impl EpConfig {
         if self.num_layers == 0 {
             return Err("ep.num_layers must be >= 1".into());
         }
-        if self.tile_rows == 0 {
-            return Err("ep.tile_rows must be >= 1".into());
+        if !matches!(self.activation, Activation::Silu | Activation::Swiglu) {
+            return Err(format!(
+                "ep.activation must be silu or swiglu, got {}",
+                self.activation
+            ));
         }
+        // tile_rows = 0 is legal: it means autotune at engine build
         if !(self.link_gbps > 0.0 && self.link_gbps.is_finite()) {
             return Err(format!("ep.link_gbps must be positive, got {}", self.link_gbps));
         }
@@ -288,6 +307,9 @@ impl EpConfig {
             chunk_balance: ChunkBalance::parse(
                 &t.str_or(&key("chunk_balance"), d.chunk_balance.name()),
             )?,
+            activation: Activation::parse(
+                &t.str_or(&key("activation"), d.activation.name()),
+            )?,
             tile_rows: t.usize_or(&key("tile_rows"), d.tile_rows),
             link_gbps: t.f64_or(&key("link_gbps"), d.link_gbps),
             compute_gflops: t.f64_or(&key("compute_gflops"), d.compute_gflops),
@@ -295,6 +317,8 @@ impl EpConfig {
             lr_schedule: t.str_or(&key("lr_schedule"), &d.lr_schedule),
             clip_norm: t.f64_or(&key("clip_norm"), d.clip_norm),
             metrics_path: t.str_or(&key("metrics_path"), &d.metrics_path),
+            calibration_path: t.str_or(&key("calibration_path"),
+                                       &d.calibration_path),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -364,8 +388,40 @@ mod tests {
                    crate::coordinator::kernels::DEFAULT_TILE_ROWS);
         assert!(!d.calibrate);
         d.validate().unwrap();
+        // tile_rows = 0 means autotune — a legal config since PR 6
         assert!(EpConfig { tile_rows: 0, ..Default::default() }
             .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn activation_and_calibration_keys() {
+        let t = Toml::parse(
+            "[ep]\nactivation = \"swiglu\"\ntile_rows = 0\n\
+             calibration_path = \"/tmp/calib.json\"",
+        )
+        .unwrap();
+        let c = EpConfig::from_toml(&t, "ep").unwrap();
+        assert_eq!(c.activation, Activation::Swiglu);
+        assert!(c.activation.gated());
+        assert_eq!(c.tile_rows, 0);
+        assert_eq!(c.calibration_path, "/tmp/calib.json");
+        // defaults: ungated SiLU, no artifact
+        let d = EpConfig::default();
+        assert_eq!(d.activation, Activation::Silu);
+        assert!(!d.activation.gated());
+        assert!(d.calibration_path.is_empty());
+        d.validate().unwrap();
+        // the expert kernels implement silu and swiglu only
+        assert!(EpConfig { activation: Activation::Gelu, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(EpConfig { activation: Activation::Relu, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(Toml::parse("[ep]\nactivation = \"tanh\"")
+            .map(|t| EpConfig::from_toml(&t, "ep"))
+            .unwrap()
             .is_err());
     }
 

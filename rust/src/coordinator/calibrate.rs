@@ -1,0 +1,146 @@
+//! Persistent calibration artifact (`[ep] calibration_path`).
+//!
+//! One training run learns two kinds of host-specific state worth
+//! keeping: the EWMA-folded effective `link_gbps` / `compute_gflops`
+//! the timeline's `recalibrate_cost_model` converges to, and the
+//! `tile_rows` the autotune probe picked per shape bucket
+//! (`engine::tile_bucket`). This module round-trips both through a
+//! small JSON artifact so the *next* run starts warm:
+//! `engine_from_config_with_info` loads it at build time, overriding
+//! the config's cold-start rates and skipping the tile probe for any
+//! bucket the artifact already answers; `EpTrainer` saves it back at
+//! run end with the rates it just calibrated.
+//!
+//! Robustness contract: [`Calibration::load`] returns `None` for a
+//! missing, unreadable, or corrupt artifact (bad JSON, missing keys,
+//! non-positive rates) — the caller falls back to cold-start defaults
+//! without error, which the artifact-fallback tests pin.
+//! [`Calibration::save`] writes via a temp file + rename, so a crash
+//! mid-write can never leave a half-written artifact behind for the
+//! next run to trip over.
+
+use std::collections::BTreeMap;
+use std::fs;
+
+use crate::util::json::Json;
+
+/// The persisted calibration state: effective cost-model rates plus the
+/// chosen blocked-kernel tile per shape bucket.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    /// EWMA-folded effective link bandwidth (GB/s)
+    pub link_gbps: f64,
+    /// EWMA-folded effective compute rate (GFLOP/s)
+    pub compute_gflops: f64,
+    /// autotuned `tile_rows` keyed by `engine::tile_bucket` strings
+    pub tiles: BTreeMap<String, usize>,
+}
+
+impl Calibration {
+    /// Read an artifact, or `None` if the file is missing or corrupt in
+    /// any way — the cold-start fallback path, never an error.
+    pub fn load(path: &str) -> Option<Calibration> {
+        let text = fs::read_to_string(path).ok()?;
+        let j = Json::parse(&text).ok()?;
+        let link_gbps = j.get("link_gbps")?.as_f64()?;
+        let compute_gflops = j.get("compute_gflops")?.as_f64()?;
+        if !link_gbps.is_finite() || link_gbps <= 0.0
+            || !compute_gflops.is_finite() || compute_gflops <= 0.0
+        {
+            return None;
+        }
+        let mut tiles = BTreeMap::new();
+        if let Some(map) = j.get("tiles").and_then(|t| t.as_obj()) {
+            for (bucket, tile) in map {
+                let t = tile.as_usize()?;
+                if t == 0 {
+                    return None;
+                }
+                tiles.insert(bucket.clone(), t);
+            }
+        }
+        Some(Calibration { link_gbps, compute_gflops, tiles })
+    }
+
+    /// Write the artifact atomically (temp file + rename). The JSON
+    /// serializer walks `BTreeMap`s in key order, so equal state always
+    /// produces byte-identical artifacts.
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        let tiles: Vec<(&str, Json)> = self
+            .tiles
+            .iter()
+            .map(|(bucket, &tile)| (bucket.as_str(), Json::num(tile as f64)))
+            .collect();
+        let j = Json::obj(vec![
+            ("link_gbps", Json::num(self.link_gbps)),
+            ("compute_gflops", Json::num(self.compute_gflops)),
+            ("tiles", Json::obj(tiles)),
+        ]);
+        let tmp = format!("{path}.tmp");
+        fs::write(&tmp, j.to_string())
+            .map_err(|e| format!("writing {tmp}: {e}"))?;
+        fs::rename(&tmp, path)
+            .map_err(|e| format!("renaming {tmp} -> {path}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> String {
+        let dir = std::env::temp_dir();
+        dir.join(format!("moeblaze-calib-{tag}-{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn round_trips_rates_and_tiles() {
+        let path = tmp_path("roundtrip");
+        let mut tiles = BTreeMap::new();
+        tiles.insert("tile:d32:h64:r256:swiglu".to_string(), 32usize);
+        tiles.insert("tile:d32:h64:r256:silu".to_string(), 16usize);
+        let c = Calibration { link_gbps: 37.5, compute_gflops: 91.25, tiles };
+        c.save(&path).unwrap();
+        let back = Calibration::load(&path).expect("artifact should load");
+        assert_eq!(back, c);
+        fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_and_corrupt_artifacts_fall_back_to_none() {
+        assert!(Calibration::load("/nonexistent/dir/calib.json").is_none());
+        let path = tmp_path("corrupt");
+        fs::write(&path, "{ not json").unwrap();
+        assert!(Calibration::load(&path).is_none(), "bad JSON must be None");
+        fs::write(&path, "{\"link_gbps\": 10.0}").unwrap();
+        assert!(Calibration::load(&path).is_none(), "missing keys must be None");
+        fs::write(&path, "{\"link_gbps\": -1.0, \"compute_gflops\": 5.0}")
+            .unwrap();
+        assert!(Calibration::load(&path).is_none(),
+                "non-positive rates must be None");
+        fs::write(
+            &path,
+            "{\"link_gbps\": 1.0, \"compute_gflops\": 5.0, \
+             \"tiles\": {\"b\": 0}}",
+        )
+        .unwrap();
+        assert!(Calibration::load(&path).is_none(), "zero tile must be None");
+        fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_no_tmp_left_behind() {
+        let path = tmp_path("atomic");
+        let c = Calibration {
+            link_gbps: 1.0,
+            compute_gflops: 2.0,
+            tiles: BTreeMap::new(),
+        };
+        c.save(&path).unwrap();
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        assert!(Calibration::load(&path).is_some());
+        fs::remove_file(&path).ok();
+    }
+}

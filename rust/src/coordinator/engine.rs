@@ -109,11 +109,24 @@
 //! baseline `ep-bench`/`benches/ep_alltoall.rs` compare against, and the
 //! engine matrices pin new == old bit-for-bit.
 //!
+//! Gated (SwiGLU) experts ride the same hot path: `[ep] activation =
+//! swiglu` grows each expert a `w3` gate matrix and the blocked kernels
+//! run both first-layer GEMMs in one staging-tile pass (one gather, both
+//! matrices stream the tile once — see `coordinator::kernels`), with
+//! `expert_forward_saving_swiglu` / `expert_backward_row_swiglu` below
+//! as the per-row bit-identity oracles. `[ep] tile_rows = 0` autotunes
+//! the tile on the real first microbatch per
+//! (d_model, d_hidden, rows/expert, activation) bucket, and
+//! `[ep] calibration_path` persists EWMA-calibrated link/compute rates
+//! plus the chosen tiles so a fresh run starts warm
+//! ([`engine_from_config_with_info`] reports what happened).
+//!
 //! [`AllToAllPlan::cross_rank_bytes`]: super::expert_parallel::AllToAllPlan::cross_rank_bytes
 //! [`RowIndexPlan`]: crate::dispatch::structures::RowIndexPlan
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::config::ep::{EpConfig, Placement};
 use crate::dispatch::gating::synthetic_gating;
@@ -123,9 +136,12 @@ use crate::memory::model::{staging_bytes, CheckpointPolicy, MemoryBreakdown};
 use crate::util::prng::Rng;
 use crate::util::threadpool::{par_map, scope_chunks};
 
+use super::calibrate::Calibration;
 use super::expert_parallel::EpTopology;
-use super::kernels::{backward_segment, forward_segment, silu, KernelScratch,
-                     KernelTimers, RowsSrc, DEFAULT_TILE_ROWS};
+use super::kernels::{backward_segment, forward_segment, pick_tile, silu,
+                     KernelScratch, KernelTimers, RowsSrc, SavedHiddenMut,
+                     SavedHiddenRef, AUTOTUNE_TILE_CANDIDATES,
+                     DEFAULT_TILE_ROWS};
 use super::params::{ExpertGrads, ExpertParams, ExpertStore, RankExperts};
 use super::pipeline::timeline::{CostModel, OverlapReport};
 use super::pipeline::{combine_chunk, compute_chunk_indexed, PipelinedEngine};
@@ -791,6 +807,113 @@ pub(crate) fn expert_backward_row(p: &ExpertParams, g: &mut ExpertParams, d: usi
     }
 }
 
+/// Recompute one row's SwiGLU hidden state from the routed input: the
+/// pre-activation chain is [`recompute_hidden`]'s (`b1[i]` + `j`-asc
+/// `w1·x`), the gate chain starts from zero (no gate bias) and adds
+/// `j`-asc `w3·x` in the same sweep, and the hidden is
+/// `z = silu(pre)·gate` evaluated exactly in that order — the blocked
+/// `hidden_tile_swiglu` performs the identical per-element op sequence.
+pub(crate) fn recompute_hidden_swiglu(p: &ExpertParams, d: usize, h: usize,
+                                      x: &[f32], pre: &mut [f32],
+                                      gate: &mut [f32], act: &mut [f32]) {
+    for i in 0..h {
+        let wrow = &p.w1[i * d..(i + 1) * d];
+        let vrow = &p.w3[i * d..(i + 1) * d];
+        let mut acc_a = p.b1[i];
+        let mut acc_g = 0.0f32;
+        for j in 0..d {
+            acc_a += wrow[j] * x[j];
+            acc_g += vrow[j] * x[j];
+        }
+        pre[i] = acc_a;
+        gate[i] = acc_g;
+        act[i] = silu(acc_a) * acc_g;
+    }
+}
+
+/// `y = W2·(silu(W1·x + b1) ⊙ W3·x) + b2`, saving all three hidden rows
+/// — the SwiGLU row-reference forward (the oracle the blocked kernels
+/// are pinned against, exactly as [`expert_forward_saving`] is for the
+/// SiLU expert). The output projection is [`expert_forward`]'s chain
+/// verbatim (it sees only `z`).
+pub(crate) fn expert_forward_saving_swiglu(p: &ExpertParams, d: usize, h: usize,
+                                           x: &[f32], y: &mut [f32],
+                                           pre: &mut [f32], gate: &mut [f32],
+                                           act: &mut [f32]) {
+    recompute_hidden_swiglu(p, d, h, x, pre, gate, act);
+    for i in 0..d {
+        let row = &p.w2[i * h..(i + 1) * h];
+        let mut acc = p.b2[i];
+        for j in 0..h {
+            acc += row[j] * act[j];
+        }
+        y[i] = acc;
+    }
+}
+
+/// Accumulate one row's SwiGLU parameter gradients into `g` — the
+/// row-reference backward oracle. The `dz`/`∂W2`/`∂b2` section is
+/// [`expert_backward_row`]'s verbatim; the gate product then splits
+/// `dz` into `da = (dz·gate)·σ·(1 + pre·(1 − σ))` (through SiLU') and
+/// `dg = dz·silu(pre)`, extends `∂b1`/`∂W1` from `da` and `∂W3` from
+/// `dg` (`∂W1`'s row before `∂W3`'s for each `j`), and — when `dx` is
+/// requested — runs the `w1ᵀ·da` chain over all `j` ascending inside
+/// the main loop, then a trailing full `j`-ascending `w3ᵀ·dg` chain,
+/// never interleaved. `da`/`dg` are caller scratch rows (length `h`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn expert_backward_row_swiglu(p: &ExpertParams, g: &mut ExpertParams,
+                                         d: usize, h: usize, x: &[f32],
+                                         dy: &[f32], pre: &[f32], gate: &[f32],
+                                         act: &[f32], dz: &mut [f32],
+                                         da: &mut [f32], dg: &mut [f32],
+                                         dx: Option<&mut [f32]>) {
+    // W2 / b2 grads and dz = W2ᵀ·dy — identical to the SiLU row kernel
+    // (act holds z = silu(pre)·gate)
+    for j in 0..h {
+        dz[j] = 0.0;
+    }
+    for i in 0..d {
+        g.b2[i] += dy[i];
+        let grow = &mut g.w2[i * h..(i + 1) * h];
+        let wrow = &p.w2[i * h..(i + 1) * h];
+        for j in 0..h {
+            grow[j] += dy[i] * act[j];
+            dz[j] += dy[i] * wrow[j];
+        }
+    }
+    // split through the gate product; w1-∂x contributions ride the main
+    // loop (all j ascending), the w3 chain follows in full afterwards
+    let mut dx = dx;
+    for j in 0..h {
+        let sig = 1.0 / (1.0 + (-pre[j]).exp());
+        da[j] = (dz[j] * gate[j]) * sig * (1.0 + pre[j] * (1.0 - sig));
+        dg[j] = dz[j] * silu(pre[j]);
+        g.b1[j] += da[j];
+        let grow = &mut g.w1[j * d..(j + 1) * d];
+        for c in 0..d {
+            grow[c] += da[j] * x[c];
+        }
+        let grow3 = &mut g.w3[j * d..(j + 1) * d];
+        for c in 0..d {
+            grow3[c] += dg[j] * x[c];
+        }
+        if let Some(dxr) = dx.as_deref_mut() {
+            let wrow = &p.w1[j * d..(j + 1) * d];
+            for c in 0..d {
+                dxr[c] += da[j] * wrow[c];
+            }
+        }
+    }
+    if let Some(dxr) = dx.as_deref_mut() {
+        for j in 0..h {
+            let vrow = &p.w3[j * d..(j + 1) * d];
+            for c in 0..d {
+                dxr[c] += dg[j] * vrow[c];
+            }
+        }
+    }
+}
+
 pub(crate) fn add_params(p: &mut ExpertParams, delta: &ExpertParams) {
     for (w, dv) in p.w1.iter_mut().zip(&delta.w1) {
         *w += dv;
@@ -802,6 +925,9 @@ pub(crate) fn add_params(p: &mut ExpertParams, delta: &ExpertParams) {
         *w += dv;
     }
     for (w, dv) in p.b2.iter_mut().zip(&delta.b2) {
+        *w += dv;
+    }
+    for (w, dv) in p.w3.iter_mut().zip(&delta.w3) {
         *w += dv;
     }
 }
@@ -881,7 +1007,9 @@ pub(crate) fn fold_dx(rows: &RowIndexPlan, work: &[RankBwdWork], d: usize,
 /// What one session saved on one rank (policy-dependent).
 pub(crate) enum SavedActs {
     /// `SaveAll`: routed inputs + hidden pre-activations + activations
-    All { xs: Vec<f32>, pre: Vec<f32>, act: Vec<f32> },
+    /// (+ the `w3·x` gate values for gated experts — `gate` stays empty
+    /// for SiLU)
+    All { xs: Vec<f32>, pre: Vec<f32>, act: Vec<f32>, gate: Vec<f32> },
     /// `SaveInputs`: routed inputs only
     Inputs { xs: Vec<f32> },
     /// `RecomputeAll`: nothing
@@ -1027,10 +1155,15 @@ impl SingleRankEngine {
         // inputs come from the policy-saved rows or (RecomputeAll) a
         // direct re-gather of indices from the shared batch — local,
         // zero comm, zero re-gather buffer
-        let (xsrc, hidden): (RowsSrc, Option<(&[f32], &[f32])>) = match &st.saved {
-            SavedActs::All { xs, pre, act } => {
-                (RowsSrc::Packed(&xs[..]), Some((&pre[..], &act[..])))
-            }
+        let (xsrc, hidden): (RowsSrc, Option<SavedHiddenRef<'_>>) = match &st.saved {
+            SavedActs::All { xs, pre, act, gate } => (
+                RowsSrc::Packed(&xs[..]),
+                Some(SavedHiddenRef {
+                    pre: &pre[..],
+                    act: &act[..],
+                    gate: (!gate.is_empty()).then_some(&gate[..]),
+                }),
+            ),
             SavedActs::Inputs { xs } => (RowsSrc::Packed(&xs[..]), None),
             SavedActs::Nothing => (RowsSrc::Tokens(x), None),
         };
@@ -1088,6 +1221,7 @@ impl ExecutionEngine for SingleRankEngine {
         let (l, k, n) = (disp.num_tokens, disp.top_k, disp.slots());
         let save_inputs = self.policy != CheckpointPolicy::RecomputeAll;
         let save_hidden = self.policy == CheckpointPolicy::SaveAll;
+        let gated = self.store.gated();
 
         // blocked expert compute, expert-major: rows gathered straight
         // from the shared batch into the kernel staging tile
@@ -1095,6 +1229,7 @@ impl ExecutionEngine for SingleRankEngine {
         let mut xs = vec![0.0f32; if save_inputs { n * d } else { 0 }];
         let mut pre = vec![0.0f32; if save_hidden { n * h } else { 0 }];
         let mut act = vec![0.0f32; if save_hidden { n * h } else { 0 }];
+        let mut gate = vec![0.0f32; if save_hidden && gated { n * h } else { 0 }];
         let mut scratch = KernelScratch::new(d, h, self.tile_rows);
         for (e, p) in self.store.experts.iter().enumerate() {
             let lo = disp.expert_token_offsets[e] as usize;
@@ -1107,7 +1242,11 @@ impl ExecutionEngine for SingleRankEngine {
                             &mut ys,
                             if save_inputs { Some(&mut xs[..]) } else { None },
                             if save_hidden {
-                                Some((&mut pre[..], &mut act[..]))
+                                Some(SavedHiddenMut {
+                                    pre: &mut pre[..],
+                                    act: &mut act[..],
+                                    gate: gated.then_some(&mut gate[..]),
+                                })
                             } else {
                                 None
                             },
@@ -1128,7 +1267,7 @@ impl ExecutionEngine for SingleRankEngine {
             }
         }
         let saved = match self.policy {
-            CheckpointPolicy::SaveAll => SavedActs::All { xs, pre, act },
+            CheckpointPolicy::SaveAll => SavedActs::All { xs, pre, act, gate },
             CheckpointPolicy::SaveInputs => SavedActs::Inputs { xs },
             CheckpointPolicy::RecomputeAll => SavedActs::Nothing,
         };
@@ -1139,7 +1278,8 @@ impl ExecutionEngine for SingleRankEngine {
             // plus what the policy saves for backward
             data_bytes: 4 * (d as u64) * (n as u64 + 2 * l as u64)
                 + (n as u64)
-                    * self.policy.saved_bytes_per_slot(d as u64, h as u64, 4),
+                    * self.policy.saved_bytes_per_slot(d as u64, h as u64, 4,
+                                                       gated),
             index_bytes: disp.metadata_bytes() as u64,
             extra_bytes: 0,
         }];
@@ -1160,7 +1300,8 @@ impl ExecutionEngine for SingleRankEngine {
     }
 
     fn zero_grads(&self) -> ExpertGrads {
-        ExpertGrads::zeros(self.store.experts.len(), self.store.d_model, self.store.d_hidden)
+        ExpertGrads::zeros_gated(self.store.experts.len(), self.store.d_model,
+                                 self.store.d_hidden, self.store.gated())
     }
 
     fn apply_update(&mut self, delta: &ExpertGrads) -> Result<(), String> {
@@ -1256,6 +1397,8 @@ pub struct ShardedEngine {
     pub rank_params: Vec<RankExperts>,
     d_model: usize,
     d_hidden: usize,
+    /// whether the experts are gated (SwiGLU) — from the store at build
+    gated: bool,
     workers: usize,
     policy: CheckpointPolicy,
     /// routed-row tile of the blocked kernels (`[ep] tile_rows`)
@@ -1294,6 +1437,7 @@ impl ShardedEngine {
             rank_params,
             d_model: store.d_model,
             d_hidden: store.d_hidden,
+            gated: store.gated(),
             workers: workers.max(1),
             policy,
             tile_rows: DEFAULT_TILE_ROWS,
@@ -1448,11 +1592,16 @@ impl ShardedEngine {
         scope_chunks(&mut work, 1, workers, |dst, chunk| {
             let RankBwdWork { bucket, dxs, .. } = &mut chunk[0];
             let rr = &rows_ref.per_rank[dst];
-            let (xsrc, hidden): (RowsSrc, Option<(&[f32], &[f32])>) =
+            let (xsrc, hidden): (RowsSrc, Option<SavedHiddenRef<'_>>) =
                 match &saved[dst] {
-                    SavedActs::All { xs, pre, act } => {
-                        (RowsSrc::Packed(&xs[..]), Some((&pre[..], &act[..])))
-                    }
+                    SavedActs::All { xs, pre, act, gate } => (
+                        RowsSrc::Packed(&xs[..]),
+                        Some(SavedHiddenRef {
+                            pre: &pre[..],
+                            act: &act[..],
+                            gate: (!gate.is_empty()).then_some(&gate[..]),
+                        }),
+                    ),
                     SavedActs::Inputs { xs } => (RowsSrc::Packed(&xs[..]), None),
                     // RecomputeAll: gather straight from the shared batch
                     SavedActs::Nothing => (RowsSrc::Tokens(x), None),
@@ -1566,12 +1715,14 @@ impl ExecutionEngine for ShardedEngine {
                     // combined rows out, plus the policy-saved tensors
                     data_bytes: 4 * d as u64 * (n_local + 2 * resident)
                         + n_local
-                            * policy.saved_bytes_per_slot(d as u64, h as u64, 4),
+                            * policy.saved_bytes_per_slot(d as u64, h as u64, 4,
+                                                          self.gated),
                     index_bytes: plan.rows.per_rank[rank].metadata_bytes() as u64,
                     extra_bytes: staging_bytes(
                         self.tile_rows as u64, d as u64, 4,
                         plan.rows.remote_in_rows(rank),
-                        plan.rows.remote_return_rows(rank)),
+                        plan.rows.remote_return_rows(rank),
+                        if self.gated { h as u64 } else { 0 }),
                 }
             })
             .collect();
@@ -1595,7 +1746,8 @@ impl ExecutionEngine for ShardedEngine {
 
 
     fn zero_grads(&self) -> ExpertGrads {
-        ExpertGrads::zeros(self.topo.num_experts, self.d_model, self.d_hidden)
+        ExpertGrads::zeros_gated(self.topo.num_experts, self.d_model,
+                                 self.d_hidden, self.gated)
     }
 
     fn apply_update(&mut self, delta: &ExpertGrads) -> Result<(), String> {
@@ -1752,7 +1904,9 @@ fn packed_step_impl(pr: &PackedReference, store: &ExpertStore,
     });
 
     // (ii) per-rank unpack, per-row expert compute, return-buffer pack
-    type RankOut = (Vec<f32>, Vec<Vec<f32>>, Option<(Vec<f32>, Vec<f32>)>);
+    let gated = store.gated();
+    type RankOut = (Vec<f32>, Vec<Vec<f32>>,
+                    Option<(Vec<f32>, Vec<f32>, Vec<f32>)>);
     let computed: Vec<RankOut> = par_map(r, workers, |dst| {
         let rr = &rows.per_rank[dst];
         let n_local = rr.local_slots();
@@ -1769,20 +1923,42 @@ fn packed_step_impl(pr: &PackedReference, store: &ExpertStore,
         let mut ys = vec![0.0f32; n_local * d];
         let mut pre = vec![0.0f32; if save_hidden { n_local * h } else { 0 }];
         let mut act = vec![0.0f32; if save_hidden { n_local * h } else { 0 }];
+        let mut gate =
+            vec![0.0f32; if save_hidden && gated { n_local * h } else { 0 }];
         let mut hidden = vec![0.0f32; h];
+        let mut pre_row = vec![0.0f32; if gated { h } else { 0 }];
+        let mut gate_row = vec![0.0f32; if gated { h } else { 0 }];
         for (i, &e) in rr.experts.iter().enumerate() {
             let p = &store.experts[e as usize];
             let lo = rr.expert_offsets[i] as usize;
             let hi = rr.expert_offsets[i + 1] as usize;
             for ls in lo..hi {
-                if save_hidden {
-                    expert_forward_saving(p, d, h, &xs[ls * d..(ls + 1) * d],
-                                          &mut ys[ls * d..(ls + 1) * d],
-                                          &mut pre[ls * h..(ls + 1) * h],
-                                          &mut act[ls * h..(ls + 1) * h]);
-                } else {
-                    expert_forward(p, d, h, &xs[ls * d..(ls + 1) * d],
-                                   &mut ys[ls * d..(ls + 1) * d], &mut hidden);
+                match (save_hidden, gated) {
+                    (true, false) => {
+                        expert_forward_saving(p, d, h, &xs[ls * d..(ls + 1) * d],
+                                              &mut ys[ls * d..(ls + 1) * d],
+                                              &mut pre[ls * h..(ls + 1) * h],
+                                              &mut act[ls * h..(ls + 1) * h]);
+                    }
+                    (true, true) => {
+                        expert_forward_saving_swiglu(
+                            p, d, h, &xs[ls * d..(ls + 1) * d],
+                            &mut ys[ls * d..(ls + 1) * d],
+                            &mut pre[ls * h..(ls + 1) * h],
+                            &mut gate[ls * h..(ls + 1) * h],
+                            &mut act[ls * h..(ls + 1) * h]);
+                    }
+                    (false, false) => {
+                        expert_forward(p, d, h, &xs[ls * d..(ls + 1) * d],
+                                       &mut ys[ls * d..(ls + 1) * d],
+                                       &mut hidden);
+                    }
+                    (false, true) => {
+                        expert_forward_saving_swiglu(
+                            p, d, h, &xs[ls * d..(ls + 1) * d],
+                            &mut ys[ls * d..(ls + 1) * d], &mut pre_row,
+                            &mut gate_row, &mut hidden);
+                    }
                 }
             }
         }
@@ -1798,7 +1974,7 @@ fn packed_step_impl(pr: &PackedReference, store: &ExpertStore,
                 buf
             })
             .collect();
-        (xs, rets, save_hidden.then(|| (pre, act)))
+        (xs, rets, save_hidden.then(|| (pre, act, gate)))
     });
 
     // (iii) combine on each token's home rank through the return buffers
@@ -1841,7 +2017,7 @@ fn packed_step_impl(pr: &PackedReference, store: &ExpertStore,
             })
             .collect()
     });
-    let mut grads = ExpertGrads::zeros(store.experts.len(), d, h);
+    let mut grads = ExpertGrads::zeros_gated(store.experts.len(), d, h, gated);
     let assignment = &pr.assignment;
     let mut work: Vec<RankBwdWork> = (0..r)
         .map(|_| RankBwdWork {
@@ -1869,7 +2045,10 @@ fn packed_step_impl(pr: &PackedReference, store: &ExpertStore,
         let (xs, _, saved_hidden) = &computed[dst];
         let mut pre_row = vec![0.0f32; h];
         let mut act_row = vec![0.0f32; h];
+        let mut gate_row = vec![0.0f32; if gated { h } else { 0 }];
         let mut dz = vec![0.0f32; h];
+        let mut da_row = vec![0.0f32; if gated { h } else { 0 }];
+        let mut dg_row = vec![0.0f32; if gated { h } else { 0 }];
         for (i, (e, g)) in bucket.iter_mut().enumerate() {
             debug_assert_eq!(*e as u32, rr.experts[i]);
             let p = &store.experts[*e];
@@ -1878,17 +2057,32 @@ fn packed_step_impl(pr: &PackedReference, store: &ExpertStore,
             for ls in lo..hi {
                 let xrow = &xs[ls * d..(ls + 1) * d];
                 let dy = &dys[ls * d..(ls + 1) * d];
-                let (pre, act): (&[f32], &[f32]) = match saved_hidden {
-                    Some((pre, act)) => (&pre[ls * h..(ls + 1) * h],
-                                         &act[ls * h..(ls + 1) * h]),
+                let (pre, gate, act): (&[f32], &[f32], &[f32]) = match saved_hidden
+                {
+                    Some((pre, act, gate)) => (
+                        &pre[ls * h..(ls + 1) * h],
+                        if gated { &gate[ls * h..(ls + 1) * h] } else { &[] },
+                        &act[ls * h..(ls + 1) * h],
+                    ),
                     None => {
-                        recompute_hidden(p, d, h, xrow, &mut pre_row,
-                                         &mut act_row);
-                        (&pre_row[..], &act_row[..])
+                        if gated {
+                            recompute_hidden_swiglu(p, d, h, xrow, &mut pre_row,
+                                                    &mut gate_row, &mut act_row);
+                        } else {
+                            recompute_hidden(p, d, h, xrow, &mut pre_row,
+                                             &mut act_row);
+                        }
+                        (&pre_row[..], &gate_row[..], &act_row[..])
                     }
                 };
-                expert_backward_row(p, g, d, h, xrow, dy, pre, act, &mut dz,
-                                    None);
+                if gated {
+                    expert_backward_row_swiglu(p, g, d, h, xrow, dy, pre, gate,
+                                               act, &mut dz, &mut da_row,
+                                               &mut dg_row, None);
+                } else {
+                    expert_backward_row(p, g, d, h, xrow, dy, pre, act, &mut dz,
+                                        None);
+                }
             }
         }
     });
@@ -1982,6 +2176,14 @@ pub fn layer_engine_from_config(cfg: &EpConfig, store: ExpertStore,
     // the trainer cycles grad_accum microbatches every step — LRU's
     // worst-case access pattern — so the plan cache must hold them all
     let cache_cap = PLAN_CACHE_CAP.max(cfg.grad_accum);
+    // tile_rows = 0 means auto; callers that came through
+    // `engine_from_config_with_info` arrive already resolved, direct
+    // callers probe here
+    let tile_rows = if cfg.tile_rows == 0 {
+        probe_tile_rows(cfg)?
+    } else {
+        cfg.tile_rows
+    };
     if cfg.pipeline_chunks > 0 {
         let topo = topology_from_config(cfg, cfg.ranks)?;
         let cost = CostModel::new(cfg.link_gbps, cfg.compute_gflops)?;
@@ -1989,21 +2191,86 @@ pub fn layer_engine_from_config(cfg: &EpConfig, store: ExpertStore,
             topo, &store, cfg.ranks, policy, cfg.pipeline_chunks, cost)?;
         engine.set_plan_cache_cap(cache_cap);
         engine.set_chunk_balance(cfg.chunk_balance);
-        engine.set_tile_rows(cfg.tile_rows);
+        engine.set_tile_rows(tile_rows);
         return Ok(Box::new(engine));
     }
     if cfg.ranks == 1 {
         let mut engine = SingleRankEngine::with_policy(store, policy);
         engine.set_plan_cache_cap(cache_cap);
-        engine.set_tile_rows(cfg.tile_rows);
+        engine.set_tile_rows(tile_rows);
         Ok(Box::new(engine))
     } else {
         let topo = topology_from_config(cfg, cfg.ranks)?;
         let mut engine = ShardedEngine::with_policy(topo, &store, cfg.ranks, policy)?;
         engine.set_plan_cache_cap(cache_cap);
-        engine.set_tile_rows(cfg.tile_rows);
+        engine.set_tile_rows(tile_rows);
         Ok(Box::new(engine))
     }
+}
+
+/// The shape bucket an autotuned tile choice is keyed by — d_model,
+/// d_hidden, routed rows/expert rounded up to a power of two, and the
+/// activation. Shapes in one bucket see the same cache-residency
+/// trade-off, so one probed tile serves all of them.
+pub fn tile_bucket(cfg: &EpConfig) -> String {
+    let rows = (cfg.tokens * cfg.top_k / cfg.num_experts.max(1)).max(1);
+    format!("tile:d{}:h{}:r{}:{}", cfg.d_model, cfg.d_hidden,
+            rows.next_power_of_two(), cfg.activation.name())
+}
+
+/// Probe `AUTOTUNE_TILE_CANDIDATES` on the real first microbatch of the
+/// config's workload: for each candidate, run the blocked forward over
+/// every expert segment (best of two repetitions) and let [`pick_tile`]
+/// take the fastest — ties go to the smallest candidate, so the choice
+/// is a deterministic function of the measurements. Numerics are
+/// untouched: every candidate is bit-identical, the probe only picks
+/// the throughput point.
+pub fn probe_tile_rows(cfg: &EpConfig) -> Result<usize, String> {
+    let (batch, _) = step_batch_from_config(cfg)?;
+    let micro = if cfg.grad_accum > 1 {
+        batch.split(cfg.grad_accum)?.swap_remove(0).1
+    } else {
+        batch
+    };
+    let store = ExpertStore::init_gated(cfg.num_experts, cfg.d_model,
+                                        cfg.d_hidden, cfg.seed,
+                                        cfg.activation.gated());
+    let (d, h) = (cfg.d_model, cfg.d_hidden);
+    let disp = micro.disp();
+    let x = micro.x();
+    let n = disp.slots();
+    let mut ys = vec![0.0f32; n * d];
+    Ok(pick_tile(&AUTOTUNE_TILE_CANDIDATES, |tile| {
+        let mut best = f64::INFINITY;
+        for _rep in 0..2 {
+            let mut scratch = KernelScratch::new(d, h, tile);
+            let t0 = Instant::now();
+            for (e, p) in store.experts.iter().enumerate() {
+                let lo = disp.expert_token_offsets[e] as usize;
+                let hi = disp.expert_token_offsets[e + 1] as usize;
+                if lo == hi {
+                    continue;
+                }
+                forward_segment(p, d, h, lo, hi, x,
+                                &disp.expert_token_indices, 0, &mut ys, None,
+                                None, &mut scratch, None);
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    }))
+}
+
+/// How [`engine_from_config_with_info`] resolved the build: the tile
+/// that will run, whether a probe ran for it, whether a calibration
+/// artifact warmed the cost model, and the shape bucket the tile choice
+/// is keyed by.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BuildInfo {
+    pub tile_rows: usize,
+    pub tile_probed: bool,
+    pub calibration_loaded: bool,
+    pub bucket: String,
 }
 
 /// Build the engine an `[ep]` config describes: the single-layer engine
@@ -2011,15 +2278,63 @@ pub fn layer_engine_from_config(cfg: &EpConfig, store: ExpertStore,
 /// `num_layers = 1` with a fixed policy, or a
 /// `coordinator::stack::MoeStack` when the config stacks layers or asks
 /// the planner for a per-layer policy vector (`checkpoint = "auto"`).
-/// Expert parameters are initialized from `cfg.seed` either way, so any
-/// two engines built from the same config hold bit-identical weights.
+/// Expert parameters are initialized from `cfg.seed` either way (gated
+/// when `activation` is), so any two engines built from the same config
+/// hold bit-identical weights.
 pub fn engine_from_config(cfg: &EpConfig) -> Result<Box<dyn ExecutionEngine>, String> {
+    engine_from_config_with_info(cfg).map(|(engine, _)| engine)
+}
+
+/// [`engine_from_config`] that also reports how the build was resolved:
+/// a calibration artifact (`[ep] calibration_path`), when present and
+/// readable, warms `link_gbps`/`compute_gflops` with its EWMA-folded
+/// effective rates, and a stored tile for this config's
+/// [`tile_bucket`] lets `tile_rows = 0` skip the probe entirely — the
+/// warm-start path the acceptance criteria pin. A missing or corrupt
+/// artifact falls back to the config's cold-start rates (and a live
+/// probe for `tile_rows = 0`) without error.
+pub fn engine_from_config_with_info(
+    cfg: &EpConfig,
+) -> Result<(Box<dyn ExecutionEngine>, BuildInfo), String> {
     cfg.validate()?;
-    if cfg.num_layers > 1 || cfg.checkpoint_auto {
-        return Ok(Box::new(super::stack::stack_from_config(cfg)?));
+    let bucket = tile_bucket(cfg);
+    let mut resolved = cfg.clone();
+    let calib = if cfg.calibration_path.is_empty() {
+        None
+    } else {
+        Calibration::load(&cfg.calibration_path)
+    };
+    let mut info = BuildInfo {
+        tile_rows: cfg.tile_rows,
+        tile_probed: false,
+        calibration_loaded: calib.is_some(),
+        bucket: bucket.clone(),
+    };
+    if let Some(c) = &calib {
+        resolved.link_gbps = c.link_gbps;
+        resolved.compute_gflops = c.compute_gflops;
     }
-    let store = ExpertStore::init(cfg.num_experts, cfg.d_model, cfg.d_hidden, cfg.seed);
-    layer_engine_from_config(cfg, store, cfg.checkpoint)
+    if resolved.tile_rows == 0 {
+        match calib.as_ref().and_then(|c| c.tiles.get(&bucket)) {
+            Some(&tile) => resolved.tile_rows = tile.max(1),
+            None => {
+                resolved.tile_rows = probe_tile_rows(&resolved)?;
+                info.tile_probed = true;
+            }
+        }
+    }
+    info.tile_rows = resolved.tile_rows;
+    let engine: Box<dyn ExecutionEngine> =
+        if resolved.num_layers > 1 || resolved.checkpoint_auto {
+            Box::new(super::stack::stack_from_config(&resolved)?)
+        } else {
+            let store = ExpertStore::init_gated(resolved.num_experts,
+                                                resolved.d_model,
+                                                resolved.d_hidden, resolved.seed,
+                                                resolved.activation.gated());
+            layer_engine_from_config(&resolved, store, resolved.checkpoint)?
+        };
+    Ok((engine, info))
 }
 
 // -- equivalence harness ----------------------------------------------------

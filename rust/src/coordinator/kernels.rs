@@ -41,6 +41,30 @@
 //!   that gets added afterwards: `g += c₀; g += c₁; …` is performed
 //!   element-wise in row order, never `g += (c₀ + c₁)`.
 //!
+//! ## SwiGLU gate chains
+//!
+//! Gated (SwiGLU) experts run both first-layer GEMMs in the **same**
+//! staging-tile pass — one gather, `w1` and `w3` each stream the tile
+//! once — and keep the same per-element discipline against the
+//! `expert_forward_swiglu` / `expert_backward_row_swiglu` row oracles:
+//!
+//! * `pre[t][i]` is the SiLU chain above, unchanged; `gate[t][i]`
+//!   accumulates `w3[i][j]·x[t][j]` for `j` ascending **from zero** (no
+//!   gate bias); the hidden is `z[t][i] = silu(pre[t][i])·gate[t][i]`,
+//!   evaluated exactly in that order;
+//! * the output projection and its `∂W2`/`∂b2`/`dz` chains are the SiLU
+//!   chains verbatim (they see only `z`);
+//! * `da[t][j] = (dz[t][j]·gate[t][j])·σ·(1 + pre·(1 − σ))` and
+//!   `dg[t][j] = dz[t][j]·silu(pre[t][j])`, each with that exact
+//!   expression shape (`σ = 1/(1 + exp(−pre))`, `silu` the shared
+//!   helper);
+//! * `∂b1`/`∂W1` extend from `da` and `∂W3` from `dg`, per element in
+//!   row order, `∂W1`'s row before `∂W3`'s row for each `j`;
+//! * `dx[t][c]` accumulates `da[t][j]·w1[j][c]` for `j` ascending from
+//!   zero and **then** `dg[t][j]·w3[j][c]` for `j` ascending — two
+//!   back-to-back chains through the transposed layouts, never
+//!   interleaved.
+//!
 //! Rust never contracts `a*b + c` into an FMA or reassociates float
 //! ops, so matching the op order per element is sufficient for bitwise
 //! equality.
@@ -54,6 +78,28 @@ use super::params::ExpertParams;
 /// enough that the staging tiles (`(d + h) × T` floats twice over) stay
 /// cache-resident for the bench shapes.
 pub const DEFAULT_TILE_ROWS: usize = 16;
+
+/// Candidate tiles the `tile_rows = 0` (auto) first-step probe sweeps,
+/// ascending. Ascending order + smallest-wins tie-break keep the pick a
+/// pure function of the measured times.
+pub const AUTOTUNE_TILE_CANDIDATES: [usize; 5] = [4, 8, 16, 32, 64];
+
+/// Pick the fastest tile from `candidates` given per-candidate measured
+/// seconds. Candidates are measured in the given (ascending) order and
+/// ties go to the earliest candidate, so the choice is a deterministic
+/// function of the measurements — the autotune-determinism pin.
+pub fn pick_tile(candidates: &[usize], mut measure: impl FnMut(usize) -> f64) -> usize {
+    let mut best = candidates.first().copied().unwrap_or(DEFAULT_TILE_ROWS);
+    let mut best_t = f64::INFINITY;
+    for &c in candidates {
+        let t = measure(c);
+        if t < best_t {
+            best_t = t;
+            best = c;
+        }
+    }
+    best
+}
 
 #[inline]
 pub(crate) fn silu(x: f32) -> f32 {
@@ -98,9 +144,16 @@ pub(crate) struct KernelScratch {
     dzt: Vec<f32>,
     /// (h × T) transposed ∂pre
     dat: Vec<f32>,
+    /// (h × T) transposed SwiGLU gate values (`w3·x`) — the "one extra
+    /// h-row per staging tile" of gated residency
+    gt: Vec<f32>,
+    /// (h × T) transposed ∂gate
+    dgt: Vec<f32>,
     /// transposed w1 (d × h), rebuilt once per expert segment when the
     /// ∂x pass needs it
     w1t: Vec<f32>,
+    /// transposed w3 (d × h), rebuilt alongside `w1t` for gated ∂x
+    w3t: Vec<f32>,
 }
 
 impl KernelScratch {
@@ -116,7 +169,10 @@ impl KernelScratch {
             act: vec![0.0; h * t],
             dzt: vec![0.0; h * t],
             dat: vec![0.0; h * t],
+            gt: vec![0.0; h * t],
+            dgt: vec![0.0; h * t],
             w1t: Vec::new(),
+            w3t: Vec::new(),
         }
     }
 }
@@ -134,6 +190,24 @@ pub(crate) fn transpose_w1(w1: &[f32], d: usize, h: usize, out: &mut Vec<f32>) {
             out[c * h + j] = row[c];
         }
     }
+}
+
+/// Mutable saved-hidden buffers the forward scatters into (the
+/// `SaveAll` residuals): `pre`/`act` always, `gate` only for gated
+/// (SwiGLU) experts.
+pub(crate) struct SavedHiddenMut<'a> {
+    pub(crate) pre: &'a mut [f32],
+    pub(crate) act: &'a mut [f32],
+    pub(crate) gate: Option<&'a mut [f32]>,
+}
+
+/// Saved-hidden buffers the backward reads (mirror of
+/// [`SavedHiddenMut`]).
+#[derive(Clone, Copy)]
+pub(crate) struct SavedHiddenRef<'a> {
+    pub(crate) pre: &'a [f32],
+    pub(crate) act: &'a [f32],
+    pub(crate) gate: Option<&'a [f32]>,
 }
 
 /// Where a tile's routed-input rows come from.
@@ -190,15 +264,25 @@ fn gather_dy_tile(d_out: &[f32], gates: &[f32], d: usize, tile: usize, lo: usize
 }
 
 /// Gather one tile of saved hidden rows (packed per local slot) into the
-/// transposed tiles — a pure copy, values untouched.
+/// transposed tiles — a pure copy, values untouched. Gated experts carry
+/// a third saved buffer (the `w3·x` gate values).
+#[allow(clippy::too_many_arguments)]
 fn gather_hidden_tile(pre_s: &[f32], act_s: &[f32], h: usize, tile: usize,
                       lo: usize, rows: usize, pre_t: &mut [f32],
-                      act_t: &mut [f32]) {
+                      act_t: &mut [f32], gate: Option<(&[f32], &mut [f32])>) {
     for r in 0..rows {
         let ls = lo + r;
         for i in 0..h {
             pre_t[i * tile + r] = pre_s[ls * h + i];
             act_t[i * tile + r] = act_s[ls * h + i];
+        }
+    }
+    if let Some((gate_s, gate_t)) = gate {
+        for r in 0..rows {
+            let ls = lo + r;
+            for i in 0..h {
+                gate_t[i * tile + r] = gate_s[ls * h + i];
+            }
         }
     }
 }
@@ -237,6 +321,43 @@ fn hidden_tile(p: &ExpertParams, d: usize, h: usize, tile: usize, rows: usize,
         }
         for t in 0..rows {
             act_t[i * tile + t] = silu(pre_t[i * tile + t]);
+        }
+    }
+}
+
+/// Gated (SwiGLU) hidden pass over one tile: both first-layer GEMMs run
+/// in the same sweep — each `xt` slice `j` is read once and feeds
+/// `pre[t][i] += w1[i][j]·x` and `gate[t][i] += w3[i][j]·x` (`pre` from
+/// `b1[i]`, `gate` from zero, `j` ascending), then
+/// `z[t][i] = silu(pre)·gate`.
+fn hidden_tile_swiglu(p: &ExpertParams, d: usize, h: usize, tile: usize,
+                      rows: usize, xt: &[f32], pre_t: &mut [f32],
+                      act_t: &mut [f32], gate_t: &mut [f32]) {
+    for i in 0..h {
+        let wrow = &p.w1[i * d..(i + 1) * d];
+        let vrow = &p.w3[i * d..(i + 1) * d];
+        let b = p.b1[i];
+        for v in pre_t[i * tile..i * tile + rows].iter_mut() {
+            *v = b;
+        }
+        for v in gate_t[i * tile..i * tile + rows].iter_mut() {
+            *v = 0.0;
+        }
+        for j in 0..d {
+            let w = wrow[j];
+            let wg = vrow[j];
+            let xr = &xt[j * tile..j * tile + rows];
+            let prow = &mut pre_t[i * tile..i * tile + rows];
+            for t in 0..rows {
+                prow[t] += w * xr[t];
+            }
+            let grow = &mut gate_t[i * tile..i * tile + rows];
+            for t in 0..rows {
+                grow[t] += wg * xr[t];
+            }
+        }
+        for t in 0..rows {
+            act_t[i * tile + t] = silu(pre_t[i * tile + t]) * gate_t[i * tile + t];
         }
     }
 }
@@ -352,6 +473,120 @@ fn backward_tile(p: &ExpertParams, g: &mut ExpertParams, d: usize, h: usize,
     }
 }
 
+/// Gated (SwiGLU) backward over one tile. The `dz`/`∂W2`/`∂b2` chains
+/// are [`backward_tile`]'s verbatim (they see only `z`); the gate
+/// product then splits `dz` into `da` (through SiLU') and `dg`
+/// (`dz·silu(pre)`), extends `∂b1`/`∂W1` from `da` and `∂W3` from `dg`
+/// per element in row order, and runs the two ∂x chains back-to-back
+/// (`w1ᵀ` then `w3ᵀ`). See the module docs for the exact op order.
+#[allow(clippy::too_many_arguments)]
+fn backward_tile_swiglu(p: &ExpertParams, g: &mut ExpertParams, d: usize,
+                        h: usize, tile: usize, rows: usize, xt: &[f32],
+                        dyt: &[f32], pre_t: &[f32], act_t: &[f32],
+                        gate_t: &[f32], dzt: &mut [f32], dat: &mut [f32],
+                        dgt: &mut [f32], w1t: Option<&[f32]>,
+                        w3t: Option<&[f32]>, dxt: Option<&mut [f32]>) {
+    // dz + ∂W2/∂b2 — identical to the ungated tile (act_t holds z)
+    for j in 0..h {
+        for v in dzt[j * tile..j * tile + rows].iter_mut() {
+            *v = 0.0;
+        }
+    }
+    for i in 0..d {
+        let dyr = &dyt[i * tile..i * tile + rows];
+        let mut acc = g.b2[i];
+        for t in 0..rows {
+            acc += dyr[t];
+        }
+        g.b2[i] = acc;
+        let wrow = &p.w2[i * h..(i + 1) * h];
+        let grow = &mut g.w2[i * h..(i + 1) * h];
+        for j in 0..h {
+            let ar = &act_t[j * tile..j * tile + rows];
+            let mut acc = grow[j];
+            for t in 0..rows {
+                acc += dyr[t] * ar[t];
+            }
+            grow[j] = acc;
+            let w = wrow[j];
+            let dzr = &mut dzt[j * tile..j * tile + rows];
+            for t in 0..rows {
+                dzr[t] += dyr[t] * w;
+            }
+        }
+    }
+    // split through the gate product: da via SiLU', dg via silu(pre);
+    // then ∂b1/∂W1 from da and ∂W3 from dg, per element in row order
+    for j in 0..h {
+        let dzr = &dzt[j * tile..j * tile + rows];
+        let prer = &pre_t[j * tile..j * tile + rows];
+        let gr = &gate_t[j * tile..j * tile + rows];
+        {
+            let dar = &mut dat[j * tile..j * tile + rows];
+            let dgr = &mut dgt[j * tile..j * tile + rows];
+            for t in 0..rows {
+                let sig = 1.0 / (1.0 + (-prer[t]).exp());
+                dar[t] = (dzr[t] * gr[t]) * sig * (1.0 + prer[t] * (1.0 - sig));
+                dgr[t] = dzr[t] * silu(prer[t]);
+            }
+        }
+        let dar = &dat[j * tile..j * tile + rows];
+        let dgr = &dgt[j * tile..j * tile + rows];
+        let mut acc = g.b1[j];
+        for t in 0..rows {
+            acc += dar[t];
+        }
+        g.b1[j] = acc;
+        let grow = &mut g.w1[j * d..(j + 1) * d];
+        for c in 0..d {
+            let xr = &xt[c * tile..c * tile + rows];
+            let mut acc = grow[c];
+            for t in 0..rows {
+                acc += dar[t] * xr[t];
+            }
+            grow[c] = acc;
+        }
+        let grow3 = &mut g.w3[j * d..(j + 1) * d];
+        for c in 0..d {
+            let xr = &xt[c * tile..c * tile + rows];
+            let mut acc = grow3[c];
+            for t in 0..rows {
+                acc += dgr[t] * xr[t];
+            }
+            grow3[c] = acc;
+        }
+    }
+    // ∂x: the w1ᵀ·da chain first, then the w3ᵀ·dg chain — two full
+    // j-ascending sweeps, never interleaved
+    if let Some(dxt) = dxt {
+        let w1t = w1t.expect("dx pass needs the transposed w1");
+        let w3t = w3t.expect("gated dx pass needs the transposed w3");
+        for c in 0..d {
+            let wcol = &w1t[c * h..(c + 1) * h];
+            for v in dxt[c * tile..c * tile + rows].iter_mut() {
+                *v = 0.0;
+            }
+            for j in 0..h {
+                let w = wcol[j];
+                let dar = &dat[j * tile..j * tile + rows];
+                let dxr = &mut dxt[c * tile..c * tile + rows];
+                for t in 0..rows {
+                    dxr[t] += dar[t] * w;
+                }
+            }
+            let wcol3 = &w3t[c * h..(c + 1) * h];
+            for j in 0..h {
+                let w = wcol3[j];
+                let dgr = &dgt[j * tile..j * tile + rows];
+                let dxr = &mut dxt[c * tile..c * tile + rows];
+                for t in 0..rows {
+                    dxr[t] += dgr[t] * w;
+                }
+            }
+        }
+    }
+}
+
 /// Forward one expert's routed-row segment `[lo, hi)` in tiles: gather
 /// rows straight from the caller's activations (`tokens` + `token_base`
 /// index into `x`), run the blocked FFN, scatter outputs into `ys`, and
@@ -365,10 +600,11 @@ pub(crate) fn forward_segment(p: &ExpertParams, d: usize, h: usize, lo: usize,
                               hi: usize, x: &[f32], tokens: &[u32],
                               token_base: usize, ys: &mut [f32],
                               mut saved_xs: Option<&mut [f32]>,
-                              mut saved_hidden: Option<(&mut [f32], &mut [f32])>,
+                              mut saved_hidden: Option<SavedHiddenMut<'_>>,
                               scratch: &mut KernelScratch,
                               mut timers: Option<&mut KernelTimers>) {
     let tile = scratch.tile;
+    let gated = p.gated();
     let src = RowsSrc::Tokens(x);
     let mut t0 = lo;
     while t0 < hi {
@@ -382,13 +618,22 @@ pub(crate) fn forward_segment(p: &ExpertParams, d: usize, h: usize, lo: usize,
         } else {
             None
         };
-        hidden_tile(p, d, h, tile, rows, &scratch.xt, &mut scratch.pre,
-                    &mut scratch.act);
+        if gated {
+            hidden_tile_swiglu(p, d, h, tile, rows, &scratch.xt,
+                               &mut scratch.pre, &mut scratch.act,
+                               &mut scratch.gt);
+        } else {
+            hidden_tile(p, d, h, tile, rows, &scratch.xt, &mut scratch.pre,
+                        &mut scratch.act);
+        }
         project_tile(p, d, h, tile, rows, &scratch.act, &mut scratch.yt);
         scatter_tile(&scratch.yt, d, tile, t0, rows, ys);
-        if let Some((pre_s, act_s)) = saved_hidden.as_mut() {
-            scatter_tile(&scratch.pre, h, tile, t0, rows, pre_s);
-            scatter_tile(&scratch.act, h, tile, t0, rows, act_s);
+        if let Some(saved) = saved_hidden.as_mut() {
+            scatter_tile(&scratch.pre, h, tile, t0, rows, saved.pre);
+            scatter_tile(&scratch.act, h, tile, t0, rows, saved.act);
+            if let Some(gate_s) = saved.gate.as_deref_mut() {
+                scatter_tile(&scratch.gt, h, tile, t0, rows, gate_s);
+            }
         }
         if let (Some(tm), Some(c0)) = (timers.as_deref_mut(), c0) {
             tm.compute_s += c0.elapsed().as_secs_f64();
@@ -411,16 +656,22 @@ pub(crate) fn backward_segment(p: &ExpertParams, g: &mut ExpertParams, d: usize,
                                tokens: &[u32], token_base: usize,
                                gate_slots: &[u32], gate_base: usize,
                                d_out: &[f32], gates: &[f32],
-                               saved_hidden: Option<(&[f32], &[f32])>,
+                               saved_hidden: Option<SavedHiddenRef<'_>>,
                                mut dxs: Option<&mut [f32]>,
                                scratch: &mut KernelScratch,
                                mut timers: Option<&mut KernelTimers>) {
     let tile = scratch.tile;
+    let gated = p.gated();
     let want_dx = dxs.is_some();
     if want_dx {
         let mut w1t = std::mem::take(&mut scratch.w1t);
         transpose_w1(&p.w1, d, h, &mut w1t);
         scratch.w1t = w1t;
+        if gated {
+            let mut w3t = std::mem::take(&mut scratch.w3t);
+            transpose_w1(&p.w3, d, h, &mut w3t);
+            scratch.w3t = w3t;
+        }
     }
     let mut t0 = lo;
     while t0 < hi {
@@ -437,20 +688,48 @@ pub(crate) fn backward_segment(p: &ExpertParams, g: &mut ExpertParams, d: usize,
             None
         };
         match saved_hidden {
-            Some((pre_s, act_s)) => {
-                gather_hidden_tile(pre_s, act_s, h, tile, t0, rows,
-                                   &mut scratch.pre, &mut scratch.act);
+            Some(saved) => {
+                gather_hidden_tile(
+                    saved.pre, saved.act, h, tile, t0, rows, &mut scratch.pre,
+                    &mut scratch.act,
+                    saved.gate.map(|gs| (gs, &mut scratch.gt[..])),
+                );
+                // a saving policy on a gated expert must have saved the
+                // gate buffer — recompute it if an ungated-era saver
+                // dropped it (defensive; the engines always save it)
+                if gated && saved.gate.is_none() {
+                    hidden_tile_swiglu(p, d, h, tile, rows, &scratch.xt,
+                                       &mut scratch.pre, &mut scratch.act,
+                                       &mut scratch.gt);
+                }
             }
             None => {
-                hidden_tile(p, d, h, tile, rows, &scratch.xt, &mut scratch.pre,
-                            &mut scratch.act);
+                if gated {
+                    hidden_tile_swiglu(p, d, h, tile, rows, &scratch.xt,
+                                       &mut scratch.pre, &mut scratch.act,
+                                       &mut scratch.gt);
+                } else {
+                    hidden_tile(p, d, h, tile, rows, &scratch.xt,
+                                &mut scratch.pre, &mut scratch.act);
+                }
             }
         }
-        backward_tile(p, g, d, h, tile, rows, &scratch.xt, &scratch.dyt,
-                      &scratch.pre, &scratch.act, &mut scratch.dzt,
-                      &mut scratch.dat,
-                      if want_dx { Some(&scratch.w1t) } else { None },
-                      if want_dx { Some(&mut scratch.dxt) } else { None });
+        if gated {
+            backward_tile_swiglu(
+                p, g, d, h, tile, rows, &scratch.xt, &scratch.dyt,
+                &scratch.pre, &scratch.act, &scratch.gt, &mut scratch.dzt,
+                &mut scratch.dat, &mut scratch.dgt,
+                if want_dx { Some(&scratch.w1t) } else { None },
+                if want_dx { Some(&scratch.w3t) } else { None },
+                if want_dx { Some(&mut scratch.dxt) } else { None },
+            );
+        } else {
+            backward_tile(p, g, d, h, tile, rows, &scratch.xt, &scratch.dyt,
+                          &scratch.pre, &scratch.act, &mut scratch.dzt,
+                          &mut scratch.dat,
+                          if want_dx { Some(&scratch.w1t) } else { None },
+                          if want_dx { Some(&mut scratch.dxt) } else { None });
+        }
         if let Some(dxs) = dxs.as_deref_mut() {
             scatter_tile(&scratch.dxt, d, tile, t0, rows, dxs);
         }
@@ -508,7 +787,12 @@ mod tests {
             let mut scratch = KernelScratch::new(d, h, tile);
             let mut timers = KernelTimers::default();
             forward_segment(&p, d, h, 0, n, &x, &tokens, 0, &mut ys,
-                            Some(&mut xs[..]), Some((&mut pre[..], &mut act[..])),
+                            Some(&mut xs[..]),
+                            Some(SavedHiddenMut {
+                                pre: &mut pre[..],
+                                act: &mut act[..],
+                                gate: None,
+                            }),
                             &mut scratch, Some(&mut timers));
             assert_eq!(ys, ys_ref, "tile {tile}: outputs diverged");
             assert_eq!(pre, pre_ref, "tile {tile}: pre diverged");
@@ -579,7 +863,15 @@ mod tests {
                 backward_segment(
                     &p, &mut g, d, h, 0, n, &RowsSrc::Tokens(&x[..]), &tokens, 0,
                     &gate_slots, 0, &d_out, &gates,
-                    if saved { Some((&pre_s[..], &act_s[..])) } else { None },
+                    if saved {
+                        Some(SavedHiddenRef {
+                            pre: &pre_s[..],
+                            act: &act_s[..],
+                            gate: None,
+                        })
+                    } else {
+                        None
+                    },
                     Some(&mut dxs[..]), &mut scratch, Some(&mut timers),
                 );
                 assert_eq!(g, g_ref, "tile {tile} saved {saved}: grads diverged");
@@ -603,6 +895,140 @@ mod tests {
                          &mut scratch, Some(&mut timers));
         // no dx requested: parameter grads still bit-identical
         assert_eq!(g, g_ref, "packed source / no-dx grads diverged");
+    }
+
+    /// Blocked SwiGLU forward vs the row oracle, bit-for-bit for every
+    /// tile size, including all three saved hidden buffers.
+    #[test]
+    fn blocked_swiglu_forward_matches_row_kernel_for_any_tile() {
+        use crate::coordinator::engine::expert_forward_saving_swiglu;
+        let (d, h, n) = (7usize, 11usize, 29usize);
+        let p = ExpertParams::init_gated(d, h, 3, true);
+        let mut rng = Rng::new(5);
+        let x = rng.normal_vec(n * d, 1.0);
+        let tokens: Vec<u32> = (0..n as u32).rev().collect();
+        let mut ys_ref = vec![0.0f32; n * d];
+        let mut pre_ref = vec![0.0f32; n * h];
+        let mut gate_ref = vec![0.0f32; n * h];
+        let mut act_ref = vec![0.0f32; n * h];
+        for ls in 0..n {
+            let tok = tokens[ls] as usize;
+            expert_forward_saving_swiglu(&p, d, h, &x[tok * d..(tok + 1) * d],
+                                         &mut ys_ref[ls * d..(ls + 1) * d],
+                                         &mut pre_ref[ls * h..(ls + 1) * h],
+                                         &mut gate_ref[ls * h..(ls + 1) * h],
+                                         &mut act_ref[ls * h..(ls + 1) * h]);
+        }
+        for tile in [1usize, 2, 3, 5, 8, 16, 32, 64] {
+            let mut ys = vec![0.0f32; n * d];
+            let mut pre = vec![0.0f32; n * h];
+            let mut gate = vec![0.0f32; n * h];
+            let mut act = vec![0.0f32; n * h];
+            let mut scratch = KernelScratch::new(d, h, tile);
+            forward_segment(&p, d, h, 0, n, &x, &tokens, 0, &mut ys, None,
+                            Some(SavedHiddenMut {
+                                pre: &mut pre[..],
+                                act: &mut act[..],
+                                gate: Some(&mut gate[..]),
+                            }),
+                            &mut scratch, None);
+            assert_eq!(ys, ys_ref, "tile {tile}: swiglu outputs diverged");
+            assert_eq!(pre, pre_ref, "tile {tile}: swiglu pre diverged");
+            assert_eq!(gate, gate_ref, "tile {tile}: swiglu gate diverged");
+            assert_eq!(act, act_ref, "tile {tile}: swiglu act diverged");
+        }
+    }
+
+    /// Blocked SwiGLU backward vs the row oracle: grads (incl. ∂W3) and
+    /// ∂x bit-identical for every tile size, with saved and recomputed
+    /// hidden rows, continuing a non-zero accumulator.
+    #[test]
+    fn blocked_swiglu_backward_matches_row_kernel_for_any_tile() {
+        use crate::coordinator::engine::{expert_backward_row_swiglu,
+                                         expert_forward_saving_swiglu};
+        let (d, h, n) = (6usize, 9usize, 23usize);
+        let p = ExpertParams::init_gated(d, h, 7, true);
+        let mut rng = Rng::new(9);
+        let x = rng.normal_vec(n * d, 1.0);
+        let d_out = rng.normal_vec(n * d, 1.0);
+        let gates: Vec<f32> = (0..n).map(|i| 0.1 + (i as f32) * 0.03).collect();
+        let tokens: Vec<u32> = (0..n as u32).map(|t| (t * 7) % n as u32).collect();
+        let gate_slots: Vec<u32> = (0..n as u32).collect();
+        let mut pre_s = vec![0.0f32; n * h];
+        let mut gate_s = vec![0.0f32; n * h];
+        let mut act_s = vec![0.0f32; n * h];
+        let mut ys = vec![0.0f32; n * d];
+        for ls in 0..n {
+            let tok = tokens[ls] as usize;
+            expert_forward_saving_swiglu(&p, d, h, &x[tok * d..(tok + 1) * d],
+                                         &mut ys[ls * d..(ls + 1) * d],
+                                         &mut pre_s[ls * h..(ls + 1) * h],
+                                         &mut gate_s[ls * h..(ls + 1) * h],
+                                         &mut act_s[ls * h..(ls + 1) * h]);
+        }
+        let mut g_ref = ExpertParams::zeros_gated(d, h, true);
+        for v in g_ref.w1.iter_mut() {
+            *v = 0.25;
+        }
+        let mut dxs_ref = vec![0.0f32; n * d];
+        let mut dz = vec![0.0f32; h];
+        let mut da = vec![0.0f32; h];
+        let mut dg = vec![0.0f32; h];
+        let mut dy = vec![0.0f32; d];
+        for ls in 0..n {
+            let tok = tokens[ls] as usize;
+            let gate = gates[gate_slots[ls] as usize];
+            for c in 0..d {
+                dy[c] = gate * d_out[tok * d + c];
+            }
+            expert_backward_row_swiglu(&p, &mut g_ref, d, h,
+                                       &x[tok * d..(tok + 1) * d], &dy,
+                                       &pre_s[ls * h..(ls + 1) * h],
+                                       &gate_s[ls * h..(ls + 1) * h],
+                                       &act_s[ls * h..(ls + 1) * h], &mut dz,
+                                       &mut da, &mut dg,
+                                       Some(&mut dxs_ref[ls * d..(ls + 1) * d]));
+        }
+        for tile in [1usize, 2, 3, 5, 8, 16, 32, 64] {
+            for saved in [true, false] {
+                let mut g = ExpertParams::zeros_gated(d, h, true);
+                for v in g.w1.iter_mut() {
+                    *v = 0.25;
+                }
+                let mut dxs = vec![0.0f32; n * d];
+                let mut scratch = KernelScratch::new(d, h, tile);
+                backward_segment(
+                    &p, &mut g, d, h, 0, n, &RowsSrc::Tokens(&x[..]), &tokens, 0,
+                    &gate_slots, 0, &d_out, &gates,
+                    if saved {
+                        Some(SavedHiddenRef {
+                            pre: &pre_s[..],
+                            act: &act_s[..],
+                            gate: Some(&gate_s[..]),
+                        })
+                    } else {
+                        None
+                    },
+                    Some(&mut dxs[..]), &mut scratch, None,
+                );
+                assert_eq!(g, g_ref, "tile {tile} saved {saved}: swiglu grads diverged");
+                assert_eq!(dxs, dxs_ref, "tile {tile} saved {saved}: swiglu dx diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn pick_tile_is_deterministic_and_breaks_ties_low() {
+        // pure function of the measurements; ties go to the earliest
+        let times = |t: usize| match t {
+            8 => 1.0,
+            16 => 1.0,
+            32 => 2.0,
+            _ => 3.0,
+        };
+        assert_eq!(pick_tile(&[4, 8, 16, 32, 64], times), 8);
+        assert_eq!(pick_tile(&AUTOTUNE_TILE_CANDIDATES, |_| 1.0), 4);
+        assert_eq!(pick_tile(&[], |_| 0.0), DEFAULT_TILE_ROWS);
     }
 
     #[test]

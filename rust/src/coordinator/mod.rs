@@ -26,6 +26,7 @@
 //! [`StepHandle`]: engine::StepHandle
 //! [`ExpertGrads`]: params::ExpertGrads
 
+pub mod calibrate;
 pub mod engine;
 pub mod expert_parallel;
 pub mod kernels;
@@ -35,10 +36,12 @@ pub mod pipeline;
 pub mod stack;
 pub mod trainer;
 
-pub use engine::{check_equivalence, engine_from_config, layer_engine_from_config,
+pub use calibrate::Calibration;
+pub use engine::{check_equivalence, engine_from_config,
+                 engine_from_config_with_info, layer_engine_from_config,
                  packed_reference_step, split_bounds_weighted,
-                 step_batch_from_config, topology_from_config,
-                 workload_from_config, ExecutionEngine, LayerRouting,
+                 step_batch_from_config, tile_bucket, topology_from_config,
+                 workload_from_config, BuildInfo, ExecutionEngine, LayerRouting,
                  PackedReference, ShardedEngine, SingleRankEngine, StepBatch,
                  StepHandle, Traffic};
 pub use expert_parallel::{AllToAllPlan, EpTopology};

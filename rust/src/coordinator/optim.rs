@@ -51,7 +51,7 @@ impl Optimizer for Sgd {
         }
         let mut delta = grads.clone();
         for g in &mut delta.experts {
-            for s in [&mut g.w1, &mut g.b1, &mut g.w2, &mut g.b2] {
+            for s in [&mut g.w1, &mut g.b1, &mut g.w2, &mut g.b2, &mut g.w3] {
                 for v in s.iter_mut() {
                     *v = -(lr * *v);
                 }
@@ -103,15 +103,21 @@ impl Optimizer for Adam {
             return Err(format!("adam: lr must be positive, got {lr}"));
         }
         let (e, d, h) = (grads.num_experts(), grads.d_model, grads.d_hidden);
-        let m = self
-            .m
-            .get_or_insert_with(|| ExpertGrads::zeros(e, d, h));
-        if (m.num_experts(), m.d_model, m.d_hidden) != (e, d, h) {
+        // moments are shaped like the incoming grads (zeros-like), so a
+        // gated (SwiGLU) run gets w3 moments without special-casing
+        let zeros_like = || {
+            let mut z = grads.clone();
+            z.clear();
+            z
+        };
+        let m = self.m.get_or_insert_with(zeros_like);
+        if (m.num_experts(), m.d_model, m.d_hidden) != (e, d, h)
+            || m.experts.first().map(|p| p.gated())
+                != grads.experts.first().map(|p| p.gated())
+        {
             return Err("adam: grads shape changed across steps".into());
         }
-        let v = self
-            .v
-            .get_or_insert_with(|| ExpertGrads::zeros(e, d, h));
+        let v = self.v.get_or_insert_with(zeros_like);
         self.t += 1;
         let bc1 = 1.0 - self.beta1.powi(self.t as i32);
         let bc2 = 1.0 - self.beta2.powi(self.t as i32);
@@ -126,6 +132,7 @@ impl Optimizer for Adam {
                 (&ge.b1, &mut me.b1, &mut ve.b1, &mut de.b1),
                 (&ge.w2, &mut me.w2, &mut ve.w2, &mut de.w2),
                 (&ge.b2, &mut me.b2, &mut ve.b2, &mut de.b2),
+                (&ge.w3, &mut me.w3, &mut ve.w3, &mut de.w3),
             ] {
                 for i in 0..gs.len() {
                     let g = gs[i];
@@ -282,6 +289,23 @@ mod tests {
         let mut opt = Adam::default();
         opt.step(&ExpertGrads::zeros(2, 2, 2), 0.1).unwrap();
         assert!(opt.step(&ExpertGrads::zeros(4, 2, 2), 0.1).is_err());
+        // gatedness is part of the shape: moments drawn for ungated
+        // grads cannot absorb a w3 stream
+        assert!(opt
+            .step(&ExpertGrads::zeros_gated(2, 2, 2, true), 0.1)
+            .is_err());
+    }
+
+    #[test]
+    fn gated_grads_update_w3() {
+        let mut g = ExpertGrads::zeros_gated(1, 2, 1, true);
+        g.experts[0].w3.copy_from_slice(&[2.0, -0.5]);
+        let d = Sgd.step(&g, 0.1).unwrap();
+        assert_eq!(d.experts[0].w3, vec![-0.2, 0.05]);
+        let mut adam = Adam::default();
+        let d = adam.step(&g, 0.01).unwrap();
+        assert!((d.experts[0].w3[0] + 0.01).abs() < 1e-4);
+        assert!((d.experts[0].w3[1] - 0.01).abs() < 1e-4);
     }
 
     #[test]

@@ -157,7 +157,10 @@ impl ParamStore {
 
 // -- expert-sharded parameters (EP engine) ----------------------------------
 
-/// One expert's FFN: y = W2·silu(W1·x + b1) + b2, all f32 row-major.
+/// One expert's FFN, f32 row-major. Ungated (SiLU-MLP):
+/// y = W2·silu(W1·x + b1) + b2, `w3` empty. Gated (SwiGLU): an extra
+/// (h, d) gate matrix `w3` (no gate bias) turns the hidden into
+/// silu(W1·x + b1) ⊙ (W3·x).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExpertParams {
     /// (h, d)
@@ -168,34 +171,52 @@ pub struct ExpertParams {
     pub w2: Vec<f32>,
     /// (d)
     pub b2: Vec<f32>,
+    /// (h, d) SwiGLU gate projection; empty when the expert is ungated
+    pub w3: Vec<f32>,
 }
 
 impl ExpertParams {
     /// N(0, 1/d) / N(0, 1/h) fan-in init, biases zero.
     pub fn init(d_model: usize, d_hidden: usize, seed: u64) -> ExpertParams {
+        ExpertParams::init_gated(d_model, d_hidden, seed, false)
+    }
+
+    /// Like [`init`](ExpertParams::init), optionally drawing the SwiGLU
+    /// gate matrix. `w3` is drawn AFTER `w2` from the same stream, so an
+    /// ungated expert's w1/w2 bits are unchanged by this extension.
+    pub fn init_gated(d_model: usize, d_hidden: usize, seed: u64, gated: bool) -> ExpertParams {
         let mut rng = Rng::new(seed);
         let s1 = (1.0 / d_model as f64).sqrt() as f32;
         let s2 = (1.0 / d_hidden as f64).sqrt() as f32;
-        ExpertParams {
-            w1: rng.normal_vec(d_hidden * d_model, s1),
-            b1: vec![0.0; d_hidden],
-            w2: rng.normal_vec(d_model * d_hidden, s2),
-            b2: vec![0.0; d_model],
-        }
+        let w1 = rng.normal_vec(d_hidden * d_model, s1);
+        let w2 = rng.normal_vec(d_model * d_hidden, s2);
+        let w3 = if gated { rng.normal_vec(d_hidden * d_model, s1) } else { Vec::new() };
+        ExpertParams { w1, b1: vec![0.0; d_hidden], w2, b2: vec![0.0; d_model], w3 }
     }
 
     /// All-zero parameters of the same shape (gradient accumulators).
     pub fn zeros(d_model: usize, d_hidden: usize) -> ExpertParams {
+        ExpertParams::zeros_gated(d_model, d_hidden, false)
+    }
+
+    /// Zeros with an optional gate accumulator.
+    pub fn zeros_gated(d_model: usize, d_hidden: usize, gated: bool) -> ExpertParams {
         ExpertParams {
             w1: vec![0.0; d_hidden * d_model],
             b1: vec![0.0; d_hidden],
             w2: vec![0.0; d_model * d_hidden],
             b2: vec![0.0; d_model],
+            w3: if gated { vec![0.0; d_hidden * d_model] } else { Vec::new() },
         }
     }
 
+    /// Whether this expert carries the SwiGLU gate projection.
+    pub fn gated(&self) -> bool {
+        !self.w3.is_empty()
+    }
+
     pub fn num_params(&self) -> usize {
-        self.w1.len() + self.b1.len() + self.w2.len() + self.b2.len()
+        self.w1.len() + self.b1.len() + self.w2.len() + self.b2.len() + self.w3.len()
     }
 }
 
@@ -212,13 +233,30 @@ impl ExpertStore {
     /// initializing only its shard gets bit-identical weights to the
     /// single-rank store — placement-invariant by construction.
     pub fn init(num_experts: usize, d_model: usize, d_hidden: usize, seed: u64) -> ExpertStore {
+        ExpertStore::init_gated(num_experts, d_model, d_hidden, seed, false)
+    }
+
+    /// Like [`init`](ExpertStore::init), with every expert optionally
+    /// carrying the SwiGLU gate matrix (same per-expert seed stream).
+    pub fn init_gated(
+        num_experts: usize,
+        d_model: usize,
+        d_hidden: usize,
+        seed: u64,
+        gated: bool,
+    ) -> ExpertStore {
         let experts = (0..num_experts)
             .map(|e| {
                 let es = seed ^ (e as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
-                ExpertParams::init(d_model, d_hidden, es)
+                ExpertParams::init_gated(d_model, d_hidden, es, gated)
             })
             .collect();
         ExpertStore { d_model, d_hidden, experts }
+    }
+
+    /// Whether the experts carry SwiGLU gate projections.
+    pub fn gated(&self) -> bool {
+        self.experts.first().map(ExpertParams::gated).unwrap_or(false)
     }
 
     pub fn num_params(&self) -> usize {
@@ -310,11 +348,22 @@ pub struct ExpertGrads {
 impl ExpertGrads {
     /// All-zero accumulators for `num_experts` experts.
     pub fn zeros(num_experts: usize, d_model: usize, d_hidden: usize) -> ExpertGrads {
+        ExpertGrads::zeros_gated(num_experts, d_model, d_hidden, false)
+    }
+
+    /// Zeros with optional SwiGLU gate accumulators — the shape must
+    /// match the params being differentiated.
+    pub fn zeros_gated(
+        num_experts: usize,
+        d_model: usize,
+        d_hidden: usize,
+        gated: bool,
+    ) -> ExpertGrads {
         ExpertGrads {
             d_model,
             d_hidden,
             experts: (0..num_experts)
-                .map(|_| ExpertParams::zeros(d_model, d_hidden))
+                .map(|_| ExpertParams::zeros_gated(d_model, d_hidden, gated))
                 .collect(),
         }
     }
@@ -352,6 +401,7 @@ impl ExpertGrads {
             g.b1.iter_mut().for_each(|v| *v = 0.0);
             g.w2.iter_mut().for_each(|v| *v = 0.0);
             g.b2.iter_mut().for_each(|v| *v = 0.0);
+            g.w3.iter_mut().for_each(|v| *v = 0.0);
         }
     }
 
@@ -359,7 +409,7 @@ impl ExpertGrads {
     /// gradient clipping).
     pub fn scale(&mut self, s: f32) {
         for g in &mut self.experts {
-            for buf in [&mut g.w1, &mut g.b1, &mut g.w2, &mut g.b2] {
+            for buf in [&mut g.w1, &mut g.b1, &mut g.w2, &mut g.b2, &mut g.w3] {
                 for v in buf.iter_mut() {
                     *v *= s;
                 }
@@ -405,7 +455,7 @@ impl ExpertGrads {
     pub fn l2_norm(&self) -> f64 {
         let mut acc = 0.0f64;
         for g in &self.experts {
-            for s in [&g.w1, &g.b1, &g.w2, &g.b2] {
+            for s in [&g.w1, &g.b1, &g.w2, &g.b2, &g.w3] {
                 for &v in s.iter() {
                     acc += (v as f64) * (v as f64);
                 }
@@ -535,6 +585,30 @@ mod tests {
         g.experts[1].w1[0] = 3.0;
         g.experts[2].b2[0] = 4.0;
         assert!((g.l2_norm() - 5.0).abs() < 1e-12);
+        g.clear();
+        assert_eq!(g.l2_norm(), 0.0);
+    }
+
+    #[test]
+    fn gated_init_preserves_ungated_bits_and_adds_w3() {
+        let plain = ExpertParams::init(6, 10, 99);
+        let gated = ExpertParams::init_gated(6, 10, 99, true);
+        // w3 is drawn after w2, so the ungated tensors are bit-identical
+        assert_eq!(plain.w1, gated.w1);
+        assert_eq!(plain.w2, gated.w2);
+        assert!(plain.w3.is_empty() && !plain.gated());
+        assert_eq!(gated.w3.len(), 10 * 6);
+        assert!(gated.gated());
+        assert_eq!(gated.num_params(), plain.num_params() + 10 * 6);
+        let store = ExpertStore::init_gated(3, 6, 10, 99, true);
+        assert!(store.gated());
+        assert!(!ExpertStore::init(3, 6, 10, 99).gated());
+        let mut g = ExpertGrads::zeros_gated(2, 6, 10, true);
+        g.experts[0].w3[0] = 3.0;
+        g.experts[1].w3[1] = 4.0;
+        assert!((g.l2_norm() - 5.0).abs() < 1e-12);
+        g.scale(2.0);
+        assert_eq!(g.experts[0].w3[0], 6.0);
         g.clear();
         assert_eq!(g.l2_norm(), 0.0);
     }

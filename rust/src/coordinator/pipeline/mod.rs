@@ -90,7 +90,8 @@ use super::engine::{add_params, check_batch, fold_dx, lru_get_or_insert,
                     StepHandle, Traffic, PLAN_CACHE_CAP};
 use super::expert_parallel::EpTopology;
 use super::kernels::{backward_segment, forward_segment, KernelScratch,
-                     KernelTimers, RowsSrc, DEFAULT_TILE_ROWS};
+                     KernelTimers, RowsSrc, SavedHiddenMut, SavedHiddenRef,
+                     DEFAULT_TILE_ROWS};
 use super::params::{ExpertGrads, ExpertParams, ExpertStore, RankExperts};
 
 /// One chunk of a batch: its token offset in the parent and the routing
@@ -130,6 +131,8 @@ pub struct PipelinedEngine {
     balance: ChunkBalance,
     /// routed-row tile of the blocked kernels (`[ep] tile_rows`)
     tile_rows: usize,
+    /// whether the experts are gated (SwiGLU) — from the store at build
+    gated: bool,
     cost: CostModel,
     engine_tag: u64,
     sessions_opened: u64,
@@ -176,6 +179,7 @@ impl PipelinedEngine {
             chunks,
             balance: ChunkBalance::Tokens,
             tile_rows: DEFAULT_TILE_ROWS,
+            gated: store.gated(),
             cost,
             engine_tag: next_engine_tag(),
             sessions_opened: 0,
@@ -325,6 +329,7 @@ impl PipelinedEngine {
         let workers = self.workers.min(r);
         let policy = self.policy;
         let tile = self.tile_rows;
+        let gated = self.gated;
         let plan_idx = self.plan_index(&st.batch)?;
 
         // move each expert's accumulator into its owning rank's work
@@ -421,12 +426,17 @@ impl PipelinedEngine {
                 scope_chunks(&mut work, 1, workers, |dst, chunk| {
                     let RankBwdWork { bucket, dxs, timers } = &mut chunk[0];
                     let rr = &rows.per_rank[dst];
-                    let (xsrc, hidden): (RowsSrc, Option<(&[f32], &[f32])>) =
+                    let (xsrc, hidden): (RowsSrc, Option<SavedHiddenRef<'_>>) =
                         match &saved_ref[dst] {
-                            SavedActs::All { xs, pre, act } => {
-                                (RowsSrc::Packed(&xs[..]),
-                                 Some((&pre[..], &act[..])))
-                            }
+                            SavedActs::All { xs, pre, act, gate } => (
+                                RowsSrc::Packed(&xs[..]),
+                                Some(SavedHiddenRef {
+                                    pre: &pre[..],
+                                    act: &act[..],
+                                    gate: (!gate.is_empty())
+                                        .then_some(&gate[..]),
+                                }),
+                            ),
                             SavedActs::Inputs { xs } => {
                                 (RowsSrc::Packed(&xs[..]), None)
                             }
@@ -477,7 +487,7 @@ impl PipelinedEngine {
                 let flops: Vec<u64> = (0..r)
                     .map(|rank| {
                         rows.per_rank[rank].local_slots() as u64
-                            * bwd_flops_per_row(d, h, recompute)
+                            * bwd_flops_per_row(d, h, recompute, gated)
                     })
                     .collect();
                 let (acc_start, _) =
@@ -545,10 +555,18 @@ pub(crate) fn compute_chunk_indexed(
         let n_local = rr.local_slots();
         let save_hidden = policy == CheckpointPolicy::SaveAll;
         let save_inputs = policy != CheckpointPolicy::RecomputeAll;
+        // gatedness from this rank's own experts — every expert in a
+        // store shares it, so the first is authoritative
+        let gated = params[dst]
+            .experts
+            .first()
+            .map_or(false, |(_, p)| p.gated());
         let mut ys = vec![0.0f32; n_local * d];
         let mut xs = vec![0.0f32; if save_inputs { n_local * d } else { 0 }];
         let mut pre = vec![0.0f32; if save_hidden { n_local * h } else { 0 }];
         let mut act = vec![0.0f32; if save_hidden { n_local * h } else { 0 }];
+        let mut gate =
+            vec![0.0f32; if save_hidden && gated { n_local * h } else { 0 }];
         let mut scratch = KernelScratch::new(d, h, tile_rows);
         let mut timers = KernelTimers::default();
         for (i, (e, p)) in params[dst].experts.iter().enumerate() {
@@ -561,7 +579,11 @@ pub(crate) fn compute_chunk_indexed(
             forward_segment(p, d, h, lo, hi, x, &rr.tokens, token_base, &mut ys,
                             if save_inputs { Some(&mut xs[..]) } else { None },
                             if save_hidden {
-                                Some((&mut pre[..], &mut act[..]))
+                                Some(SavedHiddenMut {
+                                    pre: &mut pre[..],
+                                    act: &mut act[..],
+                                    gate: gated.then_some(&mut gate[..]),
+                                })
                             } else {
                                 None
                             },
@@ -569,7 +591,7 @@ pub(crate) fn compute_chunk_indexed(
                             if timed { Some(&mut timers) } else { None });
         }
         let saved = match policy {
-            CheckpointPolicy::SaveAll => SavedActs::All { xs, pre, act },
+            CheckpointPolicy::SaveAll => SavedActs::All { xs, pre, act, gate },
             CheckpointPolicy::SaveInputs => SavedActs::Inputs { xs },
             CheckpointPolicy::RecomputeAll => SavedActs::Nothing,
         };
@@ -709,7 +731,7 @@ impl ExecutionEngine for PipelinedEngine {
                 let flops: Vec<u64> = (0..r)
                     .map(|rank| {
                         rows.per_rank[rank].local_slots() as u64
-                            * fwd_flops_per_row(d, h)
+                            * fwd_flops_per_row(d, h, self.gated)
                     })
                     .collect();
                 let (comp_start, comp_done) =
@@ -734,7 +756,8 @@ impl ExecutionEngine for PipelinedEngine {
                     staging_peak[rank] = staging_peak[rank].max(staging_bytes(
                         tile as u64, d as u64, 4,
                         rows.remote_in_rows(rank),
-                        rows.remote_return_rows(rank)));
+                        rows.remote_return_rows(rank),
+                        if self.gated { h as u64 } else { 0 }));
                 }
                 saved_all.push(saved);
             }
@@ -748,7 +771,8 @@ impl ExecutionEngine for PipelinedEngine {
                     MemoryBreakdown {
                         data_bytes: 4 * d as u64 * (peak_slots[rank] + 2 * resident[rank])
                             + total_slots[rank]
-                                * policy.saved_bytes_per_slot(d as u64, h as u64, 4),
+                                * policy.saved_bytes_per_slot(d as u64, h as u64,
+                                                              4, self.gated),
                         index_bytes: index_bytes[rank],
                         extra_bytes: staging_peak[rank],
                     }
@@ -782,7 +806,8 @@ impl ExecutionEngine for PipelinedEngine {
     }
 
     fn zero_grads(&self) -> ExpertGrads {
-        ExpertGrads::zeros(self.topo.num_experts, self.d_model, self.d_hidden)
+        ExpertGrads::zeros_gated(self.topo.num_experts, self.d_model,
+                                 self.d_hidden, self.gated)
     }
 
     fn apply_update(&mut self, delta: &ExpertGrads) -> Result<(), String> {

@@ -65,17 +65,22 @@ impl Default for CostModel {
 }
 
 /// Forward FLOPs of one routed row through the expert FFN: two GEMVs
-/// (W1·x and W2·act), 2·d·h MACs → FLOPs each.
-pub fn fwd_flops_per_row(d: usize, h: usize) -> u64 {
-    4 * d as u64 * h as u64
+/// (W1·x and W2·act), 2·d·h MACs → FLOPs each; a gated (SwiGLU) expert
+/// adds the third GEMV W3·x in the same pass.
+pub fn fwd_flops_per_row(d: usize, h: usize, gated: bool) -> u64 {
+    let gemv = 2 * d as u64 * h as u64;
+    (2 + gated as u64) * gemv
 }
 
 /// Backward FLOPs of one routed row: the W2-grad/dz pass, the W1-grad
-/// pass, and the dz projection (three GEMV-shaped sweeps), plus the
-/// hidden recompute for policies that did not save it.
-pub fn bwd_flops_per_row(d: usize, h: usize, recompute_hidden: bool) -> u64 {
+/// pass, and the dz projection (three GEMV-shaped sweeps — gated adds
+/// the W3-grad/∂x sweep), plus the forward-shaped hidden recompute for
+/// policies that did not save it.
+pub fn bwd_flops_per_row(d: usize, h: usize, recompute_hidden: bool,
+                         gated: bool) -> u64 {
     let gemv = 2 * d as u64 * h as u64;
-    3 * gemv + if recompute_hidden { 2 * gemv } else { 0 }
+    (3 + gated as u64) * gemv
+        + if recompute_hidden { (2 + gated as u64) * gemv } else { 0 }
 }
 
 /// Which lane a phase occupies.
@@ -441,9 +446,12 @@ mod tests {
         let c = cost();
         assert!((c.comm_seconds(2_000_000_000) - 2.0).abs() < 1e-12);
         assert!((c.compute_seconds(500_000_000) - 0.5).abs() < 1e-12);
-        assert_eq!(fwd_flops_per_row(8, 16), 4 * 8 * 16);
-        assert_eq!(bwd_flops_per_row(8, 16, false), 3 * 2 * 8 * 16);
-        assert_eq!(bwd_flops_per_row(8, 16, true), 5 * 2 * 8 * 16);
+        assert_eq!(fwd_flops_per_row(8, 16, false), 4 * 8 * 16);
+        assert_eq!(fwd_flops_per_row(8, 16, true), 6 * 8 * 16);
+        assert_eq!(bwd_flops_per_row(8, 16, false, false), 3 * 2 * 8 * 16);
+        assert_eq!(bwd_flops_per_row(8, 16, true, false), 5 * 2 * 8 * 16);
+        assert_eq!(bwd_flops_per_row(8, 16, false, true), 4 * 2 * 8 * 16);
+        assert_eq!(bwd_flops_per_row(8, 16, true, true), 7 * 2 * 8 * 16);
     }
 
     #[test]

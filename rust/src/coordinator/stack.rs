@@ -100,6 +100,8 @@ struct LayerSession {
 /// module docs for the forward/backward contract.
 pub struct MoeStack {
     layers: Vec<StackLayer>,
+    /// whether the experts are gated (SwiGLU) — every layer must agree
+    gated: bool,
     /// token count the per-layer routing draws cover (0 until a second
     /// layer is pushed; an L = 1 stack accepts any batch)
     tokens: usize,
@@ -128,6 +130,7 @@ impl MoeStack {
             num_experts: g.num_experts(),
             d_model: g.d_model,
             d_hidden: g.d_hidden,
+            gated: g.experts.first().map_or(false, |p| p.gated()),
             layers: vec![StackLayer { engine: first, draw: None }],
             tokens: 0,
             top_k: 0,
@@ -160,6 +163,12 @@ impl MoeStack {
                 self.num_experts,
                 self.d_model,
                 self.d_hidden
+            ));
+        }
+        if g.experts.first().map_or(false, |p| p.gated()) != self.gated {
+            return Err(format!(
+                "layer {} activation gating disagrees with the stack's",
+                self.layers.len()
             ));
         }
         if engine.ranks() != self.layers[0].engine.ranks() {
@@ -371,8 +380,8 @@ impl ExecutionEngine for MoeStack {
     }
 
     fn zero_grads(&self) -> ExpertGrads {
-        ExpertGrads::zeros(self.layers.len() * self.num_experts, self.d_model,
-                           self.d_hidden)
+        ExpertGrads::zeros_gated(self.layers.len() * self.num_experts,
+                                 self.d_model, self.d_hidden, self.gated)
     }
 
     fn apply_update(&mut self, delta: &ExpertGrads) -> Result<(), String> {
@@ -480,7 +489,8 @@ pub fn plan_from_config(cfg: &EpConfig) -> Result<Option<CheckpointPlan>, String
     let models: Vec<LayerModel> = (0..cfg.num_layers)
         .map(|l| {
             let disp = layer_routing_from_config(cfg, l);
-            LayerModel::from_routing(l, &disp, &topo, cfg.d_model, cfg.d_hidden)
+            LayerModel::from_routing(l, &disp, &topo, cfg.d_model, cfg.d_hidden,
+                                     cfg.activation.gated())
         })
         .collect();
     let planner = CheckpointPlanner::new(cost);
@@ -544,8 +554,10 @@ pub fn stack_with_plan(cfg: &EpConfig,
     let cache_cap = PLAN_CACHE_CAP.max(cfg.grad_accum);
     let mut stack: Option<MoeStack> = None;
     for l in 0..cfg.num_layers {
-        let store = ExpertStore::init(cfg.num_experts, cfg.d_model, cfg.d_hidden,
-                                      cfg.seed ^ layer_salt(l));
+        let store = ExpertStore::init_gated(cfg.num_experts, cfg.d_model,
+                                            cfg.d_hidden,
+                                            cfg.seed ^ layer_salt(l),
+                                            cfg.activation.gated());
         let engine = layer_engine_from_config(cfg, store, policies[l])?;
         match &mut stack {
             None => {

@@ -25,8 +25,9 @@ use crate::metrics::{Ema, MetricsSink, Peak, Throughput};
 use crate::runtime::client::{Executable, Runtime};
 use crate::runtime::host::HostTensor;
 
-use super::engine::{step_batch_from_config, ExecutionEngine, StepBatch,
-                    Traffic};
+use super::calibrate::Calibration;
+use super::engine::{step_batch_from_config, tile_bucket, BuildInfo,
+                    ExecutionEngine, StepBatch, Traffic};
 use super::optim::{clip_global_norm, optimizer_from_name, LrSchedule, Optimizer};
 use super::params::{ExpertGrads, ParamStore};
 use super::pipeline::timeline::{CostModel, OverlapReport};
@@ -259,6 +260,11 @@ pub struct EpTrainer {
     optimizer: Box<dyn Optimizer>,
     schedule: LrSchedule,
     sink: MetricsSink,
+    /// how the engine was built (`engine_from_config_with_info`):
+    /// resolved tile, whether the autotune probe ran or the calibration
+    /// artifact answered it — surfaced through `MetricsSink` and folded
+    /// into the artifact this run saves back
+    build_info: Option<BuildInfo>,
 }
 
 impl EpTrainer {
@@ -270,7 +276,16 @@ impl EpTrainer {
             .map_err(anyhow::Error::msg)?;
         let sink = MetricsSink::new(Some(cfg.metrics_path.as_str()))
             .map_err(anyhow::Error::msg)?;
-        Ok(EpTrainer { engine, cfg, optimizer, schedule, sink })
+        Ok(EpTrainer { engine, cfg, optimizer, schedule, sink,
+                       build_info: None })
+    }
+
+    /// Attach the [`BuildInfo`] the engine build produced
+    /// (`engine_from_config_with_info`), so `run` can log whether the
+    /// tile probe ran or the calibration artifact was reused, and save
+    /// the resolved tile back into the artifact.
+    pub fn set_build_info(&mut self, info: BuildInfo) {
+        self.build_info = Some(info);
     }
 
     /// Run `cfg.steps` optimizer steps; prints a progress line roughly
@@ -315,6 +330,19 @@ impl EpTrainer {
                     ("extra_time_s", c.extra_time_s),
                 ]);
             }
+        }
+
+        // how the tile size was resolved: probed on the first microbatch,
+        // answered by the calibration artifact (probe skipped), or pinned
+        // statically by `[ep] tile_rows` — one line in the JSONL stream so
+        // a warm-start run is auditable against a cold one
+        if let Some(info) = &self.build_info {
+            self.sink.emit_tagged("autotune", &[("bucket", &info.bucket)], &[
+                ("tile_rows", info.tile_rows as f64),
+                ("probed", if info.tile_probed { 1.0 } else { 0.0 }),
+                ("calibration_loaded",
+                 if info.calibration_loaded { 1.0 } else { 0.0 }),
+            ]);
         }
 
         let mut grads = self.engine.zero_grads();
@@ -475,6 +503,41 @@ impl EpTrainer {
         if batch.copy_count() != 0 {
             bail!("step loop deep-copied the global batch {} times",
                   batch.copy_count());
+        }
+        // persist what this run learned: the EWMA-folded effective rates
+        // (when `calibrate = true` produced them; the static config rates
+        // otherwise) plus the resolved tile for this shape bucket, merged
+        // into whatever the artifact already holds so buckets accumulate
+        // across runs of different shapes
+        if !self.cfg.calibration_path.is_empty() {
+            let mut artifact = Calibration::load(&self.cfg.calibration_path)
+                .unwrap_or_else(|| Calibration {
+                    link_gbps: self.cfg.link_gbps,
+                    compute_gflops: self.cfg.compute_gflops,
+                    tiles: Default::default(),
+                });
+            if let Some(cm) = &calibrated {
+                artifact.link_gbps = cm.link_gbps;
+                artifact.compute_gflops = cm.compute_gflops;
+            }
+            let (bucket, tile) = match &self.build_info {
+                Some(info) => (info.bucket.clone(), info.tile_rows),
+                None => (tile_bucket(&self.cfg), self.cfg.tile_rows),
+            };
+            if tile > 0 {
+                artifact.tiles.insert(bucket, tile);
+            }
+            match artifact.save(&self.cfg.calibration_path) {
+                Ok(()) => self.sink.emit("calibration_saved", &[
+                    ("link_gbps", artifact.link_gbps),
+                    ("compute_gflops", artifact.compute_gflops),
+                    ("tiles", artifact.tiles.len() as f64),
+                ]),
+                // a read-only path must not fail the training run
+                Err(e) => eprintln!(
+                    "warning: could not save calibration artifact {}: {e}",
+                    self.cfg.calibration_path),
+            }
         }
         Ok(EpTrainReport {
             steps: self.cfg.steps,

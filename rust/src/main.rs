@@ -14,7 +14,9 @@
 //!            [--num-layers L --mem-budget-bytes B]
 //!            [--pipeline-chunks K --chunk-balance tokens|rows
 //!             --link-gbps G --compute-gflops F]
-//!            [--tile-rows T] [--json-out bench.json] ...
+//!            [--activation silu|swiglu] [--tile-rows T (0 = autotune)]
+//!            [--calibration-path calib.json]
+//!            [--json-out bench.json] ...
 //!                                execute the plan: sharded engine vs
 //!                                single-rank, bit-equality + derived
 //!                                bytes + checkpoint-policy memory sweep
@@ -29,7 +31,8 @@
 //!             --checkpoint save-all|save-inputs|recompute-all|auto
 //!             --num-layers L --mem-budget-bytes B
 //!             --pipeline-chunks K --chunk-balance tokens|rows
-//!             --tile-rows T --calibrate
+//!             --activation silu|swiglu --tile-rows T (0 = autotune)
+//!             --calibrate --calibration-path calib.json
 //!             --link-gbps G --compute-gflops F
 //!             --lr-schedule constant|cosine|linear-warmup --clip-norm C
 //!             --placement contiguous|strided|load-aware
@@ -54,7 +57,8 @@ use moeblaze::config::model::Activation;
 use moeblaze::config::paper::{paper_configs, scaled_configs, PAPER_BLOCK, SCALED_BLOCK};
 use moeblaze::config::toml::Toml;
 use moeblaze::config::train::TrainConfig;
-use moeblaze::coordinator::engine::{engine_from_config, step_batch_from_config,
+use moeblaze::coordinator::engine::{engine_from_config_with_info,
+                                    probe_tile_rows, step_batch_from_config,
                                     topology_from_config, ExecutionEngine,
                                     PackedReference, ShardedEngine,
                                     SingleRankEngine};
@@ -325,8 +329,14 @@ fn ep_config_from_args(args: &Args, parse_ranks: bool) -> Result<EpConfig> {
     }
     cfg.tile_rows = args.usize_or("tile-rows", cfg.tile_rows)
         .map_err(anyhow::Error::msg)?;
+    if let Some(a) = args.get("activation") {
+        cfg.activation = Activation::parse(a).map_err(anyhow::Error::msg)?;
+    }
     cfg.calibrate = args.bool_or("calibrate", cfg.calibrate)
         .map_err(anyhow::Error::msg)?;
+    if let Some(p) = args.get("calibration-path") {
+        cfg.calibration_path = p.to_string();
+    }
     cfg.link_gbps = args.f64_or("link-gbps", cfg.link_gbps)
         .map_err(anyhow::Error::msg)?;
     cfg.compute_gflops = args.f64_or("compute-gflops", cfg.compute_gflops)
@@ -358,7 +368,14 @@ fn ep_config_from_args(args: &Args, parse_ranks: bool) -> Result<EpConfig> {
 }
 
 fn cmd_ep_bench(args: &Args) -> Result<()> {
-    let base = ep_config_from_args(args, false)?;
+    let mut base = ep_config_from_args(args, false)?;
+    // resolve `tile_rows = 0` (autotune) once, up front, so every engine
+    // in the sweep — and the --json-out snapshot — runs the probed tile
+    let tile_probed = base.tile_rows == 0;
+    if tile_probed {
+        base.tile_rows = probe_tile_rows(&base).map_err(anyhow::Error::msg)?;
+        println!("tile autotune: probed tile_rows = {}", base.tile_rows);
+    }
     let ranks_list: Vec<usize> = {
         let raw = args.list("ranks");
         if raw.is_empty() {
@@ -370,13 +387,14 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
         }
     };
     let (l, e, k, d) = (base.tokens, base.num_experts, base.top_k, base.d_model);
-    println!("ep-bench: L={l} E={e} k={k} d={d} skew={} placement={}",
-             base.skew, base.placement);
+    println!("ep-bench: L={l} E={e} k={k} d={d} act={} skew={} placement={}",
+             base.activation.name(), base.skew, base.placement);
 
     // one workload, every rank count (the same generator EpTrainer
     // uses), built once and shared zero-copy across the whole sweep
     let (batch, _target) = step_batch_from_config(&base).map_err(anyhow::Error::msg)?;
-    let store = ExpertStore::init(e, d, base.d_hidden, base.seed);
+    let store = ExpertStore::init_gated(e, d, base.d_hidden, base.seed,
+                                        base.activation.gated());
 
     // single-rank reference, computed once for the whole sweep
     let mut single = SingleRankEngine::new(store.clone());
@@ -474,7 +492,9 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
                 human_bytes(data),
                 human_bytes(index),
                 human_bytes(extra),
-                human_bytes(policy.saved_bytes_per_slot(d as u64, base.d_hidden as u64, 4)),
+                human_bytes(policy.saved_bytes_per_slot(
+                    d as u64, base.d_hidden as u64, 4,
+                    base.activation.gated())),
             ]);
             data_by_policy.push(data);
         }
@@ -628,7 +648,9 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
                 ("skew", Json::num(base.skew)),
                 ("seed", Json::num(base.seed as f64)),
                 ("ranks", Json::num(r as f64)),
+                ("activation", Json::str(base.activation.name())),
                 ("tile_rows", Json::num(base.tile_rows as f64)),
+                ("tile_autotuned", Json::num(if tile_probed { 1.0 } else { 0.0 })),
                 ("checkpoint", Json::str(base.checkpoint.name())),
                 ("bit_identical", Json::num(1.0)),
                 ("dispatch_bytes",
@@ -684,15 +706,26 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
 
 fn cmd_ep_train(args: &Args) -> Result<()> {
     let cfg = ep_config_from_args(args, true)?;
-    println!("ep-train: {} ranks ({} placement), {} layer(s), L={} E={} k={} d={} h={}, \
-              {} steps × {} microbatches, {} optimizer, {} checkpointing",
+    println!("ep-train: {} ranks ({} placement), {} layer(s), L={} E={} k={} d={} h={} \
+              act={}, {} steps × {} microbatches, {} optimizer, {} checkpointing",
              cfg.ranks, cfg.placement, cfg.num_layers, cfg.tokens,
-             cfg.num_experts, cfg.top_k, cfg.d_model, cfg.d_hidden, cfg.steps,
+             cfg.num_experts, cfg.top_k, cfg.d_model, cfg.d_hidden,
+             cfg.activation.name(), cfg.steps,
              cfg.grad_accum, cfg.optimizer,
              if cfg.checkpoint_auto { "auto (planner)".to_string() }
              else { cfg.checkpoint.to_string() });
-    let engine = engine_from_config(&cfg).map_err(anyhow::Error::msg)?;
+    let (engine, info) =
+        engine_from_config_with_info(&cfg).map_err(anyhow::Error::msg)?;
+    println!("tile_rows = {} for {} ({})", info.tile_rows, info.bucket,
+             if info.tile_probed { "probed on the first microbatch" }
+             else if cfg.tile_rows == 0 { "from the calibration artifact — probe skipped" }
+             else { "static" });
+    if info.calibration_loaded {
+        println!("calibration artifact `{}` loaded: cost model warm-started",
+                 cfg.calibration_path);
+    }
     let mut trainer = EpTrainer::new(engine, cfg.clone())?;
+    trainer.set_build_info(info);
     let report = trainer.run()?;
     println!("\ntrained {} steps on `{}`: loss {:.6} -> {:.6}, {:.2} ms/step, \
               final |g| {:.4}",
@@ -749,8 +782,12 @@ fn cmd_ep_train(args: &Args) -> Result<()> {
     if args.has("verify") {
         // metrics stay with the primary run — the verify run would
         // otherwise append an overlapping step range to the same JSONL
-        let single_cfg = EpConfig { ranks: 1, metrics_path: String::new(), ..cfg };
-        let engine = engine_from_config(&single_cfg).map_err(anyhow::Error::msg)?;
+        // ... and the verify run must not overwrite the primary run's
+        // calibration artifact either
+        let single_cfg = EpConfig { ranks: 1, metrics_path: String::new(),
+                                    calibration_path: String::new(), ..cfg };
+        let (engine, _) =
+            engine_from_config_with_info(&single_cfg).map_err(anyhow::Error::msg)?;
         let mut single = EpTrainer::new(engine, single_cfg)?;
         let sr = single.run()?;
         if sr.losses == report.losses {

@@ -16,13 +16,14 @@ use crate::config::model::MoeConfig;
 /// `memory_per_rank()` accounting, so the Figure-3/5 numbers are
 /// policy-parametric rather than hardwired.
 ///
-/// Per routed slot the policies save (f32):
+/// Per routed slot the policies save (f32; a gated — SwiGLU — expert
+/// adds the gate pre-activation to `SaveAll`'s hidden set):
 ///
-/// | policy         | saved tensors            | bytes/slot    |
-/// |----------------|--------------------------|---------------|
-/// | `SaveAll`      | inputs + pre-act + act   | `4·(d + 2·h)` |
-/// | `SaveInputs`   | routed inputs only       | `4·d`         |
-/// | `RecomputeAll` | nothing (batch is shared)| `0`           |
+/// | policy         | saved tensors            | bytes/slot (ungated / gated) |
+/// |----------------|--------------------------|------------------------------|
+/// | `SaveAll`      | inputs + pre-act (+ gate) + act | `4·(d + 2·h)` / `4·(d + 3·h)` |
+/// | `SaveInputs`   | routed inputs only       | `4·d`                        |
+/// | `RecomputeAll` | nothing (batch is shared)| `0`                          |
 ///
 /// All three produce bit-identical outputs and gradients; only resident
 /// bytes (and, for `RecomputeAll`, backward-pass recompute traffic)
@@ -72,9 +73,14 @@ impl CheckpointPolicy {
 
     /// Bytes saved across the fwd→bwd boundary per routed slot, for
     /// model dimension `d` and hidden dimension `h` (dtype-sized).
-    pub fn saved_bytes_per_slot(self, d: u64, h: u64, dtype_bytes: u64) -> u64 {
+    /// A gated (SwiGLU) expert's `SaveAll` set carries one extra h-row:
+    /// the gate pre-activation saved alongside pre and act.
+    pub fn saved_bytes_per_slot(self, d: u64, h: u64, dtype_bytes: u64,
+                                gated: bool) -> u64 {
         match self {
-            CheckpointPolicy::SaveAll => dtype_bytes * (d + 2 * h),
+            CheckpointPolicy::SaveAll => {
+                dtype_bytes * (d + (2 + gated as u64) * h)
+            }
             CheckpointPolicy::SaveInputs => dtype_bytes * d,
             CheckpointPolicy::RecomputeAll => 0,
         }
@@ -156,7 +162,8 @@ pub fn checkpointed_bytes(cfg: &MoeConfig, dtype_bytes: u64,
     let h = cfg.d_hidden as u64;
     let e = cfg.num_experts as u64;
     let data = n * dtype_bytes // gates (L, k) — needed by every policy's bwd
-        + n * policy.saved_bytes_per_slot(d, h, dtype_bytes);
+        + n * policy.saved_bytes_per_slot(d, h, dtype_bytes,
+                                          cfg.activation.gated());
     let index = 4 * (
         n           // ids (L, k)
         + n         // expert_token_indices
@@ -263,10 +270,20 @@ pub fn per_rank_breakdown(total: &MemoryBreakdown, per_rank_rows: &[u64]) -> Vec
 /// (`RowIndexPlan::packed_buffer_bytes`) — the memory half of the PR-5
 /// acceptance bar, pinned by `rust/tests/ep_engine.rs` and
 /// `rust/tests/row_plan_properties.rs`.
+/// `gated_h` is the hidden width charged for the gate scratch tile a
+/// gated (SwiGLU) expert streams alongside the inbound gather tile
+/// (`KernelScratch`'s `gt`): pass `h` for gated experts, `0` for
+/// ungated. The charge rides the inbound direction — the gate tile only
+/// exists while remote rows are being gathered and processed.
 pub fn staging_bytes(tile_rows: u64, d: u64, dtype_bytes: u64,
-                     remote_in_rows: u64, remote_out_rows: u64) -> u64 {
+                     remote_in_rows: u64, remote_out_rows: u64,
+                     gated_h: u64) -> u64 {
     let tile_bytes = tile_rows * d * dtype_bytes;
-    let inbound = if remote_in_rows > 0 { tile_bytes } else { 0 };
+    let inbound = if remote_in_rows > 0 {
+        tile_bytes + tile_rows * gated_h * dtype_bytes
+    } else {
+        0
+    };
     let outbound = if remote_out_rows > 0 { tile_bytes } else { 0 };
     inbound + outbound
 }
@@ -388,13 +405,20 @@ mod tests {
         assert_eq!(CheckpointPolicy::default(), CheckpointPolicy::SaveInputs);
         // strictly decreasing saved bytes — the Figure-3/5 policy axis
         let (d, h) = (64, 128);
-        let all = CheckpointPolicy::SaveAll.saved_bytes_per_slot(d, h, 4);
-        let inp = CheckpointPolicy::SaveInputs.saved_bytes_per_slot(d, h, 4);
-        let rec = CheckpointPolicy::RecomputeAll.saved_bytes_per_slot(d, h, 4);
+        let all = CheckpointPolicy::SaveAll.saved_bytes_per_slot(d, h, 4, false);
+        let inp = CheckpointPolicy::SaveInputs.saved_bytes_per_slot(d, h, 4, false);
+        let rec = CheckpointPolicy::RecomputeAll.saved_bytes_per_slot(d, h, 4, false);
         assert!(all > inp && inp > rec);
         assert_eq!(all, 4 * (64 + 2 * 128));
         assert_eq!(inp, 4 * 64);
         assert_eq!(rec, 0);
+        // gated experts save one extra h-row under SaveAll only
+        let all_g = CheckpointPolicy::SaveAll.saved_bytes_per_slot(d, h, 4, true);
+        assert_eq!(all_g, 4 * (64 + 3 * 128));
+        assert_eq!(CheckpointPolicy::SaveInputs.saved_bytes_per_slot(d, h, 4, true),
+                   inp);
+        assert_eq!(CheckpointPolicy::RecomputeAll.saved_bytes_per_slot(d, h, 4, true),
+                   0);
     }
 
     #[test]
@@ -415,18 +439,24 @@ mod tests {
     fn staging_bytes_charges_whole_tiles_per_active_direction() {
         // nothing remote: no comm staging at all (single-rank /
         // local-only — the tiles exist but as compute working set)
-        assert_eq!(staging_bytes(16, 8, 4, 0, 0), 0);
+        assert_eq!(staging_bytes(16, 8, 4, 0, 0, 0), 0);
         // any remote flow charges the FULL allocated tile for that
         // direction — the model reports what KernelScratch holds, not a
         // trimmed fraction
-        assert_eq!(staging_bytes(16, 8, 4, 3, 0), 16 * 8 * 4);
-        assert_eq!(staging_bytes(16, 8, 4, 3, 1), 2 * 16 * 8 * 4);
+        assert_eq!(staging_bytes(16, 8, 4, 3, 0, 0), 16 * 8 * 4);
+        assert_eq!(staging_bytes(16, 8, 4, 3, 1, 0), 2 * 16 * 8 * 4);
         // heavy cross traffic still caps at one tile per direction
-        assert_eq!(staging_bytes(16, 8, 4, 1000, 1000), 2 * 16 * 8 * 4);
+        assert_eq!(staging_bytes(16, 8, 4, 1000, 1000, 0), 2 * 16 * 8 * 4);
         // and that cap sits far below the packed residency it replaces
         // (whole routed set, twice) for any cross-heavy workload
         let packed = 2 * 1000u64 * 8 * 4;
-        assert!(staging_bytes(16, 8, 4, 1000, 1000) < packed);
+        assert!(staging_bytes(16, 8, 4, 1000, 1000, 0) < packed);
+        // gated experts add one h-wide gate scratch tile on the inbound
+        // side only — and only when inbound flow exists
+        assert_eq!(staging_bytes(16, 8, 4, 3, 1, 12),
+                   2 * 16 * 8 * 4 + 16 * 12 * 4);
+        assert_eq!(staging_bytes(16, 8, 4, 0, 1, 12), 16 * 8 * 4);
+        assert_eq!(staging_bytes(16, 8, 4, 0, 0, 12), 0);
     }
 
     #[test]

@@ -59,6 +59,9 @@ pub struct LayerModel {
     pub layer: usize,
     pub d_model: u64,
     pub d_hidden: u64,
+    /// whether the experts are gated (SwiGLU): one extra h-row saved
+    /// per slot under `SaveAll`, and a wider hidden recompute
+    pub gated: bool,
     /// routed slots landing on each rank's experts
     pub slots_per_rank: Vec<u64>,
     /// tokens resident on each rank (contiguous token partition)
@@ -72,7 +75,8 @@ impl LayerModel {
     /// Derive the model from one layer's dispatch structures under the
     /// stack topology.
     pub fn from_routing(layer: usize, disp: &DispatchStructures, topo: &EpTopology,
-                        d_model: usize, d_hidden: usize) -> LayerModel {
+                        d_model: usize, d_hidden: usize,
+                        gated: bool) -> LayerModel {
         let r = topo.ranks;
         let l = disp.num_tokens;
         let plan = topo.plan(disp, d_model, 4);
@@ -93,6 +97,7 @@ impl LayerModel {
             layer,
             d_model: d_model as u64,
             d_hidden: d_hidden as u64,
+            gated,
             slots_per_rank: plan.per_rank_tokens,
             resident_per_rank: resident,
             regather_bytes_per_rank: regather,
@@ -110,7 +115,8 @@ impl LayerModel {
         4 * self.d_model
             * (self.slots_per_rank[rank] + 2 * self.resident_per_rank[rank])
             + self.slots_per_rank[rank]
-                * policy.saved_bytes_per_slot(self.d_model, self.d_hidden, 4)
+                * policy.saved_bytes_per_slot(self.d_model, self.d_hidden, 4,
+                                              self.gated)
     }
 
     /// Max-rank projection of [`data_bytes`](LayerModel::data_bytes) —
@@ -130,9 +136,10 @@ impl LayerModel {
     pub fn extra_time_s(&self, policy: CheckpointPolicy, cost: &CostModel) -> f64 {
         let max_slots = self.slots_per_rank.iter().max().copied().unwrap_or(0);
         let recompute_flops_per_row =
-            bwd_flops_per_row(self.d_model as usize, self.d_hidden as usize, true)
+            bwd_flops_per_row(self.d_model as usize, self.d_hidden as usize, true,
+                              self.gated)
                 - bwd_flops_per_row(self.d_model as usize, self.d_hidden as usize,
-                                    false);
+                                    false, self.gated);
         match policy {
             CheckpointPolicy::SaveAll => 0.0,
             CheckpointPolicy::SaveInputs => {
@@ -454,7 +461,7 @@ mod tests {
         let g = synthetic_gating(&mut rng, l, e, k, 0.8);
         let disp = parallel_build(&g.topk_ids, l, e, k);
         let topo = EpTopology::new(ranks, e).unwrap();
-        LayerModel::from_routing(layer, &disp, &topo, d, h)
+        LayerModel::from_routing(layer, &disp, &topo, d, h, false)
     }
 
     fn models(n: usize) -> Vec<LayerModel> {

@@ -14,12 +14,23 @@
 //!   `data`-class bytes of `memory_per_rank()`;
 //! * `Traffic` counters reset at `forward` and accumulate across the
 //!   session's backward.
+//!
+//! PR-6 additions: blocked SwiGLU vs the packed row-reference
+//! bit-identity over tiles × ranks × policies, tile autotune
+//! determinism (`tile_rows = 0`), and the persistent calibration
+//! artifact (warm start skips the probe, corrupt artifacts fall back,
+//! warm rates reproduce the overlap projections).
 
 use moeblaze::config::ep::{EpConfig, Placement};
+use moeblaze::config::model::Activation;
+use moeblaze::coordinator::calibrate::Calibration;
 use moeblaze::coordinator::engine::{check_equivalence, engine_from_config,
+                                    engine_from_config_with_info,
                                     packed_reference_step,
-                                    step_batch_from_config, ExecutionEngine,
-                                    ShardedEngine, SingleRankEngine, StepBatch};
+                                    step_batch_from_config, tile_bucket,
+                                    ExecutionEngine, ShardedEngine,
+                                    SingleRankEngine, StepBatch};
+use moeblaze::coordinator::kernels::AUTOTUNE_TILE_CANDIDATES;
 use moeblaze::coordinator::expert_parallel::EpTopology;
 use moeblaze::coordinator::params::ExpertStore;
 use moeblaze::coordinator::trainer::EpTrainer;
@@ -373,6 +384,245 @@ fn staging_residency_sits_strictly_below_the_packed_buffers() {
                     m.extra_bytes, packed);
         }
     }
+}
+
+// -- PR-6: SwiGLU on the blocked hot path -----------------------------------
+
+#[test]
+fn swiglu_blocked_matches_the_row_reference_for_every_tile() {
+    // the tentpole acceptance pin: the gated blocked path reproduces the
+    // packed row-dot reference (which routes through the row kernels)
+    // bit-for-bit — outputs AND gradients — for every tile size, rank
+    // count, and checkpoint policy
+    let (l, e, k, d, h) = (72usize, 8usize, 2usize, 10usize, 14usize);
+    let batch = random_batch(l, e, k, d, 0.9, 61);
+    let store = ExpertStore::init_gated(e, d, h, 15, true);
+    assert!(store.gated(), "fixture must be a SwiGLU store");
+    let d_out: Vec<f32> = {
+        let mut rng = Rng::new(5);
+        rng.normal_vec(l * d, 1.0)
+    };
+    for ranks in [1usize, 2, 4, 8] {
+        let topo = EpTopology::new(ranks, e).unwrap();
+        for policy in CheckpointPolicy::ALL {
+            let (ref_out, ref_grads) = packed_reference_step(
+                &topo, &store, &batch, &d_out, policy, ranks)
+                .unwrap();
+            for tile in [1usize, 2, 3, 5, 8, 16, 32, 64] {
+                let mut eng = ShardedEngine::with_policy(
+                    topo.clone(), &store, ranks, policy)
+                    .unwrap();
+                eng.set_tile_rows(tile);
+                let handle = eng.forward(&batch).unwrap();
+                assert_eq!(handle.output(), &ref_out[..],
+                           "R={ranks} {policy} tile={tile}: swiglu outputs \
+                            diverged from the row reference");
+                let grads = handle.backward(&mut eng, &d_out).unwrap();
+                assert_eq!(grads, ref_grads,
+                           "R={ranks} {policy} tile={tile}: swiglu grads \
+                            diverged from the row reference");
+            }
+        }
+    }
+}
+
+#[test]
+fn swiglu_dx_is_tile_size_invariant() {
+    // ∂x through the gate product: the trailing w3ᵀ·dg loop must keep
+    // the fixed op order at every tile size (including degenerate 1 and
+    // larger-than-any-segment)
+    let (l, e, k, d, h) = (48usize, 4usize, 2usize, 8usize, 10usize);
+    let batch = random_batch(l, e, k, d, 0.5, 77);
+    let store = ExpertStore::init_gated(e, d, h, 21, true);
+    let d_out: Vec<f32> = {
+        let mut rng = Rng::new(6);
+        rng.normal_vec(l * d, 1.0)
+    };
+    for policy in CheckpointPolicy::ALL {
+        let mut reference: Option<(Vec<f32>, _, Vec<f32>)> = None;
+        for tile in [1usize, 3, 16, 1024] {
+            let mut eng = SingleRankEngine::with_policy(store.clone(), policy);
+            eng.set_tile_rows(tile);
+            let handle = eng.forward(&batch).unwrap();
+            let out = handle.output().to_vec();
+            let mut grads = eng.zero_grads();
+            let mut dx = vec![0.0f32; l * d];
+            eng.backward_into_dx(handle, &d_out, &mut grads, &mut dx)
+                .unwrap();
+            match &reference {
+                None => reference = Some((out, grads, dx)),
+                Some((ro, rg, rdx)) => {
+                    assert_eq!(&out, ro, "{policy} tile={tile}: outputs");
+                    assert_eq!(&grads, rg, "{policy} tile={tile}: grads");
+                    assert_eq!(&dx, rdx, "{policy} tile={tile}: dx");
+                }
+            }
+        }
+    }
+}
+
+fn swiglu_cfg(ranks: usize) -> EpConfig {
+    EpConfig { activation: Activation::Swiglu, ..mk_cfg(ranks) }
+}
+
+#[test]
+fn swiglu_training_bit_identical_across_ranks_accum_and_policy() {
+    // the ISSUE-2 acceptance matrix, re-run gated: one fixed global
+    // batch, the whole loss curve bit-identical across grad_accum ×
+    // checkpoint policy × rank count — and the run actually learns
+    let reference = losses_of(swiglu_cfg(1));
+    for ranks in [1usize, 4, 8] {
+        for accum in [1usize, 2, 4] {
+            for policy in CheckpointPolicy::ALL {
+                let cfg = EpConfig {
+                    grad_accum: accum,
+                    checkpoint: policy,
+                    ..swiglu_cfg(ranks)
+                };
+                assert_eq!(losses_of(cfg), reference,
+                           "swiglu R={ranks} accum={accum} {policy} diverged");
+            }
+        }
+    }
+    // SiLU and SwiGLU runs share routing and inputs but not parameters:
+    // the curves must differ (the gate matrix is really in the graph)
+    assert_ne!(losses_of(mk_cfg(1)), reference,
+               "gated run reproduced the ungated curve — w3 is inert");
+}
+
+// -- PR-6: tile autotune + persistent calibration ---------------------------
+
+fn tmp_artifact(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("moeblaze-ep-test-{tag}-{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn tile_autotune_resolves_to_a_candidate_and_keeps_the_loss_curve() {
+    // tile_rows = 0: the probe must land on a candidate, report itself
+    // through BuildInfo, and — because every tile is bit-identical —
+    // leave the loss curve exactly where any static tile puts it
+    let cfg = EpConfig { tile_rows: 0, ..swiglu_cfg(2) };
+    let (engine, info) = engine_from_config_with_info(&cfg).unwrap();
+    assert!(AUTOTUNE_TILE_CANDIDATES.contains(&info.tile_rows),
+            "probed tile {} is not a candidate", info.tile_rows);
+    assert!(info.tile_probed, "no artifact: the probe must run");
+    assert!(!info.calibration_loaded);
+    assert_eq!(info.bucket, tile_bucket(&cfg));
+    let mut t = EpTrainer::new(engine, cfg).unwrap();
+    let auto_losses = t.run().unwrap().losses;
+    assert_eq!(auto_losses, losses_of(swiglu_cfg(2)),
+               "autotuned run diverged from the static-tile curve");
+}
+
+#[test]
+fn calibration_artifact_warm_start_skips_the_probe() {
+    let path = tmp_artifact("warm");
+    let cfg = EpConfig {
+        tile_rows: 0,
+        calibration_path: path.clone(),
+        ..swiglu_cfg(2)
+    };
+    // seed the artifact with a pinned tile for this exact bucket
+    let mut tiles = std::collections::BTreeMap::new();
+    tiles.insert(tile_bucket(&cfg), 32usize);
+    Calibration { link_gbps: cfg.link_gbps, compute_gflops: cfg.compute_gflops,
+                  tiles }
+        .save(&path)
+        .unwrap();
+    let (engine, info) = engine_from_config_with_info(&cfg).unwrap();
+    assert!(!info.tile_probed,
+            "artifact answered the bucket — the probe must be skipped");
+    assert!(info.calibration_loaded);
+    assert_eq!(info.tile_rows, 32);
+    // warm run's loss curve is identical to a cold run's
+    let mut t = EpTrainer::new(engine, cfg).unwrap();
+    t.set_build_info(info);
+    let warm = t.run().unwrap().losses;
+    assert_eq!(warm, losses_of(swiglu_cfg(2)),
+               "warm-start run diverged from the cold run");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn corrupt_or_missing_artifact_falls_back_to_the_probe() {
+    let path = tmp_artifact("corrupt");
+    std::fs::write(&path, "{ this is not json").unwrap();
+    let cfg = EpConfig {
+        tile_rows: 0,
+        calibration_path: path.clone(),
+        ..swiglu_cfg(2)
+    };
+    let (_, info) = engine_from_config_with_info(&cfg).unwrap();
+    assert!(info.tile_probed, "corrupt artifact must fall back to the probe");
+    assert!(!info.calibration_loaded);
+    std::fs::remove_file(&path).ok();
+    // missing artifact: same fallback, still no error
+    let (_, info) = engine_from_config_with_info(&cfg).unwrap();
+    assert!(info.tile_probed && !info.calibration_loaded);
+}
+
+#[test]
+fn trainer_saves_an_artifact_the_next_run_warm_starts_from() {
+    // end-to-end warm-start loop: run 1 (static tile) persists the
+    // artifact; run 2 (tile_rows = 0) reads it, skips the probe, and
+    // reproduces run 1's loss curve bit-for-bit
+    let path = tmp_artifact("roundtrip");
+    std::fs::remove_file(&path).ok();
+    let cold_cfg = EpConfig {
+        tile_rows: 8,
+        calibration_path: path.clone(),
+        ..swiglu_cfg(2)
+    };
+    let (engine, info) = engine_from_config_with_info(&cold_cfg).unwrap();
+    assert!(!info.tile_probed && !info.calibration_loaded);
+    let mut t = EpTrainer::new(engine, cold_cfg.clone()).unwrap();
+    t.set_build_info(info);
+    let cold = t.run().unwrap().losses;
+    let saved = Calibration::load(&path)
+        .expect("run 1 must leave a loadable artifact behind");
+    assert_eq!(saved.tiles.get(&tile_bucket(&cold_cfg)), Some(&8),
+               "artifact must record the resolved tile for the bucket");
+
+    let warm_cfg = EpConfig { tile_rows: 0, ..cold_cfg };
+    let (engine, info) = engine_from_config_with_info(&warm_cfg).unwrap();
+    assert!(!info.tile_probed, "run 2 must warm-start from the artifact");
+    assert!(info.calibration_loaded);
+    assert_eq!(info.tile_rows, 8);
+    let mut t = EpTrainer::new(engine, warm_cfg).unwrap();
+    t.set_build_info(info);
+    assert_eq!(t.run().unwrap().losses, cold,
+               "warm run diverged from the cold run");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn warm_rates_reproduce_the_overlap_projections() {
+    // an engine rebuilt from a saved artifact prices its simulated
+    // timeline with the artifact's rates: its OverlapReport must equal
+    // that of an engine configured with those rates directly
+    let path = tmp_artifact("rates");
+    Calibration { link_gbps: 3.25, compute_gflops: 1.5,
+                  tiles: Default::default() }
+        .save(&path)
+        .unwrap();
+    let base = EpConfig { pipeline_chunks: 2, ..swiglu_cfg(2) };
+    let warm_cfg = EpConfig { calibration_path: path.clone(), ..base.clone() };
+    let direct_cfg = EpConfig { link_gbps: 3.25, compute_gflops: 1.5, ..base };
+    let report_of = |cfg: &EpConfig| {
+        let (mut engine, _) = engine_from_config_with_info(cfg).unwrap();
+        let (batch, _) = step_batch_from_config(cfg).unwrap();
+        let _ = engine.forward(&batch).unwrap();
+        engine.overlap_report().expect("pipelined engines report overlap")
+    };
+    let warm = report_of(&warm_cfg);
+    let direct = report_of(&direct_cfg);
+    assert_eq!(warm.critical_path_s.to_bits(), direct.critical_path_s.to_bits(),
+               "warm projections diverged from directly-configured rates");
+    assert_eq!(warm.serial_path_s().to_bits(), direct.serial_path_s().to_bits());
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]

@@ -16,6 +16,10 @@
 //! * per-rank peak resident bytes (data + comm buffers) never exceed the
 //!   barrier engine's, and the comm-buffer window strictly shrinks for
 //!   K > 1.
+//!
+//! PR-6 addition: the full bit-identity matrix re-run with SwiGLU
+//! (gated) experts — the chunked pipeline must stream the gate chain
+//! through the same staging tiles without drifting a bit.
 
 use moeblaze::config::ep::{ChunkBalance, EpConfig};
 use moeblaze::coordinator::engine::{engine_from_config, ExecutionEngine,
@@ -319,7 +323,8 @@ fn row_balanced_chunks_flatten_a_skewed_router_bit_identically() {
             "rows balance did not flatten the hot chunk: {metrics:?}");
     // hand-checked bounds: 16 * fwd_flops vs 11 * fwd_flops
     let per_row =
-        moeblaze::coordinator::pipeline::timeline::fwd_flops_per_row(d, h);
+        moeblaze::coordinator::pipeline::timeline::fwd_flops_per_row(d, h,
+                                                                     false);
     assert_eq!(metrics[0], 16 * per_row);
     assert_eq!(metrics[1], 11 * per_row);
 }
@@ -417,6 +422,81 @@ fn pipelined_outputs_are_tile_size_invariant_and_recalibration_moves_rates_only(
         assert_eq!(out2, reference.as_ref().unwrap().0,
                    "tile={tile}: recalibration changed the numerics");
     }
+}
+
+#[test]
+fn swiglu_bit_identity_matrix_chunks_ranks_policies() {
+    // the ISSUE-3 matrix re-run gated: pipelined SwiGLU vs the barrier
+    // engine on the same gated store — outputs, grads, and traffic,
+    // K ∈ {1, 2, 4} × R ∈ {1, 2, 4, 8} × every checkpoint policy
+    let (l, e, k, d, h) = (72usize, 8usize, 2usize, 10usize, 14usize);
+    let batch = random_batch(l, e, k, d, 0.8, 31);
+    let store = ExpertStore::init_gated(e, d, h, 9, true);
+    assert!(store.gated());
+    let d_out: Vec<f32> = {
+        let mut rng = Rng::new(5);
+        rng.normal_vec(l * d, 1.0)
+    };
+    for ranks in [1usize, 2, 4, 8] {
+        let topo = EpTopology::new(ranks, e).unwrap();
+        for policy in CheckpointPolicy::ALL {
+            let mut barrier =
+                ShardedEngine::with_policy(topo.clone(), &store, ranks, policy)
+                    .unwrap();
+            let ref_handle = barrier.forward(&batch).unwrap();
+            let ref_y = ref_handle.output().to_vec();
+            let ref_grads = ref_handle.backward(&mut barrier, &d_out).unwrap();
+            let ref_traffic = barrier.traffic();
+
+            for chunks in [1usize, 2, 4] {
+                let mut eng = PipelinedEngine::with_policy(
+                    topo.clone(), &store, ranks, policy, chunks,
+                    CostModel::default())
+                    .unwrap();
+                let handle = eng.forward(&batch).unwrap();
+                assert_eq!(handle.output(), &ref_y[..],
+                           "swiglu R={ranks} K={chunks} {policy}: outputs \
+                            diverged");
+                let grads = handle.backward(&mut eng, &d_out).unwrap();
+                assert_eq!(grads, ref_grads,
+                           "swiglu R={ranks} K={chunks} {policy}: grads \
+                            diverged");
+                assert_eq!(eng.traffic(), ref_traffic,
+                           "swiglu R={ranks} K={chunks} {policy}: traffic \
+                            diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn swiglu_timeline_prices_the_third_gemm() {
+    // same routing, same cost model: the gated forward prices 3 GEMMs
+    // per row vs 2 ungated, so the simulated compute time must scale by
+    // exactly 3/2 while the exchanged bytes stay put (token rows only)
+    let (l, e, k, d, h) = (64usize, 8usize, 2usize, 8usize, 12usize);
+    let batch = random_batch(l, e, k, d, 0.6, 55);
+    let topo = EpTopology::new(4, e).unwrap();
+    let sim_fwd_compute = |gated: bool| {
+        let store = ExpertStore::init_gated(e, d, h, 9, gated);
+        let mut eng = PipelinedEngine::new(topo.clone(), &store, 4, 2).unwrap();
+        let _ = eng.forward(&batch).unwrap();
+        let rep = eng.overlap_report().unwrap();
+        let secs: f64 = rep
+            .spans
+            .iter()
+            .filter(|s| s.phase == Phase::Compute && !s.backward)
+            .map(|s| s.end_s - s.start_s)
+            .sum();
+        (secs, rep.exchange_bytes)
+    };
+    let (plain_s, plain_bytes) = sim_fwd_compute(false);
+    let (gated_s, gated_bytes) = sim_fwd_compute(true);
+    assert_eq!(plain_bytes, gated_bytes,
+               "the gate GEMM must not move extra rows");
+    assert!((gated_s / plain_s - 1.5).abs() < 1e-9,
+            "gated/ungated simulated compute ratio {} != 3/2",
+            gated_s / plain_s);
 }
 
 #[test]

@@ -30,7 +30,10 @@ fn random_models(rng: &mut Rng, layers: usize, ranks: usize) -> Vec<LayerModel> 
             let g = synthetic_gating(rng, tokens, e, k, skew);
             let disp = parallel_build(&g.topk_ids, tokens, e, k);
             let topo = EpTopology::new(ranks, e).unwrap();
-            LayerModel::from_routing(l, &disp, &topo, d, h)
+            // gatedness varies per layer draw — the planner invariants
+            // must hold for SiLU and SwiGLU layer models alike
+            let gated = rng.next_u64() % 2 == 1;
+            LayerModel::from_routing(l, &disp, &topo, d, h, gated)
         })
         .collect()
 }

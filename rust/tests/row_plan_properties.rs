@@ -110,7 +110,7 @@ fn row_index_plan_round_trips_to_packed_buffer_bytes_over_fuzzed_gatings() {
             let rin = plan.remote_in_rows(rank);
             let rout = plan.remote_return_rows(rank);
             let packed_bytes = plan.packed_buffer_bytes(rank, d, 4);
-            let staged = staging_bytes(tile, d as u64, 4, rin, rout);
+            let staged = staging_bytes(tile, d as u64, 4, rin, rout, 0);
             let expect = u64::from(rin > 0) * tile_bytes
                 + u64::from(rout > 0) * tile_bytes;
             assert_eq!(staged, expect,

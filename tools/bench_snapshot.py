@@ -1,10 +1,12 @@
-"""Snapshot the PR-5 perf baseline: run `ep-bench --json-out` on the
-Figure-2-derived fixture and write BENCH_PR5.json at the repo root, so
-the bench trajectory (tokens/s + peak comm bytes, old packed path vs new
-index-driven path) is a reproducible artifact instead of a console line.
+"""Snapshot the ep-bench perf baseline: run `ep-bench --json-out` over
+the snapshot matrix (activation x tile policy) on the Figure-2-derived
+fixture and merge the per-run JSON objects into one artifact at --out,
+so the bench trajectory (tokens/s + peak comm bytes, old packed path vs
+new index-driven path, SiLU vs SwiGLU, static vs autotuned tiles) is a
+reproducible artifact instead of a console line.
 
 Usage:
-    python tools/bench_snapshot.py [--out BENCH_PR5.json]
+    python tools/bench_snapshot.py --out BENCH_PR6.json
 
 Requires a Rust toolchain (cargo) — the build container used for the
 Python mirrors has none, so CI runs this from the non-blocking
@@ -16,6 +18,7 @@ import pathlib
 import shutil
 import subprocess
 import sys
+import tempfile
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
@@ -33,11 +36,32 @@ FIXTURE = [
     "--seed", "7",
 ]
 
+# The snapshot matrix: (row name, extra ep-bench flags). `--tile-rows 0`
+# is the autotune path — the probed tile lands in the row's `tile_rows`.
+MATRIX = [
+    ("silu", ["--activation", "silu"]),
+    ("swiglu", ["--activation", "swiglu"]),
+    ("silu_tile_auto", ["--activation", "silu", "--tile-rows", "0"]),
+    ("swiglu_tile_auto", ["--activation", "swiglu", "--tile-rows", "0"]),
+]
+
+
+def run_one(name, extra, steps, tmpdir):
+    row_out = pathlib.Path(tmpdir) / f"{name}.json"
+    cmd = ["cargo", "run", "--release", "--", "ep-bench",
+           "--steps", steps, "--json-out", str(row_out)] + FIXTURE + extra
+    print(f"bench_snapshot [{name}]:", " ".join(cmd))
+    proc = subprocess.run(cmd, cwd=ROOT)
+    if proc.returncode != 0:
+        raise RuntimeError(f"ep-bench [{name}] exited {proc.returncode}")
+    return json.loads(row_out.read_text())
+
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--out", default="BENCH_PR5.json",
-                    help="output path, relative to the repo root")
+    ap.add_argument("--out", required=True,
+                    help="output path (e.g. BENCH_PR6.json), relative to "
+                         "the repo root")
     ap.add_argument("--steps", default="2",
                     help="bench steps passed through to ep-bench")
     args = ap.parse_args()
@@ -47,32 +71,40 @@ def main() -> int:
               "run from a toolchain-equipped checkout", file=sys.stderr)
         return 1
 
-    out = ROOT / args.out
-    cmd = ["cargo", "run", "--release", "--", "ep-bench",
-           "--steps", args.steps, "--json-out", str(out)] + FIXTURE
-    print("bench_snapshot:", " ".join(cmd))
-    proc = subprocess.run(cmd, cwd=ROOT)
-    if proc.returncode != 0:
-        print(f"bench_snapshot: ep-bench exited {proc.returncode}",
-              file=sys.stderr)
-        return proc.returncode
+    rows = {}
+    warnings = 0
+    with tempfile.TemporaryDirectory() as tmpdir:
+        for name, extra in MATRIX:
+            snap = run_one(name, extra, args.steps, tmpdir)
+            rows[name] = snap
+            speedup = snap.get("speedup", 0.0)
+            old = snap.get("baseline", {})
+            new = snap.get("indexed", {})
+            print(f"  [{name}] act={snap.get('activation', '?')} "
+                  f"tile_rows={snap.get('tile_rows', '?')}"
+                  f"{' (autotuned)' if snap.get('tile_autotuned') else ''}")
+            print(f"    old packed path : "
+                  f"{old.get('tokens_per_sec', 0):.0f} tokens/s, peak rank "
+                  f"comm {old.get('peak_rank_comm_bytes', 0):.0f} B")
+            print(f"    new indexed path: "
+                  f"{new.get('tokens_per_sec', 0):.0f} tokens/s, peak rank "
+                  f"comm {new.get('peak_rank_comm_bytes', 0):.0f} B")
+            print(f"    speedup         : {speedup:.2f}x")
+            if speedup < 1.5:
+                print(f"bench_snapshot: WARNING — [{name}] speedup below the "
+                      "1.5x acceptance bar on this host", file=sys.stderr)
+                warnings += 1
+            if new.get("peak_rank_comm_bytes", 0) \
+                    >= old.get("peak_rank_comm_bytes", 1):
+                print(f"bench_snapshot: WARNING — [{name}] staging bytes did "
+                      "not drop below the packed buffers", file=sys.stderr)
+                warnings += 1
 
-    snap = json.loads(out.read_text())
-    speedup = snap.get("speedup", 0.0)
-    old = snap.get("baseline", {})
-    new = snap.get("indexed", {})
-    print(f"bench_snapshot: wrote {out}")
-    print(f"  old packed path : {old.get('tokens_per_sec', 0):.0f} tokens/s, "
-          f"peak rank comm {old.get('peak_rank_comm_bytes', 0):.0f} B")
-    print(f"  new indexed path: {new.get('tokens_per_sec', 0):.0f} tokens/s, "
-          f"peak rank comm {new.get('peak_rank_comm_bytes', 0):.0f} B")
-    print(f"  speedup         : {speedup:.2f}x")
-    if speedup < 1.5:
-        print("bench_snapshot: WARNING — speedup below the 1.5x acceptance "
-              "bar on this host", file=sys.stderr)
-    if new.get("peak_rank_comm_bytes", 0) >= old.get("peak_rank_comm_bytes", 1):
-        print("bench_snapshot: WARNING — staging bytes did not drop below "
-              "the packed buffers", file=sys.stderr)
+    out = ROOT / args.out
+    out.write_text(json.dumps({"bench": "ep_bench_matrix", "runs": rows},
+                              indent=2, sort_keys=True) + "\n")
+    print(f"bench_snapshot: wrote {len(rows)} runs to {out}"
+          + (f" ({warnings} warnings)" if warnings else ""))
     return 0
 
 

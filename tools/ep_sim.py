@@ -1024,3 +1024,282 @@ for case in range(60):
             assert fits == (floor <= budget), f"planner case {case}"
 print("planner mirror OK: greedy plans fit every feasible budget, projected "
       "peak monotone in the budget, exhaustive feasibility agrees")
+
+# ===========================================================================
+# Gated-expert (SwiGLU) mirror — PR 6, coordinator/kernels.rs +
+# engine.rs `expert_backward_row_swiglu`.
+#
+# The gated expert computes, per routed row:
+#   pre = W1 @ x + b1        (the SiLU pre-activation chain)
+#   gate = W3 @ x            (no gate bias)
+#   z   = silu(pre) * gate
+#   y   = W2 @ z + b2
+# and the backward folds the gate product through both branches:
+#   dz = W2^T @ dy
+#   da = (dz * gate) * sig * (1 + pre * (1 - sig))    [SiLU' chain]
+#   dg = dz * silu(pre)
+#   dW1 += da x^T,  dW3 += dg x^T,  dx = W1^T da + W3^T dg
+#
+# Verified here two ways:
+#   * float64 numeric gradients (central differences, eps = 1e-6,
+#     loss = dy . y) against the analytic formulas, for every parameter
+#     AND the input — the oracle the Rust row kernel encodes;
+#   * tiled blocked-vs-row parity fuzz (float32, bitwise) across
+#     R x tile x checkpoint policy, mirroring the zero-materialization
+#     hot path with the extra gate chain in the same staging tiles.
+# ===========================================================================
+
+def swiglu_fwd(p, x, want_hidden):
+    pre = (p['w1'] @ x + p['b1']).astype(f32)
+    gate = (p['w3'] @ x).astype(f32)
+    act = (silu32(pre) * gate).astype(f32)
+    y = (p['w2'] @ act + p['b2']).astype(f32)
+    return (y, pre, gate) if want_hidden else (y, None, None)
+
+def swiglu_bwd_row(p, g, x, dy, pre, gate):
+    # mirrors expert_backward_row_swiglu in engine.rs
+    act = (silu32(pre) * gate).astype(f32)
+    g['b2'] += dy
+    g['w2'] += np.outer(dy, act).astype(f32)
+    dz = (p['w2'].T @ dy).astype(f32)
+    sig = (1 / (1 + np.exp(-pre))).astype(f32)
+    da = ((dz * gate) * sig * (1 + pre * (1 - sig))).astype(f32)
+    dg = (dz * silu32(pre)).astype(f32)
+    g['b1'] += da
+    g['w1'] += np.outer(da, x).astype(f32)
+    g['w3'] += np.outer(dg, x).astype(f32)
+
+def zeros_like_params_gated(d, h):
+    z = zeros_like_params(d, h)
+    z['w3'] = np.zeros((h, d), f32)
+    return z
+
+def init_experts_gated(E, d, h, rng):
+    # draw order mirrors ExpertParams::init_gated: w1, w2, then w3
+    # (scale sqrt(1/d), like w1)
+    out = []
+    for _ in range(E):
+        p = dict(w1=rng.standard_normal((h, d)).astype(f32) * f32(d ** -0.5),
+                 b1=np.zeros(h, f32),
+                 w2=rng.standard_normal((d, h)).astype(f32) * f32(h ** -0.5),
+                 b2=np.zeros(d, f32))
+        p['w3'] = rng.standard_normal((h, d)).astype(f32) * f32(d ** -0.5)
+        out.append(p)
+    return out
+
+# -- float64 numeric-gradient oracle ----------------------------------------
+
+def swiglu_fwd64(p, x):
+    pre = p['w1'] @ x + p['b1']
+    gate = p['w3'] @ x
+    return p['w2'] @ (pre / (1 + np.exp(-pre)) * gate) + p['b2']
+
+rng = np.random.default_rng(2026)
+for trial in range(5):
+    d_n, h_n = 5, 7
+    p64 = dict(w1=rng.standard_normal((h_n, d_n)),
+               b1=rng.standard_normal(h_n),
+               w2=rng.standard_normal((d_n, h_n)),
+               b2=rng.standard_normal(d_n),
+               w3=rng.standard_normal((h_n, d_n)))
+    x64 = rng.standard_normal(d_n)
+    dy64 = rng.standard_normal(d_n)
+    pre = p64['w1'] @ x64 + p64['b1']
+    gate = p64['w3'] @ x64
+    sig = 1 / (1 + np.exp(-pre))
+    sil = pre * sig
+    analytic = dict(b2=dy64.copy(), w2=np.outer(dy64, sil * gate))
+    dz = p64['w2'].T @ dy64
+    da = (dz * gate) * sig * (1 + pre * (1 - sig))
+    dg = dz * sil
+    analytic['b1'] = da
+    analytic['w1'] = np.outer(da, x64)
+    analytic['w3'] = np.outer(dg, x64)
+    dx = p64['w1'].T @ da + p64['w3'].T @ dg
+    eps = 1e-6
+    loss = lambda: float(dy64 @ swiglu_fwd64(p64, x64))
+    for key in ('w1', 'b1', 'w2', 'b2', 'w3'):
+        arr = p64[key]
+        num = np.zeros_like(arr)
+        it = np.nditer(arr, flags=['multi_index'])
+        for _ in it:
+            idx = it.multi_index
+            orig = arr[idx]
+            arr[idx] = orig + eps
+            lp = loss()
+            arr[idx] = orig - eps
+            lm = loss()
+            arr[idx] = orig
+            num[idx] = (lp - lm) / (2 * eps)
+        rel = np.abs(num - analytic[key]).max() / max(np.abs(analytic[key]).max(), 1.0)
+        assert rel < 1e-6, f"swiglu trial {trial}: d{key} rel err {rel:.2e}"
+    num_dx = np.zeros_like(x64)
+    for i in range(d_n):
+        orig = x64[i]
+        x64[i] = orig + eps
+        lp = loss()
+        x64[i] = orig - eps
+        lm = loss()
+        x64[i] = orig
+        num_dx[i] = (lp - lm) / (2 * eps)
+    rel = np.abs(num_dx - dx).max() / max(np.abs(dx).max(), 1.0)
+    assert rel < 1e-6, f"swiglu trial {trial}: dx rel err {rel:.2e}"
+print("swiglu numeric gradients OK: 5 trials, every parameter + dx within "
+      "1e-6 of float64 central differences")
+
+# -- tiled blocked-vs-row gated parity fuzz ---------------------------------
+
+def single_fwd_bwd_swiglu(d, params, x, gates, dm, policy, d_out, grads):
+    """Row-by-row gated reference: forward combine + backward into
+    `grads`, saved state per checkpoint policy ((pre, gate) is the gated
+    hidden pair — silu(pre)*gate is recomputed from it in backward)."""
+    l, e, k = d['l'], d['e'], d['k']
+    n = l * k
+    hdim = params[0]['b1'].size
+    save_hidden = policy == 'save-all'
+    save_inputs = policy != 'recompute-all'
+    ys = np.zeros((n, dm), f32)
+    xs = np.zeros((n, dm), f32) if save_inputs else None
+    pre_s = np.zeros((n, hdim), f32) if save_hidden else None
+    gate_s = np.zeros((n, hdim), f32) if save_hidden else None
+    for ex in range(e):
+        for pos in range(d['off'][ex], d['off'][ex + 1]):
+            xin = x[d['eti'][pos]]
+            if save_inputs:
+                xs[pos] = xin
+            y, pre, gate = swiglu_fwd(params[ex], xin, save_hidden)
+            if save_hidden:
+                pre_s[pos], gate_s[pos] = pre, gate
+            ys[pos] = y
+    out = np.zeros((l, dm), f32)
+    for i in range(l):
+        for j in range(k):
+            pos = d['tim'][i * k + j]
+            out[i] = out[i] + np.float32(gates[i * k + j]) * ys[pos]
+    origin = [0] * n
+    for slot, pos in enumerate(d['tim']):
+        origin[pos] = slot
+    for ex in range(e):
+        for pos in range(d['off'][ex], d['off'][ex + 1]):
+            tok = d['eti'][pos]
+            dy = (np.float32(gates[origin[pos]]) * d_out[tok]).astype(f32)
+            xin = xs[pos] if save_inputs else x[tok]
+            if save_hidden:
+                pre, gate = pre_s[pos], gate_s[pos]
+            else:
+                pre = (params[ex]['w1'] @ xin + params[ex]['b1']).astype(f32)
+                gate = (params[ex]['w3'] @ xin).astype(f32)
+            swiglu_bwd_row(params[ex], grads[ex], xin, dy, pre, gate)
+    return out
+
+def indexed_blocked_fwd_bwd_swiglu(d, params, x, gates, dm, R, strided, tile,
+                                   policy, d_out, grads):
+    """Zero-materialization gated step: gather-by-index in tiles, the
+    gate chain staged alongside the pre chain in the same tile pass."""
+    l, k = d['l'], d['k']
+    per_rank, rows_between = row_index_plan(d, R, strided)
+    dispatch_bytes = sum(rows_between[s][t] * dm * 4
+                         for s in range(R) for t in range(R) if s != t)
+    ys_of, saved = [], []
+    ret_lookup = [None] * (l * k)
+    for r in range(R):
+        rr = per_rank[r]
+        nl = len(rr['toks'])
+        for ls, o in enumerate(rr['gslots']):
+            ret_lookup[o] = (r, ls)
+        ys = np.zeros((nl, dm), f32)
+        xs = np.zeros((nl, dm), f32) if policy != 'recompute-all' else None
+        hdim = params[0]['b1'].size
+        pre_s = np.zeros((nl, hdim), f32) if policy == 'save-all' else None
+        gate_s = np.zeros((nl, hdim), f32) if policy == 'save-all' else None
+        for i, ex in enumerate(rr['experts']):
+            lo, hi = rr['off'][i], rr['off'][i + 1]
+            t0 = lo
+            while t0 < hi:
+                rows = min(tile, hi - t0)
+                for rrow in range(rows):
+                    ls = t0 + rrow
+                    xin = x[rr['toks'][ls]]
+                    if xs is not None:
+                        xs[ls] = xin
+                    y, pre, gate = swiglu_fwd(params[ex], xin,
+                                              policy == 'save-all')
+                    if policy == 'save-all':
+                        pre_s[ls], gate_s[ls] = pre, gate
+                    ys[ls] = y
+                t0 += rows
+        ys_of.append(ys)
+        saved.append((xs, (pre_s, gate_s) if policy == 'save-all' else None))
+    out = np.zeros((l, dm), f32)
+    for home in range(R):
+        for t in range(l):
+            if rank_of_token(t, l, R) != home:
+                continue
+            for j in range(k):
+                r, ls = ret_lookup[t * k + j]
+                out[t] = out[t] + np.float32(gates[t * k + j]) * ys_of[r][ls]
+    for r in range(R):
+        rr = per_rank[r]
+        xs, hidden = saved[r]
+        for i, ex in enumerate(rr['experts']):
+            lo, hi = rr['off'][i], rr['off'][i + 1]
+            t0 = lo
+            while t0 < hi:
+                rows = min(tile, hi - t0)
+                for rrow in range(rows):
+                    ls = t0 + rrow
+                    tok = rr['toks'][ls]
+                    dy = (np.float32(gates[rr['gslots'][ls]])
+                          * d_out[tok]).astype(f32)
+                    xin = xs[ls] if xs is not None else x[tok]
+                    if hidden is not None:
+                        pre, gate = hidden[0][ls], hidden[1][ls]
+                    else:
+                        pre = (params[ex]['w1'] @ xin
+                               + params[ex]['b1']).astype(f32)
+                        gate = (params[ex]['w3'] @ xin).astype(f32)
+                    swiglu_bwd_row(params[ex], grads[ex], xin, dy, pre, gate)
+                t0 += rows
+    return out, dispatch_bytes
+
+def grads_bytes_gated(grads):
+    return b''.join(g[kk].tobytes() for g in grads
+                    for kk in ('w1', 'b1', 'w2', 'b2', 'w3'))
+
+random.seed(11)
+gated_cases = 0
+for case in range(30):
+    R = random.choice([1, 2, 4])
+    E = R * random.randint(1, 3)
+    L = random.randint(4, 40)
+    K_top = random.randint(1, min(E, 3))
+    DM, H2 = 5, 7
+    tile = random.choice([1, 2, 3, 8, 64])
+    strided = random.random() < 0.5
+    policy = random.choice(['save-all', 'save-inputs', 'recompute-all'])
+    rng = np.random.default_rng(7000 + case)
+    ids = np.concatenate([rng.choice(E, K_top, replace=False)
+                          for _ in range(L)]).astype(int)
+    params = init_experts_gated(E, DM, H2, rng)
+    x = rng.standard_normal((L, DM)).astype(f32)
+    gates = rng.random(L * K_top).astype(f32)
+    d_out = rng.standard_normal((L, DM)).astype(f32)
+    d_full = build(list(ids), L, E, K_top)
+    ref_grads = [zeros_like_params_gated(DM, H2) for _ in range(E)]
+    ref_out = single_fwd_bwd_swiglu(d_full, params, x, gates, DM, policy,
+                                    d_out, ref_grads)
+    got_grads = [zeros_like_params_gated(DM, H2) for _ in range(E)]
+    got_out, derived = indexed_blocked_fwd_bwd_swiglu(
+        d_full, params, x, gates, DM, R, strided, tile, policy, d_out,
+        got_grads)
+    assert ref_out.tobytes() == got_out.tobytes(), \
+        f"swiglu case {case}: outputs diverged (R={R} tile={tile} {policy})"
+    assert grads_bytes_gated(ref_grads) == grads_bytes_gated(got_grads), \
+        f"swiglu case {case}: grads diverged (R={R} tile={tile} {policy})"
+    pb, _ = plan_bytes(d_full, R, strided, DM)
+    assert derived == pb, \
+        f"swiglu case {case}: derived bytes {derived} != plan {pb}"
+    gated_cases += 1
+print(f"swiglu parity OK: {gated_cases} fuzz cases, gated blocked path "
+      "bit-identical to the row reference across R x tile x policy, "
+      "derived bytes == plan")
