@@ -211,6 +211,38 @@ impl Default for EpConfig {
 }
 
 impl EpConfig {
+    /// Every key `[ep]` understands — `from_toml` rejects anything else
+    /// by name instead of silently ignoring it.
+    pub const KNOWN_KEYS: &'static [&'static str] = &[
+        "ranks",
+        "placement",
+        "tokens",
+        "num_experts",
+        "top_k",
+        "d_model",
+        "d_hidden",
+        "skew",
+        "seed",
+        "steps",
+        "lr",
+        "grad_accum",
+        "optimizer",
+        "checkpoint",
+        "num_layers",
+        "mem_budget_bytes",
+        "pipeline_chunks",
+        "chunk_balance",
+        "activation",
+        "tile_rows",
+        "link_gbps",
+        "compute_gflops",
+        "calibrate",
+        "lr_schedule",
+        "clip_norm",
+        "metrics_path",
+        "calibration_path",
+    ];
+
     pub fn validate(&self) -> Result<(), String> {
         if self.ranks == 0 {
             return Err("ep.ranks must be > 0".into());
@@ -274,6 +306,7 @@ impl EpConfig {
     }
 
     pub fn from_toml(t: &Toml, prefix: &str) -> Result<EpConfig, String> {
+        t.reject_unknown_keys(prefix, Self::KNOWN_KEYS)?;
         let d = EpConfig::default();
         let key = |k: &str| format!("{prefix}.{k}");
         // one read of the checkpoint key feeds both the policy and the
@@ -489,6 +522,47 @@ mod tests {
     fn from_toml_rejects_invalid() {
         let t = Toml::parse("[ep]\nranks = 3\nnum_experts = 16").unwrap();
         assert!(EpConfig::from_toml(&t, "ep").is_err());
+    }
+
+    #[test]
+    fn from_toml_rejects_unknown_keys_by_name() {
+        // a typo'd key fails loudly instead of silently using the default
+        let t = Toml::parse("[ep]\nranks = 4\ntopk = 2").unwrap();
+        let err = EpConfig::from_toml(&t, "ep").unwrap_err();
+        assert!(err.contains("`topk`"), "{err}");
+        assert!(err.contains("[ep]"), "{err}");
+        assert!(err.contains("top_k"), "named-key error lists known keys: {err}");
+        // every documented key passes the check
+        let all = EpConfig::KNOWN_KEYS
+            .iter()
+            .map(|k| match *k {
+                "placement" => format!("{k} = \"contiguous\""),
+                "optimizer" => format!("{k} = \"sgd\""),
+                "checkpoint" => format!("{k} = \"save-inputs\""),
+                "chunk_balance" => format!("{k} = \"tokens\""),
+                "activation" => format!("{k} = \"silu\""),
+                "lr_schedule" => format!("{k} = \"constant\""),
+                "metrics_path" | "calibration_path" => format!("{k} = \"\""),
+                "calibrate" => format!("{k} = false"),
+                "skew" => format!("{k} = 0.7"),
+                "lr" => format!("{k} = 0.05"),
+                "link_gbps" => format!("{k} = 50.0"),
+                "compute_gflops" => format!("{k} = 200.0"),
+                "clip_norm" => format!("{k} = 0.0"),
+                "pipeline_chunks" | "mem_budget_bytes" => format!("{k} = 0"),
+                "tokens" => format!("{k} = 64"),
+                "num_experts" => format!("{k} = 8"),
+                _ => format!("{k} = 1"),
+            })
+            .collect::<Vec<_>>()
+            .join("\n");
+        let t = Toml::parse(&format!("[ep]\n{all}")).unwrap();
+        EpConfig::from_toml(&t, "ep").unwrap();
+        // sections other than [ep] stay out of scope for the check
+        let t = Toml::parse("[ep]\nranks = 2\nnum_experts = 8\n\
+                             [serving]\nticks = 5")
+            .unwrap();
+        EpConfig::from_toml(&t, "ep").unwrap();
     }
 
     #[test]

@@ -3,10 +3,12 @@
 pub mod ep;
 pub mod model;
 pub mod paper;
+pub mod serving;
 pub mod toml;
 pub mod train;
 
 pub use ep::{EpConfig, Placement};
+pub use serving::{AdmissionPolicy, ServingConfig};
 pub use model::{Activation, Impl, MoeConfig};
 pub use paper::{paper_configs, scaled_configs, PaperConfig, PAPER_BLOCK, SCALED_BLOCK};
 pub use train::TrainConfig;

@@ -1,0 +1,238 @@
+//! Serving configuration (`[serving]` TOML section, CLI-overridable).
+//!
+//! Drives the forward-only serving loop (`serving::ServeLoop`): how many
+//! engine ticks to run, the per-tick token budget the continuous batcher
+//! aggregates up to, the request-queue depth, the admission policy for
+//! requests the capacity projection cannot fit, and the synthetic
+//! open-loop traffic process (seeded arrival rate + request-size range).
+//! The engine/workload shape itself stays in `[ep]` — serving reuses the
+//! exact training data path.
+
+use std::fmt;
+
+use super::toml::Toml;
+
+/// What happens to a queued request the current tick cannot fit (token
+/// budget or projected per-rank bytes over `[ep] mem_budget_bytes`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Strict-FIFO wait: the request stays at the queue head and blocks
+    /// the tick's drain until a later, smaller tick fits it. Lossless
+    /// for every feasible request, at the cost of head-of-line latency.
+    /// (A request whose projection exceeds the budget even alone can
+    /// never be served and is rejected at arrival under both policies.)
+    #[default]
+    Queue,
+    /// Load shedding: a request that does not fit the tick's remaining
+    /// capacity is rejected immediately and the drain continues with
+    /// the next queued request — bounded latency, no head-of-line
+    /// blocking, maximal tick utilization.
+    Reject,
+}
+
+impl AdmissionPolicy {
+    pub fn parse(s: &str) -> Result<AdmissionPolicy, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "queue" | "wait" => Ok(AdmissionPolicy::Queue),
+            "reject" | "shed" => Ok(AdmissionPolicy::Reject),
+            _ => Err(format!("unknown admission policy `{s}` (queue|reject)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmissionPolicy::Queue => "queue",
+            AdmissionPolicy::Reject => "reject",
+        }
+    }
+}
+
+impl fmt::Display for AdmissionPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Configuration of one `ep-serve` run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    /// engine ticks to run (one aggregated forward per non-empty tick)
+    pub ticks: usize,
+    /// per-tick token budget: the continuous batcher aggregates queued
+    /// requests into one `StepBatch` of at most this many tokens
+    pub tick_tokens: usize,
+    /// request-queue capacity; arrivals beyond it are rejected
+    pub max_queue_depth: usize,
+    /// what happens to requests the current tick cannot fit
+    pub admission: AdmissionPolicy,
+    /// open-loop traffic: mean request arrivals per tick (Poisson)
+    pub arrival_rate: f64,
+    /// request-size distribution: tokens per request drawn uniformly
+    /// from `min_request_tokens..=max_request_tokens`
+    pub min_request_tokens: usize,
+    pub max_request_tokens: usize,
+    /// traffic-generator seed (separate stream from `[ep] seed`, which
+    /// keeps seeding the expert weights)
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            ticks: 32,
+            tick_tokens: 256,
+            max_queue_depth: 64,
+            admission: AdmissionPolicy::default(),
+            arrival_rate: 4.0,
+            min_request_tokens: 1,
+            max_request_tokens: 32,
+            seed: 7,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Every key `[serving]` understands — `from_toml` rejects anything
+    /// else by name instead of silently ignoring it.
+    pub const KNOWN_KEYS: &'static [&'static str] = &[
+        "ticks",
+        "tick_tokens",
+        "max_queue_depth",
+        "admission",
+        "arrival_rate",
+        "min_request_tokens",
+        "max_request_tokens",
+        "seed",
+    ];
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.ticks == 0 {
+            return Err("serving.ticks must be > 0".into());
+        }
+        if self.tick_tokens == 0 {
+            return Err("serving.tick_tokens must be > 0".into());
+        }
+        if self.max_queue_depth == 0 {
+            return Err("serving.max_queue_depth must be > 0".into());
+        }
+        if !(self.arrival_rate > 0.0 && self.arrival_rate.is_finite()) {
+            return Err(format!(
+                "serving.arrival_rate must be positive, got {}",
+                self.arrival_rate
+            ));
+        }
+        // exp(-rate) must stay a positive f64 for the Poisson sampler
+        if self.arrival_rate > 256.0 {
+            return Err(format!(
+                "serving.arrival_rate {} is out of range (max 256 per tick)",
+                self.arrival_rate
+            ));
+        }
+        if self.min_request_tokens == 0 {
+            return Err("serving.min_request_tokens must be > 0".into());
+        }
+        if self.min_request_tokens > self.max_request_tokens {
+            return Err(format!(
+                "serving.min_request_tokens {} exceeds max_request_tokens {}",
+                self.min_request_tokens, self.max_request_tokens
+            ));
+        }
+        // a request larger than the tick budget could never be batched
+        if self.max_request_tokens > self.tick_tokens {
+            return Err(format!(
+                "serving.max_request_tokens {} exceeds tick_tokens {}",
+                self.max_request_tokens, self.tick_tokens
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn from_toml(t: &Toml, prefix: &str) -> Result<ServingConfig, String> {
+        t.reject_unknown_keys(prefix, Self::KNOWN_KEYS)?;
+        let d = ServingConfig::default();
+        let key = |k: &str| format!("{prefix}.{k}");
+        let cfg = ServingConfig {
+            ticks: t.usize_or(&key("ticks"), d.ticks),
+            tick_tokens: t.usize_or(&key("tick_tokens"), d.tick_tokens),
+            max_queue_depth: t.usize_or(&key("max_queue_depth"), d.max_queue_depth),
+            admission: AdmissionPolicy::parse(
+                &t.str_or(&key("admission"), d.admission.name()),
+            )?,
+            arrival_rate: t.f64_or(&key("arrival_rate"), d.arrival_rate),
+            min_request_tokens: t.usize_or(&key("min_request_tokens"),
+                                           d.min_request_tokens),
+            max_request_tokens: t.usize_or(&key("max_request_tokens"),
+                                           d.max_request_tokens),
+            seed: t.usize_or(&key("seed"), d.seed as usize) as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_policy_parse() {
+        assert_eq!(AdmissionPolicy::parse("Queue").unwrap(), AdmissionPolicy::Queue);
+        assert_eq!(AdmissionPolicy::parse("shed").unwrap(), AdmissionPolicy::Reject);
+        assert_eq!(AdmissionPolicy::Reject.name(), "reject");
+        assert!(AdmissionPolicy::parse("drop-newest").is_err());
+        assert_eq!(AdmissionPolicy::default(), AdmissionPolicy::Queue);
+    }
+
+    #[test]
+    fn defaults_validate() {
+        let d = ServingConfig::default();
+        d.validate().unwrap();
+        assert_eq!(d.admission, AdmissionPolicy::Queue);
+        assert!(d.max_request_tokens <= d.tick_tokens);
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let t = Toml::parse(
+            "[serving]\nticks = 10\ntick_tokens = 128\nmax_queue_depth = 8\n\
+             admission = \"reject\"\narrival_rate = 2.5\n\
+             min_request_tokens = 4\nmax_request_tokens = 16\nseed = 11",
+        )
+        .unwrap();
+        let c = ServingConfig::from_toml(&t, "serving").unwrap();
+        assert_eq!(c.ticks, 10);
+        assert_eq!(c.tick_tokens, 128);
+        assert_eq!(c.max_queue_depth, 8);
+        assert_eq!(c.admission, AdmissionPolicy::Reject);
+        assert_eq!(c.arrival_rate, 2.5);
+        assert_eq!(c.min_request_tokens, 4);
+        assert_eq!(c.max_request_tokens, 16);
+        assert_eq!(c.seed, 11);
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        let d = ServingConfig::default;
+        assert!(ServingConfig { ticks: 0, ..d() }.validate().is_err());
+        assert!(ServingConfig { tick_tokens: 0, ..d() }.validate().is_err());
+        assert!(ServingConfig { max_queue_depth: 0, ..d() }.validate().is_err());
+        assert!(ServingConfig { arrival_rate: 0.0, ..d() }.validate().is_err());
+        assert!(ServingConfig { arrival_rate: f64::NAN, ..d() }.validate().is_err());
+        assert!(ServingConfig { arrival_rate: 1e6, ..d() }.validate().is_err());
+        assert!(ServingConfig { min_request_tokens: 0, ..d() }.validate().is_err());
+        assert!(ServingConfig { min_request_tokens: 9, max_request_tokens: 8, ..d() }
+            .validate()
+            .is_err());
+        assert!(ServingConfig { max_request_tokens: 512, tick_tokens: 256, ..d() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn unknown_keys_are_named_errors() {
+        let t = Toml::parse("[serving]\nticks = 4\ntick_budget = 99").unwrap();
+        let err = ServingConfig::from_toml(&t, "serving").unwrap_err();
+        assert!(err.contains("tick_budget"), "{err}");
+        assert!(err.contains("serving"), "{err}");
+    }
+}

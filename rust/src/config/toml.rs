@@ -139,6 +139,22 @@ impl Toml {
             .filter_map(|(k, v)| k.strip_prefix(&pre).map(|r| (r.to_string(), v.clone())))
             .collect()
     }
+
+    /// Config hardening: error on any `[prefix]` key not in `known`, by
+    /// name, instead of letting a typo silently fall back to the
+    /// default. Nested `[prefix.sub]` keys surface as `sub.key` and are
+    /// rejected the same way.
+    pub fn reject_unknown_keys(&self, prefix: &str, known: &[&str]) -> Result<(), String> {
+        for k in self.section(prefix).keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown key `{k}` in [{prefix}] (known keys: {})",
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -285,5 +301,18 @@ top_k = 2
         let m = t.section("model");
         assert!(m.contains_key("d_model"));
         assert!(m.contains_key("moe.top_k"));
+    }
+
+    #[test]
+    fn unknown_key_rejection_names_the_key() {
+        let t = Toml::parse("[model]\nd_model = 8\ndmodel = 9").unwrap();
+        t.reject_unknown_keys("model", &["d_model", "dmodel"]).unwrap();
+        let err = t.reject_unknown_keys("model", &["d_model"]).unwrap_err();
+        assert!(err.contains("`dmodel`"), "{err}");
+        assert!(err.contains("[model]"), "{err}");
+        assert!(err.contains("d_model"), "{err}");
+        // other sections' keys don't leak into the check
+        let t = Toml::parse("[a]\nx = 1\n[b]\nbogus = 2").unwrap();
+        t.reject_unknown_keys("a", &["x"]).unwrap();
     }
 }

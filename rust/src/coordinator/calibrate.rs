@@ -131,6 +131,26 @@ mod tests {
     }
 
     #[test]
+    fn truncated_artifacts_fall_back_to_none() {
+        // a valid artifact cut off at every possible byte boundary must
+        // load as None (cold start), never error or half-load
+        let path = tmp_path("truncated");
+        let mut tiles = BTreeMap::new();
+        tiles.insert("tile:d32:h64:r256:swiglu".to_string(), 32usize);
+        let c = Calibration { link_gbps: 37.5, compute_gflops: 91.25, tiles };
+        c.save(&path).unwrap();
+        let full = fs::read_to_string(&path).unwrap();
+        assert!(Calibration::load(&path).is_some(), "untruncated loads");
+        for cut in 1..full.len() {
+            fs::write(&path, &full[..cut]).unwrap();
+            assert!(Calibration::load(&path).is_none(),
+                    "truncation at byte {cut} must fall back to None, \
+                     got Some from {:?}", &full[..cut]);
+        }
+        fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn save_is_atomic_no_tmp_left_behind() {
         let path = tmp_path("atomic");
         let c = Calibration {

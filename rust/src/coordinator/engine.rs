@@ -2409,6 +2409,31 @@ mod tests {
     }
 
     #[test]
+    fn split_bounds_weighted_edge_cases() {
+        // empty input: no split is possible, even into one part
+        assert!(split_bounds_weighted(&[], 1).is_err());
+        assert!(split_bounds_weighted(&[], 0).is_err());
+        // a single token splits into exactly one chunk and no more
+        assert_eq!(split_bounds_weighted(&[7], 1).unwrap(), vec![0, 1]);
+        assert!(split_bounds_weighted(&[7], 2).is_err());
+        // more parts than tokens is a named error, not a panic
+        assert!(split_bounds_weighted(&[1, 2], 3).is_err());
+        // all weight on one token: the clamp still guarantees strictly
+        // increasing bounds with >= 1 token per chunk
+        let b = split_bounds_weighted(&[0, 0, 100, 0], 2).unwrap();
+        assert_eq!(b.first(), Some(&0));
+        assert_eq!(b.last(), Some(&4));
+        assert!(b.windows(2).all(|w| w[0] < w[1]), "{b:?}");
+        let b = split_bounds_weighted(&[100, 0, 0, 0], 4).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3, 4], "every chunk keeps one token");
+        // all-zero weights degrade to the even token split
+        assert_eq!(split_bounds_weighted(&[0, 0, 0, 0], 2).unwrap(), vec![0, 2, 4]);
+        assert_eq!(split_bounds_weighted(&[0; 5], 2).unwrap(), vec![0, 2, 5]);
+        // balanced weights cut at the weight midpoint, not the token one
+        assert_eq!(split_bounds_weighted(&[9, 1, 1, 1], 2).unwrap(), vec![0, 1, 4]);
+    }
+
+    #[test]
     fn figure2_bit_equality_across_rank_counts() {
         let disp = fig2_expected();
         let mut rng = Rng::new(3);

@@ -33,8 +33,12 @@
 //!   behind the same trait, backward ∂x chaining, per-layer checkpoint
 //!   policies) and the budget-driven smart-checkpoint planner
 //!   (`memory::planner`: pick a per-layer policy vector that fits
-//!   `[ep] mem_budget_bytes` at minimum recompute + re-exchange cost) —
-//!   plus config (`[train]`/`[ep]`), data pipeline, metrics, and
+//!   `[ep] mem_budget_bytes` at minimum recompute + re-exchange cost),
+//!   and the forward-only serving engine (`serving`: continuous
+//!   batching over the identical training data path, capacity-aware
+//!   admission control priced by the memory model, deterministic
+//!   open-loop traffic — see `ep-serve`) — plus config
+//!   (`[train]`/`[ep]`/`[serving]`), data pipeline, metrics, and
 //!   hand-rolled substrates (JSON, TOML, PRNG, thread pool, stats,
 //!   CLI) since this build is fully offline.
 //!
@@ -56,6 +60,7 @@ pub mod dispatch;
 pub mod memory;
 pub mod metrics;
 pub mod runtime;
+pub mod serving;
 pub mod testkit;
 pub mod util;
 

@@ -43,6 +43,19 @@
 //!                                MoeStack when --num-layers > 1, with
 //!                                per-layer policies from the budget
 //!                                planner under --checkpoint auto)
+//!   ep-serve [--ticks T | --steps T] [--tick-tokens N] [--max-queue-depth Q]
+//!            [--admission queue|reject] [--arrival-rate R]
+//!            [--min-request-tokens A --max-request-tokens B]
+//!            [--serve-seed S] [--mem-budget-bytes B]
+//!            [--json-out serve.json] [--config file.toml] ...
+//!                                forward-only serving on the expert-parallel
+//!                                engine (checkpointing forced to
+//!                                recompute-all): continuous batching over a
+//!                                deterministic open-loop request stream,
+//!                                capacity-aware admission priced against
+//!                                --mem-budget-bytes, p50/p95/p99 latency +
+//!                                queue-depth/reject counters; engine shape
+//!                                from `[ep]`, loop knobs from `[serving]`
 //!   train  [--steps N --config file.toml ...]
 //!                                train the MoE LM end-to-end (AOT step)
 //!   inspect                      list artifacts + compile them
@@ -55,6 +68,7 @@ use moeblaze::bench_harness as bh;
 use moeblaze::config::ep::{ChunkBalance, EpConfig, Placement};
 use moeblaze::config::model::Activation;
 use moeblaze::config::paper::{paper_configs, scaled_configs, PAPER_BLOCK, SCALED_BLOCK};
+use moeblaze::config::serving::{AdmissionPolicy, ServingConfig};
 use moeblaze::config::toml::Toml;
 use moeblaze::config::train::TrainConfig;
 use moeblaze::coordinator::engine::{engine_from_config_with_info,
@@ -83,6 +97,7 @@ use moeblaze::memory::report::{memory_figure, render_memory_figure,
                                render_per_rank_memory};
 use moeblaze::metrics::Throughput;
 use moeblaze::runtime::client::Runtime;
+use moeblaze::serving::ServeLoop;
 use moeblaze::util::cli::Args;
 use moeblaze::util::prng::Rng;
 use moeblaze::util::stats::Bench;
@@ -116,6 +131,7 @@ fn run(args: &Args) -> Result<()> {
         Some("ep-sim") => cmd_ep_sim(args),
         Some("ep-bench") => cmd_ep_bench(args),
         Some("ep-train") => cmd_ep_train(args),
+        Some("ep-serve") => cmd_ep_serve(args),
         Some("train") => cmd_train(args),
         Some("inspect") => cmd_inspect(),
         Some(other) => bail!("unknown subcommand `{other}` (see rust/src/main.rs header)"),
@@ -128,7 +144,7 @@ fn run(args: &Args) -> Result<()> {
 
 fn print_usage() {
     println!("moeblaze — memory-efficient MoE training (paper reproduction)");
-    println!("subcommands: configs | memory | speed | dispatch-demo | dispatch-bench | ep-sim | ep-bench | ep-train | train | inspect");
+    println!("subcommands: configs | memory | speed | dispatch-demo | dispatch-bench | ep-sim | ep-bench | ep-train | ep-serve | train | inspect");
     println!("see rust/src/main.rs header or README.md for flags");
 }
 
@@ -795,6 +811,122 @@ fn cmd_ep_train(args: &Args) -> Result<()> {
         } else {
             bail!("verify FAILED: sharded and single-rank loss curves differ");
         }
+    }
+    Ok(())
+}
+
+/// `[serving]` config assembly for ep-serve: TOML section (if --config
+/// is given) + CLI overrides. `--steps` aliases `--ticks` so shared
+/// harnesses (bench matrix smoke cells) can pass their usual step flag;
+/// an explicit `--ticks` wins.
+fn serving_config_from_args(args: &Args, ep: &EpConfig) -> Result<ServingConfig> {
+    let mut scfg = match args.get("config") {
+        Some(path) => {
+            let t = Toml::load(path).map_err(anyhow::Error::msg)?;
+            ServingConfig::from_toml(&t, "serving").map_err(anyhow::Error::msg)?
+        }
+        None => ServingConfig::default(),
+    };
+    if args.get("steps").is_some() && args.get("ticks").is_none() {
+        scfg.ticks = ep.steps;
+    }
+    scfg.ticks = args.usize_or("ticks", scfg.ticks).map_err(anyhow::Error::msg)?;
+    scfg.tick_tokens = args.usize_or("tick-tokens", scfg.tick_tokens)
+        .map_err(anyhow::Error::msg)?;
+    scfg.max_queue_depth = args.usize_or("max-queue-depth", scfg.max_queue_depth)
+        .map_err(anyhow::Error::msg)?;
+    if let Some(a) = args.get("admission") {
+        scfg.admission = AdmissionPolicy::parse(a).map_err(anyhow::Error::msg)?;
+    }
+    scfg.arrival_rate = args.f64_or("arrival-rate", scfg.arrival_rate)
+        .map_err(anyhow::Error::msg)?;
+    scfg.min_request_tokens = args
+        .usize_or("min-request-tokens", scfg.min_request_tokens)
+        .map_err(anyhow::Error::msg)?;
+    scfg.max_request_tokens = args
+        .usize_or("max-request-tokens", scfg.max_request_tokens)
+        .map_err(anyhow::Error::msg)?;
+    scfg.seed = args.u64_or("serve-seed", scfg.seed).map_err(anyhow::Error::msg)?;
+    scfg.validate().map_err(anyhow::Error::msg)?;
+    Ok(scfg)
+}
+
+fn cmd_ep_serve(args: &Args) -> Result<()> {
+    let cfg = ep_config_from_args(args, true)?;
+    let scfg = serving_config_from_args(args, &cfg)?;
+    let mut lp = ServeLoop::new(&cfg, &scfg).map_err(anyhow::Error::msg)?;
+    println!("ep-serve: {} ({} ranks, {} placement), E={} k={} d={} h={} act={}",
+             lp.engine_name(), cfg.ranks, cfg.placement, cfg.num_experts,
+             cfg.top_k, cfg.d_model, cfg.d_hidden, cfg.activation.name());
+    println!("  {} ticks x <= {} tokens, queue <= {} ({} admission), \
+              rate {}/tick, sizes {}..={}, budget {}",
+             scfg.ticks, scfg.tick_tokens, scfg.max_queue_depth,
+             scfg.admission, scfg.arrival_rate, scfg.min_request_tokens,
+             scfg.max_request_tokens,
+             if cfg.mem_budget_bytes > 0 {
+                 human_bytes(cfg.mem_budget_bytes)
+             } else {
+                 "unlimited".to_string()
+             });
+    let r = lp.run().map_err(anyhow::Error::msg)?;
+
+    println!("\nserved {} batches over {} ticks on `{}`: {} tokens, \
+              {:.0} tokens/s (wall-clock)",
+             r.batches, r.ticks, r.engine, r.tokens_served, r.tokens_per_sec());
+    println!("requests: {} generated = {} completed + {} rejected (queue-full) \
+              + {} rejected (capacity) + {} still queued",
+             r.generated, r.completed, r.rejected_queue_full,
+             r.rejected_capacity, r.queued_at_end);
+    println!("queue depth peaked at {}; mean wait {:.2} ticks",
+             r.max_queue_depth_seen, r.mean_wait_ticks);
+    println!("latency: p50 {:.3} ms, p95 {:.3} ms, p99 {:.3} ms (mean {:.3} ms)",
+             r.latency_p50_s * 1e3, r.latency_p95_s * 1e3,
+             r.latency_p99_s * 1e3, r.latency_mean_s * 1e3);
+    if r.budget_bytes > 0 {
+        if r.peak_rank_data_bytes > r.budget_bytes {
+            bail!("measured per-rank peak {} exceeds the serving budget {}",
+                  r.peak_rank_data_bytes, r.budget_bytes);
+        }
+        println!("measured per-rank peak {} within budget {} ✓",
+                 human_bytes(r.peak_rank_data_bytes), human_bytes(r.budget_bytes));
+    } else {
+        println!("measured per-rank peak {} (no budget set)",
+                 human_bytes(r.peak_rank_data_bytes));
+    }
+
+    if let Some(path) = args.get("json-out") {
+        let j = Json::obj(vec![
+            ("bench", Json::str("ep_serve")),
+            ("engine", Json::str(&r.engine)),
+            ("ranks", Json::num(cfg.ranks as f64)),
+            ("num_experts", Json::num(cfg.num_experts as f64)),
+            ("top_k", Json::num(cfg.top_k as f64)),
+            ("d_model", Json::num(cfg.d_model as f64)),
+            ("activation", Json::str(cfg.activation.name())),
+            ("admission", Json::str(scfg.admission.name())),
+            ("ticks", Json::num(r.ticks as f64)),
+            ("tick_tokens", Json::num(scfg.tick_tokens as f64)),
+            ("arrival_rate", Json::num(scfg.arrival_rate)),
+            ("generated", Json::num(r.generated as f64)),
+            ("completed", Json::num(r.completed as f64)),
+            ("rejected_queue_full", Json::num(r.rejected_queue_full as f64)),
+            ("rejected_capacity", Json::num(r.rejected_capacity as f64)),
+            ("queued_at_end", Json::num(r.queued_at_end as f64)),
+            ("max_queue_depth_seen", Json::num(r.max_queue_depth_seen as f64)),
+            ("batches", Json::num(r.batches as f64)),
+            ("tokens_served", Json::num(r.tokens_served as f64)),
+            ("tokens_per_sec", Json::num(r.tokens_per_sec())),
+            ("peak_rank_data_bytes", Json::num(r.peak_rank_data_bytes as f64)),
+            ("budget_bytes", Json::num(r.budget_bytes as f64)),
+            ("latency_p50_ms", Json::num(r.latency_p50_s * 1e3)),
+            ("latency_p95_ms", Json::num(r.latency_p95_s * 1e3)),
+            ("latency_p99_ms", Json::num(r.latency_p99_s * 1e3)),
+            ("latency_mean_ms", Json::num(r.latency_mean_s * 1e3)),
+            ("mean_wait_ticks", Json::num(r.mean_wait_ticks)),
+        ]);
+        std::fs::write(path, format!("{j}\n"))
+            .map_err(|err| anyhow::anyhow!("{path}: {err}"))?;
+        println!("serving snapshot written to {path}");
     }
     Ok(())
 }

@@ -251,6 +251,28 @@ pub fn per_rank_breakdown(total: &MemoryBreakdown, per_rank_rows: &[u64]) -> Vec
         .collect()
 }
 
+/// Capacity projection for serving admission control: the data-class
+/// bytes one *forward-only* step leaves resident on each rank, before
+/// the step runs. Mirrors the engines' measured forward accounting
+/// under `CheckpointPolicy::RecomputeAll` — expert-output rows for the
+/// rank's routed slots, plus the rank's resident token activations in
+/// and combined rows out, nothing saved for a backward that never
+/// comes: `dtype · d · (slots_r + 2 · tokens_r)`. The single-rank,
+/// sharded, and pipelined engines all report at most this per rank for
+/// the same batch (the pipelined engine's chunked peak can only be
+/// lower), so a batch admitted under `[ep] mem_budget_bytes` by this
+/// projection never measures over it — pinned by `rust/tests/
+/// ep_serving.rs`.
+pub fn forward_data_bytes_per_rank(per_rank_slots: &[u64], per_rank_tokens: &[u64],
+                                   d_model: u64, dtype_bytes: u64) -> Vec<u64> {
+    assert_eq!(per_rank_slots.len(), per_rank_tokens.len());
+    per_rank_slots
+        .iter()
+        .zip(per_rank_tokens)
+        .map(|(&slots, &tokens)| dtype_bytes * d_model * (slots + 2 * tokens))
+        .collect()
+}
+
 /// Per-rank communication staging of the index-driven exchange
 /// (PR 5's zero-materialization dispatch): remote routed rows pass
 /// through **one** inbound gather tile on their expert rank, and remote
@@ -473,6 +495,20 @@ mod tests {
         assert_eq!(pipeline_window_bytes(&[100, 500, 50], &[10, 20, 30]),
                    100 + 10 + 500);
         assert_eq!(pipeline_window_bytes(&[], &[]), 0);
+    }
+
+    #[test]
+    fn forward_projection_matches_the_engine_formula() {
+        // single rank: all slots + all tokens — the SingleRankEngine
+        // RecomputeAll accounting, 4·d·(n + 2·l)
+        assert_eq!(forward_data_bytes_per_rank(&[96], &[48], 8, 4),
+                   vec![4 * 8 * (96 + 2 * 48)]);
+        // sharded: each rank priced on its own routed slots + resident
+        // tokens, independent of the others
+        let per = forward_data_bytes_per_rank(&[10, 0, 30], &[4, 4, 4], 16, 4);
+        assert_eq!(per, vec![4 * 16 * (10 + 8), 4 * 16 * 8, 4 * 16 * (30 + 8)]);
+        // an empty rank still holds its resident token rows
+        assert!(per[1] > 0);
     }
 
     #[test]

@@ -117,6 +117,119 @@ impl Peak {
     }
 }
 
+/// Streaming log₂-bucketed histogram for positive samples (latencies,
+/// sizes): O(1) memory and O(1) record, quantile queries by
+/// nearest-rank walk over the cumulative bucket counts.
+///
+/// Each bucket spans one power of two and tracks its count and maximum,
+/// so [`quantile`](Histogram::quantile) returns the max of the bucket
+/// holding the nearest-rank sample — *exact* whenever that bucket holds
+/// a single distinct value (the unit tests pin this on known inputs),
+/// and otherwise an upper bound within the 2× bucket resolution. The
+/// serving loop feeds per-request latencies through this for its
+/// p50/p95/p99 report.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    maxes: Vec<f64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// 64 buckets covering 2⁻³² up to 2³¹ (values outside clamp to the
+    /// edge buckets; min/max stay exact regardless).
+    const BUCKETS: usize = 64;
+
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0; Self::BUCKETS],
+            maxes: vec![0.0; Self::BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket(value: f64) -> usize {
+        if !(value > 0.0) {
+            return 0;
+        }
+        let e = value.log2().floor() as i64;
+        (e + 32).clamp(0, Self::BUCKETS as i64 - 1) as usize
+    }
+
+    pub fn record(&mut self, value: f64) {
+        let b = Self::bucket(value);
+        self.counts[b] += 1;
+        if self.counts[b] == 1 || value > self.maxes[b] {
+            self.maxes[b] = value;
+        }
+        self.count += 1;
+        self.sum += value;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sum / self.count as f64)
+    }
+
+    pub fn min(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.min)
+    }
+
+    pub fn max(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.max)
+    }
+
+    /// Nearest-rank quantile: the max of the bucket holding the sample
+    /// at 0-based rank `round(q·(count−1))`. `q ≤ 0` returns the exact
+    /// minimum, `q ≥ 1` the exact maximum; `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        if q <= 0.0 {
+            return Some(self.min);
+        }
+        if q >= 1.0 {
+            return Some(self.max);
+        }
+        let rank = (q * (self.count - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for b in 0..Self::BUCKETS {
+            cum += self.counts[b];
+            if cum > rank {
+                return Some(self.maxes[b]);
+            }
+        }
+        Some(self.max)
+    }
+
+    /// The serving-report triple: (p50, p95, p99). `None` when empty.
+    pub fn percentiles(&self) -> Option<(f64, f64, f64)> {
+        Some((self.quantile(0.50)?, self.quantile(0.95)?, self.quantile(0.99)?))
+    }
+}
+
 /// Step-loop metrics sink: console + optional JSONL file.
 pub struct MetricsSink {
     file: Option<File>,
@@ -217,6 +330,77 @@ mod tests {
         p.observe(7);
         assert_eq!(p.get(), 10);
         assert_eq!(p.samples(), 3);
+    }
+
+    #[test]
+    fn histogram_pins_exact_quantiles_on_distinct_buckets() {
+        // 20 powers of two — one distinct value per bucket, so every
+        // nearest-rank quantile is exact: rank round(q·19) of the
+        // sorted values 2^0..2^19
+        let mut h = Histogram::new();
+        for e in 0..20 {
+            h.record((1u64 << e) as f64);
+        }
+        assert_eq!(h.count(), 20);
+        assert_eq!(h.quantile(0.0), Some(1.0));
+        assert_eq!(h.quantile(0.50), Some(1024.0)); // rank 10 → 2^10
+        assert_eq!(h.quantile(0.95), Some((1u64 << 18) as f64)); // rank 18
+        assert_eq!(h.quantile(0.99), Some((1u64 << 19) as f64)); // rank 19
+        assert_eq!(h.quantile(1.0), Some((1u64 << 19) as f64));
+        assert_eq!(h.percentiles(),
+                   Some((1024.0, (1u64 << 18) as f64, (1u64 << 19) as f64)));
+        // insertion order cannot matter — buckets sort for free
+        let mut rev = Histogram::new();
+        for e in (0..20).rev() {
+            rev.record((1u64 << e) as f64);
+        }
+        assert_eq!(rev.percentiles(), h.percentiles());
+    }
+
+    #[test]
+    fn histogram_pins_exact_quantiles_on_repeated_values() {
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.record(3.5);
+        }
+        assert_eq!(h.percentiles(), Some((3.5, 3.5, 3.5)));
+        assert_eq!(h.mean(), Some(3.5));
+        assert_eq!(h.min(), Some(3.5));
+        assert_eq!(h.max(), Some(3.5));
+    }
+
+    #[test]
+    fn histogram_quantile_is_an_upper_bound_within_a_bucket() {
+        // 1.0 and 1.5 share the [1, 2) bucket: mid quantiles report the
+        // bucket max (upper bound), the edges stay exact
+        let mut h = Histogram::new();
+        h.record(1.0);
+        h.record(1.5);
+        h.record(4.0);
+        assert_eq!(h.quantile(0.0), Some(1.0));
+        assert_eq!(h.quantile(0.5), Some(1.5));
+        assert_eq!(h.quantile(1.0), Some(4.0));
+        assert_eq!(h.min(), Some(1.0));
+        assert!((h.mean().unwrap() - 6.5 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_empty_and_edge_values() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.percentiles(), None);
+        assert_eq!(h.mean(), None);
+        // zero and negative samples clamp to the low bucket but keep
+        // min/max/quantile-edges exact
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-2.0);
+        h.record(8.0);
+        assert_eq!(h.min(), Some(-2.0));
+        assert_eq!(h.max(), Some(8.0));
+        assert_eq!(h.quantile(0.0), Some(-2.0));
+        assert_eq!(h.quantile(1.0), Some(8.0));
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Capacity-aware admission control.
+//!
+//! Before a request joins a tick's batch, the controller projects the
+//! per-rank peak forward bytes the batch *would* have with the request
+//! included — the same `dtype · d · (slots_r + 2 · tokens_r)` formula
+//! the engines account under `RecomputeAll`
+//! ([`forward_data_bytes_per_rank`]) — and prices it against
+//! `[ep] mem_budget_bytes`. Expert slots land on ranks through the
+//! topology's expert→rank map, resident tokens through the contiguous
+//! token partition, so the projection tracks exactly what
+//! `memory_per_rank` will later measure (pinned by
+//! `rust/tests/ep_serving.rs`).
+
+use crate::config::serving::AdmissionPolicy;
+use crate::coordinator::expert_parallel::EpTopology;
+use crate::memory::model::forward_data_bytes_per_rank;
+
+use super::request::ServingRequest;
+
+/// Outcome of screening one queued request against the tick in
+/// progress.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Fits under the budget — add it to the tick's batch.
+    Admit,
+    /// Over budget under the `queue` policy — leave it at the queue
+    /// head and stop draining (strict FIFO; it will head the next
+    /// tick's batch).
+    Defer,
+    /// Over budget under the `reject` policy — shed it and keep
+    /// draining the requests behind it.
+    Reject,
+}
+
+/// Projects per-rank peak bytes for a prospective batch and turns the
+/// budget comparison into an [`AdmissionDecision`].
+#[derive(Debug)]
+pub struct AdmissionController {
+    rank_of_expert: Vec<usize>,
+    ranks: usize,
+    d_model: u64,
+    dtype_bytes: u64,
+    budget_bytes: u64,
+    policy: AdmissionPolicy,
+}
+
+impl AdmissionController {
+    /// `budget_bytes == 0` disables capacity screening (the `[ep]`
+    /// default): every structurally valid request admits.
+    pub fn new(topo: &EpTopology, d_model: usize, budget_bytes: u64,
+               policy: AdmissionPolicy) -> AdmissionController {
+        let assignment = topo.assignment();
+        AdmissionController {
+            rank_of_expert: assignment.rank_of.iter().map(|&r| r as usize).collect(),
+            ranks: assignment.ranks,
+            d_model: d_model as u64,
+            dtype_bytes: 4,
+            budget_bytes,
+            policy,
+        }
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.policy
+    }
+
+    /// Fresh per-rank expert-slot accumulator for one tick's drain.
+    pub fn empty_slots(&self) -> Vec<u64> {
+        vec![0; self.ranks]
+    }
+
+    /// Fold a request's expert assignments into the per-rank slot
+    /// counts (one slot per (token, expert) pair, on the expert's
+    /// owning rank).
+    pub fn add_slots(&self, slots: &mut [u64], req: &ServingRequest) {
+        for &e in &req.topk_ids {
+            slots[self.rank_of_expert[e as usize]] += 1;
+        }
+    }
+
+    /// Peak projected forward bytes across ranks for a batch with the
+    /// given per-rank expert slots and `total_tokens` resident tokens
+    /// split by the contiguous token partition.
+    pub fn peak_bytes(&self, slots: &[u64], total_tokens: usize) -> u64 {
+        let tokens = self.tokens_per_rank(total_tokens);
+        forward_data_bytes_per_rank(slots, &tokens, self.d_model, self.dtype_bytes)
+            .into_iter()
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// A request that exceeds the budget even in a batch of its own can
+    /// never be admitted — reject it at arrival instead of letting it
+    /// wedge the queue head forever.
+    pub fn infeasible(&self, req: &ServingRequest) -> bool {
+        if self.budget_bytes == 0 {
+            return false;
+        }
+        let mut slots = self.empty_slots();
+        self.add_slots(&mut slots, req);
+        self.peak_bytes(&slots, req.tokens) > self.budget_bytes
+    }
+
+    /// Screen the next queued request against the tick's accumulated
+    /// batch (`picked_slots` / `picked_tokens` over the already-admitted
+    /// requests).
+    pub fn decide(&self, picked_slots: &[u64], picked_tokens: usize,
+                  req: &ServingRequest) -> AdmissionDecision {
+        if self.budget_bytes == 0 {
+            return AdmissionDecision::Admit;
+        }
+        let mut slots = picked_slots.to_vec();
+        self.add_slots(&mut slots, req);
+        if self.peak_bytes(&slots, picked_tokens + req.tokens) <= self.budget_bytes {
+            AdmissionDecision::Admit
+        } else {
+            match self.policy {
+                AdmissionPolicy::Queue => AdmissionDecision::Defer,
+                AdmissionPolicy::Reject => AdmissionDecision::Reject,
+            }
+        }
+    }
+
+    /// Contiguous token partition sizes: token t resides on rank
+    /// t·R/L, so rank r holds the tokens in [⌈rL/R⌉, ⌈(r+1)L/R⌉).
+    fn tokens_per_rank(&self, total_tokens: usize) -> Vec<u64> {
+        let (l, r) = (total_tokens, self.ranks);
+        (0..r)
+            .map(|m| {
+                let lo = (m * l).div_ceil(r);
+                let hi = ((m + 1) * l).div_ceil(r);
+                (hi - lo) as u64
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Instant;
+
+    use super::*;
+
+    fn topo(ranks: usize, experts: usize) -> EpTopology {
+        EpTopology::new(ranks, experts).unwrap()
+    }
+
+    fn req(tokens: usize, topk_ids: Vec<u32>, d: usize, k: usize) -> ServingRequest {
+        assert_eq!(topk_ids.len(), tokens * k);
+        ServingRequest {
+            id: 0,
+            arrival_tick: 0,
+            arrived_at: Instant::now(),
+            tokens,
+            x: vec![0.0; tokens * d],
+            topk_ids,
+            gates: vec![1.0 / k as f32; tokens * k],
+        }
+    }
+
+    #[test]
+    fn token_partition_matches_rank_of_token() {
+        for ranks in [1usize, 2, 3, 4] {
+            let t = topo(ranks, 12);
+            let ctl = AdmissionController::new(&t, 8, 0, AdmissionPolicy::Queue);
+            for l in [1usize, 2, 5, 16, 31] {
+                let mut counted = vec![0u64; ranks];
+                for tok in 0..l {
+                    counted[t.rank_of_token(tok, l)] += 1;
+                }
+                assert_eq!(ctl.tokens_per_rank(l), counted, "ranks={ranks} l={l}");
+            }
+        }
+    }
+
+    #[test]
+    fn peak_projection_uses_the_engine_formula() {
+        // 2 ranks over 4 experts (contiguous: experts 0-1 on rank 0).
+        let t = topo(2, 4);
+        let ctl = AdmissionController::new(&t, 8, 0, AdmissionPolicy::Queue);
+        // 4 tokens, k=1, all routed to expert 0 → all 4 slots on rank 0,
+        // tokens split 2/2 → rank 0: 4·8·(4 + 2·2) = 256; rank 1: 4·8·4.
+        let r = req(4, vec![0, 0, 0, 0], 8, 1);
+        let mut slots = ctl.empty_slots();
+        ctl.add_slots(&mut slots, &r);
+        assert_eq!(slots, vec![4, 0]);
+        assert_eq!(ctl.peak_bytes(&slots, 4), 4 * 8 * (4 + 2 * 2));
+    }
+
+    #[test]
+    fn zero_budget_always_admits() {
+        let t = topo(2, 4);
+        let ctl = AdmissionController::new(&t, 8, 0, AdmissionPolicy::Queue);
+        let r = req(64, vec![0; 64], 8, 1);
+        assert!(!ctl.infeasible(&r));
+        assert_eq!(ctl.decide(&ctl.empty_slots(), 0, &r), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn policy_picks_defer_versus_reject_over_budget() {
+        let t = topo(2, 4);
+        // budget fits the 4-token request alone (peak 256) but not
+        // doubled (peak 512).
+        let queue = AdmissionController::new(&t, 8, 300, AdmissionPolicy::Queue);
+        let shed = AdmissionController::new(&t, 8, 300, AdmissionPolicy::Reject);
+        let r = req(4, vec![0, 0, 0, 0], 8, 1);
+        assert!(!queue.infeasible(&r));
+        let mut picked = queue.empty_slots();
+        assert_eq!(queue.decide(&picked, 0, &r), AdmissionDecision::Admit);
+        queue.add_slots(&mut picked, &r);
+        assert_eq!(queue.decide(&picked, 4, &r), AdmissionDecision::Defer);
+        assert_eq!(shed.decide(&picked, 4, &r), AdmissionDecision::Reject);
+        // and a request too big even alone is flagged infeasible
+        let huge = req(64, vec![0; 64], 8, 1);
+        assert!(queue.infeasible(&huge));
+    }
+}

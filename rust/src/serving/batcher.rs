@@ -1,0 +1,159 @@
+//! Continuous batcher: aggregate many requests into one `StepBatch`,
+//! scatter the combined output back per request.
+//!
+//! Aggregation concatenates the requests' activations, expert ids, and
+//! gates token-major and builds one dispatch structure over the whole
+//! set — from there the batch is indistinguishable from a training
+//! workload, so the serving forward rides the identical
+//! `RowIndexPlan` + blocked-kernel hot path. Because every expert row
+//! and every token's combine are computed independently of their batch
+//! neighbors, each request's slice of the aggregated output is
+//! bit-identical to serving that request alone (pinned by
+//! `rust/tests/ep_serving.rs`).
+
+use std::time::Instant;
+
+use crate::coordinator::engine::StepBatch;
+use crate::dispatch::parallel_build::parallel_build;
+
+use super::request::ServingRequest;
+
+/// Where one request's tokens landed in the aggregated batch.
+#[derive(Debug, Clone)]
+pub struct RequestSpan {
+    pub id: u64,
+    pub arrival_tick: u64,
+    pub arrived_at: Instant,
+    /// first token row of this request in the aggregated batch
+    pub offset: usize,
+    pub tokens: usize,
+}
+
+/// One tick's aggregated workload: the engine batch plus the per-request
+/// token spans the combine output scatters back along.
+#[derive(Debug)]
+pub struct TickBatch {
+    pub batch: StepBatch,
+    pub spans: Vec<RequestSpan>,
+}
+
+/// Concatenate `requests` (in queue order) into one `StepBatch` over
+/// the `(d_model, num_experts, top_k)` shape. Errors on an empty
+/// request set or inconsistent shapes — the driver never forwards an
+/// empty tick.
+pub fn aggregate(requests: Vec<ServingRequest>, d_model: usize,
+                 num_experts: usize, top_k: usize) -> Result<TickBatch, String> {
+    let total: usize = requests.iter().map(|r| r.tokens).sum();
+    if total == 0 {
+        return Err("cannot aggregate an empty tick batch".into());
+    }
+    let mut ids = Vec::with_capacity(total * top_k);
+    let mut x = Vec::with_capacity(total * d_model);
+    let mut gates = Vec::with_capacity(total * top_k);
+    let mut spans = Vec::with_capacity(requests.len());
+    let mut offset = 0usize;
+    for r in requests {
+        if r.x.len() != r.tokens * d_model || r.topk_ids.len() != r.tokens * top_k
+            || r.gates.len() != r.tokens * top_k
+        {
+            return Err(format!("request {} has inconsistent shapes", r.id));
+        }
+        spans.push(RequestSpan {
+            id: r.id,
+            arrival_tick: r.arrival_tick,
+            arrived_at: r.arrived_at,
+            offset,
+            tokens: r.tokens,
+        });
+        offset += r.tokens;
+        ids.extend_from_slice(&r.topk_ids);
+        x.extend_from_slice(&r.x);
+        gates.extend_from_slice(&r.gates);
+    }
+    let disp = parallel_build(&ids, total, num_experts, top_k);
+    Ok(TickBatch { batch: StepBatch::new(disp, x, gates)?, spans })
+}
+
+/// Slice the aggregated combine output back into per-request responses,
+/// span order. Zero-copy — each response borrows its rows from `out`.
+pub fn scatter<'a>(out: &'a [f32], spans: &[RequestSpan],
+                   d_model: usize) -> Result<Vec<(u64, &'a [f32])>, String> {
+    let total: usize = spans.iter().map(|s| s.tokens).sum();
+    if out.len() != total * d_model {
+        return Err(format!(
+            "scatter: output holds {} values, spans expect {}",
+            out.len(),
+            total * d_model
+        ));
+    }
+    spans
+        .iter()
+        .map(|s| {
+            let lo = s.offset * d_model;
+            let hi = (s.offset + s.tokens) * d_model;
+            if hi > out.len() {
+                return Err(format!("span for request {} overruns the output", s.id));
+            }
+            Ok((s.id, &out[lo..hi]))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, tokens: usize, d: usize, e: usize, k: usize) -> ServingRequest {
+        ServingRequest {
+            id,
+            arrival_tick: 0,
+            arrived_at: Instant::now(),
+            tokens,
+            x: (0..tokens * d).map(|i| (id as f32) + i as f32 * 0.25).collect(),
+            topk_ids: (0..tokens * k).map(|i| ((id as usize + i) % e) as u32).collect(),
+            gates: vec![1.0 / k as f32; tokens * k],
+        }
+    }
+
+    #[test]
+    fn aggregation_preserves_order_and_shapes() {
+        let (d, e, k) = (4, 4, 2);
+        let reqs = vec![req(0, 3, d, e, k), req(1, 1, d, e, k), req(2, 5, d, e, k)];
+        let tb = aggregate(reqs, d, e, k).unwrap();
+        assert_eq!(tb.batch.num_tokens(), 9);
+        assert_eq!(tb.batch.d_model(), d);
+        assert_eq!(tb.spans.len(), 3);
+        assert_eq!((tb.spans[0].offset, tb.spans[0].tokens), (0, 3));
+        assert_eq!((tb.spans[1].offset, tb.spans[1].tokens), (3, 1));
+        assert_eq!((tb.spans[2].offset, tb.spans[2].tokens), (4, 5));
+        // x rows land at the span offsets, in request order
+        let x = tb.batch.x();
+        assert_eq!(x[0], 0.0); // request 0, first value
+        assert_eq!(x[3 * d], 1.0); // request 1 starts at token 3
+        assert_eq!(x[4 * d], 2.0); // request 2 starts at token 4
+        tb.batch.disp().validate().unwrap();
+    }
+
+    #[test]
+    fn scatter_round_trips_the_spans() {
+        let (d, e, k) = (2, 4, 2);
+        let reqs = vec![req(7, 2, d, e, k), req(8, 3, d, e, k)];
+        let tb = aggregate(reqs, d, e, k).unwrap();
+        let out: Vec<f32> = (0..tb.batch.num_tokens() * d).map(|i| i as f32).collect();
+        let parts = scatter(&out, &tb.spans, d).unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0], (7, &out[0..2 * d]));
+        assert_eq!(parts[1], (8, &out[2 * d..5 * d]));
+        // wrong-size output is a named error, not a slice panic
+        assert!(scatter(&out[..d], &tb.spans, d).is_err());
+    }
+
+    #[test]
+    fn empty_and_malformed_requests_error() {
+        let (d, e, k) = (4, 4, 2);
+        assert!(aggregate(vec![], d, e, k).is_err());
+        let mut bad = req(0, 3, d, e, k);
+        bad.x.pop();
+        assert!(aggregate(vec![bad], d, e, k).is_err());
+    }
+}

@@ -1,0 +1,76 @@
+//! Forward-only serving over the expert-parallel engines: continuous
+//! batching plus capacity-aware admission control, on the exact training
+//! data path (`RowIndexPlan` + blocked expert kernels) — not a fork of
+//! it.
+//!
+//! # Lifecycle: the tick loop
+//!
+//! [`ServeLoop::run`] advances a fixed number of engine *ticks*. Each
+//! tick:
+//!
+//! 1. **Arrivals** — the deterministic open-loop [`TrafficGen`] draws
+//!    this tick's requests (seeded Poisson arrival count, uniform
+//!    request-size distribution, the same `synthetic_gating` router the
+//!    trainer uses). Open loop means the arrival process never waits
+//!    for service — overload is real, not self-throttled.
+//! 2. **Admission** — each arrival is screened: a request whose
+//!    projected per-rank bytes exceed `[ep] mem_budget_bytes` even in a
+//!    batch of its own can never be served and is rejected immediately;
+//!    a request arriving to a full queue is rejected
+//!    (`rejected_queue_full`); everything else enters the FIFO queue.
+//! 3. **Batching** — the continuous batcher drains the queue head-first
+//!    into one aggregated [`StepBatch`], stopping at the
+//!    `[serving] tick_tokens` budget and at the capacity projection
+//!    ([`memory::model::forward_data_bytes_per_rank`] priced against
+//!    `[ep] mem_budget_bytes`). A request that does not fit is either
+//!    left waiting (`admission = queue`: strict FIFO, head-of-line
+//!    blocks the tick) or shed (`admission = reject`: dropped, drain
+//!    continues — bounded latency, maximal utilization).
+//! 4. **Forward** — [`ForwardSession`] runs one engine forward over the
+//!    aggregated batch with the checkpoint policy forced to
+//!    `RecomputeAll` and the `StepHandle` consumed on the spot: no
+//!    session retention, no saved activations, no gradient machinery.
+//!    Outputs are bit-identical to a training-engine forward on the
+//!    same batch (pinned by `rust/tests/ep_serving.rs` and the
+//!    `tools/ep_sim.py` serving mirror).
+//! 5. **Completion** — the combine output is scattered back per request
+//!    along the batcher's token spans, and each request's latency
+//!    (arrival wall-clock → completion) feeds the streaming
+//!    [`Histogram`] behind the p50/p95/p99 report.
+//!
+//! # Admission states
+//!
+//! A generated request ends in exactly one of: **completed** (served by
+//! some tick's batch), **rejected** (`rejected_queue_full` at arrival,
+//! or `rejected_capacity` — infeasible at arrival, or shed by the
+//! `reject` policy mid-drain), or **queued at end** (still waiting when
+//! the tick budget ran out). `ServeReport` counters account for every
+//! request: `generated = completed + rejected_* + queued_at_end`.
+//!
+//! # Latency accounting
+//!
+//! Per-request latency is measured wall-clock from the request's
+//! arrival instant to the end of the forward that served it, recorded
+//! in a log₂-bucketed streaming histogram ([`metrics::Histogram`]) —
+//! p50/p95/p99 are nearest-rank bucket maxima (exact or a ≤2× upper
+//! bound). Deterministic tick-granularity waiting time
+//! (`completed_tick − arrival_tick`) is tracked alongside as
+//! `mean_wait_ticks`, since wall-clock is host noise.
+//!
+//! [`StepBatch`]: crate::coordinator::engine::StepBatch
+//! [`memory::model::forward_data_bytes_per_rank`]:
+//! crate::memory::model::forward_data_bytes_per_rank
+//! [`Histogram`]: crate::metrics::Histogram
+//! [`metrics::Histogram`]: crate::metrics::Histogram
+
+pub mod admission;
+pub mod batcher;
+pub mod driver;
+pub mod request;
+pub mod session;
+
+pub use admission::{AdmissionController, AdmissionDecision};
+pub use batcher::{aggregate, scatter, RequestSpan, TickBatch};
+pub use driver::{ServeLoop, ServeReport};
+pub use request::{ServingRequest, TrafficGen};
+pub use session::ForwardSession;

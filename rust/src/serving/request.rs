@@ -1,0 +1,191 @@
+//! Serving requests and the deterministic open-loop traffic generator.
+
+use std::time::Instant;
+
+use crate::config::ep::EpConfig;
+use crate::config::serving::ServingConfig;
+use crate::dispatch::gating::synthetic_gating;
+use crate::util::prng::Rng;
+
+/// One inference request: a few token activations plus their routing
+/// (the router runs upstream of the MoE layer, so requests arrive
+/// already gated — the same contract the training `StepBatch` has).
+#[derive(Debug, Clone)]
+pub struct ServingRequest {
+    pub id: u64,
+    /// tick the request arrived on (deterministic latency accounting)
+    pub arrival_tick: u64,
+    /// wall-clock arrival (latency-percentile accounting)
+    pub arrived_at: Instant,
+    pub tokens: usize,
+    /// (tokens · d) activations
+    pub x: Vec<f32>,
+    /// (tokens · k) expert ids, token-major
+    pub topk_ids: Vec<u32>,
+    /// (tokens · k) combine gates, token-major
+    pub gates: Vec<f32>,
+}
+
+/// Deterministic open-loop synthetic traffic: Poisson arrival counts
+/// per tick at `[serving] arrival_rate`, request sizes uniform in
+/// `[min_request_tokens, max_request_tokens]`, routing drawn from the
+/// same skewed `synthetic_gating` router the training workload uses.
+/// Everything flows from one seeded [`Rng`] stream, so a given
+/// `[serving] seed` replays the identical request sequence.
+#[derive(Debug)]
+pub struct TrafficGen {
+    rng: Rng,
+    d_model: usize,
+    num_experts: usize,
+    top_k: usize,
+    skew: f64,
+    arrival_rate: f64,
+    min_tokens: usize,
+    max_tokens: usize,
+    next_id: u64,
+}
+
+impl TrafficGen {
+    pub fn new(ep: &EpConfig, serving: &ServingConfig) -> TrafficGen {
+        TrafficGen {
+            // a distinct stream from `[ep] seed`, which keeps seeding
+            // the expert weights the session loads
+            rng: Rng::new(serving.seed ^ 0x5E12_7E57),
+            d_model: ep.d_model,
+            num_experts: ep.num_experts,
+            top_k: ep.top_k,
+            skew: ep.skew,
+            arrival_rate: serving.arrival_rate,
+            min_tokens: serving.min_request_tokens,
+            max_tokens: serving.max_request_tokens,
+            next_id: 0,
+        }
+    }
+
+    /// Requests generated so far (arrival counter).
+    pub fn generated(&self) -> u64 {
+        self.next_id
+    }
+
+    /// All requests arriving on `tick` — the open loop never waits for
+    /// service, so overload shows up as real queue growth.
+    pub fn tick(&mut self, tick: u64) -> Vec<ServingRequest> {
+        let n = self.poisson();
+        (0..n).map(|_| self.request(tick)).collect()
+    }
+
+    /// Knuth's Poisson sampler: count uniforms until their product
+    /// drops under e^−λ (λ ≤ 256 by `ServingConfig::validate`, so the
+    /// limit stays a positive f64).
+    fn poisson(&mut self) -> usize {
+        let limit = (-self.arrival_rate).exp();
+        let mut k = 0usize;
+        let mut p = 1.0f64;
+        loop {
+            p *= self.rng.f64();
+            if p <= limit {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    fn request(&mut self, tick: u64) -> ServingRequest {
+        let span = self.max_tokens - self.min_tokens + 1;
+        let tokens = self.min_tokens + self.rng.usize_below(span);
+        let g = synthetic_gating(&mut self.rng, tokens, self.num_experts,
+                                 self.top_k, self.skew);
+        let x = self.rng.normal_vec(tokens * self.d_model, 1.0);
+        let id = self.next_id;
+        self.next_id += 1;
+        ServingRequest {
+            id,
+            arrival_tick: tick,
+            arrived_at: Instant::now(),
+            tokens,
+            x,
+            topk_ids: g.topk_ids,
+            gates: g.gates,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> (EpConfig, ServingConfig) {
+        let ep = EpConfig {
+            ranks: 2,
+            tokens: 64,
+            num_experts: 4,
+            top_k: 2,
+            d_model: 8,
+            d_hidden: 12,
+            ..Default::default()
+        };
+        let s = ServingConfig {
+            arrival_rate: 3.0,
+            min_request_tokens: 2,
+            max_request_tokens: 6,
+            seed: 42,
+            ..Default::default()
+        };
+        (ep, s)
+    }
+
+    #[test]
+    fn traffic_is_deterministic_per_seed() {
+        let (ep, s) = tiny();
+        let mut a = TrafficGen::new(&ep, &s);
+        let mut b = TrafficGen::new(&ep, &s);
+        for tick in 0..10 {
+            let ra = a.tick(tick);
+            let rb = b.tick(tick);
+            assert_eq!(ra.len(), rb.len());
+            for (x, y) in ra.iter().zip(&rb) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.tokens, y.tokens);
+                assert_eq!(x.topk_ids, y.topk_ids);
+                assert_eq!(x.x, y.x); // identical normal draws, bitwise
+            }
+        }
+        assert_eq!(a.generated(), b.generated());
+        assert!(a.generated() > 0, "λ=3 over 10 ticks generates requests");
+    }
+
+    #[test]
+    fn requests_have_consistent_shapes() {
+        let (ep, s) = tiny();
+        let mut g = TrafficGen::new(&ep, &s);
+        let mut seen = 0;
+        for tick in 0..20 {
+            for r in g.tick(tick) {
+                assert!(r.tokens >= s.min_request_tokens);
+                assert!(r.tokens <= s.max_request_tokens);
+                assert_eq!(r.x.len(), r.tokens * ep.d_model);
+                assert_eq!(r.topk_ids.len(), r.tokens * ep.top_k);
+                assert_eq!(r.gates.len(), r.tokens * ep.top_k);
+                assert!(r.topk_ids.iter().all(|&e| (e as usize) < ep.num_experts));
+                assert_eq!(r.arrival_tick, tick);
+                seen += 1;
+            }
+        }
+        assert!(seen > 10);
+        assert_eq!(g.generated(), seen);
+    }
+
+    #[test]
+    fn arrival_counts_track_the_rate() {
+        let (ep, mut s) = tiny();
+        s.arrival_rate = 5.0;
+        let mut g = TrafficGen::new(&ep, &s);
+        let ticks = 200u64;
+        let mut total = 0usize;
+        for t in 0..ticks {
+            total += g.tick(t).len();
+        }
+        let mean = total as f64 / ticks as f64;
+        assert!((mean - 5.0).abs() < 1.0, "Poisson mean drifted: {mean}");
+    }
+}

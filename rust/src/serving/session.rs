@@ -1,0 +1,121 @@
+//! Forward-only inference session over an [`ExecutionEngine`].
+//!
+//! Serving never trains, so the session pins two engine knobs that the
+//! trainer leaves open:
+//!
+//! * the checkpoint policy is forced to [`CheckpointPolicy::RecomputeAll`]
+//!   — nothing will ever ask for a backward, so saving activations
+//!   (`SaveInputs` and friends) would be pure peak-memory waste;
+//! * every [`StepHandle`] is consumed on the spot via
+//!   [`StepHandle::into_output`] — the session retains no step state
+//!   between ticks, which is what makes the capacity projection a pure
+//!   function of the current batch.
+//!
+//! Checkpointing only decides what is *retained* for backward, never
+//! what forward computes, so the served outputs are bit-identical to a
+//! training engine's forward on the same batch (pinned by
+//! `rust/tests/ep_serving.rs`).
+//!
+//! [`StepHandle`]: crate::coordinator::engine::StepHandle
+//! [`StepHandle::into_output`]: crate::coordinator::engine::StepHandle::into_output
+
+use crate::config::ep::EpConfig;
+use crate::coordinator::engine::{layer_engine_from_config, ExecutionEngine, StepBatch};
+use crate::coordinator::params::ExpertStore;
+use crate::memory::model::{CheckpointPolicy, MemoryBreakdown};
+
+/// A forward-only engine wrapper: `infer` in, combined output out,
+/// nothing retained.
+pub struct ForwardSession {
+    engine: Box<dyn ExecutionEngine>,
+}
+
+impl ForwardSession {
+    /// Session over the config's own seeded expert store (`[ep] seed`,
+    /// the same placement-invariant initialization the trainer loads).
+    pub fn from_config(cfg: &EpConfig) -> Result<ForwardSession, String> {
+        let store = ExpertStore::init_gated(cfg.num_experts, cfg.d_model,
+                                            cfg.d_hidden, cfg.seed,
+                                            cfg.activation.gated());
+        ForwardSession::from_store(cfg, store)
+    }
+
+    /// Session over caller-provided weights — the bit-identity tests
+    /// hand the identical store to a serving session and a training
+    /// engine.
+    pub fn from_store(cfg: &EpConfig, store: ExpertStore) -> Result<ForwardSession, String> {
+        let engine = layer_engine_from_config(cfg, store, CheckpointPolicy::RecomputeAll)?;
+        Ok(ForwardSession { engine })
+    }
+
+    /// One forward over an aggregated tick batch. The step handle is
+    /// consumed immediately — no saved activations, no backward path.
+    pub fn infer(&mut self, batch: &StepBatch) -> Result<Vec<f32>, String> {
+        Ok(self.engine.forward(batch)?.into_output())
+    }
+
+    pub fn engine_name(&self) -> String {
+        self.engine.name()
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.engine.ranks()
+    }
+
+    pub fn policy(&self) -> CheckpointPolicy {
+        self.engine.policy()
+    }
+
+    /// Measured per-rank footprint of the engine right now — the driver
+    /// samples this after each forward to hold the admission projection
+    /// to account.
+    pub fn memory_per_rank(&self) -> Vec<MemoryBreakdown> {
+        self.engine.memory_per_rank()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::step_batch_from_config;
+
+    fn cfg(ranks: usize) -> EpConfig {
+        EpConfig {
+            ranks,
+            tokens: 48,
+            num_experts: 8,
+            top_k: 2,
+            d_model: 8,
+            d_hidden: 12,
+            tile_rows: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn session_is_forward_only() {
+        let c = cfg(1);
+        let mut s = ForwardSession::from_config(&c).unwrap();
+        assert_eq!(s.policy(), CheckpointPolicy::RecomputeAll);
+        assert_eq!(s.ranks(), 1);
+        let (batch, _) = step_batch_from_config(&c).unwrap();
+        let out = s.infer(&batch).unwrap();
+        assert_eq!(out.len(), c.tokens * c.d_model);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn recompute_all_retains_no_saved_activations() {
+        let c = cfg(2);
+        let mut s = ForwardSession::from_config(&c).unwrap();
+        let (batch, _) = step_batch_from_config(&c).unwrap();
+        s.infer(&batch).unwrap();
+        // RecomputeAll means the measured footprint is routing + resident
+        // rows only — the saved-activation term is zero, so data bytes
+        // stay at dtype·d·(slots + 2·tokens) exactly.
+        for (r, m) in s.memory_per_rank().iter().enumerate() {
+            assert!(m.data_bytes > 0, "rank {r} holds resident rows");
+            assert_eq!(m.extra_bytes, 0);
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Acceptance gate for the forward-only serving engine (ISSUE 7):
+//!
+//! * serving forwards are **bit-identical** to a training engine's
+//!   forward on the same aggregated batch, across R ∈ {1, 2, 4} ×
+//!   top_k ∈ {1, 2} × activation ∈ {silu, swiglu} and on the chunked
+//!   pipeline — `RecomputeAll` only changes what is retained, never
+//!   what is computed;
+//! * each request's slice of the aggregated output is bit-identical to
+//!   serving the request alone (per-row independence of the blocked
+//!   kernels), so continuous batching is invisible to the caller;
+//! * the admission controller's projected per-rank peak equals the
+//!   sharded engine's measured `data_bytes` exactly, and an end-to-end
+//!   `ServeLoop` under a budget never measures a per-rank peak above
+//!   it;
+//! * every generated request is accounted for exactly once:
+//!   `generated = completed + rejected_* + queued_at_end`, under both
+//!   admission policies.
+
+use moeblaze::config::ep::EpConfig;
+use moeblaze::config::model::Activation;
+use moeblaze::config::serving::{AdmissionPolicy, ServingConfig};
+use moeblaze::coordinator::engine::layer_engine_from_config;
+use moeblaze::coordinator::expert_parallel::EpTopology;
+use moeblaze::coordinator::params::ExpertStore;
+use moeblaze::serving::{aggregate, scatter, AdmissionController, ForwardSession,
+                        ServeLoop, ServingRequest, TrafficGen};
+
+fn cfg(ranks: usize, top_k: usize, activation: Activation) -> EpConfig {
+    EpConfig {
+        ranks,
+        top_k,
+        activation,
+        tokens: 64,
+        num_experts: 8,
+        d_model: 8,
+        d_hidden: 12,
+        tile_rows: 8,
+        ..Default::default()
+    }
+}
+
+fn store_for(c: &EpConfig) -> ExpertStore {
+    ExpertStore::init_gated(c.num_experts, c.d_model, c.d_hidden, c.seed,
+                            c.activation.gated())
+}
+
+/// A deterministic pile of requests from the serving traffic generator.
+fn requests_for(c: &EpConfig, ticks: u64, seed: u64) -> Vec<ServingRequest> {
+    let s = ServingConfig {
+        arrival_rate: 3.0,
+        min_request_tokens: 2,
+        max_request_tokens: 8,
+        seed,
+        ..Default::default()
+    };
+    let mut gen = TrafficGen::new(c, &s);
+    let mut all = Vec::new();
+    for t in 0..ticks {
+        all.extend(gen.tick(t));
+    }
+    assert!(!all.is_empty(), "traffic generator produced no requests");
+    all
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: diverged at {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn serving_forward_bit_identical_to_training_forward_across_matrix() {
+    for ranks in [1usize, 2, 4] {
+        for top_k in [1usize, 2] {
+            for activation in [Activation::Silu, Activation::Swiglu] {
+                let c = cfg(ranks, top_k, activation);
+                let store = store_for(&c);
+                let reqs = requests_for(&c, 4, 99);
+                let tb = aggregate(reqs, c.d_model, c.num_experts, c.top_k).unwrap();
+
+                let mut serve = ForwardSession::from_store(&c, store.clone()).unwrap();
+                let served = serve.infer(&tb.batch).unwrap();
+
+                // the trainer's engine, with the trainer's checkpoint
+                // policy (SaveInputs by default — it retains more, it
+                // must not compute differently)
+                let mut train =
+                    layer_engine_from_config(&c, store, c.checkpoint).unwrap();
+                let trained = train.forward(&tb.batch).unwrap().into_output();
+                assert_bitwise(&served, &trained,
+                               &format!("R={ranks} k={top_k} act={activation:?}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn serving_forward_bit_identical_on_the_chunked_pipeline() {
+    let c = EpConfig { pipeline_chunks: 2, ..cfg(2, 2, Activation::Swiglu) };
+    let store = store_for(&c);
+    let reqs = requests_for(&c, 4, 17);
+    let tb = aggregate(reqs, c.d_model, c.num_experts, c.top_k).unwrap();
+    let mut serve = ForwardSession::from_store(&c, store.clone()).unwrap();
+    assert!(serve.engine_name().starts_with("pipelined"),
+            "expected the chunked pipeline, got `{}`", serve.engine_name());
+    let served = serve.infer(&tb.batch).unwrap();
+    let mut train = layer_engine_from_config(&c, store, c.checkpoint).unwrap();
+    let trained = train.forward(&tb.batch).unwrap().into_output();
+    assert_bitwise(&served, &trained, "pipelined K=2");
+}
+
+#[test]
+fn per_request_slices_match_solo_inference_bitwise() {
+    let c = cfg(2, 2, Activation::Swiglu);
+    let store = store_for(&c);
+    let reqs = requests_for(&c, 3, 5);
+    let solo_reqs = reqs.clone();
+    let tb = aggregate(reqs, c.d_model, c.num_experts, c.top_k).unwrap();
+
+    let mut session = ForwardSession::from_store(&c, store).unwrap();
+    let out = session.infer(&tb.batch).unwrap();
+    let parts = scatter(&out, &tb.spans, c.d_model).unwrap();
+    assert_eq!(parts.len(), solo_reqs.len());
+
+    // batching is invisible: each request served alone produces the
+    // exact bits its span holds in the aggregated output
+    for (r, (id, rows)) in solo_reqs.into_iter().zip(parts) {
+        assert_eq!(r.id, id);
+        let solo = aggregate(vec![r], c.d_model, c.num_experts, c.top_k).unwrap();
+        let solo_out = session.infer(&solo.batch).unwrap();
+        assert_bitwise(&solo_out, rows, &format!("request {id} solo vs span"));
+    }
+}
+
+#[test]
+fn admission_projection_equals_measured_sharded_peak() {
+    let c = cfg(4, 2, Activation::Silu);
+    let topo = EpTopology::new(c.ranks, c.num_experts).unwrap();
+    let ctl = AdmissionController::new(&topo, c.d_model, 0, AdmissionPolicy::Queue);
+    let reqs = requests_for(&c, 4, 23);
+
+    let mut slots = ctl.empty_slots();
+    let mut tokens = 0usize;
+    for r in &reqs {
+        ctl.add_slots(&mut slots, r);
+        tokens += r.tokens;
+    }
+    let projected = ctl.peak_bytes(&slots, tokens);
+
+    let tb = aggregate(reqs, c.d_model, c.num_experts, c.top_k).unwrap();
+    let mut session = ForwardSession::from_store(&c, store_for(&c)).unwrap();
+    session.infer(&tb.batch).unwrap();
+    let measured = session
+        .memory_per_rank()
+        .iter()
+        .map(|m| m.data_bytes)
+        .max()
+        .unwrap();
+    assert_eq!(projected, measured,
+               "projection must price exactly what the engine measures");
+}
+
+#[test]
+fn serve_loop_honors_the_budget_and_conserves_requests() {
+    for ranks in [2usize, 4] {
+        for policy in [AdmissionPolicy::Queue, AdmissionPolicy::Reject] {
+            let mut c = cfg(ranks, 2, Activation::Silu);
+            // tight enough to force admission decisions, loose enough
+            // that a small request fits alone
+            c.mem_budget_bytes = 4 * c.d_model as u64 * 96;
+            let s = ServingConfig {
+                ticks: 16,
+                tick_tokens: 32,
+                max_queue_depth: 8,
+                admission: policy,
+                arrival_rate: 3.0,
+                min_request_tokens: 2,
+                max_request_tokens: 8,
+                seed: 31,
+                ..Default::default()
+            };
+            let mut lp = ServeLoop::new(&c, &s).unwrap();
+            let r = lp.run().unwrap();
+            assert_eq!(
+                r.generated,
+                r.completed + r.rejected_queue_full + r.rejected_capacity
+                    + r.queued_at_end,
+                "R={ranks} {policy}: counters must conserve"
+            );
+            assert!(r.completed > 0, "R={ranks} {policy}: nothing served");
+            assert!(r.peak_rank_data_bytes <= r.budget_bytes,
+                    "R={ranks} {policy}: measured peak {} over budget {}",
+                    r.peak_rank_data_bytes, r.budget_bytes);
+        }
+    }
+}

@@ -1,0 +1,170 @@
+"""Regression gate over bench snapshots: compare the current
+BENCH_PR<N>.json against the previous snapshot and fail on a >10%
+tokens/s regression or ANY peak-bytes growth on a shared row. Memory
+rows are deterministic (measured data/comm bytes of a fixed seeded
+workload), so byte growth is a real regression, not noise; throughput
+rows get the --max-regress tolerance for host jitter.
+
+Understands all three snapshot shapes this repo emits:
+  * ep_bench_matrix   — {"bench": "ep_bench_matrix", "runs": {name: run}}
+  * ep_bench_pr5-style single runs with "baseline"/"indexed" sub-objects
+  * ep_serve          — the ep-serve --json-out serving snapshot
+
+A missing baseline file is a notice, not a failure — the gate becomes
+blocking once the first snapshot is committed.
+
+Usage:
+    python tools/bench_gate.py --current BENCH_PR7.json --baseline BENCH_PR6.json
+    python tools/bench_gate.py --self-test
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+
+def extract_rows(snap):
+    """Flatten any snapshot shape into (label, tokens_per_sec, peak_bytes)."""
+    kind = snap.get("bench", "")
+    if kind == "ep_bench_matrix":
+        for name, run in sorted(snap.get("runs", {}).items()):
+            for label, tps, peak in extract_rows(run):
+                yield f"{name}/{label}", tps, peak
+    elif kind == "ep_serve":
+        yield ("serve", float(snap.get("tokens_per_sec", 0.0)),
+               float(snap.get("peak_rank_data_bytes", 0.0)))
+    else:
+        # single ep-bench run: gate the shipping (indexed) path only —
+        # the packed baseline row exists to be beaten, not preserved
+        new = snap.get("indexed")
+        if isinstance(new, dict):
+            yield ("indexed", float(new.get("tokens_per_sec", 0.0)),
+                   float(new.get("peak_rank_comm_bytes", 0.0)))
+
+
+def compare(current, baseline, max_regress):
+    """Return a list of failure strings (empty = gate passes)."""
+    cur = {label: (tps, peak) for label, tps, peak in extract_rows(current)}
+    base = {label: (tps, peak) for label, tps, peak in extract_rows(baseline)}
+    failures = []
+    for label in sorted(set(cur) | set(base)):
+        if label not in cur:
+            failures.append(f"[{label}] present in baseline but missing from "
+                            "the current snapshot (row dropped?)")
+            continue
+        if label not in base:
+            print(f"bench_gate: [{label}] is new (no baseline row) — skipped")
+            continue
+        tps_c, peak_c = cur[label]
+        tps_b, peak_b = base[label]
+        if tps_b > 0 and tps_c < tps_b * (1.0 - max_regress):
+            failures.append(
+                f"[{label}] tokens/s regressed {tps_b:.0f} -> {tps_c:.0f} "
+                f"({100.0 * (1.0 - tps_c / tps_b):.1f}% > "
+                f"{100.0 * max_regress:.0f}% allowed)")
+        elif tps_b > 0:
+            print(f"bench_gate: [{label}] tokens/s {tps_b:.0f} -> {tps_c:.0f} ok")
+        if peak_c > peak_b:
+            failures.append(
+                f"[{label}] peak bytes grew {peak_b:.0f} -> {peak_c:.0f} "
+                "(any growth fails: measured bytes are deterministic)")
+        else:
+            print(f"bench_gate: [{label}] peak bytes {peak_b:.0f} -> "
+                  f"{peak_c:.0f} ok")
+    return failures
+
+
+def self_test() -> int:
+    base = {
+        "bench": "ep_bench_matrix",
+        "runs": {
+            "silu": {"bench": "ep_bench_pr5",
+                     "indexed": {"tokens_per_sec": 1000.0,
+                                 "peak_rank_comm_bytes": 4096}},
+        },
+    }
+    serve_base = {"bench": "ep_serve", "tokens_per_sec": 500.0,
+                  "peak_rank_data_bytes": 2048}
+
+    checks = []
+    # identical snapshots pass
+    checks.append(("identical passes", compare(base, base, 0.10) == []))
+    checks.append(("serve identical passes",
+                   compare(serve_base, serve_base, 0.10) == []))
+    # a 5% dip is inside the tolerance
+    ok = json.loads(json.dumps(base))
+    ok["runs"]["silu"]["indexed"]["tokens_per_sec"] = 950.0
+    checks.append(("5% dip passes", compare(ok, base, 0.10) == []))
+    # a 20% dip fails
+    slow = json.loads(json.dumps(base))
+    slow["runs"]["silu"]["indexed"]["tokens_per_sec"] = 800.0
+    checks.append(("20% dip fails", compare(slow, base, 0.10) != []))
+    # any byte growth fails, even 1 byte
+    fat = json.loads(json.dumps(base))
+    fat["runs"]["silu"]["indexed"]["peak_rank_comm_bytes"] = 4097
+    checks.append(("byte growth fails", compare(fat, base, 0.10) != []))
+    # serve regressions caught through the ep_serve shape
+    slow_serve = dict(serve_base, tokens_per_sec=100.0)
+    checks.append(("serve dip fails", compare(slow_serve, serve_base, 0.10) != []))
+    fat_serve = dict(serve_base, peak_rank_data_bytes=4096)
+    checks.append(("serve byte growth fails",
+                   compare(fat_serve, serve_base, 0.10) != []))
+    # new rows are a notice, dropped rows a failure
+    grown = json.loads(json.dumps(base))
+    grown["runs"]["swiglu"] = grown["runs"]["silu"]
+    checks.append(("new row passes", compare(grown, base, 0.10) == []))
+    checks.append(("dropped row fails", compare(base, grown, 0.10) != []))
+
+    failed = [name for name, passed in checks if not passed]
+    for name, passed in checks:
+        print(f"bench_gate self-test: {name}: {'ok' if passed else 'FAIL'}")
+    if failed:
+        print(f"bench_gate self-test: {len(failed)} check(s) failed",
+              file=sys.stderr)
+        return 1
+    print(f"bench_gate self-test: all {len(checks)} checks passed")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", help="snapshot produced by this change")
+    ap.add_argument("--baseline", help="previous committed snapshot")
+    ap.add_argument("--max-regress", type=float, default=0.10,
+                    help="allowed fractional tokens/s regression "
+                         "(default 0.10)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the built-in behavior checks and exit")
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
+    if not args.current or not args.baseline:
+        ap.error("--current and --baseline are required (or --self-test)")
+
+    current_path = pathlib.Path(args.current)
+    baseline_path = pathlib.Path(args.baseline)
+    if not current_path.exists():
+        print(f"bench_gate: current snapshot {current_path} missing",
+              file=sys.stderr)
+        return 1
+    if not baseline_path.exists():
+        print(f"bench_gate: no baseline at {baseline_path} — nothing to "
+              "gate against yet (the gate blocks once a baseline is "
+              "committed)")
+        return 0
+
+    current = json.loads(current_path.read_text())
+    baseline = json.loads(baseline_path.read_text())
+    failures = compare(current, baseline, args.max_regress)
+    if failures:
+        for f in failures:
+            print(f"bench_gate: FAIL {f}", file=sys.stderr)
+        return 1
+    print("bench_gate: no regressions against "
+          f"{baseline_path.name} \N{CHECK MARK}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

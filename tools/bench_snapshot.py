@@ -46,9 +46,9 @@ MATRIX = [
 ]
 
 
-def run_one(name, extra, steps, tmpdir):
+def run_one(name, extra, steps, tmpdir, subcommand="ep-bench"):
     row_out = pathlib.Path(tmpdir) / f"{name}.json"
-    cmd = ["cargo", "run", "--release", "--", "ep-bench",
+    cmd = ["cargo", "run", "--release", "--", subcommand,
            "--steps", steps, "--json-out", str(row_out)] + FIXTURE + extra
     print(f"bench_snapshot [{name}]:", " ".join(cmd))
     proc = subprocess.run(cmd, cwd=ROOT)
@@ -99,6 +99,31 @@ def main() -> int:
                 print(f"bench_snapshot: WARNING — [{name}] staging bytes did "
                       "not drop below the packed buffers", file=sys.stderr)
                 warnings += 1
+
+        # forward-only serving smoke cell: ep-serve on the same fixture
+        # (--steps aliases the tick count), pinned to the matrix so the
+        # bench gate tracks serving throughput + peak bytes too
+        serve = run_one("serve_smoke", ["--activation", "swiglu"],
+                        args.steps, tmpdir, subcommand="ep-serve")
+        rows["serve_smoke"] = serve
+        print(f"  [serve_smoke] engine={serve.get('engine', '?')} "
+              f"ticks={serve.get('ticks', '?')}")
+        print(f"    requests: {serve.get('generated', 0):.0f} generated, "
+              f"{serve.get('completed', 0):.0f} completed, "
+              f"{serve.get('rejected_queue_full', 0):.0f}+"
+              f"{serve.get('rejected_capacity', 0):.0f} rejected, "
+              f"{serve.get('queued_at_end', 0):.0f} queued at end")
+        print(f"    {serve.get('tokens_per_sec', 0):.0f} tokens/s, "
+              f"p99 {serve.get('latency_p99_ms', 0):.3f} ms, peak rank "
+              f"{serve.get('peak_rank_data_bytes', 0):.0f} B")
+        accounted = (serve.get("completed", 0)
+                     + serve.get("rejected_queue_full", 0)
+                     + serve.get("rejected_capacity", 0)
+                     + serve.get("queued_at_end", 0))
+        if serve.get("generated", -1) != accounted:
+            print("bench_snapshot: WARNING — [serve_smoke] request counters "
+                  "do not conserve", file=sys.stderr)
+            warnings += 1
 
     out = ROOT / args.out
     out.write_text(json.dumps({"bench": "ep_bench_matrix", "runs": rows},

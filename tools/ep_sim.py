@@ -1303,3 +1303,161 @@ for case in range(30):
 print(f"swiglu parity OK: {gated_cases} fuzz cases, gated blocked path "
       "bit-identical to the row reference across R x tile x policy, "
       "derived bytes == plan")
+
+# ===========================================================================
+# Forward-only serving mirror (ISSUE 7): continuous batching +
+# capacity-aware admission, mirroring rust/src/serving/.
+#
+# Mirrored contracts:
+#   * batching is INVISIBLE — each request's span of the aggregated
+#     forward output is bit-identical (float32) to serving the request
+#     alone, because the expert kernels are per-row: the batch only
+#     concatenates rows, and aggregation is fuzzed over the sharded
+#     engine too so the exchange cannot leak between requests;
+#   * the admission projection prices exactly what the engine measures:
+#     per-rank forward data bytes are 4*d*(slots_r + 2*tok_r), where
+#     slots_r counts routed top-k slots on the rank owning each expert
+#     and tok_r is the contiguous token partition — the ceil closed
+#     form asserted here against rank_of_token, token by token;
+#   * a budget-driven admission loop (FIFO drain, queue vs reject
+#     policy) never admits a batch whose projected peak exceeds the
+#     budget, and conserves every generated request exactly once.
+# ===========================================================================
+
+def tokens_per_rank_ceil(l, R):
+    # rank r holds [ceil(r*l/R), ceil((r+1)*l/R)) — the closed form of
+    # rank_of_token's contiguous partition
+    return [-(-((r + 1) * l) // R) - (-(-(r * l) // R)) for r in range(R)]
+
+for R in [1, 2, 4, 8]:
+    for l in range(1, 40):
+        counted = [0] * R
+        for t in range(l):
+            counted[rank_of_token(t, l, R)] += 1
+        assert tokens_per_rank_ceil(l, R) == counted, \
+            f"token partition closed form diverged at l={l} R={R}"
+
+def admission_peak_bytes(req_ids_list, total_tokens, E, R, k, dm):
+    # the AdmissionController projection: one slot per top-k assignment
+    # on the rank owning that expert, 4*d*(slots + 2*tokens) per rank
+    slots = [0] * R
+    for ids in req_ids_list:
+        for ex in ids:
+            slots[rank_of_expert(ex, E, R, False)] += 1
+    toks = tokens_per_rank_ceil(total_tokens, R)
+    return max(4 * dm * (s + 2 * t) for s, t in zip(slots, toks))
+
+random.seed(21)
+serve_cases = 0
+for case in range(40):
+    R = random.choice([1, 2, 4])
+    E = R * random.randint(1, 4)
+    k = random.randint(1, min(E, 3))
+    dm = 5
+    rng = np.random.default_rng(8000 + case)
+    n_req = random.randint(2, 6)
+    reqs = []
+    for _ in range(n_req):
+        lt = random.randint(1, 7)
+        ids = np.concatenate([rng.choice(E, k, replace=False)
+                              for _ in range(lt)]).astype(int)
+        reqs.append(dict(tokens=lt, ids=list(ids),
+                         x=rng.standard_normal((lt, dm)).astype(f32),
+                         gates=rng.random(lt * k).astype(f32)))
+    W = rng.standard_normal((E, dm, dm)).astype(f32)
+    # aggregate: concatenate rows in arrival order (the batcher mirror)
+    agg_ids = sum((r['ids'] for r in reqs), [])
+    agg_x = np.concatenate([r['x'] for r in reqs])
+    agg_gates = np.concatenate([r['gates'] for r in reqs])
+    L = agg_x.shape[0]
+    d_agg = build(agg_ids, L, E, k)
+    out_single = single_forward(d_agg, W, agg_x, agg_gates, dm)
+    out_shard, _, _ = sharded_forward(d_agg, W, agg_x, agg_gates, dm, R, False)
+    assert out_single.tobytes() == out_shard.tobytes(), \
+        f"serve case {case}: aggregated sharded forward diverged"
+    # scatter: each request's span == the request served alone, bitwise
+    off = 0
+    for r in reqs:
+        d_solo = build(r['ids'], r['tokens'], E, k)
+        solo = single_forward(d_solo, W, r['x'], r['gates'], dm)
+        span = out_shard[off:off + r['tokens']]
+        assert solo.tobytes() == span.tobytes(), \
+            f"serve case {case}: span diverged from solo inference"
+        off += r['tokens']
+    # projection == measured: the engine's forward data bytes for the
+    # aggregated batch are 4*d*(slots_r + 2*tok_r) on every rank
+    measured = []
+    shards = shard(d_agg, R, False)
+    for r in range(R):
+        slots_r = len(shards[r]['toks'])
+        tok_r = tokens_per_rank_ceil(L, R)[r]
+        measured.append(4 * dm * (slots_r + 2 * tok_r))
+    projected = admission_peak_bytes([r['ids'] for r in reqs], L, E, R, k, dm)
+    assert projected == max(measured), \
+        f"serve case {case}: projection {projected} != measured {max(measured)}"
+    serve_cases += 1
+print(f"serving parity OK: {serve_cases} fuzz cases, per-request spans "
+      "bit-identical to solo inference through the sharded aggregate, "
+      "admission projection == per-rank forward bytes")
+
+# -- budget-driven admission loop: peak never exceeds the budget ------------
+
+def admission_sim(ticks, tick_tokens, max_queue, budget, policy, E, R, k, dm,
+                  seed):
+    rng = random.Random(seed)
+    queue = []
+    completed = rejected_cap = rejected_full = generated = 0
+    batch_peaks = []
+    for _ in range(ticks):
+        for _ in range(rng.randint(0, 3)):  # arrivals
+            lt = rng.randint(1, 6)
+            ids = [rng.randrange(E) for _ in range(lt * k)]
+            generated += 1
+            req = dict(tokens=lt, ids=ids)
+            alone = admission_peak_bytes([ids], lt, E, R, k, dm)
+            if budget > 0 and alone > budget:
+                rejected_cap += 1
+            elif len(queue) >= max_queue:
+                rejected_full += 1
+            else:
+                queue.append(req)
+        picked, picked_tokens = [], 0
+        while queue:
+            req = queue[0]
+            if picked and picked_tokens + req['tokens'] > tick_tokens:
+                break
+            trial = [p['ids'] for p in picked] + [req['ids']]
+            peak = admission_peak_bytes(trial, picked_tokens + req['tokens'],
+                                        E, R, k, dm)
+            if budget > 0 and peak > budget:
+                if policy == 'queue':
+                    break  # head-of-line waits for a lighter tick
+                queue.pop(0)
+                rejected_cap += 1
+                continue
+            picked.append(queue.pop(0))
+            picked_tokens += req['tokens']
+        if picked:
+            batch_peaks.append(admission_peak_bytes(
+                [p['ids'] for p in picked], picked_tokens, E, R, k, dm))
+            completed += len(picked)
+    return dict(generated=generated, completed=completed,
+                rejected_cap=rejected_cap, rejected_full=rejected_full,
+                queued=len(queue), peaks=batch_peaks)
+
+for policy in ['queue', 'reject']:
+    for budget in [0, 600, 2000]:
+        r = admission_sim(24, 16, 6, budget, policy, 8, 4, 2, 5, seed=13)
+        assert r['generated'] == (r['completed'] + r['rejected_cap']
+                                  + r['rejected_full'] + r['queued']), \
+            f"admission {policy}/{budget}: counters do not conserve"
+        assert r['completed'] > 0, f"admission {policy}/{budget}: starved"
+        if budget > 0:
+            assert all(p <= budget for p in r['peaks']), \
+                f"admission {policy}/{budget}: admitted batch over budget"
+        if budget == 0:
+            assert r['rejected_cap'] == 0, \
+                "no budget must mean no capacity rejects"
+print("admission mirror OK: FIFO drain under queue + reject policies, "
+      "every admitted batch's projected peak within budget, request "
+      "counters conserve")
