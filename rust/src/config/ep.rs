@@ -173,6 +173,11 @@ pub struct EpConfig {
     /// bucket, loaded at engine build for a warm start and saved back
     /// by `ep-train`; empty = no artifact
     pub calibration_path: String,
+    /// Chrome trace-event JSON output (`crate::trace`): attach a
+    /// tracer to the engines and write the per-rank phase spans +
+    /// counter tracks here at end of run; empty = tracing off (the
+    /// engines pay nothing)
+    pub trace_out: String,
 }
 
 impl Default for EpConfig {
@@ -206,6 +211,7 @@ impl Default for EpConfig {
             clip_norm: 0.0,
             metrics_path: String::new(),
             calibration_path: String::new(),
+            trace_out: String::new(),
         }
     }
 }
@@ -241,6 +247,7 @@ impl EpConfig {
         "clip_norm",
         "metrics_path",
         "calibration_path",
+        "trace_out",
     ];
 
     pub fn validate(&self) -> Result<(), String> {
@@ -352,6 +359,7 @@ impl EpConfig {
             metrics_path: t.str_or(&key("metrics_path"), &d.metrics_path),
             calibration_path: t.str_or(&key("calibration_path"),
                                        &d.calibration_path),
+            trace_out: t.str_or(&key("trace_out"), &d.trace_out),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -431,7 +439,8 @@ mod tests {
     fn activation_and_calibration_keys() {
         let t = Toml::parse(
             "[ep]\nactivation = \"swiglu\"\ntile_rows = 0\n\
-             calibration_path = \"/tmp/calib.json\"",
+             calibration_path = \"/tmp/calib.json\"\n\
+             trace_out = \"/tmp/trace.json\"",
         )
         .unwrap();
         let c = EpConfig::from_toml(&t, "ep").unwrap();
@@ -439,6 +448,8 @@ mod tests {
         assert!(c.activation.gated());
         assert_eq!(c.tile_rows, 0);
         assert_eq!(c.calibration_path, "/tmp/calib.json");
+        assert_eq!(c.trace_out, "/tmp/trace.json");
+        assert!(EpConfig::default().trace_out.is_empty());
         // defaults: ungated SiLU, no artifact
         let d = EpConfig::default();
         assert_eq!(d.activation, Activation::Silu);
@@ -542,7 +553,9 @@ mod tests {
                 "chunk_balance" => format!("{k} = \"tokens\""),
                 "activation" => format!("{k} = \"silu\""),
                 "lr_schedule" => format!("{k} = \"constant\""),
-                "metrics_path" | "calibration_path" => format!("{k} = \"\""),
+                "metrics_path" | "calibration_path" | "trace_out" => {
+                    format!("{k} = \"\"")
+                }
                 "calibrate" => format!("{k} = false"),
                 "skew" => format!("{k} = 0.7"),
                 "lr" => format!("{k} = 0.05"),

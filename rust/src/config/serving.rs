@@ -74,6 +74,10 @@ pub struct ServingConfig {
     /// traffic-generator seed (separate stream from `[ep] seed`, which
     /// keeps seeding the expert weights)
     pub seed: u64,
+    /// when tracing is on (`[ep] trace_out`), record one `batcher_tick`
+    /// host span per tick (tokens/requests batched); off leaves only
+    /// the engine phase spans in the trace
+    pub trace_ticks: bool,
 }
 
 impl Default for ServingConfig {
@@ -87,6 +91,7 @@ impl Default for ServingConfig {
             min_request_tokens: 1,
             max_request_tokens: 32,
             seed: 7,
+            trace_ticks: true,
         }
     }
 }
@@ -103,6 +108,7 @@ impl ServingConfig {
         "min_request_tokens",
         "max_request_tokens",
         "seed",
+        "trace_ticks",
     ];
 
     pub fn validate(&self) -> Result<(), String> {
@@ -164,6 +170,7 @@ impl ServingConfig {
             max_request_tokens: t.usize_or(&key("max_request_tokens"),
                                            d.max_request_tokens),
             seed: t.usize_or(&key("seed"), d.seed as usize) as u64,
+            trace_ticks: t.bool_or(&key("trace_ticks"), d.trace_ticks),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -208,6 +215,9 @@ mod tests {
         assert_eq!(c.min_request_tokens, 4);
         assert_eq!(c.max_request_tokens, 16);
         assert_eq!(c.seed, 11);
+        assert!(c.trace_ticks, "defaults to on when unset");
+        let t = Toml::parse("[serving]\ntrace_ticks = false").unwrap();
+        assert!(!ServingConfig::from_toml(&t, "serving").unwrap().trace_ticks);
     }
 
     #[test]

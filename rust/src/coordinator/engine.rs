@@ -133,6 +133,7 @@ use crate::dispatch::gating::synthetic_gating;
 use crate::dispatch::parallel_build::parallel_build;
 use crate::dispatch::structures::{DispatchStructures, RowIndexPlan};
 use crate::memory::model::{staging_bytes, CheckpointPolicy, MemoryBreakdown};
+use crate::trace::{SpanRecord, TracePhase, Tracer};
 use crate::util::prng::Rng;
 use crate::util::threadpool::{par_map, scope_chunks};
 
@@ -144,7 +145,8 @@ use super::kernels::{backward_segment, forward_segment, pick_tile, silu,
                      DEFAULT_TILE_ROWS};
 use super::params::{ExpertGrads, ExpertParams, ExpertStore, RankExperts};
 use super::pipeline::timeline::{CostModel, OverlapReport};
-use super::pipeline::{combine_chunk, compute_chunk_indexed, PipelinedEngine};
+use super::pipeline::{combine_chunk, compute_chunk_indexed, split_wall,
+                      PipelinedEngine};
 
 static NEXT_BATCH_ID: AtomicU64 = AtomicU64::new(1);
 static NEXT_ENGINE_TAG: AtomicU64 = AtomicU64::new(1);
@@ -699,6 +701,13 @@ pub trait ExecutionEngine {
     fn recalibrate_cost_model(&mut self, _alpha: f64) -> Option<CostModel> {
         None
     }
+
+    /// Attach a structured tracer (`crate::trace`): subsequent steps
+    /// record per-rank phase spans and resident-bytes gauges into it.
+    /// Engines without instrumentation ignore the attach (the default).
+    /// Tracing never perturbs numerics — the bit-identity matrices hold
+    /// with and without a tracer.
+    fn set_tracer(&mut self, _tracer: Tracer) {}
 }
 
 // -- reference per-row expert math ------------------------------------------
@@ -1043,6 +1052,9 @@ pub struct SingleRankEngine {
     /// last forward's accounting — persists across the session's
     /// backward, matching the sharded engine's contract
     mem: Vec<MemoryBreakdown>,
+    /// attached observability handle; `None` keeps the hot path free
+    /// of any tracing cost at all (see [`crate::trace`])
+    tracer: Option<Tracer>,
 }
 
 impl SingleRankEngine {
@@ -1062,6 +1074,7 @@ impl SingleRankEngine {
             cache_cap: PLAN_CACHE_CAP,
             traffic: Traffic::default(),
             mem: Vec::new(),
+            tracer: None,
         }
     }
 
@@ -1168,6 +1181,7 @@ impl SingleRankEngine {
             SavedActs::Nothing => (RowsSrc::Tokens(x), None),
         };
         let mut scratch = KernelScratch::new(d, h, self.tile_rows);
+        let trace_t0 = self.tracer.as_ref().map(|tr| tr.now_s());
         for (e, p) in self.store.experts.iter().enumerate() {
             let g = &mut grads.experts[e];
             let lo = disp.expert_token_offsets[e] as usize;
@@ -1182,6 +1196,13 @@ impl SingleRankEngine {
                              gates, hidden,
                              if want_dx { Some(&mut dxs[..]) } else { None },
                              &mut scratch, None);
+        }
+        if let (Some(tr), Some(t0)) = (&self.tracer, trace_t0) {
+            let mut s = SpanRecord::new(TracePhase::ExpertGemm, t0,
+                                        (tr.now_s() - t0).max(0.0));
+            s.backward = true;
+            s.rows = n as u64;
+            tr.record_span(s);
         }
         // fold ∂x rows home in expert-major position order (the order
         // every engine shares — see `fold_dx`)
@@ -1231,6 +1252,9 @@ impl ExecutionEngine for SingleRankEngine {
         let mut act = vec![0.0f32; if save_hidden { n * h } else { 0 }];
         let mut gate = vec![0.0f32; if save_hidden && gated { n * h } else { 0 }];
         let mut scratch = KernelScratch::new(d, h, self.tile_rows);
+        // clock reads happen only with a tracer attached — without one
+        // this path is byte-for-byte the untraced hot path
+        let trace_t0 = self.tracer.as_ref().map(|tr| tr.now_s());
         for (e, p) in self.store.experts.iter().enumerate() {
             let lo = disp.expert_token_offsets[e] as usize;
             let hi = disp.expert_token_offsets[e + 1] as usize;
@@ -1252,7 +1276,15 @@ impl ExecutionEngine for SingleRankEngine {
                             },
                             &mut scratch, None);
         }
+        if let (Some(tr), Some(t0)) = (&self.tracer, trace_t0) {
+            let mut s = SpanRecord::new(TracePhase::ExpertGemm, t0,
+                                        (tr.now_s() - t0).max(0.0));
+            s.rows = n as u64;
+            s.tokens = l as u64;
+            tr.record_span(s);
+        }
         // combine scatter, token-major, fixed j order
+        let trace_tc = self.tracer.as_ref().map(|tr| tr.now_s());
         let mut out = vec![0.0f32; l * d];
         for i in 0..l {
             for j in 0..k {
@@ -1265,6 +1297,13 @@ impl ExecutionEngine for SingleRankEngine {
                     o[c] += g * row[c];
                 }
             }
+        }
+        if let (Some(tr), Some(t0)) = (&self.tracer, trace_tc) {
+            let mut s = SpanRecord::new(TracePhase::Combine, t0,
+                                        (tr.now_s() - t0).max(0.0));
+            s.rows = n as u64;
+            s.tokens = l as u64;
+            tr.record_span(s);
         }
         let saved = match self.policy {
             CheckpointPolicy::SaveAll => SavedActs::All { xs, pre, act, gate },
@@ -1283,6 +1322,11 @@ impl ExecutionEngine for SingleRankEngine {
             index_bytes: disp.metadata_bytes() as u64,
             extra_bytes: 0,
         }];
+        if let Some(tr) = &self.tracer {
+            tr.gauge(0, "resident_bytes", self.mem[0].data_bytes as f64,
+                     mem_peak_phase(&self.mem[0]));
+            tr.gauge(0, "routed_rows", n as f64, "gather");
+        }
         self.sessions_opened += 1;
         let session = self.sessions_opened;
         self.session = Some(SingleSession { id: session, batch: batch.share(), saved });
@@ -1328,6 +1372,67 @@ impl ExecutionEngine for SingleRankEngine {
 
     fn gather_params(&self) -> Result<ExpertStore, String> {
         Ok(self.store.clone())
+    }
+
+    fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = Some(tracer);
+    }
+}
+
+/// Phase attribution for a rank's `resident_bytes` gauge sample: which
+/// memory component dominates the step's footprint (staging tiles →
+/// the gather/exchange, otherwise the routed rows + saved activations
+/// held for the expert GEMM).
+pub(crate) fn mem_peak_phase(m: &MemoryBreakdown) -> &'static str {
+    if m.extra_bytes.max(m.index_bytes) > m.data_bytes {
+        "gather"
+    } else {
+        "expert_gemm"
+    }
+}
+
+/// Record the gather + expert-GEMM section spans covering one compute
+/// wall interval starting at `t0`, with the exact `split_wall`
+/// durations the caller feeds its timeline (`gather_wall` +
+/// `compute_wall` = the section's wall clock — the span sum reproduces
+/// the measured wall), plus one per-rank `detail` span pair carved
+/// from each rank's own kernel timers.
+pub(crate) fn record_compute_spans(tr: &Tracer, t0: f64, gather_wall: f64,
+                                   compute_wall: f64, timers: &[KernelTimers],
+                                   bytes: u64, rows: u64, tokens: u64,
+                                   chunk: Option<usize>, backward: bool) {
+    let mut g = SpanRecord::new(TracePhase::Gather, t0, gather_wall);
+    g.bytes = bytes;
+    g.rows = rows;
+    g.tokens = tokens;
+    g.chunk = chunk;
+    g.backward = backward;
+    tr.record_span(g);
+    let mut cm = SpanRecord::new(TracePhase::ExpertGemm, t0 + gather_wall,
+                                 compute_wall);
+    cm.rows = rows;
+    cm.tokens = tokens;
+    cm.chunk = chunk;
+    cm.backward = backward;
+    tr.record_span(cm);
+    for (rank, tm) in timers.iter().enumerate() {
+        if tm.gather_s > 0.0 {
+            let mut s = SpanRecord::new(TracePhase::Gather, t0, tm.gather_s);
+            s.rank = Some(rank);
+            s.chunk = chunk;
+            s.backward = backward;
+            s.detail = true;
+            tr.record_span(s);
+        }
+        if tm.compute_s > 0.0 {
+            let mut s = SpanRecord::new(TracePhase::ExpertGemm,
+                                        t0 + tm.gather_s, tm.compute_s);
+            s.rank = Some(rank);
+            s.chunk = chunk;
+            s.backward = backward;
+            s.detail = true;
+            tr.record_span(s);
+        }
     }
 }
 
@@ -1412,6 +1517,9 @@ pub struct ShardedEngine {
     plan_cache_cap: usize,
     traffic: Traffic,
     mem: Vec<MemoryBreakdown>,
+    /// attached observability handle; `None` keeps the hot path free
+    /// of any tracing cost at all (see [`crate::trace`])
+    tracer: Option<Tracer>,
 }
 
 impl ShardedEngine {
@@ -1448,6 +1556,7 @@ impl ShardedEngine {
             plan_cache_cap: PLAN_CACHE_CAP,
             traffic: Traffic::default(),
             mem: Vec::new(),
+            tracer: None,
         })
     }
 
@@ -1589,8 +1698,10 @@ impl ShardedEngine {
         for (e, g) in grads.experts.drain(..).enumerate() {
             work[assignment.rank_of[e] as usize].bucket.push((e, g));
         }
+        let timed = self.tracer.is_some();
+        let trace_t0 = self.tracer.as_ref().map(|tr| tr.now_s());
         scope_chunks(&mut work, 1, workers, |dst, chunk| {
-            let RankBwdWork { bucket, dxs, .. } = &mut chunk[0];
+            let RankBwdWork { bucket, dxs, timers } = &mut chunk[0];
             let rr = &rows_ref.per_rank[dst];
             let (xsrc, hidden): (RowsSrc, Option<SavedHiddenRef<'_>>) =
                 match &saved[dst] {
@@ -1615,13 +1726,27 @@ impl ShardedEngine {
                 if lo == hi {
                     continue;
                 }
-                // timers: None — the barrier engine has no timeline
+                // timers run only when a tracer is attached — the
+                // untraced hot path skips every clock read
                 backward_segment(p, g, d, h, lo, hi, &xsrc, &rr.tokens, 0,
                                  &rr.gate_slots, 0, d_out, gates, hidden,
                                  if want_dx { Some(&mut dxs[..]) } else { None },
-                                 &mut scratch, None);
+                                 &mut scratch,
+                                 if timed { Some(&mut *timers) } else { None });
             }
         });
+        if let (Some(tr), Some(t0)) = (&self.tracer, trace_t0) {
+            let wall = (tr.now_s() - t0).max(0.0);
+            let timers: Vec<KernelTimers> = work.iter().map(|w| w.timers).collect();
+            let (g_sum, c_sum) = timers.iter().fold((0.0f64, 0.0f64), |a, t| {
+                (a.0 + t.gather_s, a.1 + t.compute_s)
+            });
+            let (gather_wall, compute_wall) = split_wall(wall, g_sum, c_sum);
+            record_compute_spans(tr, t0, gather_wall, compute_wall, &timers,
+                                 grad_bytes + recompute_bytes,
+                                 rows_ref.local_rows() + rows_ref.cross_rows(),
+                                 l_tokens as u64, None, true);
+        }
         if let Some(dx) = d_x {
             fold_dx(rows_ref, &work, d, self.topo.num_experts, 0, dx);
         }
@@ -1686,22 +1811,47 @@ impl ExecutionEngine for ShardedEngine {
 
         // (ii) per-rank blocked expert compute, gathering rows directly
         // from the shared batch (one definition with the pipelined
-        // engine — the engines cannot drift apart on the kernel path)
+        // engine — the engines cannot drift apart on the kernel path).
+        // The kernel timers (and every clock read) run only with a
+        // tracer attached — numerics are identical either way.
+        let trace_t0 = self.tracer.as_ref().map(|tr| tr.now_s());
         let computed =
             compute_chunk_indexed(plan, &self.rank_params, policy, d, h, workers,
-                                  self.tile_rows, x, 0, false);
+                                  self.tile_rows, x, 0, self.tracer.is_some());
         let mut saved = Vec::with_capacity(r);
         let mut ys_of = Vec::with_capacity(r);
-        for (sv, ys, _timers) in computed {
+        let mut timers = Vec::with_capacity(r);
+        for (sv, ys, tm) in computed {
             saved.push(sv);
             ys_of.push(ys);
+            timers.push(tm);
+        }
+        if let (Some(tr), Some(t0)) = (&self.tracer, trace_t0) {
+            let wall = (tr.now_s() - t0).max(0.0);
+            let (g_sum, c_sum) = timers.iter().fold((0.0f64, 0.0f64), |a, t| {
+                (a.0 + t.gather_s, a.1 + t.compute_s)
+            });
+            let (gather_wall, compute_wall) = split_wall(wall, g_sum, c_sum);
+            record_compute_spans(tr, t0, gather_wall, compute_wall, &timers,
+                                 cross_bytes,
+                                 plan.rows.local_rows() + plan.rows.cross_rows(),
+                                 l as u64, None, false);
         }
 
         // (iii) combine scatter on each token's home rank, reading each
         // expert-output row in place via the return lookup (same j order
         // as the single-rank path — bit-identical accumulation)
+        let trace_tc = self.tracer.as_ref().map(|tr| tr.now_s());
         let mut out = vec![0.0f32; l * d];
         combine_chunk(plan, gates, &ys_of, d, k, workers, 0, &mut out);
+        if let (Some(tr), Some(t0)) = (&self.tracer, trace_tc) {
+            let mut s = SpanRecord::new(TracePhase::Combine, t0,
+                                        (tr.now_s() - t0).max(0.0));
+            s.bytes = cross_bytes;
+            s.rows = plan.rows.local_rows() + plan.rows.cross_rows();
+            s.tokens = l as u64;
+            tr.record_span(s);
+        }
 
         // per-rank Figure-3/5 accounting from what was actually resident:
         // the packed send/return buffers are gone, so comm residency is
@@ -1726,6 +1876,14 @@ impl ExecutionEngine for ShardedEngine {
                 }
             })
             .collect();
+        if let Some(tr) = &self.tracer {
+            for (rank, m) in mem.iter().enumerate() {
+                tr.gauge(rank, "resident_bytes", m.data_bytes as f64,
+                         mem_peak_phase(m));
+                tr.gauge(rank, "routed_rows",
+                         plan.rows.per_rank[rank].local_slots() as f64, "gather");
+            }
+        }
         self.mem = mem;
         self.traffic = traffic;
         self.sessions_opened += 1;
@@ -1779,6 +1937,10 @@ impl ExecutionEngine for ShardedEngine {
 
     fn gather_params(&self) -> Result<ExpertStore, String> {
         ExpertStore::gather(&self.rank_params, self.topo.num_experts)
+    }
+
+    fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = Some(tracer);
     }
 }
 

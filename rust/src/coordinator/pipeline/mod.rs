@@ -84,10 +84,13 @@ use crate::util::threadpool::{par_map, scope_chunks};
 
 use self::timeline::{bwd_flops_per_row, fwd_flops_per_row, CostModel, OverlapReport,
                      Phase, TimelineBuilder};
+use crate::trace::{SpanRecord, TracePhase, Tracer};
+
 use super::engine::{add_params, check_batch, fold_dx, lru_get_or_insert,
-                    next_engine_tag, split_bounds_weighted, BatchPlan,
-                    ExecutionEngine, RankBwdWork, SavedActs, StepBatch,
-                    StepHandle, Traffic, PLAN_CACHE_CAP};
+                    mem_peak_phase, next_engine_tag, record_compute_spans,
+                    split_bounds_weighted, BatchPlan, ExecutionEngine,
+                    RankBwdWork, SavedActs, StepBatch, StepHandle, Traffic,
+                    PLAN_CACHE_CAP};
 use super::expert_parallel::EpTopology;
 use super::kernels::{backward_segment, forward_segment, KernelScratch,
                      KernelTimers, RowsSrc, SavedHiddenMut, SavedHiddenRef,
@@ -144,6 +147,9 @@ pub struct PipelinedEngine {
     traffic: Traffic,
     mem: Vec<MemoryBreakdown>,
     report: Option<OverlapReport>,
+    /// attached observability handle; `None` keeps the hot path free
+    /// of any tracing cost at all (see [`crate::trace`])
+    tracer: Option<Tracer>,
 }
 
 impl PipelinedEngine {
@@ -189,6 +195,7 @@ impl PipelinedEngine {
             traffic: Traffic::default(),
             mem: Vec::new(),
             report: None,
+            tracer: None,
         })
     }
 
@@ -422,6 +429,7 @@ impl PipelinedEngine {
                 let gate_base = cp.token_base * k_top;
                 let token_base = cp.token_base;
                 let saved_ref = &saved_m;
+                let trace_t0 = self.tracer.as_ref().map(|tr| tr.now_s());
                 let wall_t0 = Instant::now();
                 scope_chunks(&mut work, 1, workers, |dst, chunk| {
                     let RankBwdWork { bucket, dxs, timers } = &mut chunk[0];
@@ -470,14 +478,23 @@ impl PipelinedEngine {
                 // kernels = Compute
                 let wall = wall_t0.elapsed().as_secs_f64();
                 let mut tm = KernelTimers::default();
+                let mut rank_timers = Vec::with_capacity(r);
                 for w in work.iter_mut() {
                     tm.add(w.timers);
+                    rank_timers.push(w.timers);
                     w.timers = KernelTimers::default();
                 }
                 let (gather_wall, compute_wall) =
                     split_wall(wall, tm.gather_s, tm.compute_s);
                 timeline.record_measured(Phase::Exchange, gather_wall);
                 timeline.record_measured(Phase::Compute, compute_wall);
+                if let (Some(tr), Some(t0)) = (&self.tracer, trace_t0) {
+                    record_compute_spans(tr, t0, gather_wall, compute_wall,
+                                         &rank_timers,
+                                         cross.iter().sum::<u64>(),
+                                         rows.local_rows() + rows.cross_rows(),
+                                         0, Some(m), true);
+                }
                 if let Some(dx) = d_x.as_deref_mut() {
                     fold_dx(rows, &work, d, self.topo.num_experts,
                             cp.token_base, dx);
@@ -522,7 +539,8 @@ impl PipelinedEngine {
 /// the worker count — the wall clock is the truth, the ratio just says
 /// which channel the section spent it on. With no worker samples the
 /// whole section is Compute.
-fn split_wall(wall_s: f64, gather_sum_s: f64, compute_sum_s: f64) -> (f64, f64) {
+pub(crate) fn split_wall(wall_s: f64, gather_sum_s: f64,
+                         compute_sum_s: f64) -> (f64, f64) {
     let total = gather_sum_s + compute_sum_s;
     if total > 0.0 {
         (wall_s * gather_sum_s / total, wall_s * compute_sum_s / total)
@@ -711,6 +729,7 @@ impl ExecutionEngine for PipelinedEngine {
                 // timers would overcount by up to the worker count),
                 // apportioned between the Exchange (gather/staging) and
                 // Compute channels by the workers' summed split.
+                let trace_t0 = self.tracer.as_ref().map(|tr| tr.now_s());
                 let wall_t0 = Instant::now();
                 let computed = compute_chunk_indexed(&cp.plan, params, policy,
                                                      d, h, workers, tile, x,
@@ -719,15 +738,28 @@ impl ExecutionEngine for PipelinedEngine {
                 let mut tm = KernelTimers::default();
                 let mut saved = Vec::with_capacity(r);
                 let mut ys_of = Vec::with_capacity(r);
+                let mut rank_timers = Vec::with_capacity(r);
                 for (sv, ys, t) in computed {
                     saved.push(sv);
                     ys_of.push(ys);
                     tm.add(t);
+                    rank_timers.push(t);
                 }
                 let (gather_wall, compute_wall) =
                     split_wall(wall, tm.gather_s, tm.compute_s);
                 tb.record_measured(Phase::Exchange, gather_wall);
                 tb.record_measured(Phase::Compute, compute_wall);
+                if let (Some(tr), Some(t0)) = (&self.tracer, trace_t0) {
+                    // section spans carry the exact `split_wall` values
+                    // fed to `record_measured`, so the step's span sum
+                    // reproduces `measured_step_s()`
+                    let next = if m + 1 < kc { chunks[m + 1].token_base } else { l };
+                    record_compute_spans(tr, t0, gather_wall, compute_wall,
+                                         &rank_timers, cross_bytes,
+                                         rows.local_rows() + rows.cross_rows(),
+                                         (next - cp.token_base) as u64,
+                                         Some(m), false);
+                }
                 let flops: Vec<u64> = (0..r)
                     .map(|rank| {
                         rows.per_rank[rank].local_slots() as u64
@@ -742,10 +774,19 @@ impl ExecutionEngine for PipelinedEngine {
                     .map(|home| rows.remote_return_rows(home) * row_bytes)
                     .collect();
                 let _ = tb.phase(m, false, Phase::Combine, &combine_recv, comp_done);
+                let trace_tc = self.tracer.as_ref().map(|tr| tr.now_s());
                 let combine_t0 = Instant::now();
                 combine_chunk(&cp.plan, gates, &ys_of, d, k, workers,
                               cp.token_base, &mut out);
-                tb.record_measured(Phase::Combine, combine_t0.elapsed().as_secs_f64());
+                let combine_s = combine_t0.elapsed().as_secs_f64();
+                tb.record_measured(Phase::Combine, combine_s);
+                if let (Some(tr), Some(t0)) = (&self.tracer, trace_tc) {
+                    let mut s = SpanRecord::new(TracePhase::Combine, t0, combine_s);
+                    s.bytes = cross_bytes;
+                    s.rows = rows.local_rows() + rows.cross_rows();
+                    s.chunk = Some(m);
+                    tr.record_span(s);
+                }
 
                 for rank in 0..r {
                     let nl = rows.per_rank[rank].local_slots() as u64;
@@ -778,6 +819,14 @@ impl ExecutionEngine for PipelinedEngine {
                     }
                 })
                 .collect();
+            if let Some(tr) = &self.tracer {
+                for (rank, mb) in mem.iter().enumerate() {
+                    tr.gauge(rank, "resident_bytes", mb.data_bytes as f64,
+                             mem_peak_phase(mb));
+                    tr.gauge(rank, "routed_rows", total_slots[rank] as f64,
+                             "gather");
+                }
+            }
             (out, saved_all, traffic, mem, tb)
         };
 
@@ -843,6 +892,10 @@ impl ExecutionEngine for PipelinedEngine {
 
     fn overlap_report(&self) -> Option<OverlapReport> {
         self.report.clone()
+    }
+
+    fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = Some(tracer);
     }
 
     /// The self-tuning cost model: per channel (comm = exchange +

@@ -40,6 +40,7 @@ use crate::dispatch::parallel_build::parallel_build;
 use crate::dispatch::structures::DispatchStructures;
 use crate::memory::model::{CheckpointPolicy, MemoryBreakdown};
 use crate::memory::planner::{CheckpointPlan, CheckpointPlanner, LayerModel};
+use crate::trace::Tracer;
 use crate::util::prng::Rng;
 
 use super::engine::{config_gating, layer_engine_from_config, lru_get_or_insert,
@@ -117,6 +118,9 @@ pub struct MoeStack {
     /// nothing across steps
     routings: Vec<(u64, Vec<LayerRouting>)>,
     cache_cap: usize,
+    /// attached observability handle — each layer engine gets a
+    /// layer-tagged clone (see [`Tracer::for_layer`])
+    tracer: Option<Tracer>,
 }
 
 impl MoeStack {
@@ -139,6 +143,7 @@ impl MoeStack {
             session: None,
             routings: Vec::new(),
             cache_cap: PLAN_CACHE_CAP,
+            tracer: None,
         }
     }
 
@@ -195,6 +200,10 @@ impl MoeStack {
         self.tokens = tokens;
         self.top_k = top_k;
         self.routings.clear();
+        let mut engine = engine;
+        if let Some(tr) = &self.tracer {
+            engine.set_tracer(tr.for_layer(self.layers.len()));
+        }
         self.layers.push(StackLayer {
             engine,
             draw: Some(LayerDraw { topk_ids, gates }),
@@ -456,6 +465,16 @@ impl ExecutionEngine for MoeStack {
             total += layer.engine.measured_step_s()?;
         }
         Some(total)
+    }
+
+    /// Hand every layer engine a layer-tagged clone of the shared
+    /// tracer, so stacked spans carry their layer id; layers pushed
+    /// later inherit it too.
+    fn set_tracer(&mut self, tracer: Tracer) {
+        for (l, layer) in self.layers.iter_mut().enumerate() {
+            layer.engine.set_tracer(tracer.for_layer(l));
+        }
+        self.tracer = Some(tracer);
     }
 
     /// Recalibrate every layer engine's cost model from its own

@@ -32,6 +32,8 @@ use super::optim::{clip_global_norm, optimizer_from_name, LrSchedule, Optimizer}
 use super::params::{ExpertGrads, ParamStore};
 use super::pipeline::timeline::{CostModel, OverlapReport};
 use super::stack::plan_from_config;
+use crate::trace::drift::DriftDetector;
+use crate::trace::{StepSummary, TracePhase, Tracer};
 
 /// EWMA weight of one step's measured-vs-simulated ratio when `[ep]
 /// calibrate = true` folds it into the effective cost-model rates: heavy
@@ -242,6 +244,9 @@ pub struct EpTrainReport {
     /// folded measured/simulated ratios across steps (`None` when
     /// calibration was off or no engine carries a timeline)
     pub calibrated: Option<CostModel>,
+    /// steps×phases whose measured/predicted ratio left the EWMA drift
+    /// band (timeline engines only; always 0 without an overlap report)
+    pub drift_flags: usize,
 }
 
 /// Step-session training loop over an [`ExecutionEngine`] on a synthetic
@@ -355,8 +360,27 @@ impl EpTrainer {
         let mut final_lr = self.cfg.lr;
         let mut clipped_steps = 0usize;
         let mut calibrated: Option<CostModel> = None;
+        // structured tracing: when `[ep] trace_out` names a file, hand
+        // the engine a tracer so it records phase spans and resident-
+        // bytes gauges; the trainer adds the optimizer spans, per-step
+        // profile events, and the Chrome export at the end
+        let tracer = if self.cfg.trace_out.is_empty() {
+            None
+        } else {
+            let t = Tracer::new();
+            self.engine.set_tracer(t.clone());
+            Some(t)
+        };
+        let mut summaries: Vec<StepSummary> = Vec::new();
+        // predicted-vs-measured drift: fold each step's calibration rows
+        // into per-phase EWMA bands (timeline engines only), flagging
+        // steps where the measured/predicted ratio leaves the band
+        let mut drift = DriftDetector::default();
         let log_every = (self.cfg.steps / 10).max(1);
         for s in 0..self.cfg.steps {
+            if let Some(tr) = &tracer {
+                tr.begin_step(s as u64);
+            }
             let t0 = Instant::now();
             grads.clear();
             // one running f64 accumulator across microbatches: the float
@@ -411,6 +435,14 @@ impl EpTrainer {
             }
             let lr = self.schedule.lr_at(self.cfg.lr, s, self.cfg.steps);
             final_lr = lr;
+            // the optimizer span covers step + apply — the host-side
+            // work between the last backward and the next forward
+            let mut opt_scope = tracer
+                .as_ref()
+                .map(|tr| tr.scope(TracePhase::OptimizerUpdate));
+            if let Some(sc) = opt_scope.as_mut() {
+                sc.rec.tokens = batch.num_tokens() as u64;
+            }
             let delta = self
                 .optimizer
                 .step(&grads, lr as f32)
@@ -418,6 +450,7 @@ impl EpTrainer {
             self.engine
                 .apply_update(&delta)
                 .map_err(anyhow::Error::msg)?;
+            drop(opt_scope);
             step_times.push(t0.elapsed().as_secs_f64() * 1e3);
             losses.push(loss);
 
@@ -464,6 +497,40 @@ impl EpTrainer {
                 ("clipped", if clipped { 1.0 } else { 0.0 }),
                 ("micro_steps", micros.len() as f64),
             ]);
+            // per-phase drift verdicts for this step (timeline engines
+            // only — barrier engines have no calibration rows to judge)
+            if let Some(rep) = self.engine.overlap_report() {
+                for v in drift.observe_step(&rep.calibration()) {
+                    self.sink.emit_tagged("drift", &[("phase", v.phase.name())], &[
+                        ("step", s as f64),
+                        ("ratio", v.ratio),
+                        ("mean", v.mean),
+                        ("band", v.band),
+                        ("flagged", if v.flagged { 1.0 } else { 0.0 }),
+                    ]);
+                }
+            }
+            if let Some(tr) = &tracer {
+                self.sink.emit("step_profile", &tr.step_profile(s as u64).fields());
+                // the summary the Chrome export embeds: engine-measured
+                // step seconds (summed across microbatch sessions) and
+                // the per-rank resident bytes the gauges sampled
+                let step_measured = if all_sessions_measured && sessions_measured > 0.0 {
+                    sessions_measured
+                } else {
+                    tr.step_measured_s(s as u64)
+                };
+                summaries.push(StepSummary {
+                    step: s as u64,
+                    measured_step_s: step_measured,
+                    peak_rank_bytes: self
+                        .engine
+                        .memory_per_rank()
+                        .iter()
+                        .map(|m| m.data_bytes)
+                        .collect(),
+                });
+            }
             if s % log_every == 0 || s + 1 == self.cfg.steps {
                 println!("{}", self.sink.console(s, &[("loss", loss), ("lr", lr)]));
             }
@@ -539,6 +606,32 @@ impl EpTrainer {
                     self.cfg.calibration_path),
             }
         }
+        // the Chrome trace: every span and gauge the run recorded plus
+        // the per-step summaries `tools/trace_report.py` cross-checks
+        if let Some(tr) = &tracer {
+            let json = tr.chrome_trace(&summaries).to_string();
+            match std::fs::write(&self.cfg.trace_out, json) {
+                Ok(()) => self.sink.emit("trace_written", &[
+                    ("steps", summaries.len() as f64),
+                    ("spans", tr.span_count() as f64),
+                    ("counters", tr.counter_count() as f64),
+                ]),
+                // like the calibration artifact, an unwritable trace
+                // path must not fail the training run
+                Err(e) => eprintln!("warning: could not write trace {}: {e}",
+                                    self.cfg.trace_out),
+            }
+        }
+        if drift.total_flags() > 0 {
+            self.sink.emit("drift_summary", &[
+                ("total_flags", drift.total_flags() as f64),
+            ]);
+        }
+        // surface metrics-stream write failures instead of losing the
+        // run's observability silently
+        if let Err(e) = self.sink.check() {
+            eprintln!("warning: metrics stream {}: {e}", self.cfg.metrics_path);
+        }
         Ok(EpTrainReport {
             steps: self.cfg.steps,
             first_loss: losses.first().copied().unwrap_or(f64::NAN),
@@ -555,6 +648,7 @@ impl EpTrainer {
             overlap,
             tokens_per_sec: throughput.tokens_per_sec(),
             calibrated,
+            drift_flags: drift.total_flags(),
             losses,
         })
     }

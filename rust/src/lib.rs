@@ -48,6 +48,26 @@
 //! `ep_alltoall`). External crates are vendored under `rust/vendor/`
 //! (`anyhow` subset, `xla` PJRT stub), so `cargo build` needs no network.
 //!
+//! # Observability
+//!
+//! The [`trace`] subsystem records per-step, per-rank, per-chunk,
+//! per-layer phase spans (gather/staging, expert GEMM, combine
+//! scatter, optimizer update, serving batcher tick) with byte/row/
+//! token counters and a per-rank resident-bytes gauge. Engines hold an
+//! `Option<Tracer>`: with none attached the hot path pays **nothing**,
+//! and a disabled tracer costs one relaxed atomic increment per record
+//! call — tracing never perturbs the bit-identity contracts. Pass
+//! `--trace-out <path>` to `ep-bench`/`ep-train`/`ep-serve` (or set
+//! `[ep] trace_out`) to export Chrome trace-event JSON — open it at
+//! <https://ui.perfetto.dev> — and validate/summarize it with
+//! `tools/trace_report.py`. [`trace::drift`] compares every measured
+//! phase against the simulated timeline [`PhaseSpan`]s and flags
+//! phases whose measured/predicted ratio leaves an EWMA band, making
+//! the PR-5 calibration fold an observable signal. See [`trace`] for
+//! the span taxonomy and the overhead contract.
+//!
+//! [`PhaseSpan`]: coordinator::pipeline::timeline::PhaseSpan
+//!
 //! [`ExecutionEngine`]: coordinator::engine::ExecutionEngine
 //! [`StepBatch`]: coordinator::engine::StepBatch
 //! [`StepHandle`]: coordinator::engine::StepHandle
@@ -62,6 +82,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod serving;
 pub mod testkit;
+pub mod trace;
 pub mod util;
 
 /// Default artifacts directory (relative to the repo root).

@@ -16,7 +16,7 @@
 //!             --link-gbps G --compute-gflops F]
 //!            [--activation silu|swiglu] [--tile-rows T (0 = autotune)]
 //!            [--calibration-path calib.json]
-//!            [--json-out bench.json] ...
+//!            [--json-out bench.json] [--trace-out trace.json] ...
 //!                                execute the plan: sharded engine vs
 //!                                single-rank, bit-equality + derived
 //!                                bytes + checkpoint-policy memory sweep
@@ -36,6 +36,7 @@
 //!             --link-gbps G --compute-gflops F
 //!             --lr-schedule constant|cosine|linear-warmup --clip-norm C
 //!             --placement contiguous|strided|load-aware
+//!             --trace-out trace.json --json-out train.json
 //!             --config file.toml ...]
 //!                                step-session training on the
 //!                                expert-parallel engine (chunk-pipelined
@@ -47,7 +48,8 @@
 //!            [--admission queue|reject] [--arrival-rate R]
 //!            [--min-request-tokens A --max-request-tokens B]
 //!            [--serve-seed S] [--mem-budget-bytes B]
-//!            [--json-out serve.json] [--config file.toml] ...
+//!            [--json-out serve.json] [--trace-out trace.json]
+//!            [--config file.toml] ...
 //!                                forward-only serving on the expert-parallel
 //!                                engine (checkpointing forced to
 //!                                recompute-all): continuous batching over a
@@ -98,10 +100,16 @@ use moeblaze::memory::report::{memory_figure, render_memory_figure,
 use moeblaze::metrics::Throughput;
 use moeblaze::runtime::client::Runtime;
 use moeblaze::serving::ServeLoop;
+use moeblaze::trace::{StepSummary, Tracer};
 use moeblaze::util::cli::Args;
 use moeblaze::util::prng::Rng;
 use moeblaze::util::stats::Bench;
 use moeblaze::util::table::{human_bytes, Table};
+
+/// Version stamp every `--json-out` snapshot carries so downstream
+/// consumers (`tools/bench_gate.py`) can reject shapes they don't
+/// understand instead of mis-reading them.
+const SNAPSHOT_VERSION: f64 = 1.0;
 
 fn main() {
     let args = match Args::from_env() {
@@ -379,6 +387,9 @@ fn ep_config_from_args(args: &Args, parse_ranks: bool) -> Result<EpConfig> {
     if let Some(p) = args.get("metrics") {
         cfg.metrics_path = p.to_string();
     }
+    if let Some(p) = args.get("trace-out") {
+        cfg.trace_out = p.to_string();
+    }
     cfg.validate().map_err(anyhow::Error::msg)?;
     Ok(cfg)
 }
@@ -654,7 +665,16 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
         println!("old->new: {speedup:.2}x tokens/s, peak rank comm {} -> {}",
                  human_bytes(old_extra), human_bytes(new_extra));
         if let Some(path) = args.get("json-out") {
+            let peak_rank_data = eng
+                .memory_per_rank()
+                .iter()
+                .map(|m| m.data_bytes)
+                .max()
+                .unwrap_or(0);
             let j = Json::obj(vec![
+                ("snapshot_version", Json::num(SNAPSHOT_VERSION)),
+                ("tokens_per_sec", Json::num(new_tps)),
+                ("peak_rank_data_bytes", Json::num(peak_rank_data as f64)),
                 ("bench", Json::str("ep_bench_pr5")),
                 ("tokens", Json::num(base.tokens as f64)),
                 ("num_experts", Json::num(e as f64)),
@@ -686,6 +706,51 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
             std::fs::write(path, format!("{j}\n"))
                 .map_err(|err| anyhow::anyhow!("{path}: {err}"))?;
             println!("old-vs-new snapshot written to {path}");
+        }
+
+        // structured tracing: a dedicated traced loop on the pipelined
+        // engine (the one family whose timeline yields measured step
+        // seconds), `--steps` fwd+bwd steps, Chrome export to the path —
+        // the trace `tools/trace_report.py --validate` cross-checks
+        if let Some(path) = args.get("trace-out") {
+            let chunks = if base.pipeline_chunks > 0 {
+                base.pipeline_chunks
+            } else {
+                2
+            };
+            let topo = topology_from_config(&base, r).map_err(anyhow::Error::msg)?;
+            let mut teng = PipelinedEngine::with_policy(
+                topo, &store, r, base.checkpoint, chunks, cost)
+                .map_err(anyhow::Error::msg)?;
+            let tracer = Tracer::new();
+            teng.set_tracer(tracer.clone());
+            let steps = base.steps.max(1);
+            let mut summaries: Vec<StepSummary> = Vec::with_capacity(steps);
+            for s in 0..steps {
+                tracer.begin_step(s as u64);
+                let handle = teng.forward(&batch).map_err(anyhow::Error::msg)?;
+                let mut g = teng.zero_grads();
+                handle
+                    .backward_into(&mut teng, &d_out, &mut g)
+                    .map_err(anyhow::Error::msg)?;
+                summaries.push(StepSummary {
+                    step: s as u64,
+                    measured_step_s: teng
+                        .measured_step_s()
+                        .unwrap_or_else(|| tracer.step_measured_s(s as u64)),
+                    peak_rank_bytes: teng
+                        .memory_per_rank()
+                        .iter()
+                        .map(|m| m.data_bytes)
+                        .collect(),
+                });
+            }
+            let trace = tracer.chrome_trace(&summaries);
+            std::fs::write(path, format!("{trace}\n"))
+                .map_err(|err| anyhow::anyhow!("{path}: {err}"))?;
+            println!("trace: {} spans + {} counter samples over {steps} \
+                      steps (R={r}, K={chunks}) written to {path}",
+                     tracer.span_count(), tracer.counter_count());
         }
 
         // multi-layer stack + smart-checkpoint planner: the explainable
@@ -795,13 +860,45 @@ fn cmd_ep_train(args: &Args) -> Result<()> {
         "per-rank activation memory (measured, last step)",
         &trainer.engine.memory_per_rank()));
 
+    if report.drift_flags > 0 {
+        println!("drift: {} step-phase samples left the EWMA band — the \
+                  cost model is not tracking measurement (see the `drift` \
+                  events in {})", report.drift_flags, cfg.metrics_path);
+    }
+    if let Some(path) = args.get("json-out") {
+        let j = Json::obj(vec![
+            ("snapshot_version", Json::num(SNAPSHOT_VERSION)),
+            ("tokens_per_sec", Json::num(report.tokens_per_sec)),
+            ("peak_rank_data_bytes", Json::num(report.peak_rank_data_bytes as f64)),
+            ("bench", Json::str("ep_train")),
+            ("ranks", Json::num(cfg.ranks as f64)),
+            ("steps", Json::num(report.steps as f64)),
+            ("grad_accum", Json::num(cfg.grad_accum as f64)),
+            ("num_layers", Json::num(cfg.num_layers as f64)),
+            ("pipeline_chunks", Json::num(cfg.pipeline_chunks as f64)),
+            ("optimizer", Json::str(&cfg.optimizer)),
+            ("activation", Json::str(cfg.activation.name())),
+            ("first_loss", Json::num(report.first_loss)),
+            ("final_loss", Json::num(report.final_loss)),
+            ("step_ms_mean", Json::num(report.step_ms_mean)),
+            ("grad_norm", Json::num(report.grad_norm)),
+            ("clipped_steps", Json::num(report.clipped_steps as f64)),
+            ("peak_data_bytes", Json::num(report.peak_data_bytes as f64)),
+            ("drift_flags", Json::num(report.drift_flags as f64)),
+        ]);
+        std::fs::write(path, format!("{j}\n"))
+            .map_err(|err| anyhow::anyhow!("{path}: {err}"))?;
+        println!("training snapshot written to {path}");
+    }
+
     if args.has("verify") {
         // metrics stay with the primary run — the verify run would
         // otherwise append an overlapping step range to the same JSONL
         // ... and the verify run must not overwrite the primary run's
-        // calibration artifact either
+        // calibration artifact or trace either
         let single_cfg = EpConfig { ranks: 1, metrics_path: String::new(),
-                                    calibration_path: String::new(), ..cfg };
+                                    calibration_path: String::new(),
+                                    trace_out: String::new(), ..cfg };
         let (engine, _) =
             engine_from_config_with_info(&single_cfg).map_err(anyhow::Error::msg)?;
         let mut single = EpTrainer::new(engine, single_cfg)?;
@@ -896,6 +993,7 @@ fn cmd_ep_serve(args: &Args) -> Result<()> {
 
     if let Some(path) = args.get("json-out") {
         let j = Json::obj(vec![
+            ("snapshot_version", Json::num(SNAPSHOT_VERSION)),
             ("bench", Json::str("ep_serve")),
             ("engine", Json::str(&r.engine)),
             ("ranks", Json::num(cfg.ranks as f64)),

@@ -56,7 +56,7 @@ impl Throughput {
 
     pub fn record(&mut self, bytes: u64, seconds: f64) {
         self.bytes += bytes;
-        self.seconds += seconds;
+        self.add_seconds(seconds);
     }
 
     /// Record one step's processed tokens against its measured
@@ -66,7 +66,16 @@ impl Throughput {
     /// [`record`]: Throughput::record
     pub fn record_tokens(&mut self, tokens: u64, seconds: f64) {
         self.tokens += tokens;
-        self.seconds += seconds;
+        self.add_seconds(seconds);
+    }
+
+    /// Non-finite or negative elapsed samples (a timer that never ran,
+    /// a subtraction gone backwards) contribute no time — they must not
+    /// poison the accumulated rate into NaN/∞.
+    fn add_seconds(&mut self, seconds: f64) {
+        if seconds.is_finite() && seconds > 0.0 {
+            self.seconds += seconds;
+        }
     }
 
     /// Aggregate GiB/s (0 if nothing was recorded).
@@ -169,6 +178,11 @@ impl Histogram {
     }
 
     pub fn record(&mut self, value: f64) {
+        if !value.is_finite() {
+            // NaN/∞ would poison min/max/sum for every later query;
+            // a histogram of measured latencies has no use for them.
+            return;
+        }
         let b = Self::bucket(value);
         self.counts[b] += 1;
         if self.counts[b] == 1 || value > self.maxes[b] {
@@ -231,10 +245,18 @@ impl Histogram {
 }
 
 /// Step-loop metrics sink: console + optional JSONL file.
+///
+/// Write failures are counted, not dropped: every failed JSONL append
+/// increments [`write_errors`](MetricsSink::write_errors) and keeps the
+/// error text, and [`check`](MetricsSink::check) turns a lossy run into
+/// a surfaced error — a metrics file that silently stopped growing is
+/// worse than one that failed loudly.
 pub struct MetricsSink {
     file: Option<File>,
     start: Instant,
     pub events: u64,
+    write_errors: u64,
+    last_error: Option<String>,
 }
 
 impl MetricsSink {
@@ -256,7 +278,31 @@ impl MetricsSink {
             }
             _ => None,
         };
-        Ok(MetricsSink { file, start: Instant::now(), events: 0 })
+        Ok(MetricsSink {
+            file,
+            start: Instant::now(),
+            events: 0,
+            write_errors: 0,
+            last_error: None,
+        })
+    }
+
+    /// JSONL appends that failed (0 on a healthy sink).
+    pub fn write_errors(&self) -> u64 {
+        self.write_errors
+    }
+
+    /// `Err` if any JSONL append failed, with the count and the last
+    /// OS error — call at end of run to surface lossy metrics.
+    pub fn check(&self) -> Result<(), String> {
+        if self.write_errors == 0 {
+            return Ok(());
+        }
+        Err(format!(
+            "metrics sink dropped {} line(s): {}",
+            self.write_errors,
+            self.last_error.as_deref().unwrap_or("unknown write error")
+        ))
     }
 
     /// Emit one event (kind + numeric fields). Returns the rendered line.
@@ -283,7 +329,10 @@ impl MetricsSink {
         let j = Json::obj(pairs);
         let line = j.to_string();
         if let Some(f) = &mut self.file {
-            let _ = writeln!(f, "{line}");
+            if let Err(e) = writeln!(f, "{line}") {
+                self.write_errors += 1;
+                self.last_error = Some(e.to_string());
+            }
         }
         line
     }
@@ -319,6 +368,24 @@ mod tests {
         t.record_tokens(1000, 0.25);
         t.record_tokens(1000, 0.25);
         assert!((t.tokens_per_sec() - 4000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_guards_zero_elapsed_and_bad_seconds() {
+        // tokens recorded against zero elapsed: rate stays 0, not NaN/∞
+        let mut t = Throughput::new();
+        t.record_tokens(1000, 0.0);
+        assert_eq!(t.tokens_per_sec(), 0.0);
+        assert_eq!(t.gib_per_sec(), 0.0);
+        // NaN / negative timer samples contribute no time
+        t.record_tokens(1000, f64::NAN);
+        t.record(1 << 30, -1.0);
+        assert_eq!(t.seconds, 0.0);
+        assert_eq!(t.tokens_per_sec(), 0.0);
+        // a real sample then yields a finite rate over ALL tokens
+        t.record_tokens(0, 0.5);
+        assert!((t.tokens_per_sec() - 4000.0).abs() < 1e-9);
+        assert!(t.tokens_per_sec().is_finite());
     }
 
     #[test]
@@ -404,6 +471,40 @@ mod tests {
     }
 
     #[test]
+    fn histogram_empty_is_none_and_single_sample_is_every_quantile() {
+        // the satellite pins: empty → None everywhere
+        let h = Histogram::new();
+        for q in [0.0, 0.25, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), None);
+        }
+        assert_eq!(h.percentiles(), None);
+        // single sample → that sample for ALL quantiles
+        let mut h = Histogram::new();
+        h.record(3.7);
+        for q in [0.0, 0.25, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), Some(3.7), "q={q}");
+        }
+        assert_eq!(h.percentiles(), Some((3.7, 3.7, 3.7)));
+    }
+
+    #[test]
+    fn histogram_ignores_non_finite_samples() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(f64::NEG_INFINITY);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentiles(), None);
+        h.record(2.0);
+        h.record(f64::NAN);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min(), Some(2.0));
+        assert_eq!(h.max(), Some(2.0));
+        assert_eq!(h.quantile(0.5), Some(2.0));
+        assert!(h.mean().unwrap().is_finite());
+    }
+
+    #[test]
     fn ema_converges() {
         let mut e = Ema::new(0.5);
         assert_eq!(e.update(10.0), 10.0);
@@ -450,5 +551,45 @@ mod tests {
             Json::parse(l).unwrap();
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn jsonl_durability_every_line_parses_and_events_match() {
+        let dir = std::env::temp_dir().join("moeblaze_test_metrics_durable");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("d.jsonl");
+        let p = path.to_str().unwrap().to_string();
+        let mut m = MetricsSink::new(Some(&p)).unwrap();
+        for i in 0..17 {
+            m.emit_tagged("tick", &[("engine", "t")], &[("i", i as f64)]);
+        }
+        assert_eq!(m.events, 17);
+        assert_eq!(m.write_errors(), 0);
+        m.check().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // every emitted line landed, every line parses as JSON
+        assert_eq!(lines.len() as u64, m.events);
+        for l in &lines {
+            let j = Json::parse(l).unwrap();
+            assert!(j.get("kind").is_some());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_failure_surfaces_as_error_not_silent_drop() {
+        // /dev/full accepts the open but fails every write with ENOSPC
+        // — the portable Linux way to force the append path to fail.
+        if !std::path::Path::new("/dev/full").exists() {
+            return; // non-Linux host: nothing to exercise
+        }
+        let mut m = MetricsSink::new(Some("/dev/full")).unwrap();
+        m.emit("train", &[("loss", 1.0)]);
+        m.emit("train", &[("loss", 0.5)]);
+        assert_eq!(m.events, 2);
+        assert_eq!(m.write_errors(), 2);
+        let err = m.check().unwrap_err();
+        assert!(err.contains("2 line(s)"), "{err}");
     }
 }

@@ -14,6 +14,7 @@ use crate::config::ep::EpConfig;
 use crate::config::serving::ServingConfig;
 use crate::coordinator::engine::topology_from_config;
 use crate::metrics::{Histogram, MetricsSink, Peak};
+use crate::trace::{StepSummary, TracePhase, Tracer};
 
 use super::admission::{AdmissionController, AdmissionDecision};
 use super::batcher::{aggregate, scatter};
@@ -70,6 +71,10 @@ pub struct ServeLoop {
     session: ForwardSession,
     traffic: TrafficGen,
     sink: MetricsSink,
+    /// attached when `[ep] trace_out` names a file; `[serving]
+    /// trace_ticks` additionally records one host-lane `batcher_tick`
+    /// span per non-empty tick
+    tracer: Option<Tracer>,
 }
 
 impl ServeLoop {
@@ -79,12 +84,19 @@ impl ServeLoop {
         let topo = topology_from_config(ep, ep.ranks)?;
         let admission = AdmissionController::new(&topo, ep.d_model,
                                                  ep.mem_budget_bytes, scfg.admission);
-        let session = ForwardSession::from_config(ep)?;
+        let mut session = ForwardSession::from_config(ep)?;
         let traffic = TrafficGen::new(ep, scfg);
         let sink = MetricsSink::new(
             (!ep.metrics_path.is_empty()).then_some(ep.metrics_path.as_str()))?;
+        let tracer = if ep.trace_out.is_empty() {
+            None
+        } else {
+            let t = Tracer::new();
+            session.set_tracer(t.clone());
+            Some(t)
+        };
         Ok(ServeLoop { ep: ep.clone(), scfg: scfg.clone(), admission, session,
-                       traffic, sink })
+                       traffic, sink, tracer })
     }
 
     pub fn engine_name(&self) -> String {
@@ -102,8 +114,14 @@ impl ServeLoop {
         let (mut batches, mut tokens_served, mut wait_ticks_sum) = (0u64, 0u64, 0u64);
         let mut max_queue_depth_seen = 0usize;
         let print_every = (self.scfg.ticks / 8).max(1) as u64;
+        // one trace "step" per tick: the engine's phase spans land under
+        // the tick number, and the export embeds a per-tick summary
+        let mut summaries: Vec<StepSummary> = Vec::new();
 
         for tick in 0..self.scfg.ticks as u64 {
+            if let Some(tr) = &self.tracer {
+                tr.begin_step(tick);
+            }
             // 1+2: arrivals through the admission screen
             let mut arrived = 0usize;
             for r in self.traffic.tick(tick) {
@@ -152,9 +170,20 @@ impl ServeLoop {
                 continue;
             }
 
-            // 4: one forward over the aggregated batch
+            // 4: one forward over the aggregated batch; the host-lane
+            // batcher span covers aggregation → scatter of this tick
+            let mut tick_scope = match &self.tracer {
+                Some(tr) if self.scfg.trace_ticks => {
+                    Some(tr.scope(TracePhase::BatcherTick))
+                }
+                _ => None,
+            };
             let tb = aggregate(picked, self.ep.d_model, self.ep.num_experts,
                                self.ep.top_k)?;
+            if let Some(sc) = tick_scope.as_mut() {
+                sc.rec.tokens = tb.batch.num_tokens() as u64;
+                sc.rec.rows = tb.spans.len() as u64;
+            }
             let out = self.session.infer(&tb.batch)?;
             let rank_peak = self
                 .session
@@ -176,6 +205,19 @@ impl ServeLoop {
             }
             batches += 1;
             tokens_served += tb.batch.num_tokens() as u64;
+            drop(tick_scope);
+            if let Some(tr) = &self.tracer {
+                summaries.push(StepSummary {
+                    step: tick,
+                    measured_step_s: tr.step_measured_s(tick),
+                    peak_rank_bytes: self
+                        .session
+                        .memory_per_rank()
+                        .iter()
+                        .map(|m| m.data_bytes)
+                        .collect(),
+                });
+            }
 
             self.sink.emit_tagged("ep_serve_tick",
                                   &[("engine", &self.session.engine_name())],
@@ -232,6 +274,21 @@ impl ServeLoop {
                          ("tokens_served", report.tokens_served as f64),
                          ("peak_rank_data_bytes", report.peak_rank_data_bytes as f64),
                          ("latency_p99_s", report.latency_p99_s)]);
+        if let Some(tr) = &self.tracer {
+            let json = tr.chrome_trace(&summaries).to_string();
+            match std::fs::write(&self.ep.trace_out, json) {
+                Ok(()) => self.sink.emit("trace_written", &[
+                    ("steps", summaries.len() as f64),
+                    ("spans", tr.span_count() as f64),
+                    ("counters", tr.counter_count() as f64),
+                ]),
+                Err(e) => eprintln!("warning: could not write trace {}: {e}",
+                                    self.ep.trace_out),
+            }
+        }
+        if let Err(e) = self.sink.check() {
+            eprintln!("warning: metrics stream {}: {e}", self.ep.metrics_path);
+        }
         Ok(report)
     }
 }
@@ -310,6 +367,36 @@ mod tests {
         assert_eq!(r.generated,
                    r.completed + r.rejected_queue_full + r.rejected_capacity
                        + r.queued_at_end);
+    }
+
+    #[test]
+    fn traced_run_writes_a_loadable_chrome_trace() {
+        let (mut ep, s) = base();
+        let path = std::env::temp_dir().join("moeblaze_serve_trace_test.json");
+        ep.trace_out = path.to_string_lossy().into_owned();
+        let r = ServeLoop::new(&ep, &s).unwrap().run().unwrap();
+        assert!(r.batches > 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let json = crate::util::json::Json::parse(&text).unwrap();
+        let events = json.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert!(!events.is_empty(), "traced serve run recorded no events");
+        // every non-empty tick carries a host-lane batcher span by
+        // default (`trace_ticks = true`)
+        let ticks = events.iter().filter(|e| {
+            e.get("name").and_then(|n| n.as_str()) == Some("batcher_tick")
+        });
+        assert_eq!(ticks.count() as u64, r.batches);
+        let meta = json.get("moeblaze").unwrap();
+        assert_eq!(meta.get("schema_version").and_then(|v| v.as_usize()),
+                   Some(crate::trace::TRACE_SCHEMA_VERSION as usize));
+        assert_eq!(meta.get("steps").and_then(|s| s.as_arr()).unwrap().len() as u64,
+                   r.batches);
+        // traffic counters are untouched by tracing: same run untraced
+        let (ep2, s2) = (EpConfig { trace_out: String::new(), ..ep }, s);
+        let r2 = ServeLoop::new(&ep2, &s2).unwrap().run().unwrap();
+        assert_eq!(r.completed, r2.completed);
+        assert_eq!(r.tokens_served, r2.tokens_served);
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::config::ep::EpConfig;
 use crate::coordinator::engine::{layer_engine_from_config, ExecutionEngine, StepBatch};
 use crate::coordinator::params::ExpertStore;
 use crate::memory::model::{CheckpointPolicy, MemoryBreakdown};
+use crate::trace::Tracer;
 
 /// A forward-only engine wrapper: `infer` in, combined output out,
 /// nothing retained.
@@ -52,6 +53,12 @@ impl ForwardSession {
     /// consumed immediately — no saved activations, no backward path.
     pub fn infer(&mut self, batch: &StepBatch) -> Result<Vec<f32>, String> {
         Ok(self.engine.forward(batch)?.into_output())
+    }
+
+    /// Attach an observability handle: the wrapped engine records its
+    /// gather/GEMM/combine spans and resident-bytes gauges per tick.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.engine.set_tracer(tracer);
     }
 
     pub fn engine_name(&self) -> String {

@@ -1,0 +1,263 @@
+//! Predicted-vs-measured drift detection over the timeline cost model.
+//!
+//! The PR-5 calibration loop folds measured/simulated ratios back into
+//! `link_gbps` / `compute_gflops` silently. This module turns the same
+//! signal into an observable one: each step's per-phase
+//! **measured / predicted** ratio is folded through an EWMA mean plus
+//! an EWMA mean-absolute-deviation band, and a phase whose ratio jumps
+//! outside `max(K · mad, EPS)` of the running mean is *flagged* — the
+//! cost model (or the host) changed faster than calibration tracks.
+//!
+//! The fold is intentionally branch-simple so `tools/ep_sim.py` can
+//! mirror it bit-for-bit (same constants, same IEEE-754 update order);
+//! the 20-sequence cross-check in both suites pins that the two
+//! implementations flag identical steps.
+
+use crate::coordinator::pipeline::timeline::{Phase, PhaseCalibration};
+
+/// EWMA smoothing factor for the ratio mean and deviation (matches the
+/// trainer's `CALIBRATE_ALPHA` so the band tracks what calibration
+/// actually folds).
+pub const DRIFT_ALPHA: f64 = 0.2;
+/// Band half-width in units of the EWMA mean absolute deviation.
+pub const DRIFT_K: f64 = 4.0;
+/// Absolute band floor (ratio units) so a perfectly quiet history
+/// doesn't flag on measurement noise.
+pub const DRIFT_EPS: f64 = 0.25;
+/// Observations before flagging is armed.
+pub const DRIFT_WARMUP: usize = 3;
+
+/// The EWMA band parameters (defaults above; kept a struct so tests
+/// and the Python mirror can pin them explicitly).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftBand {
+    pub alpha: f64,
+    pub k: f64,
+    pub eps: f64,
+    pub warmup: usize,
+}
+
+impl Default for DriftBand {
+    fn default() -> DriftBand {
+        DriftBand { alpha: DRIFT_ALPHA, k: DRIFT_K, eps: DRIFT_EPS, warmup: DRIFT_WARMUP }
+    }
+}
+
+/// One phase's running EWMA state.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftTracker {
+    band: DriftBand,
+    mean: f64,
+    mad: f64,
+    n: usize,
+    flags: usize,
+}
+
+impl DriftTracker {
+    pub fn new(band: DriftBand) -> DriftTracker {
+        DriftTracker { band, mean: 0.0, mad: 0.0, n: 0, flags: 0 }
+    }
+
+    /// Fold one measured/predicted ratio; `true` = outside the band.
+    ///
+    /// Update order is part of the cross-language contract: deviation
+    /// and flag are computed against the *pre-update* mean/mad, then
+    /// both EWMAs fold the new observation in.
+    pub fn observe(&mut self, ratio: f64) -> bool {
+        if self.n == 0 {
+            self.mean = ratio;
+            self.mad = 0.0;
+            self.n = 1;
+            return false;
+        }
+        let dev = (ratio - self.mean).abs();
+        let width = (self.band.k * self.mad).max(self.band.eps);
+        let flagged = self.n >= self.band.warmup && dev > width;
+        self.mean += self.band.alpha * (ratio - self.mean);
+        self.mad += self.band.alpha * (dev - self.mad);
+        self.n += 1;
+        if flagged {
+            self.flags += 1;
+        }
+        flagged
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn mad(&self) -> f64 {
+        self.mad
+    }
+
+    pub fn observations(&self) -> usize {
+        self.n
+    }
+
+    pub fn flag_count(&self) -> usize {
+        self.flags
+    }
+}
+
+/// One step's drift verdict for one phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftSample {
+    pub phase: Phase,
+    /// measured / predicted seconds (note: the inverse of
+    /// `PhaseCalibration::ratio`, which is simulated/measured)
+    pub ratio: f64,
+    /// EWMA mean the deviation was judged against (pre-update)
+    pub mean: f64,
+    /// band half-width the deviation was judged against
+    pub band: f64,
+    pub flagged: bool,
+}
+
+/// Per-phase drift trackers over a run's calibration reports.
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    trackers: [DriftTracker; 3],
+}
+
+impl Default for DriftDetector {
+    fn default() -> DriftDetector {
+        DriftDetector::new(DriftBand::default())
+    }
+}
+
+impl DriftDetector {
+    pub fn new(band: DriftBand) -> DriftDetector {
+        DriftDetector { trackers: [DriftTracker::new(band); 3] }
+    }
+
+    /// Fold one step's `OverlapReport::calibration()` rows. Phases with
+    /// no measured or no simulated seconds are skipped (no ratio
+    /// exists), matching the calibration fold's own guard.
+    pub fn observe_step(&mut self, calibration: &[PhaseCalibration]) -> Vec<DriftSample> {
+        let mut out = Vec::new();
+        for c in calibration {
+            if !(c.measured_s > 0.0 && c.simulated_s > 0.0) {
+                continue;
+            }
+            let ratio = c.measured_s / c.simulated_s;
+            let tr = &mut self.trackers[c.phase as usize];
+            let (mean, band) = (tr.mean(), (tr.band.k * tr.mad()).max(tr.band.eps));
+            let flagged = tr.observe(ratio);
+            out.push(DriftSample { phase: c.phase, ratio, mean, band, flagged });
+        }
+        out
+    }
+
+    pub fn tracker(&self, phase: Phase) -> &DriftTracker {
+        &self.trackers[phase as usize]
+    }
+
+    /// Total flags across phases — a run-level "calibration is not
+    /// tracking reality" signal.
+    pub fn total_flags(&self) -> usize {
+        self.trackers.iter().map(|t| t.flag_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_and_quiet_history_never_flag() {
+        let mut t = DriftTracker::new(DriftBand::default());
+        for _ in 0..20 {
+            assert!(!t.observe(1.0));
+        }
+        assert_eq!(t.flag_count(), 0);
+        assert!((t.mean() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spike_after_warmup_flags_once_then_band_absorbs() {
+        let mut t = DriftTracker::new(DriftBand::default());
+        for _ in 0..5 {
+            t.observe(1.0);
+        }
+        assert!(t.observe(2.0), "2x jump must leave the band");
+        // the spike widened the mad band; a return to baseline must
+        // not flag (|1.0 - mean| < eps floor after one fold)
+        assert!(!t.observe(1.0));
+    }
+
+    #[test]
+    fn detector_skips_unmeasured_phases_and_inverts_ratio() {
+        let mut d = DriftDetector::default();
+        let cal = vec![
+            PhaseCalibration { phase: Phase::Exchange, simulated_s: 2.0, measured_s: 1.0 },
+            PhaseCalibration { phase: Phase::Compute, simulated_s: 0.0, measured_s: 1.0 },
+            PhaseCalibration { phase: Phase::Combine, simulated_s: 1.0, measured_s: 0.0 },
+        ];
+        let samples = d.observe_step(&cal);
+        assert_eq!(samples.len(), 1);
+        assert_eq!(samples[0].phase, Phase::Exchange);
+        assert!((samples[0].ratio - 0.5).abs() < 1e-15); // measured/predicted
+    }
+
+    // The cross-language pin: 20 LCG-driven synthetic ratio sequences
+    // folded through the default band must flag exactly these step
+    // indices. `tools/ep_sim.py` holds the identical table — both
+    // implementations share IEEE-754 update order, so the match is
+    // exact, not approximate.
+    const LCG_MUL: u64 = 6364136223846793005;
+    const LCG_ADD: u64 = 1442695040888963407;
+
+    fn synthetic_sequence(seq: u64) -> Vec<f64> {
+        let mut state = 0x5EED0u64 + seq;
+        let mut out = Vec::with_capacity(40);
+        for _ in 0..40 {
+            state = state.wrapping_mul(LCG_MUL).wrapping_add(LCG_ADD);
+            let u = (state >> 11) as f64 / (1u64 << 53) as f64;
+            let mut r = 0.8 + 0.4 * u;
+            state = state.wrapping_mul(LCG_MUL).wrapping_add(LCG_ADD);
+            if state >> 60 == 0 {
+                r *= 2.5;
+            }
+            out.push(r);
+        }
+        out
+    }
+
+    const EXPECTED_FLAGS: &[&[usize]] = &[
+        &[11, 23, 33],
+        &[13],
+        &[36],
+        &[3, 5, 14, 37],
+        &[10, 15],
+        &[17, 28],
+        &[6],
+        &[3, 22],
+        &[19, 20],
+        &[21],
+        &[3, 7, 14],
+        &[],
+        &[37],
+        &[18, 30],
+        &[25],
+        &[6, 38],
+        &[],
+        &[9, 10],
+        &[4, 8],
+        &[7],
+    ];
+
+    #[test]
+    fn synthetic_sequences_match_python_mirror_flags() {
+        for (seq, expected) in EXPECTED_FLAGS.iter().enumerate() {
+            let mut t = DriftTracker::new(DriftBand::default());
+            let flags: Vec<usize> = synthetic_sequence(seq as u64)
+                .into_iter()
+                .enumerate()
+                .filter_map(|(i, r)| t.observe(r).then_some(i))
+                .collect();
+            assert_eq!(&flags, expected, "sequence {seq} flag mismatch");
+        }
+        let total: usize = EXPECTED_FLAGS.iter().map(|f| f.len()).sum();
+        assert_eq!(total, 33);
+    }
+}

@@ -1,0 +1,681 @@
+//! # Observability: structured per-rank phase tracing
+//!
+//! A low-overhead structured tracer for the expert-parallel engines.
+//! Engines hold an `Option<Tracer>` (set through
+//! [`ExecutionEngine::set_tracer`]); with no tracer attached the hot
+//! path pays nothing at all, and with a tracer attached but *disabled*
+//! every record call is a single relaxed atomic increment — no lock,
+//! no allocation (pinned by `rust/tests/ep_trace.rs`). This mirrors the
+//! `timed: bool` gating of the kernel timers.
+//!
+//! ## Span taxonomy
+//!
+//! | phase             | lane    | recorded by                          |
+//! |-------------------|---------|--------------------------------------|
+//! | `gather`          | comm    | dispatch exchange / staging gather   |
+//! | `expert_gemm`     | compute | blocked expert FFN (fwd and bwd)     |
+//! | `combine`         | comm    | combine scatter back to home ranks   |
+//! | `optimizer_update`| host    | trainer's optimizer + apply step     |
+//! | `batcher_tick`    | host    | one serving continuous-batch tick    |
+//!
+//! Engine phase spans come in two flavors: **section spans** (`rank ==
+//! None`, drawn on the coordinator process) whose durations are the
+//! exact wall-clock values the engines feed `record_measured`, so the
+//! per-step sum of section spans reproduces `measured_step_s()`; and
+//! **detail spans** (`detail == true`, per-rank) carved from the
+//! per-rank `KernelTimers` inside a section. Validation and the
+//! [`StepProfile`] roll-up count section spans only.
+//!
+//! Alongside spans, engines sample a per-rank `resident_bytes` gauge
+//! (value = the step's modeled `MemoryBreakdown::data_bytes`, phase
+//! label = the dominant memory component), so the step's measured peak
+//! *and which phase caused it* are first-class outputs, and a
+//! `routed_rows` gauge for the dispatch shape.
+//!
+//! ## Chrome trace export
+//!
+//! [`Tracer::chrome_trace`] renders the log as Chrome trace-event JSON:
+//! one process per rank plus a coordinator process, one thread lane per
+//! comm/compute/host, `"X"` duration events, `"C"` counter tracks for
+//! resident bytes and routed rows, and a top-level `"moeblaze"` object
+//! carrying the schema version and per-step summaries
+//! (`measured_step_s`, `peak_rank_bytes`) so `tools/trace_report.py
+//! --validate` can check span-sum and counter-track consistency
+//! self-contained. Open the file in <https://ui.perfetto.dev> (drag &
+//! drop) or `chrome://tracing`.
+//!
+//! Predicted-vs-measured drift detection over the timeline cost model
+//! lives in [`drift`].
+//!
+//! [`ExecutionEngine::set_tracer`]:
+//! crate::coordinator::engine::ExecutionEngine::set_tracer
+//! [`MemoryBreakdown::data_bytes`]:
+//! crate::memory::model::MemoryBreakdown::data_bytes
+
+pub mod drift;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Current version of the exported trace schema (the `"moeblaze"`
+/// top-level object). Bump when the event shape changes;
+/// `tools/trace_report.py` validates against it.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// What kind of work a span covers. See the module-level taxonomy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TracePhase {
+    /// dispatch exchange / staging gather (comm lane)
+    Gather,
+    /// blocked expert FFN compute, forward or backward (compute lane)
+    ExpertGemm,
+    /// combine scatter back to home ranks (comm lane)
+    Combine,
+    /// optimizer + parameter update on the trainer host
+    OptimizerUpdate,
+    /// one serving continuous-batch tick
+    BatcherTick,
+}
+
+impl TracePhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            TracePhase::Gather => "gather",
+            TracePhase::ExpertGemm => "expert_gemm",
+            TracePhase::Combine => "combine",
+            TracePhase::OptimizerUpdate => "optimizer_update",
+            TracePhase::BatcherTick => "batcher_tick",
+        }
+    }
+
+    /// Chrome thread lane (tid) this phase renders on.
+    pub fn lane(self) -> u64 {
+        match self {
+            TracePhase::Gather | TracePhase::Combine => 1, // comm
+            TracePhase::ExpertGemm => 2,                   // compute
+            _ => 3,                                        // host
+        }
+    }
+
+    /// Event category string for the Chrome export.
+    pub fn category(self) -> &'static str {
+        match self {
+            TracePhase::Gather | TracePhase::Combine => "comm",
+            TracePhase::ExpertGemm => "compute",
+            _ => "host",
+        }
+    }
+
+    /// `true` for the engine phases whose section spans must sum to
+    /// `measured_step_s()` (the validation contract).
+    pub fn is_measured(self) -> bool {
+        matches!(
+            self,
+            TracePhase::Gather | TracePhase::ExpertGemm | TracePhase::Combine
+        )
+    }
+}
+
+/// One recorded span. `start_s` is seconds since the tracer's epoch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanRecord {
+    pub step: u64,
+    /// `None` = coordinator (section) span; `Some(r)` = rank process
+    pub rank: Option<usize>,
+    pub phase: TracePhase,
+    pub chunk: Option<usize>,
+    pub layer: Option<usize>,
+    pub backward: bool,
+    pub start_s: f64,
+    pub dur_s: f64,
+    pub bytes: u64,
+    pub rows: u64,
+    pub tokens: u64,
+    /// per-rank kernel-timer sub-span: excluded from the section-span
+    /// sum contract and rendered with category `"detail"`
+    pub detail: bool,
+}
+
+impl SpanRecord {
+    /// A section span of `phase` covering `[start_s, start_s + dur_s)`.
+    /// `step` and `layer` are filled in by [`Tracer::record_span`].
+    pub fn new(phase: TracePhase, start_s: f64, dur_s: f64) -> SpanRecord {
+        SpanRecord {
+            step: 0,
+            rank: None,
+            phase,
+            chunk: None,
+            layer: None,
+            backward: false,
+            start_s,
+            dur_s,
+            bytes: 0,
+            rows: 0,
+            tokens: 0,
+            detail: false,
+        }
+    }
+}
+
+/// One gauge sample on a rank's counter track.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CounterRecord {
+    pub step: u64,
+    pub rank: usize,
+    /// track name, e.g. `"resident_bytes"` or `"routed_rows"`
+    pub name: &'static str,
+    pub t_s: f64,
+    pub value: f64,
+    /// phase attribution (for `resident_bytes`: the dominant memory
+    /// component — which phase caused the peak)
+    pub phase: &'static str,
+}
+
+#[derive(Debug, Default)]
+struct TraceLog {
+    spans: Vec<SpanRecord>,
+    counters: Vec<CounterRecord>,
+}
+
+#[derive(Debug)]
+struct TracerInner {
+    enabled: AtomicBool,
+    epoch: Instant,
+    step: AtomicU64,
+    span_count: AtomicU64,
+    counter_count: AtomicU64,
+    /// record calls swallowed while disabled — the "atomic-counter
+    /// cost" half of the overhead contract
+    suppressed: AtomicU64,
+    log: Mutex<TraceLog>,
+}
+
+/// Cloneable handle on a shared trace log. Clones share the same log;
+/// [`Tracer::for_layer`] clones with a default layer tag so a stack
+/// can hand each layer engine a pre-tagged handle.
+#[derive(Debug, Clone)]
+pub struct Tracer {
+    inner: Arc<TracerInner>,
+    layer: Option<usize>,
+}
+
+impl Default for Tracer {
+    fn default() -> Tracer {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer {
+            inner: Arc::new(TracerInner {
+                enabled: AtomicBool::new(true),
+                epoch: Instant::now(),
+                step: AtomicU64::new(0),
+                span_count: AtomicU64::new(0),
+                counter_count: AtomicU64::new(0),
+                suppressed: AtomicU64::new(0),
+                log: Mutex::new(TraceLog::default()),
+            }),
+            layer: None,
+        }
+    }
+
+    /// Same shared log, with spans defaulting to layer `l` — how
+    /// `MoeStack` tags each layer engine's spans.
+    pub fn for_layer(&self, l: usize) -> Tracer {
+        Tracer { inner: Arc::clone(&self.inner), layer: Some(l) }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.inner.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Set the step id stamped on subsequent records.
+    pub fn begin_step(&self, step: u64) {
+        self.inner.step.store(step, Ordering::Relaxed);
+    }
+
+    pub fn step(&self) -> u64 {
+        self.inner.step.load(Ordering::Relaxed)
+    }
+
+    /// Seconds since this tracer's construction — the span timebase.
+    pub fn now_s(&self) -> f64 {
+        self.inner.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Record a span. Fills `step` from [`Tracer::begin_step`] and
+    /// `layer` from the [`Tracer::for_layer`] tag when unset. Disabled:
+    /// one relaxed atomic increment, nothing else.
+    pub fn record_span(&self, mut rec: SpanRecord) {
+        if !self.enabled() {
+            self.inner.suppressed.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        rec.step = self.step();
+        if rec.layer.is_none() {
+            rec.layer = self.layer;
+        }
+        self.inner.log.lock().unwrap().spans.push(rec);
+        self.inner.span_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Sample a gauge on rank `rank`'s `name` counter track.
+    pub fn gauge(&self, rank: usize, name: &'static str, value: f64, phase: &'static str) {
+        if !self.enabled() {
+            self.inner.suppressed.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let rec = CounterRecord {
+            step: self.step(),
+            rank,
+            name,
+            t_s: self.now_s(),
+            value,
+            phase,
+        };
+        self.inner.log.lock().unwrap().counters.push(rec);
+        self.inner.counter_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// RAII host-span helper: records `phase` from now until drop.
+    pub fn scope(&self, phase: TracePhase) -> TraceScope {
+        TraceScope {
+            tracer: self.clone(),
+            rec: SpanRecord::new(phase, self.now_s(), 0.0),
+        }
+    }
+
+    pub fn span_count(&self) -> u64 {
+        self.inner.span_count.load(Ordering::Relaxed)
+    }
+
+    pub fn counter_count(&self) -> u64 {
+        self.inner.counter_count.load(Ordering::Relaxed)
+    }
+
+    /// Record calls swallowed while the tracer was disabled.
+    pub fn suppressed_count(&self) -> u64 {
+        self.inner.suppressed.load(Ordering::Relaxed)
+    }
+
+    /// Sum of section-span (non-detail) durations of the measured
+    /// phases (`gather`/`expert_gemm`/`combine`) stamped with `step` —
+    /// the tracer-side counterpart of `measured_step_s()`.
+    pub fn step_measured_s(&self, step: u64) -> f64 {
+        let log = self.inner.log.lock().unwrap();
+        log.spans
+            .iter()
+            .filter(|s| s.step == step && !s.detail && s.phase.is_measured())
+            .map(|s| s.dur_s)
+            .sum()
+    }
+
+    /// Roll up everything stamped with `step` into a [`StepProfile`].
+    pub fn step_profile(&self, step: u64) -> StepProfile {
+        let log = self.inner.log.lock().unwrap();
+        let mut p = StepProfile { step, ..StepProfile::default() };
+        for s in log.spans.iter().filter(|s| s.step == step) {
+            if s.detail {
+                continue;
+            }
+            p.spans += 1;
+            p.bytes += s.bytes;
+            p.rows += s.rows;
+            p.tokens += s.tokens;
+            match s.phase {
+                TracePhase::Gather => p.gather_s += s.dur_s,
+                TracePhase::ExpertGemm => p.expert_gemm_s += s.dur_s,
+                TracePhase::Combine => p.combine_s += s.dur_s,
+                TracePhase::OptimizerUpdate => p.optimizer_s += s.dur_s,
+                TracePhase::BatcherTick => p.batcher_s += s.dur_s,
+            }
+        }
+        for c in log.counters.iter() {
+            if c.step == step && c.name == "resident_bytes" && c.value > p.peak_bytes {
+                p.peak_bytes = c.value;
+                p.peak_rank = c.rank;
+                p.peak_phase = c.phase;
+            }
+        }
+        p
+    }
+
+    /// Render the full log as Chrome trace-event JSON. `summaries` are
+    /// the per-step roll-ups embedded under the `"moeblaze"` key for
+    /// self-contained validation.
+    pub fn chrome_trace(&self, summaries: &[StepSummary]) -> Json {
+        let log = self.inner.log.lock().unwrap();
+        let ranks = chrome_rank_count(&log, summaries);
+        let mut events: Vec<Json> = Vec::new();
+        events.push(meta_event("process_name", COORD_PID, 0, "coordinator"));
+        for lane in [(1u64, "comm"), (2, "compute"), (3, "host")] {
+            events.push(meta_event("thread_name", COORD_PID, lane.0, lane.1));
+        }
+        for r in 0..ranks {
+            events.push(meta_event("process_name", rank_pid(r), 0, &format!("rank {r}")));
+            for lane in [(1u64, "comm"), (2, "compute"), (3, "host")] {
+                events.push(meta_event("thread_name", rank_pid(r), lane.0, lane.1));
+            }
+        }
+        for s in log.spans.iter() {
+            let pid = s.rank.map_or(COORD_PID, rank_pid);
+            let mut args = vec![
+                ("step", Json::num(s.step as f64)),
+                ("backward", Json::Bool(s.backward)),
+                ("bytes", Json::num(s.bytes as f64)),
+                ("rows", Json::num(s.rows as f64)),
+                ("tokens", Json::num(s.tokens as f64)),
+            ];
+            if let Some(c) = s.chunk {
+                args.push(("chunk", Json::num(c as f64)));
+            }
+            if let Some(l) = s.layer {
+                args.push(("layer", Json::num(l as f64)));
+            }
+            events.push(Json::obj(vec![
+                ("name", Json::str(s.phase.name())),
+                ("cat", Json::str(if s.detail { "detail" } else { s.phase.category() })),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(s.start_s * 1e6)),
+                ("dur", Json::num(s.dur_s * 1e6)),
+                ("pid", Json::num(pid as f64)),
+                ("tid", Json::num(s.phase.lane() as f64)),
+                ("args", Json::obj(args)),
+            ]));
+        }
+        for c in log.counters.iter() {
+            events.push(Json::obj(vec![
+                ("name", Json::str(c.name)),
+                ("cat", Json::str("gauge")),
+                ("ph", Json::str("C")),
+                ("ts", Json::num(c.t_s * 1e6)),
+                ("pid", Json::num(rank_pid(c.rank) as f64)),
+                ("tid", Json::num(0.0)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        (c.name, Json::num(c.value)),
+                        ("step", Json::num(c.step as f64)),
+                        ("phase", Json::str(c.phase)),
+                    ]),
+                ),
+            ]));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+            (
+                "moeblaze",
+                Json::obj(vec![
+                    ("schema_version", Json::num(TRACE_SCHEMA_VERSION as f64)),
+                    ("ranks", Json::num(ranks as f64)),
+                    (
+                        "steps",
+                        Json::arr(summaries.iter().map(|s| {
+                            Json::obj(vec![
+                                ("step", Json::num(s.step as f64)),
+                                ("measured_step_s", Json::num(s.measured_step_s)),
+                                (
+                                    "peak_rank_bytes",
+                                    Json::arr(
+                                        s.peak_rank_bytes
+                                            .iter()
+                                            .map(|&b| Json::num(b as f64)),
+                                    ),
+                                ),
+                            ])
+                        })),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Coordinator (section-span) process id in the Chrome export.
+const COORD_PID: u64 = 1;
+
+fn rank_pid(rank: usize) -> u64 {
+    rank as u64 + 2
+}
+
+fn chrome_rank_count(log: &TraceLog, summaries: &[StepSummary]) -> usize {
+    let mut ranks = summaries.iter().map(|s| s.peak_rank_bytes.len()).max().unwrap_or(0);
+    for s in log.spans.iter() {
+        if let Some(r) = s.rank {
+            ranks = ranks.max(r + 1);
+        }
+    }
+    for c in log.counters.iter() {
+        ranks = ranks.max(c.rank + 1);
+    }
+    ranks
+}
+
+fn meta_event(name: &str, pid: u64, tid: u64, value: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("args", Json::obj(vec![("name", Json::str(value))])),
+    ])
+}
+
+/// RAII span guard from [`Tracer::scope`]: measures from construction
+/// to drop. Mutate `rec` (bytes/rows/tokens/rank) before it drops.
+pub struct TraceScope {
+    tracer: Tracer,
+    pub rec: SpanRecord,
+}
+
+impl Drop for TraceScope {
+    fn drop(&mut self) {
+        self.rec.dur_s = (self.tracer.now_s() - self.rec.start_s).max(0.0);
+        self.tracer.record_span(self.rec);
+    }
+}
+
+/// Per-step summary embedded in the Chrome export for self-contained
+/// validation: the engine's own `measured_step_s()` and
+/// `memory_per_rank()` peak bytes for the step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepSummary {
+    pub step: u64,
+    pub measured_step_s: f64,
+    pub peak_rank_bytes: Vec<u64>,
+}
+
+/// Roll-up of one step's section spans and gauges — the `MetricsSink`
+/// counterpart of the Chrome export.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepProfile {
+    pub step: u64,
+    /// section spans counted (detail spans excluded)
+    pub spans: u64,
+    pub gather_s: f64,
+    pub expert_gemm_s: f64,
+    pub combine_s: f64,
+    pub optimizer_s: f64,
+    pub batcher_s: f64,
+    pub bytes: u64,
+    pub rows: u64,
+    pub tokens: u64,
+    /// max `resident_bytes` gauge sample this step
+    pub peak_bytes: f64,
+    /// rank holding the peak
+    pub peak_rank: usize,
+    /// memory-component attribution of the peak sample
+    pub peak_phase: &'static str,
+}
+
+impl Default for StepProfile {
+    fn default() -> StepProfile {
+        StepProfile {
+            step: 0,
+            spans: 0,
+            gather_s: 0.0,
+            expert_gemm_s: 0.0,
+            combine_s: 0.0,
+            optimizer_s: 0.0,
+            batcher_s: 0.0,
+            bytes: 0,
+            rows: 0,
+            tokens: 0,
+            peak_bytes: 0.0,
+            peak_rank: 0,
+            peak_phase: "",
+        }
+    }
+}
+
+impl StepProfile {
+    /// Engine-measured wall: the sum the validation contract compares
+    /// against `measured_step_s()`.
+    pub fn measured_s(&self) -> f64 {
+        self.gather_s + self.expert_gemm_s + self.combine_s
+    }
+
+    /// Numeric fields for a `MetricsSink` emit.
+    pub fn fields(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("step", self.step as f64),
+            ("spans", self.spans as f64),
+            ("gather_s", self.gather_s),
+            ("expert_gemm_s", self.expert_gemm_s),
+            ("combine_s", self.combine_s),
+            ("optimizer_s", self.optimizer_s),
+            ("batcher_s", self.batcher_s),
+            ("measured_s", self.measured_s()),
+            ("bytes", self.bytes as f64),
+            ("rows", self.rows as f64),
+            ("tokens", self.tokens as f64),
+            ("peak_bytes", self.peak_bytes),
+            ("peak_rank", self.peak_rank as f64),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing_but_counts_suppressions() {
+        let t = Tracer::new();
+        t.set_enabled(false);
+        t.record_span(SpanRecord::new(TracePhase::Gather, 0.0, 1.0));
+        t.gauge(0, "resident_bytes", 42.0, "compute");
+        assert_eq!(t.span_count(), 0);
+        assert_eq!(t.counter_count(), 0);
+        assert_eq!(t.suppressed_count(), 2);
+        assert!(t.inner.log.lock().unwrap().spans.is_empty());
+        assert!(t.inner.log.lock().unwrap().counters.is_empty());
+    }
+
+    #[test]
+    fn spans_pick_up_step_and_layer_tags() {
+        let t = Tracer::new();
+        t.begin_step(7);
+        let tl = t.for_layer(3);
+        tl.record_span(SpanRecord::new(TracePhase::ExpertGemm, 0.0, 0.5));
+        let mut explicit = SpanRecord::new(TracePhase::Gather, 0.5, 0.25);
+        explicit.layer = Some(9);
+        tl.record_span(explicit);
+        let log = t.inner.log.lock().unwrap();
+        assert_eq!(log.spans[0].step, 7);
+        assert_eq!(log.spans[0].layer, Some(3));
+        assert_eq!(log.spans[1].layer, Some(9));
+    }
+
+    #[test]
+    fn step_measured_sums_section_spans_only() {
+        let t = Tracer::new();
+        t.begin_step(2);
+        t.record_span(SpanRecord::new(TracePhase::Gather, 0.0, 0.25));
+        t.record_span(SpanRecord::new(TracePhase::ExpertGemm, 0.25, 0.5));
+        t.record_span(SpanRecord::new(TracePhase::Combine, 0.75, 0.125));
+        // detail + host spans must not count
+        let mut d = SpanRecord::new(TracePhase::ExpertGemm, 0.0, 99.0);
+        d.detail = true;
+        d.rank = Some(0);
+        t.record_span(d);
+        t.record_span(SpanRecord::new(TracePhase::OptimizerUpdate, 1.0, 99.0));
+        assert!((t.step_measured_s(2) - 0.875).abs() < 1e-15);
+        let p = t.step_profile(2);
+        assert_eq!(p.spans, 4); // optimizer span is a section span too
+        assert!((p.measured_s() - 0.875).abs() < 1e-15);
+        assert!((p.optimizer_s - 99.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn profile_attributes_peak_gauge() {
+        let t = Tracer::new();
+        t.begin_step(0);
+        t.gauge(0, "resident_bytes", 100.0, "gather");
+        t.gauge(1, "resident_bytes", 300.0, "compute");
+        t.gauge(2, "resident_bytes", 200.0, "combine");
+        t.gauge(1, "routed_rows", 5000.0, "gather"); // different track
+        let p = t.step_profile(0);
+        assert_eq!(p.peak_rank, 1);
+        assert!((p.peak_bytes - 300.0).abs() < 1e-12);
+        assert_eq!(p.peak_phase, "compute");
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_schema() {
+        let t = Tracer::new();
+        t.begin_step(0);
+        let mut s = SpanRecord::new(TracePhase::Gather, 0.0, 0.5);
+        s.chunk = Some(1);
+        s.bytes = 1024;
+        t.record_span(s);
+        let mut d = SpanRecord::new(TracePhase::ExpertGemm, 0.0, 0.3);
+        d.rank = Some(1);
+        d.detail = true;
+        t.record_span(d);
+        t.gauge(0, "resident_bytes", 4096.0, "compute");
+        let summaries = vec![StepSummary {
+            step: 0,
+            measured_step_s: 0.5,
+            peak_rank_bytes: vec![4096, 0],
+        }];
+        let j = t.chrome_trace(&summaries);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let mb = parsed.get("moeblaze").unwrap();
+        assert_eq!(mb.get("schema_version").unwrap().as_usize(), Some(1));
+        assert_eq!(mb.get("ranks").unwrap().as_usize(), Some(2));
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // coordinator + 2 ranks × (process_name + 3 thread_name) meta
+        // events, 2 spans, 1 counter
+        assert_eq!(events.len(), 3 * 4 + 3);
+        let span = events
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .unwrap();
+        assert_eq!(span.get("cat").and_then(|c| c.as_str()), Some("comm"));
+        assert!(span.get("dur").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn scope_measures_nonnegative_duration() {
+        let t = Tracer::new();
+        {
+            let mut sc = t.scope(TracePhase::BatcherTick);
+            sc.rec.tokens = 17;
+        }
+        assert_eq!(t.span_count(), 1);
+        let log = t.inner.log.lock().unwrap();
+        assert_eq!(log.spans[0].tokens, 17);
+        assert!(log.spans[0].dur_s >= 0.0);
+    }
+}

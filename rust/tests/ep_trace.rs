@@ -1,0 +1,226 @@
+//! Acceptance gate for the structured tracing subsystem (ISSUE 8):
+//!
+//! * attaching a tracer changes nothing numeric: forward outputs stay
+//!   bit-identical to the untraced engine, and training loss curves are
+//!   bit-identical with and without `trace_out`;
+//! * the overhead contract: engines without a tracer record nothing
+//!   (the `Option` is `None` — no clock reads, no allocation), and a
+//!   *disabled* tracer swallows every record into a single relaxed
+//!   counter increment (`suppressed_count`), never the span log;
+//! * consistency: per step, the sum of section-span durations of the
+//!   measured phases equals the engine's `measured_step_s()` (the spans
+//!   carry the exact `split_wall` values fed to `record_measured`, so
+//!   only f64 addition order separates them), and the `resident_bytes`
+//!   gauge track reproduces `memory_per_rank()` per rank;
+//! * the Chrome export parses, carries `schema_version`, and embeds one
+//!   summary per step.
+
+use moeblaze::config::ep::EpConfig;
+use moeblaze::coordinator::engine::{engine_from_config, step_batch_from_config,
+                                    topology_from_config, ExecutionEngine};
+use moeblaze::coordinator::params::ExpertStore;
+use moeblaze::coordinator::pipeline::timeline::CostModel;
+use moeblaze::coordinator::pipeline::PipelinedEngine;
+use moeblaze::coordinator::trainer::EpTrainer;
+use moeblaze::memory::model::CheckpointPolicy;
+use moeblaze::trace::{StepSummary, Tracer, TRACE_SCHEMA_VERSION};
+use moeblaze::util::json::Json;
+use moeblaze::util::prng::Rng;
+
+fn cfg(ranks: usize) -> EpConfig {
+    EpConfig {
+        ranks,
+        tokens: 64,
+        num_experts: 8,
+        top_k: 2,
+        d_model: 8,
+        d_hidden: 12,
+        tile_rows: 8,
+        steps: 3,
+        lr: 0.1,
+        seed: 5,
+        ..EpConfig::default()
+    }
+}
+
+fn pipelined(c: &EpConfig, chunks: usize) -> PipelinedEngine {
+    let store = ExpertStore::init_gated(c.num_experts, c.d_model, c.d_hidden,
+                                        c.seed, c.activation.gated());
+    let topo = topology_from_config(c, c.ranks).unwrap();
+    let cost = CostModel::new(c.link_gbps, c.compute_gflops).unwrap();
+    PipelinedEngine::with_policy(topo, &store, c.ranks, CheckpointPolicy::SaveAll,
+                                 chunks, cost)
+        .unwrap()
+}
+
+/// Two traced fwd+bwd steps on a pipelined engine; returns the tracer
+/// and the per-step summaries the Chrome export embeds.
+fn traced_steps(c: &EpConfig, chunks: usize, steps: usize)
+                -> (PipelinedEngine, Tracer, Vec<StepSummary>) {
+    let (batch, _) = step_batch_from_config(c).unwrap();
+    let d_out: Vec<f32> = Rng::new(c.seed ^ 0xD0)
+        .normal_vec(batch.num_tokens() * c.d_model, 1.0);
+    let mut eng = pipelined(c, chunks);
+    let tracer = Tracer::new();
+    eng.set_tracer(tracer.clone());
+    let mut summaries = Vec::new();
+    for s in 0..steps as u64 {
+        tracer.begin_step(s);
+        let handle = eng.forward(&batch).unwrap();
+        let mut g = eng.zero_grads();
+        handle.backward_into(&mut eng, &d_out, &mut g).unwrap();
+        summaries.push(StepSummary {
+            step: s,
+            measured_step_s: eng.measured_step_s().unwrap(),
+            peak_rank_bytes: eng
+                .memory_per_rank()
+                .iter()
+                .map(|m| m.data_bytes)
+                .collect(),
+        });
+    }
+    (eng, tracer, summaries)
+}
+
+#[test]
+fn tracing_changes_no_numerics() {
+    let c = cfg(2);
+    let (batch, _) = step_batch_from_config(&c).unwrap();
+    let mut plain = pipelined(&c, 2);
+    let reference = plain.forward(&batch).unwrap().into_output();
+
+    let mut traced = pipelined(&c, 2);
+    let tracer = Tracer::new();
+    traced.set_tracer(tracer.clone());
+    let out = traced.forward(&batch).unwrap().into_output();
+    assert_eq!(out.len(), reference.len());
+    assert!(out.iter().zip(&reference).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "traced forward diverged from untraced");
+    assert!(tracer.span_count() > 0, "traced forward recorded no spans");
+}
+
+#[test]
+fn untraced_engines_touch_no_tracer_state() {
+    // no tracer attached: nothing records, nothing is suppressed —
+    // there is no tracer to consult at all (the Option is None)
+    let c = cfg(2);
+    let (batch, _) = step_batch_from_config(&c).unwrap();
+    let mut eng = pipelined(&c, 2);
+    let _ = eng.forward(&batch).unwrap();
+
+    // disabled tracer attached: every record collapses to one relaxed
+    // suppression increment — span and counter logs stay empty
+    let mut eng = pipelined(&c, 2);
+    let tracer = Tracer::new();
+    tracer.set_enabled(false);
+    eng.set_tracer(tracer.clone());
+    let _ = eng.forward(&batch).unwrap();
+    assert_eq!(tracer.span_count(), 0, "disabled tracer logged spans");
+    assert_eq!(tracer.counter_count(), 0, "disabled tracer logged counters");
+    assert!(tracer.suppressed_count() > 0,
+            "disabled tracer saw no record attempts — the engine skipped \
+             recording entirely instead of suppressing");
+}
+
+#[test]
+fn step_span_sums_match_engine_measured_seconds() {
+    let c = cfg(2);
+    let (_, tracer, summaries) = traced_steps(&c, 2, 2);
+    for s in &summaries {
+        let span_sum = tracer.step_measured_s(s.step);
+        assert!(span_sum > 0.0, "step {} recorded no measured spans", s.step);
+        let diff = (span_sum - s.measured_step_s).abs();
+        assert!(diff <= 1e-9 * span_sum.max(s.measured_step_s),
+                "step {}: span sum {span_sum} vs measured_step_s {} \
+                 (diff {diff})", s.step, s.measured_step_s);
+        // the StepProfile roll-up agrees with the raw sum bit-for-bit
+        // only up to addition order — same tolerance
+        let p = tracer.step_profile(s.step);
+        let pd = (p.measured_s() - span_sum).abs();
+        assert!(pd <= 1e-9 * span_sum, "profile/raw sum split: {pd}");
+        assert!(p.spans > 0 && p.rows > 0);
+    }
+}
+
+#[test]
+fn gauge_track_matches_memory_per_rank() {
+    let c = cfg(2);
+    let (eng, tracer, summaries) = traced_steps(&c, 2, 2);
+    let mem = eng.memory_per_rank();
+    let last = summaries.last().unwrap();
+    assert_eq!(last.peak_rank_bytes.len(), mem.len());
+    for (r, m) in mem.iter().enumerate() {
+        assert_eq!(last.peak_rank_bytes[r], m.data_bytes,
+                   "rank {r} summary bytes drifted from memory_per_rank");
+    }
+    // the per-step profile's peak gauge sample is one of those ranks'
+    // exact data_bytes values
+    let p = tracer.step_profile(last.step);
+    assert!(p.peak_bytes > 0.0);
+    assert_eq!(p.peak_bytes, mem[p.peak_rank].data_bytes as f64,
+               "peak gauge sample is not the rank's measured bytes");
+}
+
+#[test]
+fn chrome_export_parses_with_schema_and_summaries() {
+    let c = cfg(2);
+    let (_, tracer, summaries) = traced_steps(&c, 2, 2);
+    let text = tracer.chrome_trace(&summaries).to_string();
+    let json = Json::parse(&text).unwrap();
+    let events = json.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+    assert!(!events.is_empty());
+    let mut durations = 0usize;
+    let mut counters = 0usize;
+    for e in events {
+        match e.get("ph").and_then(|p| p.as_str()) {
+            Some("X") => {
+                durations += 1;
+                assert!(e.get("ts").and_then(|v| v.as_f64()).is_some());
+                assert!(e.get("dur").and_then(|v| v.as_f64()).is_some());
+                assert!(e.get("pid").and_then(|v| v.as_f64()).is_some());
+                assert!(e.get("tid").and_then(|v| v.as_f64()).is_some());
+            }
+            Some("C") => counters += 1,
+            Some("M") => {}
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    assert!(durations > 0, "no duration events");
+    assert!(counters > 0, "no counter samples");
+    let meta = json.get("moeblaze").unwrap();
+    assert_eq!(meta.get("schema_version").and_then(|v| v.as_usize()),
+               Some(TRACE_SCHEMA_VERSION as usize));
+    assert_eq!(meta.get("ranks").and_then(|v| v.as_usize()), Some(2));
+    assert_eq!(meta.get("steps").and_then(|s| s.as_arr()).unwrap().len(), 2);
+}
+
+#[test]
+fn trainer_trace_out_is_loss_invariant_and_writes_the_export() {
+    let base = EpConfig { pipeline_chunks: 2, ..cfg(2) };
+    let reference = {
+        let engine = engine_from_config(&base).unwrap();
+        EpTrainer::new(engine, base.clone()).unwrap().run().unwrap().losses
+    };
+    let path = std::env::temp_dir().join("moeblaze_ep_trace_test.json");
+    let traced_cfg = EpConfig {
+        trace_out: path.to_string_lossy().into_owned(),
+        ..base
+    };
+    let engine = engine_from_config(&traced_cfg).unwrap();
+    let mut t = EpTrainer::new(engine, traced_cfg).unwrap();
+    let r = t.run().unwrap();
+    assert_eq!(r.losses, reference, "trace_out changed the loss curve");
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let json = Json::parse(&text).unwrap();
+    let meta = json.get("moeblaze").unwrap();
+    assert_eq!(meta.get("steps").and_then(|s| s.as_arr()).unwrap().len(),
+               r.steps);
+    // the trainer adds host-lane optimizer spans per step
+    let opt = json.get("traceEvents").and_then(|e| e.as_arr()).unwrap()
+        .iter()
+        .filter(|e| e.get("name").and_then(|n| n.as_str())
+            == Some("optimizer_update"))
+        .count();
+    assert_eq!(opt, r.steps, "one optimizer span per step");
+}

@@ -5,22 +5,42 @@ rows are deterministic (measured data/comm bytes of a fixed seeded
 workload), so byte growth is a real regression, not noise; throughput
 rows get the --max-regress tolerance for host jitter.
 
-Understands all three snapshot shapes this repo emits:
+Understands every snapshot shape this repo emits:
   * ep_bench_matrix   — {"bench": "ep_bench_matrix", "runs": {name: run}}
   * ep_bench_pr5-style single runs with "baseline"/"indexed" sub-objects
+  * ep_train          — the ep-train --json-out training snapshot
   * ep_serve          — the ep-serve --json-out serving snapshot
+
+Every shape carries the shared `snapshot_version` stamp (the Rust CLI
+writes it on every --json-out); the gate rejects snapshots without it
+rather than guessing at pre-versioned key layouts.
 
 A missing baseline file is a notice, not a failure — the gate becomes
 blocking once the first snapshot is committed.
 
 Usage:
-    python tools/bench_gate.py --current BENCH_PR7.json --baseline BENCH_PR6.json
+    python tools/bench_gate.py --current BENCH_PR8.json --baseline BENCH_PR7.json
     python tools/bench_gate.py --self-test
 """
 import argparse
 import json
 import pathlib
 import sys
+
+# The shared --json-out stamp (SNAPSHOT_VERSION in rust/src/main.rs).
+SNAPSHOT_VERSION = 1
+
+
+def check_version(snap, label):
+    """Failure strings for a snapshot missing/mismatching the version."""
+    v = snap.get("snapshot_version")
+    if v is None:
+        return [f"[{label}] snapshot has no snapshot_version — pre-versioned "
+                "shape; regenerate it with the current CLI"]
+    if int(v) != SNAPSHOT_VERSION:
+        return [f"[{label}] snapshot_version {v} is not the supported "
+                f"{SNAPSHOT_VERSION}"]
+    return []
 
 
 def extract_rows(snap):
@@ -33,6 +53,9 @@ def extract_rows(snap):
     elif kind == "ep_serve":
         yield ("serve", float(snap.get("tokens_per_sec", 0.0)),
                float(snap.get("peak_rank_data_bytes", 0.0)))
+    elif kind == "ep_train":
+        yield ("train", float(snap.get("tokens_per_sec", 0.0)),
+               float(snap.get("peak_rank_data_bytes", 0.0)))
     else:
         # single ep-bench run: gate the shipping (indexed) path only —
         # the packed baseline row exists to be beaten, not preserved
@@ -44,9 +67,12 @@ def extract_rows(snap):
 
 def compare(current, baseline, max_regress):
     """Return a list of failure strings (empty = gate passes)."""
+    failures = (check_version(current, "current")
+                + check_version(baseline, "baseline"))
+    if failures:
+        return failures
     cur = {label: (tps, peak) for label, tps, peak in extract_rows(current)}
     base = {label: (tps, peak) for label, tps, peak in extract_rows(baseline)}
-    failures = []
     for label in sorted(set(cur) | set(base)):
         if label not in cur:
             failures.append(f"[{label}] present in baseline but missing from "
@@ -77,14 +103,20 @@ def compare(current, baseline, max_regress):
 def self_test() -> int:
     base = {
         "bench": "ep_bench_matrix",
+        "snapshot_version": 1,
         "runs": {
             "silu": {"bench": "ep_bench_pr5",
+                     "snapshot_version": 1,
                      "indexed": {"tokens_per_sec": 1000.0,
                                  "peak_rank_comm_bytes": 4096}},
         },
     }
-    serve_base = {"bench": "ep_serve", "tokens_per_sec": 500.0,
+    serve_base = {"bench": "ep_serve", "snapshot_version": 1,
+                  "tokens_per_sec": 500.0,
                   "peak_rank_data_bytes": 2048}
+    train_base = {"bench": "ep_train", "snapshot_version": 1,
+                  "tokens_per_sec": 900.0,
+                  "peak_rank_data_bytes": 1024}
 
     checks = []
     # identical snapshots pass
@@ -114,6 +146,22 @@ def self_test() -> int:
     grown["runs"]["swiglu"] = grown["runs"]["silu"]
     checks.append(("new row passes", compare(grown, base, 0.10) == []))
     checks.append(("dropped row fails", compare(base, grown, 0.10) != []))
+    # training snapshots gate through the shared common keys
+    checks.append(("train identical passes",
+                   compare(train_base, train_base, 0.10) == []))
+    slow_train = dict(train_base, tokens_per_sec=100.0)
+    checks.append(("train dip fails",
+                   compare(slow_train, train_base, 0.10) != []))
+    # unversioned snapshots are rejected outright, on either side
+    unversioned = {k: v for k, v in serve_base.items()
+                   if k != "snapshot_version"}
+    checks.append(("unversioned current fails",
+                   compare(unversioned, serve_base, 0.10) != []))
+    checks.append(("unversioned baseline fails",
+                   compare(serve_base, unversioned, 0.10) != []))
+    future = dict(serve_base, snapshot_version=99)
+    checks.append(("unknown version fails",
+                   compare(future, serve_base, 0.10) != []))
 
     failed = [name for name, passed in checks if not passed]
     for name, passed in checks:

@@ -125,8 +125,31 @@ def main() -> int:
                   "do not conserve", file=sys.stderr)
             warnings += 1
 
+        # training smoke cell: ep-train on the same fixture so the gate
+        # tracks training throughput + peak bytes + drift flags too
+        train = run_one("train_smoke",
+                        ["--activation", "swiglu", "--pipeline-chunks", "2"],
+                        args.steps, tmpdir, subcommand="ep-train")
+        rows["train_smoke"] = train
+        print(f"  [train_smoke] {train.get('tokens_per_sec', 0):.0f} tokens/s, "
+              f"loss {train.get('first_loss', 0):.4f} -> "
+              f"{train.get('final_loss', 0):.4f}, peak rank "
+              f"{train.get('peak_rank_data_bytes', 0):.0f} B, "
+              f"drift flags {train.get('drift_flags', 0):.0f}")
+        if not train.get("final_loss", 1e9) < train.get("first_loss", 0):
+            print("bench_snapshot: WARNING — [train_smoke] loss did not drop",
+                  file=sys.stderr)
+            warnings += 1
+
+        for name, snap in rows.items():
+            if snap.get("snapshot_version") != 1:
+                print(f"bench_snapshot: WARNING — [{name}] snapshot is "
+                      "unversioned (the gate will reject it)", file=sys.stderr)
+                warnings += 1
+
     out = ROOT / args.out
-    out.write_text(json.dumps({"bench": "ep_bench_matrix", "runs": rows},
+    out.write_text(json.dumps({"bench": "ep_bench_matrix",
+                               "snapshot_version": 1, "runs": rows},
                               indent=2, sort_keys=True) + "\n")
     print(f"bench_snapshot: wrote {len(rows)} runs to {out}"
           + (f" ({warnings} warnings)" if warnings else ""))

@@ -1461,3 +1461,71 @@ for policy in ['queue', 'reject']:
 print("admission mirror OK: FIFO drain under queue + reject policies, "
       "every admitted batch's projected peak within budget, request "
       "counters conserve")
+
+# -- drift-band mirror: EWMA predicted-vs-measured flagging -----------------
+# Bit-for-bit port of rust/src/trace/drift.rs::DriftTracker. The update
+# order is the cross-language contract: deviation and flag are judged
+# against the PRE-update mean/mad, then both EWMAs fold the observation
+# in. Constants mirror DRIFT_ALPHA / DRIFT_K / DRIFT_EPS / DRIFT_WARMUP.
+
+DRIFT_ALPHA, DRIFT_K, DRIFT_EPS, DRIFT_WARMUP = 0.2, 4.0, 0.25, 3
+MASK64 = (1 << 64) - 1
+LCG_MUL, LCG_ADD = 6364136223846793005, 1442695040888963407
+
+
+def drift_flags(ratios, alpha=DRIFT_ALPHA, k=DRIFT_K, eps=DRIFT_EPS,
+                warmup=DRIFT_WARMUP):
+    mean = mad = 0.0
+    n = 0
+    flags = []
+    for i, r in enumerate(ratios):
+        if n == 0:
+            mean, mad, n = r, 0.0, 1
+            continue
+        dev = abs(r - mean)
+        width = max(k * mad, eps)
+        if n >= warmup and dev > width:
+            flags.append(i)
+        mean += alpha * (r - mean)
+        mad += alpha * (dev - mad)
+        n += 1
+    return flags
+
+
+def drift_sequence(seq):
+    # same LCG as the Rust test: ratios in [0.8, 1.2) with a rare 2.5x
+    # spike when the top nibble of the second draw is zero
+    state = (0x5EED0 + seq) & MASK64
+    out = []
+    for _ in range(40):
+        state = (state * LCG_MUL + LCG_ADD) & MASK64
+        u = (state >> 11) / float(1 << 53)
+        r = 0.8 + 0.4 * u
+        state = (state * LCG_MUL + LCG_ADD) & MASK64
+        if state >> 60 == 0:
+            r *= 2.5
+        out.append(r)
+    return out
+
+
+# the pinned table — rust/src/trace/drift.rs holds the identical one
+DRIFT_EXPECTED = [
+    [11, 23, 33], [13], [36], [3, 5, 14, 37], [10, 15], [17, 28], [6],
+    [3, 22], [19, 20], [21], [3, 7, 14], [], [37], [18, 30], [25],
+    [6, 38], [], [9, 10], [4, 8], [7],
+]
+
+for s, expected in enumerate(DRIFT_EXPECTED):
+    got = drift_flags(drift_sequence(s))
+    assert got == expected, \
+        f"drift sequence {s}: flagged {got}, Rust table says {expected}"
+assert sum(len(f) for f in DRIFT_EXPECTED) == 33
+
+# behavior pins matching the Rust unit tests: a quiet history never
+# flags; a 2x spike after warmup flags once and the widened band then
+# absorbs the return to baseline
+assert drift_flags([1.0] * 20) == []
+assert drift_flags([1.0] * 5 + [2.0, 1.0]) == [5]
+print("drift mirror OK: 20 LCG sequences x 40 steps flag exactly the "
+      "33 pinned (sequence, step) pairs; quiet histories stay silent, "
+      "post-warmup spikes flag once")

@@ -1,0 +1,318 @@
+"""Validate and summarize moeblaze Chrome traces (--trace-out files).
+
+The Rust tracer (rust/src/trace/) exports Chrome trace-event JSON with a
+`moeblaze` metadata object: `schema_version`, the rank count, and one
+per-step summary carrying the engine's own `measured_step_s()` and
+per-rank `memory_per_rank()` data bytes. That makes every trace
+self-validating, and this tool is the validator CI runs after the
+`ep-bench --trace-out` smoke:
+
+  * schema: `schema_version` matches, every event is a well-formed
+    "X" (duration), "C" (counter), or "M" (metadata) record, span names
+    are known phases, durations are non-negative;
+  * time consistency: per step, the summed wall-clock of the *section*
+    spans of the measured phases (gather / expert_gemm / combine on the
+    coordinator pid — detail spans excluded) equals the engine's
+    `measured_step_s` up to float addition order;
+  * memory consistency: per step and rank, the max `resident_bytes`
+    counter sample equals the summary's `peak_rank_bytes[rank]` exactly
+    (both are the same u64 `memory_per_rank()` reading).
+
+Usage:
+    python tools/trace_report.py --validate trace.json   # CI gate
+    python tools/trace_report.py trace.json              # breakdown table
+    python tools/trace_report.py --self-test
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+# Mirrors TRACE_SCHEMA_VERSION in rust/src/trace/mod.rs.
+SCHEMA_VERSION = 1
+
+# TracePhase::name() values, split by TracePhase::is_measured().
+MEASURED_PHASES = ("gather", "expert_gemm", "combine")
+HOST_PHASES = ("optimizer_update", "batcher_tick")
+KNOWN_PHASES = MEASURED_PHASES + HOST_PHASES
+
+# The coordinator pid section spans land on (COORD_PID in trace/mod.rs);
+# per-rank detail spans and counters use pid = rank + 2.
+COORD_PID = 1
+
+# Section spans carry the exact f64 values fed to the timeline's
+# record_measured, so only addition order separates the span sum from
+# measured_step_s — micro-tolerance, not a physics fudge factor.
+REL_TOL = 1e-6
+
+
+def rank_of_pid(pid):
+    return int(pid) - 2
+
+
+def iter_events(trace, phase_kind):
+    for e in trace.get("traceEvents", []):
+        if isinstance(e, dict) and e.get("ph") == phase_kind:
+            yield e
+
+
+def check_event_shapes(trace):
+    """Structural failures over every event in the trace."""
+    fails = []
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return ["traceEvents missing or empty"]
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            fails.append(f"event {i} is not an object")
+            continue
+        ph = e.get("ph")
+        if ph == "M":
+            continue
+        if ph not in ("X", "C"):
+            fails.append(f"event {i}: unknown ph {ph!r}")
+            continue
+        for key in ("name", "ts", "pid", "tid", "args"):
+            if key not in e:
+                fails.append(f"event {i} ({ph}): missing {key}")
+        if ph == "X":
+            if e.get("name") not in KNOWN_PHASES:
+                fails.append(f"event {i}: unknown span name {e.get('name')!r}")
+            if not isinstance(e.get("dur"), (int, float)) or e.get("dur", -1) < 0:
+                fails.append(f"event {i}: bad dur {e.get('dur')!r}")
+            if "step" not in e.get("args", {}):
+                fails.append(f"event {i}: span args missing step")
+        if ph == "C":
+            args = e.get("args", {})
+            if e.get("name") not in args:
+                fails.append(f"event {i}: counter args missing its own "
+                             f"{e.get('name')!r} value")
+            if "step" not in args:
+                fails.append(f"event {i}: counter args missing step")
+    return fails
+
+
+def section_span_sums(trace):
+    """Per-step summed seconds of the measured-phase section spans."""
+    sums = {}
+    for e in iter_events(trace, "X"):
+        if e.get("pid") != COORD_PID or e.get("name") not in MEASURED_PHASES:
+            continue
+        step = int(e.get("args", {}).get("step", -1))
+        sums[step] = sums.get(step, 0.0) + float(e.get("dur", 0.0)) / 1e6
+    return sums
+
+
+def counter_maxima(trace, name="resident_bytes"):
+    """(step, rank) -> max sampled value of the named counter track."""
+    maxima = {}
+    for e in iter_events(trace, "C"):
+        if e.get("name") != name:
+            continue
+        args = e.get("args", {})
+        key = (int(args.get("step", -1)), rank_of_pid(e.get("pid", 0)))
+        value = float(args.get(name, 0.0))
+        maxima[key] = max(maxima.get(key, 0.0), value)
+    return maxima
+
+
+def validate(trace):
+    """Return a list of failure strings (empty = trace is valid)."""
+    meta = trace.get("moeblaze")
+    if not isinstance(meta, dict):
+        return ["missing `moeblaze` metadata object"]
+    if meta.get("schema_version") != SCHEMA_VERSION:
+        return [f"schema_version {meta.get('schema_version')!r} is not the "
+                f"supported {SCHEMA_VERSION}"]
+    fails = check_event_shapes(trace)
+    if fails:
+        return fails
+
+    steps = meta.get("steps", [])
+    if not isinstance(steps, list):
+        return ["moeblaze.steps is not a list"]
+    ranks = int(meta.get("ranks", 0))
+    sums = section_span_sums(trace)
+    maxima = counter_maxima(trace)
+
+    for entry in steps:
+        step = int(entry.get("step", -1))
+        measured = float(entry.get("measured_step_s", 0.0))
+        span_sum = sums.get(step, 0.0)
+        tol = max(REL_TOL * max(abs(span_sum), abs(measured)), 1e-12)
+        if abs(span_sum - measured) > tol:
+            fails.append(
+                f"step {step}: section-span sum {span_sum:.9f}s != "
+                f"measured_step_s {measured:.9f}s (tol {tol:.2e})")
+        peaks = entry.get("peak_rank_bytes", [])
+        if len(peaks) > ranks:
+            fails.append(f"step {step}: {len(peaks)} peak_rank_bytes entries "
+                         f"but metadata says {ranks} ranks")
+        for r, expected in enumerate(peaks):
+            got = maxima.get((step, r))
+            if got is None:
+                continue  # no gauge sample for this rank/step (empty tick)
+            if got != float(expected):
+                fails.append(
+                    f"step {step} rank {r}: resident_bytes counter max "
+                    f"{got:.0f} != summary peak_rank_bytes {expected:.0f}")
+    return fails
+
+
+def report(trace):
+    """Human summary: per-phase totals and the per-step roll-up."""
+    meta = trace.get("moeblaze", {})
+    totals = {}
+    for e in iter_events(trace, "X"):
+        if e.get("cat") == "detail":
+            continue
+        name = e.get("name", "?")
+        spans, secs, bytes_ = totals.get(name, (0, 0.0, 0))
+        totals[name] = (spans + 1,
+                        secs + float(e.get("dur", 0.0)) / 1e6,
+                        bytes_ + int(e.get("args", {}).get("bytes", 0)))
+    print(f"trace: schema v{meta.get('schema_version')}, "
+          f"{meta.get('ranks', 0)} ranks, {len(meta.get('steps', []))} steps")
+    print(f"{'phase':<18} {'spans':>6} {'total ms':>10} {'bytes':>12}")
+    for name in KNOWN_PHASES:
+        if name not in totals:
+            continue
+        spans, secs, bytes_ = totals[name]
+        print(f"{name:<18} {spans:>6} {secs * 1e3:>10.3f} {bytes_:>12}")
+    sums = section_span_sums(trace)
+    for entry in meta.get("steps", []):
+        step = int(entry.get("step", -1))
+        peaks = entry.get("peak_rank_bytes", [])
+        print(f"step {step}: measured {entry.get('measured_step_s', 0.0) * 1e3:.3f} ms "
+              f"(spans {sums.get(step, 0.0) * 1e3:.3f} ms), peak rank bytes "
+              f"{max(peaks) if peaks else 0:.0f}")
+
+
+def synthetic_trace():
+    """A minimal valid trace: 2 steps, 2 ranks, exact summaries."""
+    events = [{"name": "process_name", "ph": "M", "pid": COORD_PID, "tid": 0,
+               "args": {"name": "coordinator"}}]
+    steps = []
+    for step in range(2):
+        t0 = step * 10_000.0
+        durs = {"gather": 120.5, "expert_gemm": 800.25, "combine": 60.125}
+        for i, (name, dur) in enumerate(durs.items()):
+            events.append({"name": name, "cat": "comm", "ph": "X",
+                           "ts": t0 + 1000.0 * i, "dur": dur,
+                           "pid": COORD_PID, "tid": 1,
+                           "args": {"step": step, "bytes": 1024}})
+        # a detail span and a host span, both excluded from the sum
+        events.append({"name": "gather", "cat": "detail", "ph": "X",
+                       "ts": t0, "dur": 55.0, "pid": 2, "tid": 1,
+                       "args": {"step": step}})
+        events.append({"name": "optimizer_update", "cat": "host", "ph": "X",
+                       "ts": t0 + 5000.0, "dur": 42.0, "pid": COORD_PID,
+                       "tid": 3, "args": {"step": step}})
+        peaks = [4096.0 + step, 2048.0]
+        for r, v in enumerate(peaks):
+            events.append({"name": "resident_bytes", "cat": "gauge",
+                           "ph": "C", "ts": t0, "pid": r + 2, "tid": 0,
+                           "args": {"resident_bytes": v, "step": step,
+                                    "phase": "expert_gemm"}})
+        steps.append({"step": step,
+                      "measured_step_s": sum(durs.values()) / 1e6,
+                      "peak_rank_bytes": peaks})
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "moeblaze": {"schema_version": SCHEMA_VERSION, "ranks": 2,
+                         "steps": steps}}
+
+
+def self_test() -> int:
+    good = synthetic_trace()
+    checks = [("valid trace passes", validate(good) == [])]
+
+    wrong_ver = json.loads(json.dumps(good))
+    wrong_ver["moeblaze"]["schema_version"] = 99
+    checks.append(("wrong schema_version fails", validate(wrong_ver) != []))
+
+    no_meta = {"traceEvents": good["traceEvents"]}
+    checks.append(("missing metadata fails", validate(no_meta) != []))
+
+    drifted = json.loads(json.dumps(good))
+    drifted["moeblaze"]["steps"][0]["measured_step_s"] *= 1.5
+    checks.append(("span/measured mismatch fails", validate(drifted) != []))
+
+    fat = json.loads(json.dumps(good))
+    fat["moeblaze"]["steps"][1]["peak_rank_bytes"][0] += 1
+    checks.append(("counter/peak mismatch fails", validate(fat) != []))
+
+    alien = json.loads(json.dumps(good))
+    alien["traceEvents"].append({"name": "warp_drive", "ph": "X", "ts": 0,
+                                 "dur": 1, "pid": 1, "tid": 1,
+                                 "args": {"step": 0}})
+    checks.append(("unknown span name fails", validate(alien) != []))
+
+    negative = json.loads(json.dumps(good))
+    negative["traceEvents"][1]["dur"] = -5.0
+    checks.append(("negative duration fails", validate(negative) != []))
+
+    # detail spans must stay excluded: inflating one changes nothing
+    detail = json.loads(json.dumps(good))
+    for e in detail["traceEvents"]:
+        if e.get("cat") == "detail":
+            e["dur"] = 1e9
+    checks.append(("detail spans excluded from sums", validate(detail) == []))
+
+    # an empty tick (summary step with no spans/counters) still passes
+    # when its measured_step_s is zero
+    sparse = json.loads(json.dumps(good))
+    sparse["moeblaze"]["steps"].append(
+        {"step": 7, "measured_step_s": 0.0, "peak_rank_bytes": []})
+    checks.append(("span-free zero step passes", validate(sparse) == []))
+
+    failed = [name for name, passed in checks if not passed]
+    for name, passed in checks:
+        print(f"trace_report self-test: {name}: {'ok' if passed else 'FAIL'}")
+    if failed:
+        print(f"trace_report self-test: {len(failed)} check(s) failed",
+              file=sys.stderr)
+        return 1
+    print(f"trace_report self-test: all {len(checks)} checks passed")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", nargs="?", help="Chrome trace JSON to read")
+    ap.add_argument("--validate", metavar="TRACE",
+                    help="validate the trace and exit nonzero on failure")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the built-in behavior checks and exit")
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
+    path = args.validate or args.trace
+    if not path:
+        ap.error("a trace path, --validate TRACE, or --self-test is required")
+    p = pathlib.Path(path)
+    if not p.exists():
+        print(f"trace_report: {p} does not exist", file=sys.stderr)
+        return 1
+    trace = json.loads(p.read_text())
+
+    if args.validate:
+        fails = validate(trace)
+        if fails:
+            for f in fails:
+                print(f"trace_report: FAIL {f}", file=sys.stderr)
+            return 1
+        meta = trace.get("moeblaze", {})
+        spans = sum(1 for _ in iter_events(trace, "X"))
+        counters = sum(1 for _ in iter_events(trace, "C"))
+        print(f"trace_report: {p.name} valid \N{CHECK MARK} "
+              f"({len(meta.get('steps', []))} steps, {spans} spans, "
+              f"{counters} counter samples, {meta.get('ranks', 0)} ranks)")
+        return 0
+
+    report(trace)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
