@@ -178,6 +178,17 @@ pub struct EpConfig {
     /// counter tracks here at end of run; empty = tracing off (the
     /// engines pay nothing)
     pub trace_out: String,
+    /// Prometheus text exposition file (`metrics::registry`): render
+    /// the run's typed metrics registry here atomically on the
+    /// console-log cadence and at end of run, as a file-based scrape
+    /// target; empty = no registry attached (the engines pay nothing)
+    pub metrics_expose_path: String,
+    /// expert-load skew alarm threshold (`trace::load`): raise a
+    /// `PlacementSignal` when a layer's per-rank load imbalance factor
+    /// (max-rank / mean-rank routed-row EWMA) stays above this for
+    /// `LOAD_HYSTERESIS` steps after warmup; 0 = alarm off (load EWMAs
+    /// still track whenever a tracker is attached)
+    pub skew_alarm: f64,
 }
 
 impl Default for EpConfig {
@@ -212,6 +223,8 @@ impl Default for EpConfig {
             metrics_path: String::new(),
             calibration_path: String::new(),
             trace_out: String::new(),
+            metrics_expose_path: String::new(),
+            skew_alarm: 0.0,
         }
     }
 }
@@ -248,6 +261,8 @@ impl EpConfig {
         "metrics_path",
         "calibration_path",
         "trace_out",
+        "metrics_expose_path",
+        "skew_alarm",
     ];
 
     pub fn validate(&self) -> Result<(), String> {
@@ -306,6 +321,12 @@ impl EpConfig {
         if !(self.clip_norm >= 0.0 && self.clip_norm.is_finite()) {
             return Err(format!("ep.clip_norm must be >= 0, got {}", self.clip_norm));
         }
+        if !(self.skew_alarm >= 0.0 && self.skew_alarm.is_finite()) {
+            return Err(format!(
+                "ep.skew_alarm must be >= 0 (0 = off), got {}",
+                self.skew_alarm
+            ));
+        }
         // single sources of truth for names: the respective registries
         let _ = crate::coordinator::optim::optimizer_from_name(&self.optimizer)?;
         let _ = crate::coordinator::optim::LrSchedule::parse(&self.lr_schedule)?;
@@ -360,6 +381,9 @@ impl EpConfig {
             calibration_path: t.str_or(&key("calibration_path"),
                                        &d.calibration_path),
             trace_out: t.str_or(&key("trace_out"), &d.trace_out),
+            metrics_expose_path: t.str_or(&key("metrics_expose_path"),
+                                          &d.metrics_expose_path),
+            skew_alarm: t.f64_or(&key("skew_alarm"), d.skew_alarm),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -553,7 +577,8 @@ mod tests {
                 "chunk_balance" => format!("{k} = \"tokens\""),
                 "activation" => format!("{k} = \"silu\""),
                 "lr_schedule" => format!("{k} = \"constant\""),
-                "metrics_path" | "calibration_path" | "trace_out" => {
+                "metrics_path" | "calibration_path" | "trace_out"
+                | "metrics_expose_path" => {
                     format!("{k} = \"\"")
                 }
                 "calibrate" => format!("{k} = false"),
@@ -561,7 +586,7 @@ mod tests {
                 "lr" => format!("{k} = 0.05"),
                 "link_gbps" => format!("{k} = 50.0"),
                 "compute_gflops" => format!("{k} = 200.0"),
-                "clip_norm" => format!("{k} = 0.0"),
+                "clip_norm" | "skew_alarm" => format!("{k} = 0.0"),
                 "pipeline_chunks" | "mem_budget_bytes" => format!("{k} = 0"),
                 "tokens" => format!("{k} = 64"),
                 "num_experts" => format!("{k} = 8"),
@@ -576,6 +601,42 @@ mod tests {
                              [serving]\nticks = 5")
             .unwrap();
         EpConfig::from_toml(&t, "ep").unwrap();
+    }
+
+    #[test]
+    fn from_toml_rejects_misspelled_observability_keys_by_name() {
+        // the PR-9 keys obey the PR-7 contract: misspellings fail loudly
+        for (bad, good) in [
+            ("metrics_expose", "metrics_expose_path"),
+            ("metrics_expose_file", "metrics_expose_path"),
+            ("skew_alarm_threshold", "skew_alarm"),
+            ("skew_alert", "skew_alarm"),
+        ] {
+            let t = Toml::parse(&format!("[ep]\n{bad} = 1")).unwrap();
+            let err = EpConfig::from_toml(&t, "ep").unwrap_err();
+            assert!(err.contains(&format!("`{bad}`")), "{err}");
+            assert!(err.contains(good),
+                    "error for `{bad}` should name `{good}`: {err}");
+        }
+        // the real spellings parse and land in the config
+        let t = Toml::parse(
+            "[ep]\nmetrics_expose_path = \"m.prom\"\nskew_alarm = 1.5",
+        )
+        .unwrap();
+        let c = EpConfig::from_toml(&t, "ep").unwrap();
+        assert_eq!(c.metrics_expose_path, "m.prom");
+        assert_eq!(c.skew_alarm, 1.5);
+        // defaults: both off
+        let d = EpConfig::default();
+        assert!(d.metrics_expose_path.is_empty());
+        assert_eq!(d.skew_alarm, 0.0);
+        // negative / non-finite thresholds are invalid
+        assert!(EpConfig { skew_alarm: -0.5, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(EpConfig { skew_alarm: f64::NAN, ..Default::default() }
+            .validate()
+            .is_err());
     }
 
     #[test]

@@ -133,6 +133,7 @@ use crate::dispatch::gating::synthetic_gating;
 use crate::dispatch::parallel_build::parallel_build;
 use crate::dispatch::structures::{DispatchStructures, RowIndexPlan};
 use crate::memory::model::{staging_bytes, CheckpointPolicy, MemoryBreakdown};
+use crate::trace::load::ExpertLoadTracker;
 use crate::trace::{SpanRecord, TracePhase, Tracer};
 use crate::util::prng::Rng;
 use crate::util::threadpool::{par_map, scope_chunks};
@@ -708,6 +709,16 @@ pub trait ExecutionEngine {
     /// Tracing never perturbs numerics — the bit-identity matrices hold
     /// with and without a tracer.
     fn set_tracer(&mut self, _tracer: Tracer) {}
+
+    /// Attach an expert-load tracker (`crate::trace::load`): subsequent
+    /// forwards feed it the step's per-expert routed-row counts from the
+    /// `RowIndexPlan` (dispatch ground truth) plus the gate weights for
+    /// router entropy. Engines without instrumentation ignore the
+    /// attach (the default). Like tracing, an attached tracker is
+    /// integer accounting off the numeric path — the bit-identity
+    /// matrices hold with and without one (pinned in
+    /// `rust/tests/ep_load.rs`).
+    fn set_load_tracker(&mut self, _tracker: ExpertLoadTracker) {}
 }
 
 // -- reference per-row expert math ------------------------------------------
@@ -1055,6 +1066,8 @@ pub struct SingleRankEngine {
     /// attached observability handle; `None` keeps the hot path free
     /// of any tracing cost at all (see [`crate::trace`])
     tracer: Option<Tracer>,
+    /// attached expert-load tracker, same Option-gating contract
+    load: Option<ExpertLoadTracker>,
 }
 
 impl SingleRankEngine {
@@ -1075,6 +1088,7 @@ impl SingleRankEngine {
             traffic: Traffic::default(),
             mem: Vec::new(),
             tracer: None,
+            load: None,
         }
     }
 
@@ -1327,6 +1341,17 @@ impl ExecutionEngine for SingleRankEngine {
                      mem_peak_phase(&self.mem[0]));
             tr.gauge(0, "routed_rows", n as f64, "gather");
         }
+        if let Some(lt) = &self.load {
+            // routed-row ground truth from the dispatch offsets; every
+            // expert lives on the single rank
+            let e_count = self.store.experts.len();
+            let mut rows = vec![0u64; e_count];
+            for (e, r) in rows.iter_mut().enumerate() {
+                *r = (disp.expert_token_offsets[e + 1]
+                    - disp.expert_token_offsets[e]) as u64;
+            }
+            lt.record_rows(&rows, &vec![0u32; e_count], gates);
+        }
         self.sessions_opened += 1;
         let session = self.sessions_opened;
         self.session = Some(SingleSession { id: session, batch: batch.share(), saved });
@@ -1376,6 +1401,10 @@ impl ExecutionEngine for SingleRankEngine {
 
     fn set_tracer(&mut self, tracer: Tracer) {
         self.tracer = Some(tracer);
+    }
+
+    fn set_load_tracker(&mut self, tracker: ExpertLoadTracker) {
+        self.load = Some(tracker);
     }
 }
 
@@ -1520,6 +1549,8 @@ pub struct ShardedEngine {
     /// attached observability handle; `None` keeps the hot path free
     /// of any tracing cost at all (see [`crate::trace`])
     tracer: Option<Tracer>,
+    /// attached expert-load tracker, same Option-gating contract
+    load: Option<ExpertLoadTracker>,
 }
 
 impl ShardedEngine {
@@ -1557,6 +1588,7 @@ impl ShardedEngine {
             traffic: Traffic::default(),
             mem: Vec::new(),
             tracer: None,
+            load: None,
         })
     }
 
@@ -1884,6 +1916,18 @@ impl ExecutionEngine for ShardedEngine {
                          plan.rows.per_rank[rank].local_slots() as f64, "gather");
             }
         }
+        if let Some(lt) = &self.load {
+            // routed-row ground truth per global expert, read off the
+            // RowIndexPlan's per-rank segments, aggregated through the
+            // live placement
+            let mut rows = vec![0u64; self.topo.num_experts];
+            for rr in &plan.rows.per_rank {
+                for (i, &e) in rr.experts.iter().enumerate() {
+                    rows[e as usize] += rr.expert_len(i) as u64;
+                }
+            }
+            lt.record_rows(&rows, &self.topo.assignment().rank_of, gates);
+        }
         self.mem = mem;
         self.traffic = traffic;
         self.sessions_opened += 1;
@@ -1941,6 +1985,10 @@ impl ExecutionEngine for ShardedEngine {
 
     fn set_tracer(&mut self, tracer: Tracer) {
         self.tracer = Some(tracer);
+    }
+
+    fn set_load_tracker(&mut self, tracker: ExpertLoadTracker) {
+        self.load = Some(tracker);
     }
 }
 

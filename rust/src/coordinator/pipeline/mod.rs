@@ -84,6 +84,7 @@ use crate::util::threadpool::{par_map, scope_chunks};
 
 use self::timeline::{bwd_flops_per_row, fwd_flops_per_row, CostModel, OverlapReport,
                      Phase, TimelineBuilder};
+use crate::trace::load::ExpertLoadTracker;
 use crate::trace::{SpanRecord, TracePhase, Tracer};
 
 use super::engine::{add_params, check_batch, fold_dx, lru_get_or_insert,
@@ -150,6 +151,8 @@ pub struct PipelinedEngine {
     /// attached observability handle; `None` keeps the hot path free
     /// of any tracing cost at all (see [`crate::trace`])
     tracer: Option<Tracer>,
+    /// attached expert-load tracker, same Option-gating contract
+    load: Option<ExpertLoadTracker>,
 }
 
 impl PipelinedEngine {
@@ -196,6 +199,7 @@ impl PipelinedEngine {
             mem: Vec::new(),
             report: None,
             tracer: None,
+            load: None,
         })
     }
 
@@ -699,6 +703,12 @@ impl ExecutionEngine for PipelinedEngine {
             let mut index_bytes = vec![0u64; r];
             let mut resident = vec![0u64; r];
             let mut staging_peak = vec![0u64; r];
+            // per-expert routed rows across chunks, only when a load
+            // tracker is attached (Option-gated like the tracer)
+            let mut load_rows = self
+                .load
+                .as_ref()
+                .map(|_| vec![0u64; self.topo.num_experts]);
 
             let mut prev_compute_start = 0.0f64;
             for m in 0..kc {
@@ -788,6 +798,13 @@ impl ExecutionEngine for PipelinedEngine {
                     tr.record_span(s);
                 }
 
+                if let Some(lr) = &mut load_rows {
+                    for rr in &rows.per_rank {
+                        for (i, &e) in rr.experts.iter().enumerate() {
+                            lr[e as usize] += rr.expert_len(i) as u64;
+                        }
+                    }
+                }
                 for rank in 0..r {
                     let nl = rows.per_rank[rank].local_slots() as u64;
                     peak_slots[rank] = peak_slots[rank].max(nl);
@@ -826,6 +843,9 @@ impl ExecutionEngine for PipelinedEngine {
                     tr.gauge(rank, "routed_rows", total_slots[rank] as f64,
                              "gather");
                 }
+            }
+            if let (Some(lt), Some(lr)) = (&self.load, &load_rows) {
+                lt.record_rows(lr, &self.topo.assignment().rank_of, gates);
             }
             (out, saved_all, traffic, mem, tb)
         };
@@ -896,6 +916,10 @@ impl ExecutionEngine for PipelinedEngine {
 
     fn set_tracer(&mut self, tracer: Tracer) {
         self.tracer = Some(tracer);
+    }
+
+    fn set_load_tracker(&mut self, tracker: ExpertLoadTracker) {
+        self.load = Some(tracker);
     }
 
     /// The self-tuning cost model: per channel (comm = exchange +

@@ -40,6 +40,7 @@ use crate::dispatch::parallel_build::parallel_build;
 use crate::dispatch::structures::DispatchStructures;
 use crate::memory::model::{CheckpointPolicy, MemoryBreakdown};
 use crate::memory::planner::{CheckpointPlan, CheckpointPlanner, LayerModel};
+use crate::trace::load::ExpertLoadTracker;
 use crate::trace::Tracer;
 use crate::util::prng::Rng;
 
@@ -121,6 +122,9 @@ pub struct MoeStack {
     /// attached observability handle — each layer engine gets a
     /// layer-tagged clone (see [`Tracer::for_layer`])
     tracer: Option<Tracer>,
+    /// attached expert-load tracker — each layer engine gets a
+    /// layer-tagged clone (see [`ExpertLoadTracker::for_layer`])
+    load: Option<ExpertLoadTracker>,
 }
 
 impl MoeStack {
@@ -144,6 +148,7 @@ impl MoeStack {
             routings: Vec::new(),
             cache_cap: PLAN_CACHE_CAP,
             tracer: None,
+            load: None,
         }
     }
 
@@ -203,6 +208,9 @@ impl MoeStack {
         let mut engine = engine;
         if let Some(tr) = &self.tracer {
             engine.set_tracer(tr.for_layer(self.layers.len()));
+        }
+        if let Some(lt) = &self.load {
+            engine.set_load_tracker(lt.for_layer(self.layers.len()));
         }
         self.layers.push(StackLayer {
             engine,
@@ -475,6 +483,16 @@ impl ExecutionEngine for MoeStack {
             layer.engine.set_tracer(tracer.for_layer(l));
         }
         self.tracer = Some(tracer);
+    }
+
+    /// Hand every layer engine a layer-tagged clone of the shared load
+    /// tracker, so each layer's routed-row EWMAs and skew alarms carry
+    /// their layer id; layers pushed later inherit it too.
+    fn set_load_tracker(&mut self, tracker: ExpertLoadTracker) {
+        for (l, layer) in self.layers.iter_mut().enumerate() {
+            layer.engine.set_load_tracker(tracker.for_layer(l));
+        }
+        self.load = Some(tracker);
     }
 
     /// Recalibrate every layer engine's cost model from its own

@@ -21,6 +21,7 @@ use crate::config::ep::EpConfig;
 use crate::config::train::TrainConfig;
 use crate::data::batcher::Batcher;
 use crate::memory::planner::CheckpointPlan;
+use crate::metrics::registry::Registry;
 use crate::metrics::{Ema, MetricsSink, Peak, Throughput};
 use crate::runtime::client::{Executable, Runtime};
 use crate::runtime::host::HostTensor;
@@ -33,6 +34,7 @@ use super::params::{ExpertGrads, ParamStore};
 use super::pipeline::timeline::{CostModel, OverlapReport};
 use super::stack::plan_from_config;
 use crate::trace::drift::DriftDetector;
+use crate::trace::load::ExpertLoadTracker;
 use crate::trace::{StepSummary, TracePhase, Tracer};
 
 /// EWMA weight of one step's measured-vs-simulated ratio when `[ep]
@@ -247,6 +249,12 @@ pub struct EpTrainReport {
     /// steps×phases whose measured/predicted ratio left the EWMA drift
     /// band (timeline engines only; always 0 without an overlap report)
     pub drift_flags: usize,
+    /// skew-alarm raising edges across all layers (`[ep] skew_alarm`
+    /// runs only; always 0 when load telemetry is off)
+    pub skew_alarms: usize,
+    /// worst per-layer rank-load imbalance (max/mean) any folded step
+    /// reached (0 when load telemetry is off)
+    pub max_imbalance: f64,
 }
 
 /// Step-session training loop over an [`ExecutionEngine`] on a synthetic
@@ -371,6 +379,25 @@ impl EpTrainer {
             self.engine.set_tracer(t.clone());
             Some(t)
         };
+        // expert-load telemetry: attach a tracker when either consumer
+        // is configured — `[ep] skew_alarm` (imbalance alarms) or
+        // `[ep] metrics_expose_path` (Prometheus-style exposition).
+        // Both default off, so a bare run hands the engines no tracker
+        // and the forward path consults nothing.
+        let registry = if self.cfg.metrics_expose_path.is_empty() {
+            None
+        } else {
+            Some(Registry::new())
+        };
+        let load = if self.cfg.skew_alarm > 0.0 || registry.is_some() {
+            let lt = ExpertLoadTracker::new(self.cfg.skew_alarm);
+            self.engine.set_load_tracker(lt.clone());
+            Some(lt)
+        } else {
+            None
+        };
+        let mut skew_alarms = 0usize;
+        let mut max_imbalance = 0.0f64;
         let mut summaries: Vec<StepSummary> = Vec::new();
         // predicted-vs-measured drift: fold each step's calibration rows
         // into per-phase EWMA bands (timeline engines only), flagging
@@ -510,6 +537,62 @@ impl EpTrainer {
                     ]);
                 }
             }
+            // step boundary for the load tracker: fold this step's
+            // routed rows, judge skew, and surface raised alarms in the
+            // JSONL stream and on the console; on the log cadence the
+            // registry (if configured) gets the refreshed load picture
+            // and the exposition file is rewritten atomically
+            if let Some(lt) = &load {
+                for sig in lt.end_step() {
+                    if sig.should_replan {
+                        skew_alarms += 1;
+                        self.sink.emit("skew_alarm", &[
+                            ("step", s as f64),
+                            ("layer", sig.layer as f64),
+                            ("imbalance", sig.imbalance),
+                            ("threshold", lt.threshold()),
+                            ("ranks", sig.rank_loads.len() as f64),
+                        ]);
+                        println!(
+                            "warning: skew alarm: layer {} imbalance {:.3} \
+                             over threshold {} at step {s}",
+                            sig.layer, sig.imbalance, lt.threshold());
+                    }
+                }
+                let m = lt.max_imbalance();
+                if m > max_imbalance {
+                    max_imbalance = m;
+                }
+                // monotone per-rank `load_rows` counter tracks in the
+                // Chrome trace (traced + load-tracked runs only)
+                if let Some(tr) = &tracer {
+                    let cum = lt.cumulative_rank_rows();
+                    for (r, rows) in cum.iter().enumerate() {
+                        tr.gauge(r, "load_rows", *rows as f64, "gather");
+                    }
+                }
+                if let Some(reg) = &registry {
+                    if s % log_every == 0 || s + 1 == self.cfg.steps {
+                        reg.gauge("moeblaze_step",
+                                  "last completed optimizer step", &[])
+                            .set(s as f64);
+                        reg.gauge("moeblaze_loss",
+                                  "training loss of the last step", &[])
+                            .set(loss);
+                        reg.gauge("moeblaze_lr",
+                                  "learning rate of the last step", &[])
+                            .set(lr);
+                        lt.publish_registry(reg);
+                        // like the calibration artifact, an unwritable
+                        // exposition path must not fail the run
+                        if let Err(e) = reg.save(&self.cfg.metrics_expose_path) {
+                            eprintln!(
+                                "warning: could not write metrics exposition {}: {e}",
+                                self.cfg.metrics_expose_path);
+                        }
+                    }
+                }
+            }
             if let Some(tr) = &tracer {
                 self.sink.emit("step_profile", &tr.step_profile(s as u64).fields());
                 // the summary the Chrome export embeds: engine-measured
@@ -627,6 +710,17 @@ impl EpTrainer {
                 ("total_flags", drift.total_flags() as f64),
             ]);
         }
+        // the load roll-up: one line summarizing what the tracker saw,
+        // whether alarms fired or not (an explicit zero is evidence the
+        // run was balanced, not that telemetry was off)
+        if let Some(lt) = &load {
+            self.sink.emit("load_summary", &[
+                ("skew_alarms", skew_alarms as f64),
+                ("max_imbalance", max_imbalance),
+                ("layers", lt.snapshot().len() as f64),
+                ("records", lt.record_count() as f64),
+            ]);
+        }
         // surface metrics-stream write failures instead of losing the
         // run's observability silently
         if let Err(e) = self.sink.check() {
@@ -649,6 +743,8 @@ impl EpTrainer {
             tokens_per_sec: throughput.tokens_per_sec(),
             calibrated,
             drift_flags: drift.total_flags(),
+            skew_alarms,
+            max_imbalance,
             losses,
         })
     }
@@ -872,6 +968,41 @@ mod tests {
         let r2 = EpTrainer::new(engine, cfg2).unwrap().run().unwrap();
         assert!(r2.calibrated.is_none());
         assert!(r2.tokens_per_sec > 0.0);
+    }
+
+    #[test]
+    fn load_telemetry_is_option_gated_and_loss_neutral() {
+        let bare = run_losses(tiny_cfg(2));
+        // bare runs attach nothing and report zeros
+        let engine = engine_from_config(&tiny_cfg(2)).unwrap();
+        let r0 = EpTrainer::new(engine, tiny_cfg(2)).unwrap().run().unwrap();
+        assert_eq!(r0.skew_alarms, 0);
+        assert_eq!(r0.max_imbalance, 0.0);
+        // metered run: same losses bit-for-bit, exposition written
+        let dir = std::env::temp_dir().join("moeblaze_trainer_load_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let expose = dir.join("metrics.prom");
+        let cfg = EpConfig {
+            skew_alarm: 4.0,
+            metrics_expose_path: expose.to_str().unwrap().into(),
+            ..tiny_cfg(2)
+        };
+        let engine = engine_from_config(&cfg).unwrap();
+        let mut t = EpTrainer::new(engine, cfg).unwrap();
+        let r = t.run().unwrap();
+        assert_eq!(r.losses, bare, "load telemetry perturbed the loss curve");
+        assert!(r.max_imbalance > 0.0, "tracker never folded a step");
+        // R=2 caps max/mean at 2.0, far under the 4.0 threshold
+        assert_eq!(r.skew_alarms, 0, "balanced run raised a skew alarm");
+        let text = std::fs::read_to_string(&expose).unwrap();
+        for family in ["moeblaze_expert_load_ewma",
+                       "moeblaze_load_imbalance",
+                       "moeblaze_rank_load_rows_total",
+                       "moeblaze_skew_alarms_total",
+                       "moeblaze_loss"] {
+            assert!(text.contains(family), "exposition missing {family}");
+        }
+        std::fs::remove_file(&expose).ok();
     }
 
     #[test]

@@ -50,21 +50,30 @@
 //!
 //! # Observability
 //!
-//! The [`trace`] subsystem records per-step, per-rank, per-chunk,
-//! per-layer phase spans (gather/staging, expert GEMM, combine
-//! scatter, optimizer update, serving batcher tick) with byte/row/
-//! token counters and a per-rank resident-bytes gauge. Engines hold an
-//! `Option<Tracer>`: with none attached the hot path pays **nothing**,
-//! and a disabled tracer costs one relaxed atomic increment per record
-//! call — tracing never perturbs the bit-identity contracts. Pass
-//! `--trace-out <path>` to `ep-bench`/`ep-train`/`ep-serve` (or set
-//! `[ep] trace_out`) to export Chrome trace-event JSON — open it at
-//! <https://ui.perfetto.dev> — and validate/summarize it with
-//! `tools/trace_report.py`. [`trace::drift`] compares every measured
-//! phase against the simulated timeline [`PhaseSpan`]s and flags
-//! phases whose measured/predicted ratio leaves an EWMA band, making
-//! the PR-5 calibration fold an observable signal. See [`trace`] for
-//! the span taxonomy and the overhead contract.
+//! Five independent channels, each behind its own config knob, all
+//! Option-gated so a bare run consults none of them:
+//!
+//! | knob (`[ep]` / CLI)                      | channel |
+//! |------------------------------------------|---------|
+//! | `metrics_path` / `--metrics`             | [`metrics::MetricsSink`] — append-only JSONL event log (`train`, `overlap`, `drift`, `skew_alarm`, `load_summary`, serving tick events) |
+//! | `metrics_expose_path` / `--metrics-expose` | [`metrics::registry::Registry`] — typed counters/gauges/histograms rendered as deterministic Prometheus text exposition, atomically rewritten (tmp + rename) at every log interval so a scraper never reads a torn file |
+//! | `trace_out` / `--trace-out`              | [`trace::Tracer`] — Chrome trace-event JSON (open at <https://ui.perfetto.dev>): per-step/rank/chunk/layer phase spans with byte/row/token counters, per-rank resident-bytes and cumulative `load_rows` gauges; validated by `tools/trace_report.py --validate` |
+//! | `skew_alarm` / `--skew-alarm`            | [`trace::load::ExpertLoadTracker`] — per-(layer, expert) routed-row EWMAs fed from the engines' own `RowIndexPlan` (ground truth, not router logits), folded through the live `Placement` into per-rank loads; raises an edge-triggered, hysteresis-damped skew alarm when max/mean rank load exceeds the threshold |
+//! | `calibrate` + `calibration_path`         | measured link/compute rates EWMA-folded back into the timeline cost model; [`trace::drift`] then flags phases whose measured/predicted ratio leaves an EWMA band |
+//!
+//! The tracer records span/counter data; the load tracker consumes
+//! routed-row counts; the registry and sink are where both publish.
+//! A load tracker is attached when `skew_alarm > 0` **or** an
+//! exposition path is set (the registry wants the load gauges even
+//! with alarms off); with neither, engines skip the feed entirely.
+//! Attaching any channel is bit-identity neutral — loss curves and
+//! served outputs are pinned byte-equal with and without telemetry
+//! (rust/tests/ep_trace.rs, rust/tests/ep_load.rs), and the EWMA /
+//! imbalance / alarm arithmetic is mirrored bit-for-bit in
+//! `tools/ep_sim.py`. `tools/load_report.py` renders the exposition
+//! file as per-layer expert heat tables and the JSONL as an alarm
+//! timeline. See [`trace`] for the span taxonomy and the overhead
+//! contract, and [`metrics`] for the event-log format.
 //!
 //! [`PhaseSpan`]: coordinator::pipeline::timeline::PhaseSpan
 //!

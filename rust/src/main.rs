@@ -37,6 +37,7 @@
 //!             --lr-schedule constant|cosine|linear-warmup --clip-norm C
 //!             --placement contiguous|strided|load-aware
 //!             --trace-out trace.json --json-out train.json
+//!             --metrics-expose metrics.prom --skew-alarm 1.5
 //!             --config file.toml ...]
 //!                                step-session training on the
 //!                                expert-parallel engine (chunk-pipelined
@@ -49,6 +50,7 @@
 //!            [--min-request-tokens A --max-request-tokens B]
 //!            [--serve-seed S] [--mem-budget-bytes B]
 //!            [--json-out serve.json] [--trace-out trace.json]
+//!            [--metrics-expose metrics.prom] [--skew-alarm 1.5]
 //!            [--config file.toml] ...
 //!                                forward-only serving on the expert-parallel
 //!                                engine (checkpointing forced to
@@ -390,6 +392,11 @@ fn ep_config_from_args(args: &Args, parse_ranks: bool) -> Result<EpConfig> {
     if let Some(p) = args.get("trace-out") {
         cfg.trace_out = p.to_string();
     }
+    if let Some(p) = args.get("metrics-expose") {
+        cfg.metrics_expose_path = p.to_string();
+    }
+    cfg.skew_alarm = args.f64_or("skew-alarm", cfg.skew_alarm)
+        .map_err(anyhow::Error::msg)?;
     cfg.validate().map_err(anyhow::Error::msg)?;
     Ok(cfg)
 }
@@ -865,6 +872,18 @@ fn cmd_ep_train(args: &Args) -> Result<()> {
                   cost model is not tracking measurement (see the `drift` \
                   events in {})", report.drift_flags, cfg.metrics_path);
     }
+    if report.skew_alarms > 0 {
+        println!("skew: {} alarm(s) raised — worst rank-load imbalance \
+                  {:.3} against threshold {} (see the `skew_alarm` events \
+                  in {})", report.skew_alarms, report.max_imbalance,
+                 cfg.skew_alarm, cfg.metrics_path);
+    } else if cfg.skew_alarm > 0.0 {
+        println!("skew: no alarms; worst rank-load imbalance {:.3} stayed \
+                  under threshold {}", report.max_imbalance, cfg.skew_alarm);
+    }
+    if !cfg.metrics_expose_path.is_empty() {
+        println!("metrics exposition written to {}", cfg.metrics_expose_path);
+    }
     if let Some(path) = args.get("json-out") {
         let j = Json::obj(vec![
             ("snapshot_version", Json::num(SNAPSHOT_VERSION)),
@@ -885,6 +904,8 @@ fn cmd_ep_train(args: &Args) -> Result<()> {
             ("clipped_steps", Json::num(report.clipped_steps as f64)),
             ("peak_data_bytes", Json::num(report.peak_data_bytes as f64)),
             ("drift_flags", Json::num(report.drift_flags as f64)),
+            ("skew_alarms", Json::num(report.skew_alarms as f64)),
+            ("max_imbalance", Json::num(report.max_imbalance)),
         ]);
         std::fs::write(path, format!("{j}\n"))
             .map_err(|err| anyhow::anyhow!("{path}: {err}"))?;
@@ -895,10 +916,12 @@ fn cmd_ep_train(args: &Args) -> Result<()> {
         // metrics stay with the primary run — the verify run would
         // otherwise append an overlapping step range to the same JSONL
         // ... and the verify run must not overwrite the primary run's
-        // calibration artifact or trace either
+        // calibration artifact, trace, or metrics exposition either
         let single_cfg = EpConfig { ranks: 1, metrics_path: String::new(),
                                     calibration_path: String::new(),
-                                    trace_out: String::new(), ..cfg };
+                                    trace_out: String::new(),
+                                    metrics_expose_path: String::new(),
+                                    ..cfg };
         let (engine, _) =
             engine_from_config_with_info(&single_cfg).map_err(anyhow::Error::msg)?;
         let mut single = EpTrainer::new(engine, single_cfg)?;
@@ -990,6 +1013,18 @@ fn cmd_ep_serve(args: &Args) -> Result<()> {
         println!("measured per-rank peak {} (no budget set)",
                  human_bytes(r.peak_rank_data_bytes));
     }
+    if r.skew_alarms > 0 {
+        println!("skew: {} alarm(s) raised — worst rank-load imbalance \
+                  {:.3} against threshold {} (see the `skew_alarm` events \
+                  in {})", r.skew_alarms, r.max_imbalance, cfg.skew_alarm,
+                 cfg.metrics_path);
+    } else if cfg.skew_alarm > 0.0 {
+        println!("skew: no alarms; worst rank-load imbalance {:.3} stayed \
+                  under threshold {}", r.max_imbalance, cfg.skew_alarm);
+    }
+    if !cfg.metrics_expose_path.is_empty() {
+        println!("metrics exposition written to {}", cfg.metrics_expose_path);
+    }
 
     if let Some(path) = args.get("json-out") {
         let j = Json::obj(vec![
@@ -1021,6 +1056,8 @@ fn cmd_ep_serve(args: &Args) -> Result<()> {
             ("latency_p99_ms", Json::num(r.latency_p99_s * 1e3)),
             ("latency_mean_ms", Json::num(r.latency_mean_s * 1e3)),
             ("mean_wait_ticks", Json::num(r.mean_wait_ticks)),
+            ("skew_alarms", Json::num(r.skew_alarms as f64)),
+            ("max_imbalance", Json::num(r.max_imbalance)),
         ]);
         std::fs::write(path, format!("{j}\n"))
             .map_err(|err| anyhow::anyhow!("{path}: {err}"))?;

@@ -1,4 +1,15 @@
-//! Metrics: step events, JSONL emission, throughput/EMA tracking.
+//! Metrics: step events, JSONL emission, throughput/EMA tracking, and
+//! the typed [`registry`] with Prometheus-style file exposition.
+//!
+//! Two publication paths share this module: [`MetricsSink`] appends
+//! per-event JSONL lines (every line is guaranteed parseable — keys and
+//! string values escape through the JSON writer, non-finite numbers
+//! degrade to `null`), and [`registry::Registry`] holds labelled
+//! counters/gauges/histograms rendered deterministically to
+//! `[ep] metrics_expose_path` for file-based scraping. The expert-load
+//! telemetry feeding both lives in [`crate::trace::load`].
+
+pub mod registry;
 
 use std::fmt::Write as _;
 use std::fs::{File, OpenOptions};
@@ -532,6 +543,39 @@ mod tests {
         assert_eq!(j.get("engine").unwrap().as_str(), Some("pipelined-r4-k2"));
         assert_eq!(j.get("chunks").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get("kind").unwrap().as_str(), Some("overlap"));
+    }
+
+    #[test]
+    fn emit_tagged_escapes_hostile_tag_and_field_names() {
+        // tag/field NAMES and tag values containing quotes, backslashes,
+        // and newlines must still produce one parseable JSON line —
+        // engine tags are built from user-controlled config strings
+        let mut m = MetricsSink::new(None).unwrap();
+        let hostile = "eng\"ine\\na\nme";
+        let line = m.emit_tagged(
+            "skew\"alarm",
+            &[(hostile, "pipe\"lined\\r4\nk2")],
+            &[("im\"bal\\ance\n", 1.75)],
+        );
+        assert!(!line.contains('\n'), "JSONL line must stay one line: {line}");
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("skew\"alarm"));
+        assert_eq!(j.get(hostile).unwrap().as_str(),
+                   Some("pipe\"lined\\r4\nk2"));
+        assert_eq!(j.get("im\"bal\\ance\n").unwrap().as_f64(), Some(1.75));
+    }
+
+    #[test]
+    fn emit_with_non_finite_fields_still_parses() {
+        // a NaN ratio (e.g. 0/0 throughput) must not poison the line
+        let mut m = MetricsSink::new(None).unwrap();
+        let line = m.emit("train", &[("ratio", f64::NAN),
+                                     ("rate", f64::INFINITY),
+                                     ("loss", 0.25)]);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("ratio"), Some(&Json::Null));
+        assert_eq!(j.get("rate"), Some(&Json::Null));
+        assert_eq!(j.get("loss").unwrap().as_f64(), Some(0.25));
     }
 
     #[test]

@@ -1,0 +1,451 @@
+//! Typed metrics registry with deterministic Prometheus-style text
+//! exposition (ISSUE 9).
+//!
+//! [`Registry`] is the publish side of the observability stack: the
+//! trainer, the serve loop, and the report tooling create labelled
+//! [`Counter`]s, [`Gauge`]s, and [`HistogramHandle`]s (wrapping the
+//! existing streaming [`Histogram`]) and bump them freely; a scrape
+//! target exists without any HTTP dependency because
+//! [`Registry::save`] renders the whole registry as Prometheus text
+//! exposition and writes it atomically (tmp + rename, the
+//! `coordinator/calibrate.rs` pattern) to `[ep] metrics_expose_path` /
+//! `--metrics-expose` on the console-log cadence — point any file-based
+//! scraper (node_exporter textfile collector, a sidecar, or
+//! `tools/load_report.py`) at the file.
+//!
+//! Rendering is **deterministic**: families sort by name, cells by
+//! their label pairs (themselves normalized to key order at creation),
+//! so two registries fed the same values in any order render
+//! byte-identical text — pinned by test, and the property
+//! `tools/load_report.py --self-test` relies on when diffing
+//! expositions.
+//!
+//! Handles are cheap clones sharing one cell: a counter is a relaxed
+//! `AtomicU64`, a gauge an `AtomicU64` carrying f64 bits — no lock on
+//! the bump path. Only get-or-create and render take the registry
+//! lock.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::Histogram;
+
+/// Normalized label set: pairs sorted by key (done once at
+/// get-or-create, so cell identity never depends on call-site order).
+type Labels = Vec<(String, String)>;
+
+/// Monotone counter cell. Clones share the cell; `add` is one relaxed
+/// atomic.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Counters are monotone — exposition needs absolute values, so
+    /// publishers tracking their own cumulative totals use this instead
+    /// of differencing: sets the cell to `max(current, v)`.
+    pub fn set_total(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value-wins gauge cell (f64 bits in an `AtomicU64`).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Shared handle on a registered streaming [`Histogram`] (rendered as a
+/// Prometheus summary: p50/p95/p99 + `_sum`/`_count`).
+#[derive(Clone)]
+pub struct HistogramHandle(Arc<Mutex<Histogram>>);
+
+impl HistogramHandle {
+    pub fn record(&self, v: f64) {
+        self.0.lock().unwrap().record(v);
+    }
+
+    pub fn snapshot(&self) -> Histogram {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+struct Family<T> {
+    help: String,
+    cells: BTreeMap<Labels, T>,
+}
+
+impl<T> Family<T> {
+    fn new(help: &str) -> Family<T> {
+        Family { help: help.to_string(), cells: BTreeMap::new() }
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Family<Counter>>,
+    gauges: BTreeMap<String, Family<Gauge>>,
+    histograms: BTreeMap<String, Family<HistogramHandle>>,
+}
+
+/// The typed registry. Cloning shares all cells (`Tracer`-style), so
+/// the trainer, the serve loop, and the exposition writer observe one
+/// store.
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<Mutex<Inner>>,
+}
+
+fn normalize(labels: &[(&str, &str)]) -> Labels {
+    let mut l: Labels = labels
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    l.sort();
+    l
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create the counter cell `name{labels}`. The first
+    /// registration's `help` sticks for the family.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)])
+                   -> Counter {
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .counters
+            .entry(name.to_string())
+            .or_insert_with(|| Family::new(help))
+            .cells
+            .entry(normalize(labels))
+            .or_insert_with(|| Counter(Arc::new(AtomicU64::new(0))))
+            .clone()
+    }
+
+    /// Get-or-create the gauge cell `name{labels}`.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)])
+                 -> Gauge {
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .gauges
+            .entry(name.to_string())
+            .or_insert_with(|| Family::new(help))
+            .cells
+            .entry(normalize(labels))
+            .or_insert_with(|| Gauge(Arc::new(AtomicU64::new(0f64.to_bits()))))
+            .clone()
+    }
+
+    /// Get-or-create the histogram cell `name{labels}`.
+    pub fn histogram(&self, name: &str, help: &str, labels: &[(&str, &str)])
+                     -> HistogramHandle {
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Family::new(help))
+            .cells
+            .entry(normalize(labels))
+            .or_insert_with(|| HistogramHandle(Arc::new(Mutex::new(Histogram::new()))))
+            .clone()
+    }
+
+    /// Render the registry as Prometheus text exposition, byte-
+    /// deterministic for a given set of values: families sort by name
+    /// (counters, then gauges, then summaries — disjoint name spaces by
+    /// convention), cells by normalized labels.
+    pub fn render(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (name, fam) in &inner.counters {
+            header(&mut out, name, &fam.help, "counter");
+            for (labels, cell) in &fam.cells {
+                out.push_str(name);
+                render_labels(&mut out, labels, None);
+                out.push(' ');
+                out.push_str(&cell.get().to_string());
+                out.push('\n');
+            }
+        }
+        for (name, fam) in &inner.gauges {
+            header(&mut out, name, &fam.help, "gauge");
+            for (labels, cell) in &fam.cells {
+                out.push_str(name);
+                render_labels(&mut out, labels, None);
+                out.push(' ');
+                out.push_str(&render_f64(cell.get()));
+                out.push('\n');
+            }
+        }
+        for (name, fam) in &inner.histograms {
+            header(&mut out, name, &fam.help, "summary");
+            for (labels, cell) in &fam.cells {
+                let h = cell.snapshot();
+                for (q, qv) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+                    out.push_str(name);
+                    render_labels(&mut out, labels, Some(qv));
+                    out.push(' ');
+                    // Prometheus renders an unobserved quantile as NaN
+                    out.push_str(&render_f64(
+                        h.quantile(q).unwrap_or(f64::NAN),
+                    ));
+                    out.push('\n');
+                }
+                out.push_str(name);
+                out.push_str("_sum");
+                render_labels(&mut out, labels, None);
+                out.push(' ');
+                out.push_str(&render_f64(h.sum()));
+                out.push('\n');
+                out.push_str(name);
+                out.push_str("_count");
+                render_labels(&mut out, labels, None);
+                out.push(' ');
+                out.push_str(&h.count().to_string());
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Atomically write [`render`](Registry::render) to `path` (tmp +
+    /// rename, like `Calibration::save`): a scraper never observes a
+    /// half-written exposition.
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        let text = self.render();
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir).map_err(|e| format!("{path}: {e}"))?;
+            }
+        }
+        let tmp = format!("{path}.tmp");
+        fs::write(&tmp, text).map_err(|e| format!("{tmp}: {e}"))?;
+        fs::rename(&tmp, path).map_err(|e| format!("{path}: {e}"))?;
+        Ok(())
+    }
+}
+
+fn header(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    // exposition help text escapes backslash and newline
+    for c in help.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out.push('\n');
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+fn render_labels(out: &mut String, labels: &Labels, quantile: Option<&str>) {
+    if labels.is_empty() && quantile.is_none() {
+        return;
+    }
+    out.push('{');
+    let mut first = true;
+    for (k, v) in labels {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(k);
+        out.push_str("=\"");
+        // label values escape backslash, quote, newline
+        for c in v.chars() {
+            match c {
+                '\\' => out.push_str("\\\\"),
+                '"' => out.push_str("\\\""),
+                '\n' => out.push_str("\\n"),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+    if let Some(q) = quantile {
+        if !first {
+            out.push(',');
+        }
+        out.push_str("quantile=\"");
+        out.push_str(q);
+        out.push('"');
+    }
+    out.push('}');
+}
+
+/// Prometheus value formatting: integral floats print without the
+/// fraction (stable across feeds), non-finite as NaN/+Inf/-Inf.
+fn render_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        (if v > 0.0 { "+Inf" } else { "-Inf" }).to_string()
+    } else if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_share_cells_across_clones_and_lookups() {
+        let r = Registry::new();
+        let a = r.counter("steps_total", "steps", &[("engine", "sharded")]);
+        let b = r.clone().counter("steps_total", "ignored later help",
+                                  &[("engine", "sharded")]);
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        let g = r.gauge("imbalance", "load", &[]);
+        r.gauge("imbalance", "load", &[]).set(1.75);
+        assert_eq!(g.get(), 1.75);
+        let h = r.histogram("latency", "s", &[]);
+        r.histogram("latency", "s", &[]).record(2.0);
+        assert_eq!(h.snapshot().count(), 1);
+    }
+
+    #[test]
+    fn label_order_does_not_split_cells() {
+        let r = Registry::new();
+        let a = r.counter("rows_total", "rows", &[("layer", "0"), ("expert", "1")]);
+        let b = r.counter("rows_total", "rows", &[("expert", "1"), ("layer", "0")]);
+        a.inc();
+        assert_eq!(b.get(), 1);
+    }
+
+    #[test]
+    fn render_is_deterministic_under_registration_order() {
+        let build = |flip: bool| {
+            let r = Registry::new();
+            let names: &[(&str, &str)] =
+                &[("b_total", "bee"), ("a_total", "ay")];
+            let order: Vec<_> = if flip {
+                names.iter().rev().collect()
+            } else {
+                names.iter().collect()
+            };
+            for (n, h) in order {
+                for e in if flip { vec!["1", "0"] } else { vec!["0", "1"] } {
+                    r.counter(n, h, &[("expert", e)]).add(7);
+                }
+            }
+            r.gauge("z_gauge", "zed", &[("rank", "0")]).set(0.5);
+            r.render()
+        };
+        let a = build(false);
+        let b = build(true);
+        assert_eq!(a, b);
+        // shape: HELP/TYPE headers precede cells, families name-sorted
+        let a_pos = a.find("# TYPE a_total counter").unwrap();
+        let b_pos = a.find("# TYPE b_total counter").unwrap();
+        assert!(a_pos < b_pos);
+        assert!(a.contains("a_total{expert=\"0\"} 7\n"));
+        assert!(a.contains("z_gauge{rank=\"0\"} 0.5\n"));
+    }
+
+    #[test]
+    fn exposition_escapes_label_values_and_help() {
+        let r = Registry::new();
+        r.counter("c_total", "line1\nline2 \\ tail", &[("tag", "a\"b\\c\nd")])
+            .inc();
+        let text = r.render();
+        assert!(text.contains("# HELP c_total line1\\nline2 \\\\ tail\n"));
+        assert!(text.contains("c_total{tag=\"a\\\"b\\\\c\\nd\"} 1\n"));
+        // no raw newline survives inside any single exposition line
+        for line in text.lines() {
+            assert!(!line.is_empty());
+        }
+    }
+
+    #[test]
+    fn histogram_renders_as_summary_with_sum_and_count() {
+        let r = Registry::new();
+        let h = r.histogram("tick_latency_seconds", "per-tick latency",
+                            &[("engine", "serve")]);
+        for v in [1.0, 2.0, 4.0] {
+            h.record(v);
+        }
+        let text = r.render();
+        assert!(text.contains("# TYPE tick_latency_seconds summary"));
+        assert!(text.contains(
+            "tick_latency_seconds{engine=\"serve\",quantile=\"0.5\"} 2\n"
+        ));
+        assert!(text
+            .contains("tick_latency_seconds_sum{engine=\"serve\"} 7\n"));
+        assert!(text
+            .contains("tick_latency_seconds_count{engine=\"serve\"} 3\n"));
+        // an unobserved summary renders NaN quantiles, zero sum/count
+        let r = Registry::new();
+        r.histogram("empty_seconds", "never fed", &[]);
+        let text = r.render();
+        assert!(text.contains("empty_seconds{quantile=\"0.5\"} NaN\n"));
+        assert!(text.contains("empty_seconds_count 0\n"));
+    }
+
+    #[test]
+    fn set_total_is_monotone() {
+        let r = Registry::new();
+        let c = r.counter("rows_total", "rows", &[]);
+        c.set_total(10);
+        c.set_total(7); // late/stale publisher cannot move a counter back
+        assert_eq!(c.get(), 10);
+        c.set_total(12);
+        assert_eq!(c.get(), 12);
+    }
+
+    #[test]
+    fn save_is_atomic_tmp_plus_rename() {
+        let dir = std::env::temp_dir().join("moeblaze_test_registry");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("metrics.prom");
+        let p = path.to_str().unwrap().to_string();
+        let r = Registry::new();
+        r.counter("steps_total", "steps", &[]).add(5);
+        r.save(&p).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("steps_total 5\n"));
+        assert!(!std::path::Path::new(&format!("{p}.tmp")).exists());
+        // a second save replaces the file whole
+        r.counter("steps_total", "steps", &[]).add(1);
+        r.save(&p).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("steps_total 6\n"));
+        assert!(!text.contains("steps_total 5"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -13,7 +13,9 @@ use std::time::Instant;
 use crate::config::ep::EpConfig;
 use crate::config::serving::ServingConfig;
 use crate::coordinator::engine::topology_from_config;
+use crate::metrics::registry::Registry;
 use crate::metrics::{Histogram, MetricsSink, Peak};
+use crate::trace::load::ExpertLoadTracker;
 use crate::trace::{StepSummary, TracePhase, Tracer};
 
 use super::admission::{AdmissionController, AdmissionDecision};
@@ -50,6 +52,11 @@ pub struct ServeReport {
     /// deterministic tick-granularity waiting time of completed requests
     pub mean_wait_ticks: f64,
     pub elapsed_s: f64,
+    /// skew-alarm raising edges (`[ep] skew_alarm` runs only)
+    pub skew_alarms: u64,
+    /// worst per-layer rank-load imbalance any folded tick reached
+    /// (0 when load telemetry is off)
+    pub max_imbalance: f64,
 }
 
 impl ServeReport {
@@ -75,6 +82,12 @@ pub struct ServeLoop {
     /// trace_ticks` additionally records one host-lane `batcher_tick`
     /// span per non-empty tick
     tracer: Option<Tracer>,
+    /// attached when `[ep] skew_alarm` or `[ep] metrics_expose_path`
+    /// is set — the session feeds routed-row counts per tick and the
+    /// loop folds them at tick boundaries
+    load: Option<ExpertLoadTracker>,
+    /// created when `[ep] metrics_expose_path` names a file
+    registry: Option<Registry>,
 }
 
 impl ServeLoop {
@@ -95,8 +108,77 @@ impl ServeLoop {
             session.set_tracer(t.clone());
             Some(t)
         };
+        // expert-load telemetry, gated exactly like the trainer: both
+        // knobs default off, so bare serving feeds no tracker
+        let registry = if ep.metrics_expose_path.is_empty() {
+            None
+        } else {
+            Some(Registry::new())
+        };
+        let load = if ep.skew_alarm > 0.0 || registry.is_some() {
+            let lt = ExpertLoadTracker::new(ep.skew_alarm);
+            session.set_load_tracker(lt.clone());
+            Some(lt)
+        } else {
+            None
+        };
         Ok(ServeLoop { ep: ep.clone(), scfg: scfg.clone(), admission, session,
-                       traffic, sink, tracer })
+                       traffic, sink, tracer, load, registry })
+    }
+
+    /// Tick boundary for the load tracker: fold the tick's routed rows,
+    /// surface raised skew alarms, extend the Chrome `load_rows` counter
+    /// tracks, and (on the publish cadence) refresh the exposition file.
+    fn fold_load_tick(&self, tick: u64, publish: bool,
+                      skew_alarms: &mut u64, max_imbalance: &mut f64) {
+        let lt = match &self.load {
+            Some(lt) => lt,
+            None => return,
+        };
+        for sig in lt.end_step() {
+            if sig.should_replan {
+                *skew_alarms += 1;
+                self.sink.emit("skew_alarm", &[
+                    ("tick", tick as f64),
+                    ("layer", sig.layer as f64),
+                    ("imbalance", sig.imbalance),
+                    ("threshold", lt.threshold()),
+                    ("ranks", sig.rank_loads.len() as f64),
+                ]);
+                println!("warning: skew alarm: layer {} imbalance {:.3} \
+                          over threshold {} at tick {tick}",
+                         sig.layer, sig.imbalance, lt.threshold());
+            }
+        }
+        let m = lt.max_imbalance();
+        if m > *max_imbalance {
+            *max_imbalance = m;
+        }
+        if let Some(tr) = &self.tracer {
+            let cum = lt.cumulative_rank_rows();
+            for (r, rows) in cum.iter().enumerate() {
+                tr.gauge(r, "load_rows", *rows as f64, "gather");
+            }
+        }
+        if publish {
+            self.publish_registry(tick);
+        }
+    }
+
+    /// Refresh the Prometheus-style exposition file (no-op unless
+    /// `[ep] metrics_expose_path` is set).
+    fn publish_registry(&self, tick: u64) {
+        let (reg, lt) = match (&self.registry, &self.load) {
+            (Some(reg), Some(lt)) => (reg, lt),
+            _ => return,
+        };
+        reg.gauge("moeblaze_serve_tick", "last completed serving tick", &[])
+            .set(tick as f64);
+        lt.publish_registry(reg);
+        if let Err(e) = reg.save(&self.ep.metrics_expose_path) {
+            eprintln!("warning: could not write metrics exposition {}: {e}",
+                      self.ep.metrics_expose_path);
+        }
     }
 
     pub fn engine_name(&self) -> String {
@@ -113,6 +195,7 @@ impl ServeLoop {
             (0u64, 0u64, 0u64);
         let (mut batches, mut tokens_served, mut wait_ticks_sum) = (0u64, 0u64, 0u64);
         let mut max_queue_depth_seen = 0usize;
+        let (mut skew_alarms, mut max_imbalance) = (0u64, 0.0f64);
         let print_every = (self.scfg.ticks / 8).max(1) as u64;
         // one trace "step" per tick: the engine's phase spans land under
         // the tick number, and the export embeds a per-tick summary
@@ -167,6 +250,10 @@ impl ServeLoop {
                                         ("arrived", arrived as f64),
                                         ("batch_tokens", 0.0),
                                         ("queue_depth", queue.len() as f64)]);
+                // an idle tick still closes the load-tracker step (no
+                // layer was fed, so nothing folds)
+                self.fold_load_tick(tick, false, &mut skew_alarms,
+                                    &mut max_imbalance);
                 continue;
             }
 
@@ -233,6 +320,8 @@ impl ServeLoop {
                       ("queue_depth", queue.len() as f64),
                       ("completed", completed as f64)]));
             }
+            self.fold_load_tick(tick, tick % print_every == 0,
+                                &mut skew_alarms, &mut max_imbalance);
         }
 
         let queued_at_end = queue.len() as u64;
@@ -264,6 +353,8 @@ impl ServeLoop {
                 0.0
             },
             elapsed_s: started.elapsed().as_secs_f64(),
+            skew_alarms,
+            max_imbalance,
         };
         self.sink.emit("ep_serve_summary",
                        &[("generated", report.generated as f64),
@@ -285,6 +376,18 @@ impl ServeLoop {
                 Err(e) => eprintln!("warning: could not write trace {}: {e}",
                                     self.ep.trace_out),
             }
+        }
+        // the load roll-up plus a final exposition refresh, so the file
+        // on disk reflects the whole run even when the last tick missed
+        // the publish cadence
+        if let Some(lt) = &self.load {
+            self.sink.emit("load_summary", &[
+                ("skew_alarms", skew_alarms as f64),
+                ("max_imbalance", max_imbalance),
+                ("layers", lt.snapshot().len() as f64),
+                ("records", lt.record_count() as f64),
+            ]);
+            self.publish_registry(self.scfg.ticks.saturating_sub(1) as u64);
         }
         if let Err(e) = self.sink.check() {
             eprintln!("warning: metrics stream {}: {e}", self.ep.metrics_path);
@@ -397,6 +500,36 @@ mod tests {
         let r2 = ServeLoop::new(&ep2, &s2).unwrap().run().unwrap();
         assert_eq!(r.completed, r2.completed);
         assert_eq!(r.tokens_served, r2.tokens_served);
+    }
+
+    #[test]
+    fn load_telemetry_leaves_serving_counters_untouched() {
+        let (ep, s) = base();
+        let bare = ServeLoop::new(&ep, &s).unwrap().run().unwrap();
+        assert_eq!(bare.skew_alarms, 0);
+        assert_eq!(bare.max_imbalance, 0.0);
+        let path = std::env::temp_dir().join("moeblaze_serve_load_test.prom");
+        let metered_ep = EpConfig {
+            skew_alarm: 8.0,
+            metrics_expose_path: path.to_string_lossy().into_owned(),
+            ..ep
+        };
+        let r = ServeLoop::new(&metered_ep, &s).unwrap().run().unwrap();
+        // every deterministic counter matches the bare run exactly
+        assert_eq!(r.completed, bare.completed);
+        assert_eq!(r.rejected_queue_full, bare.rejected_queue_full);
+        assert_eq!(r.tokens_served, bare.tokens_served);
+        assert_eq!(r.peak_rank_data_bytes, bare.peak_rank_data_bytes);
+        assert!(r.max_imbalance > 0.0, "tracker never folded a tick");
+        // R=2 caps imbalance at 2.0, far under the 8.0 threshold
+        assert_eq!(r.skew_alarms, 0, "balanced serving raised a skew alarm");
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        for family in ["moeblaze_rank_load_rows_total",
+                       "moeblaze_expert_load_ewma",
+                       "moeblaze_serve_tick"] {
+            assert!(text.contains(family), "exposition missing {family}");
+        }
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::config::ep::EpConfig;
 use crate::coordinator::engine::{layer_engine_from_config, ExecutionEngine, StepBatch};
 use crate::coordinator::params::ExpertStore;
 use crate::memory::model::{CheckpointPolicy, MemoryBreakdown};
+use crate::trace::load::ExpertLoadTracker;
 use crate::trace::Tracer;
 
 /// A forward-only engine wrapper: `infer` in, combined output out,
@@ -59,6 +60,16 @@ impl ForwardSession {
     /// gather/GEMM/combine spans and resident-bytes gauges per tick.
     pub fn set_tracer(&mut self, tracer: Tracer) {
         self.engine.set_tracer(tracer);
+    }
+
+    /// Attach an expert-load tracker: the wrapped engine feeds each
+    /// tick's routed-row counts from its `RowIndexPlan`, and the serve
+    /// loop folds them at tick boundaries ([`ServeLoop`] owns the
+    /// `end_step` cadence and the skew verdicts).
+    ///
+    /// [`ServeLoop`]: crate::serving::ServeLoop
+    pub fn set_load_tracker(&mut self, tracker: ExpertLoadTracker) {
+        self.engine.set_load_tracker(tracker);
     }
 
     pub fn engine_name(&self) -> String {

@@ -1,0 +1,648 @@
+//! Expert-load telemetry: per-(layer, expert) routed-row EWMAs, rank
+//! aggregation through the live placement, and skew alarms (ISSUE 9).
+//!
+//! [`ExpertLoadTracker`] is the measurement half of the ROADMAP's
+//! elastic-placement item: engines feed it each step's **routed-row
+//! counts from the `RowIndexPlan`** (dispatch ground truth, never gate
+//! probabilities), and at every step boundary the tracker folds them
+//! into per-expert EWMAs, aggregates per-rank load through the expert→
+//! rank map the engine actually runs under, and judges the imbalance
+//! factor (max-rank / mean-rank load) against the `[ep] skew_alarm`
+//! threshold with hysteresis. A raised [`PlacementSignal`] is the exact
+//! input contract a future migration subsystem consumes.
+//!
+//! Attachment follows the [`Tracer`](super::Tracer) discipline: engines
+//! hold an `Option<ExpertLoadTracker>` — with none attached the hot
+//! path consults nothing — and [`MoeStack`] hands each layer engine a
+//! layer-tagged clone via [`ExpertLoadTracker::for_layer`]. Recording
+//! is integer accumulation only; every float op happens in
+//! [`end_step`], off the engines' forward path, so attaching a tracker
+//! never perturbs the bit-identity contracts (pinned in
+//! `rust/tests/ep_load.rs`).
+//!
+//! The EWMA / imbalance / hysteresis update order is a cross-language
+//! contract mirrored bit-for-bit in `tools/ep_sim.py` (the
+//! `skew_flags` mirror): deviation is judged *after* the fold, experts
+//! are walked in ascending id order, ranks in ascending rank order, and
+//! the pinned LCG sequences in the tests here flag the identical
+//! (sequence, step) pairs in both suites.
+//!
+//! [`MoeStack`]: crate::coordinator::stack::MoeStack
+//! [`end_step`]: ExpertLoadTracker::end_step
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::registry::Registry;
+
+/// EWMA weight of one step's routed-row counts (matches the drift
+/// band's fold weight — one observability-stack convention).
+pub const LOAD_ALPHA: f64 = 0.2;
+/// Steps of history before the alarm may arm (an EWMA seeded from one
+/// step is not evidence of a drifting router).
+pub const LOAD_WARMUP: usize = 3;
+/// Consecutive over-threshold (resp. released) steps required to raise
+/// (resp. clear) the alarm.
+pub const LOAD_HYSTERESIS: usize = 2;
+/// The clear threshold as a fraction of the raise threshold: an active
+/// alarm clears only once imbalance falls to `skew_alarm · 0.9`, so a
+/// router oscillating at the threshold cannot flap the alarm.
+pub const LOAD_RELEASE: f64 = 0.9;
+
+/// One layer's step-boundary load verdict — the re-planning trigger the
+/// ROADMAP's migration subsystem consumes. `should_replan` is
+/// edge-triggered: true exactly on the step the alarm raises (after
+/// [`LOAD_WARMUP`] + [`LOAD_HYSTERESIS`]), not on every step it stays
+/// active — consumers that want the level read
+/// [`ExpertLoadTracker::snapshot`]'s `alarm_active`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementSignal {
+    pub layer: usize,
+    /// summed per-expert EWMAs per rank, through the live placement
+    pub rank_loads: Vec<f64>,
+    /// max-rank load / mean-rank load (1.0 = perfectly balanced)
+    pub imbalance: f64,
+    pub should_replan: bool,
+}
+
+/// Point-in-time view of one layer's tracked load (for consoles,
+/// snapshots, and the metrics registry).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerLoadSnapshot {
+    pub layer: usize,
+    /// per-expert routed-row EWMA, expert-id ascending
+    pub expert_ewma: Vec<f64>,
+    pub rank_loads: Vec<f64>,
+    pub imbalance: f64,
+    /// coefficient of variation of the rank loads (σ/µ, population)
+    pub cov: f64,
+    /// mean per-slot router entropy −g·ln g of the last step's gates
+    pub entropy: f64,
+    pub alarm_active: bool,
+    /// alarm raising edges so far
+    pub alarms: u64,
+    /// steps folded into the EWMAs
+    pub steps: usize,
+}
+
+struct LayerLoad {
+    /// per-expert routed-row EWMA (expert-id order)
+    ewma: Vec<f64>,
+    /// rows fed since the last step boundary
+    pending: Vec<u64>,
+    fed: bool,
+    rank_of: Vec<u32>,
+    /// −Σ g·ln g over the step's gate slots (pending)
+    entropy_num: f64,
+    entropy_slots: u64,
+    entropy: f64,
+    /// last step-boundary aggregates
+    rank_loads: Vec<f64>,
+    imbalance: f64,
+    cov: f64,
+    /// steps folded
+    n: usize,
+    over: usize,
+    under: usize,
+    active: bool,
+    alarms: u64,
+}
+
+impl LayerLoad {
+    fn new() -> LayerLoad {
+        LayerLoad {
+            ewma: Vec::new(),
+            pending: Vec::new(),
+            fed: false,
+            rank_of: Vec::new(),
+            entropy_num: 0.0,
+            entropy_slots: 0,
+            entropy: 0.0,
+            rank_loads: Vec::new(),
+            imbalance: 0.0,
+            cov: 0.0,
+            n: 0,
+            over: 0,
+            under: 0,
+            active: false,
+            alarms: 0,
+        }
+    }
+}
+
+struct LoadInner {
+    /// raise threshold (`[ep] skew_alarm`); 0 = alarm disabled, the
+    /// EWMAs still track
+    threshold: f64,
+    layers: BTreeMap<usize, LayerLoad>,
+    /// total routed rows per rank across all layers and steps — the
+    /// monotone `load_rows` Chrome counter track
+    cum_rank_rows: Vec<u64>,
+    records: u64,
+}
+
+/// Shared, layer-taggable expert-load tracker. Cloning shares state
+/// ([`Tracer`](super::Tracer)-style): engines, the trainer, and the
+/// exposition loop all observe one accumulator.
+#[derive(Clone)]
+pub struct ExpertLoadTracker {
+    inner: Arc<Mutex<LoadInner>>,
+    layer: usize,
+}
+
+impl ExpertLoadTracker {
+    /// A tracker judging imbalance against `skew_alarm` (0 disables the
+    /// alarm; load EWMAs track regardless). Records land on layer 0
+    /// until re-tagged with [`for_layer`](ExpertLoadTracker::for_layer).
+    pub fn new(skew_alarm: f64) -> ExpertLoadTracker {
+        ExpertLoadTracker {
+            inner: Arc::new(Mutex::new(LoadInner {
+                threshold: skew_alarm,
+                layers: BTreeMap::new(),
+                cum_rank_rows: Vec::new(),
+                records: 0,
+            })),
+            layer: 0,
+        }
+    }
+
+    /// A clone whose records land on `layer` — what [`MoeStack`] hands
+    /// each layer engine, mirroring `Tracer::for_layer`.
+    ///
+    /// [`MoeStack`]: crate::coordinator::stack::MoeStack
+    pub fn for_layer(&self, layer: usize) -> ExpertLoadTracker {
+        ExpertLoadTracker { inner: Arc::clone(&self.inner), layer }
+    }
+
+    pub fn threshold(&self) -> f64 {
+        self.inner.lock().unwrap().threshold
+    }
+
+    /// Feed one forward's routed-row ground truth: `rows_per_expert[e]`
+    /// rows ran on expert `e`, owned by rank `rank_of[e]`. Grad-accum
+    /// microbatches accumulate; nothing folds until
+    /// [`end_step`](ExpertLoadTracker::end_step). Integer adds plus one
+    /// entropy accumulation over `gates` — no engine numerics touched.
+    pub fn record_rows(&self, rows_per_expert: &[u64], rank_of: &[u32],
+                       gates: &[f32]) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.records += 1;
+        // per-rank cumulative first (self-borrow: split the map access)
+        for (e, &rows) in rows_per_expert.iter().enumerate() {
+            let r = rank_of[e] as usize;
+            if inner.cum_rank_rows.len() <= r {
+                inner.cum_rank_rows.resize(r + 1, 0);
+            }
+            inner.cum_rank_rows[r] += rows;
+        }
+        let ll = inner.layers.entry(self.layer).or_insert_with(LayerLoad::new);
+        if ll.pending.len() < rows_per_expert.len() {
+            ll.pending.resize(rows_per_expert.len(), 0);
+        }
+        for (e, &rows) in rows_per_expert.iter().enumerate() {
+            ll.pending[e] += rows;
+        }
+        ll.rank_of = rank_of.to_vec();
+        ll.fed = true;
+        for &g in gates {
+            let g = g as f64;
+            if g > 0.0 {
+                ll.entropy_num -= g * g.ln();
+            }
+        }
+        ll.entropy_slots += gates.len() as u64;
+    }
+
+    /// Close the step: fold every fed layer's pending rows into its
+    /// EWMAs, aggregate rank loads through the placement, judge the
+    /// alarm, and return one [`PlacementSignal`] per fed layer
+    /// (layer-ascending). The op order here — fold, then aggregate in
+    /// expert order, then max/mean in rank order, then the hysteresis
+    /// walk — is the `tools/ep_sim.py` mirror contract; change both or
+    /// neither.
+    pub fn end_step(&self) -> Vec<PlacementSignal> {
+        let mut inner = self.inner.lock().unwrap();
+        let threshold = inner.threshold;
+        let mut signals = Vec::new();
+        for (&layer, ll) in inner.layers.iter_mut() {
+            if !ll.fed {
+                continue;
+            }
+            if ll.ewma.len() < ll.pending.len() {
+                ll.ewma.resize(ll.pending.len(), 0.0);
+            }
+            if ll.n == 0 {
+                for (e, &rows) in ll.pending.iter().enumerate() {
+                    ll.ewma[e] = rows as f64;
+                }
+            } else {
+                for (e, &rows) in ll.pending.iter().enumerate() {
+                    ll.ewma[e] += LOAD_ALPHA * (rows as f64 - ll.ewma[e]);
+                }
+            }
+            ll.n += 1;
+            let ranks = ll.rank_of.iter().map(|&r| r as usize + 1).max()
+                .unwrap_or(1);
+            let mut loads = vec![0.0f64; ranks];
+            for (e, &w) in ll.ewma.iter().enumerate() {
+                loads[ll.rank_of[e] as usize] += w;
+            }
+            let mut total = 0.0f64;
+            let mut max = 0.0f64;
+            for &v in &loads {
+                total += v;
+                if v > max {
+                    max = v;
+                }
+            }
+            let mean = total / ranks as f64;
+            let imbalance = if mean > 0.0 { max / mean } else { 0.0 };
+            let mut var = 0.0f64;
+            for &v in &loads {
+                let d = v - mean;
+                var += d * d;
+            }
+            var /= ranks as f64;
+            let cov = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
+            ll.entropy = if ll.entropy_slots > 0 {
+                ll.entropy_num / ll.entropy_slots as f64
+            } else {
+                0.0
+            };
+            let mut raised = false;
+            if !ll.active {
+                if ll.n >= LOAD_WARMUP && threshold > 0.0 && imbalance > threshold
+                {
+                    ll.over += 1;
+                } else {
+                    ll.over = 0;
+                }
+                if ll.over >= LOAD_HYSTERESIS {
+                    ll.active = true;
+                    ll.over = 0;
+                    ll.alarms += 1;
+                    raised = true;
+                }
+            } else {
+                if imbalance <= threshold * LOAD_RELEASE {
+                    ll.under += 1;
+                } else {
+                    ll.under = 0;
+                }
+                if ll.under >= LOAD_HYSTERESIS {
+                    ll.active = false;
+                    ll.under = 0;
+                }
+            }
+            ll.rank_loads = loads.clone();
+            ll.imbalance = imbalance;
+            ll.cov = cov;
+            for p in ll.pending.iter_mut() {
+                *p = 0;
+            }
+            ll.fed = false;
+            ll.entropy_num = 0.0;
+            ll.entropy_slots = 0;
+            signals.push(PlacementSignal {
+                layer,
+                rank_loads: loads,
+                imbalance,
+                should_replan: raised,
+            });
+        }
+        signals
+    }
+
+    /// Per-layer views, layer-ascending.
+    pub fn snapshot(&self) -> Vec<LayerLoadSnapshot> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .layers
+            .iter()
+            .map(|(&layer, ll)| LayerLoadSnapshot {
+                layer,
+                expert_ewma: ll.ewma.clone(),
+                rank_loads: ll.rank_loads.clone(),
+                imbalance: ll.imbalance,
+                cov: ll.cov,
+                entropy: ll.entropy,
+                alarm_active: ll.active,
+                alarms: ll.alarms,
+                steps: ll.n,
+            })
+            .collect()
+    }
+
+    /// Total routed rows per rank across all layers and steps — the
+    /// monotone per-rank `load_rows` Chrome counter track.
+    pub fn cumulative_rank_rows(&self) -> Vec<u64> {
+        self.inner.lock().unwrap().cum_rank_rows.clone()
+    }
+
+    /// Alarm raising edges across all layers.
+    pub fn alarms_total(&self) -> u64 {
+        self.inner.lock().unwrap().layers.values().map(|l| l.alarms).sum()
+    }
+
+    /// Whether any layer's alarm is currently active (the level, not
+    /// the edge).
+    pub fn alarm_active(&self) -> bool {
+        self.inner.lock().unwrap().layers.values().any(|l| l.active)
+    }
+
+    /// The worst last-step imbalance across layers (0 before any fold).
+    pub fn max_imbalance(&self) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        let mut max = 0.0f64;
+        for ll in inner.layers.values() {
+            if ll.imbalance > max {
+                max = ll.imbalance;
+            }
+        }
+        max
+    }
+
+    /// Record calls observed (tests pin the Option-gating contract:
+    /// zero without an attach).
+    pub fn record_count(&self) -> u64 {
+        self.inner.lock().unwrap().records
+    }
+
+    /// Publish the current load picture into a metrics [`Registry`]
+    /// under the `moeblaze_*` families the exposition documents:
+    /// per-(layer, expert) EWMAs, per-layer imbalance / cov / router
+    /// entropy / alarm level, the monotone per-layer alarm counters,
+    /// and the cumulative per-rank routed-row counters. Idempotent —
+    /// the train/serve loops call it on their log cadence and once at
+    /// exit, and re-publishing only moves gauges and monotone totals.
+    pub fn publish_registry(&self, reg: &Registry) {
+        for snap in self.snapshot() {
+            let layer = snap.layer.to_string();
+            for (e, w) in snap.expert_ewma.iter().enumerate() {
+                let expert = e.to_string();
+                reg.gauge("moeblaze_expert_load_ewma",
+                          "EWMA of routed rows per step for each (layer, expert)",
+                          &[("layer", &layer), ("expert", &expert)])
+                    .set(*w);
+            }
+            reg.gauge("moeblaze_load_imbalance",
+                      "rank-load imbalance (max/mean) of the layer's last folded step",
+                      &[("layer", &layer)])
+                .set(snap.imbalance);
+            reg.gauge("moeblaze_load_cov",
+                      "coefficient of variation of the layer's rank loads",
+                      &[("layer", &layer)])
+                .set(snap.cov);
+            reg.gauge("moeblaze_router_entropy",
+                      "mean per-slot router gate entropy of the layer's last step",
+                      &[("layer", &layer)])
+                .set(snap.entropy);
+            reg.gauge("moeblaze_skew_alarm_active",
+                      "1 while the layer's skew alarm is raised, else 0",
+                      &[("layer", &layer)])
+                .set(if snap.alarm_active { 1.0 } else { 0.0 });
+            reg.counter("moeblaze_skew_alarms_total",
+                        "skew-alarm raising edges per layer",
+                        &[("layer", &layer)])
+                .set_total(snap.alarms);
+        }
+        for (r, cum) in self.cumulative_rank_rows().iter().enumerate() {
+            let rank = r.to_string();
+            reg.counter("moeblaze_rank_load_rows_total",
+                        "cumulative routed rows landed on each rank (all layers)",
+                        &[("rank", &rank)])
+                .set_total(*cum);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MUL: u64 = 6364136223846793005;
+    const ADD: u64 = 1442695040888963407;
+
+    /// The mirror's pinned workload: 40 steps of 8-expert routed-row
+    /// counts in [16, 32), with two LCG-placed hot windows adding 160
+    /// rows to one expert — `load_sequence` in tools/ep_sim.py is the
+    /// line-for-line twin.
+    fn load_sequence(seq: u64) -> Vec<[u64; 8]> {
+        let mut state = 0x10AD_5EEDu64.wrapping_add(seq);
+        let mut draw = || {
+            state = state.wrapping_mul(MUL).wrapping_add(ADD);
+            state
+        };
+        let mut hot = [(0usize, 0u64, 0u64); 2];
+        for (w, slot) in hot.iter_mut().enumerate() {
+            let e = ((draw() >> 33) % 8) as usize;
+            let (start, len) = if w == 0 {
+                (8 + ((draw() >> 33) % 8), 6 + ((draw() >> 33) % 10))
+            } else {
+                (26 + ((draw() >> 33) % 6), 4 + ((draw() >> 33) % 6))
+            };
+            *slot = (e, start, start + len);
+        }
+        (0..40u64)
+            .map(|s| {
+                let mut rows = [0u64; 8];
+                for r in rows.iter_mut() {
+                    let u = ((draw() >> 11) as f64) / (1u64 << 53) as f64;
+                    *r = 16 + (u * 16.0) as u64;
+                }
+                for &(e, start, end) in &hot {
+                    if s >= start && s < end {
+                        rows[e] += 160;
+                    }
+                }
+                rows
+            })
+            .collect()
+    }
+
+    /// Steps on which the real tracker raises, fed one sequence.
+    fn tracker_flags(steps: &[[u64; 8]], rank_of: &[u32], thr: f64) -> Vec<usize> {
+        let t = ExpertLoadTracker::new(thr);
+        let mut flags = Vec::new();
+        for (s, rows) in steps.iter().enumerate() {
+            t.record_rows(rows, rank_of, &[]);
+            for sig in t.end_step() {
+                if sig.should_replan {
+                    flags.push(s);
+                }
+            }
+        }
+        flags
+    }
+
+    /// The pinned cross-language table — tools/ep_sim.py holds the
+    /// identical one (LOAD_EXPECTED) and must flag the same pairs.
+    const EXPECTED_FLAGS: &[&[usize]] = &[
+        &[13],
+        &[14],
+        &[15],
+        &[16],
+        &[17],
+        &[10, 29],
+        &[11, 31],
+        &[12, 32],
+        &[13, 32],
+        &[14, 33],
+        &[15, 31],
+        &[16, 33],
+    ];
+
+    #[test]
+    fn synthetic_sequences_match_python_mirror_flags() {
+        let rank_of: Vec<u32> = (0..8).map(|e| e / 2).collect();
+        for (seq, &expected) in EXPECTED_FLAGS.iter().enumerate() {
+            let got = tracker_flags(&load_sequence(seq as u64), &rank_of, 1.5);
+            assert_eq!(got, expected, "sequence {seq} flags diverged from \
+                        the ep_sim.py mirror table");
+        }
+        let total: usize = EXPECTED_FLAGS.iter().map(|f| f.len()).sum();
+        assert_eq!(total, 19);
+    }
+
+    #[test]
+    fn balanced_loads_never_alarm() {
+        let rank_of: Vec<u32> = (0..8).map(|e| e / 2).collect();
+        let steps = vec![[20u64; 8]; 40];
+        assert_eq!(tracker_flags(&steps, &rank_of, 1.5), Vec::<usize>::new());
+        // the Figure-2 fixture's per-expert counts [3,2,2,3] on 2 ranks
+        let fig2 = vec![[3u64, 2, 2, 3]; 10];
+        let t = ExpertLoadTracker::new(1.5);
+        for rows in &fig2 {
+            t.record_rows(rows, &[0, 0, 1, 1], &[]);
+            assert!(t.end_step().iter().all(|s| !s.should_replan));
+        }
+        assert_eq!(t.alarms_total(), 0);
+        assert!(!t.alarm_active());
+        let snap = &t.snapshot()[0];
+        assert_eq!(snap.rank_loads, vec![5.0, 5.0]);
+        assert_eq!(snap.imbalance, 1.0);
+        assert_eq!(snap.cov, 0.0);
+    }
+
+    #[test]
+    fn skewed_fixture_raises_with_hysteresis_then_releases() {
+        // [12,2,1,1] on 2 ranks: loads [14,2], imbalance 1.75 > 1.5.
+        // Warmup 3 + hysteresis 2 → the raise lands on step 3 (0-based),
+        // exactly as the ep_sim.py mirror pins.
+        let t = ExpertLoadTracker::new(1.5);
+        let mut raised_at = Vec::new();
+        for s in 0..6 {
+            t.record_rows(&[12, 2, 1, 1], &[0, 0, 1, 1], &[]);
+            for sig in t.end_step() {
+                assert_eq!(sig.rank_loads.len(), 2);
+                assert!((sig.imbalance - 1.75).abs() < 1e-12);
+                if sig.should_replan {
+                    raised_at.push(s);
+                }
+            }
+        }
+        assert_eq!(raised_at, vec![3]);
+        assert!(t.alarm_active());
+        assert_eq!(t.alarms_total(), 1);
+        // balance restored: the alarm clears after LOAD_HYSTERESIS
+        // released steps, without a second raise
+        for _ in 0..20 {
+            t.record_rows(&[4, 4, 4, 4], &[0, 0, 1, 1], &[]);
+            let sig = t.end_step();
+            assert!(sig.iter().all(|s| !s.should_replan));
+        }
+        assert!(!t.alarm_active());
+        assert_eq!(t.alarms_total(), 1);
+    }
+
+    #[test]
+    fn disabled_threshold_tracks_but_never_raises() {
+        let t = ExpertLoadTracker::new(0.0);
+        for _ in 0..10 {
+            t.record_rows(&[100, 1, 1, 1], &[0, 0, 1, 1], &[]);
+            assert!(t.end_step().iter().all(|s| !s.should_replan));
+        }
+        assert_eq!(t.alarms_total(), 0);
+        let snap = &t.snapshot()[0];
+        assert!(snap.imbalance > 1.9, "EWMAs must track regardless: {snap:?}");
+        assert_eq!(snap.steps, 10);
+    }
+
+    #[test]
+    fn rank_aggregation_follows_the_placement() {
+        // same expert loads, two placements: contiguous puts both hot
+        // experts on rank 0; strided splits them
+        let rows = [50u64, 50, 2, 2];
+        let t = ExpertLoadTracker::new(0.0);
+        t.record_rows(&rows, &[0, 0, 1, 1], &[]);
+        t.end_step();
+        let contiguous = t.snapshot()[0].clone();
+        assert_eq!(contiguous.rank_loads, vec![100.0, 4.0]);
+        let t = ExpertLoadTracker::new(0.0);
+        t.record_rows(&rows, &[0, 1, 0, 1], &[]);
+        t.end_step();
+        let strided = t.snapshot()[0].clone();
+        assert_eq!(strided.rank_loads, vec![52.0, 52.0]);
+        assert!(contiguous.imbalance > strided.imbalance);
+        assert_eq!(strided.imbalance, 1.0);
+    }
+
+    #[test]
+    fn layer_clones_share_state_but_tag_their_own_layer() {
+        let t = ExpertLoadTracker::new(0.0);
+        let l2 = t.for_layer(2);
+        t.record_rows(&[6, 2], &[0, 1], &[]);
+        l2.record_rows(&[1, 7], &[0, 1], &[]);
+        let signals = t.end_step();
+        assert_eq!(signals.len(), 2);
+        assert_eq!(signals[0].layer, 0);
+        assert_eq!(signals[1].layer, 2);
+        assert_eq!(signals[0].rank_loads, vec![6.0, 2.0]);
+        assert_eq!(signals[1].rank_loads, vec![1.0, 7.0]);
+        // cumulative rank rows sum across layers and stay monotone
+        assert_eq!(t.cumulative_rank_rows(), vec![7, 9]);
+        t.record_rows(&[1, 1], &[0, 1], &[]);
+        assert_eq!(t.cumulative_rank_rows(), vec![8, 10]);
+        assert_eq!(t.record_count(), 3);
+    }
+
+    #[test]
+    fn grad_accum_microbatches_accumulate_before_the_fold() {
+        // two microbatch records then one end_step must equal one
+        // record of the sums
+        let a = ExpertLoadTracker::new(0.0);
+        a.record_rows(&[3, 1], &[0, 1], &[]);
+        a.record_rows(&[2, 4], &[0, 1], &[]);
+        let sa = a.end_step();
+        let b = ExpertLoadTracker::new(0.0);
+        b.record_rows(&[5, 5], &[0, 1], &[]);
+        let sb = b.end_step();
+        assert_eq!(sa[0].rank_loads, sb[0].rank_loads);
+        assert_eq!(sa[0].imbalance, sb[0].imbalance);
+    }
+
+    #[test]
+    fn entropy_reflects_gate_concentration() {
+        // uniform gates carry more routing entropy than a one-hot gate
+        let t = ExpertLoadTracker::new(0.0);
+        t.record_rows(&[1, 1], &[0, 1], &[0.5, 0.5, 0.5, 0.5]);
+        t.end_step();
+        let uniform = t.snapshot()[0].entropy;
+        let t = ExpertLoadTracker::new(0.0);
+        t.record_rows(&[1, 1], &[0, 1], &[1.0, 0.0, 1.0, 0.0]);
+        t.end_step();
+        let onehot = t.snapshot()[0].entropy;
+        assert!(uniform > onehot, "{uniform} vs {onehot}");
+        assert_eq!(onehot, 0.0);
+    }
+
+    #[test]
+    fn unfed_steps_fold_nothing() {
+        let t = ExpertLoadTracker::new(1.5);
+        t.record_rows(&[9, 1], &[0, 1], &[]);
+        t.end_step();
+        // an idle tick (serving) must not decay or re-judge anything
+        assert!(t.end_step().is_empty());
+        assert_eq!(t.snapshot()[0].steps, 1);
+    }
+}

@@ -45,7 +45,13 @@
 //! drop) or `chrome://tracing`.
 //!
 //! Predicted-vs-measured drift detection over the timeline cost model
-//! lives in [`drift`].
+//! lives in [`drift`]. Expert-load telemetry — per-(layer, expert)
+//! routed-row EWMAs fed from the `RowIndexPlan`, per-rank aggregation
+//! through the live placement, and hysteresis skew alarms
+//! (`[ep] skew_alarm`) — lives in [`load`]; when a run is both traced
+//! and load-tracked, the trainer exports the tracker's cumulative
+//! per-rank routed rows as a monotone per-rank `load_rows` counter
+//! track in the same Chrome export.
 //!
 //! [`ExecutionEngine::set_tracer`]:
 //! crate::coordinator::engine::ExecutionEngine::set_tracer
@@ -53,6 +59,7 @@
 //! crate::memory::model::MemoryBreakdown::data_bytes
 
 pub mod drift;
+pub mod load;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};

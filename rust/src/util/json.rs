@@ -321,7 +321,13 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literals — `{n}` would
+                    // print "NaN"/"inf" and poison the whole line, so a
+                    // non-finite number degrades to null and every
+                    // emitted line stays parseable.
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -418,5 +424,35 @@ mod tests {
     fn escaped_serialization() {
         let v = Json::Str("a\"b\\c\nd".into());
         assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn object_keys_are_escaped_like_values() {
+        // keys containing quotes, backslashes, and newlines must render
+        // through the same escaper as string values
+        let v = Json::Obj(
+            [("he said \"hi\"\\\n".to_string(), Json::num(1.0))]
+                .into_iter()
+                .collect(),
+        );
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v);
+        assert!(back.get("he said \"hi\"\\\n").is_some());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null_not_invalid_json() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let v = Json::obj(vec![("x", Json::num(bad))]);
+            let text = v.to_string();
+            let back = Json::parse(&text).unwrap_or_else(|e| {
+                panic!("`{text}` must stay parseable: {e}")
+            });
+            assert_eq!(back.get("x"), Some(&Json::Null), "{text}");
+        }
+        // finite neighbors are untouched
+        assert_eq!(Json::num(1e300).to_string(), "1e300");
+        assert_eq!(Json::num(-0.5).to_string(), "-0.5");
     }
 }

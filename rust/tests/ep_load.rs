@@ -1,0 +1,294 @@
+//! Acceptance gate for the expert-load telemetry stack (ISSUE 9):
+//!
+//! * attaching a load tracker (and the metrics registry) changes
+//!   nothing numeric: training loss curves are bit-identical with and
+//!   without `skew_alarm` / `metrics_expose_path`, across every engine
+//!   family (barrier, pipelined, multi-layer stack);
+//! * engines feed **`RowIndexPlan` ground truth**: the per-expert rows
+//!   the tracker accumulates equal the dispatch structures' expert
+//!   segment lengths exactly, and per-rank aggregation follows the live
+//!   placement;
+//! * the property suite (satellite b): over fuzzed R × K × layer
+//!   fixtures, per-expert routed-row counts summed per owning rank
+//!   equal the `RowIndexPlan` src→dst row matrix's column sums — the
+//!   tracker's input contract is conserved row-for-row;
+//! * the Prometheus-style exposition is deterministic: two identical
+//!   runs render byte-identical files;
+//! * traced + metered runs export monotone per-rank `load_rows`
+//!   counter tracks in the Chrome trace, one track per rank.
+
+use moeblaze::config::ep::{EpConfig, Placement};
+use moeblaze::coordinator::engine::{engine_from_config, step_batch_from_config,
+                                    topology_from_config, ExecutionEngine};
+use moeblaze::coordinator::expert_parallel::EpTopology;
+use moeblaze::coordinator::trainer::{EpTrainReport, EpTrainer};
+use moeblaze::dispatch::gating::synthetic_gating;
+use moeblaze::dispatch::parallel_build::parallel_build;
+use moeblaze::dispatch::RowIndexPlan;
+use moeblaze::trace::load::ExpertLoadTracker;
+use moeblaze::util::json::Json;
+use moeblaze::util::prng::Rng;
+
+fn cfg(ranks: usize) -> EpConfig {
+    EpConfig {
+        ranks,
+        tokens: 64,
+        num_experts: 8,
+        top_k: 2,
+        d_model: 8,
+        d_hidden: 12,
+        tile_rows: 8,
+        steps: 3,
+        lr: 0.1,
+        seed: 5,
+        ..EpConfig::default()
+    }
+}
+
+fn run(cfg: EpConfig) -> EpTrainReport {
+    let engine = engine_from_config(&cfg).unwrap();
+    EpTrainer::new(engine, cfg).unwrap().run().unwrap()
+}
+
+#[test]
+fn load_telemetry_is_bitwise_invisible_across_engine_families() {
+    let variants: Vec<(&str, EpConfig)> = vec![
+        ("single-rank", cfg(1)),
+        ("sharded R=2", cfg(2)),
+        ("sharded R=4", cfg(4)),
+        ("pipelined", EpConfig { pipeline_chunks: 2, ..cfg(2) }),
+        ("stack L=2", EpConfig { num_layers: 2, ..cfg(2) }),
+        ("grad-accum", EpConfig { grad_accum: 2, ..cfg(2) }),
+    ];
+    for (i, (name, base)) in variants.into_iter().enumerate() {
+        let bare = run(base.clone());
+        assert_eq!(bare.skew_alarms, 0, "{name}: bare run counted alarms");
+        assert_eq!(bare.max_imbalance, 0.0,
+                   "{name}: bare run folded load state");
+        let path = std::env::temp_dir()
+            .join(format!("moeblaze_ep_load_inv_{i}.prom"));
+        let metered = run(EpConfig {
+            skew_alarm: 8.0,
+            metrics_expose_path: path.to_string_lossy().into_owned(),
+            ..base
+        });
+        std::fs::remove_file(&path).ok();
+        assert_eq!(metered.losses, bare.losses,
+                   "{name}: load telemetry perturbed the loss curve");
+        assert!(metered.max_imbalance > 0.0,
+                "{name}: tracker never folded a step");
+    }
+}
+
+#[test]
+fn engines_feed_row_index_plan_ground_truth() {
+    // one forward on each engine family with a tracker attached: the
+    // seeded EWMAs equal the dispatch structures' expert segment
+    // lengths exactly, and the per-rank cumulative rows follow the
+    // live expert→rank map
+    for (name, c) in [
+        ("single-rank", cfg(1)),
+        ("sharded R=2", cfg(2)),
+        ("pipelined", EpConfig { pipeline_chunks: 2, ..cfg(2) }),
+    ] {
+        let (batch, _) = step_batch_from_config(&c).unwrap();
+        let mut engine = engine_from_config(&c).unwrap();
+        let lt = ExpertLoadTracker::new(0.0);
+        engine.set_load_tracker(lt.clone());
+        let _ = engine.forward(&batch).unwrap();
+        let _ = lt.end_step();
+
+        let disp = batch.disp();
+        let expected: Vec<f64> = (0..c.num_experts)
+            .map(|e| (disp.expert_token_offsets[e + 1]
+                      - disp.expert_token_offsets[e]) as f64)
+            .collect();
+        let snap = lt.snapshot();
+        assert_eq!(snap.len(), 1, "{name}: one layer expected");
+        assert_eq!(snap[0].expert_ewma, expected,
+                   "{name}: fed rows diverge from the dispatch segments");
+        assert_eq!(snap[0].steps, 1);
+
+        // rank aggregation: cumulative rows per rank equal the owned
+        // experts' segment sums under the engine's placement
+        let topo = topology_from_config(&c, c.ranks).unwrap();
+        let rank_of = topo.assignment().rank_of;
+        let mut per_rank = vec![0u64; c.ranks];
+        for e in 0..c.num_experts {
+            per_rank[rank_of[e] as usize] +=
+                (disp.expert_token_offsets[e + 1]
+                 - disp.expert_token_offsets[e]) as u64;
+        }
+        assert_eq!(lt.cumulative_rank_rows(), per_rank,
+                   "{name}: per-rank rows do not follow the placement");
+        assert_eq!(per_rank.iter().sum::<u64>(), disp.slots() as u64,
+                   "{name}: rows not conserved");
+    }
+
+    // the stack tags each layer: L layers → L snapshots, each fed the
+    // full slot count per step
+    let c = EpConfig { num_layers: 2, ..cfg(2) };
+    let (batch, _) = step_batch_from_config(&c).unwrap();
+    let mut engine = engine_from_config(&c).unwrap();
+    let lt = ExpertLoadTracker::new(0.0);
+    engine.set_load_tracker(lt.clone());
+    let _ = engine.forward(&batch).unwrap();
+    let _ = lt.end_step();
+    let snap = lt.snapshot();
+    assert_eq!(snap.len(), 2, "stack must tag one snapshot per layer");
+    for s in &snap {
+        let total: f64 = s.expert_ewma.iter().sum();
+        assert_eq!(total, batch.disp().slots() as f64,
+                   "layer {}: fed rows != routed slots", s.layer);
+    }
+}
+
+#[test]
+fn routed_row_counts_match_the_plan_matrix_over_fuzzed_cases() {
+    // satellite (b): for every fuzzed R × K × layout case, the
+    // per-expert rows the engines feed the tracker (expert segment
+    // lengths, grouped by owning rank) equal the RowIndexPlan's
+    // src→dst matrix column sums — the exact quantity the telemetry
+    // aggregates per rank
+    let mut rng = Rng::new(0x10AD);
+    for case in 0..100u64 {
+        let ranks = [1usize, 2, 4, 8][(rng.next_u64() % 4) as usize];
+        let e = ranks * (1 + (rng.next_u64() % 4) as usize);
+        let l = 1 + (rng.next_u64() % 96) as usize;
+        let k = 1 + (rng.next_u64() % e.min(3) as u64) as usize;
+        let skew = (case % 5) as f64 * 0.5;
+        let placement = if case % 2 == 0 {
+            Placement::Contiguous
+        } else {
+            Placement::Strided
+        };
+        let gating = synthetic_gating(&mut rng, l, e, k, skew);
+        let disp = parallel_build(&gating.topk_ids, l, e, k);
+        let topo = EpTopology::with_placement(ranks, e, placement).unwrap();
+        let rank_of = topo.assignment().rank_of;
+        let token_rank: Vec<u32> =
+            (0..l).map(|t| topo.rank_of_token(t, l) as u32).collect();
+        let plan = RowIndexPlan::build(&disp, ranks, &rank_of, &token_rank)
+            .unwrap();
+
+        // per-expert rows exactly as ShardedEngine feeds the tracker:
+        // walk every rank's owned expert segments in the plan
+        let mut rows = vec![0u64; e];
+        for rr in &plan.per_rank {
+            for (i, &ex) in rr.experts.iter().enumerate() {
+                rows[ex as usize] += rr.expert_len(i) as u64;
+            }
+        }
+        // (a) they are the dispatch structures' segment lengths
+        for ex in 0..e {
+            assert_eq!(rows[ex],
+                       (disp.expert_token_offsets[ex + 1]
+                        - disp.expert_token_offsets[ex]) as u64,
+                       "case {case}: expert {ex} rows != dispatch segment");
+        }
+        // (b) grouped by owning rank they equal the matrix column sums
+        let mut by_rank = vec![0u64; ranks];
+        for ex in 0..e {
+            by_rank[rank_of[ex] as usize] += rows[ex];
+        }
+        for dst in 0..ranks {
+            let col: u64 = (0..ranks).map(|src| plan.rows(src, dst)).sum();
+            assert_eq!(by_rank[dst], col,
+                       "case {case}: rank {dst} rows != matrix column sum");
+        }
+        // (c) conservation: everything routed lands somewhere
+        assert_eq!(by_rank.iter().sum::<u64>(), disp.slots() as u64,
+                   "case {case}: rows not conserved");
+    }
+}
+
+#[test]
+fn exposition_is_deterministic_across_identical_runs() {
+    let paths: Vec<_> = (0..2)
+        .map(|i| std::env::temp_dir()
+            .join(format!("moeblaze_ep_load_det_{i}.prom")))
+        .collect();
+    let texts: Vec<String> = paths
+        .iter()
+        .map(|p| {
+            run(EpConfig {
+                skew_alarm: 8.0,
+                metrics_expose_path: p.to_string_lossy().into_owned(),
+                num_layers: 2,
+                ..cfg(2)
+            });
+            let t = std::fs::read_to_string(p).unwrap();
+            std::fs::remove_file(p).ok();
+            t
+        })
+        .collect();
+    assert_eq!(texts[0], texts[1],
+               "identical runs rendered different expositions");
+    // shape sanity: HELP/TYPE headers, name-sorted families, both
+    // layers' label sets present
+    let text = &texts[0];
+    for family in ["moeblaze_expert_load_ewma", "moeblaze_load_imbalance",
+                   "moeblaze_load_cov", "moeblaze_router_entropy",
+                   "moeblaze_rank_load_rows_total",
+                   "moeblaze_skew_alarms_total", "moeblaze_loss",
+                   "moeblaze_step"] {
+        assert!(text.contains(&format!("# HELP {family} ")),
+                "exposition missing HELP for {family}");
+        assert!(text.contains(&format!("# TYPE {family} ")),
+                "exposition missing TYPE for {family}");
+    }
+    assert!(text.contains("{expert=\"0\",layer=\"0\"}"));
+    assert!(text.contains("{expert=\"0\",layer=\"1\"}"));
+    let names: Vec<&str> = text
+        .lines()
+        .filter_map(|l| l.strip_prefix("# HELP "))
+        .filter_map(|l| l.split(' ').next())
+        .collect();
+    let mut sorted = names.clone();
+    sorted.sort_unstable();
+    assert_eq!(names, sorted, "families not rendered name-sorted");
+}
+
+#[test]
+fn traced_metered_run_exports_monotone_load_rows_tracks() {
+    let trace_path = std::env::temp_dir().join("moeblaze_ep_load_trace.json");
+    let c = EpConfig {
+        skew_alarm: 8.0,
+        trace_out: trace_path.to_string_lossy().into_owned(),
+        ..cfg(2)
+    };
+    let r = run(c.clone());
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    std::fs::remove_file(&trace_path).ok();
+    let json = Json::parse(&text).unwrap();
+    let events = json.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+    // collect load_rows counter samples per pid, in log order
+    let mut tracks: std::collections::BTreeMap<usize, Vec<f64>> =
+        Default::default();
+    for e in events {
+        if e.get("ph").and_then(|p| p.as_str()) != Some("C") {
+            continue;
+        }
+        if e.get("name").and_then(|n| n.as_str()) != Some("load_rows") {
+            continue;
+        }
+        let pid = e.get("pid").and_then(|p| p.as_usize()).unwrap();
+        let v = e.get("args").unwrap()
+            .get("load_rows").and_then(|v| v.as_f64()).unwrap();
+        tracks.entry(pid).or_default().push(v);
+    }
+    assert_eq!(tracks.len(), c.ranks,
+               "expected one load_rows track per rank");
+    let mut finals = 0.0f64;
+    for (pid, vals) in &tracks {
+        assert_eq!(vals.len(), r.steps,
+                   "pid {pid}: one sample per step expected");
+        for w in vals.windows(2) {
+            assert!(w[1] >= w[0], "pid {pid}: load_rows track not monotone");
+        }
+        finals += *vals.last().unwrap();
+    }
+    // cumulative ground truth: steps × routed slots
+    assert_eq!(finals, (r.steps * c.tokens * c.top_k) as f64,
+               "cumulative load_rows diverge from routed slots");
+}

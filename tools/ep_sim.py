@@ -1529,3 +1529,117 @@ assert drift_flags([1.0] * 5 + [2.0, 1.0]) == [5]
 print("drift mirror OK: 20 LCG sequences x 40 steps flag exactly the "
       "33 pinned (sequence, step) pairs; quiet histories stay silent, "
       "post-warmup spikes flag once")
+
+# -- expert-load mirror: routed-row EWMAs, rank skew, alarm hysteresis ------
+# Bit-for-bit port of rust/src/trace/load.rs::ExpertLoadTracker. The
+# fold order is the cross-language contract: seed-or-fold the per-expert
+# EWMAs (expert-id ascending), aggregate rank loads through the expert->
+# rank map, take max/mean in rank order, then walk the warmup +
+# hysteresis state machine. A flag marks the raising edge only.
+# Constants mirror LOAD_ALPHA / LOAD_WARMUP / LOAD_HYSTERESIS /
+# LOAD_RELEASE.
+
+LOAD_ALPHA, LOAD_WARMUP, LOAD_HYSTERESIS, LOAD_RELEASE = 0.2, 3, 2, 0.9
+
+
+def skew_flags(steps, rank_of, thr, alpha=LOAD_ALPHA, warmup=LOAD_WARMUP,
+               hysteresis=LOAD_HYSTERESIS, release=LOAD_RELEASE):
+    ewma = [0.0] * len(rank_of)
+    n = over = under = 0
+    active = False
+    flags = []
+    for s, rows in enumerate(steps):
+        if n == 0:
+            for e, r in enumerate(rows):
+                ewma[e] = float(r)
+        else:
+            for e, r in enumerate(rows):
+                ewma[e] += alpha * (float(r) - ewma[e])
+        n += 1
+        ranks = max(rank_of) + 1
+        loads = [0.0] * ranks
+        for e, w in enumerate(ewma):
+            loads[rank_of[e]] += w
+        total = 0.0
+        mx = 0.0
+        for v in loads:
+            total += v
+            if v > mx:
+                mx = v
+        mean = total / ranks
+        imbalance = mx / mean if mean > 0.0 else 0.0
+        if not active:
+            if n >= warmup and thr > 0.0 and imbalance > thr:
+                over += 1
+            else:
+                over = 0
+            if over >= hysteresis:
+                active, over = True, 0
+                flags.append(s)
+        else:
+            if imbalance <= thr * release:
+                under += 1
+            else:
+                under = 0
+            if under >= hysteresis:
+                active, under = False, 0
+    return flags
+
+
+def load_sequence(seq):
+    # same LCG as the Rust test: 40 steps of 8-expert routed-row counts
+    # in [16, 32), with two LCG-placed hot windows adding 160 rows
+    state = (0x10AD5EED + seq) & MASK64
+
+    def draw():
+        nonlocal state
+        state = (state * LCG_MUL + LCG_ADD) & MASK64
+        return state
+
+    hot = []
+    for w in range(2):
+        e = (draw() >> 33) % 8
+        if w == 0:
+            start = 8 + (draw() >> 33) % 8
+            length = 6 + (draw() >> 33) % 10
+        else:
+            start = 26 + (draw() >> 33) % 6
+            length = 4 + (draw() >> 33) % 6
+        hot.append((e, start, start + length))
+    steps = []
+    for s in range(40):
+        rows = []
+        for _ in range(8):
+            u = (draw() >> 11) / float(1 << 53)
+            rows.append(16 + int(u * 16.0))
+        for e, start, end in hot:
+            if start <= s < end:
+                rows[e] += 160
+        steps.append(rows)
+    return steps
+
+
+# the pinned table — rust/src/trace/load.rs holds the identical one
+LOAD_EXPECTED = [
+    [13], [14], [15], [16], [17], [10, 29], [11, 31], [12, 32],
+    [13, 32], [14, 33], [15, 31], [16, 33],
+]
+
+LOAD_RANK_OF = [e // 2 for e in range(8)]
+for s, expected in enumerate(LOAD_EXPECTED):
+    got = skew_flags(load_sequence(s), LOAD_RANK_OF, 1.5)
+    assert got == expected, \
+        f"load sequence {s}: flagged {got}, Rust table says {expected}"
+assert sum(len(f) for f in LOAD_EXPECTED) == 19
+
+# behavior pins matching the Rust unit tests: balanced loads and the
+# Figure-2 fixture never alarm; the skewed fixture (loads [14, 2],
+# imbalance 1.75) raises exactly once at step 3 (warmup 3 + hysteresis
+# 2); a zero threshold tracks but never raises
+assert skew_flags([[20] * 8 for _ in range(40)], LOAD_RANK_OF, 1.5) == []
+assert skew_flags([[3, 2, 2, 3]] * 10, [0, 0, 1, 1], 1.5) == []
+assert skew_flags([[12, 2, 1, 1]] * 10, [0, 0, 1, 1], 1.5) == [3]
+assert skew_flags([[100, 1, 1, 1]] * 10, [0, 0, 1, 1], 0.0) == []
+print("load mirror OK: 12 LCG sequences x 40 steps raise exactly the "
+      "19 pinned (sequence, step) alarms; Figure-2 and balanced "
+      "fixtures stay silent, the skewed fixture raises once at step 3")

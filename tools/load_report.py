@@ -1,0 +1,340 @@
+"""Render expert-load telemetry: EWMA heat tables and alarm timelines.
+
+The Rust side exports load telemetry through two channels, and this tool
+reads both:
+
+  * the Prometheus text exposition written to `[ep] metrics_expose_path`
+    (`--metrics-expose`): `moeblaze_expert_load_ewma{expert,layer}`
+    gauges plus the per-layer `moeblaze_load_imbalance` /
+    `moeblaze_load_cov` / `moeblaze_router_entropy` /
+    `moeblaze_skew_alarm_active` gauges, the
+    `moeblaze_skew_alarms_total` counter, and the per-rank
+    `moeblaze_rank_load_rows_total` counter;
+  * the metrics JSONL written to `[ep] metrics_path` (`--metrics`):
+    one `skew_alarm` event per raising edge (step/tick, layer,
+    imbalance, threshold) and one end-of-run `load_summary`.
+
+The exposition gives the *final* load shape (heat table per layer, rank
+row totals); the JSONL gives the *history* (when each alarm fired).
+Either input alone renders what it can.
+
+Usage:
+    python tools/load_report.py metrics.prom
+    python tools/load_report.py --jsonl metrics.jsonl
+    python tools/load_report.py metrics.prom --jsonl metrics.jsonl
+    python tools/load_report.py --self-test
+"""
+import argparse
+import json
+import math
+import pathlib
+import re
+import sys
+
+# Metric family names published by ExpertLoadTracker::publish_registry
+# (rust/src/trace/load.rs) — parsing keys, keep in sync.
+EWMA = "moeblaze_expert_load_ewma"
+IMBALANCE = "moeblaze_load_imbalance"
+COV = "moeblaze_load_cov"
+ENTROPY = "moeblaze_router_entropy"
+ALARM_ACTIVE = "moeblaze_skew_alarm_active"
+ALARMS_TOTAL = "moeblaze_skew_alarms_total"
+RANK_ROWS = "moeblaze_rank_load_rows_total"
+
+# Unicode eighth-blocks for the per-layer heat strip.
+HEAT = "▁▂▃▄▅▆▇█"
+
+_SAMPLE = re.compile(
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(?:\{(.*)\})?\s+(\S+)\s*$')
+_LABEL = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:\\.|[^"\\])*)"')
+
+
+def _unescape(v):
+    """Invert the exposition label escaping (\\\\, \\", \\n)."""
+    out, i = [], 0
+    while i < len(v):
+        if v[i] == "\\" and i + 1 < len(v):
+            out.append({"n": "\n", '"': '"', "\\": "\\"}.get(v[i + 1],
+                                                            v[i + 1]))
+            i += 2
+        else:
+            out.append(v[i])
+            i += 1
+    return "".join(out)
+
+
+def parse_exposition(text):
+    """Prometheus text -> {family: [(labels dict, float value)]}.
+
+    Comment/HELP/TYPE lines and malformed lines are skipped; NaN and
+    +/-Inf values parse to their float counterparts.
+    """
+    families = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        m = _SAMPLE.match(line)
+        if not m:
+            continue
+        name, raw_labels, raw_value = m.groups()
+        try:
+            value = float(raw_value)
+        except ValueError:
+            continue
+        labels = {k: _unescape(v)
+                  for k, v in _LABEL.findall(raw_labels or "")}
+        families.setdefault(name, []).append((labels, value))
+    return families
+
+
+def parse_jsonl(text):
+    """Metrics JSONL -> list of event dicts (malformed lines skipped)."""
+    events = []
+    for line in text.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            e = json.loads(line)
+        except ValueError:
+            continue
+        if isinstance(e, dict):
+            events.append(e)
+    return events
+
+
+def _by_layer(samples):
+    out = {}
+    for labels, value in samples:
+        try:
+            out[int(labels.get("layer", "0"))] = value
+        except ValueError:
+            continue
+    return out
+
+
+def heat_table(families):
+    """Per-layer expert EWMA heat tables from exposition samples."""
+    lines = []
+    grid = {}
+    for labels, value in families.get(EWMA, []):
+        try:
+            layer = int(labels.get("layer", "0"))
+            expert = int(labels.get("expert", "0"))
+        except ValueError:
+            continue
+        grid.setdefault(layer, {})[expert] = value
+    if not grid:
+        lines.append("load_report: no expert EWMA gauges in exposition")
+        return lines
+
+    imb = _by_layer(families.get(IMBALANCE, []))
+    cov = _by_layer(families.get(COV, []))
+    ent = _by_layer(families.get(ENTROPY, []))
+    active = _by_layer(families.get(ALARM_ACTIVE, []))
+    totals = _by_layer(families.get(ALARMS_TOTAL, []))
+
+    for layer in sorted(grid):
+        experts = grid[layer]
+        vals = [experts.get(e, 0.0) for e in range(max(experts) + 1)]
+        finite = [v for v in vals if math.isfinite(v)]
+        peak = max(finite) if finite else 0.0
+        strip = "".join(
+            HEAT[min(len(HEAT) - 1, int(v / peak * (len(HEAT) - 1)))]
+            if peak > 0 and math.isfinite(v) else HEAT[0]
+            for v in vals)
+        flag = " ALARM" if active.get(layer, 0.0) > 0 else ""
+        lines.append(
+            f"layer {layer}  {strip}  imbalance {imb.get(layer, 0.0):.3f}  "
+            f"cov {cov.get(layer, 0.0):.3f}  entropy {ent.get(layer, 0.0):.3f}  "
+            f"alarms {totals.get(layer, 0.0):.0f}{flag}")
+        lines.append("  " + "  ".join(
+            f"e{e}:{v:.1f}" for e, v in enumerate(vals)))
+
+    rank_rows = {}
+    for labels, value in families.get(RANK_ROWS, []):
+        try:
+            rank_rows[int(labels.get("rank", "0"))] = value
+        except ValueError:
+            continue
+    if rank_rows:
+        lines.append("rank rows  " + "  ".join(
+            f"r{r}:{rank_rows[r]:.0f}" for r in sorted(rank_rows)))
+    return lines
+
+
+def alarm_timeline(events):
+    """Per-layer `.`/`!` timeline of skew_alarm events over steps/ticks."""
+    lines = []
+    alarms = [e for e in events if e.get("kind") == "skew_alarm"]
+    summary = next((e for e in events if e.get("kind") == "load_summary"),
+                   None)
+    if not alarms:
+        lines.append("load_report: no skew_alarm events"
+                     + (" (summary: 0 alarms)" if summary else ""))
+    else:
+        def when(e):
+            return int(e.get("step", e.get("tick", 0)))
+
+        last = max(when(e) for e in alarms)
+        by_layer = {}
+        for e in alarms:
+            by_layer.setdefault(int(e.get("layer", 0)), []).append(e)
+        for layer in sorted(by_layer):
+            marks = {when(e) for e in by_layer[layer]}
+            strip = "".join("!" if s in marks else "."
+                            for s in range(last + 1))
+            lines.append(f"layer {layer}  [{strip}]  "
+                         f"{len(by_layer[layer])} alarm(s)")
+            for e in sorted(by_layer[layer], key=when):
+                lines.append(
+                    f"  step {when(e)}: imbalance "
+                    f"{e.get('imbalance', 0.0):.3f} over threshold "
+                    f"{e.get('threshold', 0.0):g} "
+                    f"({int(e.get('ranks', 0))} ranks)")
+    if summary:
+        lines.append(
+            f"summary: {int(summary.get('skew_alarms', 0))} alarm(s), "
+            f"max imbalance {summary.get('max_imbalance', 0.0):.3f} over "
+            f"{int(summary.get('layers', 0))} layer(s)")
+    return lines
+
+
+def _synthetic_exposition():
+    return "\n".join([
+        "# HELP moeblaze_expert_load_ewma EWMA of routed rows",
+        "# TYPE moeblaze_expert_load_ewma gauge",
+        'moeblaze_expert_load_ewma{expert="0",layer="0"} 12',
+        'moeblaze_expert_load_ewma{expert="1",layer="0"} 2',
+        'moeblaze_expert_load_ewma{expert="2",layer="0"} 1.5',
+        'moeblaze_expert_load_ewma{expert="3",layer="0"} 1',
+        'moeblaze_expert_load_ewma{expert="0",layer="1"} 4',
+        'moeblaze_expert_load_ewma{expert="1",layer="1"} 4',
+        "# TYPE moeblaze_load_imbalance gauge",
+        'moeblaze_load_imbalance{layer="0"} 1.75',
+        'moeblaze_load_imbalance{layer="1"} 1',
+        "# TYPE moeblaze_load_cov gauge",
+        'moeblaze_load_cov{layer="0"} 0.75',
+        "# TYPE moeblaze_router_entropy gauge",
+        'moeblaze_router_entropy{layer="0"} 1.213',
+        "# TYPE moeblaze_skew_alarm_active gauge",
+        'moeblaze_skew_alarm_active{layer="0"} 1',
+        'moeblaze_skew_alarm_active{layer="1"} 0',
+        "# TYPE moeblaze_skew_alarms_total counter",
+        'moeblaze_skew_alarms_total{layer="0"} 1',
+        "# TYPE moeblaze_rank_load_rows_total counter",
+        'moeblaze_rank_load_rows_total{rank="0"} 140',
+        'moeblaze_rank_load_rows_total{rank="1"} 25',
+        'weird{tag="a\\"b\\\\c\\nd"} NaN',
+        "this line is not a sample",
+    ]) + "\n"
+
+
+def _synthetic_jsonl():
+    return "\n".join([
+        json.dumps({"kind": "skew_alarm", "t": 0.1, "step": 3, "layer": 0,
+                    "imbalance": 1.75, "threshold": 1.5, "ranks": 2}),
+        json.dumps({"kind": "skew_alarm", "t": 0.2, "step": 7, "layer": 0,
+                    "imbalance": 1.9, "threshold": 1.5, "ranks": 2}),
+        json.dumps({"kind": "train", "t": 0.3, "loss": 1.0}),
+        "not json at all",
+        json.dumps({"kind": "load_summary", "t": 0.4, "skew_alarms": 2,
+                    "max_imbalance": 1.9, "layers": 1, "records": 10}),
+    ]) + "\n"
+
+
+def self_test() -> int:
+    checks = []
+
+    fams = parse_exposition(_synthetic_exposition())
+    checks.append(("EWMA samples parse",
+                   len(fams.get(EWMA, [])) == 6))
+    checks.append(("comment and junk lines skipped",
+                   "this" not in fams))
+    ewma00 = next((v for l, v in fams[EWMA]
+                   if l == {"expert": "0", "layer": "0"}), None)
+    checks.append(("labelled value round-trips", ewma00 == 12.0))
+    weird = fams.get("weird", [])
+    checks.append(("escaped label value unescapes",
+                   weird and weird[0][0] == {"tag": 'a"b\\c\nd'}))
+    checks.append(("NaN value parses", weird
+                   and math.isnan(weird[0][1])))
+
+    heat = "\n".join(heat_table(fams))
+    checks.append(("heat table covers both layers",
+                   "layer 0" in heat and "layer 1" in heat))
+    checks.append(("hot expert renders full block",
+                   HEAT[-1] in heat))
+    checks.append(("imbalance gauge surfaces", "1.750" in heat))
+    checks.append(("active alarm flagged", "ALARM" in heat))
+    checks.append(("rank totals surface",
+                   "r0:140" in heat and "r1:25" in heat))
+
+    events = parse_jsonl(_synthetic_jsonl())
+    checks.append(("jsonl skips malformed lines", len(events) == 4))
+    timeline = "\n".join(alarm_timeline(events))
+    checks.append(("alarm steps marked",
+                   "[...!...!]" in timeline))
+    checks.append(("alarm details listed",
+                   "step 3" in timeline and "step 7" in timeline))
+    checks.append(("summary rendered",
+                   "2 alarm(s), max imbalance 1.900" in timeline))
+
+    quiet = "\n".join(alarm_timeline(
+        [{"kind": "load_summary", "skew_alarms": 0, "max_imbalance": 1.05,
+          "layers": 1, "records": 4}]))
+    checks.append(("silent run renders summary only",
+                   "no skew_alarm events" in quiet and "0 alarm(s)" in quiet))
+    checks.append(("empty exposition degrades gracefully",
+                   "no expert EWMA gauges"
+                   in "\n".join(heat_table({}))))
+
+    failed = [name for name, passed in checks if not passed]
+    for name, passed in checks:
+        print(f"load_report self-test: {name}: "
+              f"{'ok' if passed else 'FAIL'}")
+    if failed:
+        print(f"load_report self-test: {len(failed)} check(s) failed",
+              file=sys.stderr)
+        return 1
+    print(f"load_report self-test: all {len(checks)} checks passed")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("exposition", nargs="?",
+                    help="Prometheus exposition file (--metrics-expose)")
+    ap.add_argument("--jsonl", metavar="PATH",
+                    help="metrics JSONL file (--metrics) for the "
+                         "alarm timeline")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the built-in behavior checks and exit")
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
+    if not args.exposition and not args.jsonl:
+        ap.error("an exposition path, --jsonl PATH, or --self-test "
+                 "is required")
+
+    if args.exposition:
+        p = pathlib.Path(args.exposition)
+        if not p.exists():
+            print(f"load_report: {p} does not exist", file=sys.stderr)
+            return 1
+        for line in heat_table(parse_exposition(p.read_text())):
+            print(line)
+    if args.jsonl:
+        p = pathlib.Path(args.jsonl)
+        if not p.exists():
+            print(f"load_report: {p} does not exist", file=sys.stderr)
+            return 1
+        for line in alarm_timeline(parse_jsonl(p.read_text())):
+            print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

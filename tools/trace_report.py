@@ -16,7 +16,12 @@ self-validating, and this tool is the validator CI runs after the
     `measured_step_s` up to float addition order;
   * memory consistency: per step and rank, the max `resident_bytes`
     counter sample equals the summary's `peak_rank_bytes[rank]` exactly
-    (both are the same u64 `memory_per_rank()` reading).
+    (both are the same u64 `memory_per_rank()` reading);
+  * load tracks (only when the trace carries them — `--skew-alarm` /
+    `--metrics-expose` runs): the per-rank `load_rows` counter tracks
+    are cumulative routed-row totals, so each rank's samples must be
+    monotone non-decreasing in ts order, and the tracks must be
+    rank-complete — every rank `0..ranks` has one.
 
 Usage:
     python tools/trace_report.py --validate trace.json   # CI gate
@@ -116,6 +121,41 @@ def counter_maxima(trace, name="resident_bytes"):
     return maxima
 
 
+def check_load_tracks(trace, ranks):
+    """Per-rank `load_rows` counter tracks: monotone and rank-complete.
+
+    The tracker records *cumulative* routed rows per rank, so within a
+    rank's track the sampled value can never decrease. Load tracks are
+    optional (they exist only when the run had a load tracker attached);
+    an empty set of tracks is valid.
+    """
+    fails = []
+    tracks = {}
+    for e in iter_events(trace, "C"):
+        if e.get("name") != "load_rows":
+            continue
+        rank = rank_of_pid(e.get("pid", 0))
+        tracks.setdefault(rank, []).append(
+            (float(e.get("ts", 0.0)),
+             float(e.get("args", {}).get("load_rows", 0.0))))
+    if not tracks:
+        return fails
+    missing = sorted(set(range(ranks)) - set(tracks))
+    if missing:
+        fails.append(f"load_rows tracks exist but ranks {missing} have "
+                     f"none ({ranks} ranks in metadata)")
+    for rank in sorted(tracks):
+        samples = sorted(tracks[rank])
+        for (_, prev), (ts, cur) in zip(samples, samples[1:]):
+            if cur < prev:
+                fails.append(
+                    f"rank {rank}: load_rows track decreases "
+                    f"{prev:.0f} -> {cur:.0f} at ts {ts:.0f} "
+                    f"(cumulative counter must be monotone)")
+                break
+    return fails
+
+
 def validate(trace):
     """Return a list of failure strings (empty = trace is valid)."""
     meta = trace.get("moeblaze")
@@ -134,6 +174,7 @@ def validate(trace):
     ranks = int(meta.get("ranks", 0))
     sums = section_span_sums(trace)
     maxima = counter_maxima(trace)
+    fails.extend(check_load_tracks(trace, ranks))
 
     for entry in steps:
         step = int(entry.get("step", -1))
@@ -264,6 +305,32 @@ def self_test() -> int:
     sparse["moeblaze"]["steps"].append(
         {"step": 7, "measured_step_s": 0.0, "peak_rank_bytes": []})
     checks.append(("span-free zero step passes", validate(sparse) == []))
+
+    # load_rows tracks are optional — the base trace has none and
+    # validates; with well-formed tracks it still validates
+    def with_load_tracks(rows_by_rank_step):
+        t = json.loads(json.dumps(good))
+        for (rank, step), rows in sorted(rows_by_rank_step.items()):
+            t["traceEvents"].append(
+                {"name": "load_rows", "cat": "gauge", "ph": "C",
+                 "ts": step * 10_000.0 + 9_000.0, "pid": rank + 2,
+                 "tid": 0, "args": {"load_rows": rows, "step": step,
+                                    "phase": "gather"}})
+        return t
+
+    tracked = with_load_tracks({(0, 0): 96.0, (0, 1): 192.0,
+                                (1, 0): 32.0, (1, 1): 64.0})
+    checks.append(("monotone rank-complete load tracks pass",
+                   validate(tracked) == []))
+
+    shrinking = with_load_tracks({(0, 0): 96.0, (0, 1): 40.0,
+                                  (1, 0): 32.0, (1, 1): 64.0})
+    checks.append(("decreasing load_rows track fails",
+                   any("monotone" in f for f in validate(shrinking))))
+
+    lopsided = with_load_tracks({(0, 0): 96.0, (0, 1): 192.0})
+    checks.append(("rank-incomplete load tracks fail",
+                   any("ranks [1]" in f for f in validate(lopsided))))
 
     failed = [name for name, passed in checks if not passed]
     for name, passed in checks:
