@@ -189,6 +189,21 @@ pub struct EpConfig {
     /// `LOAD_HYSTERESIS` steps after warmup; 0 = alarm off (load EWMAs
     /// still track whenever a tracker is attached)
     pub skew_alarm: f64,
+    /// crash-consistent training snapshots (`resilience::snapshot`):
+    /// write a checksummed `TrainState` generation every this many
+    /// optimizer steps (plus one at run end), keeping the last
+    /// `KEEP_GENERATIONS`; 0 = snapshots off. Snapshots land only at
+    /// optimizer-step boundaries — a mid-grad-accum request defers to
+    /// the step boundary so resume stays bit-identical.
+    pub snapshot_interval: usize,
+    /// base path of the snapshot generations (`{path}.g<step>`);
+    /// empty = snapshots off regardless of the interval
+    pub snapshot_path: String,
+    /// resume from the newest loadable snapshot generation at
+    /// `snapshot_path` before stepping; a corrupt newest generation
+    /// falls back to the previous one, a config whose numerics disagree
+    /// with the snapshot's fingerprint is a hard error
+    pub resume: bool,
 }
 
 impl Default for EpConfig {
@@ -225,6 +240,9 @@ impl Default for EpConfig {
             trace_out: String::new(),
             metrics_expose_path: String::new(),
             skew_alarm: 0.0,
+            snapshot_interval: 0,
+            snapshot_path: String::new(),
+            resume: false,
         }
     }
 }
@@ -263,6 +281,9 @@ impl EpConfig {
         "trace_out",
         "metrics_expose_path",
         "skew_alarm",
+        "snapshot_interval",
+        "snapshot_path",
+        "resume",
     ];
 
     pub fn validate(&self) -> Result<(), String> {
@@ -327,6 +348,9 @@ impl EpConfig {
                 self.skew_alarm
             ));
         }
+        if self.resume && self.snapshot_path.is_empty() {
+            return Err("ep.resume = true needs ep.snapshot_path set".into());
+        }
         // single sources of truth for names: the respective registries
         let _ = crate::coordinator::optim::optimizer_from_name(&self.optimizer)?;
         let _ = crate::coordinator::optim::LrSchedule::parse(&self.lr_schedule)?;
@@ -384,6 +408,10 @@ impl EpConfig {
             metrics_expose_path: t.str_or(&key("metrics_expose_path"),
                                           &d.metrics_expose_path),
             skew_alarm: t.f64_or(&key("skew_alarm"), d.skew_alarm),
+            snapshot_interval: t.usize_or(&key("snapshot_interval"),
+                                          d.snapshot_interval),
+            snapshot_path: t.str_or(&key("snapshot_path"), &d.snapshot_path),
+            resume: t.bool_or(&key("resume"), d.resume),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -578,10 +606,11 @@ mod tests {
                 "activation" => format!("{k} = \"silu\""),
                 "lr_schedule" => format!("{k} = \"constant\""),
                 "metrics_path" | "calibration_path" | "trace_out"
-                | "metrics_expose_path" => {
+                | "metrics_expose_path" | "snapshot_path" => {
                     format!("{k} = \"\"")
                 }
-                "calibrate" => format!("{k} = false"),
+                "calibrate" | "resume" => format!("{k} = false"),
+                "snapshot_interval" => format!("{k} = 0"),
                 "skew" => format!("{k} = 0.7"),
                 "lr" => format!("{k} = 0.05"),
                 "link_gbps" => format!("{k} = 50.0"),
@@ -635,6 +664,44 @@ mod tests {
             .validate()
             .is_err());
         assert!(EpConfig { skew_alarm: f64::NAN, ..Default::default() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn from_toml_rejects_misspelled_resilience_keys_by_name() {
+        // the PR-10 snapshot/resume keys obey the same loud-typo contract
+        for (bad, good) in [
+            ("snapshot_every", "snapshot_interval"),
+            ("snapshot_steps", "snapshot_interval"),
+            ("snapshot_file", "snapshot_path"),
+            ("checkpoint_path", "snapshot_path"),
+            ("restore", "resume"),
+        ] {
+            let t = Toml::parse(&format!("[ep]\n{bad} = 1")).unwrap();
+            let err = EpConfig::from_toml(&t, "ep").unwrap_err();
+            assert!(err.contains(&format!("`{bad}`")), "{err}");
+            assert!(err.contains(good),
+                    "error for `{bad}` should name `{good}`: {err}");
+        }
+        // the real spellings parse and land in the config
+        let t = Toml::parse(
+            "[ep]\nsnapshot_interval = 5\nsnapshot_path = \"/tmp/snap\"\n\
+             resume = true",
+        )
+        .unwrap();
+        let c = EpConfig::from_toml(&t, "ep").unwrap();
+        assert_eq!(c.snapshot_interval, 5);
+        assert_eq!(c.snapshot_path, "/tmp/snap");
+        assert!(c.resume);
+        // defaults: snapshots off, no resume
+        let d = EpConfig::default();
+        assert_eq!(d.snapshot_interval, 0);
+        assert!(d.snapshot_path.is_empty());
+        assert!(!d.resume);
+        d.validate().unwrap();
+        // resume without a snapshot path has nothing to restore from
+        assert!(EpConfig { resume: true, ..Default::default() }
             .validate()
             .is_err());
     }

@@ -1,0 +1,205 @@
+//! Deterministic fault-injection configuration (`[fault]` TOML section).
+//!
+//! All-zero (the default) means no faults: the trainer and serve loop
+//! consult nothing and pay nothing. Any positive probability arms the
+//! seeded `resilience::fault::FaultPlan`, whose every decision is a
+//! pure mixing function of `(seed, site, step, lane)` — two runs with
+//! the same `[fault]` section raise the identical fault sequence, which
+//! is what lets the recovery paths be pinned by tests (and mirrored
+//! bit-for-bit in `tools/ep_sim.py`).
+
+use super::toml::Toml;
+
+/// Configuration of one deterministic fault-injection plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// decision seed — same seed, same fault sequence
+    pub seed: u64,
+    /// per-step probability that one rank stalls (numerics-neutral:
+    /// surfaced as a recovered `FaultEvent`, and the serve loop's shed
+    /// trigger)
+    pub stall_prob: f64,
+    /// simulated stall duration (host sleep; 0 = record only)
+    pub stall_ms: u64,
+    /// per-(step, microbatch, attempt) probability that the exchange
+    /// transiently fails — recovered by bounded retry with exponential
+    /// backoff, or surfaced unrecovered when the budget is exhausted
+    pub exchange_fail_prob: f64,
+    /// per-snapshot probability that the just-written generation is
+    /// corrupted (byte flip or truncation) — recovered by the
+    /// last-good-generation fallback
+    pub snapshot_corrupt_prob: f64,
+    /// retry budget for transient exchange/IO faults
+    pub max_retries: usize,
+    /// base backoff between retries (doubles per attempt)
+    pub backoff_ms: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            stall_prob: 0.0,
+            stall_ms: 0,
+            exchange_fail_prob: 0.0,
+            snapshot_corrupt_prob: 0.0,
+            max_retries: 3,
+            backoff_ms: 1,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Every key `[fault]` understands — `from_toml` rejects anything
+    /// else by name instead of silently ignoring it.
+    pub const KNOWN_KEYS: &'static [&'static str] = &[
+        "seed",
+        "stall_prob",
+        "stall_ms",
+        "exchange_fail_prob",
+        "snapshot_corrupt_prob",
+        "max_retries",
+        "backoff_ms",
+    ];
+
+    /// Whether any fault family is armed.
+    pub fn enabled(&self) -> bool {
+        self.stall_prob > 0.0
+            || self.exchange_fail_prob > 0.0
+            || self.snapshot_corrupt_prob > 0.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, p) in [
+            ("fault.stall_prob", self.stall_prob),
+            ("fault.exchange_fail_prob", self.exchange_fail_prob),
+            ("fault.snapshot_corrupt_prob", self.snapshot_corrupt_prob),
+        ] {
+            if !(p.is_finite() && (0.0..=1.0).contains(&p)) {
+                return Err(format!("{name} must be in [0, 1], got {p}"));
+            }
+        }
+        if self.max_retries > 16 {
+            return Err(format!(
+                "fault.max_retries {} is past any sane budget (max 16)",
+                self.max_retries
+            ));
+        }
+        if self.backoff_ms > 10_000 {
+            return Err(format!(
+                "fault.backoff_ms {} would stall tests (max 10000)",
+                self.backoff_ms
+            ));
+        }
+        if self.stall_ms > 10_000 {
+            return Err(format!(
+                "fault.stall_ms {} would stall tests (max 10000)",
+                self.stall_ms
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn from_toml(t: &Toml, prefix: &str) -> Result<FaultConfig, String> {
+        t.reject_unknown_keys(prefix, Self::KNOWN_KEYS)?;
+        let d = FaultConfig::default();
+        let key = |k: &str| format!("{prefix}.{k}");
+        let cfg = FaultConfig {
+            seed: t.usize_or(&key("seed"), d.seed as usize) as u64,
+            stall_prob: t.f64_or(&key("stall_prob"), d.stall_prob),
+            stall_ms: t.usize_or(&key("stall_ms"), d.stall_ms as usize) as u64,
+            exchange_fail_prob: t.f64_or(&key("exchange_fail_prob"),
+                                         d.exchange_fail_prob),
+            snapshot_corrupt_prob: t.f64_or(&key("snapshot_corrupt_prob"),
+                                            d.snapshot_corrupt_prob),
+            max_retries: t.usize_or(&key("max_retries"), d.max_retries),
+            backoff_ms: t.usize_or(&key("backoff_ms"), d.backoff_ms as usize)
+                as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_disabled_and_valid() {
+        let d = FaultConfig::default();
+        assert!(!d.enabled());
+        d.validate().unwrap();
+        // arming any one family enables the plan
+        assert!(FaultConfig { stall_prob: 0.1, ..Default::default() }.enabled());
+        assert!(FaultConfig { exchange_fail_prob: 0.1, ..Default::default() }
+            .enabled());
+        assert!(FaultConfig { snapshot_corrupt_prob: 0.1, ..Default::default() }
+            .enabled());
+    }
+
+    #[test]
+    fn from_toml_parses_and_validates() {
+        let t = Toml::parse(
+            "[fault]\nseed = 7\nstall_prob = 0.15\nexchange_fail_prob = 0.25\n\
+             snapshot_corrupt_prob = 0.2\nmax_retries = 4\nbackoff_ms = 2",
+        )
+        .unwrap();
+        let c = FaultConfig::from_toml(&t, "fault").unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.stall_prob, 0.15);
+        assert_eq!(c.exchange_fail_prob, 0.25);
+        assert_eq!(c.snapshot_corrupt_prob, 0.2);
+        assert_eq!(c.max_retries, 4);
+        assert_eq!(c.backoff_ms, 2);
+        assert!(c.enabled());
+        // a missing section yields the disabled default
+        let t = Toml::parse("[ep]\nranks = 2").unwrap();
+        assert_eq!(FaultConfig::from_toml(&t, "fault").unwrap(),
+                   FaultConfig::default());
+        // out-of-range values fail loudly
+        assert!(FaultConfig { stall_prob: 1.5, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(FaultConfig { exchange_fail_prob: -0.1, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(FaultConfig { snapshot_corrupt_prob: f64::NAN,
+                              ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(FaultConfig { max_retries: 99, ..Default::default() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn from_toml_rejects_unknown_keys_by_name() {
+        // typos in [fault] fail loudly, naming the known keys
+        for (bad, good) in [
+            ("stall_probability", "stall_prob"),
+            ("exchange_prob", "exchange_fail_prob"),
+            ("corrupt_prob", "snapshot_corrupt_prob"),
+            ("retries", "max_retries"),
+        ] {
+            let t = Toml::parse(&format!("[fault]\n{bad} = 1")).unwrap();
+            let err = FaultConfig::from_toml(&t, "fault").unwrap_err();
+            assert!(err.contains(&format!("`{bad}`")), "{err}");
+            assert!(err.contains(good),
+                    "error for `{bad}` should name `{good}`: {err}");
+        }
+        // every documented key passes the check
+        let all = FaultConfig::KNOWN_KEYS
+            .iter()
+            .map(|k| match *k {
+                "stall_prob" | "exchange_fail_prob" | "snapshot_corrupt_prob" => {
+                    format!("{k} = 0.5")
+                }
+                _ => format!("{k} = 1"),
+            })
+            .collect::<Vec<_>>()
+            .join("\n");
+        let t = Toml::parse(&format!("[fault]\n{all}")).unwrap();
+        FaultConfig::from_toml(&t, "fault").unwrap();
+    }
+}

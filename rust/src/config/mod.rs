@@ -1,6 +1,7 @@
 //! Configuration system: TOML-subset parser + typed configs + paper presets.
 
 pub mod ep;
+pub mod fault;
 pub mod model;
 pub mod paper;
 pub mod serving;
@@ -8,6 +9,7 @@ pub mod toml;
 pub mod train;
 
 pub use ep::{EpConfig, Placement};
+pub use fault::FaultConfig;
 pub use serving::{AdmissionPolicy, ServingConfig};
 pub use model::{Activation, Impl, MoeConfig};
 pub use paper::{paper_configs, scaled_configs, PaperConfig, PAPER_BLOCK, SCALED_BLOCK};

@@ -78,6 +78,14 @@ pub struct ServingConfig {
     /// host span per tick (tokens/requests batched); off leaves only
     /// the engine phase spans in the trace
     pub trace_ticks: bool,
+    /// per-request deadline in ticks: a request still queued after
+    /// waiting this many ticks is shed (counted, never silently
+    /// dropped). 0 = no deadlines
+    pub deadline_ticks: usize,
+    /// how many ticks shed mode lasts after an injected rank stall:
+    /// admission flips to reject (arrivals are shed) while the queue
+    /// keeps draining; 0 makes stalls shed only the stalled tick itself
+    pub shed_recovery_ticks: usize,
 }
 
 impl Default for ServingConfig {
@@ -92,6 +100,8 @@ impl Default for ServingConfig {
             max_request_tokens: 32,
             seed: 7,
             trace_ticks: true,
+            deadline_ticks: 0,
+            shed_recovery_ticks: 2,
         }
     }
 }
@@ -109,6 +119,8 @@ impl ServingConfig {
         "max_request_tokens",
         "seed",
         "trace_ticks",
+        "deadline_ticks",
+        "shed_recovery_ticks",
     ];
 
     pub fn validate(&self) -> Result<(), String> {
@@ -150,6 +162,13 @@ impl ServingConfig {
                 self.max_request_tokens, self.tick_tokens
             ));
         }
+        if self.shed_recovery_ticks > self.ticks {
+            return Err(format!(
+                "serving.shed_recovery_ticks {} exceeds the run's {} ticks \
+                 (shed mode would never clear)",
+                self.shed_recovery_ticks, self.ticks
+            ));
+        }
         Ok(())
     }
 
@@ -171,6 +190,9 @@ impl ServingConfig {
                                            d.max_request_tokens),
             seed: t.usize_or(&key("seed"), d.seed as usize) as u64,
             trace_ticks: t.bool_or(&key("trace_ticks"), d.trace_ticks),
+            deadline_ticks: t.usize_or(&key("deadline_ticks"), d.deadline_ticks),
+            shed_recovery_ticks: t.usize_or(&key("shed_recovery_ticks"),
+                                            d.shed_recovery_ticks),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -244,5 +266,38 @@ mod tests {
         let err = ServingConfig::from_toml(&t, "serving").unwrap_err();
         assert!(err.contains("tick_budget"), "{err}");
         assert!(err.contains("serving"), "{err}");
+    }
+
+    #[test]
+    fn resilience_keys_parse_and_misspellings_are_rejected() {
+        // the graceful-degradation knobs parse with defaults off/short
+        let t = Toml::parse(
+            "[serving]\ndeadline_ticks = 3\nshed_recovery_ticks = 5",
+        )
+        .unwrap();
+        let c = ServingConfig::from_toml(&t, "serving").unwrap();
+        assert_eq!(c.deadline_ticks, 3);
+        assert_eq!(c.shed_recovery_ticks, 5);
+        let d = ServingConfig::default();
+        assert_eq!(d.deadline_ticks, 0, "deadlines default off");
+        // misspellings of the new keys fail loudly, naming the real key
+        for (bad, good) in [
+            ("deadline", "deadline_ticks"),
+            ("request_deadline_ticks", "deadline_ticks"),
+            ("shed_recovery", "shed_recovery_ticks"),
+            ("shed_ticks", "shed_recovery_ticks"),
+        ] {
+            let t = Toml::parse(&format!("[serving]\n{bad} = 2")).unwrap();
+            let err = ServingConfig::from_toml(&t, "serving").unwrap_err();
+            assert!(err.contains(&format!("`{bad}`")), "{err}");
+            assert!(err.contains(good),
+                    "error for `{bad}` should name `{good}`: {err}");
+        }
+        // a recovery window longer than the run can never clear
+        assert!(ServingConfig { shed_recovery_ticks: 99,
+                                ticks: 10,
+                                ..ServingConfig::default() }
+            .validate()
+            .is_err());
     }
 }

@@ -670,6 +670,21 @@ pub trait ExecutionEngine {
     /// checkpointing).
     fn gather_params(&self) -> Result<ExpertStore, String>;
 
+    /// Replace the engine-owned expert parameters with `store`'s — the
+    /// restore half of crash-consistent snapshots
+    /// (`resilience::snapshot::TrainState`). `apply_update` cannot
+    /// restore (IEEE-754: `a + (b − a) ≠ b`), so resume swaps the exact
+    /// parameter bits in. The store must match the engine's expert
+    /// count, dimensions, and gating; rank count, chunking, and
+    /// checkpoint policy are *not* part of the contract (numerics are
+    /// pinned invariant to them), so a snapshot taken at R = 1 restores
+    /// into an R = 4 engine — the parameter-migration substrate the
+    /// ROADMAP names. Any open step session is discarded. Engines
+    /// without parameter storage reject the call (the default).
+    fn load_params(&mut self, _store: &ExpertStore) -> Result<(), String> {
+        Err("this engine cannot load parameters".into())
+    }
+
     /// Phase timeline of the last step session under the simulated
     /// link-bandwidth/compute-rate cost model, when this engine overlaps
     /// communication with compute
@@ -1399,6 +1414,14 @@ impl ExecutionEngine for SingleRankEngine {
         Ok(self.store.clone())
     }
 
+    fn load_params(&mut self, store: &ExpertStore) -> Result<(), String> {
+        check_store_like(store, self.store.experts.len(), self.store.d_model,
+                         self.store.d_hidden, self.store.gated())?;
+        self.store = store.clone();
+        self.session = None;
+        Ok(())
+    }
+
     fn set_tracer(&mut self, tracer: Tracer) {
         self.tracer = Some(tracer);
     }
@@ -1983,6 +2006,14 @@ impl ExecutionEngine for ShardedEngine {
         ExpertStore::gather(&self.rank_params, self.topo.num_experts)
     }
 
+    fn load_params(&mut self, store: &ExpertStore) -> Result<(), String> {
+        check_store_like(store, self.topo.num_experts, self.d_model,
+                         self.d_hidden, self.gated)?;
+        self.rank_params = store.shard(&self.topo.assignment());
+        self.session = None;
+        Ok(())
+    }
+
     fn set_tracer(&mut self, tracer: Tracer) {
         self.tracer = Some(tracer);
     }
@@ -1990,6 +2021,38 @@ impl ExecutionEngine for ShardedEngine {
     fn set_load_tracker(&mut self, tracker: ExpertLoadTracker) {
         self.load = Some(tracker);
     }
+}
+
+/// Shape gate for [`ExecutionEngine::load_params`]: the incoming store
+/// must agree with the engine on expert count, dimensions, gating, and
+/// every per-expert tensor length — a half-shaped store is corruption,
+/// and restoring any of it would be the silent half-restore the
+/// resilience tests outlaw.
+pub(crate) fn check_store_like(store: &ExpertStore, num_experts: usize, d: usize,
+                               h: usize, gated: bool) -> Result<(), String> {
+    if store.experts.len() != num_experts || store.d_model != d
+        || store.d_hidden != h
+    {
+        return Err(format!(
+            "snapshot store (E={}, d={}, h={}) does not match engine \
+             (E={num_experts}, d={d}, h={h})",
+            store.experts.len(),
+            store.d_model,
+            store.d_hidden
+        ));
+    }
+    if store.gated() != gated {
+        return Err("snapshot store gating disagrees with the engine".into());
+    }
+    for (e, p) in store.experts.iter().enumerate() {
+        let w3_ok = if gated { p.w3.len() == h * d } else { p.w3.is_empty() };
+        if p.w1.len() != h * d || p.b1.len() != h || p.w2.len() != d * h
+            || p.b2.len() != d || !w3_ok
+        {
+            return Err(format!("snapshot expert {e} tensor shapes are torn"));
+        }
+    }
+    Ok(())
 }
 
 // -- packed-path reference baseline -----------------------------------------

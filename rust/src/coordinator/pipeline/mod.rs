@@ -87,11 +87,11 @@ use self::timeline::{bwd_flops_per_row, fwd_flops_per_row, CostModel, OverlapRep
 use crate::trace::load::ExpertLoadTracker;
 use crate::trace::{SpanRecord, TracePhase, Tracer};
 
-use super::engine::{add_params, check_batch, fold_dx, lru_get_or_insert,
-                    mem_peak_phase, next_engine_tag, record_compute_spans,
-                    split_bounds_weighted, BatchPlan, ExecutionEngine,
-                    RankBwdWork, SavedActs, StepBatch, StepHandle, Traffic,
-                    PLAN_CACHE_CAP};
+use super::engine::{add_params, check_batch, check_store_like, fold_dx,
+                    lru_get_or_insert, mem_peak_phase, next_engine_tag,
+                    record_compute_spans, split_bounds_weighted, BatchPlan,
+                    ExecutionEngine, RankBwdWork, SavedActs, StepBatch,
+                    StepHandle, Traffic, PLAN_CACHE_CAP};
 use super::expert_parallel::EpTopology;
 use super::kernels::{backward_segment, forward_segment, KernelScratch,
                      KernelTimers, RowsSrc, SavedHiddenMut, SavedHiddenRef,
@@ -908,6 +908,14 @@ impl ExecutionEngine for PipelinedEngine {
 
     fn gather_params(&self) -> Result<ExpertStore, String> {
         ExpertStore::gather(&self.rank_params, self.topo.num_experts)
+    }
+
+    fn load_params(&mut self, store: &ExpertStore) -> Result<(), String> {
+        check_store_like(store, self.topo.num_experts, self.d_model,
+                         self.d_hidden, self.gated)?;
+        self.rank_params = store.shard(&self.topo.assignment());
+        self.session = None;
+        Ok(())
     }
 
     fn overlap_report(&self) -> Option<OverlapReport> {

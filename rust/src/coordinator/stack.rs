@@ -459,6 +459,34 @@ impl ExecutionEngine for MoeStack {
         ExpertStore::concat(&stores)
     }
 
+    /// Layer-major inverse of `gather_params`: segment l of
+    /// `num_experts` experts restores into layer l's engine. All-or-
+    /// nothing at the shape level — every segment is shape-checked by
+    /// the layer engine before any parameter moves, because the layers
+    /// share one store clone whose per-expert tensors were already
+    /// validated identically.
+    fn load_params(&mut self, store: &ExpertStore) -> Result<(), String> {
+        let per = self.num_experts;
+        if store.experts.len() != self.layers.len() * per {
+            return Err(format!(
+                "snapshot store has {} experts, stack holds {} layers x {}",
+                store.experts.len(),
+                self.layers.len(),
+                per
+            ));
+        }
+        for (l, layer) in self.layers.iter_mut().enumerate() {
+            let sub = ExpertStore {
+                d_model: store.d_model,
+                d_hidden: store.d_hidden,
+                experts: store.experts[l * per..(l + 1) * per].to_vec(),
+            };
+            layer.engine.load_params(&sub)?;
+        }
+        self.session = None;
+        Ok(())
+    }
+
     /// The final layer's timeline (chunk-pipelined layer engines only).
     fn overlap_report(&self) -> Option<OverlapReport> {
         self.layers.last().and_then(|l| l.engine.overlap_report())

@@ -18,7 +18,10 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::config::ep::EpConfig;
+use crate::config::fault::FaultConfig;
 use crate::config::train::TrainConfig;
+use crate::resilience::{config_fingerprint, FaultInjector, FaultPlan,
+                        SnapshotStore, TrainState};
 use crate::data::batcher::Batcher;
 use crate::memory::planner::CheckpointPlan;
 use crate::metrics::registry::Registry;
@@ -255,6 +258,18 @@ pub struct EpTrainReport {
     /// worst per-layer rank-load imbalance (max/mean) any folded step
     /// reached (0 when load telemetry is off)
     pub max_imbalance: f64,
+    /// crash-consistent snapshot generations this run wrote
+    /// (`[ep] snapshot_interval` runs only)
+    pub snapshots_written: usize,
+    /// optimizer step the run resumed from (`[ep] resume` runs only;
+    /// `None` for fresh runs)
+    pub resumed_from_step: Option<usize>,
+    /// injected fault events this run raised (`[fault]` runs only)
+    pub fault_events: usize,
+    /// injected faults that could NOT be recovered — surfaced, never
+    /// silent; any nonzero count here failed loudly during the run or
+    /// names a snapshot set with no loadable generation left
+    pub fault_unrecovered: usize,
 }
 
 /// Step-session training loop over an [`ExecutionEngine`] on a synthetic
@@ -278,6 +293,16 @@ pub struct EpTrainer {
     /// artifact answered it — surfaced through `MetricsSink` and folded
     /// into the artifact this run saves back
     build_info: Option<BuildInfo>,
+    /// deterministic fault injection (`[fault]` config); disabled by
+    /// default, so a bare run consults nothing
+    fault: FaultInjector,
+    /// emulated kill switch: stop the loop after this many optimizer
+    /// steps, as an interrupted run would. Deliberately NOT a config
+    /// key — a kill is not part of the run's numeric identity, so the
+    /// halted run's snapshots resume under the unhalted config's
+    /// fingerprint (`--halt-after` on `ep-train`, and the resume
+    /// bit-identity tests)
+    pub halt_after_steps: Option<usize>,
 }
 
 impl EpTrainer {
@@ -290,7 +315,16 @@ impl EpTrainer {
         let sink = MetricsSink::new(Some(cfg.metrics_path.as_str()))
             .map_err(anyhow::Error::msg)?;
         Ok(EpTrainer { engine, cfg, optimizer, schedule, sink,
-                       build_info: None })
+                       build_info: None,
+                       fault: FaultInjector::new(FaultPlan::disabled()),
+                       halt_after_steps: None })
+    }
+
+    /// Arm deterministic fault injection (`[fault]` config). The plan
+    /// is seeded: two runs with the same config raise the identical
+    /// fault sequence.
+    pub fn set_fault_plan(&mut self, cfg: FaultConfig) {
+        self.fault = FaultInjector::new(FaultPlan::new(cfg));
     }
 
     /// Attach the [`BuildInfo`] the engine build produced
@@ -358,8 +392,65 @@ impl EpTrainer {
             ]);
         }
 
+        // crash-consistent snapshots + bit-identical resume: generations
+        // live under `[ep] snapshot_path`; writing is armed by
+        // `snapshot_interval > 0` (0 = disabled — satellite edge case),
+        // and `resume = true` restores the newest loadable generation
+        // before step 0. The fingerprint covers exactly the
+        // numerics-affecting config fields, so a snapshot taken at R=1
+        // restores at R=4 but never into a different loss curve.
+        let snap_store = if self.cfg.snapshot_path.is_empty() {
+            None
+        } else {
+            Some(SnapshotStore::new(&self.cfg.snapshot_path))
+        };
+        let snap_armed = self.cfg.snapshot_interval > 0 && snap_store.is_some();
+        let fingerprint = config_fingerprint(&self.cfg);
+        let mut start_step = 0usize;
+        let mut resumed_from = None;
+        if self.cfg.resume {
+            let store = snap_store
+                .as_ref()
+                .expect("validate(): resume requires snapshot_path");
+            let state = store.load_latest().ok_or_else(|| anyhow::anyhow!(
+                "resume = true but no loadable snapshot generation under {}",
+                self.cfg.snapshot_path))?;
+            if state.fingerprint != fingerprint {
+                bail!(
+                    "snapshot fingerprint {:#018x} does not match this \
+                     config's {:#018x}: the snapshot came from a numerically \
+                     different run",
+                    state.fingerprint, fingerprint
+                );
+            }
+            // restore exact bits: params via load_params (apply_update
+            // would re-round), optimizer state via import_state
+            self.engine
+                .load_params(&state.params)
+                .map_err(anyhow::Error::msg)?;
+            self.optimizer
+                .import_state(state.optimizer)
+                .map_err(anyhow::Error::msg)?;
+            start_step = state.step as usize;
+            resumed_from = Some(start_step);
+            if let Some(c) = &state.calibration {
+                self.sink.emit("resume_calibration", &[
+                    ("link_gbps", c.link_gbps),
+                    ("compute_gflops", c.compute_gflops),
+                ]);
+            }
+            self.sink.emit("resume", &[
+                ("step", start_step as f64),
+                ("generations", store.generations().len() as f64),
+            ]);
+            println!("resumed from snapshot at step {start_step} \
+                      ({} generation(s) on disk)",
+                     store.generations().len());
+        }
+        let mut snapshots_written = 0usize;
+
         let mut grads = self.engine.zero_grads();
-        let mut losses = Vec::with_capacity(self.cfg.steps);
+        let mut losses = Vec::with_capacity(self.cfg.steps - start_step);
         let mut step_times = Vec::with_capacity(self.cfg.steps);
         let mut peak = Peak::new();
         let mut peak_rank = Peak::new();
@@ -404,10 +495,14 @@ impl EpTrainer {
         // steps where the measured/predicted ratio leaves the band
         let mut drift = DriftDetector::default();
         let log_every = (self.cfg.steps / 10).max(1);
-        for s in 0..self.cfg.steps {
+        for s in start_step..self.cfg.steps {
             if let Some(tr) = &tracer {
                 tr.begin_step(s as u64);
             }
+            // injected rank stall: numerics-neutral (a sleep plus a
+            // recovered FaultEvent) — the serving loop reacts to the
+            // same signal by shedding
+            self.fault.maybe_stall(s as u64, self.cfg.ranks.max(1));
             let t0 = Instant::now();
             grads.clear();
             // one running f64 accumulator across microbatches: the float
@@ -419,7 +514,14 @@ impl EpTrainer {
             // the loop would only describe the last one
             let mut sessions_measured = 0.0f64;
             let mut all_sessions_measured = true;
-            for (off, mb) in &micros {
+            for (mi, (off, mb)) in micros.iter().enumerate() {
+                // transient exchange faults hit BEFORE the engine call:
+                // a failed attempt never reaches the numerics, so the
+                // retry loop (bounded, exponential backoff) leaves the
+                // loss curve untouched; an exhausted budget errors here
+                self.fault
+                    .exchange_gate(s as u64, mi as u64)
+                    .map_err(anyhow::Error::msg)?;
                 let handle = self
                     .engine
                     .forward(mb)
@@ -614,8 +716,78 @@ impl EpTrainer {
                         .collect(),
                 });
             }
+            // snapshot due dates land only here — AFTER the optimizer
+            // applied the accumulated update, i.e. at an optimizer-step
+            // boundary. A due date can never split an accumulation
+            // window: the microbatch loop above completed before this
+            // point, which is the mid-grad-accum deferral the edge-case
+            // tests pin (micro_cursor is structurally 0). The final
+            // step always snapshots when armed, so `interval > steps`
+            // still yields exactly one generation.
+            if snap_armed
+                && ((s + 1) % self.cfg.snapshot_interval == 0
+                    || s + 1 == self.cfg.steps)
+            {
+                let store = snap_store.as_ref().unwrap();
+                let state = TrainState {
+                    fingerprint,
+                    step: (s + 1) as u64,
+                    micro_cursor: 0,
+                    params: self
+                        .engine
+                        .gather_params()
+                        .map_err(anyhow::Error::msg)?,
+                    optimizer: self.optimizer.export_state(),
+                    calibration: calibrated.as_ref().map(|cm| Calibration {
+                        link_gbps: cm.link_gbps,
+                        compute_gflops: cm.compute_gflops,
+                        tiles: Default::default(),
+                    }),
+                };
+                store.save(&state).map_err(anyhow::Error::msg)?;
+                snapshots_written += 1;
+                self.sink.emit("snapshot", &[
+                    ("step", (s + 1) as f64),
+                    ("generations", store.generations().len() as f64),
+                ]);
+                // injected snapshot corruption hits the artifact just
+                // written; recovery (an older generation still loads)
+                // or its absence is recorded on the event
+                self.fault
+                    .maybe_corrupt_snapshot((s + 1) as u64, store)
+                    .map_err(anyhow::Error::msg)?;
+            }
+            // surface this step's injected faults: every event reaches
+            // the metrics stream (and the registry when configured) —
+            // recovery without a trace would be silent degradation
+            for ev in self.fault.drain() {
+                self.sink.emit_tagged("fault", &[("kind", ev.kind.name())], &[
+                    ("step", ev.step as f64),
+                    ("rank", ev.rank as f64),
+                    ("retries", ev.retries as f64),
+                    ("recovered", if ev.recovered { 1.0 } else { 0.0 }),
+                ]);
+                if let Some(reg) = &registry {
+                    reg.counter("moeblaze_fault_events_total",
+                                "injected fault events by kind",
+                                &[("kind", ev.kind.name())])
+                        .inc();
+                    if !ev.recovered {
+                        reg.counter("moeblaze_fault_unrecovered_total",
+                                    "injected faults that could not be recovered",
+                                    &[("kind", ev.kind.name())])
+                            .inc();
+                    }
+                }
+            }
             if s % log_every == 0 || s + 1 == self.cfg.steps {
                 println!("{}", self.sink.console(s, &[("loss", loss), ("lr", lr)]));
+            }
+            // the emulated kill: stop exactly as an interrupted run
+            // would, with only the snapshots written so far on disk
+            if self.halt_after_steps == Some(s + 1) {
+                self.sink.emit("halt", &[("step", (s + 1) as f64)]);
+                break;
             }
         }
         // chunk-pipelined engines: emit the final step's overlap roll-up
@@ -721,6 +893,14 @@ impl EpTrainer {
                 ("records", lt.record_count() as f64),
             ]);
         }
+        // fault roll-up: one line whether faults fired or not is only
+        // written for armed plans (a bare run's stream stays unchanged)
+        if self.fault.enabled() {
+            self.sink.emit("fault_summary", &[
+                ("events", self.fault.total as f64),
+                ("unrecovered", self.fault.unrecovered as f64),
+            ]);
+        }
         // surface metrics-stream write failures instead of losing the
         // run's observability silently
         if let Err(e) = self.sink.check() {
@@ -745,6 +925,10 @@ impl EpTrainer {
             drift_flags: drift.total_flags(),
             skew_alarms,
             max_imbalance,
+            snapshots_written,
+            resumed_from_step: resumed_from,
+            fault_events: self.fault.total as usize,
+            fault_unrecovered: self.fault.unrecovered as usize,
             losses,
         })
     }
@@ -1003,6 +1187,191 @@ mod tests {
             assert!(text.contains(family), "exposition missing {family}");
         }
         std::fs::remove_file(&expose).ok();
+    }
+
+    fn snap_base(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("moeblaze_trainer_snap_{}_{tag}", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn snap_cleanup(base: &str) {
+        for (_, p) in crate::resilience::SnapshotStore::new(base).generations() {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn snapshot_interval_zero_disables_snapshotting() {
+        // edge case: interval 0 = off, even with a path set
+        let base = snap_base("off");
+        snap_cleanup(&base);
+        let cfg = EpConfig {
+            snapshot_interval: 0,
+            snapshot_path: base.clone(),
+            ..tiny_cfg(2)
+        };
+        let engine = engine_from_config(&cfg).unwrap();
+        let r = EpTrainer::new(engine, cfg).unwrap().run().unwrap();
+        assert_eq!(r.snapshots_written, 0);
+        assert!(crate::resilience::SnapshotStore::new(&base)
+            .generations()
+            .is_empty());
+        snap_cleanup(&base);
+    }
+
+    #[test]
+    fn snapshot_interval_past_the_run_yields_one_final_generation() {
+        // edge case: interval > total steps -> exactly the final-step
+        // snapshot, nothing else
+        let base = snap_base("past");
+        snap_cleanup(&base);
+        let cfg = EpConfig {
+            snapshot_interval: 100,
+            snapshot_path: base.clone(),
+            ..tiny_cfg(2)
+        };
+        let engine = engine_from_config(&cfg).unwrap();
+        let r = EpTrainer::new(engine, cfg.clone()).unwrap().run().unwrap();
+        assert_eq!(r.snapshots_written, 1);
+        let store = crate::resilience::SnapshotStore::new(&base);
+        let gens = store.generations();
+        assert_eq!(gens.iter().map(|(g, _)| *g).collect::<Vec<_>>(),
+                   vec![cfg.steps as u64]);
+        assert_eq!(store.load_latest().unwrap().step, cfg.steps as u64);
+        snap_cleanup(&base);
+    }
+
+    #[test]
+    fn snapshots_defer_to_optimizer_step_boundaries_under_grad_accum() {
+        // edge case: with grad_accum > 1 a wall-clock "due" moment can
+        // fall mid-accumulation; snapshots must land only at optimizer-
+        // step boundaries, so every generation carries micro_cursor 0
+        // and a step that is an interval multiple (or the final step)
+        let base = snap_base("accum");
+        snap_cleanup(&base);
+        let cfg = EpConfig {
+            grad_accum: 4,
+            steps: 5,
+            snapshot_interval: 2,
+            snapshot_path: base.clone(),
+            ..tiny_cfg(2)
+        };
+        let engine = engine_from_config(&cfg).unwrap();
+        let r = EpTrainer::new(engine, cfg.clone()).unwrap().run().unwrap();
+        // steps 2, 4, and the final step 5
+        assert_eq!(r.snapshots_written, 3);
+        let store = crate::resilience::SnapshotStore::new(&base);
+        for (g, path) in store.generations() {
+            let state = crate::resilience::TrainState::from_bytes(
+                &std::fs::read(&path).unwrap())
+                .expect("every generation decodes");
+            assert_eq!(state.micro_cursor, 0, "gen {g} split an accumulation");
+            assert!(g % 2 == 0 || g == cfg.steps as u64,
+                    "gen {g} is not an optimizer-step due date");
+        }
+        snap_cleanup(&base);
+    }
+
+    #[test]
+    fn snapshotting_is_loss_neutral() {
+        // writing snapshots must not move the loss curve by a bit
+        let base = snap_base("neutral");
+        snap_cleanup(&base);
+        let bare = run_losses(tiny_cfg(2));
+        let cfg = EpConfig {
+            snapshot_interval: 2,
+            snapshot_path: base.clone(),
+            ..tiny_cfg(2)
+        };
+        assert_eq!(run_losses(cfg), bare, "snapshotting perturbed the curve");
+        snap_cleanup(&base);
+    }
+
+    #[test]
+    fn resume_without_a_snapshot_is_a_hard_error() {
+        let base = snap_base("missing");
+        snap_cleanup(&base);
+        let cfg = EpConfig {
+            resume: true,
+            snapshot_path: base.clone(),
+            ..tiny_cfg(2)
+        };
+        let engine = engine_from_config(&cfg).unwrap();
+        let err = EpTrainer::new(engine, cfg).unwrap().run().unwrap_err();
+        assert!(err.to_string().contains("no loadable snapshot"), "{err}");
+    }
+
+    #[test]
+    fn resume_rejects_a_numerically_different_config() {
+        let base = snap_base("fpr");
+        snap_cleanup(&base);
+        let cfg = EpConfig {
+            snapshot_interval: 2,
+            snapshot_path: base.clone(),
+            ..tiny_cfg(2)
+        };
+        let engine = engine_from_config(&cfg).unwrap();
+        EpTrainer::new(engine, cfg.clone()).unwrap().run().unwrap();
+        // a different lr is a different curve: fingerprint must refuse
+        let bad = EpConfig { lr: 0.2, resume: true, ..cfg.clone() };
+        let engine = engine_from_config(&bad).unwrap();
+        let err = EpTrainer::new(engine, bad).unwrap().run().unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        // topology changes are NOT numeric: R=4 resumes an R=2 snapshot
+        let moved = EpConfig { ranks: 4, resume: true, ..cfg };
+        let engine = engine_from_config(&moved).unwrap();
+        let r = EpTrainer::new(engine, moved).unwrap().run().unwrap();
+        assert_eq!(r.resumed_from_step, Some(5), "newest generation wins");
+        snap_cleanup(&base);
+    }
+
+    #[test]
+    fn injected_faults_are_recovered_and_counted_never_silent() {
+        // an armed plan over the full training loop: losses stay
+        // bit-identical to the bare run (stalls sleep, exchange retries
+        // happen before the engine call, corruption hits artifacts, not
+        // state), every event is accounted, none is silently dropped
+        let base = snap_base("fault");
+        snap_cleanup(&base);
+        let bare = run_losses(tiny_cfg(2));
+        let cfg = EpConfig {
+            snapshot_interval: 1,
+            snapshot_path: base.clone(),
+            ..tiny_cfg(2)
+        };
+        let engine = engine_from_config(&cfg).unwrap();
+        let mut t = EpTrainer::new(engine, cfg).unwrap();
+        // seed 2's pinned plan over 5 steps: an exchange retry at step
+        // 0 and a snapshot corruption at step 4 — by which point three
+        // generations exist, so the last-good fallback recovers it
+        t.set_fault_plan(crate::config::FaultConfig {
+            seed: 2,
+            stall_prob: 0.15,
+            stall_ms: 0,
+            exchange_fail_prob: 0.25,
+            snapshot_corrupt_prob: 0.2,
+            max_retries: 3,
+            backoff_ms: 0,
+        });
+        let r = t.run().unwrap();
+        assert_eq!(r.losses, bare, "fault injection perturbed the numerics");
+        assert!(r.fault_events > 0, "the armed plan injected nothing");
+        assert_eq!(r.fault_unrecovered, 0,
+                   "seed-2 plan must recover every fault");
+        // corrupted generations were really corrupted — yet the newest
+        // loadable one still resumes the run
+        let resumed = EpConfig {
+            resume: true,
+            snapshot_interval: 1,
+            snapshot_path: base.clone(),
+            ..tiny_cfg(2)
+        };
+        let engine = engine_from_config(&resumed).unwrap();
+        let rr = EpTrainer::new(engine, resumed).unwrap().run().unwrap();
+        assert!(rr.resumed_from_step.is_some());
+        snap_cleanup(&base);
     }
 
     #[test]

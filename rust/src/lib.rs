@@ -75,6 +75,27 @@
 //! timeline. See [`trace`] for the span taxonomy and the overhead
 //! contract, and [`metrics`] for the event-log format.
 //!
+//! # Robustness
+//!
+//! Fault tolerance lives in [`resilience`], behind its own knobs —
+//! all off by default, and bit-identity neutral when on (snapshotting
+//! a run does not move its loss curve; resuming reproduces the
+//! never-interrupted curve bit-for-bit, `rust/tests/ep_resume.rs`):
+//!
+//! | knob                                        | what it does |
+//! |---------------------------------------------|--------------|
+//! | `[ep] snapshot_interval` / `--snapshot-interval` | write a crash-consistent [`resilience::TrainState`] every N optimizer steps (0 = off; a final-step snapshot is always written when armed, so `interval > steps` still yields one). Snapshots land only at optimizer-step boundaries — a due date mid-grad-accum defers to the boundary |
+//! | `[ep] snapshot_path` / `--snapshot-path`    | artifact base path; generations are `{base}.gNNNNNNNNNN`, written tmp+rename, newest [`resilience::KEEP_GENERATIONS`] retained |
+//! | `[ep] resume` / `--resume`                  | restore the newest loadable generation before step 0: exact parameter bits (SwiGLU `w3` included), exact Adam `t`/moments, step cursor, calibration. A config-fingerprint mismatch is a hard error; topology (`ranks`, `pipeline_chunks`), checkpoint policy, and tile size are excluded from the fingerprint, so a snapshot taken at R=1 restores at R=4 |
+//! | `[fault]` section                           | seeded [`resilience::FaultPlan`]: rank stalls (`stall_prob`/`stall_ms`), transient exchange failures (`exchange_fail_prob`, recovered by ≤ `max_retries` retries with `backoff_ms` exponential backoff), snapshot corruption (`snapshot_corrupt_prob`, recovered by generation fallback). Every injected fault is recovered or surfaced as a typed `fault` event in the metrics stream and `moeblaze_fault_events_total` — silent degradation is a test failure |
+//! | `[serving] deadline_ticks` / `shed_recovery_ticks` | per-request deadlines and the stall-triggered shed mode: admission flips to reject while shedding, expired requests are shed (not dropped), and conservation extends to `generated = completed + rejected + shed + queued_at_end` |
+//!
+//! Corrupt artifacts fail closed: every byte prefix and every
+//! single-byte flip of a snapshot reads as "fall back to the previous
+//! generation", never a panic or a half-restore (fuzz-pinned in
+//! `resilience::snapshot`). The fault-decision arithmetic (splitmix64
+//! site hashing) is mirrored bit-for-bit in `tools/ep_sim.py`.
+//!
 //! [`PhaseSpan`]: coordinator::pipeline::timeline::PhaseSpan
 //!
 //! [`ExecutionEngine`]: coordinator::engine::ExecutionEngine
@@ -88,6 +109,7 @@ pub mod data;
 pub mod dispatch;
 pub mod memory;
 pub mod metrics;
+pub mod resilience;
 pub mod runtime;
 pub mod serving;
 pub mod testkit;

@@ -38,17 +38,28 @@
 //!             --placement contiguous|strided|load-aware
 //!             --trace-out trace.json --json-out train.json
 //!             --metrics-expose metrics.prom --skew-alarm 1.5
+//!             --snapshot-interval N --snapshot-path snap
+//!             --resume true --halt-after S
+//!             --fault-seed S --fault-stall-prob P
+//!             --fault-exchange-prob P --fault-snapshot-prob P
 //!             --config file.toml ...]
 //!                                step-session training on the
 //!                                expert-parallel engine (chunk-pipelined
 //!                                when --pipeline-chunks > 0; an L-layer
 //!                                MoeStack when --num-layers > 1, with
 //!                                per-layer policies from the budget
-//!                                planner under --checkpoint auto)
+//!                                planner under --checkpoint auto);
+//!                                crash-consistent snapshots every
+//!                                --snapshot-interval steps, bit-exact
+//!                                --resume, --halt-after simulated kill,
+//!                                and the seeded `[fault]` injection plan
+//!                                (see lib.rs § Robustness)
 //!   ep-serve [--ticks T | --steps T] [--tick-tokens N] [--max-queue-depth Q]
 //!            [--admission queue|reject] [--arrival-rate R]
 //!            [--min-request-tokens A --max-request-tokens B]
 //!            [--serve-seed S] [--mem-budget-bytes B]
+//!            [--deadline-ticks D] [--shed-recovery-ticks T]
+//!            [--fault-seed S --fault-stall-prob P --fault-exchange-prob P]
 //!            [--json-out serve.json] [--trace-out trace.json]
 //!            [--metrics-expose metrics.prom] [--skew-alarm 1.5]
 //!            [--config file.toml] ...
@@ -70,6 +81,7 @@ use anyhow::{bail, Result};
 
 use moeblaze::bench_harness as bh;
 use moeblaze::config::ep::{ChunkBalance, EpConfig, Placement};
+use moeblaze::config::fault::FaultConfig;
 use moeblaze::config::model::Activation;
 use moeblaze::config::paper::{paper_configs, scaled_configs, PAPER_BLOCK, SCALED_BLOCK};
 use moeblaze::config::serving::{AdmissionPolicy, ServingConfig};
@@ -99,7 +111,7 @@ use moeblaze::memory::model::{ffn_intermediate_bytes, per_rank_breakdown,
                               routing_buffer_bytes, AccountingMode};
 use moeblaze::memory::report::{memory_figure, render_memory_figure,
                                render_per_rank_memory};
-use moeblaze::metrics::Throughput;
+use moeblaze::metrics::{MetricsSink, Throughput};
 use moeblaze::runtime::client::Runtime;
 use moeblaze::serving::ServeLoop;
 use moeblaze::trace::{StepSummary, Tracer};
@@ -397,12 +409,48 @@ fn ep_config_from_args(args: &Args, parse_ranks: bool) -> Result<EpConfig> {
     }
     cfg.skew_alarm = args.f64_or("skew-alarm", cfg.skew_alarm)
         .map_err(anyhow::Error::msg)?;
+    cfg.snapshot_interval = args
+        .usize_or("snapshot-interval", cfg.snapshot_interval)
+        .map_err(anyhow::Error::msg)?;
+    if let Some(p) = args.get("snapshot-path") {
+        cfg.snapshot_path = p.to_string();
+    }
+    cfg.resume = args.bool_or("resume", cfg.resume).map_err(anyhow::Error::msg)?;
     cfg.validate().map_err(anyhow::Error::msg)?;
     Ok(cfg)
 }
 
+/// `[fault]` config assembly: TOML section (if `--config` is given) +
+/// CLI overrides. All probabilities default to 0, so a bare run injects
+/// nothing.
+fn fault_config_from_args(args: &Args) -> Result<FaultConfig> {
+    let mut fcfg = match args.get("config") {
+        Some(path) => {
+            let t = Toml::load(path).map_err(anyhow::Error::msg)?;
+            FaultConfig::from_toml(&t, "fault").map_err(anyhow::Error::msg)?
+        }
+        None => FaultConfig::default(),
+    };
+    fcfg.seed = args.u64_or("fault-seed", fcfg.seed).map_err(anyhow::Error::msg)?;
+    fcfg.stall_prob = args.f64_or("fault-stall-prob", fcfg.stall_prob)
+        .map_err(anyhow::Error::msg)?;
+    fcfg.exchange_fail_prob = args
+        .f64_or("fault-exchange-prob", fcfg.exchange_fail_prob)
+        .map_err(anyhow::Error::msg)?;
+    fcfg.snapshot_corrupt_prob = args
+        .f64_or("fault-snapshot-prob", fcfg.snapshot_corrupt_prob)
+        .map_err(anyhow::Error::msg)?;
+    fcfg.validate().map_err(anyhow::Error::msg)?;
+    Ok(fcfg)
+}
+
 fn cmd_ep_bench(args: &Args) -> Result<()> {
     let mut base = ep_config_from_args(args, false)?;
+    // bench runs honour --metrics like the trainer and the serve loop
+    // do, and fail loudly on sink IO errors at the end of the run
+    // (MetricsSink::check) instead of silently publishing a partial log
+    let mut sink = MetricsSink::new(Some(&base.metrics_path))
+        .map_err(anyhow::Error::msg)?;
     // resolve `tile_rows = 0` (autotune) once, up front, so every engine
     // in the sweep — and the --json-out snapshot — runs the probed tile
     let tile_probed = base.tile_rows == 0;
@@ -476,6 +524,12 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
             format!("{:.3}", plan.imbalance()),
             format!("{:.3} ms", s.mean_ms()),
             tp.format_brief(),
+        ]);
+        sink.emit("bench_rank", &[
+            ("ranks", r as f64),
+            ("fwd_ms", s.mean_ms()),
+            ("dispatch_bytes", traffic.dispatch_bytes as f64),
+            ("imbalance", plan.imbalance()),
         ]);
         if !bitwise_equal || traffic.dispatch_bytes != plan.cross_rank_bytes() {
             bail!(
@@ -671,6 +725,13 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
                  base.tile_rows, t.render());
         println!("old->new: {speedup:.2}x tokens/s, peak rank comm {} -> {}",
                  human_bytes(old_extra), human_bytes(new_extra));
+        sink.emit("bench_oldnew", &[
+            ("speedup", speedup),
+            ("new_tokens_per_sec", new_tps),
+            ("old_tokens_per_sec", old_tps),
+            ("new_peak_rank_comm_bytes", new_extra as f64),
+            ("old_peak_rank_comm_bytes", old_extra as f64),
+        ]);
         if let Some(path) = args.get("json-out") {
             let peak_rank_data = eng
                 .memory_per_rank()
@@ -789,6 +850,10 @@ fn cmd_ep_bench(args: &Args) -> Result<()> {
             }
         }
     }
+    // a bench whose metrics log silently lost events is a bench whose
+    // numbers can't be audited — surface sink write failures as a
+    // run failure, exactly like the trainer and the serve loop
+    sink.check().map_err(anyhow::Error::msg)?;
     Ok(())
 }
 
@@ -814,6 +879,20 @@ fn cmd_ep_train(args: &Args) -> Result<()> {
     }
     let mut trainer = EpTrainer::new(engine, cfg.clone())?;
     trainer.set_build_info(info);
+    let fcfg = fault_config_from_args(args)?;
+    if fcfg.enabled() {
+        println!("fault plan armed (seed {}): stall p={} exchange p={} \
+                  snapshot p={}, retry budget {} ({} ms backoff)",
+                 fcfg.seed, fcfg.stall_prob, fcfg.exchange_fail_prob,
+                 fcfg.snapshot_corrupt_prob, fcfg.max_retries, fcfg.backoff_ms);
+        trainer.set_fault_plan(fcfg);
+    }
+    let halt_after = args.usize_or("halt-after", 0).map_err(anyhow::Error::msg)?;
+    if halt_after > 0 {
+        trainer.halt_after_steps = Some(halt_after);
+        println!("halting after step {halt_after} (simulated kill; resume \
+                  with --resume true)");
+    }
     let report = trainer.run()?;
     println!("\ntrained {} steps on `{}`: loss {:.6} -> {:.6}, {:.2} ms/step, \
               final |g| {:.4}",
@@ -884,6 +963,25 @@ fn cmd_ep_train(args: &Args) -> Result<()> {
     if !cfg.metrics_expose_path.is_empty() {
         println!("metrics exposition written to {}", cfg.metrics_expose_path);
     }
+    if let Some(s) = report.resumed_from_step {
+        println!("resumed bit-exact from snapshot generation {s} under `{}`",
+                 cfg.snapshot_path);
+    }
+    if report.snapshots_written > 0 {
+        println!("{} snapshot generation(s) written under `{}` (newest {} kept)",
+                 report.snapshots_written, cfg.snapshot_path,
+                 moeblaze::resilience::KEEP_GENERATIONS);
+    }
+    if report.fault_events > 0 {
+        println!("faults: {} injected event(s), {} unrecovered (see the \
+                  `fault` events in {})",
+                 report.fault_events, report.fault_unrecovered,
+                 cfg.metrics_path);
+        if report.fault_unrecovered > 0 {
+            bail!("{} injected fault(s) exhausted their recovery path",
+                  report.fault_unrecovered);
+        }
+    }
     if let Some(path) = args.get("json-out") {
         let j = Json::obj(vec![
             ("snapshot_version", Json::num(SNAPSHOT_VERSION)),
@@ -906,6 +1004,11 @@ fn cmd_ep_train(args: &Args) -> Result<()> {
             ("drift_flags", Json::num(report.drift_flags as f64)),
             ("skew_alarms", Json::num(report.skew_alarms as f64)),
             ("max_imbalance", Json::num(report.max_imbalance)),
+            ("snapshots_written", Json::num(report.snapshots_written as f64)),
+            ("resumed_from_step",
+             Json::num(report.resumed_from_step.map_or(-1.0, |s| s as f64))),
+            ("fault_events", Json::num(report.fault_events as f64)),
+            ("fault_unrecovered", Json::num(report.fault_unrecovered as f64)),
         ]);
         std::fs::write(path, format!("{j}\n"))
             .map_err(|err| anyhow::anyhow!("{path}: {err}"))?;
@@ -917,17 +1020,27 @@ fn cmd_ep_train(args: &Args) -> Result<()> {
         // otherwise append an overlapping step range to the same JSONL
         // ... and the verify run must not overwrite the primary run's
         // calibration artifact, trace, or metrics exposition either
+        // ... nor restore from (or clobber) its snapshot generations
         let single_cfg = EpConfig { ranks: 1, metrics_path: String::new(),
                                     calibration_path: String::new(),
                                     trace_out: String::new(),
                                     metrics_expose_path: String::new(),
+                                    snapshot_interval: 0,
+                                    snapshot_path: String::new(),
+                                    resume: false,
                                     ..cfg };
         let (engine, _) =
             engine_from_config_with_info(&single_cfg).map_err(anyhow::Error::msg)?;
         let mut single = EpTrainer::new(engine, single_cfg)?;
         let sr = single.run()?;
-        if sr.losses == report.losses {
-            println!("verify: single-rank loss curve is bit-identical ✓");
+        // the primary run may cover only a slice of the schedule
+        // (--resume starts late, --halt-after stops early); the verify
+        // run always covers all of it, so compare the overlap
+        let start = report.resumed_from_step.unwrap_or(0);
+        let end = start + report.losses.len();
+        if sr.losses.len() >= end && sr.losses[start..end] == report.losses[..] {
+            println!("verify: single-rank loss curve is bit-identical ✓ \
+                      ({} step(s) compared)", report.losses.len());
         } else {
             bail!("verify FAILED: sharded and single-rank loss curves differ");
         }
@@ -967,6 +1080,11 @@ fn serving_config_from_args(args: &Args, ep: &EpConfig) -> Result<ServingConfig>
         .usize_or("max-request-tokens", scfg.max_request_tokens)
         .map_err(anyhow::Error::msg)?;
     scfg.seed = args.u64_or("serve-seed", scfg.seed).map_err(anyhow::Error::msg)?;
+    scfg.deadline_ticks = args.usize_or("deadline-ticks", scfg.deadline_ticks)
+        .map_err(anyhow::Error::msg)?;
+    scfg.shed_recovery_ticks = args
+        .usize_or("shed-recovery-ticks", scfg.shed_recovery_ticks)
+        .map_err(anyhow::Error::msg)?;
     scfg.validate().map_err(anyhow::Error::msg)?;
     Ok(scfg)
 }
@@ -975,6 +1093,14 @@ fn cmd_ep_serve(args: &Args) -> Result<()> {
     let cfg = ep_config_from_args(args, true)?;
     let scfg = serving_config_from_args(args, &cfg)?;
     let mut lp = ServeLoop::new(&cfg, &scfg).map_err(anyhow::Error::msg)?;
+    let fcfg = fault_config_from_args(args)?;
+    if fcfg.enabled() {
+        println!("fault plan armed (seed {}): stall p={} exchange p={}, \
+                  retry budget {} ({} ms backoff)",
+                 fcfg.seed, fcfg.stall_prob, fcfg.exchange_fail_prob,
+                 fcfg.max_retries, fcfg.backoff_ms);
+        lp.set_fault_plan(fcfg);
+    }
     println!("ep-serve: {} ({} ranks, {} placement), E={} k={} d={} h={} act={}",
              lp.engine_name(), cfg.ranks, cfg.placement, cfg.num_experts,
              cfg.top_k, cfg.d_model, cfg.d_hidden, cfg.activation.name());
@@ -994,9 +1120,28 @@ fn cmd_ep_serve(args: &Args) -> Result<()> {
               {:.0} tokens/s (wall-clock)",
              r.batches, r.ticks, r.engine, r.tokens_served, r.tokens_per_sec());
     println!("requests: {} generated = {} completed + {} rejected (queue-full) \
-              + {} rejected (capacity) + {} still queued",
+              + {} rejected (capacity) + {} shed + {} still queued",
              r.generated, r.completed, r.rejected_queue_full,
-             r.rejected_capacity, r.queued_at_end);
+             r.rejected_capacity, r.shed, r.queued_at_end);
+    if r.shed > 0 || r.shed_mode_ticks > 0 {
+        println!("degradation: {} request(s) shed ({} tick(s) spent in shed \
+                  mode{})",
+                 r.shed, r.shed_mode_ticks,
+                 if scfg.deadline_ticks > 0 {
+                     format!(", deadline {} tick(s)", scfg.deadline_ticks)
+                 } else {
+                     String::new()
+                 });
+    }
+    if r.fault_events > 0 {
+        println!("faults: {} injected event(s), {} unrecovered (see the \
+                  `fault` events in {})",
+                 r.fault_events, r.fault_unrecovered, cfg.metrics_path);
+        if r.fault_unrecovered > 0 {
+            bail!("{} injected fault(s) exhausted their recovery path",
+                  r.fault_unrecovered);
+        }
+    }
     println!("queue depth peaked at {}; mean wait {:.2} ticks",
              r.max_queue_depth_seen, r.mean_wait_ticks);
     println!("latency: p50 {:.3} ms, p95 {:.3} ms, p99 {:.3} ms (mean {:.3} ms)",
@@ -1044,6 +1189,10 @@ fn cmd_ep_serve(args: &Args) -> Result<()> {
             ("completed", Json::num(r.completed as f64)),
             ("rejected_queue_full", Json::num(r.rejected_queue_full as f64)),
             ("rejected_capacity", Json::num(r.rejected_capacity as f64)),
+            ("shed", Json::num(r.shed as f64)),
+            ("shed_mode_ticks", Json::num(r.shed_mode_ticks as f64)),
+            ("fault_events", Json::num(r.fault_events as f64)),
+            ("fault_unrecovered", Json::num(r.fault_unrecovered as f64)),
             ("queued_at_end", Json::num(r.queued_at_end as f64)),
             ("max_queue_depth_seen", Json::num(r.max_queue_depth_seen as f64)),
             ("batches", Json::num(r.batches as f64)),

@@ -1,0 +1,482 @@
+//! Deterministic fault injection: seeded plans, typed events, bounded
+//! recovery.
+//!
+//! A [`FaultPlan`] turns the `[fault]` config into a pure decision
+//! oracle: whether step `s` stalls a rank, whether attempt `a` of
+//! microbatch `m`'s exchange transiently fails, whether the snapshot
+//! written at step `s` gets its bytes corrupted — each a splitmix64 mix
+//! of `(seed, site-salt, step, lane)`, so the full fault sequence of a
+//! run is fixed before it starts and identical across replays. The
+//! arithmetic is mirrored bit-for-bit in `tools/ep_sim.py` (pinned
+//! decision tables in both suites, the PR-8/PR-9 cross-language
+//! contract).
+//!
+//! The [`FaultInjector`] wraps a plan with the recovery discipline the
+//! resilience tests enforce: every injected fault is either *recovered*
+//! (bounded retry with exponential backoff for transient faults,
+//! last-good-generation fallback for corrupt snapshots) or *surfaced*
+//! as a typed [`FaultEvent`] — the trainer and serve loop drain the
+//! event queue into `MetricsSink` each step, so silent degradation is
+//! structurally impossible. Injection sits in the drivers (trainer /
+//! serve loop) around the engine calls, not inside the engine hot
+//! paths: all three engine families and the stack are covered through
+//! the shared trait, and an unarmed plan costs nothing.
+
+use std::fmt;
+
+use crate::config::fault::FaultConfig;
+
+use super::snapshot::SnapshotStore;
+
+/// Decision-site salts — each fault family draws from its own stream.
+const SALT_STALL: u64 = 0x57A11;
+const SALT_EXCHANGE: u64 = 0xE8C7A9;
+const SALT_SNAPSHOT: u64 = 0x5A4B;
+
+/// splitmix64 finalizer — the one mixing function every decision uses.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Chained mix of one decision site.
+fn fault_hash(seed: u64, salt: u64, a: u64, b: u64, c: u64) -> u64 {
+    let mut h = mix64(seed ^ salt);
+    h = mix64(h ^ a);
+    h = mix64(h ^ b);
+    mix64(h ^ c)
+}
+
+/// Uniform in [0, 1): the top 53 bits of the hash, exactly
+/// representable in f64 — Rust and the Python mirror compare the same
+/// number against the same threshold.
+fn fault_unit(seed: u64, salt: u64, a: u64, b: u64, c: u64) -> f64 {
+    (fault_hash(seed, salt, a, b, c) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// The fault family an event belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// One rank stalled for the configured duration (numerics-neutral).
+    RankStall,
+    /// A transient exchange failure hit a step/tick's forward path.
+    ExchangeTransient,
+    /// A just-written snapshot generation had its bytes corrupted.
+    SnapshotCorrupt,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::RankStall => "rank_stall",
+            FaultKind::ExchangeTransient => "exchange_transient",
+            FaultKind::SnapshotCorrupt => "snapshot_corrupt",
+        }
+    }
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One injected fault, typed and accounted — the unit the metrics
+/// stream carries (`fault` events) and the zero-silent-degradation
+/// tests count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    /// optimizer step (training) or tick (serving) the fault hit
+    pub step: u64,
+    /// stalled rank for `RankStall`; 0 otherwise
+    pub rank: usize,
+    /// retries the recovery took (`ExchangeTransient`)
+    pub retries: u64,
+    /// whether the fault was absorbed (retry succeeded / an older good
+    /// snapshot generation remains loadable); `false` events make the
+    /// run fail loudly
+    pub recovered: bool,
+}
+
+/// The seeded decision oracle (see the module docs). Pure functions
+/// only — the injector layers state (events, sleeps) on top.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub cfg: FaultConfig,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig) -> FaultPlan {
+        FaultPlan { cfg }
+    }
+
+    pub fn disabled() -> FaultPlan {
+        FaultPlan::new(FaultConfig { seed: 0, ..FaultConfig::default() })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    /// Does step/tick `step` stall a rank?
+    pub fn stalls(&self, step: u64) -> bool {
+        self.cfg.stall_prob > 0.0
+            && fault_unit(self.cfg.seed, SALT_STALL, step, 0, 0)
+                < self.cfg.stall_prob
+    }
+
+    /// Which of `ranks` ranks the step's stall hits.
+    pub fn stall_rank(&self, step: u64, ranks: usize) -> usize {
+        (fault_hash(self.cfg.seed, SALT_STALL, step, 1, 0) % ranks.max(1) as u64)
+            as usize
+    }
+
+    /// Does attempt `attempt` of microbatch `micro`'s exchange at
+    /// `step` transiently fail?
+    pub fn exchange_fails(&self, step: u64, micro: u64, attempt: u64) -> bool {
+        self.cfg.exchange_fail_prob > 0.0
+            && fault_unit(self.cfg.seed, SALT_EXCHANGE, step, micro, attempt)
+                < self.cfg.exchange_fail_prob
+    }
+
+    /// Does the snapshot generation written at `step` get corrupted?
+    pub fn corrupts_snapshot(&self, step: u64) -> bool {
+        self.cfg.snapshot_corrupt_prob > 0.0
+            && fault_unit(self.cfg.seed, SALT_SNAPSHOT, step, 0, 0)
+                < self.cfg.snapshot_corrupt_prob
+    }
+
+    /// How step `step`'s snapshot corruption lands on a `len`-byte
+    /// artifact: `(offset, xor)` — `xor == 0` truncates the file at
+    /// `offset`, otherwise the byte at `offset` is flipped with it.
+    pub fn corruption(&self, step: u64, len: usize) -> (usize, u8) {
+        let h = fault_hash(self.cfg.seed, SALT_SNAPSHOT, step, 1, 0);
+        let offset = (h % len.max(1) as u64) as usize;
+        // truncate every 4th corruption, flip otherwise (never xor 0 —
+        // that would be a no-op "corruption")
+        let xor = if h >> 62 == 0 { 0 } else { (1 + (h >> 32) % 255) as u8 };
+        (offset, xor)
+    }
+}
+
+/// Stateful wrapper: runs the recovery discipline and accumulates the
+/// typed event stream. Drivers drain events into their `MetricsSink`
+/// each step; running totals survive the drain for end-of-run reports.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    events: Vec<FaultEvent>,
+    /// events raised so far (drained or not)
+    pub total: u64,
+    /// events whose fault could NOT be absorbed — any nonzero count is
+    /// a loud failure at run end
+    pub unrecovered: u64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector { plan, events: Vec::new(), total: 0, unrecovered: 0 }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.plan.enabled()
+    }
+
+    /// Move the undrained events out (running totals persist).
+    pub fn drain(&mut self) -> Vec<FaultEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    fn record(&mut self, ev: FaultEvent) {
+        self.total += 1;
+        if !ev.recovered {
+            self.unrecovered += 1;
+        }
+        self.events.push(ev);
+    }
+
+    /// Rank-stall injection for step/tick `step`: sleeps the configured
+    /// duration and records a recovered event. Numerics-neutral —
+    /// returns the stalled rank so serving can flip into shed mode.
+    pub fn maybe_stall(&mut self, step: u64, ranks: usize) -> Option<usize> {
+        if !self.plan.stalls(step) {
+            return None;
+        }
+        let rank = self.plan.stall_rank(step, ranks);
+        if self.plan.cfg.stall_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(
+                self.plan.cfg.stall_ms,
+            ));
+        }
+        self.record(FaultEvent {
+            kind: FaultKind::RankStall,
+            step,
+            rank,
+            retries: 0,
+            recovered: true,
+        });
+        Some(rank)
+    }
+
+    /// Transient-exchange gate for `(step, micro)`: simulates attempt
+    /// failures per the plan, sleeping the exponential backoff between
+    /// attempts, until an attempt goes through or the retry budget is
+    /// spent. Returns the retries taken; an exhausted budget records an
+    /// unrecovered event AND errors, so the caller cannot proceed
+    /// silently.
+    pub fn exchange_gate(&mut self, step: u64, micro: u64) -> Result<u64, String> {
+        if self.plan.cfg.exchange_fail_prob <= 0.0 {
+            return Ok(0);
+        }
+        let budget = self.plan.cfg.max_retries as u64;
+        let mut attempt = 0u64;
+        while self.plan.exchange_fails(step, micro, attempt) {
+            if attempt >= budget {
+                self.record(FaultEvent {
+                    kind: FaultKind::ExchangeTransient,
+                    step,
+                    rank: 0,
+                    retries: attempt,
+                    recovered: false,
+                });
+                return Err(format!(
+                    "exchange failed at step {step} micro {micro}: retry \
+                     budget {budget} exhausted"
+                ));
+            }
+            if self.plan.cfg.backoff_ms > 0 {
+                let shift = attempt.min(6) as u32;
+                std::thread::sleep(std::time::Duration::from_millis(
+                    self.plan.cfg.backoff_ms << shift,
+                ));
+            }
+            attempt += 1;
+        }
+        if attempt > 0 {
+            self.record(FaultEvent {
+                kind: FaultKind::ExchangeTransient,
+                step,
+                rank: 0,
+                retries: attempt,
+                recovered: true,
+            });
+        }
+        Ok(attempt)
+    }
+
+    /// Snapshot-corruption injection for the generation just written at
+    /// `step`: flips or truncates its bytes per the plan, then *proves*
+    /// recovery by asking the store whether a loadable generation
+    /// remains (the last-good fallback). Recorded recovered/unrecovered
+    /// accordingly — corrupting the only generation is surfaced, not
+    /// hidden.
+    pub fn maybe_corrupt_snapshot(&mut self, step: u64,
+                                  store: &SnapshotStore) -> Result<(), String> {
+        if !self.plan.corrupts_snapshot(step) {
+            return Ok(());
+        }
+        let gens = store.generations();
+        let Some((_, path)) = gens.last() else {
+            return Ok(());
+        };
+        let mut bytes = std::fs::read(path).map_err(|e| format!("{path}: {e}"))?;
+        let (offset, xor) = self.plan.corruption(step, bytes.len());
+        if xor == 0 {
+            bytes.truncate(offset);
+        } else {
+            bytes[offset] ^= xor;
+        }
+        std::fs::write(path, &bytes).map_err(|e| format!("{path}: {e}"))?;
+        let recovered = store.load_latest().is_some();
+        self.record(FaultEvent {
+            kind: FaultKind::SnapshotCorrupt,
+            step,
+            rank: 0,
+            retries: 0,
+            recovered,
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The fixture plan of the cross-language table: probabilities and
+    /// budget match `tools/ep_sim.py`'s fault mirror exactly.
+    fn table_plan(seed: u64) -> FaultPlan {
+        FaultPlan::new(FaultConfig {
+            seed,
+            stall_prob: 0.15,
+            stall_ms: 0,
+            exchange_fail_prob: 0.25,
+            snapshot_corrupt_prob: 0.2,
+            max_retries: 3,
+            backoff_ms: 0,
+        })
+    }
+
+    /// Pinned decision tables, 8 seeds x 20 steps x 2 microbatches —
+    /// `tools/ep_sim.py` holds the identical ones (FAULT_STALLS /
+    /// FAULT_EXCH / FAULT_CORRUPT). A divergence means the mixing
+    /// arithmetic drifted between the suites.
+    const STALLS: [&[u64]; 8] = [
+        &[4],
+        &[1, 10, 13, 14, 16, 18],
+        &[],
+        &[19],
+        &[6, 14],
+        &[9, 14],
+        &[8, 12, 15],
+        &[13, 17],
+    ];
+    const EXCH: [&[(u64, u64, u64)]; 8] = [
+        &[(0, 1, 1), (5, 1, 1), (6, 1, 1), (7, 0, 1), (8, 0, 1), (9, 0, 1),
+          (9, 1, 1), (10, 0, 1), (13, 0, 2), (15, 0, 2), (18, 0, 1),
+          (18, 1, 1)],
+        &[(2, 0, 2), (2, 1, 1), (7, 0, 1), (9, 0, 1), (11, 1, 2), (12, 0, 1),
+          (14, 1, 3), (18, 1, 2)],
+        &[(0, 0, 1), (0, 1, 1), (5, 1, 1), (6, 1, 1), (7, 0, 1), (7, 1, 1),
+          (8, 0, 2), (15, 1, 2), (17, 1, 1), (18, 1, 1)],
+        &[(0, 0, 1), (1, 0, 1), (1, 1, 2), (3, 0, 1), (5, 0, 1), (9, 1, 1),
+          (11, 0, 1), (12, 1, 1), (17, 0, 1)],
+        &[(0, 1, 1), (2, 1, 1), (5, 0, 1), (5, 1, 1), (6, 1, 1), (7, 1, 1),
+          (11, 0, 1), (12, 0, 1), (14, 0, 1), (17, 0, 1), (17, 1, 1),
+          (18, 0, 1)],
+        &[(3, 0, 1), (5, 0, 1), (5, 1, 1), (10, 0, 1), (10, 1, 1),
+          (11, 0, 3), (11, 1, 1), (13, 0, 1), (14, 0, 1), (16, 1, 2),
+          (17, 0, 3), (19, 0, 1)],
+        &[(0, 0, 1), (0, 1, 1), (2, 0, 1), (3, 0, 1), (8, 0, 1), (9, 0, 1),
+          (10, 0, 1), (10, 1, 3), (11, 1, 1), (13, 0, 1), (16, 0, 1),
+          (18, 0, 1), (18, 1, 1), (19, 0, 1)],
+        &[(0, 0, 1), (0, 1, 1), (2, 0, 2), (2, 1, 1), (4, 1, 1), (7, 0, 1),
+          (7, 1, 2), (8, 1, 1), (9, 0, 3), (10, 1, 1), (12, 0, 1),
+          (12, 1, 1), (16, 0, 1), (16, 1, 1), (18, 1, 1)],
+    ];
+    const CORRUPT: [&[u64]; 8] = [
+        &[1, 5, 12, 15, 18],
+        &[0, 9, 14, 15],
+        &[4, 13, 17],
+        &[1, 4, 6, 19],
+        &[15, 17, 18],
+        &[12],
+        &[0, 5, 13, 15, 16],
+        &[1, 2, 7, 10, 14, 17, 18],
+    ];
+
+    #[test]
+    fn pinned_decision_tables_match_the_python_mirror() {
+        for seed in 0..8u64 {
+            let plan = table_plan(seed);
+            let stalls: Vec<u64> = (0..20).filter(|&s| plan.stalls(s)).collect();
+            assert_eq!(stalls, STALLS[seed as usize], "stalls, seed {seed}");
+            let mut exch = Vec::new();
+            for s in 0..20u64 {
+                for m in 0..2u64 {
+                    let mut inj = FaultInjector::new(plan.clone());
+                    let retries = inj.exchange_gate(s, m).unwrap();
+                    if retries > 0 {
+                        exch.push((s, m, retries));
+                    }
+                }
+            }
+            assert_eq!(exch, EXCH[seed as usize], "exchange, seed {seed}");
+            let corrupt: Vec<u64> =
+                (0..20).filter(|&s| plan.corrupts_snapshot(s)).collect();
+            assert_eq!(corrupt, CORRUPT[seed as usize], "corrupt, seed {seed}");
+        }
+    }
+
+    #[test]
+    fn decisions_are_replay_stable_and_seed_sensitive() {
+        let plan = table_plan(3);
+        for s in 0..50u64 {
+            assert_eq!(plan.stalls(s), plan.stalls(s));
+            assert_eq!(plan.exchange_fails(s, 1, 0), plan.exchange_fails(s, 1, 0));
+        }
+        // different seeds draw different sequences
+        let a: Vec<bool> = (0..64).map(|s| table_plan(1).stalls(s)).collect();
+        let b: Vec<bool> = (0..64).map(|s| table_plan(2).stalls(s)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn disabled_plan_never_fires() {
+        let plan = FaultPlan::disabled();
+        assert!(!plan.enabled());
+        for s in 0..100u64 {
+            assert!(!plan.stalls(s));
+            assert!(!plan.exchange_fails(s, 0, 0));
+            assert!(!plan.corrupts_snapshot(s));
+        }
+        let mut inj = FaultInjector::new(plan);
+        for s in 0..100 {
+            assert_eq!(inj.maybe_stall(s, 4), None);
+            assert_eq!(inj.exchange_gate(s, 0).unwrap(), 0);
+        }
+        assert_eq!(inj.total, 0);
+        assert!(inj.drain().is_empty());
+    }
+
+    #[test]
+    fn exhausted_retry_budget_is_loud_not_silent() {
+        // certain failure + zero budget: the gate must error AND record
+        // an unrecovered event — never both-absent
+        let plan = FaultPlan::new(FaultConfig {
+            seed: 1,
+            exchange_fail_prob: 1.0,
+            max_retries: 0,
+            backoff_ms: 0,
+            ..FaultConfig::default()
+        });
+        let mut inj = FaultInjector::new(plan);
+        assert!(inj.exchange_gate(0, 0).is_err());
+        assert_eq!(inj.unrecovered, 1);
+        let evs = inj.drain();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].kind, FaultKind::ExchangeTransient);
+        assert!(!evs[0].recovered);
+    }
+
+    #[test]
+    fn stall_events_are_recovered_and_ranked() {
+        let plan = table_plan(1); // stalls at steps 1, 10, 13, 14, 16, 18
+        let mut inj = FaultInjector::new(plan);
+        let r = inj.maybe_stall(1, 4).expect("seed 1 stalls at step 1");
+        assert!(r < 4);
+        assert_eq!(inj.maybe_stall(2, 4), None);
+        let evs = inj.drain();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].kind, FaultKind::RankStall);
+        assert!(evs[0].recovered);
+        assert_eq!(inj.total, 1);
+        assert_eq!(inj.unrecovered, 0);
+        // drain is move-out: totals persist, queue empties
+        assert!(inj.drain().is_empty());
+        assert_eq!(inj.total, 1);
+    }
+
+    #[test]
+    fn corruption_site_is_in_bounds_and_never_a_noop() {
+        let plan = table_plan(5);
+        for s in 0..100u64 {
+            for len in [1usize, 8, 100, 4096] {
+                let (offset, _xor) = plan.corruption(s, len);
+                assert!(offset < len, "offset {offset} out of {len}");
+            }
+        }
+        // both corruption modes occur across steps
+        let modes: Vec<bool> =
+            (0..200).map(|s| plan.corruption(s, 1024).1 == 0).collect();
+        assert!(modes.iter().any(|&t| t), "no truncation mode seen");
+        assert!(modes.iter().any(|&t| !t), "no flip mode seen");
+    }
+}

@@ -1,0 +1,28 @@
+//! Fault tolerance: crash-consistent snapshots, bit-identical resume,
+//! deterministic fault injection.
+//!
+//! Three co-designed pieces (see `lib.rs` § Robustness for the knob
+//! table):
+//!
+//! - [`snapshot`] — versioned, checksummed [`TrainState`] artifacts
+//!   written atomically every `[ep] snapshot_interval` optimizer steps
+//!   and retained as N last-good generations; `--resume` restores the
+//!   exact parameter/optimizer bits, so an interrupted-and-resumed run
+//!   reproduces the never-interrupted loss curve bit-for-bit.
+//! - [`fault`] — a seeded [`FaultPlan`] ([`[fault]` config]
+//!   [crate::config::FaultConfig]) injecting rank stalls, transient
+//!   exchange failures, and snapshot corruption at deterministic,
+//!   replayable sites; the [`FaultInjector`] enforces that every
+//!   injected fault is either recovered (bounded retry / generation
+//!   fallback) or surfaced as a typed [`FaultEvent`] — never silent.
+//! - graceful degradation in serving (`serving::driver`) — deadlines
+//!   and a stall-triggered shed mode, accounted in the request
+//!   conservation law and the Prometheus exposition.
+
+pub mod fault;
+pub mod snapshot;
+
+pub use fault::{FaultEvent, FaultInjector, FaultKind, FaultPlan};
+pub use snapshot::{
+    config_fingerprint, SnapshotStore, TrainState, KEEP_GENERATIONS,
+};

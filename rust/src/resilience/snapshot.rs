@@ -1,0 +1,587 @@
+//! Crash-consistent training snapshots: versioned, checksummed,
+//! atomically written, bit-exact on restore.
+//!
+//! A [`TrainState`] captures everything the training loop needs to
+//! resume *bit-for-bit*: the full [`ExpertStore`] (including SwiGLU
+//! `w3` grids), the optimizer's exact state (Adam's bias-correction
+//! exponent and both moment grids — recomputing moments would break
+//! the resume pin), the optimizer-step cursor, and the run's
+//! calibration. The data/RNG position needs no separate field: the
+//! workload is a pure function of the config built once before the
+//! loop, so the step counter IS the data position.
+//!
+//! The on-disk artifact is `[magic "MBSNAP01"][payload][FNV-1a-64 of
+//! payload]`. Decoding is total — any magic mismatch, truncation, bit
+//! flip, shape violation, or trailing garbage yields `None`, never a
+//! panic and never a half-restored state (the corrupt-snapshot fuzz
+//! tests walk every byte prefix and every single-byte flip).
+//!
+//! A [`SnapshotStore`] manages generations `{base}.g{step:010}`: each
+//! save goes through the `calibrate.rs` tmp+rename pattern (readers
+//! see the old complete artifact or the new complete artifact, never
+//! a torn write), the oldest generations beyond `keep` are pruned, and
+//! `load_latest` walks generations newest-first so a corrupted newest
+//! generation falls back to the last good one.
+
+use std::collections::BTreeMap;
+use std::fs;
+
+use crate::config::ep::EpConfig;
+use crate::coordinator::calibrate::Calibration;
+use crate::coordinator::optim::OptimizerState;
+use crate::coordinator::params::{ExpertGrads, ExpertParams, ExpertStore};
+use crate::util::bytes::{
+    bytes_to_f32s, f32s_to_bytes, read_str, read_u64, write_str, write_u64,
+};
+
+/// Artifact magic + format version, bumped together on layout changes.
+const MAGIC: &[u8; 8] = b"MBSNAP01";
+/// Payload-level format version (inside the checksummed region).
+const VERSION: u64 = 1;
+/// Generations a store retains (newest `KEEP_GENERATIONS` survive).
+pub const KEEP_GENERATIONS: usize = 3;
+
+/// FNV-1a 64 over a byte slice — the artifact checksum.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a fold of one u64 (for the config fingerprint).
+fn fnv_u64(h: u64, v: u64) -> u64 {
+    let mut h = h;
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a fold of a string (length-prefixed so `("ab","c")` and
+/// `("a","bc")` fingerprint differently).
+fn fnv_str(h: u64, s: &str) -> u64 {
+    let mut h = fnv_u64(h, s.len() as u64);
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of the numerics-affecting config fields. A snapshot
+/// resumes only into a run whose fingerprint matches — and ONLY the
+/// fields that shape the loss curve participate: topology (`ranks`,
+/// `pipeline_chunks`, placement), checkpoint policy, and tile size are
+/// deliberately excluded, because the engines are pinned bit-identical
+/// across them. A snapshot taken at R=1 restores at R=4.
+pub fn config_fingerprint(cfg: &EpConfig) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    h = fnv_u64(h, cfg.seed);
+    h = fnv_u64(h, cfg.tokens as u64);
+    h = fnv_u64(h, cfg.num_experts as u64);
+    h = fnv_u64(h, cfg.top_k as u64);
+    h = fnv_u64(h, cfg.d_model as u64);
+    h = fnv_u64(h, cfg.d_hidden as u64);
+    h = fnv_u64(h, cfg.steps as u64);
+    h = fnv_u64(h, cfg.grad_accum as u64);
+    h = fnv_u64(h, cfg.lr.to_bits());
+    h = fnv_u64(h, cfg.clip_norm.to_bits());
+    h = fnv_u64(h, cfg.skew.to_bits());
+    h = fnv_u64(h, cfg.num_layers as u64);
+    h = fnv_str(h, &cfg.optimizer);
+    h = fnv_str(h, &cfg.lr_schedule);
+    h = fnv_str(h, cfg.activation.name());
+    h
+}
+
+/// Everything a resumed run restores. See the module docs for the
+/// bit-identity contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainState {
+    /// `config_fingerprint` of the run that wrote the snapshot
+    pub fingerprint: u64,
+    /// optimizer steps completed when the snapshot was taken
+    pub step: u64,
+    /// microbatch cursor inside the current accumulation window —
+    /// structurally 0 (snapshots land only at optimizer-step
+    /// boundaries; a mid-accumulation due date defers), carried
+    /// explicitly so the invariant is checked on load, not assumed
+    pub micro_cursor: u64,
+    /// full parameter state, `w3` included when gated
+    pub params: ExpertStore,
+    /// exact optimizer state (Adam: t + both moment grids)
+    pub optimizer: OptimizerState,
+    /// link/compute calibration active when the snapshot was taken
+    pub calibration: Option<Calibration>,
+}
+
+fn write_f32_grid(out: &mut Vec<u8>, xs: &[f32]) {
+    write_u64(out, xs.len() as u64);
+    out.extend_from_slice(&f32s_to_bytes(xs));
+}
+
+fn read_f32_grid(b: &[u8], pos: &mut usize) -> Result<Vec<f32>, String> {
+    let n = read_u64(b, pos)? as usize;
+    let bytes = n.checked_mul(4).ok_or("grid length overflow")?;
+    let end = pos.checked_add(bytes).ok_or("grid length overflow")?;
+    if end > b.len() {
+        return Err(format!("grid of {n} f32s overruns payload"));
+    }
+    let xs = bytes_to_f32s(&b[*pos..end])?;
+    *pos = end;
+    Ok(xs)
+}
+
+fn write_experts(out: &mut Vec<u8>, d_model: usize, d_hidden: usize,
+                 experts: &[ExpertParams]) {
+    write_u64(out, experts.len() as u64);
+    write_u64(out, d_model as u64);
+    write_u64(out, d_hidden as u64);
+    for e in experts {
+        write_f32_grid(out, &e.w1);
+        write_f32_grid(out, &e.b1);
+        write_f32_grid(out, &e.w2);
+        write_f32_grid(out, &e.b2);
+        write_f32_grid(out, &e.w3);
+    }
+}
+
+fn read_experts(
+    b: &[u8],
+    pos: &mut usize,
+) -> Result<(usize, usize, Vec<ExpertParams>), String> {
+    let n = read_u64(b, pos)? as usize;
+    let d = read_u64(b, pos)? as usize;
+    let h = read_u64(b, pos)? as usize;
+    if n > 1 << 20 || d > 1 << 20 || h > 1 << 20 {
+        return Err("implausible expert grid header".into());
+    }
+    let mut experts = Vec::with_capacity(n);
+    for _ in 0..n {
+        let w1 = read_f32_grid(b, pos)?;
+        let b1 = read_f32_grid(b, pos)?;
+        let w2 = read_f32_grid(b, pos)?;
+        let b2 = read_f32_grid(b, pos)?;
+        let w3 = read_f32_grid(b, pos)?;
+        // shape check here, not at restore time: a flipped length byte
+        // must fail the LOAD, so fallback kicks in before any state is
+        // touched
+        if w1.len() != h * d || b1.len() != h || w2.len() != d * h
+            || b2.len() != d || !(w3.is_empty() || w3.len() == h * d)
+        {
+            return Err("expert tensor shape mismatch".into());
+        }
+        experts.push(ExpertParams { w1, b1, w2, b2, w3 });
+    }
+    Ok((d, h, experts))
+}
+
+impl TrainState {
+    /// Serialize to the checksummed artifact bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        write_u64(&mut p, VERSION);
+        write_u64(&mut p, self.fingerprint);
+        write_u64(&mut p, self.step);
+        write_u64(&mut p, self.micro_cursor);
+        write_experts(&mut p, self.params.d_model, self.params.d_hidden,
+                      &self.params.experts);
+        match &self.optimizer {
+            OptimizerState::Sgd => write_str(&mut p, "sgd"),
+            OptimizerState::Adam { t, m, v } => {
+                write_str(&mut p, "adam");
+                write_u64(&mut p, *t);
+                write_u64(&mut p, u64::from(m.is_some()));
+                if let (Some(m), Some(v)) = (m, v) {
+                    write_experts(&mut p, m.d_model, m.d_hidden, &m.experts);
+                    write_experts(&mut p, v.d_model, v.d_hidden, &v.experts);
+                }
+            }
+        }
+        match &self.calibration {
+            None => write_u64(&mut p, 0),
+            Some(c) => {
+                write_u64(&mut p, 1);
+                write_u64(&mut p, c.link_gbps.to_bits());
+                write_u64(&mut p, c.compute_gflops.to_bits());
+                write_u64(&mut p, c.tiles.len() as u64);
+                for (k, v) in &c.tiles {
+                    write_str(&mut p, k);
+                    write_u64(&mut p, *v as u64);
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(MAGIC.len() + p.len() + 8);
+        out.extend_from_slice(MAGIC);
+        let sum = fnv1a(&p);
+        out.extend_from_slice(&p);
+        write_u64(&mut out, sum);
+        out
+    }
+
+    /// Total decoder: `None` on ANY defect — wrong magic, truncation,
+    /// checksum mismatch, bad version, shape violation, inconsistent
+    /// optimizer state, or trailing bytes. Callers fall back to the
+    /// previous generation; nothing partial ever escapes.
+    pub fn from_bytes(b: &[u8]) -> Option<TrainState> {
+        if b.len() < MAGIC.len() + 8 || &b[..MAGIC.len()] != MAGIC {
+            return None;
+        }
+        let payload = &b[MAGIC.len()..b.len() - 8];
+        let mut tail = b.len() - 8;
+        let stored = read_u64(b, &mut tail).ok()?;
+        if fnv1a(payload) != stored {
+            return None;
+        }
+        Self::decode_payload(payload).ok()
+    }
+
+    fn decode_payload(p: &[u8]) -> Result<TrainState, String> {
+        let mut pos = 0usize;
+        let version = read_u64(p, &mut pos)?;
+        if version != VERSION {
+            return Err(format!("unknown snapshot version {version}"));
+        }
+        let fingerprint = read_u64(p, &mut pos)?;
+        let step = read_u64(p, &mut pos)?;
+        let micro_cursor = read_u64(p, &mut pos)?;
+        if micro_cursor != 0 {
+            // snapshots are taken only at optimizer-step boundaries
+            return Err("snapshot taken mid-accumulation".into());
+        }
+        let (d_model, d_hidden, experts) = read_experts(p, &mut pos)?;
+        let params = ExpertStore { d_model, d_hidden, experts };
+        let optimizer = match read_str(p, &mut pos)?.as_str() {
+            "sgd" => OptimizerState::Sgd,
+            "adam" => {
+                let t = read_u64(p, &mut pos)?;
+                let has = read_u64(p, &mut pos)?;
+                match has {
+                    0 => OptimizerState::Adam { t, m: None, v: None },
+                    1 => {
+                        let (md, mh, me) = read_experts(p, &mut pos)?;
+                        let (vd, vh, ve) = read_experts(p, &mut pos)?;
+                        if (md, mh, me.len()) != (d_model, d_hidden, params.experts.len())
+                            || (vd, vh, ve.len()) != (md, mh, me.len())
+                        {
+                            return Err("moment grids disagree with params".into());
+                        }
+                        OptimizerState::Adam {
+                            t,
+                            m: Some(ExpertGrads { d_model: md, d_hidden: mh,
+                                                  experts: me }),
+                            v: Some(ExpertGrads { d_model: vd, d_hidden: vh,
+                                                  experts: ve }),
+                        }
+                    }
+                    other => return Err(format!("bad moment flag {other}")),
+                }
+            }
+            other => return Err(format!("unknown optimizer `{other}`")),
+        };
+        let calibration = match read_u64(p, &mut pos)? {
+            0 => None,
+            1 => {
+                let link_gbps = f64::from_bits(read_u64(p, &mut pos)?);
+                let compute_gflops = f64::from_bits(read_u64(p, &mut pos)?);
+                let n = read_u64(p, &mut pos)? as usize;
+                if n > 1 << 16 {
+                    return Err("implausible tile-table length".into());
+                }
+                let mut tiles = BTreeMap::new();
+                for _ in 0..n {
+                    let k = read_str(p, &mut pos)?;
+                    let v = read_u64(p, &mut pos)? as usize;
+                    tiles.insert(k, v);
+                }
+                Some(Calibration { link_gbps, compute_gflops, tiles })
+            }
+            other => return Err(format!("bad calibration flag {other}")),
+        };
+        if pos != p.len() {
+            return Err("trailing bytes after snapshot payload".into());
+        }
+        Ok(TrainState { fingerprint, step, micro_cursor, params, optimizer,
+                        calibration })
+    }
+}
+
+/// Generation-managed snapshot directory entry point (see module docs).
+#[derive(Debug, Clone)]
+pub struct SnapshotStore {
+    /// generation files live at `{base}.g{step:010}`
+    pub base: String,
+    /// generations retained after each save
+    pub keep: usize,
+}
+
+impl SnapshotStore {
+    pub fn new(base: &str) -> SnapshotStore {
+        SnapshotStore { base: base.to_string(), keep: KEEP_GENERATIONS }
+    }
+
+    /// Path of the generation written at optimizer step `step`.
+    pub fn gen_path(&self, step: u64) -> String {
+        format!("{}.g{step:010}", self.base)
+    }
+
+    /// All on-disk generations as `(step, path)`, ascending by step.
+    pub fn generations(&self) -> Vec<(u64, String)> {
+        let base = std::path::Path::new(&self.base);
+        let dir = match base.parent() {
+            Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+            _ => std::path::PathBuf::from("."),
+        };
+        let stem = match base.file_name().and_then(|s| s.to_str()) {
+            Some(s) => format!("{s}.g"),
+            None => return Vec::new(),
+        };
+        let mut out = Vec::new();
+        let Ok(entries) = fs::read_dir(&dir) else {
+            return Vec::new();
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(digits) = name.strip_prefix(&stem) else { continue };
+            if digits.len() == 10 {
+                if let Ok(step) = digits.parse::<u64>() {
+                    out.push((step, entry.path().to_string_lossy().into_owned()));
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Atomically persist `state` as the generation for its step, then
+    /// prune generations beyond `keep`. tmp+rename (the `calibrate.rs`
+    /// pattern): a crash mid-write leaves either the old set of
+    /// complete artifacts or the new one, never a torn file under the
+    /// real name.
+    pub fn save(&self, state: &TrainState) -> Result<String, String> {
+        let path = self.gen_path(state.step);
+        if let Some(dir) = std::path::Path::new(&path).parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)
+                    .map_err(|e| format!("create {}: {e}", dir.display()))?;
+            }
+        }
+        let tmp = format!("{path}.tmp");
+        fs::write(&tmp, state.to_bytes()).map_err(|e| format!("{tmp}: {e}"))?;
+        fs::rename(&tmp, &path).map_err(|e| format!("{tmp} -> {path}: {e}"))?;
+        let gens = self.generations();
+        if gens.len() > self.keep {
+            for (_, old) in &gens[..gens.len() - self.keep] {
+                let _ = fs::remove_file(old);
+            }
+        }
+        Ok(path)
+    }
+
+    /// Newest generation that decodes cleanly — a corrupt or truncated
+    /// newest generation falls back to the previous one. `None` only
+    /// when no generation is loadable at all.
+    pub fn load_latest(&self) -> Option<TrainState> {
+        for (_, path) in self.generations().into_iter().rev() {
+            if let Ok(bytes) = fs::read(&path) {
+                if let Some(state) = TrainState::from_bytes(&bytes) {
+                    return Some(state);
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optim::{Adam, Optimizer, Sgd};
+    use crate::coordinator::params::ExpertStore;
+
+    fn tmp_base(tag: &str) -> String {
+        let dir = std::env::temp_dir();
+        dir.join(format!("moeblaze_snap_{}_{tag}", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn cleanup(base: &str) {
+        for (_, p) in SnapshotStore::new(base).generations() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    fn sample_state(gated: bool, with_moments: bool) -> TrainState {
+        let store = ExpertStore::init_gated(4, 6, 8, 17, gated);
+        let optimizer = if with_moments {
+            // drive a real Adam two steps so both moment grids are live
+            let mut adam = Adam::default();
+            let mut g = ExpertGrads::zeros_gated(4, 6, 8, gated);
+            for e in &mut g.experts {
+                for x in e.w1.iter_mut().chain(e.b1.iter_mut()) {
+                    *x = 0.25;
+                }
+            }
+            adam.step(&g, 1e-3).unwrap();
+            adam.step(&g, 1e-3).unwrap();
+            adam.export_state()
+        } else {
+            OptimizerState::Sgd
+        };
+        TrainState {
+            fingerprint: 0xDEAD_BEEF_CAFE_F00D,
+            step: 3,
+            micro_cursor: 0,
+            params: store,
+            optimizer,
+            calibration: Some(Calibration {
+                link_gbps: 42.5,
+                compute_gflops: 980.0,
+                tiles: BTreeMap::from([("fwd".to_string(), 64usize)]),
+            }),
+        }
+    }
+
+    #[test]
+    fn round_trips_bit_exact_all_variants() {
+        for gated in [false, true] {
+            for with_moments in [false, true] {
+                let s = sample_state(gated, with_moments);
+                let b = s.to_bytes();
+                let r = TrainState::from_bytes(&b)
+                    .expect("clean artifact must decode");
+                // PartialEq on f32 grids == bitwise here (no NaNs in play)
+                assert_eq!(s, r, "gated={gated} moments={with_moments}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_byte_prefix_fails_closed() {
+        // satellite (a), half 1: no truncation point decodes — each
+        // must read as "fall back", never panic or half-restore
+        let full = sample_state(true, true).to_bytes();
+        for cut in 0..full.len() {
+            assert!(
+                TrainState::from_bytes(&full[..cut]).is_none(),
+                "prefix of {cut}/{} bytes decoded",
+                full.len()
+            );
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_fails_closed() {
+        // satellite (a), half 2: any one-bit-pattern change anywhere in
+        // the artifact must be caught (magic check or FNV mismatch)
+        let full = sample_state(true, true).to_bytes();
+        for i in 0..full.len() {
+            let mut bad = full.clone();
+            bad[i] ^= 0x5A;
+            assert!(
+                TrainState::from_bytes(&bad).is_none(),
+                "flip at byte {i}/{} decoded",
+                full.len()
+            );
+        }
+    }
+
+    #[test]
+    fn store_keeps_n_generations_and_prunes_oldest() {
+        let base = tmp_base("gens");
+        cleanup(&base);
+        let store = SnapshotStore::new(&base);
+        let mut s = sample_state(false, false);
+        for step in 1..=5u64 {
+            s.step = step;
+            store.save(&s).unwrap();
+        }
+        let gens = store.generations();
+        assert_eq!(gens.iter().map(|(g, _)| *g).collect::<Vec<_>>(),
+                   vec![3, 4, 5]);
+        assert_eq!(store.load_latest().unwrap().step, 5);
+        // no stray .tmp files survive a save
+        assert!(!std::path::Path::new(&format!("{}.tmp", store.gen_path(5)))
+            .exists());
+        cleanup(&base);
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_previous_generation() {
+        let base = tmp_base("fallback");
+        cleanup(&base);
+        let store = SnapshotStore::new(&base);
+        let mut s = sample_state(true, true);
+        s.step = 1;
+        store.save(&s).unwrap();
+        s.step = 2;
+        store.save(&s).unwrap();
+        // flip a byte in the middle of the newest generation
+        let newest = store.gen_path(2);
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&newest, &bytes).unwrap();
+        let loaded = store.load_latest().expect("gen 1 must remain loadable");
+        assert_eq!(loaded.step, 1);
+        // corrupting the last good one too -> None, still no panic
+        let prev = store.gen_path(1);
+        std::fs::write(&prev, b"MBSNAP01 junk").unwrap();
+        assert!(store.load_latest().is_none());
+        cleanup(&base);
+    }
+
+    #[test]
+    fn fingerprint_tracks_numerics_and_ignores_topology() {
+        let mut a = EpConfig::default();
+        let f0 = config_fingerprint(&a);
+        // topology / schedule / policy axes leave the fingerprint alone
+        a.ranks = 4;
+        a.pipeline_chunks = 3;
+        a.tile_rows = 96;
+        assert_eq!(config_fingerprint(&a), f0);
+        // numerics-affecting fields move it
+        for mutate in [
+            (|c: &mut EpConfig| c.seed += 1) as fn(&mut EpConfig),
+            |c| c.lr *= 2.0,
+            |c| c.grad_accum += 1,
+            |c| c.optimizer = "adam".to_string(),
+            |c| c.num_experts += 1,
+            |c| c.activation = crate::config::Activation::Swiglu,
+        ] {
+            let mut b = EpConfig::default();
+            mutate(&mut b);
+            assert_ne!(config_fingerprint(&b), f0);
+        }
+    }
+
+    #[test]
+    fn sgd_and_adam_states_survive_the_artifact() {
+        // export -> artifact -> import must land the optimizer exactly
+        // where it was (the trainer relies on this for resume)
+        let s = sample_state(false, true);
+        let r = TrainState::from_bytes(&s.to_bytes()).unwrap();
+        let mut adam = Adam::default();
+        adam.import_state(r.optimizer).unwrap();
+        let mut g = ExpertGrads::zeros(4, 6, 8);
+        for e in &mut g.experts {
+            for x in e.w2.iter_mut() {
+                *x = -0.125;
+            }
+        }
+        let mut adam2 = Adam::default();
+        adam2.import_state(s.optimizer.clone()).unwrap();
+        assert_eq!(adam.step(&g, 1e-3).unwrap(), adam2.step(&g, 1e-3).unwrap());
+        // and SGD stays stateless
+        let s = sample_state(false, false);
+        let r = TrainState::from_bytes(&s.to_bytes()).unwrap();
+        let mut sgd = Sgd;
+        sgd.import_state(r.optimizer).unwrap();
+    }
+}

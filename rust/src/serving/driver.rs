@@ -11,10 +11,12 @@ use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::config::ep::EpConfig;
+use crate::config::fault::FaultConfig;
 use crate::config::serving::ServingConfig;
 use crate::coordinator::engine::topology_from_config;
 use crate::metrics::registry::Registry;
 use crate::metrics::{Histogram, MetricsSink, Peak};
+use crate::resilience::{FaultInjector, FaultPlan};
 use crate::trace::load::ExpertLoadTracker;
 use crate::trace::{StepSummary, TracePhase, Tracer};
 
@@ -25,8 +27,8 @@ use super::session::ForwardSession;
 
 /// Everything `ep-serve` reports at the end of a run. Counters satisfy
 /// `generated = completed + rejected_queue_full + rejected_capacity +
-/// queued_at_end` — every generated request is accounted for exactly
-/// once.
+/// shed + queued_at_end` — every generated request is accounted for
+/// exactly once, including the ones graceful degradation let go.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub engine: String,
@@ -57,6 +59,16 @@ pub struct ServeReport {
     /// worst per-layer rank-load imbalance any folded tick reached
     /// (0 when load telemetry is off)
     pub max_imbalance: f64,
+    /// requests gracefully let go: deadline expiries plus arrivals
+    /// refused while shed mode was active — part of the conservation
+    /// law, never a silent drop
+    pub shed: u64,
+    /// ticks spent in stall-triggered shed mode
+    pub shed_mode_ticks: u64,
+    /// injected fault events (`[fault]` runs only)
+    pub fault_events: u64,
+    /// injected faults that could not be recovered (surfaced, loud)
+    pub fault_unrecovered: u64,
 }
 
 impl ServeReport {
@@ -88,6 +100,9 @@ pub struct ServeLoop {
     load: Option<ExpertLoadTracker>,
     /// created when `[ep] metrics_expose_path` names a file
     registry: Option<Registry>,
+    /// deterministic fault injection (`[fault]` config); disabled by
+    /// default. A stall fault is the shed-mode trigger
+    fault: FaultInjector,
 }
 
 impl ServeLoop {
@@ -123,13 +138,22 @@ impl ServeLoop {
             None
         };
         Ok(ServeLoop { ep: ep.clone(), scfg: scfg.clone(), admission, session,
-                       traffic, sink, tracer, load, registry })
+                       traffic, sink, tracer, load, registry,
+                       fault: FaultInjector::new(FaultPlan::disabled()) })
+    }
+
+    /// Arm deterministic fault injection (`[fault]` config): rank
+    /// stalls flip the loop into shed mode for `[serving]
+    /// shed_recovery_ticks`, transient exchange faults gate `infer`
+    /// behind the bounded retry loop.
+    pub fn set_fault_plan(&mut self, cfg: FaultConfig) {
+        self.fault = FaultInjector::new(FaultPlan::new(cfg));
     }
 
     /// Tick boundary for the load tracker: fold the tick's routed rows,
     /// surface raised skew alarms, extend the Chrome `load_rows` counter
     /// tracks, and (on the publish cadence) refresh the exposition file.
-    fn fold_load_tick(&self, tick: u64, publish: bool,
+    fn fold_load_tick(&mut self, tick: u64, publish: bool,
                       skew_alarms: &mut u64, max_imbalance: &mut f64) {
         let lt = match &self.load {
             Some(lt) => lt,
@@ -165,6 +189,33 @@ impl ServeLoop {
         }
     }
 
+    /// Surface this tick's injected faults: every event reaches the
+    /// metrics stream, and the registry counter families when
+    /// configured — recovery without a trace would be silent
+    /// degradation.
+    fn drain_fault_events(&mut self) {
+        for ev in self.fault.drain() {
+            self.sink.emit_tagged("fault", &[("kind", ev.kind.name())], &[
+                ("tick", ev.step as f64),
+                ("rank", ev.rank as f64),
+                ("retries", ev.retries as f64),
+                ("recovered", if ev.recovered { 1.0 } else { 0.0 }),
+            ]);
+            if let Some(reg) = &self.registry {
+                reg.counter("moeblaze_fault_events_total",
+                            "injected fault events by kind",
+                            &[("kind", ev.kind.name())])
+                    .inc();
+                if !ev.recovered {
+                    reg.counter("moeblaze_fault_unrecovered_total",
+                                "injected faults that could not be recovered",
+                                &[("kind", ev.kind.name())])
+                        .inc();
+                }
+            }
+        }
+    }
+
     /// Refresh the Prometheus-style exposition file (no-op unless
     /// `[ep] metrics_expose_path` is set).
     fn publish_registry(&self, tick: u64) {
@@ -196,6 +247,11 @@ impl ServeLoop {
         let (mut batches, mut tokens_served, mut wait_ticks_sum) = (0u64, 0u64, 0u64);
         let mut max_queue_depth_seen = 0usize;
         let (mut skew_alarms, mut max_imbalance) = (0u64, 0.0f64);
+        // graceful degradation: deadline expiries and stall-triggered
+        // shedding, every let-go request counted under `shed`
+        let mut shed = 0u64;
+        let mut shed_mode_ticks = 0u64;
+        let mut shed_mode_until = 0u64; // exclusive tick bound
         let print_every = (self.scfg.ticks / 8).max(1) as u64;
         // one trace "step" per tick: the engine's phase spans land under
         // the tick number, and the export embeds a per-tick summary
@@ -205,11 +261,59 @@ impl ServeLoop {
             if let Some(tr) = &self.tracer {
                 tr.begin_step(tick);
             }
-            // 1+2: arrivals through the admission screen
+            // injected rank stall: the shed-mode trigger. Admission
+            // flips to reject for `shed_recovery_ticks` after the
+            // stalled tick while the queue keeps draining below
+            if self.fault.maybe_stall(tick, self.ep.ranks.max(1)).is_some() {
+                shed_mode_until = shed_mode_until
+                    .max(tick + 1 + self.scfg.shed_recovery_ticks as u64);
+                self.sink.emit("shed_mode", &[
+                    ("tick", tick as f64),
+                    ("until_tick", shed_mode_until as f64),
+                ]);
+            }
+            let shedding = tick < shed_mode_until;
+            if shedding {
+                shed_mode_ticks += 1;
+            }
+
+            // per-request deadlines: a request still queued after
+            // `deadline_ticks` ticks of waiting is shed — counted, not
+            // silently dropped
+            if self.scfg.deadline_ticks > 0 {
+                let before = queue.len();
+                let deadline = self.scfg.deadline_ticks as u64;
+                queue.retain(|r| tick - r.arrival_tick < deadline);
+                let expired = (before - queue.len()) as u64;
+                if expired > 0 {
+                    shed += expired;
+                    self.sink.emit("shed", &[
+                        ("tick", tick as f64),
+                        ("expired", expired as f64),
+                    ]);
+                    if let Some(reg) = &self.registry {
+                        reg.counter("moeblaze_shed_total",
+                                    "requests shed by graceful degradation",
+                                    &[("reason", "deadline")])
+                            .add(expired);
+                    }
+                }
+            }
+
+            // 1+2: arrivals through the admission screen (flipped to
+            // shed-everything while shed mode is active)
             let mut arrived = 0usize;
             for r in self.traffic.tick(tick) {
                 arrived += 1;
-                if self.admission.infeasible(&r) {
+                if shedding {
+                    shed += 1;
+                    if let Some(reg) = &self.registry {
+                        reg.counter("moeblaze_shed_total",
+                                    "requests shed by graceful degradation",
+                                    &[("reason", "stall_mode")])
+                            .inc();
+                    }
+                } else if self.admission.infeasible(&r) {
                     rejected_capacity += 1;
                 } else if queue.len() >= self.scfg.max_queue_depth {
                     rejected_queue_full += 1;
@@ -251,9 +355,11 @@ impl ServeLoop {
                                         ("batch_tokens", 0.0),
                                         ("queue_depth", queue.len() as f64)]);
                 // an idle tick still closes the load-tracker step (no
-                // layer was fed, so nothing folds)
+                // layer was fed, so nothing folds) and surfaces any
+                // faults injected this tick
                 self.fold_load_tick(tick, false, &mut skew_alarms,
                                     &mut max_imbalance);
+                self.drain_fault_events();
                 continue;
             }
 
@@ -271,6 +377,11 @@ impl ServeLoop {
                 sc.rec.tokens = tb.batch.num_tokens() as u64;
                 sc.rec.rows = tb.spans.len() as u64;
             }
+            // transient exchange faults gate the forward behind the
+            // bounded retry loop (the failure is simulated BEFORE the
+            // engine call, so the served outputs stay bit-identical);
+            // an exhausted budget surfaces here as a loud error
+            self.fault.exchange_gate(tick, 0)?;
             let out = self.session.infer(&tb.batch)?;
             let rank_peak = self
                 .session
@@ -322,13 +433,14 @@ impl ServeLoop {
             }
             self.fold_load_tick(tick, tick % print_every == 0,
                                 &mut skew_alarms, &mut max_imbalance);
+            self.drain_fault_events();
         }
 
         let queued_at_end = queue.len() as u64;
         let generated = self.traffic.generated();
         debug_assert_eq!(generated,
                          completed + rejected_queue_full + rejected_capacity
-                             + queued_at_end);
+                             + shed + queued_at_end);
         let (p50, p95, p99) = latency.percentiles().unwrap_or((0.0, 0.0, 0.0));
         let report = ServeReport {
             engine: self.session.engine_name(),
@@ -355,16 +467,28 @@ impl ServeLoop {
             elapsed_s: started.elapsed().as_secs_f64(),
             skew_alarms,
             max_imbalance,
+            shed,
+            shed_mode_ticks,
+            fault_events: self.fault.total,
+            fault_unrecovered: self.fault.unrecovered,
         };
         self.sink.emit("ep_serve_summary",
                        &[("generated", report.generated as f64),
                          ("completed", report.completed as f64),
                          ("rejected_queue_full", report.rejected_queue_full as f64),
                          ("rejected_capacity", report.rejected_capacity as f64),
+                         ("shed", report.shed as f64),
+                         ("shed_mode_ticks", report.shed_mode_ticks as f64),
                          ("queued_at_end", report.queued_at_end as f64),
                          ("tokens_served", report.tokens_served as f64),
                          ("peak_rank_data_bytes", report.peak_rank_data_bytes as f64),
                          ("latency_p99_s", report.latency_p99_s)]);
+        if self.fault.enabled() {
+            self.sink.emit("fault_summary", &[
+                ("events", self.fault.total as f64),
+                ("unrecovered", self.fault.unrecovered as f64),
+            ]);
+        }
         if let Some(tr) = &self.tracer {
             let json = tr.chrome_trace(&summaries).to_string();
             match std::fs::write(&self.ep.trace_out, json) {
@@ -529,6 +653,106 @@ mod tests {
                        "moeblaze_expert_load_ewma",
                        "moeblaze_serve_tick"] {
             assert!(text.contains(family), "exposition missing {family}");
+        }
+    }
+
+    #[test]
+    fn deadlines_shed_overdue_requests_and_conserve() {
+        // a starved queue (tiny tick budget) with a 2-tick deadline:
+        // overdue requests are shed, and the extended conservation law
+        // still accounts for every generated request exactly once
+        let (mut ep, mut s) = base();
+        ep.mem_budget_bytes = 0;
+        s.tick_tokens = 8;
+        s.max_request_tokens = 8;
+        s.arrival_rate = 6.0;
+        s.deadline_ticks = 2;
+        let mut lp = ServeLoop::new(&ep, &s).unwrap();
+        let r = lp.run().unwrap();
+        assert!(r.shed > 0, "starved queue with deadlines shed nothing");
+        assert_eq!(r.generated,
+                   r.completed + r.rejected_queue_full + r.rejected_capacity
+                       + r.shed + r.queued_at_end);
+        // no deadline -> nothing shed, same conservation
+        let s2 = ServingConfig { deadline_ticks: 0, ..s };
+        let r2 = ServeLoop::new(&ep, &s2).unwrap().run().unwrap();
+        assert_eq!(r2.shed, 0);
+        assert_eq!(r2.generated,
+                   r2.completed + r2.rejected_queue_full + r2.rejected_capacity
+                       + r2.queued_at_end);
+    }
+
+    #[test]
+    fn injected_stalls_flip_admission_into_shed_mode() {
+        let (ep, s) = base();
+        let bare = ServeLoop::new(&ep, &s).unwrap().run().unwrap();
+        assert_eq!(bare.shed_mode_ticks, 0);
+        assert_eq!(bare.fault_events, 0);
+        // arm a plan that stalls often: shed mode must engage, arrivals
+        // during it are shed, and every fault is recovered + counted
+        let mut lp = ServeLoop::new(&ep, &s).unwrap();
+        lp.set_fault_plan(crate::config::FaultConfig {
+            seed: 1,
+            stall_prob: 0.5,
+            stall_ms: 0,
+            exchange_fail_prob: 0.25,
+            max_retries: 3,
+            backoff_ms: 0,
+            ..Default::default()
+        });
+        let r = lp.run().unwrap();
+        assert!(r.fault_events > 0, "the armed plan injected nothing");
+        assert_eq!(r.fault_unrecovered, 0, "every fault must be recovered");
+        assert!(r.shed_mode_ticks > 0, "stalls never engaged shed mode");
+        assert!(r.shed > 0, "shed mode let every arrival through");
+        assert_eq!(r.generated,
+                   r.completed + r.rejected_queue_full + r.rejected_capacity
+                       + r.shed + r.queued_at_end,
+                   "conservation broke under fault injection");
+        // runs are replayable: the same plan sheds identically
+        let mut lp2 = ServeLoop::new(&ep, &s).unwrap();
+        lp2.set_fault_plan(crate::config::FaultConfig {
+            seed: 1,
+            stall_prob: 0.5,
+            stall_ms: 0,
+            exchange_fail_prob: 0.25,
+            max_retries: 3,
+            backoff_ms: 0,
+            ..Default::default()
+        });
+        let r2 = lp2.run().unwrap();
+        assert_eq!(r.shed, r2.shed);
+        assert_eq!(r.completed, r2.completed);
+        assert_eq!(r.fault_events, r2.fault_events);
+        assert_eq!(r.shed_mode_ticks, r2.shed_mode_ticks);
+    }
+
+    #[test]
+    fn shed_and_fault_counters_reach_the_exposition() {
+        let (mut ep, mut s) = base();
+        let path = std::env::temp_dir().join(format!(
+            "moeblaze_serve_shed_{}.prom", std::process::id()));
+        ep.metrics_expose_path = path.to_string_lossy().into_owned();
+        s.deadline_ticks = 1;
+        s.tick_tokens = 8;
+        s.max_request_tokens = 8;
+        s.arrival_rate = 6.0;
+        let mut lp = ServeLoop::new(&ep, &s).unwrap();
+        lp.set_fault_plan(crate::config::FaultConfig {
+            seed: 3,
+            stall_prob: 0.3,
+            stall_ms: 0,
+            ..Default::default()
+        });
+        let r = lp.run().unwrap();
+        assert!(r.shed > 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(text.contains("moeblaze_shed_total"),
+                "exposition missing moeblaze_shed_total:\n{text}");
+        if r.fault_events > 0 {
+            assert!(text.contains("moeblaze_fault_events_total"),
+                    "exposition missing moeblaze_fault_events_total:\n{text}");
         }
     }
 

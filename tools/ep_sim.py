@@ -1643,3 +1643,225 @@ assert skew_flags([[100, 1, 1, 1]] * 10, [0, 0, 1, 1], 0.0) == []
 print("load mirror OK: 12 LCG sequences x 40 steps raise exactly the "
       "19 pinned (sequence, step) alarms; Figure-2 and balanced "
       "fixtures stay silent, the skewed fixture raises once at step 3")
+
+# ===========================================================================
+# Resilience mirror (ISSUE 10): crash-consistent resume + the seeded
+# fault plan.
+#
+# Two cross-language contracts, both pinned BITWISE against
+# rust/src/resilience/:
+#   * kill-and-resume is bit-identical — capturing params + Adam moments
+#     at any optimizer-step boundary (exactly what TrainState
+#     serializes: exact f32 bits, exact Adam t/m/v, the step cursor) and
+#     rerunning the remaining schedule reproduces the never-interrupted
+#     loss curve as float64 equality, across optimizer x policy x
+#     grad_accum and at every kill point;
+#   * the splitmix64 fault arithmetic — mix64 / fault_hash / fault_unit
+#     and the per-family decision sites match rust's fault.rs exactly,
+#     pinned by the same 8-seed x 20-step x 2-micro decision tables the
+#     Rust unit suite holds (FAULT_STALLS / FAULT_EXCH / FAULT_CORRUPT).
+# ===========================================================================
+
+def copy_params(params):
+    return [{k: v.copy() for k, v in p.items()} for p in params]
+
+def snapshot_state(params, adam_state):
+    """What TrainState carries: exact parameter bits + optimizer state."""
+    return dict(params=copy_params(params),
+                adam=dict(t=adam_state['t'],
+                          m=copy_params(adam_state['m']),
+                          v=copy_params(adam_state['v'])))
+
+def train_segment(L, E, K, DM, H, steps, accum, policy, opt, lr, seed,
+                  start=0, stop=None, state=None):
+    """Steps [start, stop) of train()'s schedule. `state` restores a
+    snapshot taken at `start` (a resumed run); returns (losses, state at
+    stop) so the caller can chain segments like kill + resume do."""
+    stop = steps if stop is None else stop
+    rng = np.random.default_rng(seed)
+    params = init_experts(E, DM, H, rng)
+    ids = np.concatenate([rng.choice(E, K, replace=False)
+                          for _ in range(L)]).astype(int)
+    gates = rng.random(L * K).astype(f32)
+    x = rng.standard_normal((L, DM)).astype(f32)
+    target = rng.standard_normal((L, DM)).astype(f32)
+    bounds = [L * i // accum for i in range(accum + 1)]
+    micros = []
+    for m in range(accum):
+        t0, t1 = bounds[m], bounds[m + 1]
+        sub_ids = list(ids[t0 * K:t1 * K])
+        d_sub = build(sub_ids, t1 - t0, E, K)
+        micros.append((t0, d_sub, x[t0:t1], gates[t0 * K:t1 * K]))
+    adam_state = dict(t=0, m=[zeros_like_params(DM, H) for _ in range(E)],
+                      v=[zeros_like_params(DM, H) for _ in range(E)])
+    if state is not None:
+        params = copy_params(state['params'])
+        adam_state = dict(t=state['adam']['t'],
+                          m=copy_params(state['adam']['m']),
+                          v=copy_params(state['adam']['v']))
+    scale = f32(2.0 / (L * DM))
+    losses = []
+    for _ in range(start, stop):
+        grads = [zeros_like_params(DM, H) for _ in range(E)]
+        loss = 0.0
+        for (t0, d_sub, x_sub, gates_sub) in micros:
+            loss = session_fwd_bwd(d_sub, params, x_sub, gates_sub, target,
+                                   t0, scale, grads, policy, loss)
+        losses.append(loss / (L * DM))
+        delta = adam_step(adam_state, grads, lr) if opt == 'adam' \
+            else sgd_delta(grads, lr)
+        for ex in range(E):
+            for k in params[ex]:
+                params[ex][k] = (params[ex][k] + delta[ex][k]).astype(f32)
+    return losses, snapshot_state(params, adam_state)
+
+RES_STEPS = 4
+for opt, lr in [('sgd', 0.05), ('adam', 0.01)]:
+    for accum, policy in [(1, 'save-inputs'), (2, 'recompute-all')]:
+        full, _ = train_segment(L, E, K, DM, H, RES_STEPS, accum, policy,
+                                opt, lr, 123)
+        for kill in range(1, RES_STEPS):
+            part, st = train_segment(L, E, K, DM, H, RES_STEPS, accum,
+                                     policy, opt, lr, 123, stop=kill)
+            rest, _ = train_segment(L, E, K, DM, H, RES_STEPS, accum,
+                                    policy, opt, lr, 123, start=kill,
+                                    state=st)
+            assert part + rest == full, \
+                f"{opt} accum={accum} {policy} kill={kill}: resumed curve " \
+                f"diverged\n{part + rest}\n{full}"
+print("resume mirror OK: kill-at-any-step + snapshot-state resume is "
+      "bit-identical to the uninterrupted curve, across optimizer x "
+      "policy x grad_accum")
+
+# --- the fault plan's decision arithmetic (rust/src/resilience/fault.rs)
+
+SALT_STALL = 0x57A11
+SALT_EXCHANGE = 0xE8C7A9
+SALT_SNAPSHOT = 0x5A4B
+
+def mix64(z):
+    z = (z + 0x9E3779B97F4A7C15) & MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return z ^ (z >> 31)
+
+def fault_hash(seed, salt, a, b, c):
+    h = mix64((seed ^ salt) & MASK64)
+    h = mix64(h ^ a)
+    h = mix64(h ^ b)
+    return mix64(h ^ c)
+
+def fault_unit(seed, salt, a, b, c):
+    # top 53 bits: exactly representable in float64, so Rust and Python
+    # compare the same number against the same threshold
+    return (fault_hash(seed, salt, a, b, c) >> 11) / float(1 << 53)
+
+FAULT_STALL_P, FAULT_EXCH_P, FAULT_CORRUPT_P, FAULT_BUDGET = \
+    0.15, 0.25, 0.2, 3
+
+def fault_stalls(seed, step):
+    return fault_unit(seed, SALT_STALL, step, 0, 0) < FAULT_STALL_P
+
+def fault_stall_rank(seed, step, ranks):
+    return fault_hash(seed, SALT_STALL, step, 1, 0) % max(ranks, 1)
+
+def fault_exchange_retries(seed, step, micro):
+    """Mirror of FaultInjector::exchange_gate: retries taken, or None
+    when the budget is exhausted (the loud unrecovered path)."""
+    attempt = 0
+    while fault_unit(seed, SALT_EXCHANGE, step, micro, attempt) \
+            < FAULT_EXCH_P:
+        if attempt >= FAULT_BUDGET:
+            return None
+        attempt += 1
+    return attempt
+
+def fault_corrupts(seed, step):
+    return fault_unit(seed, SALT_SNAPSHOT, step, 0, 0) < FAULT_CORRUPT_P
+
+def fault_corruption(seed, step, length):
+    h = fault_hash(seed, SALT_SNAPSHOT, step, 1, 0)
+    offset = h % max(length, 1)
+    xor = 0 if (h >> 62) == 0 else 1 + (h >> 32) % 255
+    return offset, xor
+
+# the pinned tables — rust/src/resilience/fault.rs holds the identical
+# ones (STALLS / EXCH / CORRUPT), 8 seeds x 20 steps x 2 microbatches
+FAULT_STALLS = [
+    [4],
+    [1, 10, 13, 14, 16, 18],
+    [],
+    [19],
+    [6, 14],
+    [9, 14],
+    [8, 12, 15],
+    [13, 17],
+]
+FAULT_EXCH = [
+    [(0, 1, 1), (5, 1, 1), (6, 1, 1), (7, 0, 1), (8, 0, 1), (9, 0, 1),
+     (9, 1, 1), (10, 0, 1), (13, 0, 2), (15, 0, 2), (18, 0, 1),
+     (18, 1, 1)],
+    [(2, 0, 2), (2, 1, 1), (7, 0, 1), (9, 0, 1), (11, 1, 2), (12, 0, 1),
+     (14, 1, 3), (18, 1, 2)],
+    [(0, 0, 1), (0, 1, 1), (5, 1, 1), (6, 1, 1), (7, 0, 1), (7, 1, 1),
+     (8, 0, 2), (15, 1, 2), (17, 1, 1), (18, 1, 1)],
+    [(0, 0, 1), (1, 0, 1), (1, 1, 2), (3, 0, 1), (5, 0, 1), (9, 1, 1),
+     (11, 0, 1), (12, 1, 1), (17, 0, 1)],
+    [(0, 1, 1), (2, 1, 1), (5, 0, 1), (5, 1, 1), (6, 1, 1), (7, 1, 1),
+     (11, 0, 1), (12, 0, 1), (14, 0, 1), (17, 0, 1), (17, 1, 1),
+     (18, 0, 1)],
+    [(3, 0, 1), (5, 0, 1), (5, 1, 1), (10, 0, 1), (10, 1, 1),
+     (11, 0, 3), (11, 1, 1), (13, 0, 1), (14, 0, 1), (16, 1, 2),
+     (17, 0, 3), (19, 0, 1)],
+    [(0, 0, 1), (0, 1, 1), (2, 0, 1), (3, 0, 1), (8, 0, 1), (9, 0, 1),
+     (10, 0, 1), (10, 1, 3), (11, 1, 1), (13, 0, 1), (16, 0, 1),
+     (18, 0, 1), (18, 1, 1), (19, 0, 1)],
+    [(0, 0, 1), (0, 1, 1), (2, 0, 2), (2, 1, 1), (4, 1, 1), (7, 0, 1),
+     (7, 1, 2), (8, 1, 1), (9, 0, 3), (10, 1, 1), (12, 0, 1),
+     (12, 1, 1), (16, 0, 1), (16, 1, 1), (18, 1, 1)],
+]
+FAULT_CORRUPT = [
+    [1, 5, 12, 15, 18],
+    [0, 9, 14, 15],
+    [4, 13, 17],
+    [1, 4, 6, 19],
+    [15, 17, 18],
+    [12],
+    [0, 5, 13, 15, 16],
+    [1, 2, 7, 10, 14, 17, 18],
+]
+
+for seed in range(8):
+    stalls = [s for s in range(20) if fault_stalls(seed, s)]
+    assert stalls == FAULT_STALLS[seed], \
+        f"stalls, seed {seed}: {stalls} != {FAULT_STALLS[seed]}"
+    exch = []
+    for s in range(20):
+        for m in range(2):
+            r = fault_exchange_retries(seed, s, m)
+            assert r is not None, \
+                f"seed {seed} ({s},{m}): budget exhausted, Rust recovers"
+            if r > 0:
+                exch.append((s, m, r))
+    assert exch == FAULT_EXCH[seed], \
+        f"exchange, seed {seed}: {exch} != {FAULT_EXCH[seed]}"
+    corrupt = [s for s in range(20) if fault_corrupts(seed, s)]
+    assert corrupt == FAULT_CORRUPT[seed], \
+        f"corrupt, seed {seed}: {corrupt} != {FAULT_CORRUPT[seed]}"
+    # stall ranks stay in range; corruption sites stay in bounds and
+    # are never a no-op flip (xor 0 means truncate)
+    for s in stalls:
+        assert fault_stall_rank(seed, s, 4) < 4
+    for s in corrupt:
+        for length in [1, 8, 100, 4096]:
+            off, xor = fault_corruption(seed, s, length)
+            assert off < length and 0 <= xor <= 255
+
+# replay stability + seed sensitivity, like the Rust unit suite
+assert [fault_stalls(3, s) for s in range(50)] == \
+    [fault_stalls(3, s) for s in range(50)]
+assert [fault_stalls(1, s) for s in range(64)] != \
+    [fault_stalls(2, s) for s in range(64)]
+print("fault mirror OK: splitmix64 decision tables (8 seeds x 20 steps "
+      "x 2 micros) match rust/src/resilience/fault.rs exactly — stalls, "
+      "exchange retry counts, and snapshot corruption sites")
